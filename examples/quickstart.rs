@@ -1,0 +1,48 @@
+//! Quickstart: load the AOT artifacts, initialize a Hrrformer, and
+//! classify a few synthetic malware byte sequences — the minimal tour of
+//! the public API.
+//!
+//! ```bash
+//! make artifacts && cargo run --release --example quickstart
+//! ```
+
+use anyhow::Result;
+use hrrformer::data::{batch::BatchStream, by_task, Split};
+use hrrformer::model::PredictSession;
+use hrrformer::runtime::{default_manifest, Runtime};
+
+fn main() -> Result<()> {
+    // 1. The runtime wraps the PJRT CPU client; the manifest indexes the
+    //    HLO-text programs exported by `python -m compile.aot`.
+    let rt = Runtime::cpu()?;
+    let manifest = default_manifest()?;
+    println!("platform: {} — {} programs", rt.platform(), manifest.programs.len());
+
+    // 2. A PredictSession owns seed-initialized parameters plus the
+    //    compiled predict program for one (task, model, T, B) config.
+    let base = "ember_hrrformer_small_T256_B8";
+    let sess = PredictSession::create(&rt, &manifest, base, 42)?;
+    println!(
+        "model: {} — {} parameter tensors, T={}, B={}",
+        base,
+        sess.params.len(),
+        sess.seq_len(),
+        sess.batch()
+    );
+
+    // 3. Dataset substrates are deterministic synthetic generators.
+    let ds = by_task("ember", sess.seq_len()).unwrap();
+    let mut stream = BatchStream::new(ds.as_ref(), Split::Test, 0, sess.batch(), sess.seq_len());
+    let batch = stream.next_batch();
+
+    // 4. One program execution classifies the whole batch.
+    let logits = sess.predict(&batch.ids)?;
+    let preds = logits.argmax_last()?;
+    let labels = batch.labels.as_i32()?;
+    println!("\n  pred  label  (untrained parameters — expect chance)");
+    for (p, l) in preds.iter().zip(labels) {
+        println!("  {p:>4}  {l:>5}");
+    }
+    println!("\nNext: cargo run --release --example lra_listops  (end-to-end training)");
+    Ok(())
+}

@@ -1,0 +1,81 @@
+//! Serving-system demo: multi-bucket router + dynamic batcher under
+//! concurrent client load with mixed request lengths — the vLLM-router
+//! shaped part of the coordinator.
+//!
+//! ```bash
+//! make artifacts && cargo run --release --example serve_demo -- --clients 4 --requests 32
+//! ```
+
+use anyhow::Result;
+use hrrformer::coordinator::{BatchPolicy, Server, ServerConfig};
+use hrrformer::data::{by_task, Split, Stream};
+use hrrformer::runtime::default_manifest;
+use hrrformer::util::cli::Args;
+
+fn main() -> Result<()> {
+    let args = Args::from_env();
+    let manifest = default_manifest()?;
+    let cfg = ServerConfig {
+        bases: vec![
+            "ember_hrrformer_small_T256_B8".into(),
+            "ember_hrrformer_small_T512_B8".into(),
+            "ember_hrrformer_small_T1024_B8".into(),
+        ],
+        policy: BatchPolicy {
+            max_batch: args.usize("max-batch", 8),
+            max_wait: std::time::Duration::from_millis(args.u64("max-wait-ms", 10)),
+        },
+        queue_depth: args.usize("queue-depth", 64),
+        seed: 0,
+        params: vec![None, None, None],
+    };
+    println!("compiling 3 predict buckets (T=256/512/1024)…");
+    let server = Server::start(&manifest, cfg)?;
+
+    let n_clients = args.usize("clients", 4);
+    let per_client = args.usize("requests", 32);
+    println!("{n_clients} client threads × {per_client} requests, mixed lengths…");
+
+    let mut joins = Vec::new();
+    for c in 0..n_clients {
+        let handle = server.handle();
+        joins.push(std::thread::spawn(move || -> Result<(usize, f64)> {
+            let ds = by_task("ember", 1024).unwrap();
+            let mut stream = Stream::new(ds.as_ref(), Split::Test, 1000 + c as u64);
+            let mut max_latency = 0.0f64;
+            let mut batched = 0usize;
+            for i in 0..per_client {
+                let mut ex = stream.next_example();
+                // lengths spread across the bucket range
+                let keep = 64 + (i * 131 + c * 977) % 960;
+                ex.ids.truncate(keep);
+                let reply = handle.classify(ex.ids)?;
+                max_latency = max_latency.max(reply.latency.as_secs_f64() * 1000.0);
+                batched += (reply.batch_size > 1) as usize;
+            }
+            Ok((batched, max_latency))
+        }));
+    }
+
+    let mut total_batched = 0usize;
+    let mut worst = 0.0f64;
+    for j in joins {
+        let (batched, max_lat) = j.join().expect("client thread panicked")?;
+        total_batched += batched;
+        worst = worst.max(max_lat);
+    }
+
+    let stats = server.handle().stats.clone();
+    println!("\n=== serve_demo report ===");
+    println!("served:            {}", stats.throughput.items.load(std::sync::atomic::Ordering::Relaxed));
+    println!("throughput:        {:.1} req/s", stats.throughput.per_second());
+    println!("p50 / p99 latency: {:.1} / {:.1} ms", stats.latency.percentile_ms(50.0), stats.latency.percentile_ms(99.0));
+    println!("worst latency:     {worst:.1} ms");
+    println!(
+        "coalesced:         {}/{} requests shared an execution",
+        total_batched,
+        n_clients * per_client
+    );
+    server.stop();
+    Ok(())
+}

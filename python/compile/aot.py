@@ -1,0 +1,361 @@
+"""AOT export: lower the L2 programs ONCE to HLO text + manifest.json.
+
+This is the only place Python touches the model after development: it
+emits ``artifacts/*.hlo.txt`` (HLO **text**, not ``.serialize()`` — the
+image's xla_extension 0.5.1 rejects jax≥0.5's 64-bit-id protos; the text
+parser reassigns ids) plus ``artifacts/manifest.json`` describing every
+program's inputs/outputs so the rust coordinator can allocate, feed and
+checkpoint buffers without Python.
+
+Usage (from ``python/``):
+
+    python -m compile.aot --out ../artifacts                  # core set
+    python -m compile.aot --out ../artifacts --set bench-ember
+    python -m compile.aot --out ../artifacts \
+        --spec task=text,model=hrrformer,preset=small,T=1024,B=4,programs=init+train_step+predict
+"""
+
+from __future__ import annotations
+
+import argparse
+import dataclasses
+import json
+import os
+import re
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax._src.lib import xla_client as xc
+
+from . import model as M
+from .configs import get_config
+from .kernels import hrr, ref
+
+DTYPE_NAMES = {
+    np.dtype("float32"): "f32",
+    np.dtype("int32"): "i32",
+    np.dtype("uint32"): "u32",
+}
+
+
+def to_hlo_text(lowered) -> str:
+    """StableHLO → XlaComputation → HLO text (see /opt/xla-example)."""
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def _keystr(path) -> str:
+    parts = []
+    for p in path:
+        if hasattr(p, "key"):
+            parts.append(str(p.key))
+        elif hasattr(p, "idx"):
+            parts.append(str(p.idx))
+        else:
+            parts.append(str(p))
+    return ".".join(parts)
+
+
+def param_specs(cfg):
+    """Flattened (name, shape, dtype) list in deterministic tree order."""
+    params = jax.eval_shape(lambda k: M.init_params(k, cfg), jax.random.PRNGKey(0))
+    leaves, treedef = jax.tree_util.tree_flatten(params)
+    named = jax.tree_util.tree_flatten_with_path(params)[0]
+    names = [_keystr(p) for p, _ in named]
+    return names, leaves, treedef
+
+
+def _iospec(name, aval):
+    return {
+        "name": name,
+        "shape": [int(s) for s in aval.shape],
+        "dtype": DTYPE_NAMES[np.dtype(aval.dtype)],
+    }
+
+
+def _spec_of(x):
+    return jax.ShapeDtypeStruct(x.shape, x.dtype)
+
+
+class Exporter:
+    def __init__(self, out_dir: str):
+        self.out_dir = out_dir
+        os.makedirs(out_dir, exist_ok=True)
+        self.manifest_path = os.path.join(out_dir, "manifest.json")
+        if os.path.exists(self.manifest_path):
+            with open(self.manifest_path) as f:
+                self.manifest = json.load(f)
+        else:
+            self.manifest = {"programs": {}}
+
+    def save(self):
+        with open(self.manifest_path, "w") as f:
+            json.dump(self.manifest, f, indent=1, sort_keys=True)
+
+    def emit(self, key: str, fn, in_specs, in_names, meta: dict, force=False):
+        fname = f"{key}.hlo.txt"
+        fpath = os.path.join(self.out_dir, fname)
+        if not force and os.path.exists(fpath) and key in self.manifest["programs"]:
+            print(f"  [skip] {key} (exists)")
+            return
+        lowered = jax.jit(fn).lower(*in_specs)
+        out_shape = jax.eval_shape(fn, *in_specs)
+        out_leaves = jax.tree_util.tree_leaves(out_shape)
+        named_out = jax.tree_util.tree_flatten_with_path(out_shape)[0]
+        out_names = [_keystr(p) or f"out{i}" for i, (p, _) in enumerate(named_out)]
+        text = to_hlo_text(lowered)
+        with open(fpath, "w") as f:
+            f.write(text)
+        entry = dict(meta)
+        entry.update(
+            {
+                "file": fname,
+                "inputs": [_iospec(n, s) for n, s in zip(in_names, in_specs)],
+                "outputs": [_iospec(n, s) for n, s in zip(out_names, out_leaves)],
+            }
+        )
+        self.manifest["programs"][key] = entry
+        print(f"  [ok]   {key}  ({len(text)//1024} KiB, {len(in_specs)} in / {len(out_leaves)} out)")
+
+
+def export_model(ex: Exporter, task: str, model_name: str, preset: str,
+                 seq_len: int, batch: int, programs, force=False, tag="",
+                 **overrides):
+    """Export one (task, model, preset[, tag], T, B) program family.
+
+    ``tag`` disambiguates variant configs (e.g. single-layer, narrow-embed
+    speed-bench) that would otherwise collide on the manifest key.
+    """
+    cfg = get_config(task, model_name, preset=preset, seq_len=seq_len, **overrides)
+    names, leaves, treedef = param_specs(cfg)
+    pspecs = [jax.ShapeDtypeStruct(l.shape, l.dtype) for l in leaves]
+    key = f"{task}_{model_name}_{preset}{tag}_T{cfg.seq_len}_B{batch}"
+    meta_base = {
+        "task": task,
+        "model": model_name,
+        "preset": preset,
+        "seq_len": cfg.seq_len,
+        "batch": batch,
+        "classes": cfg.classes,
+        "vocab": cfg.vocab,
+        "layers": cfg.layers,
+        "heads": cfg.heads,
+        "embed": cfg.embed,
+        "config": dataclasses.asdict(cfg),
+        "params": [_iospec(n, s) for n, s in zip(names, pspecs)],
+    }
+    ids_spec = jax.ShapeDtypeStruct((batch, cfg.seq_len), jnp.int32)
+    lbl_spec = jax.ShapeDtypeStruct((batch,), jnp.int32)
+    step_spec = jax.ShapeDtypeStruct((), jnp.int32)
+    seed_spec = jax.ShapeDtypeStruct((), jnp.uint32)
+    unflatten = lambda flat: jax.tree_util.tree_unflatten(treedef, flat)
+    np_ = len(pspecs)
+
+    if "init" in programs:
+        def init_fn(seed):
+            return tuple(jax.tree_util.tree_leaves(
+                M.init_params(jax.random.PRNGKey(seed), cfg)))
+        ex.emit(f"{key}_init", init_fn, [seed_spec], ["seed"],
+                {**meta_base, "kind": "init"}, force=force)
+
+    if "train_step" in programs:
+        def step_fn(*args):
+            p = unflatten(list(args[:np_]))
+            m = unflatten(list(args[np_:2 * np_]))
+            v = unflatten(list(args[2 * np_:3 * np_]))
+            step, ids, labels = args[3 * np_], args[3 * np_ + 1], args[3 * np_ + 2]
+            p2, m2, v2, loss, acc = M.train_step(cfg, p, m, v, step, ids, labels)
+            return (*jax.tree_util.tree_leaves(p2), *jax.tree_util.tree_leaves(m2),
+                    *jax.tree_util.tree_leaves(v2), loss, acc)
+        in_specs = pspecs * 3 + [step_spec, ids_spec, lbl_spec]
+        in_names = ([f"params.{n}" for n in names] + [f"m.{n}" for n in names]
+                    + [f"v.{n}" for n in names] + ["step", "ids", "labels"])
+        ex.emit(f"{key}_train_step", step_fn, in_specs, in_names,
+                {**meta_base, "kind": "train_step"}, force=force)
+
+    if "predict" in programs:
+        def predict_fn(*args):
+            p = unflatten(list(args[:np_]))
+            return M.logits_fn(p, cfg, args[np_])
+        ex.emit(f"{key}_predict", predict_fn, pspecs + [ids_spec],
+                [f"params.{n}" for n in names] + ["ids"],
+                {**meta_base, "kind": "predict"}, force=force)
+
+    if "eval_step" in programs:
+        def eval_fn(*args):
+            p = unflatten(list(args[:np_]))
+            return M.eval_step(cfg, p, args[np_], args[np_ + 1])
+        ex.emit(f"{key}_eval_step", eval_fn, pspecs + [ids_spec, lbl_spec],
+                [f"params.{n}" for n in names] + ["ids", "labels"],
+                {**meta_base, "kind": "eval_step"}, force=force)
+
+    if "attn_weights" in programs and model_name == "hrrformer":
+        def weights_fn(*args):
+            # Return logits alongside w so every parameter stays live in
+            # the lowered module (XLA prunes unused inputs, which would
+            # desync the manifest's input list from the compiled program).
+            p = unflatten(list(args[:np_]))
+            return M.attn_weights_fn(p, cfg, args[np_]), M.logits_fn(p, cfg, args[np_])
+        ex.emit(f"{key}_attn_weights", weights_fn, pspecs + [ids_spec],
+                [f"params.{n}" for n in names] + ["ids"],
+                {**meta_base, "kind": "attn_weights"}, force=force)
+
+
+def export_kernel_microbench(ex: Exporter, n: int, t: int, h: int, force=False):
+    """Standalone kernel programs for criterion micro-benches (L1 hot path)."""
+    spec = jax.ShapeDtypeStruct((1, n, t, h), jnp.float32)
+    meta = {"kind": "kernel", "task": "kernel", "model": "kernel",
+            "seq_len": t, "batch": n, "heads": n, "embed": h, "preset": "kernel"}
+
+    def hrr_fn(q, k, v):
+        return hrr.hrr_attention_pallas(q, k, v)
+
+    def softmax_fn(q, k, v):
+        return ref.softmax_attention_ref(q, k, v)
+
+    ex.emit(f"kernel_hrr_N{n}_T{t}_H{h}", hrr_fn, [spec] * 3, ["q", "k", "v"],
+            {**meta, "model": "hrr_kernel"}, force=force)
+    ex.emit(f"kernel_softmax_N{n}_T{t}_H{h}", softmax_fn, [spec] * 3, ["q", "k", "v"],
+            {**meta, "model": "softmax_kernel"}, force=force)
+
+
+# ---------------------------------------------------------------------------
+# Export sets (DESIGN.md §4 experiment index)
+# ---------------------------------------------------------------------------
+
+CORE_PROGRAMS = ("init", "train_step", "predict", "eval_step")
+
+
+def set_core(ex, force):
+    """Enough for quickstart, examples, rust integration tests."""
+    export_model(ex, "listops", "hrrformer", "small", 512, 8,
+                 CORE_PROGRAMS + ("attn_weights",), force=force)
+    export_model(ex, "text", "hrrformer", "small", 1024, 4, CORE_PROGRAMS, force=force)
+    export_model(ex, "text", "transformer", "small", 1024, 4, CORE_PROGRAMS, force=force)
+    # serving buckets for the router (predict-only, several T)
+    for t in (256, 512, 1024):
+        export_model(ex, "ember", "hrrformer", "small", t, 8, ("init", "predict"), force=force)
+    export_model(ex, "ember", "hrrformer", "small", 1024, 8,
+                 ("train_step", "eval_step"), force=force)
+    export_kernel_microbench(ex, 4, 1024, 64, force=force)
+
+
+def set_bench_ember(ex, force):
+    """Table 5 / Figs 1,4: accuracy+time vs T for every model."""
+    models = ["hrrformer", "transformer", "fnet", "linformer", "performer",
+              "linear_transformer", "luna"]
+    for t in (256, 512, 1024, 2048, 4096):
+        b = max(min(2 ** (13 - int(np.log2(t))), 32), 1)  # scaled-down paper rule
+        for m in models:
+            if m == "transformer" and t > 2048:
+                continue  # OOM analogue documented in bench harness
+            export_model(ex, "ember", m, "small", t, b,
+                         ("init", "train_step", "eval_step"), force=force)
+    # long-tail timing-only (hrrformer & fnet reach much longer T)
+    for t in (8192, 16384):
+        for m in ("hrrformer", "fnet"):
+            export_model(ex, "ember", m, "small", t, 1,
+                         ("init", "train_step"), force=force)
+
+
+def set_bench_lra(ex, force):
+    """Table 1 / Fig 8: LRA accuracy for the implemented zoo."""
+    models = ["hrrformer", "transformer", "fnet", "linformer", "performer",
+              "linear_transformer", "local", "luna"]
+    tasks = {"listops": (512, 16), "text": (1024, 8), "retrieval": (1024, 8),
+             "image": (1024, 8), "pathfinder": (1024, 8)}
+    for task, (t, b) in tasks.items():
+        for m in models:
+            export_model(ex, task, m, "small", t, b,
+                         ("init", "train_step", "eval_step"), force=force)
+    # single-layer hrrformer rows of Table 1
+    for task, (t, b) in tasks.items():
+        export_model(ex, task, "hrrformer", "small", t, b,
+                     ("init", "train_step", "eval_step"), tag="1L",
+                     layers=1, force=force)
+
+
+def set_bench_speed(ex, force):
+    """Table 4 / Fig 6 protocol: text task, 6 layers, B=4, embed 32/64."""
+    models = ["hrrformer", "transformer", "fnet", "linformer", "performer",
+              "linear_transformer", "local", "luna"]
+    for m in models:
+        export_model(ex, "text", m, "small", 1024, 4,
+                     ("init", "train_step", "predict"), tag="6L",
+                     layers=6, embed=32, mlp_dim=64, heads=2, force=force)
+    export_model(ex, "text", "hrrformer", "small", 1024, 4,
+                 ("init", "train_step", "predict"), tag="1Lspeed",
+                 layers=1, embed=32, mlp_dim=64, heads=2, force=force)
+
+
+def set_bench_inference(ex, force):
+    """Tables 6-7: inference time vs batch size, hrrformer vs transformer."""
+    for b in (2, 4, 8, 16, 32):
+        for m in ("hrrformer", "transformer"):
+            export_model(ex, "text", m, "small", 1024, b, ("init", "predict"), force=force)
+
+
+def set_bench_weights(ex, force):
+    """Figs 5/9/10: image-task attention maps."""
+    export_model(ex, "image", "hrrformer", "small", 1024, 8,
+                 ("init", "train_step", "eval_step", "attn_weights"), force=force)
+    export_model(ex, "image", "hrrformer", "small", 1024, 8,
+                 ("init", "train_step", "eval_step", "attn_weights"),
+                 tag="1L", layers=1, force=force)
+
+
+SETS = {
+    "core": set_core,
+    "bench-ember": set_bench_ember,
+    "bench-lra": set_bench_lra,
+    "bench-speed": set_bench_speed,
+    "bench-inference": set_bench_inference,
+    "bench-weights": set_bench_weights,
+}
+
+
+def parse_spec(spec: str) -> dict:
+    kv = dict(item.split("=", 1) for item in spec.split(","))
+    return {
+        "task": kv["task"],
+        "model_name": kv["model"],
+        "preset": kv.get("preset", "small"),
+        "seq_len": int(kv.get("T", 0)) or None,
+        "batch": int(kv.get("B", 4)),
+        "programs": tuple(kv.get("programs", "init+train_step+predict").split("+")),
+        **{k: int(v) for k, v in kv.items()
+           if k in ("layers", "heads", "embed", "mlp_dim")},
+    }
+
+
+def main():
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--out", default="../artifacts")
+    ap.add_argument("--set", action="append", default=[], choices=list(SETS),
+                    dest="sets")
+    ap.add_argument("--spec", action="append", default=[])
+    ap.add_argument("--force", action="store_true")
+    args = ap.parse_args()
+
+    ex = Exporter(args.out)
+    sets = args.sets or (["core"] if not args.spec else [])
+    for s in sets:
+        print(f"== exporting set: {s}")
+        SETS[s](ex, args.force)
+        ex.save()
+    for spec in args.spec:
+        kw = parse_spec(spec)
+        seq = kw.pop("seq_len")
+        export_model(ex, kw.pop("task"), kw.pop("model_name"), kw.pop("preset"),
+                     seq, kw.pop("batch"), kw.pop("programs"), force=args.force, **kw)
+        ex.save()
+    ex.save()
+    print(f"manifest: {ex.manifest_path} ({len(ex.manifest['programs'])} programs)")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,106 @@
+"""Model/task configurations.
+
+``TASKS`` mirrors the paper's Appendix B Table 3 hyper-parameters; each
+task also carries a ``small`` preset scaled for CPU-PJRT execution (same
+shapes of claims, smaller dims — see DESIGN.md §3 substitutions).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional
+
+MODELS = [
+    "hrrformer",
+    "transformer",
+    "fnet",
+    "linformer",
+    "performer",
+    "linear_transformer",
+    "local",
+    "luna",
+]
+
+
+@dataclasses.dataclass(frozen=True)
+class ModelConfig:
+    """Everything needed to build + lower one encoder variant."""
+
+    model: str = "hrrformer"
+    vocab: int = 257
+    seq_len: int = 4000
+    embed: int = 512
+    mlp_dim: int = 1024
+    heads: int = 8
+    layers: int = 6
+    classes: int = 2
+    pos: str = "fixed"  # "fixed" (sinusoidal) | "learned"
+    dropout: float = 0.1
+    # mixer-specific knobs
+    linformer_k: int = 256  # low-rank projection length
+    performer_features: int = 128  # FAVOR+ random features
+    local_window: int = 128  # local attention window
+    luna_len: int = 256  # Luna memory slots
+    # HRR attention implementation: "pallas" (custom-vjp kernel) or "ref"
+    hrr_impl: str = "pallas"
+    hrr_block_t: int = 512
+    # optimizer / schedule (paper: Adam, lr 1e-3 → 1e-5, exp decay/epoch)
+    lr: float = 1e-3
+    lr_min: float = 1e-5
+    decay_rate: float = 0.90
+    steps_per_epoch: int = 100  # LR decays decay_rate**(step/steps_per_epoch)
+
+    def replace(self, **kw) -> "ModelConfig":
+        return dataclasses.replace(self, **kw)
+
+    @property
+    def head_dim(self) -> int:
+        assert self.embed % self.heads == 0, (self.embed, self.heads)
+        return self.embed // self.heads
+
+
+def _task(**kw) -> ModelConfig:
+    return ModelConfig(**kw)
+
+
+# Paper Appendix B Table 3 (full-size presets).
+TASKS_PAPER = {
+    "listops": _task(vocab=18, seq_len=2000, embed=512, mlp_dim=256, heads=8,
+                     layers=6, classes=10, pos="learned", decay_rate=0.90),
+    "text": _task(vocab=257, seq_len=4000, embed=512, mlp_dim=1024, heads=8,
+                  layers=6, classes=2, pos="fixed", decay_rate=0.90),
+    "retrieval": _task(vocab=257, seq_len=8000, embed=128, mlp_dim=64, heads=4,
+                       layers=4, classes=2, pos="fixed", decay_rate=0.90),
+    "image": _task(vocab=256, seq_len=1024, embed=256, mlp_dim=128, heads=4,
+                   layers=3, classes=10, pos="fixed", decay_rate=0.95),
+    "pathfinder": _task(vocab=256, seq_len=1024, embed=1024, mlp_dim=256, heads=8,
+                        layers=2, classes=2, pos="learned", decay_rate=0.95),
+    "pathx": _task(vocab=256, seq_len=16384, embed=128, mlp_dim=128, heads=4,
+                   layers=2, classes=2, pos="learned", decay_rate=0.95),
+    "ember": _task(vocab=257, seq_len=16384, embed=256, mlp_dim=512, heads=8,
+                   layers=1, classes=2, pos="learned", decay_rate=0.85),
+}
+
+# CPU-scale presets: same tasks, smaller dims; linear-vs-quadratic shape
+# claims survive scaling (DESIGN.md §3).
+TASKS_SMALL = {
+    "listops": TASKS_PAPER["listops"].replace(seq_len=512, embed=64, mlp_dim=128, heads=4, layers=2),
+    "text": TASKS_PAPER["text"].replace(seq_len=1024, embed=64, mlp_dim=128, heads=4, layers=2),
+    "retrieval": TASKS_PAPER["retrieval"].replace(seq_len=1024, embed=64, mlp_dim=64, heads=4, layers=2),
+    "image": TASKS_PAPER["image"].replace(seq_len=1024, embed=64, mlp_dim=128, heads=4, layers=3),
+    "pathfinder": TASKS_PAPER["pathfinder"].replace(seq_len=1024, embed=64, mlp_dim=128, heads=4, layers=2),
+    "pathx": TASKS_PAPER["pathx"].replace(seq_len=16384, embed=32, mlp_dim=64, heads=2, layers=1),
+    "ember": TASKS_PAPER["ember"].replace(seq_len=1024, embed=64, mlp_dim=128, heads=4, layers=1),
+}
+
+PRESETS = {"paper": TASKS_PAPER, "small": TASKS_SMALL}
+
+
+def get_config(task: str, model: str, preset: str = "small",
+               seq_len: Optional[int] = None, **overrides) -> ModelConfig:
+    cfg = PRESETS[preset][task].replace(model=model)
+    if seq_len is not None:
+        cfg = cfg.replace(seq_len=seq_len)
+    if overrides:
+        cfg = cfg.replace(**overrides)
+    return cfg

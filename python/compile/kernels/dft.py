@@ -1,0 +1,69 @@
+"""Real-DFT-as-matmul helpers for the Pallas HRR kernels.
+
+Hardware adaptation (DESIGN.md §Hardware-Adaptation): the paper computes
+circular convolution with cuFFT on GPU. On TPU there is no Mosaic FFT
+primitive, and per-head feature sizes are small (32-128), so we express
+the rFFT / irFFT as dense matmuls against precomputed cos/sin matrices.
+These land on the MXU systolic array and keep the whole HRR attention
+kernel expressible in Pallas (matmul + elementwise only).
+
+Conventions (match ``jnp.fft.rfft`` / ``jnp.fft.irfft``):
+
+    X[k]   = sum_n x[n] * exp(-2*pi*i*n*k/H)        k in [0, H//2]
+    x[n]   = (1/H) * sum_k w_k * Re(X[k] * exp(+2*pi*i*n*k/H))
+
+where ``w_k`` is 1 for k=0 and (H even) k=H/2, else 2 — the Hermitian
+fold-back weights. We bake ``w_k`` and the 1/H into the inverse matrices
+so the kernels only do plain matmuls.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import numpy as np
+
+__all__ = ["dft_matrices", "NUM_BINS"]
+
+
+def NUM_BINS(h: int) -> int:
+    """Number of rFFT frequency bins for a length-``h`` real signal."""
+    return h // 2 + 1
+
+
+@functools.lru_cache(maxsize=32)
+def dft_matrices(h: int, dtype=np.float32):
+    """Forward/inverse real-DFT matrices for feature size ``h``.
+
+    Returns ``(cos_f, sin_f, cos_i, sin_i)`` with shapes
+    ``(h, K), (h, K), (K, h), (K, h)`` where ``K = h//2 + 1`` such that,
+    for a row-vector signal ``x`` of shape ``(..., h)``:
+
+        re = x @ cos_f            # Re rfft(x)
+        im = x @ sin_f            # Im rfft(x)   (note: sin_f has the -1 baked in)
+        x  = re @ cos_i + im @ sin_i   # irfft(re + i*im, n=h)
+    """
+    n = np.arange(h)[:, None]  # (h, 1)
+    k = np.arange(h // 2 + 1)[None, :]  # (1, K)
+    ang = 2.0 * np.pi * n * k / h  # (h, K)
+    cos_f = np.cos(ang)
+    sin_f = -np.sin(ang)  # Im of exp(-i*ang)
+
+    # Hermitian fold-back weights for the inverse.
+    w = np.full((h // 2 + 1,), 2.0)
+    w[0] = 1.0
+    if h % 2 == 0:
+        w[-1] = 1.0
+    # x[n] = (1/H) sum_k w_k (re_k cos(ang_{n,k}) - im_k sin(ang_{n,k}))
+    #      but our im already carries the forward minus sign, so with
+    #      im_k = -sum sin(..) x  =>  Im(X_k), and
+    #      Re(X_k e^{+i ang}) = re_k cos(ang) - im_k sin(ang).
+    cos_i = (w[:, None] * np.cos(ang).T) / h  # (K, h)
+    sin_i = (-w[:, None] * np.sin(ang).T) / h  # (K, h)
+
+    return (
+        cos_f.astype(dtype),
+        sin_f.astype(dtype),
+        cos_i.astype(dtype),
+        sin_i.astype(dtype),
+    )

@@ -1,0 +1,374 @@
+"""Pallas HRR-attention kernels (Layer 1).
+
+The paper computes HRR binding/unbinding with cuFFT on GPU. Per
+DESIGN.md §Hardware-Adaptation we re-think this for TPU: the rFFT/irFFT
+over the small per-head feature axis (H' = 32..128) becomes a dense
+matmul against precomputed cos/sin DFT matrices (``dft.py``) which maps
+onto the MXU systolic array, and the sequence axis is streamed through
+VMEM in ``(block_t, H')`` tiles via BlockSpec.
+
+Two kernels implement paper Eqs. 1-3:
+
+  * ``_bind_reduce_kernel``  — Eq. 1: β = Σ_t k_t ⊛ v_t, a grid-carried
+    reduction over T tiles (the output block is revisited along the T
+    grid axis and initialized on the first step).
+  * ``_unbind_score_kernel`` — Eq. 2+3: v̂_t = q_t† ⊛ β (exact stabilized
+    inverse in the frequency domain) and a_t = cos(v_t, v̂_t).
+
+Softmax cleanup + re-weighting (Eq. 4) stays in plain jnp — it is
+bandwidth-trivial and XLA fuses it into neighbours.
+
+All ``pallas_call``s use ``interpret=True``: the CPU PJRT backend cannot
+execute Mosaic custom-calls; real-TPU performance is estimated
+analytically in DESIGN.md §Perf.
+
+``hrr_attention`` is a ``jax.custom_vjp``: Pallas forward, backward via
+``jax.vjp`` of the numerically-identical jnp oracle (``ref.py``) —
+equality is enforced by the pytest/hypothesis suite.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.experimental import pallas as pl
+
+from . import ref
+from .dft import NUM_BINS, dft_matrices
+
+__all__ = [
+    "bind_pallas",
+    "unbind_pallas",
+    "hrr_attention_scores_pallas",
+    "hrr_attention_pallas",
+    "hrr_attention",
+    "DEFAULT_BLOCK_T",
+]
+
+EPS = 1e-6
+# 512×64 f32 tiles keep the three streamed operands under ~0.5 MB VMEM
+# (DESIGN.md §Hardware-Adaptation) while filling the MXU's 128-lane axis.
+DEFAULT_BLOCK_T = 512
+
+
+def _dft_consts(h: int):
+    cf, sf, ci, si = dft_matrices(h)
+    return jnp.asarray(cf), jnp.asarray(sf), jnp.asarray(ci), jnp.asarray(si)
+
+
+def _dft_consts_fused(h: int):
+    """Perf iteration 1 (EXPERIMENTS.md §Perf/L1): pack the forward
+    cos/sin matrices as one (H, 2K) operand and the inverse cos/sin as one
+    (2K, H) operand, halving the number of MXU matmul dispatches per tile
+    and doubling the K-axis occupancy (K = H/2+1 underfills the 128-wide
+    systolic array for H' ≤ 128; 2K fills it at H' = 128)."""
+    cf, sf, ci, si = dft_matrices(h)
+    fwd = jnp.asarray(np.concatenate([cf, sf], axis=1))  # (H, 2K)
+    inv = jnp.asarray(np.concatenate([ci, si], axis=0))  # (2K, H)
+    return fwd, inv
+
+
+# ---------------------------------------------------------------------------
+# Elementary ops (exposed for tests / micro-benches)
+# ---------------------------------------------------------------------------
+
+
+def _bind_kernel(x_ref, y_ref, cf_ref, sf_ref, ci_ref, si_ref, o_ref):
+    x = x_ref[0].astype(jnp.float32)  # (Tb, H)
+    y = y_ref[0].astype(jnp.float32)
+    cf, sf, ci, si = cf_ref[...], sf_ref[...], ci_ref[...], si_ref[...]
+    xre, xim = x @ cf, x @ sf
+    yre, yim = y @ cf, y @ sf
+    bre = xre * yre - xim * yim
+    bim = xre * yim + xim * yre
+    o_ref[0] = (bre @ ci + bim @ si).astype(o_ref.dtype)
+
+
+def bind_pallas(x: jnp.ndarray, y: jnp.ndarray, block_t: int = DEFAULT_BLOCK_T) -> jnp.ndarray:
+    """Circular convolution ``x ⊛ y`` over the last axis, as a Pallas kernel.
+
+    ``x, y``: ``(N, T, H)`` (flatten any leading batch axes to N).
+    """
+    n, t, h = x.shape
+    k = NUM_BINS(h)
+    bt = min(block_t, t)
+    t_pad = -t % bt
+    if t_pad:
+        x = jnp.pad(x, ((0, 0), (0, t_pad), (0, 0)))
+        y = jnp.pad(y, ((0, 0), (0, t_pad), (0, 0)))
+    tp = t + t_pad
+    cf, sf, ci, si = _dft_consts(h)
+    out = pl.pallas_call(
+        _bind_kernel,
+        grid=(n, tp // bt),
+        in_specs=[
+            pl.BlockSpec((1, bt, h), lambda i, j: (i, j, 0)),
+            pl.BlockSpec((1, bt, h), lambda i, j: (i, j, 0)),
+            pl.BlockSpec((h, k), lambda i, j: (0, 0)),
+            pl.BlockSpec((h, k), lambda i, j: (0, 0)),
+            pl.BlockSpec((k, h), lambda i, j: (0, 0)),
+            pl.BlockSpec((k, h), lambda i, j: (0, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, bt, h), lambda i, j: (i, j, 0)),
+        out_shape=jax.ShapeDtypeStruct((n, tp, h), x.dtype),
+        interpret=True,
+    )(x, y, cf, sf, ci, si)
+    return out[:, :t, :]
+
+
+def _unbind_kernel(s_ref, q_ref, cf_ref, sf_ref, ci_ref, si_ref, o_ref):
+    s = s_ref[0].astype(jnp.float32)  # (Tb, H)
+    q = q_ref[0].astype(jnp.float32)
+    cf, sf, ci, si = cf_ref[...], sf_ref[...], ci_ref[...], si_ref[...]
+    sre, sim = s @ cf, s @ sf
+    qre, qim = q @ cf, q @ sf
+    # Exact stabilized inverse: conj(Q)/( |Q|^2 + eps ).
+    denom = qre * qre + qim * qim + EPS
+    ire, iim = qre / denom, -qim / denom
+    ore = sre * ire - sim * iim
+    oim = sre * iim + sim * ire
+    o_ref[0] = (ore @ ci + oim @ si).astype(o_ref.dtype)
+
+
+def unbind_pallas(s: jnp.ndarray, q: jnp.ndarray, block_t: int = DEFAULT_BLOCK_T) -> jnp.ndarray:
+    """Unbinding ``q† ⊛ s`` over the last axis (exact stabilized inverse)."""
+    n, t, h = s.shape
+    k = NUM_BINS(h)
+    bt = min(block_t, t)
+    t_pad = -t % bt
+    if t_pad:
+        s = jnp.pad(s, ((0, 0), (0, t_pad), (0, 0)))
+        q = jnp.pad(q, ((0, 0), (0, t_pad), (0, 0)))
+    tp = t + t_pad
+    cf, sf, ci, si = _dft_consts(h)
+    out = pl.pallas_call(
+        _unbind_kernel,
+        grid=(n, tp // bt),
+        in_specs=[
+            pl.BlockSpec((1, bt, h), lambda i, j: (i, j, 0)),
+            pl.BlockSpec((1, bt, h), lambda i, j: (i, j, 0)),
+            pl.BlockSpec((h, k), lambda i, j: (0, 0)),
+            pl.BlockSpec((h, k), lambda i, j: (0, 0)),
+            pl.BlockSpec((k, h), lambda i, j: (0, 0)),
+            pl.BlockSpec((k, h), lambda i, j: (0, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, bt, h), lambda i, j: (i, j, 0)),
+        out_shape=jax.ShapeDtypeStruct((n, tp, h), s.dtype),
+        interpret=True,
+    )(s, q, cf, sf, ci, si)
+    return out[:, :t, :]
+
+
+# ---------------------------------------------------------------------------
+# Fused HRR attention (Eqs. 1-3)
+# ---------------------------------------------------------------------------
+
+
+def _bind_reduce_kernel(k_ref, v_ref, fwd_ref, bre_ref, bim_ref):
+    """β += Σ_tile rfft(k) * rfft(v); output blocks are grid-carried.
+
+    One fused (Tb,H)×(H,2K) matmul per operand computes re‖im together
+    (§Perf/L1 iteration 1)."""
+
+    @pl.when(pl.program_id(1) == 0)
+    def _init():
+        bre_ref[...] = jnp.zeros(bre_ref.shape, bre_ref.dtype)
+        bim_ref[...] = jnp.zeros(bim_ref.shape, bim_ref.dtype)
+
+    kk = k_ref[0].astype(jnp.float32)  # (Tb, H)
+    vv = v_ref[0].astype(jnp.float32)
+    fwd = fwd_ref[...]  # (H, 2K) = [cos | sin]
+    kbins = fwd.shape[1] // 2
+    kf = kk @ fwd  # (Tb, 2K)
+    vf = vv @ fwd
+    kre, kim = kf[:, :kbins], kf[:, kbins:]
+    vre, vim = vf[:, :kbins], vf[:, kbins:]
+    bre = kre * vre - kim * vim  # (Tb, K)
+    bim = kre * vim + kim * vre
+    bre_ref[0] += jnp.sum(bre, axis=0)
+    bim_ref[0] += jnp.sum(bim, axis=0)
+
+
+def _unbind_score_kernel(q_ref, v_ref, bre_ref, bim_ref, fwd_ref, inv_ref, a_ref):
+    """a_t = cos(v_t, q_t† ⊛ β) for one (Tb, H') tile.
+
+    Fused forward DFT (one matmul) and fused inverse DFT (one matmul on
+    the concatenated re‖im rows) — §Perf/L1 iteration 1."""
+    q = q_ref[0].astype(jnp.float32)  # (Tb, H)
+    v = v_ref[0].astype(jnp.float32)
+    bre = bre_ref[0]  # (K,)
+    bim = bim_ref[0]
+    fwd = fwd_ref[...]  # (H, 2K)
+    inv = inv_ref[...]  # (2K, H) = [cos_i ; sin_i]
+    kbins = fwd.shape[1] // 2
+    qf = q @ fwd  # (Tb, 2K)
+    qre, qim = qf[:, :kbins], qf[:, kbins:]
+    denom = qre * qre + qim * qim + EPS
+    ire, iim = qre / denom, -qim / denom  # conj(Q)/(|Q|^2+eps)
+    ore = bre[None, :] * ire - bim[None, :] * iim
+    oim = bre[None, :] * iim + bim[None, :] * ire
+    v_hat = jnp.concatenate([ore, oim], axis=1) @ inv  # (Tb, H)
+    num = jnp.sum(v * v_hat, axis=-1)
+    den = jnp.sqrt(jnp.sum(v * v, axis=-1)) * jnp.sqrt(jnp.sum(v_hat * v_hat, axis=-1))
+    a_ref[0] = num / (den + EPS)
+
+
+def hrr_attention_scores_pallas(
+    q: jnp.ndarray,
+    k: jnp.ndarray,
+    v: jnp.ndarray,
+    mask: jnp.ndarray | None = None,
+    block_t: int = DEFAULT_BLOCK_T,
+) -> jnp.ndarray:
+    """Pallas version of :func:`ref.hrr_attention_scores_ref`.
+
+    ``q, k, v``: ``(B, h, T, H')``; ``mask``: optional ``(B, T)``.
+    Returns scores ``(B, h, T, 1)``.
+    """
+    b, nh, t, h = q.shape
+    kbins = NUM_BINS(h)
+    n = b * nh
+    qf = q.reshape(n, t, h)
+    kf = k.reshape(n, t, h)
+    vf = v.reshape(n, t, h)
+    if mask is not None:
+        # Binding is bilinear: mask·(k⊛v) == (mask·k)⊛v, so masking k
+        # excludes masked pairs from the superposition (Eq. 1).
+        mflat = jnp.broadcast_to(mask[:, None, :], (b, nh, t)).reshape(n, t)
+        kf = kf * mflat[..., None]
+
+    bt = min(block_t, t)
+    t_pad = -t % bt
+    if t_pad:
+        # Zero k-rows contribute nothing to β; padded scores are sliced off.
+        qf = jnp.pad(qf, ((0, 0), (0, t_pad), (0, 0)))
+        kf = jnp.pad(kf, ((0, 0), (0, t_pad), (0, 0)))
+        vf = jnp.pad(vf, ((0, 0), (0, t_pad), (0, 0)))
+    tp = t + t_pad
+    fwd, inv = _dft_consts_fused(h)
+
+    bre, bim = pl.pallas_call(
+        _bind_reduce_kernel,
+        grid=(n, tp // bt),
+        in_specs=[
+            pl.BlockSpec((1, bt, h), lambda i, j: (i, j, 0)),
+            pl.BlockSpec((1, bt, h), lambda i, j: (i, j, 0)),
+            pl.BlockSpec((h, 2 * kbins), lambda i, j: (0, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((1, kbins), lambda i, j: (i, 0)),
+            pl.BlockSpec((1, kbins), lambda i, j: (i, 0)),
+        ],
+        out_shape=[
+            # f32 accumulators regardless of input dtype (bf16-safe).
+            jax.ShapeDtypeStruct((n, kbins), jnp.float32),
+            jax.ShapeDtypeStruct((n, kbins), jnp.float32),
+        ],
+        interpret=True,
+    )(kf, vf, fwd)
+
+    a = pl.pallas_call(
+        _unbind_score_kernel,
+        grid=(n, tp // bt),
+        in_specs=[
+            pl.BlockSpec((1, bt, h), lambda i, j: (i, j, 0)),
+            pl.BlockSpec((1, bt, h), lambda i, j: (i, j, 0)),
+            pl.BlockSpec((1, kbins), lambda i, j: (i, 0)),
+            pl.BlockSpec((1, kbins), lambda i, j: (i, 0)),
+            pl.BlockSpec((h, 2 * kbins), lambda i, j: (0, 0)),
+            pl.BlockSpec((2 * kbins, h), lambda i, j: (0, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, bt), lambda i, j: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((n, tp), jnp.float32),
+        interpret=True,
+    )(qf, vf, bre, bim, fwd, inv)
+
+    return a[:, :t].reshape(b, nh, t, 1).astype(q.dtype)
+
+
+def _softmax_reweight(a, v, mask):
+    """Eq. 4: softmax cleanup over T, then reweight the original values."""
+    if mask is not None:
+        a = a + (1.0 - mask[:, None, :, None]) * (-1e9)
+    w = jax.nn.softmax(a, axis=-2)
+    return w * v
+
+
+def hrr_attention_pallas(q, k, v, mask=None, block_t: int = DEFAULT_BLOCK_T):
+    """Full HRR attention, Pallas forward path. Shapes as scores fn."""
+    a = hrr_attention_scores_pallas(q, k, v, mask=mask, block_t=block_t)
+    return _softmax_reweight(a, v, mask)
+
+
+# ---------------------------------------------------------------------------
+# Differentiable entry points (custom VJP)
+# ---------------------------------------------------------------------------
+
+
+def _ref_scores(q, k, v, mask):
+    b, nh, t, h = q.shape
+    m = None if mask is None else jnp.broadcast_to(mask[:, None, :], (b, nh, t))
+    return ref.hrr_attention_scores_ref(q, k, v, mask=m)
+
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(4,))
+def _hrr_scores_cvjp(q, k, v, mask, block_t):
+    return hrr_attention_scores_pallas(q, k, v, mask=mask, block_t=block_t)
+
+
+def _hrr_scores_fwd(q, k, v, mask, block_t):
+    return hrr_attention_scores_pallas(q, k, v, mask=mask, block_t=block_t), (q, k, v, mask)
+
+
+def _hrr_scores_bwd(block_t, res, g):
+    q, k, v, mask = res
+    _, vjp = jax.vjp(lambda q_, k_, v_: _ref_scores(q_, k_, v_, mask), q, k, v)
+    dq, dk, dv = vjp(g)
+    return dq, dk, dv, None
+
+
+_hrr_scores_cvjp.defvjp(_hrr_scores_fwd, _hrr_scores_bwd)
+
+
+def hrr_attention_scores(q, k, v, mask=None, block_t: int = DEFAULT_BLOCK_T):
+    """Differentiable HRR scores: Pallas forward, oracle-derived backward."""
+    return _hrr_scores_cvjp(q, k, v, mask, block_t)
+
+
+def _ref_full(q, k, v, mask):
+    b, nh, t, h = q.shape
+    m = None if mask is None else jnp.broadcast_to(mask[:, None, :], (b, nh, t))
+    return ref.hrr_attention_ref(q, k, v, mask=m)
+
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(4,))
+def _hrr_attention_cvjp(q, k, v, mask, block_t):
+    return hrr_attention_pallas(q, k, v, mask=mask, block_t=block_t)
+
+
+def _hrr_fwd(q, k, v, mask, block_t):
+    return hrr_attention_pallas(q, k, v, mask=mask, block_t=block_t), (q, k, v, mask)
+
+
+def _hrr_bwd(block_t, res, g):
+    q, k, v, mask = res
+    _, vjp = jax.vjp(lambda q_, k_, v_: _ref_full(q_, k_, v_, mask), q, k, v)
+    dq, dk, dv = vjp(g)
+    return dq, dk, dv, None
+
+
+_hrr_attention_cvjp.defvjp(_hrr_fwd, _hrr_bwd)
+
+
+def hrr_attention(q, k, v, mask=None, block_t: int = DEFAULT_BLOCK_T):
+    """HRR attention: Pallas forward, oracle-derived backward.
+
+    This is the symbol Layer 2 (``compile/models/hrrformer.py``) calls; it
+    lowers into the same HLO module as the surrounding model so the rust
+    runtime executes the kernel with no Python anywhere near the request
+    path.
+    """
+    return _hrr_attention_cvjp(q, k, v, mask, block_t)

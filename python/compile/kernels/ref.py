@@ -1,0 +1,119 @@
+"""Pure-jnp oracle for the HRR operations and HRR attention.
+
+This is the correctness reference the Pallas kernels (``hrr.py``) are
+tested against (pytest + hypothesis), and it also supplies the backward
+pass for training (see ``hrr.hrr_attention``'s custom_vjp — DESIGN.md §L1
+Autodiff). It follows the paper's §3 step by step using ``jnp.fft``.
+"""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+__all__ = [
+    "bind",
+    "approx_inverse",
+    "exact_inverse",
+    "unbind",
+    "hrr_attention_ref",
+    "hrr_attention_scores_ref",
+    "softmax_attention_ref",
+]
+
+EPS = 1e-6
+
+
+def bind(x: jnp.ndarray, y: jnp.ndarray) -> jnp.ndarray:
+    """HRR binding ``x ⊛ y`` — circular convolution over the last axis."""
+    h = x.shape[-1]
+    return jnp.fft.irfft(jnp.fft.rfft(x, axis=-1) * jnp.fft.rfft(y, axis=-1), n=h, axis=-1)
+
+
+def approx_inverse(y: jnp.ndarray) -> jnp.ndarray:
+    """Plate's involution inverse ``y†``: time-reversal of all but element 0.
+
+    Equivalent to ``irfft(conj(rfft(y)))``; exact only when |F(y)_k| = 1.
+    """
+    h = y.shape[-1]
+    return jnp.fft.irfft(jnp.conj(jnp.fft.rfft(y, axis=-1)), n=h, axis=-1)
+
+
+def exact_inverse(y: jnp.ndarray, eps: float = EPS) -> jnp.ndarray:
+    """Stabilized exact inverse ``y† = IFFT(conj(F(y)) / (|F(y)|² + ε))``."""
+    h = y.shape[-1]
+    f = jnp.fft.rfft(y, axis=-1)
+    return jnp.fft.irfft(jnp.conj(f) / (jnp.abs(f) ** 2 + eps), n=h, axis=-1)
+
+
+def unbind(s: jnp.ndarray, q: jnp.ndarray, exact: bool = True, eps: float = EPS) -> jnp.ndarray:
+    """Unbind ``q`` from superposition ``s``: ``q† ⊛ s`` (paper Eq. 2)."""
+    h = s.shape[-1]
+    fs = jnp.fft.rfft(s, axis=-1)
+    fq = jnp.fft.rfft(q, axis=-1)
+    if exact:
+        inv = jnp.conj(fq) / (jnp.abs(fq) ** 2 + eps)
+    else:
+        inv = jnp.conj(fq)
+    return jnp.fft.irfft(fs * inv, n=h, axis=-1)
+
+
+def _cosine(a: jnp.ndarray, b: jnp.ndarray, eps: float = EPS) -> jnp.ndarray:
+    num = jnp.sum(a * b, axis=-1, keepdims=True)
+    den = jnp.linalg.norm(a, axis=-1, keepdims=True) * jnp.linalg.norm(b, axis=-1, keepdims=True)
+    return num / (den + eps)
+
+
+def hrr_attention_scores_ref(
+    q: jnp.ndarray,
+    k: jnp.ndarray,
+    v: jnp.ndarray,
+    mask: jnp.ndarray | None = None,
+    exact_inv: bool = True,
+) -> jnp.ndarray:
+    """Paper Eqs. 1-3: superposition → unbind → cosine scores.
+
+    Args:
+      q, k, v: ``(..., T, H)``.
+      mask: optional ``(..., T)`` with 1 = keep; masked positions are
+        excluded from the superposition (their k⊛v never enters β).
+
+    Returns: scores ``a`` of shape ``(..., T, 1)`` (pre-softmax).
+    """
+    kv = bind(k, v)  # (..., T, H)
+    if mask is not None:
+        kv = kv * mask[..., None]
+    beta = jnp.sum(kv, axis=-2, keepdims=True)  # (..., 1, H)  — Eq. 1
+    v_hat = unbind(beta, q, exact=exact_inv)  # (..., T, H)  — Eq. 2
+    return _cosine(v, v_hat)  # (..., T, 1)  — Eq. 3
+
+
+def hrr_attention_ref(
+    q: jnp.ndarray,
+    k: jnp.ndarray,
+    v: jnp.ndarray,
+    mask: jnp.ndarray | None = None,
+    exact_inv: bool = True,
+) -> jnp.ndarray:
+    """Full HRR attention (paper Eqs. 1-4): softmax-cleaned reweighting of V.
+
+    Returns ``(..., T, H)`` — ``w_t * v_t`` with ``w = softmax(a)`` over T.
+    """
+    a = hrr_attention_scores_ref(q, k, v, mask=mask, exact_inv=exact_inv)
+    if mask is not None:
+        a = a + (1.0 - mask[..., None]) * (-1e9)
+    w = jnp.exp(a - jnp.max(a, axis=-2, keepdims=True))
+    w = w / jnp.sum(w, axis=-2, keepdims=True)  # softmax over T — Eq. 4 cleanup
+    return w * v
+
+
+def softmax_attention_ref(
+    q: jnp.ndarray, k: jnp.ndarray, v: jnp.ndarray, mask: jnp.ndarray | None = None
+) -> jnp.ndarray:
+    """Standard scaled dot-product attention (Vaswani et al.), for baselines."""
+    h = q.shape[-1]
+    scores = jnp.einsum("...th,...sh->...ts", q, k) / jnp.sqrt(h)
+    if mask is not None:
+        scores = scores + (1.0 - mask[..., None, :]) * (-1e9)
+    w = jnp.exp(scores - jnp.max(scores, axis=-1, keepdims=True))
+    w = w / jnp.sum(w, axis=-1, keepdims=True)
+    return jnp.einsum("...ts,...sh->...th", w, v)

@@ -1,0 +1,121 @@
+"""Shared pure-JAX building blocks for the encoder zoo (no flax).
+
+Parameters are nested dicts of ``jnp.ndarray``; initializers take an
+explicit PRNG key. Apply functions are pure. The deterministic flatten
+order of these dicts (``jax.tree_util``, sorted keys) is what the AOT
+manifest records for the rust side.
+"""
+
+from __future__ import annotations
+
+import numpy as np
+
+import jax
+import jax.numpy as jnp
+
+# ---------------------------------------------------------------------------
+# Initializers
+# ---------------------------------------------------------------------------
+
+
+def glorot(key, shape):
+    fan_in, fan_out = shape[0], shape[-1]
+    scale = jnp.sqrt(2.0 / (fan_in + fan_out))
+    return jax.random.normal(key, shape, dtype=jnp.float32) * scale
+
+
+def normal(key, shape, stddev=0.02):
+    return jax.random.normal(key, shape, dtype=jnp.float32) * stddev
+
+
+def dense_init(key, d_in, d_out, use_bias=True):
+    p = {"kernel": glorot(key, (d_in, d_out))}
+    if use_bias:
+        p["bias"] = jnp.zeros((d_out,), dtype=jnp.float32)
+    return p
+
+
+def dense(p, x):
+    y = x @ p["kernel"]
+    if "bias" in p:
+        y = y + p["bias"]
+    return y
+
+
+def layernorm_init(d):
+    return {"scale": jnp.ones((d,), jnp.float32), "bias": jnp.zeros((d,), jnp.float32)}
+
+
+def layernorm(p, x, eps=1e-6):
+    mu = jnp.mean(x, axis=-1, keepdims=True)
+    var = jnp.mean(jnp.square(x - mu), axis=-1, keepdims=True)
+    return (x - mu) * jax.lax.rsqrt(var + eps) * p["scale"] + p["bias"]
+
+
+# ---------------------------------------------------------------------------
+# Embeddings / positions
+# ---------------------------------------------------------------------------
+
+
+def embed_init(key, vocab, d):
+    return {"table": normal(key, (vocab, d), stddev=1.0 / np.sqrt(d))}
+
+
+def embed(p, ids):
+    return jnp.take(p["table"], ids, axis=0)
+
+
+def sinusoid_positions(t, d):
+    """Fixed sinusoidal positional table (Vaswani et al.)."""
+    pos = np.arange(t)[:, None].astype(np.float64)
+    i = np.arange(d)[None, :]
+    angle = pos / np.power(10000.0, (2 * (i // 2)) / d)
+    table = np.where(i % 2 == 0, np.sin(angle), np.cos(angle))
+    return jnp.asarray(table.astype(np.float32))
+
+
+def positions_init(key, cfg):
+    if cfg.pos == "learned":
+        return {"pos": normal(key, (cfg.seq_len, cfg.embed), stddev=0.02)}
+    return {}  # fixed table is a compile-time constant
+
+
+def positions_apply(p, cfg, x):
+    t = x.shape[1]
+    if cfg.pos == "learned":
+        return x + p["pos"][:t][None, :, :]
+    return x + sinusoid_positions(t, cfg.embed)[None, :, :]
+
+
+# ---------------------------------------------------------------------------
+# Heads helpers + MLP block
+# ---------------------------------------------------------------------------
+
+
+def split_heads(x, heads):
+    """(B, T, H) → (B, h, T, H/h)."""
+    b, t, h = x.shape
+    return x.reshape(b, t, heads, h // heads).transpose(0, 2, 1, 3)
+
+
+def merge_heads(x):
+    """(B, h, T, H') → (B, T, H)."""
+    b, nh, t, hp = x.shape
+    return x.transpose(0, 2, 1, 3).reshape(b, t, nh * hp)
+
+
+def mlp_init(key, d, d_hidden):
+    k1, k2 = jax.random.split(key)
+    return {"fc1": dense_init(k1, d, d_hidden), "fc2": dense_init(k2, d_hidden, d)}
+
+
+def mlp(p, x):
+    return dense(p["fc2"], jax.nn.gelu(dense(p["fc1"], x)))
+
+
+def dropout(key, rate, x, deterministic):
+    if deterministic or rate <= 0.0:
+        return x
+    keep = 1.0 - rate
+    m = jax.random.bernoulli(key, keep, x.shape)
+    return jnp.where(m, x / keep, 0.0)

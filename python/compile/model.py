@@ -1,0 +1,164 @@
+"""Layer 2: the encoder zoo — init / forward / train_step / predict.
+
+Pure-JAX (no flax); parameters are nested dicts. These functions are the
+bodies that ``aot.py`` lowers ONCE to HLO text; the rust coordinator then
+executes them with Python never on the request path.
+
+Architecture (paper §3 Fig 3): token embedding + positions → L pre-LN
+encoder blocks (mixer + MLP, residuals) → masked mean-pool → two dense
+layers with ReLU → logits. Mixers are pluggable (``models.MIXERS``);
+``hrrformer`` is the paper's contribution, the rest are its baselines.
+
+Optimizer: Adam with the paper's exponential LR decay (1e-3 → 1e-5,
+``decay_rate`` per epoch).
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from . import layers
+from .configs import ModelConfig
+from .models import MIXERS
+
+PAD_ID = 0  # token 0 is PAD everywhere (datasets reserve it)
+
+
+# ---------------------------------------------------------------------------
+# Init / forward
+# ---------------------------------------------------------------------------
+
+
+def init_params(key, cfg: ModelConfig):
+    mixer = MIXERS[cfg.model]
+    k_embed, k_pos, k_blocks, k_head = jax.random.split(key, 4)
+    block_keys = jax.random.split(k_blocks, cfg.layers)
+    blocks = []
+    for i in range(cfg.layers):
+        km, kp = jax.random.split(block_keys[i])
+        blocks.append(
+            {
+                "ln1": layers.layernorm_init(cfg.embed),
+                "mixer": mixer.init(km, cfg),
+                "ln2": layers.layernorm_init(cfg.embed),
+                "mlp": layers.mlp_init(kp, cfg.embed, cfg.mlp_dim),
+            }
+        )
+    kh1, kh2 = jax.random.split(k_head)
+    params = {
+        "embed": layers.embed_init(k_embed, cfg.vocab, cfg.embed),
+        "blocks": blocks,
+        "ln_f": layers.layernorm_init(cfg.embed),
+        "head1": layers.dense_init(kh1, cfg.embed, cfg.mlp_dim),
+        "head2": layers.dense_init(kh2, cfg.mlp_dim, cfg.classes),
+    }
+    params.update(layers.positions_init(k_pos, cfg))
+    return params
+
+
+def encode(params, cfg: ModelConfig, ids, *, rng=None, deterministic=True,
+           collect_weights=False):
+    """ids: (B, T) int32 → features (B, T, E); PAD positions masked.
+
+    With ``collect_weights`` (hrrformer only) also returns the per-layer
+    attention weight maps ``(L, B, h, T)``.
+    """
+    mixer = MIXERS[cfg.model]
+    mask = (ids != PAD_ID).astype(jnp.float32)  # (B, T)
+    x = layers.embed(params["embed"], ids)
+    x = layers.positions_apply(params, cfg, x)
+    weights = []
+    for i, blk in enumerate(params["blocks"]):
+        key_i = None if rng is None else jax.random.fold_in(rng, i)
+        h = layers.layernorm(blk["ln1"], x)
+        if collect_weights and cfg.model == "hrrformer":
+            y, w = MIXERS["hrrformer"].apply_with_weights(blk["mixer"], cfg, h, mask)
+            weights.append(w)
+        else:
+            y = mixer.apply(blk["mixer"], cfg, h, mask, rng=key_i,
+                            deterministic=deterministic)
+        y = layers.dropout(key_i, cfg.dropout, y, deterministic)
+        x = x + y
+        h = layers.layernorm(blk["ln2"], x)
+        h = layers.mlp(blk["mlp"], h)
+        h = layers.dropout(
+            None if key_i is None else jax.random.fold_in(key_i, 1000),
+            cfg.dropout, h, deterministic)
+        x = x + h
+    x = layers.layernorm(params["ln_f"], x)
+    if collect_weights:
+        return x, mask, jnp.stack(weights) if weights else jnp.zeros((0,))
+    return x, mask
+
+
+def logits_fn(params, cfg: ModelConfig, ids, *, rng=None, deterministic=True):
+    x, mask = encode(params, cfg, ids, rng=rng, deterministic=deterministic)
+    denom = jnp.maximum(jnp.sum(mask, axis=1, keepdims=True), 1.0)
+    pooled = jnp.sum(x * mask[..., None], axis=1) / denom  # masked mean-pool
+    h = jax.nn.relu(layers.dense(params["head1"], pooled))
+    return layers.dense(params["head2"], h)
+
+
+def attn_weights_fn(params, cfg: ModelConfig, ids):
+    """Fig 5/9 program: per-layer, per-head softmax weight maps."""
+    _, _, w = encode(params, cfg, ids, deterministic=True, collect_weights=True)
+    return w  # (L, B, h, T)
+
+
+# ---------------------------------------------------------------------------
+# Loss / optimizer
+# ---------------------------------------------------------------------------
+
+
+def loss_fn(params, cfg, ids, labels, rng):
+    logits = logits_fn(params, cfg, ids, rng=rng, deterministic=rng is None)
+    logp = jax.nn.log_softmax(logits, axis=-1)
+    nll = -jnp.take_along_axis(logp, labels[:, None], axis=-1).mean()
+    acc = (jnp.argmax(logits, axis=-1) == labels).astype(jnp.float32).mean()
+    return nll, acc
+
+
+def adam_init(params):
+    zeros = jax.tree_util.tree_map(jnp.zeros_like, params)
+    return zeros, jax.tree_util.tree_map(jnp.zeros_like, params)
+
+
+def lr_schedule(cfg: ModelConfig, step):
+    """Paper: exponential decay per epoch from lr to lr_min."""
+    epochs = step.astype(jnp.float32) / cfg.steps_per_epoch
+    return jnp.maximum(cfg.lr * cfg.decay_rate**epochs, cfg.lr_min)
+
+
+def adam_update(cfg: ModelConfig, params, m, v, grads, step,
+                b1=0.9, b2=0.999, eps=1e-8):
+    lr = lr_schedule(cfg, step)
+    t = step.astype(jnp.float32) + 1.0
+    m = jax.tree_util.tree_map(lambda m_, g: b1 * m_ + (1 - b1) * g, m, grads)
+    v = jax.tree_util.tree_map(lambda v_, g: b2 * v_ + (1 - b2) * g * g, v, grads)
+    mhat_scale = 1.0 / (1.0 - b1**t)
+    vhat_scale = 1.0 / (1.0 - b2**t)
+    params = jax.tree_util.tree_map(
+        lambda p, m_, v_: p - lr * (m_ * mhat_scale) / (jnp.sqrt(v_ * vhat_scale) + eps),
+        params, m, v,
+    )
+    return params, m, v
+
+
+def train_step(cfg: ModelConfig, params, m, v, step, ids, labels):
+    """One SGD step; returns (params', m', v', loss, acc).
+
+    Dropout is keyed deterministically off ``step`` so the exported HLO
+    is a pure function — reproducible from rust.
+    """
+    rng = jax.random.fold_in(jax.random.PRNGKey(0), step)
+    (loss, acc), grads = jax.value_and_grad(
+        lambda p: loss_fn(p, cfg, ids, labels, rng), has_aux=True
+    )(params)
+    params, m, v = adam_update(cfg, params, m, v, grads, step)
+    return params, m, v, loss, acc
+
+
+def eval_step(cfg: ModelConfig, params, ids, labels):
+    loss, acc = loss_fn(params, cfg, ids, labels, None)
+    return loss, acc

@@ -1,0 +1,29 @@
+"""Mixer zoo: one module per token-mixing strategy (DESIGN.md §L2).
+
+Every mixer exposes ``init(key, cfg) -> params`` and
+``apply(params, cfg, x, mask, *, rng=None, deterministic=True) -> (B,T,E)``.
+``hrrformer`` additionally exposes ``apply_with_weights`` for the Fig 5/9
+attention-map dumps.
+"""
+
+from . import (  # noqa: F401
+    fnet,
+    hrrformer,
+    linear_transformer,
+    linformer,
+    local,
+    luna,
+    performer,
+    transformer,
+)
+
+MIXERS = {
+    "hrrformer": hrrformer,
+    "transformer": transformer,
+    "fnet": fnet,
+    "linformer": linformer,
+    "performer": performer,
+    "linear_transformer": linear_transformer,
+    "local": local,
+    "luna": luna,
+}

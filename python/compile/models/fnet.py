@@ -1,0 +1,22 @@
+"""F-Net token mixing (Lee-Thorp et al. 2021): Re(FFT_seq(FFT_feat(x))).
+
+Parameter-free mixing; the closest prior work to the Hrrformer (both are
+FFT-based) and its main speed rival in the paper's Figures 1/4.
+"""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def init(key, cfg):
+    return {}
+
+
+def apply(params, cfg, x, mask, *, rng=None, deterministic=True):
+    if mask is not None:
+        x = x * mask[..., None]
+    # norm="ortho" keeps the residual stream at unit scale under our
+    # pre-LN scaffold (the original post-LN F-Net absorbs the 1/sqrt(TE)
+    # into the following LayerNorm).
+    return jnp.fft.fft(jnp.fft.fft(x, axis=-1, norm="ortho"), axis=-2, norm="ortho").real

@@ -1,0 +1,58 @@
+"""The paper's contribution: multi-head HRR self-attention (§3, Fig 2-3).
+
+QKV projections are bias-free dense layers (paper Appendix A), heads are
+split exactly as in the standard Transformer, and the mixing itself is
+the L1 kernel (``kernels.hrr.hrr_attention``) — Pallas forward with the
+oracle-derived backward — or the pure-jnp reference, selected by
+``cfg.hrr_impl``.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from .. import layers
+from ..kernels import hrr, ref
+
+
+def init(key, cfg):
+    kq, kk, kv, ko = jax.random.split(key, 4)
+    d = cfg.embed
+    return {
+        "query": layers.dense_init(kq, d, d, use_bias=False),
+        "key": layers.dense_init(kk, d, d, use_bias=False),
+        "value": layers.dense_init(kv, d, d, use_bias=False),
+        "output": layers.dense_init(ko, d, d, use_bias=False),
+    }
+
+
+def _attend(params, cfg, x, mask):
+    q = layers.split_heads(layers.dense(params["query"], x), cfg.heads)
+    k = layers.split_heads(layers.dense(params["key"], x), cfg.heads)
+    v = layers.split_heads(layers.dense(params["value"], x), cfg.heads)
+    if cfg.hrr_impl == "pallas":
+        a = hrr.hrr_attention_scores(q, k, v, mask=mask, block_t=cfg.hrr_block_t)
+    else:
+        m = None
+        if mask is not None:
+            b, nh, t, _ = q.shape
+            m = jnp.broadcast_to(mask[:, None, :], (b, nh, t))
+        a = ref.hrr_attention_scores_ref(q, k, v, mask=m)
+    if mask is not None:
+        a = a + (1.0 - mask[:, None, :, None]) * (-1e9)
+    w = jax.nn.softmax(a, axis=-2)  # (B, h, T, 1) — Eq. 4 cleanup
+    return w, v
+
+
+def apply(params, cfg, x, mask, *, rng=None, deterministic=True):
+    w, v = _attend(params, cfg, x, mask)
+    out = layers.merge_heads(w * v)
+    return layers.dense(params["output"], out)
+
+
+def apply_with_weights(params, cfg, x, mask):
+    """Returns (output, w) where w: (B, h, T) — the Fig 5/9 heat-maps."""
+    w, v = _attend(params, cfg, x, mask)
+    out = layers.dense(params["output"], layers.merge_heads(w * v))
+    return out, w[..., 0]

@@ -1,0 +1,41 @@
+"""Linear Transformer (Katharopoulos et al. 2020): φ(x) = elu(x)+1 kernel.
+
+out_t = φ(q_t)ᵀ (Σ_s φ(k_s) v_sᵀ) / (φ(q_t)ᵀ Σ_s φ(k_s)) — O(T·H'²).
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from .. import layers
+
+
+def init(key, cfg):
+    kq, kk, kv, ko = jax.random.split(key, 4)
+    d = cfg.embed
+    return {
+        "query": layers.dense_init(kq, d, d, use_bias=False),
+        "key": layers.dense_init(kk, d, d, use_bias=False),
+        "value": layers.dense_init(kv, d, d, use_bias=False),
+        "output": layers.dense_init(ko, d, d, use_bias=False),
+    }
+
+
+def _phi(x):
+    return jax.nn.elu(x) + 1.0
+
+
+def apply(params, cfg, x, mask, *, rng=None, deterministic=True):
+    q = layers.split_heads(layers.dense(params["query"], x), cfg.heads)
+    k = layers.split_heads(layers.dense(params["key"], x), cfg.heads)
+    v = layers.split_heads(layers.dense(params["value"], x), cfg.heads)
+    qf, kf = _phi(q), _phi(k)
+    if mask is not None:
+        kf = kf * mask[:, None, :, None]
+        v = v * mask[:, None, :, None]
+    kv = jnp.einsum("bhtm,bhtd->bhmd", kf, v)
+    num = jnp.einsum("bhtm,bhmd->bhtd", qf, kv)
+    den = jnp.einsum("bhtm,bhm->bht", qf, jnp.sum(kf, axis=2))[..., None]
+    out = num / (den + 1e-6)
+    return layers.dense(params["output"], layers.merge_heads(out))

@@ -1,0 +1,43 @@
+"""Linformer (Wang et al. 2020): low-rank projection of K and V along T.
+
+K' = EᵀK, V' = FᵀV with learned (T, k) projections — attention cost
+O(T·k) instead of O(T²).
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from .. import layers
+from ..kernels import ref
+
+
+def init(key, cfg):
+    kq, kk, kv, ko, ke, kf = jax.random.split(key, 6)
+    d = cfg.embed
+    kproj = min(cfg.linformer_k, cfg.seq_len)
+    return {
+        "query": layers.dense_init(kq, d, d, use_bias=False),
+        "key": layers.dense_init(kk, d, d, use_bias=False),
+        "value": layers.dense_init(kv, d, d, use_bias=False),
+        "output": layers.dense_init(ko, d, d, use_bias=False),
+        "proj_e": layers.normal(ke, (cfg.seq_len, kproj), stddev=1.0 / jnp.sqrt(cfg.seq_len)),
+        "proj_f": layers.normal(kf, (cfg.seq_len, kproj), stddev=1.0 / jnp.sqrt(cfg.seq_len)),
+    }
+
+
+def apply(params, cfg, x, mask, *, rng=None, deterministic=True):
+    b, t, d = x.shape
+    q = layers.split_heads(layers.dense(params["query"], x), cfg.heads)
+    k = layers.dense(params["key"], x)
+    v = layers.dense(params["value"], x)
+    if mask is not None:
+        k = k * mask[..., None]
+        v = v * mask[..., None]
+    e = params["proj_e"][:t]
+    f = params["proj_f"][:t]
+    k = layers.split_heads(jnp.einsum("btd,tk->bkd", k, e), cfg.heads)  # (B,h,k,H')
+    v = layers.split_heads(jnp.einsum("btd,tk->bkd", v, f), cfg.heads)
+    out = ref.softmax_attention_ref(q, k, v, mask=None)  # keys already mask-folded
+    return layers.dense(params["output"], layers.merge_heads(out))

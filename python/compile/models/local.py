@@ -1,0 +1,46 @@
+"""Local (blocked window) attention — the simplest sparse baseline.
+
+The sequence is chunked into non-overlapping windows of
+``cfg.local_window``; softmax attention runs within each window.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from .. import layers
+from ..kernels import ref
+
+
+def init(key, cfg):
+    kq, kk, kv, ko = jax.random.split(key, 4)
+    d = cfg.embed
+    return {
+        "query": layers.dense_init(kq, d, d, use_bias=False),
+        "key": layers.dense_init(kk, d, d, use_bias=False),
+        "value": layers.dense_init(kv, d, d, use_bias=False),
+        "output": layers.dense_init(ko, d, d, use_bias=False),
+    }
+
+
+def apply(params, cfg, x, mask, *, rng=None, deterministic=True):
+    b, t, d = x.shape
+    w = min(cfg.local_window, t)
+    pad = -t % w
+    q = layers.split_heads(layers.dense(params["query"], x), cfg.heads)
+    k = layers.split_heads(layers.dense(params["key"], x), cfg.heads)
+    v = layers.split_heads(layers.dense(params["value"], x), cfg.heads)
+    m = mask if mask is not None else jnp.ones((b, t), x.dtype)
+    if pad:
+        q, k, v = (jnp.pad(a, ((0, 0), (0, 0), (0, pad), (0, 0))) for a in (q, k, v))
+        m = jnp.pad(m, ((0, 0), (0, pad)))
+    nw = (t + pad) // w
+    # (B, h, nw, w, H')
+    qw = q.reshape(b, cfg.heads, nw, w, -1)
+    kw = k.reshape(b, cfg.heads, nw, w, -1)
+    vw = v.reshape(b, cfg.heads, nw, w, -1)
+    mw = m.reshape(b, 1, nw, w)
+    out = ref.softmax_attention_ref(qw, kw, vw, mask=mw)
+    out = out.reshape(b, cfg.heads, nw * w, -1)[:, :, :t, :]
+    return layers.dense(params["output"], layers.merge_heads(out))

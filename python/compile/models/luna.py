@@ -1,0 +1,50 @@
+"""Luna: Linear Unified Nested Attention (Ma et al. 2021), simplified.
+
+Two nested softmax attentions through a learned memory of ``luna_len``
+slots: pack P' = Attn(P, X, X) then unpack Y = Attn(X, P', P') — linear
+in T. This is the paper's strongest LRA comparator (Table 1, Fig 6).
+The per-layer memory update (p carried across layers) is simplified to a
+per-layer learned memory, which keeps the cost model identical.
+"""
+
+from __future__ import annotations
+
+import jax
+
+from .. import layers
+from ..kernels import ref
+
+
+def init(key, cfg):
+    kq1, kk1, kv1, kq2, kk2, kv2, ko, kp = jax.random.split(key, 8)
+    d = cfg.embed
+    return {
+        "pack_q": layers.dense_init(kq1, d, d, use_bias=False),
+        "pack_k": layers.dense_init(kk1, d, d, use_bias=False),
+        "pack_v": layers.dense_init(kv1, d, d, use_bias=False),
+        "unpack_q": layers.dense_init(kq2, d, d, use_bias=False),
+        "unpack_k": layers.dense_init(kk2, d, d, use_bias=False),
+        "unpack_v": layers.dense_init(kv2, d, d, use_bias=False),
+        "output": layers.dense_init(ko, d, d, use_bias=False),
+        "memory": layers.normal(kp, (cfg.luna_len, d), stddev=0.02),
+    }
+
+
+def apply(params, cfg, x, mask, *, rng=None, deterministic=True):
+    b, t, d = x.shape
+    import jax.numpy as jnp
+
+    p = jnp.broadcast_to(params["memory"][None], (b, cfg.luna_len, d))
+    # pack: memory queries attend over the sequence
+    q = layers.split_heads(layers.dense(params["pack_q"], p), cfg.heads)
+    k = layers.split_heads(layers.dense(params["pack_k"], x), cfg.heads)
+    v = layers.split_heads(layers.dense(params["pack_v"], x), cfg.heads)
+    m = None if mask is None else mask[:, None, :]
+    packed = ref.softmax_attention_ref(q, k, v, mask=m)  # (B,h,l,H')
+    packed = layers.merge_heads(packed)  # (B,l,D)
+    # unpack: sequence queries attend over the packed memory
+    q2 = layers.split_heads(layers.dense(params["unpack_q"], x), cfg.heads)
+    k2 = layers.split_heads(layers.dense(params["unpack_k"], packed), cfg.heads)
+    v2 = layers.split_heads(layers.dense(params["unpack_v"], packed), cfg.heads)
+    out = ref.softmax_attention_ref(q2, k2, v2, mask=None)
+    return layers.dense(params["output"], layers.merge_heads(out))

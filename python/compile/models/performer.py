@@ -1,0 +1,81 @@
+"""Performer / FAVOR+ (Choromanski et al. 2020).
+
+Positive orthogonal random features approximate the softmax kernel:
+φ(x) = exp(xᵀω − ‖x‖²/2)/√m. The feature matrix is sampled at init and
+stored in the params (non-trainable by convention, but gradient flow is
+harmless and matches common implementations).
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from .. import layers
+
+
+def _orthogonal_gaussian(key, m, d):
+    """Block-orthogonal Gaussian features (FAVOR+ §3.2).
+
+    Computed with numpy at trace time (QR would lower to a LAPACK FFI
+    custom-call the pinned xla_extension 0.5.1 runtime cannot execute) —
+    the features are a deterministic constant baked into the HLO, which
+    matches the Performer convention of freezing the feature matrix.
+    """
+    del key  # deterministic export: features fixed across seeds
+    rng = np.random.default_rng(20230701)
+    blocks = []
+    n_full, rest = divmod(m, d)
+    for _ in range(n_full):
+        q, _ = np.linalg.qr(rng.standard_normal((d, d)))
+        blocks.append(q.T)
+    if rest:
+        q, _ = np.linalg.qr(rng.standard_normal((d, d)))
+        blocks.append(q.T[:rest])
+    w = np.concatenate(blocks, axis=0)  # (m, d)
+    # renormalize rows to chi(d) norms like i.i.d. gaussians
+    norms = np.sqrt((rng.standard_normal((m, d)) ** 2).sum(-1, keepdims=True))
+    return jnp.asarray((w * norms).astype(np.float32))
+
+
+def init(key, cfg):
+    kq, kk, kv, ko, kw = jax.random.split(key, 5)
+    d = cfg.embed
+    hp = cfg.head_dim
+    m = cfg.performer_features
+    return {
+        "query": layers.dense_init(kq, d, d, use_bias=False),
+        "key": layers.dense_init(kk, d, d, use_bias=False),
+        "value": layers.dense_init(kv, d, d, use_bias=False),
+        "output": layers.dense_init(ko, d, d, use_bias=False),
+        "features": _orthogonal_gaussian(kw, m, hp),  # (m, H')
+    }
+
+
+def _phi(x, w):
+    """Positive softmax-kernel features; x: (B,h,T,H'), w: (m,H')."""
+    m = w.shape[0]
+    scale = x.shape[-1] ** -0.25
+    xs = x * scale
+    proj = jnp.einsum("bhtd,md->bhtm", xs, w)
+    sq = 0.5 * jnp.sum(xs * xs, axis=-1, keepdims=True)
+    # subtract max for stability (standard FAVOR+ trick)
+    stab = jnp.max(proj, axis=-1, keepdims=True)
+    return jnp.exp(proj - sq - stab) / np.sqrt(m) + 1e-6
+
+
+def apply(params, cfg, x, mask, *, rng=None, deterministic=True):
+    q = layers.split_heads(layers.dense(params["query"], x), cfg.heads)
+    k = layers.split_heads(layers.dense(params["key"], x), cfg.heads)
+    v = layers.split_heads(layers.dense(params["value"], x), cfg.heads)
+    w = jax.lax.stop_gradient(params["features"])
+    qf, kf = _phi(q, w), _phi(k, w)  # (B,h,T,m)
+    if mask is not None:
+        kf = kf * mask[:, None, :, None]
+        v = v * mask[:, None, :, None]
+    kv = jnp.einsum("bhtm,bhtd->bhmd", kf, v)  # (B,h,m,H')
+    num = jnp.einsum("bhtm,bhmd->bhtd", qf, kv)
+    den = jnp.einsum("bhtm,bhm->bht", qf, jnp.sum(kf, axis=2))[..., None]
+    out = num / (den + 1e-6)
+    return layers.dense(params["output"], layers.merge_heads(out))

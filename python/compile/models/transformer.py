@@ -1,0 +1,28 @@
+"""Standard softmax self-attention (Vaswani et al. 2017) — the O(T²) baseline."""
+
+from __future__ import annotations
+
+import jax
+
+from .. import layers
+from ..kernels import ref
+
+
+def init(key, cfg):
+    kq, kk, kv, ko = jax.random.split(key, 4)
+    d = cfg.embed
+    return {
+        "query": layers.dense_init(kq, d, d, use_bias=False),
+        "key": layers.dense_init(kk, d, d, use_bias=False),
+        "value": layers.dense_init(kv, d, d, use_bias=False),
+        "output": layers.dense_init(ko, d, d, use_bias=False),
+    }
+
+
+def apply(params, cfg, x, mask, *, rng=None, deterministic=True):
+    q = layers.split_heads(layers.dense(params["query"], x), cfg.heads)
+    k = layers.split_heads(layers.dense(params["key"], x), cfg.heads)
+    v = layers.split_heads(layers.dense(params["value"], x), cfg.heads)
+    m = None if mask is None else mask[:, None, :]  # broadcast over heads
+    out = ref.softmax_attention_ref(q, k, v, mask=m)
+    return layers.dense(params["output"], layers.merge_heads(out))

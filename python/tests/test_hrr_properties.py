@@ -1,0 +1,138 @@
+"""Property tests for the paper's HRR claims (§3, Theorem A.1, Appendix D).
+
+These pin down the *symbolic* behaviour the Hrrformer relies on:
+retrieval from a superposition, noise tolerance, and the softmax
+shift-invariance that acts as the cleanup step.
+"""
+
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings, strategies as st
+from numpy.testing import assert_allclose
+
+from compile.kernels import ref
+
+H = 1024  # large H → low HRR crosstalk noise (variance ~ T/H)
+
+
+def gaussian(rng, *shape):
+    """I.I.D. N(0, 1/last-dim) vectors — Plate's sufficient condition."""
+    return (rng.standard_normal(shape) * (1.0 / np.sqrt(shape[-1]))).astype(np.float32)
+
+
+@settings(max_examples=20, deadline=None)
+@given(seed=st.integers(0, 2**31 - 1), pairs=st.integers(1, 8))
+def test_dot_response_present_vs_absent(seed, pairs):
+    """Plate: βᵀy† ≈ 1 if y ∈ β, ≈ 0 if not (paper §3).
+
+    Plate's retrieval theory is for the involution (approximate) inverse;
+    the exact inverse amplifies crosstalk at low-|F(q)| bins in
+    superpositions (that noise is what the paper's softmax cleanup — and
+    our test_softmax_shift_invariance — handles in-model).
+    """
+    rng = np.random.default_rng(seed)
+    ks = gaussian(rng, pairs, H)
+    vs = gaussian(rng, pairs, H)
+    beta = np.asarray(ref.bind(ks, vs)).sum(axis=0)  # (H,)
+    # query with a present key: response should recover the paired value
+    rec = np.asarray(ref.unbind(beta[None, :], ks[:1], exact=False))[0]
+    present = float(np.dot(rec, vs[0]) / (np.linalg.norm(rec) * np.linalg.norm(vs[0])))
+    # query with an absent key
+    z = gaussian(rng, H)
+    rec_z = np.asarray(ref.unbind(beta[None, :], z[None, :], exact=False))[0]
+    absent = float(np.dot(rec_z, vs[0]) / (np.linalg.norm(rec_z) * np.linalg.norm(vs[0])))
+    assert present > 0.25, f"present response too weak: {present} ({pairs} pairs)"
+    assert abs(absent) < 0.25, f"absent response too strong: {absent}"
+    assert present > abs(absent) + 0.1
+
+
+@settings(max_examples=10, deadline=None)
+@given(seed=st.integers(0, 2**31 - 1))
+def test_retrieval_degrades_gracefully_with_superposition_size(seed):
+    """Crosstalk noise grows like sqrt(T/H): 2 pairs beat 32 pairs."""
+    rng = np.random.default_rng(seed)
+    sims = []
+    for pairs in (2, 32):
+        ks, vs = gaussian(rng, pairs, H), gaussian(rng, pairs, H)
+        beta = np.asarray(ref.bind(ks, vs)).sum(axis=0)
+        rec = np.asarray(ref.unbind(beta[None, :], ks[:1], exact=False))[0]
+        sims.append(float(np.dot(rec, vs[0]) / (np.linalg.norm(rec) * np.linalg.norm(vs[0]) + 1e-9)))
+    assert sims[0] > sims[1] - 0.05
+
+
+def test_softmax_shift_invariance():
+    """Appendix D: softmax(x + ε·1) == softmax(x) — the cleanup property."""
+    rng = np.random.default_rng(0)
+    x = jnp.asarray(rng.standard_normal(64).astype(np.float32))
+    for eps in (0.5, -3.0, 100.0):
+        a = np.asarray(jnp.exp(x - jnp.max(x)) / jnp.sum(jnp.exp(x - jnp.max(x))))
+        xs = x + eps
+        b = np.asarray(jnp.exp(xs - jnp.max(xs)) / jnp.sum(jnp.exp(xs - jnp.max(xs))))
+        assert_allclose(a, b, atol=1e-6)
+
+
+def test_theorem_a1_all_pairs_interaction():
+    """Theorem A.1: cos(v_t, q_t† ⊛ Σᵢ kᵢ⊛vᵢ) == cos(v_t, Σᵢ (q_t†⊛kᵢ)⊛vᵢ).
+
+    The distributivity of ⊛ over + lets the query move inside the sum —
+    i.e. the score aggregates an interaction with EVERY key-value pair.
+    """
+    rng = np.random.default_rng(2)
+    t, h = 6, 128
+    q, k, v = gaussian(rng, t, h), gaussian(rng, t, h), gaussian(rng, t, h)
+    beta = np.asarray(ref.bind(k, v)).sum(axis=0, keepdims=True)  # (1, h)
+    lhs = np.asarray(ref.unbind(beta, q[:1], exact=True))[0]
+    # distribute: q† ⊛ Σ (k_i ⊛ v_i) = Σ (q† ⊛ k_i ⊛ v_i)
+    qinv = np.asarray(ref.exact_inverse(q[:1]))  # (1, h)
+    per_pair = np.asarray(ref.bind(np.asarray(ref.bind(np.repeat(qinv, t, 0), k)), v))
+    rhs = per_pair.sum(axis=0)
+    assert_allclose(lhs, rhs, atol=1e-4, rtol=1e-3)
+
+
+def test_attention_weights_sum_to_one():
+    rng = np.random.default_rng(3)
+    b, nh, t, h = 2, 2, 12, 32
+    q, k, v = (gaussian(rng, b, nh, t, h) for _ in range(3))
+    a = ref.hrr_attention_scores_ref(q, k, v)
+    w = np.asarray(jnp.exp(a - jnp.max(a, axis=-2, keepdims=True)))
+    w = w / w.sum(axis=-2, keepdims=True)
+    assert_allclose(w.sum(axis=-2), np.ones((b, nh, 1)), atol=1e-5)
+
+
+def test_attention_output_is_reweighting_of_values():
+    """Eq. 4 returns w_t · v_t — collinear with the original values."""
+    rng = np.random.default_rng(4)
+    b, nh, t, h = 1, 1, 8, 32
+    q, k, v = (gaussian(rng, b, nh, t, h) for _ in range(3))
+    out = np.asarray(ref.hrr_attention_ref(q, k, v))
+    vv = v[0, 0]
+    oo = out[0, 0]
+    for i in range(t):
+        cos = np.dot(vv[i], oo[i]) / (np.linalg.norm(vv[i]) * np.linalg.norm(oo[i]) + 1e-9)
+        assert cos > 0.999, f"row {i} not collinear with v: cos={cos}"
+
+
+def test_approx_vs_exact_inverse():
+    """Exact inverse is perfect on single bindings; in superpositions the
+    involution inverse is the robust retriever (exact amplifies crosstalk
+    at low-power bins — the noise §D's softmax cleanup exists for)."""
+    rng = np.random.default_rng(5)
+    ks, vs = gaussian(rng, 4, H), gaussian(rng, 4, H)
+    # single binding: exact inverse recovers essentially perfectly
+    single = np.asarray(ref.bind(ks[:1], vs[:1]))
+    rec1 = np.asarray(ref.unbind(single, ks[:1], exact=True))[0]
+    cos1 = float(np.dot(rec1, vs[0]) / (np.linalg.norm(rec1) * np.linalg.norm(vs[0])))
+    assert cos1 > 0.99, f"exact single-pair cos={cos1}"
+    # superposition: involution inverse retrieves well above chance
+    beta = np.asarray(ref.bind(ks, vs)).sum(axis=0, keepdims=True)
+    rec4 = np.asarray(ref.unbind(beta, ks[:1], exact=False))[0]
+    cos4 = float(np.dot(rec4, vs[0]) / (np.linalg.norm(rec4) * np.linalg.norm(vs[0])))
+    assert cos4 > 0.3, f"involution superposition cos={cos4}"
+
+
+def test_unbind_linear_in_superposition():
+    rng = np.random.default_rng(6)
+    s1, s2, q = gaussian(rng, 1, H), gaussian(rng, 1, H), gaussian(rng, 1, H)
+    lhs = np.asarray(ref.unbind(s1 + s2, q))
+    rhs = np.asarray(ref.unbind(s1, q)) + np.asarray(ref.unbind(s2, q))
+    assert_allclose(lhs, rhs, atol=1e-4, rtol=1e-3)

@@ -1,0 +1,231 @@
+"""Pallas kernel vs pure-jnp oracle — the core L1 correctness signal.
+
+Hypothesis sweeps shapes/dtypes/block sizes; every case asserts
+``assert_allclose`` between ``kernels.hrr`` (Pallas, interpret=True) and
+``kernels.ref`` (jnp.fft oracle).
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+from numpy.testing import assert_allclose
+
+from compile.kernels import hrr, ref
+from compile.kernels.dft import NUM_BINS, dft_matrices
+
+ATOL = 2e-4
+RTOL = 2e-4
+
+# Feature sizes: powers of two (MXU-aligned) plus odd sizes to exercise
+# the Hermitian fold-back weights of the inverse DFT.
+HS = [4, 8, 16, 32, 64, 7, 12, 33]
+
+
+def rand(rng, *shape, scale=None):
+    h = shape[-1]
+    scale = scale if scale is not None else 1.0 / np.sqrt(h)
+    return (rng.standard_normal(shape) * scale).astype(np.float32)
+
+
+# ---------------------------------------------------------------------------
+# DFT-as-matmul helpers
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("h", HS)
+def test_dft_matrices_match_rfft(h):
+    rng = np.random.default_rng(h)
+    x = rand(rng, 9, h)
+    cf, sf, ci, si = dft_matrices(h)
+    f = np.fft.rfft(x, axis=-1)
+    assert_allclose(x @ cf, f.real, atol=1e-4, rtol=1e-4)
+    assert_allclose(x @ sf, f.imag, atol=1e-4, rtol=1e-4)
+
+
+@pytest.mark.parametrize("h", HS)
+def test_dft_roundtrip(h):
+    rng = np.random.default_rng(h + 1)
+    x = rand(rng, 5, h)
+    cf, sf, ci, si = dft_matrices(h)
+    assert_allclose((x @ cf) @ ci + (x @ sf) @ si, x, atol=1e-5, rtol=1e-5)
+
+
+def test_num_bins():
+    assert NUM_BINS(8) == 5
+    assert NUM_BINS(7) == 4
+    assert NUM_BINS(1) == 1
+
+
+# ---------------------------------------------------------------------------
+# bind / unbind
+# ---------------------------------------------------------------------------
+
+
+@settings(max_examples=25, deadline=None)
+@given(
+    n=st.integers(1, 4),
+    t=st.integers(1, 33),
+    h=st.sampled_from(HS),
+    bt=st.sampled_from([1, 4, 16, 512]),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_bind_pallas_matches_ref(n, t, h, bt, seed):
+    rng = np.random.default_rng(seed)
+    x, y = rand(rng, n, t, h), rand(rng, n, t, h)
+    got = np.asarray(hrr.bind_pallas(jnp.asarray(x), jnp.asarray(y), block_t=bt))
+    want = np.asarray(ref.bind(x, y))
+    assert_allclose(got, want, atol=ATOL, rtol=RTOL)
+
+
+@settings(max_examples=25, deadline=None)
+@given(
+    n=st.integers(1, 3),
+    t=st.integers(1, 21),
+    h=st.sampled_from([8, 16, 64, 12]),
+    bt=st.sampled_from([1, 8, 512]),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_unbind_pallas_matches_ref(n, t, h, bt, seed):
+    rng = np.random.default_rng(seed)
+    s, q = rand(rng, n, t, h), rand(rng, n, t, h)
+    got = np.asarray(hrr.unbind_pallas(jnp.asarray(s), jnp.asarray(q), block_t=bt))
+    want = np.asarray(ref.unbind(s, q, exact=True))
+    # Looser tolerance than bind: the exact inverse divides by
+    # (|F(q)|²+ε); near-zero bins amplify the ~1e-6 DFT-matmul vs FFT
+    # rounding difference by up to ~1/|F(q)|² — inherent to the
+    # stabilized inverse, not a kernel defect (bounded by the ε floor).
+    assert_allclose(got, want, atol=5e-3, rtol=1e-2)
+
+
+def test_bind_commutative():
+    rng = np.random.default_rng(0)
+    x, y = rand(rng, 2, 5, 16), rand(rng, 2, 5, 16)
+    assert_allclose(
+        np.asarray(ref.bind(x, y)), np.asarray(ref.bind(y, x)), atol=1e-5, rtol=1e-5
+    )
+
+
+def test_bind_unbind_recovers_operand():
+    """x† ⊛ (x ⊛ y) ≈ y — the defining HRR identity (exact inverse)."""
+    rng = np.random.default_rng(1)
+    x, y = rand(rng, 1, 4, 256), rand(rng, 1, 4, 256)
+    rec = np.asarray(ref.unbind(ref.bind(x, y), x, exact=True))
+    assert_allclose(rec, y, atol=5e-3, rtol=5e-2)
+
+
+# ---------------------------------------------------------------------------
+# Fused attention: scores, full output, masking, grads
+# ---------------------------------------------------------------------------
+
+
+@settings(max_examples=20, deadline=None)
+@given(
+    b=st.integers(1, 3),
+    nh=st.sampled_from([1, 2, 4]),
+    t=st.integers(2, 40),
+    h=st.sampled_from([8, 16, 32, 12]),
+    bt=st.sampled_from([1, 8, 16, 512]),
+    masked=st.booleans(),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_attention_scores_match_ref(b, nh, t, h, bt, masked, seed):
+    rng = np.random.default_rng(seed)
+    q, k, v = (rand(rng, b, nh, t, h) for _ in range(3))
+    mask = None
+    mref = None
+    if masked:
+        mask = (rng.random((b, t)) > 0.3).astype(np.float32)
+        mask[:, 0] = 1.0  # keep at least one live position
+        mref = np.broadcast_to(mask[:, None, :], (b, nh, t))
+    got = np.asarray(
+        hrr.hrr_attention_scores_pallas(
+            jnp.asarray(q), jnp.asarray(k), jnp.asarray(v),
+            mask=None if mask is None else jnp.asarray(mask), block_t=bt,
+        )
+    )
+    want = np.asarray(ref.hrr_attention_scores_ref(q, k, v, mask=mref))
+    assert_allclose(got, want, atol=ATOL, rtol=RTOL)
+
+
+@settings(max_examples=15, deadline=None)
+@given(
+    t=st.integers(2, 33),
+    h=st.sampled_from([16, 32]),
+    bt=st.sampled_from([4, 512]),
+    masked=st.booleans(),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_attention_full_matches_ref(t, h, bt, masked, seed):
+    rng = np.random.default_rng(seed)
+    b, nh = 2, 2
+    q, k, v = (rand(rng, b, nh, t, h) for _ in range(3))
+    mask = None
+    mref = None
+    if masked:
+        mask = (rng.random((b, t)) > 0.3).astype(np.float32)
+        mask[:, 0] = 1.0
+        mref = np.broadcast_to(mask[:, None, :], (b, nh, t))
+    got = np.asarray(
+        hrr.hrr_attention_pallas(
+            jnp.asarray(q), jnp.asarray(k), jnp.asarray(v),
+            mask=None if mask is None else jnp.asarray(mask), block_t=bt,
+        )
+    )
+    want = np.asarray(ref.hrr_attention_ref(q, k, v, mask=mref))
+    assert_allclose(got, want, atol=ATOL, rtol=RTOL)
+
+
+def test_attention_gradients_match_ref():
+    rng = np.random.default_rng(7)
+    b, nh, t, h = 2, 2, 19, 16
+    q, k, v = (jnp.asarray(rand(rng, b, nh, t, h)) for _ in range(3))
+    mask_np = (rng.random((b, t)) > 0.2).astype(np.float32)
+    mask_np[:, 0] = 1.0
+    mask = jnp.asarray(mask_np)
+
+    def loss_pal(q, k, v):
+        return jnp.sum(hrr.hrr_attention(q, k, v, mask=mask) ** 2)
+
+    def loss_ref(q, k, v):
+        m = jnp.broadcast_to(mask[:, None, :], (b, nh, t))
+        return jnp.sum(ref.hrr_attention_ref(q, k, v, mask=m) ** 2)
+
+    g = jax.grad(loss_pal, argnums=(0, 1, 2))(q, k, v)
+    gr = jax.grad(loss_ref, argnums=(0, 1, 2))(q, k, v)
+    for a_, b_ in zip(g, gr):
+        assert_allclose(np.asarray(a_), np.asarray(b_), atol=1e-4, rtol=1e-3)
+
+
+def test_attention_jit_composes():
+    """The kernel must trace under jit — that is the AOT path."""
+    rng = np.random.default_rng(3)
+    q, k, v = (jnp.asarray(rand(rng, 1, 2, 16, 8)) for _ in range(3))
+    f = jax.jit(lambda q, k, v: hrr.hrr_attention_pallas(q, k, v, block_t=8))
+    out = f(q, k, v)
+    assert out.shape == (1, 2, 16, 8)
+    assert np.isfinite(np.asarray(out)).all()
+
+
+def test_masked_positions_get_zero_weight():
+    rng = np.random.default_rng(4)
+    b, nh, t, h = 1, 1, 10, 16
+    q, k, v = (rand(rng, b, nh, t, h) for _ in range(3))
+    mask = np.ones((b, t), dtype=np.float32)
+    mask[:, 5:] = 0.0
+    a = hrr.hrr_attention_scores_pallas(
+        jnp.asarray(q), jnp.asarray(k), jnp.asarray(v), mask=jnp.asarray(mask), block_t=4
+    )
+    out = np.asarray(hrr._softmax_reweight(a, jnp.asarray(v), jnp.asarray(mask)))
+    # softmax weight on masked positions must be ~0 → output rows ~0
+    assert np.abs(out[0, 0, 5:, :]).max() < 1e-6
+
+
+def test_dtype_bfloat16_forward_runs():
+    """bf16 is the MXU-native dtype — kernel must accept it."""
+    rng = np.random.default_rng(5)
+    q, k, v = (jnp.asarray(rand(rng, 1, 1, 8, 16), dtype=jnp.bfloat16) for _ in range(3))
+    out = hrr.hrr_attention_pallas(q, k, v, block_t=4)
+    assert out.dtype == jnp.bfloat16
+    assert np.isfinite(np.asarray(out, dtype=np.float32)).all()

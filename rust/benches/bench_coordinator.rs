@@ -1,0 +1,67 @@
+//! Coordinator hot-path benchmarks: router decisions, batch-queue ops,
+//! and request packing — the L3 overhead that must stay negligible next
+//! to program execution (DESIGN.md §Perf target: <1 ms per request).
+//!
+//! Run: `cargo bench --bench bench_coordinator` (no artifacts needed).
+
+use std::time::Instant;
+
+use hrrformer::coordinator::batcher::{BatchPolicy, BatchQueue};
+use hrrformer::coordinator::router::{Bucket, Router};
+use hrrformer::util::rng::Rng;
+
+fn bench<F: FnMut()>(name: &str, iters: usize, mut f: F) -> f64 {
+    f();
+    let t0 = Instant::now();
+    for _ in 0..iters {
+        f();
+    }
+    let per = t0.elapsed().as_secs_f64() / iters as f64;
+    println!("{name:<44} {:>10.1} ns/iter  ({iters} iters)", per * 1e9);
+    per
+}
+
+fn main() {
+    println!("== bench_coordinator ==");
+    let router = Router::new(
+        (0..6).map(|i| Bucket { seq_len: 256 << i, batch: 8 }).collect(),
+    );
+    let mut rng = Rng::new(1);
+    let lens: Vec<usize> = (0..1024).map(|_| 1 + rng.usize_below(20_000)).collect();
+    let mut i = 0;
+    bench("router.route", 1_000_000, || {
+        let len = lens[i & 1023];
+        i += 1;
+        std::hint::black_box(router.route(len));
+    });
+
+    let policy = BatchPolicy { max_batch: 8, max_wait: std::time::Duration::from_millis(10) };
+    bench("batch queue push+flush cycle (8 reqs)", 100_000, || {
+        let mut q = BatchQueue::new(policy);
+        for j in 0..8 {
+            q.push(j);
+        }
+        std::hint::black_box(q.maybe_flush(Instant::now(), false));
+    });
+
+    // request packing into the fixed (B, T) tensor
+    let reqs: Vec<Vec<i32>> = (0..8).map(|j| vec![1 + j as i32; 700]).collect();
+    bench("pack 8 x 700 tokens into (8,1024) tensor", 10_000, || {
+        let t = 1024;
+        let mut ids = vec![0i32; 8 * t];
+        for (row, r) in reqs.iter().enumerate() {
+            let n = r.len().min(t);
+            ids[row * t..row * t + n].copy_from_slice(&r[..n]);
+        }
+        std::hint::black_box(hrrformer::runtime::Tensor::i32(vec![8, t], ids));
+    });
+
+    // latency histogram record + percentile
+    let hist = hrrformer::metrics::LatencyHist::new();
+    bench("latency hist record", 1_000_000, || {
+        hist.record_us(12345);
+    });
+    bench("latency hist p99", 100_000, || {
+        std::hint::black_box(hist.percentile_ms(99.0));
+    });
+}

@@ -1,0 +1,38 @@
+//! Dataset-substrate benchmarks: generation must never bottleneck the
+//! training loop (target: generate a batch in « one train_step).
+//!
+//! Run: `cargo bench --bench bench_data` (no artifacts needed).
+
+use std::time::Instant;
+
+use hrrformer::data::{by_task, Split, Stream};
+
+fn bench<F: FnMut()>(name: &str, iters: usize, mut f: F) -> f64 {
+    f();
+    let t0 = Instant::now();
+    for _ in 0..iters {
+        f();
+    }
+    let per = t0.elapsed().as_secs_f64() / iters as f64;
+    println!("{name:<44} {:>10.1} µs/iter  ({iters} iters)", per * 1e6);
+    per
+}
+
+fn main() {
+    println!("== bench_data ==");
+    for (task, t, iters) in [
+        ("listops", 2000usize, 2000usize),
+        ("text", 4000, 2000),
+        ("retrieval", 8000, 1000),
+        ("image", 1024, 2000),
+        ("pathfinder", 1024, 1000),
+        ("ember", 16384, 200),
+        ("ember", 131_072, 30),
+    ] {
+        let ds = by_task(task, t).unwrap();
+        let mut stream = Stream::new(ds.as_ref(), Split::Train, 0);
+        bench(&format!("{task} T={t}"), iters, || {
+            std::hint::black_box(stream.next_example());
+        });
+    }
+}

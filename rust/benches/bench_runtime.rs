@@ -1,0 +1,76 @@
+//! Runtime/kernel micro-benchmarks (criterion is unavailable offline;
+//! this is a hand-rolled harness under `cargo bench`): measures the L1
+//! HRR-attention kernel program against the standard softmax-attention
+//! program at identical shapes — the per-layer cost the paper's Fig 4
+//! asymptotics come from — plus literal-conversion overhead.
+//!
+//! Run: `cargo bench --bench bench_runtime` (needs `make artifacts`).
+
+use std::time::Instant;
+
+use hrrformer::runtime::{default_manifest, Runtime, Tensor};
+use hrrformer::util::rng::Rng;
+
+fn bench<F: FnMut()>(name: &str, iters: usize, mut f: F) -> f64 {
+    // warm-up
+    f();
+    let t0 = Instant::now();
+    for _ in 0..iters {
+        f();
+    }
+    let per = t0.elapsed().as_secs_f64() / iters as f64;
+    println!("{name:<44} {:>10.3} ms/iter  ({iters} iters)", per * 1000.0);
+    per
+}
+
+fn random_qkv(rng: &mut Rng, n: usize, t: usize, h: usize) -> [Tensor; 3] {
+    let mut mk = |rng: &mut Rng| {
+        let data: Vec<f32> = (0..n * t * h).map(|_| rng.normal() as f32 * 0.125).collect();
+        Tensor::f32(vec![1, n, t, h], data)
+    };
+    [mk(rng), mk(rng), mk(rng)]
+}
+
+fn main() -> anyhow::Result<()> {
+    let rt = Runtime::cpu()?;
+    let manifest = default_manifest()?;
+    let mut rng = Rng::new(7);
+    println!("== bench_runtime (PJRT CPU) ==");
+
+    // L1 kernel: HRR attention vs standard softmax attention, same shape.
+    let (n, t, h) = (4usize, 1024usize, 64usize);
+    let [q, k, v] = random_qkv(&mut rng, n, t, h);
+    let hrr = rt.load(manifest.get("kernel_hrr_N4_T1024_H64")?)?;
+    let soft = rt.load(manifest.get("kernel_softmax_N4_T1024_H64")?)?;
+    let args = [q.clone(), k.clone(), v.clone()];
+    let hrr_s = bench("kernel: HRR attention (B*h=4,T=1024,H'=64)", 20, || {
+        hrr.run(&args).unwrap();
+    });
+    let soft_s = bench("kernel: softmax attention (same shape)", 20, || {
+        soft.run(&args).unwrap();
+    });
+    println!("  -> hrr/softmax time ratio: {:.2}x (interpret-mode Pallas)", hrr_s / soft_s);
+
+    // Literal conversion overhead (the host <-> device copies per step).
+    let big = Tensor::f32(vec![1024, 256], vec![0.5; 1024 * 256]);
+    bench("tensor->literal (1 MiB f32)", 200, || {
+        big.to_literal().unwrap();
+    });
+    let lit = big.to_literal().unwrap();
+    bench("literal->tensor (1 MiB f32)", 200, || {
+        Tensor::from_literal(&lit).unwrap();
+    });
+
+    // End-to-end predict step at serving shape (ember T=256).
+    let spec = manifest.get("ember_hrrformer_small_T256_B8_predict")?;
+    let init = rt.load(manifest.get("ember_hrrformer_small_T256_B8_init")?)?;
+    let params = init.run(&[Tensor::scalar_u32(0)])?;
+    let prog = rt.load(spec)?;
+    let ids = Tensor::i32(vec![8, 256], (0..8 * 256).map(|i| (i % 250) as i32 + 1).collect());
+    let mut inputs = params.clone();
+    inputs.push(ids);
+    bench("predict: ember hrrformer T=256 B=8", 30, || {
+        prog.run(&inputs).unwrap();
+    });
+    Ok(())
+}

@@ -1,0 +1,160 @@
+//! Tables 6 & 7 — inference timing.
+//!
+//! Table 6: Hrrformer vs Transformer single block, inference time and
+//! memory across batch sizes 2..32 on the text task.
+//! Table 7: all 6-layer models, total time / examples-per-second /
+//! memory for a fixed evaluation set.
+
+use anyhow::Result;
+
+use crate::bench::results_dir;
+use crate::data::{batch::BatchStream, by_task, Split};
+use crate::model::PredictSession;
+use crate::runtime::{Manifest, ProgramSpec, Runtime};
+use crate::util::table::Table;
+
+pub struct InferBenchCfg {
+    pub examples: usize,
+    pub seed: u64,
+    /// run the batch-size sweep (Table 6) instead of the model sweep (Table 7)
+    pub sweep_batch: bool,
+}
+
+impl Default for InferBenchCfg {
+    fn default() -> Self {
+        InferBenchCfg { examples: 128, seed: 0, sweep_batch: false }
+    }
+}
+
+#[derive(Debug, Clone)]
+pub struct InferRow {
+    pub model: String,
+    pub batch: usize,
+    pub layers: usize,
+    pub secs: f64,
+    pub examples_per_sec: f64,
+    pub rss_mib: f64,
+}
+
+fn time_predict(
+    rt: &Runtime,
+    manifest: &Manifest,
+    spec: &ProgramSpec,
+    examples: usize,
+    seed: u64,
+) -> Result<InferRow> {
+    let base = spec.key.trim_end_matches("_predict").to_string();
+    let sess = PredictSession::create(rt, manifest, &base, seed as u32)?;
+    let ds = by_task(&spec.task, spec.seq_len).unwrap();
+    let mut stream = BatchStream::new(ds.as_ref(), Split::Test, seed, spec.batch, spec.seq_len);
+    // warm-up execution (excluded, like the paper excludes compile)
+    let warm = stream.next_batch();
+    sess.predict(&warm.ids)?;
+    let n_batches = (examples + spec.batch - 1) / spec.batch;
+    let batches: Vec<_> = (0..n_batches).map(|_| stream.next_batch()).collect();
+    let t0 = std::time::Instant::now();
+    for b in &batches {
+        sess.predict(&b.ids)?;
+    }
+    let secs = t0.elapsed().as_secs_f64();
+    Ok(InferRow {
+        model: spec.model.clone(),
+        batch: spec.batch,
+        layers: spec.layers,
+        secs,
+        examples_per_sec: (n_batches * spec.batch) as f64 / secs,
+        rss_mib: crate::util::rss_mib(),
+    })
+}
+
+pub fn run(rt: &Runtime, manifest: &Manifest, cfg: &InferBenchCfg) -> Result<Vec<InferRow>> {
+    let mut rows = Vec::new();
+
+    if cfg.sweep_batch {
+        // Table 6: B sweep for hrrformer + transformer (default layers).
+        let mut specs: Vec<&ProgramSpec> = manifest.select(|p| {
+            p.task == "text"
+                && p.kind == "predict"
+                && (p.model == "hrrformer" || p.model == "transformer")
+                && p.embed != 32 // exclude the 6-layer speed-bench variants
+        });
+        anyhow::ensure!(!specs.is_empty(), "no inference artifacts — run `make artifacts-inference`");
+        specs.sort_by_key(|p| (p.model.clone(), p.batch));
+        for spec in specs {
+            match time_predict(rt, manifest, spec, cfg.examples, cfg.seed) {
+                Ok(r) => {
+                    eprintln!(
+                        "[infer] {:<12} B={:<3} {:.2}s ({:.1} ex/s)",
+                        r.model, r.batch, r.secs, r.examples_per_sec
+                    );
+                    rows.push(r);
+                }
+                Err(e) => eprintln!("[infer] {} B={} FAILED: {e:#}", spec.model, spec.batch),
+            }
+        }
+        let mut t = Table::new(
+            "Table 6 — inference time vs batch size (text task)",
+            &["Batch", "Hrrformer time (s)", "Transformer time (s)"],
+        );
+        let mut batches: Vec<usize> = rows.iter().map(|r| r.batch).collect();
+        batches.sort();
+        batches.dedup();
+        for b in batches {
+            let get = |m: &str| {
+                rows.iter()
+                    .find(|r| r.model == m && r.batch == b)
+                    .map(|r| format!("{:.2}", r.secs))
+                    .unwrap_or_else(|| "-".into())
+            };
+            t.row(vec![b.to_string(), get("hrrformer"), get("transformer")]);
+        }
+        t.print();
+    } else {
+        // Table 7: every 6-layer model (speed-bench artifacts have predict).
+        let mut specs: Vec<&ProgramSpec> = manifest
+            .select(|p| p.task == "text" && p.kind == "predict" && p.embed == 32);
+        anyhow::ensure!(!specs.is_empty(), "no 6-layer predict artifacts — run `make artifacts-speed`");
+        specs.sort_by_key(|p| (p.model.clone(), std::cmp::Reverse(p.layers)));
+        for spec in specs {
+            match time_predict(rt, manifest, spec, cfg.examples, cfg.seed) {
+                Ok(r) => {
+                    eprintln!(
+                        "[infer] {:<18} L={} {:.2}s ({:.1} ex/s)",
+                        r.model, r.layers, r.secs, r.examples_per_sec
+                    );
+                    rows.push(r);
+                }
+                Err(e) => eprintln!("[infer] {} FAILED: {e:#}", spec.model),
+            }
+        }
+        let mut t = Table::new(
+            "Table 7 — inference time, all models (text task, 6 layers; * = 1 layer)",
+            &["Model", "Time (s)", "Examples/s", "RSS (MiB)"],
+        );
+        let mut sorted: Vec<&InferRow> = rows.iter().collect();
+        sorted.sort_by(|a, b| b.secs.partial_cmp(&a.secs).unwrap());
+        for r in sorted {
+            let name = if r.layers == 1 { format!("{}*", r.model) } else { r.model.clone() };
+            t.row(vec![
+                name,
+                format!("{:.2}", r.secs),
+                format!("{:.1}", r.examples_per_sec),
+                format!("{:.0}", r.rss_mib),
+            ]);
+        }
+        t.print();
+    }
+
+    let mut csv = String::from("model,layers,batch,secs,examples_per_sec,rss_mib\n");
+    for r in &rows {
+        csv.push_str(&format!(
+            "{},{},{},{:.3},{:.2},{:.0}\n",
+            r.model, r.layers, r.batch, r.secs, r.examples_per_sec, r.rss_mib
+        ));
+    }
+    let name = if cfg.sweep_batch { "inference_batch.csv" } else { "inference_models.csv" };
+    let path = results_dir().join(name);
+    let _ = std::fs::write(&path, csv);
+    eprintln!("[infer] data → {}", path.display());
+    Ok(rows)
+}

@@ -1,0 +1,197 @@
+//! Table 1 (LRA accuracy), Table 2 (Image overfitting), Figure 8
+//! (learning curves).
+//!
+//! Trains every exported (task, model) pair on our synthetic LRA suite
+//! and prints the accuracy matrix in the paper's layout. Hrrformer also
+//! runs in its single-layer variant (the paper's headline "learning with
+//! just one layer" claim).
+
+use anyhow::Result;
+
+use crate::bench::{results_dir, LRA_MODELS};
+use crate::coordinator::trainer::{train, TrainConfig, TrainReport};
+use crate::runtime::{Manifest, Runtime};
+use crate::util::table::Table;
+
+pub const LRA_TASKS: &[&str] = &["listops", "text", "retrieval", "image", "pathfinder"];
+
+pub struct LraBenchCfg {
+    pub steps: usize,
+    pub eval_batches: usize,
+    pub seed: u64,
+    pub models: Vec<String>,
+    pub tasks: Vec<String>,
+    pub curves: bool,
+}
+
+impl Default for LraBenchCfg {
+    fn default() -> Self {
+        LraBenchCfg {
+            steps: 150,
+            eval_batches: 8,
+            seed: 0,
+            models: LRA_MODELS.iter().map(|s| s.to_string()).collect(),
+            tasks: LRA_TASKS.iter().map(|s| s.to_string()).collect(),
+            curves: false,
+        }
+    }
+}
+
+#[derive(Debug, Clone)]
+pub struct LraCell {
+    pub model: String,
+    pub task: String,
+    pub single_layer: bool,
+    pub report: TrainReport,
+}
+
+fn base_for(manifest: &Manifest, task: &str, model: &str, layers: Option<usize>) -> Option<String> {
+    let mut specs = manifest.select(|p| {
+        p.task == task
+            && p.model == model
+            && p.kind == "train_step"
+            && layers.map_or(true, |l| p.layers == l)
+    });
+    // the accuracy bench needs an eval_step sibling (the speed-bench
+    // variants export train/predict only)
+    specs.retain(|p| {
+        let base = p.key.trim_end_matches("_train_step");
+        manifest.programs.contains_key(&format!("{base}_eval_step"))
+    });
+    // prefer the multi-layer (default preset) variant when layers is None:
+    specs.sort_by_key(|p| std::cmp::Reverse(p.layers));
+    specs.first().map(|p| p.key.trim_end_matches("_train_step").to_string())
+}
+
+pub fn run(rt: &Runtime, manifest: &Manifest, cfg: &LraBenchCfg) -> Result<Vec<LraCell>> {
+    let mut cells = Vec::new();
+    let mut jobs: Vec<(String, String, bool, String)> = Vec::new(); // (model, task, single, base)
+    for model in &cfg.models {
+        for task in &cfg.tasks {
+            if let Some(base) = base_for(manifest, task, model, None) {
+                jobs.push((model.clone(), task.clone(), false, base));
+            }
+        }
+    }
+    // hrrformer single-layer rows (layers=1 variants)
+    if cfg.models.iter().any(|m| m == "hrrformer") {
+        for task in &cfg.tasks {
+            if let Some(base) = base_for(manifest, task, "hrrformer", Some(1)) {
+                // skip if identical to the multi-layer base (1-layer default)
+                if base_for(manifest, task, "hrrformer", None).as_ref() != Some(&base) {
+                    jobs.push(("hrrformer".into(), task.clone(), true, base));
+                }
+            }
+        }
+    }
+    anyhow::ensure!(!jobs.is_empty(), "no LRA artifacts — run `make artifacts-lra`");
+
+    for (model, task, single, base) in jobs {
+        let curve_csv = cfg.curves.then(|| {
+            results_dir().join(format!(
+                "curve_{task}_{model}{}.csv",
+                if single { "_1layer" } else { "" }
+            ))
+        });
+        let tc = TrainConfig {
+            base: base.clone(),
+            seed: cfg.seed,
+            steps: cfg.steps,
+            eval_every: (cfg.steps / 10).max(10),
+            eval_batches: cfg.eval_batches,
+            curve_csv,
+            ckpt: None,
+            verbose: false,
+        };
+        match train(rt, manifest, &tc) {
+            Ok(report) => {
+                eprintln!(
+                    "[lra] {task:<11} {model:<18}{} acc {:.4} ({:.0}s)",
+                    if single { " (1L)" } else { "     " },
+                    report.final_test_acc,
+                    report.total_secs
+                );
+                cells.push(LraCell { model, task, single_layer: single, report });
+            }
+            Err(e) => eprintln!("[lra] {task} {model} FAILED: {e:#}"),
+        }
+    }
+
+    print_table1(&cells, cfg);
+    print_table2(&cells);
+    Ok(cells)
+}
+
+fn print_table1(cells: &[LraCell], cfg: &LraBenchCfg) {
+    let mut headers: Vec<String> = vec!["Model".into()];
+    headers.extend(cfg.tasks.iter().cloned());
+    headers.push("Avg".into());
+    let hdr: Vec<&str> = headers.iter().map(|s| s.as_str()).collect();
+    let mut t1 = Table::new("Table 1 — LRA accuracy (synthetic suite, scaled preset)", &hdr);
+
+    let mut emit = |label: String, pred: &dyn Fn(&LraCell) -> bool| {
+        let mut row = vec![label];
+        let mut sum = 0.0f64;
+        let mut n = 0usize;
+        for task in &cfg.tasks {
+            let cell = cells.iter().find(|c| &c.task == task && pred(c));
+            match cell {
+                Some(c) => {
+                    let acc = c.report.final_test_acc as f64 * 100.0;
+                    sum += acc;
+                    n += 1;
+                    row.push(format!("{acc:.2}"));
+                }
+                None => row.push("-".into()),
+            }
+        }
+        row.push(if n > 0 { format!("{:.2}", sum / n as f64) } else { "-".into() });
+        t1.row(row);
+    };
+
+    for model in &cfg.models {
+        let m = model.clone();
+        emit(model.clone(), &move |c: &LraCell| c.model == m && !c.single_layer);
+    }
+    if cells.iter().any(|c| c.single_layer) {
+        emit("hrrformer (1 layer)".into(), &|c: &LraCell| c.single_layer);
+    }
+    t1.print();
+
+    let mut csv = String::from("model,task,single_layer,test_acc,train_acc,secs\n");
+    for c in cells {
+        csv.push_str(&format!(
+            "{},{},{},{:.4},{:.4},{:.1}\n",
+            c.model,
+            c.task,
+            c.single_layer,
+            c.report.final_test_acc,
+            c.report.final_train_acc,
+            c.report.total_secs
+        ));
+    }
+    let path = results_dir().join("lra_accuracy.csv");
+    let _ = std::fs::write(&path, csv);
+    eprintln!("[lra] Table 1 data → {}", path.display());
+}
+
+fn print_table2(cells: &[LraCell]) {
+    let image: Vec<&LraCell> =
+        cells.iter().filter(|c| c.task == "image" && !c.single_layer).collect();
+    if image.is_empty() {
+        return;
+    }
+    let mut t2 = Table::new(
+        "Table 2 — Image task: train/test accuracy and overfitting gap",
+        &["Model", "Train Acc (%)", "Test Acc (%)", "Overfitting (%)"],
+    );
+    for c in image {
+        t2.row(vec![
+            c.model.clone(),
+            format!("{:.2}", c.report.final_train_acc * 100.0),
+            format!("{:.2}", c.report.final_test_acc * 100.0),
+            format!("{:.2}", c.report.overfit() * 100.0),
+        ]);
+    }
+    t2.print();
+}

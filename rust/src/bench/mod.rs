@@ -1,0 +1,43 @@
+//! Benchmark harness: one module per table/figure in the paper's
+//! evaluation (DESIGN.md §4 experiment index). Each module exposes a
+//! `run(...)` that prints the paper-style table and writes CSV next to
+//! `results/`.
+
+pub mod ember;
+pub mod inference;
+pub mod lra;
+pub mod speed;
+pub mod weights;
+
+use std::path::PathBuf;
+
+/// Where bench CSV/Markdown output lands.
+pub fn results_dir() -> PathBuf {
+    let d = PathBuf::from(
+        std::env::var("HRRFORMER_RESULTS").unwrap_or_else(|_| "results".to_string()),
+    );
+    let _ = std::fs::create_dir_all(&d);
+    d
+}
+
+/// Known model list in the paper's Table 5 ordering.
+pub const EMBER_MODELS: &[&str] = &[
+    "transformer",
+    "luna",
+    "performer",
+    "linformer",
+    "fnet",
+    "linear_transformer",
+    "hrrformer",
+];
+
+pub const LRA_MODELS: &[&str] = &[
+    "transformer",
+    "local",
+    "linear_transformer",
+    "linformer",
+    "performer",
+    "fnet",
+    "luna",
+    "hrrformer",
+];

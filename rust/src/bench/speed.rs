@@ -1,0 +1,140 @@
+//! Table 4 / Figure 6 — speed (examples/second) and memory footprint on
+//! the byte-level text task with 6 encoder layers, plus the single-layer
+//! Hrrformer row, following the paper's measurement protocol (B=4,
+//! T≈4000 scaled to T=1024, embed 32, feature 64).
+//!
+//! Memory is reported two ways: measured peak-RSS delta around the run
+//! (CPU analogue of GPU footprint) and an analytic activation-bytes model
+//! per mixer (the O(T²) vs O(TH) story the paper tells).
+
+use anyhow::Result;
+
+use crate::bench::results_dir;
+use crate::coordinator::trainer::{train, TrainConfig};
+use crate::runtime::{Manifest, ProgramSpec, Runtime};
+use crate::util::table::Table;
+
+pub struct SpeedBenchCfg {
+    pub steps: usize,
+    pub seed: u64,
+}
+
+impl Default for SpeedBenchCfg {
+    fn default() -> Self {
+        SpeedBenchCfg { steps: 20, seed: 0 }
+    }
+}
+
+#[derive(Debug, Clone)]
+pub struct SpeedRow {
+    pub model: String,
+    pub layers: usize,
+    pub examples_per_sec: f64,
+    pub secs: f64,
+    pub rss_delta_mib: f64,
+    pub analytic_mib: f64,
+}
+
+/// Analytic per-step activation memory (MiB) of the attention mixer —
+/// the paper's complexity table made concrete.
+pub fn analytic_mixer_mib(spec: &ProgramSpec) -> f64 {
+    let b = spec.batch as f64;
+    let t = spec.seq_len as f64;
+    let h = spec.embed as f64;
+    let heads = spec.heads.max(1) as f64;
+    let l = spec.layers.max(1) as f64;
+    let f32b = 4.0;
+    let per_layer = match spec.model.as_str() {
+        // scores matrix dominates: B·heads·T²
+        "transformer" => b * heads * t * t + 3.0 * b * t * h,
+        // window attention: B·heads·T·w
+        "local" => b * heads * t * 128.0 + 3.0 * b * t * h,
+        // low-rank: B·heads·T·k
+        "linformer" => b * heads * t * 256.0 + 3.0 * b * t * h,
+        // feature maps: B·heads·T·m + running sums
+        "performer" => b * heads * t * 128.0 + 3.0 * b * t * h,
+        "linear_transformer" => b * heads * t * (h / heads) + 3.0 * b * t * h,
+        // two nested attentions against l=256 memory: B·heads·T·l
+        "luna" => 2.0 * b * heads * t * 256.0 + 3.0 * b * t * h,
+        // fft buffers: complex128? jnp complex64 → 2 floats
+        "fnet" => 4.0 * b * t * h,
+        // hrr: β (K bins) + per-step tiles: B·heads·T (scores) + qkv
+        "hrrformer" => b * heads * t + 3.0 * b * t * h,
+        _ => 3.0 * b * t * h,
+    };
+    l * per_layer * f32b / (1024.0 * 1024.0)
+}
+
+pub fn run(rt: &Runtime, manifest: &Manifest, cfg: &SpeedBenchCfg) -> Result<Vec<SpeedRow>> {
+    // speed-bench artifacts are the 6-layer text variants (embed 32)
+    let mut specs: Vec<&ProgramSpec> = manifest.select(|p| {
+        p.task == "text" && p.kind == "train_step" && p.embed == 32
+    });
+    anyhow::ensure!(!specs.is_empty(), "no speed artifacts — run `make artifacts-speed`");
+    specs.sort_by_key(|p| (p.model.clone(), std::cmp::Reverse(p.layers)));
+
+    let mut rows = Vec::new();
+    for spec in specs {
+        let base = spec.key.trim_end_matches("_train_step").to_string();
+        let rss_before = crate::util::peak_rss_mib();
+        let tc = TrainConfig {
+            base,
+            seed: cfg.seed,
+            steps: cfg.steps,
+            eval_every: cfg.steps + 1, // no eval — pure throughput
+            eval_batches: 0,
+            curve_csv: None,
+            ckpt: None,
+            verbose: false,
+        };
+        match train(rt, manifest, &tc) {
+            Ok(report) => {
+                let rss_after = crate::util::peak_rss_mib();
+                let row = SpeedRow {
+                    model: spec.model.clone(),
+                    layers: spec.layers,
+                    examples_per_sec: report.examples_per_sec,
+                    secs: report.total_secs,
+                    rss_delta_mib: (rss_after - rss_before).max(0.0),
+                    analytic_mib: analytic_mixer_mib(spec),
+                };
+                eprintln!(
+                    "[speed] {:<18} L={} {:.2} ex/s rssΔ {:.0} MiB analytic {:.1} MiB",
+                    row.model, row.layers, row.examples_per_sec, row.rss_delta_mib, row.analytic_mib
+                );
+                rows.push(row);
+            }
+            Err(e) => eprintln!("[speed] {} FAILED: {e:#}", spec.model),
+        }
+    }
+
+    let mut t = Table::new(
+        "Table 4 / Fig 6 — training speed & memory (text task, 6 layers; * = 1 layer)",
+        &["Model", "Examples/s", "Time (s)", "Peak RSS Δ (MiB)", "Analytic attn (MiB)"],
+    );
+    let mut sorted: Vec<&SpeedRow> = rows.iter().collect();
+    sorted.sort_by(|a, b| a.examples_per_sec.partial_cmp(&b.examples_per_sec).unwrap());
+    for r in sorted {
+        let name = if r.layers == 1 { format!("{}*", r.model) } else { r.model.clone() };
+        t.row(vec![
+            name,
+            format!("{:.2}", r.examples_per_sec),
+            format!("{:.1}", r.secs),
+            format!("{:.0}", r.rss_delta_mib),
+            format!("{:.1}", r.analytic_mib),
+        ]);
+    }
+    t.print();
+
+    let mut csv = String::from("model,layers,examples_per_sec,secs,rss_delta_mib,analytic_mib\n");
+    for r in &rows {
+        csv.push_str(&format!(
+            "{},{},{:.3},{:.2},{:.1},{:.2}\n",
+            r.model, r.layers, r.examples_per_sec, r.secs, r.rss_delta_mib, r.analytic_mib
+        ));
+    }
+    let path = results_dir().join("speed_memory.csv");
+    let _ = std::fs::write(&path, csv);
+    eprintln!("[speed] Fig 6 data → {}", path.display());
+    Ok(rows)
+}

@@ -1,0 +1,96 @@
+//! Figures 5 / 9 — attention-weight visualization on the Image task.
+//!
+//! Trains the image-task Hrrformer briefly, runs the `attn_weights`
+//! program on a test batch, reshapes each (layer, head) weight vector
+//! w ∈ R^1024 back to 32×32 and writes PGM heat-maps — the "a single
+//! layer learns the 2-D structure" evidence.
+
+use anyhow::{Context, Result};
+
+use crate::bench::results_dir;
+use crate::coordinator::trainer::{train, TrainConfig};
+use crate::data::{batch::BatchStream, by_task, Split};
+use crate::model::{ParamStore, WeightsSession};
+use crate::runtime::{Manifest, Runtime};
+use crate::util::pgm::write_pgm;
+
+pub struct WeightsBenchCfg {
+    pub steps: usize,
+    pub seed: u64,
+    /// use the single-layer variant (Fig 5) vs multi-layer (Fig 9)
+    pub single_layer: bool,
+}
+
+impl Default for WeightsBenchCfg {
+    fn default() -> Self {
+        WeightsBenchCfg { steps: 120, seed: 0, single_layer: true }
+    }
+}
+
+pub fn run(rt: &Runtime, manifest: &Manifest, cfg: &WeightsBenchCfg) -> Result<Vec<std::path::PathBuf>> {
+    let layers = if cfg.single_layer { 1 } else { 3 };
+    let spec = manifest
+        .select(|p| {
+            p.task == "image" && p.model == "hrrformer" && p.kind == "attn_weights"
+                && p.layers == layers
+        })
+        .into_iter()
+        .next()
+        .context("no image attn_weights artifact — run `make artifacts-weights`")?
+        .clone();
+    let base = spec.key.trim_end_matches("_attn_weights").to_string();
+
+    // quick training pass so the maps show learned structure
+    let ckpt = results_dir().join(format!("weights_{layers}l.ckpt"));
+    let tc = TrainConfig {
+        base: base.clone(),
+        seed: cfg.seed,
+        steps: cfg.steps,
+        eval_every: cfg.steps,
+        eval_batches: 4,
+        curve_csv: None,
+        ckpt: Some(ckpt.clone()),
+        verbose: true,
+    };
+    let report = train(rt, manifest, &tc)?;
+    eprintln!("[weights] trained to test acc {:.3}", report.final_test_acc);
+
+    let params = ParamStore::load(&ckpt)?;
+    let sess = WeightsSession::with_params(rt, manifest, &base, params)?;
+    let ds = by_task("image", spec.seq_len).unwrap();
+    let mut stream = BatchStream::new(ds.as_ref(), Split::Test, cfg.seed, spec.batch, spec.seq_len);
+    let batch = stream.next_batch();
+    let w = sess.weights(&batch.ids)?; // (L, B, h, T)
+    let dims = w.shape().to_vec();
+    anyhow::ensure!(dims.len() == 4, "unexpected weights shape {dims:?}");
+    let (l, b, h, t) = (dims[0], dims[1], dims[2], dims[3]);
+    anyhow::ensure!(t == 1024, "image task T must be 1024, got {t}");
+    let data = w.as_f32()?;
+    let labels = batch.labels.as_i32()?;
+
+    let dir = results_dir().join(format!("fig5_weights_{layers}layer"));
+    std::fs::create_dir_all(&dir)?;
+    let mut written = Vec::new();
+    // input images for reference
+    let ids = batch.ids.as_i32()?;
+    for bi in 0..b.min(4) {
+        let img: Vec<f32> =
+            ids[bi * t..(bi + 1) * t].iter().map(|&v| v as f32 / 255.0).collect();
+        let p = dir.join(format!("input_b{bi}_class{}.pgm", labels[bi]));
+        write_pgm(&p, 32, 32, &img)?;
+        written.push(p);
+    }
+    for li in 0..l {
+        for bi in 0..b.min(4) {
+            for hi in 0..h {
+                let off = ((li * b + bi) * h + hi) * t;
+                let map = &data[off..off + t];
+                let p = dir.join(format!("w_l{li}_b{bi}_h{hi}_class{}.pgm", labels[bi]));
+                write_pgm(&p, 32, 32, map)?;
+                written.push(p);
+            }
+        }
+    }
+    eprintln!("[weights] {} heat-maps → {}", written.len(), dir.display());
+    Ok(written)
+}

@@ -1,0 +1,144 @@
+//! Dynamic batching policy + queue.
+//!
+//! The policy is pure (property-tested): flush a bucket's queue when it
+//! reaches the executable's batch capacity OR the oldest request exceeds
+//! the latency deadline OR the service is draining. The queue applies the
+//! policy over incoming requests and emits ready batches.
+
+use std::collections::VecDeque;
+use std::time::{Duration, Instant};
+
+#[derive(Debug, Clone, Copy)]
+pub struct BatchPolicy {
+    /// Max requests coalesced into one program execution.
+    pub max_batch: usize,
+    /// Max time the oldest request may wait before a partial flush.
+    pub max_wait: Duration,
+}
+
+impl Default for BatchPolicy {
+    fn default() -> Self {
+        BatchPolicy { max_batch: 8, max_wait: Duration::from_millis(20) }
+    }
+}
+
+impl BatchPolicy {
+    /// Decide whether a queue should flush now.
+    pub fn should_flush(&self, queue_len: usize, oldest_age: Duration, draining: bool) -> bool {
+        if queue_len == 0 {
+            return false;
+        }
+        queue_len >= self.max_batch || oldest_age >= self.max_wait || draining
+    }
+}
+
+/// One queued inference request.
+#[derive(Debug)]
+pub struct Pending<T> {
+    pub payload: T,
+    pub enqueued: Instant,
+}
+
+/// A per-bucket FIFO with deadline-aware flushing.
+#[derive(Debug)]
+pub struct BatchQueue<T> {
+    pub policy: BatchPolicy,
+    queue: VecDeque<Pending<T>>,
+}
+
+impl<T> BatchQueue<T> {
+    pub fn new(policy: BatchPolicy) -> BatchQueue<T> {
+        BatchQueue { policy, queue: VecDeque::new() }
+    }
+
+    pub fn push(&mut self, payload: T) {
+        self.queue.push_back(Pending { payload, enqueued: Instant::now() });
+    }
+
+    pub fn len(&self) -> usize {
+        self.queue.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.queue.is_empty()
+    }
+
+    pub fn oldest_age(&self, now: Instant) -> Duration {
+        self.queue.front().map(|p| now.duration_since(p.enqueued)).unwrap_or_default()
+    }
+
+    /// Pop a batch if the policy says so; FIFO order, at most max_batch.
+    pub fn maybe_flush(&mut self, now: Instant, draining: bool) -> Option<Vec<Pending<T>>> {
+        if !self.policy.should_flush(self.queue.len(), self.oldest_age(now), draining) {
+            return None;
+        }
+        let n = self.queue.len().min(self.policy.max_batch);
+        Some(self.queue.drain(..n).collect())
+    }
+
+    /// Time until the oldest request hits its deadline (for worker sleep).
+    pub fn time_to_deadline(&self, now: Instant) -> Option<Duration> {
+        self.queue
+            .front()
+            .map(|p| self.policy.max_wait.saturating_sub(now.duration_since(p.enqueued)))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn flushes_on_capacity() {
+        let p = BatchPolicy { max_batch: 4, max_wait: Duration::from_secs(10) };
+        let mut q = BatchQueue::new(p);
+        for i in 0..3 {
+            q.push(i);
+        }
+        assert!(q.maybe_flush(Instant::now(), false).is_none());
+        q.push(3);
+        let batch = q.maybe_flush(Instant::now(), false).unwrap();
+        assert_eq!(batch.len(), 4);
+        assert!(q.is_empty());
+    }
+
+    #[test]
+    fn flushes_on_deadline() {
+        let p = BatchPolicy { max_batch: 100, max_wait: Duration::from_millis(0) };
+        let mut q = BatchQueue::new(p);
+        q.push(1);
+        let batch = q.maybe_flush(Instant::now(), false).unwrap();
+        assert_eq!(batch.len(), 1);
+    }
+
+    #[test]
+    fn drain_flushes_partial() {
+        let p = BatchPolicy { max_batch: 100, max_wait: Duration::from_secs(100) };
+        let mut q = BatchQueue::new(p);
+        q.push(1);
+        q.push(2);
+        assert!(q.maybe_flush(Instant::now(), false).is_none());
+        let batch = q.maybe_flush(Instant::now(), true).unwrap();
+        assert_eq!(batch.len(), 2);
+    }
+
+    #[test]
+    fn never_flushes_empty() {
+        let p = BatchPolicy::default();
+        let mut q: BatchQueue<u32> = BatchQueue::new(p);
+        assert!(q.maybe_flush(Instant::now(), true).is_none());
+    }
+
+    #[test]
+    fn fifo_order_preserved() {
+        let p = BatchPolicy { max_batch: 3, max_wait: Duration::from_secs(10) };
+        let mut q = BatchQueue::new(p);
+        for i in 0..5 {
+            q.push(i);
+        }
+        let batch = q.maybe_flush(Instant::now(), false).unwrap();
+        let got: Vec<i32> = batch.into_iter().map(|p| p.payload).collect();
+        assert_eq!(got, vec![0, 1, 2]);
+        assert_eq!(q.len(), 2);
+    }
+}

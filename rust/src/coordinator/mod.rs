@@ -1,0 +1,20 @@
+//! Layer 3 — the coordinator: everything on the request path.
+//!
+//! * `trainer`  — training orchestration (epochs, eval, curves, ckpts)
+//! * `router`   — sequence-length bucket routing for fixed-shape programs
+//! * `batcher`  — dynamic batching policy + deadline queues
+//! * `server`   — threaded inference service with backpressure
+//!
+//! The paper's contribution lives at L1/L2 (the HRR attention); L3 is the
+//! serving/training system that makes long-sequence classification
+//! deployable, mirroring what the paper's malware use-case needs.
+
+pub mod batcher;
+pub mod router;
+pub mod server;
+pub mod trainer;
+
+pub use batcher::{BatchPolicy, BatchQueue};
+pub use router::{Bucket, Route, Router};
+pub use server::{Reply, Server, ServerConfig, ServerHandle};
+pub use trainer::{train, TrainConfig, TrainReport};

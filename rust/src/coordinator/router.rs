@@ -1,0 +1,118 @@
+//! Sequence-length router: pick the right compiled executable bucket for
+//! each request (AOT programs have fixed shapes, so the service keeps one
+//! predict program per length bucket and pads requests up to it).
+//!
+//! Pure logic — no runtime dependency — so invariants are property-tested
+//! in isolation (rust/tests/prop_coordinator.rs).
+
+/// A compiled predict bucket: (seq_len, batch capacity).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct Bucket {
+    pub seq_len: usize,
+    pub batch: usize,
+}
+
+#[derive(Debug, Clone, Default)]
+pub struct Router {
+    /// sorted ascending by seq_len
+    buckets: Vec<Bucket>,
+}
+
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Route {
+    /// Index into `buckets()`; request fits with padding.
+    To(usize),
+    /// Longer than every bucket: truncate to the largest (paper protocol
+    /// truncates EMBER bytes to the model's maximum length).
+    Truncate(usize),
+}
+
+impl Router {
+    pub fn new(mut buckets: Vec<Bucket>) -> Router {
+        buckets.sort_by_key(|b| b.seq_len);
+        buckets.dedup_by_key(|b| b.seq_len);
+        Router { buckets }
+    }
+
+    pub fn buckets(&self) -> &[Bucket] {
+        &self.buckets
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.buckets.is_empty()
+    }
+
+    /// Route a request of `len` tokens to the smallest bucket that fits.
+    pub fn route(&self, len: usize) -> Route {
+        match self.buckets.iter().position(|b| b.seq_len >= len) {
+            Some(i) => Route::To(i),
+            None => Route::Truncate(self.buckets.len().saturating_sub(1)),
+        }
+    }
+
+    /// The bucket a request of `len` ultimately executes in.
+    pub fn bucket_for(&self, len: usize) -> Option<Bucket> {
+        if self.buckets.is_empty() {
+            return None;
+        }
+        Some(match self.route(len) {
+            Route::To(i) | Route::Truncate(i) => self.buckets[i],
+        })
+    }
+
+    /// Wasted padding fraction for a request of `len`.
+    pub fn padding_waste(&self, len: usize) -> f64 {
+        match self.bucket_for(len) {
+            Some(b) if b.seq_len >= len => (b.seq_len - len) as f64 / b.seq_len as f64,
+            _ => 0.0,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn router() -> Router {
+        Router::new(vec![
+            Bucket { seq_len: 1024, batch: 8 },
+            Bucket { seq_len: 256, batch: 8 },
+            Bucket { seq_len: 512, batch: 8 },
+        ])
+    }
+
+    #[test]
+    fn routes_to_smallest_fitting_bucket() {
+        let r = router();
+        assert_eq!(r.route(100), Route::To(0));
+        assert_eq!(r.route(256), Route::To(0));
+        assert_eq!(r.route(257), Route::To(1));
+        assert_eq!(r.route(1000), Route::To(2));
+    }
+
+    #[test]
+    fn truncates_oversized() {
+        let r = router();
+        assert_eq!(r.route(5000), Route::Truncate(2));
+        assert_eq!(r.bucket_for(5000).unwrap().seq_len, 1024);
+    }
+
+    #[test]
+    fn buckets_sorted_and_deduped() {
+        let r = Router::new(vec![
+            Bucket { seq_len: 512, batch: 4 },
+            Bucket { seq_len: 512, batch: 8 },
+            Bucket { seq_len: 128, batch: 8 },
+        ]);
+        assert_eq!(r.buckets().len(), 2);
+        assert!(r.buckets()[0].seq_len < r.buckets()[1].seq_len);
+    }
+
+    #[test]
+    fn padding_waste_bounds() {
+        let r = router();
+        assert_eq!(r.padding_waste(256), 0.0);
+        assert!(r.padding_waste(129) > 0.0);
+        assert!(r.padding_waste(129) < 1.0);
+    }
+}

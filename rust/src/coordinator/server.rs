@@ -1,0 +1,289 @@
+//! Inference service: the serving half of the coordinator.
+//!
+//! Architecture (std threads; tokio is unavailable offline — and the xla
+//! crate's PJRT handles are `!Send`, so the dispatcher thread creates and
+//! owns its own `Runtime` + compiled sessions; only plain data crosses
+//! thread boundaries):
+//!
+//! ```text
+//!   clients ──(bounded mpsc, backpressure)──► dispatcher thread
+//!     dispatcher: Runtime + sessions (thread-local) → router →
+//!       per-bucket BatchQueue → deadline/capacity flush → predict →
+//!       replies via per-request channels
+//! ```
+//!
+//! Each request carries raw token ids of any length; the router pads (or
+//! truncates, paper-style) to its bucket's fixed T.
+
+use std::sync::mpsc::{sync_channel, Receiver, RecvTimeoutError, SyncSender};
+use std::sync::Arc;
+use std::thread::JoinHandle;
+use std::time::{Duration, Instant};
+
+use anyhow::{Context, Result};
+
+use crate::coordinator::batcher::{BatchPolicy, BatchQueue, Pending};
+use crate::coordinator::router::{Bucket, Route, Router};
+use crate::metrics::{LatencyHist, RunMeter};
+use crate::model::{ParamStore, PredictSession};
+use crate::runtime::{Manifest, Runtime, Tensor};
+
+/// A classification reply.
+#[derive(Debug, Clone)]
+pub struct Reply {
+    pub label: usize,
+    pub logits: Vec<f32>,
+    /// queueing + execution latency
+    pub latency: Duration,
+    /// executed sequence bucket
+    pub bucket_t: usize,
+    /// how many requests shared the program execution
+    pub batch_size: usize,
+}
+
+struct Request {
+    ids: Vec<i32>,
+    reply: SyncSender<Result<Reply>>,
+}
+
+enum Msg {
+    Req(Request),
+    /// Drain queues and exit (clones of the handle may outlive the
+    /// server, so shutdown is an explicit message, not channel close).
+    Shutdown,
+}
+
+/// Shared service metrics.
+#[derive(Default)]
+pub struct ServerStats {
+    pub latency: LatencyHist,
+    pub throughput: RunMeter,
+}
+
+/// Handle used by clients; cheap to clone.
+#[derive(Clone)]
+pub struct ServerHandle {
+    tx: SyncSender<Msg>,
+    pub stats: Arc<ServerStats>,
+}
+
+impl ServerHandle {
+    /// Submit token ids; blocks if the admission queue is full
+    /// (backpressure), returns the receiver for the reply.
+    pub fn submit(&self, ids: Vec<i32>) -> Result<Receiver<Result<Reply>>> {
+        let (tx, rx) = sync_channel(1);
+        self.tx
+            .send(Msg::Req(Request { ids, reply: tx }))
+            .map_err(|_| anyhow::anyhow!("server stopped"))?;
+        Ok(rx)
+    }
+
+    /// Submit and wait.
+    pub fn classify(&self, ids: Vec<i32>) -> Result<Reply> {
+        self.submit(ids)?.recv().context("server dropped reply")?
+    }
+}
+
+pub struct ServerConfig {
+    /// Program bases, e.g. `["ember_hrrformer_small_T256_B8", ...]` —
+    /// each contributes one (seq_len, batch) bucket.
+    pub bases: Vec<String>,
+    pub policy: BatchPolicy,
+    /// Admission queue depth (requests beyond this block the caller).
+    pub queue_depth: usize,
+    pub seed: u32,
+    /// Optional trained parameters per base (aligned with `bases`;
+    /// None = seed-initialized).
+    pub params: Vec<Option<ParamStore>>,
+}
+
+impl Default for ServerConfig {
+    fn default() -> Self {
+        ServerConfig {
+            bases: Vec::new(),
+            policy: BatchPolicy::default(),
+            queue_depth: 128,
+            seed: 0,
+            params: Vec::new(),
+        }
+    }
+}
+
+/// The running service; `stop()` (or drop) drains queues and joins the
+/// dispatcher thread.
+pub struct Server {
+    handle: ServerHandle,
+    dispatcher: Option<JoinHandle<()>>,
+}
+
+impl Server {
+    /// Spawn the dispatcher. The manifest is cloned into the thread; the
+    /// PJRT runtime and all compiled executables live entirely inside it.
+    /// Blocks until compilation finishes (or fails).
+    pub fn start(manifest: &Manifest, cfg: ServerConfig) -> Result<Server> {
+        anyhow::ensure!(!cfg.bases.is_empty(), "no predict buckets configured");
+        let stats = Arc::new(ServerStats::default());
+        let (tx, rx) = sync_channel::<Msg>(cfg.queue_depth);
+        let (ready_tx, ready_rx) = sync_channel::<Result<()>>(1);
+        let stats_worker = stats.clone();
+        let manifest_dir = manifest.dir.clone();
+
+        let dispatcher = std::thread::Builder::new()
+            .name("hrr-dispatcher".into())
+            .spawn(move || {
+                // Build runtime + sessions inside the thread (xla !Send).
+                match build_sessions(&manifest_dir, &cfg) {
+                    Ok((router, sessions)) => {
+                        let _ = ready_tx.send(Ok(()));
+                        dispatcher_loop(rx, router, sessions, cfg.policy, stats_worker);
+                    }
+                    Err(e) => {
+                        let _ = ready_tx.send(Err(e));
+                    }
+                }
+            })
+            .context("spawn dispatcher")?;
+
+        ready_rx.recv().context("dispatcher died during startup")??;
+        Ok(Server { handle: ServerHandle { tx, stats }, dispatcher: Some(dispatcher) })
+    }
+
+    pub fn handle(&self) -> ServerHandle {
+        self.handle.clone()
+    }
+
+    /// Drain and stop the dispatcher.
+    pub fn stop(mut self) {
+        self.shutdown();
+    }
+
+    fn shutdown(&mut self) {
+        if let Some(j) = self.dispatcher.take() {
+            let _ = self.handle.tx.send(Msg::Shutdown);
+            let _ = j.join();
+        }
+    }
+}
+
+impl Drop for Server {
+    fn drop(&mut self) {
+        self.shutdown();
+    }
+}
+
+fn build_sessions(
+    manifest_dir: &std::path::Path,
+    cfg: &ServerConfig,
+) -> Result<(Router, Vec<PredictSession>)> {
+    let manifest = Manifest::load(manifest_dir)?;
+    let rt = Runtime::cpu()?;
+    // Sort bases by bucket seq_len so sessions align with the router.
+    let mut sized: Vec<(usize, usize, String)> = Vec::new(); // (seq_len, orig_idx, base)
+    for (i, base) in cfg.bases.iter().enumerate() {
+        let spec = manifest.get(&format!("{base}_predict"))?;
+        sized.push((spec.seq_len, i, base.clone()));
+    }
+    sized.sort();
+
+    let mut sessions = Vec::new();
+    let mut buckets = Vec::new();
+    for (_, orig_idx, base) in &sized {
+        let sess = match cfg.params.get(*orig_idx).and_then(|p| p.clone()) {
+            Some(p) => PredictSession::with_params(&rt, &manifest, base, p)?,
+            None => PredictSession::create(&rt, &manifest, base, cfg.seed)?,
+        };
+        buckets.push(Bucket { seq_len: sess.seq_len(), batch: sess.batch() });
+        sessions.push(sess);
+    }
+    Ok((Router::new(buckets), sessions))
+}
+
+fn dispatcher_loop(
+    rx: Receiver<Msg>,
+    router: Router,
+    sessions: Vec<PredictSession>,
+    policy: BatchPolicy,
+    stats: Arc<ServerStats>,
+) {
+    let nbuckets = router.buckets().len();
+    let mut queues: Vec<BatchQueue<Request>> =
+        (0..nbuckets).map(|_| BatchQueue::new(policy)).collect();
+    let mut draining = false;
+
+    loop {
+        // Sleep until the nearest deadline (or a short tick) for new work.
+        let now = Instant::now();
+        let wait = queues
+            .iter()
+            .filter_map(|q| q.time_to_deadline(now))
+            .min()
+            .unwrap_or(Duration::from_millis(50));
+        match rx.recv_timeout(wait) {
+            Ok(Msg::Req(req)) => {
+                if router.is_empty() {
+                    let _ = req.reply.send(Err(anyhow::anyhow!("no buckets available")));
+                } else {
+                    let (Route::To(i) | Route::Truncate(i)) = router.route(req.ids.len());
+                    queues[i].push(req);
+                }
+            }
+            Ok(Msg::Shutdown) | Err(RecvTimeoutError::Disconnected) => {
+                draining = true;
+            }
+            Err(RecvTimeoutError::Timeout) => {}
+        }
+
+        let now = Instant::now();
+        for (i, q) in queues.iter_mut().enumerate() {
+            while let Some(batch) = q.maybe_flush(now, draining) {
+                execute_batch(&sessions[i], batch, &stats);
+            }
+        }
+
+        if draining && queues.iter().all(|q| q.is_empty()) {
+            return;
+        }
+    }
+}
+
+fn execute_batch(sess: &PredictSession, batch: Vec<Pending<Request>>, stats: &Arc<ServerStats>) {
+    let t = sess.seq_len();
+    let cap = sess.batch();
+    let n = batch.len();
+    debug_assert!(n <= cap);
+    // Pack into the fixed (cap, T) tensor; unused rows stay PAD.
+    let mut ids = vec![0i32; cap * t];
+    for (row, p) in batch.iter().enumerate() {
+        let src = &p.payload.ids;
+        let len = src.len().min(t);
+        ids[row * t..row * t + len].copy_from_slice(&src[..len]);
+    }
+    let tensor = Tensor::i32(vec![cap, t], ids);
+    match sess.predict(&tensor) {
+        Ok(logits) => {
+            let data = logits.as_f32().unwrap_or(&[]).to_vec();
+            let classes = logits.shape().last().copied().unwrap_or(1);
+            let preds = logits.argmax_last().unwrap_or_default();
+            let done = Instant::now();
+            for (row, p) in batch.into_iter().enumerate() {
+                let latency = done.duration_since(p.enqueued);
+                stats.latency.record(latency);
+                stats.throughput.add(1);
+                let reply = Reply {
+                    label: preds.get(row).copied().unwrap_or(0),
+                    logits: data[row * classes..(row + 1) * classes].to_vec(),
+                    latency,
+                    bucket_t: t,
+                    batch_size: n,
+                };
+                let _ = p.payload.reply.send(Ok(reply));
+            }
+        }
+        Err(e) => {
+            let msg = format!("predict failed: {e:#}");
+            for p in batch {
+                let _ = p.payload.reply.send(Err(anyhow::anyhow!(msg.clone())));
+            }
+        }
+    }
+}

@@ -1,0 +1,217 @@
+//! Training orchestrator: epochs, data streams, eval, checkpointing and
+//! learning-curve logging around a `TrainSession`.
+//!
+//! Mirrors the paper's protocol: exponential LR decay is inside the
+//! exported train_step; the trainer owns batching, the train/test
+//! streams, and the Fig 8-style per-epoch curve.
+
+use std::path::PathBuf;
+
+use anyhow::{Context, Result};
+
+use crate::data::{batch::BatchStream, by_task, Split};
+use crate::metrics::CsvLogger;
+use crate::model::TrainSession;
+use crate::runtime::{Manifest, Runtime};
+use crate::util::timed;
+
+#[derive(Debug, Clone)]
+pub struct TrainConfig {
+    /// Program base key, e.g. `listops_hrrformer_small_T512_B8`.
+    pub base: String,
+    pub seed: u64,
+    pub steps: usize,
+    pub eval_every: usize,
+    pub eval_batches: usize,
+    /// Where to write the learning-curve CSV (None = no file).
+    pub curve_csv: Option<PathBuf>,
+    pub ckpt: Option<PathBuf>,
+    pub verbose: bool,
+}
+
+impl Default for TrainConfig {
+    fn default() -> Self {
+        TrainConfig {
+            base: String::new(),
+            seed: 0,
+            steps: 200,
+            eval_every: 50,
+            eval_batches: 8,
+            curve_csv: None,
+            ckpt: None,
+            verbose: true,
+        }
+    }
+}
+
+#[derive(Debug, Clone, Default)]
+pub struct EpochPoint {
+    pub step: u32,
+    pub train_loss: f32,
+    pub train_acc: f32,
+    pub test_loss: f32,
+    pub test_acc: f32,
+    pub secs: f64,
+}
+
+#[derive(Debug, Clone, Default)]
+pub struct TrainReport {
+    pub base: String,
+    pub curve: Vec<EpochPoint>,
+    pub final_train_acc: f32,
+    pub final_test_acc: f32,
+    pub total_secs: f64,
+    pub steps: usize,
+    pub examples_per_sec: f64,
+    pub param_scalars: usize,
+}
+
+impl TrainReport {
+    /// Train/test gap — the paper's Table 2 "overfitting" column.
+    pub fn overfit(&self) -> f32 {
+        self.final_train_acc - self.final_test_acc
+    }
+}
+
+/// Run a full training job described by `cfg`.
+pub fn train(rt: &Runtime, manifest: &Manifest, cfg: &TrainConfig) -> Result<TrainReport> {
+    let spec = manifest.get(&format!("{}_train_step", cfg.base))?;
+    let ds = by_task(&spec.task, spec.seq_len)
+        .with_context(|| format!("no dataset for task '{}'", spec.task))?;
+    anyhow::ensure!(
+        ds.vocab() <= spec.vocab,
+        "dataset vocab {} exceeds model vocab {}",
+        ds.vocab(),
+        spec.vocab
+    );
+    let mut train_stream =
+        BatchStream::new(ds.as_ref(), Split::Train, cfg.seed, spec.batch, spec.seq_len);
+
+    let mut sess = TrainSession::create(rt, manifest, &cfg.base, cfg.seed as u32)?;
+    let param_scalars = sess.param_scalars();
+    if cfg.verbose {
+        eprintln!(
+            "[train] {} — {} params, B={} T={} steps={}",
+            cfg.base, param_scalars, spec.batch, spec.seq_len, cfg.steps
+        );
+    }
+
+    let mut csv = match &cfg.curve_csv {
+        Some(p) => Some(CsvLogger::create(
+            p.clone(),
+            &["step", "train_loss", "train_acc", "test_loss", "test_acc", "secs"],
+        )?),
+        None => None,
+    };
+
+    let mut curve = Vec::new();
+    let mut window_loss = 0.0f32;
+    let mut window_acc = 0.0f32;
+    let mut window_n = 0usize;
+    let t_start = std::time::Instant::now();
+
+    for step in 0..cfg.steps {
+        let batch = train_stream.next_batch();
+        let stats = sess.train_step(&batch.ids, &batch.labels)?;
+        window_loss += stats.loss;
+        window_acc += stats.acc;
+        window_n += 1;
+
+        let at_eval = (step + 1) % cfg.eval_every == 0 || step + 1 == cfg.steps;
+        if at_eval {
+            // timing-only artifacts have no eval_step — skip test metrics
+            let (test_loss, test_acc) = if sess.has_eval() && cfg.eval_batches > 0 {
+                evaluate(&sess, ds.as_ref(), cfg.seed, cfg.eval_batches, spec.batch, spec.seq_len)?
+            } else {
+                (f32::NAN, f32::NAN)
+            };
+            let point = EpochPoint {
+                step: stats.step,
+                train_loss: window_loss / window_n.max(1) as f32,
+                train_acc: window_acc / window_n.max(1) as f32,
+                test_loss,
+                test_acc,
+                secs: t_start.elapsed().as_secs_f64(),
+            };
+            if cfg.verbose {
+                eprintln!(
+                    "[train] step {:>5}  loss {:.4}  acc {:.3} | test loss {:.4} acc {:.3} | {:.1}s",
+                    point.step, point.train_loss, point.train_acc, point.test_loss,
+                    point.test_acc, point.secs
+                );
+            }
+            if let Some(csv) = csv.as_mut() {
+                csv.log(&[
+                    point.step.to_string(),
+                    format!("{:.6}", point.train_loss),
+                    format!("{:.4}", point.train_acc),
+                    format!("{:.6}", point.test_loss),
+                    format!("{:.4}", point.test_acc),
+                    format!("{:.2}", point.secs),
+                ])?;
+            }
+            curve.push(point);
+            window_loss = 0.0;
+            window_acc = 0.0;
+            window_n = 0;
+        }
+    }
+
+    if let Some(p) = &cfg.ckpt {
+        if let Some(dir) = p.parent() {
+            std::fs::create_dir_all(dir)?;
+        }
+        sess.save(p)?;
+        if cfg.verbose {
+            eprintln!("[train] checkpoint → {}", p.display());
+        }
+    }
+
+    let total_secs = t_start.elapsed().as_secs_f64();
+    let last = curve.last().cloned().unwrap_or_default();
+    Ok(TrainReport {
+        base: cfg.base.clone(),
+        final_train_acc: last.train_acc,
+        final_test_acc: last.test_acc,
+        curve,
+        total_secs,
+        steps: cfg.steps,
+        examples_per_sec: (cfg.steps * spec.batch) as f64 / total_secs,
+        param_scalars,
+    })
+}
+
+/// Average eval loss/acc over `n_batches` deterministic test batches.
+pub fn evaluate(
+    sess: &TrainSession,
+    ds: &dyn crate::data::Dataset,
+    seed: u64,
+    n_batches: usize,
+    batch: usize,
+    seq_len: usize,
+) -> Result<(f32, f32)> {
+    let mut stream = BatchStream::new(ds, Split::Test, seed, batch, seq_len);
+    let mut loss = 0.0f32;
+    let mut acc = 0.0f32;
+    for _ in 0..n_batches {
+        let b = stream.next_batch();
+        let s = sess.eval_step(&b.ids, &b.labels)?;
+        loss += s.loss;
+        acc += s.acc;
+    }
+    Ok((loss / n_batches as f32, acc / n_batches as f32))
+}
+
+/// Time one train step (compile excluded) — used by the speed benches.
+pub fn time_one_step(rt: &Runtime, manifest: &Manifest, base: &str, seed: u64) -> Result<f64> {
+    let spec = manifest.get(&format!("{base}_train_step"))?;
+    let ds = by_task(&spec.task, spec.seq_len).context("dataset")?;
+    let mut stream = BatchStream::new(ds.as_ref(), Split::Train, seed, spec.batch, spec.seq_len);
+    let mut sess = TrainSession::create(rt, manifest, base, seed as u32)?;
+    let warm = stream.next_batch();
+    sess.train_step(&warm.ids, &warm.labels)?; // warm-up (first-exec overhead)
+    let b = stream.next_batch();
+    let (res, secs) = timed(|| sess.train_step(&b.ids, &b.labels));
+    res?;
+    Ok(secs)
+}

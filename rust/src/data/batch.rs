@@ -1,0 +1,83 @@
+//! Batch assembly: pack `Example`s into the fixed-shape (B, T) i32 tensors
+//! the AOT programs expect (truncate/PAD-0 exactly like the paper's
+//! truncating-or-padding protocol).
+
+use crate::data::{Dataset, Example, Split, Stream};
+use crate::runtime::tensor::Tensor;
+
+/// A (ids, labels) tensor pair ready to feed a program.
+#[derive(Debug, Clone)]
+pub struct Batch {
+    pub ids: Tensor,
+    pub labels: Tensor,
+}
+
+pub fn pack(examples: &[Example], seq_len: usize) -> Batch {
+    let b = examples.len();
+    let mut ids = vec![0i32; b * seq_len];
+    let mut labels = vec![0i32; b];
+    for (i, ex) in examples.iter().enumerate() {
+        let n = ex.ids.len().min(seq_len);
+        ids[i * seq_len..i * seq_len + n].copy_from_slice(&ex.ids[..n]);
+        labels[i] = ex.label;
+    }
+    Batch { ids: Tensor::i32(vec![b, seq_len], ids), labels: Tensor::i32(vec![b], labels) }
+}
+
+/// Deterministic batch iterator over a dataset split.
+pub struct BatchStream<'a> {
+    stream: Stream<'a>,
+    batch: usize,
+    seq_len: usize,
+}
+
+impl<'a> BatchStream<'a> {
+    pub fn new(
+        ds: &'a dyn Dataset,
+        split: Split,
+        seed: u64,
+        batch: usize,
+        seq_len: usize,
+    ) -> BatchStream<'a> {
+        BatchStream { stream: Stream::new(ds, split, seed), batch, seq_len }
+    }
+
+    pub fn next_batch(&mut self) -> Batch {
+        let examples = self.stream.take(self.batch);
+        pack(&examples, self.seq_len)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::listops::ListOps;
+
+    #[test]
+    fn pack_pads_and_truncates() {
+        let exs = vec![
+            Example { ids: vec![5, 6, 7], label: 1 },
+            Example { ids: vec![9; 20], label: 3 },
+        ];
+        let b = pack(&exs, 8);
+        assert_eq!(b.ids.shape(), &[2, 8]);
+        let data = b.ids.as_i32().unwrap();
+        assert_eq!(&data[..8], &[5, 6, 7, 0, 0, 0, 0, 0]);
+        assert_eq!(&data[8..], &[9; 8]);
+        assert_eq!(b.labels.as_i32().unwrap(), &[1, 3]);
+    }
+
+    #[test]
+    fn batch_stream_shapes() {
+        let ds = ListOps::new(64);
+        let mut bs = BatchStream::new(&ds, Split::Train, 7, 4, 64);
+        let b1 = bs.next_batch();
+        let b2 = bs.next_batch();
+        assert_eq!(b1.ids.shape(), &[4, 64]);
+        assert_ne!(
+            b1.ids.as_i32().unwrap(),
+            b2.ids.as_i32().unwrap(),
+            "stream must advance"
+        );
+    }
+}

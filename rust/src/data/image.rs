@@ -1,0 +1,143 @@
+//! 32×32 grayscale shape classification (LRA Image substitution).
+//!
+//! Ten procedurally drawn classes (bars, crosses, disks, rings, checkers,
+//! gradients, …) with position/scale jitter and pixel noise, flattened
+//! row-major to a T=1024 discrete-symbol sequence — the setup Fig 5
+//! visualizes (a 1-D model must rediscover the 2-D structure).
+//!
+//! Pixels are quantized to 1..=255 (0 is reserved as PAD by the encoder's
+//! masking convention), vocab 256.
+
+use crate::data::{Dataset, Example};
+use crate::util::rng::Rng;
+
+pub const SIDE: usize = 32;
+
+pub struct ShapeImages;
+
+impl ShapeImages {
+    pub fn new() -> ShapeImages {
+        ShapeImages
+    }
+
+    fn draw(&self, rng: &mut Rng, class: usize) -> Vec<f32> {
+        let mut img = vec![0.0f32; SIDE * SIDE];
+        let cx = 12.0 + rng.f64() as f32 * 8.0;
+        let cy = 12.0 + rng.f64() as f32 * 8.0;
+        let r = 6.0 + rng.f64() as f32 * 6.0;
+        let thick = 1.5 + rng.f64() as f32 * 2.0;
+        for y in 0..SIDE {
+            for x in 0..SIDE {
+                let fx = x as f32 - cx;
+                let fy = y as f32 - cy;
+                let d = (fx * fx + fy * fy).sqrt();
+                let v: f32 = match class {
+                    0 => ((x / 4) % 2 == 0) as i32 as f32,            // vertical bars
+                    1 => ((y / 4) % 2 == 0) as i32 as f32,            // horizontal bars
+                    2 => (fx.abs() < thick || fy.abs() < thick) as i32 as f32, // cross
+                    3 => (d < r) as i32 as f32,                        // disk
+                    4 => ((d - r).abs() < thick) as i32 as f32,        // ring
+                    5 => (((x / 4) + (y / 4)) % 2 == 0) as i32 as f32, // checker
+                    6 => x as f32 / SIDE as f32,                       // h-gradient
+                    7 => y as f32 / SIDE as f32,                       // v-gradient
+                    8 => ((fx.abs() < r && fy.abs() < r)
+                        && !(fx.abs() < r - thick && fy.abs() < r - thick))
+                        as i32 as f32,                                 // square outline
+                    _ => ((fx + fy).abs() < thick || (fx - fy).abs() < thick) as i32
+                        as f32,                                        // diagonal cross
+                };
+                img[y * SIDE + x] = v;
+            }
+        }
+        // contrast jitter + additive noise
+        let gain = 0.6 + rng.f64() as f32 * 0.4;
+        let bias = rng.f64() as f32 * 0.15;
+        for p in img.iter_mut() {
+            *p = (*p * gain + bias + rng.normal() as f32 * 0.05).clamp(0.0, 1.0);
+        }
+        img
+    }
+}
+
+impl Default for ShapeImages {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl Dataset for ShapeImages {
+    fn name(&self) -> &'static str {
+        "image"
+    }
+
+    fn vocab(&self) -> usize {
+        256
+    }
+
+    fn classes(&self) -> usize {
+        10
+    }
+
+    fn sample(&self, rng: &mut Rng) -> Example {
+        let class = rng.usize_below(10);
+        let img = self.draw(rng, class);
+        let ids = img
+            .iter()
+            .map(|&v| ((v * 254.0) as i32 + 1).clamp(1, 255))
+            .collect();
+        Example { ids, label: class as i32 }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::prop::forall;
+
+    #[test]
+    fn fixed_length_and_pixel_range() {
+        let ds = ShapeImages::new();
+        forall(40, 0x1337, |rng| {
+            let ex = ds.sample(rng);
+            assert_eq!(ex.ids.len(), SIDE * SIDE);
+            assert!(ex.ids.iter().all(|&t| (1..=255).contains(&t)));
+            assert!((0..10).contains(&ex.label));
+        });
+    }
+
+    #[test]
+    fn classes_are_visually_distinct() {
+        // mean image of class 0 (v-bars) differs strongly from class 3 (disk)
+        let ds = ShapeImages::new();
+        let mut rng = Rng::new(4);
+        let mean = |class: usize, rng: &mut Rng| -> Vec<f32> {
+            let mut acc = vec![0.0f32; SIDE * SIDE];
+            let mut n = 0;
+            while n < 40 {
+                let ex = ds.sample(rng);
+                if ex.label as usize == class {
+                    for (a, &t) in acc.iter_mut().zip(&ex.ids) {
+                        *a += t as f32;
+                    }
+                    n += 1;
+                }
+            }
+            acc.iter().map(|v| v / 40.0).collect()
+        };
+        let m0 = mean(0, &mut rng);
+        let m3 = mean(3, &mut rng);
+        let l2: f32 = m0.iter().zip(&m3).map(|(a, b)| (a - b) * (a - b)).sum::<f32>().sqrt();
+        assert!(l2 > 100.0, "class means too close: {l2}");
+    }
+
+    #[test]
+    fn all_classes_generated() {
+        let ds = ShapeImages::new();
+        let mut rng = Rng::new(6);
+        let mut seen = [false; 10];
+        for _ in 0..500 {
+            seen[ds.sample(&mut rng).label as usize] = true;
+        }
+        assert!(seen.iter().all(|&s| s));
+    }
+}

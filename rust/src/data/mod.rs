@@ -1,0 +1,110 @@
+//! Dataset substrates — every workload the paper evaluates on, built from
+//! scratch in rust (DESIGN.md §3 lists the substitutions: EMBER and the
+//! LRA corpora are replaced by synthetic generators that preserve the
+//! properties the tasks test).
+//!
+//! All generators are deterministic functions of an explicit seed; train
+//! and test splits are disjoint seed streams of one generator.
+
+pub mod batch;
+pub mod ember;
+pub mod image;
+pub mod listops;
+pub mod pathfinder;
+pub mod retrieval;
+pub mod text;
+
+use crate::util::rng::Rng;
+
+/// One labelled sequence.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Example {
+    pub ids: Vec<i32>,
+    pub label: i32,
+}
+
+/// A synthetic task: an infinite, seeded stream of labelled sequences.
+pub trait Dataset: Send + Sync {
+    fn name(&self) -> &'static str;
+    fn vocab(&self) -> usize;
+    fn classes(&self) -> usize;
+    /// Generate one example. Implementations must use only `rng` for
+    /// randomness so streams are reproducible.
+    fn sample(&self, rng: &mut Rng) -> Example;
+}
+
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Split {
+    Train,
+    Test,
+}
+
+impl Split {
+    fn stream_tag(self) -> u64 {
+        match self {
+            Split::Train => 0x7261494E, // "trAIN"
+            Split::Test => 0x74657374,  // "test"
+        }
+    }
+}
+
+/// Deterministic example stream for a (dataset, split, seed) triple.
+pub struct Stream<'a> {
+    ds: &'a dyn Dataset,
+    rng: Rng,
+}
+
+impl<'a> Stream<'a> {
+    pub fn new(ds: &'a dyn Dataset, split: Split, seed: u64) -> Stream<'a> {
+        Stream { ds, rng: Rng::new(seed).fold_in(split.stream_tag()) }
+    }
+
+    pub fn next_example(&mut self) -> Example {
+        self.ds.sample(&mut self.rng)
+    }
+
+    pub fn take(&mut self, n: usize) -> Vec<Example> {
+        (0..n).map(|_| self.next_example()).collect()
+    }
+}
+
+/// Build the dataset matching an AOT task name with its standard knobs.
+pub fn by_task(task: &str, seq_len: usize) -> Option<Box<dyn Dataset>> {
+    match task {
+        "listops" => Some(Box::new(listops::ListOps::new(seq_len))),
+        "text" => Some(Box::new(text::TextSentiment::new(seq_len))),
+        "retrieval" => Some(Box::new(retrieval::Retrieval::new(seq_len))),
+        "image" => Some(Box::new(image::ShapeImages::new())),
+        "pathfinder" | "pathx" => {
+            let side = if task == "pathx" { 128 } else { 32 };
+            Some(Box::new(pathfinder::Pathfinder::new(side)))
+        }
+        "ember" => Some(Box::new(ember::EmberSynth::new(seq_len))),
+        _ => None,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn streams_are_deterministic_and_split_disjoint() {
+        let ds = listops::ListOps::new(128);
+        let a = Stream::new(&ds, Split::Train, 1).take(5);
+        let b = Stream::new(&ds, Split::Train, 1).take(5);
+        let c = Stream::new(&ds, Split::Test, 1).take(5);
+        assert_eq!(a, b);
+        assert_ne!(a, c);
+    }
+
+    #[test]
+    fn by_task_covers_all_tasks() {
+        for t in ["listops", "text", "retrieval", "image", "pathfinder", "pathx", "ember"] {
+            let ds = by_task(t, 256).unwrap_or_else(|| panic!("missing dataset for {t}"));
+            assert!(ds.vocab() > 1);
+            assert!(ds.classes() >= 2);
+        }
+        assert!(by_task("nope", 16).is_none());
+    }
+}

@@ -1,0 +1,217 @@
+//! Pathfinder (LRA) substitution: a rust rasterizer draws two endpoint
+//! dots and dashed curved paths on an N×N grid. Positive examples connect
+//! the two dots with one dashed path; negatives have two disjoint dashed
+//! arcs. Distractor arcs are added to both classes, so the long-range
+//! *connectivity* — not ink density — carries the label. `side=128`
+//! gives the Path-X variant.
+
+use crate::data::{Dataset, Example};
+use crate::util::rng::Rng;
+
+pub struct Pathfinder {
+    pub side: usize,
+    pub n_distractors: usize,
+}
+
+impl Pathfinder {
+    pub fn new(side: usize) -> Pathfinder {
+        Pathfinder { side, n_distractors: if side > 64 { 6 } else { 3 } }
+    }
+
+    fn put(&self, img: &mut [f32], x: i64, y: i64, v: f32) {
+        if x >= 0 && y >= 0 && (x as usize) < self.side && (y as usize) < self.side {
+            img[y as usize * self.side + x as usize] = v;
+        }
+    }
+
+    fn dot(&self, img: &mut [f32], x: i64, y: i64) {
+        for dy in -1..=1 {
+            for dx in -1..=1 {
+                self.put(img, x + dx, y + dy, 1.0);
+            }
+        }
+    }
+
+    /// Draw a dashed random walk from (x0,y0) toward (x1,y1).
+    /// Returns the end position actually reached.
+    fn walk(
+        &self,
+        rng: &mut Rng,
+        img: &mut [f32],
+        start: (i64, i64),
+        goal: (i64, i64),
+        reach_goal: bool,
+    ) -> (i64, i64) {
+        let (mut x, mut y) = start;
+        let mut step = 0usize;
+        let max_steps = self.side * 4;
+        loop {
+            if step % 3 != 2 {
+                self.put(img, x, y, 0.8); // dashed: skip every third pixel
+            }
+            step += 1;
+            let (gx, gy) = goal;
+            if (x - gx).abs() <= 1 && (y - gy).abs() <= 1 {
+                return (x, y);
+            }
+            if step > max_steps || (!reach_goal && step > self.side) {
+                return (x, y);
+            }
+            // biased random step toward goal (or away for non-connecting arcs)
+            let bias = if reach_goal { 0.7 } else { 0.35 };
+            let dx = if rng.f64() < bias { (gx - x).signum() } else { rng.range(-1, 2) };
+            let dy = if rng.f64() < bias { (gy - y).signum() } else { rng.range(-1, 2) };
+            x += dx;
+            y += dy;
+            x = x.clamp(0, self.side as i64 - 1);
+            y = y.clamp(0, self.side as i64 - 1);
+        }
+    }
+
+    fn rand_point(&self, rng: &mut Rng, margin: i64) -> (i64, i64) {
+        (
+            rng.range(margin, self.side as i64 - margin),
+            rng.range(margin, self.side as i64 - margin),
+        )
+    }
+}
+
+impl Dataset for Pathfinder {
+    fn name(&self) -> &'static str {
+        "pathfinder"
+    }
+
+    fn vocab(&self) -> usize {
+        256
+    }
+
+    fn classes(&self) -> usize {
+        2
+    }
+
+    fn sample(&self, rng: &mut Rng) -> Example {
+        let n = self.side * self.side;
+        let mut img = vec![0.0f32; n];
+        let connected = rng.bool(0.5);
+        let a = self.rand_point(rng, 3);
+        let mut b = self.rand_point(rng, 3);
+        // endpoints must be far apart for the task to be long-range
+        while (a.0 - b.0).abs() + (a.1 - b.1).abs() < self.side as i64 / 2 {
+            b = self.rand_point(rng, 3);
+        }
+        if connected {
+            self.walk(rng, &mut img, a, b, true);
+        } else {
+            // two disjoint short arcs leaving each endpoint
+            let ga = self.rand_point(rng, 3);
+            let gb = self.rand_point(rng, 3);
+            self.walk(rng, &mut img, a, ga, false);
+            self.walk(rng, &mut img, b, gb, false);
+        }
+        // distractor arcs (same ink statistics in both classes)
+        for _ in 0..self.n_distractors {
+            let s = self.rand_point(rng, 2);
+            let g = self.rand_point(rng, 2);
+            self.walk(rng, &mut img, s, g, false);
+        }
+        self.dot(&mut img, a.0, a.1);
+        self.dot(&mut img, b.0, b.1);
+        // noise + quantize to 1..=255 (0 reserved for PAD)
+        let ids = img
+            .iter()
+            .map(|&v| {
+                let noisy = (v + rng.normal() as f32 * 0.03).clamp(0.0, 1.0);
+                ((noisy * 254.0) as i32 + 1).clamp(1, 255)
+            })
+            .collect();
+        Example { ids, label: connected as i32 }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::prop::forall;
+
+    #[test]
+    fn well_formed() {
+        let ds = Pathfinder::new(32);
+        forall(40, 0xAA7F, |rng| {
+            let ex = ds.sample(rng);
+            assert_eq!(ex.ids.len(), 1024);
+            assert!(ex.ids.iter().all(|&t| (1..=255).contains(&t)));
+        });
+    }
+
+    #[test]
+    fn balanced() {
+        let ds = Pathfinder::new(32);
+        let mut rng = Rng::new(8);
+        let pos: usize = (0..600).map(|_| ds.sample(&mut rng).label as usize).sum();
+        assert!((200..400).contains(&pos), "imbalanced {pos}/600");
+    }
+
+    #[test]
+    fn pathx_is_128() {
+        let ds = Pathfinder::new(128);
+        let mut rng = Rng::new(9);
+        assert_eq!(ds.sample(&mut rng).ids.len(), 128 * 128);
+    }
+
+    #[test]
+    fn connected_images_have_continuous_ink_between_endpoints() {
+        // flood-fill over inked pixels (allowing the 1-dash gaps) from one
+        // endpoint must reach the other in connected examples far more
+        // often than in disconnected ones.
+        let ds = Pathfinder::new(32);
+        let mut rng = Rng::new(10);
+        let mut reach = [0usize; 2];
+        let mut count = [0usize; 2];
+        for _ in 0..120 {
+            let ex = ds.sample(&mut rng);
+            let grid: Vec<bool> = ex.ids.iter().map(|&t| t > 100).collect();
+            // endpoints are the brightest 3x3 blobs; find two far-apart ink maxima
+            let bright: Vec<usize> =
+                (0..grid.len()).filter(|&i| ex.ids[i] >= 240).collect();
+            if bright.len() < 2 {
+                continue;
+            }
+            let p0 = bright[0];
+            let p1 = *bright.iter().max_by_key(|&&p| {
+                let (x0, y0) = (p0 % 32, p0 / 32);
+                let (x1, y1) = (p % 32, p / 32);
+                x0.abs_diff(x1) + y0.abs_diff(y1)
+            }).unwrap();
+            // BFS with radius-2 neighbourhood (jumps the dash gaps)
+            let mut seen = vec![false; grid.len()];
+            let mut queue = std::collections::VecDeque::from([p0]);
+            seen[p0] = true;
+            while let Some(p) = queue.pop_front() {
+                let (x, y) = ((p % 32) as i64, (p / 32) as i64);
+                for dy in -2..=2i64 {
+                    for dx in -2..=2i64 {
+                        let (nx, ny) = (x + dx, y + dy);
+                        if nx < 0 || ny < 0 || nx >= 32 || ny >= 32 {
+                            continue;
+                        }
+                        let np = (ny * 32 + nx) as usize;
+                        if !seen[np] && grid[np] {
+                            seen[np] = true;
+                            queue.push_back(np);
+                        }
+                    }
+                }
+            }
+            count[ex.label as usize] += 1;
+            if seen[p1] {
+                reach[ex.label as usize] += 1;
+            }
+        }
+        let r0 = reach[0] as f64 / count[0].max(1) as f64;
+        let r1 = reach[1] as f64 / count[1].max(1) as f64;
+        assert!(
+            r1 > r0 + 0.3,
+            "connectivity signal too weak: connected={r1:.2} disconnected={r0:.2}"
+        );
+    }
+}

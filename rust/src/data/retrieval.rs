@@ -1,0 +1,116 @@
+//! Document-pair matching (LRA Retrieval substitution, DESIGN.md §3).
+//!
+//! Two byte-level "papers" are generated; positives share a planted
+//! citation key (a 12-byte identifier appearing once in each document at
+//! a random offset), negatives have unrelated keys. The pair is encoded
+//! as `doc1 SEP doc2` in one fixed-length sequence — the model must
+//! compress-then-compare across thousands of bytes.
+
+use crate::data::{Dataset, Example};
+use crate::util::rng::Rng;
+
+const SEP: i32 = 256; // byte 255 + 1 = 256 is reserved as separator
+const FILLER_WORDS: &[&str] = &[
+    "method", "results", "analysis", "model", "data", "experiment", "figure",
+    "table", "baseline", "approach", "significant", "propose", "evaluate",
+    "benchmark", "训练", "sequence", "attention", "accuracy", "novel",
+];
+
+pub struct Retrieval {
+    /// Total sequence length (both documents + separator).
+    pub max_len: usize,
+}
+
+impl Retrieval {
+    pub fn new(max_len: usize) -> Retrieval {
+        Retrieval { max_len }
+    }
+
+    fn citation_key(rng: &mut Rng) -> Vec<u8> {
+        // e.g. "[@K4X9QZ2B]" — distinctive bracketed key
+        let mut key = b"[@".to_vec();
+        for _ in 0..8 {
+            let c = b"ABCDEFGHJKLMNPQRSTUVWXYZ23456789"[rng.usize_below(32)];
+            key.push(c);
+        }
+        key.push(b']');
+        key
+    }
+
+    fn doc(&self, rng: &mut Rng, len: usize, key: &[u8]) -> Vec<u8> {
+        let mut text: Vec<u8> = Vec::with_capacity(len);
+        while text.len() < len {
+            text.extend_from_slice(rng.choose(FILLER_WORDS).as_bytes());
+            text.push(b' ');
+        }
+        text.truncate(len);
+        // plant the key at a random position
+        if len > key.len() {
+            let pos = rng.usize_below(len - key.len());
+            text[pos..pos + key.len()].copy_from_slice(key);
+        }
+        text
+    }
+}
+
+impl Dataset for Retrieval {
+    fn name(&self) -> &'static str {
+        "retrieval"
+    }
+
+    fn vocab(&self) -> usize {
+        257
+    }
+
+    fn classes(&self) -> usize {
+        2
+    }
+
+    fn sample(&self, rng: &mut Rng) -> Example {
+        let doc_len = (self.max_len - 1) / 2;
+        let matched = rng.bool(0.5);
+        let key1 = Self::citation_key(rng);
+        let key2 = if matched { key1.clone() } else { Self::citation_key(rng) };
+        let d1 = self.doc(rng, doc_len, &key1);
+        let d2 = self.doc(rng, doc_len, &key2);
+        let mut ids: Vec<i32> = Vec::with_capacity(self.max_len);
+        ids.extend(d1.iter().map(|&b| b as i32 + 1));
+        ids.push(SEP);
+        ids.extend(d2.iter().map(|&b| b as i32 + 1));
+        Example { ids, label: matched as i32 }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::prop::forall;
+
+    #[test]
+    fn structure_and_key_plant() {
+        let ds = Retrieval::new(512);
+        forall(50, 0xD0C5, |rng| {
+            let ex = ds.sample(rng);
+            assert!(ex.ids.len() <= 512);
+            let seps = ex.ids.iter().filter(|&&t| t == SEP).count();
+            assert!(seps >= 1, "separator missing");
+            // decode and check key sharing matches the label
+            let text: Vec<u8> = ex.ids.iter().map(|&t| (t - 1).max(0) as u8).collect();
+            let s = String::from_utf8_lossy(&text);
+            let keys: Vec<&str> = s
+                .match_indices("[@")
+                .filter_map(|(i, _)| s.get(i..i + 11))
+                .collect();
+            assert_eq!(keys.len(), 2, "expected two planted keys in {s}");
+            assert_eq!((keys[0] == keys[1]) as i32, ex.label);
+        });
+    }
+
+    #[test]
+    fn balanced_labels() {
+        let ds = Retrieval::new(256);
+        let mut rng = Rng::new(11);
+        let pos: usize = (0..1000).map(|_| ds.sample(&mut rng).label as usize).sum();
+        assert!((400..600).contains(&pos), "imbalanced: {pos}");
+    }
+}

@@ -1,0 +1,15 @@
+//! # hrrformer — Recasting Self-Attention with Holographic Reduced Representations
+//!
+//! Rust coordinator + PJRT runtime for the ICML 2023 Hrrformer paper.
+//! Three layers (DESIGN.md): Pallas HRR kernels (L1) and the JAX encoder
+//! zoo (L2) are AOT-lowered to HLO text at build time; this crate (L3)
+//! owns everything on the request path — datasets, training orchestration,
+//! the inference service, and the paper's benchmark harness.
+
+pub mod bench;
+pub mod coordinator;
+pub mod data;
+pub mod metrics;
+pub mod model;
+pub mod runtime;
+pub mod util;

@@ -1,0 +1,237 @@
+//! `repro` — the Hrrformer coordinator CLI (leader entrypoint).
+//!
+//! Subcommands:
+//!   train            train one exported model config
+//!   serve            run the batched inference service on synthetic load
+//!   bench ember      Table 5 / Fig 1 / Fig 4
+//!   bench lra        Table 1 / Table 2 / Fig 8 (--curves)
+//!   bench speed      Table 4 / Fig 6
+//!   bench inference  Table 7 (add --sweep-batch for Table 6)
+//!   bench weights    Fig 5 / Fig 9
+//!   data             dump dataset samples
+//!   inspect          list manifest programs
+//!
+//! Run with `--help` for flags.
+
+use anyhow::{bail, Context, Result};
+
+use hrrformer::bench;
+use hrrformer::coordinator::{self, BatchPolicy, ServerConfig, TrainConfig};
+use hrrformer::data::{by_task, Split, Stream};
+use hrrformer::runtime::{default_manifest, Runtime};
+use hrrformer::util::cli::Args;
+
+const USAGE: &str = "\
+repro — Hrrformer reproduction coordinator
+
+USAGE:
+  repro train --base <program base> [--steps N] [--seed S] [--curve path.csv] [--ckpt path]
+  repro serve [--bases a,b,c] [--requests N] [--max-batch B] [--max-wait-ms MS]
+  repro bench ember     [--steps N] [--models a,b] [--timeout-s S]
+  repro bench lra       [--steps N] [--models a,b] [--tasks t1,t2] [--curves]
+  repro bench speed     [--steps N]
+  repro bench inference [--examples N] [--sweep-batch]
+  repro bench weights   [--steps N] [--multi-layer]
+  repro data --task <task> [--n N] [--seq-len T]
+  repro inspect
+
+Artifacts are read from ./artifacts (override: HRRFORMER_ARTIFACTS).
+Bench outputs land in ./results (override: HRRFORMER_RESULTS).
+";
+
+fn main() {
+    let args = Args::from_env();
+    if args.positional.is_empty() || args.bool("help") {
+        print!("{USAGE}");
+        return;
+    }
+    if let Err(e) = dispatch(&args) {
+        eprintln!("error: {e:#}");
+        std::process::exit(1);
+    }
+}
+
+fn dispatch(args: &Args) -> Result<()> {
+    match args.positional[0].as_str() {
+        "train" => cmd_train(args),
+        "serve" => cmd_serve(args),
+        "bench" => cmd_bench(args),
+        "data" => cmd_data(args),
+        "inspect" => cmd_inspect(),
+        other => bail!("unknown command '{other}'\n{USAGE}"),
+    }
+}
+
+fn cmd_train(args: &Args) -> Result<()> {
+    let base = args.get("base").context("--base is required (see `repro inspect`)")?.to_string();
+    let rt = Runtime::cpu()?;
+    let manifest = default_manifest()?;
+    let cfg = TrainConfig {
+        base,
+        seed: args.u64("seed", 0),
+        steps: args.usize("steps", 200),
+        eval_every: args.usize("eval-every", 50),
+        eval_batches: args.usize("eval-batches", 8),
+        curve_csv: args.get("curve").map(Into::into),
+        ckpt: args.get("ckpt").map(Into::into),
+        verbose: true,
+    };
+    let report = coordinator::train(&rt, &manifest, &cfg)?;
+    println!(
+        "final: train acc {:.4}, test acc {:.4}, {:.1}s total ({:.2} examples/s, {} params)",
+        report.final_train_acc,
+        report.final_test_acc,
+        report.total_secs,
+        report.examples_per_sec,
+        report.param_scalars
+    );
+    Ok(())
+}
+
+fn cmd_serve(args: &Args) -> Result<()> {
+    let manifest = default_manifest()?;
+    let default_bases = [
+        "ember_hrrformer_small_T256_B8",
+        "ember_hrrformer_small_T512_B8",
+        "ember_hrrformer_small_T1024_B8",
+    ];
+    let bases = args.list("bases", &default_bases);
+    let n_requests = args.usize("requests", 64);
+    let cfg = ServerConfig {
+        bases: bases.clone(),
+        policy: BatchPolicy {
+            max_batch: args.usize("max-batch", 8),
+            max_wait: std::time::Duration::from_millis(args.u64("max-wait-ms", 20)),
+        },
+        queue_depth: args.usize("queue-depth", 128),
+        seed: args.u64("seed", 0) as u32,
+        params: vec![None; bases.len()],
+    };
+    eprintln!("[serve] compiling {} buckets…", bases.len());
+    let server = coordinator::Server::start(&manifest, cfg)?;
+    let handle = server.handle();
+
+    // synthetic load: ember byte sequences with varied lengths
+    let ds = by_task("ember", 1024).unwrap();
+    let mut stream = Stream::new(ds.as_ref(), Split::Test, args.u64("seed", 0));
+    let mut correct = 0usize;
+    eprintln!("[serve] sending {n_requests} requests…");
+    let pending: Vec<_> = (0..n_requests)
+        .map(|i| {
+            let mut ex = stream.next_example();
+            // vary request lengths to exercise the router
+            let keep = 128 + (i * 97) % 900;
+            ex.ids.truncate(keep);
+            let rx = handle.submit(ex.ids).unwrap();
+            (ex.label, rx)
+        })
+        .collect();
+    for (label, rx) in pending {
+        let reply = rx.recv()??;
+        if reply.label as i32 == label {
+            correct += 1;
+        }
+    }
+    let stats = &handle.stats;
+    println!(
+        "served {n_requests} requests: {:.1} req/s, p50 {:.1} ms, p99 {:.1} ms, mean {:.1} ms, accuracy {:.2} (untrained params)",
+        stats.throughput.per_second(),
+        stats.latency.percentile_ms(50.0),
+        stats.latency.percentile_ms(99.0),
+        stats.latency.mean_ms(),
+        correct as f64 / n_requests as f64,
+    );
+    server.stop();
+    Ok(())
+}
+
+fn cmd_bench(args: &Args) -> Result<()> {
+    let which = args.positional.get(1).map(|s| s.as_str()).context("bench <ember|lra|speed|inference|weights>")?;
+    let rt = Runtime::cpu()?;
+    let manifest = default_manifest()?;
+    match which {
+        "ember" => {
+            let mut cfg = bench::ember::EmberBenchCfg::default();
+            cfg.steps = args.usize("steps", cfg.steps);
+            cfg.seed = args.u64("seed", cfg.seed);
+            cfg.timeout_s = args.f64("timeout-s", cfg.timeout_s);
+            if args.get("models").is_some() {
+                cfg.models = args.list("models", &[]);
+            }
+            bench::ember::run(&rt, &manifest, &cfg)?;
+        }
+        "lra" => {
+            let mut cfg = bench::lra::LraBenchCfg::default();
+            cfg.steps = args.usize("steps", cfg.steps);
+            cfg.seed = args.u64("seed", cfg.seed);
+            cfg.curves = args.bool("curves");
+            if args.get("models").is_some() {
+                cfg.models = args.list("models", &[]);
+            }
+            if args.get("tasks").is_some() {
+                cfg.tasks = args.list("tasks", &[]);
+            }
+            bench::lra::run(&rt, &manifest, &cfg)?;
+        }
+        "speed" => {
+            let mut cfg = bench::speed::SpeedBenchCfg::default();
+            cfg.steps = args.usize("steps", cfg.steps);
+            cfg.seed = args.u64("seed", cfg.seed);
+            bench::speed::run(&rt, &manifest, &cfg)?;
+        }
+        "inference" => {
+            let mut cfg = bench::inference::InferBenchCfg::default();
+            cfg.examples = args.usize("examples", cfg.examples);
+            cfg.seed = args.u64("seed", cfg.seed);
+            cfg.sweep_batch = args.bool("sweep-batch");
+            bench::inference::run(&rt, &manifest, &cfg)?;
+        }
+        "weights" => {
+            let mut cfg = bench::weights::WeightsBenchCfg::default();
+            cfg.steps = args.usize("steps", cfg.steps);
+            cfg.seed = args.u64("seed", cfg.seed);
+            cfg.single_layer = !args.bool("multi-layer");
+            bench::weights::run(&rt, &manifest, &cfg)?;
+        }
+        other => bail!("unknown bench '{other}'"),
+    }
+    Ok(())
+}
+
+fn cmd_data(args: &Args) -> Result<()> {
+    let task = args.get("task").context("--task required")?;
+    let t = args.usize("seq-len", 512);
+    let n = args.usize("n", 3);
+    let ds = by_task(task, t).with_context(|| format!("unknown task {task}"))?;
+    let mut stream = Stream::new(ds.as_ref(), Split::Train, args.u64("seed", 0));
+    for i in 0..n {
+        let ex = stream.next_example();
+        let preview: String = ex
+            .ids
+            .iter()
+            .take(64)
+            .map(|&id| {
+                let b = (id - 1).clamp(0, 255) as u8;
+                if (32..127).contains(&b) { b as char } else { '·' }
+            })
+            .collect();
+        println!("#{i} label={} len={} | {preview}", ex.label, ex.ids.len());
+    }
+    Ok(())
+}
+
+fn cmd_inspect() -> Result<()> {
+    let manifest = default_manifest()?;
+    println!("{} programs in {}", manifest.programs.len(), manifest.dir.display());
+    for (key, p) in &manifest.programs {
+        println!(
+            "  {key:<55} {:>12}  T={:<6} B={:<3} in={} out={}",
+            p.kind,
+            p.seq_len,
+            p.batch,
+            p.inputs.len(),
+            p.outputs.len()
+        );
+    }
+    Ok(())
+}

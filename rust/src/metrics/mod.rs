@@ -1,0 +1,191 @@
+//! Metrics: timers, counters, latency histograms, and CSV/Markdown
+//! emitters used by the trainer, the inference service and the bench
+//! harness.
+
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::time::Instant;
+
+/// Latency histogram with microsecond resolution (fixed log2 buckets).
+#[derive(Debug)]
+pub struct LatencyHist {
+    // bucket i covers [2^i, 2^{i+1}) microseconds, i in 0..48
+    buckets: [AtomicU64; 48],
+    count: AtomicU64,
+    sum_us: AtomicU64,
+    max_us: AtomicU64,
+}
+
+impl Default for LatencyHist {
+    fn default() -> Self {
+        LatencyHist {
+            buckets: std::array::from_fn(|_| AtomicU64::new(0)),
+            count: AtomicU64::new(0),
+            sum_us: AtomicU64::new(0),
+            max_us: AtomicU64::new(0),
+        }
+    }
+}
+
+impl LatencyHist {
+    pub fn new() -> LatencyHist {
+        LatencyHist::default()
+    }
+
+    pub fn record_us(&self, us: u64) {
+        let idx = (63 - us.max(1).leading_zeros() as usize).min(47);
+        self.buckets[idx].fetch_add(1, Ordering::Relaxed);
+        self.count.fetch_add(1, Ordering::Relaxed);
+        self.sum_us.fetch_add(us, Ordering::Relaxed);
+        self.max_us.fetch_max(us, Ordering::Relaxed);
+    }
+
+    pub fn record(&self, d: std::time::Duration) {
+        self.record_us(d.as_micros() as u64);
+    }
+
+    pub fn count(&self) -> u64 {
+        self.count.load(Ordering::Relaxed)
+    }
+
+    pub fn mean_ms(&self) -> f64 {
+        let n = self.count();
+        if n == 0 {
+            return 0.0;
+        }
+        self.sum_us.load(Ordering::Relaxed) as f64 / n as f64 / 1000.0
+    }
+
+    pub fn max_ms(&self) -> f64 {
+        self.max_us.load(Ordering::Relaxed) as f64 / 1000.0
+    }
+
+    /// Approximate percentile (upper bound of the containing bucket).
+    pub fn percentile_ms(&self, p: f64) -> f64 {
+        let total = self.count();
+        if total == 0 {
+            return 0.0;
+        }
+        let target = ((p / 100.0) * total as f64).ceil() as u64;
+        let mut seen = 0u64;
+        for (i, b) in self.buckets.iter().enumerate() {
+            seen += b.load(Ordering::Relaxed);
+            if seen >= target {
+                return (1u64 << (i + 1)) as f64 / 1000.0;
+            }
+        }
+        self.max_ms()
+    }
+}
+
+/// Throughput/timing tracker for a training or serving run.
+#[derive(Debug)]
+pub struct RunMeter {
+    start: Instant,
+    pub items: AtomicU64,
+}
+
+impl Default for RunMeter {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl RunMeter {
+    pub fn new() -> RunMeter {
+        RunMeter { start: Instant::now(), items: AtomicU64::new(0) }
+    }
+
+    pub fn add(&self, n: u64) {
+        self.items.fetch_add(n, Ordering::Relaxed);
+    }
+
+    pub fn elapsed_s(&self) -> f64 {
+        self.start.elapsed().as_secs_f64()
+    }
+
+    pub fn per_second(&self) -> f64 {
+        let s = self.elapsed_s();
+        if s == 0.0 {
+            0.0
+        } else {
+            self.items.load(Ordering::Relaxed) as f64 / s
+        }
+    }
+}
+
+/// Append-only CSV logger (creates parent dirs; writes header once).
+pub struct CsvLogger {
+    path: std::path::PathBuf,
+    wrote_header: bool,
+    headers: Vec<String>,
+}
+
+impl CsvLogger {
+    pub fn create(path: impl Into<std::path::PathBuf>, headers: &[&str]) -> std::io::Result<CsvLogger> {
+        let path = path.into();
+        if let Some(dir) = path.parent() {
+            std::fs::create_dir_all(dir)?;
+        }
+        Ok(CsvLogger {
+            path,
+            wrote_header: false,
+            headers: headers.iter().map(|s| s.to_string()).collect(),
+        })
+    }
+
+    pub fn log(&mut self, cells: &[String]) -> std::io::Result<()> {
+        use std::io::Write;
+        assert_eq!(cells.len(), self.headers.len(), "csv arity");
+        let mut f = std::fs::OpenOptions::new().create(true).append(true).open(&self.path)?;
+        if !self.wrote_header && f.metadata()?.len() == 0 {
+            writeln!(f, "{}", self.headers.join(","))?;
+        }
+        self.wrote_header = true;
+        writeln!(f, "{}", cells.join(","))
+    }
+
+    pub fn path(&self) -> &std::path::Path {
+        &self.path
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn hist_percentiles_ordered() {
+        let h = LatencyHist::new();
+        for us in [100u64, 200, 400, 800, 1600, 3200, 100_000] {
+            h.record_us(us);
+        }
+        assert_eq!(h.count(), 7);
+        let p50 = h.percentile_ms(50.0);
+        let p99 = h.percentile_ms(99.0);
+        assert!(p50 <= p99, "p50 {p50} > p99 {p99}");
+        assert!(h.mean_ms() > 0.0);
+        assert!(h.max_ms() >= 100.0);
+    }
+
+    #[test]
+    fn meter_counts() {
+        let m = RunMeter::new();
+        m.add(10);
+        m.add(5);
+        assert_eq!(m.items.load(Ordering::Relaxed), 15);
+        assert!(m.per_second() >= 0.0);
+    }
+
+    #[test]
+    fn csv_appends_with_single_header() {
+        let dir = std::env::temp_dir().join("hrrformer_csv_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        let p = dir.join("m.csv");
+        let _ = std::fs::remove_file(&p);
+        let mut log = CsvLogger::create(&p, &["a", "b"]).unwrap();
+        log.log(&["1".into(), "2".into()]).unwrap();
+        log.log(&["3".into(), "4".into()]).unwrap();
+        let content = std::fs::read_to_string(&p).unwrap();
+        assert_eq!(content, "a,b\n1,2\n3,4\n");
+    }
+}

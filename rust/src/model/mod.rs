@@ -1,0 +1,8 @@
+//! Model state management: parameter stores, checkpoints, and the
+//! train/predict/weights sessions that drive the AOT programs.
+
+pub mod params;
+pub mod session;
+
+pub use params::ParamStore;
+pub use session::{PredictSession, StepStats, TrainSession, WeightsSession};

@@ -1,0 +1,213 @@
+//! Parameter store: the flattened model/optimizer state the train_step
+//! program consumes and produces, plus a simple binary checkpoint format.
+//!
+//! Checkpoint layout (little-endian):
+//!   magic "HRRCKPT1" | u32 n | n × ( u32 name_len | name utf8 |
+//!   u8 dtype | u32 ndim | ndim × u64 dims | raw data )
+
+use std::io::{Read, Write};
+use std::path::Path;
+
+use anyhow::{bail, Context, Result};
+
+use crate::runtime::manifest::IoSpec;
+use crate::runtime::tensor::{DType, Tensor};
+
+const MAGIC: &[u8; 8] = b"HRRCKPT1";
+
+/// Named, ordered tensors (params or optimizer moments).
+#[derive(Debug, Clone, Default)]
+pub struct ParamStore {
+    pub names: Vec<String>,
+    pub tensors: Vec<Tensor>,
+}
+
+impl ParamStore {
+    pub fn from_tensors(specs: &[IoSpec], tensors: Vec<Tensor>) -> Result<ParamStore> {
+        anyhow::ensure!(specs.len() == tensors.len(), "spec/tensor arity mismatch");
+        for (s, t) in specs.iter().zip(&tensors) {
+            anyhow::ensure!(
+                s.shape == t.shape(),
+                "param {} shape mismatch: manifest {:?} vs tensor {:?}",
+                s.name,
+                s.shape,
+                t.shape()
+            );
+        }
+        Ok(ParamStore {
+            names: specs.iter().map(|s| s.name.clone()).collect(),
+            tensors,
+        })
+    }
+
+    /// Zero-initialized store matching the specs (Adam moments start at 0).
+    pub fn zeros_like(specs: &[IoSpec]) -> ParamStore {
+        ParamStore {
+            names: specs.iter().map(|s| s.name.clone()).collect(),
+            tensors: specs.iter().map(|s| Tensor::zeros(s.dtype, &s.shape)).collect(),
+        }
+    }
+
+    pub fn len(&self) -> usize {
+        self.tensors.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.tensors.is_empty()
+    }
+
+    pub fn total_scalars(&self) -> usize {
+        self.tensors.iter().map(|t| t.len()).sum()
+    }
+
+    pub fn total_bytes(&self) -> usize {
+        self.tensors.iter().map(|t| t.size_bytes()).sum()
+    }
+
+    pub fn get(&self, name: &str) -> Option<&Tensor> {
+        self.names.iter().position(|n| n == name).map(|i| &self.tensors[i])
+    }
+
+    pub fn save(&self, path: &Path) -> Result<()> {
+        let mut f = std::io::BufWriter::new(
+            std::fs::File::create(path).with_context(|| format!("create {}", path.display()))?,
+        );
+        f.write_all(MAGIC)?;
+        f.write_all(&(self.len() as u32).to_le_bytes())?;
+        for (name, t) in self.names.iter().zip(&self.tensors) {
+            f.write_all(&(name.len() as u32).to_le_bytes())?;
+            f.write_all(name.as_bytes())?;
+            let dt = match t.dtype() {
+                DType::F32 => 0u8,
+                DType::I32 => 1,
+                DType::U32 => 2,
+            };
+            f.write_all(&[dt])?;
+            f.write_all(&(t.shape().len() as u32).to_le_bytes())?;
+            for &d in t.shape() {
+                f.write_all(&(d as u64).to_le_bytes())?;
+            }
+            match t {
+                Tensor::F32 { data, .. } => {
+                    for v in data {
+                        f.write_all(&v.to_le_bytes())?;
+                    }
+                }
+                Tensor::I32 { data, .. } => {
+                    for v in data {
+                        f.write_all(&v.to_le_bytes())?;
+                    }
+                }
+                Tensor::U32 { data, .. } => {
+                    for v in data {
+                        f.write_all(&v.to_le_bytes())?;
+                    }
+                }
+            }
+        }
+        Ok(())
+    }
+
+    pub fn load(path: &Path) -> Result<ParamStore> {
+        let mut f = std::io::BufReader::new(
+            std::fs::File::open(path).with_context(|| format!("open {}", path.display()))?,
+        );
+        let mut magic = [0u8; 8];
+        f.read_exact(&mut magic)?;
+        if &magic != MAGIC {
+            bail!("{} is not a HRRCKPT1 checkpoint", path.display());
+        }
+        let n = read_u32(&mut f)? as usize;
+        let mut store = ParamStore::default();
+        for _ in 0..n {
+            let name_len = read_u32(&mut f)? as usize;
+            let mut name = vec![0u8; name_len];
+            f.read_exact(&mut name)?;
+            let name = String::from_utf8(name).context("checkpoint name utf8")?;
+            let mut dt = [0u8; 1];
+            f.read_exact(&mut dt)?;
+            let ndim = read_u32(&mut f)? as usize;
+            let mut shape = Vec::with_capacity(ndim);
+            for _ in 0..ndim {
+                let mut b = [0u8; 8];
+                f.read_exact(&mut b)?;
+                shape.push(u64::from_le_bytes(b) as usize);
+            }
+            let count: usize = shape.iter().product();
+            let mut raw = vec![0u8; count * 4];
+            f.read_exact(&mut raw)?;
+            let tensor = match dt[0] {
+                0 => Tensor::f32(
+                    shape,
+                    raw.chunks_exact(4).map(|c| f32::from_le_bytes(c.try_into().unwrap())).collect(),
+                ),
+                1 => Tensor::i32(
+                    shape,
+                    raw.chunks_exact(4).map(|c| i32::from_le_bytes(c.try_into().unwrap())).collect(),
+                ),
+                2 => Tensor::u32(
+                    shape,
+                    raw.chunks_exact(4).map(|c| u32::from_le_bytes(c.try_into().unwrap())).collect(),
+                ),
+                other => bail!("bad dtype tag {other}"),
+            };
+            store.names.push(name);
+            store.tensors.push(tensor);
+        }
+        Ok(store)
+    }
+}
+
+fn read_u32(f: &mut impl Read) -> Result<u32> {
+    let mut b = [0u8; 4];
+    f.read_exact(&mut b)?;
+    Ok(u32::from_le_bytes(b))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn specs() -> Vec<IoSpec> {
+        vec![
+            IoSpec { name: "a.kernel".into(), shape: vec![2, 3], dtype: DType::F32 },
+            IoSpec { name: "b.bias".into(), shape: vec![4], dtype: DType::F32 },
+        ]
+    }
+
+    #[test]
+    fn zeros_like_matches_specs() {
+        let s = ParamStore::zeros_like(&specs());
+        assert_eq!(s.len(), 2);
+        assert_eq!(s.total_scalars(), 10);
+        assert_eq!(s.get("b.bias").unwrap().shape(), &[4]);
+    }
+
+    #[test]
+    fn checkpoint_roundtrip() {
+        let mut s = ParamStore::zeros_like(&specs());
+        s.tensors[0] = Tensor::f32(vec![2, 3], vec![1.0, -2.0, 3.5, 0.0, 5.0, -6.25]);
+        let dir = std::env::temp_dir().join("hrrformer_ckpt_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        let p = dir.join("test.ckpt");
+        s.save(&p).unwrap();
+        let loaded = ParamStore::load(&p).unwrap();
+        assert_eq!(loaded.names, s.names);
+        assert_eq!(loaded.tensors, s.tensors);
+    }
+
+    #[test]
+    fn rejects_shape_mismatch() {
+        let bad = vec![Tensor::f32(vec![3, 2], vec![0.0; 6]), Tensor::f32(vec![4], vec![0.0; 4])];
+        assert!(ParamStore::from_tensors(&specs(), bad).is_err());
+    }
+
+    #[test]
+    fn rejects_bad_magic() {
+        let dir = std::env::temp_dir().join("hrrformer_ckpt_test2");
+        std::fs::create_dir_all(&dir).unwrap();
+        let p = dir.join("garbage.ckpt");
+        std::fs::write(&p, b"NOTACKPTxxxx").unwrap();
+        assert!(ParamStore::load(&p).is_err());
+    }
+}

@@ -1,0 +1,198 @@
+//! Train/eval/predict sessions: stateful wrappers that own the parameter
+//! and optimizer tensors and drive the AOT-compiled programs.
+
+use std::path::Path;
+
+use anyhow::{Context, Result};
+
+use crate::model::params::ParamStore;
+use crate::runtime::{Manifest, Program, Runtime, Tensor};
+
+/// Result of one optimizer step.
+#[derive(Debug, Clone, Copy)]
+pub struct StepStats {
+    pub step: u32,
+    pub loss: f32,
+    pub acc: f32,
+}
+
+/// Owns params + Adam moments and the compiled train/eval programs for
+/// one (task, model, T, B) config.
+pub struct TrainSession {
+    pub params: ParamStore,
+    m: ParamStore,
+    v: ParamStore,
+    pub step: u32,
+    train: Program,
+    eval: Option<Program>,
+    n_params: usize,
+}
+
+impl TrainSession {
+    /// Initialize from the `<base>_init` + `<base>_train_step` (+ optional
+    /// `<base>_eval_step`) programs; `base` is e.g.
+    /// `listops_hrrformer_small_T512_B8`.
+    pub fn create(rt: &Runtime, manifest: &Manifest, base: &str, seed: u32) -> Result<TrainSession> {
+        let init_spec = manifest.get(&format!("{base}_init"))?;
+        let train_spec = manifest.get(&format!("{base}_train_step"))?;
+        let eval_prog = manifest
+            .get(&format!("{base}_eval_step"))
+            .ok()
+            .map(|s| rt.load(s))
+            .transpose()?;
+
+        let init = rt.load(init_spec)?;
+        let outs = init.run(&[Tensor::scalar_u32(seed)]).context("run init")?;
+        let params = ParamStore::from_tensors(&init_spec.params, outs)?;
+        let m = ParamStore::zeros_like(&init_spec.params);
+        let v = ParamStore::zeros_like(&init_spec.params);
+        let train = rt.load(train_spec)?;
+        let n_params = init_spec.params.len();
+        Ok(TrainSession { params, m, v, step: 0, train, eval: eval_prog, n_params })
+    }
+
+    /// Restore parameters from a checkpoint (moments reset to zero).
+    pub fn restore(&mut self, path: &Path) -> Result<()> {
+        let loaded = ParamStore::load(path)?;
+        anyhow::ensure!(
+            loaded.names == self.params.names,
+            "checkpoint param names do not match this model"
+        );
+        self.params = loaded;
+        Ok(())
+    }
+
+    pub fn save(&self, path: &Path) -> Result<()> {
+        self.params.save(path)
+    }
+
+    pub fn spec(&self) -> &crate::runtime::ProgramSpec {
+        &self.train.spec
+    }
+
+    pub fn param_scalars(&self) -> usize {
+        self.params.total_scalars()
+    }
+
+    /// One optimizer step on a batch (ids: (B,T) i32, labels: (B,) i32).
+    pub fn train_step(&mut self, ids: &Tensor, labels: &Tensor) -> Result<StepStats> {
+        let np = self.n_params;
+        // borrow-based input list (§Perf/L3 iteration 1: no param memcpy)
+        let step_t = Tensor::scalar_i32(self.step as i32);
+        let mut inputs: Vec<&Tensor> = Vec::with_capacity(3 * np + 3);
+        inputs.extend(self.params.tensors.iter());
+        inputs.extend(self.m.tensors.iter());
+        inputs.extend(self.v.tensors.iter());
+        inputs.push(&step_t);
+        inputs.push(ids);
+        inputs.push(labels);
+        let mut outs = self.train.run_refs(&inputs).context("train_step")?;
+        anyhow::ensure!(outs.len() == 3 * np + 2, "train_step output arity");
+        let acc = outs.pop().unwrap().scalar_f32_value()?;
+        let loss = outs.pop().unwrap().scalar_f32_value()?;
+        let vs: Vec<Tensor> = outs.drain(2 * np..).collect();
+        let ms: Vec<Tensor> = outs.drain(np..).collect();
+        self.params.tensors = outs;
+        self.m.tensors = ms;
+        self.v.tensors = vs;
+        self.step += 1;
+        Ok(StepStats { step: self.step, loss, acc })
+    }
+
+    /// Whether an eval_step program was exported for this config
+    /// (timing-only artifacts omit it).
+    pub fn has_eval(&self) -> bool {
+        self.eval.is_some()
+    }
+
+    /// Loss/accuracy on a batch without updating parameters.
+    pub fn eval_step(&self, ids: &Tensor, labels: &Tensor) -> Result<StepStats> {
+        let eval = self.eval.as_ref().context("no eval_step program exported for this model")?;
+        let mut inputs: Vec<&Tensor> = Vec::with_capacity(self.n_params + 2);
+        inputs.extend(self.params.tensors.iter());
+        inputs.push(ids);
+        inputs.push(labels);
+        let outs = eval.run_refs(&inputs)?;
+        Ok(StepStats {
+            step: self.step,
+            loss: outs[0].scalar_f32_value()?,
+            acc: outs[1].scalar_f32_value()?,
+        })
+    }
+}
+
+/// Inference-only session around a `<base>_predict` program.
+pub struct PredictSession {
+    pub params: ParamStore,
+    predict: Program,
+}
+
+impl PredictSession {
+    pub fn create(rt: &Runtime, manifest: &Manifest, base: &str, seed: u32) -> Result<PredictSession> {
+        let init_spec = manifest.get(&format!("{base}_init"))?;
+        let init = rt.load(init_spec)?;
+        let outs = init.run(&[Tensor::scalar_u32(seed)])?;
+        let params = ParamStore::from_tensors(&init_spec.params, outs)?;
+        let predict = rt.load(manifest.get(&format!("{base}_predict"))?)?;
+        Ok(PredictSession { params, predict })
+    }
+
+    /// Reuse trained parameters (e.g. from a TrainSession checkpoint).
+    pub fn with_params(
+        rt: &Runtime,
+        manifest: &Manifest,
+        base: &str,
+        params: ParamStore,
+    ) -> Result<PredictSession> {
+        let predict = rt.load(manifest.get(&format!("{base}_predict"))?)?;
+        Ok(PredictSession { params, predict })
+    }
+
+    pub fn spec(&self) -> &crate::runtime::ProgramSpec {
+        &self.predict.spec
+    }
+
+    pub fn batch(&self) -> usize {
+        self.predict.spec.batch
+    }
+
+    pub fn seq_len(&self) -> usize {
+        self.predict.spec.seq_len
+    }
+
+    /// Logits for a batch of token ids (B, T).
+    pub fn predict(&self, ids: &Tensor) -> Result<Tensor> {
+        let mut inputs: Vec<&Tensor> = Vec::with_capacity(self.params.len() + 1);
+        inputs.extend(self.params.tensors.iter());
+        inputs.push(ids);
+        let outs = self.predict.run_refs(&inputs)?;
+        Ok(outs.into_iter().next().context("predict output")?)
+    }
+}
+
+/// Session around the `attn_weights` program (Fig 5/9 dumps).
+pub struct WeightsSession {
+    pub params: ParamStore,
+    program: Program,
+}
+
+impl WeightsSession {
+    pub fn with_params(
+        rt: &Runtime,
+        manifest: &Manifest,
+        base: &str,
+        params: ParamStore,
+    ) -> Result<WeightsSession> {
+        let program = rt.load(manifest.get(&format!("{base}_attn_weights"))?)?;
+        Ok(WeightsSession { params, program })
+    }
+
+    /// Returns w of shape (L, B, h, T). (The program also emits logits —
+    /// second output — to keep all params live; see aot.py.)
+    pub fn weights(&self, ids: &Tensor) -> Result<Tensor> {
+        let mut inputs: Vec<&Tensor> = Vec::with_capacity(self.params.len() + 1);
+        inputs.extend(self.params.tensors.iter());
+        inputs.push(ids);
+        Ok(self.program.run_refs(&inputs)?.into_iter().next().context("weights output")?)
+    }
+}

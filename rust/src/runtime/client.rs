@@ -1,0 +1,117 @@
+//! PJRT CPU client wrapper: load HLO text → compile → execute.
+//!
+//! Follows /opt/xla-example/load_hlo: HLO *text* is the interchange
+//! format (xla_extension 0.5.1 rejects jax≥0.5's 64-bit-id protos; the
+//! text parser reassigns ids). One `Runtime` per process; compiled
+//! executables are cached per program key.
+
+use std::collections::HashMap;
+use std::sync::{Arc, Mutex};
+use std::time::Instant;
+
+use anyhow::{Context, Result};
+
+use crate::runtime::manifest::ProgramSpec;
+use crate::runtime::tensor::Tensor;
+
+/// A compiled program plus its spec; cheap to clone (Arc inside).
+#[derive(Clone)]
+pub struct Program {
+    pub spec: Arc<ProgramSpec>,
+    exe: Arc<xla::PjRtLoadedExecutable>,
+}
+
+impl Program {
+    /// Execute with host tensors; returns the flattened output tuple.
+    pub fn run(&self, inputs: &[Tensor]) -> Result<Vec<Tensor>> {
+        let refs: Vec<&Tensor> = inputs.iter().collect();
+        self.run_refs(&refs)
+    }
+
+    /// Execute with borrowed tensors — the hot-path entry (§Perf/L3
+    /// iteration 1: sessions pass `&Tensor` so the ~MB of parameters is
+    /// not memcpy'd into a scratch Vec every step before literal
+    /// conversion).
+    pub fn run_refs(&self, inputs: &[&Tensor]) -> Result<Vec<Tensor>> {
+        anyhow::ensure!(
+            inputs.len() == self.spec.inputs.len(),
+            "program {}: expected {} inputs, got {}",
+            self.spec.key,
+            self.spec.inputs.len(),
+            inputs.len()
+        );
+        let literals: Vec<xla::Literal> = inputs
+            .iter()
+            .enumerate()
+            .map(|(i, t)| {
+                t.to_literal().with_context(|| {
+                    format!("input {} ({})", i, self.spec.inputs[i].name)
+                })
+            })
+            .collect::<Result<_>>()?;
+        let out = self
+            .exe
+            .execute::<xla::Literal>(&literals)
+            .with_context(|| format!("execute {}", self.spec.key))?;
+        // jax programs are lowered with return_tuple=True → single tuple.
+        let lit = out[0][0]
+            .to_literal_sync()
+            .with_context(|| format!("fetch result of {}", self.spec.key))?;
+        let parts = lit.to_tuple().context("decompose output tuple")?;
+        parts.iter().map(Tensor::from_literal).collect()
+    }
+
+    pub fn key(&self) -> &str {
+        &self.spec.key
+    }
+}
+
+/// The process-wide PJRT runtime with an executable cache.
+pub struct Runtime {
+    client: xla::PjRtClient,
+    cache: Mutex<HashMap<String, Program>>,
+    pub verbose: bool,
+}
+
+impl Runtime {
+    pub fn cpu() -> Result<Runtime> {
+        let client = xla::PjRtClient::cpu().context("create PJRT CPU client")?;
+        Ok(Runtime { client, cache: Mutex::new(HashMap::new()), verbose: false })
+    }
+
+    pub fn platform(&self) -> String {
+        self.client.platform_name()
+    }
+
+    /// Load + compile (or fetch from cache) the program described by `spec`.
+    pub fn load(&self, spec: &ProgramSpec) -> Result<Program> {
+        if let Some(p) = self.cache.lock().unwrap().get(&spec.key) {
+            return Ok(p.clone());
+        }
+        let t0 = Instant::now();
+        let proto = xla::HloModuleProto::from_text_file(
+            spec.file.to_str().context("non-utf8 artifact path")?,
+        )
+        .with_context(|| format!("parse HLO text {}", spec.file.display()))?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = self
+            .client
+            .compile(&comp)
+            .with_context(|| format!("XLA compile {}", spec.key))?;
+        let program = Program { spec: Arc::new(spec.clone()), exe: Arc::new(exe) };
+        if self.verbose {
+            eprintln!("[runtime] compiled {} in {:.2}s", spec.key, t0.elapsed().as_secs_f64());
+        }
+        self.cache.lock().unwrap().insert(spec.key.clone(), program.clone());
+        Ok(program)
+    }
+
+    /// Drop all cached executables (frees compiled program memory).
+    pub fn clear_cache(&self) {
+        self.cache.lock().unwrap().clear();
+    }
+
+    pub fn cached_programs(&self) -> usize {
+        self.cache.lock().unwrap().len()
+    }
+}

@@ -1,0 +1,183 @@
+//! `artifacts/manifest.json` loader — the contract between the AOT
+//! exporter (python/compile/aot.py) and the rust runtime.
+
+use std::collections::BTreeMap;
+use std::path::{Path, PathBuf};
+
+use anyhow::{bail, Context, Result};
+
+use crate::runtime::tensor::DType;
+use crate::util::json::Json;
+
+#[derive(Debug, Clone)]
+pub struct IoSpec {
+    pub name: String,
+    pub shape: Vec<usize>,
+    pub dtype: DType,
+}
+
+impl IoSpec {
+    pub fn elements(&self) -> usize {
+        self.shape.iter().product()
+    }
+
+    fn from_json(j: &Json) -> Result<IoSpec> {
+        Ok(IoSpec {
+            name: j.get("name").and_then(Json::as_str).context("iospec.name")?.to_string(),
+            shape: j
+                .get("shape")
+                .and_then(Json::as_arr)
+                .context("iospec.shape")?
+                .iter()
+                .map(|v| v.as_usize().context("shape dim"))
+                .collect::<Result<_>>()?,
+            dtype: DType::from_manifest(
+                j.get("dtype").and_then(Json::as_str).context("iospec.dtype")?,
+            )?,
+        })
+    }
+}
+
+/// One exported HLO program.
+#[derive(Debug, Clone)]
+pub struct ProgramSpec {
+    pub key: String,
+    pub file: PathBuf,
+    pub kind: String,
+    pub task: String,
+    pub model: String,
+    pub seq_len: usize,
+    pub batch: usize,
+    pub classes: usize,
+    pub vocab: usize,
+    pub layers: usize,
+    pub heads: usize,
+    pub embed: usize,
+    pub inputs: Vec<IoSpec>,
+    pub outputs: Vec<IoSpec>,
+    /// Flattened parameter specs (name/shape/dtype) in program order.
+    pub params: Vec<IoSpec>,
+}
+
+impl ProgramSpec {
+    pub fn param_count(&self) -> usize {
+        self.params.len()
+    }
+
+    /// Total learnable parameter scalars.
+    pub fn param_scalars(&self) -> usize {
+        self.params.iter().map(|p| p.elements()).sum()
+    }
+}
+
+#[derive(Debug)]
+pub struct Manifest {
+    pub dir: PathBuf,
+    pub programs: BTreeMap<String, ProgramSpec>,
+}
+
+impl Manifest {
+    pub fn load(dir: &Path) -> Result<Manifest> {
+        let path = dir.join("manifest.json");
+        let text = std::fs::read_to_string(&path)
+            .with_context(|| format!("reading {} — run `make artifacts` first", path.display()))?;
+        let j = Json::parse(&text).context("parsing manifest.json")?;
+        let progs = j.get("programs").and_then(Json::as_obj).context("manifest.programs")?;
+        let mut programs = BTreeMap::new();
+        for (key, p) in progs {
+            let get_usize =
+                |k: &str| p.get(k).and_then(Json::as_usize).unwrap_or(0);
+            let get_str = |k: &str| {
+                p.get(k).and_then(Json::as_str).unwrap_or("").to_string()
+            };
+            let spec = ProgramSpec {
+                key: key.clone(),
+                file: dir.join(p.get("file").and_then(Json::as_str).context("program.file")?),
+                kind: get_str("kind"),
+                task: get_str("task"),
+                model: get_str("model"),
+                seq_len: get_usize("seq_len"),
+                batch: get_usize("batch"),
+                classes: get_usize("classes"),
+                vocab: get_usize("vocab"),
+                layers: get_usize("layers"),
+                heads: get_usize("heads"),
+                embed: get_usize("embed"),
+                inputs: p
+                    .get("inputs")
+                    .and_then(Json::as_arr)
+                    .context("program.inputs")?
+                    .iter()
+                    .map(IoSpec::from_json)
+                    .collect::<Result<_>>()?,
+                outputs: p
+                    .get("outputs")
+                    .and_then(Json::as_arr)
+                    .context("program.outputs")?
+                    .iter()
+                    .map(IoSpec::from_json)
+                    .collect::<Result<_>>()?,
+                params: p
+                    .get("params")
+                    .and_then(Json::as_arr)
+                    .unwrap_or(&[])
+                    .iter()
+                    .map(IoSpec::from_json)
+                    .collect::<Result<_>>()?,
+            };
+            programs.insert(key.clone(), spec);
+        }
+        Ok(Manifest { dir: dir.to_path_buf(), programs })
+    }
+
+    pub fn get(&self, key: &str) -> Result<&ProgramSpec> {
+        match self.programs.get(key) {
+            Some(p) => Ok(p),
+            None => {
+                let mut close: Vec<&str> = self
+                    .programs
+                    .keys()
+                    .filter(|k| k.contains(key.split('_').next().unwrap_or("")))
+                    .map(|s| s.as_str())
+                    .take(8)
+                    .collect();
+                close.sort();
+                bail!(
+                    "program '{key}' not in manifest ({} programs). similar: {:?}. \
+                     Export it with `python -m compile.aot` (see DESIGN.md §4)",
+                    self.programs.len(),
+                    close
+                )
+            }
+        }
+    }
+
+    /// Canonical program key naming scheme shared with aot.py.
+    pub fn model_key(task: &str, model: &str, preset: &str, t: usize, b: usize, kind: &str) -> String {
+        format!("{task}_{model}_{preset}_T{t}_B{b}_{kind}")
+    }
+
+    /// All programs matching a predicate (e.g. every ember train_step).
+    pub fn select(&self, pred: impl Fn(&ProgramSpec) -> bool) -> Vec<&ProgramSpec> {
+        self.programs.values().filter(|p| pred(p)).collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn model_key_format() {
+        assert_eq!(
+            Manifest::model_key("text", "hrrformer", "small", 1024, 4, "predict"),
+            "text_hrrformer_small_T1024_B4_predict"
+        );
+    }
+
+    #[test]
+    fn load_missing_dir_errors_helpfully() {
+        let err = Manifest::load(Path::new("/nonexistent/dir")).unwrap_err();
+        assert!(err.to_string().contains("make artifacts"));
+    }
+}

@@ -1,0 +1,24 @@
+//! Runtime layer: the bridge from AOT artifacts (`artifacts/*.hlo.txt` +
+//! `manifest.json`) to executable XLA programs on the PJRT CPU client.
+//!
+//! Python is build-time only; everything under this module (and above it)
+//! is pure rust on the request path.
+
+pub mod client;
+pub mod manifest;
+pub mod tensor;
+
+pub use client::{Program, Runtime};
+pub use manifest::{IoSpec, Manifest, ProgramSpec};
+pub use tensor::{DType, Tensor};
+
+use std::path::Path;
+
+use anyhow::Result;
+
+/// Convenience: load the manifest from the conventional location,
+/// honouring the `HRRFORMER_ARTIFACTS` env override.
+pub fn default_manifest() -> Result<Manifest> {
+    let dir = std::env::var("HRRFORMER_ARTIFACTS").unwrap_or_else(|_| "artifacts".to_string());
+    Manifest::load(Path::new(&dir))
+}

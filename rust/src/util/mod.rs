@@ -1,0 +1,65 @@
+//! Self-contained utilities: the offline build has no serde/clap/rand/
+//! criterion/proptest, so this module supplies the minimal equivalents
+//! the rest of the crate needs (see DESIGN.md §L3).
+
+pub mod cli;
+pub mod json;
+pub mod pgm;
+pub mod prop;
+pub mod rng;
+pub mod table;
+
+use std::time::Instant;
+
+/// Measure wall time of `f`, returning (result, seconds).
+pub fn timed<T>(f: impl FnOnce() -> T) -> (T, f64) {
+    let t0 = Instant::now();
+    let r = f();
+    (r, t0.elapsed().as_secs_f64())
+}
+
+/// Peak RSS of the current process in MiB (linux /proc; 0.0 if unreadable).
+pub fn peak_rss_mib() -> f64 {
+    if let Ok(s) = std::fs::read_to_string("/proc/self/status") {
+        for line in s.lines() {
+            if let Some(rest) = line.strip_prefix("VmHWM:") {
+                let kb: f64 = rest
+                    .trim()
+                    .trim_end_matches("kB")
+                    .trim()
+                    .parse()
+                    .unwrap_or(0.0);
+                return kb / 1024.0;
+            }
+        }
+    }
+    0.0
+}
+
+/// Current RSS in MiB.
+pub fn rss_mib() -> f64 {
+    if let Ok(s) = std::fs::read_to_string("/proc/self/statm") {
+        if let Some(pages) = s.split_whitespace().nth(1).and_then(|v| v.parse::<f64>().ok()) {
+            return pages * 4096.0 / (1024.0 * 1024.0);
+        }
+    }
+    0.0
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn timed_returns_value() {
+        let (v, dt) = timed(|| 41 + 1);
+        assert_eq!(v, 42);
+        assert!(dt >= 0.0);
+    }
+
+    #[test]
+    fn rss_readable_on_linux() {
+        assert!(peak_rss_mib() > 0.0);
+        assert!(rss_mib() > 0.0);
+    }
+}

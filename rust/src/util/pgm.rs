@@ -1,0 +1,66 @@
+//! PGM (portable graymap) writer — used by the Fig 5/9 attention-map dumps
+//! and the pathfinder dataset debug output. No image crates offline.
+
+use std::io::Write;
+use std::path::Path;
+
+/// Write a grayscale image (row-major, values normalized to [0,1]).
+pub fn write_pgm(path: &Path, w: usize, h: usize, data: &[f32]) -> std::io::Result<()> {
+    assert_eq!(data.len(), w * h, "pgm size mismatch");
+    let lo = data.iter().cloned().fold(f32::INFINITY, f32::min);
+    let hi = data.iter().cloned().fold(f32::NEG_INFINITY, f32::max);
+    let scale = if hi > lo { 255.0 / (hi - lo) } else { 0.0 };
+    let mut f = std::io::BufWriter::new(std::fs::File::create(path)?);
+    write!(f, "P5\n{} {}\n255\n", w, h)?;
+    let bytes: Vec<u8> = data.iter().map(|&v| ((v - lo) * scale) as u8).collect();
+    f.write_all(&bytes)?;
+    Ok(())
+}
+
+/// Read back a P5 PGM (for tests).
+pub fn read_pgm(path: &Path) -> std::io::Result<(usize, usize, Vec<u8>)> {
+    let raw = std::fs::read(path)?;
+    let header_end = raw
+        .windows(1)
+        .enumerate()
+        .filter(|(_, w)| w[0] == b'\n')
+        .map(|(i, _)| i)
+        .nth(2)
+        .ok_or_else(|| std::io::Error::new(std::io::ErrorKind::InvalidData, "bad pgm"))?;
+    let header = std::str::from_utf8(&raw[..header_end])
+        .map_err(|_| std::io::Error::new(std::io::ErrorKind::InvalidData, "bad pgm header"))?;
+    let mut lines = header.lines();
+    let magic = lines.next().unwrap_or("");
+    if magic != "P5" {
+        return Err(std::io::Error::new(std::io::ErrorKind::InvalidData, "not P5"));
+    }
+    let dims: Vec<usize> = lines
+        .next()
+        .unwrap_or("")
+        .split_whitespace()
+        .filter_map(|t| t.parse().ok())
+        .collect();
+    if dims.len() != 2 {
+        return Err(std::io::Error::new(std::io::ErrorKind::InvalidData, "bad dims"));
+    }
+    Ok((dims[0], dims[1], raw[header_end + 1..].to_vec()))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn roundtrip() {
+        let dir = std::env::temp_dir().join("hrrformer_pgm_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        let p = dir.join("t.pgm");
+        let data: Vec<f32> = (0..16).map(|i| i as f32 / 15.0).collect();
+        write_pgm(&p, 4, 4, &data).unwrap();
+        let (w, h, bytes) = read_pgm(&p).unwrap();
+        assert_eq!((w, h), (4, 4));
+        assert_eq!(bytes.len(), 16);
+        assert_eq!(bytes[0], 0);
+        assert_eq!(bytes[15], 255);
+    }
+}

@@ -1,0 +1,53 @@
+//! Minimal property-testing harness (proptest is unavailable offline).
+//!
+//! `forall(cases, seed, |rng| ...)` runs the closure on `cases`
+//! independently-seeded RNG streams; on failure it reports the failing
+//! stream seed so the case can be replayed deterministically:
+//!
+//! ```ignore
+//! forall(200, 0xC0FFEE, |rng| {
+//!     let n = rng.usize_below(100) + 1;
+//!     /* generate input of size n, check invariant, panic on violation */
+//! });
+//! ```
+
+use super::rng::Rng;
+
+/// Run `f` for `cases` pseudo-random cases. Panics (with the replay seed)
+/// on the first failing case.
+pub fn forall<F: Fn(&mut Rng)>(cases: u64, seed: u64, f: F) {
+    for i in 0..cases {
+        let case_seed = seed ^ (i.wrapping_mul(0x9E3779B97F4A7C15));
+        let mut rng = Rng::new(case_seed);
+        let result = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| f(&mut rng)));
+        if let Err(e) = result {
+            let msg = e
+                .downcast_ref::<String>()
+                .cloned()
+                .or_else(|| e.downcast_ref::<&str>().map(|s| s.to_string()))
+                .unwrap_or_else(|| "<non-string panic>".to_string());
+            panic!("property failed on case {i} (replay seed {case_seed:#x}): {msg}");
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn passes_trivially() {
+        forall(50, 1, |rng| {
+            let a = rng.below(100);
+            assert!(a < 100);
+        });
+    }
+
+    #[test]
+    #[should_panic(expected = "property failed")]
+    fn reports_failure_with_seed() {
+        forall(50, 2, |rng| {
+            assert!(rng.below(10) < 5, "too big");
+        });
+    }
+}

@@ -1,0 +1,154 @@
+//! Integration: manifest → compile → execute real AOT artifacts.
+//! Requires `make artifacts` (core set) to have been run.
+
+use hrrformer::model::{ParamStore, PredictSession, TrainSession};
+use hrrformer::runtime::{default_manifest, Manifest, Runtime, Tensor};
+use hrrformer::util::rng::Rng;
+
+fn runtime() -> Runtime {
+    Runtime::cpu().expect("PJRT CPU client")
+}
+
+fn manifest() -> Manifest {
+    // tests run from the crate root, artifacts/ lives there
+    default_manifest().expect("manifest (run `make artifacts`)")
+}
+
+fn random_batch(rng: &mut Rng, b: usize, t: usize, vocab: usize) -> Tensor {
+    let data: Vec<i32> = (0..b * t).map(|_| rng.range(1, vocab as i64) as i32).collect();
+    Tensor::i32(vec![b, t], data)
+}
+
+#[test]
+fn manifest_loads_core_set() {
+    let m = manifest();
+    assert!(m.programs.len() >= 10, "expected core program set, got {}", m.programs.len());
+    let spec = m.get("listops_hrrformer_small_T512_B8_train_step").unwrap();
+    assert_eq!(spec.seq_len, 512);
+    assert_eq!(spec.batch, 8);
+    assert!(spec.param_count() > 10);
+    // inputs = 3*params + step + ids + labels
+    assert_eq!(spec.inputs.len(), 3 * spec.param_count() + 3);
+}
+
+#[test]
+fn init_is_deterministic_in_seed() {
+    let rt = runtime();
+    let m = manifest();
+    let spec = m.get("ember_hrrformer_small_T256_B8_init").unwrap();
+    let init = rt.load(spec).unwrap();
+    let a = init.run(&[Tensor::scalar_u32(7)]).unwrap();
+    let b = init.run(&[Tensor::scalar_u32(7)]).unwrap();
+    let c = init.run(&[Tensor::scalar_u32(8)]).unwrap();
+    assert_eq!(a.len(), spec.params.len());
+    assert_eq!(a, b, "same seed must give identical params");
+    assert_ne!(a, c, "different seed must give different params");
+    // embedding table shape matches manifest
+    let emb = ParamStore::from_tensors(&spec.params, a).unwrap();
+    let table = emb.get("embed.table").expect("embed.table param");
+    assert_eq!(table.shape(), &[257, 64]);
+}
+
+#[test]
+fn predict_shapes_and_finiteness() {
+    let rt = runtime();
+    let m = manifest();
+    let sess = PredictSession::create(&rt, &m, "ember_hrrformer_small_T256_B8", 3).unwrap();
+    let mut rng = Rng::new(0);
+    let ids = random_batch(&mut rng, 8, 256, 257);
+    let logits = sess.predict(&ids).unwrap();
+    assert_eq!(logits.shape(), &[8, 2]);
+    assert!(logits.as_f32().unwrap().iter().all(|v| v.is_finite()));
+}
+
+#[test]
+fn train_step_updates_params_and_reduces_loss_on_fixed_batch() {
+    let rt = runtime();
+    let m = manifest();
+    let mut sess = TrainSession::create(&rt, &m, "ember_hrrformer_small_T1024_B8", 1).unwrap();
+    let mut rng = Rng::new(42);
+    let ids = random_batch(&mut rng, 8, 1024, 257);
+    let labels = Tensor::i32(vec![8], (0..8).map(|i| (i % 2) as i32).collect());
+    let before = sess.params.tensors[0].clone();
+    let s0 = sess.train_step(&ids, &labels).unwrap();
+    assert!(s0.loss.is_finite());
+    assert_ne!(&before, &sess.params.tensors[0], "params must change");
+    // overfit a single fixed batch: loss after N steps must drop
+    let mut last = s0.loss;
+    for _ in 0..8 {
+        last = sess.train_step(&ids, &labels).unwrap().loss;
+    }
+    assert!(
+        last < s0.loss,
+        "loss should fall when overfitting one batch: {} -> {}",
+        s0.loss,
+        last
+    );
+}
+
+#[test]
+fn eval_step_is_pure() {
+    let rt = runtime();
+    let m = manifest();
+    let sess = TrainSession::create(&rt, &m, "ember_hrrformer_small_T1024_B8", 2).unwrap();
+    let mut rng = Rng::new(9);
+    let ids = random_batch(&mut rng, 8, 1024, 257);
+    let labels = Tensor::i32(vec![8], vec![0, 1, 0, 1, 0, 1, 0, 1]);
+    let a = sess.eval_step(&ids, &labels).unwrap();
+    let b = sess.eval_step(&ids, &labels).unwrap();
+    assert_eq!(a.loss, b.loss);
+    assert_eq!(a.acc, b.acc);
+    assert!((0.0..=1.0).contains(&a.acc));
+}
+
+#[test]
+fn checkpoint_roundtrip_through_session() {
+    let rt = runtime();
+    let m = manifest();
+    let mut sess = TrainSession::create(&rt, &m, "ember_hrrformer_small_T1024_B8", 5).unwrap();
+    let mut rng = Rng::new(1);
+    let ids = random_batch(&mut rng, 8, 1024, 257);
+    let labels = Tensor::i32(vec![8], vec![1; 8]);
+    sess.train_step(&ids, &labels).unwrap();
+    let dir = std::env::temp_dir().join("hrrformer_it");
+    std::fs::create_dir_all(&dir).unwrap();
+    let path = dir.join("sess.ckpt");
+    sess.save(&path).unwrap();
+
+    let mut sess2 = TrainSession::create(&rt, &m, "ember_hrrformer_small_T1024_B8", 999).unwrap();
+    sess2.restore(&path).unwrap();
+    let e1 = sess.eval_step(&ids, &labels).unwrap();
+    let e2 = sess2.eval_step(&ids, &labels).unwrap();
+    assert_eq!(e1.loss, e2.loss, "restored params must reproduce eval loss");
+}
+
+#[test]
+fn kernel_microbench_program_runs_with_reweighting_semantics() {
+    let rt = runtime();
+    let m = manifest();
+    let spec = m.get("kernel_hrr_N4_T1024_H64").unwrap();
+    let prog = rt.load(spec).unwrap();
+    let mut rng = Rng::new(3);
+    let mut mk = |rng: &mut Rng| {
+        let data: Vec<f32> = (0..4 * 1024 * 64).map(|_| rng.normal() as f32 * 0.125).collect();
+        Tensor::f32(vec![1, 4, 1024, 64], data)
+    };
+    let (q, k, v) = (mk(&mut rng), mk(&mut rng), mk(&mut rng));
+    let out = prog.run(&[q, k, v.clone()]).unwrap();
+    assert_eq!(out[0].shape(), &[1, 4, 1024, 64]);
+    let o = out[0].as_f32().unwrap();
+    assert!(o.iter().all(|x| x.is_finite()));
+    // Eq.4: output rows are w_t * v_t with softmax weights in (0,1) —
+    // each output row must be a positive scaling of v's row.
+    let vv = v.as_f32().unwrap();
+    let row = 64;
+    for t in [0usize, 17, 511, 1023] {
+        let a = &o[t * row..(t + 1) * row];
+        let b = &vv[t * row..(t + 1) * row];
+        let dot: f32 = a.iter().zip(b).map(|(x, y)| x * y).sum();
+        let na: f32 = a.iter().map(|x| x * x).sum::<f32>().sqrt();
+        let nb: f32 = b.iter().map(|x| x * x).sum::<f32>().sqrt();
+        let cos = dot / (na * nb + 1e-9);
+        assert!(cos > 0.99, "row {t} not collinear with v (cos={cos})");
+    }
+}

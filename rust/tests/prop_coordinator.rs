@@ -1,0 +1,145 @@
+//! Property tests on the coordinator's pure logic: routing, batching
+//! policy, and queue invariants (proptest is unavailable offline; the
+//! harness in `util::prop` provides seeded replayable cases).
+
+use std::time::{Duration, Instant};
+
+use hrrformer::coordinator::batcher::{BatchPolicy, BatchQueue};
+use hrrformer::coordinator::router::{Bucket, Route, Router};
+use hrrformer::util::prop::forall;
+use hrrformer::util::rng::Rng;
+
+fn random_router(rng: &mut Rng) -> Router {
+    let n = 1 + rng.usize_below(6);
+    let buckets = (0..n)
+        .map(|_| Bucket {
+            seq_len: 1 << (4 + rng.usize_below(10)), // 16..8192
+            batch: 1 + rng.usize_below(32),
+        })
+        .collect();
+    Router::new(buckets)
+}
+
+#[test]
+fn routed_bucket_is_smallest_that_fits() {
+    forall(300, 0x101, |rng| {
+        let router = random_router(rng);
+        let len = 1 + rng.usize_below(20_000);
+        match router.route(len) {
+            Route::To(i) => {
+                let b = router.buckets()[i];
+                assert!(b.seq_len >= len, "bucket too small");
+                for other in router.buckets().iter().take(i) {
+                    assert!(other.seq_len < len, "router skipped a fitting bucket");
+                }
+            }
+            Route::Truncate(i) => {
+                assert_eq!(i, router.buckets().len() - 1);
+                assert!(router.buckets().iter().all(|b| b.seq_len < len));
+            }
+        }
+    });
+}
+
+#[test]
+fn routing_is_monotone_in_length() {
+    // longer request never routes to a smaller bucket
+    forall(200, 0x102, |rng| {
+        let router = random_router(rng);
+        let a = 1 + rng.usize_below(10_000);
+        let b = a + rng.usize_below(10_000);
+        let ta = router.bucket_for(a).unwrap().seq_len;
+        let tb = router.bucket_for(b).unwrap().seq_len;
+        assert!(tb >= ta, "len {a}→T{ta} but len {b}→T{tb}");
+    });
+}
+
+#[test]
+fn padding_waste_is_bounded() {
+    forall(200, 0x103, |rng| {
+        let router = random_router(rng);
+        let len = 1 + rng.usize_below(20_000);
+        let w = router.padding_waste(len);
+        assert!((0.0..1.0).contains(&w), "waste {w} out of range");
+    });
+}
+
+#[test]
+fn batch_queue_never_exceeds_max_batch_and_preserves_fifo() {
+    forall(200, 0x104, |rng| {
+        let policy = BatchPolicy {
+            max_batch: 1 + rng.usize_below(16),
+            max_wait: Duration::from_millis(rng.below(50)),
+        };
+        let mut q = BatchQueue::new(policy);
+        let n = rng.usize_below(64);
+        for i in 0..n {
+            q.push(i);
+        }
+        let mut expected = 0usize;
+        let mut drained = 0usize;
+        while let Some(batch) = q.maybe_flush(Instant::now(), true) {
+            assert!(!batch.is_empty());
+            assert!(batch.len() <= policy.max_batch, "batch over capacity");
+            for p in batch {
+                assert_eq!(p.payload, expected, "FIFO violated");
+                expected += 1;
+                drained += 1;
+            }
+        }
+        assert_eq!(drained, n, "requests lost or duplicated");
+        assert!(q.is_empty());
+    });
+}
+
+#[test]
+fn no_flush_before_capacity_or_deadline() {
+    forall(100, 0x105, |rng| {
+        let policy = BatchPolicy {
+            max_batch: 2 + rng.usize_below(30),
+            max_wait: Duration::from_secs(3600),
+        };
+        let mut q = BatchQueue::new(policy);
+        let n = rng.usize_below(policy.max_batch - 1);
+        for i in 0..n {
+            q.push(i);
+        }
+        assert!(
+            q.maybe_flush(Instant::now(), false).is_none(),
+            "flushed {n} < max_batch {} with no deadline",
+            policy.max_batch
+        );
+    });
+}
+
+#[test]
+fn queue_conservation_under_interleaved_ops() {
+    // pushes and flushes interleaved: every request exits exactly once
+    forall(100, 0x106, |rng| {
+        let policy = BatchPolicy {
+            max_batch: 1 + rng.usize_below(8),
+            max_wait: Duration::from_secs(3600),
+        };
+        let mut q = BatchQueue::new(policy);
+        let mut pushed = 0u64;
+        let mut flushed = 0u64;
+        for _ in 0..rng.usize_below(200) {
+            if rng.bool(0.6) {
+                q.push(pushed);
+                pushed += 1;
+            } else if let Some(batch) = q.maybe_flush(Instant::now(), rng.bool(0.3)) {
+                for p in batch {
+                    assert_eq!(p.payload, flushed, "order violated");
+                    flushed += 1;
+                }
+            }
+        }
+        while let Some(batch) = q.maybe_flush(Instant::now(), true) {
+            for p in batch {
+                assert_eq!(p.payload, flushed);
+                flushed += 1;
+            }
+        }
+        assert_eq!(pushed, flushed, "conservation violated");
+    });
+}

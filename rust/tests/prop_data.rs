@@ -1,0 +1,106 @@
+//! Property tests over the dataset substrates: every generator must emit
+//! well-formed, in-vocab, deterministic examples at any configured length.
+
+use hrrformer::data::{batch::pack, by_task, Split, Stream};
+use hrrformer::util::prop::forall;
+use hrrformer::util::rng::Rng;
+
+const TASKS: &[&str] = &["listops", "text", "retrieval", "image", "pathfinder", "ember"];
+
+#[test]
+fn all_generators_emit_valid_examples_at_random_lengths() {
+    forall(60, 0xDA7A, |rng| {
+        let task = ["listops", "text", "retrieval", "ember"][rng.usize_below(4)];
+        let t = 64 << rng.usize_below(5); // 64..1024
+        let ds = by_task(task, t).unwrap();
+        let ex = ds.sample(rng);
+        assert!(!ex.ids.is_empty(), "{task}: empty example");
+        assert!(ex.ids.len() <= t, "{task}: len {} > {t}", ex.ids.len());
+        assert!(
+            ex.ids.iter().all(|&id| id >= 1 && (id as usize) < ds.vocab()),
+            "{task}: token out of vocab (PAD=0 is reserved)"
+        );
+        assert!((ex.label as usize) < ds.classes(), "{task}: label out of range");
+    });
+}
+
+#[test]
+fn fixed_shape_tasks_fill_exactly() {
+    let mut rng = Rng::new(1);
+    for (task, want) in [("image", 1024usize), ("pathfinder", 1024)] {
+        let ds = by_task(task, want).unwrap();
+        for _ in 0..20 {
+            assert_eq!(ds.sample(&mut rng).ids.len(), want, "{task}");
+        }
+    }
+}
+
+#[test]
+fn streams_deterministic_across_all_tasks() {
+    for task in TASKS {
+        let ds = by_task(task, 256).unwrap();
+        let a = Stream::new(ds.as_ref(), Split::Train, 99).take(3);
+        let b = Stream::new(ds.as_ref(), Split::Train, 99).take(3);
+        assert_eq!(a, b, "{task}: stream not deterministic");
+        let c = Stream::new(ds.as_ref(), Split::Train, 100).take(3);
+        assert_ne!(a, c, "{task}: seed ignored");
+    }
+}
+
+#[test]
+fn train_test_splits_disjoint_for_all_tasks() {
+    for task in TASKS {
+        let ds = by_task(task, 256).unwrap();
+        let tr = Stream::new(ds.as_ref(), Split::Train, 5).take(4);
+        let te = Stream::new(ds.as_ref(), Split::Test, 5).take(4);
+        assert_ne!(tr, te, "{task}: splits overlap");
+    }
+}
+
+#[test]
+fn labels_not_degenerate() {
+    // every task must produce at least two distinct labels in 200 draws
+    for task in TASKS {
+        let ds = by_task(task, 512).unwrap();
+        let mut stream = Stream::new(ds.as_ref(), Split::Train, 3);
+        let mut seen = std::collections::BTreeSet::new();
+        for _ in 0..200 {
+            seen.insert(stream.next_example().label);
+        }
+        assert!(seen.len() >= 2, "{task}: degenerate labels {seen:?}");
+    }
+}
+
+#[test]
+fn pack_respects_shapes_for_random_example_sets() {
+    forall(100, 0xBA7C, |rng| {
+        let b = 1 + rng.usize_below(8);
+        let t = 8 + rng.usize_below(256);
+        let exs: Vec<_> = (0..b)
+            .map(|_| hrrformer::data::Example {
+                ids: (0..(1 + rng.usize_below(2 * t)))
+                    .map(|_| 1 + rng.range(0, 255) as i32)
+                    .collect(),
+                label: rng.range(0, 10) as i32,
+            })
+            .collect();
+        let batch = pack(&exs, t);
+        assert_eq!(batch.ids.shape(), &[b, t]);
+        assert_eq!(batch.labels.shape(), &[b]);
+        let ids = batch.ids.as_i32().unwrap();
+        for (i, ex) in exs.iter().enumerate() {
+            let row = &ids[i * t..(i + 1) * t];
+            let n = ex.ids.len().min(t);
+            assert_eq!(&row[..n], &ex.ids[..n], "content mismatch");
+            assert!(row[n..].iter().all(|&v| v == 0), "padding not zero");
+        }
+    });
+}
+
+#[test]
+fn ember_scales_without_panic_to_long_lengths() {
+    let ds = by_task("ember", 16384).unwrap();
+    let mut rng = Rng::new(0);
+    let ex = ds.sample(&mut rng);
+    assert_eq!(ex.ids.len(), 16384);
+}
