@@ -8,7 +8,7 @@
 
 use anyhow::Result;
 use hrrformer::data::{batch::BatchStream, by_task, Split};
-use hrrformer::model::PredictSession;
+use hrrformer::model::{PredictSession, Session};
 use hrrformer::runtime::{default_manifest, Runtime};
 
 fn main() -> Result<()> {

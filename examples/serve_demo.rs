@@ -1,36 +1,51 @@
-//! Serving-system demo: multi-bucket router + dynamic batcher under
-//! concurrent client load with mixed request lengths — the vLLM-router
-//! shaped part of the coordinator.
+//! Serving-system demo: the typed `Engine` API under concurrent client
+//! load with mixed request lengths — the vLLM-router shaped part of the
+//! stack.
+//!
+//! Walkthrough:
+//!
+//! 1. `Engine::builder()` declares one *bucket* per compiled predict
+//!    program (T=256/512/1024 here), a shared `BatchPolicy`, the
+//!    admission-queue depth and the parameter-init seed.
+//! 2. `build()` spawns one **executor thread per bucket**. Each executor
+//!    creates and owns its own PJRT `Runtime` + `PredictSession`,
+//!    because the xla crate's handles are `!Send` — compiled executables
+//!    can never cross a thread boundary. A routing thread feeds the
+//!    executors over bounded channels, so a slow T=1024 batch cannot
+//!    head-of-line-block T=256 traffic: buckets batch and execute in
+//!    parallel (we count the overlapping executions below to prove it).
+//! 3. Clients clone a cheap `EngineClient` handle and call `classify()`
+//!    (or `submit()` → `Ticket::wait()`). Replies are typed: label,
+//!    logits, latency, bucket, batch size, and an explicit `truncated`
+//!    flag for requests longer than every bucket. Failures arrive as a
+//!    matchable `EngineError`, not strings.
 //!
 //! ```bash
 //! make artifacts && cargo run --release --example serve_demo -- --clients 4 --requests 32
 //! ```
 
 use anyhow::Result;
-use hrrformer::coordinator::{BatchPolicy, Server, ServerConfig};
+use hrrformer::coordinator::BatchPolicy;
 use hrrformer::data::{by_task, Split, Stream};
+use hrrformer::engine::Engine;
 use hrrformer::runtime::default_manifest;
 use hrrformer::util::cli::Args;
 
 fn main() -> Result<()> {
     let args = Args::from_env();
     let manifest = default_manifest()?;
-    let cfg = ServerConfig {
-        bases: vec![
-            "ember_hrrformer_small_T256_B8".into(),
-            "ember_hrrformer_small_T512_B8".into(),
-            "ember_hrrformer_small_T1024_B8".into(),
-        ],
-        policy: BatchPolicy {
+    println!("compiling 3 predict buckets (T=256/512/1024)…");
+    let engine = Engine::builder()
+        .bucket("ember_hrrformer_small_T256_B8")
+        .bucket("ember_hrrformer_small_T512_B8")
+        .bucket("ember_hrrformer_small_T1024_B8")
+        .policy(BatchPolicy {
             max_batch: args.usize("max-batch", 8),
             max_wait: std::time::Duration::from_millis(args.u64("max-wait-ms", 10)),
-        },
-        queue_depth: args.usize("queue-depth", 64),
-        seed: 0,
-        params: vec![None, None, None],
-    };
-    println!("compiling 3 predict buckets (T=256/512/1024)…");
-    let server = Server::start(&manifest, cfg)?;
+        })
+        .queue_depth(args.usize("queue-depth", 64))
+        .seed(0)
+        .build(&manifest)?;
 
     let n_clients = args.usize("clients", 4);
     let per_client = args.usize("requests", 32);
@@ -38,44 +53,64 @@ fn main() -> Result<()> {
 
     let mut joins = Vec::new();
     for c in 0..n_clients {
-        let handle = server.handle();
-        joins.push(std::thread::spawn(move || -> Result<(usize, f64)> {
+        let client = engine.client();
+        joins.push(std::thread::spawn(move || -> Result<(usize, usize, f64)> {
             let ds = by_task("ember", 1024).unwrap();
             let mut stream = Stream::new(ds.as_ref(), Split::Test, 1000 + c as u64);
             let mut max_latency = 0.0f64;
             let mut batched = 0usize;
+            let mut truncated = 0usize;
             for i in 0..per_client {
                 let mut ex = stream.next_example();
-                // lengths spread across the bucket range
-                let keep = 64 + (i * 131 + c * 977) % 960;
+                // lengths spread across (and past) the bucket range
+                let keep = 64 + (i * 131 + c * 977) % 1200;
                 ex.ids.truncate(keep);
-                let reply = handle.classify(ex.ids)?;
+                let oversize = ex.ids.len() > 1024;
+                let reply = client.classify(ex.ids)?;
+                assert_eq!(reply.truncated, oversize, "truncated flag must track length");
                 max_latency = max_latency.max(reply.latency.as_secs_f64() * 1000.0);
                 batched += (reply.batch_size > 1) as usize;
+                truncated += reply.truncated as usize;
             }
-            Ok((batched, max_latency))
+            Ok((batched, truncated, max_latency))
         }));
     }
 
     let mut total_batched = 0usize;
+    let mut total_truncated = 0usize;
     let mut worst = 0.0f64;
     for j in joins {
-        let (batched, max_lat) = j.join().expect("client thread panicked")?;
+        let (batched, truncated, max_lat) = j.join().expect("client thread panicked")?;
         total_batched += batched;
+        total_truncated += truncated;
         worst = worst.max(max_lat);
     }
 
-    let stats = server.handle().stats.clone();
+    // Per-bucket execution spans prove the executors ran in parallel:
+    // count cross-bucket pairs that overlapped in wall-clock time.
+    let stats = engine.stats().clone();
+    let spans = stats.spans();
+    let mut overlapping = 0usize;
+    for (i, a) in spans.iter().enumerate() {
+        for b in &spans[i + 1..] {
+            if a.bucket_t != b.bucket_t && a.overlaps(b) {
+                overlapping += 1;
+            }
+        }
+    }
+
     println!("\n=== serve_demo report ===");
     println!("served:            {}", stats.throughput.items.load(std::sync::atomic::Ordering::Relaxed));
     println!("throughput:        {:.1} req/s", stats.throughput.per_second());
     println!("p50 / p99 latency: {:.1} / {:.1} ms", stats.latency.percentile_ms(50.0), stats.latency.percentile_ms(99.0));
     println!("worst latency:     {worst:.1} ms");
+    println!("truncated:         {total_truncated} over-length requests (flagged in replies)");
     println!(
         "coalesced:         {}/{} requests shared an execution",
         total_batched,
         n_clients * per_client
     );
-    server.stop();
+    println!("parallel buckets:  {overlapping} cross-bucket executions overlapped in time");
+    engine.stop();
     Ok(())
 }

@@ -1,15 +1,21 @@
-//! Tables 6 & 7 — inference timing.
+//! Tables 6 & 7 — inference timing — plus an Engine serving sweep.
 //!
 //! Table 6: Hrrformer vs Transformer single block, inference time and
 //! memory across batch sizes 2..32 on the text task.
 //! Table 7: all 6-layer models, total time / examples-per-second /
 //! memory for a fixed evaluation set.
+//! `--engine`: end-to-end serving throughput through the typed `Engine`
+//! (routing + dynamic batching + parallel per-bucket executors) on the
+//! ember buckets — the orchestration overhead the raw-session tables
+//! above exclude.
 
-use anyhow::Result;
+use anyhow::{Context, Result};
 
 use crate::bench::results_dir;
-use crate::data::{batch::BatchStream, by_task, Split};
-use crate::model::PredictSession;
+use crate::coordinator::BatchPolicy;
+use crate::data::{batch::BatchStream, by_task, Split, Stream};
+use crate::engine::Engine;
+use crate::model::{PredictSession, Session};
 use crate::runtime::{Manifest, ProgramSpec, Runtime};
 use crate::util::table::Table;
 
@@ -18,11 +24,14 @@ pub struct InferBenchCfg {
     pub seed: u64,
     /// run the batch-size sweep (Table 6) instead of the model sweep (Table 7)
     pub sweep_batch: bool,
+    /// serve through the Engine (routing + batching + parallel buckets)
+    /// instead of timing raw sessions
+    pub engine: bool,
 }
 
 impl Default for InferBenchCfg {
     fn default() -> Self {
-        InferBenchCfg { examples: 128, seed: 0, sweep_batch: false }
+        InferBenchCfg { examples: 128, seed: 0, sweep_batch: false, engine: false }
     }
 }
 
@@ -45,12 +54,12 @@ fn time_predict(
 ) -> Result<InferRow> {
     let base = spec.key.trim_end_matches("_predict").to_string();
     let sess = PredictSession::create(rt, manifest, &base, seed as u32)?;
-    let ds = by_task(&spec.task, spec.seq_len).unwrap();
-    let mut stream = BatchStream::new(ds.as_ref(), Split::Test, seed, spec.batch, spec.seq_len);
+    let ds = by_task(&spec.task, sess.seq_len()).unwrap();
+    let mut stream = BatchStream::new(ds.as_ref(), Split::Test, seed, sess.batch(), sess.seq_len());
     // warm-up execution (excluded, like the paper excludes compile)
     let warm = stream.next_batch();
     sess.predict(&warm.ids)?;
-    let n_batches = (examples + spec.batch - 1) / spec.batch;
+    let n_batches = examples.div_ceil(sess.batch());
     let batches: Vec<_> = (0..n_batches).map(|_| stream.next_batch()).collect();
     let t0 = std::time::Instant::now();
     for b in &batches {
@@ -59,15 +68,117 @@ fn time_predict(
     let secs = t0.elapsed().as_secs_f64();
     Ok(InferRow {
         model: spec.model.clone(),
-        batch: spec.batch,
+        batch: sess.batch(),
         layers: spec.layers,
         secs,
-        examples_per_sec: (n_batches * spec.batch) as f64 / secs,
+        examples_per_sec: (n_batches * sess.batch()) as f64 / secs,
         rss_mib: crate::util::rss_mib(),
     })
 }
 
+/// Serve `cfg.examples` mixed-length requests through the Engine and
+/// report per-bucket traffic plus end-to-end latency percentiles.
+/// Needs no caller-provided `Runtime` — every engine executor creates
+/// its own (PJRT handles are `!Send`).
+pub fn run_engine_serve(manifest: &Manifest, cfg: &InferBenchCfg) -> Result<Vec<InferRow>> {
+    let mut specs: Vec<&ProgramSpec> = manifest
+        .select(|p| p.task == "ember" && p.kind == "predict" && p.model == "hrrformer");
+    anyhow::ensure!(!specs.is_empty(), "no ember predict artifacts — run `make artifacts`");
+    specs.sort_by_key(|p| p.seq_len);
+    specs.dedup_by_key(|p| p.seq_len);
+    let max_t = specs.last().unwrap().seq_len;
+    let seed = u32::try_from(cfg.seed).context("--seed must fit in u32")?;
+
+    let mut builder = Engine::builder()
+        .policy(BatchPolicy::default())
+        .queue_depth(256)
+        .seed(seed);
+    for spec in &specs {
+        builder = builder.bucket(spec.key.trim_end_matches("_predict"));
+    }
+    eprintln!("[infer] compiling {} engine buckets…", specs.len());
+    let engine = builder.build(manifest)?;
+
+    // Mixed lengths spanning (and overshooting) the bucket range, so the
+    // sweep exercises routing, padding and truncation.
+    let ds = by_task("ember", max_t).unwrap();
+    let mut stream = Stream::new(ds.as_ref(), Split::Test, cfg.seed);
+    let n = cfg.examples.max(1);
+    let t0 = std::time::Instant::now();
+    let tickets: Vec<_> = (0..n)
+        .map(|i| {
+            let mut ex = stream.next_example();
+            let keep = 64 + (i * 131) % (max_t + 512);
+            ex.ids.truncate(keep);
+            Ok(engine.submit_wait(ex.ids)?)
+        })
+        .collect::<Result<_>>()?;
+    let mut truncated = 0usize;
+    let mut per_bucket: Vec<(usize, usize, usize)> = // (T, requests, summed batch size)
+        engine.buckets().iter().map(|b| (b.seq_len, 0, 0)).collect();
+    for t in tickets {
+        let reply = t.wait()?;
+        truncated += reply.truncated as usize;
+        if let Some(e) = per_bucket.iter_mut().find(|e| e.0 == reply.bucket_t) {
+            e.1 += 1;
+            e.2 += reply.batch_size;
+        }
+    }
+    let secs = t0.elapsed().as_secs_f64();
+    let stats = engine.stats();
+
+    let mut t = Table::new(
+        "Engine serving — mixed-length load over parallel per-bucket executors",
+        &["Bucket T", "Requests", "Mean batch", "Share"],
+    );
+    let mut rows = Vec::new();
+    for (idx, &(bucket_t, served, batch_sum)) in per_bucket.iter().enumerate() {
+        let mean_batch = if served > 0 { batch_sum as f64 / served as f64 } else { 0.0 };
+        t.row(vec![
+            bucket_t.to_string(),
+            served.to_string(),
+            format!("{mean_batch:.2}"),
+            format!("{:.0}%", 100.0 * served as f64 / n as f64),
+        ]);
+        rows.push(InferRow {
+            model: format!("engine_T{bucket_t}"),
+            batch: engine.buckets()[idx].batch,
+            layers: 0,
+            secs,
+            examples_per_sec: served as f64 / secs,
+            rss_mib: crate::util::rss_mib(),
+        });
+    }
+    t.print();
+    println!(
+        "{n} requests in {secs:.2}s — {:.1} req/s, p50 {:.1} ms, p99 {:.1} ms, {truncated} truncated",
+        n as f64 / secs,
+        stats.latency.percentile_ms(50.0),
+        stats.latency.percentile_ms(99.0),
+    );
+    engine.stop();
+    write_csv(&rows, "inference_serve.csv");
+    Ok(rows)
+}
+
+fn write_csv(rows: &[InferRow], name: &str) {
+    let mut csv = String::from("model,layers,batch,secs,examples_per_sec,rss_mib\n");
+    for r in rows {
+        csv.push_str(&format!(
+            "{},{},{},{:.3},{:.2},{:.0}\n",
+            r.model, r.layers, r.batch, r.secs, r.examples_per_sec, r.rss_mib
+        ));
+    }
+    let path = results_dir().join(name);
+    let _ = std::fs::write(&path, csv);
+    eprintln!("[infer] data → {}", path.display());
+}
+
 pub fn run(rt: &Runtime, manifest: &Manifest, cfg: &InferBenchCfg) -> Result<Vec<InferRow>> {
+    if cfg.engine {
+        // engine path writes its own table/CSV and needs no shared rt
+        return run_engine_serve(manifest, cfg);
+    }
     let mut rows = Vec::new();
 
     if cfg.sweep_batch {
@@ -145,16 +256,6 @@ pub fn run(rt: &Runtime, manifest: &Manifest, cfg: &InferBenchCfg) -> Result<Vec
         t.print();
     }
 
-    let mut csv = String::from("model,layers,batch,secs,examples_per_sec,rss_mib\n");
-    for r in &rows {
-        csv.push_str(&format!(
-            "{},{},{},{:.3},{:.2},{:.0}\n",
-            r.model, r.layers, r.batch, r.secs, r.examples_per_sec, r.rss_mib
-        ));
-    }
-    let name = if cfg.sweep_batch { "inference_batch.csv" } else { "inference_models.csv" };
-    let path = results_dir().join(name);
-    let _ = std::fs::write(&path, csv);
-    eprintln!("[infer] data → {}", path.display());
+    write_csv(&rows, if cfg.sweep_batch { "inference_batch.csv" } else { "inference_models.csv" });
     Ok(rows)
 }

@@ -129,6 +129,49 @@ mod tests {
         assert!(q.maybe_flush(Instant::now(), true).is_none());
     }
 
+    /// Property: the sleep hint and the flush decision agree. For any
+    /// queue state and any probe time, `time_to_deadline == Some(0)` or
+    /// capacity reached ⇔ `should_flush` (not draining); an empty queue
+    /// has no deadline; and draining always flushes a nonempty queue.
+    /// Divergence here would make the executor sleep through (or spin
+    /// ahead of) its own flush condition.
+    #[test]
+    fn time_to_deadline_consistent_with_should_flush() {
+        use crate::util::prop::forall;
+
+        forall(300, 0x107, |rng| {
+            let policy = BatchPolicy {
+                max_batch: 1 + rng.usize_below(16),
+                max_wait: Duration::from_millis(rng.below(100)),
+            };
+            let mut q = BatchQueue::new(policy);
+            assert!(q.time_to_deadline(Instant::now()).is_none(), "empty queue has no deadline");
+            let n = 1 + rng.usize_below(2 * policy.max_batch);
+            for i in 0..n {
+                q.push(i);
+            }
+            // Probe a future instant instead of sleeping: both functions
+            // must derive the same oldest-age from it.
+            let now = Instant::now() + Duration::from_millis(rng.below(200));
+            let ttd = q.time_to_deadline(now).expect("nonempty queue has a deadline");
+            let flush = policy.should_flush(q.len(), q.oldest_age(now), false);
+            let deadline_hit = ttd == Duration::ZERO;
+            let cap_hit = q.len() >= policy.max_batch;
+            assert_eq!(
+                flush,
+                deadline_hit || cap_hit,
+                "policy disagrees with deadline: ttd={ttd:?} len={} max_batch={} max_wait={:?}",
+                q.len(),
+                policy.max_batch,
+                policy.max_wait,
+            );
+            assert!(
+                policy.should_flush(q.len(), q.oldest_age(now), true),
+                "draining must always flush a nonempty queue"
+            );
+        });
+    }
+
     #[test]
     fn fifo_order_preserved() {
         let p = BatchPolicy { max_batch: 3, max_wait: Duration::from_secs(10) };

@@ -1,9 +1,17 @@
-//! Layer 3 — the coordinator: everything on the request path.
+//! Layer 3a — the coordinator: training orchestration plus the *pure*
+//! request-path logic.
 //!
 //! * `trainer`  — training orchestration (epochs, eval, curves, ckpts)
 //! * `router`   — sequence-length bucket routing for fixed-shape programs
 //! * `batcher`  — dynamic batching policy + deadline queues
-//! * `server`   — threaded inference service with backpressure
+//!
+//! Serving lives in [`crate::engine`]: the typed `Engine` facade spawns
+//! one executor thread per bucket (each owning its own PJRT runtime —
+//! xla handles are `!Send` and never cross threads), fed by a routing
+//! thread over bounded channels. `router` and `batcher` here stay free of
+//! runtime dependencies so their invariants are property-tested in
+//! isolation (rust/tests/prop_coordinator.rs, batcher unit tests); the
+//! engine composes them on the hot path.
 //!
 //! The paper's contribution lives at L1/L2 (the HRR attention); L3 is the
 //! serving/training system that makes long-sequence classification
@@ -11,10 +19,8 @@
 
 pub mod batcher;
 pub mod router;
-pub mod server;
 pub mod trainer;
 
 pub use batcher::{BatchPolicy, BatchQueue};
 pub use router::{Bucket, Route, Router};
-pub use server::{Reply, Server, ServerConfig, ServerHandle};
 pub use trainer::{train, TrainConfig, TrainReport};

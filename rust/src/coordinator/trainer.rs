@@ -11,7 +11,7 @@ use anyhow::{Context, Result};
 
 use crate::data::{batch::BatchStream, by_task, Split};
 use crate::metrics::CsvLogger;
-use crate::model::TrainSession;
+use crate::model::{Session, TrainSession};
 use crate::runtime::{Manifest, Runtime};
 use crate::util::timed;
 

@@ -1,0 +1,52 @@
+//! Typed error surface for the engine request path.
+//!
+//! Errors cross the reply channel as plain matchable values — not
+//! stringly `anyhow` chains — so clients can distinguish backpressure
+//! (retry later) from hard failures (give up) without parsing messages.
+
+use std::fmt;
+
+/// Why an inference request failed.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub enum EngineError {
+    /// The admission queue or the target bucket's queue is at capacity.
+    /// Backpressure signal: the request was *not* enqueued; retry later
+    /// or shed load.
+    QueueFull,
+    /// No compiled bucket exists that can serve this request.
+    BucketMissing,
+    /// The XLA predict execution (or decoding its logits) failed; the
+    /// same error is fanned out to every request in the batch.
+    Predict(String),
+    /// The engine has shut down (or dropped the reply channel mid-wait).
+    Shutdown,
+}
+
+impl fmt::Display for EngineError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            EngineError::QueueFull => write!(f, "engine queue full (backpressure — retry later)"),
+            EngineError::BucketMissing => write!(f, "no bucket available for this request"),
+            EngineError::Predict(e) => write!(f, "predict failed: {e}"),
+            EngineError::Shutdown => write!(f, "engine is shut down"),
+        }
+    }
+}
+
+impl std::error::Error for EngineError {}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn errors_are_matchable_and_display() {
+        let e = EngineError::Predict("dtype mismatch".into());
+        assert!(e.to_string().contains("dtype mismatch"));
+        assert_eq!(EngineError::QueueFull, EngineError::QueueFull);
+        assert_ne!(EngineError::QueueFull, EngineError::Shutdown);
+        // anyhow interop: EngineError is a std error
+        let any: anyhow::Error = EngineError::Shutdown.into();
+        assert!(any.to_string().contains("shut down"));
+    }
+}

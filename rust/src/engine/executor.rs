@@ -1,0 +1,193 @@
+//! Per-bucket executor thread: compiles and owns one predict session,
+//! batches its queue with deadline-aware flushing, and executes.
+//!
+//! The xla crate's PJRT handles are `!Send`, so the `Runtime` and the
+//! compiled `PredictSession` are created *inside* the executor thread and
+//! never cross a thread boundary; only plain data (token ids, logits,
+//! errors) moves over the channels. Each bucket gets its own executor, so
+//! a slow T=1024 batch cannot head-of-line-block T=256 traffic — the
+//! routing thread stays free to feed every other bucket in parallel.
+
+use std::path::PathBuf;
+use std::sync::mpsc::{Receiver, RecvTimeoutError, SyncSender};
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+use anyhow::{Context, Result};
+
+use crate::coordinator::batcher::{BatchPolicy, BatchQueue, Pending};
+use crate::engine::error::EngineError;
+use crate::engine::{EngineStats, ExecSpan, InferReply};
+use crate::model::{ParamStore, PredictSession, Session};
+use crate::runtime::{Manifest, Runtime, Tensor};
+
+/// A routed request, as handed from the routing thread to an executor.
+pub(crate) struct Job {
+    pub ids: Vec<i32>,
+    /// Set by the router when the request is longer than every bucket and
+    /// executes truncated to the largest T (paper protocol for EMBER).
+    pub truncated: bool,
+    /// Submission time at the client — latency covers routing + queueing
+    /// + execution.
+    pub submitted: Instant,
+    pub reply: SyncSender<Result<InferReply, EngineError>>,
+}
+
+pub(crate) enum ExecMsg {
+    Job(Job),
+    /// Drain the queue, reply to everything still pending, then exit.
+    Shutdown,
+}
+
+/// Everything an executor needs to build its thread-local session.
+pub(crate) struct ExecutorConfig {
+    pub base: String,
+    pub manifest_dir: PathBuf,
+    pub seed: u32,
+    /// Trained parameters (None = seed-initialized).
+    pub params: Option<ParamStore>,
+    pub policy: BatchPolicy,
+}
+
+/// Idle wake-up period when the queue is empty (no deadline to sleep to).
+const IDLE_TICK: Duration = Duration::from_millis(50);
+
+/// Thread body: build the session (signalling readiness), then loop.
+pub(crate) fn run_executor(
+    mut cfg: ExecutorConfig,
+    rx: Receiver<ExecMsg>,
+    ready: SyncSender<Result<()>>,
+    stats: Arc<EngineStats>,
+) {
+    let sess = match build_session(&mut cfg) {
+        Ok(s) => {
+            let _ = ready.send(Ok(()));
+            s
+        }
+        Err(e) => {
+            let _ = ready.send(Err(e));
+            return;
+        }
+    };
+    executor_loop(&sess, rx, cfg.policy, &stats);
+}
+
+fn build_session(cfg: &mut ExecutorConfig) -> Result<PredictSession> {
+    let manifest = Manifest::load(&cfg.manifest_dir)?;
+    let rt = Runtime::cpu().context("executor PJRT runtime")?;
+    // take() the trained params — no transient copy of multi-MB weights
+    match cfg.params.take() {
+        Some(p) => PredictSession::with_params(&rt, &manifest, &cfg.base, p),
+        None => PredictSession::create(&rt, &manifest, &cfg.base, cfg.seed),
+    }
+    .with_context(|| format!("compile bucket '{}'", cfg.base))
+}
+
+fn executor_loop(
+    sess: &PredictSession,
+    rx: Receiver<ExecMsg>,
+    policy: BatchPolicy,
+    stats: &Arc<EngineStats>,
+) {
+    let mut queue: BatchQueue<Job> = BatchQueue::new(policy);
+    let mut draining = false;
+    // Monotone per-bucket reply sequence — lets clients (and tests)
+    // observe FIFO ordering without cross-request channels.
+    let mut seq = 0u64;
+
+    loop {
+        // Sleep until the oldest request's deadline (or a short tick).
+        let now = Instant::now();
+        let wait = queue.time_to_deadline(now).unwrap_or(IDLE_TICK);
+        match rx.recv_timeout(wait) {
+            Ok(ExecMsg::Job(job)) => queue.push(job),
+            Ok(ExecMsg::Shutdown) | Err(RecvTimeoutError::Disconnected) => draining = true,
+            Err(RecvTimeoutError::Timeout) => {}
+        }
+
+        let now = Instant::now();
+        while let Some(batch) = queue.maybe_flush(now, draining) {
+            execute_batch(sess, batch, stats, &mut seq);
+        }
+
+        if draining && queue.is_empty() {
+            return;
+        }
+    }
+}
+
+/// Pack a flushed batch into the fixed (B, T) tensor, execute, and fan
+/// replies out per request. Any failure — execution *or* logits decoding
+/// (dtype/shape mismatch) — is propagated as `EngineError::Predict` to
+/// every request in the batch; a bad batch never degrades into silent
+/// `label=0` / empty-logits replies.
+fn execute_batch(
+    sess: &PredictSession,
+    batch: Vec<Pending<Job>>,
+    stats: &Arc<EngineStats>,
+    seq: &mut u64,
+) {
+    let t = sess.seq_len();
+    let cap = sess.batch();
+    let n = batch.len();
+    debug_assert!(n <= cap);
+    // Pack into the fixed (cap, T) tensor; unused rows stay PAD.
+    let mut ids = vec![0i32; cap * t];
+    for (row, p) in batch.iter().enumerate() {
+        let src = &p.payload.ids;
+        let len = src.len().min(t);
+        ids[row * t..row * t + len].copy_from_slice(&src[..len]);
+    }
+    let tensor = Tensor::i32(vec![cap, t], ids);
+
+    let start = Instant::now();
+    let result = sess.predict(&tensor).map_err(|e| format!("{e:#}")).and_then(|l| decode(&l, cap));
+    let end = Instant::now();
+    stats.record_span(ExecSpan { bucket_t: t, batch_size: n, start, end });
+
+    match result {
+        Ok((data, classes, preds)) => {
+            for (row, p) in batch.into_iter().enumerate() {
+                let latency = end.duration_since(p.payload.submitted);
+                stats.latency.record(latency);
+                stats.throughput.add(1);
+                let reply = InferReply {
+                    label: preds[row],
+                    logits: data[row * classes..(row + 1) * classes].to_vec(),
+                    latency,
+                    bucket_t: t,
+                    batch_size: n,
+                    truncated: p.payload.truncated,
+                    seq: *seq,
+                };
+                *seq += 1;
+                let _ = p.payload.reply.send(Ok(reply));
+            }
+        }
+        Err(msg) => {
+            for p in batch {
+                let _ = p.payload.reply.send(Err(EngineError::Predict(msg.clone())));
+            }
+        }
+    }
+}
+
+/// Validate and decompose the logits tensor: row-major (cap, classes)
+/// f32 data plus per-row argmax. Errors instead of defaulting so dtype
+/// or shape drift in the artifacts surfaces as a request failure.
+fn decode(logits: &Tensor, cap: usize) -> Result<(Vec<f32>, usize, Vec<usize>), String> {
+    let data =
+        logits.as_f32().map_err(|e| format!("logits dtype: {e:#}"))?.to_vec();
+    let classes = logits.shape().last().copied().unwrap_or(0);
+    if classes == 0 || data.len() != cap * classes {
+        return Err(format!(
+            "logits shape {:?} inconsistent with batch capacity {cap}",
+            logits.shape()
+        ));
+    }
+    let preds = logits.argmax_last().map_err(|e| format!("logits argmax: {e:#}"))?;
+    if preds.len() != cap {
+        return Err(format!("argmax produced {} rows, expected {cap}", preds.len()));
+    }
+    Ok((data, classes, preds))
+}

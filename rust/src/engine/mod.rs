@@ -1,0 +1,614 @@
+//! The serving engine: a typed facade over the request path that unifies
+//! what `TrainSession`/`PredictSession` expose per-model into one
+//! multi-bucket inference service.
+//!
+//! # Architecture
+//!
+//! std threads only (tokio is unavailable offline), shaped by one hard
+//! constraint: the xla crate's PJRT handles are **`!Send`**, so compiled
+//! executables can never migrate between threads. Each bucket therefore
+//! gets its own *executor thread* that creates and owns its `Runtime` +
+//! `PredictSession`; only plain data (token ids, logits, typed errors)
+//! crosses thread boundaries:
+//!
+//! ```text
+//!   clients ──(bounded mpsc; `submit` fails fast with QueueFull,
+//!              `submit_wait`/`classify` block for space)──►
+//!     routing thread: Router picks the smallest bucket that fits
+//!       │ (bounded per-bucket channel; full ⇒ QueueFull reply for
+//!       │  fail-fast submits, blocking handoff for blocking ones)
+//!       ├──► executor T=256  : Runtime + session, BatchQueue, predict
+//!       ├──► executor T=512  : Runtime + session, BatchQueue, predict
+//!       └──► executor T=1024 : Runtime + session, BatchQueue, predict
+//!                 └── replies via per-request channels (Ticket::wait)
+//! ```
+//!
+//! Buckets execute **in parallel** — a slow T=1024 batch no longer
+//! head-of-line-blocks T=256 traffic the way the old single dispatcher
+//! loop did. Requests longer than every bucket are truncated to the
+//! largest T (the paper's EMBER protocol) and the reply carries an
+//! explicit `truncated: bool`.
+//!
+//! # Client surface
+//!
+//! [`EngineBuilder`] declares buckets (optionally with trained params),
+//! a [`BatchPolicy`], queue depth and seed; `build()` compiles
+//! everything and fails fast. [`Engine::submit`] is non-blocking and
+//! returns a [`Ticket`] (or [`EngineError::QueueFull`]);
+//! [`Ticket::wait`] yields `Result<InferReply, EngineError>`.
+//! [`Engine::client`] hands out cheap cloneable handles for concurrent
+//! client threads. Shutdown (`stop()` or drop) drains every queue before
+//! joining the threads.
+
+pub mod error;
+mod executor;
+
+pub use error::EngineError;
+
+use std::collections::VecDeque;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::mpsc::{sync_channel, Receiver, SyncSender, TrySendError};
+use std::sync::{Arc, Mutex};
+use std::thread::JoinHandle;
+use std::time::{Duration, Instant};
+
+use anyhow::{Context, Result};
+
+use crate::coordinator::batcher::BatchPolicy;
+use crate::coordinator::router::{Bucket, Route, Router};
+use crate::metrics::{LatencyHist, RunMeter};
+use crate::model::ParamStore;
+use crate::runtime::Manifest;
+
+use executor::{ExecMsg, ExecutorConfig, Job};
+
+/// A classification request: raw token ids of any length; the router
+/// pads (or truncates, paper-style) to a bucket's fixed T.
+#[derive(Debug, Clone)]
+pub struct InferRequest {
+    pub ids: Vec<i32>,
+}
+
+impl From<Vec<i32>> for InferRequest {
+    fn from(ids: Vec<i32>) -> InferRequest {
+        InferRequest { ids }
+    }
+}
+
+/// A classification reply.
+#[derive(Debug, Clone)]
+pub struct InferReply {
+    pub label: usize,
+    pub logits: Vec<f32>,
+    /// routing + queueing + execution latency
+    pub latency: Duration,
+    /// executed sequence bucket
+    pub bucket_t: usize,
+    /// how many requests shared the program execution
+    pub batch_size: usize,
+    /// the request exceeded every bucket and ran truncated to the
+    /// largest T (paper protocol for over-length EMBER sequences)
+    pub truncated: bool,
+    /// position in this bucket's reply stream (FIFO observability)
+    pub seq: u64,
+}
+
+/// The pending-reply side of a submitted request.
+pub struct Ticket {
+    rx: Receiver<Result<InferReply, EngineError>>,
+}
+
+impl Ticket {
+    /// Block until the reply arrives (or the engine shuts down).
+    pub fn wait(self) -> Result<InferReply, EngineError> {
+        self.rx.recv().unwrap_or(Err(EngineError::Shutdown))
+    }
+
+    /// Non-blocking poll; `None` while the request is still in flight.
+    pub fn try_wait(&self) -> Option<Result<InferReply, EngineError>> {
+        use std::sync::mpsc::TryRecvError;
+        match self.rx.try_recv() {
+            Ok(r) => Some(r),
+            Err(TryRecvError::Empty) => None,
+            // The reply sender died without answering (engine torn down
+            // or executor lost) — surface it, or pollers spin forever.
+            Err(TryRecvError::Disconnected) => Some(Err(EngineError::Shutdown)),
+        }
+    }
+}
+
+/// One recorded program execution — used to observe per-bucket
+/// parallelism (overlapping spans on different buckets) and batch shape.
+#[derive(Debug, Clone, Copy)]
+pub struct ExecSpan {
+    pub bucket_t: usize,
+    pub batch_size: usize,
+    pub start: Instant,
+    pub end: Instant,
+}
+
+impl ExecSpan {
+    /// Whether two executions overlapped in wall-clock time.
+    pub fn overlaps(&self, other: &ExecSpan) -> bool {
+        self.start < other.end && other.start < self.end
+    }
+}
+
+/// How many recent execution spans to retain for observability.
+const SPAN_CAPACITY: usize = 4096;
+
+/// Shared service metrics.
+#[derive(Default)]
+pub struct EngineStats {
+    pub latency: LatencyHist,
+    pub throughput: RunMeter,
+    /// Requests rejected with `QueueFull` (admission or bucket queue).
+    pub rejected: AtomicU64,
+    spans: Mutex<VecDeque<ExecSpan>>,
+}
+
+impl EngineStats {
+    pub(crate) fn record_span(&self, span: ExecSpan) {
+        let mut spans = self.spans.lock().unwrap();
+        if spans.len() == SPAN_CAPACITY {
+            spans.pop_front();
+        }
+        spans.push_back(span);
+    }
+
+    fn record_rejected(&self) {
+        self.rejected.fetch_add(1, Ordering::Relaxed);
+    }
+
+    /// The most recent execution spans (capped at `SPAN_CAPACITY`).
+    pub fn spans(&self) -> Vec<ExecSpan> {
+        self.spans.lock().unwrap().iter().copied().collect()
+    }
+}
+
+struct AdmitReq {
+    ids: Vec<i32>,
+    submitted: Instant,
+    /// Blocking submitters opted into backpressure-by-waiting: the
+    /// router hands their job off with a blocking send and never
+    /// rejects it with `QueueFull`. Fail-fast submitters get `try_send`.
+    blocking: bool,
+    reply: SyncSender<Result<InferReply, EngineError>>,
+}
+
+enum Msg {
+    Req(AdmitReq),
+    /// Drain queues and exit (clients may outlive the engine, so
+    /// shutdown is an explicit message, not a channel close).
+    Shutdown,
+}
+
+/// Cheap cloneable client handle; safe to hand to many threads.
+#[derive(Clone)]
+pub struct EngineClient {
+    tx: SyncSender<Msg>,
+    stats: Arc<EngineStats>,
+}
+
+impl EngineClient {
+    /// Non-blocking submit: enqueue or fail fast with
+    /// [`EngineError::QueueFull`] (admission queue) — the bucket queue
+    /// can still reject later, in which case the ticket resolves to
+    /// `QueueFull`.
+    pub fn submit(&self, req: impl Into<InferRequest>) -> Result<Ticket, EngineError> {
+        let (tx, rx) = sync_channel(1);
+        let msg = Msg::Req(AdmitReq {
+            ids: req.into().ids,
+            submitted: Instant::now(),
+            blocking: false,
+            reply: tx,
+        });
+        match self.tx.try_send(msg) {
+            Ok(()) => Ok(Ticket { rx }),
+            Err(TrySendError::Full(_)) => {
+                self.stats.record_rejected();
+                Err(EngineError::QueueFull)
+            }
+            Err(TrySendError::Disconnected(_)) => Err(EngineError::Shutdown),
+        }
+    }
+
+    /// Blocking submit: backpressure-by-waiting for batch clients —
+    /// never resolves to `QueueFull`. A full bucket stashes the job in
+    /// the router's bounded per-bucket overflow queue (other buckets
+    /// keep routing); only when that stash is also full does routing
+    /// park on the saturated bucket.
+    pub fn submit_wait(&self, req: impl Into<InferRequest>) -> Result<Ticket, EngineError> {
+        let (tx, rx) = sync_channel(1);
+        let msg = Msg::Req(AdmitReq {
+            ids: req.into().ids,
+            submitted: Instant::now(),
+            blocking: true,
+            reply: tx,
+        });
+        self.tx.send(msg).map_err(|_| EngineError::Shutdown)?;
+        Ok(Ticket { rx })
+    }
+
+    /// Submit (blocking on admission) and wait for the reply.
+    pub fn classify(&self, ids: Vec<i32>) -> Result<InferReply, EngineError> {
+        self.submit_wait(ids)?.wait()
+    }
+
+    pub fn stats(&self) -> &Arc<EngineStats> {
+        &self.stats
+    }
+}
+
+struct BucketSpec {
+    base: String,
+    params: Option<ParamStore>,
+}
+
+/// Declarative engine construction; `build()` compiles every bucket
+/// (failing fast on unknown bases or compile errors) and spawns the
+/// routing + executor threads.
+pub struct EngineBuilder {
+    buckets: Vec<BucketSpec>,
+    policy: BatchPolicy,
+    queue_depth: usize,
+    seed: u32,
+}
+
+impl Default for EngineBuilder {
+    fn default() -> Self {
+        EngineBuilder { buckets: Vec::new(), policy: BatchPolicy::default(), queue_depth: 128, seed: 0 }
+    }
+}
+
+impl EngineBuilder {
+    pub fn new() -> EngineBuilder {
+        EngineBuilder::default()
+    }
+
+    /// Add a seed-initialized bucket for program base `base`
+    /// (e.g. `ember_hrrformer_small_T256_B8`).
+    pub fn bucket(mut self, base: impl Into<String>) -> Self {
+        self.buckets.push(BucketSpec { base: base.into(), params: None });
+        self
+    }
+
+    /// Add a bucket serving trained parameters (e.g. from a checkpoint).
+    pub fn bucket_with_params(mut self, base: impl Into<String>, params: ParamStore) -> Self {
+        self.buckets.push(BucketSpec { base: base.into(), params: Some(params) });
+        self
+    }
+
+    /// Add several seed-initialized buckets at once.
+    pub fn buckets<I, S>(mut self, bases: I) -> Self
+    where
+        I: IntoIterator<Item = S>,
+        S: Into<String>,
+    {
+        for b in bases {
+            self = self.bucket(b);
+        }
+        self
+    }
+
+    /// Dynamic batching policy shared by every bucket.
+    pub fn policy(mut self, policy: BatchPolicy) -> Self {
+        self.policy = policy;
+        self
+    }
+
+    /// Admission-queue depth; per-bucket queues use the same depth.
+    /// Requests beyond it are rejected with [`EngineError::QueueFull`]
+    /// (`submit`) or block (`submit_wait`).
+    pub fn queue_depth(mut self, depth: usize) -> Self {
+        self.queue_depth = depth.max(1);
+        self
+    }
+
+    /// Parameter-init seed for buckets without explicit params. One
+    /// validated `u32` threads through to every `<base>_init` program.
+    pub fn seed(mut self, seed: u32) -> Self {
+        self.seed = seed;
+        self
+    }
+
+    /// Compile all buckets and start the engine. Blocks until every
+    /// executor has compiled its session (or one fails — then every
+    /// thread is torn down and the error is returned).
+    pub fn build(self, manifest: &Manifest) -> Result<Engine> {
+        anyhow::ensure!(!self.buckets.is_empty(), "no predict buckets configured");
+
+        // Resolve bucket shapes up front: unknown bases fail here, before
+        // any thread or compile work starts.
+        let mut resolved: Vec<(Bucket, BucketSpec)> = Vec::with_capacity(self.buckets.len());
+        for spec in self.buckets {
+            let p = manifest.get(&format!("{}_predict", spec.base))?;
+            resolved.push((Bucket { seq_len: p.seq_len, batch: p.batch }, spec));
+        }
+        resolved.sort_by_key(|(b, _)| b.seq_len);
+        for w in resolved.windows(2) {
+            anyhow::ensure!(
+                w[0].0.seq_len != w[1].0.seq_len,
+                "duplicate bucket T={} ('{}' and '{}')",
+                w[0].0.seq_len,
+                w[0].1.base,
+                w[1].1.base
+            );
+        }
+
+        let stats = Arc::new(EngineStats::default());
+        let manifest_dir = manifest.dir.clone();
+
+        // One executor thread per bucket; each compiles its own session
+        // and signals readiness before the engine is handed to callers.
+        let mut job_txs = Vec::new();
+        let mut readies = Vec::new();
+        let mut threads = Vec::new();
+        let mut buckets = Vec::new();
+        for (bucket, spec) in resolved {
+            let (job_tx, job_rx) = sync_channel::<ExecMsg>(self.queue_depth);
+            let (ready_tx, ready_rx) = sync_channel::<Result<()>>(1);
+            let cfg = ExecutorConfig {
+                base: spec.base.clone(),
+                manifest_dir: manifest_dir.clone(),
+                seed: self.seed,
+                params: spec.params,
+                policy: self.policy,
+            };
+            let stats_exec = stats.clone();
+            let thread = std::thread::Builder::new()
+                .name(format!("hrr-exec-T{}", bucket.seq_len))
+                .spawn(move || executor::run_executor(cfg, job_rx, ready_tx, stats_exec))
+                .context("spawn executor")?;
+            job_txs.push(job_tx);
+            readies.push((spec.base, ready_rx));
+            threads.push(thread);
+            buckets.push(bucket);
+        }
+
+        let mut startup_err = None;
+        for (base, ready) in readies {
+            let res = match ready.recv() {
+                Ok(r) => r,
+                Err(_) => Err(anyhow::anyhow!("executor for '{base}' died during startup")),
+            };
+            if let Err(e) = res {
+                startup_err.get_or_insert(e);
+            }
+        }
+        if let Some(e) = startup_err {
+            for tx in &job_txs {
+                let _ = tx.send(ExecMsg::Shutdown);
+            }
+            drop(job_txs);
+            for t in threads {
+                let _ = t.join();
+            }
+            return Err(e);
+        }
+
+        // Routing thread: admission queue → router → per-bucket channels.
+        let (tx, rx) = sync_channel::<Msg>(self.queue_depth);
+        let router = Router::new(buckets.clone());
+        let stats_route = stats.clone();
+        let stash_cap = self.queue_depth;
+        let routing = std::thread::Builder::new()
+            .name("hrr-router".into())
+            .spawn(move || routing_loop(rx, router, job_txs, stats_route, stash_cap))
+            .context("spawn routing thread")?;
+        threads.insert(0, routing);
+
+        Ok(Engine {
+            client: EngineClient { tx, stats },
+            buckets,
+            threads,
+        })
+    }
+}
+
+/// The running service. `stop()` (or drop) drains every queue, then
+/// joins the routing and executor threads.
+pub struct Engine {
+    client: EngineClient,
+    buckets: Vec<Bucket>,
+    /// routing thread first, then one executor per bucket
+    threads: Vec<JoinHandle<()>>,
+}
+
+impl Engine {
+    pub fn builder() -> EngineBuilder {
+        EngineBuilder::new()
+    }
+
+    /// A cheap cloneable handle for concurrent client threads.
+    pub fn client(&self) -> EngineClient {
+        self.client.clone()
+    }
+
+    /// Non-blocking submit (see [`EngineClient::submit`]).
+    pub fn submit(&self, req: impl Into<InferRequest>) -> Result<Ticket, EngineError> {
+        self.client.submit(req)
+    }
+
+    /// Blocking submit (see [`EngineClient::submit_wait`]).
+    pub fn submit_wait(&self, req: impl Into<InferRequest>) -> Result<Ticket, EngineError> {
+        self.client.submit_wait(req)
+    }
+
+    /// Submit and wait for the reply.
+    pub fn classify(&self, ids: Vec<i32>) -> Result<InferReply, EngineError> {
+        self.client.classify(ids)
+    }
+
+    /// The compiled (seq_len, batch) buckets, sorted by seq_len.
+    pub fn buckets(&self) -> &[Bucket] {
+        &self.buckets
+    }
+
+    pub fn stats(&self) -> &Arc<EngineStats> {
+        &self.client.stats
+    }
+
+    /// Drain all queues and stop every thread.
+    pub fn stop(mut self) {
+        self.shutdown();
+    }
+
+    fn shutdown(&mut self) {
+        if self.threads.is_empty() {
+            return;
+        }
+        let _ = self.client.tx.send(Msg::Shutdown);
+        for t in self.threads.drain(..) {
+            let _ = t.join();
+        }
+    }
+}
+
+impl Drop for Engine {
+    fn drop(&mut self) {
+        self.shutdown();
+    }
+}
+
+/// How often the router retries handing off stashed blocking jobs while
+/// waiting for new admissions.
+const PENDING_RETRY: Duration = Duration::from_millis(1);
+
+/// Routing thread body: pull admitted requests, pick the smallest bucket
+/// that fits, and hand off over that bucket's bounded channel.
+///
+/// Two handoff modes keep the "no cross-bucket head-of-line blocking"
+/// property compatible with the "blocking submits are never rejected"
+/// guarantee:
+///
+/// * Fail-fast requests (`submit`): `try_send` — a full bucket rejects
+///   them with `QueueFull` and routing moves on immediately.
+/// * Blocking requests (`submit_wait`/`classify`): a full bucket stashes
+///   the job in that bucket's bounded overflow queue; the router keeps
+///   serving other buckets and retries the stash as slots free. Only
+///   when a single bucket's stash is itself full (≥ queue_depth more
+///   blocking jobs than channel + stash can hold) does the router park
+///   on that bucket — extreme oversubscription by clients who opted
+///   into waiting.
+fn routing_loop(
+    rx: Receiver<Msg>,
+    router: Router,
+    bucket_txs: Vec<SyncSender<ExecMsg>>,
+    stats: Arc<EngineStats>,
+    stash_cap: usize,
+) {
+    let mut stash: Vec<VecDeque<Job>> = (0..bucket_txs.len()).map(|_| VecDeque::new()).collect();
+
+    // Hand stashed jobs to their executor, oldest first, until one
+    // doesn't fit; returns jobs whose executor is gone to the error path.
+    let flush_stash = |stash: &mut Vec<VecDeque<Job>>| {
+        for (i, q) in stash.iter_mut().enumerate() {
+            while let Some(job) = q.pop_front() {
+                match bucket_txs[i].try_send(ExecMsg::Job(job)) {
+                    Ok(()) => {}
+                    Err(TrySendError::Full(ExecMsg::Job(job))) => {
+                        q.push_front(job);
+                        break;
+                    }
+                    Err(TrySendError::Disconnected(ExecMsg::Job(job))) => {
+                        let _ = job.reply.send(Err(EngineError::Shutdown));
+                    }
+                    Err(_) => {}
+                }
+            }
+        }
+    };
+
+    loop {
+        flush_stash(&mut stash);
+        let msg = if stash.iter().all(|q| q.is_empty()) {
+            match rx.recv() {
+                Ok(m) => m,
+                Err(_) => break,
+            }
+        } else {
+            match rx.recv_timeout(PENDING_RETRY) {
+                Ok(m) => m,
+                Err(std::sync::mpsc::RecvTimeoutError::Timeout) => continue,
+                Err(std::sync::mpsc::RecvTimeoutError::Disconnected) => break,
+            }
+        };
+        match msg {
+            Msg::Req(req) => {
+                if router.is_empty() {
+                    let _ = req.reply.send(Err(EngineError::BucketMissing));
+                    continue;
+                }
+                let (i, truncated) = match router.route(req.ids.len()) {
+                    Route::To(i) => (i, false),
+                    Route::Truncate(i) => (i, true),
+                };
+                let blocking = req.blocking;
+                let job = Job {
+                    ids: req.ids,
+                    truncated,
+                    submitted: req.submitted,
+                    reply: req.reply,
+                };
+                if blocking {
+                    if stash[i].is_empty() {
+                        match bucket_txs[i].try_send(ExecMsg::Job(job)) {
+                            Ok(()) => {}
+                            Err(TrySendError::Full(ExecMsg::Job(job))) => stash[i].push_back(job),
+                            Err(TrySendError::Disconnected(ExecMsg::Job(job))) => {
+                                let _ = job.reply.send(Err(EngineError::Shutdown));
+                            }
+                            Err(_) => {}
+                        }
+                    } else {
+                        if stash[i].len() >= stash_cap {
+                            // Bounded stash overflow: park on this bucket
+                            // (oldest job first, preserving FIFO).
+                            let oldest = stash[i].pop_front().unwrap();
+                            if let Err(std::sync::mpsc::SendError(ExecMsg::Job(j))) =
+                                bucket_txs[i].send(ExecMsg::Job(oldest))
+                            {
+                                let _ = j.reply.send(Err(EngineError::Shutdown));
+                            }
+                        }
+                        stash[i].push_back(job);
+                    }
+                } else if !stash[i].is_empty() {
+                    // Blocking backlog is queued ahead of this request;
+                    // jumping the channel would break per-bucket FIFO.
+                    stats.record_rejected();
+                    let _ = job.reply.send(Err(EngineError::QueueFull));
+                } else {
+                    match bucket_txs[i].try_send(ExecMsg::Job(job)) {
+                        Ok(()) => {}
+                        Err(TrySendError::Full(ExecMsg::Job(job))) => {
+                            stats.record_rejected();
+                            let _ = job.reply.send(Err(EngineError::QueueFull));
+                        }
+                        Err(TrySendError::Disconnected(ExecMsg::Job(job))) => {
+                            let _ = job.reply.send(Err(EngineError::Shutdown));
+                        }
+                        Err(_) => {}
+                    }
+                }
+            }
+            Msg::Shutdown => break,
+        }
+    }
+    // Drain stashed blocking jobs (they are never rejected), then tell
+    // the executors to drain their own queues — every in-flight request
+    // still gets a reply before the threads exit.
+    for (i, q) in stash.into_iter().enumerate() {
+        for job in q {
+            if let Err(std::sync::mpsc::SendError(ExecMsg::Job(j))) =
+                bucket_txs[i].send(ExecMsg::Job(job))
+            {
+                let _ = j.reply.send(Err(EngineError::Shutdown));
+            }
+        }
+    }
+    for tx in bucket_txs {
+        let _ = tx.send(ExecMsg::Shutdown);
+    }
+}

@@ -16,8 +16,9 @@
 use anyhow::{bail, Context, Result};
 
 use hrrformer::bench;
-use hrrformer::coordinator::{self, BatchPolicy, ServerConfig, TrainConfig};
+use hrrformer::coordinator::{self, BatchPolicy, TrainConfig};
 use hrrformer::data::{by_task, Split, Stream};
+use hrrformer::engine::Engine;
 use hrrformer::runtime::{default_manifest, Runtime};
 use hrrformer::util::cli::Args;
 
@@ -27,13 +28,23 @@ repro — Hrrformer reproduction coordinator
 USAGE:
   repro train --base <program base> [--steps N] [--seed S] [--curve path.csv] [--ckpt path]
   repro serve [--bases a,b,c] [--requests N] [--max-batch B] [--max-wait-ms MS]
+              [--queue-depth D] [--seed S]
   repro bench ember     [--steps N] [--models a,b] [--timeout-s S]
   repro bench lra       [--steps N] [--models a,b] [--tasks t1,t2] [--curves]
   repro bench speed     [--steps N]
-  repro bench inference [--examples N] [--sweep-batch]
+  repro bench inference [--examples N] [--sweep-batch | --engine]
   repro bench weights   [--steps N] [--multi-layer]
   repro data --task <task> [--n N] [--seq-len T]
   repro inspect
+
+serve runs the typed Engine API on synthetic load: one bucket per
+--bases entry (each a compiled `<base>_predict` program), a routing
+thread that picks the smallest bucket fitting each request, and one
+executor thread per bucket — each owning its own PJRT runtime because
+xla handles are !Send — so buckets batch and execute in parallel.
+Over-length requests are truncated to the largest bucket and replies
+carry an explicit `truncated` flag. --seed must be a u32 and seeds
+parameter init for every bucket.
 
 Artifacts are read from ./artifacts (override: HRRFORMER_ARTIFACTS).
 Bench outputs land in ./results (override: HRRFORMER_RESULTS).
@@ -88,6 +99,17 @@ fn cmd_train(args: &Args) -> Result<()> {
     Ok(())
 }
 
+/// Parse `--seed` as a real u32 exactly once — no silent `as u32` wrap —
+/// and thread the one validated value through `EngineBuilder`.
+fn parse_seed(args: &Args) -> Result<u32> {
+    match args.get("seed") {
+        None => Ok(0),
+        Some(s) => s
+            .parse::<u32>()
+            .with_context(|| format!("--seed '{s}' must be a u32 (0..=4294967295)")),
+    }
+}
+
 fn cmd_serve(args: &Args) -> Result<()> {
     let manifest = default_manifest()?;
     let default_bases = [
@@ -97,24 +119,23 @@ fn cmd_serve(args: &Args) -> Result<()> {
     ];
     let bases = args.list("bases", &default_bases);
     let n_requests = args.usize("requests", 64);
-    let cfg = ServerConfig {
-        bases: bases.clone(),
-        policy: BatchPolicy {
+    let seed = parse_seed(args)?;
+    eprintln!("[serve] compiling {} buckets…", bases.len());
+    let engine = Engine::builder()
+        .buckets(bases)
+        .policy(BatchPolicy {
             max_batch: args.usize("max-batch", 8),
             max_wait: std::time::Duration::from_millis(args.u64("max-wait-ms", 20)),
-        },
-        queue_depth: args.usize("queue-depth", 128),
-        seed: args.u64("seed", 0) as u32,
-        params: vec![None; bases.len()],
-    };
-    eprintln!("[serve] compiling {} buckets…", bases.len());
-    let server = coordinator::Server::start(&manifest, cfg)?;
-    let handle = server.handle();
+        })
+        .queue_depth(args.usize("queue-depth", 128))
+        .seed(seed)
+        .build(&manifest)?;
 
     // synthetic load: ember byte sequences with varied lengths
     let ds = by_task("ember", 1024).unwrap();
-    let mut stream = Stream::new(ds.as_ref(), Split::Test, args.u64("seed", 0));
+    let mut stream = Stream::new(ds.as_ref(), Split::Test, seed as u64);
     let mut correct = 0usize;
+    let mut truncated = 0usize;
     eprintln!("[serve] sending {n_requests} requests…");
     let pending: Vec<_> = (0..n_requests)
         .map(|i| {
@@ -122,33 +143,33 @@ fn cmd_serve(args: &Args) -> Result<()> {
             // vary request lengths to exercise the router
             let keep = 128 + (i * 97) % 900;
             ex.ids.truncate(keep);
-            let rx = handle.submit(ex.ids).unwrap();
-            (ex.label, rx)
+            let ticket = engine.submit_wait(ex.ids)?;
+            Ok((ex.label, ticket))
         })
-        .collect();
-    for (label, rx) in pending {
-        let reply = rx.recv()??;
-        if reply.label as i32 == label {
-            correct += 1;
-        }
+        .collect::<Result<_>>()?;
+    for (label, ticket) in pending {
+        let reply = ticket.wait()?;
+        correct += (reply.label as i32 == label) as usize;
+        truncated += reply.truncated as usize;
     }
-    let stats = &handle.stats;
+    let stats = engine.stats();
     println!(
-        "served {n_requests} requests: {:.1} req/s, p50 {:.1} ms, p99 {:.1} ms, mean {:.1} ms, accuracy {:.2} (untrained params)",
+        "served {n_requests} requests: {:.1} req/s, p50 {:.1} ms, p99 {:.1} ms, mean {:.1} ms, {truncated} truncated, accuracy {:.2} (untrained params)",
         stats.throughput.per_second(),
         stats.latency.percentile_ms(50.0),
         stats.latency.percentile_ms(99.0),
         stats.latency.mean_ms(),
         correct as f64 / n_requests as f64,
     );
-    server.stop();
+    engine.stop();
     Ok(())
 }
 
 fn cmd_bench(args: &Args) -> Result<()> {
     let which = args.positional.get(1).map(|s| s.as_str()).context("bench <ember|lra|speed|inference|weights>")?;
-    let rt = Runtime::cpu()?;
     let manifest = default_manifest()?;
+    // The runtime is created per arm: the engine serving bench manages
+    // its own per-executor runtimes and must not pay for an unused one.
     match which {
         "ember" => {
             let mut cfg = bench::ember::EmberBenchCfg::default();
@@ -158,7 +179,7 @@ fn cmd_bench(args: &Args) -> Result<()> {
             if args.get("models").is_some() {
                 cfg.models = args.list("models", &[]);
             }
-            bench::ember::run(&rt, &manifest, &cfg)?;
+            bench::ember::run(&Runtime::cpu()?, &manifest, &cfg)?;
         }
         "lra" => {
             let mut cfg = bench::lra::LraBenchCfg::default();
@@ -171,27 +192,32 @@ fn cmd_bench(args: &Args) -> Result<()> {
             if args.get("tasks").is_some() {
                 cfg.tasks = args.list("tasks", &[]);
             }
-            bench::lra::run(&rt, &manifest, &cfg)?;
+            bench::lra::run(&Runtime::cpu()?, &manifest, &cfg)?;
         }
         "speed" => {
             let mut cfg = bench::speed::SpeedBenchCfg::default();
             cfg.steps = args.usize("steps", cfg.steps);
             cfg.seed = args.u64("seed", cfg.seed);
-            bench::speed::run(&rt, &manifest, &cfg)?;
+            bench::speed::run(&Runtime::cpu()?, &manifest, &cfg)?;
         }
         "inference" => {
             let mut cfg = bench::inference::InferBenchCfg::default();
             cfg.examples = args.usize("examples", cfg.examples);
             cfg.seed = args.u64("seed", cfg.seed);
             cfg.sweep_batch = args.bool("sweep-batch");
-            bench::inference::run(&rt, &manifest, &cfg)?;
+            cfg.engine = args.bool("engine");
+            if cfg.engine {
+                bench::inference::run_engine_serve(&manifest, &cfg)?;
+            } else {
+                bench::inference::run(&Runtime::cpu()?, &manifest, &cfg)?;
+            }
         }
         "weights" => {
             let mut cfg = bench::weights::WeightsBenchCfg::default();
             cfg.steps = args.usize("steps", cfg.steps);
             cfg.seed = args.u64("seed", cfg.seed);
             cfg.single_layer = !args.bool("multi-layer");
-            bench::weights::run(&rt, &manifest, &cfg)?;
+            bench::weights::run(&Runtime::cpu()?, &manifest, &cfg)?;
         }
         other => bail!("unknown bench '{other}'"),
     }

@@ -1,8 +1,14 @@
 //! Model state management: parameter stores, checkpoints, and the
 //! train/predict/weights sessions that drive the AOT programs.
+//!
+//! The [`Session`] trait is the uniform surface (spec/bucket accessors,
+//! parameter store) shared by all session types; [`ProgramHandle`]
+//! centralizes the params-first `run_refs` packing they all use.
 
 pub mod params;
 pub mod session;
 
 pub use params::ParamStore;
-pub use session::{PredictSession, StepStats, TrainSession, WeightsSession};
+pub use session::{
+    init_params, PredictSession, ProgramHandle, Session, StepStats, TrainSession, WeightsSession,
+};

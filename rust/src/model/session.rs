@@ -1,12 +1,114 @@
 //! Train/eval/predict sessions: stateful wrappers that own the parameter
 //! and optimizer tensors and drive the AOT-compiled programs.
+//!
+//! All session types share two pieces of plumbing, factored out here so
+//! none of them hand-rolls it:
+//!
+//! * [`ProgramHandle`] — a compiled program plus the params-first calling
+//!   convention every exported program uses (parameter tensors lead the
+//!   input list, per-call tensors trail it).
+//! * [`init_params`] — seed-deterministic parameter initialization by
+//!   running the `<base>_init` program.
+//!
+//! The [`Session`] trait is the uniform read-only surface (spec, bucket
+//! shape, parameter store) the engine, trainer and benches program
+//! against; the concrete types add their op-specific entry points
+//! (`train_step`, `predict`, `weights`).
 
 use std::path::Path;
 
 use anyhow::{Context, Result};
 
 use crate::model::params::ParamStore;
-use crate::runtime::{Manifest, Program, Runtime, Tensor};
+use crate::runtime::{Manifest, Program, ProgramSpec, Runtime, Tensor};
+
+/// A compiled AOT program plus the shared input-packing convention.
+///
+/// Exported programs take their inputs as `[param_0..param_n, extra...]`;
+/// `run_with` borrows the parameter tensors (no memcpy of the ~MB of
+/// weights per call — §Perf/L3 iteration 1) and appends the per-call
+/// extras. `run_refs` is the raw escape hatch for programs that thread
+/// more than parameters through (train_step also carries Adam moments).
+pub struct ProgramHandle {
+    program: Program,
+}
+
+impl ProgramHandle {
+    /// Load + compile (or fetch from the runtime cache) the program named
+    /// `key` in the manifest.
+    pub fn load(rt: &Runtime, manifest: &Manifest, key: &str) -> Result<ProgramHandle> {
+        Ok(ProgramHandle { program: rt.load(manifest.get(key)?)? })
+    }
+
+    pub fn spec(&self) -> &ProgramSpec {
+        &self.program.spec
+    }
+
+    pub fn key(&self) -> &str {
+        self.program.key()
+    }
+
+    /// Execute with the params-first convention: `params` tensors lead,
+    /// `extra` per-call tensors trail.
+    pub fn run_with(&self, params: &ParamStore, extra: &[&Tensor]) -> Result<Vec<Tensor>> {
+        let mut inputs: Vec<&Tensor> = Vec::with_capacity(params.len() + extra.len());
+        inputs.extend(params.tensors.iter());
+        inputs.extend(extra.iter().copied());
+        self.program.run_refs(&inputs)
+    }
+
+    /// Execute with a fully caller-assembled input list.
+    pub fn run_refs(&self, inputs: &[&Tensor]) -> Result<Vec<Tensor>> {
+        self.program.run_refs(inputs)
+    }
+}
+
+/// Run `<base>_init` and wrap the outputs as a named [`ParamStore`].
+/// Deterministic in `seed` (tested in integration_runtime.rs).
+pub fn init_params(rt: &Runtime, manifest: &Manifest, base: &str, seed: u32) -> Result<ParamStore> {
+    let init_spec = manifest.get(&format!("{base}_init"))?;
+    let init = rt.load(init_spec)?;
+    let outs = init.run(&[Tensor::scalar_u32(seed)]).context("run init")?;
+    ParamStore::from_tensors(&init_spec.params, outs)
+}
+
+/// A zeroed store with the same names/shapes/dtypes (Adam moments start
+/// at 0) — derived from the params themselves so no manifest re-lookup.
+fn zeros_matching(store: &ParamStore) -> ParamStore {
+    ParamStore {
+        names: store.names.clone(),
+        tensors: store.tensors.iter().map(|t| Tensor::zeros(t.dtype(), t.shape())).collect(),
+    }
+}
+
+/// Uniform session surface: every session wraps one primary compiled
+/// program and a parameter store; spec/bucket accessors derive from them.
+pub trait Session {
+    /// The session's primary compiled program.
+    fn program(&self) -> &ProgramHandle;
+
+    /// The parameter tensors the program closes over.
+    fn params(&self) -> &ParamStore;
+
+    fn spec(&self) -> &ProgramSpec {
+        self.program().spec()
+    }
+
+    /// Batch capacity of the compiled (fixed-shape) program.
+    fn batch(&self) -> usize {
+        self.spec().batch
+    }
+
+    /// Sequence length of the compiled (fixed-shape) program.
+    fn seq_len(&self) -> usize {
+        self.spec().seq_len
+    }
+
+    /// Total learnable parameter scalars.
+    fn param_scalars(&self) -> usize {
+        self.params().total_scalars()
+    }
+}
 
 /// Result of one optimizer step.
 #[derive(Debug, Clone, Copy)]
@@ -23,9 +125,19 @@ pub struct TrainSession {
     m: ParamStore,
     v: ParamStore,
     pub step: u32,
-    train: Program,
-    eval: Option<Program>,
+    train: ProgramHandle,
+    eval: Option<ProgramHandle>,
     n_params: usize,
+}
+
+impl Session for TrainSession {
+    fn program(&self) -> &ProgramHandle {
+        &self.train
+    }
+
+    fn params(&self) -> &ParamStore {
+        &self.params
+    }
 }
 
 impl TrainSession {
@@ -33,22 +145,18 @@ impl TrainSession {
     /// `<base>_eval_step`) programs; `base` is e.g.
     /// `listops_hrrformer_small_T512_B8`.
     pub fn create(rt: &Runtime, manifest: &Manifest, base: &str, seed: u32) -> Result<TrainSession> {
-        let init_spec = manifest.get(&format!("{base}_init"))?;
-        let train_spec = manifest.get(&format!("{base}_train_step"))?;
-        let eval_prog = manifest
-            .get(&format!("{base}_eval_step"))
-            .ok()
-            .map(|s| rt.load(s))
-            .transpose()?;
-
-        let init = rt.load(init_spec)?;
-        let outs = init.run(&[Tensor::scalar_u32(seed)]).context("run init")?;
-        let params = ParamStore::from_tensors(&init_spec.params, outs)?;
-        let m = ParamStore::zeros_like(&init_spec.params);
-        let v = ParamStore::zeros_like(&init_spec.params);
-        let train = rt.load(train_spec)?;
-        let n_params = init_spec.params.len();
-        Ok(TrainSession { params, m, v, step: 0, train, eval: eval_prog, n_params })
+        let params = init_params(rt, manifest, base, seed)?;
+        let m = zeros_matching(&params);
+        let v = zeros_matching(&params);
+        let train = ProgramHandle::load(rt, manifest, &format!("{base}_train_step"))?;
+        // optional: timing-only artifacts omit eval_step (missing key →
+        // None; a present-but-broken program still errors)
+        let eval = match manifest.get(&format!("{base}_eval_step")) {
+            Ok(spec) => Some(ProgramHandle { program: rt.load(spec)? }),
+            Err(_) => None,
+        };
+        let n_params = params.len();
+        Ok(TrainSession { params, m, v, step: 0, train, eval, n_params })
     }
 
     /// Restore parameters from a checkpoint (moments reset to zero).
@@ -66,18 +174,11 @@ impl TrainSession {
         self.params.save(path)
     }
 
-    pub fn spec(&self) -> &crate::runtime::ProgramSpec {
-        &self.train.spec
-    }
-
-    pub fn param_scalars(&self) -> usize {
-        self.params.total_scalars()
-    }
-
     /// One optimizer step on a batch (ids: (B,T) i32, labels: (B,) i32).
+    /// train_step threads params + both Adam moments through the program,
+    /// so it assembles the raw input list rather than using `run_with`.
     pub fn train_step(&mut self, ids: &Tensor, labels: &Tensor) -> Result<StepStats> {
         let np = self.n_params;
-        // borrow-based input list (§Perf/L3 iteration 1: no param memcpy)
         let step_t = Tensor::scalar_i32(self.step as i32);
         let mut inputs: Vec<&Tensor> = Vec::with_capacity(3 * np + 3);
         inputs.extend(self.params.tensors.iter());
@@ -108,11 +209,7 @@ impl TrainSession {
     /// Loss/accuracy on a batch without updating parameters.
     pub fn eval_step(&self, ids: &Tensor, labels: &Tensor) -> Result<StepStats> {
         let eval = self.eval.as_ref().context("no eval_step program exported for this model")?;
-        let mut inputs: Vec<&Tensor> = Vec::with_capacity(self.n_params + 2);
-        inputs.extend(self.params.tensors.iter());
-        inputs.push(ids);
-        inputs.push(labels);
-        let outs = eval.run_refs(&inputs)?;
+        let outs = eval.run_with(&self.params, &[ids, labels])?;
         Ok(StepStats {
             step: self.step,
             loss: outs[0].scalar_f32_value()?,
@@ -124,17 +221,23 @@ impl TrainSession {
 /// Inference-only session around a `<base>_predict` program.
 pub struct PredictSession {
     pub params: ParamStore,
-    predict: Program,
+    predict: ProgramHandle,
+}
+
+impl Session for PredictSession {
+    fn program(&self) -> &ProgramHandle {
+        &self.predict
+    }
+
+    fn params(&self) -> &ParamStore {
+        &self.params
+    }
 }
 
 impl PredictSession {
     pub fn create(rt: &Runtime, manifest: &Manifest, base: &str, seed: u32) -> Result<PredictSession> {
-        let init_spec = manifest.get(&format!("{base}_init"))?;
-        let init = rt.load(init_spec)?;
-        let outs = init.run(&[Tensor::scalar_u32(seed)])?;
-        let params = ParamStore::from_tensors(&init_spec.params, outs)?;
-        let predict = rt.load(manifest.get(&format!("{base}_predict"))?)?;
-        Ok(PredictSession { params, predict })
+        let params = init_params(rt, manifest, base, seed)?;
+        Self::with_params(rt, manifest, base, params)
     }
 
     /// Reuse trained parameters (e.g. from a TrainSession checkpoint).
@@ -144,36 +247,31 @@ impl PredictSession {
         base: &str,
         params: ParamStore,
     ) -> Result<PredictSession> {
-        let predict = rt.load(manifest.get(&format!("{base}_predict"))?)?;
+        let predict = ProgramHandle::load(rt, manifest, &format!("{base}_predict"))?;
         Ok(PredictSession { params, predict })
-    }
-
-    pub fn spec(&self) -> &crate::runtime::ProgramSpec {
-        &self.predict.spec
-    }
-
-    pub fn batch(&self) -> usize {
-        self.predict.spec.batch
-    }
-
-    pub fn seq_len(&self) -> usize {
-        self.predict.spec.seq_len
     }
 
     /// Logits for a batch of token ids (B, T).
     pub fn predict(&self, ids: &Tensor) -> Result<Tensor> {
-        let mut inputs: Vec<&Tensor> = Vec::with_capacity(self.params.len() + 1);
-        inputs.extend(self.params.tensors.iter());
-        inputs.push(ids);
-        let outs = self.predict.run_refs(&inputs)?;
-        Ok(outs.into_iter().next().context("predict output")?)
+        let outs = self.predict.run_with(&self.params, &[ids])?;
+        outs.into_iter().next().context("predict output")
     }
 }
 
 /// Session around the `attn_weights` program (Fig 5/9 dumps).
 pub struct WeightsSession {
     pub params: ParamStore,
-    program: Program,
+    program: ProgramHandle,
+}
+
+impl Session for WeightsSession {
+    fn program(&self) -> &ProgramHandle {
+        &self.program
+    }
+
+    fn params(&self) -> &ParamStore {
+        &self.params
+    }
 }
 
 impl WeightsSession {
@@ -183,16 +281,14 @@ impl WeightsSession {
         base: &str,
         params: ParamStore,
     ) -> Result<WeightsSession> {
-        let program = rt.load(manifest.get(&format!("{base}_attn_weights"))?)?;
+        let program = ProgramHandle::load(rt, manifest, &format!("{base}_attn_weights"))?;
         Ok(WeightsSession { params, program })
     }
 
     /// Returns w of shape (L, B, h, T). (The program also emits logits —
     /// second output — to keep all params live; see aot.py.)
     pub fn weights(&self, ids: &Tensor) -> Result<Tensor> {
-        let mut inputs: Vec<&Tensor> = Vec::with_capacity(self.params.len() + 1);
-        inputs.extend(self.params.tensors.iter());
-        inputs.push(ids);
-        Ok(self.program.run_refs(&inputs)?.into_iter().next().context("weights output")?)
+        let outs = self.program.run_with(&self.params, &[ids])?;
+        outs.into_iter().next().context("weights output")
     }
 }

@@ -1,0 +1,26 @@
+//! Shared integration-test helpers.
+//!
+//! The AOT artifacts (`artifacts/manifest.json` + HLO text) are a build
+//! product, not checked in. Tests that need them *skip with a message*
+//! instead of failing, so `cargo test -q` reflects code health on a
+//! fresh checkout and the full suite runs once `make artifacts` has.
+
+#![allow(dead_code)] // not every test binary uses every helper
+
+use hrrformer::runtime::{default_manifest, Manifest};
+
+/// Load the manifest, or print a SKIP line and return `None` when the
+/// artifacts are absent. Use as:
+/// `let Some(manifest) = common::manifest_or_skip("test_name") else { return };`
+pub fn manifest_or_skip(test: &str) -> Option<Manifest> {
+    match default_manifest() {
+        Ok(m) => Some(m),
+        Err(_) => {
+            eprintln!(
+                "SKIP {test}: artifacts/manifest.json not found — run `make artifacts` \
+                 (or set HRRFORMER_ARTIFACTS) to enable this test"
+            );
+            None
+        }
+    }
+}

@@ -1,0 +1,244 @@
+//! End-to-end tests for the typed `Engine` API: multi-bucket routing,
+//! truncation flags, FIFO-per-bucket reply ordering, *parallel* bucket
+//! execution (observed via per-bucket execution spans), `QueueFull`
+//! backpressure, clean shutdown drain, and fail-fast startup.
+//! Requires `make artifacts` (core set); skips cleanly otherwise.
+
+mod common;
+
+use std::time::Duration;
+
+use hrrformer::coordinator::BatchPolicy;
+use hrrformer::data::{by_task, Split, Stream};
+use hrrformer::engine::{Engine, EngineError};
+
+const T256: &str = "ember_hrrformer_small_T256_B8";
+const T512: &str = "ember_hrrformer_small_T512_B8";
+const T1024: &str = "ember_hrrformer_small_T1024_B8";
+
+fn example_ids(seed: u64, len: usize) -> Vec<i32> {
+    let ds = by_task("ember", 1024).unwrap();
+    let mut stream = Stream::new(ds.as_ref(), Split::Test, seed);
+    let mut ex = stream.next_example();
+    // repeat the sequence if the requested length exceeds the sample
+    while ex.ids.len() < len {
+        let extend: Vec<i32> = ex.ids.clone();
+        ex.ids.extend(extend);
+    }
+    ex.ids.truncate(len);
+    ex.ids
+}
+
+#[test]
+fn engine_routes_truncates_and_keeps_fifo_per_bucket() {
+    let Some(manifest) = common::manifest_or_skip("engine_routes_truncates_and_keeps_fifo_per_bucket")
+    else {
+        return;
+    };
+    let engine = Engine::builder()
+        .buckets([T256, T512, T1024])
+        .policy(BatchPolicy { max_batch: 8, max_wait: Duration::from_millis(5) })
+        .queue_depth(64)
+        .seed(0)
+        .build(&manifest)
+        .unwrap();
+    assert_eq!(engine.buckets().len(), 3, "buckets sorted by T");
+
+    // Mixed lengths, including over-length requests (2000 > largest T).
+    let lens = [100usize, 256, 300, 512, 700, 1024, 2000];
+    let pending: Vec<_> = (0..21usize)
+        .map(|i| {
+            let len = lens[i % lens.len()];
+            let want_bucket = match len {
+                0..=256 => 256,
+                257..=512 => 512,
+                _ => 1024, // includes the truncation case (2000 → largest)
+            };
+            let ticket = engine.submit_wait(example_ids(i as u64, len)).unwrap();
+            (len, want_bucket, ticket)
+        })
+        .collect();
+
+    // Replies: correct bucket, explicit truncated flag, finite logits,
+    // and per-bucket seq numbers strictly increasing in submission order
+    // (FIFO within each bucket).
+    let mut last_seq: Vec<(usize, u64)> = Vec::new();
+    for (len, want_bucket, ticket) in pending {
+        let reply = ticket.wait().unwrap();
+        assert_eq!(reply.bucket_t, want_bucket, "router picked wrong bucket for len {len}");
+        assert_eq!(reply.truncated, len > 1024, "truncated flag wrong for len {len}");
+        assert_eq!(reply.logits.len(), 2);
+        assert!(reply.logits.iter().all(|v| v.is_finite()));
+        assert!(reply.batch_size >= 1 && reply.batch_size <= 8);
+        match last_seq.iter_mut().find(|e| e.0 == reply.bucket_t) {
+            Some(e) => {
+                assert!(reply.seq > e.1, "FIFO violated in bucket T={}", reply.bucket_t);
+                e.1 = reply.seq;
+            }
+            None => last_seq.push((reply.bucket_t, reply.seq)),
+        }
+    }
+    assert_eq!(last_seq.len(), 3, "all three buckets served traffic");
+    assert_eq!(
+        engine.stats().throughput.items.load(std::sync::atomic::Ordering::Relaxed),
+        21
+    );
+    engine.stop();
+}
+
+#[test]
+fn engine_buckets_execute_in_parallel() {
+    let Some(manifest) = common::manifest_or_skip("engine_buckets_execute_in_parallel") else {
+        return;
+    };
+    let engine = Engine::builder()
+        .buckets([T256, T1024])
+        // small batches + no deadline slack keep both executors busy
+        .policy(BatchPolicy { max_batch: 2, max_wait: Duration::from_millis(1) })
+        .queue_depth(128)
+        .seed(0)
+        .build(&manifest)
+        .unwrap();
+
+    // Interleave short and long requests so both buckets have a deep
+    // queue of executions to chew through concurrently.
+    let tickets: Vec<_> = (0..96u64)
+        .map(|i| {
+            let len = if i % 2 == 0 { 200 } else { 900 };
+            engine.submit_wait(example_ids(i, len)).unwrap()
+        })
+        .collect();
+    for t in tickets {
+        t.wait().unwrap();
+    }
+
+    let spans = engine.stats().spans();
+    let t256: Vec<_> = spans.iter().filter(|s| s.bucket_t == 256).collect();
+    let t1024: Vec<_> = spans.iter().filter(|s| s.bucket_t == 1024).collect();
+    assert!(!t256.is_empty() && !t1024.is_empty(), "both buckets executed");
+    let overlapping = t256
+        .iter()
+        .flat_map(|a| t1024.iter().map(move |b| a.overlaps(b)))
+        .filter(|&o| o)
+        .count();
+    assert!(
+        overlapping > 0,
+        "expected cross-bucket executions to overlap in time ({} T256 spans, {} T1024 spans)",
+        t256.len(),
+        t1024.len()
+    );
+    engine.stop();
+}
+
+#[test]
+fn engine_backpressure_reports_queue_full() {
+    let Some(manifest) = common::manifest_or_skip("engine_backpressure_reports_queue_full") else {
+        return;
+    };
+    let engine = Engine::builder()
+        .bucket(T256)
+        // long deadline: the queue only drains in units of full batches
+        .policy(BatchPolicy { max_batch: 8, max_wait: Duration::from_millis(50) })
+        .queue_depth(2)
+        .seed(0)
+        .build(&manifest)
+        .unwrap();
+
+    // Flood far more requests than (admission + bucket) queues can hold;
+    // non-blocking submits must start failing fast with QueueFull (and
+    // routed requests that find the bucket queue full resolve to it).
+    let ids = example_ids(0, 200);
+    let mut tickets = Vec::new();
+    let mut rejected_at_submit = 0usize;
+    for _ in 0..256 {
+        match engine.submit(ids.clone()) {
+            Ok(t) => tickets.push(t),
+            Err(EngineError::QueueFull) => rejected_at_submit += 1,
+            Err(e) => panic!("unexpected submit error: {e}"),
+        }
+    }
+    let mut served = 0usize;
+    let mut rejected_in_bucket = 0usize;
+    for t in tickets {
+        match t.wait() {
+            Ok(_) => served += 1,
+            Err(EngineError::QueueFull) => rejected_in_bucket += 1,
+            Err(e) => panic!("unexpected reply error: {e}"),
+        }
+    }
+    let rejected = rejected_at_submit + rejected_in_bucket;
+    assert!(rejected > 0, "expected QueueFull under a 256-request flood with depth 2");
+    assert!(served > 0, "some requests must still be served");
+    assert_eq!(served + rejected, 256, "every request accounted for");
+    assert!(
+        engine.stats().rejected.load(std::sync::atomic::Ordering::Relaxed) >= rejected as u64,
+        "stats must count rejections"
+    );
+    engine.stop();
+}
+
+#[test]
+fn blocking_submits_never_see_queue_full() {
+    let Some(manifest) = common::manifest_or_skip("blocking_submits_never_see_queue_full") else {
+        return;
+    };
+    // Tiny queues + a flood: fail-fast submits would reject here (see
+    // the test above), but submit_wait opted into backpressure-by-
+    // waiting and must get every request served.
+    let engine = Engine::builder()
+        .bucket(T256)
+        .policy(BatchPolicy { max_batch: 8, max_wait: Duration::from_millis(5) })
+        .queue_depth(2)
+        .seed(0)
+        .build(&manifest)
+        .unwrap();
+    let ids = example_ids(0, 200);
+    let tickets: Vec<_> = (0..64).map(|_| engine.submit_wait(ids.clone()).unwrap()).collect();
+    for t in tickets {
+        t.wait().expect("blocking submits must never resolve to QueueFull");
+    }
+    engine.stop();
+}
+
+#[test]
+fn engine_drains_on_shutdown_and_rejects_after() {
+    let Some(manifest) = common::manifest_or_skip("engine_drains_on_shutdown_and_rejects_after")
+    else {
+        return;
+    };
+    let engine = Engine::builder()
+        .bucket(T256)
+        // deadline far in the future: only shutdown drain can flush these
+        .policy(BatchPolicy { max_batch: 8, max_wait: Duration::from_secs(3600) })
+        .queue_depth(32)
+        .seed(0)
+        .build(&manifest)
+        .unwrap();
+    let client = engine.client();
+
+    let tickets: Vec<_> =
+        (0..5).map(|i| engine.submit_wait(example_ids(i, 100 + i as usize)).unwrap()).collect();
+    // Stop with requests still queued: the drain must flush and answer
+    // every one of them (partial batch, batch_size = 5) before exiting.
+    engine.stop();
+    for t in tickets {
+        let reply = t.wait().expect("queued requests must be answered during drain");
+        assert_eq!(reply.batch_size, 5);
+    }
+    // After shutdown the engine is gone: clients get a typed Shutdown.
+    match client.submit(vec![1, 2, 3]) {
+        Err(EngineError::Shutdown) => {}
+        other => panic!("expected Shutdown after stop, got {other:?}"),
+    }
+}
+
+#[test]
+fn engine_build_fails_fast_on_unknown_base_and_empty_config() {
+    let Some(manifest) = common::manifest_or_skip("engine_build_fails_fast") else {
+        return;
+    };
+    let err = Engine::builder().bucket("does_not_exist").build(&manifest).unwrap_err();
+    assert!(err.to_string().contains("not in manifest"), "{err}");
+    let err = Engine::builder().build(&manifest).unwrap_err();
+    assert!(err.to_string().contains("no predict buckets"), "{err}");
+}

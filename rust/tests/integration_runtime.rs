@@ -1,17 +1,14 @@
 //! Integration: manifest → compile → execute real AOT artifacts.
-//! Requires `make artifacts` (core set) to have been run.
+//! Requires `make artifacts` (core set); skips cleanly otherwise.
 
-use hrrformer::model::{ParamStore, PredictSession, TrainSession};
-use hrrformer::runtime::{default_manifest, Manifest, Runtime, Tensor};
+mod common;
+
+use hrrformer::model::{ParamStore, PredictSession, Session, TrainSession};
+use hrrformer::runtime::{Runtime, Tensor};
 use hrrformer::util::rng::Rng;
 
 fn runtime() -> Runtime {
     Runtime::cpu().expect("PJRT CPU client")
-}
-
-fn manifest() -> Manifest {
-    // tests run from the crate root, artifacts/ lives there
-    default_manifest().expect("manifest (run `make artifacts`)")
 }
 
 fn random_batch(rng: &mut Rng, b: usize, t: usize, vocab: usize) -> Tensor {
@@ -21,7 +18,7 @@ fn random_batch(rng: &mut Rng, b: usize, t: usize, vocab: usize) -> Tensor {
 
 #[test]
 fn manifest_loads_core_set() {
-    let m = manifest();
+    let Some(m) = common::manifest_or_skip("manifest_loads_core_set") else { return };
     assert!(m.programs.len() >= 10, "expected core program set, got {}", m.programs.len());
     let spec = m.get("listops_hrrformer_small_T512_B8_train_step").unwrap();
     assert_eq!(spec.seq_len, 512);
@@ -33,8 +30,8 @@ fn manifest_loads_core_set() {
 
 #[test]
 fn init_is_deterministic_in_seed() {
+    let Some(m) = common::manifest_or_skip("init_is_deterministic_in_seed") else { return };
     let rt = runtime();
-    let m = manifest();
     let spec = m.get("ember_hrrformer_small_T256_B8_init").unwrap();
     let init = rt.load(spec).unwrap();
     let a = init.run(&[Tensor::scalar_u32(7)]).unwrap();
@@ -51,9 +48,13 @@ fn init_is_deterministic_in_seed() {
 
 #[test]
 fn predict_shapes_and_finiteness() {
+    let Some(m) = common::manifest_or_skip("predict_shapes_and_finiteness") else { return };
     let rt = runtime();
-    let m = manifest();
     let sess = PredictSession::create(&rt, &m, "ember_hrrformer_small_T256_B8", 3).unwrap();
+    // the Session trait surfaces the compiled bucket shape
+    assert_eq!(sess.seq_len(), 256);
+    assert_eq!(sess.batch(), 8);
+    assert!(sess.param_scalars() > 0);
     let mut rng = Rng::new(0);
     let ids = random_batch(&mut rng, 8, 256, 257);
     let logits = sess.predict(&ids).unwrap();
@@ -63,8 +64,12 @@ fn predict_shapes_and_finiteness() {
 
 #[test]
 fn train_step_updates_params_and_reduces_loss_on_fixed_batch() {
+    let Some(m) =
+        common::manifest_or_skip("train_step_updates_params_and_reduces_loss_on_fixed_batch")
+    else {
+        return;
+    };
     let rt = runtime();
-    let m = manifest();
     let mut sess = TrainSession::create(&rt, &m, "ember_hrrformer_small_T1024_B8", 1).unwrap();
     let mut rng = Rng::new(42);
     let ids = random_batch(&mut rng, 8, 1024, 257);
@@ -88,8 +93,8 @@ fn train_step_updates_params_and_reduces_loss_on_fixed_batch() {
 
 #[test]
 fn eval_step_is_pure() {
+    let Some(m) = common::manifest_or_skip("eval_step_is_pure") else { return };
     let rt = runtime();
-    let m = manifest();
     let sess = TrainSession::create(&rt, &m, "ember_hrrformer_small_T1024_B8", 2).unwrap();
     let mut rng = Rng::new(9);
     let ids = random_batch(&mut rng, 8, 1024, 257);
@@ -103,8 +108,8 @@ fn eval_step_is_pure() {
 
 #[test]
 fn checkpoint_roundtrip_through_session() {
+    let Some(m) = common::manifest_or_skip("checkpoint_roundtrip_through_session") else { return };
     let rt = runtime();
-    let m = manifest();
     let mut sess = TrainSession::create(&rt, &m, "ember_hrrformer_small_T1024_B8", 5).unwrap();
     let mut rng = Rng::new(1);
     let ids = random_batch(&mut rng, 8, 1024, 257);
@@ -124,8 +129,12 @@ fn checkpoint_roundtrip_through_session() {
 
 #[test]
 fn kernel_microbench_program_runs_with_reweighting_semantics() {
+    let Some(m) =
+        common::manifest_or_skip("kernel_microbench_program_runs_with_reweighting_semantics")
+    else {
+        return;
+    };
     let rt = runtime();
-    let m = manifest();
     let spec = m.get("kernel_hrr_N4_T1024_H64").unwrap();
     let prog = rt.load(spec).unwrap();
     let mut rng = Rng::new(3);

@@ -1,16 +1,20 @@
-//! Integration: the coordinator end-to-end — trainer over real programs,
-//! inference service with router + dynamic batcher, failure modes.
-//! Requires `make artifacts` (core set).
+//! Integration: the trainer end-to-end over real programs — loss curves,
+//! checkpoints, failure modes. Requires `make artifacts` (core set);
+//! skips cleanly otherwise. Serving-path coverage lives in
+//! integration_engine.rs.
+
+mod common;
 
 use hrrformer::coordinator::trainer::{train, TrainConfig};
-use hrrformer::coordinator::{BatchPolicy, Server, ServerConfig};
-use hrrformer::data::{by_task, Split, Stream};
-use hrrformer::runtime::{default_manifest, Runtime};
+use hrrformer::runtime::Runtime;
 
 #[test]
 fn trainer_reduces_loss_and_writes_curve_and_ckpt() {
+    let Some(manifest) = common::manifest_or_skip("trainer_reduces_loss_and_writes_curve_and_ckpt")
+    else {
+        return;
+    };
     let rt = Runtime::cpu().unwrap();
-    let manifest = default_manifest().unwrap();
     let dir = std::env::temp_dir().join("hrrformer_train_it");
     std::fs::create_dir_all(&dir).unwrap();
     let curve = dir.join("curve.csv");
@@ -46,101 +50,11 @@ fn trainer_reduces_loss_and_writes_curve_and_ckpt() {
 
 #[test]
 fn trainer_errors_cleanly_on_unknown_base() {
+    let Some(manifest) = common::manifest_or_skip("trainer_errors_cleanly_on_unknown_base") else {
+        return;
+    };
     let rt = Runtime::cpu().unwrap();
-    let manifest = default_manifest().unwrap();
     let cfg = TrainConfig { base: "nope_nothing".into(), ..Default::default() };
     let err = train(&rt, &manifest, &cfg).unwrap_err().to_string();
     assert!(err.contains("not in manifest"), "unhelpful error: {err}");
-}
-
-#[test]
-fn server_routes_batches_and_replies_under_mixed_lengths() {
-    let manifest = default_manifest().unwrap();
-    let cfg = ServerConfig {
-        bases: vec![
-            "ember_hrrformer_small_T256_B8".into(),
-            "ember_hrrformer_small_T512_B8".into(),
-            "ember_hrrformer_small_T1024_B8".into(),
-        ],
-        policy: BatchPolicy {
-            max_batch: 8,
-            max_wait: std::time::Duration::from_millis(5),
-        },
-        queue_depth: 64,
-        seed: 0,
-        params: vec![None, None, None],
-    };
-    let server = Server::start(&manifest, cfg).unwrap();
-    let handle = server.handle();
-
-    let ds = by_task("ember", 1024).unwrap();
-    let mut stream = Stream::new(ds.as_ref(), Split::Test, 42);
-    let lens = [100usize, 256, 300, 512, 700, 1024, 2000];
-    let pending: Vec<_> = (0..14)
-        .map(|i| {
-            let mut ex = stream.next_example();
-            ex.ids.truncate(lens[i % lens.len()]);
-            let want_bucket = match ex.ids.len() {
-                0..=256 => 256,
-                257..=512 => 512,
-                _ => 1024, // includes the truncation case (2000 → largest)
-            };
-            (want_bucket, handle.submit(ex.ids).unwrap())
-        })
-        .collect();
-    for (want_bucket, rx) in pending {
-        let reply = rx.recv().unwrap().unwrap();
-        assert_eq!(reply.bucket_t, want_bucket, "router picked wrong bucket");
-        assert_eq!(reply.logits.len(), 2);
-        assert!(reply.logits.iter().all(|v| v.is_finite()));
-        assert!(reply.batch_size >= 1 && reply.batch_size <= 8);
-    }
-    assert_eq!(handle.stats.throughput.items.load(std::sync::atomic::Ordering::Relaxed), 14);
-    assert!(handle.stats.latency.count() == 14);
-    server.stop();
-}
-
-#[test]
-fn server_start_fails_fast_on_bad_base() {
-    let manifest = default_manifest().unwrap();
-    let cfg = ServerConfig {
-        bases: vec!["does_not_exist".into()],
-        params: vec![None],
-        ..Default::default()
-    };
-    let err = match Server::start(&manifest, cfg) {
-        Ok(_) => panic!("server started with bogus base"),
-        Err(e) => e.to_string(),
-    };
-    assert!(err.contains("not in manifest"), "{err}");
-}
-
-#[test]
-fn handle_survives_server_usage_from_multiple_threads() {
-    let manifest = default_manifest().unwrap();
-    let cfg = ServerConfig {
-        bases: vec!["ember_hrrformer_small_T256_B8".into()],
-        policy: BatchPolicy { max_batch: 8, max_wait: std::time::Duration::from_millis(2) },
-        queue_depth: 32,
-        seed: 1,
-        params: vec![None],
-    };
-    let server = Server::start(&manifest, cfg).unwrap();
-    let mut joins = Vec::new();
-    for c in 0..3 {
-        let h = server.handle();
-        joins.push(std::thread::spawn(move || {
-            let ds = by_task("ember", 256).unwrap();
-            let mut stream = Stream::new(ds.as_ref(), Split::Test, c);
-            for _ in 0..4 {
-                let ex = stream.next_example();
-                let reply = h.classify(ex.ids).unwrap();
-                assert!(reply.label < 2);
-            }
-        }));
-    }
-    for j in joins {
-        j.join().unwrap();
-    }
-    server.stop();
 }

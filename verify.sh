@@ -1,0 +1,32 @@
+#!/usr/bin/env bash
+# verify.sh — the tier-1 gate, runnable locally and in CI.
+#
+#   ./verify.sh          # build + test + fmt + clippy
+#   ./verify.sh --fast   # build + test only
+#
+# Tests that need AOT artifacts (artifacts/manifest.json) skip with a
+# SKIP message instead of failing, so this gate reflects code health on
+# a fresh checkout; run `make artifacts` first for full coverage.
+set -euo pipefail
+cd "$(dirname "$0")"
+
+if ! command -v cargo >/dev/null 2>&1; then
+    echo "verify: SKIP — cargo not found (rust toolchain unavailable in this environment)." >&2
+    echo "verify: install rustup (https://rustup.rs) to run the full gate." >&2
+    exit 0
+fi
+
+run() {
+    echo "==> $*"
+    "$@"
+}
+
+run cargo build --release
+run cargo test -q
+
+if [[ "${1:-}" != "--fast" ]]; then
+    run cargo fmt --check
+    run cargo clippy --all-targets -- -D warnings
+fi
+
+echo "verify: OK"
