@@ -15,8 +15,18 @@ use hrrformer::util::cli::Args;
 
 fn main() -> Result<()> {
     let args = Args::from_env();
+    let Ok(manifest) = default_manifest() else {
+        // Training runs the AOT train_step programs; the native backend
+        // (rust/src/hrr) is inference-only. Point at the demos that do
+        // run artifact-free instead of dying on a manifest error.
+        println!(
+            "lra_listops needs the AOT artifacts (`make artifacts`): training executes \
+             the exported train_step programs.\nFor artifact-free demos of the native \
+             backend, run the quickstart or serve_demo examples."
+        );
+        return Ok(());
+    };
     let rt = Runtime::cpu()?;
-    let manifest = default_manifest()?;
 
     let cfg = TrainConfig {
         base: args.str("base", "listops_hrrformer_small_T512_B8"),

@@ -1,31 +1,49 @@
-//! Quickstart: load the AOT artifacts, initialize a Hrrformer, and
-//! classify a few synthetic malware byte sequences — the minimal tour of
-//! the public API.
+//! Quickstart: initialize a Hrrformer and classify a few synthetic
+//! malware byte sequences — the minimal tour of the public API.
+//!
+//! Runs on either backend behind the same `Predictor` surface:
+//!
+//! * with AOT artifacts (`make artifacts`), a `PredictSession` executes
+//!   the compiled XLA program on the PJRT CPU client;
+//! * on a fresh checkout (no artifacts), it transparently falls back to
+//!   the pure-Rust `NativeSession` — FFT binding kernels, no XLA.
 //!
 //! ```bash
+//! cargo run --release --example quickstart            # native fallback
 //! make artifacts && cargo run --release --example quickstart
 //! ```
 
 use anyhow::Result;
 use hrrformer::data::{batch::BatchStream, by_task, Split};
-use hrrformer::model::{PredictSession, Session};
+use hrrformer::hrr::NativeSession;
+use hrrformer::model::{PredictSession, Predictor, Session};
 use hrrformer::runtime::{default_manifest, Runtime};
 
 fn main() -> Result<()> {
-    // 1. The runtime wraps the PJRT CPU client; the manifest indexes the
-    //    HLO-text programs exported by `python -m compile.aot`.
-    let rt = Runtime::cpu()?;
-    let manifest = default_manifest()?;
-    println!("platform: {} — {} programs", rt.platform(), manifest.programs.len());
-
-    // 2. A PredictSession owns seed-initialized parameters plus the
-    //    compiled predict program for one (task, model, T, B) config.
+    // 1. Pick a backend: compiled artifacts when exported, otherwise the
+    //    pure-Rust forward pass. Both implement `Predictor`.
     let base = "ember_hrrformer_small_T256_B8";
-    let sess = PredictSession::create(&rt, &manifest, base, 42)?;
+    let sess: Box<dyn Predictor> = match default_manifest() {
+        Ok(manifest) => {
+            // The runtime wraps the PJRT CPU client; the manifest indexes
+            // the HLO-text programs exported by `python -m compile.aot`.
+            let rt = Runtime::cpu()?;
+            let n_programs = manifest.programs.len();
+            println!("backend: artifact ({} — {n_programs} programs)", rt.platform());
+            Box::new(PredictSession::create(&rt, &manifest, base, 42)?)
+        }
+        Err(_) => {
+            println!("backend: native (no artifacts found — pure-Rust HRR forward pass)");
+            Box::new(NativeSession::create(base, 42)?)
+        }
+    };
+
+    // 2. A session owns seed-initialized parameters for one
+    //    (task, model, T, B) config.
     println!(
         "model: {} — {} parameter tensors, T={}, B={}",
         base,
-        sess.params.len(),
+        sess.params().len(),
         sess.seq_len(),
         sess.batch()
     );
@@ -35,7 +53,7 @@ fn main() -> Result<()> {
     let mut stream = BatchStream::new(ds.as_ref(), Split::Test, 0, sess.batch(), sess.seq_len());
     let batch = stream.next_batch();
 
-    // 4. One program execution classifies the whole batch.
+    // 4. One predict call classifies the whole batch.
     let logits = sess.predict(&batch.ids)?;
     let preds = logits.argmax_last()?;
     let labels = batch.labels.as_i32()?;
@@ -43,6 +61,6 @@ fn main() -> Result<()> {
     for (p, l) in preds.iter().zip(labels) {
         println!("  {p:>4}  {l:>5}");
     }
-    println!("\nNext: cargo run --release --example lra_listops  (end-to-end training)");
+    println!("\nNext: cargo run --release --example serve_demo  (the full serving engine)");
     Ok(())
 }

@@ -20,32 +20,50 @@
 //!    flag for requests longer than every bucket. Failures arrive as a
 //!    matchable `EngineError`, not strings.
 //!
+//! Works on both backends: `--backend artifact` (default when
+//! `artifacts/` exists) serves the AOT-compiled XLA programs, `--backend
+//! native` serves the pure-Rust HRR forward pass — same engine, same
+//! guarantees, no artifacts needed. With no flag it auto-detects.
+//!
 //! ```bash
-//! make artifacts && cargo run --release --example serve_demo -- --clients 4 --requests 32
+//! cargo run --release --example serve_demo -- --clients 4 --requests 32
+//! make artifacts && cargo run --release --example serve_demo   # artifact path
 //! ```
 
 use anyhow::Result;
 use hrrformer::coordinator::BatchPolicy;
 use hrrformer::data::{by_task, Split, Stream};
-use hrrformer::engine::Engine;
+use hrrformer::engine::{Backend, Engine};
 use hrrformer::runtime::default_manifest;
 use hrrformer::util::cli::Args;
 
 fn main() -> Result<()> {
     let args = Args::from_env();
-    let manifest = default_manifest()?;
-    println!("compiling 3 predict buckets (T=256/512/1024)…");
-    let engine = Engine::builder()
-        .bucket("ember_hrrformer_small_T256_B8")
-        .bucket("ember_hrrformer_small_T512_B8")
-        .bucket("ember_hrrformer_small_T1024_B8")
+    let (backend, manifest) = match args.get("backend") {
+        Some(s) => match s.parse::<Backend>().map_err(anyhow::Error::msg)? {
+            Backend::Artifact => (Backend::Artifact, Some(default_manifest()?)),
+            Backend::Native => (Backend::Native, None),
+        },
+        // auto-detect: artifacts when exported, native otherwise
+        None => match default_manifest() {
+            Ok(m) => (Backend::Artifact, Some(m)),
+            Err(_) => (Backend::Native, None),
+        },
+    };
+    println!("building 3 predict buckets (T=256/512/1024, {backend:?} backend)…");
+    let builder = Engine::builder()
+        .buckets(hrrformer::engine::DEFAULT_EMBER_BUCKETS)
         .policy(BatchPolicy {
             max_batch: args.usize("max-batch", 8),
             max_wait: std::time::Duration::from_millis(args.u64("max-wait-ms", 10)),
         })
         .queue_depth(args.usize("queue-depth", 64))
         .seed(0)
-        .build(&manifest)?;
+        .backend(backend);
+    let engine = match &manifest {
+        Some(m) => builder.build(m)?,
+        None => builder.build_native()?,
+    };
 
     let n_clients = args.usize("clients", 4);
     let per_client = args.usize("requests", 32);

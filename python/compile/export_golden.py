@@ -1,0 +1,236 @@
+"""Golden-vector exporter for the native Rust backend.
+
+Writes small JSON fixtures (config + f32 parameters + token ids +
+float64 reference logits) that ``rust/tests/golden_native.rs`` replays
+through the pure-Rust forward pass (``rust/src/hrr``) and checks within
+1e-4.
+
+Deliberately **numpy-only**: it mirrors the JAX reference
+(``model.py`` + ``models/hrrformer.py`` + ``kernels/ref.py``) operation
+by operation — same LayerNorm eps, same stabilized exact inverse with
+eps 1e-6, same cosine eps, same masked softmax, same tanh-GELU (the
+``jax.nn.gelu`` default) — so fixtures regenerate on any machine, no
+accelerator stack required. Parameters are drawn once, cast to float32
+(the dtype the Rust side stores), then the forward pass runs in float64
+from those f32 values, exactly like the Rust implementation's
+f32-buffers/f64-accumulators split.
+
+Parameter names/order follow the canonical layout of
+``rust/src/hrr/model.rs::param_specs``.
+
+Usage:  python -m compile.export_golden   (from python/)
+   or:  python python/compile/export_golden.py   (from the repo root)
+"""
+
+from __future__ import annotations
+
+import json
+import os
+
+import numpy as np
+
+EPS = 1e-6
+PAD_ID = 0
+OUT_DIR = os.path.join(os.path.dirname(__file__), "..", "..", "rust", "tests", "fixtures")
+
+
+# ---------------------------------------------------------------------------
+# Reference forward pass (float64, numpy)
+# ---------------------------------------------------------------------------
+
+
+def layernorm(x, scale, bias):
+    mu = x.mean(axis=-1, keepdims=True)
+    var = ((x - mu) ** 2).mean(axis=-1, keepdims=True)
+    return (x - mu) / np.sqrt(var + 1e-6) * scale + bias
+
+
+def gelu_tanh(x):
+    c = np.sqrt(2.0 / np.pi)
+    return 0.5 * x * (1.0 + np.tanh(c * (x + 0.044715 * x**3)))
+
+
+def sinusoid_positions(t, d):
+    pos = np.arange(t)[:, None].astype(np.float64)
+    i = np.arange(d)[None, :]
+    angle = pos / np.power(10000.0, (2 * (i // 2)) / d)
+    return np.where(i % 2 == 0, np.sin(angle), np.cos(angle))
+
+
+def hrr_attention(q, k, v, mask):
+    """Paper Eqs. 1-4 for one head batch: q,k,v (B,h,T,H'), mask (B,T)."""
+    m = mask[:, None, :, None]  # (B,1,T,1)
+    kf = np.fft.rfft(k * m, axis=-1)
+    vf = np.fft.rfft(v, axis=-1)
+    beta = (kf * vf).sum(axis=-2, keepdims=True)  # (B,h,1,K) — Eq. 1
+    qf = np.fft.rfft(q, axis=-1)
+    inv = np.conj(qf) / (np.abs(qf) ** 2 + EPS)
+    v_hat = np.fft.irfft(beta * inv, n=q.shape[-1], axis=-1)  # Eq. 2
+    num = (v * v_hat).sum(axis=-1, keepdims=True)
+    den = np.linalg.norm(v, axis=-1, keepdims=True) * np.linalg.norm(
+        v_hat, axis=-1, keepdims=True
+    )
+    a = num / (den + EPS)  # (B,h,T,1) — Eq. 3
+    a = a + (1.0 - m) * (-1e9)
+    w = np.exp(a - a.max(axis=-2, keepdims=True))
+    w = w / w.sum(axis=-2, keepdims=True)  # Eq. 4 cleanup
+    return w * v
+
+
+def split_heads(x, heads):
+    b, t, e = x.shape
+    return x.reshape(b, t, heads, e // heads).transpose(0, 2, 1, 3)
+
+
+def merge_heads(x):
+    b, h, t, hp = x.shape
+    return x.transpose(0, 2, 1, 3).reshape(b, t, h * hp)
+
+
+def forward(cfg, params, ids):
+    p = {name: arr.astype(np.float64) for name, arr in params}
+    b, t = ids.shape
+    e, heads = cfg["embed"], cfg["heads"]
+    mask = (ids != PAD_ID).astype(np.float64)
+
+    x = p["embed.table"][np.clip(ids, 0, cfg["vocab"] - 1)]
+    if cfg["pos"] == "learned":
+        x = x + p["pos.table"][:t][None, :, :]
+    else:
+        x = x + sinusoid_positions(t, e)[None, :, :]
+
+    for i in range(cfg["layers"]):
+        n = f"blocks.{i}."
+        h = layernorm(x, p[n + "ln1.scale"], p[n + "ln1.bias"])
+        q = split_heads(h @ p[n + "mixer.query.kernel"], heads)
+        k = split_heads(h @ p[n + "mixer.key.kernel"], heads)
+        v = split_heads(h @ p[n + "mixer.value.kernel"], heads)
+        mixed = merge_heads(hrr_attention(q, k, v, mask))
+        x = x + mixed @ p[n + "mixer.output.kernel"]
+        h = layernorm(x, p[n + "ln2.scale"], p[n + "ln2.bias"])
+        h = gelu_tanh(h @ p[n + "mlp.fc1.kernel"] + p[n + "mlp.fc1.bias"])
+        x = x + h @ p[n + "mlp.fc2.kernel"] + p[n + "mlp.fc2.bias"]
+
+    x = layernorm(x, p["ln_f.scale"], p["ln_f.bias"])
+    denom = np.maximum(mask.sum(axis=1, keepdims=True), 1.0)
+    pooled = (x * mask[..., None]).sum(axis=1) / denom
+    h = np.maximum(pooled @ p["head1.kernel"] + p["head1.bias"], 0.0)
+    return h @ p["head2.kernel"] + p["head2.bias"]
+
+
+# ---------------------------------------------------------------------------
+# Parameter generation (canonical rust layout, f32 values)
+# ---------------------------------------------------------------------------
+
+
+def make_params(cfg, rng):
+    """Ordered [(name, f32 array)] matching rust param_specs()."""
+    e, mlp = cfg["embed"], cfg["mlp_dim"]
+
+    def glorot(shape):
+        scale = np.sqrt(2.0 / (shape[0] + shape[-1]))
+        return (rng.standard_normal(shape) * scale).astype(np.float32)
+
+    def normal(shape, std):
+        return (rng.standard_normal(shape) * std).astype(np.float32)
+
+    out = [("embed.table", normal((cfg["vocab"], e), 1.0 / np.sqrt(e)))]
+    if cfg["pos"] == "learned":
+        out.append(("pos.table", normal((cfg["seq_len"], e), 0.02)))
+    for i in range(cfg["layers"]):
+        n = f"blocks.{i}."
+        # non-unit scales / non-zero LN+bias params so the fixture
+        # actually exercises those code paths
+        out.append((n + "ln1.scale", normal((e,), 0.1) + 1.0))
+        out.append((n + "ln1.bias", normal((e,), 0.05)))
+        out.append((n + "mixer.query.kernel", glorot((e, e))))
+        out.append((n + "mixer.key.kernel", glorot((e, e))))
+        out.append((n + "mixer.value.kernel", glorot((e, e))))
+        out.append((n + "mixer.output.kernel", glorot((e, e))))
+        out.append((n + "ln2.scale", normal((e,), 0.1) + 1.0))
+        out.append((n + "ln2.bias", normal((e,), 0.05)))
+        out.append((n + "mlp.fc1.kernel", glorot((e, mlp))))
+        out.append((n + "mlp.fc1.bias", normal((mlp,), 0.05)))
+        out.append((n + "mlp.fc2.kernel", glorot((mlp, e))))
+        out.append((n + "mlp.fc2.bias", normal((e,), 0.05)))
+    out.append(("ln_f.scale", normal((e,), 0.1) + 1.0))
+    out.append(("ln_f.bias", normal((e,), 0.05)))
+    out.append(("head1.kernel", glorot((e, mlp))))
+    out.append(("head1.bias", normal((mlp,), 0.05)))
+    out.append(("head2.kernel", glorot((mlp, cfg["classes"]))))
+    out.append(("head2.bias", normal((cfg["classes"],), 0.05)))
+    return [(name, arr.astype(np.float32)) for name, arr in out]
+
+
+def export(name, cfg, seed):
+    rng = np.random.default_rng(seed)
+    params = make_params(cfg, rng)
+    b, t = cfg["batch"], cfg["seq_len"]
+    ids = rng.integers(1, cfg["vocab"], size=(b, t)).astype(np.int32)
+    # trailing PAD on the last row exercises the mask everywhere
+    ids[-1, t - t // 3 :] = PAD_ID
+    logits = forward(cfg, params, ids)
+
+    doc = {
+        "name": name,
+        "seed": seed,
+        "config": cfg,
+        "ids": ids.tolist(),
+        "params": [
+            {
+                "name": pname,
+                "shape": list(arr.shape),
+                "data": [float(v) for v in arr.reshape(-1)],
+            }
+            for pname, arr in params
+        ],
+        "logits": [[float(v) for v in row] for row in logits],
+        "tolerance": 1e-4,
+    }
+    os.makedirs(OUT_DIR, exist_ok=True)
+    path = os.path.join(OUT_DIR, f"{name}.json")
+    with open(path, "w") as f:
+        json.dump(doc, f)
+    print(f"wrote {path}: B={b} T={t} E={cfg['embed']} heads={cfg['heads']} "
+          f"layers={cfg['layers']} -> logits {np.asarray(logits).shape}")
+
+
+def main():
+    # power-of-two head dim (radix-2 FFT path), fixed sinusoid positions
+    export(
+        "golden_hrr_fixed",
+        {
+            "task": "golden",
+            "vocab": 11,
+            "seq_len": 12,
+            "batch": 2,
+            "embed": 16,
+            "mlp_dim": 32,
+            "heads": 2,
+            "layers": 2,
+            "classes": 4,
+            "pos": "fixed",
+        },
+        seed=20230701,
+    )
+    # non-power-of-two head dim (naive-DFT fallback), learned positions
+    export(
+        "golden_hrr_learned",
+        {
+            "task": "golden",
+            "vocab": 9,
+            "seq_len": 10,
+            "batch": 2,
+            "embed": 12,
+            "mlp_dim": 16,
+            "heads": 2,
+            "layers": 1,
+            "classes": 3,
+            "pos": "learned",
+        },
+        seed=777,
+    )
+
+
+if __name__ == "__main__":
+    main()

@@ -14,7 +14,8 @@ use anyhow::{Context, Result};
 use crate::bench::results_dir;
 use crate::coordinator::BatchPolicy;
 use crate::data::{batch::BatchStream, by_task, Split, Stream};
-use crate::engine::Engine;
+use crate::engine::{Backend, Engine};
+use crate::hrr::HrrConfig;
 use crate::model::{PredictSession, Session};
 use crate::runtime::{Manifest, ProgramSpec, Runtime};
 use crate::util::table::Table;
@@ -27,11 +28,20 @@ pub struct InferBenchCfg {
     /// serve through the Engine (routing + batching + parallel buckets)
     /// instead of timing raw sessions
     pub engine: bool,
+    /// engine-serving backend (`--engine` only): compiled artifacts or
+    /// the pure-Rust native forward pass
+    pub backend: Backend,
 }
 
 impl Default for InferBenchCfg {
     fn default() -> Self {
-        InferBenchCfg { examples: 128, seed: 0, sweep_batch: false, engine: false }
+        InferBenchCfg {
+            examples: 128,
+            seed: 0,
+            sweep_batch: false,
+            engine: false,
+            backend: Backend::Artifact,
+        }
     }
 }
 
@@ -79,25 +89,48 @@ fn time_predict(
 /// Serve `cfg.examples` mixed-length requests through the Engine and
 /// report per-bucket traffic plus end-to-end latency percentiles.
 /// Needs no caller-provided `Runtime` — every engine executor creates
-/// its own (PJRT handles are `!Send`).
-pub fn run_engine_serve(manifest: &Manifest, cfg: &InferBenchCfg) -> Result<Vec<InferRow>> {
-    let mut specs: Vec<&ProgramSpec> = manifest
-        .select(|p| p.task == "ember" && p.kind == "predict" && p.model == "hrrformer");
-    anyhow::ensure!(!specs.is_empty(), "no ember predict artifacts — run `make artifacts`");
-    specs.sort_by_key(|p| p.seq_len);
-    specs.dedup_by_key(|p| p.seq_len);
-    let max_t = specs.last().unwrap().seq_len;
+/// its own session (PJRT handles are `!Send`; the native backend builds
+/// a `NativeSession` instead and accepts `manifest: None`).
+pub fn run_engine_serve(manifest: Option<&Manifest>, cfg: &InferBenchCfg) -> Result<Vec<InferRow>> {
+    // (base, seq_len) per bucket: from the manifest on the artifact
+    // backend, from the preset tables on the native one.
+    let buckets: Vec<(String, usize)> = match cfg.backend {
+        Backend::Artifact => {
+            let manifest = manifest.context(
+                "artifact engine bench requires artifacts — run `make artifacts` \
+                 or pass --backend native",
+            )?;
+            let mut specs: Vec<&ProgramSpec> = manifest
+                .select(|p| p.task == "ember" && p.kind == "predict" && p.model == "hrrformer");
+            anyhow::ensure!(!specs.is_empty(), "no ember predict artifacts — run `make artifacts`");
+            specs.sort_by_key(|p| p.seq_len);
+            specs.dedup_by_key(|p| p.seq_len);
+            specs
+                .iter()
+                .map(|p| (p.key.trim_end_matches("_predict").to_string(), p.seq_len))
+                .collect()
+        }
+        Backend::Native => crate::engine::DEFAULT_EMBER_BUCKETS
+            .iter()
+            .map(|b| Ok((b.to_string(), HrrConfig::from_base(b)?.seq_len)))
+            .collect::<Result<_>>()?,
+    };
+    let max_t = buckets.iter().map(|&(_, t)| t).max().unwrap();
     let seed = u32::try_from(cfg.seed).context("--seed must fit in u32")?;
 
     let mut builder = Engine::builder()
         .policy(BatchPolicy::default())
         .queue_depth(256)
-        .seed(seed);
-    for spec in &specs {
-        builder = builder.bucket(spec.key.trim_end_matches("_predict"));
+        .seed(seed)
+        .backend(cfg.backend);
+    for (base, _) in &buckets {
+        builder = builder.bucket(base.clone());
     }
-    eprintln!("[infer] compiling {} engine buckets…", specs.len());
-    let engine = builder.build(manifest)?;
+    eprintln!("[infer] building {} engine buckets ({:?} backend)…", buckets.len(), cfg.backend);
+    let engine = match cfg.backend {
+        Backend::Artifact => builder.build(manifest.unwrap())?,
+        Backend::Native => builder.build_native()?,
+    };
 
     // Mixed lengths spanning (and overshooting) the bucket range, so the
     // sweep exercises routing, padding and truncation.
@@ -177,7 +210,7 @@ fn write_csv(rows: &[InferRow], name: &str) {
 pub fn run(rt: &Runtime, manifest: &Manifest, cfg: &InferBenchCfg) -> Result<Vec<InferRow>> {
     if cfg.engine {
         // engine path writes its own table/CSV and needs no shared rt
-        return run_engine_serve(manifest, cfg);
+        return run_engine_serve(Some(manifest), cfg);
     }
     let mut rows = Vec::new();
 

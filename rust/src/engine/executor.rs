@@ -1,12 +1,14 @@
-//! Per-bucket executor thread: compiles and owns one predict session,
+//! Per-bucket executor thread: builds and owns one predict session,
 //! batches its queue with deadline-aware flushing, and executes.
 //!
-//! The xla crate's PJRT handles are `!Send`, so the `Runtime` and the
-//! compiled `PredictSession` are created *inside* the executor thread and
-//! never cross a thread boundary; only plain data (token ids, logits,
-//! errors) moves over the channels. Each bucket gets its own executor, so
-//! a slow T=1024 batch cannot head-of-line-block T=256 traffic — the
-//! routing thread stays free to feed every other bucket in parallel.
+//! The session is built *inside* the executor thread and held as a
+//! `Box<dyn Predictor>` — either a compiled `PredictSession` (the xla
+//! crate's PJRT handles are `!Send` and must never cross a thread
+//! boundary) or the artifact-free `NativeSession`; only plain data
+//! (token ids, logits, errors) moves over the channels. Each bucket gets
+//! its own executor, so a slow T=1024 batch cannot head-of-line-block
+//! T=256 traffic — the routing thread stays free to feed every other
+//! bucket in parallel.
 
 use std::path::PathBuf;
 use std::sync::mpsc::{Receiver, RecvTimeoutError, SyncSender};
@@ -17,8 +19,9 @@ use anyhow::{Context, Result};
 
 use crate::coordinator::batcher::{BatchPolicy, BatchQueue, Pending};
 use crate::engine::error::EngineError;
-use crate::engine::{EngineStats, ExecSpan, InferReply};
-use crate::model::{ParamStore, PredictSession, Session};
+use crate::engine::{Backend, EngineStats, ExecSpan, InferReply};
+use crate::hrr::{HrrConfig, NativeSession};
+use crate::model::{ParamStore, PredictSession, Predictor, Session};
 use crate::runtime::{Manifest, Runtime, Tensor};
 
 /// A routed request, as handed from the routing thread to an executor.
@@ -42,7 +45,9 @@ pub(crate) enum ExecMsg {
 /// Everything an executor needs to build its thread-local session.
 pub(crate) struct ExecutorConfig {
     pub base: String,
-    pub manifest_dir: PathBuf,
+    pub backend: Backend,
+    /// Present for [`Backend::Artifact`]; the native backend needs none.
+    pub manifest_dir: Option<PathBuf>,
     pub seed: u32,
     /// Trained parameters (None = seed-initialized).
     pub params: Option<ParamStore>,
@@ -69,22 +74,42 @@ pub(crate) fn run_executor(
             return;
         }
     };
-    executor_loop(&sess, rx, cfg.policy, &stats);
+    executor_loop(sess.as_ref(), rx, cfg.policy, &stats);
 }
 
-fn build_session(cfg: &mut ExecutorConfig) -> Result<PredictSession> {
-    let manifest = Manifest::load(&cfg.manifest_dir)?;
-    let rt = Runtime::cpu().context("executor PJRT runtime")?;
+/// Build the bucket's session for the configured backend. Either way the
+/// result lives and dies on this thread.
+fn build_session(cfg: &mut ExecutorConfig) -> Result<Box<dyn Predictor>> {
     // take() the trained params — no transient copy of multi-MB weights
-    match cfg.params.take() {
-        Some(p) => PredictSession::with_params(&rt, &manifest, &cfg.base, p),
-        None => PredictSession::create(&rt, &manifest, &cfg.base, cfg.seed),
+    let params = cfg.params.take();
+    match cfg.backend {
+        Backend::Artifact => {
+            let dir = cfg
+                .manifest_dir
+                .as_ref()
+                .context("artifact backend requires a manifest directory")?;
+            let manifest = Manifest::load(dir)?;
+            let rt = Runtime::cpu().context("executor PJRT runtime")?;
+            let sess = match params {
+                Some(p) => PredictSession::with_params(&rt, &manifest, &cfg.base, p),
+                None => PredictSession::create(&rt, &manifest, &cfg.base, cfg.seed),
+            }
+            .with_context(|| format!("compile bucket '{}'", cfg.base))?;
+            Ok(Box::new(sess))
+        }
+        Backend::Native => {
+            let sess = match params {
+                Some(p) => NativeSession::with_params(HrrConfig::from_base(&cfg.base)?, p),
+                None => NativeSession::create(&cfg.base, cfg.seed),
+            }
+            .with_context(|| format!("build native bucket '{}'", cfg.base))?;
+            Ok(Box::new(sess))
+        }
     }
-    .with_context(|| format!("compile bucket '{}'", cfg.base))
 }
 
 fn executor_loop(
-    sess: &PredictSession,
+    sess: &dyn Predictor,
     rx: Receiver<ExecMsg>,
     policy: BatchPolicy,
     stats: &Arc<EngineStats>,
@@ -122,7 +147,7 @@ fn executor_loop(
 /// every request in the batch; a bad batch never degrades into silent
 /// `label=0` / empty-logits replies.
 fn execute_batch(
-    sess: &PredictSession,
+    sess: &dyn Predictor,
     batch: Vec<Pending<Job>>,
     stats: &Arc<EngineStats>,
     seq: &mut u64,

@@ -29,10 +29,24 @@
 //! largest T (the paper's EMBER protocol) and the reply carries an
 //! explicit `truncated: bool`.
 //!
+//! # Backends
+//!
+//! Executors are typed against [`crate::model::Predictor`], so the same
+//! engine serves from either backend, chosen by [`Backend`]:
+//!
+//! * [`Backend::Artifact`] (default) — each executor compiles the
+//!   bucket's exported `<base>_predict` program on its own PJRT runtime
+//!   (requires `artifacts/manifest.json`);
+//! * [`Backend::Native`] — each executor builds a
+//!   [`crate::hrr::NativeSession`], the pure-Rust HRR forward pass. No
+//!   artifacts, no PJRT: `build_native()` needs no manifest at all, and
+//!   bucket shapes resolve from the base string + preset tables
+//!   ([`crate::hrr::HrrConfig::from_base`]).
+//!
 //! # Client surface
 //!
 //! [`EngineBuilder`] declares buckets (optionally with trained params),
-//! a [`BatchPolicy`], queue depth and seed; `build()` compiles
+//! a [`BatchPolicy`], queue depth, seed and backend; `build()` compiles
 //! everything and fails fast. [`Engine::submit`] is non-blocking and
 //! returns a [`Ticket`] (or [`EngineError::QueueFull`]);
 //! [`Ticket::wait`] yields `Result<InferReply, EngineError>`.
@@ -56,11 +70,46 @@ use anyhow::{Context, Result};
 
 use crate::coordinator::batcher::BatchPolicy;
 use crate::coordinator::router::{Bucket, Route, Router};
+use crate::hrr::HrrConfig;
 use crate::metrics::{LatencyHist, RunMeter};
 use crate::model::ParamStore;
 use crate::runtime::Manifest;
 
 use executor::{ExecMsg, ExecutorConfig, Job};
+
+/// The default EMBER serving ladder — the three predict buckets
+/// `repro serve`, `bench inference --engine` and the demos stand up.
+/// The base strings resolve on both backends (manifest keys on
+/// [`Backend::Artifact`], preset tables on [`Backend::Native`]).
+pub const DEFAULT_EMBER_BUCKETS: [&str; 3] = [
+    "ember_hrrformer_small_T256_B8",
+    "ember_hrrformer_small_T512_B8",
+    "ember_hrrformer_small_T1024_B8",
+];
+
+/// Which inference implementation the engine's executors run.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub enum Backend {
+    /// AOT-compiled XLA programs on per-executor PJRT runtimes; requires
+    /// `artifacts/manifest.json` (`make artifacts`).
+    #[default]
+    Artifact,
+    /// Pure-Rust HRR forward pass ([`crate::hrr`]); runs anywhere, no
+    /// artifacts or PJRT needed.
+    Native,
+}
+
+impl std::str::FromStr for Backend {
+    type Err = String;
+
+    fn from_str(s: &str) -> Result<Backend, String> {
+        match s {
+            "artifact" | "pjrt" | "xla" => Ok(Backend::Artifact),
+            "native" | "rust" => Ok(Backend::Native),
+            other => Err(format!("unknown backend '{other}' (expected 'artifact' or 'native')")),
+        }
+    }
+}
 
 /// A classification request: raw token ids of any length; the router
 /// pads (or truncates, paper-style) to a bucket's fixed T.
@@ -253,11 +302,18 @@ pub struct EngineBuilder {
     policy: BatchPolicy,
     queue_depth: usize,
     seed: u32,
+    backend: Backend,
 }
 
 impl Default for EngineBuilder {
     fn default() -> Self {
-        EngineBuilder { buckets: Vec::new(), policy: BatchPolicy::default(), queue_depth: 128, seed: 0 }
+        EngineBuilder {
+            buckets: Vec::new(),
+            policy: BatchPolicy::default(),
+            queue_depth: 128,
+            seed: 0,
+            backend: Backend::default(),
+        }
     }
 }
 
@@ -306,24 +362,58 @@ impl EngineBuilder {
     }
 
     /// Parameter-init seed for buckets without explicit params. One
-    /// validated `u32` threads through to every `<base>_init` program.
+    /// validated `u32` threads through to every `<base>_init` program
+    /// (artifact backend) or native parameter init.
     pub fn seed(mut self, seed: u32) -> Self {
         self.seed = seed;
         self
     }
 
-    /// Compile all buckets and start the engine. Blocks until every
-    /// executor has compiled its session (or one fails — then every
-    /// thread is torn down and the error is returned).
+    /// Which inference backend the executors run (default:
+    /// [`Backend::Artifact`]).
+    pub fn backend(mut self, backend: Backend) -> Self {
+        self.backend = backend;
+        self
+    }
+
+    /// Build all buckets and start the engine. Blocks until every
+    /// executor has built its session (or one fails — then every thread
+    /// is torn down and the error is returned). With
+    /// [`Backend::Native`] the manifest is ignored; use
+    /// [`EngineBuilder::build_native`] when there is none to pass.
     pub fn build(self, manifest: &Manifest) -> Result<Engine> {
+        self.build_impl(Some(manifest))
+    }
+
+    /// Build on the pure-Rust native backend — no manifest, no
+    /// artifacts, no PJRT. Forces [`Backend::Native`].
+    pub fn build_native(mut self) -> Result<Engine> {
+        self.backend = Backend::Native;
+        self.build_impl(None)
+    }
+
+    fn build_impl(self, manifest: Option<&Manifest>) -> Result<Engine> {
         anyhow::ensure!(!self.buckets.is_empty(), "no predict buckets configured");
+        let backend = self.backend;
 
         // Resolve bucket shapes up front: unknown bases fail here, before
         // any thread or compile work starts.
         let mut resolved: Vec<(Bucket, BucketSpec)> = Vec::with_capacity(self.buckets.len());
-        for spec in self.buckets {
-            let p = manifest.get(&format!("{}_predict", spec.base))?;
-            resolved.push((Bucket { seq_len: p.seq_len, batch: p.batch }, spec));
+        match backend {
+            Backend::Artifact => {
+                let manifest = manifest
+                    .context("artifact backend requires a manifest (or use build_native())")?;
+                for spec in self.buckets {
+                    let p = manifest.get(&format!("{}_predict", spec.base))?;
+                    resolved.push((Bucket { seq_len: p.seq_len, batch: p.batch }, spec));
+                }
+            }
+            Backend::Native => {
+                for spec in self.buckets {
+                    let c = HrrConfig::from_base(&spec.base)?;
+                    resolved.push((Bucket { seq_len: c.seq_len, batch: c.batch }, spec));
+                }
+            }
         }
         resolved.sort_by_key(|(b, _)| b.seq_len);
         for w in resolved.windows(2) {
@@ -337,7 +427,10 @@ impl EngineBuilder {
         }
 
         let stats = Arc::new(EngineStats::default());
-        let manifest_dir = manifest.dir.clone();
+        let manifest_dir = match backend {
+            Backend::Artifact => manifest.map(|m| m.dir.clone()),
+            Backend::Native => None,
+        };
 
         // One executor thread per bucket; each compiles its own session
         // and signals readiness before the engine is handed to callers.
@@ -350,6 +443,7 @@ impl EngineBuilder {
             let (ready_tx, ready_rx) = sync_channel::<Result<()>>(1);
             let cfg = ExecutorConfig {
                 base: spec.base.clone(),
+                backend,
                 manifest_dir: manifest_dir.clone(),
                 seed: self.seed,
                 params: spec.params,

@@ -1,0 +1,187 @@
+//! Native-backend model configuration.
+//!
+//! The artifact backend learns shapes from `artifacts/manifest.json`; the
+//! native backend has no manifest, so it resolves the same program base
+//! strings (`<task>_<model>_<preset>_T<seq>_B<batch>`, see
+//! `Manifest::model_key`) against a Rust copy of the preset tables in
+//! `python/compile/configs.py`. Sequence length and batch come from the
+//! base string; everything else from the (task, preset) row.
+
+use anyhow::{bail, Result};
+
+/// Hyper-parameters of one Hrrformer forward pass (the native mirror of
+/// python `ModelConfig`, restricted to what inference needs).
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct HrrConfig {
+    pub task: String,
+    pub vocab: usize,
+    pub seq_len: usize,
+    pub batch: usize,
+    pub embed: usize,
+    pub mlp_dim: usize,
+    pub heads: usize,
+    pub layers: usize,
+    pub classes: usize,
+    /// true = learned positional table, false = fixed sinusoidal
+    pub learned_pos: bool,
+}
+
+impl HrrConfig {
+    /// Per-head feature dimension H' — the axis HRR binding runs over.
+    pub fn head_dim(&self) -> usize {
+        self.embed / self.heads
+    }
+
+    /// Sanity-check the shape relations the forward pass relies on.
+    pub fn validate(&self) -> Result<()> {
+        if self.vocab == 0
+            || self.seq_len == 0
+            || self.batch == 0
+            || self.embed == 0
+            || self.mlp_dim == 0
+            || self.heads == 0
+            || self.layers == 0
+            || self.classes == 0
+        {
+            bail!("native config has a zero dimension: {self:?}");
+        }
+        if self.embed % self.heads != 0 {
+            bail!("embed {} not divisible by heads {}", self.embed, self.heads);
+        }
+        Ok(())
+    }
+
+    /// Resolve a program base (e.g. `ember_hrrformer_small_T256_B8`)
+    /// against the preset tables. Only the `hrrformer` mixer has a native
+    /// implementation; other models must use the artifact backend.
+    pub fn from_base(base: &str) -> Result<HrrConfig> {
+        let toks: Vec<&str> = base.split('_').collect();
+        if toks.len() < 5 {
+            bail!(
+                "unrecognised program base '{base}' for the native backend \
+                 (expected <task>_<model>_<preset>_T<seq>_B<batch>)"
+            );
+        }
+        let batch = toks[toks.len() - 1]
+            .strip_prefix('B')
+            .and_then(|s| s.parse::<usize>().ok())
+            .filter(|&b| b > 0);
+        let seq_len = toks[toks.len() - 2]
+            .strip_prefix('T')
+            .and_then(|s| s.parse::<usize>().ok())
+            .filter(|&t| t > 0);
+        let (Some(batch), Some(seq_len)) = (batch, seq_len) else {
+            bail!(
+                "unrecognised program base '{base}' for the native backend \
+                 (could not parse the T<seq>/B<batch> suffix)"
+            );
+        };
+        let preset = toks[toks.len() - 3];
+        let task = toks[0];
+        let model = toks[1..toks.len() - 3].join("_");
+        if model != "hrrformer" {
+            bail!(
+                "native backend only implements the hrrformer mixer; \
+                 base '{base}' names model '{model}' — use the artifact backend"
+            );
+        }
+        let Some(row) = preset_row(task, preset) else {
+            bail!(
+                "unrecognised program base '{base}' for the native backend: \
+                 unknown task/preset '{task}'/'{preset}'"
+            );
+        };
+        let cfg = HrrConfig {
+            task: task.to_string(),
+            vocab: row.vocab,
+            seq_len,
+            batch,
+            embed: row.embed,
+            mlp_dim: row.mlp_dim,
+            heads: row.heads,
+            layers: row.layers,
+            classes: row.classes,
+            learned_pos: row.learned_pos,
+        };
+        cfg.validate()?;
+        Ok(cfg)
+    }
+}
+
+/// One (task, preset) row — vocab/dims/heads/layers/classes/positions.
+struct PresetRow {
+    vocab: usize,
+    embed: usize,
+    mlp_dim: usize,
+    heads: usize,
+    layers: usize,
+    classes: usize,
+    learned_pos: bool,
+}
+
+/// Rust copy of `configs.py` `TASKS_SMALL` / `TASKS_PAPER` (hyper-params
+/// only; seq_len/batch always come from the base string).
+fn preset_row(task: &str, preset: &str) -> Option<PresetRow> {
+    let r = |vocab, embed, mlp_dim, heads, layers, classes, learned_pos| {
+        Some(PresetRow { vocab, embed, mlp_dim, heads, layers, classes, learned_pos })
+    };
+    match (task, preset) {
+        ("listops", "small") => r(18, 64, 128, 4, 2, 10, true),
+        ("text", "small") => r(257, 64, 128, 4, 2, 2, false),
+        ("retrieval", "small") => r(257, 64, 64, 4, 2, 2, false),
+        ("image", "small") => r(256, 64, 128, 4, 3, 10, false),
+        ("pathfinder", "small") => r(256, 64, 128, 4, 2, 2, true),
+        ("pathx", "small") => r(256, 32, 64, 2, 1, 2, true),
+        ("ember", "small") => r(257, 64, 128, 4, 1, 2, true),
+        ("listops", "paper") => r(18, 512, 256, 8, 6, 10, true),
+        ("text", "paper") => r(257, 512, 1024, 8, 6, 2, false),
+        ("retrieval", "paper") => r(257, 128, 64, 4, 4, 2, false),
+        ("image", "paper") => r(256, 256, 128, 4, 3, 10, false),
+        ("pathfinder", "paper") => r(256, 1024, 256, 8, 2, 2, true),
+        ("pathx", "paper") => r(256, 128, 128, 4, 2, 2, true),
+        ("ember", "paper") => r(257, 256, 512, 8, 1, 2, true),
+        _ => None,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn resolves_ember_small() {
+        let c = HrrConfig::from_base("ember_hrrformer_small_T256_B8").unwrap();
+        assert_eq!(c.task, "ember");
+        assert_eq!(c.seq_len, 256);
+        assert_eq!(c.batch, 8);
+        assert_eq!(c.embed, 64);
+        assert_eq!(c.heads, 4);
+        assert_eq!(c.layers, 1);
+        assert_eq!(c.classes, 2);
+        assert!(c.learned_pos);
+        assert_eq!(c.head_dim(), 16);
+    }
+
+    #[test]
+    fn seq_and_batch_come_from_the_base_string() {
+        let c = HrrConfig::from_base("text_hrrformer_small_T96_B3").unwrap();
+        assert_eq!(c.seq_len, 96);
+        assert_eq!(c.batch, 3);
+        assert!(!c.learned_pos);
+    }
+
+    #[test]
+    fn rejects_unknown_base_with_its_name_in_the_error() {
+        let err = HrrConfig::from_base("does_not_exist").unwrap_err();
+        assert!(err.to_string().contains("does_not_exist"), "{err}");
+        let err = HrrConfig::from_base("nosuchtask_hrrformer_small_T64_B2").unwrap_err();
+        assert!(err.to_string().contains("nosuchtask"), "{err}");
+    }
+
+    #[test]
+    fn rejects_non_hrrformer_models() {
+        let err = HrrConfig::from_base("text_linear_transformer_small_T512_B8").unwrap_err();
+        assert!(err.to_string().contains("linear_transformer"), "{err}");
+        assert!(err.to_string().contains("artifact backend"), "{err}");
+    }
+}

@@ -1,0 +1,212 @@
+//! Discrete Fourier transforms for the HRR binding kernels.
+//!
+//! Everything the native backend needs reduces to small per-head
+//! transforms (H' = embed/heads, typically 8..64), so the implementation
+//! favours exactness and zero dependencies over large-N throughput:
+//!
+//! * power-of-two lengths run an iterative radix-2 Cooley-Tukey FFT
+//!   (bit-reversal permutation + butterflies) — O(n log n);
+//! * every other length falls back to the naive O(n²) DFT, which at
+//!   these sizes is still microseconds and keeps the API total.
+//!
+//! Transforms are computed in `f64` (callers hold `f32` model buffers and
+//! round once on the way out — see `ops.rs`), with numpy's conventions:
+//! forward is unscaled `Σ x·exp(-2πi·kn/N)`, inverse carries the `1/N`,
+//! and the real-input pair [`rfft`]/[`irfft`] keeps `n/2 + 1` bins with
+//! Hermitian symmetry supplying the rest.
+
+use std::f64::consts::PI;
+
+/// In-place complex FFT over parallel `re`/`im` buffers. `inverse`
+/// flips the twiddle sign and applies the 1/N scale (numpy convention).
+pub fn fft(re: &mut [f64], im: &mut [f64], inverse: bool) {
+    let n = re.len();
+    assert_eq!(n, im.len(), "re/im length mismatch");
+    if n <= 1 {
+        return;
+    }
+    if n.is_power_of_two() {
+        fft_pow2(re, im, inverse);
+    } else {
+        let (r, i) = dft_naive(re, im, inverse);
+        re.copy_from_slice(&r);
+        im.copy_from_slice(&i);
+    }
+    if inverse {
+        let s = 1.0 / n as f64;
+        for v in re.iter_mut() {
+            *v *= s;
+        }
+        for v in im.iter_mut() {
+            *v *= s;
+        }
+    }
+}
+
+/// Iterative radix-2 Cooley-Tukey; `n` must be a power of two. Twiddles
+/// come straight from sin/cos per butterfly index — at these sizes the
+/// trig cost is irrelevant and it avoids accumulated twiddle drift.
+fn fft_pow2(re: &mut [f64], im: &mut [f64], inverse: bool) {
+    let n = re.len();
+    // bit-reversal permutation
+    let mut j = 0usize;
+    for i in 1..n {
+        let mut bit = n >> 1;
+        while j & bit != 0 {
+            j ^= bit;
+            bit >>= 1;
+        }
+        j |= bit;
+        if i < j {
+            re.swap(i, j);
+            im.swap(i, j);
+        }
+    }
+    let sign = if inverse { 1.0 } else { -1.0 };
+    let mut len = 2usize;
+    while len <= n {
+        let base = sign * 2.0 * PI / len as f64;
+        for start in (0..n).step_by(len) {
+            for k in 0..len / 2 {
+                let ang = base * k as f64;
+                let (wi, wr) = ang.sin_cos();
+                let a = start + k;
+                let b = a + len / 2;
+                let vr = re[b] * wr - im[b] * wi;
+                let vi = re[b] * wi + im[b] * wr;
+                re[b] = re[a] - vr;
+                im[b] = im[a] - vi;
+                re[a] += vr;
+                im[a] += vi;
+            }
+        }
+        len <<= 1;
+    }
+}
+
+/// Naive O(n²) DFT for non-power-of-two lengths (unscaled).
+fn dft_naive(re: &[f64], im: &[f64], inverse: bool) -> (Vec<f64>, Vec<f64>) {
+    let n = re.len();
+    let sign = if inverse { 1.0 } else { -1.0 };
+    let base = sign * 2.0 * PI / n as f64;
+    let mut or = vec![0.0; n];
+    let mut oi = vec![0.0; n];
+    for (k, (ork, oik)) in or.iter_mut().zip(oi.iter_mut()).enumerate() {
+        let mut sr = 0.0;
+        let mut si = 0.0;
+        for t in 0..n {
+            let ang = base * ((k * t) % n) as f64;
+            let (wi, wr) = ang.sin_cos();
+            sr += re[t] * wr - im[t] * wi;
+            si += re[t] * wi + im[t] * wr;
+        }
+        *ork = sr;
+        *oik = si;
+    }
+    (or, oi)
+}
+
+/// Number of rFFT bins for a real signal of length `n` (numpy: n/2 + 1).
+pub fn num_bins(n: usize) -> usize {
+    n / 2 + 1
+}
+
+/// Real-to-complex FFT: `x` (length n) → (re, im) of `n/2 + 1` bins.
+pub fn rfft(x: &[f64]) -> (Vec<f64>, Vec<f64>) {
+    let n = x.len();
+    let mut re = x.to_vec();
+    let mut im = vec![0.0; n];
+    fft(&mut re, &mut im, false);
+    let k = num_bins(n);
+    re.truncate(k);
+    im.truncate(k);
+    (re, im)
+}
+
+/// Buffer-reusing inverse of [`rfft`]: expand the `n/2 + 1` bins into
+/// the caller's length-`n` scratch buffers by Hermitian symmetry
+/// (`X[n-k] = conj(X[k])`) and inverse-transform in place. The real
+/// signal lands in `re[..n]`; `im` holds rounding noise.
+pub fn irfft_inplace(br: &[f64], bi: &[f64], re: &mut [f64], im: &mut [f64]) {
+    let n = re.len();
+    let k = num_bins(n);
+    assert_eq!(br.len(), k, "irfft expects n/2+1 bins for n={n}");
+    assert_eq!(bi.len(), k, "irfft expects n/2+1 bins for n={n}");
+    re[..k].copy_from_slice(br);
+    im[..k].copy_from_slice(bi);
+    for j in k..n {
+        re[j] = br[n - j];
+        im[j] = -bi[n - j];
+    }
+    fft(re, im, true);
+}
+
+/// Inverse of [`rfft`]: `n/2 + 1` bins → real signal of length `n`
+/// (allocating convenience over [`irfft_inplace`]).
+pub fn irfft(re: &[f64], im: &[f64], n: usize) -> Vec<f64> {
+    let mut fr = vec![0.0; n];
+    let mut fi = vec![0.0; n];
+    irfft_inplace(re, im, &mut fr, &mut fi);
+    fr
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn max_abs_diff(a: &[f64], b: &[f64]) -> f64 {
+        a.iter().zip(b).map(|(x, y)| (x - y).abs()).fold(0.0, f64::max)
+    }
+
+    #[test]
+    fn forward_matches_naive_on_pow2() {
+        let x: Vec<f64> = (0..16).map(|i| (i as f64 * 0.7).sin()).collect();
+        let mut re = x.clone();
+        let mut im = vec![0.0; 16];
+        fft(&mut re, &mut im, false);
+        let (nr, ni) = dft_naive(&x, &vec![0.0; 16], false);
+        assert!(max_abs_diff(&re, &nr) < 1e-10);
+        assert!(max_abs_diff(&im, &ni) < 1e-10);
+    }
+
+    #[test]
+    fn roundtrip_pow2_and_odd() {
+        for n in [1usize, 2, 4, 7, 8, 12, 16, 27, 64] {
+            let x: Vec<f64> = (0..n).map(|i| ((i * 37 + 11) % 17) as f64 - 8.0).collect();
+            let y: Vec<f64> = (0..n).map(|i| ((i * 53 + 3) % 13) as f64 - 6.0).collect();
+            let mut re = x.clone();
+            let mut im = y.clone();
+            fft(&mut re, &mut im, false);
+            fft(&mut re, &mut im, true);
+            assert!(max_abs_diff(&re, &x) < 1e-9, "re roundtrip n={n}");
+            assert!(max_abs_diff(&im, &y) < 1e-9, "im roundtrip n={n}");
+        }
+    }
+
+    #[test]
+    fn rfft_irfft_roundtrip() {
+        for n in [1usize, 2, 5, 8, 10, 16, 33] {
+            let x: Vec<f64> = (0..n).map(|i| (i as f64 * 1.3).cos() * 2.0 - 0.5).collect();
+            let (re, im) = rfft(&x);
+            assert_eq!(re.len(), num_bins(n));
+            let back = irfft(&re, &im, n);
+            assert!(max_abs_diff(&back, &x) < 1e-9, "rfft roundtrip n={n}");
+        }
+    }
+
+    #[test]
+    fn rfft_dc_and_parseval() {
+        let x = [1.0, 2.0, 3.0, 4.0];
+        let (re, im) = rfft(&x);
+        // DC bin is the plain sum; bin 0 and Nyquist are purely real.
+        assert!((re[0] - 10.0).abs() < 1e-12);
+        assert!(im[0].abs() < 1e-12);
+        assert!(im[2].abs() < 1e-12);
+        // full-spectrum Parseval: Σ|x|² = (1/n)·Σ|X|² over all n bins
+        let full: f64 = re[0] * re[0]
+            + 2.0 * (re[1] * re[1] + im[1] * im[1])
+            + re[2] * re[2];
+        let time: f64 = x.iter().map(|v| v * v).sum();
+        assert!((full / 4.0 - time).abs() < 1e-9);
+    }
+}

@@ -1,0 +1,34 @@
+//! Native pure-Rust HRR backend — the paper's O(T·H·log H) attention
+//! implemented from scratch, with no XLA artifacts and no PJRT runtime
+//! anywhere near it.
+//!
+//! Layer map:
+//!
+//! * [`fft`]   — radix-2 real/complex FFTs (naive-DFT fallback for
+//!   non-power-of-two head dims), `f64` arithmetic;
+//! * [`ops`]   — HRR algebra over `f32` vectors: binding (circular
+//!   convolution), exact/involution unbinding, the unit-magnitude
+//!   projection trick, cosine similarity;
+//! * [`config`] — [`HrrConfig`]: program-base parsing + a Rust copy of
+//!   the python preset tables, so the same
+//!   `<task>_hrrformer_<preset>_T<t>_B<b>` strings resolve on both
+//!   backends;
+//! * [`model`] — the full Hrrformer forward pass (embed → per-head HRR
+//!   attention → MLP → pooled classifier head) and [`NativeSession`],
+//!   which plugs into everything typed against
+//!   [`crate::model::Predictor`] (engine executors, benches, examples).
+//!
+//! Selected at runtime via [`crate::engine::Backend::Native`]
+//! (`--backend native` on the CLI): the whole serving stack — and the
+//! integration test suite — runs on any machine, artifact-free. Parity
+//! with the Python reference is pinned by the golden-vector fixtures in
+//! `rust/tests/golden_native.rs` (±1e-4) and the property suite in
+//! `rust/tests/prop_hrr.rs`.
+
+pub mod config;
+pub mod fft;
+pub mod model;
+pub mod ops;
+
+pub use config::HrrConfig;
+pub use model::{init_native_params, param_specs, NativeSession, PAD_ID};

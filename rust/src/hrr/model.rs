@@ -1,0 +1,593 @@
+//! The native Hrrformer forward pass and [`NativeSession`].
+//!
+//! A from-scratch, pure-Rust implementation of the paper's encoder
+//! (python/compile/model.py + models/hrrformer.py, inference path):
+//! token embedding + positions → L pre-LN blocks (multi-head HRR
+//! attention + GELU MLP, residuals) → final LN → masked mean-pool → two
+//! dense head layers → logits. Buffers are `f32`; reductions (matmul
+//! dot products, LayerNorm stats, β accumulation, softmax, pooling)
+//! accumulate in `f64`, which keeps the forward pass within 1e-4 of the
+//! float64 reference on the golden fixtures.
+//!
+//! Per head the attention is O(T·H'·log H') (paper §3): keys/values are
+//! bound by circular convolution and superposed into a single β in the
+//! *frequency domain* (one rFFT per k/v vector, one complex
+//! multiply-accumulate per bin — Eq. 1), each query unbinds β with the
+//! stabilized exact inverse (Eq. 2), and cosine similarity to the value
+//! gives the pre-softmax score (Eq. 3). Softmax cleanup then re-weights
+//! the values (Eq. 4). PAD positions (token 0) are excluded from β and
+//! softmaxed to zero weight, exactly like the reference's mask.
+//!
+//! GELU uses the tanh approximation (the `jax.nn.gelu` default the
+//! reference model was exported with).
+
+use anyhow::{Context, Result};
+
+use crate::hrr::config::HrrConfig;
+use crate::hrr::fft::{fft, irfft_inplace, num_bins};
+use crate::hrr::ops::EPS;
+use crate::model::params::ParamStore;
+use crate::model::session::{Predictor, Session};
+use crate::runtime::manifest::IoSpec;
+use crate::runtime::tensor::{DType, Tensor};
+use crate::util::rng::Rng;
+
+/// Token 0 is PAD everywhere (datasets reserve it; model.py `PAD_ID`).
+pub const PAD_ID: i32 = 0;
+
+// ---------------------------------------------------------------------------
+// Parameter layout + init
+// ---------------------------------------------------------------------------
+
+/// The canonical parameter layout (names/shapes/order) of the native
+/// model. Golden fixtures and checkpoints follow this exact order.
+pub fn param_specs(cfg: &HrrConfig) -> Vec<IoSpec> {
+    let e = cfg.embed;
+    let f = |name: String, shape: Vec<usize>| IoSpec { name, shape, dtype: DType::F32 };
+    let mut specs = vec![f("embed.table".into(), vec![cfg.vocab, e])];
+    if cfg.learned_pos {
+        specs.push(f("pos.table".into(), vec![cfg.seq_len, e]));
+    }
+    for i in 0..cfg.layers {
+        let b = |suffix: &str| format!("blocks.{i}.{suffix}");
+        specs.push(f(b("ln1.scale"), vec![e]));
+        specs.push(f(b("ln1.bias"), vec![e]));
+        specs.push(f(b("mixer.query.kernel"), vec![e, e]));
+        specs.push(f(b("mixer.key.kernel"), vec![e, e]));
+        specs.push(f(b("mixer.value.kernel"), vec![e, e]));
+        specs.push(f(b("mixer.output.kernel"), vec![e, e]));
+        specs.push(f(b("ln2.scale"), vec![e]));
+        specs.push(f(b("ln2.bias"), vec![e]));
+        specs.push(f(b("mlp.fc1.kernel"), vec![e, cfg.mlp_dim]));
+        specs.push(f(b("mlp.fc1.bias"), vec![cfg.mlp_dim]));
+        specs.push(f(b("mlp.fc2.kernel"), vec![cfg.mlp_dim, e]));
+        specs.push(f(b("mlp.fc2.bias"), vec![e]));
+    }
+    specs.push(f("ln_f.scale".into(), vec![e]));
+    specs.push(f("ln_f.bias".into(), vec![e]));
+    specs.push(f("head1.kernel".into(), vec![e, cfg.mlp_dim]));
+    specs.push(f("head1.bias".into(), vec![cfg.mlp_dim]));
+    specs.push(f("head2.kernel".into(), vec![cfg.mlp_dim, cfg.classes]));
+    specs.push(f("head2.bias".into(), vec![cfg.classes]));
+    specs
+}
+
+/// Seed-deterministic parameter init, mirroring layers.py: glorot-normal
+/// dense kernels, `N(0, 1/√E)` embeddings, `N(0, 0.02)` learned
+/// positions, unit LayerNorm scales, zero biases. Each tensor draws from
+/// its own folded RNG stream, so the layout (not the draw order) defines
+/// the values.
+pub fn init_native_params(cfg: &HrrConfig, seed: u32) -> ParamStore {
+    let root = Rng::new(seed as u64);
+    let specs = param_specs(cfg);
+    let mut store = ParamStore::default();
+    for (idx, spec) in specs.iter().enumerate() {
+        let n = spec.elements();
+        let mut rng = root.fold_in(idx as u64 + 1);
+        let data: Vec<f32> = if spec.name.ends_with(".kernel") {
+            let fan_in = spec.shape[0] as f64;
+            let fan_out = spec.shape[spec.shape.len() - 1] as f64;
+            let scale = (2.0 / (fan_in + fan_out)).sqrt();
+            (0..n).map(|_| (rng.normal() * scale) as f32).collect()
+        } else if spec.name == "embed.table" {
+            let scale = 1.0 / (cfg.embed as f64).sqrt();
+            (0..n).map(|_| (rng.normal() * scale) as f32).collect()
+        } else if spec.name == "pos.table" {
+            (0..n).map(|_| (rng.normal() * 0.02) as f32).collect()
+        } else if spec.name.ends_with(".scale") {
+            vec![1.0; n]
+        } else {
+            vec![0.0; n] // biases
+        };
+        store.names.push(spec.name.clone());
+        store.tensors.push(Tensor::f32(spec.shape.clone(), data));
+    }
+    store
+}
+
+// ---------------------------------------------------------------------------
+// Forward-pass building blocks (f32 buffers, f64 accumulation)
+// ---------------------------------------------------------------------------
+
+/// `out (n, d_out) = x (n, d_in) @ w (d_in, d_out)`, f64 accumulators.
+fn matmul(x: &[f32], w: &[f32], n: usize, d_in: usize, d_out: usize) -> Vec<f32> {
+    debug_assert_eq!(x.len(), n * d_in);
+    debug_assert_eq!(w.len(), d_in * d_out);
+    let mut out = vec![0.0f32; n * d_out];
+    let mut acc = vec![0.0f64; d_out];
+    for i in 0..n {
+        for a in acc.iter_mut() {
+            *a = 0.0;
+        }
+        for (k, &xv) in x[i * d_in..(i + 1) * d_in].iter().enumerate() {
+            let xv = xv as f64;
+            let wk = &w[k * d_out..(k + 1) * d_out];
+            for (a, &wv) in acc.iter_mut().zip(wk) {
+                *a += xv * wv as f64;
+            }
+        }
+        for (o, &a) in out[i * d_out..(i + 1) * d_out].iter_mut().zip(acc.iter()) {
+            *o = a as f32;
+        }
+    }
+    out
+}
+
+fn add_bias(x: &mut [f32], bias: &[f32], d: usize) {
+    for row in x.chunks_exact_mut(d) {
+        for (v, &b) in row.iter_mut().zip(bias) {
+            *v += b;
+        }
+    }
+}
+
+/// Pre-LN (layers.py `layernorm`, eps 1e-6), out-of-place.
+fn layernorm(x: &[f32], scale: &[f32], bias: &[f32], d: usize) -> Vec<f32> {
+    let mut out = vec![0.0f32; x.len()];
+    for (row, orow) in x.chunks_exact(d).zip(out.chunks_exact_mut(d)) {
+        let mut mu = 0.0f64;
+        for &v in row {
+            mu += v as f64;
+        }
+        mu /= d as f64;
+        let mut var = 0.0f64;
+        for &v in row {
+            let c = v as f64 - mu;
+            var += c * c;
+        }
+        var /= d as f64;
+        let rstd = 1.0 / (var + 1e-6).sqrt();
+        for ((o, &v), (&s, &b)) in orow.iter_mut().zip(row).zip(scale.iter().zip(bias)) {
+            *o = (((v as f64 - mu) * rstd) * s as f64 + b as f64) as f32;
+        }
+    }
+    out
+}
+
+/// `jax.nn.gelu` tanh approximation.
+fn gelu(x: &mut [f32]) {
+    const C: f64 = 0.797_884_560_802_865_4; // sqrt(2/π)
+    for v in x.iter_mut() {
+        let x = *v as f64;
+        *v = (0.5 * x * (1.0 + (C * (x + 0.044715 * x * x * x)).tanh())) as f32;
+    }
+}
+
+/// Reusable FFT scratch for one head dimension, so the T·heads inner
+/// loop allocates nothing.
+struct FftScratch {
+    re: Vec<f64>,
+    im: Vec<f64>,
+}
+
+impl FftScratch {
+    fn new(n: usize) -> FftScratch {
+        FftScratch { re: vec![0.0; n], im: vec![0.0; n] }
+    }
+
+    /// rFFT of `x` into the scratch; valid bins are `re/im[..n/2+1]`.
+    fn rfft(&mut self, x: &[f32]) {
+        for (r, &v) in self.re.iter_mut().zip(x) {
+            *r = v as f64;
+        }
+        for i in self.im.iter_mut() {
+            *i = 0.0;
+        }
+        fft(&mut self.re, &mut self.im, false);
+    }
+
+    /// irFFT of `n/2+1` bins into the scratch; result is `re[..n]`.
+    fn irfft(&mut self, br: &[f64], bi: &[f64]) {
+        irfft_inplace(br, bi, &mut self.re, &mut self.im);
+    }
+}
+
+/// Multi-head HRR attention (Eqs. 1-4) for one sequence.
+/// `q,k,v`: (t, e) row-major; returns `w·v` merged back to (t, e).
+fn hrr_attention(
+    cfg: &HrrConfig,
+    q: &[f32],
+    k: &[f32],
+    v: &[f32],
+    mask: &[bool],
+    t: usize,
+) -> Vec<f32> {
+    let e = cfg.embed;
+    let hd = cfg.head_dim();
+    let kbins = num_bins(hd);
+    let mut out = vec![0.0f32; t * e];
+    let mut fs = FftScratch::new(hd);
+    let mut scores = vec![0.0f64; t];
+    for head in 0..cfg.heads {
+        let off = head * hd;
+        // Eq. 1 — β = Σ_t k_t ⊛ v_t over unmasked positions, accumulated
+        // in the frequency domain (one complex MAC per bin).
+        let mut br = vec![0.0f64; kbins];
+        let mut bi = vec![0.0f64; kbins];
+        let mut vfr = vec![0.0f64; kbins];
+        let mut vfi = vec![0.0f64; kbins];
+        for i in 0..t {
+            if !mask[i] {
+                continue;
+            }
+            fs.rfft(&v[i * e + off..i * e + off + hd]);
+            vfr.copy_from_slice(&fs.re[..kbins]);
+            vfi.copy_from_slice(&fs.im[..kbins]);
+            fs.rfft(&k[i * e + off..i * e + off + hd]);
+            for j in 0..kbins {
+                br[j] += fs.re[j] * vfr[j] - fs.im[j] * vfi[j];
+                bi[j] += fs.re[j] * vfi[j] + fs.im[j] * vfr[j];
+            }
+        }
+        // Eq. 2+3 — v̂_t = q_t† ⊛ β (stabilized exact inverse), score =
+        // cos(v_t, v̂_t). Masked positions get weight 0 (their e^{-1e9}
+        // underflows to exactly 0 in the reference's softmax).
+        let mut smax = f64::NEG_INFINITY;
+        for i in 0..t {
+            if !mask[i] {
+                continue;
+            }
+            fs.rfft(&q[i * e + off..i * e + off + hd]);
+            vfr.clear();
+            vfi.clear();
+            for j in 0..kbins {
+                let d = fs.re[j] * fs.re[j] + fs.im[j] * fs.im[j] + EPS as f64;
+                let ir = fs.re[j] / d;
+                let ii = -fs.im[j] / d;
+                vfr.push(br[j] * ir - bi[j] * ii);
+                vfi.push(br[j] * ii + bi[j] * ir);
+            }
+            fs.irfft(&vfr, &vfi);
+            let vv = &v[i * e + off..i * e + off + hd];
+            let mut num = 0.0f64;
+            let mut nv = 0.0f64;
+            let mut nh = 0.0f64;
+            for (&a, &b) in vv.iter().zip(fs.re[..hd].iter()) {
+                num += a as f64 * b;
+                nv += a as f64 * a as f64;
+                nh += b * b;
+            }
+            scores[i] = num / (nv.sqrt() * nh.sqrt() + EPS as f64);
+            smax = smax.max(scores[i]);
+        }
+        // Eq. 4 — softmax cleanup over T, then re-weight the values.
+        let mut denom = 0.0f64;
+        for i in 0..t {
+            if mask[i] {
+                scores[i] = (scores[i] - smax).exp();
+                denom += scores[i];
+            }
+        }
+        for i in 0..t {
+            if !mask[i] {
+                continue;
+            }
+            let w = scores[i] / denom;
+            let vv = &v[i * e + off..i * e + off + hd];
+            for (o, &x) in out[i * e + off..i * e + off + hd].iter_mut().zip(vv) {
+                *o = (w * x as f64) as f32;
+            }
+        }
+    }
+    out
+}
+
+/// Fixed sinusoidal positional value (layers.py `sinusoid_positions`).
+fn sinusoid(pos: usize, j: usize, d: usize) -> f32 {
+    let angle = pos as f64 / 10000f64.powf((2 * (j / 2)) as f64 / d as f64);
+    if j % 2 == 0 {
+        angle.sin() as f32
+    } else {
+        angle.cos() as f32
+    }
+}
+
+/// Fetch one f32 parameter slice by canonical name.
+fn param<'a>(params: &'a ParamStore, name: &str) -> Result<&'a [f32]> {
+    params
+        .get(name)
+        .with_context(|| format!("native model parameter '{name}' missing"))?
+        .as_f32()
+        .with_context(|| format!("native model parameter '{name}' dtype"))
+}
+
+/// Forward one sequence: `ids` (t ≤ cfg.seq_len) → logits (classes).
+fn forward_row(cfg: &HrrConfig, params: &ParamStore, ids: &[i32]) -> Result<Vec<f32>> {
+    let e = cfg.embed;
+    let t = ids.len();
+    let p = |name: &str| param(params, name);
+
+    let mask: Vec<bool> = ids.iter().map(|&id| id != PAD_ID).collect();
+
+    // embed + positions; out-of-range ids clamp like the XLA gather.
+    let table = p("embed.table")?;
+    let pos = if cfg.learned_pos { Some(p("pos.table")?) } else { None };
+    let mut x = vec![0.0f32; t * e];
+    for (i, &id) in ids.iter().enumerate() {
+        let row = (id.max(0) as usize).min(cfg.vocab - 1);
+        x[i * e..(i + 1) * e].copy_from_slice(&table[row * e..(row + 1) * e]);
+        match pos {
+            Some(tbl) => {
+                for (xv, &pv) in x[i * e..(i + 1) * e].iter_mut().zip(&tbl[i * e..(i + 1) * e]) {
+                    *xv += pv;
+                }
+            }
+            None => {
+                for (j, xv) in x[i * e..(i + 1) * e].iter_mut().enumerate() {
+                    *xv += sinusoid(i, j, e);
+                }
+            }
+        }
+    }
+
+    for blk in 0..cfg.layers {
+        let n = |s: &str| format!("blocks.{blk}.{s}");
+        // attention sub-block (pre-LN, residual)
+        let h = layernorm(&x, p(&n("ln1.scale"))?, p(&n("ln1.bias"))?, e);
+        let q = matmul(&h, p(&n("mixer.query.kernel"))?, t, e, e);
+        let k = matmul(&h, p(&n("mixer.key.kernel"))?, t, e, e);
+        let v = matmul(&h, p(&n("mixer.value.kernel"))?, t, e, e);
+        let mixed = hrr_attention(cfg, &q, &k, &v, &mask, t);
+        let y = matmul(&mixed, p(&n("mixer.output.kernel"))?, t, e, e);
+        for (xv, &yv) in x.iter_mut().zip(&y) {
+            *xv += yv;
+        }
+        // MLP sub-block (pre-LN, residual)
+        let h = layernorm(&x, p(&n("ln2.scale"))?, p(&n("ln2.bias"))?, e);
+        let mut m = matmul(&h, p(&n("mlp.fc1.kernel"))?, t, e, cfg.mlp_dim);
+        add_bias(&mut m, p(&n("mlp.fc1.bias"))?, cfg.mlp_dim);
+        gelu(&mut m);
+        let mut m = matmul(&m, p(&n("mlp.fc2.kernel"))?, t, cfg.mlp_dim, e);
+        add_bias(&mut m, p(&n("mlp.fc2.bias"))?, e);
+        for (xv, &mv) in x.iter_mut().zip(&m) {
+            *xv += mv;
+        }
+    }
+
+    let x = layernorm(&x, p("ln_f.scale")?, p("ln_f.bias")?, e);
+
+    // masked mean-pool over T (model.py logits_fn)
+    let n_valid = mask.iter().filter(|&&m| m).count().max(1) as f64;
+    let mut pooled = vec![0.0f32; e];
+    for j in 0..e {
+        let mut s = 0.0f64;
+        for i in 0..t {
+            if mask[i] {
+                s += x[i * e + j] as f64;
+            }
+        }
+        pooled[j] = (s / n_valid) as f32;
+    }
+
+    let mut h = matmul(&pooled, p("head1.kernel")?, 1, e, cfg.mlp_dim);
+    add_bias(&mut h, p("head1.bias")?, cfg.mlp_dim);
+    for v in h.iter_mut() {
+        *v = v.max(0.0); // relu
+    }
+    let mut logits = matmul(&h, p("head2.kernel")?, 1, cfg.mlp_dim, cfg.classes);
+    add_bias(&mut logits, p("head2.bias")?, cfg.classes);
+    Ok(logits)
+}
+
+// ---------------------------------------------------------------------------
+// NativeSession
+// ---------------------------------------------------------------------------
+
+/// Inference session over the pure-Rust forward pass — the native
+/// counterpart of [`crate::model::PredictSession`], usable anywhere a
+/// [`Predictor`] is (engine executors, benches, examples) with **no**
+/// AOT artifacts and no PJRT runtime.
+pub struct NativeSession {
+    cfg: HrrConfig,
+    params: ParamStore,
+}
+
+impl NativeSession {
+    /// Resolve `base` (e.g. `ember_hrrformer_small_T256_B8`) against the
+    /// native preset tables and seed-initialize parameters.
+    pub fn create(base: &str, seed: u32) -> Result<NativeSession> {
+        Self::from_config(HrrConfig::from_base(base)?, seed)
+    }
+
+    /// Seed-initialize parameters for an explicit config.
+    pub fn from_config(cfg: HrrConfig, seed: u32) -> Result<NativeSession> {
+        cfg.validate()?;
+        let params = init_native_params(&cfg, seed);
+        Ok(NativeSession { cfg, params })
+    }
+
+    /// Serve explicit parameters (a checkpoint saved from a native
+    /// session, or a golden fixture). Names and shapes must match the
+    /// canonical layout of [`param_specs`].
+    pub fn with_params(cfg: HrrConfig, params: ParamStore) -> Result<NativeSession> {
+        cfg.validate()?;
+        let specs = param_specs(&cfg);
+        anyhow::ensure!(
+            specs.len() == params.len(),
+            "native param store has {} tensors, config expects {}",
+            params.len(),
+            specs.len()
+        );
+        for (spec, (name, tensor)) in
+            specs.iter().zip(params.names.iter().zip(params.tensors.iter()))
+        {
+            anyhow::ensure!(
+                &spec.name == name && spec.shape == tensor.shape(),
+                "native param mismatch: expected '{}' {:?}, got '{}' {:?}",
+                spec.name,
+                spec.shape,
+                name,
+                tensor.shape()
+            );
+        }
+        Ok(NativeSession { cfg, params })
+    }
+
+    pub fn cfg(&self) -> &HrrConfig {
+        &self.cfg
+    }
+
+    /// Logits (B, classes) for token ids (B, t), t ≤ config seq_len.
+    ///
+    /// All-PAD rows (real empty requests *and* batch-packing filler —
+    /// indistinguishable here) get the reference semantics too: the
+    /// masked forward pass with an empty mask, matching what the
+    /// artifact backend computes. Since that output depends only on t,
+    /// it is computed once per call and copied to every such row, so
+    /// partial engine batches do not pay a full forward per filler row.
+    pub fn predict(&self, ids: &Tensor) -> Result<Tensor> {
+        let shape = ids.shape();
+        anyhow::ensure!(shape.len() == 2, "native predict expects (B, T) ids, got {shape:?}");
+        let (b, t) = (shape[0], shape[1]);
+        anyhow::ensure!(
+            t >= 1 && t <= self.cfg.seq_len,
+            "sequence length {t} outside 1..={} for this bucket",
+            self.cfg.seq_len
+        );
+        let data = ids.as_i32().context("native predict ids dtype")?;
+        let classes = self.cfg.classes;
+        let mut out = vec![0.0f32; b * classes];
+        let mut pad_logits: Option<Vec<f32>> = None;
+        for r in 0..b {
+            let row = &data[r * t..(r + 1) * t];
+            let logits = if row.iter().all(|&id| id == PAD_ID) {
+                if pad_logits.is_none() {
+                    pad_logits = Some(forward_row(&self.cfg, &self.params, row)?);
+                }
+                pad_logits.as_ref().unwrap().clone()
+            } else {
+                forward_row(&self.cfg, &self.params, row)?
+            };
+            out[r * classes..(r + 1) * classes].copy_from_slice(&logits);
+        }
+        Ok(Tensor::f32(vec![b, classes], out))
+    }
+}
+
+impl Session for NativeSession {
+    fn params(&self) -> &ParamStore {
+        &self.params
+    }
+
+    fn batch(&self) -> usize {
+        self.cfg.batch
+    }
+
+    fn seq_len(&self) -> usize {
+        self.cfg.seq_len
+    }
+}
+
+impl Predictor for NativeSession {
+    fn predict(&self, ids: &Tensor) -> Result<Tensor> {
+        NativeSession::predict(self, ids)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn tiny_cfg() -> HrrConfig {
+        HrrConfig {
+            task: "test".into(),
+            vocab: 11,
+            seq_len: 12,
+            batch: 2,
+            embed: 16,
+            mlp_dim: 32,
+            heads: 2,
+            layers: 2,
+            classes: 4,
+            learned_pos: false,
+        }
+    }
+
+    #[test]
+    fn init_is_seed_deterministic() {
+        let cfg = tiny_cfg();
+        let a = init_native_params(&cfg, 7);
+        let b = init_native_params(&cfg, 7);
+        let c = init_native_params(&cfg, 8);
+        assert_eq!(a.tensors, b.tensors);
+        assert_ne!(a.tensors, c.tensors);
+        assert_eq!(a.names.len(), param_specs(&cfg).len());
+    }
+
+    #[test]
+    fn predict_shapes_and_finiteness() {
+        let sess = NativeSession::from_config(tiny_cfg(), 3).unwrap();
+        let ids = Tensor::i32(vec![2, 12], vec![
+            1, 2, 3, 4, 5, 6, 7, 8, 9, 10, 1, 2, // full row
+            3, 1, 4, 1, 5, 0, 0, 0, 0, 0, 0, 0, // padded row
+        ]);
+        let logits = sess.predict(&ids).unwrap();
+        assert_eq!(logits.shape(), &[2, 4]);
+        let data = logits.as_f32().unwrap();
+        assert!(data.iter().all(|v| v.is_finite()));
+        // two distinct inputs should not collapse to identical logits
+        assert_ne!(&data[..4], &data[4..]);
+    }
+
+    #[test]
+    fn rows_are_independent_and_all_pad_rows_get_reference_output() {
+        let sess = NativeSession::from_config(tiny_cfg(), 3).unwrap();
+        let row = [2i32, 7, 1, 9, 4, 3, 0, 0, 0, 0, 0, 0];
+        let mut both = row.to_vec();
+        both.extend([0i32; 12]); // second row all PAD
+        let batch = sess.predict(&Tensor::i32(vec![2, 12], both)).unwrap();
+        let solo = sess.predict(&Tensor::i32(vec![1, 12], row.to_vec())).unwrap();
+        let pad = sess.predict(&Tensor::i32(vec![1, 12], vec![0i32; 12])).unwrap();
+        let bd = batch.as_f32().unwrap();
+        assert_eq!(&bd[..4], solo.as_f32().unwrap(), "row logits depend only on that row");
+        // an all-PAD row is a real request: it must get the same
+        // (finite, bias-driven) output whether alone or batch-packed
+        assert_eq!(&bd[4..], pad.as_f32().unwrap(), "all-PAD rows match standalone output");
+        assert!(bd.iter().all(|v| v.is_finite()));
+    }
+
+    #[test]
+    fn shorter_than_bucket_sequences_work() {
+        let sess = NativeSession::from_config(tiny_cfg(), 1).unwrap();
+        let logits = sess.predict(&Tensor::i32(vec![1, 5], vec![1, 2, 3, 4, 5])).unwrap();
+        assert_eq!(logits.shape(), &[1, 4]);
+    }
+
+    #[test]
+    fn with_params_validates_layout() {
+        let cfg = tiny_cfg();
+        let ok = init_native_params(&cfg, 0);
+        assert!(NativeSession::with_params(cfg.clone(), ok).is_ok());
+        let mut bad = init_native_params(&cfg, 0);
+        bad.names[0] = "wrong.name".into();
+        assert!(NativeSession::with_params(cfg, bad).is_err());
+    }
+
+    #[test]
+    fn out_of_range_ids_clamp_instead_of_panicking() {
+        let sess = NativeSession::from_config(tiny_cfg(), 2).unwrap();
+        let logits =
+            sess.predict(&Tensor::i32(vec![1, 3], vec![-5, 3, 9999])).unwrap();
+        assert!(logits.as_f32().unwrap().iter().all(|v| v.is_finite()));
+    }
+}

@@ -1,0 +1,223 @@
+//! Elementary HRR algebra over `f32` feature vectors (paper §2, Eqs. 1-3
+//! of the Hrrformer and the binding/unbinding toolkit of *Learning with
+//! Holographic Reduced Representations*).
+//!
+//! Binding is circular convolution computed in the frequency domain
+//! (`irfft(rfft(x)·rfft(y))`), unbinding multiplies by an inverse of the
+//! key's spectrum. Two inverses are provided:
+//!
+//! * [`exact_inverse`] — the stabilized exact inverse
+//!   `conj(F(y)) / (|F(y)|² + ε)` the Hrrformer uses;
+//! * [`approx_inverse`] — Plate's involution `irfft(conj(F(y)))`, exact
+//!   only when every spectral magnitude is 1, which is precisely what
+//!   [`projection`] enforces (the unit-magnitude projection trick).
+//!
+//! All ops take/return `f32` slices (the model's buffer dtype) and do the
+//! transform arithmetic in `f64` via [`super::fft`].
+
+use super::fft::{irfft, num_bins, rfft};
+
+/// Numerical guard shared with the Python reference (`kernels/ref.py`).
+pub const EPS: f32 = 1e-6;
+
+fn to_f64(x: &[f32]) -> Vec<f64> {
+    x.iter().map(|&v| v as f64).collect()
+}
+
+fn to_f32(x: Vec<f64>) -> Vec<f32> {
+    x.into_iter().map(|v| v as f32).collect()
+}
+
+/// HRR binding `x ⊛ y`: circular convolution over the whole slice.
+pub fn bind(x: &[f32], y: &[f32]) -> Vec<f32> {
+    assert_eq!(x.len(), y.len(), "bind operands must match");
+    let n = x.len();
+    let (xr, xi) = rfft(&to_f64(x));
+    let (yr, yi) = rfft(&to_f64(y));
+    let k = num_bins(n);
+    let mut br = vec![0.0; k];
+    let mut bi = vec![0.0; k];
+    for j in 0..k {
+        br[j] = xr[j] * yr[j] - xi[j] * yi[j];
+        bi[j] = xr[j] * yi[j] + xi[j] * yr[j];
+    }
+    to_f32(irfft(&br, &bi, n))
+}
+
+/// Plate's involution inverse `y†`: time-reversal of all but element 0,
+/// i.e. `irfft(conj(F(y)))`. Exact only for unit-magnitude spectra
+/// (see [`projection`]).
+pub fn approx_inverse(y: &[f32]) -> Vec<f32> {
+    let n = y.len();
+    let (yr, yi) = rfft(&to_f64(y));
+    let neg: Vec<f64> = yi.iter().map(|v| -v).collect();
+    to_f32(irfft(&yr, &neg, n))
+}
+
+/// Stabilized exact inverse `irfft(conj(F(y)) / (|F(y)|² + ε))`.
+pub fn exact_inverse(y: &[f32], eps: f32) -> Vec<f32> {
+    let n = y.len();
+    let (yr, yi) = rfft(&to_f64(y));
+    let k = num_bins(n);
+    let mut ir = vec![0.0; k];
+    let mut ii = vec![0.0; k];
+    for j in 0..k {
+        let d = yr[j] * yr[j] + yi[j] * yi[j] + eps as f64;
+        ir[j] = yr[j] / d;
+        ii[j] = -yi[j] / d;
+    }
+    to_f32(irfft(&ir, &ii, n))
+}
+
+/// Unbind `q` from superposition `s` (paper Eq. 2): `q† ⊛ s` with the
+/// stabilized exact inverse.
+pub fn unbind(s: &[f32], q: &[f32]) -> Vec<f32> {
+    assert_eq!(s.len(), q.len(), "unbind operands must match");
+    let n = s.len();
+    let (sr, si) = rfft(&to_f64(s));
+    let (qr, qi) = rfft(&to_f64(q));
+    let k = num_bins(n);
+    let mut or_ = vec![0.0; k];
+    let mut oi = vec![0.0; k];
+    for j in 0..k {
+        let d = qr[j] * qr[j] + qi[j] * qi[j] + EPS as f64;
+        let ir = qr[j] / d;
+        let ii = -qi[j] / d;
+        or_[j] = sr[j] * ir - si[j] * ii;
+        oi[j] = sr[j] * ii + si[j] * ir;
+    }
+    to_f32(irfft(&or_, &oi, n))
+}
+
+/// Project `y` onto the unit-magnitude spectral manifold:
+/// `irfft(F(y) / |F(y)|)`. After projection the involution
+/// [`approx_inverse`] is an exact inverse, which is the trick *Learning
+/// with HRRs* (Ganesan et al.) uses to make binding lossless.
+pub fn projection(y: &[f32]) -> Vec<f32> {
+    let n = y.len();
+    let (yr, yi) = rfft(&to_f64(y));
+    let k = num_bins(n);
+    let mut pr = vec![0.0; k];
+    let mut pi = vec![0.0; k];
+    for j in 0..k {
+        let mag = (yr[j] * yr[j] + yi[j] * yi[j]).sqrt().max(1e-12);
+        pr[j] = yr[j] / mag;
+        pi[j] = yi[j] / mag;
+    }
+    to_f32(irfft(&pr, &pi, n))
+}
+
+/// Cosine similarity (paper Eq. 3), with the reference's ε on the
+/// denominator.
+pub fn cosine(a: &[f32], b: &[f32]) -> f32 {
+    assert_eq!(a.len(), b.len(), "cosine operands must match");
+    let mut num = 0.0f64;
+    let mut na = 0.0f64;
+    let mut nb = 0.0f64;
+    for (&x, &y) in a.iter().zip(b) {
+        num += x as f64 * y as f64;
+        na += x as f64 * x as f64;
+        nb += y as f64 * y as f64;
+    }
+    (num / (na.sqrt() * nb.sqrt() + EPS as f64)) as f32
+}
+
+/// Superpose (sum) a set of bound pairs: `Σᵢ xᵢ ⊛ yᵢ` (paper Eq. 1).
+/// The reduction stays in the frequency domain — one irfft total.
+pub fn superpose_bound(pairs: &[(&[f32], &[f32])], n: usize) -> Vec<f32> {
+    let k = num_bins(n);
+    let mut br = vec![0.0f64; k];
+    let mut bi = vec![0.0f64; k];
+    for (x, y) in pairs {
+        let (xr, xi) = rfft(&to_f64(x));
+        let (yr, yi) = rfft(&to_f64(y));
+        for j in 0..k {
+            br[j] += xr[j] * yr[j] - xi[j] * yi[j];
+            bi[j] += xr[j] * yi[j] + xi[j] * yr[j];
+        }
+    }
+    to_f32(irfft(&br, &bi, n))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bind_matches_direct_circular_convolution() {
+        let x = [1.0f32, 2.0, -0.5, 0.25, 3.0, -1.0];
+        let y = [0.5f32, -1.5, 2.0, 0.0, 1.0, 0.75];
+        let n = x.len();
+        let got = bind(&x, &y);
+        for i in 0..n {
+            let mut want = 0.0f64;
+            for j in 0..n {
+                want += x[j] as f64 * y[(i + n - j) % n] as f64;
+            }
+            assert!((got[i] as f64 - want).abs() < 1e-4, "lag {i}");
+        }
+    }
+
+    #[test]
+    fn bind_is_commutative() {
+        let x = [0.3f32, -1.2, 0.8, 2.1];
+        let y = [1.0f32, 0.5, -0.25, -2.0];
+        let xy = bind(&x, &y);
+        let yx = bind(&y, &x);
+        for (a, b) in xy.iter().zip(&yx) {
+            assert!((a - b).abs() < 1e-5);
+        }
+    }
+
+    #[test]
+    fn exact_inverse_unbinds() {
+        let k = [0.9f32, -0.4, 1.7, 0.2, -1.1, 0.6, 0.3, -0.8];
+        let v = [0.1f32, 1.4, -0.7, 0.5, 2.0, -0.2, 0.8, -1.5];
+        let s = bind(&k, &v);
+        let got = unbind(&s, &k);
+        for (g, w) in got.iter().zip(&v) {
+            assert!((g - w).abs() < 1e-3, "{g} vs {w}");
+        }
+    }
+
+    #[test]
+    fn projection_gives_unit_spectrum_and_exact_involution() {
+        let y = [2.0f32, -1.0, 0.5, 3.0, -0.25, 1.5];
+        let p = projection(&y);
+        let (pr, pi) = rfft(&p.iter().map(|&v| v as f64).collect::<Vec<_>>());
+        for j in 0..pr.len() {
+            let mag = (pr[j] * pr[j] + pi[j] * pi[j]).sqrt();
+            assert!((mag - 1.0).abs() < 1e-5, "bin {j} magnitude {mag}");
+        }
+        // with a projected key, the involution inverse is exact
+        let v = [0.4f32, -0.9, 1.2, 0.05, -1.6, 0.7];
+        let recovered = bind(&approx_inverse(&p), &bind(&p, &v));
+        for (g, w) in recovered.iter().zip(&v) {
+            assert!((g - w).abs() < 1e-4, "{g} vs {w}");
+        }
+    }
+
+    #[test]
+    fn superpose_bound_matches_sum_of_binds() {
+        let a = [1.0f32, 0.0, -1.0, 2.0];
+        let b = [0.5f32, 1.5, -0.5, 0.25];
+        let c = [2.0f32, -1.0, 0.75, 0.1];
+        let d = [-0.3f32, 0.6, 1.1, -2.0];
+        let fused = superpose_bound(&[(&a, &b), (&c, &d)], 4);
+        let ab = bind(&a, &b);
+        let cd = bind(&c, &d);
+        for i in 0..4 {
+            assert!((fused[i] - (ab[i] + cd[i])).abs() < 1e-4);
+        }
+    }
+
+    #[test]
+    fn cosine_basics() {
+        let a = [1.0f32, 0.0, 0.0, 0.0];
+        assert!((cosine(&a, &a) - 1.0).abs() < 1e-5);
+        let b = [0.0f32, 1.0, 0.0, 0.0];
+        assert!(cosine(&a, &b).abs() < 1e-5);
+        let c = [-2.0f32, 0.0, 0.0, 0.0];
+        assert!((cosine(&a, &c) + 1.0).abs() < 1e-5);
+    }
+}

@@ -7,6 +7,11 @@
 //! (`coordinator`), the typed inference service (`engine`, one parallel
 //! executor thread per sequence bucket), and the paper's benchmark
 //! harness.
+//!
+//! Inference runs on one of two interchangeable backends behind the
+//! `model::Predictor` trait: the AOT/PJRT artifact path above, or the
+//! pure-Rust `hrr` module (FFT binding kernels + full Hrrformer forward
+//! pass) selected with `engine::Backend::Native` — no artifacts needed.
 
 // Deliberate idioms the clippy gate (verify.sh: `-D warnings`) should not
 // fight: collection-like types without an is_empty use-case, and builders
@@ -17,6 +22,7 @@ pub mod bench;
 pub mod coordinator;
 pub mod data;
 pub mod engine;
+pub mod hrr;
 pub mod metrics;
 pub mod model;
 pub mod runtime;

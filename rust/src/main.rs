@@ -18,7 +18,7 @@ use anyhow::{bail, Context, Result};
 use hrrformer::bench;
 use hrrformer::coordinator::{self, BatchPolicy, TrainConfig};
 use hrrformer::data::{by_task, Split, Stream};
-use hrrformer::engine::Engine;
+use hrrformer::engine::{Backend, Engine};
 use hrrformer::runtime::{default_manifest, Runtime};
 use hrrformer::util::cli::Args;
 
@@ -27,24 +27,29 @@ repro — Hrrformer reproduction coordinator
 
 USAGE:
   repro train --base <program base> [--steps N] [--seed S] [--curve path.csv] [--ckpt path]
-  repro serve [--bases a,b,c] [--requests N] [--max-batch B] [--max-wait-ms MS]
-              [--queue-depth D] [--seed S]
+  repro serve [--backend artifact|native] [--bases a,b,c] [--requests N]
+              [--max-batch B] [--max-wait-ms MS] [--queue-depth D] [--seed S]
   repro bench ember     [--steps N] [--models a,b] [--timeout-s S]
   repro bench lra       [--steps N] [--models a,b] [--tasks t1,t2] [--curves]
   repro bench speed     [--steps N]
   repro bench inference [--examples N] [--sweep-batch | --engine]
+                        [--backend artifact|native]
   repro bench weights   [--steps N] [--multi-layer]
   repro data --task <task> [--n N] [--seq-len T]
   repro inspect
 
 serve runs the typed Engine API on synthetic load: one bucket per
---bases entry (each a compiled `<base>_predict` program), a routing
-thread that picks the smallest bucket fitting each request, and one
-executor thread per bucket — each owning its own PJRT runtime because
-xla handles are !Send — so buckets batch and execute in parallel.
-Over-length requests are truncated to the largest bucket and replies
-carry an explicit `truncated` flag. --seed must be a u32 and seeds
-parameter init for every bucket.
+--bases entry, a routing thread that picks the smallest bucket fitting
+each request, and one executor thread per bucket — so buckets batch and
+execute in parallel. Over-length requests are truncated to the largest
+bucket and replies carry an explicit `truncated` flag. --seed must be a
+u32 and seeds parameter init for every bucket.
+
+--backend picks the inference implementation: `artifact` (default)
+executes the AOT-compiled `<base>_predict` XLA programs on per-executor
+PJRT runtimes (xla handles are !Send) and needs `make artifacts`;
+`native` runs the pure-Rust HRR forward pass (rust/src/hrr) — no
+artifacts required, works on a fresh checkout.
 
 Artifacts are read from ./artifacts (override: HRRFORMER_ARTIFACTS).
 Bench outputs land in ./results (override: HRRFORMER_RESULTS).
@@ -110,18 +115,18 @@ fn parse_seed(args: &Args) -> Result<u32> {
     }
 }
 
+/// Parse `--backend` into the engine's typed selector.
+fn parse_backend(args: &Args) -> Result<Backend> {
+    args.str("backend", "artifact").parse::<Backend>().map_err(anyhow::Error::msg)
+}
+
 fn cmd_serve(args: &Args) -> Result<()> {
-    let manifest = default_manifest()?;
-    let default_bases = [
-        "ember_hrrformer_small_T256_B8",
-        "ember_hrrformer_small_T512_B8",
-        "ember_hrrformer_small_T1024_B8",
-    ];
-    let bases = args.list("bases", &default_bases);
+    let backend = parse_backend(args)?;
+    let bases = args.list("bases", &hrrformer::engine::DEFAULT_EMBER_BUCKETS);
     let n_requests = args.usize("requests", 64);
     let seed = parse_seed(args)?;
-    eprintln!("[serve] compiling {} buckets…", bases.len());
-    let engine = Engine::builder()
+    eprintln!("[serve] building {} buckets ({backend:?} backend)…", bases.len());
+    let builder = Engine::builder()
         .buckets(bases)
         .policy(BatchPolicy {
             max_batch: args.usize("max-batch", 8),
@@ -129,7 +134,11 @@ fn cmd_serve(args: &Args) -> Result<()> {
         })
         .queue_depth(args.usize("queue-depth", 128))
         .seed(seed)
-        .build(&manifest)?;
+        .backend(backend);
+    let engine = match backend {
+        Backend::Artifact => builder.build(&default_manifest()?)?,
+        Backend::Native => builder.build_native()?,
+    };
 
     // synthetic load: ember byte sequences with varied lengths
     let ds = by_task("ember", 1024).unwrap();
@@ -167,11 +176,12 @@ fn cmd_serve(args: &Args) -> Result<()> {
 
 fn cmd_bench(args: &Args) -> Result<()> {
     let which = args.positional.get(1).map(|s| s.as_str()).context("bench <ember|lra|speed|inference|weights>")?;
-    let manifest = default_manifest()?;
-    // The runtime is created per arm: the engine serving bench manages
-    // its own per-executor runtimes and must not pay for an unused one.
+    // The manifest and runtime are resolved per arm: the engine serving
+    // bench manages its own per-executor runtimes (and on the native
+    // backend needs no manifest at all).
     match which {
         "ember" => {
+            let manifest = default_manifest()?;
             let mut cfg = bench::ember::EmberBenchCfg::default();
             cfg.steps = args.usize("steps", cfg.steps);
             cfg.seed = args.u64("seed", cfg.seed);
@@ -182,6 +192,7 @@ fn cmd_bench(args: &Args) -> Result<()> {
             bench::ember::run(&Runtime::cpu()?, &manifest, &cfg)?;
         }
         "lra" => {
+            let manifest = default_manifest()?;
             let mut cfg = bench::lra::LraBenchCfg::default();
             cfg.steps = args.usize("steps", cfg.steps);
             cfg.seed = args.u64("seed", cfg.seed);
@@ -195,6 +206,7 @@ fn cmd_bench(args: &Args) -> Result<()> {
             bench::lra::run(&Runtime::cpu()?, &manifest, &cfg)?;
         }
         "speed" => {
+            let manifest = default_manifest()?;
             let mut cfg = bench::speed::SpeedBenchCfg::default();
             cfg.steps = args.usize("steps", cfg.steps);
             cfg.seed = args.u64("seed", cfg.seed);
@@ -206,13 +218,26 @@ fn cmd_bench(args: &Args) -> Result<()> {
             cfg.seed = args.u64("seed", cfg.seed);
             cfg.sweep_batch = args.bool("sweep-batch");
             cfg.engine = args.bool("engine");
+            cfg.backend = parse_backend(args)?;
             if cfg.engine {
-                bench::inference::run_engine_serve(&manifest, &cfg)?;
+                // native serving needs no manifest; artifact serving does
+                let manifest = match cfg.backend {
+                    Backend::Artifact => Some(default_manifest()?),
+                    Backend::Native => None,
+                };
+                bench::inference::run_engine_serve(manifest.as_ref(), &cfg)?;
             } else {
+                anyhow::ensure!(
+                    cfg.backend == Backend::Artifact,
+                    "--backend native is only supported with --engine \
+                     (raw-session tables time the compiled XLA programs)"
+                );
+                let manifest = default_manifest()?;
                 bench::inference::run(&Runtime::cpu()?, &manifest, &cfg)?;
             }
         }
         "weights" => {
+            let manifest = default_manifest()?;
             let mut cfg = bench::weights::WeightsBenchCfg::default();
             cfg.steps = args.usize("steps", cfg.steps);
             cfg.seed = args.u64("seed", cfg.seed);

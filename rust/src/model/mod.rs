@@ -1,14 +1,17 @@
 //! Model state management: parameter stores, checkpoints, and the
 //! train/predict/weights sessions that drive the AOT programs.
 //!
-//! The [`Session`] trait is the uniform surface (spec/bucket accessors,
-//! parameter store) shared by all session types; [`ProgramHandle`]
-//! centralizes the params-first `run_refs` packing they all use.
+//! The [`Session`] trait is the uniform surface (bucket accessors,
+//! parameter store) shared by all session types — PJRT-backed and the
+//! native pure-Rust backend alike; [`Predictor`] adds the engine's
+//! predict entry point; [`ProgramHandle`] centralizes the params-first
+//! `run_refs` packing the PJRT sessions use.
 
 pub mod params;
 pub mod session;
 
 pub use params::ParamStore;
 pub use session::{
-    init_params, PredictSession, ProgramHandle, Session, StepStats, TrainSession, WeightsSession,
+    init_params, PredictSession, Predictor, ProgramHandle, Session, StepStats, TrainSession,
+    WeightsSession,
 };

@@ -10,10 +10,14 @@
 //! * [`init_params`] — seed-deterministic parameter initialization by
 //!   running the `<base>_init` program.
 //!
-//! The [`Session`] trait is the uniform read-only surface (spec, bucket
-//! shape, parameter store) the engine, trainer and benches program
-//! against; the concrete types add their op-specific entry points
-//! (`train_step`, `predict`, `weights`).
+//! The [`Session`] trait is the uniform read-only surface (bucket shape,
+//! parameter store) the engine, trainer and benches program against. It
+//! is deliberately backend-neutral: the PJRT sessions here implement it
+//! from their compiled `ProgramSpec`, and the artifact-free
+//! [`crate::hrr::NativeSession`] implements it from its `HrrConfig`.
+//! [`Predictor`] extends it with the one hot-path entry point the
+//! serving engine needs (`predict`); the concrete types add their other
+//! op-specific entry points (`train_step`, `weights`).
 
 use std::path::Path;
 
@@ -81,33 +85,33 @@ fn zeros_matching(store: &ParamStore) -> ParamStore {
     }
 }
 
-/// Uniform session surface: every session wraps one primary compiled
-/// program and a parameter store; spec/bucket accessors derive from them.
+/// Uniform session surface, backend-neutral: a parameter store plus the
+/// fixed (batch, seq_len) shape of the forward pass. PJRT sessions
+/// derive the shape from their compiled `ProgramSpec`; the native
+/// backend derives it from its `HrrConfig`.
 pub trait Session {
-    /// The session's primary compiled program.
-    fn program(&self) -> &ProgramHandle;
-
-    /// The parameter tensors the program closes over.
+    /// The parameter tensors the forward pass closes over.
     fn params(&self) -> &ParamStore;
 
-    fn spec(&self) -> &ProgramSpec {
-        self.program().spec()
-    }
+    /// Batch capacity of the (fixed-shape) forward pass.
+    fn batch(&self) -> usize;
 
-    /// Batch capacity of the compiled (fixed-shape) program.
-    fn batch(&self) -> usize {
-        self.spec().batch
-    }
-
-    /// Sequence length of the compiled (fixed-shape) program.
-    fn seq_len(&self) -> usize {
-        self.spec().seq_len
-    }
+    /// Sequence length of the (fixed-shape) forward pass.
+    fn seq_len(&self) -> usize;
 
     /// Total learnable parameter scalars.
     fn param_scalars(&self) -> usize {
         self.params().total_scalars()
     }
+}
+
+/// The one entry point the serving engine needs, shared by every
+/// inference backend: logits (B, classes) for a batch of token ids
+/// (B, T). Implemented by [`PredictSession`] (compiled XLA program) and
+/// [`crate::hrr::NativeSession`] (pure-Rust forward pass); engine
+/// executors hold a `Box<dyn Predictor>` and never know which.
+pub trait Predictor: Session {
+    fn predict(&self, ids: &Tensor) -> Result<Tensor>;
 }
 
 /// Result of one optimizer step.
@@ -131,12 +135,16 @@ pub struct TrainSession {
 }
 
 impl Session for TrainSession {
-    fn program(&self) -> &ProgramHandle {
-        &self.train
-    }
-
     fn params(&self) -> &ParamStore {
         &self.params
+    }
+
+    fn batch(&self) -> usize {
+        self.train.spec().batch
+    }
+
+    fn seq_len(&self) -> usize {
+        self.train.spec().seq_len
     }
 }
 
@@ -225,12 +233,22 @@ pub struct PredictSession {
 }
 
 impl Session for PredictSession {
-    fn program(&self) -> &ProgramHandle {
-        &self.predict
-    }
-
     fn params(&self) -> &ParamStore {
         &self.params
+    }
+
+    fn batch(&self) -> usize {
+        self.predict.spec().batch
+    }
+
+    fn seq_len(&self) -> usize {
+        self.predict.spec().seq_len
+    }
+}
+
+impl Predictor for PredictSession {
+    fn predict(&self, ids: &Tensor) -> Result<Tensor> {
+        PredictSession::predict(self, ids)
     }
 }
 
@@ -265,12 +283,16 @@ pub struct WeightsSession {
 }
 
 impl Session for WeightsSession {
-    fn program(&self) -> &ProgramHandle {
-        &self.program
-    }
-
     fn params(&self) -> &ParamStore {
         &self.params
+    }
+
+    fn batch(&self) -> usize {
+        self.program.spec().batch
+    }
+
+    fn seq_len(&self) -> usize {
+        self.program.spec().seq_len
     }
 }
 

@@ -1,12 +1,22 @@
 //! Shared integration-test helpers.
 //!
-//! The AOT artifacts (`artifacts/manifest.json` + HLO text) are a build
-//! product, not checked in. Tests that need them *skip with a message*
-//! instead of failing, so `cargo test -q` reflects code health on a
-//! fresh checkout and the full suite runs once `make artifacts` has.
+//! Two tiers of tests:
+//!
+//! * Tests of the PJRT runtime/training path itself need the AOT
+//!   artifacts (`artifacts/manifest.json` + HLO text — a build product,
+//!   not checked in) and *skip with a message* via
+//!   [`manifest_or_skip`] when they are absent.
+//! * The engine integration suite is backend-agnostic: with artifacts it
+//!   runs the compiled-XLA path, without them it **falls back to the
+//!   native pure-Rust backend** instead of skipping
+//!   ([`EngineTestEnv::detect`]), so `cargo test -q` exercises the full
+//!   serving stack on any machine. When artifacts *are* present the same
+//!   tests double as an artifact-path parity case.
 
 #![allow(dead_code)] // not every test binary uses every helper
 
+use hrrformer::engine::{Backend, Engine, EngineBuilder, DEFAULT_EMBER_BUCKETS};
+use hrrformer::hrr::HrrConfig;
 use hrrformer::runtime::{default_manifest, Manifest};
 
 /// Load the manifest, or print a SKIP line and return `None` when the
@@ -22,5 +32,82 @@ pub fn manifest_or_skip(test: &str) -> Option<Manifest> {
             );
             None
         }
+    }
+}
+
+/// Backend-aware environment for the engine suite: which backend to
+/// build on, plus a three-bucket ladder sized for it. The artifact
+/// ladder matches the exported core set (T=256/512/1024); the native
+/// ladder uses smaller buckets (T=64/128/256) so a debug-mode
+/// `cargo test` stays fast — the pure-Rust forward pass runs real
+/// FLOPs, not a compiled kernel.
+pub struct EngineTestEnv {
+    pub backend: Backend,
+    manifest: Option<Manifest>,
+    /// bucket program bases, ascending by sequence length
+    pub bases: [&'static str; 3],
+    /// the buckets' sequence lengths, ascending
+    pub ts: [usize; 3],
+}
+
+/// Sequence lengths of a bucket ladder, derived from the base strings
+/// (never hand-maintained next to them).
+fn ladder_ts(bases: [&'static str; 3]) -> [usize; 3] {
+    bases.map(|b| HrrConfig::from_base(b).expect("test bucket base parses").seq_len)
+}
+
+impl EngineTestEnv {
+    /// Artifact backend when `artifacts/` is exported, native otherwise.
+    pub fn detect(test: &str) -> EngineTestEnv {
+        match default_manifest() {
+            Ok(m) => EngineTestEnv {
+                backend: Backend::Artifact,
+                manifest: Some(m),
+                bases: DEFAULT_EMBER_BUCKETS,
+                ts: ladder_ts(DEFAULT_EMBER_BUCKETS),
+            },
+            Err(_) => {
+                eprintln!(
+                    "NOTE {test}: artifacts absent — running on the native pure-Rust backend"
+                );
+                let bases = [
+                    "ember_hrrformer_small_T64_B8",
+                    "ember_hrrformer_small_T128_B8",
+                    "ember_hrrformer_small_T256_B8",
+                ];
+                EngineTestEnv {
+                    backend: Backend::Native,
+                    manifest: None,
+                    bases,
+                    ts: ladder_ts(bases),
+                }
+            }
+        }
+    }
+
+    /// Finish a builder on this env's backend (buckets/policy/etc. are
+    /// the caller's).
+    pub fn build(&self, builder: EngineBuilder) -> anyhow::Result<Engine> {
+        match &self.manifest {
+            Some(m) => builder.build(m),
+            None => builder.build_native(),
+        }
+    }
+
+    /// Largest bucket T — requests longer than this run truncated.
+    pub fn max_t(&self) -> usize {
+        self.ts[2]
+    }
+
+    /// The bucket a request of `len` tokens must land in, per the
+    /// router's spec: smallest bucket that fits, else the largest with
+    /// the truncated flag.
+    pub fn expect_bucket(&self, len: usize) -> (usize, bool) {
+        for &t in &self.ts {
+            if len <= t {
+                return (t, false);
+            }
+        }
+        (self.max_t(), true)
     }
 }

@@ -1,0 +1,123 @@
+//! Golden-vector parity: the native pure-Rust forward pass must match
+//! the Python reference (python/compile/export_golden.py, a numpy-exact
+//! mirror of model.py + kernels/ref.py) within 1e-4 on checked-in
+//! fixtures. One fixture runs the radix-2 FFT path (power-of-two head
+//! dim, fixed sinusoid positions), the other the naive-DFT fallback
+//! (non-power-of-two head dim, learned positions) — both with PAD
+//! masking in play.
+//!
+//! Always runs: no artifacts, no PJRT, no skips.
+
+use hrrformer::hrr::{HrrConfig, NativeSession};
+use hrrformer::model::ParamStore;
+use hrrformer::runtime::Tensor;
+use hrrformer::util::json::Json;
+
+/// Parse one exported fixture into (config, params, ids, want, tol).
+fn load_fixture(text: &str) -> (HrrConfig, ParamStore, Tensor, Vec<Vec<f64>>, f64) {
+    let j = Json::parse(text).expect("fixture json parses");
+    let cfgj = j.get("config").expect("config");
+    let u = |k: &str| cfgj.get(k).and_then(Json::as_usize).unwrap_or_else(|| panic!("config.{k}"));
+    let cfg = HrrConfig {
+        task: cfgj.get("task").and_then(Json::as_str).unwrap_or("golden").to_string(),
+        vocab: u("vocab"),
+        seq_len: u("seq_len"),
+        batch: u("batch"),
+        embed: u("embed"),
+        mlp_dim: u("mlp_dim"),
+        heads: u("heads"),
+        layers: u("layers"),
+        classes: u("classes"),
+        learned_pos: cfgj.get("pos").and_then(Json::as_str) == Some("learned"),
+    };
+
+    let mut params = ParamStore::default();
+    for p in j.get("params").and_then(Json::as_arr).expect("params") {
+        let name = p.get("name").and_then(Json::as_str).expect("param.name").to_string();
+        let shape: Vec<usize> = p
+            .get("shape")
+            .and_then(Json::as_arr)
+            .expect("param.shape")
+            .iter()
+            .map(|d| d.as_usize().expect("shape dim"))
+            .collect();
+        let data: Vec<f32> = p
+            .get("data")
+            .and_then(Json::as_arr)
+            .expect("param.data")
+            .iter()
+            .map(|v| v.as_f64().expect("param value") as f32)
+            .collect();
+        params.names.push(name);
+        params.tensors.push(Tensor::f32(shape, data));
+    }
+
+    let ids_rows = j.get("ids").and_then(Json::as_arr).expect("ids");
+    let b = ids_rows.len();
+    let mut flat = Vec::new();
+    for row in ids_rows {
+        for v in row.as_arr().expect("ids row") {
+            flat.push(v.as_i64().expect("id") as i32);
+        }
+    }
+    let t = flat.len() / b;
+    let ids = Tensor::i32(vec![b, t], flat);
+
+    let want: Vec<Vec<f64>> = j
+        .get("logits")
+        .and_then(Json::as_arr)
+        .expect("logits")
+        .iter()
+        .map(|row| row.as_arr().expect("logits row").iter().map(|v| v.as_f64().unwrap()).collect())
+        .collect();
+    let tol = j.get("tolerance").and_then(Json::as_f64).unwrap_or(1e-4);
+    (cfg, params, ids, want, tol)
+}
+
+fn check_fixture(text: &str, label: &str) {
+    let (cfg, params, ids, want, tol) = load_fixture(text);
+    let sess = NativeSession::with_params(cfg.clone(), params)
+        .unwrap_or_else(|e| panic!("{label}: fixture params rejected: {e:#}"));
+    let logits = sess.predict(&ids).unwrap_or_else(|e| panic!("{label}: predict failed: {e:#}"));
+    assert_eq!(logits.shape(), &[want.len(), cfg.classes], "{label}: logits shape");
+    let got = logits.as_f32().unwrap();
+    let mut worst = 0.0f64;
+    for (r, row) in want.iter().enumerate() {
+        for (c, &w) in row.iter().enumerate() {
+            let g = got[r * cfg.classes + c] as f64;
+            let d = (g - w).abs();
+            worst = worst.max(d);
+            assert!(
+                d <= tol,
+                "{label}: logits[{r}][{c}] = {g} vs reference {w} (|Δ| = {d:.3e} > {tol:.0e})"
+            );
+        }
+    }
+    eprintln!("{label}: parity OK, worst |Δ| = {worst:.3e} (tolerance {tol:.0e})");
+}
+
+#[test]
+fn native_forward_matches_python_reference_pow2_fft_path() {
+    check_fixture(include_str!("fixtures/golden_hrr_fixed.json"), "golden_hrr_fixed");
+}
+
+#[test]
+fn native_forward_matches_python_reference_naive_dft_path() {
+    check_fixture(include_str!("fixtures/golden_hrr_learned.json"), "golden_hrr_learned");
+}
+
+#[test]
+fn golden_fixtures_cover_both_fft_paths_and_padding() {
+    let (cfg_a, _, ids_a, _, _) = load_fixture(include_str!("fixtures/golden_hrr_fixed.json"));
+    assert!(cfg_a.head_dim().is_power_of_two(), "fixture A pins the radix-2 path");
+    assert!(!cfg_a.learned_pos);
+    let (cfg_b, _, ids_b, _, _) = load_fixture(include_str!("fixtures/golden_hrr_learned.json"));
+    assert!(!cfg_b.head_dim().is_power_of_two(), "fixture B pins the naive-DFT fallback");
+    assert!(cfg_b.learned_pos);
+    // both fixtures must exercise the PAD mask
+    for (ids, label) in [(&ids_a, "A"), (&ids_b, "B")] {
+        let data = ids.as_i32().unwrap();
+        assert!(data.iter().any(|&v| v == 0), "fixture {label} has PAD tokens");
+        assert!(data.iter().any(|&v| v != 0), "fixture {label} has real tokens");
+    }
+}

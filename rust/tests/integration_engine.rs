@@ -2,19 +2,21 @@
 //! truncation flags, FIFO-per-bucket reply ordering, *parallel* bucket
 //! execution (observed via per-bucket execution spans), `QueueFull`
 //! backpressure, clean shutdown drain, and fail-fast startup.
-//! Requires `make artifacts` (core set); skips cleanly otherwise.
+//!
+//! Always runs: with AOT artifacts (`make artifacts`) the suite
+//! exercises the compiled-XLA path; without them it runs the same
+//! assertions on the native pure-Rust backend (`common::EngineTestEnv`),
+//! so a fresh checkout gets the full engine coverage instead of skips.
+//! Bucket shapes are backend-sized — see `EngineTestEnv::detect`.
 
 mod common;
 
 use std::time::Duration;
 
+use common::EngineTestEnv;
 use hrrformer::coordinator::BatchPolicy;
 use hrrformer::data::{by_task, Split, Stream};
-use hrrformer::engine::{Engine, EngineError};
-
-const T256: &str = "ember_hrrformer_small_T256_B8";
-const T512: &str = "ember_hrrformer_small_T512_B8";
-const T1024: &str = "ember_hrrformer_small_T1024_B8";
+use hrrformer::engine::{Backend, Engine, EngineError};
 
 fn example_ids(seed: u64, len: usize) -> Vec<i32> {
     let ds = by_task("ember", 1024).unwrap();
@@ -26,36 +28,39 @@ fn example_ids(seed: u64, len: usize) -> Vec<i32> {
         ex.ids.extend(extend);
     }
     ex.ids.truncate(len);
+    // keep position 0 non-PAD so the request is never all-PAD after
+    // truncation (PAD would merely shrink the mask, which is also fine)
+    if ex.ids[0] == 0 {
+        ex.ids[0] = 1;
+    }
     ex.ids
 }
 
 #[test]
 fn engine_routes_truncates_and_keeps_fifo_per_bucket() {
-    let Some(manifest) = common::manifest_or_skip("engine_routes_truncates_and_keeps_fifo_per_bucket")
-    else {
-        return;
-    };
-    let engine = Engine::builder()
-        .buckets([T256, T512, T1024])
-        .policy(BatchPolicy { max_batch: 8, max_wait: Duration::from_millis(5) })
-        .queue_depth(64)
-        .seed(0)
-        .build(&manifest)
+    let env = EngineTestEnv::detect("engine_routes_truncates_and_keeps_fifo_per_bucket");
+    let engine = env
+        .build(
+            Engine::builder()
+                .buckets(env.bases)
+                .policy(BatchPolicy { max_batch: 8, max_wait: Duration::from_millis(5) })
+                .queue_depth(64)
+                .seed(0),
+        )
         .unwrap();
     assert_eq!(engine.buckets().len(), 3, "buckets sorted by T");
 
-    // Mixed lengths, including over-length requests (2000 > largest T).
-    let lens = [100usize, 256, 300, 512, 700, 1024, 2000];
+    // Mixed lengths spanning every bucket, including over-length
+    // requests (2·max_t > largest T ⇒ truncation).
+    let [t0, t1, t2] = env.ts;
+    let lens =
+        [t0 / 2, t0, t0 + (t1 - t0) / 2, t1, t1 + (t2 - t1) / 2, t2, 2 * t2];
     let pending: Vec<_> = (0..21usize)
         .map(|i| {
             let len = lens[i % lens.len()];
-            let want_bucket = match len {
-                0..=256 => 256,
-                257..=512 => 512,
-                _ => 1024, // includes the truncation case (2000 → largest)
-            };
+            let (want_bucket, want_truncated) = env.expect_bucket(len);
             let ticket = engine.submit_wait(example_ids(i as u64, len)).unwrap();
-            (len, want_bucket, ticket)
+            (len, want_bucket, want_truncated, ticket)
         })
         .collect();
 
@@ -63,10 +68,10 @@ fn engine_routes_truncates_and_keeps_fifo_per_bucket() {
     // and per-bucket seq numbers strictly increasing in submission order
     // (FIFO within each bucket).
     let mut last_seq: Vec<(usize, u64)> = Vec::new();
-    for (len, want_bucket, ticket) in pending {
+    for (len, want_bucket, want_truncated, ticket) in pending {
         let reply = ticket.wait().unwrap();
         assert_eq!(reply.bucket_t, want_bucket, "router picked wrong bucket for len {len}");
-        assert_eq!(reply.truncated, len > 1024, "truncated flag wrong for len {len}");
+        assert_eq!(reply.truncated, want_truncated, "truncated flag wrong for len {len}");
         assert_eq!(reply.logits.len(), 2);
         assert!(reply.logits.iter().all(|v| v.is_finite()));
         assert!(reply.batch_size >= 1 && reply.batch_size <= 8);
@@ -88,23 +93,26 @@ fn engine_routes_truncates_and_keeps_fifo_per_bucket() {
 
 #[test]
 fn engine_buckets_execute_in_parallel() {
-    let Some(manifest) = common::manifest_or_skip("engine_buckets_execute_in_parallel") else {
-        return;
-    };
-    let engine = Engine::builder()
-        .buckets([T256, T1024])
-        // small batches + no deadline slack keep both executors busy
-        .policy(BatchPolicy { max_batch: 2, max_wait: Duration::from_millis(1) })
-        .queue_depth(128)
-        .seed(0)
-        .build(&manifest)
+    let env = EngineTestEnv::detect("engine_buckets_execute_in_parallel");
+    let engine = env
+        .build(
+            Engine::builder()
+                .buckets([env.bases[0], env.bases[2]])
+                // small batches + no deadline slack keep both executors busy
+                .policy(BatchPolicy { max_batch: 2, max_wait: Duration::from_millis(1) })
+                .queue_depth(128)
+                .seed(0),
+        )
         .unwrap();
 
     // Interleave short and long requests so both buckets have a deep
-    // queue of executions to chew through concurrently.
-    let tickets: Vec<_> = (0..96u64)
+    // queue of executions to chew through concurrently. (Fewer on the
+    // native backend — every execution is real debug-mode FLOPs.)
+    let (short, long) = (env.ts[0] * 3 / 4, env.ts[2] * 3 / 4);
+    let n = if env.backend == Backend::Native { 48u64 } else { 96 };
+    let tickets: Vec<_> = (0..n)
         .map(|i| {
-            let len = if i % 2 == 0 { 200 } else { 900 };
+            let len = if i % 2 == 0 { short } else { long };
             engine.submit_wait(example_ids(i, len)).unwrap()
         })
         .collect();
@@ -113,41 +121,42 @@ fn engine_buckets_execute_in_parallel() {
     }
 
     let spans = engine.stats().spans();
-    let t256: Vec<_> = spans.iter().filter(|s| s.bucket_t == 256).collect();
-    let t1024: Vec<_> = spans.iter().filter(|s| s.bucket_t == 1024).collect();
-    assert!(!t256.is_empty() && !t1024.is_empty(), "both buckets executed");
-    let overlapping = t256
+    let (small_t, big_t) = (env.ts[0], env.ts[2]);
+    let small: Vec<_> = spans.iter().filter(|s| s.bucket_t == small_t).collect();
+    let big: Vec<_> = spans.iter().filter(|s| s.bucket_t == big_t).collect();
+    assert!(!small.is_empty() && !big.is_empty(), "both buckets executed");
+    let overlapping = small
         .iter()
-        .flat_map(|a| t1024.iter().map(move |b| a.overlaps(b)))
+        .flat_map(|a| big.iter().map(move |b| a.overlaps(b)))
         .filter(|&o| o)
         .count();
     assert!(
         overlapping > 0,
-        "expected cross-bucket executions to overlap in time ({} T256 spans, {} T1024 spans)",
-        t256.len(),
-        t1024.len()
+        "expected cross-bucket executions to overlap in time ({} T{small_t} spans, {} T{big_t} spans)",
+        small.len(),
+        big.len()
     );
     engine.stop();
 }
 
 #[test]
 fn engine_backpressure_reports_queue_full() {
-    let Some(manifest) = common::manifest_or_skip("engine_backpressure_reports_queue_full") else {
-        return;
-    };
-    let engine = Engine::builder()
-        .bucket(T256)
-        // long deadline: the queue only drains in units of full batches
-        .policy(BatchPolicy { max_batch: 8, max_wait: Duration::from_millis(50) })
-        .queue_depth(2)
-        .seed(0)
-        .build(&manifest)
+    let env = EngineTestEnv::detect("engine_backpressure_reports_queue_full");
+    let engine = env
+        .build(
+            Engine::builder()
+                .bucket(env.bases[0])
+                // long deadline: the queue only drains in units of full batches
+                .policy(BatchPolicy { max_batch: 8, max_wait: Duration::from_millis(50) })
+                .queue_depth(2)
+                .seed(0),
+        )
         .unwrap();
 
     // Flood far more requests than (admission + bucket) queues can hold;
     // non-blocking submits must start failing fast with QueueFull (and
     // routed requests that find the bucket queue full resolve to it).
-    let ids = example_ids(0, 200);
+    let ids = example_ids(0, env.ts[0] * 3 / 4);
     let mut tickets = Vec::new();
     let mut rejected_at_submit = 0usize;
     for _ in 0..256 {
@@ -179,20 +188,20 @@ fn engine_backpressure_reports_queue_full() {
 
 #[test]
 fn blocking_submits_never_see_queue_full() {
-    let Some(manifest) = common::manifest_or_skip("blocking_submits_never_see_queue_full") else {
-        return;
-    };
+    let env = EngineTestEnv::detect("blocking_submits_never_see_queue_full");
     // Tiny queues + a flood: fail-fast submits would reject here (see
     // the test above), but submit_wait opted into backpressure-by-
     // waiting and must get every request served.
-    let engine = Engine::builder()
-        .bucket(T256)
-        .policy(BatchPolicy { max_batch: 8, max_wait: Duration::from_millis(5) })
-        .queue_depth(2)
-        .seed(0)
-        .build(&manifest)
+    let engine = env
+        .build(
+            Engine::builder()
+                .bucket(env.bases[0])
+                .policy(BatchPolicy { max_batch: 8, max_wait: Duration::from_millis(5) })
+                .queue_depth(2)
+                .seed(0),
+        )
         .unwrap();
-    let ids = example_ids(0, 200);
+    let ids = example_ids(0, env.ts[0] * 3 / 4);
     let tickets: Vec<_> = (0..64).map(|_| engine.submit_wait(ids.clone()).unwrap()).collect();
     for t in tickets {
         t.wait().expect("blocking submits must never resolve to QueueFull");
@@ -202,22 +211,22 @@ fn blocking_submits_never_see_queue_full() {
 
 #[test]
 fn engine_drains_on_shutdown_and_rejects_after() {
-    let Some(manifest) = common::manifest_or_skip("engine_drains_on_shutdown_and_rejects_after")
-    else {
-        return;
-    };
-    let engine = Engine::builder()
-        .bucket(T256)
-        // deadline far in the future: only shutdown drain can flush these
-        .policy(BatchPolicy { max_batch: 8, max_wait: Duration::from_secs(3600) })
-        .queue_depth(32)
-        .seed(0)
-        .build(&manifest)
+    let env = EngineTestEnv::detect("engine_drains_on_shutdown_and_rejects_after");
+    let engine = env
+        .build(
+            Engine::builder()
+                .bucket(env.bases[0])
+                // deadline far in the future: only shutdown drain can flush these
+                .policy(BatchPolicy { max_batch: 8, max_wait: Duration::from_secs(3600) })
+                .queue_depth(32)
+                .seed(0),
+        )
         .unwrap();
     let client = engine.client();
 
-    let tickets: Vec<_> =
-        (0..5).map(|i| engine.submit_wait(example_ids(i, 100 + i as usize)).unwrap()).collect();
+    let tickets: Vec<_> = (0..5)
+        .map(|i| engine.submit_wait(example_ids(i, env.ts[0] / 2 + i as usize)).unwrap())
+        .collect();
     // Stop with requests still queued: the drain must flush and answer
     // every one of them (partial batch, batch_size = 5) before exiting.
     engine.stop();
@@ -234,11 +243,11 @@ fn engine_drains_on_shutdown_and_rejects_after() {
 
 #[test]
 fn engine_build_fails_fast_on_unknown_base_and_empty_config() {
-    let Some(manifest) = common::manifest_or_skip("engine_build_fails_fast") else {
-        return;
-    };
-    let err = Engine::builder().bucket("does_not_exist").build(&manifest).unwrap_err();
-    assert!(err.to_string().contains("not in manifest"), "{err}");
-    let err = Engine::builder().build(&manifest).unwrap_err();
+    let env = EngineTestEnv::detect("engine_build_fails_fast");
+    // Unknown base: rejected up front on both backends ("not in
+    // manifest" / "unrecognised program base"), naming the base.
+    let err = env.build(Engine::builder().bucket("does_not_exist")).unwrap_err();
+    assert!(err.to_string().contains("does_not_exist"), "{err}");
+    let err = env.build(Engine::builder()).unwrap_err();
     assert!(err.to_string().contains("no predict buckets"), "{err}");
 }

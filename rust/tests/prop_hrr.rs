@@ -1,0 +1,205 @@
+//! Property tests for the native HRR algebra (rust/src/hrr), on the
+//! repo's `util::prop` harness. Always runs — pure math, no artifacts.
+//!
+//! Invariants pinned here (paper §2-3 + Learning-with-HRRs):
+//! * FFT/inverse-FFT and rFFT/irFFT roundtrips, power-of-two and not;
+//! * binding is the circular convolution it claims to be, and commutes;
+//! * binding-then-unbinding with the stabilized exact inverse recovers
+//!   the value within tolerance;
+//! * with unit-magnitude projected keys, the cheap involution inverse
+//!   recovers the value too;
+//! * binding is bilinear, so superpositions decompose linearly.
+
+use hrrformer::hrr::{fft, ops};
+use hrrformer::util::prop::forall;
+use hrrformer::util::rng::Rng;
+
+/// Mixed power-of-two and odd lengths, 4..=64 — the head-dim range.
+fn dim(rng: &mut Rng) -> usize {
+    const DIMS: [usize; 8] = [4, 6, 8, 12, 16, 24, 32, 64];
+    DIMS[rng.usize_below(DIMS.len())]
+}
+
+fn vec_f32(rng: &mut Rng, n: usize) -> Vec<f32> {
+    (0..n).map(|_| rng.normal() as f32).collect()
+}
+
+/// A random vector whose spectrum has no near-zero bin. The stabilized
+/// exact inverse divides by `|F(k)|² + ε`, so a key with a ~zero bin
+/// *correctly* loses that component — recovery guarantees only hold for
+/// well-conditioned keys, which is what this generator produces.
+fn well_conditioned(rng: &mut Rng, n: usize) -> Vec<f32> {
+    loop {
+        let k = vec_f32(rng, n);
+        let (re, im) = fft::rfft(&k.iter().map(|&v| v as f64).collect::<Vec<_>>());
+        let min_power = re
+            .iter()
+            .zip(&im)
+            .map(|(&r, &i)| r * r + i * i)
+            .fold(f64::INFINITY, f64::min);
+        if min_power > 1e-2 {
+            return k;
+        }
+    }
+}
+
+fn vec_f64(rng: &mut Rng, n: usize) -> Vec<f64> {
+    (0..n).map(|_| rng.normal()).collect()
+}
+
+fn rel_l2(got: &[f32], want: &[f32]) -> f64 {
+    let err: f64 = got
+        .iter()
+        .zip(want)
+        .map(|(&g, &w)| (g as f64 - w as f64) * (g as f64 - w as f64))
+        .sum();
+    let norm: f64 = want.iter().map(|&w| w as f64 * w as f64).sum();
+    (err / norm.max(1e-12)).sqrt()
+}
+
+#[test]
+fn fft_inverse_fft_roundtrip() {
+    forall(200, 0x0FF7_0001, |rng| {
+        let n = dim(rng);
+        let re0 = vec_f64(rng, n);
+        let im0 = vec_f64(rng, n);
+        let mut re = re0.clone();
+        let mut im = im0.clone();
+        fft::fft(&mut re, &mut im, false);
+        fft::fft(&mut re, &mut im, true);
+        for i in 0..n {
+            assert!((re[i] - re0[i]).abs() < 1e-9, "re[{i}] n={n}");
+            assert!((im[i] - im0[i]).abs() < 1e-9, "im[{i}] n={n}");
+        }
+    });
+}
+
+#[test]
+fn rfft_irfft_roundtrip() {
+    forall(200, 0x0FF7_0002, |rng| {
+        let n = dim(rng);
+        let x = vec_f64(rng, n);
+        let (re, im) = fft::rfft(&x);
+        assert_eq!(re.len(), fft::num_bins(n));
+        let back = fft::irfft(&re, &im, n);
+        for i in 0..n {
+            assert!((back[i] - x[i]).abs() < 1e-9, "x[{i}] n={n}");
+        }
+    });
+}
+
+#[test]
+fn bind_is_circular_convolution_and_commutes() {
+    forall(150, 0x0FF7_0003, |rng| {
+        let n = dim(rng);
+        let x = vec_f32(rng, n);
+        let y = vec_f32(rng, n);
+        let xy = ops::bind(&x, &y);
+        // direct O(n²) circular convolution in f64
+        for i in 0..n {
+            let mut want = 0.0f64;
+            for j in 0..n {
+                want += x[j] as f64 * y[(i + n - j) % n] as f64;
+            }
+            assert!((xy[i] as f64 - want).abs() < 1e-3, "lag {i} n={n}");
+        }
+        let yx = ops::bind(&y, &x);
+        for i in 0..n {
+            assert!((xy[i] - yx[i]).abs() < 1e-4, "commutativity at {i}");
+        }
+    });
+}
+
+#[test]
+fn bind_then_unbind_recovers_the_value() {
+    forall(200, 0x0FF7_0004, |rng| {
+        let n = dim(rng);
+        let k = well_conditioned(rng, n);
+        let v = vec_f32(rng, n);
+        let s = ops::bind(&k, &v);
+        let v_hat = ops::unbind(&s, &k);
+        // The ε-stabilized inverse leaves a bias of ~ε/|F(k)|² per bin,
+        // so recovery is near-exact, not bit-exact.
+        let err = rel_l2(&v_hat, &v);
+        assert!(err < 1e-3, "relative L2 error {err} (n={n})");
+        assert!(ops::cosine(&v_hat, &v) > 0.999, "cosine similarity too low (n={n})");
+    });
+}
+
+#[test]
+fn projected_keys_make_the_involution_inverse_exact() {
+    forall(200, 0x0FF7_0005, |rng| {
+        let n = dim(rng);
+        let k = ops::projection(&vec_f32(rng, n));
+        let v = vec_f32(rng, n);
+        let s = ops::bind(&k, &v);
+        // With |F(k)| ≡ 1, Plate's involution is an exact inverse.
+        let v_hat = ops::bind(&ops::approx_inverse(&k), &s);
+        for i in 0..n {
+            assert!((v_hat[i] - v[i]).abs() < 1e-3, "element {i} n={n}");
+        }
+    });
+}
+
+#[test]
+fn binding_is_bilinear_so_superposition_is_linear() {
+    forall(150, 0x0FF7_0006, |rng| {
+        let n = dim(rng);
+        let k = vec_f32(rng, n);
+        let v1 = vec_f32(rng, n);
+        let v2 = vec_f32(rng, n);
+        let a = (rng.f64() * 4.0 - 2.0) as f32;
+        // bind(k, a·v1 + v2) == a·bind(k, v1) + bind(k, v2)
+        let lhs_in: Vec<f32> = v1.iter().zip(&v2).map(|(&x, &y)| a * x + y).collect();
+        let lhs = ops::bind(&k, &lhs_in);
+        let b1 = ops::bind(&k, &v1);
+        let b2 = ops::bind(&k, &v2);
+        for i in 0..n {
+            let rhs = a * b1[i] + b2[i];
+            assert!((lhs[i] - rhs).abs() < 1e-3, "element {i} n={n}");
+        }
+        // and unbinding distributes over the superposition
+        let q = well_conditioned(rng, n);
+        let sum: Vec<f32> = b1.iter().zip(&b2).map(|(&x, &y)| x + y).collect();
+        let u_sum = ops::unbind(&sum, &q);
+        let u1 = ops::unbind(&b1, &q);
+        let u2 = ops::unbind(&b2, &q);
+        for i in 0..n {
+            assert!((u_sum[i] - (u1[i] + u2[i])).abs() < 1e-3, "unbind linearity at {i}");
+        }
+    });
+}
+
+#[test]
+fn superpose_bound_matches_per_pair_binding() {
+    forall(100, 0x0FF7_0007, |rng| {
+        let n = dim(rng);
+        let pairs: Vec<(Vec<f32>, Vec<f32>)> =
+            (0..1 + rng.usize_below(5)).map(|_| (vec_f32(rng, n), vec_f32(rng, n))).collect();
+        let refs: Vec<(&[f32], &[f32])> =
+            pairs.iter().map(|(x, y)| (x.as_slice(), y.as_slice())).collect();
+        let fused = ops::superpose_bound(&refs, n);
+        let mut want = vec![0.0f64; n];
+        for (x, y) in &pairs {
+            for (w, b) in want.iter_mut().zip(ops::bind(x, y)) {
+                *w += b as f64;
+            }
+        }
+        for i in 0..n {
+            assert!((fused[i] as f64 - want[i]).abs() < 1e-3, "element {i} n={n}");
+        }
+    });
+}
+
+#[test]
+fn cosine_is_bounded_and_symmetric() {
+    forall(150, 0x0FF7_0008, |rng| {
+        let n = dim(rng);
+        let a = vec_f32(rng, n);
+        let b = vec_f32(rng, n);
+        let c = ops::cosine(&a, &b);
+        assert!(c.abs() <= 1.0 + 1e-5, "cosine out of bounds: {c}");
+        assert!((c - ops::cosine(&b, &a)).abs() < 1e-6, "cosine asymmetry");
+        assert!(ops::cosine(&a, &a) > 0.999, "self-similarity");
+    });
+}

@@ -4,9 +4,14 @@
 #   ./verify.sh          # build + test + fmt + clippy
 #   ./verify.sh --fast   # build + test only
 #
-# Tests that need AOT artifacts (artifacts/manifest.json) skip with a
-# SKIP message instead of failing, so this gate reflects code health on
-# a fresh checkout; run `make artifacts` first for full coverage.
+# Tests of the PJRT runtime/training path need AOT artifacts
+# (artifacts/manifest.json) and skip with a SKIP message when absent;
+# the HRR math, golden-parity and engine suites run *unconditionally* —
+# the engine falls back to the native pure-Rust backend — so this gate
+# reflects real serving-stack health on a fresh checkout. Run
+# `make artifacts` first for the additional artifact-path coverage.
+# `cargo fmt`/`clippy -D warnings` gate every target, the native
+# rust/src/hrr module included.
 set -euo pipefail
 cd "$(dirname "$0")"
 
@@ -23,6 +28,12 @@ run() {
 
 run cargo build --release
 run cargo test -q
+
+# Native-backend suite with artifacts forcibly hidden: property tests,
+# golden-vector parity and the full engine integration suite must pass
+# with zero artifact-skips on a machine that has no artifacts/ at all.
+run env HRRFORMER_ARTIFACTS=/hrrformer-no-artifacts \
+    cargo test -q --test prop_hrr --test golden_native --test integration_engine
 
 if [[ "${1:-}" != "--fast" ]]; then
     run cargo fmt --check
