@@ -13,7 +13,10 @@ use anyhow::{Context, Result};
 
 use crate::bench::results_dir;
 use crate::coordinator::BatchPolicy;
-use crate::data::{batch::BatchStream, by_task, Split, Stream};
+use crate::data::{
+    batch::{pack, pack_exact},
+    by_task, Split, Stream,
+};
 use crate::engine::{Backend, Engine};
 use crate::hrr::HrrConfig;
 use crate::model::{PredictSession, Session};
@@ -65,12 +68,15 @@ fn time_predict(
     let base = spec.key.trim_end_matches("_predict").to_string();
     let sess = PredictSession::create(rt, manifest, &base, seed as u32)?;
     let ds = by_task(&spec.task, sess.seq_len()).unwrap();
-    let mut stream = BatchStream::new(ds.as_ref(), Split::Test, seed, sess.batch(), sess.seq_len());
+    let mut stream = Stream::new(ds.as_ref(), Split::Test, seed);
     // warm-up execution (excluded, like the paper excludes compile)
-    let warm = stream.next_batch();
+    let warm = pack(&stream.take(sess.batch()), sess.seq_len());
     sess.predict(&warm.ids)?;
-    let n_batches = examples.div_ceil(sess.batch());
-    let batches: Vec<_> = (0..n_batches).map(|_| stream.next_batch()).collect();
+    // Pack exactly `examples` real examples; the trailing partial batch
+    // keeps the fixed (B, T) program shape with all-PAD filler rows.
+    // Throughput counts the real examples, not B × batches — 100
+    // examples at B=8 used to report 104.
+    let batches = pack_exact(&mut stream, examples, sess.batch(), sess.seq_len());
     let t0 = std::time::Instant::now();
     for b in &batches {
         sess.predict(&b.ids)?;
@@ -81,7 +87,7 @@ fn time_predict(
         batch: sess.batch(),
         layers: spec.layers,
         secs,
-        examples_per_sec: (n_batches * sess.batch()) as f64 / secs,
+        examples_per_sec: examples as f64 / secs,
         rss_mib: crate::util::rss_mib(),
     })
 }

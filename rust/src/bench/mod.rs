@@ -6,6 +6,7 @@
 pub mod ember;
 pub mod inference;
 pub mod lra;
+pub mod native;
 pub mod speed;
 pub mod weights;
 

@@ -1,0 +1,165 @@
+//! `bench native` — wall-clock for the native pure-Rust hot path.
+//!
+//! Times the plan-cached, workspace-reusing forward pass over the
+//! default EMBER preset ladder (the buckets `repro serve` stands up),
+//! once with a single predict worker and once with every available
+//! core, on real packed (B, T) batches. Artifact-free by construction:
+//! `NativeSession` needs no manifest, so this runs on a fresh checkout
+//! and verify.sh smoke-runs it.
+//!
+//! Besides the printed table it writes a machine-readable trajectory
+//! file (default `BENCH_native.json` at the repo root) so successive
+//! PRs can track single-/multi-thread throughput per bucket.
+
+use std::collections::BTreeMap;
+use std::path::{Path, PathBuf};
+use std::time::Instant;
+
+use anyhow::{Context, Result};
+
+use crate::data::batch::{pack_exact, Batch};
+use crate::data::{by_task, Split, Stream};
+use crate::engine::DEFAULT_EMBER_BUCKETS;
+use crate::hrr::NativeSession;
+use crate::util::json::Json;
+use crate::util::table::Table;
+
+pub struct NativeBenchCfg {
+    /// Real examples timed per bucket (per threading mode).
+    pub examples: usize,
+    pub seed: u64,
+    /// Multi-thread worker count; 0 = every available core.
+    pub threads: usize,
+    /// Where the machine-readable trajectory lands. Deliberately
+    /// CWD-relative (not `results_dir()`): the trajectory is a
+    /// repo-root artifact tracked across PRs, and verify.sh runs from
+    /// the repo root. Override with `--out` when running elsewhere.
+    pub out: PathBuf,
+}
+
+impl Default for NativeBenchCfg {
+    fn default() -> Self {
+        NativeBenchCfg {
+            examples: 32,
+            seed: 0,
+            threads: 0,
+            out: PathBuf::from("BENCH_native.json"),
+        }
+    }
+}
+
+#[derive(Debug, Clone)]
+pub struct NativeRow {
+    pub base: String,
+    pub seq_len: usize,
+    pub batch: usize,
+    /// real (non-filler) examples timed
+    pub examples: usize,
+    pub single_ex_s: f64,
+    pub multi_ex_s: f64,
+    pub speedup: f64,
+}
+
+/// Time the packed batches end-to-end at a fixed worker count.
+fn time_mode(sess: &NativeSession, batches: &[Batch], threads: usize) -> Result<f64> {
+    let t0 = Instant::now();
+    for b in batches {
+        sess.predict_threaded(&b.ids, threads)?;
+    }
+    Ok(t0.elapsed().as_secs_f64())
+}
+
+pub fn run(cfg: &NativeBenchCfg) -> Result<Vec<NativeRow>> {
+    let seed32 = u32::try_from(cfg.seed).context("--seed must fit in u32")?;
+    let threads = if cfg.threads == 0 {
+        std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1)
+    } else {
+        cfg.threads
+    };
+    let examples = cfg.examples.max(1);
+    eprintln!(
+        "[native] preset ladder, 1 vs {threads} predict workers, {examples} examples per bucket…"
+    );
+
+    let mut rows = Vec::new();
+    for base in DEFAULT_EMBER_BUCKETS {
+        let sess = NativeSession::create(base, seed32)?;
+        let (t, b_cap) = (sess.cfg().seq_len, sess.cfg().batch);
+        let ds = by_task(&sess.cfg().task, t).context("bench dataset")?;
+        let mut stream = Stream::new(ds.as_ref(), Split::Test, cfg.seed);
+        // Exactly `examples` real rows in fixed (B, T) batches; the
+        // trailing partial batch is padded with all-PAD filler rows
+        // (cheap by design — see NativeSession::predict) that never
+        // count toward throughput.
+        let batches = pack_exact(&mut stream, examples, b_cap, t);
+        // warm-up (excluded): builds the FFT plans, faults in the params
+        sess.predict_threaded(&batches[0].ids, threads)?;
+        let secs_1 = time_mode(&sess, &batches, 1)?;
+        let secs_n = time_mode(&sess, &batches, threads)?;
+        let row = NativeRow {
+            base: base.to_string(),
+            seq_len: t,
+            batch: b_cap,
+            examples,
+            single_ex_s: examples as f64 / secs_1,
+            multi_ex_s: examples as f64 / secs_n,
+            speedup: secs_1 / secs_n,
+        };
+        eprintln!(
+            "[native] {base}: {:.1} ex/s single, {:.1} ex/s x{threads} ({:.2}x)",
+            row.single_ex_s, row.multi_ex_s, row.speedup
+        );
+        rows.push(row);
+    }
+
+    let mut table = Table::new(
+        &format!("Native hot path — plan-cached forward pass, 1 vs {threads} predict workers"),
+        &["Bucket", "T", "B", "1-thread ex/s", "multi ex/s", "Speedup"],
+    );
+    for r in &rows {
+        table.row(vec![
+            r.base.clone(),
+            r.seq_len.to_string(),
+            r.batch.to_string(),
+            format!("{:.1}", r.single_ex_s),
+            format!("{:.1}", r.multi_ex_s),
+            format!("{:.2}x", r.speedup),
+        ]);
+    }
+    table.print();
+    write_json(&rows, threads, &cfg.out)?;
+    Ok(rows)
+}
+
+/// Serialize the sweep as the `BENCH_native.json` trajectory document.
+fn write_json(rows: &[NativeRow], threads: usize, path: &Path) -> Result<()> {
+    let arr = rows
+        .iter()
+        .map(|r| {
+            let mut m = BTreeMap::new();
+            m.insert("base".to_string(), Json::Str(r.base.clone()));
+            m.insert("seq_len".to_string(), Json::Num(r.seq_len as f64));
+            m.insert("batch".to_string(), Json::Num(r.batch as f64));
+            m.insert("examples".to_string(), Json::Num(r.examples as f64));
+            m.insert(
+                "single_thread_examples_per_sec".to_string(),
+                Json::Num(r.single_ex_s),
+            );
+            m.insert(
+                "multi_thread_examples_per_sec".to_string(),
+                Json::Num(r.multi_ex_s),
+            );
+            m.insert("speedup".to_string(), Json::Num(r.speedup));
+            Json::Obj(m)
+        })
+        .collect();
+    let mut root = BTreeMap::new();
+    root.insert("bench".to_string(), Json::Str("native".to_string()));
+    root.insert("threads".to_string(), Json::Num(threads as f64));
+    root.insert("rows".to_string(), Json::Arr(arr));
+    let doc = Json::Obj(root);
+    std::fs::write(path, format!("{doc}\n"))
+        .with_context(|| format!("write {}", path.display()))?;
+    eprintln!("[native] trajectory → {}", path.display());
+    Ok(())
+}

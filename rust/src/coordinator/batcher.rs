@@ -30,6 +30,17 @@ impl BatchPolicy {
         }
         queue_len >= self.max_batch || oldest_age >= self.max_wait || draining
     }
+
+    /// This policy with `max_batch` clamped to `1..=capacity` — what a
+    /// bucket executor actually runs. A policy larger than the session's
+    /// fixed batch dimension would flush more rows than the (B, T)
+    /// tensor holds (out-of-bounds pack in release builds); a zero
+    /// `max_batch` would flush empty batches forever. Executors apply
+    /// this at startup; the invariant is property-tested in
+    /// `prop_coordinator.rs`.
+    pub fn clamped_to(self, capacity: usize) -> BatchPolicy {
+        BatchPolicy { max_batch: self.max_batch.clamp(1, capacity.max(1)), ..self }
+    }
 }
 
 /// One queued inference request.

@@ -24,6 +24,29 @@ pub fn pack(examples: &[Example], seq_len: usize) -> Batch {
     Batch { ids: Tensor::i32(vec![b, seq_len], ids), labels: Tensor::i32(vec![b], labels) }
 }
 
+/// Pack exactly `examples` stream examples into fixed-shape
+/// `(batch, seq_len)` batches. The trailing partial batch keeps the
+/// fixed program shape, topped up with all-PAD filler rows (empty
+/// `Example`s) — callers counting throughput must count `examples`,
+/// not `batches.len() * batch` (the benches' 100-at-B=8 ≠ 104 fix).
+pub fn pack_exact(
+    stream: &mut Stream<'_>,
+    examples: usize,
+    batch: usize,
+    seq_len: usize,
+) -> Vec<Batch> {
+    let mut packed = 0usize;
+    (0..examples.div_ceil(batch))
+        .map(|_| {
+            let take = (examples - packed).min(batch);
+            packed += take;
+            let mut exs = stream.take(take);
+            exs.resize_with(batch, || Example { ids: Vec::new(), label: 0 });
+            pack(&exs, seq_len)
+        })
+        .collect()
+}
+
 /// Deterministic batch iterator over a dataset split.
 pub struct BatchStream<'a> {
     stream: Stream<'a>,
@@ -65,6 +88,22 @@ mod tests {
         assert_eq!(&data[..8], &[5, 6, 7, 0, 0, 0, 0, 0]);
         assert_eq!(&data[8..], &[9; 8]);
         assert_eq!(b.labels.as_i32().unwrap(), &[1, 3]);
+    }
+
+    #[test]
+    fn pack_exact_fills_the_tail_batch_with_pad_rows() {
+        let ds = ListOps::new(16);
+        let mut stream = Stream::new(&ds, Split::Test, 5);
+        // 10 examples at B=4 → 3 batches, last one has 2 filler rows
+        let batches = pack_exact(&mut stream, 10, 4, 16);
+        assert_eq!(batches.len(), 3);
+        for b in &batches {
+            assert_eq!(b.ids.shape(), &[4, 16]);
+        }
+        let tail = batches[2].ids.as_i32().unwrap();
+        assert!(tail[2 * 16..].iter().all(|&v| v == 0), "filler rows must be all-PAD");
+        assert!(tail[..16].iter().any(|&v| v != 0), "real rows must carry tokens");
+        assert!(pack_exact(&mut stream, 0, 4, 16).is_empty());
     }
 
     #[test]

@@ -114,6 +114,12 @@ fn executor_loop(
     policy: BatchPolicy,
     stats: &Arc<EngineStats>,
 ) {
+    // Clamp the flush size to this bucket's fixed batch capacity once,
+    // up front: a `BatchPolicy { max_batch > B }` would otherwise flush
+    // more rows than the (B, T) tensor holds and `execute_batch` would
+    // pack out of bounds — panicking the executor thread in release and
+    // wedging the bucket. Oversized policies now just batch at B.
+    let policy = policy.clamped_to(sess.batch());
     let mut queue: BatchQueue<Job> = BatchQueue::new(policy);
     let mut draining = false;
     // Monotone per-bucket reply sequence — lets clients (and tests)
@@ -154,8 +160,9 @@ fn execute_batch(
 ) {
     let t = sess.seq_len();
     let cap = sess.batch();
+    // n ≤ cap always: `executor_loop` clamps the batch policy to the
+    // session's capacity before the queue exists.
     let n = batch.len();
-    debug_assert!(n <= cap);
     // Pack into the fixed (cap, T) tensor; unused rows stay PAD.
     let mut ids = vec![0i32; cap * t];
     for (row, p) in batch.iter().enumerate() {

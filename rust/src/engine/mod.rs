@@ -347,7 +347,10 @@ impl EngineBuilder {
         self
     }
 
-    /// Dynamic batching policy shared by every bucket.
+    /// Dynamic batching policy shared by every bucket. Each executor
+    /// clamps `max_batch` to its bucket's batch capacity at startup
+    /// (`BatchPolicy::clamped_to`), so an oversized policy just batches
+    /// at capacity instead of overflowing the fixed (B, T) tensor.
     pub fn policy(mut self, policy: BatchPolicy) -> Self {
         self.policy = policy;
         self

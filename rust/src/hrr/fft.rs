@@ -14,6 +14,11 @@
 //! forward is unscaled `Σ x·exp(-2πi·kn/N)`, inverse carries the `1/N`,
 //! and the real-input pair [`rfft`]/[`irfft`] keeps `n/2 + 1` bins with
 //! Hermitian symmetry supplying the rest.
+//!
+//! These free functions derive the bit-reversal permutation and every
+//! twiddle per call; hot paths use the bit-identical precomputed
+//! [`super::plan::FftPlan`] instead and keep this module as the plain
+//! reference the plans are property-tested against.
 
 use std::f64::consts::PI;
 

@@ -6,9 +6,12 @@
 //!
 //! * [`fft`]   — radix-2 real/complex FFTs (naive-DFT fallback for
 //!   non-power-of-two head dims), `f64` arithmetic;
+//! * [`plan`]  — [`FftPlan`]: per-length precomputed bit-reversal +
+//!   twiddle tables (bit-identical to [`fft`], derived once instead of
+//!   per call) and the thread-local plan cache the hot paths run on;
 //! * [`ops`]   — HRR algebra over `f32` vectors: binding (circular
 //!   convolution), exact/involution unbinding, the unit-magnitude
-//!   projection trick, cosine similarity;
+//!   projection trick, cosine similarity — transforms via cached plans;
 //! * [`config`] — [`HrrConfig`]: program-base parsing + a Rust copy of
 //!   the python preset tables, so the same
 //!   `<task>_hrrformer_<preset>_T<t>_B<b>` strings resolve on both
@@ -16,7 +19,10 @@
 //! * [`model`] — the full Hrrformer forward pass (embed → per-head HRR
 //!   attention → MLP → pooled classifier head) and [`NativeSession`],
 //!   which plugs into everything typed against
-//!   [`crate::model::Predictor`] (engine executors, benches, examples).
+//!   [`crate::model::Predictor`] (engine executors, benches, examples);
+//!   one reusable scratch `Workspace` per worker, batch rows fanned
+//!   across scoped threads (`predict_threaded` pins the count,
+//!   bit-identical logits at any count).
 //!
 //! Selected at runtime via [`crate::engine::Backend::Native`]
 //! (`--backend native` on the CLI): the whole serving stack — and the
@@ -29,6 +35,8 @@ pub mod config;
 pub mod fft;
 pub mod model;
 pub mod ops;
+pub mod plan;
 
 pub use config::HrrConfig;
 pub use model::{init_native_params, param_specs, NativeSession, PAD_ID};
+pub use plan::FftPlan;

@@ -18,14 +18,28 @@
 //! the values (Eq. 4). PAD positions (token 0) are excluded from β and
 //! softmaxed to zero weight, exactly like the reference's mask.
 //!
+//! # Hot-path architecture (plans + workspace + row parallelism)
+//!
+//! Three layers keep the per-row cost down to the arithmetic itself:
+//!
+//! * every transform goes through a precomputed [`FftPlan`] (bit-reversal
+//!   permutation + twiddle tables derived once per head dim, bit-identical
+//!   to the direct `fft::fft` — see `hrr/plan.rs`);
+//! * all intermediates live in a per-worker [`Workspace`] of reusable
+//!   scratch buffers, so `forward_row` allocates nothing per row;
+//! * [`NativeSession::predict`] fans independent batch rows across scoped
+//!   threads (`predict_threaded` pins the worker count; logits are
+//!   bit-identical at any count since each row runs the same code path).
+//!
 //! GELU uses the tanh approximation (the `jax.nn.gelu` default the
 //! reference model was exported with).
 
 use anyhow::{Context, Result};
 
 use crate::hrr::config::HrrConfig;
-use crate::hrr::fft::{fft, irfft_inplace, num_bins};
+use crate::hrr::fft::num_bins;
 use crate::hrr::ops::EPS;
+use crate::hrr::plan::FftPlan;
 use crate::model::params::ParamStore;
 use crate::model::session::{Predictor, Session};
 use crate::runtime::manifest::IoSpec;
@@ -109,28 +123,38 @@ pub fn init_native_params(cfg: &HrrConfig, seed: u32) -> ParamStore {
 // Forward-pass building blocks (f32 buffers, f64 accumulation)
 // ---------------------------------------------------------------------------
 
+/// Output-column register tile of [`matmul_into`]: the accumulators for
+/// one tile live in registers across the whole k loop instead of a
+/// d_out-sized array round-tripped through memory on every k.
+const MM_TILE: usize = 8;
+
 /// `out (n, d_out) = x (n, d_in) @ w (d_in, d_out)`, f64 accumulators.
-fn matmul(x: &[f32], w: &[f32], n: usize, d_in: usize, d_out: usize) -> Vec<f32> {
+///
+/// Register-tiled over output columns; per output element the reduction
+/// is still plain k-ascending f64 accumulation, so results are
+/// bit-identical to the untiled triple loop (golden parity cannot move).
+fn matmul_into(x: &[f32], w: &[f32], n: usize, d_in: usize, d_out: usize, out: &mut [f32]) {
     debug_assert_eq!(x.len(), n * d_in);
     debug_assert_eq!(w.len(), d_in * d_out);
-    let mut out = vec![0.0f32; n * d_out];
-    let mut acc = vec![0.0f64; d_out];
-    for i in 0..n {
-        for a in acc.iter_mut() {
-            *a = 0.0;
-        }
-        for (k, &xv) in x[i * d_in..(i + 1) * d_in].iter().enumerate() {
-            let xv = xv as f64;
-            let wk = &w[k * d_out..(k + 1) * d_out];
-            for (a, &wv) in acc.iter_mut().zip(wk) {
-                *a += xv * wv as f64;
+    debug_assert_eq!(out.len(), n * d_out);
+    for (xrow, orow) in x.chunks_exact(d_in).zip(out.chunks_exact_mut(d_out)) {
+        let mut j = 0usize;
+        while j < d_out {
+            let tile = MM_TILE.min(d_out - j);
+            let mut acc = [0.0f64; MM_TILE];
+            for (k, &xv) in xrow.iter().enumerate() {
+                let xv = xv as f64;
+                let wk = &w[k * d_out + j..k * d_out + j + tile];
+                for (a, &wv) in acc[..tile].iter_mut().zip(wk) {
+                    *a += xv * wv as f64;
+                }
             }
-        }
-        for (o, &a) in out[i * d_out..(i + 1) * d_out].iter_mut().zip(acc.iter()) {
-            *o = a as f32;
+            for (o, &a) in orow[j..j + tile].iter_mut().zip(acc[..tile].iter()) {
+                *o = a as f32;
+            }
+            j += tile;
         }
     }
-    out
 }
 
 fn add_bias(x: &mut [f32], bias: &[f32], d: usize) {
@@ -141,9 +165,8 @@ fn add_bias(x: &mut [f32], bias: &[f32], d: usize) {
     }
 }
 
-/// Pre-LN (layers.py `layernorm`, eps 1e-6), out-of-place.
-fn layernorm(x: &[f32], scale: &[f32], bias: &[f32], d: usize) -> Vec<f32> {
-    let mut out = vec![0.0f32; x.len()];
+/// Pre-LN (layers.py `layernorm`, eps 1e-6) into the caller's buffer.
+fn layernorm_into(x: &[f32], scale: &[f32], bias: &[f32], d: usize, out: &mut [f32]) {
     for (row, orow) in x.chunks_exact(d).zip(out.chunks_exact_mut(d)) {
         let mut mu = 0.0f64;
         for &v in row {
@@ -161,7 +184,6 @@ fn layernorm(x: &[f32], scale: &[f32], bias: &[f32], d: usize) -> Vec<f32> {
             *o = (((v as f64 - mu) * rstd) * s as f64 + b as f64) as f32;
         }
     }
-    out
 }
 
 /// `jax.nn.gelu` tanh approximation.
@@ -173,16 +195,18 @@ fn gelu(x: &mut [f32]) {
     }
 }
 
-/// Reusable FFT scratch for one head dimension, so the T·heads inner
-/// loop allocates nothing.
+/// Reusable FFT scratch for one head dimension: a precomputed
+/// [`FftPlan`] plus re/im buffers, so the T·heads inner loop allocates
+/// nothing and derives no twiddles.
 struct FftScratch {
+    plan: FftPlan,
     re: Vec<f64>,
     im: Vec<f64>,
 }
 
 impl FftScratch {
     fn new(n: usize) -> FftScratch {
-        FftScratch { re: vec![0.0; n], im: vec![0.0; n] }
+        FftScratch { plan: FftPlan::new(n), re: vec![0.0; n], im: vec![0.0; n] }
     }
 
     /// rFFT of `x` into the scratch; valid bins are `re/im[..n/2+1]`.
@@ -193,39 +217,96 @@ impl FftScratch {
         for i in self.im.iter_mut() {
             *i = 0.0;
         }
-        fft(&mut self.re, &mut self.im, false);
+        self.plan.fft(&mut self.re, &mut self.im, false);
     }
 
     /// irFFT of `n/2+1` bins into the scratch; result is `re[..n]`.
     fn irfft(&mut self, br: &[f64], bi: &[f64]) {
-        irfft_inplace(br, bi, &mut self.re, &mut self.im);
+        self.plan.irfft_inplace(br, bi, &mut self.re, &mut self.im);
     }
 }
 
-/// Multi-head HRR attention (Eqs. 1-4) for one sequence.
-/// `q,k,v`: (t, e) row-major; returns `w·v` merged back to (t, e).
-fn hrr_attention(
-    cfg: &HrrConfig,
-    q: &[f32],
-    k: &[f32],
-    v: &[f32],
-    mask: &[bool],
-    t: usize,
-) -> Vec<f32> {
+/// Per-worker scratch for the whole forward pass: every buffer
+/// `forward_row` needs, allocated once per predict worker instead of
+/// ~10 Vecs per block per row. Sized for the config's full seq_len;
+/// shorter rows use prefixes.
+struct Workspace {
+    /// head-dim FFT plan + re/im scratch
+    fs: FftScratch,
+    /// β superposition bins (Eq. 1)
+    br: Vec<f64>,
+    bi: Vec<f64>,
+    /// value-spectrum bins
+    vfr: Vec<f64>,
+    vfi: Vec<f64>,
+    /// unbound-spectrum bins (q† ⊛ β, Eq. 2)
+    ur: Vec<f64>,
+    ui: Vec<f64>,
+    /// per-position pre-softmax scores (Eq. 3)
+    scores: Vec<f64>,
+    mask: Vec<bool>,
+    /// residual stream (t, e)
+    x: Vec<f32>,
+    /// pre-LN output (t, e)
+    h: Vec<f32>,
+    q: Vec<f32>,
+    k: Vec<f32>,
+    v: Vec<f32>,
+    /// attention mix (t, e)
+    attn: Vec<f32>,
+    /// attention output projection / MLP output (t, e)
+    proj: Vec<f32>,
+    /// MLP hidden (t, mlp_dim)
+    mlp: Vec<f32>,
+    /// pooled features (e)
+    pooled: Vec<f32>,
+    /// classifier hidden (mlp_dim)
+    head: Vec<f32>,
+}
+
+impl Workspace {
+    fn new(cfg: &HrrConfig) -> Workspace {
+        let (t, e) = (cfg.seq_len, cfg.embed);
+        let kbins = num_bins(cfg.head_dim());
+        Workspace {
+            fs: FftScratch::new(cfg.head_dim()),
+            br: vec![0.0; kbins],
+            bi: vec![0.0; kbins],
+            vfr: vec![0.0; kbins],
+            vfi: vec![0.0; kbins],
+            ur: vec![0.0; kbins],
+            ui: vec![0.0; kbins],
+            scores: vec![0.0; t],
+            mask: vec![false; t],
+            x: vec![0.0; t * e],
+            h: vec![0.0; t * e],
+            q: vec![0.0; t * e],
+            k: vec![0.0; t * e],
+            v: vec![0.0; t * e],
+            attn: vec![0.0; t * e],
+            proj: vec![0.0; t * e],
+            mlp: vec![0.0; t * cfg.mlp_dim],
+            pooled: vec![0.0; e],
+            head: vec![0.0; cfg.mlp_dim],
+        }
+    }
+}
+
+/// Multi-head HRR attention (Eqs. 1-4) for one sequence: reads
+/// `ws.q/k/v` (t, e) and `ws.mask`, writes the merged mix to `ws.attn`.
+/// All scratch comes from `ws` — nothing allocates.
+fn hrr_attention(cfg: &HrrConfig, ws: &mut Workspace, t: usize) {
     let e = cfg.embed;
     let hd = cfg.head_dim();
     let kbins = num_bins(hd);
-    let mut out = vec![0.0f32; t * e];
-    let mut fs = FftScratch::new(hd);
-    let mut scores = vec![0.0f64; t];
+    let Workspace { fs, br, bi, vfr, vfi, ur, ui, scores, mask, q, k, v, attn, .. } = ws;
+    attn[..t * e].fill(0.0);
     for head in 0..cfg.heads {
         let off = head * hd;
         // Eq. 1 — β = Σ_t k_t ⊛ v_t over unmasked positions, accumulated
         // in the frequency domain (one complex MAC per bin).
-        let mut br = vec![0.0f64; kbins];
-        let mut bi = vec![0.0f64; kbins];
-        let mut vfr = vec![0.0f64; kbins];
-        let mut vfi = vec![0.0f64; kbins];
+        br.fill(0.0);
+        bi.fill(0.0);
         for i in 0..t {
             if !mask[i] {
                 continue;
@@ -248,16 +329,14 @@ fn hrr_attention(
                 continue;
             }
             fs.rfft(&q[i * e + off..i * e + off + hd]);
-            vfr.clear();
-            vfi.clear();
             for j in 0..kbins {
                 let d = fs.re[j] * fs.re[j] + fs.im[j] * fs.im[j] + EPS as f64;
                 let ir = fs.re[j] / d;
                 let ii = -fs.im[j] / d;
-                vfr.push(br[j] * ir - bi[j] * ii);
-                vfi.push(br[j] * ii + bi[j] * ir);
+                ur[j] = br[j] * ir - bi[j] * ii;
+                ui[j] = br[j] * ii + bi[j] * ir;
             }
-            fs.irfft(&vfr, &vfi);
+            fs.irfft(ur, ui);
             let vv = &v[i * e + off..i * e + off + hd];
             let mut num = 0.0f64;
             let mut nv = 0.0f64;
@@ -284,12 +363,11 @@ fn hrr_attention(
             }
             let w = scores[i] / denom;
             let vv = &v[i * e + off..i * e + off + hd];
-            for (o, &x) in out[i * e + off..i * e + off + hd].iter_mut().zip(vv) {
+            for (o, &x) in attn[i * e + off..i * e + off + hd].iter_mut().zip(vv) {
                 *o = (w * x as f64) as f32;
             }
         }
     }
-    out
 }
 
 /// Fixed sinusoidal positional value (layers.py `sinusoid_positions`).
@@ -311,87 +389,167 @@ fn param<'a>(params: &'a ParamStore, name: &str) -> Result<&'a [f32]> {
         .with_context(|| format!("native model parameter '{name}' dtype"))
 }
 
-/// Forward one sequence: `ids` (t ≤ cfg.seq_len) → logits (classes).
-fn forward_row(cfg: &HrrConfig, params: &ParamStore, ids: &[i32]) -> Result<Vec<f32>> {
+/// One encoder block's parameter slices (see [`ResolvedParams`]).
+struct BlockParams<'a> {
+    ln1_scale: &'a [f32],
+    ln1_bias: &'a [f32],
+    query: &'a [f32],
+    key: &'a [f32],
+    value: &'a [f32],
+    output: &'a [f32],
+    ln2_scale: &'a [f32],
+    ln2_bias: &'a [f32],
+    fc1: &'a [f32],
+    fc1_bias: &'a [f32],
+    fc2: &'a [f32],
+    fc2_bias: &'a [f32],
+}
+
+/// Every parameter slice `forward_row` touches, resolved by canonical
+/// name once per predict call (the store is immutable) — the per-row
+/// hot path then does no name formatting, no store lookups and no
+/// allocation at all. Missing/mistyped parameters surface here, before
+/// any row runs.
+struct ResolvedParams<'a> {
+    embed: &'a [f32],
+    pos: Option<&'a [f32]>,
+    blocks: Vec<BlockParams<'a>>,
+    ln_f_scale: &'a [f32],
+    ln_f_bias: &'a [f32],
+    head1: &'a [f32],
+    head1_bias: &'a [f32],
+    head2: &'a [f32],
+    head2_bias: &'a [f32],
+}
+
+impl<'a> ResolvedParams<'a> {
+    fn resolve(cfg: &HrrConfig, params: &'a ParamStore) -> Result<ResolvedParams<'a>> {
+        let p = |name: &str| param(params, name);
+        let mut blocks = Vec::with_capacity(cfg.layers);
+        for i in 0..cfg.layers {
+            let n = |s: &str| format!("blocks.{i}.{s}");
+            blocks.push(BlockParams {
+                ln1_scale: p(&n("ln1.scale"))?,
+                ln1_bias: p(&n("ln1.bias"))?,
+                query: p(&n("mixer.query.kernel"))?,
+                key: p(&n("mixer.key.kernel"))?,
+                value: p(&n("mixer.value.kernel"))?,
+                output: p(&n("mixer.output.kernel"))?,
+                ln2_scale: p(&n("ln2.scale"))?,
+                ln2_bias: p(&n("ln2.bias"))?,
+                fc1: p(&n("mlp.fc1.kernel"))?,
+                fc1_bias: p(&n("mlp.fc1.bias"))?,
+                fc2: p(&n("mlp.fc2.kernel"))?,
+                fc2_bias: p(&n("mlp.fc2.bias"))?,
+            });
+        }
+        Ok(ResolvedParams {
+            embed: p("embed.table")?,
+            pos: if cfg.learned_pos { Some(p("pos.table")?) } else { None },
+            blocks,
+            ln_f_scale: p("ln_f.scale")?,
+            ln_f_bias: p("ln_f.bias")?,
+            head1: p("head1.kernel")?,
+            head1_bias: p("head1.bias")?,
+            head2: p("head2.kernel")?,
+            head2_bias: p("head2.bias")?,
+        })
+    }
+}
+
+/// Forward one sequence: `ids` (t ≤ cfg.seq_len) → logits written to
+/// `out` (classes). Every intermediate lives in `ws`, every parameter
+/// slice comes pre-resolved in `rp` — the row loop allocates nothing
+/// and looks nothing up.
+fn forward_row(
+    cfg: &HrrConfig,
+    rp: &ResolvedParams<'_>,
+    ids: &[i32],
+    ws: &mut Workspace,
+    out: &mut [f32],
+) {
     let e = cfg.embed;
     let t = ids.len();
-    let p = |name: &str| param(params, name);
+    debug_assert_eq!(out.len(), cfg.classes);
 
-    let mask: Vec<bool> = ids.iter().map(|&id| id != PAD_ID).collect();
+    for (m, &id) in ws.mask.iter_mut().zip(ids) {
+        *m = id != PAD_ID;
+    }
 
     // embed + positions; out-of-range ids clamp like the XLA gather.
-    let table = p("embed.table")?;
-    let pos = if cfg.learned_pos { Some(p("pos.table")?) } else { None };
-    let mut x = vec![0.0f32; t * e];
     for (i, &id) in ids.iter().enumerate() {
         let row = (id.max(0) as usize).min(cfg.vocab - 1);
-        x[i * e..(i + 1) * e].copy_from_slice(&table[row * e..(row + 1) * e]);
-        match pos {
+        ws.x[i * e..(i + 1) * e].copy_from_slice(&rp.embed[row * e..(row + 1) * e]);
+        match rp.pos {
             Some(tbl) => {
-                for (xv, &pv) in x[i * e..(i + 1) * e].iter_mut().zip(&tbl[i * e..(i + 1) * e]) {
+                for (xv, &pv) in ws.x[i * e..(i + 1) * e].iter_mut().zip(&tbl[i * e..(i + 1) * e])
+                {
                     *xv += pv;
                 }
             }
             None => {
-                for (j, xv) in x[i * e..(i + 1) * e].iter_mut().enumerate() {
+                for (j, xv) in ws.x[i * e..(i + 1) * e].iter_mut().enumerate() {
                     *xv += sinusoid(i, j, e);
                 }
             }
         }
     }
 
-    for blk in 0..cfg.layers {
-        let n = |s: &str| format!("blocks.{blk}.{s}");
+    for bp in &rp.blocks {
         // attention sub-block (pre-LN, residual)
-        let h = layernorm(&x, p(&n("ln1.scale"))?, p(&n("ln1.bias"))?, e);
-        let q = matmul(&h, p(&n("mixer.query.kernel"))?, t, e, e);
-        let k = matmul(&h, p(&n("mixer.key.kernel"))?, t, e, e);
-        let v = matmul(&h, p(&n("mixer.value.kernel"))?, t, e, e);
-        let mixed = hrr_attention(cfg, &q, &k, &v, &mask, t);
-        let y = matmul(&mixed, p(&n("mixer.output.kernel"))?, t, e, e);
-        for (xv, &yv) in x.iter_mut().zip(&y) {
+        layernorm_into(&ws.x[..t * e], bp.ln1_scale, bp.ln1_bias, e, &mut ws.h[..t * e]);
+        matmul_into(&ws.h[..t * e], bp.query, t, e, e, &mut ws.q[..t * e]);
+        matmul_into(&ws.h[..t * e], bp.key, t, e, e, &mut ws.k[..t * e]);
+        matmul_into(&ws.h[..t * e], bp.value, t, e, e, &mut ws.v[..t * e]);
+        hrr_attention(cfg, ws, t);
+        matmul_into(&ws.attn[..t * e], bp.output, t, e, e, &mut ws.proj[..t * e]);
+        for (xv, &yv) in ws.x[..t * e].iter_mut().zip(&ws.proj[..t * e]) {
             *xv += yv;
         }
         // MLP sub-block (pre-LN, residual)
-        let h = layernorm(&x, p(&n("ln2.scale"))?, p(&n("ln2.bias"))?, e);
-        let mut m = matmul(&h, p(&n("mlp.fc1.kernel"))?, t, e, cfg.mlp_dim);
-        add_bias(&mut m, p(&n("mlp.fc1.bias"))?, cfg.mlp_dim);
-        gelu(&mut m);
-        let mut m = matmul(&m, p(&n("mlp.fc2.kernel"))?, t, cfg.mlp_dim, e);
-        add_bias(&mut m, p(&n("mlp.fc2.bias"))?, e);
-        for (xv, &mv) in x.iter_mut().zip(&m) {
+        layernorm_into(&ws.x[..t * e], bp.ln2_scale, bp.ln2_bias, e, &mut ws.h[..t * e]);
+        matmul_into(&ws.h[..t * e], bp.fc1, t, e, cfg.mlp_dim, &mut ws.mlp[..t * cfg.mlp_dim]);
+        add_bias(&mut ws.mlp[..t * cfg.mlp_dim], bp.fc1_bias, cfg.mlp_dim);
+        gelu(&mut ws.mlp[..t * cfg.mlp_dim]);
+        matmul_into(&ws.mlp[..t * cfg.mlp_dim], bp.fc2, t, cfg.mlp_dim, e, &mut ws.proj[..t * e]);
+        add_bias(&mut ws.proj[..t * e], bp.fc2_bias, e);
+        for (xv, &mv) in ws.x[..t * e].iter_mut().zip(&ws.proj[..t * e]) {
             *xv += mv;
         }
     }
 
-    let x = layernorm(&x, p("ln_f.scale")?, p("ln_f.bias")?, e);
+    layernorm_into(&ws.x[..t * e], rp.ln_f_scale, rp.ln_f_bias, e, &mut ws.h[..t * e]);
 
     // masked mean-pool over T (model.py logits_fn)
-    let n_valid = mask.iter().filter(|&&m| m).count().max(1) as f64;
-    let mut pooled = vec![0.0f32; e];
-    for j in 0..e {
+    let n_valid = ws.mask[..t].iter().filter(|&&m| m).count().max(1) as f64;
+    for (j, pv) in ws.pooled.iter_mut().enumerate() {
         let mut s = 0.0f64;
         for i in 0..t {
-            if mask[i] {
-                s += x[i * e + j] as f64;
+            if ws.mask[i] {
+                s += ws.h[i * e + j] as f64;
             }
         }
-        pooled[j] = (s / n_valid) as f32;
+        *pv = (s / n_valid) as f32;
     }
 
-    let mut h = matmul(&pooled, p("head1.kernel")?, 1, e, cfg.mlp_dim);
-    add_bias(&mut h, p("head1.bias")?, cfg.mlp_dim);
-    for v in h.iter_mut() {
+    matmul_into(&ws.pooled, rp.head1, 1, e, cfg.mlp_dim, &mut ws.head);
+    add_bias(&mut ws.head, rp.head1_bias, cfg.mlp_dim);
+    for v in ws.head.iter_mut() {
         *v = v.max(0.0); // relu
     }
-    let mut logits = matmul(&h, p("head2.kernel")?, 1, cfg.mlp_dim, cfg.classes);
-    add_bias(&mut logits, p("head2.bias")?, cfg.classes);
-    Ok(logits)
+    matmul_into(&ws.head, rp.head2, 1, cfg.mlp_dim, cfg.classes, out);
+    add_bias(out, rp.head2_bias, cfg.classes);
 }
 
 // ---------------------------------------------------------------------------
 // NativeSession
 // ---------------------------------------------------------------------------
+
+/// Worker count [`NativeSession::predict`] fans rows across: every core
+/// the host exposes (capped by batch size at the call site).
+fn default_workers() -> usize {
+    std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1)
+}
 
 /// Inference session over the pure-Rust forward pass — the native
 /// counterpart of [`crate::model::PredictSession`], usable anywhere a
@@ -447,7 +605,9 @@ impl NativeSession {
         &self.cfg
     }
 
-    /// Logits (B, classes) for token ids (B, t), t ≤ config seq_len.
+    /// Logits (B, classes) for token ids (B, t), t ≤ config seq_len,
+    /// with rows fanned across one scoped worker thread per available
+    /// core (see [`NativeSession::predict_threaded`]).
     ///
     /// All-PAD rows (real empty requests *and* batch-packing filler —
     /// indistinguishable here) get the reference semantics too: the
@@ -456,6 +616,15 @@ impl NativeSession {
     /// it is computed once per call and copied to every such row, so
     /// partial engine batches do not pay a full forward per filler row.
     pub fn predict(&self, ids: &Tensor) -> Result<Tensor> {
+        self.predict_threaded(ids, default_workers())
+    }
+
+    /// [`NativeSession::predict`] with an explicit worker count
+    /// (1 = fully sequential, no threads spawned). Rows are independent
+    /// and each worker owns its own [`Workspace`], so the logits are
+    /// bit-identical for every `threads` value (pinned by
+    /// `prop_hrr.rs`); the count only changes wall-clock.
+    pub fn predict_threaded(&self, ids: &Tensor, threads: usize) -> Result<Tensor> {
         let shape = ids.shape();
         anyhow::ensure!(shape.len() == 2, "native predict expects (B, T) ids, got {shape:?}");
         let (b, t) = (shape[0], shape[1]);
@@ -467,18 +636,58 @@ impl NativeSession {
         let data = ids.as_i32().context("native predict ids dtype")?;
         let classes = self.cfg.classes;
         let mut out = vec![0.0f32; b * classes];
-        let mut pad_logits: Option<Vec<f32>> = None;
-        for r in 0..b {
-            let row = &data[r * t..(r + 1) * t];
-            let logits = if row.iter().all(|&id| id == PAD_ID) {
-                if pad_logits.is_none() {
-                    pad_logits = Some(forward_row(&self.cfg, &self.params, row)?);
+        if b == 0 {
+            return Ok(Tensor::f32(vec![0, classes], out));
+        }
+
+        // Resolve every parameter slice once; rows then run lookup- and
+        // allocation-free, and a broken store fails before any row runs.
+        let rp = ResolvedParams::resolve(&self.cfg, &self.params)?;
+
+        // Shared all-PAD logits, computed once up front rather than once
+        // per worker (or, before the workspace refactor, once per row).
+        let all_pad = |r: usize| data[r * t..(r + 1) * t].iter().all(|&id| id == PAD_ID);
+        let pad_logits = if (0..b).any(&all_pad) {
+            let mut ws = Workspace::new(&self.cfg);
+            let mut l = vec![0.0f32; classes];
+            forward_row(&self.cfg, &rp, &vec![PAD_ID; t], &mut ws, &mut l);
+            Some(l)
+        } else {
+            None
+        };
+
+        // One contiguous row range per worker; each runs the identical
+        // per-row path, so partitioning cannot change the logits.
+        let run_rows = |row0: usize, chunk: &mut [f32]| {
+            let mut ws = Workspace::new(&self.cfg);
+            for (r_off, o) in chunk.chunks_mut(classes).enumerate() {
+                let r = row0 + r_off;
+                let row = &data[r * t..(r + 1) * t];
+                match (&pad_logits, all_pad(r)) {
+                    (Some(l), true) => o.copy_from_slice(l),
+                    _ => forward_row(&self.cfg, &rp, row, &mut ws, o),
                 }
-                pad_logits.as_ref().unwrap().clone()
-            } else {
-                forward_row(&self.cfg, &self.params, row)?
-            };
-            out[r * classes..(r + 1) * classes].copy_from_slice(&logits);
+            }
+        };
+
+        let workers = threads.clamp(1, b);
+        if workers == 1 {
+            run_rows(0, &mut out);
+        } else {
+            let rows_per = b.div_ceil(workers);
+            let run_rows = &run_rows;
+            std::thread::scope(|s| -> Result<()> {
+                let handles: Vec<_> = out
+                    .chunks_mut(rows_per * classes)
+                    .enumerate()
+                    .map(|(ci, chunk)| s.spawn(move || run_rows(ci * rows_per, chunk)))
+                    .collect();
+                for h in handles {
+                    h.join()
+                        .map_err(|_| anyhow::anyhow!("native predict worker panicked"))?;
+                }
+                Ok(())
+            })?;
         }
         Ok(Tensor::f32(vec![b, classes], out))
     }
@@ -532,6 +741,46 @@ mod tests {
         assert_eq!(a.tensors, b.tensors);
         assert_ne!(a.tensors, c.tensors);
         assert_eq!(a.names.len(), param_specs(&cfg).len());
+    }
+
+    #[test]
+    fn tiled_matmul_matches_naive_reference() {
+        // dims straddling the MM_TILE boundary, incl. remainder columns
+        for (n, d_in, d_out) in [(1usize, 3usize, 2usize), (4, 8, 8), (3, 5, 11), (2, 16, 9)] {
+            let x: Vec<f32> = (0..n * d_in).map(|i| ((i * 31 + 7) % 13) as f32 - 6.0).collect();
+            let w: Vec<f32> =
+                (0..d_in * d_out).map(|i| ((i * 17 + 3) % 11) as f32 * 0.25 - 1.0).collect();
+            let mut got = vec![0.0f32; n * d_out];
+            matmul_into(&x, &w, n, d_in, d_out, &mut got);
+            for i in 0..n {
+                for j in 0..d_out {
+                    let mut acc = 0.0f64;
+                    for k in 0..d_in {
+                        acc += x[i * d_in + k] as f64 * w[k * d_out + j] as f64;
+                    }
+                    assert_eq!(got[i * d_out + j], acc as f32, "({n},{d_in},{d_out}) [{i}][{j}]");
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn workspace_reuse_does_not_leak_state_between_rows() {
+        // running a long row, then a short one, must give the short row
+        // the same logits as a fresh workspace would
+        let cfg = tiny_cfg();
+        let params = init_native_params(&cfg, 9);
+        let rp = ResolvedParams::resolve(&cfg, &params).unwrap();
+        let long: Vec<i32> = vec![3, 1, 4, 1, 5, 9, 2, 6, 5, 3, 5, 8];
+        let short = [7i32, 0, 2, 0, 0];
+        let mut ws = Workspace::new(&cfg);
+        let mut scratch = vec![0.0f32; cfg.classes];
+        forward_row(&cfg, &rp, &long, &mut ws, &mut scratch);
+        let mut reused = vec![0.0f32; cfg.classes];
+        forward_row(&cfg, &rp, &short, &mut ws, &mut reused);
+        let mut fresh = vec![0.0f32; cfg.classes];
+        forward_row(&cfg, &rp, &short, &mut Workspace::new(&cfg), &mut fresh);
+        assert_eq!(reused, fresh, "stale workspace state leaked into a later row");
     }
 
     #[test]

@@ -13,9 +13,14 @@
 //!   [`projection`] enforces (the unit-magnitude projection trick).
 //!
 //! All ops take/return `f32` slices (the model's buffer dtype) and do the
-//! transform arithmetic in `f64` via [`super::fft`].
+//! transform arithmetic in `f64`, through the thread-local [`FftPlan`]
+//! cache ([`super::plan::with_plan`]) so repeated calls at one length pay
+//! for bit-reversal/twiddle derivation once instead of per transform.
+//! Planned transforms are bit-identical to the direct [`super::fft`]
+//! functions (pinned by `prop_hrr.rs`).
 
-use super::fft::{irfft, num_bins, rfft};
+use super::fft::num_bins;
+use super::plan::with_plan;
 
 /// Numerical guard shared with the Python reference (`kernels/ref.py`).
 pub const EPS: f32 = 1e-6;
@@ -32,16 +37,18 @@ fn to_f32(x: Vec<f64>) -> Vec<f32> {
 pub fn bind(x: &[f32], y: &[f32]) -> Vec<f32> {
     assert_eq!(x.len(), y.len(), "bind operands must match");
     let n = x.len();
-    let (xr, xi) = rfft(&to_f64(x));
-    let (yr, yi) = rfft(&to_f64(y));
-    let k = num_bins(n);
-    let mut br = vec![0.0; k];
-    let mut bi = vec![0.0; k];
-    for j in 0..k {
-        br[j] = xr[j] * yr[j] - xi[j] * yi[j];
-        bi[j] = xr[j] * yi[j] + xi[j] * yr[j];
-    }
-    to_f32(irfft(&br, &bi, n))
+    with_plan(n, |p| {
+        let (xr, xi) = p.rfft(&to_f64(x));
+        let (yr, yi) = p.rfft(&to_f64(y));
+        let k = num_bins(n);
+        let mut br = vec![0.0; k];
+        let mut bi = vec![0.0; k];
+        for j in 0..k {
+            br[j] = xr[j] * yr[j] - xi[j] * yi[j];
+            bi[j] = xr[j] * yi[j] + xi[j] * yr[j];
+        }
+        to_f32(p.irfft(&br, &bi))
+    })
 }
 
 /// Plate's involution inverse `y†`: time-reversal of all but element 0,
@@ -49,24 +56,28 @@ pub fn bind(x: &[f32], y: &[f32]) -> Vec<f32> {
 /// (see [`projection`]).
 pub fn approx_inverse(y: &[f32]) -> Vec<f32> {
     let n = y.len();
-    let (yr, yi) = rfft(&to_f64(y));
-    let neg: Vec<f64> = yi.iter().map(|v| -v).collect();
-    to_f32(irfft(&yr, &neg, n))
+    with_plan(n, |p| {
+        let (yr, yi) = p.rfft(&to_f64(y));
+        let neg: Vec<f64> = yi.iter().map(|v| -v).collect();
+        to_f32(p.irfft(&yr, &neg))
+    })
 }
 
 /// Stabilized exact inverse `irfft(conj(F(y)) / (|F(y)|² + ε))`.
 pub fn exact_inverse(y: &[f32], eps: f32) -> Vec<f32> {
     let n = y.len();
-    let (yr, yi) = rfft(&to_f64(y));
-    let k = num_bins(n);
-    let mut ir = vec![0.0; k];
-    let mut ii = vec![0.0; k];
-    for j in 0..k {
-        let d = yr[j] * yr[j] + yi[j] * yi[j] + eps as f64;
-        ir[j] = yr[j] / d;
-        ii[j] = -yi[j] / d;
-    }
-    to_f32(irfft(&ir, &ii, n))
+    with_plan(n, |p| {
+        let (yr, yi) = p.rfft(&to_f64(y));
+        let k = num_bins(n);
+        let mut ir = vec![0.0; k];
+        let mut ii = vec![0.0; k];
+        for j in 0..k {
+            let d = yr[j] * yr[j] + yi[j] * yi[j] + eps as f64;
+            ir[j] = yr[j] / d;
+            ii[j] = -yi[j] / d;
+        }
+        to_f32(p.irfft(&ir, &ii))
+    })
 }
 
 /// Unbind `q` from superposition `s` (paper Eq. 2): `q† ⊛ s` with the
@@ -74,19 +85,21 @@ pub fn exact_inverse(y: &[f32], eps: f32) -> Vec<f32> {
 pub fn unbind(s: &[f32], q: &[f32]) -> Vec<f32> {
     assert_eq!(s.len(), q.len(), "unbind operands must match");
     let n = s.len();
-    let (sr, si) = rfft(&to_f64(s));
-    let (qr, qi) = rfft(&to_f64(q));
-    let k = num_bins(n);
-    let mut or_ = vec![0.0; k];
-    let mut oi = vec![0.0; k];
-    for j in 0..k {
-        let d = qr[j] * qr[j] + qi[j] * qi[j] + EPS as f64;
-        let ir = qr[j] / d;
-        let ii = -qi[j] / d;
-        or_[j] = sr[j] * ir - si[j] * ii;
-        oi[j] = sr[j] * ii + si[j] * ir;
-    }
-    to_f32(irfft(&or_, &oi, n))
+    with_plan(n, |p| {
+        let (sr, si) = p.rfft(&to_f64(s));
+        let (qr, qi) = p.rfft(&to_f64(q));
+        let k = num_bins(n);
+        let mut or_ = vec![0.0; k];
+        let mut oi = vec![0.0; k];
+        for j in 0..k {
+            let d = qr[j] * qr[j] + qi[j] * qi[j] + EPS as f64;
+            let ir = qr[j] / d;
+            let ii = -qi[j] / d;
+            or_[j] = sr[j] * ir - si[j] * ii;
+            oi[j] = sr[j] * ii + si[j] * ir;
+        }
+        to_f32(p.irfft(&or_, &oi))
+    })
 }
 
 /// Project `y` onto the unit-magnitude spectral manifold:
@@ -95,16 +108,18 @@ pub fn unbind(s: &[f32], q: &[f32]) -> Vec<f32> {
 /// with HRRs* (Ganesan et al.) uses to make binding lossless.
 pub fn projection(y: &[f32]) -> Vec<f32> {
     let n = y.len();
-    let (yr, yi) = rfft(&to_f64(y));
-    let k = num_bins(n);
-    let mut pr = vec![0.0; k];
-    let mut pi = vec![0.0; k];
-    for j in 0..k {
-        let mag = (yr[j] * yr[j] + yi[j] * yi[j]).sqrt().max(1e-12);
-        pr[j] = yr[j] / mag;
-        pi[j] = yi[j] / mag;
-    }
-    to_f32(irfft(&pr, &pi, n))
+    with_plan(n, |p| {
+        let (yr, yi) = p.rfft(&to_f64(y));
+        let k = num_bins(n);
+        let mut pr = vec![0.0; k];
+        let mut pi = vec![0.0; k];
+        for j in 0..k {
+            let mag = (yr[j] * yr[j] + yi[j] * yi[j]).sqrt().max(1e-12);
+            pr[j] = yr[j] / mag;
+            pi[j] = yi[j] / mag;
+        }
+        to_f32(p.irfft(&pr, &pi))
+    })
 }
 
 /// Cosine similarity (paper Eq. 3), with the reference's ε on the
@@ -125,18 +140,20 @@ pub fn cosine(a: &[f32], b: &[f32]) -> f32 {
 /// Superpose (sum) a set of bound pairs: `Σᵢ xᵢ ⊛ yᵢ` (paper Eq. 1).
 /// The reduction stays in the frequency domain — one irfft total.
 pub fn superpose_bound(pairs: &[(&[f32], &[f32])], n: usize) -> Vec<f32> {
-    let k = num_bins(n);
-    let mut br = vec![0.0f64; k];
-    let mut bi = vec![0.0f64; k];
-    for (x, y) in pairs {
-        let (xr, xi) = rfft(&to_f64(x));
-        let (yr, yi) = rfft(&to_f64(y));
-        for j in 0..k {
-            br[j] += xr[j] * yr[j] - xi[j] * yi[j];
-            bi[j] += xr[j] * yi[j] + xi[j] * yr[j];
+    with_plan(n, |p| {
+        let k = num_bins(n);
+        let mut br = vec![0.0f64; k];
+        let mut bi = vec![0.0f64; k];
+        for (x, y) in pairs {
+            let (xr, xi) = p.rfft(&to_f64(x));
+            let (yr, yi) = p.rfft(&to_f64(y));
+            for j in 0..k {
+                br[j] += xr[j] * yr[j] - xi[j] * yi[j];
+                bi[j] += xr[j] * yi[j] + xi[j] * yr[j];
+            }
         }
-    }
-    to_f32(irfft(&br, &bi, n))
+        to_f32(p.irfft(&br, &bi))
+    })
 }
 
 #[cfg(test)]
@@ -182,6 +199,7 @@ mod tests {
 
     #[test]
     fn projection_gives_unit_spectrum_and_exact_involution() {
+        use crate::hrr::fft::rfft;
         let y = [2.0f32, -1.0, 0.5, 3.0, -0.25, 1.5];
         let p = projection(&y);
         let (pr, pi) = rfft(&p.iter().map(|&v| v as f64).collect::<Vec<_>>());

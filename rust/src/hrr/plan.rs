@@ -1,0 +1,300 @@
+//! Precomputed FFT plans — the cached counterpart of [`super::fft`].
+//!
+//! The native hot path runs thousands of small transforms per sequence,
+//! all over the same handful of lengths (one per head dimension). The
+//! free functions in `fft.rs` recompute the bit-reversal permutation and
+//! every twiddle factor (`sin_cos` per butterfly) on each call; an
+//! [`FftPlan`] does that work once per length:
+//!
+//! * power-of-two lengths cache the bit-reversal swap list and one
+//!   twiddle table per direction (forward/inverse), laid out stage by
+//!   stage so the butterfly loop is pure table reads;
+//! * every other length caches the n-entry root-of-unity table the naive
+//!   O(n²) DFT indexes with `(k·t) mod n`, plus the output scratch the
+//!   out-of-place transform needs.
+//!
+//! Tables are built with the *same* float expressions `fft.rs` evaluates
+//! per call, so a planned transform is bit-identical to the unplanned
+//! one (pinned to 1e-12 — in practice exactly 0 — by `prop_hrr.rs`);
+//! golden parity is unaffected by switching a call site over.
+//!
+//! Plans are plain owned data: hold one per [`super::model::Workspace`]
+//! (one worker thread each), or go through [`with_plan`], a thread-local
+//! cache keyed by length that `ops.rs` uses so the one-shot HRR algebra
+//! entry points stop paying per-call trig either.
+
+use std::cell::RefCell;
+use std::f64::consts::PI;
+
+use super::fft::num_bins;
+
+/// A reusable transform plan for one fixed length (see module docs).
+#[derive(Debug, Clone)]
+pub struct FftPlan {
+    n: usize,
+    kind: Kind,
+}
+
+#[derive(Debug, Clone)]
+enum Kind {
+    /// n ≤ 1 — the transform is the identity.
+    Tiny,
+    /// Radix-2 Cooley-Tukey: bit-reversal swaps + per-stage twiddles.
+    Pow2 {
+        /// `(i, j)` swap pairs of the bit-reversal permutation, i < j.
+        swaps: Vec<(u32, u32)>,
+        /// `(wr, wi)` per butterfly index, stages concatenated in
+        /// ascending `len` order — stage `len` starts at `len/2 - 1`.
+        fwd: Vec<(f64, f64)>,
+        inv: Vec<(f64, f64)>,
+    },
+    /// Naive O(n²) DFT with a cached root-of-unity table.
+    Naive {
+        /// `(wr, wi)` at index j = `exp(sign·2πi·j/n)`, n entries.
+        fwd: Vec<(f64, f64)>,
+        inv: Vec<(f64, f64)>,
+        /// Out-of-place output scratch (the naive DFT can't run in place).
+        scratch_re: Vec<f64>,
+        scratch_im: Vec<f64>,
+    },
+}
+
+impl FftPlan {
+    /// Build the plan for transforms of length `n`.
+    pub fn new(n: usize) -> FftPlan {
+        let kind = if n <= 1 {
+            Kind::Tiny
+        } else if n.is_power_of_two() {
+            let mut swaps = Vec::new();
+            let mut j = 0usize;
+            for i in 1..n {
+                let mut bit = n >> 1;
+                while j & bit != 0 {
+                    j ^= bit;
+                    bit >>= 1;
+                }
+                j |= bit;
+                if i < j {
+                    swaps.push((i as u32, j as u32));
+                }
+            }
+            // Same expression per entry as fft_pow2 evaluates per
+            // butterfly, so planned == unplanned bit-for-bit.
+            let mut fwd = Vec::with_capacity(n - 1);
+            let mut inv = Vec::with_capacity(n - 1);
+            let mut len = 2usize;
+            while len <= n {
+                for (sign, tab) in [(-1.0f64, &mut fwd), (1.0f64, &mut inv)] {
+                    let base = sign * 2.0 * PI / len as f64;
+                    for k in 0..len / 2 {
+                        let (wi, wr) = (base * k as f64).sin_cos();
+                        tab.push((wr, wi));
+                    }
+                }
+                len <<= 1;
+            }
+            Kind::Pow2 { swaps, fwd, inv }
+        } else {
+            let mut fwd = Vec::with_capacity(n);
+            let mut inv = Vec::with_capacity(n);
+            for (sign, tab) in [(-1.0f64, &mut fwd), (1.0f64, &mut inv)] {
+                let base = sign * 2.0 * PI / n as f64;
+                for j in 0..n {
+                    let (wi, wr) = (base * j as f64).sin_cos();
+                    tab.push((wr, wi));
+                }
+            }
+            Kind::Naive { fwd, inv, scratch_re: vec![0.0; n], scratch_im: vec![0.0; n] }
+        };
+        FftPlan { n, kind }
+    }
+
+    /// The transform length this plan was built for.
+    pub fn n(&self) -> usize {
+        self.n
+    }
+
+    /// In-place complex FFT over parallel `re`/`im` buffers — the
+    /// planned equivalent of [`super::fft::fft`] (numpy conventions:
+    /// forward unscaled, inverse carries 1/N).
+    pub fn fft(&mut self, re: &mut [f64], im: &mut [f64], inverse: bool) {
+        let n = self.n;
+        assert_eq!(re.len(), n, "plan built for length {n}");
+        assert_eq!(im.len(), n, "plan built for length {n}");
+        match &mut self.kind {
+            Kind::Tiny => return,
+            Kind::Pow2 { swaps, fwd, inv } => {
+                for &(i, j) in swaps.iter() {
+                    re.swap(i as usize, j as usize);
+                    im.swap(i as usize, j as usize);
+                }
+                let tw = if inverse { inv } else { fwd };
+                let mut len = 2usize;
+                while len <= n {
+                    let half = len / 2;
+                    let stage = &tw[half - 1..half - 1 + half];
+                    for start in (0..n).step_by(len) {
+                        for (k, &(wr, wi)) in stage.iter().enumerate() {
+                            let a = start + k;
+                            let b = a + half;
+                            let vr = re[b] * wr - im[b] * wi;
+                            let vi = re[b] * wi + im[b] * wr;
+                            re[b] = re[a] - vr;
+                            im[b] = im[a] - vi;
+                            re[a] += vr;
+                            im[a] += vi;
+                        }
+                    }
+                    len <<= 1;
+                }
+            }
+            Kind::Naive { fwd, inv, scratch_re, scratch_im } => {
+                let tw = if inverse { inv } else { fwd };
+                for k in 0..n {
+                    let mut sr = 0.0;
+                    let mut si = 0.0;
+                    for t in 0..n {
+                        let (wr, wi) = tw[(k * t) % n];
+                        sr += re[t] * wr - im[t] * wi;
+                        si += re[t] * wi + im[t] * wr;
+                    }
+                    scratch_re[k] = sr;
+                    scratch_im[k] = si;
+                }
+                re.copy_from_slice(scratch_re);
+                im.copy_from_slice(scratch_im);
+            }
+        }
+        if inverse {
+            let s = 1.0 / n as f64;
+            for v in re.iter_mut() {
+                *v *= s;
+            }
+            for v in im.iter_mut() {
+                *v *= s;
+            }
+        }
+    }
+
+    /// Planned [`super::fft::rfft`]: real signal → `n/2 + 1` bins
+    /// (allocating convenience for the one-shot `ops` entry points).
+    pub fn rfft(&mut self, x: &[f64]) -> (Vec<f64>, Vec<f64>) {
+        let n = self.n;
+        assert_eq!(x.len(), n, "plan built for length {n}");
+        let mut re = x.to_vec();
+        let mut im = vec![0.0; n];
+        self.fft(&mut re, &mut im, false);
+        let k = num_bins(n);
+        re.truncate(k);
+        im.truncate(k);
+        (re, im)
+    }
+
+    /// Planned [`super::fft::irfft_inplace`]: expand `n/2 + 1` bins into
+    /// the caller's length-`n` scratch by Hermitian symmetry and
+    /// inverse-transform in place (real signal lands in `re`).
+    pub fn irfft_inplace(&mut self, br: &[f64], bi: &[f64], re: &mut [f64], im: &mut [f64]) {
+        let n = self.n;
+        let k = num_bins(n);
+        assert_eq!(br.len(), k, "irfft expects n/2+1 bins for n={n}");
+        assert_eq!(bi.len(), k, "irfft expects n/2+1 bins for n={n}");
+        assert_eq!(re.len(), n, "plan built for length {n}");
+        re[..k].copy_from_slice(br);
+        im[..k].copy_from_slice(bi);
+        for j in k..n {
+            re[j] = br[n - j];
+            im[j] = -bi[n - j];
+        }
+        self.fft(re, im, true);
+    }
+
+    /// Planned [`super::fft::irfft`] (allocating convenience).
+    pub fn irfft(&mut self, br: &[f64], bi: &[f64]) -> Vec<f64> {
+        let mut re = vec![0.0; self.n];
+        let mut im = vec![0.0; self.n];
+        self.irfft_inplace(br, bi, &mut re, &mut im);
+        re
+    }
+}
+
+thread_local! {
+    /// Per-thread plan cache for [`with_plan`]. A flat Vec scanned by
+    /// length: real workloads touch a handful of head dims, so a map
+    /// would be overhead, not a win.
+    static PLAN_CACHE: RefCell<Vec<FftPlan>> = RefCell::new(Vec::new());
+}
+
+/// Run `f` with this thread's cached plan for length `n`, building it on
+/// first use. Not reentrant: `f` must not call `with_plan` itself.
+pub fn with_plan<R>(n: usize, f: impl FnOnce(&mut FftPlan) -> R) -> R {
+    PLAN_CACHE.with(|cache| {
+        let mut cache = cache.borrow_mut();
+        let idx = match cache.iter().position(|p| p.n() == n) {
+            Some(i) => i,
+            None => {
+                cache.push(FftPlan::new(n));
+                cache.len() - 1
+            }
+        };
+        f(&mut cache[idx])
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::super::fft;
+    use super::*;
+
+    #[test]
+    fn planned_fft_is_bit_identical_to_direct() {
+        for n in [1usize, 2, 3, 4, 6, 7, 8, 12, 16, 27, 33, 64] {
+            let re0: Vec<f64> = (0..n).map(|i| ((i * 37 + 11) % 17) as f64 - 8.0).collect();
+            let im0: Vec<f64> = (0..n).map(|i| ((i * 53 + 3) % 13) as f64 - 6.0).collect();
+            let mut plan = FftPlan::new(n);
+            for inverse in [false, true] {
+                let mut ra = re0.clone();
+                let mut ia = im0.clone();
+                fft::fft(&mut ra, &mut ia, inverse);
+                let mut rb = re0.clone();
+                let mut ib = im0.clone();
+                plan.fft(&mut rb, &mut ib, inverse);
+                assert_eq!(ra, rb, "re n={n} inverse={inverse}");
+                assert_eq!(ia, ib, "im n={n} inverse={inverse}");
+            }
+        }
+    }
+
+    #[test]
+    fn planned_rfft_irfft_matches_direct_pair() {
+        for n in [1usize, 2, 5, 8, 10, 16, 33] {
+            let x: Vec<f64> = (0..n).map(|i| (i as f64 * 1.3).cos() * 2.0 - 0.5).collect();
+            let (dr, di) = fft::rfft(&x);
+            let mut plan = FftPlan::new(n);
+            let (pr, pi) = plan.rfft(&x);
+            assert_eq!(dr, pr, "rfft re n={n}");
+            assert_eq!(di, pi, "rfft im n={n}");
+            assert_eq!(fft::irfft(&dr, &di, n), plan.irfft(&pr, &pi), "irfft n={n}");
+        }
+    }
+
+    #[test]
+    fn plan_is_reusable_across_calls() {
+        let mut plan = FftPlan::new(12);
+        let x: Vec<f64> = (0..12).map(|i| i as f64 * 0.25 - 1.0).collect();
+        let first = plan.rfft(&x);
+        let second = plan.rfft(&x);
+        assert_eq!(first, second, "plan state must not drift between calls");
+    }
+
+    #[test]
+    fn with_plan_caches_per_length() {
+        let a = with_plan(8, |p| p.n());
+        let b = with_plan(8, |p| p.n());
+        let c = with_plan(6, |p| p.n());
+        assert_eq!((a, b, c), (8, 8, 6));
+        let x = [1.0f64, 2.0, 3.0, 4.0];
+        let (re, im) = with_plan(4, |p| p.rfft(&x));
+        let (dr, di) = fft::rfft(&x);
+        assert_eq!((re, im), (dr, di));
+    }
+}

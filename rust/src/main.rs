@@ -7,6 +7,7 @@
 //!   bench lra        Table 1 / Table 2 / Fig 8 (--curves)
 //!   bench speed      Table 4 / Fig 6
 //!   bench inference  Table 7 (add --sweep-batch for Table 6)
+//!   bench native     native hot-path sweep (single vs multi thread)
 //!   bench weights    Fig 5 / Fig 9
 //!   data             dump dataset samples
 //!   inspect          list manifest programs
@@ -34,6 +35,8 @@ USAGE:
   repro bench speed     [--steps N]
   repro bench inference [--examples N] [--sweep-batch | --engine]
                         [--backend artifact|native]
+  repro bench native    [--examples N] [--threads K] [--seed S]
+                        [--out BENCH_native.json]
   repro bench weights   [--steps N] [--multi-layer]
   repro data --task <task> [--n N] [--seq-len T]
   repro inspect
@@ -50,6 +53,12 @@ executes the AOT-compiled `<base>_predict` XLA programs on per-executor
 PJRT runtimes (xla handles are !Send) and needs `make artifacts`;
 `native` runs the pure-Rust HRR forward pass (rust/src/hrr) — no
 artifacts required, works on a fresh checkout.
+
+bench native times that native hot path directly (plan-cached FFTs,
+reusable workspaces) over the default EMBER bucket ladder, single- vs
+multi-threaded predict, and writes the BENCH_native.json trajectory
+file at the repo root. Needs no artifacts. --threads 0 (default) uses
+every available core.
 
 Artifacts are read from ./artifacts (override: HRRFORMER_ARTIFACTS).
 Bench outputs land in ./results (override: HRRFORMER_RESULTS).
@@ -175,7 +184,11 @@ fn cmd_serve(args: &Args) -> Result<()> {
 }
 
 fn cmd_bench(args: &Args) -> Result<()> {
-    let which = args.positional.get(1).map(|s| s.as_str()).context("bench <ember|lra|speed|inference|weights>")?;
+    let which = args
+        .positional
+        .get(1)
+        .map(|s| s.as_str())
+        .context("bench <ember|lra|speed|inference|native|weights>")?;
     // The manifest and runtime are resolved per arm: the engine serving
     // bench manages its own per-executor runtimes (and on the native
     // backend needs no manifest at all).
@@ -235,6 +248,17 @@ fn cmd_bench(args: &Args) -> Result<()> {
                 let manifest = default_manifest()?;
                 bench::inference::run(&Runtime::cpu()?, &manifest, &cfg)?;
             }
+        }
+        "native" => {
+            // pure-Rust hot path: no manifest, no runtime, no artifacts
+            let mut cfg = bench::native::NativeBenchCfg::default();
+            cfg.examples = args.usize("examples", cfg.examples);
+            cfg.seed = args.u64("seed", cfg.seed);
+            cfg.threads = args.usize("threads", cfg.threads);
+            if let Some(out) = args.get("out") {
+                cfg.out = out.into();
+            }
+            bench::native::run(&cfg)?;
         }
         "weights" => {
             let manifest = default_manifest()?;

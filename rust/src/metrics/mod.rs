@@ -59,7 +59,10 @@ impl LatencyHist {
         self.max_us.load(Ordering::Relaxed) as f64 / 1000.0
     }
 
-    /// Approximate percentile (upper bound of the containing bucket).
+    /// Approximate percentile: upper bound of the containing log2
+    /// bucket, clamped to the true observed maximum — without the clamp
+    /// a lone 1.1 ms sample would report p50 ≈ 2.0 ms (its bucket's
+    /// upper edge), exceeding every latency actually recorded.
     pub fn percentile_ms(&self, p: f64) -> f64 {
         let total = self.count();
         if total == 0 {
@@ -70,7 +73,7 @@ impl LatencyHist {
         for (i, b) in self.buckets.iter().enumerate() {
             seen += b.load(Ordering::Relaxed);
             if seen >= target {
-                return (1u64 << (i + 1)) as f64 / 1000.0;
+                return ((1u64 << (i + 1)) as f64 / 1000.0).min(self.max_ms());
             }
         }
         self.max_ms()
@@ -163,8 +166,22 @@ mod tests {
         let p50 = h.percentile_ms(50.0);
         let p99 = h.percentile_ms(99.0);
         assert!(p50 <= p99, "p50 {p50} > p99 {p99}");
+        // percentiles are bucket upper bounds clamped to the observed
+        // max — they can never exceed a latency that actually happened
+        assert!(p99 <= h.max_ms(), "p99 {p99} > max {}", h.max_ms());
         assert!(h.mean_ms() > 0.0);
         assert!(h.max_ms() >= 100.0);
+    }
+
+    #[test]
+    fn percentile_clamps_to_observed_max() {
+        // a lone 1.1 ms sample lands in the [1.024, 2.048) ms bucket;
+        // every percentile must report 1.1, not the 2.048 upper edge
+        let h = LatencyHist::new();
+        h.record_us(1100);
+        assert_eq!(h.percentile_ms(50.0), 1.1);
+        assert_eq!(h.percentile_ms(99.0), 1.1);
+        assert_eq!(h.max_ms(), 1.1);
     }
 
     #[test]

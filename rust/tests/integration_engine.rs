@@ -140,6 +140,38 @@ fn engine_buckets_execute_in_parallel() {
 }
 
 #[test]
+fn oversized_batch_policy_is_clamped_to_bucket_capacity() {
+    let env = EngineTestEnv::detect("oversized_batch_policy_is_clamped_to_bucket_capacity");
+    // max_batch far above the bucket's fixed B=8 capacity. Before the
+    // executor clamped its policy, the deadline flush below packed a
+    // >B batch out of the (B, T) tensor's bounds and killed the
+    // executor thread — every ticket then resolved to Shutdown.
+    let engine = env
+        .build(
+            Engine::builder()
+                .bucket(env.bases[0])
+                .policy(BatchPolicy { max_batch: 32, max_wait: Duration::from_millis(200) })
+                .queue_depth(64)
+                .seed(0),
+        )
+        .unwrap();
+    // 20 quick submits pile up well past B before the 200ms deadline
+    // forces the first (oversized, pre-fix) flush.
+    let ids = example_ids(0, env.ts[0] / 2);
+    let tickets: Vec<_> = (0..20).map(|_| engine.submit_wait(ids.clone()).unwrap()).collect();
+    for t in tickets {
+        let reply = t.wait().expect("every request must be served — no executor panic");
+        assert!(
+            reply.batch_size >= 1 && reply.batch_size <= 8,
+            "flushed batch of {} exceeded the bucket capacity of 8",
+            reply.batch_size
+        );
+        assert!(reply.logits.iter().all(|v| v.is_finite()));
+    }
+    engine.stop();
+}
+
+#[test]
 fn engine_backpressure_reports_queue_full() {
     let env = EngineTestEnv::detect("engine_backpressure_reports_queue_full");
     let engine = env

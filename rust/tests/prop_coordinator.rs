@@ -92,6 +92,52 @@ fn batch_queue_never_exceeds_max_batch_and_preserves_fifo() {
     });
 }
 
+/// Property: an executor's clamped policy never lets a flush exceed its
+/// bucket's batch capacity, for *arbitrary* policy/bucket combinations —
+/// including `max_batch` of 0 (would flush empty batches forever) and
+/// `max_batch` far above capacity (would pack the fixed (B, T) tensor
+/// out of bounds). This is the invariant `engine::executor` relies on
+/// when it drops the per-flush bounds check.
+#[test]
+fn clamped_policy_never_flushes_beyond_bucket_capacity() {
+    forall(300, 0x108, |rng| {
+        let bucket = Bucket {
+            seq_len: 1 << (4 + rng.usize_below(10)),
+            batch: 1 + rng.usize_below(32),
+        };
+        let policy = BatchPolicy {
+            max_batch: rng.usize_below(96), // 0 and > capacity included
+            max_wait: Duration::from_millis(rng.below(50)),
+        };
+        let clamped = policy.clamped_to(bucket.batch);
+        assert!(
+            (1..=bucket.batch).contains(&clamped.max_batch),
+            "clamp left max_batch {} outside 1..={}",
+            clamped.max_batch,
+            bucket.batch
+        );
+        assert_eq!(clamped.max_wait, policy.max_wait, "clamp must only touch max_batch");
+        let mut q = BatchQueue::new(clamped);
+        let n = rng.usize_below(96);
+        for i in 0..n {
+            q.push(i);
+        }
+        let mut drained = 0usize;
+        while let Some(batch) = q.maybe_flush(Instant::now(), true) {
+            assert!(!batch.is_empty(), "empty flush would spin the executor forever");
+            assert!(
+                batch.len() <= bucket.batch,
+                "flush of {} exceeds bucket capacity {}",
+                batch.len(),
+                bucket.batch
+            );
+            drained += batch.len();
+        }
+        assert_eq!(drained, n, "clamping must not lose or duplicate requests");
+        assert!(q.is_empty());
+    });
+}
+
 #[test]
 fn no_flush_before_capacity_or_deadline() {
     forall(100, 0x105, |rng| {

@@ -8,9 +8,13 @@
 //!   the value within tolerance;
 //! * with unit-magnitude projected keys, the cheap involution inverse
 //!   recovers the value too;
-//! * binding is bilinear, so superpositions decompose linearly.
+//! * binding is bilinear, so superpositions decompose linearly;
+//! * a precomputed `FftPlan` matches the direct per-call transforms
+//!   (both radix-2 and naive-DFT lengths) within 1e-12;
+//! * `NativeSession::predict` is bit-deterministic in its worker count.
 
-use hrrformer::hrr::{fft, ops};
+use hrrformer::hrr::{fft, ops, plan::with_plan, FftPlan, HrrConfig, NativeSession};
+use hrrformer::runtime::Tensor;
 use hrrformer::util::prop::forall;
 use hrrformer::util::rng::Rng;
 
@@ -86,6 +90,96 @@ fn rfft_irfft_roundtrip() {
             assert!((back[i] - x[i]).abs() < 1e-9, "x[{i}] n={n}");
         }
     });
+}
+
+/// A planned transform must agree with the direct (per-call sin/cos)
+/// implementation on every length class — power-of-two radix-2 and
+/// non-power-of-two naive DFT, forward and inverse, complex and real
+/// pairs. The plan builds its tables with the same float expressions,
+/// so agreement is bit-exact; 1e-12 is the contract.
+#[test]
+fn planned_fft_matches_unplanned_fft() {
+    forall(200, 0x0FF7_0009, |rng| {
+        let n = 1 + rng.usize_below(64); // arbitrary: pow2 and not
+        let re0 = vec_f64(rng, n);
+        let im0 = vec_f64(rng, n);
+        let mut plan = FftPlan::new(n);
+        for inverse in [false, true] {
+            let mut re_d = re0.clone();
+            let mut im_d = im0.clone();
+            fft::fft(&mut re_d, &mut im_d, inverse);
+            let mut re_p = re0.clone();
+            let mut im_p = im0.clone();
+            plan.fft(&mut re_p, &mut im_p, inverse);
+            for i in 0..n {
+                assert!((re_d[i] - re_p[i]).abs() <= 1e-12, "re[{i}] n={n} inverse={inverse}");
+                assert!((im_d[i] - im_p[i]).abs() <= 1e-12, "im[{i}] n={n} inverse={inverse}");
+            }
+        }
+        // real pair, through the thread-local cache ops.rs uses
+        let x = vec_f64(rng, n);
+        let (dr, di) = fft::rfft(&x);
+        let (pr, pi) = with_plan(n, |p| p.rfft(&x));
+        for j in 0..dr.len() {
+            assert!((dr[j] - pr[j]).abs() <= 1e-12, "rfft re[{j}] n={n}");
+            assert!((di[j] - pi[j]).abs() <= 1e-12, "rfft im[{j}] n={n}");
+        }
+        let back_d = fft::irfft(&dr, &di, n);
+        let back_p = with_plan(n, |p| p.irfft(&pr, &pi));
+        for i in 0..n {
+            assert!((back_d[i] - back_p[i]).abs() <= 1e-12, "irfft[{i}] n={n}");
+        }
+    });
+}
+
+/// Multi-threaded `predict` must be *bit-identical* to single-threaded:
+/// rows are independent, each worker owns its scratch workspace, and
+/// the partitioning only changes wall-clock. One config per FFT path
+/// (radix-2 head dim and naive-DFT head dim), with PAD tails and a
+/// fully-PAD row in the batch.
+#[test]
+fn multithreaded_predict_is_bit_identical_to_single_threaded() {
+    let configs = [
+        ("pow2-head", 16usize, 2usize, false), // head_dim 8 → radix-2
+        ("naive-head", 24, 2, true),           // head_dim 12 → naive DFT
+    ];
+    for (label, embed, heads, learned_pos) in configs {
+        let cfg = HrrConfig {
+            task: "test".into(),
+            vocab: 32,
+            seq_len: 24,
+            batch: 8,
+            embed,
+            mlp_dim: 48,
+            heads,
+            layers: 2,
+            classes: 3,
+            learned_pos,
+        };
+        let sess = NativeSession::from_config(cfg, 11).unwrap();
+        let (b, t) = (7usize, 24usize); // b deliberately not a worker multiple
+        let mut rng = Rng::new(0x0FF7_000A);
+        let mut ids = vec![0i32; b * t];
+        for (r, row) in ids.chunks_mut(t).enumerate() {
+            if r == 3 {
+                continue; // keep one all-PAD row in the middle
+            }
+            let live = 1 + rng.usize_below(t);
+            for v in row[..live].iter_mut() {
+                *v = 1 + rng.usize_below(31) as i32;
+            }
+        }
+        let ids = Tensor::i32(vec![b, t], ids);
+        let single = sess.predict_threaded(&ids, 1).unwrap();
+        for threads in [2usize, 3, 5, 16] {
+            let multi = sess.predict_threaded(&ids, threads).unwrap();
+            assert_eq!(
+                single.as_f32().unwrap(),
+                multi.as_f32().unwrap(),
+                "{label}: logits drifted at {threads} worker threads"
+            );
+        }
+    }
 }
 
 #[test]

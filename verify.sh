@@ -35,6 +35,16 @@ run cargo test -q
 run env HRRFORMER_ARTIFACTS=/hrrformer-no-artifacts \
     cargo test -q --test prop_hrr --test golden_native --test integration_engine
 
+# Native hot-path bench smoke (artifact-free): exercises the FFT plan
+# cache, the reusable workspaces and the threaded predict fan-out, and
+# must regenerate the BENCH_native.json trajectory from scratch.
+rm -f BENCH_native.json
+run cargo run --release -- bench native --examples 8
+if [[ ! -s BENCH_native.json ]]; then
+    echo "verify: FAIL — bench native did not write BENCH_native.json" >&2
+    exit 1
+fi
+
 if [[ "${1:-}" != "--fast" ]]; then
     run cargo fmt --check
     run cargo clippy --all-targets -- -D warnings
