@@ -14,6 +14,10 @@
 //!    executors over bounded channels, so a slow T=1024 batch cannot
 //!    head-of-line-block T=256 traffic: buckets batch and execute in
 //!    parallel (we count the overlapping executions below to prove it).
+//!    On the native backend, `build()` also creates ONE persistent
+//!    worker pool (`--workers`, default every core) that all executors
+//!    schedule predict rows on — parallel buckets share a fixed worker
+//!    budget instead of each spawning its own per-batch threads.
 //! 3. Clients clone a cheap `EngineClient` handle and call `classify()`
 //!    (or `submit()` → `Ticket::wait()`). Replies are typed: label,
 //!    logits, latency, bucket, batch size, and an explicit `truncated`
@@ -59,7 +63,8 @@ fn main() -> Result<()> {
         })
         .queue_depth(args.usize("queue-depth", 64))
         .seed(0)
-        .backend(backend);
+        .backend(backend)
+        .worker_budget(args.usize("workers", 0));
     let engine = match &manifest {
         Some(m) => builder.build(m)?,
         None => builder.build_native()?,

@@ -1,18 +1,28 @@
 //! `bench native` — wall-clock for the native pure-Rust hot path.
 //!
 //! Times the plan-cached, workspace-reusing forward pass over the
-//! default EMBER preset ladder (the buckets `repro serve` stands up),
-//! once with a single predict worker and once with every available
-//! core, on real packed (B, T) batches. Artifact-free by construction:
-//! `NativeSession` needs no manifest, so this runs on a fresh checkout
-//! and verify.sh smoke-runs it.
+//! default EMBER preset ladder (the buckets `repro serve` stands up)
+//! under all three row schedulers, on real packed (B, T) batches:
+//!
+//! * **sequential** — every row on the caller thread (the baseline);
+//! * **scoped** — the legacy per-call `std::thread::scope` fan-out
+//!   (PR 3's multi-thread path, kept as the comparison point);
+//! * **pool** — the shared persistent [`WorkerPool`] the engine now
+//!   schedules every bucket on (no per-batch spawn, one global budget).
+//!
+//! Artifact-free by construction: `NativeSession` needs no manifest, so
+//! this runs on a fresh checkout and verify.sh smoke-runs it.
 //!
 //! Besides the printed table it writes a machine-readable trajectory
 //! file (default `BENCH_native.json` at the repo root) so successive
-//! PRs can track single-/multi-thread throughput per bucket.
+//! PRs can track per-scheduler throughput per bucket. Timing windows
+//! are clamped to [`MIN_SECS`] before any division — a tiny
+//! `--examples` run on a fast machine can legitimately round to 0 s,
+//! and an `inf`/`NaN` rate used to corrupt the JSON trajectory.
 
 use std::collections::BTreeMap;
 use std::path::{Path, PathBuf};
+use std::sync::Arc;
 use std::time::Instant;
 
 use anyhow::{Context, Result};
@@ -20,15 +30,18 @@ use anyhow::{Context, Result};
 use crate::data::batch::{pack_exact, Batch};
 use crate::data::{by_task, Split, Stream};
 use crate::engine::DEFAULT_EMBER_BUCKETS;
-use crate::hrr::NativeSession;
+use crate::hrr::{NativeSession, RowScheduler};
 use crate::util::json::Json;
+use crate::util::pool::{default_budget, WorkerPool};
 use crate::util::table::Table;
 
 pub struct NativeBenchCfg {
-    /// Real examples timed per bucket (per threading mode).
+    /// Real examples timed per bucket (per scheduler mode).
     pub examples: usize,
     pub seed: u64,
-    /// Multi-thread worker count; 0 = every available core.
+    /// Worker count for the multi-worker modes — both the scoped-spawn
+    /// fan-out and the pool budget (`--workers`/`--threads`);
+    /// 0 = every available core.
     pub threads: usize,
     /// Where the machine-readable trajectory lands. Deliberately
     /// CWD-relative (not `results_dir()`): the trajectory is a
@@ -56,29 +69,58 @@ pub struct NativeRow {
     /// real (non-filler) examples timed
     pub examples: usize,
     pub single_ex_s: f64,
-    pub multi_ex_s: f64,
+    /// legacy per-call scoped-spawn fan-out at the worker count
+    pub scoped_ex_s: f64,
+    /// shared persistent worker pool at the same budget
+    pub pool_ex_s: f64,
+    /// scoped vs sequential (the PR 3 headline, kept for continuity)
     pub speedup: f64,
+    /// pool vs sequential
+    pub pool_speedup: f64,
 }
 
-/// Time the packed batches end-to-end at a fixed worker count.
-fn time_mode(sess: &NativeSession, batches: &[Batch], threads: usize) -> Result<f64> {
+/// Minimum representable timing window. Every rate/ratio below divides
+/// by a duration clamped to this, so degenerate 0-second windows yield
+/// large-but-finite numbers instead of `inf`/`NaN`.
+const MIN_SECS: f64 = 1e-9;
+
+/// Examples per second over a (possibly zero) timing window.
+fn per_sec(examples: usize, secs: f64) -> f64 {
+    examples as f64 / secs.max(MIN_SECS)
+}
+
+/// `base_secs / other_secs` with both windows clamped — a speedup that
+/// is always finite.
+fn speedup_of(base_secs: f64, other_secs: f64) -> f64 {
+    base_secs.max(MIN_SECS) / other_secs.max(MIN_SECS)
+}
+
+/// Time the packed batches end-to-end under one scheduler.
+fn time_mode(sess: &NativeSession, batches: &[Batch], sched: &RowScheduler) -> Result<f64> {
     let t0 = Instant::now();
     for b in batches {
-        sess.predict_threaded(&b.ids, threads)?;
+        sess.predict_with(&b.ids, sched)?;
     }
     Ok(t0.elapsed().as_secs_f64())
 }
 
 pub fn run(cfg: &NativeBenchCfg) -> Result<Vec<NativeRow>> {
     let seed32 = u32::try_from(cfg.seed).context("--seed must fit in u32")?;
-    let threads = if cfg.threads == 0 {
-        std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1)
-    } else {
-        cfg.threads
-    };
+    let threads = if cfg.threads == 0 { default_budget() } else { cfg.threads };
     let examples = cfg.examples.max(1);
+    // One pool for the whole sweep — exactly like one Engine: threads
+    // are created here once, then reused by every bucket's timing run.
+    let pool = Arc::new(WorkerPool::new(threads));
+    // timing order: sequential baseline, then legacy scoped spawn, then
+    // the shared pool
+    let schedulers = [
+        RowScheduler::Sequential,
+        RowScheduler::Scoped(threads),
+        RowScheduler::Pool(pool),
+    ];
     eprintln!(
-        "[native] preset ladder, 1 vs {threads} predict workers, {examples} examples per bucket…"
+        "[native] preset ladder, sequential vs {threads} scoped workers vs pool(budget {threads}), \
+         {examples} examples per bucket…"
     );
 
     let mut rows = Vec::new();
@@ -92,29 +134,40 @@ pub fn run(cfg: &NativeBenchCfg) -> Result<Vec<NativeRow>> {
         // (cheap by design — see NativeSession::predict) that never
         // count toward throughput.
         let batches = pack_exact(&mut stream, examples, b_cap, t);
-        // warm-up (excluded): builds the FFT plans, faults in the params
-        sess.predict_threaded(&batches[0].ids, threads)?;
-        let secs_1 = time_mode(&sess, &batches, 1)?;
-        let secs_n = time_mode(&sess, &batches, threads)?;
+        let mut secs = [0.0f64; 3];
+        for (s, sched) in secs.iter_mut().zip(schedulers.iter()) {
+            // Per-scheduler warm-up (excluded from the window): faults
+            // in the params and warms allocator/page state on the same
+            // threads the timed run uses, so no mode's first batch pays
+            // one-time costs the others skipped.
+            sess.predict_with(&batches[0].ids, sched)?;
+            *s = time_mode(&sess, &batches, sched)?;
+        }
+        let [secs_1, secs_scoped, secs_pool] = secs;
         let row = NativeRow {
             base: base.to_string(),
             seq_len: t,
             batch: b_cap,
             examples,
-            single_ex_s: examples as f64 / secs_1,
-            multi_ex_s: examples as f64 / secs_n,
-            speedup: secs_1 / secs_n,
+            single_ex_s: per_sec(examples, secs_1),
+            scoped_ex_s: per_sec(examples, secs_scoped),
+            pool_ex_s: per_sec(examples, secs_pool),
+            speedup: speedup_of(secs_1, secs_scoped),
+            pool_speedup: speedup_of(secs_1, secs_pool),
         };
         eprintln!(
-            "[native] {base}: {:.1} ex/s single, {:.1} ex/s x{threads} ({:.2}x)",
-            row.single_ex_s, row.multi_ex_s, row.speedup
+            "[native] {base}: {:.1} ex/s single, {:.1} ex/s scoped, {:.1} ex/s pool \
+             ({:.2}x scoped, {:.2}x pool)",
+            row.single_ex_s, row.scoped_ex_s, row.pool_ex_s, row.speedup, row.pool_speedup
         );
         rows.push(row);
     }
 
     let mut table = Table::new(
-        &format!("Native hot path — plan-cached forward pass, 1 vs {threads} predict workers"),
-        &["Bucket", "T", "B", "1-thread ex/s", "multi ex/s", "Speedup"],
+        &format!(
+            "Native hot path — sequential vs scoped({threads}) vs shared pool(budget {threads})"
+        ),
+        &["Bucket", "T", "B", "1-thread ex/s", "scoped ex/s", "pool ex/s", "pool speedup"],
     );
     for r in &rows {
         table.row(vec![
@@ -122,8 +175,9 @@ pub fn run(cfg: &NativeBenchCfg) -> Result<Vec<NativeRow>> {
             r.seq_len.to_string(),
             r.batch.to_string(),
             format!("{:.1}", r.single_ex_s),
-            format!("{:.1}", r.multi_ex_s),
-            format!("{:.2}x", r.speedup),
+            format!("{:.1}", r.scoped_ex_s),
+            format!("{:.1}", r.pool_ex_s),
+            format!("{:.2}x", r.pool_speedup),
         ]);
     }
     table.print();
@@ -131,8 +185,9 @@ pub fn run(cfg: &NativeBenchCfg) -> Result<Vec<NativeRow>> {
     Ok(rows)
 }
 
-/// Serialize the sweep as the `BENCH_native.json` trajectory document.
-fn write_json(rows: &[NativeRow], threads: usize, path: &Path) -> Result<()> {
+/// The `BENCH_native.json` trajectory document. Split from the file
+/// write so degenerate-timing serialization is unit-testable.
+fn trajectory_doc(rows: &[NativeRow], threads: usize) -> Json {
     let arr = rows
         .iter()
         .map(|r| {
@@ -145,11 +200,19 @@ fn write_json(rows: &[NativeRow], threads: usize, path: &Path) -> Result<()> {
                 "single_thread_examples_per_sec".to_string(),
                 Json::Num(r.single_ex_s),
             );
+            // key kept from the PR 3 trajectory (then: the only
+            // multi-thread mode, implemented as scoped spawn)
             m.insert(
                 "multi_thread_examples_per_sec".to_string(),
-                Json::Num(r.multi_ex_s),
+                Json::Num(r.scoped_ex_s),
             );
+            m.insert("pool_examples_per_sec".to_string(), Json::Num(r.pool_ex_s));
             m.insert("speedup".to_string(), Json::Num(r.speedup));
+            m.insert("pool_speedup".to_string(), Json::Num(r.pool_speedup));
+            // plain ratio of rates: per_sec() already keeps real rates
+            // finite and positive, and the JSON writer turns any
+            // non-finite quotient into `null` rather than masking it
+            m.insert("pool_vs_scoped".to_string(), Json::Num(r.pool_ex_s / r.scoped_ex_s));
             Json::Obj(m)
         })
         .collect();
@@ -157,9 +220,63 @@ fn write_json(rows: &[NativeRow], threads: usize, path: &Path) -> Result<()> {
     root.insert("bench".to_string(), Json::Str("native".to_string()));
     root.insert("threads".to_string(), Json::Num(threads as f64));
     root.insert("rows".to_string(), Json::Arr(arr));
-    let doc = Json::Obj(root);
+    Json::Obj(root)
+}
+
+/// Serialize the sweep as the `BENCH_native.json` trajectory document.
+fn write_json(rows: &[NativeRow], threads: usize, path: &Path) -> Result<()> {
+    let doc = trajectory_doc(rows, threads);
     std::fs::write(path, format!("{doc}\n"))
         .with_context(|| format!("write {}", path.display()))?;
     eprintln!("[native] trajectory → {}", path.display());
     Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn degenerate_timing_windows_stay_finite() {
+        // a 0-second window (small --examples on a fast machine) must
+        // not produce inf rates or NaN speedups
+        assert!(per_sec(8, 0.0).is_finite());
+        assert!(per_sec(8, -0.0).is_finite());
+        assert!(speedup_of(0.0, 0.0).is_finite());
+        assert!(speedup_of(1.0, 0.0).is_finite());
+        assert!(speedup_of(0.0, 1.0).is_finite());
+        // sane windows are untouched by the clamp
+        assert_eq!(per_sec(10, 2.0), 5.0);
+        assert_eq!(speedup_of(4.0, 2.0), 2.0);
+    }
+
+    /// Even if a non-finite value slips into a row (e.g. a future field
+    /// computed without the clamp), the trajectory document must stay
+    /// valid JSON — the writer serializes non-finite as null rather
+    /// than corrupting the file.
+    #[test]
+    fn trajectory_doc_with_non_finite_rows_parses_back() {
+        let row = NativeRow {
+            base: "ember_hrrformer_small_T256_B8".into(),
+            seq_len: 256,
+            batch: 8,
+            examples: 8,
+            single_ex_s: f64::INFINITY,
+            scoped_ex_s: f64::NAN,
+            pool_ex_s: 123.0,
+            speedup: f64::NAN,
+            pool_speedup: 1.5,
+        };
+        let doc = trajectory_doc(&[row], 4).to_string();
+        let parsed = Json::parse(&doc).expect("trajectory must always be valid JSON");
+        let rows = parsed.get("rows").unwrap().as_arr().unwrap();
+        assert_eq!(rows.len(), 1);
+        assert_eq!(rows[0].get("single_thread_examples_per_sec"), Some(&Json::Null));
+        assert_eq!(rows[0].get("multi_thread_examples_per_sec"), Some(&Json::Null));
+        assert_eq!(rows[0].get("pool_examples_per_sec").and_then(Json::as_f64), Some(123.0));
+        assert_eq!(rows[0].get("pool_speedup").and_then(Json::as_f64), Some(1.5));
+        // quotient against the NaN rate is itself non-finite → null
+        assert_eq!(rows[0].get("pool_vs_scoped"), Some(&Json::Null));
+        assert_eq!(parsed.get("threads").and_then(Json::as_usize), Some(4));
+    }
 }

@@ -62,8 +62,21 @@ impl<T> BatchQueue<T> {
         BatchQueue { policy, queue: VecDeque::new() }
     }
 
+    /// Enqueue stamped with "now". Note `max_wait` then only covers time
+    /// spent inside *this* queue — callers whose requests already waited
+    /// upstream (admission/bucket channels) must use
+    /// [`BatchQueue::push_at`] with the original submission instant, or
+    /// a backpressured request silently waits far past its deadline.
     pub fn push(&mut self, payload: T) {
-        self.queue.push_back(Pending { payload, enqueued: Instant::now() });
+        self.push_at(payload, Instant::now());
+    }
+
+    /// Enqueue with an explicit arrival instant. The engine's executors
+    /// pass `Job.submitted` here so the flush deadline counts end-to-end
+    /// age; a payload already older than `max_wait` flushes on the next
+    /// poll.
+    pub fn push_at(&mut self, payload: T, enqueued: Instant) {
+        self.queue.push_back(Pending { payload, enqueued });
     }
 
     pub fn len(&self) -> usize {
@@ -181,6 +194,29 @@ mod tests {
                 "draining must always flush a nonempty queue"
             );
         });
+    }
+
+    /// Regression: `push` stamped `Instant::now()`, so time a request
+    /// spent queued upstream (admission/bucket channels under
+    /// backpressure) never counted toward `max_wait` — the oldest
+    /// request could wait ~2× its deadline. `push_at` with the original
+    /// submission instant must flush a pre-aged job immediately.
+    #[test]
+    fn pre_aged_push_at_flushes_immediately() {
+        let p = BatchPolicy { max_batch: 100, max_wait: Duration::from_millis(50) };
+        let mut q = BatchQueue::new(p);
+        let now = Instant::now();
+        let Some(aged) = now.checked_sub(Duration::from_millis(200)) else {
+            return; // monotonic clock too close to its epoch to back-date
+        };
+        q.push_at(1, aged);
+        assert_eq!(q.time_to_deadline(now), Some(Duration::ZERO), "deadline already passed");
+        let batch = q.maybe_flush(now, false).expect("pre-aged job must flush immediately");
+        assert_eq!(batch.len(), 1);
+        // a fresh push_at, by contrast, waits out its own deadline
+        q.push_at(2, now);
+        assert!(q.maybe_flush(now, false).is_none());
+        assert!(q.maybe_flush(now + Duration::from_millis(50), false).is_some());
     }
 
     #[test]

@@ -11,7 +11,7 @@
 //! bucket in parallel.
 
 use std::path::PathBuf;
-use std::sync::mpsc::{Receiver, RecvTimeoutError, SyncSender};
+use std::sync::mpsc::{Receiver, RecvTimeoutError, SyncSender, TryRecvError};
 use std::sync::Arc;
 use std::time::{Duration, Instant};
 
@@ -20,9 +20,10 @@ use anyhow::{Context, Result};
 use crate::coordinator::batcher::{BatchPolicy, BatchQueue, Pending};
 use crate::engine::error::EngineError;
 use crate::engine::{Backend, EngineStats, ExecSpan, InferReply};
-use crate::hrr::{HrrConfig, NativeSession};
+use crate::hrr::{HrrConfig, NativeSession, RowScheduler};
 use crate::model::{ParamStore, PredictSession, Predictor, Session};
 use crate::runtime::{Manifest, Runtime, Tensor};
+use crate::util::pool::WorkerPool;
 
 /// A routed request, as handed from the routing thread to an executor.
 pub(crate) struct Job {
@@ -52,6 +53,10 @@ pub(crate) struct ExecutorConfig {
     /// Trained parameters (None = seed-initialized).
     pub params: Option<ParamStore>,
     pub policy: BatchPolicy,
+    /// The engine's shared worker pool (native backend): installed as
+    /// the session's row scheduler, so every bucket's predict rows run
+    /// on the same fixed thread set instead of per-batch scoped spawns.
+    pub pool: Option<Arc<WorkerPool>>,
 }
 
 /// Idle wake-up period when the queue is empty (no deadline to sleep to).
@@ -98,11 +103,14 @@ fn build_session(cfg: &mut ExecutorConfig) -> Result<Box<dyn Predictor>> {
             Ok(Box::new(sess))
         }
         Backend::Native => {
-            let sess = match params {
+            let mut sess = match params {
                 Some(p) => NativeSession::with_params(HrrConfig::from_base(&cfg.base)?, p),
                 None => NativeSession::create(&cfg.base, cfg.seed),
             }
             .with_context(|| format!("build native bucket '{}'", cfg.base))?;
+            if let Some(pool) = cfg.pool.take() {
+                sess.set_scheduler(RowScheduler::Pool(pool));
+            }
             Ok(Box::new(sess))
         }
     }
@@ -131,7 +139,34 @@ fn executor_loop(
         let now = Instant::now();
         let wait = queue.time_to_deadline(now).unwrap_or(IDLE_TICK);
         match rx.recv_timeout(wait) {
-            Ok(ExecMsg::Job(job)) => queue.push(job),
+            // Deadline from client submission, not queue arrival: time a
+            // request spent in the admission/bucket channels counts
+            // toward max_wait, so under backpressure a pre-aged job
+            // flushes immediately instead of waiting a fresh deadline.
+            Ok(ExecMsg::Job(job)) => {
+                let enqueued = job.submitted;
+                queue.push_at(job, enqueued);
+                // Greedily drain whatever else already sits in the
+                // channel before deciding to flush. Submission-time
+                // deadlines mean a backpressured job can arrive
+                // pre-aged; flushing on it alone would collapse
+                // batching to size-1 exactly when the engine is
+                // overloaded and coalescing matters most. The channel
+                // is bounded (queue_depth), so this loop is too.
+                loop {
+                    match rx.try_recv() {
+                        Ok(ExecMsg::Job(job)) => {
+                            let enqueued = job.submitted;
+                            queue.push_at(job, enqueued);
+                        }
+                        Ok(ExecMsg::Shutdown) | Err(TryRecvError::Disconnected) => {
+                            draining = true;
+                            break;
+                        }
+                        Err(TryRecvError::Empty) => break,
+                    }
+                }
+            }
             Ok(ExecMsg::Shutdown) | Err(RecvTimeoutError::Disconnected) => draining = true,
             Err(RecvTimeoutError::Timeout) => {}
         }

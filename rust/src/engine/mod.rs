@@ -29,6 +29,16 @@
 //! largest T (the paper's EMBER protocol) and the reply carries an
 //! explicit `truncated: bool`.
 //!
+//! On the native backend the *compute* under those executors is
+//! budgeted too: `build()` creates one persistent
+//! [`crate::util::pool::WorkerPool`] (size =
+//! [`EngineBuilder::worker_budget`], default every core) and installs it
+//! as every `NativeSession`'s row scheduler — so however many buckets
+//! are flushing at once, at most `budget` native row workers run
+//! machine-wide, with zero per-batch thread spawns (previously each
+//! executor scope-spawned `available_parallelism` workers per batch,
+//! oversubscribing cores under multi-bucket load).
+//!
 //! # Backends
 //!
 //! Executors are typed against [`crate::model::Predictor`], so the same
@@ -74,6 +84,7 @@ use crate::hrr::HrrConfig;
 use crate::metrics::{LatencyHist, RunMeter};
 use crate::model::ParamStore;
 use crate::runtime::Manifest;
+use crate::util::pool::{default_budget, WorkerPool};
 
 use executor::{ExecMsg, ExecutorConfig, Job};
 
@@ -303,6 +314,7 @@ pub struct EngineBuilder {
     queue_depth: usize,
     seed: u32,
     backend: Backend,
+    worker_budget: usize,
 }
 
 impl Default for EngineBuilder {
@@ -313,6 +325,7 @@ impl Default for EngineBuilder {
             queue_depth: 128,
             seed: 0,
             backend: Backend::default(),
+            worker_budget: 0,
         }
     }
 }
@@ -379,6 +392,19 @@ impl EngineBuilder {
         self
     }
 
+    /// Engine-wide native worker budget: the number of persistent
+    /// threads in the shared [`WorkerPool`] that *all* bucket executors
+    /// schedule predict rows on (`--workers` on the CLI). 0 (default)
+    /// means every available core. However many buckets are busy, at
+    /// most this many native row workers ever run concurrently — and
+    /// none of them is spawned per batch. A budget of 1 serializes
+    /// native row work engine-wide. Native backend only; artifact
+    /// executors execute inside their own PJRT runtimes and ignore it.
+    pub fn worker_budget(mut self, budget: usize) -> Self {
+        self.worker_budget = budget;
+        self
+    }
+
     /// Build all buckets and start the engine. Blocks until every
     /// executor has built its session (or one fails — then every thread
     /// is torn down and the error is returned). With
@@ -435,6 +461,23 @@ impl EngineBuilder {
             Backend::Native => None,
         };
 
+        // One persistent worker pool for the whole engine, created once
+        // here and shared by every native bucket executor: N busy
+        // buckets split the same `budget` threads instead of each
+        // spawning `available_parallelism` scoped workers per batch
+        // (which oversubscribed cores and paid spawn cost per flush).
+        let pool = match backend {
+            Backend::Native => {
+                let budget = if self.worker_budget == 0 {
+                    default_budget()
+                } else {
+                    self.worker_budget
+                };
+                Some(Arc::new(WorkerPool::new(budget)))
+            }
+            Backend::Artifact => None,
+        };
+
         // One executor thread per bucket; each compiles its own session
         // and signals readiness before the engine is handed to callers.
         let mut job_txs = Vec::new();
@@ -451,6 +494,7 @@ impl EngineBuilder {
                 seed: self.seed,
                 params: spec.params,
                 policy: self.policy,
+                pool: pool.clone(),
             };
             let stats_exec = stats.clone();
             let thread = std::thread::Builder::new()
@@ -499,6 +543,7 @@ impl EngineBuilder {
             client: EngineClient { tx, stats },
             buckets,
             threads,
+            pool,
         })
     }
 }
@@ -510,6 +555,10 @@ pub struct Engine {
     buckets: Vec<Bucket>,
     /// routing thread first, then one executor per bucket
     threads: Vec<JoinHandle<()>>,
+    /// The shared native worker pool (None on the artifact backend).
+    /// Held so the pool outlives every executor; released — joining the
+    /// pool threads — only after the executors have drained and joined.
+    pool: Option<Arc<WorkerPool>>,
 }
 
 impl Engine {
@@ -546,7 +595,14 @@ impl Engine {
         &self.client.stats
     }
 
-    /// Drain all queues and stop every thread.
+    /// The shared native worker pool, for observability (budget,
+    /// concurrency high-water mark). None on the artifact backend.
+    pub fn worker_pool(&self) -> Option<&Arc<WorkerPool>> {
+        self.pool.as_ref()
+    }
+
+    /// Drain all queues and stop every thread (executors first, then
+    /// the shared worker pool).
     pub fn stop(mut self) {
         self.shutdown();
     }
@@ -558,6 +614,16 @@ impl Engine {
         let _ = self.client.tx.send(Msg::Shutdown);
         for t in self.threads.drain(..) {
             let _ = t.join();
+        }
+        // Executors are gone (their sessions — and pool handles — died
+        // with them), so nothing can be mid-predict: shut the pool down
+        // explicitly. An outstanding observability handle
+        // (`worker_pool()` clone) must not keep the threads alive past
+        // engine teardown, so this cannot rely on last-`Arc` drop.
+        // Ordering matters — stopping the pool before the executors
+        // would strand an executor mid-predict.
+        if let Some(pool) = self.pool.take() {
+            pool.shutdown();
         }
     }
 }

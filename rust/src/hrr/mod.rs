@@ -21,8 +21,10 @@
 //!   which plugs into everything typed against
 //!   [`crate::model::Predictor`] (engine executors, benches, examples);
 //!   one reusable scratch `Workspace` per worker, batch rows fanned
-//!   across scoped threads (`predict_threaded` pins the count,
-//!   bit-identical logits at any count).
+//!   out through a pluggable [`RowScheduler`] — the engine's shared
+//!   persistent worker pool, a pinned scoped-thread fan-out
+//!   (`predict_threaded`), or sequential — with bit-identical logits
+//!   under every scheduler and worker count.
 //!
 //! Selected at runtime via [`crate::engine::Backend::Native`]
 //! (`--backend native` on the CLI): the whole serving stack — and the
@@ -38,5 +40,5 @@ pub mod ops;
 pub mod plan;
 
 pub use config::HrrConfig;
-pub use model::{init_native_params, param_specs, NativeSession, PAD_ID};
+pub use model::{init_native_params, param_specs, NativeSession, RowScheduler, PAD_ID};
 pub use plan::FftPlan;

@@ -27,12 +27,19 @@
 //!   to the direct `fft::fft` — see `hrr/plan.rs`);
 //! * all intermediates live in a per-worker [`Workspace`] of reusable
 //!   scratch buffers, so `forward_row` allocates nothing per row;
-//! * [`NativeSession::predict`] fans independent batch rows across scoped
-//!   threads (`predict_threaded` pins the worker count; logits are
-//!   bit-identical at any count since each row runs the same code path).
+//! * [`NativeSession::predict`] fans independent batch rows out through a
+//!   pluggable [`RowScheduler`]: row chunks on a shared persistent
+//!   [`WorkerPool`] (what engine executors install, so N busy buckets
+//!   share one engine-wide worker budget instead of oversubscribing
+//!   cores), a legacy per-call scoped-thread fan-out, or fully
+//!   sequential. Logits are bit-identical under every scheduler and
+//!   worker count since each row runs the same code path with its own
+//!   [`Workspace`].
 //!
 //! GELU uses the tanh approximation (the `jax.nn.gelu` default the
 //! reference model was exported with).
+
+use std::sync::Arc;
 
 use anyhow::{Context, Result};
 
@@ -44,6 +51,7 @@ use crate::model::params::ParamStore;
 use crate::model::session::{Predictor, Session};
 use crate::runtime::manifest::IoSpec;
 use crate::runtime::tensor::{DType, Tensor};
+use crate::util::pool::{self, Task as PoolTask, WorkerPool};
 use crate::util::rng::Rng;
 
 /// Token 0 is PAD everywhere (datasets reserve it; model.py `PAD_ID`).
@@ -545,10 +553,43 @@ fn forward_row(
 // NativeSession
 // ---------------------------------------------------------------------------
 
-/// Worker count [`NativeSession::predict`] fans rows across: every core
-/// the host exposes (capped by batch size at the call site).
+/// Worker count the default standalone scheduler fans rows across:
+/// every core the host exposes (capped by batch size at the call site).
 fn default_workers() -> usize {
-    std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1)
+    pool::default_budget()
+}
+
+/// How [`NativeSession::predict`] schedules a batch's independent rows.
+///
+/// Every variant runs the identical per-row code path with a per-worker
+/// [`Workspace`], so logits are **bit-identical** under all of them —
+/// the scheduler only changes wall-clock and thread accounting (pinned
+/// by `prop_hrr.rs`).
+#[derive(Clone)]
+pub enum RowScheduler {
+    /// Every row on the calling thread; no worker threads at all.
+    Sequential,
+    /// Per-call `std::thread::scope` fan-out with a pinned worker count
+    /// (the pre-pool behavior; kept as the standalone default and as
+    /// the bench baseline). Spawns on every call and knows nothing
+    /// about other sessions — use [`RowScheduler::Pool`] when several
+    /// sessions share a machine.
+    Scoped(usize),
+    /// Row chunks submitted to a shared persistent [`WorkerPool`]: no
+    /// per-batch spawn, and all sessions holding the same pool respect
+    /// one global worker budget. A budget of 1 serializes native row
+    /// work pool-wide (effectively sequential, on the pool thread).
+    Pool(Arc<WorkerPool>),
+}
+
+impl std::fmt::Debug for RowScheduler {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            RowScheduler::Sequential => f.write_str("Sequential"),
+            RowScheduler::Scoped(n) => write!(f, "Scoped({n})"),
+            RowScheduler::Pool(p) => write!(f, "Pool(budget={})", p.budget()),
+        }
+    }
 }
 
 /// Inference session over the pure-Rust forward pass — the native
@@ -558,6 +599,10 @@ fn default_workers() -> usize {
 pub struct NativeSession {
     cfg: HrrConfig,
     params: ParamStore,
+    /// How `predict` fans batch rows out. Standalone sessions default to
+    /// the legacy scoped fan-out; engine executors install the engine's
+    /// shared [`WorkerPool`] via [`NativeSession::set_scheduler`].
+    scheduler: RowScheduler,
 }
 
 impl NativeSession {
@@ -571,7 +616,7 @@ impl NativeSession {
     pub fn from_config(cfg: HrrConfig, seed: u32) -> Result<NativeSession> {
         cfg.validate()?;
         let params = init_native_params(&cfg, seed);
-        Ok(NativeSession { cfg, params })
+        Ok(NativeSession { cfg, params, scheduler: RowScheduler::Scoped(default_workers()) })
     }
 
     /// Serve explicit parameters (a checkpoint saved from a native
@@ -598,16 +643,29 @@ impl NativeSession {
                 tensor.shape()
             );
         }
-        Ok(NativeSession { cfg, params })
+        Ok(NativeSession { cfg, params, scheduler: RowScheduler::Scoped(default_workers()) })
     }
 
     pub fn cfg(&self) -> &HrrConfig {
         &self.cfg
     }
 
+    /// Install the [`RowScheduler`] that [`NativeSession::predict`]
+    /// uses. Engine executors install the engine's shared worker pool
+    /// here so every bucket respects one global worker budget.
+    pub fn set_scheduler(&mut self, scheduler: RowScheduler) {
+        self.scheduler = scheduler;
+    }
+
+    /// The scheduler [`NativeSession::predict`] currently uses.
+    pub fn scheduler(&self) -> &RowScheduler {
+        &self.scheduler
+    }
+
     /// Logits (B, classes) for token ids (B, t), t ≤ config seq_len,
-    /// with rows fanned across one scoped worker thread per available
-    /// core (see [`NativeSession::predict_threaded`]).
+    /// with rows fanned out through the installed [`RowScheduler`]
+    /// (standalone default: scoped threads, one per available core;
+    /// inside an engine: the shared worker pool).
     ///
     /// All-PAD rows (real empty requests *and* batch-packing filler —
     /// indistinguishable here) get the reference semantics too: the
@@ -616,15 +674,27 @@ impl NativeSession {
     /// it is computed once per call and copied to every such row, so
     /// partial engine batches do not pay a full forward per filler row.
     pub fn predict(&self, ids: &Tensor) -> Result<Tensor> {
-        self.predict_threaded(ids, default_workers())
+        self.predict_with(ids, &self.scheduler)
     }
 
-    /// [`NativeSession::predict`] with an explicit worker count
-    /// (1 = fully sequential, no threads spawned). Rows are independent
-    /// and each worker owns its own [`Workspace`], so the logits are
+    /// [`NativeSession::predict`] with a pinned scoped worker count
+    /// (1 = fully sequential, no threads spawned) — the pre-pool
+    /// fallback, kept for benches and standalone callers. Logits are
     /// bit-identical for every `threads` value (pinned by
     /// `prop_hrr.rs`); the count only changes wall-clock.
     pub fn predict_threaded(&self, ids: &Tensor, threads: usize) -> Result<Tensor> {
+        let sched = if threads <= 1 {
+            RowScheduler::Sequential
+        } else {
+            RowScheduler::Scoped(threads)
+        };
+        self.predict_with(ids, &sched)
+    }
+
+    /// [`NativeSession::predict`] under an explicit scheduler. Rows are
+    /// independent and every worker owns its own [`Workspace`], so the
+    /// logits cannot depend on the scheduler or any interleaving.
+    pub fn predict_with(&self, ids: &Tensor, scheduler: &RowScheduler) -> Result<Tensor> {
         let shape = ids.shape();
         anyhow::ensure!(shape.len() == 2, "native predict expects (B, T) ids, got {shape:?}");
         let (b, t) = (shape[0], shape[1]);
@@ -670,24 +740,49 @@ impl NativeSession {
             }
         };
 
-        let workers = threads.clamp(1, b);
-        if workers == 1 {
-            run_rows(0, &mut out);
-        } else {
-            let rows_per = b.div_ceil(workers);
-            let run_rows = &run_rows;
-            std::thread::scope(|s| -> Result<()> {
-                let handles: Vec<_> = out
+        match scheduler {
+            RowScheduler::Sequential => run_rows(0, &mut out),
+            RowScheduler::Scoped(threads) => {
+                let workers = (*threads).clamp(1, b);
+                if workers == 1 {
+                    run_rows(0, &mut out);
+                } else {
+                    let rows_per = b.div_ceil(workers);
+                    let run_rows = &run_rows;
+                    std::thread::scope(|s| -> Result<()> {
+                        let handles: Vec<_> = out
+                            .chunks_mut(rows_per * classes)
+                            .enumerate()
+                            .map(|(ci, chunk)| s.spawn(move || run_rows(ci * rows_per, chunk)))
+                            .collect();
+                        for h in handles {
+                            h.join()
+                                .map_err(|_| anyhow::anyhow!("native predict worker panicked"))?;
+                        }
+                        Ok(())
+                    })?;
+                }
+            }
+            RowScheduler::Pool(pool) => {
+                // One chunk per budgeted worker (capped by rows): the
+                // pool's persistent threads pull them as they free up,
+                // and `run` blocks until the whole batch is done. No
+                // threads are spawned here, and across all sessions
+                // sharing this pool at most `budget` chunks execute
+                // concurrently.
+                let chunks = pool.budget().clamp(1, b);
+                let rows_per = b.div_ceil(chunks);
+                let run_rows = &run_rows;
+                let tasks: Vec<PoolTask<'_>> = out
                     .chunks_mut(rows_per * classes)
                     .enumerate()
-                    .map(|(ci, chunk)| s.spawn(move || run_rows(ci * rows_per, chunk)))
+                    .map(|(ci, chunk)| {
+                        Box::new(move || run_rows(ci * rows_per, chunk)) as PoolTask<'_>
+                    })
                     .collect();
-                for h in handles {
-                    h.join()
-                        .map_err(|_| anyhow::anyhow!("native predict worker panicked"))?;
-                }
-                Ok(())
-            })?;
+                pool.run(tasks)
+                    .map_err(|_| anyhow::anyhow!("native predict worker panicked"))?;
+            }
         }
         Ok(Tensor::f32(vec![b, classes], out))
     }
@@ -813,6 +908,22 @@ mod tests {
         // (finite, bias-driven) output whether alone or batch-packed
         assert_eq!(&bd[4..], pad.as_f32().unwrap(), "all-PAD rows match standalone output");
         assert!(bd.iter().all(|v| v.is_finite()));
+    }
+
+    #[test]
+    fn every_scheduler_produces_identical_logits() {
+        let sess = NativeSession::from_config(tiny_cfg(), 5).unwrap();
+        let ids = Tensor::i32(vec![3, 12], vec![
+            1, 2, 3, 4, 5, 6, 7, 8, 9, 10, 1, 2, //
+            3, 1, 4, 1, 5, 0, 0, 0, 0, 0, 0, 0, //
+            0, 0, 0, 0, 0, 0, 0, 0, 0, 0, 0, 0, // all-PAD row
+        ]);
+        let seq = sess.predict_with(&ids, &RowScheduler::Sequential).unwrap();
+        let scoped = sess.predict_with(&ids, &RowScheduler::Scoped(2)).unwrap();
+        let pool = Arc::new(crate::util::pool::WorkerPool::new(2));
+        let pooled = sess.predict_with(&ids, &RowScheduler::Pool(pool)).unwrap();
+        assert_eq!(seq.as_f32().unwrap(), scoped.as_f32().unwrap());
+        assert_eq!(seq.as_f32().unwrap(), pooled.as_f32().unwrap());
     }
 
     #[test]

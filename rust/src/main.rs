@@ -30,12 +30,13 @@ USAGE:
   repro train --base <program base> [--steps N] [--seed S] [--curve path.csv] [--ckpt path]
   repro serve [--backend artifact|native] [--bases a,b,c] [--requests N]
               [--max-batch B] [--max-wait-ms MS] [--queue-depth D] [--seed S]
+              [--workers K]
   repro bench ember     [--steps N] [--models a,b] [--timeout-s S]
   repro bench lra       [--steps N] [--models a,b] [--tasks t1,t2] [--curves]
   repro bench speed     [--steps N]
   repro bench inference [--examples N] [--sweep-batch | --engine]
                         [--backend artifact|native]
-  repro bench native    [--examples N] [--threads K] [--seed S]
+  repro bench native    [--examples N] [--workers K] [--seed S]
                         [--out BENCH_native.json]
   repro bench weights   [--steps N] [--multi-layer]
   repro data --task <task> [--n N] [--seq-len T]
@@ -46,7 +47,10 @@ serve runs the typed Engine API on synthetic load: one bucket per
 each request, and one executor thread per bucket — so buckets batch and
 execute in parallel. Over-length requests are truncated to the largest
 bucket and replies carry an explicit `truncated` flag. --seed must be a
-u32 and seeds parameter init for every bucket.
+u32 and seeds parameter init for every bucket. On the native backend
+--workers caps the engine-wide worker pool all buckets share (0 =
+every core): busy buckets split one fixed thread set instead of each
+spawning per-batch workers.
 
 --backend picks the inference implementation: `artifact` (default)
 executes the AOT-compiled `<base>_predict` XLA programs on per-executor
@@ -55,10 +59,11 @@ PJRT runtimes (xla handles are !Send) and needs `make artifacts`;
 artifacts required, works on a fresh checkout.
 
 bench native times that native hot path directly (plan-cached FFTs,
-reusable workspaces) over the default EMBER bucket ladder, single- vs
-multi-threaded predict, and writes the BENCH_native.json trajectory
-file at the repo root. Needs no artifacts. --threads 0 (default) uses
-every available core.
+reusable workspaces) over the default EMBER bucket ladder under all
+three row schedulers — sequential, legacy per-call scoped threads, and
+the shared persistent worker pool — and writes the BENCH_native.json
+trajectory file at the repo root. Needs no artifacts. --workers 0
+(default) uses every available core (--threads is an accepted alias).
 
 Artifacts are read from ./artifacts (override: HRRFORMER_ARTIFACTS).
 Bench outputs land in ./results (override: HRRFORMER_RESULTS).
@@ -143,7 +148,8 @@ fn cmd_serve(args: &Args) -> Result<()> {
         })
         .queue_depth(args.usize("queue-depth", 128))
         .seed(seed)
-        .backend(backend);
+        .backend(backend)
+        .worker_budget(args.usize("workers", 0));
     let engine = match backend {
         Backend::Artifact => builder.build(&default_manifest()?)?,
         Backend::Native => builder.build_native()?,
@@ -254,7 +260,10 @@ fn cmd_bench(args: &Args) -> Result<()> {
             let mut cfg = bench::native::NativeBenchCfg::default();
             cfg.examples = args.usize("examples", cfg.examples);
             cfg.seed = args.u64("seed", cfg.seed);
+            // --workers (the engine-wide pool vocabulary) wins; --threads
+            // stays as the PR 3 alias
             cfg.threads = args.usize("threads", cfg.threads);
+            cfg.threads = args.usize("workers", cfg.threads);
             if let Some(out) = args.get("out") {
                 cfg.out = out.into();
             }

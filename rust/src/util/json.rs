@@ -287,7 +287,12 @@ pub fn write_json(v: &Json, out: &mut String) {
         Json::Null => out.push_str("null"),
         Json::Bool(b) => out.push_str(if *b { "true" } else { "false" }),
         Json::Num(n) => {
-            if n.fract() == 0.0 && n.abs() < 1e15 {
+            if !n.is_finite() {
+                // JSON has no NaN/inf literal: a bare `NaN` token makes
+                // the whole document unparseable, silently corrupting
+                // trajectory files. Emit the one lossless stand-in.
+                out.push_str("null");
+            } else if n.fract() == 0.0 && n.abs() < 1e15 {
                 out.push_str(&format!("{}", *n as i64));
             } else {
                 out.push_str(&format!("{}", n));
@@ -351,6 +356,21 @@ mod tests {
         assert!(Json::parse("[1,]").is_err());
         assert!(Json::parse("").is_err());
         assert!(Json::parse("{} extra").is_err());
+    }
+
+    #[test]
+    fn non_finite_numbers_serialize_as_null_not_invalid_json() {
+        for v in [f64::NAN, f64::INFINITY, f64::NEG_INFINITY] {
+            assert_eq!(Json::Num(v).to_string(), "null");
+        }
+        // a document carrying a degenerate number must stay parseable
+        let mut m = BTreeMap::new();
+        m.insert("speedup".to_string(), Json::Num(f64::NAN));
+        m.insert("ok".to_string(), Json::Num(2.5));
+        let doc = Json::Obj(m).to_string();
+        let parsed = Json::parse(&doc).expect("serializer must never emit invalid JSON");
+        assert_eq!(parsed.get("speedup"), Some(&Json::Null));
+        assert_eq!(parsed.get("ok").and_then(Json::as_f64), Some(2.5));
     }
 
     #[test]

@@ -1,0 +1,416 @@
+//! Shared, persistent worker pool — the engine-wide parallelism budget.
+//!
+//! Before this existed, every bucket executor's `NativeSession::predict`
+//! spawned `available_parallelism` scoped threads *per batch*: N busy
+//! buckets ran N × cores workers between them (core oversubscription,
+//! context-switch thrash) and paid thread-spawn cost on every flush. A
+//! [`WorkerPool`] inverts that: a fixed set of threads is created once
+//! (budget = [`default_budget`] unless overridden), lives for the life of
+//! its owner, and executes chunked row tasks from a shared queue — so
+//! across *all* submitters there are never more than `budget` concurrent
+//! workers, and the hot path never spawns.
+//!
+//! The API is scoped like `std::thread::scope`: [`WorkerPool::run`]
+//! accepts tasks borrowing caller state and blocks until every one has
+//! finished, so borrows can't outlive the call. A task panic is caught
+//! on the worker (the pool survives) and surfaced to the submitter as
+//! [`PoolPanic`]. Dropping the pool drains any queued work, then joins
+//! the threads — a blocked submitter can never be stranded.
+
+use std::collections::VecDeque;
+use std::fmt;
+use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
+use std::sync::{Arc, Condvar, Mutex};
+use std::thread::JoinHandle;
+
+/// One unit of pool work: a closure that may borrow the submitter's
+/// stack for `'task` (see the safety contract on [`WorkerPool::run`]).
+pub type Task<'task> = Box<dyn FnOnce() + Send + 'task>;
+
+/// The worker budget used when none is configured: every core the host
+/// exposes.
+pub fn default_budget() -> usize {
+    std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1)
+}
+
+/// A task submitted through [`WorkerPool::run`] panicked. The panic was
+/// caught on the worker thread (the pool itself keeps running); the
+/// submitter decides how to surface it.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct PoolPanic;
+
+impl fmt::Display for PoolPanic {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str("a worker-pool task panicked")
+    }
+}
+
+impl std::error::Error for PoolPanic {}
+
+/// Completion state shared by one `run` call's tasks.
+struct BatchState {
+    remaining: Mutex<usize>,
+    done: Condvar,
+    panicked: AtomicBool,
+}
+
+struct PoolJob {
+    /// Lifetime-erased task; `run` blocks until it has executed, which
+    /// is what makes the erasure sound.
+    task: Task<'static>,
+    batch: Arc<BatchState>,
+}
+
+struct Queue {
+    jobs: VecDeque<PoolJob>,
+    shutdown: bool,
+}
+
+struct Shared {
+    queue: Mutex<Queue>,
+    available: Condvar,
+    /// Tasks executing right now / the most ever observed at once.
+    /// `high_water` can never exceed the thread count — tests pin that
+    /// the budget really is a global cap, not per-submitter.
+    active: AtomicUsize,
+    high_water: AtomicUsize,
+}
+
+/// A fixed set of persistent worker threads with a shared task queue.
+pub struct WorkerPool {
+    shared: Arc<Shared>,
+    /// Behind a mutex so [`WorkerPool::shutdown`] can join through
+    /// `&self` — owners (e.g. `Engine::stop`) must be able to stop the
+    /// threads even while observability `Arc` clones are outstanding.
+    threads: Mutex<Vec<JoinHandle<()>>>,
+    budget: usize,
+}
+
+impl WorkerPool {
+    /// Spawn `budget` (≥ 1) named worker threads. This is the only place
+    /// the pool ever creates a thread.
+    pub fn new(budget: usize) -> WorkerPool {
+        let budget = budget.max(1);
+        let shared = Arc::new(Shared {
+            queue: Mutex::new(Queue { jobs: VecDeque::new(), shutdown: false }),
+            available: Condvar::new(),
+            active: AtomicUsize::new(0),
+            high_water: AtomicUsize::new(0),
+        });
+        let threads = (0..budget)
+            .map(|i| {
+                let shared = shared.clone();
+                std::thread::Builder::new()
+                    .name(format!("hrr-pool-{i}"))
+                    .spawn(move || worker_loop(&shared))
+                    .expect("spawn worker-pool thread")
+            })
+            .collect();
+        WorkerPool { shared, threads: Mutex::new(threads), budget }
+    }
+
+    /// [`WorkerPool::new`] with the [`default_budget`].
+    pub fn with_default_budget() -> WorkerPool {
+        WorkerPool::new(default_budget())
+    }
+
+    /// The configured worker count — the hard cap on concurrent tasks.
+    pub fn budget(&self) -> usize {
+        self.budget
+    }
+
+    /// The most tasks ever observed executing concurrently. Bounded by
+    /// [`WorkerPool::budget`] by construction; exposed so tests and
+    /// stats can pin that.
+    pub fn high_water(&self) -> usize {
+        self.shared.high_water.load(Ordering::SeqCst)
+    }
+
+    /// Execute every task on the pool and block until all have finished.
+    ///
+    /// Tasks may borrow the caller's stack (`'task`): soundness comes
+    /// from this method not returning until the last task has run — the
+    /// lifetime erasure below never lets a task outlive its borrows. A
+    /// panicking task is caught on the worker and reported as
+    /// [`PoolPanic`] after the whole batch completes; the pool survives.
+    /// If the pool is already shutting down (owner dropping concurrently
+    /// — engine teardown prevents this, but the API stays total), the
+    /// tasks run inline on the caller so nothing is ever stranded.
+    pub fn run<'task>(&self, tasks: Vec<Task<'task>>) -> Result<(), PoolPanic> {
+        if tasks.is_empty() {
+            return Ok(());
+        }
+        let batch = Arc::new(BatchState {
+            remaining: Mutex::new(tasks.len()),
+            done: Condvar::new(),
+            panicked: AtomicBool::new(false),
+        });
+        {
+            let mut q = self.shared.queue.lock().unwrap();
+            if q.shutdown {
+                drop(q);
+                return run_inline(tasks);
+            }
+            for task in tasks {
+                // SAFETY: `run` blocks below until `remaining` hits
+                // zero, i.e. until every erased task has finished
+                // executing — so no borrow captured for `'task` is ever
+                // used after this call returns. (The transmute changes
+                // only the trait object's lifetime bound; clippy sees
+                // the region-erased types as identical.)
+                #[allow(clippy::useless_transmute)]
+                let task = unsafe { std::mem::transmute::<Task<'task>, Task<'static>>(task) };
+                q.jobs.push_back(PoolJob { task, batch: batch.clone() });
+            }
+            self.shared.available.notify_all();
+        }
+        let mut remaining = batch.remaining.lock().unwrap();
+        while *remaining > 0 {
+            remaining = batch.done.wait(remaining).unwrap();
+        }
+        drop(remaining);
+        if batch.panicked.load(Ordering::SeqCst) {
+            Err(PoolPanic)
+        } else {
+            Ok(())
+        }
+    }
+
+    /// Signal shutdown and join every worker thread. Idempotent, and
+    /// callable through `&self`: an owner tearing down (the engine's
+    /// `stop()`) must actually stop the threads even while other `Arc`
+    /// handles to the pool are still alive for observability — relying
+    /// on last-`Arc` drop would leak the thread set until the last
+    /// observer lets go. Workers drain the queue before exiting, so a
+    /// submitter still blocked in [`WorkerPool::run`] is answered
+    /// first; later `run` calls execute inline on the caller.
+    pub fn shutdown(&self) {
+        {
+            let mut q = self.shared.queue.lock().unwrap();
+            q.shutdown = true;
+        }
+        self.shared.available.notify_all();
+        let mut threads = self.threads.lock().unwrap();
+        for t in threads.drain(..) {
+            let _ = t.join();
+        }
+    }
+}
+
+impl fmt::Debug for WorkerPool {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.debug_struct("WorkerPool")
+            .field("budget", &self.budget)
+            .field("high_water", &self.high_water())
+            .finish()
+    }
+}
+
+impl Drop for WorkerPool {
+    /// [`WorkerPool::shutdown`] — a no-op if an owner already called it.
+    fn drop(&mut self) {
+        self.shutdown();
+    }
+}
+
+/// Degraded path for a pool that is already shutting down: execute on
+/// the caller with the same panic-capture semantics.
+fn run_inline(tasks: Vec<Task<'_>>) -> Result<(), PoolPanic> {
+    let mut panicked = false;
+    for task in tasks {
+        panicked |= std::panic::catch_unwind(std::panic::AssertUnwindSafe(task)).is_err();
+    }
+    if panicked {
+        Err(PoolPanic)
+    } else {
+        Ok(())
+    }
+}
+
+fn worker_loop(shared: &Shared) {
+    loop {
+        let job = {
+            let mut q = shared.queue.lock().unwrap();
+            loop {
+                if let Some(job) = q.jobs.pop_front() {
+                    break job;
+                }
+                if q.shutdown {
+                    return;
+                }
+                q = shared.available.wait(q).unwrap();
+            }
+        };
+        let active = shared.active.fetch_add(1, Ordering::SeqCst) + 1;
+        shared.high_water.fetch_max(active, Ordering::SeqCst);
+        let result = std::panic::catch_unwind(std::panic::AssertUnwindSafe(job.task));
+        shared.active.fetch_sub(1, Ordering::SeqCst);
+        if result.is_err() {
+            job.batch.panicked.store(true, Ordering::SeqCst);
+        }
+        let mut remaining = job.batch.remaining.lock().unwrap();
+        *remaining -= 1;
+        if *remaining == 0 {
+            job.batch.done.notify_all();
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::atomic::AtomicUsize;
+    use std::time::Duration;
+
+    #[test]
+    fn tasks_write_through_borrowed_buffers() {
+        let pool = WorkerPool::new(3);
+        let mut out = vec![0usize; 16];
+        let tasks: Vec<Task<'_>> = out
+            .chunks_mut(4)
+            .enumerate()
+            .map(|(ci, chunk)| {
+                Box::new(move || {
+                    for (j, v) in chunk.iter_mut().enumerate() {
+                        *v = ci * 4 + j + 1;
+                    }
+                }) as Task<'_>
+            })
+            .collect();
+        pool.run(tasks).unwrap();
+        let want: Vec<usize> = (1..=16).collect();
+        assert_eq!(out, want);
+    }
+
+    #[test]
+    fn zero_budget_clamps_to_one_and_empty_run_is_ok() {
+        let pool = WorkerPool::new(0);
+        assert_eq!(pool.budget(), 1);
+        pool.run(Vec::new()).unwrap();
+    }
+
+    /// The budget is a *global* cap: several submitter threads (playing
+    /// busy bucket executors) flooding the pool concurrently must never
+    /// be observed running more than `budget` tasks at once.
+    #[test]
+    fn concurrency_never_exceeds_budget_across_submitters() {
+        for budget in [1usize, 2, 4] {
+            let pool = Arc::new(WorkerPool::new(budget));
+            let active = Arc::new(AtomicUsize::new(0));
+            let peak = Arc::new(AtomicUsize::new(0));
+            let submitters: Vec<_> = (0..3)
+                .map(|_| {
+                    let (pool, active, peak) = (pool.clone(), active.clone(), peak.clone());
+                    std::thread::spawn(move || {
+                        for _ in 0..4 {
+                            let tasks: Vec<Task<'_>> = (0..6)
+                                .map(|_| {
+                                    let (active, peak) = (active.clone(), peak.clone());
+                                    Box::new(move || {
+                                        let now = active.fetch_add(1, Ordering::SeqCst) + 1;
+                                        peak.fetch_max(now, Ordering::SeqCst);
+                                        std::thread::sleep(Duration::from_millis(1));
+                                        active.fetch_sub(1, Ordering::SeqCst);
+                                    }) as Task<'_>
+                                })
+                                .collect();
+                            pool.run(tasks).unwrap();
+                        }
+                    })
+                })
+                .collect();
+            for s in submitters {
+                s.join().unwrap();
+            }
+            let observed = peak.load(Ordering::SeqCst);
+            assert!(
+                (1..=budget).contains(&observed),
+                "peak concurrency {observed} escaped budget {budget}"
+            );
+            assert!(pool.high_water() <= budget, "pool watermark escaped the budget");
+        }
+    }
+
+    /// No per-batch spawn: every task runs on one of the pool's named
+    /// persistent threads, never on an ad-hoc thread or the caller.
+    #[test]
+    fn tasks_run_on_named_pool_threads() {
+        let pool = WorkerPool::new(2);
+        let names = Arc::new(Mutex::new(Vec::new()));
+        let tasks: Vec<Task<'_>> = (0..8)
+            .map(|_| {
+                let names = names.clone();
+                Box::new(move || {
+                    let name = std::thread::current().name().unwrap_or("<unnamed>").to_string();
+                    names.lock().unwrap().push(name);
+                }) as Task<'_>
+            })
+            .collect();
+        pool.run(tasks).unwrap();
+        let names = names.lock().unwrap();
+        assert_eq!(names.len(), 8);
+        for name in names.iter() {
+            assert!(name.starts_with("hrr-pool-"), "task ran on '{name}', not a pool thread");
+        }
+    }
+
+    #[test]
+    fn task_panic_is_reported_and_pool_survives() {
+        let pool = WorkerPool::new(2);
+        let tasks: Vec<Task<'_>> = vec![Box::new(|| panic!("boom")), Box::new(|| {})];
+        assert_eq!(pool.run(tasks), Err(PoolPanic));
+        // the pool is still fully operational afterwards
+        let mut ok = false;
+        pool.run(vec![Box::new(|| ok = true) as Task<'_>]).unwrap();
+        assert!(ok);
+    }
+
+    /// Dropping the pool while another thread's `run` is mid-flight must
+    /// not deadlock: workers drain queued jobs before exiting, so the
+    /// blocked submitter is always released. (The test hangs on
+    /// regression.)
+    #[test]
+    fn drop_releases_inflight_submitters() {
+        let pool = Arc::new(WorkerPool::new(2));
+        let submitter = {
+            let pool = pool.clone();
+            std::thread::spawn(move || {
+                let done = AtomicUsize::new(0);
+                let tasks: Vec<Task<'_>> = (0..8)
+                    .map(|_| {
+                        let done = &done;
+                        Box::new(move || {
+                            std::thread::sleep(Duration::from_millis(2));
+                            done.fetch_add(1, Ordering::SeqCst);
+                        }) as Task<'_>
+                    })
+                    .collect();
+                pool.run(tasks).unwrap();
+                done.load(Ordering::SeqCst)
+            })
+        };
+        std::thread::sleep(Duration::from_millis(3));
+        drop(pool); // main's handle; the submitter's clone keeps it alive until run returns
+        assert_eq!(submitter.join().unwrap(), 8, "every in-flight task still executed");
+    }
+
+    /// `shutdown` through a shared handle must stop the threads even
+    /// while other Arc clones are alive (Engine::stop semantics), stay
+    /// idempotent, and leave `run` usable (inline on the caller).
+    #[test]
+    fn explicit_shutdown_is_idempotent_and_later_runs_execute_inline() {
+        let pool = Arc::new(WorkerPool::new(2));
+        let observer = pool.clone();
+        pool.shutdown();
+        pool.shutdown(); // second call is a no-op
+        let mut ok = false;
+        observer.run(vec![Box::new(|| ok = true) as Task<'_>]).unwrap();
+        assert!(ok, "post-shutdown run must still execute (inline)");
+        assert_eq!(observer.budget(), 2, "metadata survives shutdown");
+    }
+
+    #[test]
+    fn default_budget_is_positive() {
+        assert!(default_budget() >= 1);
+    }
+}

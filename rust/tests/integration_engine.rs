@@ -241,6 +241,101 @@ fn blocking_submits_never_see_queue_full() {
     engine.stop();
 }
 
+/// Small native bucket ladder for the worker-pool tests. These build
+/// with `build_native()` explicitly (not `EngineTestEnv`): the shared
+/// pool is the *native* backend's row scheduler, so the assertions are
+/// about native engines regardless of whether artifacts are exported.
+const NATIVE_POOL_BASES: [&str; 3] = [
+    "ember_hrrformer_small_T64_B8",
+    "ember_hrrformer_small_T128_B8",
+    "ember_hrrformer_small_T256_B8",
+];
+
+/// Tentpole invariant: one persistent pool per engine, shared by every
+/// bucket executor — with budget N, several concurrently-busy buckets
+/// never run more than N native row workers between them (the pool's
+/// high-water mark is the witness), and replies stay correct.
+#[test]
+fn native_buckets_share_one_worker_pool_within_budget() {
+    let budget = 2usize;
+    let engine = Engine::builder()
+        .buckets(NATIVE_POOL_BASES)
+        // tiny batches + no deadline slack keep all three executors busy
+        .policy(BatchPolicy { max_batch: 2, max_wait: Duration::from_millis(1) })
+        .queue_depth(128)
+        .worker_budget(budget)
+        .seed(0)
+        .build_native()
+        .unwrap();
+    let pool = engine.worker_pool().expect("native engine exposes its shared pool").clone();
+    assert_eq!(pool.budget(), budget);
+
+    let tickets: Vec<_> = (0..36u64)
+        .map(|i| {
+            let len = [48usize, 96, 192][i as usize % 3]; // one per bucket
+            engine.submit_wait(example_ids(i, len)).unwrap()
+        })
+        .collect();
+    for t in tickets {
+        let reply = t.wait().unwrap();
+        assert!(reply.logits.iter().all(|v| v.is_finite()));
+    }
+
+    assert!(pool.high_water() >= 1, "the pool actually executed row work");
+    assert!(
+        pool.high_water() <= budget,
+        "{} concurrent native workers observed across buckets — budget is {budget}",
+        pool.high_water()
+    );
+    engine.stop();
+}
+
+/// A budget of 1 must still serve everything (row work serializes on
+/// the single pool thread; executors themselves stay parallel).
+#[test]
+fn native_worker_budget_of_one_still_serves_all_buckets() {
+    let engine = Engine::builder()
+        .buckets(NATIVE_POOL_BASES)
+        .policy(BatchPolicy { max_batch: 4, max_wait: Duration::from_millis(2) })
+        .queue_depth(64)
+        .worker_budget(1)
+        .seed(0)
+        .build_native()
+        .unwrap();
+    let pool = engine.worker_pool().unwrap().clone();
+    let tickets: Vec<_> = (0..12u64)
+        .map(|i| engine.submit_wait(example_ids(i, 40 + (i as usize % 3) * 60)).unwrap())
+        .collect();
+    for t in tickets {
+        t.wait().unwrap();
+    }
+    assert_eq!(pool.high_water(), 1, "budget 1 serializes native row work");
+    engine.stop();
+}
+
+/// Dropping the engine with requests still queued must drain them
+/// through the pool and then join the pool threads — no deadlock (the
+/// test hangs on regression), every ticket answered.
+#[test]
+fn engine_drop_joins_pool_threads_with_jobs_in_flight() {
+    let engine = Engine::builder()
+        .buckets(NATIVE_POOL_BASES)
+        // deadline far in the future: only the shutdown drain can flush
+        .policy(BatchPolicy { max_batch: 8, max_wait: Duration::from_secs(3600) })
+        .queue_depth(64)
+        .worker_budget(3)
+        .seed(0)
+        .build_native()
+        .unwrap();
+    let tickets: Vec<_> = (0..12u64)
+        .map(|i| engine.submit_wait(example_ids(i, 40 + (i as usize % 3) * 60)).unwrap())
+        .collect();
+    drop(engine); // drain → executors join → pool threads join
+    for t in tickets {
+        t.wait().expect("in-flight jobs must be served during the drop drain");
+    }
+}
+
 #[test]
 fn engine_drains_on_shutdown_and_rejects_after() {
     let env = EngineTestEnv::detect("engine_drains_on_shutdown_and_rejects_after");

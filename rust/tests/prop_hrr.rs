@@ -11,10 +11,15 @@
 //! * binding is bilinear, so superpositions decompose linearly;
 //! * a precomputed `FftPlan` matches the direct per-call transforms
 //!   (both radix-2 and naive-DFT lengths) within 1e-12;
-//! * `NativeSession::predict` is bit-deterministic in its worker count.
+//! * `NativeSession::predict` is bit-deterministic in its scheduler:
+//!   sequential, scoped threads at any count, and the shared worker
+//!   pool at any budget all produce identical logits.
 
-use hrrformer::hrr::{fft, ops, plan::with_plan, FftPlan, HrrConfig, NativeSession};
+use std::sync::Arc;
+
+use hrrformer::hrr::{fft, ops, plan::with_plan, FftPlan, HrrConfig, NativeSession, RowScheduler};
 use hrrformer::runtime::Tensor;
+use hrrformer::util::pool::WorkerPool;
 use hrrformer::util::prop::forall;
 use hrrformer::util::rng::Rng;
 
@@ -132,11 +137,12 @@ fn planned_fft_matches_unplanned_fft() {
     });
 }
 
-/// Multi-threaded `predict` must be *bit-identical* to single-threaded:
-/// rows are independent, each worker owns its scratch workspace, and
-/// the partitioning only changes wall-clock. One config per FFT path
-/// (radix-2 head dim and naive-DFT head dim), with PAD tails and a
-/// fully-PAD row in the batch.
+/// Every scheduler — single-threaded, scoped fan-out at any worker
+/// count, and the shared pool at any budget — must produce
+/// *bit-identical* logits: rows are independent, each worker owns its
+/// scratch workspace, and the partitioning/interleaving only changes
+/// wall-clock. One config per FFT path (radix-2 head dim and naive-DFT
+/// head dim), with PAD tails and a fully-PAD row in the batch.
 #[test]
 fn multithreaded_predict_is_bit_identical_to_single_threaded() {
     let configs = [
@@ -177,6 +183,25 @@ fn multithreaded_predict_is_bit_identical_to_single_threaded() {
                 single.as_f32().unwrap(),
                 multi.as_f32().unwrap(),
                 "{label}: logits drifted at {threads} worker threads"
+            );
+            let pool = Arc::new(WorkerPool::new(threads));
+            let pooled = sess.predict_with(&ids, &RowScheduler::Pool(pool)).unwrap();
+            assert_eq!(
+                single.as_f32().unwrap(),
+                pooled.as_f32().unwrap(),
+                "{label}: pool-scheduled logits drifted at budget {threads}"
+            );
+        }
+        // a shared pool reused across several predicts (the engine's
+        // actual usage pattern) must stay bit-identical too
+        let pool = Arc::new(WorkerPool::new(3));
+        let sched = RowScheduler::Pool(pool);
+        for _ in 0..3 {
+            let again = sess.predict_with(&ids, &sched).unwrap();
+            assert_eq!(
+                single.as_f32().unwrap(),
+                again.as_f32().unwrap(),
+                "{label}: reused-pool logits drifted"
             );
         }
     }
