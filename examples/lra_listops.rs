@@ -1,53 +1,69 @@
 //! End-to-end training driver (DESIGN.md §4, EXPERIMENTS.md §E2E):
-//! trains a Hrrformer encoder on the ListOps task — the full three-layer
-//! stack composing: rust data generation + batching + orchestration →
-//! AOT-compiled JAX train_step → Pallas HRR attention kernel — and logs
-//! the loss curve to results/e2e_listops.csv.
+//! trains a Hrrformer encoder on the ListOps task — rust data generation
+//! + batching + orchestration → a train_step — and logs the loss curve
+//! to results/e2e_listops.csv.
+//!
+//! Runs on either backend behind the same `Trainable` surface:
+//!
+//! * with AOT artifacts (`make artifacts`), the exported JAX train_step
+//!   (Pallas HRR attention kernel) executes on the PJRT CPU client;
+//! * on a fresh checkout (no artifacts), it transparently falls back to
+//!   the native pure-Rust trainer (reverse-mode autodiff + Adam,
+//!   rust/src/hrr/grad.rs) on a smaller default config — the full
+//!   train→eval→checkpoint loop with zero artifacts.
 //!
 //! ```bash
+//! cargo run --release --example lra_listops -- --steps 60   # native fallback
 //! make artifacts && cargo run --release --example lra_listops -- --steps 300
 //! ```
 
 use anyhow::Result;
-use hrrformer::coordinator::{train, TrainConfig};
+use hrrformer::coordinator::{train, train_native, TrainConfig};
 use hrrformer::runtime::{default_manifest, Runtime};
 use hrrformer::util::cli::Args;
 
 fn main() -> Result<()> {
     let args = Args::from_env();
-    let Ok(manifest) = default_manifest() else {
-        // Training runs the AOT train_step programs; the native backend
-        // (rust/src/hrr) is inference-only. Point at the demos that do
-        // run artifact-free instead of dying on a manifest error.
-        println!(
-            "lra_listops needs the AOT artifacts (`make artifacts`): training executes \
-             the exported train_step programs.\nFor artifact-free demos of the native \
-             backend, run the quickstart or serve_demo examples."
-        );
-        return Ok(());
-    };
-    let rt = Runtime::cpu()?;
+    let manifest = default_manifest().ok();
+    let artifact = manifest.is_some();
 
+    // The native CPU trainer runs real FLOPs per step, so its default
+    // config/steps are scaled down; artifact defaults match the paper
+    // bench. Both honour explicit --base/--steps overrides.
+    let (default_base, default_steps) = if artifact {
+        ("listops_hrrformer_small_T512_B8", 300)
+    } else {
+        ("listops_hrrformer_small_T128_B8", 60)
+    };
     let cfg = TrainConfig {
-        base: args.str("base", "listops_hrrformer_small_T512_B8"),
+        base: args.str("base", default_base),
         seed: args.u64("seed", 0),
-        steps: args.usize("steps", 300),
+        steps: args.usize("steps", default_steps),
         eval_every: args.usize("eval-every", 25),
         eval_batches: args.usize("eval-batches", 8),
         curve_csv: Some("results/e2e_listops.csv".into()),
         ckpt: Some("results/e2e_listops.ckpt".into()),
         verbose: true,
     };
-    let report = train(&rt, &manifest, &cfg)?;
+    let report = match &manifest {
+        Some(manifest) => {
+            let rt = Runtime::cpu()?;
+            train(&rt, manifest, &cfg)?
+        }
+        None => {
+            println!("no artifacts found — training on the native pure-Rust backend");
+            train_native(&cfg)?
+        }
+    };
 
-    println!("\n=== E2E ListOps training (Hrrformer, 2 layers, T=512) ===");
+    println!("\n=== E2E ListOps training (Hrrformer, {}) ===", cfg.base);
     println!("steps:            {}", report.steps);
     println!("parameters:       {}", report.param_scalars);
     println!("final train acc:  {:.4}", report.final_train_acc);
     println!("final test acc:   {:.4}  (chance = 0.10)", report.final_test_acc);
     println!(
-        "wall time:        {:.1}s ({:.2} examples/s)",
-        report.total_secs, report.examples_per_sec
+        "wall time:        {:.1}s ({:.2} examples/s in {:.1}s of train steps)",
+        report.total_secs, report.examples_per_sec, report.train_secs
     );
     println!("loss curve:       results/e2e_listops.csv");
     println!("checkpoint:       results/e2e_listops.ckpt");
@@ -56,13 +72,23 @@ fn main() -> Result<()> {
     for p in &report.curve {
         println!("{:>4}  {:>10.4}  {:>8.4}", p.step, p.train_loss, p.test_acc);
     }
-    // ListOps is hard: the paper's numbers need thousands of steps; in a
-    // few hundred we check the model is clearly above the 10% chance
-    // floor (real learning through all three layers).
-    anyhow::ensure!(
-        report.final_test_acc > 0.15,
-        "test accuracy {:.3} not above chance — training is broken",
-        report.final_test_acc
-    );
+    // ListOps is hard: the paper's numbers need thousands of steps. On
+    // the artifact path (300 steps at T=512) we gate on clearly-above-
+    // chance accuracy; the native fallback runs a shorter job sized for
+    // plain-CPU autodiff, so it gates on the training signal itself.
+    if artifact {
+        anyhow::ensure!(
+            report.final_test_acc > 0.15,
+            "test accuracy {:.3} not above chance — training is broken",
+            report.final_test_acc
+        );
+    } else {
+        let first = report.curve.first().map(|p| p.train_loss).unwrap_or(f32::NAN);
+        let last = report.curve.last().map(|p| p.train_loss).unwrap_or(f32::NAN);
+        anyhow::ensure!(
+            last.is_finite() && last < first,
+            "native training must reduce the loss: {first} -> {last}"
+        );
+    }
     Ok(())
 }

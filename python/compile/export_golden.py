@@ -3,7 +3,10 @@
 Writes small JSON fixtures (config + f32 parameters + token ids +
 float64 reference logits) that ``rust/tests/golden_native.rs`` replays
 through the pure-Rust forward pass (``rust/src/hrr``) and checks within
-1e-4.
+1e-4, plus a short golden *train curve* (config + params + per-step
+batches + reference losses from a hand-derived reverse-mode backward +
+Adam) that ``rust/tests/golden_train.rs`` replays through the native
+trainer (``rust/src/hrr/grad.rs``).
 
 Deliberately **numpy-only**: it mirrors the JAX reference
 (``model.py`` + ``models/hrrformer.py`` + ``kernels/ref.py``) operation
@@ -162,6 +165,353 @@ def make_params(cfg, rng):
     return [(name, arr.astype(np.float32)) for name, arr in out]
 
 
+# ---------------------------------------------------------------------------
+# Reference backward pass + Adam (float64 math, float32 state)
+#
+# Hand-derived reverse-mode gradients of ``forward`` above, written
+# per-row/per-head exactly like ``rust/src/hrr/grad.rs`` computes them
+# and validated against central differences (see the self-check in
+# ``export_train``). The optimizer is model.py's protocol verbatim:
+# softmax-CE, Adam(b1=.9, b2=.999, eps=1e-8), exponential LR decay
+# ``max(lr * decay_rate**(step/steps_per_epoch), lr_min)``. Parameters
+# and both moments are *stored* float32 and every step computes in
+# float64 from those f32 values — the same split the Rust trainer uses.
+# ---------------------------------------------------------------------------
+
+
+def layernorm_bwd(x, scale, gy):
+    mu = x.mean(axis=-1, keepdims=True)
+    var = ((x - mu) ** 2).mean(axis=-1, keepdims=True)
+    rstd = 1.0 / np.sqrt(var + 1e-6)
+    xhat = (x - mu) * rstd
+    gxhat = gy * scale
+    gx = rstd * (gxhat - gxhat.mean(axis=-1, keepdims=True)
+                 - xhat * (gxhat * xhat).mean(axis=-1, keepdims=True))
+    return gx, (gy * xhat).sum(axis=0), gy.sum(axis=0)
+
+
+def gelu_tanh_bwd(x, gy):
+    c = np.sqrt(2.0 / np.pi)
+    th = np.tanh(c * (x + 0.044715 * x ** 3))
+    dy = 0.5 * (1.0 + th) + 0.5 * x * (1.0 - th * th) * c * (1.0 + 3 * 0.044715 * x ** 2)
+    return gy * dy
+
+
+def _cbin(n, j):
+    """Hermitian multiplicity of rfft bin j for a length-n real signal."""
+    return 1.0 if (j == 0 or (n % 2 == 0 and j == n // 2)) else 2.0
+
+
+def adjoint_irfft(g, n):
+    """Adjoint of ``v = irfft(U, n)`` as a map R^{2k} -> R^n."""
+    c = np.array([_cbin(n, j) for j in range(n // 2 + 1)])
+    return np.fft.rfft(g) * (c / n)
+
+
+def adjoint_rfft(gU, n):
+    """Adjoint of ``U = rfft(x)`` (bins counted once each)."""
+    c = np.array([_cbin(n, j) for j in range(n // 2 + 1)])
+    return n * np.fft.irfft(gU / c, n)
+
+
+def forward_row_tape(cfg, p, ids):
+    """Forward one row, keeping every intermediate backward needs."""
+    t = len(ids)
+    e, heads = cfg["embed"], cfg["heads"]
+    hd = e // heads
+    mask = ids != PAD_ID
+    x = p["embed.table"][np.clip(ids, 0, cfg["vocab"] - 1)].copy()
+    if cfg["pos"] == "learned":
+        x = x + p["pos.table"][:t]
+    else:
+        x = x + sinusoid_positions(t, e)
+    tape = {"mask": mask, "blocks": []}
+    for b in range(cfg["layers"]):
+        n = f"blocks.{b}."
+        bt = {"x_in": x.copy()}
+        h1 = layernorm(x, p[n + "ln1.scale"], p[n + "ln1.bias"])
+        q, k, v = (h1 @ p[n + "mixer." + w + ".kernel"] for w in ("query", "key", "value"))
+        attn = np.zeros((t, e))
+        vhat_all = np.zeros((t, e))
+        w_all = np.zeros((heads, t))
+        betas = []
+        for h in range(heads):
+            off = h * hd
+            beta = np.zeros(hd // 2 + 1, dtype=complex)
+            for i in range(t):
+                if mask[i]:
+                    beta += np.fft.rfft(k[i, off:off + hd]) * np.fft.rfft(v[i, off:off + hd])
+            scores = np.full(t, -np.inf)
+            for i in range(t):
+                if not mask[i]:
+                    continue
+                qf = np.fft.rfft(q[i, off:off + hd])
+                inv = np.conj(qf) / (np.abs(qf) ** 2 + EPS)
+                vhat = np.fft.irfft(beta * inv, hd)
+                vhat_all[i, off:off + hd] = vhat
+                vv = v[i, off:off + hd]
+                nv, nh = np.sqrt(vv @ vv), np.sqrt(vhat @ vhat)
+                scores[i] = (vv @ vhat) / (nv * nh + EPS)
+            if mask.any():
+                ex = np.where(mask, np.exp(np.where(mask, scores - scores[mask].max(), 0.0)), 0.0)
+                w_all[h] = ex / ex.sum()
+            for i in range(t):
+                if mask[i]:
+                    attn[i, off:off + hd] = w_all[h, i] * v[i, off:off + hd]
+            betas.append(beta)
+        bt.update(h1=h1, q=q, k=k, v=v, attn=attn, vhat=vhat_all, w=w_all, beta=betas)
+        x = x + attn @ p[n + "mixer.output.kernel"]
+        bt["x_mid"] = x.copy()
+        h2 = layernorm(x, p[n + "ln2.scale"], p[n + "ln2.bias"])
+        mlp_pre = h2 @ p[n + "mlp.fc1.kernel"] + p[n + "mlp.fc1.bias"]
+        x = x + gelu_tanh(mlp_pre) @ p[n + "mlp.fc2.kernel"] + p[n + "mlp.fc2.bias"]
+        bt.update(h2=h2, mlp_pre=mlp_pre)
+        tape["blocks"].append(bt)
+    tape["x_final"] = x.copy()
+    hf = layernorm(x, p["ln_f.scale"], p["ln_f.bias"])
+    n_valid = max(int(mask.sum()), 1)
+    pooled = hf[mask].sum(axis=0) / n_valid if mask.any() else np.zeros(e)
+    head_pre = pooled @ p["head1.kernel"] + p["head1.bias"]
+    logits = np.maximum(head_pre, 0.0) @ p["head2.kernel"] + p["head2.bias"]
+    tape.update(n_valid=n_valid, pooled=pooled, head_pre=head_pre, logits=logits)
+    return tape
+
+
+def softmax_ce(logits, label):
+    m = logits.max()
+    z = np.exp(logits - m)
+    nll = m + np.log(z.sum()) - logits[label]
+    g = z / z.sum()
+    g[label] -= 1.0
+    return nll, g
+
+
+def attention_bwd(cfg, bt, mask, head, g_attn, gq, gk, gv):
+    """Backward through one head of HRR attention (Eqs. 1-4)."""
+    t = g_attn.shape[0]
+    hd = cfg["embed"] // cfg["heads"]
+    off = head * hd
+    w, beta = bt["w"][head], bt["beta"][head]
+    q, k, v, vhat = bt["q"], bt["k"], bt["v"], bt["vhat"]
+    # Eq. 4: out_i = w_i * v_i → gw, direct v term, then softmax backward
+    gw = np.zeros(t)
+    for i in range(t):
+        if mask[i]:
+            gw[i] = g_attn[i, off:off + hd] @ v[i, off:off + hd]
+            gv[i, off:off + hd] += w[i] * g_attn[i, off:off + hd]
+    S = float((w * gw)[mask].sum())
+    gs = np.where(mask, w * (gw - S), 0.0)
+    gbeta = np.zeros(hd // 2 + 1, dtype=complex)
+    for i in range(t):
+        if not mask[i]:
+            continue
+        # Eq. 3 cosine backward
+        vv, vh = v[i, off:off + hd], vhat[i, off:off + hd]
+        num = float(vv @ vh)
+        a, b = np.sqrt(vv @ vv), np.sqrt(vh @ vh)
+        den = a * b + EPS
+        gnum = gs[i] / den
+        gden = -gs[i] * num / (den * den)
+        gv[i, off:off + hd] += gnum * vh + (gden * b / a * vv if a > 0 else 0.0)
+        gvh = gnum * vv + (gden * a / b * vh if b > 0 else 0.0)
+        # Eq. 2 backward: vhat = irfft(beta · conj(Qf)/(|Qf|²+ε))
+        gU = adjoint_irfft(gvh, hd)
+        qf = np.fft.rfft(q[i, off:off + hd])
+        x, y = qf.real, qf.imag
+        d2 = x * x + y * y + EPS
+        gbeta += gU * np.conj((x - 1j * y) / d2)
+        dinv_dx = (d2 - 2 * x * x + 2j * x * y) / (d2 * d2)
+        dinv_dy = (-2 * x * y + 1j * (2 * y * y - d2)) / (d2 * d2)
+        gqf_r = gU.real * (beta * dinv_dx).real + gU.imag * (beta * dinv_dx).imag
+        gqf_i = gU.real * (beta * dinv_dy).real + gU.imag * (beta * dinv_dy).imag
+        gq[i, off:off + hd] += adjoint_rfft(gqf_r + 1j * gqf_i, hd)
+    # Eq. 1 backward: beta = Σ Kf_i · Vf_i over unmasked positions
+    for i in range(t):
+        if mask[i]:
+            kf = np.fft.rfft(k[i, off:off + hd])
+            vf = np.fft.rfft(v[i, off:off + hd])
+            gk[i, off:off + hd] += adjoint_rfft(gbeta * np.conj(vf), hd)
+            gv[i, off:off + hd] += adjoint_rfft(gbeta * np.conj(kf), hd)
+
+
+def backward_row(cfg, p, ids, tape, g_logits):
+    t = len(ids)
+    e, heads = cfg["embed"], cfg["heads"]
+    mask = tape["mask"]
+    grads = {name: np.zeros_like(arr) for name, arr in p.items()}
+    head_act = np.maximum(tape["head_pre"], 0.0)
+    grads["head2.bias"] += g_logits
+    grads["head2.kernel"] += np.outer(head_act, g_logits)
+    g_head_pre = (p["head2.kernel"] @ g_logits) * (tape["head_pre"] > 0.0)
+    grads["head1.bias"] += g_head_pre
+    grads["head1.kernel"] += np.outer(tape["pooled"], g_head_pre)
+    g_pooled = p["head1.kernel"] @ g_head_pre
+    g_hf = np.where(mask[:, None], g_pooled[None, :] / tape["n_valid"], 0.0)
+    gx, gs_, gb_ = layernorm_bwd(tape["x_final"], p["ln_f.scale"], g_hf)
+    grads["ln_f.scale"] += gs_
+    grads["ln_f.bias"] += gb_
+    for b in reversed(range(cfg["layers"])):
+        n = f"blocks.{b}."
+        bt = tape["blocks"][b]
+        mlp_act = gelu_tanh(bt["mlp_pre"])
+        grads[n + "mlp.fc2.bias"] += gx.sum(axis=0)
+        grads[n + "mlp.fc2.kernel"] += mlp_act.T @ gx
+        g_mlp_pre = gelu_tanh_bwd(bt["mlp_pre"], gx @ p[n + "mlp.fc2.kernel"].T)
+        grads[n + "mlp.fc1.bias"] += g_mlp_pre.sum(axis=0)
+        grads[n + "mlp.fc1.kernel"] += bt["h2"].T @ g_mlp_pre
+        gx2, gs_, gb_ = layernorm_bwd(bt["x_mid"], p[n + "ln2.scale"],
+                                      g_mlp_pre @ p[n + "mlp.fc1.kernel"].T)
+        grads[n + "ln2.scale"] += gs_
+        grads[n + "ln2.bias"] += gb_
+        gx = gx + gx2  # grad w.r.t. x_mid (residual + LN2 path)
+        grads[n + "mixer.output.kernel"] += bt["attn"].T @ gx
+        g_attn = gx @ p[n + "mixer.output.kernel"].T
+        gq = np.zeros((t, e))
+        gk = np.zeros((t, e))
+        gv = np.zeros((t, e))
+        for h in range(heads):
+            attention_bwd(cfg, bt, mask, h, g_attn, gq, gk, gv)
+        grads[n + "mixer.query.kernel"] += bt["h1"].T @ gq
+        grads[n + "mixer.key.kernel"] += bt["h1"].T @ gk
+        grads[n + "mixer.value.kernel"] += bt["h1"].T @ gv
+        g_h1 = (gq @ p[n + "mixer.query.kernel"].T
+                + gk @ p[n + "mixer.key.kernel"].T
+                + gv @ p[n + "mixer.value.kernel"].T)
+        gx1, gs_, gb_ = layernorm_bwd(bt["x_in"], p[n + "ln1.scale"], g_h1)
+        grads[n + "ln1.scale"] += gs_
+        grads[n + "ln1.bias"] += gb_
+        gx = gx + gx1
+    ids_c = np.clip(ids, 0, cfg["vocab"] - 1)
+    for i in range(t):
+        grads["embed.table"][ids_c[i]] += gx[i]
+    if cfg["pos"] == "learned":
+        grads["pos.table"][:t] += gx
+    return grads
+
+
+def loss_and_grads(cfg, params32, ids_batch, labels):
+    """Mean softmax-CE loss/acc + mean gradients over a (B, T) batch."""
+    p = {name: arr.astype(np.float64) for name, arr in params32}
+    B = ids_batch.shape[0]
+    total = {name: np.zeros_like(arr) for name, arr in p.items()}
+    loss, correct = 0.0, 0
+    for r in range(B):
+        tape = forward_row_tape(cfg, p, ids_batch[r])
+        nll, g_logits = softmax_ce(tape["logits"], labels[r])
+        loss += nll
+        correct += int(np.argmax(tape["logits"]) == labels[r])
+        g = backward_row(cfg, p, ids_batch[r], tape, g_logits)
+        for name in total:
+            total[name] += g[name]
+    return loss / B, correct / B, {n: g / B for n, g in total.items()}
+
+
+def train_reference(cfg, hyper, params, batches):
+    """Run the full training protocol; returns per-step (loss, acc)."""
+    params = [(n, a.copy()) for n, a in params]
+    m = {n: np.zeros_like(a, dtype=np.float32) for n, a in params}
+    v = {n: np.zeros_like(a, dtype=np.float32) for n, a in params}
+    curve = []
+    for step, (ids, labels) in enumerate(batches):
+        loss, acc, grads = loss_and_grads(cfg, params, ids, labels)
+        curve.append((loss, acc))
+        lr = max(hyper["lr"] * hyper["decay_rate"] ** (step / hyper["steps_per_epoch"]),
+                 hyper["lr_min"])
+        t = step + 1.0
+        out = []
+        for name, p32 in params:
+            g = grads[name]
+            m64 = 0.9 * m[name].astype(np.float64) + 0.1 * g
+            v64 = 0.999 * v[name].astype(np.float64) + 0.001 * g * g
+            mhat = m64 / (1.0 - 0.9 ** t)
+            vhat = v64 / (1.0 - 0.999 ** t)
+            p64 = p32.astype(np.float64) - lr * mhat / (np.sqrt(vhat) + 1e-8)
+            m[name] = m64.astype(np.float32)
+            v[name] = v64.astype(np.float32)
+            out.append((name, p64.astype(np.float32)))
+        params = out
+    return curve, params
+
+
+def export_train(name, cfg, hyper, seed, steps):
+    rng = np.random.default_rng(seed)
+    params = make_params(cfg, rng)
+    b, t = cfg["batch"], cfg["seq_len"]
+
+    # self-check: the hand-derived backward must match central
+    # differences before we pin a fixture on it
+    ids0 = rng.integers(1, cfg["vocab"], size=(b, t)).astype(np.int64)
+    ids0[-1, -t // 3:] = PAD_ID
+    labels0 = rng.integers(0, cfg["classes"], size=b)
+    _, _, grads = loss_and_grads(cfg, params, ids0, labels0)
+    h = 1e-5
+    for pname, arr32 in params:
+        flat32 = arr32.reshape(-1)
+        gflat = grads[pname].reshape(-1)
+        for j in rng.choice(len(flat32), size=min(4, len(flat32)), replace=False):
+            old = flat32[j]
+            def loss_at(val):
+                flat32[j] = val
+                l, _, _ = loss_and_grads(cfg, params, ids0, labels0)
+                return l
+            # use the *realized* f32 perturbation as the divisor — the
+            # state is float32, so old±h rounds
+            plus = np.float32(old + h)
+            minus = np.float32(old - h)
+            num = (loss_at(plus) - loss_at(minus)) / (float(plus) - float(minus))
+            flat32[j] = old
+            err = abs(num - gflat[j]) / max(1e-8, abs(num), abs(gflat[j]))
+            assert err < 1e-4 or (abs(num) < 1e-9 and abs(gflat[j]) < 1e-9), (
+                f"backward self-check failed at {pname}[{j}]: "
+                f"analytic {gflat[j]:.8g} vs numeric {num:.8g}")
+
+    # two alternating fixed batches: learnable (the trainer overfits
+    # them), so the reference curve also pins that loss *decreases*
+    pool = []
+    for _ in range(2):
+        ids = rng.integers(1, cfg["vocab"], size=(b, t)).astype(np.int64)
+        ids[-1, t - t // 4:] = PAD_ID  # keep the mask in play every step
+        labels = rng.integers(0, cfg["classes"], size=b)
+        pool.append((ids, labels))
+    batches = [pool[s % len(pool)] for s in range(steps)]
+    # reference *gradients* at step 0, so the rust side can pin its
+    # analytic backward per parameter tensor (not just through losses)
+    _, _, grads0 = loss_and_grads(cfg, params, batches[0][0], batches[0][1])
+    curve, _ = train_reference(cfg, hyper, params, batches)
+    assert curve[-1][0] < curve[0][0], "reference train curve must decrease"
+
+    doc = {
+        "name": name,
+        "seed": seed,
+        "config": cfg,
+        "hyper": hyper,
+        "params": [
+            {"name": pname, "shape": list(arr.shape),
+             "data": [float(x) for x in arr.reshape(-1)]}
+            for pname, arr in params
+        ],
+        "steps": [
+            {
+                "ids": ids.tolist(),
+                "labels": [int(l) for l in labels],
+                "loss": float(curve[s][0]),
+                "acc": float(curve[s][1]),
+            }
+            for s, (ids, labels) in enumerate(batches)
+        ],
+        "step0_grads": [
+            {"name": pname, "data": [float(x) for x in grads0[pname].reshape(-1)]}
+            for pname, _ in params
+        ],
+        "tolerance": 5e-3,
+    }
+    os.makedirs(OUT_DIR, exist_ok=True)
+    path = os.path.join(OUT_DIR, f"{name}.json")
+    with open(path, "w") as f:
+        json.dump(doc, f)
+    print(f"wrote {path}: {steps} train steps, loss {curve[0][0]:.4f} -> {curve[-1][0]:.4f}")
+
+
 def export(name, cfg, seed):
     rng = np.random.default_rng(seed)
     params = make_params(cfg, rng)
@@ -229,6 +579,27 @@ def main():
             "pos": "learned",
         },
         seed=777,
+    )
+    # short golden train curve: pow2 head dim, learned positions (the
+    # pos-table gradient path), LR decay fast enough to move within the
+    # fixture's steps
+    export_train(
+        "golden_hrr_train",
+        {
+            "task": "golden",
+            "vocab": 11,
+            "seq_len": 10,
+            "batch": 2,
+            "embed": 16,
+            "mlp_dim": 24,
+            "heads": 2,
+            "layers": 2,
+            "classes": 3,
+            "pos": "learned",
+        },
+        {"lr": 1e-3, "lr_min": 1e-5, "decay_rate": 0.9, "steps_per_epoch": 4},
+        seed=20230705,
+        steps=12,
     )
 
 

@@ -23,4 +23,4 @@ pub mod trainer;
 
 pub use batcher::{BatchPolicy, BatchQueue};
 pub use router::{Bucket, Route, Router};
-pub use trainer::{train, TrainConfig, TrainReport};
+pub use trainer::{train, train_native, train_session, TrainConfig, TrainReport};

@@ -1,17 +1,30 @@
 //! Training orchestrator: epochs, data streams, eval, checkpointing and
-//! learning-curve logging around a `TrainSession`.
+//! learning-curve logging around any [`Trainable`] session.
 //!
-//! Mirrors the paper's protocol: exponential LR decay is inside the
-//! exported train_step; the trainer owns batching, the train/test
-//! streams, and the Fig 8-style per-epoch curve.
+//! Mirrors the paper's protocol (softmax-CE + Adam + exponential LR
+//! decay, all inside the session's train step); the trainer owns
+//! batching, the train/test streams, and the Fig 8-style per-epoch
+//! curve. It is backend-neutral: [`train`] drives the exported
+//! `train_step` programs on PJRT, [`train_native`] drives the pure-Rust
+//! reverse-mode session (`hrr::NativeTrainSession`) with **zero**
+//! artifacts, and both delegate to the same [`train_session`] loop.
+//!
+//! Timing is split: `train_secs` accumulates optimizer-step time only,
+//! and throughput derives from it — eval batches, CSV/stderr logging and
+//! checkpoint saves count toward `total_secs` but can no longer inflate
+//! `examples_per_sec`. Eval metrics may be absent (timing-only artifact
+//! exports) or non-finite; the report carries the last *finite* eval
+//! point and the CSV writes empty cells for non-finite values (the CSV
+//! mirror of `util::json`'s non-finite → null rule).
 
 use std::path::PathBuf;
 
 use anyhow::{Context, Result};
 
 use crate::data::{batch::BatchStream, by_task, Split};
-use crate::metrics::CsvLogger;
-use crate::model::{Session, TrainSession};
+use crate::hrr::NativeTrainSession;
+use crate::metrics::{finite_cell, CsvLogger};
+use crate::model::{Session, Trainable, TrainSession};
 use crate::runtime::{Manifest, Runtime};
 use crate::util::timed;
 
@@ -21,6 +34,8 @@ pub struct TrainConfig {
     pub base: String,
     pub seed: u64,
     pub steps: usize,
+    /// Evaluate every N steps; **0 = final eval only** (there is always
+    /// an eval point at the last step either way).
     pub eval_every: usize,
     pub eval_batches: usize,
     /// Where to write the learning-curve CSV (None = no file).
@@ -54,14 +69,29 @@ pub struct EpochPoint {
     pub secs: f64,
 }
 
+impl EpochPoint {
+    /// Whether this point carries real (finite) eval metrics.
+    fn has_finite_eval(&self) -> bool {
+        self.test_loss.is_finite() && self.test_acc.is_finite()
+    }
+}
+
 #[derive(Debug, Clone, Default)]
 pub struct TrainReport {
     pub base: String,
     pub curve: Vec<EpochPoint>,
     pub final_train_acc: f32,
+    /// Test accuracy at the last eval point with *finite* metrics (NaN
+    /// only when no eval ever produced one — e.g. timing-only
+    /// artifacts; `util::json` serializes that as null downstream).
     pub final_test_acc: f32,
+    /// Wall clock of the whole job: train steps, eval, logging, ckpt.
     pub total_secs: f64,
+    /// Time spent inside train steps only — the throughput basis.
+    pub train_secs: f64,
     pub steps: usize,
+    /// `steps · batch / train_secs`: optimizer throughput, not job
+    /// throughput — eval and logging no longer inflate it.
     pub examples_per_sec: f64,
     pub param_scalars: usize,
 }
@@ -73,26 +103,51 @@ impl TrainReport {
     }
 }
 
-/// Run a full training job described by `cfg`.
+/// Run a full training job on the artifact backend: the exported
+/// `<base>_train_step` / `<base>_eval_step` programs on PJRT.
 pub fn train(rt: &Runtime, manifest: &Manifest, cfg: &TrainConfig) -> Result<TrainReport> {
     let spec = manifest.get(&format!("{}_train_step", cfg.base))?;
-    let ds = by_task(&spec.task, spec.seq_len)
-        .with_context(|| format!("no dataset for task '{}'", spec.task))?;
+    let task = spec.task.clone();
+    let vocab = spec.vocab;
+    let mut sess = TrainSession::create(rt, manifest, &cfg.base, cfg.seed as u32)?;
+    train_session(&mut sess, &task, vocab, cfg)
+}
+
+/// Run a full training job on the native backend: pure-Rust reverse-mode
+/// autodiff + Adam, no artifacts, no PJRT (`--backend native` on the
+/// CLI). The base string resolves against the native preset tables.
+pub fn train_native(cfg: &TrainConfig) -> Result<TrainReport> {
+    let mut sess = NativeTrainSession::create(&cfg.base, cfg.seed as u32)?;
+    let task = sess.cfg().task.clone();
+    let vocab = sess.cfg().vocab;
+    train_session(&mut sess, &task, vocab, cfg)
+}
+
+/// The backend-neutral training loop: batches from the task's synthetic
+/// stream, periodic eval, curve CSV, checkpoint. `task`/`vocab` describe
+/// the dataset (the session itself only knows shapes).
+pub fn train_session(
+    sess: &mut dyn Trainable,
+    task: &str,
+    vocab: usize,
+    cfg: &TrainConfig,
+) -> Result<TrainReport> {
+    let (batch_size, seq_len) = (sess.batch(), sess.seq_len());
+    let ds = by_task(task, seq_len).with_context(|| format!("no dataset for task '{task}'"))?;
     anyhow::ensure!(
-        ds.vocab() <= spec.vocab,
+        ds.vocab() <= vocab,
         "dataset vocab {} exceeds model vocab {}",
         ds.vocab(),
-        spec.vocab
+        vocab
     );
     let mut train_stream =
-        BatchStream::new(ds.as_ref(), Split::Train, cfg.seed, spec.batch, spec.seq_len);
+        BatchStream::new(ds.as_ref(), Split::Train, cfg.seed, batch_size, seq_len);
 
-    let mut sess = TrainSession::create(rt, manifest, &cfg.base, cfg.seed as u32)?;
     let param_scalars = sess.param_scalars();
     if cfg.verbose {
         eprintln!(
             "[train] {} — {} params, B={} T={} steps={}",
-            cfg.base, param_scalars, spec.batch, spec.seq_len, cfg.steps
+            cfg.base, param_scalars, batch_size, seq_len, cfg.steps
         );
     }
 
@@ -104,24 +159,31 @@ pub fn train(rt: &Runtime, manifest: &Manifest, cfg: &TrainConfig) -> Result<Tra
         None => None,
     };
 
-    let mut curve = Vec::new();
+    let mut curve: Vec<EpochPoint> = Vec::new();
     let mut window_loss = 0.0f32;
     let mut window_acc = 0.0f32;
     let mut window_n = 0usize;
+    let mut train_secs = 0.0f64;
     let t_start = std::time::Instant::now();
 
     for step in 0..cfg.steps {
         let batch = train_stream.next_batch();
-        let stats = sess.train_step(&batch.ids, &batch.labels)?;
+        // only the optimizer step counts toward throughput
+        let (stats, dt) = timed(|| sess.train_step(&batch.ids, &batch.labels));
+        let stats = stats?;
+        train_secs += dt;
         window_loss += stats.loss;
         window_acc += stats.acc;
         window_n += 1;
 
-        let at_eval = (step + 1) % cfg.eval_every == 0 || step + 1 == cfg.steps;
+        // eval_every = 0 means "final eval only" — and the final step
+        // always gets an eval point (regression: `% 0` used to panic)
+        let at_eval =
+            step + 1 == cfg.steps || (cfg.eval_every != 0 && (step + 1) % cfg.eval_every == 0);
         if at_eval {
             // timing-only artifacts have no eval_step — skip test metrics
             let (test_loss, test_acc) = if sess.has_eval() && cfg.eval_batches > 0 {
-                evaluate(&sess, ds.as_ref(), cfg.seed, cfg.eval_batches, spec.batch, spec.seq_len)?
+                evaluate(sess, ds.as_ref(), cfg.seed, cfg.eval_batches, batch_size, seq_len)?
             } else {
                 (f32::NAN, f32::NAN)
             };
@@ -141,12 +203,13 @@ pub fn train(rt: &Runtime, manifest: &Manifest, cfg: &TrainConfig) -> Result<Tra
                 );
             }
             if let Some(csv) = csv.as_mut() {
+                // non-finite metrics become empty cells, never "NaN"
                 csv.log(&[
                     point.step.to_string(),
-                    format!("{:.6}", point.train_loss),
-                    format!("{:.4}", point.train_acc),
-                    format!("{:.6}", point.test_loss),
-                    format!("{:.4}", point.test_acc),
+                    finite_cell(point.train_loss as f64, 6),
+                    finite_cell(point.train_acc as f64, 4),
+                    finite_cell(point.test_loss as f64, 6),
+                    finite_cell(point.test_acc as f64, 4),
                     format!("{:.2}", point.secs),
                 ])?;
             }
@@ -169,21 +232,26 @@ pub fn train(rt: &Runtime, manifest: &Manifest, cfg: &TrainConfig) -> Result<Tra
 
     let total_secs = t_start.elapsed().as_secs_f64();
     let last = curve.last().cloned().unwrap_or_default();
+    // the headline test metric comes from the last *finite* eval point,
+    // so timing-only runs or a transient NaN eval cannot poison the
+    // report (and the bench JSON built from it)
+    let last_finite = curve.iter().rev().find(|p| p.has_finite_eval());
     Ok(TrainReport {
         base: cfg.base.clone(),
         final_train_acc: last.train_acc,
-        final_test_acc: last.test_acc,
+        final_test_acc: last_finite.map_or(f32::NAN, |p| p.test_acc),
         curve,
         total_secs,
+        train_secs,
         steps: cfg.steps,
-        examples_per_sec: (cfg.steps * spec.batch) as f64 / total_secs,
+        examples_per_sec: (cfg.steps * batch_size) as f64 / train_secs.max(1e-9),
         param_scalars,
     })
 }
 
 /// Average eval loss/acc over `n_batches` deterministic test batches.
 pub fn evaluate(
-    sess: &TrainSession,
+    sess: &dyn Trainable,
     ds: &dyn crate::data::Dataset,
     seed: u64,
     n_batches: usize,
@@ -214,4 +282,158 @@ pub fn time_one_step(rt: &Runtime, manifest: &Manifest, base: &str, seed: u64) -
     let (res, secs) = timed(|| sess.train_step(&b.ids, &b.labels));
     res?;
     Ok(secs)
+}
+
+#[cfg(test)]
+mod tests {
+    use std::sync::atomic::{AtomicU32, Ordering};
+    use std::time::Duration;
+
+    use super::*;
+    use crate::model::{ParamStore, Session, StepStats};
+    use crate::runtime::Tensor;
+
+    /// A fake Trainable with controllable timing and eval behavior, so
+    /// the loop's accounting is testable without any backend.
+    struct StubSession {
+        params: ParamStore,
+        step: u32,
+        train_sleep: Duration,
+        eval_sleep: Duration,
+        has_eval: bool,
+        /// evals return finite metrics for the first `finite_evals`
+        /// calls, NaN afterwards
+        finite_evals: u32,
+        evals_seen: AtomicU32,
+    }
+
+    impl StubSession {
+        fn new() -> StubSession {
+            StubSession {
+                params: ParamStore::default(),
+                step: 0,
+                train_sleep: Duration::from_millis(2),
+                eval_sleep: Duration::from_millis(10),
+                has_eval: true,
+                finite_evals: u32::MAX,
+                evals_seen: AtomicU32::new(0),
+            }
+        }
+    }
+
+    impl Session for StubSession {
+        fn params(&self) -> &ParamStore {
+            &self.params
+        }
+
+        fn batch(&self) -> usize {
+            2
+        }
+
+        fn seq_len(&self) -> usize {
+            8
+        }
+    }
+
+    impl Trainable for StubSession {
+        fn train_step(&mut self, _ids: &Tensor, _labels: &Tensor) -> Result<StepStats> {
+            std::thread::sleep(self.train_sleep);
+            self.step += 1;
+            Ok(StepStats { step: self.step, loss: 1.0 / self.step as f32, acc: 0.5 })
+        }
+
+        fn eval_step(&self, _ids: &Tensor, _labels: &Tensor) -> Result<StepStats> {
+            std::thread::sleep(self.eval_sleep);
+            let n = self.evals_seen.fetch_add(1, Ordering::Relaxed);
+            let (loss, acc) = if n < self.finite_evals { (0.9, 0.6) } else { (f32::NAN, f32::NAN) };
+            Ok(StepStats { step: self.step, loss, acc })
+        }
+
+        fn has_eval(&self) -> bool {
+            self.has_eval
+        }
+
+        fn save(&self, _path: &std::path::Path) -> Result<()> {
+            Ok(())
+        }
+
+        fn restore(&mut self, _path: &std::path::Path) -> Result<()> {
+            Ok(())
+        }
+    }
+
+    fn cfg(steps: usize, eval_every: usize) -> TrainConfig {
+        TrainConfig {
+            base: "stub".into(),
+            steps,
+            eval_every,
+            eval_batches: 1,
+            verbose: false,
+            ..TrainConfig::default()
+        }
+    }
+
+    #[test]
+    fn eval_every_zero_means_final_eval_only() {
+        // regression: `(step + 1) % 0` used to panic with a division by
+        // zero the moment --eval-every 0 reached the loop
+        let mut sess = StubSession::new();
+        let report = train_session(&mut sess, "ember", 300, &cfg(5, 0)).unwrap();
+        assert_eq!(report.curve.len(), 1, "exactly one (final) eval point");
+        assert_eq!(report.curve[0].step, 5);
+        assert!(report.final_test_acc.is_finite());
+    }
+
+    #[test]
+    fn examples_per_sec_counts_train_step_time_only() {
+        let mut sess = StubSession::new();
+        // eval after every step, expensive evals: job time >> train time
+        let report = train_session(&mut sess, "ember", 300, &cfg(4, 1)).unwrap();
+        assert!(report.train_secs > 0.0);
+        assert!(
+            report.total_secs > report.train_secs,
+            "eval/log time must not count as train time"
+        );
+        let want = (4 * 2) as f64 / report.train_secs;
+        assert!(
+            (report.examples_per_sec - want).abs() < 1e-9,
+            "throughput must derive from train_secs: {} vs {}",
+            report.examples_per_sec,
+            want
+        );
+        // the old accounting (total_secs) would have reported less
+        assert!(report.examples_per_sec > (4 * 2) as f64 / report.total_secs);
+    }
+
+    #[test]
+    fn no_eval_backend_reports_nan_but_csv_gets_empty_cells() {
+        let mut sess = StubSession::new();
+        sess.has_eval = false;
+        let dir = std::env::temp_dir().join("hrrformer_trainer_nan_csv");
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("curve.csv");
+        let _ = std::fs::remove_file(&path);
+        let mut c = cfg(4, 2);
+        c.curve_csv = Some(path.clone());
+        let report = train_session(&mut sess, "ember", 300, &c).unwrap();
+        assert!(report.final_test_acc.is_nan(), "no eval ever ran");
+        assert!(report.overfit().is_nan());
+        let content = std::fs::read_to_string(&path).unwrap();
+        assert!(!content.contains("NaN"), "no textual NaN in the CSV: {content}");
+        for line in content.lines().skip(1) {
+            assert_eq!(line.split(',').count(), 6, "empty cells keep the arity: {line}");
+            assert!(line.contains(",,"), "test metrics must be empty cells: {line}");
+        }
+    }
+
+    #[test]
+    fn final_test_acc_is_the_last_finite_eval_point() {
+        let mut sess = StubSession::new();
+        sess.finite_evals = 1; // first eval finite, later ones NaN
+        let report = train_session(&mut sess, "ember", 300, &cfg(4, 2)).unwrap();
+        assert_eq!(report.curve.len(), 2);
+        assert!(report.curve[1].test_acc.is_nan(), "late evals are NaN in the curve");
+        assert_eq!(report.final_test_acc, 0.6, "report falls back to the last finite point");
+        assert!((report.overfit() - (0.5 - 0.6)).abs() < 1e-6);
+    }
 }

@@ -108,6 +108,17 @@ impl HrrConfig {
     }
 }
 
+/// Per-task exponential LR decay rate — the `decay_rate` column of
+/// `configs.py` (the `small` presets inherit the paper rows' value).
+/// Unknown tasks (e.g. golden fixtures) get the most common 0.90.
+pub fn task_decay_rate(task: &str) -> f64 {
+    match task {
+        "image" | "pathfinder" | "pathx" => 0.95,
+        "ember" => 0.85,
+        _ => 0.90, // listops / text / retrieval / default
+    }
+}
+
 /// One (task, preset) row — vocab/dims/heads/layers/classes/positions.
 struct PresetRow {
     vocab: usize,

@@ -1,0 +1,1722 @@
+//! Reverse-mode autodiff through the native Hrrformer forward pass,
+//! plus the Adam optimizer — artifact-free training ([`NativeTrainSession`]).
+//!
+//! The forward pass here ([`forward_row_tape`]) is the same arithmetic as
+//! `model::forward_row` (same helpers, same order, same f32-buffers /
+//! f64-accumulators split — logits are bit-identical, pinned by a test),
+//! except it keeps every intermediate backward needs on a per-row
+//! [`Tape`]. [`backward_row`] then walks the tape in reverse:
+//!
+//! * softmax cross-entropy (model.py `loss_fn`: mean NLL over the batch);
+//! * dense / bias / ReLU head, masked mean-pool, LayerNorm (recomputed
+//!   μ/σ from the taped input), tanh-GELU;
+//! * the frequency-domain HRR attention (paper Eqs. 1-4) via FFT
+//!   *adjoints*: for real-signal transforms with Hermitian-packed bins,
+//!   the adjoint of `irfft` is `(c_j / n) · rfft(·)` and the adjoint of
+//!   `rfft` is `n · irfft(· / c_j)`, where `c_j` is the bin multiplicity
+//!   (1 for DC and — even n — Nyquist, else 2). Both run on the same
+//!   [`FftPlan`]-backed scratch the forward uses. The stabilized exact
+//!   inverse `conj(Q)/(|Q|²+ε)` and the cosine score are differentiated
+//!   per bin / per element;
+//! * embeddings scatter-add; learned positions accumulate directly;
+//!   fixed sinusoids have no parameters.
+//!
+//! The hand-derived math is mirrored one-to-one by
+//! `python/compile/export_golden.py::backward_row`, which self-checks
+//! against central differences before exporting the golden train-curve
+//! fixture (`rust/tests/fixtures/golden_hrr_train.json`) that
+//! `golden_train.rs` replays through this module.
+//!
+//! # Determinism contract
+//!
+//! Batch rows are independent, so gradient work fans out through the
+//! same [`RowScheduler`] seam `NativeSession::predict` uses. Every row
+//! writes its gradients into its **own** f64 buffer; the batch gradient
+//! is then reduced on the calling thread in ascending row order, in f64.
+//! The reduction order never depends on which worker computed which row,
+//! so gradients (and therefore the whole training trajectory) are
+//! **bit-identical** across sequential, scoped and pool schedulers at
+//! any worker budget — the same contract PR 3/4 established for predict.
+//! The price is one parameter-sized f64 buffer per row in flight
+//! (~`8·B·|θ|` bytes), which is what makes the fixed reduction order
+//! possible at all.
+//!
+//! # Optimizer
+//!
+//! Exactly the exported program's protocol (model.py `adam_update` /
+//! `lr_schedule`): Adam with β₁=0.9, β₂=0.999, ε=1e-8, bias correction,
+//! and exponential LR decay `max(lr · decay^(step/steps_per_epoch),
+//! lr_min)` with the per-task decay rate from `configs.py`. Parameters
+//! and both moments are stored f32; each update computes in f64 from the
+//! stored f32 values and rounds once on the way back.
+
+use std::path::Path;
+
+use anyhow::{Context, Result};
+
+use crate::hrr::config::{task_decay_rate, HrrConfig};
+use crate::hrr::fft::num_bins;
+use crate::hrr::model::{
+    add_bias, forward_row, gelu, init_native_params, layernorm_into, matmul_into, param_specs,
+    sinusoid, validate_native_params, FftScratch, ResolvedParams, Workspace,
+};
+use crate::hrr::ops::EPS;
+use crate::hrr::RowScheduler;
+use crate::model::params::ParamStore;
+use crate::model::session::{Session, StepStats, Trainable};
+use crate::runtime::tensor::Tensor;
+use crate::util::pool::Task as PoolTask;
+
+use super::PAD_ID;
+
+/// Adam's moment decays and ε — fixed, like the exported train_step
+/// (model.py `adam_update` defaults).
+const B1: f64 = 0.9;
+const B2: f64 = 0.999;
+const ADAM_EPS: f64 = 1e-8;
+
+const EPS64: f64 = EPS as f64;
+
+// ---------------------------------------------------------------------------
+// Hyper-parameters (the exported program's training protocol)
+// ---------------------------------------------------------------------------
+
+/// Learning-rate schedule of the paper's protocol: exponential decay per
+/// epoch from `lr` down to `lr_min` (model.py `lr_schedule`).
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct TrainHyper {
+    pub lr: f64,
+    pub lr_min: f64,
+    /// Per-epoch decay factor (task-dependent in configs.py).
+    pub decay_rate: f64,
+    /// Steps per "epoch" for the schedule (configs.py: 100).
+    pub steps_per_epoch: f64,
+}
+
+impl Default for TrainHyper {
+    fn default() -> Self {
+        TrainHyper { lr: 1e-3, lr_min: 1e-5, decay_rate: 0.90, steps_per_epoch: 100.0 }
+    }
+}
+
+impl TrainHyper {
+    /// The schedule for one task, with the per-task decay rate from the
+    /// preset tables.
+    pub fn for_task(task: &str) -> TrainHyper {
+        TrainHyper { decay_rate: task_decay_rate(task), ..TrainHyper::default() }
+    }
+
+    /// Learning rate at (0-based) optimizer step `step`.
+    pub fn lr_at(&self, step: u32) -> f64 {
+        (self.lr * self.decay_rate.powf(step as f64 / self.steps_per_epoch)).max(self.lr_min)
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Per-row tape + gradient scratch
+// ---------------------------------------------------------------------------
+
+/// Everything backward needs from one encoder block's forward pass.
+/// f32 buffers hold exactly what the forward computed; the attention
+/// internals that would be expensive or lossy to recompute (unbound
+/// v̂, softmax weights, the β superposition spectrum) are kept f64.
+struct BlockTape {
+    x_in: Vec<f32>,    // (t, e) residual stream entering the block
+    h1: Vec<f32>,      // (t, e) ln1 output
+    q: Vec<f32>,       // (t, e)
+    k: Vec<f32>,       // (t, e)
+    v: Vec<f32>,       // (t, e)
+    vhat: Vec<f64>,    // (t, e) per-head unbound v̂ (Eq. 2), heads merged
+    w: Vec<f64>,       // (heads, seq_len) softmax cleanup weights (Eq. 4)
+    beta_re: Vec<f64>, // (heads, kbins) β spectrum (Eq. 1)
+    beta_im: Vec<f64>,
+    attn: Vec<f32>,    // (t, e) merged w·v mix
+    x_mid: Vec<f32>,   // (t, e) after the attention residual
+    h2: Vec<f32>,      // (t, e) ln2 output
+    mlp_pre: Vec<f32>, // (t, mlp) fc1 output + bias, pre-GELU
+}
+
+impl BlockTape {
+    fn new(cfg: &HrrConfig) -> BlockTape {
+        let (t, e) = (cfg.seq_len, cfg.embed);
+        let kb = num_bins(cfg.head_dim());
+        BlockTape {
+            x_in: vec![0.0; t * e],
+            h1: vec![0.0; t * e],
+            q: vec![0.0; t * e],
+            k: vec![0.0; t * e],
+            v: vec![0.0; t * e],
+            vhat: vec![0.0; t * e],
+            w: vec![0.0; cfg.heads * t],
+            beta_re: vec![0.0; cfg.heads * kb],
+            beta_im: vec![0.0; cfg.heads * kb],
+            attn: vec![0.0; t * e],
+            x_mid: vec![0.0; t * e],
+            h2: vec![0.0; t * e],
+            mlp_pre: vec![0.0; t * cfg.mlp_dim],
+        }
+    }
+}
+
+/// The full forward record for one row, plus the forward scratch buffers
+/// (running residual, projections) that are not needed by backward.
+/// Sized for the config's full seq_len; shorter rows use prefixes.
+struct Tape {
+    t: usize,
+    mask: Vec<bool>,
+    x: Vec<f32>,        // running residual scratch (t, e)
+    proj: Vec<f32>,     // projection scratch (t, e)
+    mlp_act: Vec<f32>,  // GELU output scratch (t, mlp)
+    hf: Vec<f32>,       // final LN output scratch (t, e)
+    blocks: Vec<BlockTape>,
+    x_final: Vec<f32>,  // (t, e) input of the final LN
+    pooled: Vec<f32>,   // (e)
+    head_pre: Vec<f32>, // (mlp) pre-ReLU classifier hidden
+    head_act: Vec<f32>, // (mlp) post-ReLU (kept: fc input + ReLU mask)
+    logits: Vec<f32>,   // (classes)
+    n_valid: f64,
+}
+
+impl Tape {
+    fn new(cfg: &HrrConfig) -> Tape {
+        let (t, e) = (cfg.seq_len, cfg.embed);
+        Tape {
+            t: 0,
+            mask: vec![false; t],
+            x: vec![0.0; t * e],
+            proj: vec![0.0; t * e],
+            mlp_act: vec![0.0; t * cfg.mlp_dim],
+            hf: vec![0.0; t * e],
+            blocks: (0..cfg.layers).map(|_| BlockTape::new(cfg)).collect(),
+            x_final: vec![0.0; t * e],
+            pooled: vec![0.0; e],
+            head_pre: vec![0.0; cfg.mlp_dim],
+            head_act: vec![0.0; cfg.mlp_dim],
+            logits: vec![0.0; cfg.classes],
+            n_valid: 1.0,
+        }
+    }
+}
+
+/// f64 gradient scratch for one worker: activation gradients plus the
+/// spectral buffers of the attention backward. Allocated once per worker,
+/// reused across rows and blocks.
+struct GradScratch {
+    fs: FftScratch,
+    // forward attention scratch (mirrors model::Workspace's bins)
+    br: Vec<f64>,
+    bi: Vec<f64>,
+    vfr: Vec<f64>,
+    vfi: Vec<f64>,
+    ur: Vec<f64>,
+    ui: Vec<f64>,
+    scores: Vec<f64>, // (t)
+    // backward activation gradients
+    gx: Vec<f64>,    // (t, e) running residual gradient
+    gtmp: Vec<f64>,  // (t, e)
+    gq: Vec<f64>,    // (t, e)
+    gk: Vec<f64>,    // (t, e)
+    gv: Vec<f64>,    // (t, e)
+    gattn: Vec<f64>, // (t, e)
+    gmlp: Vec<f64>,  // (t, mlp)
+    gpooled: Vec<f64>,
+    ghead: Vec<f64>,
+    glogits: Vec<f64>,
+    act: Vec<f32>, // (t, mlp) recomputed GELU output
+    // attention backward scratch
+    gw: Vec<f64>,  // (t) ∂L/∂w
+    gsc: Vec<f64>, // (t) ∂L/∂score
+    gbr: Vec<f64>, // (kbins) ∂L/∂β
+    gbi: Vec<f64>,
+    gur: Vec<f64>, // (kbins) ∂L/∂(unbound spectrum)
+    gui: Vec<f64>,
+    tr: Vec<f64>, // (kbins) adjoint-transform inputs
+    ti: Vec<f64>,
+    qfr: Vec<f64>, // (kbins) recomputed spectra
+    qfi: Vec<f64>,
+    ghd: Vec<f64>, // (head_dim) ∂L/∂v̂
+}
+
+impl GradScratch {
+    fn new(cfg: &HrrConfig) -> GradScratch {
+        let (t, e) = (cfg.seq_len, cfg.embed);
+        let hd = cfg.head_dim();
+        let kb = num_bins(hd);
+        GradScratch {
+            fs: FftScratch::new(hd),
+            br: vec![0.0; kb],
+            bi: vec![0.0; kb],
+            vfr: vec![0.0; kb],
+            vfi: vec![0.0; kb],
+            ur: vec![0.0; kb],
+            ui: vec![0.0; kb],
+            scores: vec![0.0; t],
+            gx: vec![0.0; t * e],
+            gtmp: vec![0.0; t * e],
+            gq: vec![0.0; t * e],
+            gk: vec![0.0; t * e],
+            gv: vec![0.0; t * e],
+            gattn: vec![0.0; t * e],
+            gmlp: vec![0.0; t * cfg.mlp_dim],
+            gpooled: vec![0.0; e],
+            ghead: vec![0.0; cfg.mlp_dim],
+            glogits: vec![0.0; cfg.classes],
+            act: vec![0.0; t * cfg.mlp_dim],
+            gw: vec![0.0; t],
+            gsc: vec![0.0; t],
+            gbr: vec![0.0; kb],
+            gbi: vec![0.0; kb],
+            gur: vec![0.0; kb],
+            gui: vec![0.0; kb],
+            tr: vec![0.0; kb],
+            ti: vec![0.0; kb],
+            qfr: vec![0.0; kb],
+            qfi: vec![0.0; kb],
+            ghd: vec![0.0; hd],
+        }
+    }
+}
+
+/// One row's parameter gradients, f64, aligned with [`param_specs`]
+/// order. Rows each own one of these so the batch reduction can run in a
+/// fixed order afterwards.
+struct RowGrads {
+    tensors: Vec<Vec<f64>>,
+}
+
+impl RowGrads {
+    fn zeros(cfg: &HrrConfig) -> RowGrads {
+        RowGrads { tensors: param_specs(cfg).iter().map(|s| vec![0.0; s.elements()]).collect() }
+    }
+}
+
+/// Output slot of one training row.
+struct RowOut {
+    nll: f64,
+    correct: bool,
+    grads: RowGrads,
+}
+
+/// Tensor indices of the canonical [`param_specs`] layout, so the
+/// backward pass addresses gradient buffers with plain arithmetic
+/// instead of name lookups.
+#[derive(Clone, Copy)]
+struct ParamIdx {
+    learned_pos: bool,
+    layers: usize,
+}
+
+/// Per-block tensor offsets within a block's 12-tensor span.
+const LN1_SCALE: usize = 0;
+const QUERY: usize = 2;
+const KEY: usize = 3;
+const VALUE: usize = 4;
+const OUTPUT: usize = 5;
+const LN2_SCALE: usize = 6;
+const FC1: usize = 8;
+const FC1_BIAS: usize = 9;
+const FC2: usize = 10;
+const FC2_BIAS: usize = 11;
+
+impl ParamIdx {
+    fn of(cfg: &HrrConfig) -> ParamIdx {
+        ParamIdx { learned_pos: cfg.learned_pos, layers: cfg.layers }
+    }
+
+    fn embed(self) -> usize {
+        0
+    }
+
+    fn pos(self) -> Option<usize> {
+        self.learned_pos.then_some(1)
+    }
+
+    fn block0(self) -> usize {
+        if self.learned_pos {
+            2
+        } else {
+            1
+        }
+    }
+
+    /// Tensor index of block `i`'s `j`-th tensor (see the offsets above).
+    fn block(self, i: usize, j: usize) -> usize {
+        self.block0() + i * 12 + j
+    }
+
+    fn ln_f_scale(self) -> usize {
+        self.block0() + self.layers * 12
+    }
+
+    fn head1(self) -> usize {
+        self.ln_f_scale() + 2
+    }
+
+    fn head1_bias(self) -> usize {
+        self.ln_f_scale() + 3
+    }
+
+    fn head2(self) -> usize {
+        self.ln_f_scale() + 4
+    }
+
+    fn head2_bias(self) -> usize {
+        self.ln_f_scale() + 5
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Dense / LayerNorm / GELU backward helpers (f64 grads, f32 activations)
+// ---------------------------------------------------------------------------
+
+/// `gx (n, d_in) (+)= gy (n, d_out) @ wᵀ`; overwrite unless `accumulate`.
+fn matmul_grad_x(
+    gy: &[f64],
+    w: &[f32],
+    n: usize,
+    d_in: usize,
+    d_out: usize,
+    gx: &mut [f64],
+    accumulate: bool,
+) {
+    debug_assert_eq!(gy.len(), n * d_out);
+    debug_assert_eq!(w.len(), d_in * d_out);
+    debug_assert_eq!(gx.len(), n * d_in);
+    for (gyrow, gxrow) in gy.chunks_exact(d_out).zip(gx.chunks_exact_mut(d_in)) {
+        for (kk, gxv) in gxrow.iter_mut().enumerate() {
+            let wrow = &w[kk * d_out..(kk + 1) * d_out];
+            let mut acc = 0.0f64;
+            for (&g, &wv) in gyrow.iter().zip(wrow) {
+                acc += g * wv as f64;
+            }
+            if accumulate {
+                *gxv += acc;
+            } else {
+                *gxv = acc;
+            }
+        }
+    }
+}
+
+/// `gw (d_in, d_out) += xᵀ (n, d_in) @ gy (n, d_out)` — rows accumulated
+/// in ascending order (single-threaded per row gradient, deterministic).
+fn matmul_grad_w(x: &[f32], gy: &[f64], n: usize, d_in: usize, d_out: usize, gw: &mut [f64]) {
+    debug_assert_eq!(x.len(), n * d_in);
+    debug_assert_eq!(gy.len(), n * d_out);
+    debug_assert_eq!(gw.len(), d_in * d_out);
+    for (xrow, gyrow) in x.chunks_exact(d_in).zip(gy.chunks_exact(d_out)) {
+        for (&xv, gwrow) in xrow.iter().zip(gw.chunks_exact_mut(d_out)) {
+            let xv = xv as f64;
+            for (gwv, &g) in gwrow.iter_mut().zip(gyrow) {
+                *gwv += xv * g;
+            }
+        }
+    }
+}
+
+/// LayerNorm backward for a (t, d) input: recomputes μ/σ from the taped
+/// f32 input, **accumulates** `gx` and the scale/bias gradients.
+fn layernorm_bwd(
+    x: &[f32],
+    scale: &[f32],
+    gy: &[f64],
+    d: usize,
+    gx: &mut [f64],
+    gscale: &mut [f64],
+    gbias: &mut [f64],
+) {
+    for ((row, gyrow), gxrow) in
+        x.chunks_exact(d).zip(gy.chunks_exact(d)).zip(gx.chunks_exact_mut(d))
+    {
+        let mut mu = 0.0f64;
+        for &v in row {
+            mu += v as f64;
+        }
+        mu /= d as f64;
+        let mut var = 0.0f64;
+        for &v in row {
+            let c = v as f64 - mu;
+            var += c * c;
+        }
+        var /= d as f64;
+        let rstd = 1.0 / (var + 1e-6).sqrt();
+        let mut mean_gxhat = 0.0f64;
+        let mut mean_gxhat_xhat = 0.0f64;
+        for (j, (&v, &g)) in row.iter().zip(gyrow).enumerate() {
+            let xhat = (v as f64 - mu) * rstd;
+            let gxhat = g * scale[j] as f64;
+            gscale[j] += g * xhat;
+            gbias[j] += g;
+            mean_gxhat += gxhat;
+            mean_gxhat_xhat += gxhat * xhat;
+        }
+        mean_gxhat /= d as f64;
+        mean_gxhat_xhat /= d as f64;
+        for (j, (&v, gxv)) in row.iter().zip(gxrow.iter_mut()).enumerate() {
+            let xhat = (v as f64 - mu) * rstd;
+            let gxhat = gyrow[j] * scale[j] as f64;
+            *gxv += rstd * (gxhat - mean_gxhat - xhat * mean_gxhat_xhat);
+        }
+    }
+}
+
+/// tanh-GELU derivative applied in place to `g` given the pre-activation.
+fn gelu_bwd(pre: &[f32], g: &mut [f64]) {
+    const C: f64 = 0.797_884_560_802_865_4; // sqrt(2/π)
+    for (&x, gv) in pre.iter().zip(g.iter_mut()) {
+        let x = x as f64;
+        let th = (C * (x + 0.044715 * x * x * x)).tanh();
+        *gv *= 0.5 * (1.0 + th) + 0.5 * x * (1.0 - th * th) * C * (1.0 + 3.0 * 0.044715 * x * x);
+    }
+}
+
+/// Hermitian multiplicity of rfft bin `j` for a length-`n` real signal:
+/// DC and (even n) Nyquist appear once in the packed spectrum, every
+/// other bin stands for a conjugate pair.
+fn bin_weight(n: usize, j: usize) -> f64 {
+    if j == 0 || (n % 2 == 0 && j == n / 2) {
+        1.0
+    } else {
+        2.0
+    }
+}
+
+/// Mean-softmax-CE pieces for one row: NLL, argmax correctness, and
+/// `∂nll/∂logits = p − onehot(label)` into `g`.
+fn softmax_ce(logits: &[f32], label: usize, g: &mut [f64]) -> (f64, bool) {
+    let mut m = f64::NEG_INFINITY;
+    for &v in logits {
+        m = m.max(v as f64);
+    }
+    let mut sum = 0.0f64;
+    for (gv, &v) in g.iter_mut().zip(logits) {
+        *gv = (v as f64 - m).exp();
+        sum += *gv;
+    }
+    let nll = sum.ln() + m - logits[label] as f64;
+    let mut best = 0usize;
+    for (c, &v) in logits.iter().enumerate() {
+        if v > logits[best] {
+            best = c;
+        }
+    }
+    for gv in g.iter_mut() {
+        *gv /= sum;
+    }
+    g[label] -= 1.0;
+    (nll, best == label)
+}
+
+// ---------------------------------------------------------------------------
+// Forward with tape
+// ---------------------------------------------------------------------------
+
+/// Multi-head HRR attention for one block, recording v̂, the softmax
+/// weights and the β spectrum on the tape. The arithmetic is exactly
+/// `model::hrr_attention`'s, so taped logits match `forward_row`
+/// bit-for-bit (pinned by a test).
+fn attention_tape(
+    cfg: &HrrConfig,
+    bt: &mut BlockTape,
+    mask: &[bool],
+    t: usize,
+    gws: &mut GradScratch,
+) {
+    let e = cfg.embed;
+    let hd = cfg.head_dim();
+    let kb = num_bins(hd);
+    let BlockTape { q, k, v, attn, vhat, w, beta_re, beta_im, .. } = bt;
+    let GradScratch { fs, br, bi, vfr, vfi, ur, ui, scores, .. } = gws;
+    attn[..t * e].fill(0.0);
+    for head in 0..cfg.heads {
+        let off = head * hd;
+        br.fill(0.0);
+        bi.fill(0.0);
+        for i in 0..t {
+            if !mask[i] {
+                continue;
+            }
+            fs.rfft(&v[i * e + off..i * e + off + hd]);
+            vfr.copy_from_slice(&fs.re[..kb]);
+            vfi.copy_from_slice(&fs.im[..kb]);
+            fs.rfft(&k[i * e + off..i * e + off + hd]);
+            for j in 0..kb {
+                br[j] += fs.re[j] * vfr[j] - fs.im[j] * vfi[j];
+                bi[j] += fs.re[j] * vfi[j] + fs.im[j] * vfr[j];
+            }
+        }
+        beta_re[head * kb..(head + 1) * kb].copy_from_slice(br);
+        beta_im[head * kb..(head + 1) * kb].copy_from_slice(bi);
+        let mut smax = f64::NEG_INFINITY;
+        for i in 0..t {
+            if !mask[i] {
+                continue;
+            }
+            fs.rfft(&q[i * e + off..i * e + off + hd]);
+            for j in 0..kb {
+                let d = fs.re[j] * fs.re[j] + fs.im[j] * fs.im[j] + EPS64;
+                let ir = fs.re[j] / d;
+                let ii = -fs.im[j] / d;
+                ur[j] = br[j] * ir - bi[j] * ii;
+                ui[j] = br[j] * ii + bi[j] * ir;
+            }
+            fs.irfft(ur, ui);
+            let base = i * e + off;
+            let vv = &v[base..base + hd];
+            let mut num = 0.0f64;
+            let mut nv = 0.0f64;
+            let mut nh = 0.0f64;
+            for ((&a, &b), vh) in
+                vv.iter().zip(fs.re[..hd].iter()).zip(vhat[base..base + hd].iter_mut())
+            {
+                *vh = b;
+                num += a as f64 * b;
+                nv += a as f64 * a as f64;
+                nh += b * b;
+            }
+            scores[i] = num / (nv.sqrt() * nh.sqrt() + EPS64);
+            smax = smax.max(scores[i]);
+        }
+        let mut denom = 0.0f64;
+        for i in 0..t {
+            if mask[i] {
+                scores[i] = (scores[i] - smax).exp();
+                denom += scores[i];
+            }
+        }
+        for i in 0..t {
+            w[head * cfg.seq_len + i] = 0.0;
+            if !mask[i] {
+                continue;
+            }
+            let wi = scores[i] / denom;
+            w[head * cfg.seq_len + i] = wi;
+            let base = i * e + off;
+            for (o, &x) in attn[base..base + hd].iter_mut().zip(&v[base..base + hd]) {
+                *o = (wi * x as f64) as f32;
+            }
+        }
+    }
+}
+
+/// Forward one row, keeping every intermediate on the tape. Same
+/// arithmetic as `model::forward_row`.
+fn forward_row_tape(
+    cfg: &HrrConfig,
+    rp: &ResolvedParams<'_>,
+    ids: &[i32],
+    tape: &mut Tape,
+    gws: &mut GradScratch,
+) {
+    let e = cfg.embed;
+    let mlp = cfg.mlp_dim;
+    let t = ids.len();
+    tape.t = t;
+
+    for (m, &id) in tape.mask.iter_mut().zip(ids) {
+        *m = id != PAD_ID;
+    }
+
+    for (i, &id) in ids.iter().enumerate() {
+        let row = (id.max(0) as usize).min(cfg.vocab - 1);
+        tape.x[i * e..(i + 1) * e].copy_from_slice(&rp.embed[row * e..(row + 1) * e]);
+        match rp.pos {
+            Some(tbl) => {
+                for (xv, &pv) in
+                    tape.x[i * e..(i + 1) * e].iter_mut().zip(&tbl[i * e..(i + 1) * e])
+                {
+                    *xv += pv;
+                }
+            }
+            None => {
+                for (j, xv) in tape.x[i * e..(i + 1) * e].iter_mut().enumerate() {
+                    *xv += sinusoid(i, j, e);
+                }
+            }
+        }
+    }
+
+    for (b, bp) in rp.blocks.iter().enumerate() {
+        let bt = &mut tape.blocks[b];
+        bt.x_in[..t * e].copy_from_slice(&tape.x[..t * e]);
+        layernorm_into(&bt.x_in[..t * e], bp.ln1_scale, bp.ln1_bias, e, &mut bt.h1[..t * e]);
+        matmul_into(&bt.h1[..t * e], bp.query, t, e, e, &mut bt.q[..t * e]);
+        matmul_into(&bt.h1[..t * e], bp.key, t, e, e, &mut bt.k[..t * e]);
+        matmul_into(&bt.h1[..t * e], bp.value, t, e, e, &mut bt.v[..t * e]);
+        attention_tape(cfg, bt, &tape.mask[..t], t, gws);
+        matmul_into(&bt.attn[..t * e], bp.output, t, e, e, &mut tape.proj[..t * e]);
+        for (xv, &yv) in tape.x[..t * e].iter_mut().zip(&tape.proj[..t * e]) {
+            *xv += yv;
+        }
+        bt.x_mid[..t * e].copy_from_slice(&tape.x[..t * e]);
+        layernorm_into(&bt.x_mid[..t * e], bp.ln2_scale, bp.ln2_bias, e, &mut bt.h2[..t * e]);
+        matmul_into(&bt.h2[..t * e], bp.fc1, t, e, mlp, &mut bt.mlp_pre[..t * mlp]);
+        add_bias(&mut bt.mlp_pre[..t * mlp], bp.fc1_bias, mlp);
+        tape.mlp_act[..t * mlp].copy_from_slice(&bt.mlp_pre[..t * mlp]);
+        gelu(&mut tape.mlp_act[..t * mlp]);
+        matmul_into(&tape.mlp_act[..t * mlp], bp.fc2, t, mlp, e, &mut tape.proj[..t * e]);
+        add_bias(&mut tape.proj[..t * e], bp.fc2_bias, e);
+        for (xv, &mv) in tape.x[..t * e].iter_mut().zip(&tape.proj[..t * e]) {
+            *xv += mv;
+        }
+    }
+
+    tape.x_final[..t * e].copy_from_slice(&tape.x[..t * e]);
+    layernorm_into(&tape.x_final[..t * e], rp.ln_f_scale, rp.ln_f_bias, e, &mut tape.hf[..t * e]);
+
+    let n_valid = tape.mask[..t].iter().filter(|&&m| m).count().max(1) as f64;
+    tape.n_valid = n_valid;
+    for (j, pv) in tape.pooled.iter_mut().enumerate() {
+        let mut s = 0.0f64;
+        for i in 0..t {
+            if tape.mask[i] {
+                s += tape.hf[i * e + j] as f64;
+            }
+        }
+        *pv = (s / n_valid) as f32;
+    }
+
+    matmul_into(&tape.pooled, rp.head1, 1, e, mlp, &mut tape.head_pre);
+    add_bias(&mut tape.head_pre, rp.head1_bias, mlp);
+    tape.head_act.copy_from_slice(&tape.head_pre);
+    for v in tape.head_act.iter_mut() {
+        *v = v.max(0.0); // relu
+    }
+    matmul_into(&tape.head_act, rp.head2, 1, mlp, cfg.classes, &mut tape.logits);
+    add_bias(&mut tape.logits, rp.head2_bias, cfg.classes);
+}
+
+// ---------------------------------------------------------------------------
+// Backward
+// ---------------------------------------------------------------------------
+
+/// Backward through one head of HRR attention: reads `gws.gattn`,
+/// accumulates into `gws.gq/gk/gv` and the scratch bins. See the module
+/// docs for the adjoint derivations.
+fn attention_bwd(
+    cfg: &HrrConfig,
+    bt: &BlockTape,
+    mask: &[bool],
+    head: usize,
+    t: usize,
+    gws: &mut GradScratch,
+) {
+    let e = cfg.embed;
+    let hd = cfg.head_dim();
+    let kb = num_bins(hd);
+    let off = head * hd;
+    let hdf = hd as f64;
+    let wrow = &bt.w[head * cfg.seq_len..head * cfg.seq_len + t];
+    let GradScratch {
+        fs, gattn, gq, gk, gv, gw, gsc, gbr, gbi, gur, gui, tr, ti, qfr, qfi, ghd, ..
+    } = gws;
+
+    // Eq. 4 backward: out_i = w_i · v_i → gw_i = ⟨g_out, v⟩, plus the
+    // direct w·g_out term into gv; then softmax over the unmasked set.
+    for i in 0..t {
+        if !mask[i] {
+            gw[i] = 0.0;
+            continue;
+        }
+        let base = i * e + off;
+        let mut acc = 0.0f64;
+        for (&g, &x) in gattn[base..base + hd].iter().zip(&bt.v[base..base + hd]) {
+            acc += g * x as f64;
+        }
+        gw[i] = acc;
+        for (gvd, &g) in gv[base..base + hd].iter_mut().zip(&gattn[base..base + hd]) {
+            *gvd += wrow[i] * g;
+        }
+    }
+    let mut s_dot = 0.0f64;
+    for i in 0..t {
+        if mask[i] {
+            s_dot += wrow[i] * gw[i];
+        }
+    }
+    for i in 0..t {
+        gsc[i] = if mask[i] { wrow[i] * (gw[i] - s_dot) } else { 0.0 };
+    }
+
+    gbr.fill(0.0);
+    gbi.fill(0.0);
+    for i in 0..t {
+        if !mask[i] {
+            continue;
+        }
+        let base = i * e + off;
+        // Eq. 3 backward: score = ⟨v, v̂⟩ / (‖v‖‖v̂‖ + ε)
+        let vv = &bt.v[base..base + hd];
+        let vh = &bt.vhat[base..base + hd];
+        let mut num = 0.0f64;
+        let mut na = 0.0f64;
+        let mut nh = 0.0f64;
+        for (&a, &b) in vv.iter().zip(vh) {
+            num += a as f64 * b;
+            na += a as f64 * a as f64;
+            nh += b * b;
+        }
+        let a = na.sqrt();
+        let b = nh.sqrt();
+        let den = a * b + EPS64;
+        let gnum = gsc[i] / den;
+        let gden = -gsc[i] * num / (den * den);
+        for ((gvd, ghdv), (&vfd, &vhd)) in
+            gv[base..base + hd].iter_mut().zip(ghd.iter_mut()).zip(vv.iter().zip(vh))
+        {
+            let vfd = vfd as f64;
+            *gvd += gnum * vhd + if a > 0.0 { gden * b * vfd / a } else { 0.0 };
+            *ghdv = gnum * vfd + if b > 0.0 { gden * a * vhd / b } else { 0.0 };
+        }
+        // Eq. 2 backward: v̂ = irfft(β · conj(Q)/(|Q|²+ε)).
+        // adjoint of irfft: gU = (c_j / n) · rfft(gv̂)
+        fs.rfft64(ghd);
+        for j in 0..kb {
+            let c = bin_weight(hd, j);
+            gur[j] = c / hdf * fs.re[j];
+            gui[j] = c / hdf * fs.im[j];
+        }
+        fs.rfft(&bt.q[base..base + hd]);
+        qfr.copy_from_slice(&fs.re[..kb]);
+        qfi.copy_from_slice(&fs.im[..kb]);
+        for j in 0..kb {
+            let x = qfr[j];
+            let y = qfi[j];
+            let d2 = x * x + y * y + EPS64;
+            let dd = d2 * d2;
+            let invr = x / d2;
+            let invi = -y / d2;
+            // gβ += gU · conj(inv)
+            gbr[j] += gur[j] * invr + gui[j] * invi;
+            gbi[j] += gui[j] * invr - gur[j] * invi;
+            // ∂inv/∂(Re Q) = (d2 − 2x² + 2ixy)/d2²,
+            // ∂inv/∂(Im Q) = (−2xy + i(2y² − d2))/d2²; chain through β·inv
+            let axr = (d2 - 2.0 * x * x) / dd;
+            let axi = 2.0 * x * y / dd;
+            let ayr = -2.0 * x * y / dd;
+            let ayi = (2.0 * y * y - d2) / dd;
+            let br_ = bt.beta_re[head * kb + j];
+            let bi_ = bt.beta_im[head * kb + j];
+            let uxr = br_ * axr - bi_ * axi;
+            let uxi = br_ * axi + bi_ * axr;
+            let uyr = br_ * ayr - bi_ * ayi;
+            let uyi = br_ * ayi + bi_ * ayr;
+            // adjoint of rfft: gq = n · irfft(gQ / c_j)
+            let c = bin_weight(hd, j);
+            tr[j] = (gur[j] * uxr + gui[j] * uxi) / c;
+            ti[j] = (gur[j] * uyr + gui[j] * uyi) / c;
+        }
+        fs.irfft(tr, ti);
+        for (gqd, &r) in gq[base..base + hd].iter_mut().zip(fs.re[..hd].iter()) {
+            *gqd += hdf * r;
+        }
+    }
+
+    // Eq. 1 backward: β = Σ_i Kf_i · Vf_i over the unmasked set.
+    for i in 0..t {
+        if !mask[i] {
+            continue;
+        }
+        let base = i * e + off;
+        fs.rfft(&bt.v[base..base + hd]);
+        qfr.copy_from_slice(&fs.re[..kb]);
+        qfi.copy_from_slice(&fs.im[..kb]);
+        for j in 0..kb {
+            let c = bin_weight(hd, j);
+            // gKf = gβ · conj(Vf)
+            tr[j] = (gbr[j] * qfr[j] + gbi[j] * qfi[j]) / c;
+            ti[j] = (gbi[j] * qfr[j] - gbr[j] * qfi[j]) / c;
+        }
+        fs.irfft(tr, ti);
+        for (gkd, &r) in gk[base..base + hd].iter_mut().zip(fs.re[..hd].iter()) {
+            *gkd += hdf * r;
+        }
+        fs.rfft(&bt.k[base..base + hd]);
+        qfr.copy_from_slice(&fs.re[..kb]);
+        qfi.copy_from_slice(&fs.im[..kb]);
+        for j in 0..kb {
+            let c = bin_weight(hd, j);
+            // gVf = gβ · conj(Kf)
+            tr[j] = (gbr[j] * qfr[j] + gbi[j] * qfi[j]) / c;
+            ti[j] = (gbi[j] * qfr[j] - gbr[j] * qfi[j]) / c;
+        }
+        fs.irfft(tr, ti);
+        for (gvd, &r) in gv[base..base + hd].iter_mut().zip(fs.re[..hd].iter()) {
+            *gvd += hdf * r;
+        }
+    }
+}
+
+/// Backward one row from its tape into `grads`; returns (nll, correct).
+fn backward_row(
+    cfg: &HrrConfig,
+    rp: &ResolvedParams<'_>,
+    ids: &[i32],
+    label: usize,
+    tape: &Tape,
+    gws: &mut GradScratch,
+    grads: &mut RowGrads,
+) -> (f64, bool) {
+    let e = cfg.embed;
+    let mlp = cfg.mlp_dim;
+    let classes = cfg.classes;
+    let t = tape.t;
+    let idx = ParamIdx::of(cfg);
+
+    let (nll, correct) = softmax_ce(&tape.logits, label, &mut gws.glogits);
+
+    // classifier head
+    for (g, &gl) in grads.tensors[idx.head2_bias()].iter_mut().zip(gws.glogits.iter()) {
+        *g += gl;
+    }
+    {
+        let gk2 = &mut grads.tensors[idx.head2()];
+        for (u, &a) in tape.head_act.iter().enumerate() {
+            let a = a as f64;
+            for (gwv, &gl) in gk2[u * classes..(u + 1) * classes].iter_mut().zip(&gws.glogits) {
+                *gwv += a * gl;
+            }
+        }
+    }
+    for (u, gh) in gws.ghead.iter_mut().enumerate() {
+        let mut acc = 0.0f64;
+        for (&wv, &gl) in rp.head2[u * classes..(u + 1) * classes].iter().zip(&gws.glogits) {
+            acc += wv as f64 * gl;
+        }
+        *gh = if tape.head_pre[u] > 0.0 { acc } else { 0.0 }; // relu mask
+    }
+    for (g, &gh) in grads.tensors[idx.head1_bias()].iter_mut().zip(gws.ghead.iter()) {
+        *g += gh;
+    }
+    {
+        let gk1 = &mut grads.tensors[idx.head1()];
+        for (j, &pj) in tape.pooled.iter().enumerate() {
+            let pj = pj as f64;
+            for (gwv, &gh) in gk1[j * mlp..(j + 1) * mlp].iter_mut().zip(&gws.ghead) {
+                *gwv += pj * gh;
+            }
+        }
+    }
+    for (j, gp) in gws.gpooled.iter_mut().enumerate() {
+        let mut acc = 0.0f64;
+        for (&wv, &gh) in rp.head1[j * mlp..(j + 1) * mlp].iter().zip(&gws.ghead) {
+            acc += wv as f64 * gh;
+        }
+        *gp = acc;
+    }
+
+    // masked mean-pool backward into the final-LN output gradient
+    for i in 0..t {
+        let dst = &mut gws.gtmp[i * e..(i + 1) * e];
+        if tape.mask[i] {
+            for (d, &gp) in dst.iter_mut().zip(&gws.gpooled) {
+                *d = gp / tape.n_valid;
+            }
+        } else {
+            dst.fill(0.0);
+        }
+    }
+
+    // final LayerNorm
+    gws.gx[..t * e].fill(0.0);
+    {
+        let sidx = idx.ln_f_scale();
+        let (left, right) = grads.tensors.split_at_mut(sidx + 1);
+        layernorm_bwd(
+            &tape.x_final[..t * e],
+            rp.ln_f_scale,
+            &gws.gtmp[..t * e],
+            e,
+            &mut gws.gx[..t * e],
+            &mut left[sidx],
+            &mut right[0],
+        );
+    }
+
+    // encoder blocks in reverse
+    for (b, bp) in rp.blocks.iter().enumerate().rev() {
+        let bt = &tape.blocks[b];
+        // MLP sub-block: x_out = x_mid + gelu(fc1(h2)+b1) @ fc2 + b2
+        gws.act[..t * mlp].copy_from_slice(&bt.mlp_pre[..t * mlp]);
+        gelu(&mut gws.act[..t * mlp]);
+        let fc2_bias = &mut grads.tensors[idx.block(b, FC2_BIAS)];
+        for (g, chunk) in fc2_bias.iter_mut().zip(ColumnSums::new(&gws.gx, t, e)) {
+            *g += chunk;
+        }
+        matmul_grad_w(
+            &gws.act[..t * mlp],
+            &gws.gx[..t * e],
+            t,
+            mlp,
+            e,
+            &mut grads.tensors[idx.block(b, FC2)],
+        );
+        matmul_grad_x(&gws.gx[..t * e], bp.fc2, t, mlp, e, &mut gws.gmlp[..t * mlp], false);
+        gelu_bwd(&bt.mlp_pre[..t * mlp], &mut gws.gmlp[..t * mlp]);
+        let fc1_bias = &mut grads.tensors[idx.block(b, FC1_BIAS)];
+        for (g, chunk) in fc1_bias.iter_mut().zip(ColumnSums::new(&gws.gmlp, t, mlp)) {
+            *g += chunk;
+        }
+        matmul_grad_w(
+            &bt.h2[..t * e],
+            &gws.gmlp[..t * mlp],
+            t,
+            e,
+            mlp,
+            &mut grads.tensors[idx.block(b, FC1)],
+        );
+        matmul_grad_x(&gws.gmlp[..t * mlp], bp.fc1, t, e, mlp, &mut gws.gtmp[..t * e], false);
+        {
+            let sidx = idx.block(b, LN2_SCALE);
+            let (left, right) = grads.tensors.split_at_mut(sidx + 1);
+            layernorm_bwd(
+                &bt.x_mid[..t * e],
+                bp.ln2_scale,
+                &gws.gtmp[..t * e],
+                e,
+                &mut gws.gx[..t * e],
+                &mut left[sidx],
+                &mut right[0],
+            );
+        }
+        // attention sub-block: x_mid = x_in + attn @ W_out
+        matmul_grad_w(
+            &bt.attn[..t * e],
+            &gws.gx[..t * e],
+            t,
+            e,
+            e,
+            &mut grads.tensors[idx.block(b, OUTPUT)],
+        );
+        matmul_grad_x(&gws.gx[..t * e], bp.output, t, e, e, &mut gws.gattn[..t * e], false);
+        gws.gq[..t * e].fill(0.0);
+        gws.gk[..t * e].fill(0.0);
+        gws.gv[..t * e].fill(0.0);
+        for head in 0..cfg.heads {
+            attention_bwd(cfg, bt, &tape.mask[..t], head, t, gws);
+        }
+        matmul_grad_w(
+            &bt.h1[..t * e],
+            &gws.gq[..t * e],
+            t,
+            e,
+            e,
+            &mut grads.tensors[idx.block(b, QUERY)],
+        );
+        matmul_grad_w(
+            &bt.h1[..t * e],
+            &gws.gk[..t * e],
+            t,
+            e,
+            e,
+            &mut grads.tensors[idx.block(b, KEY)],
+        );
+        matmul_grad_w(
+            &bt.h1[..t * e],
+            &gws.gv[..t * e],
+            t,
+            e,
+            e,
+            &mut grads.tensors[idx.block(b, VALUE)],
+        );
+        matmul_grad_x(&gws.gq[..t * e], bp.query, t, e, e, &mut gws.gtmp[..t * e], false);
+        matmul_grad_x(&gws.gk[..t * e], bp.key, t, e, e, &mut gws.gtmp[..t * e], true);
+        matmul_grad_x(&gws.gv[..t * e], bp.value, t, e, e, &mut gws.gtmp[..t * e], true);
+        {
+            let sidx = idx.block(b, LN1_SCALE);
+            let (left, right) = grads.tensors.split_at_mut(sidx + 1);
+            layernorm_bwd(
+                &bt.x_in[..t * e],
+                bp.ln1_scale,
+                &gws.gtmp[..t * e],
+                e,
+                &mut gws.gx[..t * e],
+                &mut left[sidx],
+                &mut right[0],
+            );
+        }
+    }
+
+    // embeddings (scatter-add at the clamped ids) + learned positions
+    {
+        let gemb = &mut grads.tensors[idx.embed()];
+        for (i, &id) in ids.iter().enumerate() {
+            let row = (id.max(0) as usize).min(cfg.vocab - 1);
+            for (g, &gx) in gemb[row * e..(row + 1) * e].iter_mut().zip(&gws.gx[i * e..(i + 1) * e])
+            {
+                *g += gx;
+            }
+        }
+    }
+    if let Some(pidx) = idx.pos() {
+        for (g, &gx) in grads.tensors[pidx].iter_mut().zip(gws.gx[..t * e].iter()) {
+            *g += gx;
+        }
+    }
+    (nll, correct)
+}
+
+/// Iterator of per-column sums of a (t, d) f64 buffer — bias gradients.
+struct ColumnSums<'a> {
+    data: &'a [f64],
+    t: usize,
+    d: usize,
+    j: usize,
+}
+
+impl<'a> ColumnSums<'a> {
+    fn new(data: &'a [f64], t: usize, d: usize) -> ColumnSums<'a> {
+        ColumnSums { data, t, d, j: 0 }
+    }
+}
+
+impl Iterator for ColumnSums<'_> {
+    type Item = f64;
+
+    fn next(&mut self) -> Option<f64> {
+        if self.j >= self.d {
+            return None;
+        }
+        let mut acc = 0.0f64;
+        for i in 0..self.t {
+            acc += self.data[i * self.d + self.j];
+        }
+        self.j += 1;
+        Some(acc)
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Row scheduling (shared shape with NativeSession::predict)
+// ---------------------------------------------------------------------------
+
+/// Fan `rows` out in contiguous chunks through the scheduler; `f(row0,
+/// chunk)` runs the identical per-row path everywhere, so outputs cannot
+/// depend on the partitioning.
+fn scatter_rows<T, F>(scheduler: &RowScheduler, rows: &mut [T], f: F) -> Result<()>
+where
+    T: Send,
+    F: Fn(usize, &mut [T]) + Sync,
+{
+    let b = rows.len();
+    if b == 0 {
+        return Ok(());
+    }
+    match scheduler {
+        RowScheduler::Sequential => f(0, rows),
+        RowScheduler::Scoped(threads) => {
+            let workers = (*threads).clamp(1, b);
+            if workers == 1 {
+                f(0, rows);
+            } else {
+                let rows_per = b.div_ceil(workers);
+                let fref = &f;
+                std::thread::scope(|s| -> Result<()> {
+                    let handles: Vec<_> = rows
+                        .chunks_mut(rows_per)
+                        .enumerate()
+                        .map(|(ci, chunk)| s.spawn(move || fref(ci * rows_per, chunk)))
+                        .collect();
+                    for h in handles {
+                        h.join().map_err(|_| anyhow::anyhow!("native train worker panicked"))?;
+                    }
+                    Ok(())
+                })?;
+            }
+        }
+        RowScheduler::Pool(pool) => {
+            let chunks = pool.budget().clamp(1, b);
+            let rows_per = b.div_ceil(chunks);
+            let fref = &f;
+            let tasks: Vec<PoolTask<'_>> = rows
+                .chunks_mut(rows_per)
+                .enumerate()
+                .map(|(ci, chunk)| Box::new(move || fref(ci * rows_per, chunk)) as PoolTask<'_>)
+                .collect();
+            pool.run(tasks).map_err(|_| anyhow::anyhow!("native train worker panicked"))?;
+        }
+    }
+    Ok(())
+}
+
+// ---------------------------------------------------------------------------
+// NativeTrainSession
+// ---------------------------------------------------------------------------
+
+/// Artifact-free training session over the pure-Rust forward/backward
+/// pass — the native counterpart of [`crate::model::TrainSession`],
+/// usable anywhere a [`Trainable`] is (the trainer, benches, examples)
+/// with no AOT artifacts and no PJRT runtime.
+///
+/// Owns parameters and Adam moments (all f32, like the exported
+/// program's state) and a [`RowScheduler`] that fans each batch's
+/// forward+backward rows out exactly like `NativeSession::predict` fans
+/// inference rows. Gradients are reduced in fixed row order, so the
+/// whole training trajectory is bit-identical under every scheduler and
+/// worker budget.
+pub struct NativeTrainSession {
+    cfg: HrrConfig,
+    hyper: TrainHyper,
+    params: ParamStore,
+    m: ParamStore,
+    v: ParamStore,
+    step: u32,
+    scheduler: RowScheduler,
+}
+
+impl NativeTrainSession {
+    /// Resolve `base` (e.g. `listops_hrrformer_small_T512_B8`) against
+    /// the native preset tables and seed-initialize parameters; the LR
+    /// schedule picks the task's decay rate.
+    pub fn create(base: &str, seed: u32) -> Result<NativeTrainSession> {
+        Self::from_config(HrrConfig::from_base(base)?, seed)
+    }
+
+    /// Seed-initialize parameters for an explicit config.
+    pub fn from_config(cfg: HrrConfig, seed: u32) -> Result<NativeTrainSession> {
+        cfg.validate()?;
+        let params = init_native_params(&cfg, seed);
+        Self::with_params(cfg, params)
+    }
+
+    /// Train from explicit parameters (a checkpoint, or a golden
+    /// fixture). Names and shapes must match [`param_specs`].
+    pub fn with_params(cfg: HrrConfig, params: ParamStore) -> Result<NativeTrainSession> {
+        cfg.validate()?;
+        validate_native_params(&cfg, &params)?;
+        let m = zeros_matching(&params);
+        let v = zeros_matching(&params);
+        let hyper = TrainHyper::for_task(&cfg.task);
+        Ok(NativeTrainSession {
+            cfg,
+            hyper,
+            params,
+            m,
+            v,
+            step: 0,
+            scheduler: RowScheduler::Scoped(crate::util::pool::default_budget()),
+        })
+    }
+
+    /// Override the LR schedule (golden fixtures pin their own).
+    pub fn with_hyper(mut self, hyper: TrainHyper) -> NativeTrainSession {
+        self.hyper = hyper;
+        self
+    }
+
+    pub fn cfg(&self) -> &HrrConfig {
+        &self.cfg
+    }
+
+    pub fn hyper(&self) -> &TrainHyper {
+        &self.hyper
+    }
+
+    /// Optimizer steps taken so far.
+    pub fn step(&self) -> u32 {
+        self.step
+    }
+
+    /// Install the [`RowScheduler`] train/eval batches fan out through.
+    pub fn set_scheduler(&mut self, scheduler: RowScheduler) {
+        self.scheduler = scheduler;
+    }
+
+    pub fn scheduler(&self) -> &RowScheduler {
+        &self.scheduler
+    }
+
+    fn check_batch(&self, ids: &Tensor, labels: &Tensor) -> Result<(usize, usize)> {
+        let shape = ids.shape();
+        anyhow::ensure!(shape.len() == 2, "native train expects (B, T) ids, got {shape:?}");
+        let (b, t) = (shape[0], shape[1]);
+        anyhow::ensure!(b >= 1, "native train needs at least one row");
+        anyhow::ensure!(
+            t >= 1 && t <= self.cfg.seq_len,
+            "sequence length {t} outside 1..={} for this config",
+            self.cfg.seq_len
+        );
+        anyhow::ensure!(
+            labels.shape().len() == 1 && labels.shape()[0] == b,
+            "labels shape {:?} does not match batch {b}",
+            labels.shape()
+        );
+        let lab = labels.as_i32().context("native train labels dtype")?;
+        anyhow::ensure!(
+            lab.iter().all(|&l| l >= 0 && (l as usize) < self.cfg.classes),
+            "labels must be in 0..{}",
+            self.cfg.classes
+        );
+        Ok((b, t))
+    }
+
+    /// Mean loss/accuracy and mean parameter gradients for one batch,
+    /// under an explicit scheduler. Gradients come back f64, aligned
+    /// with [`param_specs`] order, reduced over rows in ascending order
+    /// — bit-identical for every scheduler and worker budget.
+    ///
+    /// Each row in flight holds one parameter-sized f64 gradient buffer
+    /// (the price of the fixed reduction order).
+    pub fn grad_batch(
+        &self,
+        ids: &Tensor,
+        labels: &Tensor,
+        scheduler: &RowScheduler,
+    ) -> Result<(f64, f64, Vec<Vec<f64>>)> {
+        let (b, t) = self.check_batch(ids, labels)?;
+        let data = ids.as_i32().context("native train ids dtype")?;
+        let lab = labels.as_i32()?;
+        let rp = ResolvedParams::resolve(&self.cfg, &self.params)?;
+
+        let mut rows: Vec<RowOut> = (0..b)
+            .map(|_| RowOut { nll: 0.0, correct: false, grads: RowGrads::zeros(&self.cfg) })
+            .collect();
+        let cfg = &self.cfg;
+        let run_rows = |row0: usize, chunk: &mut [RowOut]| {
+            let mut tape = Tape::new(cfg);
+            let mut gws = GradScratch::new(cfg);
+            for (off, slot) in chunk.iter_mut().enumerate() {
+                let r = row0 + off;
+                let row_ids = &data[r * t..(r + 1) * t];
+                forward_row_tape(cfg, &rp, row_ids, &mut tape, &mut gws);
+                let (nll, correct) = backward_row(
+                    cfg,
+                    &rp,
+                    row_ids,
+                    lab[r] as usize,
+                    &tape,
+                    &mut gws,
+                    &mut slot.grads,
+                );
+                slot.nll = nll;
+                slot.correct = correct;
+            }
+        };
+        scatter_rows(scheduler, &mut rows, run_rows)?;
+
+        // fixed-order reduction: rows ascending, f64 — the scheduler
+        // cannot influence a single bit of the result
+        let mut loss = 0.0f64;
+        let mut n_correct = 0usize;
+        let mut total: Vec<Vec<f64>> =
+            param_specs(&self.cfg).iter().map(|s| vec![0.0; s.elements()]).collect();
+        for row in &rows {
+            loss += row.nll;
+            n_correct += row.correct as usize;
+            for (tot, g) in total.iter_mut().zip(&row.grads.tensors) {
+                for (a, &gv) in tot.iter_mut().zip(g) {
+                    *a += gv;
+                }
+            }
+        }
+        let bf = b as f64;
+        for tensor in total.iter_mut() {
+            for v in tensor.iter_mut() {
+                *v /= bf;
+            }
+        }
+        Ok((loss / bf, n_correct as f64 / bf, total))
+    }
+
+    /// Mean loss/accuracy of one batch, forward only (f64 — the
+    /// finite-difference tests need the extra digits).
+    pub fn batch_loss(&self, ids: &Tensor, labels: &Tensor) -> Result<(f64, f64)> {
+        let (b, t) = self.check_batch(ids, labels)?;
+        let data = ids.as_i32().context("native train ids dtype")?;
+        let lab = labels.as_i32()?;
+        let rp = ResolvedParams::resolve(&self.cfg, &self.params)?;
+        let cfg = &self.cfg;
+        let classes = cfg.classes;
+        let mut rows: Vec<(f64, bool)> = vec![(0.0, false); b];
+        let run_rows = |row0: usize, chunk: &mut [(f64, bool)]| {
+            let mut ws = Workspace::new(cfg);
+            let mut logits = vec![0.0f32; classes];
+            let mut scratch = vec![0.0f64; classes];
+            for (off, slot) in chunk.iter_mut().enumerate() {
+                let r = row0 + off;
+                forward_row(cfg, &rp, &data[r * t..(r + 1) * t], &mut ws, &mut logits);
+                *slot = softmax_ce(&logits, lab[r] as usize, &mut scratch);
+            }
+        };
+        scatter_rows(&self.scheduler, &mut rows, run_rows)?;
+        let mut loss = 0.0f64;
+        let mut n_correct = 0usize;
+        for &(nll, correct) in &rows {
+            loss += nll;
+            n_correct += correct as usize;
+        }
+        Ok((loss / b as f64, n_correct as f64 / b as f64))
+    }
+
+    /// One Adam step (grads from the installed scheduler). LR follows
+    /// the exported program's schedule at the *pre-increment* step
+    /// counter, exactly like `train_step(…, step)` in model.py.
+    pub fn train_step(&mut self, ids: &Tensor, labels: &Tensor) -> Result<StepStats> {
+        let scheduler = self.scheduler.clone();
+        let (loss, acc, grads) = self.grad_batch(ids, labels, &scheduler)?;
+        self.adam_update(&grads);
+        self.step += 1;
+        Ok(StepStats { step: self.step, loss: loss as f32, acc: acc as f32 })
+    }
+
+    /// Loss/accuracy on a batch without updating parameters.
+    pub fn eval_step(&self, ids: &Tensor, labels: &Tensor) -> Result<StepStats> {
+        let (loss, acc) = self.batch_loss(ids, labels)?;
+        Ok(StepStats { step: self.step, loss: loss as f32, acc: acc as f32 })
+    }
+
+    /// In-place Adam with bias correction: f64 math over f32 state,
+    /// one f32 round per scalar on the way back (the split the golden
+    /// train fixture's numpy reference mirrors).
+    fn adam_update(&mut self, grads: &[Vec<f64>]) {
+        let lr = self.hyper.lr_at(self.step);
+        let t = self.step as f64 + 1.0;
+        let bc1 = 1.0 - B1.powf(t);
+        let bc2 = 1.0 - B2.powf(t);
+        for ((g, p_t), (m_t, v_t)) in grads
+            .iter()
+            .zip(self.params.tensors.iter_mut())
+            .zip(self.m.tensors.iter_mut().zip(self.v.tensors.iter_mut()))
+        {
+            let p = p_t.as_f32_mut().expect("native params are f32");
+            let m = m_t.as_f32_mut().expect("native moments are f32");
+            let v = v_t.as_f32_mut().expect("native moments are f32");
+            for (((pv, mv), vv), &gv) in
+                p.iter_mut().zip(m.iter_mut()).zip(v.iter_mut()).zip(g.iter())
+            {
+                let m64 = B1 * (*mv as f64) + (1.0 - B1) * gv;
+                let v64 = B2 * (*vv as f64) + (1.0 - B2) * gv * gv;
+                let p64 = (*pv as f64) - lr * (m64 / bc1) / ((v64 / bc2).sqrt() + ADAM_EPS);
+                *mv = m64 as f32;
+                *vv = v64 as f32;
+                *pv = p64 as f32;
+            }
+        }
+    }
+
+    /// Save parameters as a checkpoint (same HRRCKPT1 format the
+    /// artifact trainer writes; the engine can serve it via
+    /// `bucket_with_params`).
+    pub fn save(&self, path: &Path) -> Result<()> {
+        self.params.save(path)
+    }
+
+    /// Restore parameters from a checkpoint. The whole optimizer state
+    /// resets with them: Adam moments to zero **and** the step counter
+    /// to 0, so bias correction and the LR schedule restart consistently
+    /// with the fresh moments (stale `step` would make the first
+    /// post-restore update ~3× too large and pin LR at the decayed
+    /// floor).
+    pub fn restore(&mut self, path: &Path) -> Result<()> {
+        let loaded = ParamStore::load(path)?;
+        validate_native_params(&self.cfg, &loaded)?;
+        self.params = loaded;
+        self.m = zeros_matching(&self.params);
+        self.v = zeros_matching(&self.params);
+        self.step = 0;
+        Ok(())
+    }
+}
+
+/// A zeroed store with the same names/shapes (Adam moments start at 0).
+fn zeros_matching(store: &ParamStore) -> ParamStore {
+    ParamStore {
+        names: store.names.clone(),
+        tensors: store.tensors.iter().map(|t| Tensor::zeros(t.dtype(), t.shape())).collect(),
+    }
+}
+
+impl Session for NativeTrainSession {
+    fn params(&self) -> &ParamStore {
+        &self.params
+    }
+
+    fn batch(&self) -> usize {
+        self.cfg.batch
+    }
+
+    fn seq_len(&self) -> usize {
+        self.cfg.seq_len
+    }
+}
+
+impl Trainable for NativeTrainSession {
+    fn train_step(&mut self, ids: &Tensor, labels: &Tensor) -> Result<StepStats> {
+        NativeTrainSession::train_step(self, ids, labels)
+    }
+
+    fn eval_step(&self, ids: &Tensor, labels: &Tensor) -> Result<StepStats> {
+        NativeTrainSession::eval_step(self, ids, labels)
+    }
+
+    fn has_eval(&self) -> bool {
+        true
+    }
+
+    fn save(&self, path: &Path) -> Result<()> {
+        NativeTrainSession::save(self, path)
+    }
+
+    fn restore(&mut self, path: &Path) -> Result<()> {
+        NativeTrainSession::restore(self, path)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use std::sync::Arc;
+
+    use super::*;
+    use crate::hrr::NativeSession;
+    use crate::util::pool::WorkerPool;
+
+    /// pow2 head dim (radix-2 FFT path), fixed sinusoid positions.
+    fn tiny_cfg() -> HrrConfig {
+        HrrConfig {
+            task: "test".into(),
+            vocab: 9,
+            seq_len: 6,
+            batch: 2,
+            embed: 8,
+            mlp_dim: 10,
+            heads: 2,
+            layers: 2,
+            classes: 3,
+            learned_pos: false,
+        }
+    }
+
+    /// non-pow2 head dim (naive-DFT fallback), learned positions.
+    fn naive_cfg() -> HrrConfig {
+        HrrConfig {
+            task: "test".into(),
+            vocab: 9,
+            seq_len: 5,
+            batch: 2,
+            embed: 12,
+            mlp_dim: 8,
+            heads: 2,
+            layers: 1,
+            classes: 3,
+            learned_pos: true,
+        }
+    }
+
+    fn tiny_batch(t: usize) -> (Tensor, Tensor) {
+        let mut flat: Vec<i32> = (0..2 * t).map(|i| 1 + (i as i32 * 5 + 3) % 7).collect();
+        // PAD tail on the second row exercises the mask
+        let tail = t / 3;
+        for v in flat[2 * t - tail..].iter_mut() {
+            *v = PAD_ID;
+        }
+        (Tensor::i32(vec![2, t], flat), Tensor::i32(vec![2], vec![1, 0]))
+    }
+
+    #[test]
+    fn lr_schedule_decays_and_floors() {
+        let h = TrainHyper { lr: 1e-3, lr_min: 1e-5, decay_rate: 0.5, steps_per_epoch: 10.0 };
+        assert_eq!(h.lr_at(0), 1e-3);
+        assert!((h.lr_at(10) - 5e-4).abs() < 1e-12);
+        assert!(h.lr_at(5) < h.lr_at(0) && h.lr_at(5) > h.lr_at(10));
+        assert_eq!(h.lr_at(10_000), 1e-5, "schedule must floor at lr_min");
+    }
+
+    #[test]
+    fn tape_forward_matches_predict_forward_bitwise() {
+        for cfg in [tiny_cfg(), naive_cfg()] {
+            let params = init_native_params(&cfg, 11);
+            let rp = ResolvedParams::resolve(&cfg, &params).unwrap();
+            let (ids, _) = tiny_batch(cfg.seq_len);
+            let data = ids.as_i32().unwrap();
+            let t = cfg.seq_len;
+            let mut tape = Tape::new(&cfg);
+            let mut gws = GradScratch::new(&cfg);
+            let mut ws = Workspace::new(&cfg);
+            let mut want = vec![0.0f32; cfg.classes];
+            for r in 0..2 {
+                let row = &data[r * t..(r + 1) * t];
+                forward_row_tape(&cfg, &rp, row, &mut tape, &mut gws);
+                forward_row(&cfg, &rp, row, &mut ws, &mut want);
+                assert_eq!(tape.logits, want, "taped forward must be bit-identical");
+            }
+        }
+    }
+
+    /// Central-difference check of `∂L/∂θ_j` against `batch_loss` for
+    /// the largest-gradient scalars of every parameter tensor.
+    ///
+    /// The f32 forward has a deterministic rounding floor, so each probe
+    /// needs signal well above it: h = 2e-3 per scalar (realized f32
+    /// perturbation as the divisor) and probes whose predicted |ΔL|
+    /// falls under 1e-4 are skipped. At these settings the residual is
+    /// pure O(h²) truncation, measured ≤ 3.5e-4 against a numpy
+    /// transcription — the 1e-3 gate holds with margin. (The per-tensor
+    /// *full-gradient* pin lives in golden_train.rs against the
+    /// fixture's f64 reference gradients.)
+    #[test]
+    fn finite_difference_checks_every_parameter_group() {
+        for cfg in [tiny_cfg(), naive_cfg()] {
+            let sess = NativeTrainSession::from_config(cfg.clone(), 7).unwrap();
+            let (ids, labels) = tiny_batch(cfg.seq_len);
+            let (_, _, grads) =
+                sess.grad_batch(&ids, &labels, &RowScheduler::Sequential).unwrap();
+            let specs = param_specs(&cfg);
+            let mut probes = 0usize;
+            for (gi, g) in grads.iter().enumerate() {
+                assert!(
+                    g.iter().all(|v| v.is_finite()),
+                    "{}: non-finite gradient",
+                    specs[gi].name
+                );
+                // top-3 scalars by |g|
+                let mut order: Vec<usize> = (0..g.len()).collect();
+                order.sort_by(|&a, &b| g[b].abs().partial_cmp(&g[a].abs()).unwrap());
+                for &j in order.iter().take(3) {
+                    let old = sess.params().tensors[gi].as_f32().unwrap()[j];
+                    let pv = (old as f64 + 2e-3) as f32;
+                    let mv = (old as f64 - 2e-3) as f32;
+                    let dj = pv as f64 - mv as f64;
+                    if (dj * g[j]).abs() < 1e-4 {
+                        continue; // predicted ΔL under the rounding floor
+                    }
+                    let mut plus = sess.params().clone();
+                    plus.tensors[gi].as_f32_mut().unwrap()[j] = pv;
+                    let mut minus = sess.params().clone();
+                    minus.tensors[gi].as_f32_mut().unwrap()[j] = mv;
+                    let sp = NativeTrainSession::with_params(cfg.clone(), plus).unwrap();
+                    let sm = NativeTrainSession::with_params(cfg.clone(), minus).unwrap();
+                    let (lp, _) = sp.batch_loss(&ids, &labels).unwrap();
+                    let (lm, _) = sm.batch_loss(&ids, &labels).unwrap();
+                    let num = (lp - lm) / dj;
+                    let err = (num - g[j]).abs() / num.abs().max(g[j].abs()).max(1e-12);
+                    assert!(
+                        err <= 1e-3,
+                        "{}[{j}]: analytic {:.6e} vs central difference {num:.6e} \
+                         (rel err {err:.2e})",
+                        specs[gi].name,
+                        g[j]
+                    );
+                    probes += 1;
+                }
+            }
+            // nearly every tensor contributes probes above the floor
+            assert!(probes >= 2 * specs.len(), "only {probes} probes ran");
+        }
+    }
+
+    #[test]
+    fn gradients_bit_identical_across_schedulers_and_budgets() {
+        let cfg = tiny_cfg();
+        let sess = NativeTrainSession::from_config(cfg.clone(), 3).unwrap();
+        let (ids, labels) = tiny_batch(cfg.seq_len);
+        let (l0, a0, g0) = sess.grad_batch(&ids, &labels, &RowScheduler::Sequential).unwrap();
+        let pool1 = Arc::new(WorkerPool::new(1));
+        let pool3 = Arc::new(WorkerPool::new(3));
+        for sched in [
+            RowScheduler::Scoped(2),
+            RowScheduler::Scoped(5),
+            RowScheduler::Pool(pool1),
+            RowScheduler::Pool(pool3),
+        ] {
+            let (l, a, g) = sess.grad_batch(&ids, &labels, &sched).unwrap();
+            assert_eq!(l.to_bits(), l0.to_bits(), "loss drifted under {sched:?}");
+            assert_eq!(a, a0);
+            for (ta, tb) in g0.iter().zip(&g) {
+                for (&x, &y) in ta.iter().zip(tb) {
+                    assert_eq!(x.to_bits(), y.to_bits(), "gradient drifted under {sched:?}");
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn train_step_trajectory_is_scheduler_independent() {
+        let cfg = tiny_cfg();
+        let (ids, labels) = tiny_batch(cfg.seq_len);
+        let mut a = NativeTrainSession::from_config(cfg.clone(), 5).unwrap();
+        a.set_scheduler(RowScheduler::Sequential);
+        let mut b = NativeTrainSession::from_config(cfg, 5).unwrap();
+        b.set_scheduler(RowScheduler::Pool(Arc::new(WorkerPool::new(2))));
+        for _ in 0..3 {
+            let sa = a.train_step(&ids, &labels).unwrap();
+            let sb = b.train_step(&ids, &labels).unwrap();
+            assert_eq!(sa.loss.to_bits(), sb.loss.to_bits());
+        }
+        assert_eq!(a.params().tensors, b.params().tensors, "params must stay bit-identical");
+    }
+
+    #[test]
+    fn loss_decreases_over_20_steps_on_a_fixed_batch() {
+        use crate::data::{batch::BatchStream, by_task, Split};
+        let cfg = HrrConfig::from_base("listops_hrrformer_small_T16_B4").unwrap();
+        let ds = by_task("listops", 16).unwrap();
+        let batch = BatchStream::new(ds.as_ref(), Split::Train, 1, 4, 16).next_batch();
+        let mut sess = NativeTrainSession::from_config(cfg, 0).unwrap();
+        let first = sess.train_step(&batch.ids, &batch.labels).unwrap().loss;
+        let mut last = first;
+        for _ in 0..19 {
+            last = sess.train_step(&batch.ids, &batch.labels).unwrap().loss;
+        }
+        assert!(last.is_finite() && first.is_finite());
+        assert!(
+            last < first,
+            "overfitting one batch must reduce the loss: {first} -> {last}"
+        );
+    }
+
+    #[test]
+    fn all_pad_rows_train_without_nans() {
+        let cfg = tiny_cfg();
+        let mut sess = NativeTrainSession::from_config(cfg.clone(), 2).unwrap();
+        let mut flat = vec![0i32; 2 * cfg.seq_len];
+        for v in flat[..cfg.seq_len].iter_mut() {
+            *v = 3;
+        }
+        let ids = Tensor::i32(vec![2, cfg.seq_len], flat); // second row all-PAD
+        let labels = Tensor::i32(vec![2], vec![0, 1]);
+        let stats = sess.train_step(&ids, &labels).unwrap();
+        assert!(stats.loss.is_finite());
+        for t in &sess.params().tensors {
+            assert!(t.as_f32().unwrap().iter().all(|v| v.is_finite()));
+        }
+    }
+
+    #[test]
+    fn rejects_bad_labels_and_shapes() {
+        let cfg = tiny_cfg();
+        let sess = NativeTrainSession::from_config(cfg.clone(), 1).unwrap();
+        let (ids, _) = tiny_batch(cfg.seq_len);
+        let bad = Tensor::i32(vec![2], vec![0, 99]);
+        assert!(sess.batch_loss(&ids, &bad).is_err(), "out-of-range label must error");
+        let wrong_arity = Tensor::i32(vec![3], vec![0, 1, 0]);
+        assert!(sess.batch_loss(&ids, &wrong_arity).is_err());
+    }
+
+    #[test]
+    fn checkpoint_roundtrips_into_serving_session() {
+        let cfg = tiny_cfg();
+        let (ids, labels) = tiny_batch(cfg.seq_len);
+        let mut sess = NativeTrainSession::from_config(cfg.clone(), 9).unwrap();
+        for _ in 0..2 {
+            sess.train_step(&ids, &labels).unwrap();
+        }
+        let dir = std::env::temp_dir().join("hrrformer_native_train_ckpt");
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("native.ckpt");
+        sess.save(&path).unwrap();
+        // the serving session accepts the trained checkpoint…
+        let store = ParamStore::load(&path).unwrap();
+        let serve = NativeSession::with_params(cfg.clone(), store).unwrap();
+        let logits = serve.predict(&ids).unwrap();
+        assert!(logits.as_f32().unwrap().iter().all(|v| v.is_finite()));
+        // …and restore resets the optimizer but keeps the parameters
+        let trained = sess.params().tensors.clone();
+        let mut fresh = NativeTrainSession::from_config(cfg, 1).unwrap();
+        fresh.restore(&path).unwrap();
+        assert_eq!(fresh.params().tensors, trained);
+        // optimizer state (incl. the step counter driving bias
+        // correction + LR) restarts on restore
+        sess.restore(&path).unwrap();
+        assert_eq!(sess.step(), 0, "restore must reset the optimizer step");
+    }
+}

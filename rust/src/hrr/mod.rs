@@ -16,6 +16,12 @@
 //!   the python preset tables, so the same
 //!   `<task>_hrrformer_<preset>_T<t>_B<b>` strings resolve on both
 //!   backends;
+//! * [`grad`]  — reverse-mode autodiff through the whole forward pass
+//!   (FFT adjoints for the frequency-domain attention, LayerNorm /
+//!   GELU / softmax-CE backward) plus Adam with the paper's LR decay:
+//!   [`NativeTrainSession`] trains artifact-free, with gradients
+//!   bit-identical under every [`RowScheduler`] (fixed f64 reduction
+//!   order), pinned by the golden train-curve fixture;
 //! * [`model`] — the full Hrrformer forward pass (embed → per-head HRR
 //!   attention → MLP → pooled classifier head) and [`NativeSession`],
 //!   which plugs into everything typed against
@@ -35,10 +41,12 @@
 
 pub mod config;
 pub mod fft;
+pub mod grad;
 pub mod model;
 pub mod ops;
 pub mod plan;
 
 pub use config::HrrConfig;
+pub use grad::{NativeTrainSession, TrainHyper};
 pub use model::{init_native_params, param_specs, NativeSession, RowScheduler, PAD_ID};
 pub use plan::FftPlan;

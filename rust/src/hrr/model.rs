@@ -141,7 +141,14 @@ const MM_TILE: usize = 8;
 /// Register-tiled over output columns; per output element the reduction
 /// is still plain k-ascending f64 accumulation, so results are
 /// bit-identical to the untiled triple loop (golden parity cannot move).
-fn matmul_into(x: &[f32], w: &[f32], n: usize, d_in: usize, d_out: usize, out: &mut [f32]) {
+pub(crate) fn matmul_into(
+    x: &[f32],
+    w: &[f32],
+    n: usize,
+    d_in: usize,
+    d_out: usize,
+    out: &mut [f32],
+) {
     debug_assert_eq!(x.len(), n * d_in);
     debug_assert_eq!(w.len(), d_in * d_out);
     debug_assert_eq!(out.len(), n * d_out);
@@ -165,7 +172,7 @@ fn matmul_into(x: &[f32], w: &[f32], n: usize, d_in: usize, d_out: usize, out: &
     }
 }
 
-fn add_bias(x: &mut [f32], bias: &[f32], d: usize) {
+pub(crate) fn add_bias(x: &mut [f32], bias: &[f32], d: usize) {
     for row in x.chunks_exact_mut(d) {
         for (v, &b) in row.iter_mut().zip(bias) {
             *v += b;
@@ -174,7 +181,7 @@ fn add_bias(x: &mut [f32], bias: &[f32], d: usize) {
 }
 
 /// Pre-LN (layers.py `layernorm`, eps 1e-6) into the caller's buffer.
-fn layernorm_into(x: &[f32], scale: &[f32], bias: &[f32], d: usize, out: &mut [f32]) {
+pub(crate) fn layernorm_into(x: &[f32], scale: &[f32], bias: &[f32], d: usize, out: &mut [f32]) {
     for (row, orow) in x.chunks_exact(d).zip(out.chunks_exact_mut(d)) {
         let mut mu = 0.0f64;
         for &v in row {
@@ -195,7 +202,7 @@ fn layernorm_into(x: &[f32], scale: &[f32], bias: &[f32], d: usize, out: &mut [f
 }
 
 /// `jax.nn.gelu` tanh approximation.
-fn gelu(x: &mut [f32]) {
+pub(crate) fn gelu(x: &mut [f32]) {
     const C: f64 = 0.797_884_560_802_865_4; // sqrt(2/π)
     for v in x.iter_mut() {
         let x = *v as f64;
@@ -205,20 +212,21 @@ fn gelu(x: &mut [f32]) {
 
 /// Reusable FFT scratch for one head dimension: a precomputed
 /// [`FftPlan`] plus re/im buffers, so the T·heads inner loop allocates
-/// nothing and derives no twiddles.
-struct FftScratch {
-    plan: FftPlan,
-    re: Vec<f64>,
-    im: Vec<f64>,
+/// nothing and derives no twiddles. Shared with the training backward
+/// pass (`hrr/grad.rs`), which runs the same transforms for adjoints.
+pub(crate) struct FftScratch {
+    pub(crate) plan: FftPlan,
+    pub(crate) re: Vec<f64>,
+    pub(crate) im: Vec<f64>,
 }
 
 impl FftScratch {
-    fn new(n: usize) -> FftScratch {
+    pub(crate) fn new(n: usize) -> FftScratch {
         FftScratch { plan: FftPlan::new(n), re: vec![0.0; n], im: vec![0.0; n] }
     }
 
     /// rFFT of `x` into the scratch; valid bins are `re/im[..n/2+1]`.
-    fn rfft(&mut self, x: &[f32]) {
+    pub(crate) fn rfft(&mut self, x: &[f32]) {
         for (r, &v) in self.re.iter_mut().zip(x) {
             *r = v as f64;
         }
@@ -228,8 +236,17 @@ impl FftScratch {
         self.plan.fft(&mut self.re, &mut self.im, false);
     }
 
+    /// rFFT of an f64 signal (gradient buffers) into the scratch.
+    pub(crate) fn rfft64(&mut self, x: &[f64]) {
+        self.re.copy_from_slice(x);
+        for i in self.im.iter_mut() {
+            *i = 0.0;
+        }
+        self.plan.fft(&mut self.re, &mut self.im, false);
+    }
+
     /// irFFT of `n/2+1` bins into the scratch; result is `re[..n]`.
-    fn irfft(&mut self, br: &[f64], bi: &[f64]) {
+    pub(crate) fn irfft(&mut self, br: &[f64], bi: &[f64]) {
         self.plan.irfft_inplace(br, bi, &mut self.re, &mut self.im);
     }
 }
@@ -238,7 +255,7 @@ impl FftScratch {
 /// `forward_row` needs, allocated once per predict worker instead of
 /// ~10 Vecs per block per row. Sized for the config's full seq_len;
 /// shorter rows use prefixes.
-struct Workspace {
+pub(crate) struct Workspace {
     /// head-dim FFT plan + re/im scratch
     fs: FftScratch,
     /// β superposition bins (Eq. 1)
@@ -273,7 +290,7 @@ struct Workspace {
 }
 
 impl Workspace {
-    fn new(cfg: &HrrConfig) -> Workspace {
+    pub(crate) fn new(cfg: &HrrConfig) -> Workspace {
         let (t, e) = (cfg.seq_len, cfg.embed);
         let kbins = num_bins(cfg.head_dim());
         Workspace {
@@ -379,13 +396,38 @@ fn hrr_attention(cfg: &HrrConfig, ws: &mut Workspace, t: usize) {
 }
 
 /// Fixed sinusoidal positional value (layers.py `sinusoid_positions`).
-fn sinusoid(pos: usize, j: usize, d: usize) -> f32 {
+pub(crate) fn sinusoid(pos: usize, j: usize, d: usize) -> f32 {
     let angle = pos as f64 / 10000f64.powf((2 * (j / 2)) as f64 / d as f64);
     if j % 2 == 0 {
         angle.sin() as f32
     } else {
         angle.cos() as f32
     }
+}
+
+/// Check a parameter store against the canonical layout of
+/// [`param_specs`] (names, order and shapes) — shared by the inference
+/// and training sessions so both reject a broken store up front.
+pub(crate) fn validate_native_params(cfg: &HrrConfig, params: &ParamStore) -> Result<()> {
+    let specs = param_specs(cfg);
+    anyhow::ensure!(
+        specs.len() == params.len(),
+        "native param store has {} tensors, config expects {}",
+        params.len(),
+        specs.len()
+    );
+    for (spec, (name, tensor)) in specs.iter().zip(params.names.iter().zip(params.tensors.iter()))
+    {
+        anyhow::ensure!(
+            &spec.name == name && spec.shape == tensor.shape(),
+            "native param mismatch: expected '{}' {:?}, got '{}' {:?}",
+            spec.name,
+            spec.shape,
+            name,
+            tensor.shape()
+        );
+    }
+    Ok(())
 }
 
 /// Fetch one f32 parameter slice by canonical name.
@@ -398,19 +440,19 @@ fn param<'a>(params: &'a ParamStore, name: &str) -> Result<&'a [f32]> {
 }
 
 /// One encoder block's parameter slices (see [`ResolvedParams`]).
-struct BlockParams<'a> {
-    ln1_scale: &'a [f32],
-    ln1_bias: &'a [f32],
-    query: &'a [f32],
-    key: &'a [f32],
-    value: &'a [f32],
-    output: &'a [f32],
-    ln2_scale: &'a [f32],
-    ln2_bias: &'a [f32],
-    fc1: &'a [f32],
-    fc1_bias: &'a [f32],
-    fc2: &'a [f32],
-    fc2_bias: &'a [f32],
+pub(crate) struct BlockParams<'a> {
+    pub(crate) ln1_scale: &'a [f32],
+    pub(crate) ln1_bias: &'a [f32],
+    pub(crate) query: &'a [f32],
+    pub(crate) key: &'a [f32],
+    pub(crate) value: &'a [f32],
+    pub(crate) output: &'a [f32],
+    pub(crate) ln2_scale: &'a [f32],
+    pub(crate) ln2_bias: &'a [f32],
+    pub(crate) fc1: &'a [f32],
+    pub(crate) fc1_bias: &'a [f32],
+    pub(crate) fc2: &'a [f32],
+    pub(crate) fc2_bias: &'a [f32],
 }
 
 /// Every parameter slice `forward_row` touches, resolved by canonical
@@ -418,20 +460,20 @@ struct BlockParams<'a> {
 /// hot path then does no name formatting, no store lookups and no
 /// allocation at all. Missing/mistyped parameters surface here, before
 /// any row runs.
-struct ResolvedParams<'a> {
-    embed: &'a [f32],
-    pos: Option<&'a [f32]>,
-    blocks: Vec<BlockParams<'a>>,
-    ln_f_scale: &'a [f32],
-    ln_f_bias: &'a [f32],
-    head1: &'a [f32],
-    head1_bias: &'a [f32],
-    head2: &'a [f32],
-    head2_bias: &'a [f32],
+pub(crate) struct ResolvedParams<'a> {
+    pub(crate) embed: &'a [f32],
+    pub(crate) pos: Option<&'a [f32]>,
+    pub(crate) blocks: Vec<BlockParams<'a>>,
+    pub(crate) ln_f_scale: &'a [f32],
+    pub(crate) ln_f_bias: &'a [f32],
+    pub(crate) head1: &'a [f32],
+    pub(crate) head1_bias: &'a [f32],
+    pub(crate) head2: &'a [f32],
+    pub(crate) head2_bias: &'a [f32],
 }
 
 impl<'a> ResolvedParams<'a> {
-    fn resolve(cfg: &HrrConfig, params: &'a ParamStore) -> Result<ResolvedParams<'a>> {
+    pub(crate) fn resolve(cfg: &HrrConfig, params: &'a ParamStore) -> Result<ResolvedParams<'a>> {
         let p = |name: &str| param(params, name);
         let mut blocks = Vec::with_capacity(cfg.layers);
         for i in 0..cfg.layers {
@@ -469,7 +511,7 @@ impl<'a> ResolvedParams<'a> {
 /// `out` (classes). Every intermediate lives in `ws`, every parameter
 /// slice comes pre-resolved in `rp` — the row loop allocates nothing
 /// and looks nothing up.
-fn forward_row(
+pub(crate) fn forward_row(
     cfg: &HrrConfig,
     rp: &ResolvedParams<'_>,
     ids: &[i32],
@@ -624,25 +666,7 @@ impl NativeSession {
     /// canonical layout of [`param_specs`].
     pub fn with_params(cfg: HrrConfig, params: ParamStore) -> Result<NativeSession> {
         cfg.validate()?;
-        let specs = param_specs(&cfg);
-        anyhow::ensure!(
-            specs.len() == params.len(),
-            "native param store has {} tensors, config expects {}",
-            params.len(),
-            specs.len()
-        );
-        for (spec, (name, tensor)) in
-            specs.iter().zip(params.names.iter().zip(params.tensors.iter()))
-        {
-            anyhow::ensure!(
-                &spec.name == name && spec.shape == tensor.shape(),
-                "native param mismatch: expected '{}' {:?}, got '{}' {:?}",
-                spec.name,
-                spec.shape,
-                name,
-                tensor.shape()
-            );
-        }
+        validate_native_params(&cfg, &params)?;
         Ok(NativeSession { cfg, params, scheduler: RowScheduler::Scoped(default_workers()) })
     }
 

@@ -27,7 +27,8 @@ const USAGE: &str = "\
 repro — Hrrformer reproduction coordinator
 
 USAGE:
-  repro train --base <program base> [--steps N] [--seed S] [--curve path.csv] [--ckpt path]
+  repro train --base <program base> [--backend artifact|native] [--steps N] [--seed S]
+              [--eval-every N] [--eval-batches N] [--curve path.csv] [--ckpt path]
   repro serve [--backend artifact|native] [--bases a,b,c] [--requests N]
               [--max-batch B] [--max-wait-ms MS] [--queue-depth D] [--seed S]
               [--workers K]
@@ -52,11 +53,13 @@ u32 and seeds parameter init for every bucket. On the native backend
 every core): busy buckets split one fixed thread set instead of each
 spawning per-batch workers.
 
---backend picks the inference implementation: `artifact` (default)
-executes the AOT-compiled `<base>_predict` XLA programs on per-executor
-PJRT runtimes (xla handles are !Send) and needs `make artifacts`;
-`native` runs the pure-Rust HRR forward pass (rust/src/hrr) — no
-artifacts required, works on a fresh checkout.
+--backend picks the implementation: `artifact` (default) executes the
+AOT-compiled XLA programs on PJRT runtimes (xla handles are !Send) and
+needs `make artifacts`; `native` is the pure-Rust path (rust/src/hrr) —
+no artifacts required, works on a fresh checkout. On `train`, native
+runs reverse-mode autodiff + Adam with the paper's LR decay through the
+same train→eval→checkpoint loop (--eval-every 0 = final eval only);
+gradients are bit-identical at any worker count.
 
 bench native times that native hot path directly (plan-cached FFTs,
 reusable workspaces) over the default EMBER bucket ladder under all
@@ -94,8 +97,6 @@ fn dispatch(args: &Args) -> Result<()> {
 
 fn cmd_train(args: &Args) -> Result<()> {
     let base = args.get("base").context("--base is required (see `repro inspect`)")?.to_string();
-    let rt = Runtime::cpu()?;
-    let manifest = default_manifest()?;
     let cfg = TrainConfig {
         base,
         seed: args.u64("seed", 0),
@@ -106,13 +107,25 @@ fn cmd_train(args: &Args) -> Result<()> {
         ckpt: args.get("ckpt").map(Into::into),
         verbose: true,
     };
-    let report = coordinator::train(&rt, &manifest, &cfg)?;
+    let report = match parse_backend(args)? {
+        // native: pure-Rust autodiff + Adam — no manifest, no PJRT
+        Backend::Native => coordinator::train_native(&cfg)?,
+        Backend::Artifact => {
+            let rt = Runtime::cpu()?;
+            let manifest = default_manifest()?;
+            coordinator::train(&rt, &manifest, &cfg)?
+        }
+    };
+    let last = report.curve.last().cloned().unwrap_or_default();
     println!(
-        "final: train acc {:.4}, test acc {:.4}, {:.1}s total ({:.2} examples/s, {} params)",
+        "final: train loss {:.4}, train acc {:.4}, test acc {:.4}, {:.1}s total \
+         ({:.2} examples/s over {:.1}s of train steps, {} params)",
+        last.train_loss,
         report.final_train_acc,
         report.final_test_acc,
         report.total_secs,
         report.examples_per_sec,
+        report.train_secs,
         report.param_scalars
     );
     Ok(())

@@ -116,6 +116,18 @@ impl RunMeter {
     }
 }
 
+/// CSV cell for a possibly-non-finite metric: fixed-point for finite
+/// values, an **empty cell** otherwise — the CSV mirror of
+/// `util::json`'s non-finite → null rule, so a NaN eval can never land
+/// as the literal text "NaN" in a curve file.
+pub fn finite_cell(value: f64, decimals: usize) -> String {
+    if value.is_finite() {
+        format!("{value:.decimals$}")
+    } else {
+        String::new()
+    }
+}
+
 /// Append-only CSV logger (creates parent dirs; writes header once).
 pub struct CsvLogger {
     path: std::path::PathBuf,
@@ -204,5 +216,14 @@ mod tests {
         log.log(&["3".into(), "4".into()]).unwrap();
         let content = std::fs::read_to_string(&p).unwrap();
         assert_eq!(content, "a,b\n1,2\n3,4\n");
+    }
+
+    #[test]
+    fn finite_cell_formats_or_empties() {
+        assert_eq!(finite_cell(1.23456, 3), "1.235");
+        assert_eq!(finite_cell(-0.5, 2), "-0.50");
+        assert_eq!(finite_cell(f64::NAN, 4), "");
+        assert_eq!(finite_cell(f64::INFINITY, 4), "");
+        assert_eq!(finite_cell(f64::NEG_INFINITY, 4), "");
     }
 }

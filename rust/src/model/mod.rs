@@ -4,7 +4,8 @@
 //! The [`Session`] trait is the uniform surface (bucket accessors,
 //! parameter store) shared by all session types — PJRT-backed and the
 //! native pure-Rust backend alike; [`Predictor`] adds the engine's
-//! predict entry point; [`ProgramHandle`] centralizes the params-first
+//! predict entry point and [`Trainable`] the trainer's optimize/eval
+//! entry points; [`ProgramHandle`] centralizes the params-first
 //! `run_refs` packing the PJRT sessions use.
 
 pub mod params;
@@ -12,6 +13,6 @@ pub mod session;
 
 pub use params::ParamStore;
 pub use session::{
-    init_params, PredictSession, Predictor, ProgramHandle, Session, StepStats, TrainSession,
-    WeightsSession,
+    init_params, PredictSession, Predictor, ProgramHandle, Session, StepStats, Trainable,
+    TrainSession, WeightsSession,
 };

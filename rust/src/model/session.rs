@@ -114,6 +114,30 @@ pub trait Predictor: Session {
     fn predict(&self, ids: &Tensor) -> Result<Tensor>;
 }
 
+/// The training surface, backend-neutral — the [`Predictor`] mirror for
+/// the optimize path. Implemented by [`TrainSession`] (the exported
+/// `train_step`/`eval_step` XLA programs on PJRT) and
+/// [`crate::hrr::NativeTrainSession`] (pure-Rust reverse-mode autodiff +
+/// Adam); the trainer (`coordinator::train_session`) drives a
+/// `&mut dyn Trainable` and never knows which backend is underneath.
+pub trait Trainable: Session {
+    /// One optimizer step on a batch (ids: (B, T) i32, labels: (B,) i32).
+    fn train_step(&mut self, ids: &Tensor, labels: &Tensor) -> Result<StepStats>;
+
+    /// Loss/accuracy on a batch without updating parameters.
+    fn eval_step(&self, ids: &Tensor, labels: &Tensor) -> Result<StepStats>;
+
+    /// Whether [`Trainable::eval_step`] is available (timing-only
+    /// artifact exports omit the eval program; native always has it).
+    fn has_eval(&self) -> bool;
+
+    /// Checkpoint the parameters.
+    fn save(&self, path: &Path) -> Result<()>;
+
+    /// Restore parameters from a checkpoint (optimizer state resets).
+    fn restore(&mut self, path: &Path) -> Result<()>;
+}
+
 /// Result of one optimizer step.
 #[derive(Debug, Clone, Copy)]
 pub struct StepStats {
@@ -167,7 +191,12 @@ impl TrainSession {
         Ok(TrainSession { params, m, v, step: 0, train, eval, n_params })
     }
 
-    /// Restore parameters from a checkpoint (moments reset to zero).
+    /// Restore parameters from a checkpoint. The optimizer state resets
+    /// with them — Adam moments back to zero and the step counter (bias
+    /// correction + LR schedule) back to 0 — matching the native
+    /// trainer's [`Trainable::restore`] semantics. (The moments used to
+    /// survive a restore, so the first post-restore updates pushed the
+    /// restored weights along the abandoned run's trajectory.)
     pub fn restore(&mut self, path: &Path) -> Result<()> {
         let loaded = ParamStore::load(path)?;
         anyhow::ensure!(
@@ -175,6 +204,9 @@ impl TrainSession {
             "checkpoint param names do not match this model"
         );
         self.params = loaded;
+        self.m = zeros_matching(&self.params);
+        self.v = zeros_matching(&self.params);
+        self.step = 0;
         Ok(())
     }
 
@@ -223,6 +255,28 @@ impl TrainSession {
             loss: outs[0].scalar_f32_value()?,
             acc: outs[1].scalar_f32_value()?,
         })
+    }
+}
+
+impl Trainable for TrainSession {
+    fn train_step(&mut self, ids: &Tensor, labels: &Tensor) -> Result<StepStats> {
+        TrainSession::train_step(self, ids, labels)
+    }
+
+    fn eval_step(&self, ids: &Tensor, labels: &Tensor) -> Result<StepStats> {
+        TrainSession::eval_step(self, ids, labels)
+    }
+
+    fn has_eval(&self) -> bool {
+        TrainSession::has_eval(self)
+    }
+
+    fn save(&self, path: &Path) -> Result<()> {
+        TrainSession::save(self, path)
+    }
+
+    fn restore(&mut self, path: &Path) -> Result<()> {
+        TrainSession::restore(self, path)
     }
 }
 

@@ -119,6 +119,15 @@ impl Tensor {
         }
     }
 
+    /// Mutable view of an f32 tensor's data (the optimizer updates
+    /// parameters and Adam moments in place).
+    pub fn as_f32_mut(&mut self) -> Result<&mut [f32]> {
+        match self {
+            Tensor::F32 { data, .. } => Ok(data),
+            other => bail!("expected f32 tensor, got {:?}", other.dtype()),
+        }
+    }
+
     pub fn as_i32(&self) -> Result<&[i32]> {
         match self {
             Tensor::I32 { data, .. } => Ok(data),

@@ -1,11 +1,13 @@
-//! Integration: the trainer end-to-end over real programs — loss curves,
-//! checkpoints, failure modes. Requires `make artifacts` (core set);
-//! skips cleanly otherwise. Serving-path coverage lives in
+//! Integration: the trainer end-to-end — loss curves, checkpoints,
+//! failure modes. The artifact-backend tests require `make artifacts`
+//! (core set) and skip cleanly otherwise; the native-backend test runs
+//! the same train→eval→checkpoint loop **unconditionally** (pure-Rust
+//! autodiff, no artifacts). Serving-path coverage lives in
 //! integration_engine.rs.
 
 mod common;
 
-use hrrformer::coordinator::trainer::{train, TrainConfig};
+use hrrformer::coordinator::trainer::{train, train_native, TrainConfig};
 use hrrformer::runtime::Runtime;
 
 #[test]
@@ -46,6 +48,48 @@ fn trainer_reduces_loss_and_writes_curve_and_ckpt() {
     // checkpoint restores
     let store = hrrformer::model::ParamStore::load(&ckpt).unwrap();
     assert!(store.total_scalars() > 100_000);
+}
+
+#[test]
+fn native_trainer_runs_the_full_loop_artifact_free() {
+    // no manifest, no PJRT — this must work on a fresh checkout
+    let dir = std::env::temp_dir().join("hrrformer_native_train_it");
+    std::fs::create_dir_all(&dir).unwrap();
+    let curve = dir.join("curve.csv");
+    let ckpt = dir.join("model.ckpt");
+    let _ = std::fs::remove_file(&curve);
+
+    let cfg = TrainConfig {
+        base: "listops_hrrformer_small_T32_B4".into(),
+        seed: 3,
+        steps: 9,
+        eval_every: 3,
+        eval_batches: 1,
+        curve_csv: Some(curve.clone()),
+        ckpt: Some(ckpt.clone()),
+        verbose: false,
+    };
+    let report = train_native(&cfg).unwrap();
+    assert_eq!(report.curve.len(), 3, "3 eval points expected");
+    for p in &report.curve {
+        assert!(p.train_loss.is_finite() && p.test_loss.is_finite(), "{p:?}");
+    }
+    assert!(report.train_secs > 0.0 && report.total_secs >= report.train_secs);
+    assert!(report.examples_per_sec > 0.0);
+
+    // curve CSV exists with header + 3 rows
+    let content = std::fs::read_to_string(&curve).unwrap();
+    assert_eq!(content.lines().count(), 4, "csv rows: {content}");
+    assert!(content.starts_with("step,train_loss"));
+
+    // the checkpoint round-trips into the native *serving* session
+    let store = hrrformer::model::ParamStore::load(&ckpt).unwrap();
+    let cfg = hrrformer::hrr::HrrConfig::from_base("listops_hrrformer_small_T32_B4").unwrap();
+    let serve = hrrformer::hrr::NativeSession::with_params(cfg, store).unwrap();
+    let logits = serve
+        .predict(&hrrformer::runtime::Tensor::i32(vec![1, 8], vec![1, 2, 3, 4, 5, 6, 7, 8]))
+        .unwrap();
+    assert!(logits.as_f32().unwrap().iter().all(|v| v.is_finite()));
 }
 
 #[test]

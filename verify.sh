@@ -30,10 +30,12 @@ run cargo build --release
 run cargo test -q
 
 # Native-backend suite with artifacts forcibly hidden: property tests,
-# golden-vector parity and the full engine integration suite must pass
-# with zero artifact-skips on a machine that has no artifacts/ at all.
+# golden-vector parity (forward *and* train-curve) and the full engine
+# integration suite must pass with zero artifact-skips on a machine that
+# has no artifacts/ at all.
 run env HRRFORMER_ARTIFACTS=/hrrformer-no-artifacts \
-    cargo test -q --test prop_hrr --test golden_native --test integration_engine
+    cargo test -q --test prop_hrr --test golden_native --test golden_train \
+    --test integration_engine
 
 # Native hot-path bench smoke (artifact-free): exercises the FFT plan
 # cache, the reusable workspaces and the threaded predict fan-out, and
@@ -42,6 +44,20 @@ rm -f BENCH_native.json
 run cargo run --release -- bench native --examples 8
 if [[ ! -s BENCH_native.json ]]; then
     echo "verify: FAIL — bench native did not write BENCH_native.json" >&2
+    exit 1
+fi
+
+# Native training smoke (artifact-free): a tiny `repro train --backend
+# native` job must run the full train→eval→checkpoint loop (reverse-mode
+# autodiff + Adam, --eval-every exercising the periodic-eval path) and
+# end with a finite training loss in the curve CSV.
+rm -f results/verify_train_curve.csv
+run env HRRFORMER_ARTIFACTS=/hrrformer-no-artifacts \
+    cargo run --release -- train --base listops_hrrformer_small_T32_B4 --backend native \
+    --steps 4 --eval-every 2 --eval-batches 1 --curve results/verify_train_curve.csv
+final_loss=$(awk -F, 'NR>1 {v=$2} END {print v}' results/verify_train_curve.csv)
+if ! [[ "$final_loss" =~ ^-?[0-9]+(\.[0-9]+)?$ ]]; then
+    echo "verify: FAIL — native train smoke ended with a non-finite loss ('${final_loss:-missing}')" >&2
     exit 1
 fi
 
