@@ -1,0 +1,137 @@
+//! Streaming-inference demo: classify sequences far past the predict
+//! buckets' reach while the server carries only O(H) state per stream —
+//! the paper's T ≥ 100,000 malware workload as a serving surface.
+//!
+//! Walkthrough:
+//!
+//! 1. A synthetic EMBER corpus is written to a memory-mapped file
+//!    (`data::mmap`, label + raw bytes per record) — the demo reads
+//!    chunks straight off the mapping, never a full row.
+//! 2. `Engine::builder().stream_bucket(BASE)` spawns a dedicated stream
+//!    executor next to the usual predict executors. Clients call
+//!    `open_stream()` → `append_stream(id, bytes)` as data arrives →
+//!    `finish_stream(id)` for the classification. Per open stream the
+//!    server holds a few KB of superposition state plus a bounded
+//!    pending buffer — independent of how many tokens have streamed by.
+//! 3. Client threads drive several streams concurrently; chunk compute
+//!    is dispatched through the engine's shared worker pool, so streams
+//!    and batch traffic draw on one worker budget.
+//! 4. Lifecycle errors are typed: appending to a finished stream yields
+//!    `EngineError::Stream(StreamError::Finished)`, not a string.
+//!
+//! Native backend only — streaming folds tokens incrementally, which the
+//! fixed-shape AOT programs cannot do.
+//!
+//! ```bash
+//! cargo run --release --example stream_demo
+//! cargo run --release --example stream_demo -- --base ember_hrrformer_small_T131072_B1
+//! ```
+
+use std::sync::Arc;
+use std::time::Instant;
+
+use anyhow::Result;
+use hrrformer::data::mmap::{write_corpus, MmapCorpus};
+use hrrformer::data::{by_task, Split};
+use hrrformer::engine::{Engine, EngineError};
+use hrrformer::hrr::HrrConfig;
+use hrrformer::stream::{StreamConfig, StreamError};
+use hrrformer::util::cli::Args;
+
+fn main() -> Result<()> {
+    let args = Args::from_env();
+    // T=4096 keeps the demo snappy; pass the T=131072 base for the
+    // paper-scale run (same code path, just more chunks per stream).
+    let base = args.str("base", "ember_hrrformer_small_T4096_B1");
+    let t = HrrConfig::from_base(&base)?.seq_len;
+    let streams = args.usize("streams", 4);
+    let clients = args.usize("clients", 2).max(1);
+    let piece = args.usize("append-bytes", 4096).max(1);
+    let seed = args.usize("seed", 0) as u32;
+
+    println!("writing {streams} × T={t} corpus (memory-mapped reads, no full-row buffers)…");
+    let corpus_path = std::env::temp_dir().join(format!("hrrformer_stream_demo_T{t}.bin"));
+    let ds = by_task("ember", t)?;
+    write_corpus(&corpus_path, ds.as_ref(), Split::Test, seed as u64, streams, t)?;
+    let corpus = Arc::new(MmapCorpus::open(&corpus_path)?);
+    println!(
+        "corpus open ({})",
+        if corpus.is_mapped() { "mmap" } else { "seek+read fallback" }
+    );
+
+    println!("building stream-only native engine ({base})…");
+    let scfg = StreamConfig {
+        chunk_cap: args.usize("chunk", 4096),
+        ..StreamConfig::new(std::env::temp_dir().join("hrrformer_stream_demo_spool"))
+    };
+    let engine = Engine::builder()
+        .stream_bucket(base.as_str())
+        .stream_config(scfg)
+        .seed(seed)
+        .worker_budget(args.usize("workers", 0))
+        .build_native()?;
+
+    println!("{clients} client threads driving {streams} streams, {piece}-byte appends…");
+    let t0 = Instant::now();
+    let mut joins = Vec::new();
+    for c in 0..clients {
+        let client = engine.client();
+        let corpus = Arc::clone(&corpus);
+        joins.push(std::thread::spawn(move || -> Result<Vec<(usize, usize, usize)>> {
+            let mut outcomes = Vec::new();
+            for r in (c..corpus.len()).step_by(clients) {
+                let id = client.open_stream()?;
+                let mut buf = vec![0u8; piece];
+                let mut off = 0usize;
+                loop {
+                    let got = corpus.read_row_chunk(r, off, &mut buf)?;
+                    if got == 0 {
+                        break;
+                    }
+                    client.append_stream(id, &buf[..got])?;
+                    off += got;
+                }
+                let out = client.finish_stream(id)?;
+                outcomes.push((out.label, out.tokens, out.resident_bytes));
+            }
+            Ok(outcomes)
+        }));
+    }
+
+    let mut malicious = 0usize;
+    let mut tokens = 0usize;
+    let mut resident = None;
+    let mut done = 0usize;
+    for j in joins {
+        for (label, toks, bytes) in j.join().expect("client thread panicked")? {
+            malicious += label; // EMBER: 1 = malicious
+            tokens += toks;
+            assert!(resident.is_none() || resident == Some(bytes), "state must be O(H)");
+            resident = Some(bytes);
+            done += 1;
+        }
+    }
+    let secs = t0.elapsed().as_secs_f64();
+
+    // Typed lifecycle errors: the id is retired after finish.
+    let id = engine.open_stream()?;
+    engine.append_stream(id, &b"tail"[..])?;
+    engine.finish_stream(id)?;
+    match engine.append_stream(id, &b"late"[..]) {
+        Err(EngineError::Stream(StreamError::Finished(late))) => {
+            println!("append after finish → typed error (stream {late} already finished)")
+        }
+        other => panic!("expected Finished, got {other:?}"),
+    }
+
+    println!("\n=== stream_demo report ===");
+    println!("streams classified: {done} ({malicious} malicious)");
+    println!("tokens streamed:    {tokens} ({:.0} tok/s end-to-end)", tokens as f64 / secs);
+    println!(
+        "carried state:      {} B per stream — independent of T={t}",
+        resident.unwrap_or(0)
+    );
+    engine.stop();
+    let _ = std::fs::remove_file(&corpus_path);
+    Ok(())
+}

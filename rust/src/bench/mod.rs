@@ -8,6 +8,7 @@ pub mod inference;
 pub mod lra;
 pub mod native;
 pub mod speed;
+pub mod stream;
 pub mod weights;
 
 use std::path::PathBuf;

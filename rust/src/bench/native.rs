@@ -224,8 +224,18 @@ fn trajectory_doc(rows: &[NativeRow], threads: usize) -> Json {
 }
 
 /// Serialize the sweep as the `BENCH_native.json` trajectory document.
+/// A `"stream"` subtree written by `bench stream` into the same file is
+/// carried over instead of clobbered, so the two sweeps compose in
+/// either order.
 fn write_json(rows: &[NativeRow], threads: usize, path: &Path) -> Result<()> {
-    let doc = trajectory_doc(rows, threads);
+    let mut doc = trajectory_doc(rows, threads);
+    let prior_stream = std::fs::read_to_string(path)
+        .ok()
+        .and_then(|s| Json::parse(&s).ok())
+        .and_then(|j| j.get("stream").cloned());
+    if let (Json::Obj(root), Some(stream)) = (&mut doc, prior_stream) {
+        root.insert("stream".to_string(), stream);
+    }
     std::fs::write(path, format!("{doc}\n"))
         .with_context(|| format!("write {}", path.display()))?;
     eprintln!("[native] trajectory → {}", path.display());

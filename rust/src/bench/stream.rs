@@ -1,0 +1,266 @@
+//! `bench stream` — the streaming subsystem at the paper's headline
+//! scale: T = 131072 EMBER malware classification with O(H) carried
+//! state, fed from a memory-mapped corpus.
+//!
+//! For each chunk size in the sweep, every corpus row is classified by
+//! the chunked multi-pass forward reading straight from the mapping —
+//! no full-row token vector is ever materialized — and the sweep
+//! records end-to-end token throughput plus the per-stream resident
+//! model state (which the run asserts is identical for every stream,
+//! i.e. independent of T).
+//!
+//! Results merge into the `BENCH_native.json` trajectory under a
+//! `"stream"` key, alongside (not clobbering) `bench native`'s rows.
+
+use std::collections::BTreeMap;
+use std::path::{Path, PathBuf};
+use std::time::Instant;
+
+use anyhow::{Context, Result};
+
+use crate::data::mmap::{write_corpus, MmapCorpus};
+use crate::data::{by_task, Split};
+use crate::hrr::NativeSession;
+use crate::stream::classify_source;
+use crate::util::json::Json;
+use crate::util::table::Table;
+
+pub struct StreamBenchCfg {
+    /// Streaming bucket base; T and B parse from the string, so the
+    /// paper-scale default can be dialed down for smoke runs.
+    pub base: String,
+    /// Corpus rows (= streams classified per chunk size).
+    pub rows: usize,
+    /// Chunk-size sweep (tokens folded per kernel dispatch).
+    pub chunks: Vec<usize>,
+    pub seed: u64,
+    /// Trajectory file to merge into (same file as `bench native`).
+    pub out: PathBuf,
+    /// Corpus file location; None = under the OS temp dir.
+    pub corpus: Option<PathBuf>,
+}
+
+impl Default for StreamBenchCfg {
+    fn default() -> Self {
+        StreamBenchCfg {
+            base: "ember_hrrformer_small_T131072_B1".into(),
+            rows: 2,
+            chunks: vec![8192, 65536],
+            seed: 0,
+            out: PathBuf::from("BENCH_native.json"),
+            corpus: None,
+        }
+    }
+}
+
+#[derive(Debug, Clone)]
+pub struct StreamSweepRow {
+    pub chunk: usize,
+    pub tokens_per_sec: f64,
+    pub streams_per_sec: f64,
+    pub secs: f64,
+}
+
+#[derive(Debug, Clone)]
+pub struct StreamBenchReport {
+    pub base: String,
+    pub seq_len: usize,
+    pub rows: usize,
+    pub mmap_active: bool,
+    /// Carried model state per stream — O(H), same for every stream
+    /// and chunk size.
+    pub resident_state_bytes: usize,
+    pub sweep: Vec<StreamSweepRow>,
+}
+
+pub fn run(cfg: &StreamBenchCfg) -> Result<StreamBenchReport> {
+    let seed32 = u32::try_from(cfg.seed).context("--seed must fit in u32")?;
+    anyhow::ensure!(cfg.rows >= 1, "--examples must be ≥ 1");
+    anyhow::ensure!(!cfg.chunks.is_empty(), "chunk sweep must be non-empty");
+    let sess = NativeSession::create(&cfg.base, seed32)?;
+    let t = sess.cfg().seq_len;
+
+    // Generate (or overwrite) the corpus; at the default scale this is
+    // rows × (T + 4) bytes on disk, never rows × T in memory.
+    let corpus_path = cfg
+        .corpus
+        .clone()
+        .unwrap_or_else(|| std::env::temp_dir().join(format!("hrrformer_stream_bench_T{t}.bin")));
+    let ds = by_task(&sess.cfg().task, t).context("stream bench dataset")?;
+    eprintln!("[stream] writing {} × T={t} corpus → {}", cfg.rows, corpus_path.display());
+    write_corpus(&corpus_path, ds.as_ref(), Split::Test, cfg.seed, cfg.rows, t)?;
+    let corpus = MmapCorpus::open(&corpus_path)?;
+    eprintln!(
+        "[stream] corpus open ({}); sweeping chunk sizes {:?} over {} streams…",
+        if corpus.is_mapped() { "memory-mapped" } else { "seek+read fallback" },
+        cfg.chunks,
+        cfg.rows
+    );
+
+    let mut resident: Option<usize> = None;
+    let mut sweep = Vec::new();
+    for &chunk in &cfg.chunks {
+        anyhow::ensure!(chunk >= 1, "chunk size must be ≥ 1");
+        let t0 = Instant::now();
+        for r in 0..cfg.rows {
+            let mut src = corpus.row_source(r)?;
+            let (_logits, st) = classify_source(&sess, &mut src, chunk)?;
+            // The whole point of the subsystem: carried state does not
+            // grow with T. Any chunk size / stream mismatch is a bug.
+            let bytes = st.resident_bytes();
+            match resident {
+                None => resident = Some(bytes),
+                Some(prev) => anyhow::ensure!(
+                    prev == bytes,
+                    "resident state varied across streams ({prev} vs {bytes} bytes)"
+                ),
+            }
+        }
+        let secs = t0.elapsed().as_secs_f64().max(1e-9);
+        let tokens = (cfg.rows * t) as f64;
+        let row = StreamSweepRow {
+            chunk,
+            tokens_per_sec: tokens / secs,
+            streams_per_sec: cfg.rows as f64 / secs,
+            secs,
+        };
+        eprintln!(
+            "[stream] chunk {chunk}: {:.0} tok/s ({:.2} streams/s)",
+            row.tokens_per_sec, row.streams_per_sec
+        );
+        sweep.push(row);
+    }
+
+    let report = StreamBenchReport {
+        base: cfg.base.clone(),
+        seq_len: t,
+        rows: cfg.rows,
+        mmap_active: corpus.is_mapped(),
+        resident_state_bytes: resident.unwrap_or(0),
+        sweep,
+    };
+
+    let mut table = Table::new(
+        &format!(
+            "Streaming forward — T={t}, {} streams, {} B carried state/stream",
+            report.rows, report.resident_state_bytes
+        ),
+        &["Chunk", "tokens/s", "streams/s", "secs"],
+    );
+    for r in &report.sweep {
+        table.row(vec![
+            r.chunk.to_string(),
+            format!("{:.0}", r.tokens_per_sec),
+            format!("{:.2}", r.streams_per_sec),
+            format!("{:.2}", r.secs),
+        ]);
+    }
+    table.print();
+
+    merge_into_trajectory(&cfg.out, stream_doc(&report))?;
+    eprintln!("[stream] trajectory merged → {}", cfg.out.display());
+    let _ = std::fs::remove_file(&corpus_path);
+    Ok(report)
+}
+
+/// The `"stream"` subtree of the trajectory document.
+fn stream_doc(report: &StreamBenchReport) -> Json {
+    let sweep = report
+        .sweep
+        .iter()
+        .map(|r| {
+            let mut m = BTreeMap::new();
+            m.insert("chunk".to_string(), Json::Num(r.chunk as f64));
+            m.insert("tokens_per_sec".to_string(), Json::Num(r.tokens_per_sec));
+            m.insert("streams_per_sec".to_string(), Json::Num(r.streams_per_sec));
+            Json::Obj(m)
+        })
+        .collect();
+    let mut m = BTreeMap::new();
+    m.insert("base".to_string(), Json::Str(report.base.clone()));
+    m.insert("seq_len".to_string(), Json::Num(report.seq_len as f64));
+    m.insert("rows".to_string(), Json::Num(report.rows as f64));
+    m.insert("mmap".to_string(), Json::Bool(report.mmap_active));
+    m.insert(
+        "resident_state_bytes_per_stream".to_string(),
+        Json::Num(report.resident_state_bytes as f64),
+    );
+    m.insert("sweep".to_string(), Json::Arr(sweep));
+    Json::Obj(m)
+}
+
+/// Insert `doc` under the `"stream"` key of the trajectory file,
+/// preserving whatever else (e.g. `bench native` rows) is already
+/// there; a missing or unparseable file starts a fresh document.
+fn merge_into_trajectory(path: &Path, doc: Json) -> Result<()> {
+    let mut root = match std::fs::read_to_string(path).ok().and_then(|s| Json::parse(&s).ok()) {
+        Some(Json::Obj(m)) => m,
+        _ => {
+            let mut m = BTreeMap::new();
+            m.insert("bench".to_string(), Json::Str("native".to_string()));
+            m
+        }
+    };
+    root.insert("stream".to_string(), doc);
+    let out = Json::Obj(root);
+    std::fs::write(path, format!("{out}\n")).with_context(|| format!("write {}", path.display()))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn tmp(name: &str) -> PathBuf {
+        let dir = std::env::temp_dir().join("hrrformer_bench_stream_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        dir.join(name)
+    }
+
+    #[test]
+    fn merge_preserves_existing_trajectory_keys() {
+        let path = tmp("merge.json");
+        std::fs::write(&path, "{\"bench\":\"native\",\"threads\":4,\"rows\":[{\"base\":\"x\"}]}\n")
+            .unwrap();
+        let mut m = BTreeMap::new();
+        m.insert("seq_len".to_string(), Json::Num(64.0));
+        merge_into_trajectory(&path, Json::Obj(m)).unwrap();
+        let parsed = Json::parse(&std::fs::read_to_string(&path).unwrap()).unwrap();
+        assert_eq!(parsed.get("threads").and_then(Json::as_usize), Some(4));
+        assert_eq!(parsed.get("rows").and_then(Json::as_arr).map(|a| a.len()), Some(1));
+        assert_eq!(
+            parsed.get("stream").and_then(|s| s.get("seq_len")).and_then(Json::as_usize),
+            Some(64)
+        );
+    }
+
+    #[test]
+    fn tiny_sweep_runs_end_to_end_and_merges() {
+        let out = tmp("traj.json");
+        let _ = std::fs::remove_file(&out);
+        let cfg = StreamBenchCfg {
+            base: "ember_hrrformer_small_T64_B1".into(),
+            rows: 1,
+            chunks: vec![16],
+            seed: 3,
+            out: out.clone(),
+            corpus: Some(tmp("corpus.bin")),
+        };
+        let report = run(&cfg).unwrap();
+        assert_eq!(report.seq_len, 64);
+        assert!(report.resident_state_bytes > 0);
+        assert_eq!(report.sweep.len(), 1);
+        let parsed = Json::parse(&std::fs::read_to_string(&out).unwrap()).unwrap();
+        let stream = parsed.get("stream").expect("stream key");
+        assert_eq!(stream.get("mmap").and_then(Json::as_bool), Some(cfg_mapped()));
+        assert_eq!(
+            stream.get("resident_state_bytes_per_stream").and_then(Json::as_usize),
+            Some(report.resident_state_bytes)
+        );
+    }
+
+    /// On unix the corpus should really map; elsewhere the fallback is
+    /// expected and the trajectory records it honestly.
+    fn cfg_mapped() -> bool {
+        cfg!(unix)
+    }
+}

@@ -1,0 +1,390 @@
+//! Memory-mapped corpus for paper-scale streaming inputs (EMBER at
+//! T = 131072): rows are consumed in O(chunk) pieces straight from the
+//! page cache — no full-row `Vec` is ever materialized on the read
+//! path, which is the point at 128 KiB+ per row.
+//!
+//! ## On-disk format (`HRRMMAP1`)
+//!
+//! ```text
+//! magic    8 bytes   b"HRRMMAP1"
+//! count    u32 LE    number of rows
+//! seq_len  u32 LE    bytes per row
+//! records  count ×  [ label u32 LE | seq_len raw bytes ]
+//! ```
+//!
+//! Records interleave label and payload so [`write_corpus`] streams one
+//! example at a time (O(seq_len) writer memory, no second pass).
+//!
+//! ## Mapping
+//!
+//! The crate is dependency-free by charter, so on unix the mapping is a
+//! direct `mmap(2)` FFI call (read-only, `MAP_PRIVATE`); everywhere
+//! else — or if the syscall fails — [`MmapCorpus`] degrades to a
+//! seek+read fallback over the same format with the same API and the
+//! same O(chunk) memory profile.
+
+use std::fs::File;
+use std::io::{Read, Seek, SeekFrom, Write};
+use std::path::Path;
+use std::sync::Mutex;
+
+use anyhow::{Context, Result};
+
+use crate::data::{Dataset, Split, Stream};
+use crate::stream::ChunkSource;
+
+const MAGIC: &[u8; 8] = b"HRRMMAP1";
+const HEADER_LEN: usize = 16;
+
+/// Generate `count` examples from `ds` and write them as an
+/// `HRRMMAP1` corpus. Every example must be exactly `seq_len` tokens in
+/// `1..=256` (EMBER bytes shifted off PAD); the stored byte is
+/// `token - 1`.
+pub fn write_corpus(
+    path: &Path,
+    ds: &dyn Dataset,
+    split: Split,
+    seed: u64,
+    count: usize,
+    seq_len: usize,
+) -> Result<()> {
+    let file = File::create(path)
+        .with_context(|| format!("create mmap corpus {}", path.display()))?;
+    let mut w = std::io::BufWriter::new(file);
+    w.write_all(MAGIC)?;
+    w.write_all(&u32::try_from(count).context("corpus count exceeds u32")?.to_le_bytes())?;
+    w.write_all(&u32::try_from(seq_len).context("corpus seq_len exceeds u32")?.to_le_bytes())?;
+    let mut stream = Stream::new(ds, split, seed);
+    let mut row = vec![0u8; seq_len];
+    for r in 0..count {
+        let ex = stream.next_example();
+        anyhow::ensure!(
+            ex.ids.len() == seq_len,
+            "example {r}: got {} tokens, corpus rows are fixed at {seq_len}",
+            ex.ids.len()
+        );
+        for (b, &t) in row.iter_mut().zip(&ex.ids) {
+            anyhow::ensure!((1..=256).contains(&t), "example {r}: token {t} is not a byte+1");
+            *b = (t - 1) as u8;
+        }
+        w.write_all(&(ex.label as u32).to_le_bytes())?;
+        w.write_all(&row)?;
+    }
+    w.flush().context("flush mmap corpus")?;
+    Ok(())
+}
+
+#[cfg(unix)]
+mod sys {
+    pub const PROT_READ: i32 = 1;
+    pub const MAP_PRIVATE: i32 = 2;
+
+    extern "C" {
+        pub fn mmap(
+            addr: *mut u8,
+            len: usize,
+            prot: i32,
+            flags: i32,
+            fd: i32,
+            offset: i64,
+        ) -> *mut u8;
+        pub fn munmap(addr: *mut u8, len: usize) -> i32;
+    }
+}
+
+/// The two access paths behind one API. `Mapped` is the whole file
+/// mmap'd read-only; `Seek` is the portable fallback.
+enum Backing {
+    #[cfg(unix)]
+    Mapped {
+        ptr: *const u8,
+        len: usize,
+    },
+    Seek(Mutex<File>),
+}
+
+// The mapped pointer is to an immutable, private, read-only mapping
+// that lives exactly as long as the corpus; concurrent reads are safe.
+unsafe impl Send for Backing {}
+unsafe impl Sync for Backing {}
+
+/// A read-only `HRRMMAP1` corpus. Rows are addressed by index; payload
+/// bytes are read in caller-sized chunks.
+pub struct MmapCorpus {
+    backing: Backing,
+    count: usize,
+    seq_len: usize,
+}
+
+impl MmapCorpus {
+    /// Open a corpus, preferring the real memory mapping (unix) and
+    /// silently falling back to seek+read if mapping is unavailable.
+    pub fn open(path: &Path) -> Result<MmapCorpus> {
+        Self::open_impl(path, true)
+    }
+
+    /// Open with the seek+read fallback unconditionally — exercised by
+    /// tests so the portable path stays honest, and useful on
+    /// filesystems where `mmap(2)` misbehaves.
+    pub fn open_unmapped(path: &Path) -> Result<MmapCorpus> {
+        Self::open_impl(path, false)
+    }
+
+    fn open_impl(path: &Path, try_map: bool) -> Result<MmapCorpus> {
+        let mut file =
+            File::open(path).with_context(|| format!("open mmap corpus {}", path.display()))?;
+        let mut header = [0u8; HEADER_LEN];
+        file.read_exact(&mut header).context("read corpus header")?;
+        anyhow::ensure!(&header[..8] == MAGIC, "{} is not an HRRMMAP1 corpus", path.display());
+        let count = u32::from_le_bytes(header[8..12].try_into().unwrap()) as usize;
+        let seq_len = u32::from_le_bytes(header[12..16].try_into().unwrap()) as usize;
+        anyhow::ensure!(seq_len >= 1, "corpus seq_len must be ≥ 1");
+        let need = HEADER_LEN as u64 + (count as u64) * (4 + seq_len as u64);
+        let actual = file.metadata().context("stat corpus")?.len();
+        anyhow::ensure!(
+            actual >= need,
+            "corpus truncated: {} rows × {} bytes need {need} bytes, file has {actual}",
+            count,
+            seq_len
+        );
+
+        let backing = match Self::try_map(&file, need as usize, try_map) {
+            Some(b) => b,
+            None => Backing::Seek(Mutex::new(file)),
+        };
+        Ok(MmapCorpus { backing, count, seq_len })
+    }
+
+    #[cfg(unix)]
+    fn try_map(file: &File, len: usize, try_map: bool) -> Option<Backing> {
+        use std::os::unix::io::AsRawFd;
+        if !try_map || len == 0 {
+            return None;
+        }
+        // SAFETY: read-only private mapping of `len` bytes we just
+        // verified the file to contain; unmapped in Drop.
+        let ptr = unsafe {
+            sys::mmap(
+                std::ptr::null_mut(),
+                len,
+                sys::PROT_READ,
+                sys::MAP_PRIVATE,
+                file.as_raw_fd(),
+                0,
+            )
+        };
+        if ptr as isize == -1 || ptr.is_null() {
+            return None;
+        }
+        Some(Backing::Mapped { ptr, len })
+    }
+
+    #[cfg(not(unix))]
+    fn try_map(_file: &File, _len: usize, _try_map: bool) -> Option<Backing> {
+        None
+    }
+
+    pub fn len(&self) -> usize {
+        self.count
+    }
+
+    pub fn seq_len(&self) -> usize {
+        self.seq_len
+    }
+
+    /// Whether the real memory mapping is active (vs the fallback).
+    pub fn is_mapped(&self) -> bool {
+        match &self.backing {
+            #[cfg(unix)]
+            Backing::Mapped { .. } => true,
+            Backing::Seek(_) => false,
+        }
+    }
+
+    fn read_at(&self, off: u64, buf: &mut [u8]) -> Result<()> {
+        match &self.backing {
+            #[cfg(unix)]
+            Backing::Mapped { ptr, len } => {
+                let off = off as usize;
+                anyhow::ensure!(off + buf.len() <= *len, "corpus read out of bounds");
+                // SAFETY: bounds-checked read inside the live mapping.
+                unsafe {
+                    std::ptr::copy_nonoverlapping(ptr.add(off), buf.as_mut_ptr(), buf.len());
+                }
+                Ok(())
+            }
+            Backing::Seek(file) => {
+                let mut f = file.lock().unwrap();
+                f.seek(SeekFrom::Start(off)).context("seek corpus")?;
+                f.read_exact(buf).context("read corpus")?;
+                Ok(())
+            }
+        }
+    }
+
+    fn record_off(&self, row: usize) -> u64 {
+        HEADER_LEN as u64 + (row as u64) * (4 + self.seq_len as u64)
+    }
+
+    /// The stored class label of `row`.
+    pub fn label(&self, row: usize) -> Result<i32> {
+        anyhow::ensure!(row < self.count, "row {row} out of range ({} rows)", self.count);
+        let mut raw = [0u8; 4];
+        self.read_at(self.record_off(row), &mut raw)?;
+        Ok(u32::from_le_bytes(raw) as i32)
+    }
+
+    /// Copy `buf.len()`-capped payload bytes of `row` starting at byte
+    /// `off` into `buf`; returns the bytes produced (0 at end of row).
+    pub fn read_row_chunk(&self, row: usize, off: usize, buf: &mut [u8]) -> Result<usize> {
+        anyhow::ensure!(row < self.count, "row {row} out of range ({} rows)", self.count);
+        anyhow::ensure!(off <= self.seq_len, "offset {off} past row length {}", self.seq_len);
+        let n = buf.len().min(self.seq_len - off);
+        if n > 0 {
+            self.read_at(self.record_off(row) + 4 + off as u64, &mut buf[..n])?;
+        }
+        Ok(n)
+    }
+
+    /// A rewindable [`ChunkSource`] over one row — the streaming
+    /// kernel's multi-pass replay reads the mapping directly, O(chunk)
+    /// memory regardless of `seq_len`.
+    pub fn row_source(&self, row: usize) -> Result<MmapRowSource<'_>> {
+        anyhow::ensure!(row < self.count, "row {row} out of range ({} rows)", self.count);
+        Ok(MmapRowSource { corpus: self, row, pos: 0, scratch: Vec::new() })
+    }
+}
+
+impl Drop for MmapCorpus {
+    fn drop(&mut self) {
+        #[cfg(unix)]
+        if let Backing::Mapped { ptr, len } = &self.backing {
+            // SAFETY: exactly the mapping created in `try_map`.
+            unsafe {
+                sys::munmap(*ptr as *mut u8, *len);
+            }
+        }
+    }
+}
+
+/// [`ChunkSource`] over one corpus row: reads payload bytes chunkwise
+/// and tokenizes (`byte + 1`) into the caller's buffer. Holds only a
+/// chunk-sized byte scratch.
+pub struct MmapRowSource<'a> {
+    corpus: &'a MmapCorpus,
+    row: usize,
+    pos: usize,
+    scratch: Vec<u8>,
+}
+
+impl ChunkSource for MmapRowSource<'_> {
+    fn len(&self) -> usize {
+        self.corpus.seq_len()
+    }
+
+    fn reset(&mut self) -> Result<()> {
+        self.pos = 0;
+        Ok(())
+    }
+
+    fn next_chunk(&mut self, buf: &mut [i32]) -> Result<usize> {
+        if self.scratch.len() < buf.len() {
+            self.scratch.resize(buf.len(), 0);
+        }
+        let n = self.corpus.read_row_chunk(self.row, self.pos, &mut self.scratch[..buf.len()])?;
+        for (t, &b) in buf[..n].iter_mut().zip(&self.scratch) {
+            *t = b as i32 + 1;
+        }
+        self.pos += n;
+        Ok(n)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::ember::EmberSynth;
+
+    fn tmp(name: &str) -> std::path::PathBuf {
+        let dir = std::env::temp_dir().join("hrrformer_mmap_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        dir.join(name)
+    }
+
+    fn write_tiny(name: &str, count: usize, seq_len: usize) -> std::path::PathBuf {
+        let path = tmp(name);
+        let ds = EmberSynth::new(seq_len);
+        write_corpus(&path, &ds, Split::Test, 42, count, seq_len).unwrap();
+        path
+    }
+
+    #[test]
+    fn roundtrip_matches_generator_on_both_backings() {
+        let (count, seq_len) = (3usize, 64usize);
+        let path = write_tiny("roundtrip.bin", count, seq_len);
+        let ds = EmberSynth::new(seq_len);
+        let mut stream = Stream::new(&ds, Split::Test, 42);
+
+        let mapped = MmapCorpus::open(&path).unwrap();
+        let unmapped = MmapCorpus::open_unmapped(&path).unwrap();
+        assert!(!unmapped.is_mapped());
+        for corpus in [&mapped, &unmapped] {
+            assert_eq!(corpus.len(), count);
+            assert_eq!(corpus.seq_len(), seq_len);
+        }
+        for r in 0..count {
+            let ex = stream.next_example();
+            for corpus in [&mapped, &unmapped] {
+                assert_eq!(corpus.label(r).unwrap(), ex.label);
+                // Chunked reads with an awkward prime chunk size must
+                // reassemble the exact token row.
+                let mut src = corpus.row_source(r).unwrap();
+                let mut buf = [0i32; 13];
+                let mut ids = Vec::new();
+                loop {
+                    let n = src.next_chunk(&mut buf).unwrap();
+                    if n == 0 {
+                        break;
+                    }
+                    ids.extend_from_slice(&buf[..n]);
+                }
+                assert_eq!(ids, ex.ids, "row {r} mapped={}", corpus.is_mapped());
+            }
+        }
+    }
+
+    #[test]
+    fn row_source_rewinds_identically() {
+        let path = write_tiny("rewind.bin", 1, 48);
+        let corpus = MmapCorpus::open(&path).unwrap();
+        let mut src = corpus.row_source(0).unwrap();
+        let mut buf = [0i32; 48];
+        let n1 = src.next_chunk(&mut buf).unwrap();
+        let first: Vec<i32> = buf[..n1].to_vec();
+        src.reset().unwrap();
+        let n2 = src.next_chunk(&mut buf).unwrap();
+        assert_eq!(n1, n2);
+        assert_eq!(first, &buf[..n2]);
+    }
+
+    #[test]
+    fn rejects_corrupt_header_and_truncation() {
+        let path = tmp("bad_magic.bin");
+        std::fs::write(&path, b"NOTMAGIC\0\0\0\0\0\0\0\0").unwrap();
+        assert!(MmapCorpus::open(&path).is_err());
+
+        let good = write_tiny("truncate.bin", 2, 32);
+        let bytes = std::fs::read(&good).unwrap();
+        let cut = tmp("cut.bin");
+        std::fs::write(&cut, &bytes[..bytes.len() - 5]).unwrap();
+        assert!(MmapCorpus::open(&cut).is_err());
+    }
+
+    #[test]
+    fn out_of_range_rows_error() {
+        let path = write_tiny("range.bin", 1, 16);
+        let corpus = MmapCorpus::open(&path).unwrap();
+        assert!(corpus.label(1).is_err());
+        assert!(corpus.row_source(1).is_err());
+    }
+}

@@ -10,6 +10,7 @@ pub mod batch;
 pub mod ember;
 pub mod image;
 pub mod listops;
+pub mod mmap;
 pub mod pathfinder;
 pub mod retrieval;
 pub mod text;

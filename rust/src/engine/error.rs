@@ -6,6 +6,8 @@
 
 use std::fmt;
 
+use crate::stream::StreamError;
+
 /// Why an inference request failed.
 #[derive(Debug, Clone, PartialEq, Eq)]
 pub enum EngineError {
@@ -20,6 +22,20 @@ pub enum EngineError {
     Predict(String),
     /// The engine has shut down (or dropped the reply channel mid-wait).
     Shutdown,
+    /// The engine was built without a streaming bucket
+    /// (`EngineBuilder::stream_bucket`), so stream calls cannot be
+    /// served.
+    StreamUnavailable,
+    /// A stream lifecycle operation failed; the typed
+    /// [`StreamError`] distinguishes unknown ids, append-after-finish,
+    /// idle eviction and capacity.
+    Stream(StreamError),
+}
+
+impl From<StreamError> for EngineError {
+    fn from(e: StreamError) -> EngineError {
+        EngineError::Stream(e)
+    }
 }
 
 impl fmt::Display for EngineError {
@@ -29,6 +45,10 @@ impl fmt::Display for EngineError {
             EngineError::BucketMissing => write!(f, "no bucket available for this request"),
             EngineError::Predict(e) => write!(f, "predict failed: {e}"),
             EngineError::Shutdown => write!(f, "engine is shut down"),
+            EngineError::StreamUnavailable => {
+                write!(f, "engine has no streaming bucket (build with stream_bucket)")
+            }
+            EngineError::Stream(e) => write!(f, "stream error: {e}"),
         }
     }
 }

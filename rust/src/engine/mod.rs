@@ -63,9 +63,22 @@
 //! [`Engine::client`] hands out cheap cloneable handles for concurrent
 //! client threads. Shutdown (`stop()` or drop) drains every queue before
 //! joining the threads.
+//!
+//! # Streaming
+//!
+//! [`EngineBuilder::stream_bucket`] (native only) adds a dedicated
+//! stream executor thread owning a [`crate::stream::StreamRegistry`]:
+//! clients `open_stream`, `append_stream` raw bytes as they arrive, and
+//! `finish_stream` for the classification. The server never
+//! materializes a (B, T) tensor for streams — it carries O(H) state per
+//! open stream and replays an on-disk token spool for the multi-pass
+//! forward — so the streaming bucket's T (131072 for the paper's EMBER
+//! workload) can dwarf the batch ladder's. Chunk compute runs on the
+//! same shared worker pool as batch traffic.
 
 pub mod error;
 mod executor;
+mod stream_exec;
 
 pub use error::EngineError;
 
@@ -84,9 +97,11 @@ use crate::hrr::HrrConfig;
 use crate::metrics::{LatencyHist, RunMeter};
 use crate::model::ParamStore;
 use crate::runtime::Manifest;
+use crate::stream::{StreamConfig, StreamOutcome};
 use crate::util::pool::{default_budget, WorkerPool};
 
 use executor::{ExecMsg, ExecutorConfig, Job};
+use stream_exec::{StreamExecConfig, StreamMsg};
 
 /// The default EMBER serving ladder — the three predict buckets
 /// `repro serve`, `bench inference --engine` and the demos stand up.
@@ -248,6 +263,8 @@ enum Msg {
 pub struct EngineClient {
     tx: SyncSender<Msg>,
     stats: Arc<EngineStats>,
+    /// Present when the engine was built with a streaming bucket.
+    stream_tx: Option<SyncSender<StreamMsg>>,
 }
 
 impl EngineClient {
@@ -298,6 +315,42 @@ impl EngineClient {
     pub fn stats(&self) -> &Arc<EngineStats> {
         &self.stats
     }
+
+    fn stream_channel(&self) -> Result<&SyncSender<StreamMsg>, EngineError> {
+        self.stream_tx.as_ref().ok_or(EngineError::StreamUnavailable)
+    }
+
+    /// Open a new inference stream on the streaming bucket. The server
+    /// carries O(H) model state per open stream, independent of how
+    /// many bytes will be appended.
+    pub fn open_stream(&self) -> Result<u64, EngineError> {
+        let (tx, rx) = sync_channel(1);
+        self.stream_channel()?
+            .send(StreamMsg::Open { reply: tx })
+            .map_err(|_| EngineError::Shutdown)?;
+        rx.recv().map_err(|_| EngineError::Shutdown)?.map_err(EngineError::from)
+    }
+
+    /// Append raw bytes to an open stream (tokenized server-side,
+    /// folded incrementally into the carried state). Returns the total
+    /// bytes appended so far; bytes beyond the bucket's T are dropped
+    /// and reported as `truncated` at finish.
+    pub fn append_stream(&self, id: u64, bytes: impl Into<Vec<u8>>) -> Result<usize, EngineError> {
+        let (tx, rx) = sync_channel(1);
+        self.stream_channel()?
+            .send(StreamMsg::Append { id, bytes: bytes.into(), reply: tx })
+            .map_err(|_| EngineError::Shutdown)?;
+        rx.recv().map_err(|_| EngineError::Shutdown)?.map_err(EngineError::from)
+    }
+
+    /// Finish a stream: run the remaining replay passes and classify.
+    pub fn finish_stream(&self, id: u64) -> Result<StreamOutcome, EngineError> {
+        let (tx, rx) = sync_channel(1);
+        self.stream_channel()?
+            .send(StreamMsg::Finish { id, reply: tx })
+            .map_err(|_| EngineError::Shutdown)?;
+        rx.recv().map_err(|_| EngineError::Shutdown)?.map_err(EngineError::from)
+    }
 }
 
 struct BucketSpec {
@@ -315,6 +368,8 @@ pub struct EngineBuilder {
     seed: u32,
     backend: Backend,
     worker_budget: usize,
+    stream_base: Option<String>,
+    stream_cfg: Option<StreamConfig>,
 }
 
 impl Default for EngineBuilder {
@@ -326,6 +381,8 @@ impl Default for EngineBuilder {
             seed: 0,
             backend: Backend::default(),
             worker_budget: 0,
+            stream_base: None,
+            stream_cfg: None,
         }
     }
 }
@@ -405,6 +462,26 @@ impl EngineBuilder {
         self
     }
 
+    /// Add the *streaming* bucket: a dedicated executor serving
+    /// `open_stream`/`append_stream`/`finish_stream` on program base
+    /// `base` (typically the paper-scale
+    /// `ember_hrrformer_small_T131072_B1`). Unlike predict buckets no
+    /// (B, T) tensor is ever materialized — the executor carries O(H)
+    /// state per open stream and replays an on-disk spool, so T can be
+    /// far beyond what the batch path would allocate. Native backend
+    /// only.
+    pub fn stream_bucket(mut self, base: impl Into<String>) -> Self {
+        self.stream_base = Some(base.into());
+        self
+    }
+
+    /// Override the streaming bucket's registry tuning
+    /// (chunk size, idle timeout, spool directory, max open streams).
+    pub fn stream_config(mut self, cfg: StreamConfig) -> Self {
+        self.stream_cfg = Some(cfg);
+        self
+    }
+
     /// Build all buckets and start the engine. Blocks until every
     /// executor has built its session (or one fails — then every thread
     /// is torn down and the error is returned). With
@@ -422,8 +499,15 @@ impl EngineBuilder {
     }
 
     fn build_impl(self, manifest: Option<&Manifest>) -> Result<Engine> {
-        anyhow::ensure!(!self.buckets.is_empty(), "no predict buckets configured");
+        anyhow::ensure!(
+            !self.buckets.is_empty() || self.stream_base.is_some(),
+            "no predict or stream buckets configured"
+        );
         let backend = self.backend;
+        anyhow::ensure!(
+            self.stream_base.is_none() || backend == Backend::Native,
+            "streaming buckets require the native backend (artifact programs are fixed-shape)"
+        );
 
         // Resolve bucket shapes up front: unknown bases fail here, before
         // any thread or compile work starts.
@@ -462,10 +546,12 @@ impl EngineBuilder {
         };
 
         // One persistent worker pool for the whole engine, created once
-        // here and shared by every native bucket executor: N busy
-        // buckets split the same `budget` threads instead of each
-        // spawning `available_parallelism` scoped workers per batch
-        // (which oversubscribed cores and paid spawn cost per flush).
+        // here and shared by every native bucket executor — and by the
+        // stream executor, whose per-chunk compute runs as pool tasks:
+        // N busy buckets plus streaming split the same `budget` threads
+        // instead of each spawning `available_parallelism` scoped
+        // workers per batch (which oversubscribed cores and paid spawn
+        // cost per flush).
         let pool = match backend {
             Backend::Native => {
                 let budget = if self.worker_budget == 0 {
@@ -507,6 +593,31 @@ impl EngineBuilder {
             buckets.push(bucket);
         }
 
+        // The streaming bucket gets its own executor thread owning the
+        // StreamRegistry; lifecycle messages serialize through one
+        // bounded channel exactly like predict jobs do per bucket.
+        let mut stream_tx: Option<SyncSender<StreamMsg>> = None;
+        if let Some(base) = self.stream_base {
+            let scfg = self
+                .stream_cfg
+                .unwrap_or_else(|| StreamConfig::new(std::env::temp_dir().join("hrrformer_streams")));
+            let (tx, stream_rx) = sync_channel::<StreamMsg>(self.queue_depth);
+            let (ready_tx, ready_rx) = sync_channel::<Result<()>>(1);
+            let cfg = StreamExecConfig {
+                base: base.clone(),
+                seed: self.seed,
+                cfg: scfg,
+                pool: pool.clone(),
+            };
+            let thread = std::thread::Builder::new()
+                .name("hrr-stream".into())
+                .spawn(move || stream_exec::run_stream_executor(cfg, stream_rx, ready_tx))
+                .context("spawn stream executor")?;
+            readies.push((base, ready_rx));
+            threads.push(thread);
+            stream_tx = Some(tx);
+        }
+
         let mut startup_err = None;
         for (base, ready) in readies {
             let res = match ready.recv() {
@@ -522,6 +633,9 @@ impl EngineBuilder {
                 let _ = tx.send(ExecMsg::Shutdown);
             }
             drop(job_txs);
+            if let Some(tx) = stream_tx.take() {
+                let _ = tx.send(StreamMsg::Shutdown);
+            }
             for t in threads {
                 let _ = t.join();
             }
@@ -540,10 +654,11 @@ impl EngineBuilder {
         threads.insert(0, routing);
 
         Ok(Engine {
-            client: EngineClient { tx, stats },
+            client: EngineClient { tx, stats, stream_tx: stream_tx.clone() },
             buckets,
             threads,
             pool,
+            stream_tx,
         })
     }
 }
@@ -559,6 +674,9 @@ pub struct Engine {
     /// Held so the pool outlives every executor; released — joining the
     /// pool threads — only after the executors have drained and joined.
     pool: Option<Arc<WorkerPool>>,
+    /// Shutdown handle for the stream executor (None when built
+    /// without a streaming bucket).
+    stream_tx: Option<SyncSender<StreamMsg>>,
 }
 
 impl Engine {
@@ -584,6 +702,22 @@ impl Engine {
     /// Submit and wait for the reply.
     pub fn classify(&self, ids: Vec<i32>) -> Result<InferReply, EngineError> {
         self.client.classify(ids)
+    }
+
+    /// Open an inference stream (see [`EngineClient::open_stream`]).
+    pub fn open_stream(&self) -> Result<u64, EngineError> {
+        self.client.open_stream()
+    }
+
+    /// Append bytes to a stream (see [`EngineClient::append_stream`]).
+    pub fn append_stream(&self, id: u64, bytes: impl Into<Vec<u8>>) -> Result<usize, EngineError> {
+        self.client.append_stream(id, bytes)
+    }
+
+    /// Finish and classify a stream
+    /// (see [`EngineClient::finish_stream`]).
+    pub fn finish_stream(&self, id: u64) -> Result<StreamOutcome, EngineError> {
+        self.client.finish_stream(id)
     }
 
     /// The compiled (seq_len, batch) buckets, sorted by seq_len.
@@ -612,6 +746,9 @@ impl Engine {
             return;
         }
         let _ = self.client.tx.send(Msg::Shutdown);
+        if let Some(tx) = self.stream_tx.take() {
+            let _ = tx.send(StreamMsg::Shutdown);
+        }
         for t in self.threads.drain(..) {
             let _ = t.join();
         }

@@ -1,0 +1,89 @@
+//! The engine's stream executor thread: owns the [`StreamRegistry`]
+//! and serializes every stream lifecycle operation through one bounded
+//! channel, mirroring the per-bucket predict executors.
+//!
+//! One thread is enough because per-chunk *compute* is dispatched to
+//! the engine's shared [`crate::util::pool::WorkerPool`] by the
+//! registry itself (the thread mostly shuffles bytes and O(H) state),
+//! and a single owner makes eviction and the id space race-free. Idle
+//! sweeps piggyback on the receive timeout, so an otherwise quiet
+//! engine still evicts abandoned streams.
+
+use std::sync::mpsc::{Receiver, RecvTimeoutError, SyncSender};
+use std::time::Duration;
+
+use anyhow::{Context, Result};
+
+use crate::hrr::{NativeSession, RowScheduler};
+use crate::stream::{StreamConfig, StreamError, StreamOutcome, StreamRegistry};
+
+/// One stream lifecycle operation, as sent by `EngineClient`.
+pub(crate) enum StreamMsg {
+    Open { reply: SyncSender<Result<u64, StreamError>> },
+    Append { id: u64, bytes: Vec<u8>, reply: SyncSender<Result<usize, StreamError>> },
+    Finish { id: u64, reply: SyncSender<Result<StreamOutcome, StreamError>> },
+    Shutdown,
+}
+
+/// Everything the stream executor needs to build its registry.
+pub(crate) struct StreamExecConfig {
+    /// Program base of the streaming bucket
+    /// (e.g. `ember_hrrformer_small_T131072_B1`).
+    pub base: String,
+    pub seed: u32,
+    pub cfg: StreamConfig,
+    /// The engine's shared worker pool; chunk compute runs as pool
+    /// tasks so streams share the engine-wide worker budget.
+    pub pool: Option<std::sync::Arc<crate::util::pool::WorkerPool>>,
+}
+
+/// How often the executor wakes to evict idle streams when no requests
+/// arrive.
+const SWEEP_TICK: Duration = Duration::from_millis(250);
+
+/// Thread body: build the native session + registry (signalling
+/// readiness), then serve lifecycle messages until shutdown.
+pub(crate) fn run_stream_executor(
+    cfg: StreamExecConfig,
+    rx: Receiver<StreamMsg>,
+    ready: SyncSender<Result<()>>,
+) {
+    let mut registry = match build_registry(cfg) {
+        Ok(r) => {
+            let _ = ready.send(Ok(()));
+            r
+        }
+        Err(e) => {
+            let _ = ready.send(Err(e));
+            return;
+        }
+    };
+
+    loop {
+        match rx.recv_timeout(SWEEP_TICK) {
+            Ok(StreamMsg::Open { reply }) => {
+                let _ = reply.send(registry.open());
+            }
+            Ok(StreamMsg::Append { id, bytes, reply }) => {
+                let _ = reply.send(registry.append(id, &bytes));
+            }
+            Ok(StreamMsg::Finish { id, reply }) => {
+                let _ = reply.send(registry.finish(id));
+            }
+            Ok(StreamMsg::Shutdown) | Err(RecvTimeoutError::Disconnected) => return,
+            Err(RecvTimeoutError::Timeout) => {}
+        }
+        registry.sweep_idle();
+    }
+}
+
+fn build_registry(cfg: StreamExecConfig) -> Result<StreamRegistry> {
+    let sess = NativeSession::create(&cfg.base, cfg.seed)
+        .with_context(|| format!("build native stream bucket '{}'", cfg.base))?;
+    let scheduler = match cfg.pool {
+        Some(pool) => RowScheduler::Pool(pool),
+        None => RowScheduler::Sequential,
+    };
+    StreamRegistry::new(sess, scheduler, cfg.cfg)
+        .map_err(|e| anyhow::anyhow!("stream registry: {e}"))
+}

@@ -288,6 +288,14 @@ impl RowGrads {
     fn zeros(cfg: &HrrConfig) -> RowGrads {
         RowGrads { tensors: param_specs(cfg).iter().map(|s| vec![0.0; s.elements()]).collect() }
     }
+
+    /// Reset for reuse by another row: the backward pass accumulates
+    /// into these buffers, so a recycled one must start from zero.
+    fn clear(&mut self) {
+        for t in self.tensors.iter_mut() {
+            t.fill(0.0);
+        }
+    }
 }
 
 /// Output slot of one training row.
@@ -1125,7 +1133,10 @@ where
             }
         }
         RowScheduler::Pool(pool) => {
-            let chunks = pool.budget().clamp(1, b);
+            // Oversubscribed chunk count (see `WorkerPool::task_chunks`):
+            // skewed row costs stop straggling behind a static B/budget
+            // split, and partitioning still can't change per-row math.
+            let chunks = pool.task_chunks(b);
             let rows_per = b.div_ceil(chunks);
             let fref = &f;
             let tasks: Vec<PoolTask<'_>> = rows
@@ -1162,6 +1173,12 @@ pub struct NativeTrainSession {
     v: ParamStore,
     step: u32,
     scheduler: RowScheduler,
+    /// Recycled per-row gradient buffers: [`NativeTrainSession::train_step`]
+    /// returns each batch's `RowGrads` here instead of dropping them, so
+    /// steady-state training stops reallocating ~B parameter-sized f64
+    /// buffers every step. Zero-filled before reuse (the backward pass
+    /// accumulates), so recycling cannot change a single gradient bit.
+    grad_cache: Vec<RowGrads>,
 }
 
 impl NativeTrainSession {
@@ -1195,6 +1212,7 @@ impl NativeTrainSession {
             v,
             step: 0,
             scheduler: RowScheduler::Scoped(crate::util::pool::default_budget()),
+            grad_cache: Vec::new(),
         })
     }
 
@@ -1263,13 +1281,39 @@ impl NativeTrainSession {
         labels: &Tensor,
         scheduler: &RowScheduler,
     ) -> Result<(f64, f64, Vec<Vec<f64>>)> {
+        // fresh (empty) cache: standalone calls keep allocating per
+        // call; `train_step` threads the session's persistent cache in.
+        let mut cache = Vec::new();
+        self.grad_batch_cached(ids, labels, scheduler, &mut cache)
+    }
+
+    /// [`NativeTrainSession::grad_batch`] drawing per-row gradient
+    /// buffers from `cache` (zero-filled before reuse) and returning
+    /// them there afterwards — byte-for-byte the same results, without
+    /// reallocating B parameter-sized buffers per step.
+    fn grad_batch_cached(
+        &self,
+        ids: &Tensor,
+        labels: &Tensor,
+        scheduler: &RowScheduler,
+        cache: &mut Vec<RowGrads>,
+    ) -> Result<(f64, f64, Vec<Vec<f64>>)> {
         let (b, t) = self.check_batch(ids, labels)?;
         let data = ids.as_i32().context("native train ids dtype")?;
         let lab = labels.as_i32()?;
         let rp = ResolvedParams::resolve(&self.cfg, &self.params)?;
 
         let mut rows: Vec<RowOut> = (0..b)
-            .map(|_| RowOut { nll: 0.0, correct: false, grads: RowGrads::zeros(&self.cfg) })
+            .map(|_| {
+                let grads = match cache.pop() {
+                    Some(mut g) => {
+                        g.clear();
+                        g
+                    }
+                    None => RowGrads::zeros(&self.cfg),
+                };
+                RowOut { nll: 0.0, correct: false, grads }
+            })
             .collect();
         let cfg = &self.cfg;
         let run_rows = |row0: usize, chunk: &mut [RowOut]| {
@@ -1315,6 +1359,7 @@ impl NativeTrainSession {
                 *v /= bf;
             }
         }
+        cache.extend(rows.into_iter().map(|r| r.grads));
         Ok((loss / bf, n_correct as f64 / bf, total))
     }
 
@@ -1353,7 +1398,12 @@ impl NativeTrainSession {
     /// counter, exactly like `train_step(…, step)` in model.py.
     pub fn train_step(&mut self, ids: &Tensor, labels: &Tensor) -> Result<StepStats> {
         let scheduler = self.scheduler.clone();
-        let (loss, acc, grads) = self.grad_batch(ids, labels, &scheduler)?;
+        // Thread the session's recycled row-gradient buffers through
+        // (taken out for the call — `grad_batch_cached` borrows &self).
+        let mut cache = std::mem::take(&mut self.grad_cache);
+        let result = self.grad_batch_cached(ids, labels, &scheduler, &mut cache);
+        self.grad_cache = cache;
+        let (loss, acc, grads) = result?;
         self.adam_update(&grads);
         self.step += 1;
         Ok(StepStats { step: self.step, loss: loss as f32, acc: acc as f32 })
@@ -1643,6 +1693,31 @@ mod tests {
             assert_eq!(sa.loss.to_bits(), sb.loss.to_bits());
         }
         assert_eq!(a.params().tensors, b.params().tensors, "params must stay bit-identical");
+    }
+
+    /// Recycled row-gradient buffers must be invisible in the numbers:
+    /// a session reusing its cache across steps walks the exact same
+    /// trajectory as stepping through fresh-allocating `grad_batch`
+    /// calls by hand.
+    #[test]
+    fn grad_buffer_recycling_keeps_trajectory_bit_identical() {
+        let cfg = tiny_cfg();
+        let (ids, labels) = tiny_batch(cfg.seq_len);
+        let mut cached = NativeTrainSession::from_config(cfg.clone(), 11).unwrap();
+        cached.set_scheduler(RowScheduler::Sequential);
+        let mut manual = NativeTrainSession::from_config(cfg, 11).unwrap();
+        for _ in 0..3 {
+            let sa = cached.train_step(&ids, &labels).unwrap();
+            // fresh buffers every call (empty cache inside grad_batch)
+            let (loss, acc, grads) =
+                manual.grad_batch(&ids, &labels, &RowScheduler::Sequential).unwrap();
+            manual.adam_update(&grads);
+            manual.step += 1;
+            assert_eq!(sa.loss.to_bits(), (loss as f32).to_bits());
+            assert_eq!(sa.acc.to_bits(), (acc as f32).to_bits());
+        }
+        assert!(!cached.grad_cache.is_empty(), "train_step must retain buffers for reuse");
+        assert_eq!(cached.params().tensors, manual.params().tensors);
     }
 
     #[test]

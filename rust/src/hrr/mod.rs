@@ -30,7 +30,11 @@
 //!   out through a pluggable [`RowScheduler`] — the engine's shared
 //!   persistent worker pool, a pinned scoped-thread fan-out
 //!   (`predict_threaded`), or sequential — with bit-identical logits
-//!   under every scheduler and worker count.
+//!   under every scheduler and worker count. Also home of the chunked
+//!   *streaming* forward ([`StreamState`], `NativeSession::stream_*`):
+//!   3·L+1 passes over a rewindable token source with O(H) carried
+//!   state per stream — bit-identical to the whole-row forward for
+//!   every chunk size, the kernel under [`crate::stream`].
 //!
 //! Selected at runtime via [`crate::engine::Backend::Native`]
 //! (`--backend native` on the CLI): the whole serving stack — and the
@@ -48,5 +52,8 @@ pub mod plan;
 
 pub use config::HrrConfig;
 pub use grad::{NativeTrainSession, TrainHyper};
-pub use model::{init_native_params, param_specs, NativeSession, RowScheduler, PAD_ID};
+pub use model::{
+    init_native_params, param_specs, NativeSession, RowScheduler, StreamState, StreamWorkspace,
+    PAD_ID,
+};
 pub use plan::FftPlan;

@@ -291,7 +291,15 @@ pub(crate) struct Workspace {
 
 impl Workspace {
     pub(crate) fn new(cfg: &HrrConfig) -> Workspace {
-        let (t, e) = (cfg.seq_len, cfg.embed);
+        Workspace::with_rows(cfg, cfg.seq_len)
+    }
+
+    /// A workspace whose position-indexed buffers hold only `rows`
+    /// positions instead of the config's full seq_len. The streaming
+    /// forward works on chunks of ≤ `rows` tokens at a time, so a
+    /// T=131072 stream never materializes T-sized activations.
+    pub(crate) fn with_rows(cfg: &HrrConfig, rows: usize) -> Workspace {
+        let (t, e) = (rows, cfg.embed);
         let kbins = num_bins(cfg.head_dim());
         Workspace {
             fs: FftScratch::new(cfg.head_dim()),
@@ -317,6 +325,70 @@ impl Workspace {
     }
 }
 
+/// Eq. 1, one position: accumulate `k_i ⊛ v_i` into the β bins (one
+/// complex MAC per frequency bin). `vfr`/`vfi` are kbins scratch.
+///
+/// Shared verbatim by the whole-row attention and the streaming β pass,
+/// so chunk boundaries can never change the per-bin f64 arithmetic —
+/// only the (identical, ascending) order it runs in.
+#[allow(clippy::too_many_arguments)]
+fn accumulate_beta(
+    fs: &mut FftScratch,
+    vfr: &mut [f64],
+    vfi: &mut [f64],
+    br: &mut [f64],
+    bi: &mut [f64],
+    k: &[f32],
+    v: &[f32],
+    kbins: usize,
+) {
+    fs.rfft(v);
+    vfr.copy_from_slice(&fs.re[..kbins]);
+    vfi.copy_from_slice(&fs.im[..kbins]);
+    fs.rfft(k);
+    for j in 0..kbins {
+        br[j] += fs.re[j] * vfr[j] - fs.im[j] * vfi[j];
+        bi[j] += fs.re[j] * vfi[j] + fs.im[j] * vfr[j];
+    }
+}
+
+/// Eqs. 2+3, one position: unbind β with the stabilized exact inverse
+/// of `q_i` (`ur`/`ui` are kbins scratch) and return the cosine
+/// similarity of `v_i` to the retrieved v̂_i — the pre-softmax score.
+/// Shared verbatim by the whole-row attention and every streaming pass
+/// that needs scores (max, denominator, frozen re-weighting).
+#[allow(clippy::too_many_arguments)]
+fn position_score(
+    fs: &mut FftScratch,
+    ur: &mut [f64],
+    ui: &mut [f64],
+    br: &[f64],
+    bi: &[f64],
+    q: &[f32],
+    v: &[f32],
+    kbins: usize,
+    hd: usize,
+) -> f64 {
+    fs.rfft(q);
+    for j in 0..kbins {
+        let d = fs.re[j] * fs.re[j] + fs.im[j] * fs.im[j] + EPS as f64;
+        let ir = fs.re[j] / d;
+        let ii = -fs.im[j] / d;
+        ur[j] = br[j] * ir - bi[j] * ii;
+        ui[j] = br[j] * ii + bi[j] * ir;
+    }
+    fs.irfft(ur, ui);
+    let mut num = 0.0f64;
+    let mut nv = 0.0f64;
+    let mut nh = 0.0f64;
+    for (&a, &b) in v.iter().zip(fs.re[..hd].iter()) {
+        num += a as f64 * b;
+        nv += a as f64 * a as f64;
+        nh += b * b;
+    }
+    num / (nv.sqrt() * nh.sqrt() + EPS as f64)
+}
+
 /// Multi-head HRR attention (Eqs. 1-4) for one sequence: reads
 /// `ws.q/k/v` (t, e) and `ws.mask`, writes the merged mix to `ws.attn`.
 /// All scratch comes from `ws` — nothing allocates.
@@ -336,14 +408,8 @@ fn hrr_attention(cfg: &HrrConfig, ws: &mut Workspace, t: usize) {
             if !mask[i] {
                 continue;
             }
-            fs.rfft(&v[i * e + off..i * e + off + hd]);
-            vfr.copy_from_slice(&fs.re[..kbins]);
-            vfi.copy_from_slice(&fs.im[..kbins]);
-            fs.rfft(&k[i * e + off..i * e + off + hd]);
-            for j in 0..kbins {
-                br[j] += fs.re[j] * vfr[j] - fs.im[j] * vfi[j];
-                bi[j] += fs.re[j] * vfi[j] + fs.im[j] * vfr[j];
-            }
+            let s = i * e + off;
+            accumulate_beta(fs, vfr, vfi, br, bi, &k[s..s + hd], &v[s..s + hd], kbins);
         }
         // Eq. 2+3 — v̂_t = q_t† ⊛ β (stabilized exact inverse), score =
         // cos(v_t, v̂_t). Masked positions get weight 0 (their e^{-1e9}
@@ -353,25 +419,8 @@ fn hrr_attention(cfg: &HrrConfig, ws: &mut Workspace, t: usize) {
             if !mask[i] {
                 continue;
             }
-            fs.rfft(&q[i * e + off..i * e + off + hd]);
-            for j in 0..kbins {
-                let d = fs.re[j] * fs.re[j] + fs.im[j] * fs.im[j] + EPS as f64;
-                let ir = fs.re[j] / d;
-                let ii = -fs.im[j] / d;
-                ur[j] = br[j] * ir - bi[j] * ii;
-                ui[j] = br[j] * ii + bi[j] * ir;
-            }
-            fs.irfft(ur, ui);
-            let vv = &v[i * e + off..i * e + off + hd];
-            let mut num = 0.0f64;
-            let mut nv = 0.0f64;
-            let mut nh = 0.0f64;
-            for (&a, &b) in vv.iter().zip(fs.re[..hd].iter()) {
-                num += a as f64 * b;
-                nv += a as f64 * a as f64;
-                nh += b * b;
-            }
-            scores[i] = num / (nv.sqrt() * nh.sqrt() + EPS as f64);
+            let s = i * e + off;
+            scores[i] = position_score(fs, ur, ui, br, bi, &q[s..s + hd], &v[s..s + hd], kbins, hd);
             smax = smax.max(scores[i]);
         }
         // Eq. 4 — softmax cleanup over T, then re-weight the values.
@@ -507,6 +556,38 @@ impl<'a> ResolvedParams<'a> {
     }
 }
 
+/// Token embedding + positional values for `ids` occupying absolute
+/// positions `p0..p0 + ids.len()`, written to `ws.x` (and the PAD mask
+/// to `ws.mask`). Out-of-range ids clamp like the XLA gather. The
+/// whole-row forward calls this with `p0 = 0`; the streaming forward
+/// calls it per chunk with the chunk's absolute offset, producing the
+/// exact same per-position values.
+fn embed_positions(cfg: &HrrConfig, rp: &ResolvedParams<'_>, ids: &[i32], p0: usize, ws: &mut Workspace) {
+    let e = cfg.embed;
+    for (m, &id) in ws.mask.iter_mut().zip(ids) {
+        *m = id != PAD_ID;
+    }
+    for (i, &id) in ids.iter().enumerate() {
+        let pos = p0 + i;
+        let row = (id.max(0) as usize).min(cfg.vocab - 1);
+        ws.x[i * e..(i + 1) * e].copy_from_slice(&rp.embed[row * e..(row + 1) * e]);
+        match rp.pos {
+            Some(tbl) => {
+                for (xv, &pv) in
+                    ws.x[i * e..(i + 1) * e].iter_mut().zip(&tbl[pos * e..(pos + 1) * e])
+                {
+                    *xv += pv;
+                }
+            }
+            None => {
+                for (j, xv) in ws.x[i * e..(i + 1) * e].iter_mut().enumerate() {
+                    *xv += sinusoid(pos, j, e);
+                }
+            }
+        }
+    }
+}
+
 /// Forward one sequence: `ids` (t ≤ cfg.seq_len) → logits written to
 /// `out` (classes). Every intermediate lives in `ws`, every parameter
 /// slice comes pre-resolved in `rp` — the row loop allocates nothing
@@ -522,28 +603,7 @@ pub(crate) fn forward_row(
     let t = ids.len();
     debug_assert_eq!(out.len(), cfg.classes);
 
-    for (m, &id) in ws.mask.iter_mut().zip(ids) {
-        *m = id != PAD_ID;
-    }
-
-    // embed + positions; out-of-range ids clamp like the XLA gather.
-    for (i, &id) in ids.iter().enumerate() {
-        let row = (id.max(0) as usize).min(cfg.vocab - 1);
-        ws.x[i * e..(i + 1) * e].copy_from_slice(&rp.embed[row * e..(row + 1) * e]);
-        match rp.pos {
-            Some(tbl) => {
-                for (xv, &pv) in ws.x[i * e..(i + 1) * e].iter_mut().zip(&tbl[i * e..(i + 1) * e])
-                {
-                    *xv += pv;
-                }
-            }
-            None => {
-                for (j, xv) in ws.x[i * e..(i + 1) * e].iter_mut().enumerate() {
-                    *xv += sinusoid(i, j, e);
-                }
-            }
-        }
-    }
+    embed_positions(cfg, rp, ids, 0, ws);
 
     for bp in &rp.blocks {
         // attention sub-block (pre-LN, residual)
@@ -589,6 +649,369 @@ pub(crate) fn forward_row(
     }
     matmul_into(&ws.head, rp.head2, 1, cfg.mlp_dim, cfg.classes, out);
     add_bias(out, rp.head2_bias, cfg.classes);
+}
+
+// ---------------------------------------------------------------------------
+// Streaming (chunked) forward — O(H) carried state per stream
+// ---------------------------------------------------------------------------
+//
+// The Hrrformer forward is not single-pass streamable: every position's
+// attention score depends on the *full-sequence* β, and the softmax
+// cleanup needs the global max and denominator. What IS streamable is
+// each of those statistics individually — β is an ascending-order f64
+// sum per bin, the max is exact, and the denominator is an
+// ascending-order f64 sum — and, given a layer's finished statistics,
+// every remaining op in the block (LN, matmuls, score → weight → value,
+// MLP) is strictly per-position. So the chunked forward runs **3L + 1
+// passes** over a rewindable token source (the spirit of Rabe & Staats'
+// chunked O(1)-memory attention, PAPERS.md), recomputing activations
+// chunk-by-chunk from O(chunk)-sized scratch and carrying only
+// [`StreamState`] between chunks:
+//
+//   pass 3ℓ+0  accumulate layer ℓ's β per head       (pass 0 runs
+//              *online*, while bytes are still arriving)
+//   pass 3ℓ+1  layer ℓ's exact score max per head
+//   pass 3ℓ+2  layer ℓ's softmax denominator per head
+//   pass 3L    final LN + masked mean-pool accumulation → logits
+//
+// Within every pass, per-position arithmetic is shared verbatim with
+// the whole-row path ([`embed_positions`], [`accumulate_beta`],
+// [`position_score`], [`matmul_into`] row independence), and every f64
+// accumulation visits positions in ascending order regardless of where
+// chunk boundaries fall — which makes the streamed logits
+// **bit-identical** to [`forward_row`] on the same tokens, for every
+// chunk size (pinned by `rust/tests/stream_native.rs` against the
+// golden fixtures).
+
+/// Frozen attention statistics for one layer of one open stream:
+/// everything the chunked forward carries for that layer, all f64.
+/// `heads × (2·kbins + 2)` values — independent of T.
+struct LayerStreamState {
+    /// β superposition bins, (heads, kbins) row-major (Eq. 1)
+    br: Vec<f64>,
+    bi: Vec<f64>,
+    /// per-head running score max (exact: max is order-free)
+    smax: Vec<f64>,
+    /// per-head softmax denominator Σ exp(s_i − smax), ascending i
+    denom: Vec<f64>,
+}
+
+impl LayerStreamState {
+    fn new(heads: usize, kbins: usize) -> LayerStreamState {
+        LayerStreamState {
+            br: vec![0.0; heads * kbins],
+            bi: vec![0.0; heads * kbins],
+            smax: vec![f64::NEG_INFINITY; heads],
+            denom: vec![0.0; heads],
+        }
+    }
+
+    /// This head's β bins.
+    fn beta(&self, head: usize, kbins: usize) -> (&[f64], &[f64]) {
+        (&self.br[head * kbins..(head + 1) * kbins], &self.bi[head * kbins..(head + 1) * kbins])
+    }
+
+    fn beta_mut(&mut self, head: usize, kbins: usize) -> (&mut [f64], &mut [f64]) {
+        (
+            &mut self.br[head * kbins..(head + 1) * kbins],
+            &mut self.bi[head * kbins..(head + 1) * kbins],
+        )
+    }
+}
+
+/// The complete carried state of one open stream: per-layer attention
+/// statistics plus the pooled-feature accumulator and pass bookkeeping.
+/// **O(H), independent of the stream length** — `resident_bytes()` is
+/// what `bench stream` records and what the O(H) acceptance test pins.
+pub struct StreamState {
+    layers: Vec<LayerStreamState>,
+    /// masked mean-pool accumulator over final-LN features (embed), f64
+    pooled: Vec<f64>,
+    /// unmasked (non-PAD) token count, fixed after pass 0
+    n_valid: usize,
+    /// positions consumed so far in the current pass
+    pos: usize,
+    /// stream length in tokens, fixed when pass 0 ends
+    total: usize,
+    /// current pass index, `0..=3·layers` (`3·layers + 1` ⇒ finalized)
+    pass: usize,
+}
+
+impl StreamState {
+    pub(crate) fn new(cfg: &HrrConfig) -> StreamState {
+        let kbins = num_bins(cfg.head_dim());
+        StreamState {
+            layers: (0..cfg.layers).map(|_| LayerStreamState::new(cfg.heads, kbins)).collect(),
+            pooled: vec![0.0; cfg.embed],
+            n_valid: 0,
+            pos: 0,
+            total: 0,
+            pass: 0,
+        }
+    }
+
+    /// Total passes the chunked forward makes over the tokens:
+    /// β + score-max + denominator per layer, then the pooling pass.
+    pub fn passes(&self) -> usize {
+        3 * self.layers.len() + 1
+    }
+
+    /// The pass currently consuming chunks (0 = the online append pass).
+    pub fn pass(&self) -> usize {
+        self.pass
+    }
+
+    /// Whether every pass has completed and logits can be read.
+    pub fn ready(&self) -> bool {
+        self.pass >= self.passes()
+    }
+
+    /// Tokens consumed by the current pass so far.
+    pub fn pass_pos(&self) -> usize {
+        self.pos
+    }
+
+    /// Stream length in tokens (grows during pass 0, fixed after).
+    pub fn tokens(&self) -> usize {
+        if self.pass == 0 {
+            self.pos
+        } else {
+            self.total
+        }
+    }
+
+    /// Bytes of heap state this stream carries between chunks — the
+    /// whole point of the subsystem: this is O(heads · head_dim ·
+    /// layers + embed) and does **not** grow with the stream length.
+    pub fn resident_bytes(&self) -> usize {
+        let f64s: usize = self
+            .layers
+            .iter()
+            .map(|l| l.br.len() + l.bi.len() + l.smax.len() + l.denom.len())
+            .sum::<usize>()
+            + self.pooled.len();
+        f64s * std::mem::size_of::<f64>() + std::mem::size_of::<StreamState>()
+    }
+}
+
+/// Per-worker scratch for the chunked forward: a [`Workspace`] whose
+/// position-indexed buffers hold `chunk_cap` rows instead of seq_len.
+/// Shared across streams and passes (it carries no stream state), so a
+/// server holds one per worker — total transient memory is O(chunk),
+/// never O(T).
+pub struct StreamWorkspace {
+    ws: Workspace,
+    chunk_cap: usize,
+}
+
+impl StreamWorkspace {
+    pub(crate) fn new(cfg: &HrrConfig, chunk_cap: usize) -> StreamWorkspace {
+        let chunk_cap = chunk_cap.max(1);
+        StreamWorkspace { ws: Workspace::with_rows(cfg, chunk_cap), chunk_cap }
+    }
+
+    /// Largest chunk one consume call accepts.
+    pub fn chunk_cap(&self) -> usize {
+        self.chunk_cap
+    }
+}
+
+/// Apply encoder block `bp` to the `c` chunk rows in `ws.x` using the
+/// finished attention statistics `ls` (β, smax, denom cover the whole
+/// stream): per position the score/weight arithmetic is exactly the
+/// whole-row path's — `w_i = exp(s_i − smax) / denom` — so the updated
+/// residual rows are bit-identical to the same rows of [`forward_row`].
+fn apply_block_frozen(
+    cfg: &HrrConfig,
+    bp: &BlockParams<'_>,
+    ls: &LayerStreamState,
+    ws: &mut Workspace,
+    c: usize,
+) {
+    let e = cfg.embed;
+    let hd = cfg.head_dim();
+    let kbins = num_bins(hd);
+    layernorm_into(&ws.x[..c * e], bp.ln1_scale, bp.ln1_bias, e, &mut ws.h[..c * e]);
+    matmul_into(&ws.h[..c * e], bp.query, c, e, e, &mut ws.q[..c * e]);
+    matmul_into(&ws.h[..c * e], bp.value, c, e, e, &mut ws.v[..c * e]);
+    {
+        let Workspace { fs, ur, ui, mask, q, v, attn, .. } = ws;
+        attn[..c * e].fill(0.0);
+        for head in 0..cfg.heads {
+            let off = head * hd;
+            let (br, bi) = ls.beta(head, kbins);
+            for i in 0..c {
+                if !mask[i] {
+                    continue;
+                }
+                let s = i * e + off;
+                let score =
+                    position_score(fs, ur, ui, br, bi, &q[s..s + hd], &v[s..s + hd], kbins, hd);
+                let w = (score - ls.smax[head]).exp() / ls.denom[head];
+                for (o, &x) in attn[s..s + hd].iter_mut().zip(&v[s..s + hd]) {
+                    *o = (w * x as f64) as f32;
+                }
+            }
+        }
+    }
+    matmul_into(&ws.attn[..c * e], bp.output, c, e, e, &mut ws.proj[..c * e]);
+    for (xv, &yv) in ws.x[..c * e].iter_mut().zip(&ws.proj[..c * e]) {
+        *xv += yv;
+    }
+    layernorm_into(&ws.x[..c * e], bp.ln2_scale, bp.ln2_bias, e, &mut ws.h[..c * e]);
+    matmul_into(&ws.h[..c * e], bp.fc1, c, e, cfg.mlp_dim, &mut ws.mlp[..c * cfg.mlp_dim]);
+    add_bias(&mut ws.mlp[..c * cfg.mlp_dim], bp.fc1_bias, cfg.mlp_dim);
+    gelu(&mut ws.mlp[..c * cfg.mlp_dim]);
+    matmul_into(&ws.mlp[..c * cfg.mlp_dim], bp.fc2, c, cfg.mlp_dim, e, &mut ws.proj[..c * e]);
+    add_bias(&mut ws.proj[..c * e], bp.fc2_bias, e);
+    for (xv, &mv) in ws.x[..c * e].iter_mut().zip(&ws.proj[..c * e]) {
+        *xv += mv;
+    }
+}
+
+/// Consume one token chunk for the stream's current pass: recompute the
+/// chunk's residual rows (earlier layers applied with their frozen
+/// statistics), then fold the chunk into whichever statistic this pass
+/// accumulates. Chunks must arrive in position order within a pass.
+fn stream_consume_impl(
+    cfg: &HrrConfig,
+    rp: &ResolvedParams<'_>,
+    st: &mut StreamState,
+    ws: &mut Workspace,
+    chunk: &[i32],
+) -> Result<()> {
+    let c = chunk.len();
+    if c == 0 {
+        return Ok(());
+    }
+    let e = cfg.embed;
+    let hd = cfg.head_dim();
+    let kbins = num_bins(hd);
+    let final_pass = 3 * cfg.layers;
+    anyhow::ensure!(st.pass <= final_pass, "stream already finalized");
+    if st.pass == 0 {
+        anyhow::ensure!(
+            st.pos + c <= cfg.seq_len,
+            "stream overruns bucket T={} (truncate before consuming)",
+            cfg.seq_len
+        );
+    } else {
+        anyhow::ensure!(
+            st.pos + c <= st.total,
+            "pass {} replay longer than the original stream ({} tokens)",
+            st.pass,
+            st.total
+        );
+    }
+
+    embed_positions(cfg, rp, chunk, st.pos, ws);
+    let layer = (st.pass / 3).min(cfg.layers);
+    for l in 0..layer {
+        apply_block_frozen(cfg, &rp.blocks[l], &st.layers[l], ws, c);
+    }
+
+    if st.pass == final_pass {
+        // pooling pass: final LN, then the masked mean-pool partial
+        // sums — per feature j the adds run ascending in i, exactly the
+        // whole-row pooling order.
+        layernorm_into(&ws.x[..c * e], rp.ln_f_scale, rp.ln_f_bias, e, &mut ws.h[..c * e]);
+        for (j, pv) in st.pooled.iter_mut().enumerate() {
+            for i in 0..c {
+                if ws.mask[i] {
+                    *pv += ws.h[i * e + j] as f64;
+                }
+            }
+        }
+    } else {
+        let bp = &rp.blocks[layer];
+        layernorm_into(&ws.x[..c * e], bp.ln1_scale, bp.ln1_bias, e, &mut ws.h[..c * e]);
+        match st.pass % 3 {
+            0 => {
+                // β pass: k/v per chunk row, ascending complex MAC.
+                matmul_into(&ws.h[..c * e], bp.key, c, e, e, &mut ws.k[..c * e]);
+                matmul_into(&ws.h[..c * e], bp.value, c, e, e, &mut ws.v[..c * e]);
+                let ls = &mut st.layers[layer];
+                let Workspace { fs, vfr, vfi, mask, k, v, .. } = ws;
+                for head in 0..cfg.heads {
+                    let off = head * hd;
+                    let (br, bi) = ls.beta_mut(head, kbins);
+                    for i in 0..c {
+                        if !mask[i] {
+                            continue;
+                        }
+                        let s = i * e + off;
+                        accumulate_beta(fs, vfr, vfi, br, bi, &k[s..s + hd], &v[s..s + hd], kbins);
+                    }
+                }
+                if st.pass == 0 {
+                    st.n_valid += mask[..c].iter().filter(|&&m| m).count();
+                }
+            }
+            1 => {
+                // score-max pass: exact running max per head.
+                matmul_into(&ws.h[..c * e], bp.query, c, e, e, &mut ws.q[..c * e]);
+                matmul_into(&ws.h[..c * e], bp.value, c, e, e, &mut ws.v[..c * e]);
+                let ls = &mut st.layers[layer];
+                let Workspace { fs, ur, ui, mask, q, v, .. } = ws;
+                for head in 0..cfg.heads {
+                    let off = head * hd;
+                    let (br, bi) = (&ls.br[head * kbins..], &ls.bi[head * kbins..]);
+                    let (br, bi) = (&br[..kbins], &bi[..kbins]);
+                    for i in 0..c {
+                        if !mask[i] {
+                            continue;
+                        }
+                        let s = i * e + off;
+                        let score = position_score(
+                            fs,
+                            ur,
+                            ui,
+                            br,
+                            bi,
+                            &q[s..s + hd],
+                            &v[s..s + hd],
+                            kbins,
+                            hd,
+                        );
+                        ls.smax[head] = ls.smax[head].max(score);
+                    }
+                }
+            }
+            _ => {
+                // denominator pass: Σ exp(s_i − smax) ascending in i per
+                // head — the whole-row denominator loop, chunked.
+                matmul_into(&ws.h[..c * e], bp.query, c, e, e, &mut ws.q[..c * e]);
+                matmul_into(&ws.h[..c * e], bp.value, c, e, e, &mut ws.v[..c * e]);
+                let ls = &mut st.layers[layer];
+                let Workspace { fs, ur, ui, mask, q, v, .. } = ws;
+                for head in 0..cfg.heads {
+                    let off = head * hd;
+                    let (br, bi) = (&ls.br[head * kbins..], &ls.bi[head * kbins..]);
+                    let (br, bi) = (&br[..kbins], &bi[..kbins]);
+                    for i in 0..c {
+                        if !mask[i] {
+                            continue;
+                        }
+                        let s = i * e + off;
+                        let score = position_score(
+                            fs,
+                            ur,
+                            ui,
+                            br,
+                            bi,
+                            &q[s..s + hd],
+                            &v[s..s + hd],
+                            kbins,
+                            hd,
+                        );
+                        ls.denom[head] += (score - ls.smax[head]).exp();
+                    }
+                }
+            }
+        }
+    }
+    st.pos += c;
+    Ok(())
 }
 
 // ---------------------------------------------------------------------------
@@ -788,13 +1211,15 @@ impl NativeSession {
                 }
             }
             RowScheduler::Pool(pool) => {
-                // One chunk per budgeted worker (capped by rows): the
-                // pool's persistent threads pull them as they free up,
-                // and `run` blocks until the whole batch is done. No
-                // threads are spawned here, and across all sessions
-                // sharing this pool at most `budget` chunks execute
-                // concurrently.
-                let chunks = pool.budget().clamp(1, b);
+                // Several chunks per budgeted worker (capped by rows):
+                // the pool's persistent threads pull them as they free
+                // up, so a straggler row delays one small chunk, not a
+                // whole B/budget share — and `run` blocks until the
+                // batch is done. No threads are spawned here, and
+                // across all sessions sharing this pool at most
+                // `budget` chunks execute concurrently. Partitioning
+                // never changes per-row math, so logits are unaffected.
+                let chunks = pool.task_chunks(b);
                 let rows_per = b.div_ceil(chunks);
                 let run_rows = &run_rows;
                 let tasks: Vec<PoolTask<'_>> = out
@@ -809,6 +1234,93 @@ impl NativeSession {
             }
         }
         Ok(Tensor::f32(vec![b, classes], out))
+    }
+
+    // --- streaming (chunked) forward -----------------------------------
+
+    /// Open the carried state for one chunked stream (see the streaming
+    /// section above): O(H) heap, independent of how long the stream
+    /// will run.
+    pub fn stream_state(&self) -> StreamState {
+        StreamState::new(&self.cfg)
+    }
+
+    /// Chunk-sized scratch for [`NativeSession::stream_consume`]. One
+    /// per worker, shared across streams — never per stream.
+    pub fn stream_workspace(&self, chunk_cap: usize) -> StreamWorkspace {
+        StreamWorkspace::new(&self.cfg, chunk_cap)
+    }
+
+    /// Total passes a stream on this session makes over its tokens.
+    pub fn stream_passes(&self) -> usize {
+        3 * self.cfg.layers + 1
+    }
+
+    /// Consume the next token chunk for the stream's current pass.
+    /// Chunks must arrive in position order; pass 0 consumes tokens as
+    /// they arrive (online), later passes replay the same tokens from a
+    /// rewindable source. `chunk.len()` must be ≤ the workspace's
+    /// chunk_cap.
+    pub fn stream_consume(
+        &self,
+        st: &mut StreamState,
+        sw: &mut StreamWorkspace,
+        chunk: &[i32],
+    ) -> Result<()> {
+        anyhow::ensure!(
+            chunk.len() <= sw.chunk_cap,
+            "chunk of {} tokens exceeds workspace chunk_cap {}",
+            chunk.len(),
+            sw.chunk_cap
+        );
+        let rp = ResolvedParams::resolve(&self.cfg, &self.params)?;
+        stream_consume_impl(&self.cfg, &rp, st, &mut sw.ws, chunk)
+    }
+
+    /// Close the current pass: pass 0 fixes the stream length; replay
+    /// passes must have covered exactly the original tokens.
+    pub fn stream_end_pass(&self, st: &mut StreamState) -> Result<()> {
+        anyhow::ensure!(!st.ready(), "stream already finalized");
+        if st.pass == 0 {
+            st.total = st.pos;
+        } else {
+            anyhow::ensure!(
+                st.pos == st.total,
+                "pass {} replayed {} of {} tokens",
+                st.pass,
+                st.pos,
+                st.total
+            );
+        }
+        st.pass += 1;
+        st.pos = 0;
+        Ok(())
+    }
+
+    /// Logits for a finalized stream (every pass completed): masked
+    /// mean-pool → head1 → relu → head2, the whole-row epilogue run on
+    /// the carried pooled accumulator.
+    pub fn stream_logits(&self, st: &StreamState) -> Result<Vec<f32>> {
+        anyhow::ensure!(
+            st.ready(),
+            "stream logits requested after pass {} of {}",
+            st.pass,
+            st.passes()
+        );
+        let rp = ResolvedParams::resolve(&self.cfg, &self.params)?;
+        let cfg = &self.cfg;
+        let n_valid = st.n_valid.max(1) as f64;
+        let pooled: Vec<f32> = st.pooled.iter().map(|&s| (s / n_valid) as f32).collect();
+        let mut head = vec![0.0f32; cfg.mlp_dim];
+        matmul_into(&pooled, rp.head1, 1, cfg.embed, cfg.mlp_dim, &mut head);
+        add_bias(&mut head, rp.head1_bias, cfg.mlp_dim);
+        for v in head.iter_mut() {
+            *v = v.max(0.0); // relu
+        }
+        let mut out = vec![0.0f32; cfg.classes];
+        matmul_into(&head, rp.head2, 1, cfg.mlp_dim, cfg.classes, &mut out);
+        add_bias(&mut out, rp.head2_bias, cfg.classes);
+        Ok(out)
     }
 }
 

@@ -26,4 +26,5 @@ pub mod hrr;
 pub mod metrics;
 pub mod model;
 pub mod runtime;
+pub mod stream;
 pub mod util;

@@ -8,6 +8,7 @@
 //!   bench speed      Table 4 / Fig 6
 //!   bench inference  Table 7 (add --sweep-batch for Table 6)
 //!   bench native     native hot-path sweep (single vs multi thread)
+//!   bench stream     chunked streaming forward at T=131072 (mmap-fed)
 //!   bench weights    Fig 5 / Fig 9
 //!   data             dump dataset samples
 //!   inspect          list manifest programs
@@ -18,9 +19,12 @@ use anyhow::{bail, Context, Result};
 
 use hrrformer::bench;
 use hrrformer::coordinator::{self, BatchPolicy, TrainConfig};
+use hrrformer::data::mmap::{write_corpus, MmapCorpus};
 use hrrformer::data::{by_task, Split, Stream};
 use hrrformer::engine::{Backend, Engine};
+use hrrformer::hrr::HrrConfig;
 use hrrformer::runtime::{default_manifest, Runtime};
+use hrrformer::stream::StreamConfig;
 use hrrformer::util::cli::Args;
 
 const USAGE: &str = "\
@@ -32,6 +36,8 @@ USAGE:
   repro serve [--backend artifact|native] [--bases a,b,c] [--requests N]
               [--max-batch B] [--max-wait-ms MS] [--queue-depth D] [--seed S]
               [--workers K]
+  repro serve --stream [--stream-base BASE] [--requests N] [--chunk TOKENS]
+              [--append-bytes N] [--seed S] [--workers K]
   repro bench ember     [--steps N] [--models a,b] [--timeout-s S]
   repro bench lra       [--steps N] [--models a,b] [--tasks t1,t2] [--curves]
   repro bench speed     [--steps N]
@@ -39,6 +45,8 @@ USAGE:
                         [--backend artifact|native]
   repro bench native    [--examples N] [--workers K] [--seed S]
                         [--out BENCH_native.json]
+  repro bench stream    [--examples N] [--base BASE] [--chunks a,b,c]
+                        [--seed S] [--out BENCH_native.json]
   repro bench weights   [--steps N] [--multi-layer]
   repro data --task <task> [--n N] [--seq-len T]
   repro inspect
@@ -67,6 +75,16 @@ three row schedulers — sequential, legacy per-call scoped threads, and
 the shared persistent worker pool — and writes the BENCH_native.json
 trajectory file at the repo root. Needs no artifacts. --workers 0
 (default) uses every available core (--threads is an accepted alias).
+
+serve --stream runs the streaming subsystem (native only): one stream
+executor serving open/append/finish on the --stream-base bucket
+(default ember_hrrformer_small_T131072_B1 — the paper's T=131072 EMBER
+workload). Inputs are fed from a memory-mapped corpus in --append-bytes
+pieces; the server folds them into O(H) carried state per stream —
+no (B, T) tensor is ever materialized at streaming T. bench stream
+sweeps chunk sizes over the same mmap-fed chunked forward and merges
+throughput + per-stream resident state into BENCH_native.json under a
+\"stream\" key.
 
 Artifacts are read from ./artifacts (override: HRRFORMER_ARTIFACTS).
 Bench outputs land in ./results (override: HRRFORMER_RESULTS).
@@ -148,6 +166,9 @@ fn parse_backend(args: &Args) -> Result<Backend> {
 }
 
 fn cmd_serve(args: &Args) -> Result<()> {
+    if args.bool("stream") {
+        return cmd_serve_stream(args);
+    }
     let backend = parse_backend(args)?;
     let bases = args.list("bases", &hrrformer::engine::DEFAULT_EMBER_BUCKETS);
     let n_requests = args.usize("requests", 64);
@@ -202,12 +223,86 @@ fn cmd_serve(args: &Args) -> Result<()> {
     Ok(())
 }
 
+/// `serve --stream`: stand up the streaming bucket and classify
+/// mmap-fed byte streams through the engine's
+/// open/append/finish client surface — the paper's T ≥ 100k EMBER
+/// workload with O(H) carried state per stream.
+fn cmd_serve_stream(args: &Args) -> Result<()> {
+    let backend = args.str("backend", "native").parse::<Backend>().map_err(anyhow::Error::msg)?;
+    anyhow::ensure!(
+        backend == Backend::Native,
+        "serve --stream requires the native backend (artifact programs are fixed-shape)"
+    );
+    let base = args.str("stream-base", "ember_hrrformer_small_T131072_B1");
+    let n = args.usize("requests", 2);
+    let append_bytes = args.usize("append-bytes", 65536).max(1);
+    let seed = parse_seed(args)?;
+    let t = HrrConfig::from_base(&base)?.seq_len;
+
+    // mmap-fed inputs: the corpus lives on disk; the client reads and
+    // appends O(append_bytes) pieces, so no full T-length row is ever
+    // held in memory on either side of the channel.
+    let corpus_path = std::env::temp_dir().join(format!("hrrformer_serve_stream_T{t}.bin"));
+    let ds = by_task("ember", t).unwrap();
+    eprintln!("[serve] writing {n} × T={t} corpus → {}", corpus_path.display());
+    write_corpus(&corpus_path, ds.as_ref(), Split::Test, seed as u64, n, t)?;
+    let corpus = MmapCorpus::open(&corpus_path)?;
+
+    let mut scfg = StreamConfig::new(std::env::temp_dir().join("hrrformer_streams"));
+    scfg.chunk_cap = args.usize("chunk", scfg.chunk_cap).max(1);
+    eprintln!(
+        "[serve] building streaming bucket {base} ({}; chunk {} tokens)…",
+        if corpus.is_mapped() { "corpus memory-mapped" } else { "corpus seek+read fallback" },
+        scfg.chunk_cap
+    );
+    let engine = Engine::builder()
+        .stream_bucket(&base)
+        .stream_config(scfg)
+        .seed(seed)
+        .backend(Backend::Native)
+        .worker_budget(args.usize("workers", 0))
+        .build_native()?;
+
+    let t0 = std::time::Instant::now();
+    let mut correct = 0usize;
+    let mut buf = vec![0u8; append_bytes];
+    for r in 0..n {
+        let id = engine.open_stream()?;
+        let mut off = 0usize;
+        loop {
+            let got = corpus.read_row_chunk(r, off, &mut buf)?;
+            if got == 0 {
+                break;
+            }
+            engine.append_stream(id, &buf[..got])?;
+            off += got;
+        }
+        let out = engine.finish_stream(id)?;
+        correct += (out.label as i32 == corpus.label(r)?) as usize;
+        println!(
+            "stream {id}: label {} ({} tokens, {} B carried state, truncated={})",
+            out.label, out.tokens, out.resident_bytes, out.truncated
+        );
+    }
+    let secs = t0.elapsed().as_secs_f64().max(1e-9);
+    println!(
+        "served {n} streams at T={t}: {:.2} s total ({:.0} tokens/s), accuracy {:.2} \
+         (untrained params), O(H) state per stream",
+        secs,
+        (n * t) as f64 / secs,
+        correct as f64 / n.max(1) as f64,
+    );
+    engine.stop();
+    let _ = std::fs::remove_file(&corpus_path);
+    Ok(())
+}
+
 fn cmd_bench(args: &Args) -> Result<()> {
     let which = args
         .positional
         .get(1)
         .map(|s| s.as_str())
-        .context("bench <ember|lra|speed|inference|native|weights>")?;
+        .context("bench <ember|lra|speed|inference|native|stream|weights>")?;
     // The manifest and runtime are resolved per arm: the engine serving
     // bench manages its own per-executor runtimes (and on the native
     // backend needs no manifest at all).
@@ -281,6 +376,30 @@ fn cmd_bench(args: &Args) -> Result<()> {
                 cfg.out = out.into();
             }
             bench::native::run(&cfg)?;
+        }
+        "stream" => {
+            // chunked streaming forward over an mmap corpus: no
+            // manifest, no artifacts
+            let mut cfg = bench::stream::StreamBenchCfg::default();
+            cfg.rows = args.usize("examples", cfg.rows);
+            cfg.seed = args.u64("seed", cfg.seed);
+            if let Some(base) = args.get("base") {
+                cfg.base = base.to_string();
+            }
+            if args.get("chunks").is_some() {
+                cfg.chunks = args
+                    .list("chunks", &[])
+                    .iter()
+                    .map(|s| {
+                        s.parse::<usize>()
+                            .with_context(|| format!("--chunks entry '{s}' must be a usize"))
+                    })
+                    .collect::<Result<_>>()?;
+            }
+            if let Some(out) = args.get("out") {
+                cfg.out = out.into();
+            }
+            bench::stream::run(&cfg)?;
         }
         "weights" => {
             let manifest = default_manifest()?;

@@ -1,0 +1,153 @@
+//! Streaming inference subsystem — the paper's headline workload
+//! (malware classification at T ≥ 100,000) as a first-class serving
+//! path, built on the chunked forward kernel in [`crate::hrr::model`].
+//!
+//! The whole-row serving path materializes every request as one (B, T)
+//! tensor; at T = 131072 that is the exact memory wall the Hrrformer is
+//! supposed to remove. This module replaces materialization with
+//! *incremental consumption*: a client opens a stream, appends bytes as
+//! they arrive, and finishes to get a classification — while the server
+//! carries only [`crate::hrr::StreamState`] per stream (O(H) — β bins,
+//! score max, softmax denominator per layer, plus the pooled-feature
+//! accumulator; ~a few KB for the EMBER preset, independent of T).
+//!
+//! Layer map:
+//!
+//! * [`source`] — [`ChunkSource`]: a rewindable token source the
+//!   multi-pass kernel replays (the forward needs 3·L+1 passes; see the
+//!   kernel docs), with slice-backed and spool-file-backed
+//!   implementations. `data::mmap` adds the memory-mapped corpus
+//!   source for paper-scale inputs.
+//! * [`registry`] — [`StreamRegistry`]: open/append/finish lifecycle
+//!   over many concurrent streams, bounded in-memory buffering
+//!   (pending tokens never exceed one chunk; full chunks are consumed
+//!   into pass-0 state immediately and spooled to disk for the replay
+//!   passes), idle-timeout eviction, and chunk execution dispatched
+//!   through the engine's [`crate::hrr::RowScheduler`] seam so streams
+//!   share the engine-wide worker budget with batch traffic.
+//!
+//! The engine exposes the registry behind
+//! `EngineClient::{open_stream, append_stream, finish_stream}`; the CLI
+//! surfaces it as `serve --stream` and `bench stream`.
+
+pub mod registry;
+pub mod source;
+
+pub use registry::{StreamConfig, StreamError, StreamOutcome, StreamRegistry};
+pub use source::{ChunkSource, SliceSource, SpoolReader, SpoolWriter};
+
+use anyhow::Result;
+
+use crate::hrr::{NativeSession, StreamState, StreamWorkspace};
+
+/// EMBER tokenization at the stream boundary: token = byte + 1
+/// (PAD = 0 is reserved and never produced by real bytes) — the same
+/// convention as `data::ember` and the paper.
+pub fn tokenize_bytes(bytes: &[u8], out: &mut Vec<i32>) {
+    out.extend(bytes.iter().map(|&b| b as i32 + 1));
+}
+
+/// Run every remaining pass of `st` over the rewindable `src` and
+/// return the logits. Pass 0 is included when the state is brand new
+/// (the all-at-once path used by benches and the mmap workload);
+/// callers that consumed pass 0 online (the registry) arrive here with
+/// pass ≥ 1 and only replay.
+///
+/// Working memory is the caller's `sw` (O(chunk)); carried memory is
+/// `st` (O(H)). Nothing here ever holds more than one chunk of tokens.
+pub fn finish_over_source(
+    sess: &NativeSession,
+    st: &mut StreamState,
+    sw: &mut StreamWorkspace,
+    src: &mut dyn ChunkSource,
+) -> Result<Vec<f32>> {
+    let mut buf = vec![0i32; sw.chunk_cap()];
+    while !st.ready() {
+        src.reset()?;
+        loop {
+            let n = src.next_chunk(&mut buf)?;
+            if n == 0 {
+                break;
+            }
+            sess.stream_consume(st, sw, &buf[..n])?;
+        }
+        sess.stream_end_pass(st)?;
+    }
+    sess.stream_logits(st)
+}
+
+/// Classify one full stream from a rewindable source in `chunk_cap`
+/// token chunks: all 3·L+1 passes, fresh O(H) state, O(chunk) scratch.
+/// Bit-identical to `NativeSession::predict` on the same tokens.
+pub fn classify_source(
+    sess: &NativeSession,
+    src: &mut dyn ChunkSource,
+    chunk_cap: usize,
+) -> Result<(Vec<f32>, StreamState)> {
+    let mut st = sess.stream_state();
+    let mut sw = sess.stream_workspace(chunk_cap);
+    let logits = finish_over_source(sess, &mut st, &mut sw, src)?;
+    Ok((logits, st))
+}
+
+/// Argmax over logits — the label the reply carries.
+pub fn argmax(logits: &[f32]) -> usize {
+    let mut best = 0usize;
+    for (i, &v) in logits.iter().enumerate() {
+        if v > logits[best] {
+            best = i;
+        }
+    }
+    best
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::hrr::HrrConfig;
+    use crate::runtime::tensor::Tensor;
+
+    fn tiny_session() -> NativeSession {
+        let cfg = HrrConfig {
+            task: "test".into(),
+            vocab: 11,
+            seq_len: 24,
+            batch: 2,
+            embed: 16,
+            mlp_dim: 32,
+            heads: 2,
+            layers: 2,
+            classes: 4,
+            learned_pos: false,
+        };
+        NativeSession::from_config(cfg, 7).unwrap()
+    }
+
+    #[test]
+    fn classify_source_matches_whole_row_predict_bitwise() {
+        let sess = tiny_session();
+        let ids: Vec<i32> = (0..24).map(|i| (i * 7 + 3) % 11).collect();
+        let want = sess.predict(&Tensor::i32(vec![1, 24], ids.clone())).unwrap();
+        for chunk_cap in [1usize, 5, 8, 24] {
+            let mut src = SliceSource::new(&ids);
+            let (logits, st) = classify_source(&sess, &mut src, chunk_cap).unwrap();
+            assert_eq!(logits.as_slice(), want.as_f32().unwrap(), "chunk_cap={chunk_cap}");
+            assert!(st.ready());
+            assert_eq!(st.tokens(), 24);
+        }
+    }
+
+    #[test]
+    fn tokenize_maps_bytes_off_pad() {
+        let mut out = Vec::new();
+        tokenize_bytes(&[0u8, 1, 255], &mut out);
+        assert_eq!(out, vec![1, 2, 256]);
+        assert!(out.iter().all(|&t| t != crate::hrr::PAD_ID));
+    }
+
+    #[test]
+    fn argmax_picks_first_maximum() {
+        assert_eq!(argmax(&[0.1, 3.0, 3.0, -1.0]), 1);
+        assert_eq!(argmax(&[-2.0]), 0);
+    }
+}

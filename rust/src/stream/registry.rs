@@ -1,0 +1,490 @@
+//! Stream lifecycle management: many concurrent open streams, each
+//! with O(H) carried model state, bounded in-memory buffering, and
+//! idle-timeout eviction.
+//!
+//! A [`StreamRegistry`] owns one [`NativeSession`] and runs every chunk
+//! of model compute through the engine's [`RowScheduler`] seam — when
+//! the engine installs its shared [`crate::util::pool::WorkerPool`],
+//! stream compute occupies one worker slot per chunk and therefore
+//! shares the engine-wide worker budget with batch traffic instead of
+//! spawning threads of its own.
+//!
+//! Memory discipline per open stream:
+//!
+//! * model state — [`StreamState`], O(H) (asserted independent of T by
+//!   the integration tests);
+//! * token buffer — at most `chunk_cap − 1` pending tokens; full chunks
+//!   are folded into pass-0 state immediately and appended to an
+//!   on-disk spool for the replay passes;
+//! * nothing else. No (B, T) tensor is ever materialized.
+
+use std::collections::{HashMap, VecDeque};
+use std::fmt;
+use std::path::PathBuf;
+use std::time::{Duration, Instant};
+
+use crate::hrr::{NativeSession, RowScheduler, StreamState, StreamWorkspace};
+use crate::util::pool::Task;
+
+use super::source::{ChunkSource, SpoolWriter};
+use super::{argmax, tokenize_bytes};
+
+/// How many retired stream ids (finished or evicted) the registry
+/// remembers so late appends get a precise error instead of a generic
+/// "unknown stream".
+const RETIRED_CAP: usize = 256;
+
+/// Registry tuning knobs. Construct with [`StreamConfig::new`] and
+/// override fields as needed.
+#[derive(Clone, Debug)]
+pub struct StreamConfig {
+    /// Tokens folded into the model per scheduler dispatch. Also the
+    /// bound on per-stream pending buffering.
+    pub chunk_cap: usize,
+    /// Streams idle longer than this are evicted by
+    /// [`StreamRegistry::sweep_idle`].
+    pub idle_timeout: Duration,
+    /// Directory for per-stream replay spools (created on demand).
+    pub spool_dir: PathBuf,
+    /// Hard cap on concurrently open streams.
+    pub max_streams: usize,
+}
+
+impl StreamConfig {
+    pub fn new(spool_dir: impl Into<PathBuf>) -> StreamConfig {
+        StreamConfig {
+            chunk_cap: 4096,
+            idle_timeout: Duration::from_secs(300),
+            spool_dir: spool_dir.into(),
+            max_streams: 64,
+        }
+    }
+}
+
+/// Typed stream lifecycle errors — the engine maps these onto
+/// `EngineError` for clients.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub enum StreamError {
+    /// Id was never issued (or rotated out of the retired record).
+    Unknown(u64),
+    /// Id was valid but the stream already finished.
+    Finished(u64),
+    /// Id was valid but the stream was evicted for idleness.
+    Evicted(u64),
+    /// Registry is at `max_streams` open streams.
+    Capacity { open: usize, max: usize },
+    /// Kernel / IO failure underneath the lifecycle layer.
+    Internal(String),
+}
+
+impl fmt::Display for StreamError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            StreamError::Unknown(id) => write!(f, "unknown stream id {id}"),
+            StreamError::Finished(id) => write!(f, "stream {id} already finished"),
+            StreamError::Evicted(id) => write!(f, "stream {id} was evicted after idle timeout"),
+            StreamError::Capacity { open, max } => {
+                write!(f, "stream capacity reached ({open}/{max} open)")
+            }
+            StreamError::Internal(msg) => write!(f, "stream internal error: {msg}"),
+        }
+    }
+}
+
+impl std::error::Error for StreamError {}
+
+/// Result of finishing a stream.
+#[derive(Clone, Debug)]
+pub struct StreamOutcome {
+    /// Class logits from the streamed forward — bit-identical to the
+    /// whole-row forward on the same (possibly truncated) tokens.
+    pub logits: Vec<f32>,
+    /// `argmax(logits)` — for EMBER, 1 = malicious.
+    pub label: usize,
+    /// Tokens actually folded into the model (≤ the bucket's T).
+    pub tokens: usize,
+    /// Tokens the client appended in total, including any truncated
+    /// tail beyond the bucket's T.
+    pub appended: usize,
+    /// Whether appends past the bucket length were dropped.
+    pub truncated: bool,
+    /// Heap bytes of the carried per-stream model state at finish time
+    /// — O(H), independent of `tokens`.
+    pub resident_bytes: usize,
+}
+
+#[derive(Clone, Copy, Debug)]
+enum Retired {
+    Finished,
+    Evicted,
+}
+
+struct OpenStream {
+    st: StreamState,
+    spool: SpoolWriter,
+    /// Tokenized but not yet consumed — strictly less than `chunk_cap`
+    /// outside of `append` itself.
+    pending: Vec<i32>,
+    appended: usize,
+    truncated: bool,
+    last_touch: Instant,
+}
+
+/// Open/append/finish over many concurrent streams against one native
+/// session. Single-owner by design: the engine gives it a dedicated
+/// executor thread and serializes access through a channel, mirroring
+/// the per-bucket executors.
+pub struct StreamRegistry {
+    sess: NativeSession,
+    scheduler: RowScheduler,
+    cfg: StreamConfig,
+    sw: StreamWorkspace,
+    /// Chunk staging shared by every stream (one chunk at a time).
+    chunk_buf: Vec<i32>,
+    streams: HashMap<u64, OpenStream>,
+    retired: VecDeque<(u64, Retired)>,
+    next_id: u64,
+}
+
+/// Run `f` through the scheduler seam: inline for `Sequential` /
+/// `Scoped` (one chunk is one unit of work — nothing to fan out), as a
+/// single pool task for `Pool` so stream compute books a worker slot
+/// from the same budget batch traffic draws on.
+fn run_on_scheduler<T, F>(scheduler: &RowScheduler, f: F) -> Result<T, StreamError>
+where
+    T: Send,
+    F: FnOnce() -> T + Send,
+{
+    match scheduler {
+        RowScheduler::Pool(pool) => {
+            let mut out = None;
+            let task: Task<'_> = Box::new(|| out = Some(f()));
+            pool.run(vec![task])
+                .map_err(|p| StreamError::Internal(format!("stream worker panicked: {p}")))?;
+            out.ok_or_else(|| StreamError::Internal("stream task did not run".into()))
+        }
+        _ => Ok(f()),
+    }
+}
+
+fn internal(e: anyhow::Error) -> StreamError {
+    StreamError::Internal(format!("{e:#}"))
+}
+
+/// Fold one staged chunk into pass-0 state and the replay spool,
+/// truncating at the bucket length. Free function so callers can hold
+/// disjoint borrows of the registry's fields.
+fn consume_pass0_chunk(
+    sess: &NativeSession,
+    scheduler: &RowScheduler,
+    sw: &mut StreamWorkspace,
+    s: &mut OpenStream,
+    chunk: &[i32],
+) -> Result<(), StreamError> {
+    let seq_len = sess.cfg().seq_len;
+    let room = seq_len.saturating_sub(s.st.tokens());
+    let take = chunk.len().min(room);
+    if take < chunk.len() {
+        s.truncated = true;
+    }
+    if take == 0 {
+        return Ok(());
+    }
+    let (st, kept) = (&mut s.st, &chunk[..take]);
+    run_on_scheduler(scheduler, || sess.stream_consume(st, sw, kept))?.map_err(internal)?;
+    s.spool.write_chunk(kept).map_err(internal)?;
+    Ok(())
+}
+
+impl StreamRegistry {
+    pub fn new(
+        sess: NativeSession,
+        scheduler: RowScheduler,
+        cfg: StreamConfig,
+    ) -> Result<StreamRegistry, StreamError> {
+        if cfg.chunk_cap == 0 {
+            return Err(StreamError::Internal("chunk_cap must be ≥ 1".into()));
+        }
+        std::fs::create_dir_all(&cfg.spool_dir)
+            .map_err(|e| StreamError::Internal(format!("create spool dir: {e}")))?;
+        let sw = sess.stream_workspace(cfg.chunk_cap);
+        Ok(StreamRegistry {
+            sess,
+            scheduler,
+            sw,
+            chunk_buf: Vec::with_capacity(cfg.chunk_cap),
+            cfg,
+            streams: HashMap::new(),
+            retired: VecDeque::new(),
+            next_id: 1,
+        })
+    }
+
+    pub fn open_count(&self) -> usize {
+        self.streams.len()
+    }
+
+    pub fn session(&self) -> &NativeSession {
+        &self.sess
+    }
+
+    /// Open a new stream: fresh O(H) state + an empty replay spool.
+    pub fn open(&mut self) -> Result<u64, StreamError> {
+        if self.streams.len() >= self.cfg.max_streams {
+            return Err(StreamError::Capacity {
+                open: self.streams.len(),
+                max: self.cfg.max_streams,
+            });
+        }
+        let id = self.next_id;
+        self.next_id += 1;
+        let spool = SpoolWriter::create(self.cfg.spool_dir.join(format!("stream_{id}.tok")))
+            .map_err(internal)?;
+        self.streams.insert(
+            id,
+            OpenStream {
+                st: self.sess.stream_state(),
+                spool,
+                pending: Vec::new(),
+                appended: 0,
+                truncated: false,
+                last_touch: Instant::now(),
+            },
+        );
+        Ok(id)
+    }
+
+    fn missing(&self, id: u64) -> StreamError {
+        match self.retired.iter().rev().find(|(r, _)| *r == id) {
+            Some((_, Retired::Finished)) => StreamError::Finished(id),
+            Some((_, Retired::Evicted)) => StreamError::Evicted(id),
+            None => StreamError::Unknown(id),
+        }
+    }
+
+    fn retire(&mut self, id: u64, why: Retired) {
+        if self.retired.len() == RETIRED_CAP {
+            self.retired.pop_front();
+        }
+        self.retired.push_back((id, why));
+    }
+
+    /// Append raw bytes to an open stream. Tokens are staged in the
+    /// stream's pending buffer; every full chunk is folded into pass-0
+    /// state immediately (through the scheduler) and spooled, so the
+    /// buffer never holds a full chunk when this returns. Returns the
+    /// total tokens appended so far.
+    pub fn append(&mut self, id: u64, bytes: &[u8]) -> Result<usize, StreamError> {
+        let cap = self.cfg.chunk_cap;
+        let s = match self.streams.get_mut(&id) {
+            Some(s) => s,
+            None => return Err(self.missing(id)),
+        };
+        s.last_touch = Instant::now();
+        tokenize_bytes(bytes, &mut s.pending);
+        s.appended += bytes.len();
+        while s.pending.len() >= cap {
+            self.chunk_buf.clear();
+            self.chunk_buf.extend(s.pending.drain(..cap));
+            consume_pass0_chunk(&self.sess, &self.scheduler, &mut self.sw, s, &self.chunk_buf)?;
+        }
+        Ok(s.appended)
+    }
+
+    /// Finish a stream: flush the pending tail into pass 0, then replay
+    /// the spool for the remaining 3·L passes and classify. The stream
+    /// id is retired; the spool is deleted.
+    pub fn finish(&mut self, id: u64) -> Result<StreamOutcome, StreamError> {
+        let mut s = match self.streams.remove(&id) {
+            Some(s) => s,
+            None => return Err(self.missing(id)),
+        };
+        self.retire(id, Retired::Finished);
+
+        // Pending tail is < chunk_cap by the append invariant.
+        self.chunk_buf.clear();
+        self.chunk_buf.append(&mut s.pending);
+        consume_pass0_chunk(&self.sess, &self.scheduler, &mut self.sw, &mut s, &self.chunk_buf)?;
+
+        let OpenStream { mut st, spool, appended, truncated, .. } = s;
+        self.sess.stream_end_pass(&mut st).map_err(internal)?;
+        let mut reader = spool.into_reader().map_err(internal)?;
+
+        // Replay passes 1..3L+1. One scheduler dispatch per chunk keeps
+        // the worker-slot hold time bounded, so long replays interleave
+        // with batch traffic instead of monopolizing a worker.
+        let (sess, sw, buf) = (&self.sess, &mut self.sw, &mut self.chunk_buf);
+        buf.resize(self.cfg.chunk_cap, 0);
+        while !st.ready() {
+            reader.reset().map_err(internal)?;
+            loop {
+                let n = reader.next_chunk(buf).map_err(internal)?;
+                if n == 0 {
+                    break;
+                }
+                let (st_ref, chunk) = (&mut st, &buf[..n]);
+                run_on_scheduler(&self.scheduler, || sess.stream_consume(st_ref, sw, chunk))?
+                    .map_err(internal)?;
+            }
+            sess.stream_end_pass(&mut st).map_err(internal)?;
+        }
+
+        let logits = sess.stream_logits(&st).map_err(internal)?;
+        Ok(StreamOutcome {
+            label: argmax(&logits),
+            tokens: st.tokens(),
+            appended,
+            truncated,
+            resident_bytes: st.resident_bytes(),
+            logits,
+        })
+    }
+
+    /// Evict streams idle longer than the configured timeout. Evicted
+    /// ids are remembered so later appends get [`StreamError::Evicted`]
+    /// rather than [`StreamError::Unknown`]. Returns the evicted ids.
+    pub fn sweep_idle(&mut self) -> Vec<u64> {
+        let timeout = self.cfg.idle_timeout;
+        let evict: Vec<u64> = self
+            .streams
+            .iter()
+            .filter(|(_, s)| s.last_touch.elapsed() >= timeout)
+            .map(|(&id, _)| id)
+            .collect();
+        for &id in &evict {
+            // Dropping the OpenStream drops its SpoolWriter, which
+            // unlinks the spool file.
+            self.streams.remove(&id);
+            self.retire(id, Retired::Evicted);
+        }
+        evict
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::hrr::HrrConfig;
+    use crate::runtime::tensor::Tensor;
+    use crate::util::pool::WorkerPool;
+    use std::sync::Arc;
+
+    fn tiny_session() -> NativeSession {
+        let cfg = HrrConfig {
+            task: "test".into(),
+            vocab: 257,
+            seq_len: 32,
+            batch: 2,
+            embed: 16,
+            mlp_dim: 32,
+            heads: 2,
+            layers: 1,
+            classes: 2,
+            learned_pos: true,
+        };
+        NativeSession::from_config(cfg, 11).unwrap()
+    }
+
+    fn test_cfg(name: &str) -> StreamConfig {
+        let mut cfg =
+            StreamConfig::new(std::env::temp_dir().join("hrrformer_registry_test").join(name));
+        cfg.chunk_cap = 7; // force multi-chunk paths even for tiny streams
+        cfg
+    }
+
+    fn registry(name: &str, scheduler: RowScheduler) -> StreamRegistry {
+        StreamRegistry::new(tiny_session(), scheduler, test_cfg(name)).unwrap()
+    }
+
+    #[test]
+    fn lifecycle_matches_whole_row_predict_bitwise() {
+        for (name, scheduler) in [
+            ("seq", RowScheduler::Sequential),
+            ("pool", RowScheduler::Pool(Arc::new(WorkerPool::new(2)))),
+        ] {
+            let mut reg = registry(name, scheduler);
+            let bytes: Vec<u8> = (0..32u32).map(|i| (i * 37 % 256) as u8).collect();
+            let ids: Vec<i32> = bytes.iter().map(|&b| b as i32 + 1).collect();
+            let want = reg.session().predict(&Tensor::i32(vec![1, 32], ids)).unwrap();
+
+            let id = reg.open().unwrap();
+            for part in bytes.chunks(5) {
+                reg.append(id, part).unwrap();
+            }
+            let out = reg.finish(id).unwrap();
+            assert_eq!(out.logits.as_slice(), want.as_f32().unwrap(), "scheduler {name}");
+            assert_eq!(out.tokens, 32);
+            assert_eq!(out.appended, 32);
+            assert!(!out.truncated);
+            assert_eq!(reg.open_count(), 0);
+        }
+    }
+
+    #[test]
+    fn truncation_matches_prefix_prediction() {
+        let mut reg = registry("trunc", RowScheduler::Sequential);
+        let bytes: Vec<u8> = (0..100u32).map(|i| (i % 251 + 1) as u8).collect();
+        let prefix_ids: Vec<i32> = bytes[..32].iter().map(|&b| b as i32 + 1).collect();
+        let want = reg.session().predict(&Tensor::i32(vec![1, 32], prefix_ids)).unwrap();
+
+        let id = reg.open().unwrap();
+        reg.append(id, &bytes).unwrap();
+        let out = reg.finish(id).unwrap();
+        assert!(out.truncated);
+        assert_eq!(out.tokens, 32);
+        assert_eq!(out.appended, 100);
+        assert_eq!(out.logits.as_slice(), want.as_f32().unwrap());
+    }
+
+    #[test]
+    fn lifecycle_errors_are_distinct() {
+        let mut reg = registry("errors", RowScheduler::Sequential);
+        assert_eq!(reg.append(99, b"x"), Err(StreamError::Unknown(99)));
+
+        let id = reg.open().unwrap();
+        reg.append(id, b"abc").unwrap();
+        reg.finish(id).unwrap();
+        assert_eq!(reg.append(id, b"late"), Err(StreamError::Finished(id)));
+        assert!(matches!(reg.finish(id), Err(StreamError::Finished(_))));
+    }
+
+    #[test]
+    fn idle_streams_are_evicted_with_typed_error() {
+        let mut cfg = test_cfg("evict");
+        cfg.idle_timeout = Duration::from_millis(0);
+        let mut reg = StreamRegistry::new(tiny_session(), RowScheduler::Sequential, cfg).unwrap();
+        let id = reg.open().unwrap();
+        reg.append(id, b"payload").unwrap();
+        let evicted = reg.sweep_idle();
+        assert_eq!(evicted, vec![id]);
+        assert_eq!(reg.open_count(), 0);
+        assert_eq!(reg.append(id, b"x"), Err(StreamError::Evicted(id)));
+    }
+
+    #[test]
+    fn capacity_is_enforced() {
+        let mut cfg = test_cfg("cap");
+        cfg.max_streams = 2;
+        let mut reg = StreamRegistry::new(tiny_session(), RowScheduler::Sequential, cfg).unwrap();
+        reg.open().unwrap();
+        reg.open().unwrap();
+        assert_eq!(reg.open(), Err(StreamError::Capacity { open: 2, max: 2 }));
+    }
+
+    #[test]
+    fn resident_state_is_independent_of_stream_length() {
+        let mut reg = registry("resident", RowScheduler::Sequential);
+        let short = {
+            let id = reg.open().unwrap();
+            reg.append(id, &[1u8; 8]).unwrap();
+            reg.finish(id).unwrap()
+        };
+        let long = {
+            let id = reg.open().unwrap();
+            reg.append(id, &[2u8; 1000]).unwrap(); // truncated at T=32
+            reg.finish(id).unwrap()
+        };
+        assert_eq!(short.resident_bytes, long.resident_bytes);
+        assert!(short.resident_bytes > 0);
+    }
+}

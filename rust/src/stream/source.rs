@@ -1,0 +1,239 @@
+//! Rewindable token sources for the multi-pass streaming forward.
+//!
+//! The chunked kernel makes 3·L+1 passes over a stream's tokens, so a
+//! source must be *replayable* — but never has to hand out more than
+//! one chunk at a time. Implementations here:
+//!
+//! * [`SliceSource`] — over tokens already in memory (tests, benches,
+//!   and the engine's append path after tokenization);
+//! * [`SpoolWriter`]/[`SpoolReader`] — a per-stream on-disk spool the
+//!   registry writes during the online pass 0 and replays for the later
+//!   passes, keeping per-stream *memory* at O(H) + one pending chunk
+//!   while the tokens themselves live on disk;
+//! * `data::mmap::MmapRowSource` (in the data layer) — O(chunk) reads
+//!   straight from a memory-mapped corpus row.
+
+use std::fs::File;
+use std::io::{BufReader, BufWriter, Read, Seek, SeekFrom, Write};
+use std::path::{Path, PathBuf};
+
+use anyhow::{Context, Result};
+
+/// A finite token stream that can be replayed from the start. Chunks
+/// are handed out in position order; `reset` rewinds for the next pass.
+pub trait ChunkSource {
+    /// Stream length in tokens.
+    fn len(&self) -> usize;
+
+    /// Rewind to position 0 (the next pass re-reads everything).
+    fn reset(&mut self) -> Result<()>;
+
+    /// Fill `buf` with the next ≤ `buf.len()` tokens; returns how many
+    /// were produced, 0 at end of stream.
+    fn next_chunk(&mut self, buf: &mut [i32]) -> Result<usize>;
+}
+
+/// [`ChunkSource`] over an in-memory token slice.
+pub struct SliceSource<'a> {
+    ids: &'a [i32],
+    pos: usize,
+}
+
+impl<'a> SliceSource<'a> {
+    pub fn new(ids: &'a [i32]) -> SliceSource<'a> {
+        SliceSource { ids, pos: 0 }
+    }
+}
+
+impl ChunkSource for SliceSource<'_> {
+    fn len(&self) -> usize {
+        self.ids.len()
+    }
+
+    fn reset(&mut self) -> Result<()> {
+        self.pos = 0;
+        Ok(())
+    }
+
+    fn next_chunk(&mut self, buf: &mut [i32]) -> Result<usize> {
+        let n = buf.len().min(self.ids.len() - self.pos);
+        buf[..n].copy_from_slice(&self.ids[self.pos..self.pos + n]);
+        self.pos += n;
+        Ok(n)
+    }
+}
+
+/// Append-side of a per-stream on-disk token spool (little-endian i32
+/// per token, buffered writes). The registry writes each consumed
+/// pass-0 chunk here, so replay passes read from disk instead of any
+/// T-sized in-memory buffer. The file is deleted when the spool (either
+/// side) is dropped via [`SpoolWriter::into_reader`]'s owner.
+pub struct SpoolWriter {
+    path: PathBuf,
+    /// `None` once consumed by [`SpoolWriter::into_reader`] — which
+    /// also tells `Drop` the reader now owns the on-disk file.
+    file: Option<BufWriter<File>>,
+    tokens: usize,
+}
+
+impl SpoolWriter {
+    /// Create (truncate) the spool file at `path`.
+    pub fn create(path: impl Into<PathBuf>) -> Result<SpoolWriter> {
+        let path = path.into();
+        let file = File::create(&path)
+            .with_context(|| format!("create stream spool {}", path.display()))?;
+        Ok(SpoolWriter { path, file: Some(BufWriter::new(file)), tokens: 0 })
+    }
+
+    pub fn tokens(&self) -> usize {
+        self.tokens
+    }
+
+    /// Append one chunk of tokens.
+    pub fn write_chunk(&mut self, chunk: &[i32]) -> Result<()> {
+        let file = self.file.as_mut().context("stream spool already consumed")?;
+        for &t in chunk {
+            file.write_all(&t.to_le_bytes()).context("write stream spool")?;
+        }
+        self.tokens += chunk.len();
+        Ok(())
+    }
+
+    /// Flush and reopen for replay. The reader takes over ownership of
+    /// the file (and deletes it on drop).
+    pub fn into_reader(mut self) -> Result<SpoolReader> {
+        let mut file = self.file.take().context("stream spool already consumed")?;
+        file.flush().context("flush stream spool")?;
+        drop(file);
+        let reopened = match File::open(&self.path) {
+            Ok(f) => f,
+            Err(e) => {
+                // No reader will ever own the file; don't leak it.
+                let _ = std::fs::remove_file(&self.path);
+                return Err(e)
+                    .with_context(|| format!("reopen stream spool {}", self.path.display()));
+            }
+        };
+        Ok(SpoolReader {
+            path: self.path.clone(),
+            file: BufReader::new(reopened),
+            tokens: self.tokens,
+            pos: 0,
+        })
+    }
+
+    /// The spool's on-disk location (the registry unlinks abandoned
+    /// spools on eviction).
+    pub fn path(&self) -> &Path {
+        &self.path
+    }
+}
+
+impl Drop for SpoolWriter {
+    fn drop(&mut self) {
+        // Best-effort cleanup for evicted / abandoned streams. A writer
+        // consumed by `into_reader` handed the file to the reader
+        // (`file` is `None`) and must not unlink it underneath.
+        if self.file.is_some() {
+            let _ = std::fs::remove_file(&self.path);
+        }
+    }
+}
+
+/// Replay-side of the spool: a buffered [`ChunkSource`] over the
+/// written tokens. Deletes the file on drop.
+pub struct SpoolReader {
+    path: PathBuf,
+    file: BufReader<File>,
+    tokens: usize,
+    pos: usize,
+}
+
+impl ChunkSource for SpoolReader {
+    fn len(&self) -> usize {
+        self.tokens
+    }
+
+    fn reset(&mut self) -> Result<()> {
+        self.file.seek(SeekFrom::Start(0)).context("rewind stream spool")?;
+        self.pos = 0;
+        Ok(())
+    }
+
+    fn next_chunk(&mut self, buf: &mut [i32]) -> Result<usize> {
+        let n = buf.len().min(self.tokens - self.pos);
+        let mut raw = [0u8; 4];
+        for slot in buf[..n].iter_mut() {
+            self.file.read_exact(&mut raw).context("read stream spool")?;
+            *slot = i32::from_le_bytes(raw);
+        }
+        self.pos += n;
+        Ok(n)
+    }
+}
+
+impl Drop for SpoolReader {
+    fn drop(&mut self) {
+        let _ = std::fs::remove_file(&self.path);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn slice_source_chunks_and_rewinds() {
+        let ids: Vec<i32> = (0..10).collect();
+        let mut src = SliceSource::new(&ids);
+        assert_eq!(src.len(), 10);
+        let mut buf = [0i32; 4];
+        let mut seen = Vec::new();
+        loop {
+            let n = src.next_chunk(&mut buf).unwrap();
+            if n == 0 {
+                break;
+            }
+            seen.extend_from_slice(&buf[..n]);
+        }
+        assert_eq!(seen, ids);
+        src.reset().unwrap();
+        assert_eq!(src.next_chunk(&mut buf).unwrap(), 4);
+        assert_eq!(&buf, &[0, 1, 2, 3]);
+    }
+
+    #[test]
+    fn spool_roundtrips_and_cleans_up() {
+        let dir = std::env::temp_dir().join("hrrformer_spool_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("roundtrip.tok");
+        let ids: Vec<i32> = (0..1000).map(|i| i * 3 - 7).collect();
+        let mut w = SpoolWriter::create(&path).unwrap();
+        for chunk in ids.chunks(96) {
+            w.write_chunk(chunk).unwrap();
+        }
+        assert_eq!(w.tokens(), 1000);
+        let mut r = w.into_reader().unwrap();
+        for pass in 0..2 {
+            r.reset().unwrap();
+            let mut buf = [0i32; 128];
+            let mut seen = Vec::new();
+            loop {
+                let n = r.next_chunk(&mut buf).unwrap();
+                if n == 0 {
+                    break;
+                }
+                seen.extend_from_slice(&buf[..n]);
+            }
+            assert_eq!(seen, ids, "pass {pass}");
+        }
+        drop(r);
+        assert!(!path.exists(), "reader drop must unlink the spool");
+        // writer dropped without a reader also unlinks
+        let path2 = dir.join("abandoned.tok");
+        let mut w2 = SpoolWriter::create(&path2).unwrap();
+        w2.write_chunk(&[1, 2, 3]).unwrap();
+        drop(w2);
+        assert!(!path2.exists(), "abandoned writer must unlink the spool");
+    }
+}

@@ -33,6 +33,13 @@ pub fn default_budget() -> usize {
     std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1)
 }
 
+/// Task-granularity oversubscription factor for [`WorkerPool::task_chunks`]:
+/// how many queue chunks each budgeted worker gets per `run` call. Large
+/// enough that a straggling chunk strands at most `1/TASKS_PER_WORKER`
+/// of a worker's share, small enough that per-chunk overhead (queue
+/// lock, workspace setup) stays noise next to real row work.
+pub const TASKS_PER_WORKER: usize = 4;
+
 /// A task submitted through [`WorkerPool::run`] panicked. The panic was
 /// caught on the worker thread (the pool itself keeps running); the
 /// submitter decides how to surface it.
@@ -124,6 +131,19 @@ impl WorkerPool {
     /// stats can pin that.
     pub fn high_water(&self) -> usize {
         self.shared.high_water.load(Ordering::SeqCst)
+    }
+
+    /// How many chunks to split `items` independent work units into for
+    /// one [`WorkerPool::run`] call: [`TASKS_PER_WORKER`] per budgeted
+    /// worker, capped by the item count. Finer than one-chunk-per-worker
+    /// on purpose — with static `items/budget` splits, one skewed chunk
+    /// (a straggler row, a stream chunk landing next to batch traffic)
+    /// idles every other worker for its whole share; with several
+    /// smaller chunks, whichever worker frees up first pulls the next
+    /// one from the shared queue and the tail shrinks to one small
+    /// chunk. Splitting never changes per-item results, only placement.
+    pub fn task_chunks(&self, items: usize) -> usize {
+        (self.budget * TASKS_PER_WORKER).clamp(1, items.max(1))
     }
 
     /// Execute every task on the pool and block until all have finished.
@@ -412,5 +432,19 @@ mod tests {
     #[test]
     fn default_budget_is_positive() {
         assert!(default_budget() >= 1);
+    }
+
+    /// Chunk counts oversubscribe the budget for load balancing but can
+    /// never exceed the item count (empty chunks would be pure
+    /// overhead) and never hit zero.
+    #[test]
+    fn task_chunks_oversubscribes_within_item_count() {
+        let pool = WorkerPool::new(2);
+        assert_eq!(pool.task_chunks(100), 2 * TASKS_PER_WORKER);
+        assert_eq!(pool.task_chunks(3), 3, "capped by items");
+        assert_eq!(pool.task_chunks(1), 1);
+        assert_eq!(pool.task_chunks(0), 1, "degenerate call stays valid");
+        let single = WorkerPool::new(1);
+        assert_eq!(single.task_chunks(64), TASKS_PER_WORKER);
     }
 }

@@ -1,0 +1,249 @@
+//! Streaming-subsystem integration: the chunked multi-pass forward must
+//! be **bit-identical** to the whole-row native forward on the golden
+//! fixtures (both FFT paths, PAD masking in play), the engine's
+//! open/append/finish lifecycle must serve a classification end-to-end
+//! with typed lifecycle errors, and the carried per-stream state must be
+//! O(H) — the same byte count no matter how long the bucket is.
+//!
+//! Always runs: no artifacts, no PJRT, no skips.
+
+use std::time::Duration;
+
+use hrrformer::data::mmap::{write_corpus, MmapCorpus};
+use hrrformer::data::{by_task, Split};
+use hrrformer::engine::{Engine, EngineError};
+use hrrformer::hrr::{HrrConfig, NativeSession};
+use hrrformer::model::ParamStore;
+use hrrformer::runtime::Tensor;
+use hrrformer::stream::{classify_source, SliceSource, StreamConfig, StreamError};
+use hrrformer::util::json::Json;
+
+/// Parse an exported golden fixture into (config, params, ids) — the
+/// same format golden_native.rs checks against the Python reference;
+/// here the whole-row forward is itself the reference and the chunked
+/// stream must match it *bitwise*, not within tolerance.
+fn load_fixture(text: &str) -> (HrrConfig, ParamStore, Vec<Vec<i32>>) {
+    let j = Json::parse(text).expect("fixture json parses");
+    let cfgj = j.get("config").expect("config");
+    let u = |k: &str| cfgj.get(k).and_then(Json::as_usize).unwrap_or_else(|| panic!("config.{k}"));
+    let cfg = HrrConfig {
+        task: cfgj.get("task").and_then(Json::as_str).unwrap_or("golden").to_string(),
+        vocab: u("vocab"),
+        seq_len: u("seq_len"),
+        batch: u("batch"),
+        embed: u("embed"),
+        mlp_dim: u("mlp_dim"),
+        heads: u("heads"),
+        layers: u("layers"),
+        classes: u("classes"),
+        learned_pos: cfgj.get("pos").and_then(Json::as_str) == Some("learned"),
+    };
+
+    let mut params = ParamStore::default();
+    for p in j.get("params").and_then(Json::as_arr).expect("params") {
+        let name = p.get("name").and_then(Json::as_str).expect("param.name").to_string();
+        let shape: Vec<usize> = p
+            .get("shape")
+            .and_then(Json::as_arr)
+            .expect("param.shape")
+            .iter()
+            .map(|d| d.as_usize().expect("shape dim"))
+            .collect();
+        let data: Vec<f32> = p
+            .get("data")
+            .and_then(Json::as_arr)
+            .expect("param.data")
+            .iter()
+            .map(|v| v.as_f64().expect("param value") as f32)
+            .collect();
+        params.names.push(name);
+        params.tensors.push(Tensor::f32(shape, data));
+    }
+
+    let rows: Vec<Vec<i32>> = j
+        .get("ids")
+        .and_then(Json::as_arr)
+        .expect("ids")
+        .iter()
+        .map(|row| row.as_arr().expect("ids row").iter().map(|v| v.as_i64().unwrap() as i32).collect())
+        .collect();
+    (cfg, params, rows)
+}
+
+/// Chunk sizes that stress the boundary logic: single-token, a prime
+/// that never divides T, a power of two, and the whole row at once.
+fn chunk_sweep(t: usize) -> [usize; 4] {
+    [1, 7, 16, t]
+}
+
+fn check_fixture_stream_parity(text: &str, label: &str) {
+    let (cfg, params, rows) = load_fixture(text);
+    let sess = NativeSession::with_params(cfg.clone(), params)
+        .unwrap_or_else(|e| panic!("{label}: fixture params rejected: {e:#}"));
+    for (r, ids) in rows.iter().enumerate() {
+        let t = ids.len();
+        let whole = sess
+            .predict(&Tensor::i32(vec![1, t], ids.clone()))
+            .unwrap_or_else(|e| panic!("{label}: whole-row predict failed: {e:#}"));
+        let want = whole.as_f32().unwrap();
+        for chunk in chunk_sweep(t) {
+            let mut src = SliceSource::new(ids);
+            let (got, st) = classify_source(&sess, &mut src, chunk)
+                .unwrap_or_else(|e| panic!("{label}: chunked forward failed: {e:#}"));
+            assert_eq!(
+                got.as_slice(),
+                want,
+                "{label}: row {r} chunk {chunk}: chunked logits differ from whole-row bitwise"
+            );
+            assert!(st.ready(), "{label}: all passes must complete");
+            assert_eq!(st.tokens(), t, "{label}: token count carried in state");
+        }
+    }
+    eprintln!("{label}: chunked forward bit-identical across chunk sizes [1, 7, 16, T]");
+}
+
+#[test]
+fn chunked_stream_matches_whole_row_on_pow2_fft_fixture() {
+    check_fixture_stream_parity(include_str!("fixtures/golden_hrr_fixed.json"), "golden_hrr_fixed");
+}
+
+#[test]
+fn chunked_stream_matches_whole_row_on_naive_dft_fixture() {
+    check_fixture_stream_parity(
+        include_str!("fixtures/golden_hrr_learned.json"),
+        "golden_hrr_learned",
+    );
+}
+
+/// Fresh spool dir per test so parallel test threads never collide.
+fn test_stream_cfg(name: &str) -> StreamConfig {
+    let dir = std::env::temp_dir().join("hrrformer_stream_native_test").join(name);
+    StreamConfig { chunk_cap: 16, ..StreamConfig::new(dir) }
+}
+
+const BASE: &str = "ember_hrrformer_small_T64_B1";
+const SEED: u32 = 9;
+
+#[test]
+fn engine_stream_lifecycle_classifies_end_to_end() {
+    let engine = Engine::builder()
+        .stream_bucket(BASE)
+        .stream_config(test_stream_cfg("lifecycle"))
+        .seed(SEED)
+        .build_native()
+        .expect("stream-only native engine builds");
+
+    // 100 bytes into a T=64 bucket: appended in uneven pieces, truncated
+    // at the bucket length, classified on finish.
+    let bytes: Vec<u8> = (0..100u32).map(|i| (i * 37 % 251) as u8).collect();
+    let id = engine.open_stream().expect("open");
+    for piece in bytes.chunks(13) {
+        engine.append_stream(id, piece).expect("append");
+    }
+    let out = engine.finish_stream(id).expect("finish");
+    assert_eq!(out.appended, 100);
+    assert_eq!(out.tokens, 64, "stream truncates at the bucket T");
+    assert!(out.truncated);
+
+    // The engine-served logits must equal the direct kernel forward on
+    // the same (truncated) tokens, bitwise — same base, same seed.
+    let sess = NativeSession::create(BASE, SEED).unwrap();
+    let ids: Vec<i32> = bytes[..64].iter().map(|&b| b as i32 + 1).collect();
+    let want = sess.predict(&Tensor::i32(vec![1, 64], ids)).unwrap();
+    assert_eq!(out.logits.as_slice(), want.as_f32().unwrap(), "engine path = kernel path bitwise");
+
+    // Lifecycle errors are typed and distinguish *why* an id is gone.
+    assert_eq!(
+        engine.append_stream(id, &b"late"[..]),
+        Err(EngineError::Stream(StreamError::Finished(id)))
+    );
+    assert_eq!(
+        engine.finish_stream(9999),
+        Err(EngineError::Stream(StreamError::Unknown(9999)))
+    );
+    engine.stop();
+}
+
+#[test]
+fn mmap_fed_streams_match_direct_kernel_bitwise() {
+    // The paper-scale workload in miniature: a memory-mapped corpus
+    // feeds engine streams chunk by chunk; no full row is ever
+    // materialized on the append path.
+    let dir = std::env::temp_dir().join("hrrformer_stream_native_test");
+    std::fs::create_dir_all(&dir).unwrap();
+    let corpus_path = dir.join("mmap_corpus.bin");
+    let ds = by_task("ember", 64).unwrap();
+    write_corpus(&corpus_path, ds.as_ref(), Split::Test, 5, 2, 64).unwrap();
+    let corpus = MmapCorpus::open(&corpus_path).unwrap();
+
+    let engine = Engine::builder()
+        .stream_bucket(BASE)
+        .stream_config(test_stream_cfg("mmap"))
+        .seed(SEED)
+        .build_native()
+        .unwrap();
+    let sess = NativeSession::create(BASE, SEED).unwrap();
+
+    for r in 0..corpus.len() {
+        let id = engine.open_stream().unwrap();
+        let mut buf = vec![0u8; 13]; // prime-sized pieces off the mapping
+        let mut off = 0usize;
+        loop {
+            let got = corpus.read_row_chunk(r, off, &mut buf).unwrap();
+            if got == 0 {
+                break;
+            }
+            engine.append_stream(id, &buf[..got]).unwrap();
+            off += got;
+        }
+        let out = engine.finish_stream(id).unwrap();
+        let (want, _) = classify_source(&sess, &mut corpus.row_source(r).unwrap(), 16).unwrap();
+        assert_eq!(out.logits, want, "row {r}: engine stream = mmap kernel path bitwise");
+        assert!(!out.truncated);
+        assert_eq!(out.tokens, 64);
+    }
+    engine.stop();
+    let _ = std::fs::remove_file(&corpus_path);
+}
+
+#[test]
+fn idle_streams_are_evicted_by_the_engine_sweeper() {
+    // Zero idle timeout: the executor's sweep (which runs after every
+    // message) evicts the stream before the next call arrives — no
+    // sleeping in the test.
+    let cfg = StreamConfig { idle_timeout: Duration::ZERO, ..test_stream_cfg("evict") };
+    let engine = Engine::builder()
+        .stream_bucket(BASE)
+        .stream_config(cfg)
+        .seed(SEED)
+        .build_native()
+        .unwrap();
+    let id = engine.open_stream().unwrap();
+    assert_eq!(
+        engine.append_stream(id, &b"hello"[..]),
+        Err(EngineError::Stream(StreamError::Evicted(id)))
+    );
+    engine.stop();
+}
+
+#[test]
+fn stream_calls_without_a_stream_bucket_are_typed_unavailable() {
+    let engine = Engine::builder().bucket(BASE).seed(SEED).build_native().unwrap();
+    assert_eq!(engine.open_stream(), Err(EngineError::StreamUnavailable));
+    assert_eq!(engine.append_stream(0, &b"x"[..]), Err(EngineError::StreamUnavailable));
+    assert_eq!(engine.finish_stream(0), Err(EngineError::StreamUnavailable));
+    engine.stop();
+}
+
+#[test]
+fn carried_state_is_o_h_independent_of_bucket_length() {
+    // The subsystem's core claim: per-stream resident state depends on
+    // the model (heads, bins, embed), never on T. Compare buckets 64×
+    // apart in sequence length.
+    let small = NativeSession::create("ember_hrrformer_small_T64_B1", SEED).unwrap();
+    let large = NativeSession::create("ember_hrrformer_small_T4096_B1", SEED).unwrap();
+    let a = small.stream_state().resident_bytes();
+    let b = large.stream_state().resident_bytes();
+    assert!(a > 0);
+    assert_eq!(a, b, "resident stream state must not grow with T ({a} vs {b} bytes)");
+}

@@ -47,6 +47,20 @@ if [[ ! -s BENCH_native.json ]]; then
     exit 1
 fi
 
+# Streaming smoke (artifact-free): one paper-scale T=131072 stream,
+# fed from a memory-mapped corpus in 8192-token chunks, must classify
+# end-to-end through the serve --stream engine path with O(H) carried
+# state, and `bench stream` must merge a "stream" section into the
+# BENCH_native.json trajectory just regenerated above.
+run env HRRFORMER_ARTIFACTS=/hrrformer-no-artifacts \
+    cargo run --release -- serve --stream --requests 1 --chunk 8192
+run env HRRFORMER_ARTIFACTS=/hrrformer-no-artifacts \
+    cargo run --release -- bench stream --examples 1 --chunks 8192
+if ! grep -q '"stream"' BENCH_native.json; then
+    echo "verify: FAIL — bench stream did not merge a stream section into BENCH_native.json" >&2
+    exit 1
+fi
+
 # Native training smoke (artifact-free): a tiny `repro train --backend
 # native` job must run the full train→eval→checkpoint loop (reverse-mode
 # autodiff + Adam, --eval-every exercising the periodic-eval path) and
