@@ -1,0 +1,463 @@
+//! `bench http` — closed-loop load test against the HTTP front door.
+//!
+//! Two phases over the same server, both closed-loop (each client
+//! thread holds one keep-alive connection and issues the next request
+//! only after the previous response):
+//!
+//! * **steady** — few clients, the server keeps up: measures the happy
+//!   path (throughput, client-observed p50/p99).
+//! * **overload** — many clients against a shallow engine queue: the
+//!   point is the backpressure regime, where `EngineError::QueueFull`
+//!   must surface as **429** (and every request still gets *an*
+//!   answer — bounded queues shed, they never hang).
+//!
+//! Latency percentiles here are **exact** (sorted client-side samples),
+//! unlike the engine's log2-bucket histogram — the bench is the
+//! ground truth the histogram approximates.
+//!
+//! By default the bench stands up an in-process engine + server sized
+//! to make overload reproducible (shallow `queue_depth`); `--addr`
+//! targets an already-running `repro serve --http` instead (that mode
+//! drives whatever the server was configured with). Results merge into
+//! the `BENCH_native.json` trajectory under an `"http"` key, alongside
+//! `bench native` / `bench stream` rows.
+
+use std::collections::BTreeMap;
+use std::io::{Read, Write};
+use std::net::TcpStream;
+use std::path::{Path, PathBuf};
+use std::time::{Duration, Instant};
+
+use anyhow::{Context, Result};
+
+use crate::coordinator::BatchPolicy;
+use crate::engine::{Backend, Engine};
+use crate::net::{HttpConfig, HttpServer};
+use crate::util::json::Json;
+use crate::util::table::Table;
+
+pub struct HttpBenchCfg {
+    /// Target an external server (`host:port`); None stands up an
+    /// in-process engine + front door.
+    pub addr: Option<String>,
+    /// (clients, requests-per-client) for the steady phase.
+    pub steady: (usize, usize),
+    /// (clients, requests-per-client) for the overload phase.
+    pub overload: (usize, usize),
+    /// Token ids per request.
+    pub req_len: usize,
+    /// In-process mode: engine bucket base.
+    pub base: String,
+    /// In-process mode: engine queue depth — shallow on purpose, so the
+    /// overload phase reliably reaches `QueueFull`.
+    pub queue_depth: usize,
+    pub seed: u64,
+    /// Trajectory file to merge into (same file as `bench native`).
+    pub out: PathBuf,
+}
+
+impl Default for HttpBenchCfg {
+    fn default() -> Self {
+        HttpBenchCfg {
+            addr: None,
+            steady: (2, 32),
+            overload: (16, 16),
+            req_len: 192,
+            base: "ember_hrrformer_small_T256_B8".into(),
+            queue_depth: 4,
+            seed: 0,
+            out: PathBuf::from("BENCH_native.json"),
+        }
+    }
+}
+
+/// One phase's client-side view.
+#[derive(Debug, Clone)]
+pub struct PhaseReport {
+    pub clients: usize,
+    pub requests: usize,
+    /// 200s
+    pub ok: usize,
+    /// 429s — engine backpressure made visible on the wire.
+    pub rejected_429: usize,
+    /// anything else (5xx, transport failures, shed 503s)
+    pub errors: usize,
+    pub throughput_per_s: f64,
+    /// exact percentiles over successful requests
+    pub p50_ms: f64,
+    pub p99_ms: f64,
+    pub secs: f64,
+}
+
+#[derive(Debug, Clone)]
+pub struct HttpBenchReport {
+    pub addr: String,
+    pub req_len: usize,
+    pub steady: PhaseReport,
+    pub overload: PhaseReport,
+}
+
+pub fn run(cfg: &HttpBenchCfg) -> Result<HttpBenchReport> {
+    let seed32 = u32::try_from(cfg.seed).context("--seed must fit in u32")?;
+
+    // In-process mode: a native engine with a deliberately shallow
+    // queue, and one driver per overload client so closed-loop clients
+    // are never serialized by the driver pool instead of the engine.
+    let server: Option<(Engine, HttpServer)> = match &cfg.addr {
+        Some(_) => None,
+        None => {
+            let engine = Engine::builder()
+                .bucket(&cfg.base)
+                .policy(BatchPolicy { max_batch: 8, max_wait: Duration::from_millis(5) })
+                .queue_depth(cfg.queue_depth)
+                .seed(seed32)
+                .backend(Backend::Native)
+                .build_native()?;
+            let http_cfg = HttpConfig {
+                addr: "127.0.0.1:0".into(),
+                drivers: cfg.steady.0.max(cfg.overload.0),
+                ..HttpConfig::default()
+            };
+            let server = HttpServer::start(http_cfg, &engine)?;
+            Some((engine, server))
+        }
+    };
+    let addr = match &cfg.addr {
+        Some(a) => a.clone(),
+        None => server.as_ref().unwrap().1.addr().to_string(),
+    };
+
+    eprintln!(
+        "[http] steady phase: {} clients × {} requests → {addr}",
+        cfg.steady.0, cfg.steady.1
+    );
+    let steady = run_phase(&addr, cfg.steady.0, cfg.steady.1, cfg.req_len, cfg.seed)?;
+    eprintln!(
+        "[http] overload phase: {} clients × {} requests → {addr}",
+        cfg.overload.0, cfg.overload.1
+    );
+    let overload = run_phase(&addr, cfg.overload.0, cfg.overload.1, cfg.req_len, cfg.seed ^ 1)?;
+
+    let report = HttpBenchReport { addr: addr.clone(), req_len: cfg.req_len, steady, overload };
+
+    let mut table = Table::new(
+        &format!("HTTP front door — closed loop, {} ids/request", report.req_len),
+        &["Phase", "clients", "req", "ok", "429", "err", "req/s", "p50 ms", "p99 ms"],
+    );
+    for (name, p) in [("steady", &report.steady), ("overload", &report.overload)] {
+        table.row(vec![
+            name.to_string(),
+            p.clients.to_string(),
+            p.requests.to_string(),
+            p.ok.to_string(),
+            p.rejected_429.to_string(),
+            p.errors.to_string(),
+            format!("{:.1}", p.throughput_per_s),
+            format!("{:.1}", p.p50_ms),
+            format!("{:.1}", p.p99_ms),
+        ]);
+    }
+    table.print();
+
+    merge_into_trajectory(&cfg.out, http_doc(&report))?;
+    eprintln!("[http] trajectory merged → {}", cfg.out.display());
+
+    if let Some((engine, http)) = server {
+        // drain the front door before the engine behind it
+        http.stop();
+        engine.stop();
+    }
+    Ok(report)
+}
+
+/// Run one closed-loop phase: `clients` threads, each issuing
+/// `per_client` sequential `/classify` requests over one keep-alive
+/// connection (reconnecting if the server closes it).
+fn run_phase(
+    addr: &str,
+    clients: usize,
+    per_client: usize,
+    req_len: usize,
+    seed: u64,
+) -> Result<PhaseReport> {
+    let clients = clients.max(1);
+    let t0 = Instant::now();
+    let mut samples: Vec<(u16, f64)> = Vec::with_capacity(clients * per_client);
+    std::thread::scope(|s| {
+        let handles: Vec<_> = (0..clients)
+            .map(|c| s.spawn(move || client_loop(addr, per_client, req_len, seed ^ c as u64)))
+            .collect();
+        for h in handles {
+            if let Ok(v) = h.join() {
+                samples.extend(v);
+            }
+        }
+    });
+    let secs = t0.elapsed().as_secs_f64().max(1e-9);
+
+    let requests = clients * per_client;
+    let ok = samples.iter().filter(|(st, _)| *st == 200).count();
+    let rejected_429 = samples.iter().filter(|(st, _)| *st == 429).count();
+    // transport failures never produced a sample — count them as errors
+    // along with every non-200/429 status
+    let errors = requests - ok - rejected_429;
+    let mut ok_ms: Vec<f64> =
+        samples.iter().filter(|(st, _)| *st == 200).map(|&(_, ms)| ms).collect();
+    ok_ms.sort_by(|a, b| a.total_cmp(b));
+    Ok(PhaseReport {
+        clients,
+        requests,
+        ok,
+        rejected_429,
+        errors,
+        throughput_per_s: requests as f64 / secs,
+        p50_ms: exact_percentile(&ok_ms, 50.0),
+        p99_ms: exact_percentile(&ok_ms, 99.0),
+        secs,
+    })
+}
+
+/// One client thread: keep-alive connection, sequential requests.
+/// Returns `(status, latency_ms)` per request that got a response.
+fn client_loop(addr: &str, n: usize, req_len: usize, seed: u64) -> Vec<(u16, f64)> {
+    let mut out = Vec::with_capacity(n);
+    let mut conn: Option<TcpStream> = None;
+    for i in 0..n {
+        let body = request_body(req_len, seed.wrapping_add(i as u64));
+        let req = format!(
+            "POST /classify HTTP/1.1\r\nHost: bench\r\nContent-Type: application/json\r\nContent-Length: {}\r\n\r\n{body}",
+            body.len()
+        );
+        let t0 = Instant::now();
+        let result = (|| -> std::io::Result<(u16, bool)> {
+            let stream = match conn.as_mut() {
+                Some(s) => s,
+                None => {
+                    let s = TcpStream::connect(addr)?;
+                    s.set_nodelay(true)?;
+                    s.set_read_timeout(Some(Duration::from_secs(60)))?;
+                    conn.insert(s)
+                }
+            };
+            stream.write_all(req.as_bytes())?;
+            read_response(stream)
+        })();
+        match result {
+            Ok((status, close)) => {
+                out.push((status, t0.elapsed().as_secs_f64() * 1000.0));
+                if close {
+                    conn = None;
+                }
+            }
+            Err(_) => {
+                // transport failure: drop the connection, next request
+                // reconnects; the phase counts the gap as an error
+                conn = None;
+            }
+        }
+    }
+    out
+}
+
+/// Deterministic pseudo-random token ids (1..=256, the EMBER byte
+/// vocabulary without PAD).
+fn request_body(req_len: usize, seed: u64) -> String {
+    let mut x = seed.wrapping_mul(0x9e3779b97f4a7c15).wrapping_add(1);
+    let ids: Vec<String> = (0..req_len.max(1))
+        .map(|_| {
+            // xorshift64*
+            x ^= x >> 12;
+            x ^= x << 25;
+            x ^= x >> 27;
+            (1 + (x.wrapping_mul(0x2545f4914f6cdd1d) >> 56) as i64 % 256).to_string()
+        })
+        .collect();
+    format!("{{\"ids\":[{}]}}", ids.join(","))
+}
+
+/// Read one response: status line, headers (for `Content-Length` and
+/// `Connection: close`), then the full body. Returns (status, close).
+fn read_response(stream: &mut TcpStream) -> std::io::Result<(u16, bool)> {
+    let mut buf: Vec<u8> = Vec::with_capacity(1024);
+    let mut tmp = [0u8; 4096];
+    let head_end = loop {
+        if let Some(pos) = buf.windows(4).position(|w| w == b"\r\n\r\n") {
+            break pos + 4;
+        }
+        let n = stream.read(&mut tmp)?;
+        if n == 0 {
+            return Err(std::io::Error::new(
+                std::io::ErrorKind::UnexpectedEof,
+                "connection closed mid-response",
+            ));
+        }
+        buf.extend_from_slice(&tmp[..n]);
+    };
+    let head = String::from_utf8_lossy(&buf[..head_end]).to_string();
+    let status = head
+        .split_whitespace()
+        .nth(1)
+        .and_then(|s| s.parse::<u16>().ok())
+        .ok_or_else(|| std::io::Error::new(std::io::ErrorKind::InvalidData, "bad status line"))?;
+    let mut content_length = 0usize;
+    let mut close = false;
+    for line in head.split("\r\n").skip(1) {
+        if let Some((name, value)) = line.split_once(':') {
+            if name.eq_ignore_ascii_case("content-length") {
+                content_length = value.trim().parse().unwrap_or(0);
+            } else if name.eq_ignore_ascii_case("connection")
+                && value.trim().eq_ignore_ascii_case("close")
+            {
+                close = true;
+            }
+        }
+    }
+    while buf.len() < head_end + content_length {
+        let n = stream.read(&mut tmp)?;
+        if n == 0 {
+            return Err(std::io::Error::new(
+                std::io::ErrorKind::UnexpectedEof,
+                "connection closed mid-body",
+            ));
+        }
+        buf.extend_from_slice(&tmp[..n]);
+    }
+    Ok((status, close))
+}
+
+/// Exact percentile over pre-sorted samples (nearest-rank).
+fn exact_percentile(sorted_ms: &[f64], p: f64) -> f64 {
+    if sorted_ms.is_empty() {
+        return 0.0;
+    }
+    let rank = ((p / 100.0) * sorted_ms.len() as f64).ceil() as usize;
+    sorted_ms[rank.clamp(1, sorted_ms.len()) - 1]
+}
+
+fn phase_doc(p: &PhaseReport) -> Json {
+    let mut m = BTreeMap::new();
+    m.insert("clients".to_string(), Json::Num(p.clients as f64));
+    m.insert("requests".to_string(), Json::Num(p.requests as f64));
+    m.insert("ok".to_string(), Json::Num(p.ok as f64));
+    m.insert("rejected_429".to_string(), Json::Num(p.rejected_429 as f64));
+    m.insert("errors".to_string(), Json::Num(p.errors as f64));
+    m.insert("throughput_per_s".to_string(), Json::Num(p.throughput_per_s));
+    m.insert("p50_ms".to_string(), Json::Num(p.p50_ms));
+    m.insert("p99_ms".to_string(), Json::Num(p.p99_ms));
+    Json::Obj(m)
+}
+
+/// The `"http"` subtree of the trajectory document.
+fn http_doc(report: &HttpBenchReport) -> Json {
+    let mut m = BTreeMap::new();
+    m.insert("addr".to_string(), Json::Str(report.addr.clone()));
+    m.insert("req_len".to_string(), Json::Num(report.req_len as f64));
+    m.insert("steady".to_string(), phase_doc(&report.steady));
+    m.insert("overload".to_string(), phase_doc(&report.overload));
+    Json::Obj(m)
+}
+
+/// Insert `doc` under the `"http"` key of the trajectory file,
+/// preserving whatever else (`bench native` / `bench stream` rows) is
+/// already there.
+fn merge_into_trajectory(path: &Path, doc: Json) -> Result<()> {
+    let mut root = match std::fs::read_to_string(path).ok().and_then(|s| Json::parse(&s).ok()) {
+        Some(Json::Obj(m)) => m,
+        _ => {
+            let mut m = BTreeMap::new();
+            m.insert("bench".to_string(), Json::Str("native".to_string()));
+            m
+        }
+    };
+    root.insert("http".to_string(), doc);
+    let out = Json::Obj(root);
+    std::fs::write(path, format!("{out}\n")).with_context(|| format!("write {}", path.display()))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn tmp(name: &str) -> PathBuf {
+        let dir = std::env::temp_dir().join("hrrformer_bench_http_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        dir.join(name)
+    }
+
+    #[test]
+    fn merge_preserves_existing_trajectory_keys() {
+        let path = tmp("merge.json");
+        std::fs::write(&path, "{\"bench\":\"native\",\"stream\":{\"seq_len\":64}}\n").unwrap();
+        let mut m = BTreeMap::new();
+        m.insert("req_len".to_string(), Json::Num(8.0));
+        merge_into_trajectory(&path, Json::Obj(m)).unwrap();
+        let parsed = Json::parse(&std::fs::read_to_string(&path).unwrap()).unwrap();
+        assert_eq!(
+            parsed.get("stream").and_then(|s| s.get("seq_len")).and_then(Json::as_usize),
+            Some(64)
+        );
+        assert_eq!(
+            parsed.get("http").and_then(|h| h.get("req_len")).and_then(Json::as_usize),
+            Some(8)
+        );
+    }
+
+    #[test]
+    fn exact_percentiles_nearest_rank() {
+        let v = [1.0, 2.0, 3.0, 4.0, 5.0, 6.0, 7.0, 8.0, 9.0, 10.0];
+        assert_eq!(exact_percentile(&v, 50.0), 5.0);
+        assert_eq!(exact_percentile(&v, 99.0), 10.0);
+        assert_eq!(exact_percentile(&v, 100.0), 10.0);
+        assert_eq!(exact_percentile(&[], 50.0), 0.0);
+        assert_eq!(exact_percentile(&[3.5], 50.0), 3.5);
+    }
+
+    #[test]
+    fn request_bodies_are_valid_json_with_in_vocab_ids() {
+        let body = request_body(16, 42);
+        let parsed = Json::parse(&body).unwrap();
+        let ids = parsed.get("ids").and_then(Json::as_arr).unwrap();
+        assert_eq!(ids.len(), 16);
+        for v in ids {
+            let n = v.as_i64().unwrap();
+            assert!((1..=256).contains(&n), "id {n} out of EMBER byte vocab");
+        }
+        // deterministic per seed, different across seeds
+        assert_eq!(request_body(16, 42), body);
+        assert_ne!(request_body(16, 43), body);
+    }
+
+    /// Tiny end-to-end run: in-process engine + server, minutes of
+    /// margin under CI. The overload phase here is small, so 429s are
+    /// possible but not asserted — the dedicated integration test
+    /// (tests/http_serve.rs) pins the overload regime.
+    #[test]
+    fn tiny_bench_runs_and_merges_http_key() {
+        let out = tmp("traj.json");
+        let _ = std::fs::remove_file(&out);
+        let cfg = HttpBenchCfg {
+            addr: None,
+            steady: (2, 4),
+            overload: (4, 2),
+            req_len: 16,
+            base: "ember_hrrformer_small_T64_B8".into(),
+            queue_depth: 4,
+            seed: 7,
+            out: out.clone(),
+        };
+        let report = run(&cfg).unwrap();
+        let total = report.steady.requests + report.overload.requests;
+        let answered = report.steady.ok
+            + report.steady.rejected_429
+            + report.overload.ok
+            + report.overload.rejected_429;
+        // bounded queues shed — they never hang: every request got an
+        // answer (200 or 429), nothing timed out or errored
+        assert_eq!(answered, total, "every request must be answered");
+        assert!(report.steady.ok > 0);
+        let parsed = Json::parse(&std::fs::read_to_string(&out).unwrap()).unwrap();
+        let http = parsed.get("http").expect("http key");
+        assert_eq!(http.get("req_len").and_then(Json::as_usize), Some(16));
+        assert!(http.get("steady").and_then(|s| s.get("p50_ms")).is_some());
+    }
+}

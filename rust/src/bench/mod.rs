@@ -4,6 +4,7 @@
 //! `results/`.
 
 pub mod ember;
+pub mod http;
 pub mod inference;
 pub mod lra;
 pub mod native;

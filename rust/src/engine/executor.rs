@@ -34,7 +34,30 @@ pub(crate) struct Job {
     /// Submission time at the client — latency covers routing + queueing
     /// + execution.
     pub submitted: Instant,
+    /// Per-request latency budget (`submit_deadline`), mapped onto the
+    /// batcher's `max_wait` via [`effective_enqueue`].
+    pub deadline: Option<Duration>,
+    /// Live bucket queue-depth gauge; decrements when the job is
+    /// dropped (i.e. after its reply is sent, on every path).
+    pub depth: Option<crate::engine::DepthGuard>,
     pub reply: SyncSender<Result<InferReply, EngineError>>,
+}
+
+/// Map a per-request deadline onto the batcher's single `max_wait` by
+/// backdating the enqueue instant: the flush deadline the queue computes
+/// is `enqueued + max_wait`, so returning `submitted - (max_wait - d)`
+/// makes it land at `submitted + d`. Deadlines looser than the policy
+/// change nothing — the engine never waits longer than its own
+/// `max_wait` anyway.
+pub(crate) fn effective_enqueue(
+    submitted: Instant,
+    deadline: Option<Duration>,
+    max_wait: Duration,
+) -> Instant {
+    match deadline {
+        Some(d) if d < max_wait => submitted.checked_sub(max_wait - d).unwrap_or(submitted),
+        _ => submitted,
+    }
 }
 
 pub(crate) enum ExecMsg {
@@ -144,7 +167,7 @@ fn executor_loop(
             // toward max_wait, so under backpressure a pre-aged job
             // flushes immediately instead of waiting a fresh deadline.
             Ok(ExecMsg::Job(job)) => {
-                let enqueued = job.submitted;
+                let enqueued = effective_enqueue(job.submitted, job.deadline, policy.max_wait);
                 queue.push_at(job, enqueued);
                 // Greedily drain whatever else already sits in the
                 // channel before deciding to flush. Submission-time
@@ -156,7 +179,11 @@ fn executor_loop(
                 loop {
                     match rx.try_recv() {
                         Ok(ExecMsg::Job(job)) => {
-                            let enqueued = job.submitted;
+                            let enqueued = effective_enqueue(
+                                job.submitted,
+                                job.deadline,
+                                policy.max_wait,
+                            );
                             queue.push_at(job, enqueued);
                         }
                         Ok(ExecMsg::Shutdown) | Err(TryRecvError::Disconnected) => {
@@ -257,4 +284,30 @@ fn decode(logits: &Tensor, cap: usize) -> Result<(Vec<f32>, usize, Vec<usize>), 
         return Err(format!("argmax produced {} rows, expected {cap}", preds.len()));
     }
     Ok((data, classes, preds))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn deadline_backdates_enqueue_to_land_flush_at_submitted_plus_deadline() {
+        let wait = Duration::from_millis(10);
+        let now = Instant::now();
+
+        // Tighter deadline: enqueue is backdated so enqueued + max_wait
+        // == submitted + deadline.
+        let e = effective_enqueue(now, Some(Duration::from_millis(3)), wait);
+        assert_eq!(e + wait, now + Duration::from_millis(3));
+
+        // Looser-than-policy and absent deadlines change nothing.
+        let e = effective_enqueue(now, Some(Duration::from_millis(50)), wait);
+        assert_eq!(e, now);
+        let e = effective_enqueue(now, None, wait);
+        assert_eq!(e, now);
+
+        // Exactly-equal deadline is the identity mapping too.
+        let e = effective_enqueue(now, Some(wait), wait);
+        assert_eq!(e, now);
+    }
 }

@@ -83,7 +83,7 @@ mod stream_exec;
 pub use error::EngineError;
 
 use std::collections::VecDeque;
-use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::atomic::{AtomicI64, AtomicU64, Ordering};
 use std::sync::mpsc::{sync_channel, Receiver, SyncSender, TrySendError};
 use std::sync::{Arc, Mutex};
 use std::thread::JoinHandle;
@@ -179,6 +179,18 @@ impl Ticket {
         self.rx.recv().unwrap_or(Err(EngineError::Shutdown))
     }
 
+    /// Block at most `timeout` for the reply; `None` on expiry (the
+    /// request stays in flight and its eventual reply is dropped with
+    /// the ticket — the HTTP front door maps this to 504).
+    pub fn wait_timeout(&self, timeout: Duration) -> Option<Result<InferReply, EngineError>> {
+        use std::sync::mpsc::RecvTimeoutError;
+        match self.rx.recv_timeout(timeout) {
+            Ok(r) => Some(r),
+            Err(RecvTimeoutError::Timeout) => None,
+            Err(RecvTimeoutError::Disconnected) => Some(Err(EngineError::Shutdown)),
+        }
+    }
+
     /// Non-blocking poll; `None` while the request is still in flight.
     pub fn try_wait(&self) -> Option<Result<InferReply, EngineError>> {
         use std::sync::mpsc::TryRecvError;
@@ -212,6 +224,34 @@ impl ExecSpan {
 /// How many recent execution spans to retain for observability.
 const SPAN_CAPACITY: usize = 4096;
 
+/// A live queue-depth counter for one bucket: jobs routed to that
+/// bucket's executor (channel + stash + batch queue) that have not yet
+/// been replied to. Incremented by the router at handoff, decremented
+/// automatically when the job is dropped after its reply (RAII
+/// [`DepthGuard`]), so no error path can leak the gauge.
+pub(crate) struct BucketGauge {
+    depth: AtomicI64,
+}
+
+/// Increments its gauge on creation, decrements on drop. Carried inside
+/// the routed `Job`, whose single ownership guarantees exactly one
+/// decrement wherever the job ends — reply, shutdown drain, or a dead
+/// executor channel.
+pub(crate) struct DepthGuard(Arc<BucketGauge>);
+
+impl DepthGuard {
+    pub(crate) fn new(gauge: Arc<BucketGauge>) -> DepthGuard {
+        gauge.depth.fetch_add(1, Ordering::Relaxed);
+        DepthGuard(gauge)
+    }
+}
+
+impl Drop for DepthGuard {
+    fn drop(&mut self) {
+        self.0.depth.fetch_sub(1, Ordering::Relaxed);
+    }
+}
+
 /// Shared service metrics.
 #[derive(Default)]
 pub struct EngineStats {
@@ -220,6 +260,9 @@ pub struct EngineStats {
     /// Requests rejected with `QueueFull` (admission or bucket queue).
     pub rejected: AtomicU64,
     spans: Mutex<VecDeque<ExecSpan>>,
+    /// (bucket T, live gauge) per predict bucket, ascending T; installed
+    /// once at build time.
+    depths: Mutex<Vec<(usize, Arc<BucketGauge>)>>,
 }
 
 impl EngineStats {
@@ -239,6 +282,22 @@ impl EngineStats {
     pub fn spans(&self) -> Vec<ExecSpan> {
         self.spans.lock().unwrap().iter().copied().collect()
     }
+
+    pub(crate) fn install_gauges(&self, gauges: Vec<(usize, Arc<BucketGauge>)>) {
+        *self.depths.lock().unwrap() = gauges;
+    }
+
+    /// Live per-bucket queue depth as (bucket T, in-flight jobs),
+    /// ascending by T — requests routed to the bucket and not yet
+    /// replied to. The `/metrics` endpoint exports this directly.
+    pub fn queue_depths(&self) -> Vec<(usize, usize)> {
+        self.depths
+            .lock()
+            .unwrap()
+            .iter()
+            .map(|(t, g)| (*t, g.depth.load(Ordering::Relaxed).max(0) as usize))
+            .collect()
+    }
 }
 
 struct AdmitReq {
@@ -248,6 +307,11 @@ struct AdmitReq {
     /// router hands their job off with a blocking send and never
     /// rejects it with `QueueFull`. Fail-fast submitters get `try_send`.
     blocking: bool,
+    /// Per-request latency budget (`submit_deadline`): the executor
+    /// maps it onto the batcher's `max_wait` — the batch holding this
+    /// request flushes no later than `submitted + min(max_wait,
+    /// deadline)`.
+    deadline: Option<Duration>,
     reply: SyncSender<Result<InferReply, EngineError>>,
 }
 
@@ -273,11 +337,31 @@ impl EngineClient {
     /// can still reject later, in which case the ticket resolves to
     /// `QueueFull`.
     pub fn submit(&self, req: impl Into<InferRequest>) -> Result<Ticket, EngineError> {
+        self.submit_inner(req.into().ids, None)
+    }
+
+    /// Non-blocking submit with a per-request latency budget. The
+    /// deadline maps onto the batcher's `max_wait`: the executor flushes
+    /// the batch holding this request no later than `submitted +
+    /// min(policy.max_wait, deadline)`, so a tight-deadline request
+    /// never idles out a full batching window it cannot afford. Pair
+    /// with [`Ticket::wait_timeout`] to bound the total wait (the HTTP
+    /// front door does both and maps expiry to 504).
+    pub fn submit_deadline(
+        &self,
+        req: impl Into<InferRequest>,
+        deadline: Duration,
+    ) -> Result<Ticket, EngineError> {
+        self.submit_inner(req.into().ids, Some(deadline))
+    }
+
+    fn submit_inner(&self, ids: Vec<i32>, deadline: Option<Duration>) -> Result<Ticket, EngineError> {
         let (tx, rx) = sync_channel(1);
         let msg = Msg::Req(AdmitReq {
-            ids: req.into().ids,
+            ids,
             submitted: Instant::now(),
             blocking: false,
+            deadline,
             reply: tx,
         });
         match self.tx.try_send(msg) {
@@ -301,6 +385,7 @@ impl EngineClient {
             ids: req.into().ids,
             submitted: Instant::now(),
             blocking: true,
+            deadline: None,
             reply: tx,
         });
         self.tx.send(msg).map_err(|_| EngineError::Shutdown)?;
@@ -642,6 +727,18 @@ impl EngineBuilder {
             return Err(e);
         }
 
+        // One live queue-depth gauge per bucket, shared between the
+        // routing thread (increments at handoff) and the jobs
+        // themselves (RAII decrement on reply); exported via
+        // `EngineStats::queue_depths` for the /metrics endpoint.
+        let gauges: Vec<Arc<BucketGauge>> = buckets
+            .iter()
+            .map(|_| Arc::new(BucketGauge { depth: AtomicI64::new(0) }))
+            .collect();
+        stats.install_gauges(
+            buckets.iter().zip(&gauges).map(|(b, g)| (b.seq_len, g.clone())).collect(),
+        );
+
         // Routing thread: admission queue → router → per-bucket channels.
         let (tx, rx) = sync_channel::<Msg>(self.queue_depth);
         let router = Router::new(buckets.clone());
@@ -649,7 +746,7 @@ impl EngineBuilder {
         let stash_cap = self.queue_depth;
         let routing = std::thread::Builder::new()
             .name("hrr-router".into())
-            .spawn(move || routing_loop(rx, router, job_txs, stats_route, stash_cap))
+            .spawn(move || routing_loop(rx, router, job_txs, gauges, stats_route, stash_cap))
             .context("spawn routing thread")?;
         threads.insert(0, routing);
 
@@ -795,6 +892,7 @@ fn routing_loop(
     rx: Receiver<Msg>,
     router: Router,
     bucket_txs: Vec<SyncSender<ExecMsg>>,
+    gauges: Vec<Arc<BucketGauge>>,
     stats: Arc<EngineStats>,
     stash_cap: usize,
 ) {
@@ -849,6 +947,8 @@ fn routing_loop(
                     ids: req.ids,
                     truncated,
                     submitted: req.submitted,
+                    deadline: req.deadline,
+                    depth: Some(DepthGuard::new(gauges[i].clone())),
                     reply: req.reply,
                 };
                 if blocking {

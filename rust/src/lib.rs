@@ -25,6 +25,7 @@ pub mod engine;
 pub mod hrr;
 pub mod metrics;
 pub mod model;
+pub mod net;
 pub mod runtime;
 pub mod stream;
 pub mod util;

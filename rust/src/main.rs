@@ -9,6 +9,7 @@
 //!   bench inference  Table 7 (add --sweep-batch for Table 6)
 //!   bench native     native hot-path sweep (single vs multi thread)
 //!   bench stream     chunked streaming forward at T=131072 (mmap-fed)
+//!   bench http       closed-loop load test of the HTTP front door
 //!   bench weights    Fig 5 / Fig 9
 //!   data             dump dataset samples
 //!   inspect          list manifest programs
@@ -23,6 +24,7 @@ use hrrformer::data::mmap::{write_corpus, MmapCorpus};
 use hrrformer::data::{by_task, Split, Stream};
 use hrrformer::engine::{Backend, Engine};
 use hrrformer::hrr::HrrConfig;
+use hrrformer::net::{HttpConfig, HttpServer};
 use hrrformer::runtime::{default_manifest, Runtime};
 use hrrformer::stream::StreamConfig;
 use hrrformer::util::cli::Args;
@@ -38,6 +40,10 @@ USAGE:
               [--workers K]
   repro serve --stream [--stream-base BASE] [--requests N] [--chunk TOKENS]
               [--append-bytes N] [--seed S] [--workers K]
+  repro serve --http [--addr HOST:PORT] [--http-secs S] [--http-drivers N]
+              [--accept-backlog N] [--stream-base BASE]
+              [--backend artifact|native] [--bases a,b,c] [--max-batch B]
+              [--max-wait-ms MS] [--queue-depth D] [--seed S] [--workers K]
   repro bench ember     [--steps N] [--models a,b] [--timeout-s S]
   repro bench lra       [--steps N] [--models a,b] [--tasks t1,t2] [--curves]
   repro bench speed     [--steps N]
@@ -47,6 +53,9 @@ USAGE:
                         [--out BENCH_native.json]
   repro bench stream    [--examples N] [--base BASE] [--chunks a,b,c]
                         [--seed S] [--out BENCH_native.json]
+  repro bench http      [--addr HOST:PORT] [--clients N] [--requests N]
+                        [--overload-clients N] [--req-len T] [--base BASE]
+                        [--queue-depth D] [--seed S] [--out BENCH_native.json]
   repro bench weights   [--steps N] [--multi-layer]
   repro data --task <task> [--n N] [--seq-len T]
   repro inspect
@@ -75,6 +84,20 @@ three row schedulers — sequential, legacy per-call scoped threads, and
 the shared persistent worker pool — and writes the BENCH_native.json
 trajectory file at the repo root. Needs no artifacts. --workers 0
 (default) uses every available core (--threads is an accepted alias).
+
+serve --http runs the network front door: a zero-dependency HTTP/1.1
+server (non-blocking listener + --http-drivers connection threads) over
+the same engine — POST /classify (per-request deadline_ms maps onto the
+batcher's max_wait; QueueFull backpressure surfaces as 429), POST
+/stream/{open,append,finish} (chunked bodies welcome; needs
+--stream-base), GET /metrics and GET /healthz. The accept queue is
+bounded (--accept-backlog; full ⇒ canned 503) and shutdown drains
+accepted in-flight requests before the engine stops. --http-secs 0
+(default) serves until killed. bench http is the matching closed-loop
+load client: a steady phase and an overload phase (shallow
+--queue-depth in-process, so 429s actually happen), recording exact
+client-side p50/p99 into BENCH_native.json under an \"http\" key;
+--addr points it at an external serve --http instead.
 
 serve --stream runs the streaming subsystem (native only): one stream
 executor serving open/append/finish on the --stream-base bucket
@@ -169,6 +192,9 @@ fn cmd_serve(args: &Args) -> Result<()> {
     if args.bool("stream") {
         return cmd_serve_stream(args);
     }
+    if args.bool("http") {
+        return cmd_serve_http(args);
+    }
     let backend = parse_backend(args)?;
     let bases = args.list("bases", &hrrformer::engine::DEFAULT_EMBER_BUCKETS);
     let n_requests = args.usize("requests", 64);
@@ -219,6 +245,62 @@ fn cmd_serve(args: &Args) -> Result<()> {
         stats.latency.mean_ms(),
         correct as f64 / n_requests as f64,
     );
+    engine.stop();
+    Ok(())
+}
+
+/// `serve --http`: stand up the engine and put the network front door
+/// ([`hrrformer::net::HttpServer`]) in front of it. Add `--stream-base`
+/// to also expose the PR 6 streaming surface over
+/// `POST /stream/{open,append,finish}`.
+fn cmd_serve_http(args: &Args) -> Result<()> {
+    let backend = parse_backend(args)?;
+    let bases = args.list("bases", &hrrformer::engine::DEFAULT_EMBER_BUCKETS);
+    let seed = parse_seed(args)?;
+    eprintln!("[serve] building {} buckets ({backend:?} backend)…", bases.len());
+    let mut builder = Engine::builder()
+        .buckets(bases)
+        .policy(BatchPolicy {
+            max_batch: args.usize("max-batch", 8),
+            max_wait: std::time::Duration::from_millis(args.u64("max-wait-ms", 20)),
+        })
+        .queue_depth(args.usize("queue-depth", 128))
+        .seed(seed)
+        .backend(backend)
+        .worker_budget(args.usize("workers", 0));
+    if let Some(stream_base) = args.get("stream-base") {
+        anyhow::ensure!(
+            backend == Backend::Native,
+            "--stream-base requires --backend native (artifact programs are fixed-shape)"
+        );
+        builder = builder.stream_bucket(stream_base);
+    }
+    let engine = match backend {
+        Backend::Artifact => builder.build(&default_manifest()?)?,
+        Backend::Native => builder.build_native()?,
+    };
+
+    let cfg = HttpConfig {
+        addr: args.str("addr", "127.0.0.1:8080"),
+        drivers: args.usize("http-drivers", 4),
+        accept_backlog: args.usize("accept-backlog", 64),
+        ..HttpConfig::default()
+    };
+    let server = HttpServer::start(cfg, &engine)?;
+    println!("[serve] http listening on {}", server.addr());
+
+    let secs = args.u64("http-secs", 0);
+    if secs == 0 {
+        eprintln!("[serve] serving until killed (--http-secs N for a bounded run)");
+        loop {
+            std::thread::sleep(std::time::Duration::from_secs(3600));
+        }
+    }
+    std::thread::sleep(std::time::Duration::from_secs(secs));
+    eprintln!("[serve] --http-secs elapsed; draining…");
+    // drain order: front door first (in-flight requests still have
+    // executors), then the engine
+    server.stop();
     engine.stop();
     Ok(())
 }
@@ -302,7 +384,7 @@ fn cmd_bench(args: &Args) -> Result<()> {
         .positional
         .get(1)
         .map(|s| s.as_str())
-        .context("bench <ember|lra|speed|inference|native|stream|weights>")?;
+        .context("bench <ember|lra|speed|inference|native|stream|http|weights>")?;
     // The manifest and runtime are resolved per arm: the engine serving
     // bench manages its own per-executor runtimes (and on the native
     // backend needs no manifest at all).
@@ -400,6 +482,26 @@ fn cmd_bench(args: &Args) -> Result<()> {
                 cfg.out = out.into();
             }
             bench::stream::run(&cfg)?;
+        }
+        "http" => {
+            // closed-loop load test against the HTTP front door; with
+            // no --addr it stands up its own engine + server in-process
+            let mut cfg = bench::http::HttpBenchCfg::default();
+            cfg.addr = args.get("addr").map(|s| s.to_string());
+            cfg.steady.0 = args.usize("clients", cfg.steady.0);
+            cfg.steady.1 = args.usize("requests", cfg.steady.1);
+            cfg.overload.0 = args.usize("overload-clients", cfg.overload.0);
+            cfg.overload.1 = args.usize("overload-requests", cfg.overload.1);
+            cfg.req_len = args.usize("req-len", cfg.req_len);
+            if let Some(base) = args.get("base") {
+                cfg.base = base.to_string();
+            }
+            cfg.queue_depth = args.usize("queue-depth", cfg.queue_depth);
+            cfg.seed = args.u64("seed", cfg.seed);
+            if let Some(out) = args.get("out") {
+                cfg.out = out.into();
+            }
+            bench::http::run(&cfg)?;
         }
         "weights" => {
             let manifest = default_manifest()?;

@@ -1,0 +1,221 @@
+//! Connection driver: owns one accepted `TcpStream` at a time and runs
+//! the read → parse → handle → respond loop over it.
+//!
+//! The driver reads with a short timeout so it can observe the server's
+//! shutdown flag between reads. Shutdown semantics are the graceful
+//! half of the front door's contract: an **idle** keep-alive connection
+//! (empty buffer) closes immediately, but a connection with a request
+//! *partially buffered* keeps being served until the request completes
+//! (response sent with `Connection: close`) or the drain grace expires
+//! — no accepted in-flight request is ever dropped on the floor.
+//!
+//! Bodies framed by `Content-Length` are handled zero-copy: the bytes
+//! stay in the connection's read buffer and handlers receive a borrowed
+//! slice (which `util::json::Json::parse_bytes` consumes in place).
+//! Chunked bodies are necessarily reassembled into one owned buffer.
+
+use std::io::{ErrorKind, Read, Write};
+use std::net::TcpStream;
+use std::time::{Duration, Instant};
+
+use super::http::{self, ChunkedDecoder, Head, HttpParseError};
+use super::{handle, Response, ServeCtx};
+
+/// Read timeout per attempt — the cadence at which a blocked driver
+/// re-checks the shutdown flag.
+const READ_TICK: Duration = Duration::from_millis(25);
+
+const READ_CHUNK: usize = 16 * 1024;
+
+const CONTENT_TYPE: &str = "application/json";
+
+/// Why a read loop stopped.
+enum Fill {
+    /// More bytes landed in the buffer.
+    Got,
+    /// Peer closed, hard IO error, or shutdown said to stop serving
+    /// this connection.
+    Close,
+}
+
+/// How body assembly for one request ended.
+enum Body {
+    /// `Content-Length` body fully buffered; `consumed` bytes of the
+    /// buffer (head + body) belong to this request.
+    Sized(usize),
+    /// Chunked body, decoded into an owned buffer; `consumed` is the
+    /// wire length (head + chunk framing) to drain.
+    Chunked(Vec<u8>, usize),
+    /// Protocol-level rejection — respond, then close (framing can no
+    /// longer be trusted).
+    Error(Response),
+    /// Connection is gone.
+    Close,
+}
+
+/// Serve requests on `stream` until the peer closes, a protocol error
+/// poisons the framing, or shutdown drains it.
+pub(crate) fn drive(mut stream: TcpStream, ctx: &ServeCtx) {
+    let _ = stream.set_nodelay(true);
+    // accepted sockets may inherit the listener's non-blocking mode on
+    // some platforms — the driver wants timeout-bounded blocking reads
+    let _ = stream.set_nonblocking(false);
+    let _ = stream.set_read_timeout(Some(READ_TICK));
+
+    let mut buf: Vec<u8> = Vec::with_capacity(READ_CHUNK);
+    // Set when shutdown is first observed with a request partially
+    // buffered; serving continues until it expires.
+    let mut grace: Option<Instant> = None;
+
+    loop {
+        // 1. a complete request head
+        let (head, head_len) = loop {
+            match http::parse_head(&buf) {
+                Ok(Some(parsed)) => break parsed,
+                Ok(None) => match fill(&mut stream, &mut buf, ctx, &mut grace) {
+                    Fill::Got => {}
+                    Fill::Close => return,
+                },
+                Err(e) => {
+                    respond_parse_error(&mut stream, ctx, e);
+                    return;
+                }
+            }
+        };
+
+        // 2. the body (possibly needing more reads)
+        let started = Instant::now();
+        let (resp, consumed, close_after) =
+            match read_body(&mut stream, &mut buf, ctx, &head, head_len, &mut grace) {
+                Body::Sized(consumed) => {
+                    (handle(ctx, &head, &buf[head_len..consumed]), consumed, false)
+                }
+                Body::Chunked(owned, consumed) => (handle(ctx, &head, &owned), consumed, false),
+                Body::Error(resp) => (resp, buf.len(), true),
+                Body::Close => return,
+            };
+
+        // 3. respond
+        ctx.shared.stats.requests.fetch_add(1, std::sync::atomic::Ordering::Relaxed);
+        ctx.shared.stats.latency.record(started.elapsed());
+        let keep = head.keep_alive && !close_after && !ctx.shutting_down();
+        let mut out = Vec::with_capacity(resp.body.len() + 128);
+        http::write_response(&mut out, resp.status, CONTENT_TYPE, resp.body.as_bytes(), keep);
+        if stream.write_all(&out).is_err() || !keep {
+            return;
+        }
+        // keep-alive / pipelining: drop this request's bytes, keep any
+        // already-buffered follow-up request intact
+        buf.drain(..consumed);
+    }
+}
+
+/// Read once into `buf`, honouring shutdown: an idle connection (no
+/// partial request buffered) closes immediately; a partial request gets
+/// `drain_grace` to complete.
+fn fill(
+    stream: &mut TcpStream,
+    buf: &mut Vec<u8>,
+    ctx: &ServeCtx,
+    grace: &mut Option<Instant>,
+) -> Fill {
+    let mut tmp = [0u8; READ_CHUNK];
+    loop {
+        if ctx.shutting_down() {
+            if buf.is_empty() {
+                return Fill::Close;
+            }
+            let deadline = *grace.get_or_insert_with(|| Instant::now() + ctx.drain_grace);
+            if Instant::now() >= deadline {
+                return Fill::Close;
+            }
+        }
+        match stream.read(&mut tmp) {
+            Ok(0) => return Fill::Close,
+            Ok(n) => {
+                buf.extend_from_slice(&tmp[..n]);
+                return Fill::Got;
+            }
+            Err(e)
+                if matches!(
+                    e.kind(),
+                    ErrorKind::WouldBlock | ErrorKind::TimedOut | ErrorKind::Interrupted
+                ) => {}
+            Err(_) => return Fill::Close,
+        }
+    }
+}
+
+/// Assemble the request body per the head's framing, reading more bytes
+/// as needed and enforcing the server's body cap.
+fn read_body(
+    stream: &mut TcpStream,
+    buf: &mut Vec<u8>,
+    ctx: &ServeCtx,
+    head: &Head,
+    head_len: usize,
+    grace: &mut Option<Instant>,
+) -> Body {
+    if head.chunked {
+        let mut dec = ChunkedDecoder::new();
+        let mut body = Vec::new();
+        let mut pos = head_len;
+        loop {
+            match dec.feed(&buf[pos..], &mut body) {
+                Ok(used) => pos += used,
+                Err(e) => {
+                    return Body::Error(Response::error(400, format_args!("bad chunked body: {e}")))
+                }
+            }
+            if body.len() > ctx.max_body {
+                return Body::Error(Response::error(413, "request body exceeds server limit"));
+            }
+            if dec.is_done() {
+                return Body::Chunked(body, pos);
+            }
+            match fill(stream, buf, ctx, grace) {
+                Fill::Got => {}
+                Fill::Close => return Body::Close,
+            }
+        }
+    } else {
+        let len = head.body_len();
+        if len > ctx.max_body {
+            return Body::Error(Response::error(413, "request body exceeds server limit"));
+        }
+        let consumed = head_len + len;
+        while buf.len() < consumed {
+            match fill(stream, buf, ctx, grace) {
+                Fill::Got => {}
+                Fill::Close => return Body::Close,
+            }
+        }
+        Body::Sized(consumed)
+    }
+}
+
+/// Best-effort error response for an unparseable head; the connection
+/// closes because framing is unknown from here.
+fn respond_parse_error(stream: &mut TcpStream, ctx: &ServeCtx, e: HttpParseError) {
+    ctx.shared.stats.requests.fetch_add(1, std::sync::atomic::Ordering::Relaxed);
+    let status = match e {
+        HttpParseError::HeadTooLarge => 431,
+        HttpParseError::Malformed(_) => 400,
+    };
+    let resp = Response::error(status, e);
+    let mut out = Vec::new();
+    http::write_response(&mut out, resp.status, CONTENT_TYPE, resp.body.as_bytes(), false);
+    let _ = stream.write_all(&out);
+}
+
+/// Canned 503 for connections shed at the accept queue (the listener
+/// calls this; the bounded queue is the wire-side face of the engine's
+/// bounded-everything backpressure posture).
+pub(crate) fn shed(mut stream: TcpStream) {
+    let _ = stream.set_nonblocking(false);
+    let _ = stream.set_write_timeout(Some(Duration::from_millis(250)));
+    let resp = Response::error(503, "server accept queue is full — retry");
+    let mut out = Vec::new();
+    http::write_response(&mut out, resp.status, CONTENT_TYPE, resp.body.as_bytes(), false);
+    let _ = stream.write_all(&out);
+}

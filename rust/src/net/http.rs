@@ -1,0 +1,527 @@
+//! HTTP/1.1 wire format: incremental request-head parsing, chunked
+//! transfer decoding, and response serialization. Zero dependencies and
+//! zero protocol state of its own — the connection driver
+//! ([`super::conn`]) owns the buffer and calls back in as bytes arrive,
+//! so the same functions work under split reads, pipelining, and
+//! hostile framing.
+//!
+//! Hardening posture (this sits on the network):
+//! * the head is bounded by [`MAX_HEAD_BYTES`] / [`MAX_HEADERS`] —
+//!   oversized heads fail typed ([`HttpParseError::HeadTooLarge`] → 431)
+//!   instead of growing the buffer forever;
+//! * a request carrying **both** `Content-Length` and
+//!   `Transfer-Encoding: chunked` is rejected outright (RFC 7230 §3.3.3
+//!   — the classic request-smuggling ambiguity);
+//! * chunk sizes are overflow-checked and capped, so a `ffffffffff\r\n`
+//!   size line cannot wrap arithmetic or commit the server to reading
+//!   petabytes.
+
+use std::fmt;
+
+/// Hard cap on a request head (request line + headers + blank line).
+pub const MAX_HEAD_BYTES: usize = 16 * 1024;
+
+/// Hard cap on the number of header lines.
+pub const MAX_HEADERS: usize = 64;
+
+/// Largest single chunk a chunked body may declare (16 MiB — same order
+/// as the server's body cap; real chunks are orders of magnitude
+/// smaller).
+const MAX_CHUNK_SIZE: usize = 16 * 1024 * 1024;
+
+/// Typed wire-parse failure; the driver maps it to a status code
+/// (431 for [`HttpParseError::HeadTooLarge`], 400 otherwise) and closes
+/// the connection, since framing can no longer be trusted.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum HttpParseError {
+    /// Head exceeded [`MAX_HEAD_BYTES`] without terminating.
+    HeadTooLarge,
+    /// Malformed request line, header, or chunk framing.
+    Malformed(&'static str),
+}
+
+impl fmt::Display for HttpParseError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            HttpParseError::HeadTooLarge => write!(f, "request head too large"),
+            HttpParseError::Malformed(m) => write!(f, "malformed request: {m}"),
+        }
+    }
+}
+
+impl std::error::Error for HttpParseError {}
+
+/// A parsed request head. Field values are copied out of the read
+/// buffer (the head is small and bounded); the *body* stays in the
+/// buffer and is handed to handlers as a borrowed slice.
+#[derive(Debug, Clone)]
+pub struct Head {
+    pub method: String,
+    /// Path only — the query string (if any) is split off.
+    pub path: String,
+    /// Raw query string after `?`, without the `?`.
+    pub query: String,
+    pub content_length: Option<usize>,
+    /// `Transfer-Encoding: chunked` framing.
+    pub chunked: bool,
+    /// Whether the connection may serve another request after this one
+    /// (HTTP/1.1 default true, HTTP/1.0 default false, `Connection`
+    /// header overrides).
+    pub keep_alive: bool,
+}
+
+impl Head {
+    /// Declared body length for non-chunked requests (no body → 0).
+    pub fn body_len(&self) -> usize {
+        self.content_length.unwrap_or(0)
+    }
+
+    /// Look up a `key=value` pair in the query string.
+    pub fn query_param(&self, key: &str) -> Option<&str> {
+        self.query.split('&').find_map(|pair| {
+            let (k, v) = pair.split_once('=')?;
+            (k == key).then_some(v)
+        })
+    }
+}
+
+/// Try to parse a complete request head from the front of `buf`.
+///
+/// * `Ok(None)` — the head is not complete yet; read more bytes.
+/// * `Ok(Some((head, head_len)))` — parsed; the body (if any) starts at
+///   `buf[head_len..]`.
+/// * `Err(_)` — the head is complete-but-malformed, or `buf` grew past
+///   [`MAX_HEAD_BYTES`] without terminating.
+pub fn parse_head(buf: &[u8]) -> Result<Option<(Head, usize)>, HttpParseError> {
+    // Bound the search: a head that has not terminated within the cap
+    // never will be accepted, however much more arrives.
+    let window = &buf[..buf.len().min(MAX_HEAD_BYTES)];
+    let end = match find_head_end(window) {
+        Some(e) => e,
+        None => {
+            if buf.len() >= MAX_HEAD_BYTES {
+                return Err(HttpParseError::HeadTooLarge);
+            }
+            return Ok(None);
+        }
+    };
+    let head_len = end + 4; // include the \r\n\r\n terminator
+    let text = std::str::from_utf8(&buf[..end])
+        .map_err(|_| HttpParseError::Malformed("head is not valid utf-8"))?;
+
+    let mut lines = text.split("\r\n");
+    let request_line = lines.next().unwrap_or("");
+    let mut parts = request_line.split(' ');
+    let method = parts.next().unwrap_or("").to_string();
+    let target = parts.next().ok_or(HttpParseError::Malformed("missing request target"))?;
+    let version = parts.next().ok_or(HttpParseError::Malformed("missing http version"))?;
+    if parts.next().is_some() || method.is_empty() || target.is_empty() {
+        return Err(HttpParseError::Malformed("bad request line"));
+    }
+    let mut keep_alive = match version {
+        "HTTP/1.1" => true,
+        "HTTP/1.0" => false,
+        _ => return Err(HttpParseError::Malformed("unsupported http version")),
+    };
+
+    let (path, query) = match target.split_once('?') {
+        Some((p, q)) => (p.to_string(), q.to_string()),
+        None => (target.to_string(), String::new()),
+    };
+
+    let mut content_length: Option<usize> = None;
+    let mut chunked = false;
+    let mut n_headers = 0usize;
+    for line in lines {
+        n_headers += 1;
+        if n_headers > MAX_HEADERS {
+            return Err(HttpParseError::Malformed("too many headers"));
+        }
+        let (name, value) =
+            line.split_once(':').ok_or(HttpParseError::Malformed("header missing ':'"))?;
+        let value = value.trim();
+        if name.eq_ignore_ascii_case("content-length") {
+            let n = value
+                .parse::<usize>()
+                .map_err(|_| HttpParseError::Malformed("bad content-length"))?;
+            // Duplicate Content-Length headers with differing values are
+            // another smuggling vector; identical duplicates are merely
+            // redundant.
+            if content_length.is_some_and(|prev| prev != n) {
+                return Err(HttpParseError::Malformed("conflicting content-length"));
+            }
+            content_length = Some(n);
+        } else if name.eq_ignore_ascii_case("transfer-encoding") {
+            // Only `chunked` (as the sole/final coding) is supported.
+            if !value.eq_ignore_ascii_case("chunked") {
+                return Err(HttpParseError::Malformed("unsupported transfer-encoding"));
+            }
+            chunked = true;
+        } else if name.eq_ignore_ascii_case("connection") {
+            if value.eq_ignore_ascii_case("close") {
+                keep_alive = false;
+            } else if value.eq_ignore_ascii_case("keep-alive") {
+                keep_alive = true;
+            }
+        }
+    }
+    if chunked && content_length.is_some() {
+        // RFC 7230 §3.3.3: the two framings disagree by construction;
+        // accepting either interpretation enables request smuggling
+        // through any intermediary that picks the other.
+        return Err(HttpParseError::Malformed("both content-length and transfer-encoding"));
+    }
+
+    Ok(Some((Head { method, path, query, content_length, chunked, keep_alive }, head_len)))
+}
+
+/// Byte offset of the `\r\n\r\n` head terminator, if present.
+fn find_head_end(buf: &[u8]) -> Option<usize> {
+    buf.windows(4).position(|w| w == b"\r\n\r\n")
+}
+
+/// Incremental `Transfer-Encoding: chunked` decoder. Feed it raw bytes
+/// as they arrive; it appends decoded body bytes to `out` and reports
+/// how much input it consumed, so the caller can keep pipelined
+/// requests that follow the terminal chunk intact in its buffer.
+pub struct ChunkedDecoder {
+    state: ChunkState,
+    /// Total decoded bytes — the caller's body-size cap applies to this.
+    decoded: usize,
+}
+
+enum ChunkState {
+    /// Reading the hex size line (possibly a `;ext` to skip).
+    Size { size: usize, digits: usize, in_ext: bool, cr: bool },
+    /// Copying chunk payload.
+    Data { remaining: usize },
+    /// Expecting the `\r\n` that terminates a chunk's payload.
+    DataEnd { cr: bool },
+    /// After the 0-size chunk: skipping trailer lines until the blank
+    /// line that ends the message.
+    Trailer { line_bytes: usize, cr: bool },
+    Done,
+}
+
+impl Default for ChunkedDecoder {
+    fn default() -> Self {
+        ChunkedDecoder::new()
+    }
+}
+
+impl ChunkedDecoder {
+    pub fn new() -> ChunkedDecoder {
+        ChunkedDecoder {
+            state: ChunkState::Size { size: 0, digits: 0, in_ext: false, cr: false },
+            decoded: 0,
+        }
+    }
+
+    pub fn is_done(&self) -> bool {
+        matches!(self.state, ChunkState::Done)
+    }
+
+    /// Decoded body bytes so far.
+    pub fn decoded(&self) -> usize {
+        self.decoded
+    }
+
+    /// Consume bytes from `input`, appending decoded payload to `out`.
+    /// Returns how many input bytes were consumed; consumption stops at
+    /// the end of the message ([`ChunkedDecoder::is_done`]) or when
+    /// `input` is exhausted.
+    pub fn feed(&mut self, input: &[u8], out: &mut Vec<u8>) -> Result<usize, HttpParseError> {
+        let mut pos = 0usize;
+        while pos < input.len() {
+            match &mut self.state {
+                ChunkState::Done => break,
+                ChunkState::Size { size, digits, in_ext, cr } => {
+                    let b = input[pos];
+                    pos += 1;
+                    if *cr {
+                        if b != b'\n' {
+                            return Err(HttpParseError::Malformed("chunk size line: CR without LF"));
+                        }
+                        if *digits == 0 {
+                            return Err(HttpParseError::Malformed("empty chunk size"));
+                        }
+                        let n = *size;
+                        self.state = if n == 0 {
+                            ChunkState::Trailer { line_bytes: 0, cr: false }
+                        } else {
+                            ChunkState::Data { remaining: n }
+                        };
+                    } else if b == b'\r' {
+                        *cr = true;
+                    } else if *in_ext {
+                        // chunk extension: ignored until end of line
+                    } else if b == b';' {
+                        *in_ext = true;
+                    } else if let Some(d) = (b as char).to_digit(16) {
+                        *size = size
+                            .checked_mul(16)
+                            .and_then(|s| s.checked_add(d as usize))
+                            .filter(|&s| s <= MAX_CHUNK_SIZE)
+                            .ok_or(HttpParseError::Malformed("chunk size too large"))?;
+                        *digits += 1;
+                    } else {
+                        return Err(HttpParseError::Malformed("bad chunk size digit"));
+                    }
+                }
+                ChunkState::Data { remaining } => {
+                    let take = (*remaining).min(input.len() - pos);
+                    out.extend_from_slice(&input[pos..pos + take]);
+                    pos += take;
+                    *remaining -= take;
+                    self.decoded += take;
+                    if *remaining == 0 {
+                        self.state = ChunkState::DataEnd { cr: false };
+                    }
+                }
+                ChunkState::DataEnd { cr } => {
+                    let b = input[pos];
+                    pos += 1;
+                    if !*cr {
+                        if b != b'\r' {
+                            return Err(HttpParseError::Malformed("chunk data not CRLF-terminated"));
+                        }
+                        *cr = true;
+                    } else if b == b'\n' {
+                        self.state = ChunkState::Size { size: 0, digits: 0, in_ext: false, cr: false };
+                    } else {
+                        return Err(HttpParseError::Malformed("chunk data not CRLF-terminated"));
+                    }
+                }
+                ChunkState::Trailer { line_bytes, cr } => {
+                    let b = input[pos];
+                    pos += 1;
+                    if *cr {
+                        if b != b'\n' {
+                            return Err(HttpParseError::Malformed("trailer: CR without LF"));
+                        }
+                        if *line_bytes == 0 {
+                            self.state = ChunkState::Done;
+                        } else {
+                            // a (skipped) trailer header line ended;
+                            // keep reading lines until the blank one
+                            self.state = ChunkState::Trailer { line_bytes: 0, cr: false };
+                        }
+                    } else if b == b'\r' {
+                        *cr = true;
+                    } else {
+                        *line_bytes += 1;
+                        if *line_bytes > MAX_HEAD_BYTES {
+                            return Err(HttpParseError::Malformed("trailer line too long"));
+                        }
+                    }
+                }
+            }
+        }
+        Ok(pos)
+    }
+}
+
+/// Serialize a response with an explicit `Content-Length` (the only
+/// framing this server emits) into `out`.
+pub fn write_response(
+    out: &mut Vec<u8>,
+    status: u16,
+    content_type: &str,
+    body: &[u8],
+    keep_alive: bool,
+) {
+    let head = format!(
+        "HTTP/1.1 {status} {}\r\nContent-Type: {content_type}\r\nContent-Length: {}\r\nConnection: {}\r\n\r\n",
+        reason(status),
+        body.len(),
+        if keep_alive { "keep-alive" } else { "close" },
+    );
+    out.extend_from_slice(head.as_bytes());
+    out.extend_from_slice(body);
+}
+
+/// Canonical reason phrase for the status codes this server emits.
+pub fn reason(status: u16) -> &'static str {
+    match status {
+        200 => "OK",
+        400 => "Bad Request",
+        404 => "Not Found",
+        405 => "Method Not Allowed",
+        409 => "Conflict",
+        410 => "Gone",
+        413 => "Payload Too Large",
+        429 => "Too Many Requests",
+        431 => "Request Header Fields Too Large",
+        500 => "Internal Server Error",
+        503 => "Service Unavailable",
+        504 => "Gateway Timeout",
+        _ => "Unknown",
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const REQ: &[u8] = b"POST /classify HTTP/1.1\r\nHost: x\r\nContent-Length: 13\r\n\r\n{\"ids\":[1,2]}";
+
+    #[test]
+    fn split_reads_parse_only_when_head_is_complete() {
+        // Feeding the request one byte at a time: every prefix short of
+        // the blank line is "not yet", never an error.
+        let full = REQ;
+        let head_end = full.windows(4).position(|w| w == b"\r\n\r\n").unwrap() + 4;
+        for n in 0..head_end {
+            assert!(
+                matches!(parse_head(&full[..n]), Ok(None)),
+                "prefix of {n} bytes should be incomplete"
+            );
+        }
+        let (head, head_len) = parse_head(full).unwrap().expect("complete head");
+        assert_eq!(head_len, head_end);
+        assert_eq!(head.method, "POST");
+        assert_eq!(head.path, "/classify");
+        assert_eq!(head.content_length, Some(13));
+        assert!(head.keep_alive);
+        assert!(!head.chunked);
+    }
+
+    #[test]
+    fn oversized_head_is_a_typed_error_not_unbounded_buffering() {
+        let mut buf = b"GET / HTTP/1.1\r\n".to_vec();
+        while buf.len() < MAX_HEAD_BYTES {
+            buf.extend_from_slice(b"X-Pad: aaaaaaaaaaaaaaaaaaaaaaaaaaaaaaaa\r\n");
+        }
+        assert_eq!(parse_head(&buf), Err(HttpParseError::HeadTooLarge));
+    }
+
+    #[test]
+    fn too_many_headers_rejected() {
+        let mut buf = b"GET / HTTP/1.1\r\n".to_vec();
+        for i in 0..=MAX_HEADERS {
+            buf.extend_from_slice(format!("X-{i}: v\r\n").as_bytes());
+        }
+        buf.extend_from_slice(b"\r\n");
+        assert_eq!(parse_head(&buf), Err(HttpParseError::Malformed("too many headers")));
+    }
+
+    #[test]
+    fn pipelined_requests_parse_in_sequence() {
+        let mut buf = Vec::new();
+        buf.extend_from_slice(b"GET /healthz HTTP/1.1\r\n\r\n");
+        buf.extend_from_slice(b"GET /metrics HTTP/1.1\r\nConnection: close\r\n\r\n");
+        let (h1, len1) = parse_head(&buf).unwrap().unwrap();
+        assert_eq!(h1.path, "/healthz");
+        assert!(h1.keep_alive);
+        let (h2, len2) = parse_head(&buf[len1..]).unwrap().unwrap();
+        assert_eq!(h2.path, "/metrics");
+        assert!(!h2.keep_alive);
+        assert_eq!(len1 + len2, buf.len());
+    }
+
+    #[test]
+    fn query_string_splits_and_params_resolve() {
+        let buf = b"POST /stream/append?id=7&x=1 HTTP/1.1\r\n\r\n";
+        let (h, _) = parse_head(buf).unwrap().unwrap();
+        assert_eq!(h.path, "/stream/append");
+        assert_eq!(h.query_param("id"), Some("7"));
+        assert_eq!(h.query_param("x"), Some("1"));
+        assert_eq!(h.query_param("missing"), None);
+    }
+
+    #[test]
+    fn smuggling_vectors_rejected() {
+        // CL + TE together
+        let buf =
+            b"POST / HTTP/1.1\r\nContent-Length: 4\r\nTransfer-Encoding: chunked\r\n\r\n";
+        assert!(matches!(parse_head(buf), Err(HttpParseError::Malformed(_))));
+        // conflicting duplicate CL
+        let buf = b"POST / HTTP/1.1\r\nContent-Length: 4\r\nContent-Length: 5\r\n\r\n";
+        assert!(matches!(parse_head(buf), Err(HttpParseError::Malformed(_))));
+        // identical duplicate CL is redundant but unambiguous
+        let buf = b"POST / HTTP/1.1\r\nContent-Length: 4\r\nContent-Length: 4\r\n\r\n";
+        let (h, _) = parse_head(buf).unwrap().unwrap();
+        assert_eq!(h.content_length, Some(4));
+    }
+
+    #[test]
+    fn http_10_defaults_to_close() {
+        let (h, _) = parse_head(b"GET / HTTP/1.0\r\n\r\n").unwrap().unwrap();
+        assert!(!h.keep_alive);
+        let (h, _) =
+            parse_head(b"GET / HTTP/1.0\r\nConnection: keep-alive\r\n\r\n").unwrap().unwrap();
+        assert!(h.keep_alive);
+        assert!(matches!(
+            parse_head(b"GET / HTTP/2\r\n\r\n"),
+            Err(HttpParseError::Malformed(_))
+        ));
+    }
+
+    #[test]
+    fn chunked_decoder_reassembles_across_arbitrary_splits() {
+        let wire = b"4\r\nWiki\r\n5\r\npedia\r\n0\r\n\r\n";
+        // whole-buffer and every split point must agree
+        for split in 0..wire.len() {
+            let mut dec = ChunkedDecoder::new();
+            let mut out = Vec::new();
+            let used1 = dec.feed(&wire[..split], &mut out).unwrap();
+            assert_eq!(used1, split, "decoder must consume everything pre-terminal");
+            let used2 = dec.feed(&wire[split..], &mut out).unwrap();
+            assert!(dec.is_done());
+            assert_eq!(out, b"Wikipedia");
+            assert_eq!(split + used2, wire.len());
+            assert_eq!(dec.decoded(), 9);
+        }
+    }
+
+    #[test]
+    fn chunked_decoder_stops_at_message_end_preserving_pipelined_bytes() {
+        let wire = b"3\r\nabc\r\n0\r\n\r\nGET /next HTTP/1.1\r\n\r\n";
+        let mut dec = ChunkedDecoder::new();
+        let mut out = Vec::new();
+        let used = dec.feed(wire, &mut out).unwrap();
+        assert!(dec.is_done());
+        assert_eq!(out, b"abc");
+        assert_eq!(&wire[used..], b"GET /next HTTP/1.1\r\n\r\n");
+    }
+
+    #[test]
+    fn chunk_extensions_and_trailers_are_skipped() {
+        let wire = b"4;name=val\r\nWiki\r\n0\r\nX-Trailer: ignored\r\n\r\n";
+        let mut dec = ChunkedDecoder::new();
+        let mut out = Vec::new();
+        dec.feed(wire, &mut out).unwrap();
+        assert!(dec.is_done());
+        assert_eq!(out, b"Wiki");
+    }
+
+    #[test]
+    fn hostile_chunk_framing_rejected() {
+        // overflow-scale size line
+        let mut dec = ChunkedDecoder::new();
+        assert!(dec.feed(b"fffffffffffffff\r\n", &mut Vec::new()).is_err());
+        // bare LF where CRLF is required
+        let mut dec = ChunkedDecoder::new();
+        assert!(dec.feed(b"3\nabc", &mut Vec::new()).is_err());
+        // missing size digits
+        let mut dec = ChunkedDecoder::new();
+        assert!(dec.feed(b"\r\n", &mut Vec::new()).is_err());
+        // payload not CRLF-terminated
+        let mut dec = ChunkedDecoder::new();
+        assert!(dec.feed(b"3\r\nabcXX", &mut Vec::new()).is_err());
+    }
+
+    #[test]
+    fn responses_serialize_with_explicit_length_and_connection() {
+        let mut out = Vec::new();
+        write_response(&mut out, 429, "application/json", b"{\"error\":\"x\"}", true);
+        let s = String::from_utf8(out).unwrap();
+        assert!(s.starts_with("HTTP/1.1 429 Too Many Requests\r\n"));
+        assert!(s.contains("Content-Length: 13\r\n"));
+        assert!(s.contains("Connection: keep-alive\r\n"));
+        assert!(s.ends_with("\r\n\r\n{\"error\":\"x\"}"));
+        let mut out = Vec::new();
+        write_response(&mut out, 200, "application/json", b"{}", false);
+        assert!(String::from_utf8(out).unwrap().contains("Connection: close\r\n"));
+    }
+}

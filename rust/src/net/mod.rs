@@ -1,0 +1,532 @@
+//! The network front door: a zero-dependency HTTP/1.1 server in front
+//! of [`crate::engine::EngineClient`].
+//!
+//! # Architecture
+//!
+//! Matching the repo's hand-rolled, std-threads-only ethos (no tokio
+//! offline), the server is a non-blocking listener thread plus a small
+//! fixed set of connection-driver threads:
+//!
+//! ```text
+//!   accept() ──(bounded accept queue; full ⇒ canned 503 + close)──►
+//!     driver threads (N = HttpConfig::drivers): read → parse → handle
+//!       POST /classify        → submit / submit_deadline  (429 on QueueFull)
+//!       POST /stream/open     → open_stream
+//!       POST /stream/append   → append_stream   (chunked bodies welcome)
+//!       POST /stream/finish   → finish_stream
+//!       GET  /metrics         → engine + pool + http observability
+//!       GET  /healthz         → liveness
+//! ```
+//!
+//! Every queue on the path is bounded: the accept queue sheds with 503,
+//! and engine admission keeps its two-mode backpressure — the fail-fast
+//! `submit` used here surfaces `QueueFull` as **429**, never an
+//! unbounded buffer. Request bodies framed by `Content-Length` are
+//! parsed zero-copy from the connection's read buffer through the
+//! hardened `util::json`.
+//!
+//! # Deadlines
+//!
+//! `POST /classify` accepts `"deadline_ms"`: it maps onto the batcher's
+//! `max_wait` via [`crate::engine::EngineClient::submit_deadline`] (the
+//! batch holding the request flushes no later than `submitted +
+//! min(max_wait, deadline)`), and the driver waits at most **2×** the
+//! deadline for the reply (batching gets the deadline, execution gets
+//! the same again) before answering **504** — the computation is not
+//! cancelled, only the reply abandoned.
+//!
+//! # Shutdown
+//!
+//! [`HttpServer::stop`] flips the shutdown flag, joins the listener
+//! (closing the accept queue), then joins the drivers. Drivers drain:
+//! connections already accepted (including those still waiting in the
+//! accept queue) are served; a request partially read keeps being read
+//! for up to `drain_grace`; responses during drain carry
+//! `Connection: close`. Stop the HTTP server **before** the engine so
+//! drained requests still have executors to run on.
+
+pub mod http;
+
+mod conn;
+
+use std::collections::BTreeMap;
+use std::fmt;
+use std::net::{SocketAddr, TcpListener, TcpStream};
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::mpsc::{sync_channel, SyncSender, TrySendError};
+use std::sync::{Arc, Mutex};
+use std::thread::JoinHandle;
+use std::time::Duration;
+
+use anyhow::{Context, Result};
+
+use crate::engine::{Engine, EngineClient, EngineError, InferReply};
+use crate::metrics::LatencyHist;
+use crate::stream::{StreamError, StreamOutcome};
+use crate::util::json::Json;
+use crate::util::pool::WorkerPool;
+
+use http::Head;
+
+/// Tuning for one [`HttpServer`].
+#[derive(Debug, Clone)]
+pub struct HttpConfig {
+    /// Bind address (`"127.0.0.1:0"` picks a free port — see
+    /// [`HttpServer::addr`]).
+    pub addr: String,
+    /// Connection-driver threads; each serves one connection at a time.
+    pub drivers: usize,
+    /// Bounded accept queue between listener and drivers; a connection
+    /// arriving while it is full is shed with a canned 503.
+    pub accept_backlog: usize,
+    /// Hard cap on a request body (decoded size for chunked framing).
+    pub max_body: usize,
+    /// How long a driver keeps reading a *partially received* request
+    /// after shutdown begins.
+    pub drain_grace: Duration,
+    /// Reply wait for `/classify` requests that carry no deadline.
+    pub default_deadline: Duration,
+}
+
+impl Default for HttpConfig {
+    fn default() -> Self {
+        HttpConfig {
+            addr: "127.0.0.1:8080".into(),
+            drivers: 4,
+            accept_backlog: 64,
+            max_body: 16 * 1024 * 1024,
+            drain_grace: Duration::from_secs(2),
+            default_deadline: Duration::from_secs(30),
+        }
+    }
+}
+
+/// Wire-side counters, separate from (and alongside) the engine's
+/// [`crate::engine::EngineStats`].
+#[derive(Default)]
+pub struct HttpStats {
+    /// Requests answered (any status), including protocol rejections.
+    pub requests: AtomicU64,
+    /// Connections shed at the full accept queue (canned 503s).
+    pub shed: AtomicU64,
+    /// 429 responses (engine `QueueFull` / stream capacity).
+    pub rejected: AtomicU64,
+    /// HTTP-level latency: request fully received → response written.
+    pub latency: LatencyHist,
+}
+
+/// Shared between listener, drivers and the server handle.
+pub(crate) struct Shared {
+    shutdown: AtomicBool,
+    pub(crate) stats: HttpStats,
+}
+
+/// Everything a connection driver needs to serve requests.
+pub(crate) struct ServeCtx {
+    pub(crate) client: EngineClient,
+    pub(crate) pool: Option<Arc<WorkerPool>>,
+    pub(crate) shared: Arc<Shared>,
+    pub(crate) max_body: usize,
+    pub(crate) default_deadline: Duration,
+    pub(crate) drain_grace: Duration,
+}
+
+impl ServeCtx {
+    pub(crate) fn shutting_down(&self) -> bool {
+        self.shared.shutdown.load(Ordering::SeqCst)
+    }
+}
+
+/// A running front door. Dropping it (or calling [`HttpServer::stop`])
+/// performs the graceful drain described in the module docs.
+pub struct HttpServer {
+    addr: SocketAddr,
+    shared: Arc<Shared>,
+    listener: Option<JoinHandle<()>>,
+    drivers: Vec<JoinHandle<()>>,
+}
+
+impl HttpServer {
+    /// Bind, spawn the listener + driver threads, and start serving the
+    /// given engine. The engine must outlive the server — stop the
+    /// server first, then the engine.
+    pub fn start(cfg: HttpConfig, engine: &Engine) -> Result<HttpServer> {
+        let listener =
+            TcpListener::bind(&cfg.addr).with_context(|| format!("bind {}", cfg.addr))?;
+        let addr = listener.local_addr().context("local_addr")?;
+        listener.set_nonblocking(true).context("set_nonblocking")?;
+
+        let shared =
+            Arc::new(Shared { shutdown: AtomicBool::new(false), stats: HttpStats::default() });
+        let ctx = Arc::new(ServeCtx {
+            client: engine.client(),
+            pool: engine.worker_pool().cloned(),
+            shared: shared.clone(),
+            max_body: cfg.max_body,
+            default_deadline: cfg.default_deadline,
+            drain_grace: cfg.drain_grace,
+        });
+
+        let (conn_tx, conn_rx) = sync_channel::<TcpStream>(cfg.accept_backlog.max(1));
+        let conn_rx = Arc::new(Mutex::new(conn_rx));
+
+        let mut drivers = Vec::new();
+        for i in 0..cfg.drivers.max(1) {
+            let rx = conn_rx.clone();
+            let ctx = ctx.clone();
+            let t = std::thread::Builder::new()
+                .name(format!("http-conn-{i}"))
+                .spawn(move || loop {
+                    // hold the lock only for the recv, never while
+                    // driving a connection
+                    let next = rx.lock().unwrap().recv();
+                    match next {
+                        Ok(stream) => conn::drive(stream, &ctx),
+                        // listener dropped the tx and the queue is
+                        // drained: every accepted connection was served
+                        Err(_) => return,
+                    }
+                })
+                .context("spawn http driver")?;
+            drivers.push(t);
+        }
+
+        let shared_l = shared.clone();
+        let listener_thread = std::thread::Builder::new()
+            .name("http-listen".into())
+            .spawn(move || listen_loop(listener, conn_tx, shared_l))
+            .context("spawn http listener")?;
+
+        Ok(HttpServer { addr, shared, listener: Some(listener_thread), drivers })
+    }
+
+    /// The bound address (resolves the port when configured as `:0`).
+    pub fn addr(&self) -> SocketAddr {
+        self.addr
+    }
+
+    pub fn stats(&self) -> &HttpStats {
+        &self.shared.stats
+    }
+
+    /// Graceful shutdown: stop accepting, serve everything already
+    /// accepted (draining in-flight requests), join all threads.
+    pub fn stop(mut self) {
+        self.shutdown();
+    }
+
+    fn shutdown(&mut self) {
+        self.shared.shutdown.store(true, Ordering::SeqCst);
+        // Join order is the drain contract: the listener exits first
+        // (dropping the accept-queue sender), then drivers finish the
+        // queued + in-flight connections and see the channel close.
+        if let Some(l) = self.listener.take() {
+            let _ = l.join();
+        }
+        for d in self.drivers.drain(..) {
+            let _ = d.join();
+        }
+    }
+}
+
+impl Drop for HttpServer {
+    fn drop(&mut self) {
+        self.shutdown();
+    }
+}
+
+/// Poll cadence for the non-blocking accept loop.
+const ACCEPT_TICK: Duration = Duration::from_millis(10);
+
+fn listen_loop(listener: TcpListener, tx: SyncSender<TcpStream>, shared: Arc<Shared>) {
+    loop {
+        if shared.shutdown.load(Ordering::SeqCst) {
+            // Exiting drops `tx`; drivers drain the queue then stop.
+            return;
+        }
+        match listener.accept() {
+            Ok((stream, _peer)) => match tx.try_send(stream) {
+                Ok(()) => {}
+                Err(TrySendError::Full(stream)) => {
+                    // Bounded accept queue: shed instead of buffering
+                    // without limit. The canned 503 tells well-behaved
+                    // clients to back off.
+                    shared.stats.shed.fetch_add(1, Ordering::Relaxed);
+                    conn::shed(stream);
+                }
+                Err(TrySendError::Disconnected(_)) => return,
+            },
+            Err(e) if e.kind() == std::io::ErrorKind::WouldBlock => {
+                std::thread::sleep(ACCEPT_TICK);
+            }
+            // Transient accept errors (e.g. EMFILE, aborted handshake):
+            // back off and keep listening.
+            Err(_) => std::thread::sleep(ACCEPT_TICK),
+        }
+    }
+}
+
+/// One routed response; the driver serializes it with
+/// [`http::write_response`].
+pub(crate) struct Response {
+    pub(crate) status: u16,
+    pub(crate) body: String,
+}
+
+impl Response {
+    fn json(status: u16, v: Json) -> Response {
+        Response { status, body: v.to_string() }
+    }
+
+    pub(crate) fn error(status: u16, msg: impl fmt::Display) -> Response {
+        // Route the message through the Json serializer so arbitrary
+        // error text is always correctly escaped.
+        Response::json(status, obj(vec![("error", Json::Str(msg.to_string()))]))
+    }
+}
+
+fn obj(entries: Vec<(&str, Json)>) -> Json {
+    Json::Obj(entries.into_iter().map(|(k, v)| (k.to_string(), v)).collect::<BTreeMap<_, _>>())
+}
+
+/// Map a typed engine failure to a status code. This is the wire face
+/// of the engine's error surface — tests pin it, the README documents
+/// it.
+pub fn status_for(e: &EngineError) -> u16 {
+    match e {
+        // backpressure: the request was not enqueued; retry later
+        EngineError::QueueFull => 429,
+        // no bucket ladder configured — a deployment problem
+        EngineError::BucketMissing => 503,
+        EngineError::Predict(_) => 500,
+        EngineError::Shutdown => 503,
+        // engine built without a streaming bucket: the resource space
+        // /stream/* simply does not exist on this deployment
+        EngineError::StreamUnavailable => 404,
+        EngineError::Stream(StreamError::Unknown(_)) => 404,
+        EngineError::Stream(StreamError::Finished(_)) => 409,
+        EngineError::Stream(StreamError::Evicted(_)) => 410,
+        EngineError::Stream(StreamError::Capacity { .. }) => 429,
+        EngineError::Stream(StreamError::Internal(_)) => 500,
+    }
+}
+
+/// Route one parsed request. Pure request → response; all IO lives in
+/// [`conn`].
+pub(crate) fn handle(ctx: &ServeCtx, head: &Head, body: &[u8]) -> Response {
+    match (head.method.as_str(), head.path.as_str()) {
+        ("POST", "/classify") => classify(ctx, body),
+        ("POST", "/stream/open") => stream_open(ctx),
+        ("POST", "/stream/append") => stream_append(ctx, head, body),
+        ("POST", "/stream/finish") => stream_finish(ctx, head),
+        ("GET", "/healthz") => Response::json(200, obj(vec![("status", Json::Str("ok".into()))])),
+        ("GET", "/metrics") => metrics(ctx),
+        (
+            _,
+            "/classify" | "/stream/open" | "/stream/append" | "/stream/finish" | "/healthz"
+            | "/metrics",
+        ) => Response::error(405, "method not allowed"),
+        _ => Response::error(404, "no such endpoint"),
+    }
+}
+
+/// `POST /classify` — body `{"ids": [i32...], "deadline_ms"?: n}`.
+fn classify(ctx: &ServeCtx, body: &[u8]) -> Response {
+    // zero-copy: the body slice still lives in the connection buffer
+    let doc = match Json::parse_bytes(body) {
+        Ok(d) => d,
+        Err(e) => return Response::error(400, format_args!("invalid json: {e}")),
+    };
+    let ids_json = match doc.get("ids").and_then(Json::as_arr) {
+        Some(a) => a,
+        None => return Response::error(400, "body must be an object with an 'ids' array"),
+    };
+    let mut ids = Vec::with_capacity(ids_json.len());
+    for v in ids_json {
+        // strict accessor: non-integral / out-of-range / non-numeric
+        // entries are rejected, never silently saturated
+        match v.as_i64().and_then(|n| i32::try_from(n).ok()) {
+            Some(n) => ids.push(n),
+            None => return Response::error(400, "'ids' entries must be 32-bit integers"),
+        }
+    }
+    let deadline = match doc.get("deadline_ms") {
+        None => None,
+        Some(v) => match v.as_usize().filter(|&ms| ms > 0) {
+            Some(ms) => Some(Duration::from_millis(ms as u64)),
+            None => return Response::error(400, "'deadline_ms' must be a positive integer"),
+        },
+    };
+
+    let submitted = match deadline {
+        Some(d) => ctx.client.submit_deadline(ids, d),
+        None => ctx.client.submit(ids),
+    };
+    let ticket = match submitted {
+        Ok(t) => t,
+        Err(e) => return engine_error(ctx, &e),
+    };
+    // Reply budget: batching consumes at most `deadline` (the engine
+    // flushes by `submitted + min(max_wait, deadline)`); execution gets
+    // the same budget again. Expiry abandons the reply, not the work.
+    let wait = deadline.map(|d| d * 2).unwrap_or(ctx.default_deadline);
+    match ticket.wait_timeout(wait) {
+        None => Response::error(504, "deadline exceeded (request may still complete server-side)"),
+        Some(Ok(reply)) => reply_doc(&reply),
+        Some(Err(e)) => engine_error(ctx, &e),
+    }
+}
+
+fn reply_doc(r: &InferReply) -> Response {
+    Response::json(
+        200,
+        obj(vec![
+            ("label", Json::Num(r.label as f64)),
+            ("logits", Json::Arr(r.logits.iter().map(|&l| Json::Num(l as f64)).collect())),
+            ("latency_ms", Json::Num(r.latency.as_secs_f64() * 1000.0)),
+            ("bucket_t", Json::Num(r.bucket_t as f64)),
+            ("batch_size", Json::Num(r.batch_size as f64)),
+            ("truncated", Json::Bool(r.truncated)),
+            ("seq", Json::Num(r.seq as f64)),
+        ]),
+    )
+}
+
+fn engine_error(ctx: &ServeCtx, e: &EngineError) -> Response {
+    let status = status_for(e);
+    if status == 429 {
+        ctx.shared.stats.rejected.fetch_add(1, Ordering::Relaxed);
+    }
+    Response::error(status, e)
+}
+
+fn stream_open(ctx: &ServeCtx) -> Response {
+    match ctx.client.open_stream() {
+        Ok(id) => Response::json(200, obj(vec![("stream_id", Json::Num(id as f64))])),
+        Err(e) => engine_error(ctx, &e),
+    }
+}
+
+/// The stream id rides the query string (`?id=N`) so the body stays
+/// pure payload bytes — which is what lets `/stream/append` take raw
+/// chunked bodies with no envelope.
+fn stream_id(head: &Head) -> Result<u64, Response> {
+    head.query_param("id")
+        .and_then(|s| s.parse::<u64>().ok())
+        .ok_or_else(|| Response::error(400, "missing or non-numeric 'id' query parameter"))
+}
+
+fn stream_append(ctx: &ServeCtx, head: &Head, body: &[u8]) -> Response {
+    let id = match stream_id(head) {
+        Ok(id) => id,
+        Err(r) => return r,
+    };
+    match ctx.client.append_stream(id, body) {
+        Ok(appended) => Response::json(200, obj(vec![("appended", Json::Num(appended as f64))])),
+        Err(e) => engine_error(ctx, &e),
+    }
+}
+
+fn stream_finish(ctx: &ServeCtx, head: &Head) -> Response {
+    let id = match stream_id(head) {
+        Ok(id) => id,
+        Err(r) => return r,
+    };
+    match ctx.client.finish_stream(id) {
+        Ok(out) => Response::json(200, outcome_doc(&out)),
+        Err(e) => engine_error(ctx, &e),
+    }
+}
+
+fn outcome_doc(o: &StreamOutcome) -> Json {
+    obj(vec![
+        ("label", Json::Num(o.label as f64)),
+        ("logits", Json::Arr(o.logits.iter().map(|&l| Json::Num(l as f64)).collect())),
+        ("tokens", Json::Num(o.tokens as f64)),
+        ("appended", Json::Num(o.appended as f64)),
+        ("truncated", Json::Bool(o.truncated)),
+        ("resident_bytes", Json::Num(o.resident_bytes as f64)),
+    ])
+}
+
+/// `GET /metrics` — one JSON document spanning the engine, the shared
+/// worker pool, and the wire layer itself.
+fn metrics(ctx: &ServeCtx) -> Response {
+    let es = ctx.client.stats();
+    let depths = Json::Arr(
+        es.queue_depths()
+            .into_iter()
+            .map(|(t, d)| {
+                obj(vec![("t", Json::Num(t as f64)), ("depth", Json::Num(d as f64))])
+            })
+            .collect(),
+    );
+    let engine = obj(vec![
+        (
+            "latency_ms",
+            obj(vec![
+                ("p50", Json::Num(es.latency.percentile_ms(50.0))),
+                ("p99", Json::Num(es.latency.percentile_ms(99.0))),
+                ("mean", Json::Num(es.latency.mean_ms())),
+                ("max", Json::Num(es.latency.max_ms())),
+                ("count", Json::Num(es.latency.count() as f64)),
+            ]),
+        ),
+        ("throughput_per_s", Json::Num(es.throughput.per_second())),
+        ("rejected", Json::Num(es.rejected.load(Ordering::Relaxed) as f64)),
+        ("queue_depths", depths),
+    ]);
+    let pool = match &ctx.pool {
+        Some(p) => obj(vec![
+            ("budget", Json::Num(p.budget() as f64)),
+            ("high_water", Json::Num(p.high_water() as f64)),
+        ]),
+        None => Json::Null,
+    };
+    let hs = &ctx.shared.stats;
+    let http_doc = obj(vec![
+        ("requests", Json::Num(hs.requests.load(Ordering::Relaxed) as f64)),
+        ("shed", Json::Num(hs.shed.load(Ordering::Relaxed) as f64)),
+        ("rejected", Json::Num(hs.rejected.load(Ordering::Relaxed) as f64)),
+        (
+            "latency_ms",
+            obj(vec![
+                ("p50", Json::Num(hs.latency.percentile_ms(50.0))),
+                ("p99", Json::Num(hs.latency.percentile_ms(99.0))),
+            ]),
+        ),
+    ]);
+    Response::json(200, obj(vec![("engine", engine), ("pool", pool), ("http", http_doc)]))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn status_mapping_covers_every_engine_error() {
+        assert_eq!(status_for(&EngineError::QueueFull), 429);
+        assert_eq!(status_for(&EngineError::BucketMissing), 503);
+        assert_eq!(status_for(&EngineError::Predict("x".into())), 500);
+        assert_eq!(status_for(&EngineError::Shutdown), 503);
+        assert_eq!(status_for(&EngineError::StreamUnavailable), 404);
+        assert_eq!(status_for(&EngineError::Stream(StreamError::Unknown(1))), 404);
+        assert_eq!(status_for(&EngineError::Stream(StreamError::Finished(1))), 409);
+        assert_eq!(status_for(&EngineError::Stream(StreamError::Evicted(1))), 410);
+        assert_eq!(
+            status_for(&EngineError::Stream(StreamError::Capacity { open: 1, max: 1 })),
+            429
+        );
+        assert_eq!(status_for(&EngineError::Stream(StreamError::Internal("x".into()))), 500);
+    }
+
+    #[test]
+    fn error_bodies_escape_arbitrary_text() {
+        let r = Response::error(400, "quote \" and backslash \\ and\nnewline");
+        let parsed = Json::parse(&r.body).expect("error body must be valid json");
+        assert_eq!(
+            parsed.get("error").and_then(Json::as_str),
+            Some("quote \" and backslash \\ and\nnewline")
+        );
+    }
+}

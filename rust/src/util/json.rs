@@ -1,11 +1,37 @@
 //! Minimal JSON parser/serializer (the offline build has no serde).
 //!
 //! Supports the full JSON grammar minus exotic number forms; good enough
-//! for `artifacts/manifest.json` and the metrics emitters. Strings are
-//! unescaped for the common escapes (`\" \\ \/ \n \t \r \b \f \uXXXX`).
+//! for `artifacts/manifest.json`, the metrics emitters, and — since the
+//! HTTP front door landed — untrusted request bodies off the wire.
+//! Strings are unescaped for the common escapes
+//! (`\" \\ \/ \n \t \r \b \f \uXXXX`), with surrogate pairs combined
+//! per RFC 8259 and lone surrogates rejected.
+//!
+//! Hardening invariants (each pinned by a regression test):
+//!
+//! * nesting depth is capped at [`MAX_DEPTH`] — a `[[[[…` payload
+//!   returns [`JsonErrorKind::TooDeep`] instead of overflowing the
+//!   parsing thread's stack (a remote DoS once network-facing);
+//! * numbers that overflow f64 (`1e999`) are rejected as
+//!   [`JsonErrorKind::NonFinite`] instead of parsing to infinity and
+//!   re-serializing as `null`;
+//! * the integer accessors ([`Json::as_i64`]/[`Json::as_usize`]) return
+//!   `None` for non-integral, out-of-range or non-finite values instead
+//!   of silently saturating (`-1` → 0, `NaN` → 0).
 
 use std::collections::BTreeMap;
 use std::fmt;
+
+/// Maximum container nesting the parser accepts. Deep enough for any
+/// real manifest/request document, shallow enough that the recursive
+/// descent can never exhaust a thread stack (each level is one small
+/// frame; default Rust stacks hold tens of thousands).
+pub const MAX_DEPTH: usize = 128;
+
+/// Largest magnitude an f64 can represent exactly as an integer (2^53).
+/// Beyond it, adjacent integers collapse, so "the integer this JSON
+/// number holds" is no longer well-defined.
+const MAX_SAFE_INT: f64 = 9_007_199_254_740_992.0;
 
 #[derive(Debug, Clone, PartialEq)]
 pub enum Json {
@@ -17,10 +43,26 @@ pub enum Json {
     Obj(BTreeMap<String, Json>),
 }
 
+/// What class of failure a [`JsonError`] is — matchable, so callers
+/// (e.g. the HTTP layer) can distinguish hostile-input rejections from
+/// plain syntax errors without parsing messages.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum JsonErrorKind {
+    /// Malformed input: bad token, bad escape, trailing data, …
+    Syntax,
+    /// Container nesting exceeded [`MAX_DEPTH`].
+    TooDeep,
+    /// A number literal overflowed f64 (would parse to ±inf).
+    NonFinite,
+    /// A `\uXXXX` escape formed a lone/ill-formed UTF-16 surrogate.
+    BadSurrogate,
+}
+
 #[derive(Debug)]
 pub struct JsonError {
     pub pos: usize,
     pub msg: String,
+    pub kind: JsonErrorKind,
 }
 
 impl fmt::Display for JsonError {
@@ -33,7 +75,7 @@ impl std::error::Error for JsonError {}
 
 impl Json {
     pub fn parse(s: &str) -> Result<Json, JsonError> {
-        let mut p = Parser { b: s.as_bytes(), pos: 0 };
+        let mut p = Parser { b: s.as_bytes(), pos: 0, depth: 0 };
         p.skip_ws();
         let v = p.value()?;
         p.skip_ws();
@@ -41,6 +83,18 @@ impl Json {
             return Err(p.err("trailing data"));
         }
         Ok(v)
+    }
+
+    /// Parse directly from a byte slice (e.g. an HTTP body still sitting
+    /// in the connection's read buffer) — validates UTF-8 in place, no
+    /// copy of the input is ever made.
+    pub fn parse_bytes(b: &[u8]) -> Result<Json, JsonError> {
+        let s = std::str::from_utf8(b).map_err(|e| JsonError {
+            pos: e.valid_up_to(),
+            msg: "invalid utf-8".to_string(),
+            kind: JsonErrorKind::Syntax,
+        })?;
+        Json::parse(s)
     }
 
     pub fn get(&self, key: &str) -> Option<&Json> {
@@ -64,12 +118,22 @@ impl Json {
         }
     }
 
+    /// The value as a usize — `None` unless it is a number that holds an
+    /// exact non-negative integer in range. A malformed `seq_len` of
+    /// `-1`, `1.5` or `NaN` must surface as absent, not silently become
+    /// a valid-looking 0 (the old `as` saturation).
     pub fn as_usize(&self) -> Option<usize> {
-        self.as_f64().map(|n| n as usize)
+        self.as_i64().and_then(|v| usize::try_from(v).ok())
     }
 
+    /// The value as an i64 — `None` unless it is a number that is
+    /// finite, integral, and within the exactly-representable ±2^53
+    /// range (beyond it f64 cannot name a specific integer).
     pub fn as_i64(&self) -> Option<i64> {
-        self.as_f64().map(|n| n as i64)
+        match self {
+            Json::Num(n) if n.fract() == 0.0 && n.abs() <= MAX_SAFE_INT => Some(*n as i64),
+            _ => None,
+        }
     }
 
     pub fn as_arr(&self) -> Option<&[Json]> {
@@ -97,11 +161,17 @@ impl Json {
 struct Parser<'a> {
     b: &'a [u8],
     pos: usize,
+    /// Current container nesting level, checked against [`MAX_DEPTH`].
+    depth: usize,
 }
 
 impl<'a> Parser<'a> {
     fn err(&self, msg: &str) -> JsonError {
-        JsonError { pos: self.pos, msg: msg.to_string() }
+        self.err_kind(JsonErrorKind::Syntax, msg)
+    }
+
+    fn err_kind(&self, kind: JsonErrorKind, msg: &str) -> JsonError {
+        JsonError { pos: self.pos, msg: msg.to_string(), kind }
     }
 
     fn peek(&self) -> Option<u8> {
@@ -163,7 +233,30 @@ impl<'a> Parser<'a> {
             self.pos += 1;
         }
         let s = std::str::from_utf8(&self.b[start..self.pos]).unwrap();
-        s.parse::<f64>().map(Json::Num).map_err(|_| self.err("bad number"))
+        let n = s.parse::<f64>().map_err(|_| self.err("bad number"))?;
+        // `1e999` parses to +inf without complaint; serialized back it
+        // would become `null` (the writer's non-finite rule) — a
+        // silently morphing value. Reject it at the door instead.
+        // (Underflow to 0.0/subnormals is fine: still finite.)
+        if !n.is_finite() {
+            return Err(self.err_kind(JsonErrorKind::NonFinite, "number overflows f64"));
+        }
+        Ok(Json::Num(n))
+    }
+
+    /// Read exactly four hex digits of a `\uXXXX` escape. Every byte is
+    /// checked (`from_str_radix` alone would accept a leading `+`).
+    fn hex4(&mut self) -> Result<u32, JsonError> {
+        if self.pos + 4 > self.b.len() {
+            return Err(self.err("bad \\u escape"));
+        }
+        let quad = &self.b[self.pos..self.pos + 4];
+        if !quad.iter().all(|b| b.is_ascii_hexdigit()) {
+            return Err(self.err("bad \\u escape"));
+        }
+        let cp = u32::from_str_radix(std::str::from_utf8(quad).unwrap(), 16).unwrap();
+        self.pos += 4;
+        Ok(cp)
     }
 
     fn string(&mut self) -> Result<String, JsonError> {
@@ -183,15 +276,40 @@ impl<'a> Parser<'a> {
                     Some(b'b') => out.push('\u{8}'),
                     Some(b'f') => out.push('\u{c}'),
                     Some(b'u') => {
-                        if self.pos + 4 > self.b.len() {
-                            return Err(self.err("bad \\u escape"));
+                        let cp = self.hex4()?;
+                        if (0xDC00..=0xDFFF).contains(&cp) {
+                            // a low surrogate with no preceding high half
+                            return Err(self.err_kind(
+                                JsonErrorKind::BadSurrogate,
+                                "lone low surrogate",
+                            ));
+                        } else if (0xD800..=0xDBFF).contains(&cp) {
+                            // UTF-16 surrogate pair: the escape pair
+                            // D83D,DE00 is one character (U+1F600 😀),
+                            // not two replacement chars. RFC 8259 §7:
+                            // the pair combines; anything else is
+                            // ill-formed.
+                            if self.bump() != Some(b'\\') || self.bump() != Some(b'u') {
+                                return Err(self.err_kind(
+                                    JsonErrorKind::BadSurrogate,
+                                    "unpaired high surrogate",
+                                ));
+                            }
+                            let lo = self.hex4()?;
+                            if !(0xDC00..=0xDFFF).contains(&lo) {
+                                return Err(self.err_kind(
+                                    JsonErrorKind::BadSurrogate,
+                                    "high surrogate not followed by low surrogate",
+                                ));
+                            }
+                            let c = 0x10000 + ((cp - 0xD800) << 10) + (lo - 0xDC00);
+                            // combined surrogate pairs always land in
+                            // U+10000..=U+10FFFF — valid scalar values
+                            out.push(char::from_u32(c).unwrap_or('\u{fffd}'));
+                        } else {
+                            // non-surrogate BMP code points are all valid
+                            out.push(char::from_u32(cp).unwrap_or('\u{fffd}'));
                         }
-                        let hex = std::str::from_utf8(&self.b[self.pos..self.pos + 4])
-                            .map_err(|_| self.err("bad \\u escape"))?;
-                        let cp = u32::from_str_radix(hex, 16)
-                            .map_err(|_| self.err("bad \\u escape"))?;
-                        self.pos += 4;
-                        out.push(char::from_u32(cp).unwrap_or('\u{fffd}'));
                     }
                     _ => return Err(self.err("bad escape")),
                 },
@@ -215,6 +333,16 @@ impl<'a> Parser<'a> {
     }
 
     fn array(&mut self) -> Result<Json, JsonError> {
+        self.depth += 1;
+        if self.depth > MAX_DEPTH {
+            return Err(self.err_kind(JsonErrorKind::TooDeep, "nesting exceeds MAX_DEPTH"));
+        }
+        let r = self.array_inner();
+        self.depth -= 1;
+        r
+    }
+
+    fn array_inner(&mut self) -> Result<Json, JsonError> {
         self.expect(b'[')?;
         let mut items = Vec::new();
         self.skip_ws();
@@ -234,6 +362,16 @@ impl<'a> Parser<'a> {
     }
 
     fn object(&mut self) -> Result<Json, JsonError> {
+        self.depth += 1;
+        if self.depth > MAX_DEPTH {
+            return Err(self.err_kind(JsonErrorKind::TooDeep, "nesting exceeds MAX_DEPTH"));
+        }
+        let r = self.object_inner();
+        self.depth -= 1;
+        r
+    }
+
+    fn object_inner(&mut self) -> Result<Json, JsonError> {
         self.expect(b'{')?;
         let mut map = BTreeMap::new();
         self.skip_ws();
@@ -377,5 +515,125 @@ mod tests {
     fn unicode_escapes() {
         let j = Json::parse(r#""café →""#).unwrap();
         assert_eq!(j.as_str(), Some("café →"));
+    }
+
+    /// A `[[[[…` payload must return a typed error, not recurse until
+    /// the parsing thread's stack overflows (remote DoS once the parser
+    /// faces the network). 1M levels would need ~1M frames unguarded.
+    #[test]
+    fn deep_nesting_returns_typed_error_not_stack_overflow() {
+        for open in ['[', '{'] {
+            let deep: String = std::iter::repeat(open).take(1_000_000).collect();
+            let err = Json::parse(&deep).unwrap_err();
+            assert_eq!(err.kind, JsonErrorKind::TooDeep, "payload {open}…");
+        }
+        // mixed nesting trips the same cap
+        let mixed: String =
+            std::iter::repeat(r#"{"a":["#).take(MAX_DEPTH).collect::<String>();
+        assert_eq!(Json::parse(&mixed).unwrap_err().kind, JsonErrorKind::TooDeep);
+    }
+
+    /// Nesting at exactly the cap still parses — the cap bounds the
+    /// stack, it doesn't shrink the accepted grammar below real docs.
+    #[test]
+    fn nesting_at_cap_is_accepted() {
+        let doc = format!(
+            "{}1{}",
+            "[".repeat(MAX_DEPTH),
+            "]".repeat(MAX_DEPTH)
+        );
+        assert!(Json::parse(&doc).is_ok());
+        let over = format!(
+            "{}1{}",
+            "[".repeat(MAX_DEPTH + 1),
+            "]".repeat(MAX_DEPTH + 1)
+        );
+        assert_eq!(Json::parse(&over).unwrap_err().kind, JsonErrorKind::TooDeep);
+    }
+
+    /// Surrogate pairs combine into one scalar (RFC 8259 §7); the old
+    /// code decoded each half to U+FFFD, so an emoji round-tripped as
+    /// two replacement characters.
+    #[test]
+    fn surrogate_pairs_combine() {
+        // the escaped pair D83D,DE00 must decode to one U+1F600, not
+        // two U+FFFD replacement characters
+        let j = Json::parse("\"\\uD83D\\uDE00\"").unwrap();
+        assert_eq!(j.as_str(), Some("\u{1F600}"));
+        // BMP escapes unaffected
+        assert_eq!(Json::parse("\"\\u0041\\u00e9\"").unwrap().as_str(), Some("A\u{e9}"));
+        // pair embedded in a longer string
+        let j = Json::parse("\"x\\uD83D\\uDE00y\"").unwrap();
+        assert_eq!(j.as_str(), Some("x\u{1F600}y"));
+        // raw (unescaped) UTF-8 astral chars keep working too
+        assert_eq!(Json::parse("\"\u{1F600}\"").unwrap().as_str(), Some("\u{1F600}"));
+        // and survive a serialize→parse round trip
+        let doc = Json::Str("x\u{1F600}".to_string()).to_string();
+        assert_eq!(Json::parse(&doc).unwrap().as_str(), Some("x\u{1F600}"));
+    }
+
+    #[test]
+    fn lone_surrogates_rejected() {
+        for doc in [
+            "\"\\uD83D\"",         // lone high at end of string
+            "\"\\uD83Dx\"",        // high followed by a plain char
+            "\"\\uD83D\\u0041\"",  // high followed by a non-low escape
+            "\"\\uDE00\"",         // lone low
+            "\"\\uDE00\\uD83D\"",  // reversed pair
+        ] {
+            let err = Json::parse(doc).unwrap_err();
+            assert_eq!(err.kind, JsonErrorKind::BadSurrogate, "doc {doc}");
+        }
+    }
+
+    /// `1e999` used to parse to +inf and then re-serialize as `null` —
+    /// a value that silently morphs across one round trip. Now it is
+    /// rejected at parse time with a typed error.
+    #[test]
+    fn overflow_numbers_rejected_at_parse() {
+        for doc in ["1e999", "-1e999", "[1e999]", "1e400"] {
+            let err = Json::parse(doc).unwrap_err();
+            assert_eq!(err.kind, JsonErrorKind::NonFinite, "doc {doc}");
+        }
+        // underflow stays finite (0.0) and is accepted
+        assert_eq!(Json::parse("1e-999").unwrap().as_f64(), Some(0.0));
+    }
+
+    /// Integer accessors must reject what is not exactly an in-range
+    /// integer — `-1` silently became `0usize` before, so a malformed
+    /// `seq_len` looked valid.
+    #[test]
+    fn integer_accessors_reject_non_integral_and_out_of_range() {
+        assert_eq!(Json::parse("-1").unwrap().as_usize(), None);
+        assert_eq!(Json::parse("1.5").unwrap().as_usize(), None);
+        assert_eq!(Json::parse("1.5").unwrap().as_i64(), None);
+        assert_eq!(Json::Num(f64::NAN).as_i64(), None);
+        assert_eq!(Json::Num(f64::NAN).as_usize(), None);
+        assert_eq!(Json::Num(f64::INFINITY).as_i64(), None);
+        // beyond 2^53 f64 cannot name a specific integer
+        assert_eq!(Json::parse("9007199254740994").unwrap().as_i64(), None);
+        // in-range exact integers still work
+        assert_eq!(Json::parse("-1").unwrap().as_i64(), Some(-1));
+        assert_eq!(Json::parse("0").unwrap().as_usize(), Some(0));
+        assert_eq!(Json::parse("1024").unwrap().as_usize(), Some(1024));
+        assert_eq!(Json::parse("1e3").unwrap().as_usize(), Some(1000));
+        // non-numbers are still None, not a panic
+        assert_eq!(Json::parse("\"7\"").unwrap().as_usize(), None);
+    }
+
+    #[test]
+    fn parse_bytes_is_parse_over_a_slice() {
+        let j = Json::parse_bytes(br#"{"ids":[1,2,3]}"#).unwrap();
+        assert_eq!(j.get("ids").unwrap().as_arr().unwrap().len(), 3);
+        // invalid UTF-8 is a syntax error at the offending byte
+        let err = Json::parse_bytes(b"\"ab\xff\"").unwrap_err();
+        assert_eq!(err.kind, JsonErrorKind::Syntax);
+    }
+
+    #[test]
+    fn hex_escape_rejects_sloppy_digits() {
+        // from_str_radix would accept a leading '+'; the lexer must not
+        assert!(Json::parse(r#""\u+0ff""#).is_err());
+        assert!(Json::parse(r#""\u00g1""#).is_err());
     }
 }

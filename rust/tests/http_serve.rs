@@ -1,0 +1,497 @@
+//! Integration tests for the HTTP front door over a real socket: a
+//! native engine behind `net::HttpServer`, exercised by a plain
+//! `TcpStream` client so the wire bytes (framing, status codes,
+//! keep-alive, drain semantics) are what is actually asserted.
+//!
+//! Everything runs on the pure-Rust native backend at T=64, so the
+//! suite needs no artifacts and runs on a fresh checkout.
+
+use std::io::{Read, Write};
+use std::net::{SocketAddr, TcpStream};
+use std::time::{Duration, Instant};
+
+use hrrformer::coordinator::BatchPolicy;
+use hrrformer::engine::Engine;
+use hrrformer::net::{HttpConfig, HttpServer};
+use hrrformer::stream::StreamConfig;
+use hrrformer::util::json::Json;
+
+const T64: &str = "ember_hrrformer_small_T64_B8";
+
+fn engine(queue_depth: usize, max_batch: usize, max_wait: Duration) -> Engine {
+    Engine::builder()
+        .bucket(T64)
+        .policy(BatchPolicy { max_batch, max_wait })
+        .queue_depth(queue_depth)
+        .build_native()
+        .expect("native engine")
+}
+
+/// Start a server on an ephemeral port with the given config (addr is
+/// always overridden to 127.0.0.1:0).
+fn server_with(engine: &Engine, mut cfg: HttpConfig) -> HttpServer {
+    cfg.addr = "127.0.0.1:0".into();
+    HttpServer::start(cfg, engine).expect("http server")
+}
+
+fn server(engine: &Engine) -> HttpServer {
+    server_with(engine, HttpConfig::default())
+}
+
+fn connect(addr: SocketAddr) -> TcpStream {
+    let s = TcpStream::connect(addr).expect("connect");
+    s.set_read_timeout(Some(Duration::from_secs(30))).unwrap();
+    s.set_nodelay(true).unwrap();
+    s
+}
+
+fn post(path: &str, body: &str) -> String {
+    format!("POST {path} HTTP/1.1\r\nHost: t\r\nContent-Length: {}\r\n\r\n{body}", body.len())
+}
+
+fn get(path: &str) -> String {
+    format!("GET {path} HTTP/1.1\r\nHost: t\r\n\r\n")
+}
+
+fn ids_body(n: usize) -> String {
+    let ids: Vec<String> = (0..n).map(|i| ((i % 250) + 1).to_string()).collect();
+    format!("{{\"ids\":[{}]}}", ids.join(","))
+}
+
+/// Read exactly one response off the stream: (status, body, closed).
+fn read_response(s: &mut TcpStream) -> (u16, String, bool) {
+    let mut buf: Vec<u8> = Vec::new();
+    let mut tmp = [0u8; 4096];
+    let head_end = loop {
+        if let Some(pos) = buf.windows(4).position(|w| w == b"\r\n\r\n") {
+            break pos + 4;
+        }
+        let n = s.read(&mut tmp).expect("read response head");
+        assert!(n > 0, "connection closed before a full response head");
+        buf.extend_from_slice(&tmp[..n]);
+    };
+    let head = String::from_utf8_lossy(&buf[..head_end]).to_string();
+    let status: u16 =
+        head.split_whitespace().nth(1).and_then(|v| v.parse().ok()).expect("status code");
+    let mut content_length = 0usize;
+    let mut close = false;
+    for line in head.split("\r\n").skip(1) {
+        if let Some((name, value)) = line.split_once(':') {
+            if name.eq_ignore_ascii_case("content-length") {
+                content_length = value.trim().parse().unwrap_or(0);
+            } else if name.eq_ignore_ascii_case("connection")
+                && value.trim().eq_ignore_ascii_case("close")
+            {
+                close = true;
+            }
+        }
+    }
+    while buf.len() < head_end + content_length {
+        let n = s.read(&mut tmp).expect("read response body");
+        assert!(n > 0, "connection closed mid-body");
+        buf.extend_from_slice(&tmp[..n]);
+    }
+    let body = String::from_utf8_lossy(&buf[head_end..head_end + content_length]).to_string();
+    (status, body, close)
+}
+
+/// One-shot request on a fresh connection.
+fn roundtrip(addr: SocketAddr, raw: &str) -> (u16, String) {
+    let mut s = connect(addr);
+    s.write_all(raw.as_bytes()).unwrap();
+    let (status, body, _) = read_response(&mut s);
+    (status, body)
+}
+
+#[test]
+fn classify_roundtrips_over_the_socket() {
+    let engine = engine(64, 8, Duration::from_millis(10));
+    let http = server(&engine);
+    let addr = http.addr();
+
+    let (status, body) = roundtrip(addr, &post("/classify", &ids_body(32)));
+    assert_eq!(status, 200, "body: {body}");
+    let doc = Json::parse(&body).expect("reply is json");
+    assert!(doc.get("label").and_then(Json::as_usize).is_some());
+    assert_eq!(doc.get("bucket_t").and_then(Json::as_usize), Some(64));
+    assert!(!doc.get("logits").and_then(Json::as_arr).expect("logits").is_empty());
+    assert_eq!(doc.get("truncated").and_then(Json::as_bool), Some(false));
+
+    // liveness + routing misses
+    let (status, body) = roundtrip(addr, &get("/healthz"));
+    assert_eq!(status, 200);
+    assert_eq!(Json::parse(&body).unwrap().get("status").and_then(Json::as_str), Some("ok"));
+    assert_eq!(roundtrip(addr, &get("/nope")).0, 404);
+    assert_eq!(roundtrip(addr, &get("/classify")).0, 405);
+
+    http.stop();
+    engine.stop();
+}
+
+#[test]
+fn keep_alive_pipelining_and_split_reads() {
+    let engine = engine(64, 8, Duration::from_millis(10));
+    let http = server(&engine);
+    let mut s = connect(http.addr());
+
+    // two pipelined requests in a single write → two responses, in order
+    let two = format!("{}{}", get("/healthz"), get("/healthz"));
+    s.write_all(two.as_bytes()).unwrap();
+    let (st1, _, close1) = read_response(&mut s);
+    let (st2, _, close2) = read_response(&mut s);
+    assert_eq!((st1, st2), (200, 200));
+    assert!(!close1 && !close2, "keep-alive connection must stay open");
+
+    // same connection: a request dribbled in three writes
+    let req = post("/classify", &ids_body(16));
+    let bytes = req.as_bytes();
+    let (a, b) = (bytes.len() / 3, 2 * bytes.len() / 3);
+    for part in [&bytes[..a], &bytes[a..b], &bytes[b..]] {
+        s.write_all(part).unwrap();
+        s.flush().unwrap();
+        std::thread::sleep(Duration::from_millis(40));
+    }
+    let (status, body, _) = read_response(&mut s);
+    assert_eq!(status, 200, "split-read request must still classify: {body}");
+
+    drop(s);
+    http.stop();
+    engine.stop();
+}
+
+#[test]
+fn hostile_requests_get_typed_rejections() {
+    let engine = engine(64, 8, Duration::from_millis(10));
+    let http = server(&engine);
+    let addr = http.addr();
+
+    // oversized head → 431 and close (just past the cap, so the server
+    // drains every byte before closing — a clean FIN, not an RST)
+    let mut s = connect(addr);
+    let mut big = String::from("GET / HTTP/1.1\r\n");
+    while big.len() <= 16 * 1024 + 128 {
+        big.push_str("X-Pad: aaaaaaaaaaaaaaaaaaaaaaaaaaaaaaaaaaaaaaaa\r\n");
+    }
+    s.write_all(big.as_bytes()).unwrap();
+    let (status, _, close) = read_response(&mut s);
+    assert_eq!(status, 431);
+    assert!(close);
+
+    // malformed json → 400
+    assert_eq!(roundtrip(addr, &post("/classify", "{nope")).0, 400);
+    // missing ids → 400
+    assert_eq!(roundtrip(addr, &post("/classify", "{\"other\":1}")).0, 400);
+    // non-integral ids rejected by the strict accessor → 400, not a
+    // silently saturated token
+    assert_eq!(roundtrip(addr, &post("/classify", "{\"ids\":[1,3.5]}")).0, 400);
+    // out-of-i32-range ids → 400
+    assert_eq!(roundtrip(addr, &post("/classify", "{\"ids\":[1,4294967296]}")).0, 400);
+    // overflowing literal (1e999) is a parse error (NonFinite) → 400
+    assert_eq!(roundtrip(addr, &post("/classify", "{\"ids\":[1e999]}")).0, 400);
+    // zero deadline → 400
+    assert_eq!(roundtrip(addr, &post("/classify", "{\"ids\":[1],\"deadline_ms\":0}")).0, 400);
+    // deep-nesting DoS payload → 400 (depth cap), server stays up
+    let bomb = format!("{}1{}", "[".repeat(100_000), "]".repeat(100_000));
+    assert_eq!(roundtrip(addr, &post("/classify", &bomb)).0, 400);
+    assert_eq!(roundtrip(addr, &get("/healthz")).0, 200, "server must survive the bomb");
+
+    http.stop();
+    engine.stop();
+}
+
+#[test]
+fn body_cap_enforced_with_413() {
+    let engine = engine(64, 8, Duration::from_millis(10));
+    let http = server_with(&engine, HttpConfig { max_body: 1024, ..HttpConfig::default() });
+    let (status, _) = roundtrip(http.addr(), &post("/classify", &ids_body(2000)));
+    assert_eq!(status, 413);
+    http.stop();
+    engine.stop();
+}
+
+#[test]
+fn chunked_request_bodies_decode() {
+    let engine = engine(64, 8, Duration::from_millis(10));
+    let http = server(&engine);
+    let body = ids_body(24);
+    let (half, rest) = body.as_bytes().split_at(body.len() / 2);
+    let req = format!(
+        "POST /classify HTTP/1.1\r\nHost: t\r\nTransfer-Encoding: chunked\r\n\r\n{:x}\r\n{}\r\n{:x}\r\n{}\r\n0\r\n\r\n",
+        half.len(),
+        String::from_utf8_lossy(half),
+        rest.len(),
+        String::from_utf8_lossy(rest),
+    );
+    let (status, body) = roundtrip(http.addr(), &req);
+    assert_eq!(status, 200, "chunked body must classify: {body}");
+    http.stop();
+    engine.stop();
+}
+
+#[test]
+fn deadlines_shorten_the_batching_window() {
+    // max_wait is deliberately huge: without a deadline, a lone request
+    // idles out the whole batching window.
+    let engine = engine(64, 8, Duration::from_secs(3));
+    let http = server(&engine);
+    let addr = http.addr();
+
+    // deadline_ms=300 backdates the batch deadline: the reply must come
+    // back in well under max_wait (3 s), proving the mapping works.
+    let t0 = Instant::now();
+    let (status, body) =
+        roundtrip(addr, &post("/classify", "{\"ids\":[1,2,3],\"deadline_ms\":300}"));
+    let elapsed = t0.elapsed();
+    assert_eq!(status, 200, "body: {body}");
+    assert!(
+        elapsed < Duration::from_millis(1500),
+        "deadline-mapped request took {elapsed:?}, batching window was not shortened"
+    );
+
+    http.stop();
+    engine.stop();
+}
+
+#[test]
+fn expired_deadlines_answer_504() {
+    // A T=1024 bucket: one batch of the native forward takes far longer
+    // than the 2×1 ms reply budget, so the ticket must expire. The
+    // computation is not cancelled — only the reply is abandoned.
+    let engine = Engine::builder()
+        .bucket("ember_hrrformer_small_T1024_B8")
+        .policy(BatchPolicy { max_batch: 8, max_wait: Duration::from_secs(3) })
+        .queue_depth(64)
+        .build_native()
+        .expect("native engine");
+    let http = server(&engine);
+    let (status, body) =
+        roundtrip(http.addr(), &post("/classify", "{\"ids\":[5,6,7],\"deadline_ms\":1}"));
+    assert_eq!(status, 504, "expected expiry, got: {body}");
+    http.stop();
+    engine.stop();
+}
+
+#[test]
+fn overload_sheds_with_429_and_answers_everything() {
+    // Shallow queues + concurrent closed-loop clients: the fail-fast
+    // submit path must surface QueueFull as 429, and every request must
+    // get *an* answer — bounded queues shed, they never hang.
+    let engine = engine(1, 4, Duration::from_millis(5));
+    let http = server(&engine);
+    let addr = http.addr();
+
+    let clients = 8usize;
+    let per_client = 6usize;
+    let mut statuses: Vec<u16> = Vec::new();
+    std::thread::scope(|scope| {
+        let handles: Vec<_> = (0..clients)
+            .map(|_| {
+                scope.spawn(move || {
+                    let mut got = Vec::new();
+                    let mut s = connect(addr);
+                    for _ in 0..per_client {
+                        s.write_all(post("/classify", &ids_body(48)).as_bytes()).unwrap();
+                        let (status, _, close) = read_response(&mut s);
+                        got.push(status);
+                        if close {
+                            s = connect(addr);
+                        }
+                    }
+                    got
+                })
+            })
+            .collect();
+        for h in handles {
+            statuses.extend(h.join().expect("client thread"));
+        }
+    });
+
+    assert_eq!(statuses.len(), clients * per_client, "every request must be answered");
+    assert!(
+        statuses.iter().all(|s| *s == 200 || *s == 429),
+        "only 200/429 expected, got {statuses:?}"
+    );
+    assert!(
+        statuses.iter().any(|s| *s == 429),
+        "overload against queue_depth=1 must produce at least one 429"
+    );
+    assert!(statuses.iter().any(|s| *s == 200), "some requests must still succeed");
+
+    // the wire layer counted its 429s
+    assert!(http.stats().rejected.load(std::sync::atomic::Ordering::Relaxed) > 0);
+
+    http.stop();
+    engine.stop();
+}
+
+#[test]
+fn graceful_drain_finishes_in_flight_requests() {
+    let engine = engine(64, 8, Duration::from_millis(10));
+    let http = server(&engine);
+    let addr = http.addr();
+
+    // half a request on the wire when shutdown starts
+    let req = post("/classify", &ids_body(16));
+    let bytes = req.into_bytes();
+    let split = bytes.len() / 2;
+    let mut s = connect(addr);
+    s.write_all(&bytes[..split]).unwrap();
+    s.flush().unwrap();
+
+    // finish writing the request 150 ms into the drain
+    let tail = bytes[split..].to_vec();
+    let mut s2 = s.try_clone().expect("clone socket for writer");
+    let writer = std::thread::spawn(move || {
+        std::thread::sleep(Duration::from_millis(150));
+        s2.write_all(&tail).unwrap();
+    });
+
+    // a beat for the driver to pick the connection up, then drain
+    std::thread::sleep(Duration::from_millis(50));
+    http.stop(); // blocks until drained
+
+    writer.join().unwrap();
+    let (status, body, close) = read_response(&mut s);
+    assert_eq!(status, 200, "in-flight request dropped on shutdown: {body}");
+    assert!(close, "drain responses must announce connection close");
+    assert!(Json::parse(&body).unwrap().get("label").is_some());
+
+    // listener is gone: new connections are refused
+    assert!(
+        TcpStream::connect(addr).is_err(),
+        "post-shutdown connect should be refused"
+    );
+
+    engine.stop();
+}
+
+#[test]
+fn full_accept_queue_sheds_with_503() {
+    let engine = engine(64, 8, Duration::from_millis(10));
+    let http = server_with(
+        &engine,
+        HttpConfig { drivers: 1, accept_backlog: 1, ..HttpConfig::default() },
+    );
+    let addr = http.addr();
+
+    // c1 occupies the only driver (idle keep-alive still holds it)
+    let mut c1 = connect(addr);
+    c1.write_all(get("/healthz").as_bytes()).unwrap();
+    assert_eq!(read_response(&mut c1).0, 200);
+    // c2 fills the single accept-queue slot
+    let _c2 = connect(addr);
+    std::thread::sleep(Duration::from_millis(100));
+    // c3 must be shed with the canned 503
+    let mut c3 = connect(addr);
+    let (status, _, close) = read_response(&mut c3);
+    assert_eq!(status, 503);
+    assert!(close);
+    assert!(http.stats().shed.load(std::sync::atomic::Ordering::Relaxed) >= 1);
+
+    drop(c1);
+    http.stop();
+    engine.stop();
+}
+
+#[test]
+fn streaming_surface_over_http() {
+    let spool = std::env::temp_dir().join("hrrformer_http_serve_test").join("stream");
+    let engine = Engine::builder()
+        .stream_bucket("ember_hrrformer_small_T64_B1")
+        .stream_config(StreamConfig::new(spool))
+        .seed(9)
+        .build_native()
+        .expect("stream engine");
+    let http = server(&engine);
+    let addr = http.addr();
+    let mut s = connect(addr);
+
+    // open
+    s.write_all(post("/stream/open", "").as_bytes()).unwrap();
+    let (status, body, _) = read_response(&mut s);
+    assert_eq!(status, 200, "open: {body}");
+    let id = Json::parse(&body).unwrap().get("stream_id").and_then(Json::as_usize).unwrap();
+
+    // append raw bytes: once via content-length, once chunked
+    let req = format!(
+        "POST /stream/append?id={id} HTTP/1.1\r\nHost: t\r\nContent-Length: 16\r\n\r\nAAAAAAAAAAAAAAAA"
+    );
+    s.write_all(req.as_bytes()).unwrap();
+    let (status, body, _) = read_response(&mut s);
+    assert_eq!(status, 200, "append: {body}");
+    assert_eq!(Json::parse(&body).unwrap().get("appended").and_then(Json::as_usize), Some(16));
+
+    let req = format!(
+        "POST /stream/append?id={id} HTTP/1.1\r\nHost: t\r\nTransfer-Encoding: chunked\r\n\r\n8\r\nBBBBBBBB\r\n8\r\nCCCCCCCC\r\n0\r\n\r\n"
+    );
+    s.write_all(req.as_bytes()).unwrap();
+    let (status, body, _) = read_response(&mut s);
+    assert_eq!(status, 200, "chunked append: {body}");
+    assert_eq!(Json::parse(&body).unwrap().get("appended").and_then(Json::as_usize), Some(32));
+
+    // finish
+    s.write_all(post(&format!("/stream/finish?id={id}"), "").as_bytes()).unwrap();
+    let (status, body, _) = read_response(&mut s);
+    assert_eq!(status, 200, "finish: {body}");
+    let doc = Json::parse(&body).unwrap();
+    assert_eq!(doc.get("tokens").and_then(Json::as_usize), Some(32));
+    assert!(doc.get("label").and_then(Json::as_usize).is_some());
+
+    // lifecycle errors carry their typed statuses
+    let req = format!(
+        "POST /stream/append?id={id} HTTP/1.1\r\nHost: t\r\nContent-Length: 1\r\n\r\nA"
+    );
+    s.write_all(req.as_bytes()).unwrap();
+    assert_eq!(read_response(&mut s).0, 409, "append-after-finish → 409");
+    s.write_all(post("/stream/finish?id=999999", "").as_bytes()).unwrap();
+    assert_eq!(read_response(&mut s).0, 404, "unknown stream id → 404");
+    s.write_all(post("/stream/append", "").as_bytes()).unwrap();
+    assert_eq!(read_response(&mut s).0, 400, "missing id param → 400");
+
+    drop(s);
+    http.stop();
+    engine.stop();
+}
+
+#[test]
+fn stream_endpoints_404_without_a_streaming_bucket() {
+    let engine = engine(64, 8, Duration::from_millis(10));
+    let http = server(&engine);
+    assert_eq!(roundtrip(http.addr(), &post("/stream/open", "")).0, 404);
+    http.stop();
+    engine.stop();
+}
+
+#[test]
+fn metrics_reports_engine_pool_and_http_counters() {
+    let engine = engine(64, 8, Duration::from_millis(10));
+    let http = server(&engine);
+    let addr = http.addr();
+
+    for _ in 0..3 {
+        assert_eq!(roundtrip(addr, &post("/classify", &ids_body(16))).0, 200);
+    }
+    let (status, body) = roundtrip(addr, &get("/metrics"));
+    assert_eq!(status, 200);
+    let doc = Json::parse(&body).expect("metrics is json");
+
+    let eng = doc.get("engine").expect("engine section");
+    let count = eng
+        .get("latency_ms")
+        .and_then(|l| l.get("count"))
+        .and_then(Json::as_usize)
+        .expect("latency count");
+    assert!(count >= 3, "engine latency count {count} < 3");
+    let depths = eng.get("queue_depths").and_then(Json::as_arr).expect("queue_depths");
+    assert_eq!(depths.len(), 1);
+    assert_eq!(depths[0].get("t").and_then(Json::as_usize), Some(64));
+
+    let pool = doc.get("pool").expect("pool section");
+    assert!(pool.get("budget").and_then(Json::as_usize).unwrap_or(0) >= 1);
+
+    let httpm = doc.get("http").expect("http section");
+    assert!(httpm.get("requests").and_then(Json::as_usize).unwrap_or(0) >= 4);
+
+    http.stop();
+    engine.stop();
+}

@@ -1,0 +1,151 @@
+//! Fuzz-style property tests for the hardened `util::json` parser —
+//! the parser now sits on the network (`POST /classify` bodies go
+//! through it verbatim), so its invariants are security properties:
+//!
+//! * **total**: any input returns `Ok` or a typed `JsonError` — never a
+//!   panic, never a stack overflow (depth-capped recursion);
+//! * **round-trip**: serialize → parse is the identity on every value
+//!   the serializer can emit;
+//! * **strict**: escapes decode per RFC 8259 (surrogate pairs combine,
+//!   lone surrogates reject) and numbers never become ±inf.
+
+use hrrformer::util::json::{Json, JsonErrorKind, MAX_DEPTH};
+use hrrformer::util::prop::forall;
+use hrrformer::util::rng::Rng;
+
+/// Characters chosen to stress the escape paths: quotes, backslashes,
+/// control characters, multi-byte UTF-8, and astral-plane codepoints
+/// (which serialize/parse through surrogate handling in `\u` form).
+const HOSTILE_CHARS: &[char] =
+    &['a', 'Z', '"', '\\', '/', '\n', '\t', '\r', '\u{1}', '\u{1f}', 'é', '中', '😀', '𝕏', ' '];
+
+fn gen_string(rng: &mut Rng) -> String {
+    (0..rng.usize_below(12)).map(|_| *rng.choose(HOSTILE_CHARS)).collect()
+}
+
+fn gen_num(rng: &mut Rng) -> f64 {
+    match rng.usize_below(4) {
+        0 => rng.range(-1_000_000, 1_000_000) as f64,
+        1 => rng.range(-1000, 1000) as f64 / 8.0, // exact binary fractions
+        2 => rng.f64() * 1e12 - 5e11,
+        _ => rng.range(-9_007_199_254_740_992, 9_007_199_254_740_991) as f64,
+    }
+}
+
+fn gen_value(rng: &mut Rng, depth: usize) -> Json {
+    let pick = if depth == 0 { rng.usize_below(4) } else { rng.usize_below(6) };
+    match pick {
+        0 => Json::Null,
+        1 => Json::Bool(rng.bool(0.5)),
+        2 => Json::Num(gen_num(rng)),
+        3 => Json::Str(gen_string(rng)),
+        4 => Json::Arr((0..rng.usize_below(4)).map(|_| gen_value(rng, depth - 1)).collect()),
+        _ => Json::Obj(
+            (0..rng.usize_below(4))
+                .map(|i| (format!("k{i}_{}", gen_string(rng)), gen_value(rng, depth - 1)))
+                .collect(),
+        ),
+    }
+}
+
+#[test]
+fn serialize_parse_roundtrip_is_identity() {
+    forall(300, 0xD0C5, |rng| {
+        let v = gen_value(rng, 4);
+        let text = v.to_string();
+        let back = Json::parse(&text)
+            .unwrap_or_else(|e| panic!("serializer emitted unparseable text {text:?}: {e}"));
+        assert_eq!(back, v, "roundtrip diverged for {text:?}");
+        // parse_bytes is the same parser over a slice
+        assert_eq!(Json::parse_bytes(text.as_bytes()).unwrap(), v);
+    });
+}
+
+#[test]
+fn hostile_strings_roundtrip_through_escaping() {
+    forall(300, 0xE5CA, |rng| {
+        let s: String = (0..rng.usize_below(40)).map(|_| *rng.choose(HOSTILE_CHARS)).collect();
+        let v = Json::Str(s.clone());
+        let parsed = Json::parse(&v.to_string()).expect("escaped string must parse");
+        assert_eq!(parsed.as_str(), Some(s.as_str()));
+    });
+}
+
+/// Random bytes from a JSON-ish alphabet reach deep into the parser;
+/// whatever they are, the parser must return — `Ok` or typed `Err` —
+/// without panicking (the harness converts panics into failures).
+#[test]
+fn garbage_never_panics() {
+    const ALPHABET: &[u8] = b"{}[]\",:0123456789.eE+-truefalsnl\\u \t\n\x00\xff\xc3";
+    forall(500, 0x6A5B, |rng| {
+        let bytes: Vec<u8> =
+            (0..rng.usize_below(64)).map(|_| *rng.choose(ALPHABET)).collect();
+        let _ = Json::parse_bytes(&bytes);
+    });
+}
+
+/// Mutating one byte of a valid document must never panic either —
+/// this walks the parser into states pure garbage rarely reaches.
+#[test]
+fn mutated_valid_documents_never_panic() {
+    forall(300, 0xF1B0, |rng| {
+        let mut bytes = gen_value(rng, 3).to_string().into_bytes();
+        if bytes.is_empty() {
+            return;
+        }
+        let i = rng.usize_below(bytes.len());
+        bytes[i] = bytes[i].wrapping_add(1 + rng.next_u64() as u8 % 255);
+        let _ = Json::parse_bytes(&bytes);
+    });
+}
+
+/// Nesting up to MAX_DEPTH parses; anything beyond fails with the
+/// typed `TooDeep` error rather than exhausting the thread's stack.
+#[test]
+fn nesting_depth_is_capped_not_crashed() {
+    forall(40, 0xDEEB, |rng| {
+        let depth = 1 + rng.usize_below(MAX_DEPTH + 64);
+        let doc = format!("{}1{}", "[".repeat(depth), "]".repeat(depth));
+        match Json::parse(&doc) {
+            Ok(_) => assert!(depth <= MAX_DEPTH, "depth {depth} should have been rejected"),
+            Err(e) => {
+                assert!(depth > MAX_DEPTH, "depth {depth} should have parsed: {e}");
+                assert_eq!(e.kind, JsonErrorKind::TooDeep);
+            }
+        }
+    });
+}
+
+/// Every random *sibling-heavy* document parses regardless of width —
+/// the cap is on nesting, not size.
+#[test]
+fn wide_documents_are_not_depth_limited() {
+    forall(30, 0x71DE, |rng| {
+        let n = 1 + rng.usize_below(2000);
+        let doc = format!("[{}]", vec!["0"; n].join(","));
+        let arr = Json::parse(&doc).expect("wide array must parse");
+        assert_eq!(arr.as_arr().map(|a| a.len()), Some(n));
+    });
+}
+
+/// Number hardening: overflowing literals fail typed (`NonFinite`),
+/// and integer accessors never saturate.
+#[test]
+fn numbers_stay_finite_and_integers_stay_exact() {
+    forall(200, 0x1E99, |rng| {
+        // a literal guaranteed to overflow f64
+        let exp = 400 + rng.usize_below(600);
+        let doc = format!("[1e{exp}]");
+        let err = Json::parse(&doc).expect_err("overflowing literal must fail");
+        assert_eq!(err.kind, JsonErrorKind::NonFinite);
+
+        // in-range integers roundtrip exactly through as_i64
+        let n = rng.range(-9_007_199_254_740_992, 9_007_199_254_740_991);
+        let parsed = Json::parse(&format!("{n}")).unwrap();
+        assert_eq!(parsed.as_i64(), Some(n));
+        // non-integral values are rejected by the integer accessors
+        let frac = Json::parse("3.5").unwrap();
+        assert_eq!(frac.as_i64(), None);
+        assert_eq!(frac.as_usize(), None);
+    });
+}

@@ -61,6 +61,39 @@ if ! grep -q '"stream"' BENCH_native.json; then
     exit 1
 fi
 
+# HTTP front-door smoke (artifact-free): stand up the real network
+# server (`serve --http`) on a local port, drive it with the
+# closed-loop `bench http` client over real sockets, and require the
+# merged "http" section (throughput + client-side p50/p99 for the
+# steady and overload phases) in the trajectory regenerated above.
+http_port=18734
+env HRRFORMER_ARTIFACTS=/hrrformer-no-artifacts \
+    cargo run --release -- serve --http --backend native \
+    --bases ember_hrrformer_small_T64_B8 --queue-depth 4 \
+    --addr 127.0.0.1:${http_port} --http-secs 20 &
+serve_pid=$!
+ready=0
+for _ in $(seq 1 75); do
+    if (exec 3<>"/dev/tcp/127.0.0.1/${http_port}") 2>/dev/null; then
+        ready=1
+        break
+    fi
+    sleep 0.2
+done
+if [[ $ready -ne 1 ]]; then
+    echo "verify: FAIL — serve --http never started listening on :${http_port}" >&2
+    kill "$serve_pid" 2>/dev/null || true
+    exit 1
+fi
+run env HRRFORMER_ARTIFACTS=/hrrformer-no-artifacts \
+    cargo run --release -- bench http --addr 127.0.0.1:${http_port} \
+    --clients 2 --requests 8 --overload-clients 8 --overload-requests 4 --req-len 48
+wait "$serve_pid"   # --http-secs elapses; the server drains and exits 0
+if ! grep -q '"http"' BENCH_native.json; then
+    echo "verify: FAIL — bench http did not merge an http section into BENCH_native.json" >&2
+    exit 1
+fi
+
 # Native training smoke (artifact-free): a tiny `repro train --backend
 # native` job must run the full train→eval→checkpoint loop (reverse-mode
 # autodiff + Adam, --eval-every exercising the periodic-eval path) and
