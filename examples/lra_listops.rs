@@ -43,6 +43,7 @@ fn main() -> Result<()> {
         eval_batches: args.usize("eval-batches", 8),
         curve_csv: Some("results/e2e_listops.csv".into()),
         ckpt: Some("results/e2e_listops.ckpt".into()),
+        artifact: None,
         verbose: true,
     };
     let report = match &manifest {

@@ -114,6 +114,7 @@ pub fn run(rt: &Runtime, manifest: &Manifest, cfg: &EmberBenchCfg) -> Result<Vec
                 eval_batches: cfg.eval_batches,
                 curve_csv: None,
                 ckpt: None,
+                artifact: None,
                 verbose: false,
             };
             match train(rt, manifest, &tc) {

@@ -101,6 +101,7 @@ pub fn run(rt: &Runtime, manifest: &Manifest, cfg: &LraBenchCfg) -> Result<Vec<L
             eval_batches: cfg.eval_batches,
             curve_csv,
             ckpt: None,
+            artifact: None,
             verbose: false,
         };
         match train(rt, manifest, &tc) {

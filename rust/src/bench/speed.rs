@@ -86,6 +86,7 @@ pub fn run(rt: &Runtime, manifest: &Manifest, cfg: &SpeedBenchCfg) -> Result<Vec
             eval_batches: 0,
             curve_csv: None,
             ckpt: None,
+            artifact: None,
             verbose: false,
         };
         match train(rt, manifest, &tc) {

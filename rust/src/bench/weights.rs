@@ -50,6 +50,7 @@ pub fn run(rt: &Runtime, manifest: &Manifest, cfg: &WeightsBenchCfg) -> Result<V
         eval_batches: 4,
         curve_csv: None,
         ckpt: Some(ckpt.clone()),
+        artifact: None,
         verbose: true,
     };
     let report = train(rt, manifest, &tc)?;

@@ -41,6 +41,10 @@ pub struct TrainConfig {
     /// Where to write the learning-curve CSV (None = no file).
     pub curve_csv: Option<PathBuf>,
     pub ckpt: Option<PathBuf>,
+    /// Where to write a versioned weight artifact (manifest +
+    /// checksummed payload, deployable via `POST /admin/reload`) after
+    /// the last step. Only the native backend produces artifacts.
+    pub artifact: Option<PathBuf>,
     pub verbose: bool,
 }
 
@@ -54,6 +58,7 @@ impl Default for TrainConfig {
             eval_batches: 8,
             curve_csv: None,
             ckpt: None,
+            artifact: None,
             verbose: true,
         }
     }
@@ -236,6 +241,18 @@ pub fn train_session(
     // so timing-only runs or a transient NaN eval cannot poison the
     // report (and the bench JSON built from it)
     let last_finite = curve.iter().rev().find(|p| p.has_finite_eval());
+
+    if let Some(p) = &cfg.artifact {
+        if let Some(dir) = p.parent() {
+            std::fs::create_dir_all(dir)?;
+        }
+        let final_eval = last_finite.map(|pt| (pt.test_loss, pt.test_acc));
+        sess.save_artifact(p, final_eval)?;
+        if cfg.verbose {
+            eprintln!("[train] artifact → {}", p.display());
+        }
+    }
+
     Ok(TrainReport {
         base: cfg.base.clone(),
         final_train_acc: last.train_acc,
@@ -290,13 +307,12 @@ mod tests {
     use std::time::Duration;
 
     use super::*;
-    use crate::model::{ParamStore, Session, StepStats};
+    use crate::model::{Session, StepStats};
     use crate::runtime::Tensor;
 
     /// A fake Trainable with controllable timing and eval behavior, so
     /// the loop's accounting is testable without any backend.
     struct StubSession {
-        params: ParamStore,
         step: u32,
         train_sleep: Duration,
         eval_sleep: Duration,
@@ -310,7 +326,6 @@ mod tests {
     impl StubSession {
         fn new() -> StubSession {
             StubSession {
-                params: ParamStore::default(),
                 step: 0,
                 train_sleep: Duration::from_millis(2),
                 eval_sleep: Duration::from_millis(10),
@@ -322,16 +337,16 @@ mod tests {
     }
 
     impl Session for StubSession {
-        fn params(&self) -> &ParamStore {
-            &self.params
-        }
-
         fn batch(&self) -> usize {
             2
         }
 
         fn seq_len(&self) -> usize {
             8
+        }
+
+        fn param_scalars(&self) -> usize {
+            0
         }
     }
 

@@ -20,7 +20,7 @@ use anyhow::{Context, Result};
 use crate::coordinator::batcher::{BatchPolicy, BatchQueue, Pending};
 use crate::engine::error::EngineError;
 use crate::engine::{Backend, EngineStats, ExecSpan, InferReply};
-use crate::hrr::{HrrConfig, NativeSession, RowScheduler};
+use crate::hrr::{HrrConfig, NativeSession, ParamSlot, RowScheduler};
 use crate::model::{ParamStore, PredictSession, Predictor, Session};
 use crate::runtime::{Manifest, Runtime, Tensor};
 use crate::util::pool::WorkerPool;
@@ -73,8 +73,13 @@ pub(crate) struct ExecutorConfig {
     /// Present for [`Backend::Artifact`]; the native backend needs none.
     pub manifest_dir: Option<PathBuf>,
     pub seed: u32,
-    /// Trained parameters (None = seed-initialized).
+    /// Trained parameters (None = seed-initialized). Artifact backend
+    /// only — native buckets carry their weights in `slot`.
     pub params: Option<ParamStore>,
+    /// The bucket's versioned weight slot (native backend): owned by
+    /// the engine's [`crate::engine::ReloadHub`], pinned by the session
+    /// once per batch, hot-swapped by `Engine::reload`.
+    pub slot: Option<Arc<ParamSlot>>,
     pub policy: BatchPolicy,
     /// The engine's shared worker pool (native backend): installed as
     /// the session's row scheduler, so every bucket's predict rows run
@@ -126,11 +131,14 @@ fn build_session(cfg: &mut ExecutorConfig) -> Result<Box<dyn Predictor>> {
             Ok(Box::new(sess))
         }
         Backend::Native => {
-            let mut sess = match params {
-                Some(p) => NativeSession::with_params(HrrConfig::from_base(&cfg.base)?, p),
-                None => NativeSession::create(&cfg.base, cfg.seed),
-            }
-            .with_context(|| format!("build native bucket '{}'", cfg.base))?;
+            // The builder seeded the slot (explicit params or seed
+            // init); serving from it keeps the bucket hot-reloadable.
+            let slot = cfg
+                .slot
+                .take()
+                .context("native executor requires a versioned param slot")?;
+            let mut sess = NativeSession::with_slot(HrrConfig::from_base(&cfg.base)?, slot)
+                .with_context(|| format!("build native bucket '{}'", cfg.base))?;
             if let Some(pool) = cfg.pool.take() {
                 sess.set_scheduler(RowScheduler::Pool(pool));
             }
@@ -235,12 +243,18 @@ fn execute_batch(
     let tensor = Tensor::i32(vec![cap, t], ids);
 
     let start = Instant::now();
-    let result = sess.predict(&tensor).map_err(|e| format!("{e:#}")).and_then(|l| decode(&l, cap));
+    // predict_versioned pins one weight version for the whole batch —
+    // a concurrent reload flips the slot for the *next* batch, never
+    // this one — and reports which version produced the logits.
+    let result = sess
+        .predict_versioned(&tensor)
+        .map_err(|e| format!("{e:#}"))
+        .and_then(|(l, v)| decode(&l, cap).map(|d| (d, v)));
     let end = Instant::now();
     stats.record_span(ExecSpan { bucket_t: t, batch_size: n, start, end });
 
     match result {
-        Ok((data, classes, preds)) => {
+        Ok(((data, classes, preds), model_version)) => {
             for (row, p) in batch.into_iter().enumerate() {
                 let latency = end.duration_since(p.payload.submitted);
                 stats.latency.record(latency);
@@ -253,6 +267,7 @@ fn execute_batch(
                     batch_size: n,
                     truncated: p.payload.truncated,
                     seq: *seq,
+                    model_version,
                 };
                 *seq += 1;
                 let _ = p.payload.reply.send(Ok(reply));

@@ -64,6 +64,18 @@
 //! client threads. Shutdown (`stop()` or drop) drains every queue before
 //! joining the threads.
 //!
+//! # Hot reload
+//!
+//! On the native backend every bucket — predict and stream — serves
+//! from a versioned [`crate::hrr::ParamSlot`]. [`Engine::reload`] takes
+//! a checksum-verified [`Artifact`], validates it against each bucket's
+//! config, and flips the accepted slots to a new weights generation
+//! ([`ReloadReport`]). Executors pin one weight version per batch and
+//! streams pin at open, so reload never blocks or corrupts in-flight
+//! work: replies simply start carrying the new `model_version` at the
+//! next batch. Artifact-backend buckets reject (compiled programs own
+//! their params).
+//!
 //! # Streaming
 //!
 //! [`EngineBuilder::stream_bucket`] (native only) adds a dedicated
@@ -93,9 +105,10 @@ use anyhow::{Context, Result};
 
 use crate::coordinator::batcher::BatchPolicy;
 use crate::coordinator::router::{Bucket, Route, Router};
-use crate::hrr::HrrConfig;
+use crate::hrr::model::validate_native_params;
+use crate::hrr::{init_native_params, HrrConfig, ParamSlot};
 use crate::metrics::{LatencyHist, RunMeter};
-use crate::model::ParamStore;
+use crate::model::{Artifact, ParamStore};
 use crate::runtime::Manifest;
 use crate::stream::{StreamConfig, StreamOutcome};
 use crate::util::pool::{default_budget, WorkerPool};
@@ -166,6 +179,10 @@ pub struct InferReply {
     pub truncated: bool,
     /// position in this bucket's reply stream (FIFO observability)
     pub seq: u64,
+    /// version of the weights that produced these logits (1 = the
+    /// build-time weights, bumped by each accepted [`Engine::reload`];
+    /// 0 on backends without versioned weights)
+    pub model_version: u64,
 }
 
 /// The pending-reply side of a submitted request.
@@ -329,6 +346,8 @@ pub struct EngineClient {
     stats: Arc<EngineStats>,
     /// Present when the engine was built with a streaming bucket.
     stream_tx: Option<SyncSender<StreamMsg>>,
+    /// Versioned weight slots for zero-downtime reload.
+    hub: Arc<ReloadHub>,
 }
 
 impl EngineClient {
@@ -401,6 +420,19 @@ impl EngineClient {
         &self.stats
     }
 
+    /// Hot-swap weights from a verified [`Artifact`] (see
+    /// [`ReloadHub::reload`]). Never blocks in-flight inference: each
+    /// accepted bucket's slot flips between batch pins, open streams
+    /// finish on the version they pinned at open.
+    pub fn reload(&self, artifact: &Artifact) -> ReloadReport {
+        self.hub.reload(artifact)
+    }
+
+    /// The weights generation currently serving (1 = build-time).
+    pub fn model_version(&self) -> u64 {
+        self.hub.version()
+    }
+
     fn stream_channel(&self) -> Result<&SyncSender<StreamMsg>, EngineError> {
         self.stream_tx.as_ref().ok_or(EngineError::StreamUnavailable)
     }
@@ -435,6 +467,97 @@ impl EngineClient {
             .send(StreamMsg::Finish { id, reply: tx })
             .map_err(|_| EngineError::Shutdown)?;
         rx.recv().map_err(|_| EngineError::Shutdown)?.map_err(EngineError::from)
+    }
+}
+
+/// One hot-reloadable native bucket: its base string, resolved config
+/// (what reload candidates validate against) and the versioned
+/// [`ParamSlot`] its executor serves from.
+struct ReloadBucket {
+    base: String,
+    cfg: HrrConfig,
+    slot: Arc<ParamSlot>,
+}
+
+/// What an [`Engine::reload`] did.
+#[derive(Debug, Clone)]
+pub struct ReloadReport {
+    /// Weights generation now serving. Bumped only when at least one
+    /// bucket accepted the artifact; otherwise the pre-reload version.
+    pub version: u64,
+    /// Buckets (base strings) now serving the new weights.
+    pub buckets: Vec<String>,
+    /// `(bucket, reason)` for buckets that kept their old weights —
+    /// structural mismatch, or a backend that cannot hot-reload.
+    pub rejected: Vec<(String, String)>,
+}
+
+/// The engine's hot-reload surface: one versioned [`ParamSlot`] per
+/// native bucket (predict *and* stream), flipped atomically per bucket.
+///
+/// Zero-downtime by construction: executors pin one `ParamVersion` per
+/// batch (streams pin at open), so `install` never blocks or mixes
+/// generations — in-flight work finishes on the weights it started
+/// with, and the next pin sees the new version. Reloads serialize on an
+/// internal lock; an artifact that validates against **no** bucket
+/// changes nothing (the engine is untouched).
+pub struct ReloadHub {
+    /// Serializes reloads so concurrent installs cannot interleave
+    /// half-applied weight sets across buckets.
+    lock: Mutex<()>,
+    buckets: Vec<ReloadBucket>,
+    /// Buckets that can never reload (compiled artifact programs own
+    /// their parameters on the PJRT side).
+    fixed: Vec<String>,
+    /// The currently serving weights generation (starts at 1).
+    version: AtomicU64,
+}
+
+impl ReloadHub {
+    fn new(buckets: Vec<ReloadBucket>, fixed: Vec<String>) -> ReloadHub {
+        ReloadHub { lock: Mutex::new(()), buckets, fixed, version: AtomicU64::new(1) }
+    }
+
+    /// The weights generation currently serving.
+    pub fn version(&self) -> u64 {
+        self.version.load(Ordering::SeqCst)
+    }
+
+    /// Validate `artifact` against every bucket and flip the accepted
+    /// ones to a new weights generation. The artifact's checksums were
+    /// already verified on open; here each bucket checks structure
+    /// (names/shapes/dtypes vs its own config). Buckets that reject
+    /// keep serving their current weights.
+    pub fn reload(&self, artifact: &Artifact) -> ReloadReport {
+        let _guard = self.lock.lock().expect("reload lock poisoned");
+        let mut accepted: Vec<&ReloadBucket> = Vec::new();
+        let mut rejected: Vec<(String, String)> = Vec::new();
+        for base in &self.fixed {
+            rejected.push((
+                base.clone(),
+                "artifact-backend bucket cannot hot-reload (compiled program owns its params)"
+                    .into(),
+            ));
+        }
+        for b in &self.buckets {
+            match validate_native_params(&b.cfg, &artifact.params) {
+                Ok(()) => accepted.push(b),
+                Err(e) => rejected.push((b.base.clone(), format!("{e:#}"))),
+            }
+        }
+        if accepted.is_empty() {
+            return ReloadReport { version: self.version(), buckets: Vec::new(), rejected };
+        }
+        let next = self.version() + 1;
+        for b in &accepted {
+            b.slot.install(artifact.params.clone(), next);
+        }
+        self.version.store(next, Ordering::SeqCst);
+        ReloadReport {
+            version: next,
+            buckets: accepted.iter().map(|b| b.base.clone()).collect(),
+            rejected,
+        }
     }
 }
 
@@ -595,25 +718,28 @@ impl EngineBuilder {
         );
 
         // Resolve bucket shapes up front: unknown bases fail here, before
-        // any thread or compile work starts.
-        let mut resolved: Vec<(Bucket, BucketSpec)> = Vec::with_capacity(self.buckets.len());
+        // any thread or compile work starts. Native buckets keep their
+        // resolved config — it seeds the bucket's versioned param slot
+        // and is what reload candidates validate against.
+        let mut resolved: Vec<(Bucket, BucketSpec, Option<HrrConfig>)> =
+            Vec::with_capacity(self.buckets.len());
         match backend {
             Backend::Artifact => {
                 let manifest = manifest
                     .context("artifact backend requires a manifest (or use build_native())")?;
                 for spec in self.buckets {
                     let p = manifest.get(&format!("{}_predict", spec.base))?;
-                    resolved.push((Bucket { seq_len: p.seq_len, batch: p.batch }, spec));
+                    resolved.push((Bucket { seq_len: p.seq_len, batch: p.batch }, spec, None));
                 }
             }
             Backend::Native => {
                 for spec in self.buckets {
                     let c = HrrConfig::from_base(&spec.base)?;
-                    resolved.push((Bucket { seq_len: c.seq_len, batch: c.batch }, spec));
+                    resolved.push((Bucket { seq_len: c.seq_len, batch: c.batch }, spec, Some(c)));
                 }
             }
         }
-        resolved.sort_by_key(|(b, _)| b.seq_len);
+        resolved.sort_by_key(|(b, _, _)| b.seq_len);
         for w in resolved.windows(2) {
             anyhow::ensure!(
                 w[0].0.seq_len != w[1].0.seq_len,
@@ -651,19 +777,40 @@ impl EngineBuilder {
 
         // One executor thread per bucket; each compiles its own session
         // and signals readiness before the engine is handed to callers.
+        // Native buckets serve from a versioned param slot owned here
+        // (registered with the reload hub); artifact buckets are fixed.
+        let mut hub_buckets: Vec<ReloadBucket> = Vec::new();
+        let mut hub_fixed: Vec<String> = Vec::new();
         let mut job_txs = Vec::new();
         let mut readies = Vec::new();
         let mut threads = Vec::new();
         let mut buckets = Vec::new();
-        for (bucket, spec) in resolved {
+        for (bucket, mut spec, native_cfg) in resolved {
             let (job_tx, job_rx) = sync_channel::<ExecMsg>(self.queue_depth);
             let (ready_tx, ready_rx) = sync_channel::<Result<()>>(1);
+            let slot = match &native_cfg {
+                Some(c) => {
+                    let params =
+                        spec.params.take().unwrap_or_else(|| init_native_params(c, self.seed));
+                    Some(Arc::new(ParamSlot::new(params, 1)))
+                }
+                None => None,
+            };
+            match (&native_cfg, &slot) {
+                (Some(c), Some(s)) => hub_buckets.push(ReloadBucket {
+                    base: spec.base.clone(),
+                    cfg: c.clone(),
+                    slot: s.clone(),
+                }),
+                _ => hub_fixed.push(spec.base.clone()),
+            }
             let cfg = ExecutorConfig {
                 base: spec.base.clone(),
                 backend,
                 manifest_dir: manifest_dir.clone(),
                 seed: self.seed,
                 params: spec.params,
+                slot,
                 policy: self.policy,
                 pool: pool.clone(),
             };
@@ -686,13 +833,25 @@ impl EngineBuilder {
             let scfg = self
                 .stream_cfg
                 .unwrap_or_else(|| StreamConfig::new(std::env::temp_dir().join("hrrformer_streams")));
+            // The stream bucket reloads too: its slot sits in the hub
+            // like any predict bucket's. Streams pin the slot's current
+            // version at open, so a reload mid-stream cannot mix weight
+            // generations within one classification.
+            let model_cfg = HrrConfig::from_base(&base)
+                .with_context(|| format!("resolve stream bucket '{base}'"))?;
+            let slot = Arc::new(ParamSlot::new(init_native_params(&model_cfg, self.seed), 1));
+            hub_buckets.push(ReloadBucket {
+                base: base.clone(),
+                cfg: model_cfg,
+                slot: slot.clone(),
+            });
             let (tx, stream_rx) = sync_channel::<StreamMsg>(self.queue_depth);
             let (ready_tx, ready_rx) = sync_channel::<Result<()>>(1);
             let cfg = StreamExecConfig {
                 base: base.clone(),
-                seed: self.seed,
                 cfg: scfg,
                 pool: pool.clone(),
+                slot,
             };
             let thread = std::thread::Builder::new()
                 .name("hrr-stream".into())
@@ -750,8 +909,9 @@ impl EngineBuilder {
             .context("spawn routing thread")?;
         threads.insert(0, routing);
 
+        let hub = Arc::new(ReloadHub::new(hub_buckets, hub_fixed));
         Ok(Engine {
-            client: EngineClient { tx, stats, stream_tx: stream_tx.clone() },
+            client: EngineClient { tx, stats, stream_tx: stream_tx.clone(), hub },
             buckets,
             threads,
             pool,
@@ -815,6 +975,17 @@ impl Engine {
     /// (see [`EngineClient::finish_stream`]).
     pub fn finish_stream(&self, id: u64) -> Result<StreamOutcome, EngineError> {
         self.client.finish_stream(id)
+    }
+
+    /// Hot-swap weights from a verified artifact without stopping the
+    /// engine (see [`EngineClient::reload`]).
+    pub fn reload(&self, artifact: &Artifact) -> ReloadReport {
+        self.client.reload(artifact)
+    }
+
+    /// The weights generation currently serving (1 = build-time).
+    pub fn model_version(&self) -> u64 {
+        self.client.model_version()
     }
 
     /// The compiled (seq_len, batch) buckets, sorted by seq_len.

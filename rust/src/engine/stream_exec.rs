@@ -14,7 +14,7 @@ use std::time::Duration;
 
 use anyhow::{Context, Result};
 
-use crate::hrr::{NativeSession, RowScheduler};
+use crate::hrr::{NativeSession, ParamSlot, RowScheduler};
 use crate::stream::{StreamConfig, StreamError, StreamOutcome, StreamRegistry};
 
 /// One stream lifecycle operation, as sent by `EngineClient`.
@@ -30,11 +30,14 @@ pub(crate) struct StreamExecConfig {
     /// Program base of the streaming bucket
     /// (e.g. `ember_hrrformer_small_T131072_B1`).
     pub base: String,
-    pub seed: u32,
     pub cfg: StreamConfig,
     /// The engine's shared worker pool; chunk compute runs as pool
     /// tasks so streams share the engine-wide worker budget.
     pub pool: Option<std::sync::Arc<crate::util::pool::WorkerPool>>,
+    /// The bucket's versioned weight slot, seeded by the builder and
+    /// registered with the reload hub. Each stream pins the slot's
+    /// current version at open and finishes on it.
+    pub slot: std::sync::Arc<ParamSlot>,
 }
 
 /// How often the executor wakes to evict idle streams when no requests
@@ -78,7 +81,8 @@ pub(crate) fn run_stream_executor(
 }
 
 fn build_registry(cfg: StreamExecConfig) -> Result<StreamRegistry> {
-    let sess = NativeSession::create(&cfg.base, cfg.seed)
+    let model_cfg = crate::hrr::HrrConfig::from_base(&cfg.base)?;
+    let sess = NativeSession::with_slot(model_cfg, cfg.slot)
         .with_context(|| format!("build native stream bucket '{}'", cfg.base))?;
     let scheduler = match cfg.pool {
         Some(pool) => RowScheduler::Pool(pool),

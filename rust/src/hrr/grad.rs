@@ -1,11 +1,12 @@
 //! Reverse-mode autodiff through the native Hrrformer forward pass,
 //! plus the Adam optimizer — artifact-free training ([`NativeTrainSession`]).
 //!
-//! The forward pass here ([`forward_row_tape`]) is the same arithmetic as
-//! `model::forward_row` (same helpers, same order, same f32-buffers /
-//! f64-accumulators split — logits are bit-identical, pinned by a test),
-//! except it keeps every intermediate backward needs on a per-row
-//! [`Tape`]. [`backward_row`] then walks the tape in reverse:
+//! The forward pass here **is** `model::forward_row_with` — train and
+//! predict share one forward implementation, and the tape side observes
+//! it through the `ForwardTap` hooks (`TapeRecorder`), keeping every
+//! intermediate backward needs on a per-row `Tape`. Logits are
+//! bit-identical to predict's by construction (still pinned by a test).
+//! `backward_row` then walks the tape in reverse:
 //!
 //! * softmax cross-entropy (model.py `loss_fn`: mean NLL over the batch);
 //! * dense / bias / ReLU head, masked mean-pool, LayerNorm (recomputed
@@ -57,17 +58,16 @@ use anyhow::{Context, Result};
 use crate::hrr::config::{task_decay_rate, HrrConfig};
 use crate::hrr::fft::num_bins;
 use crate::hrr::model::{
-    add_bias, forward_row, gelu, init_native_params, layernorm_into, matmul_into, param_specs,
-    sinusoid, validate_native_params, FftScratch, ResolvedParams, Workspace,
+    forward_row, forward_row_with, gelu, init_native_params, param_specs, validate_native_params,
+    FftScratch, ForwardTap, ResolvedParams, Workspace,
 };
 use crate::hrr::ops::EPS;
 use crate::hrr::RowScheduler;
+use crate::model::artifact::{Artifact, Provenance};
 use crate::model::params::ParamStore;
 use crate::model::session::{Session, StepStats, Trainable};
 use crate::runtime::tensor::Tensor;
 use crate::util::pool::Task as PoolTask;
-
-use super::PAD_ID;
 
 /// Adam's moment decays and ε — fixed, like the exported train_step
 /// (model.py `adam_update` defaults).
@@ -158,16 +158,12 @@ impl BlockTape {
     }
 }
 
-/// The full forward record for one row, plus the forward scratch buffers
-/// (running residual, projections) that are not needed by backward.
+/// The full forward record for one row. Filled by [`TapeRecorder`]
+/// observing `model::forward_row_with`; holds only what backward reads.
 /// Sized for the config's full seq_len; shorter rows use prefixes.
 struct Tape {
     t: usize,
     mask: Vec<bool>,
-    x: Vec<f32>,        // running residual scratch (t, e)
-    proj: Vec<f32>,     // projection scratch (t, e)
-    mlp_act: Vec<f32>,  // GELU output scratch (t, mlp)
-    hf: Vec<f32>,       // final LN output scratch (t, e)
     blocks: Vec<BlockTape>,
     x_final: Vec<f32>,  // (t, e) input of the final LN
     pooled: Vec<f32>,   // (e)
@@ -183,10 +179,6 @@ impl Tape {
         Tape {
             t: 0,
             mask: vec![false; t],
-            x: vec![0.0; t * e],
-            proj: vec![0.0; t * e],
-            mlp_act: vec![0.0; t * cfg.mlp_dim],
-            hf: vec![0.0; t * e],
             blocks: (0..cfg.layers).map(|_| BlockTape::new(cfg)).collect(),
             x_final: vec![0.0; t * e],
             pooled: vec![0.0; e],
@@ -203,14 +195,6 @@ impl Tape {
 /// reused across rows and blocks.
 struct GradScratch {
     fs: FftScratch,
-    // forward attention scratch (mirrors model::Workspace's bins)
-    br: Vec<f64>,
-    bi: Vec<f64>,
-    vfr: Vec<f64>,
-    vfi: Vec<f64>,
-    ur: Vec<f64>,
-    ui: Vec<f64>,
-    scores: Vec<f64>, // (t)
     // backward activation gradients
     gx: Vec<f64>,    // (t, e) running residual gradient
     gtmp: Vec<f64>,  // (t, e)
@@ -244,13 +228,6 @@ impl GradScratch {
         let kb = num_bins(hd);
         GradScratch {
             fs: FftScratch::new(hd),
-            br: vec![0.0; kb],
-            bi: vec![0.0; kb],
-            vfr: vec![0.0; kb],
-            vfi: vec![0.0; kb],
-            ur: vec![0.0; kb],
-            ui: vec![0.0; kb],
-            scores: vec![0.0; t],
             gx: vec![0.0; t * e],
             gtmp: vec![0.0; t * e],
             gq: vec![0.0; t * e],
@@ -519,179 +496,112 @@ fn softmax_ce(logits: &[f32], label: usize, g: &mut [f64]) -> (f64, bool) {
 // Forward with tape
 // ---------------------------------------------------------------------------
 
-/// Multi-head HRR attention for one block, recording v̂, the softmax
-/// weights and the β spectrum on the tape. The arithmetic is exactly
-/// `model::hrr_attention`'s, so taped logits match `forward_row`
-/// bit-for-bit (pinned by a test).
-fn attention_tape(
-    cfg: &HrrConfig,
-    bt: &mut BlockTape,
-    mask: &[bool],
-    t: usize,
-    gws: &mut GradScratch,
-) {
-    let e = cfg.embed;
-    let hd = cfg.head_dim();
-    let kb = num_bins(hd);
-    let BlockTape { q, k, v, attn, vhat, w, beta_re, beta_im, .. } = bt;
-    let GradScratch { fs, br, bi, vfr, vfi, ur, ui, scores, .. } = gws;
-    attn[..t * e].fill(0.0);
-    for head in 0..cfg.heads {
-        let off = head * hd;
-        br.fill(0.0);
-        bi.fill(0.0);
-        for i in 0..t {
-            if !mask[i] {
-                continue;
-            }
-            fs.rfft(&v[i * e + off..i * e + off + hd]);
-            vfr.copy_from_slice(&fs.re[..kb]);
-            vfi.copy_from_slice(&fs.im[..kb]);
-            fs.rfft(&k[i * e + off..i * e + off + hd]);
-            for j in 0..kb {
-                br[j] += fs.re[j] * vfr[j] - fs.im[j] * vfi[j];
-                bi[j] += fs.re[j] * vfi[j] + fs.im[j] * vfr[j];
-            }
-        }
-        beta_re[head * kb..(head + 1) * kb].copy_from_slice(br);
-        beta_im[head * kb..(head + 1) * kb].copy_from_slice(bi);
-        let mut smax = f64::NEG_INFINITY;
-        for i in 0..t {
-            if !mask[i] {
-                continue;
-            }
-            fs.rfft(&q[i * e + off..i * e + off + hd]);
-            for j in 0..kb {
-                let d = fs.re[j] * fs.re[j] + fs.im[j] * fs.im[j] + EPS64;
-                let ir = fs.re[j] / d;
-                let ii = -fs.im[j] / d;
-                ur[j] = br[j] * ir - bi[j] * ii;
-                ui[j] = br[j] * ii + bi[j] * ir;
-            }
-            fs.irfft(ur, ui);
-            let base = i * e + off;
-            let vv = &v[base..base + hd];
-            let mut num = 0.0f64;
-            let mut nv = 0.0f64;
-            let mut nh = 0.0f64;
-            for ((&a, &b), vh) in
-                vv.iter().zip(fs.re[..hd].iter()).zip(vhat[base..base + hd].iter_mut())
-            {
-                *vh = b;
-                num += a as f64 * b;
-                nv += a as f64 * a as f64;
-                nh += b * b;
-            }
-            scores[i] = num / (nv.sqrt() * nh.sqrt() + EPS64);
-            smax = smax.max(scores[i]);
-        }
-        let mut denom = 0.0f64;
-        for i in 0..t {
-            if mask[i] {
-                scores[i] = (scores[i] - smax).exp();
-                denom += scores[i];
-            }
-        }
-        for i in 0..t {
-            w[head * cfg.seq_len + i] = 0.0;
-            if !mask[i] {
-                continue;
-            }
-            let wi = scores[i] / denom;
-            w[head * cfg.seq_len + i] = wi;
-            let base = i * e + off;
-            for (o, &x) in attn[base..base + hd].iter_mut().zip(&v[base..base + hd]) {
-                *o = (wi * x as f64) as f32;
-            }
-        }
+/// [`ForwardTap`] adapter that records every intermediate backward
+/// needs onto a [`Tape`]. With this, `model::forward_row_with` *is* the
+/// taped forward — predict and train share one forward implementation,
+/// so the taped logits are bit-identical to `forward_row`'s by
+/// construction (still pinned by a test).
+struct TapeRecorder<'a> {
+    tape: &'a mut Tape,
+    e: usize,
+    hd: usize,
+    seq_len: usize,
+}
+
+impl ForwardTap for TapeRecorder<'_> {
+    fn mask(&mut self, t: usize, mask: &[bool]) {
+        self.tape.t = t;
+        self.tape.mask[..t].copy_from_slice(mask);
+    }
+
+    fn block_begin(&mut self, layer: usize, x_in: &[f32]) {
+        self.tape.blocks[layer].x_in[..x_in.len()].copy_from_slice(x_in);
+    }
+
+    fn ln1(&mut self, layer: usize, h1: &[f32]) {
+        self.tape.blocks[layer].h1[..h1.len()].copy_from_slice(h1);
+    }
+
+    fn qkv(&mut self, layer: usize, q: &[f32], k: &[f32], v: &[f32]) {
+        let bt = &mut self.tape.blocks[layer];
+        bt.q[..q.len()].copy_from_slice(q);
+        bt.k[..k.len()].copy_from_slice(k);
+        bt.v[..v.len()].copy_from_slice(v);
+    }
+
+    fn beta(&mut self, layer: usize, head: usize, br: &[f64], bi: &[f64]) {
+        // β arrives fully accumulated; also clear this head's weight
+        // row — masked positions keep w = 0 (the forward never fires
+        // `weight` for them).
+        let t = self.tape.t;
+        let kb = br.len();
+        let bt = &mut self.tape.blocks[layer];
+        bt.beta_re[head * kb..(head + 1) * kb].copy_from_slice(br);
+        bt.beta_im[head * kb..(head + 1) * kb].copy_from_slice(bi);
+        bt.w[head * self.seq_len..head * self.seq_len + t].fill(0.0);
+    }
+
+    fn vhat(&mut self, layer: usize, head: usize, pos: usize, vhat: &[f64]) {
+        let base = pos * self.e + head * self.hd;
+        self.tape.blocks[layer].vhat[base..base + self.hd].copy_from_slice(vhat);
+    }
+
+    fn weight(&mut self, layer: usize, head: usize, pos: usize, w: f64) {
+        self.tape.blocks[layer].w[head * self.seq_len + pos] = w;
+    }
+
+    fn attn(&mut self, layer: usize, attn: &[f32]) {
+        self.tape.blocks[layer].attn[..attn.len()].copy_from_slice(attn);
+    }
+
+    fn attn_residual(&mut self, layer: usize, x_mid: &[f32]) {
+        self.tape.blocks[layer].x_mid[..x_mid.len()].copy_from_slice(x_mid);
+    }
+
+    fn ln2(&mut self, layer: usize, h2: &[f32]) {
+        self.tape.blocks[layer].h2[..h2.len()].copy_from_slice(h2);
+    }
+
+    fn mlp_pre(&mut self, layer: usize, mlp_pre: &[f32]) {
+        self.tape.blocks[layer].mlp_pre[..mlp_pre.len()].copy_from_slice(mlp_pre);
+    }
+
+    fn final_input(&mut self, x_final: &[f32]) {
+        self.tape.x_final[..x_final.len()].copy_from_slice(x_final);
+    }
+
+    fn pooled(&mut self, pooled: &[f32], n_valid: f64) {
+        self.tape.pooled.copy_from_slice(pooled);
+        self.tape.n_valid = n_valid;
+    }
+
+    fn head_pre(&mut self, head_pre: &[f32]) {
+        self.tape.head_pre.copy_from_slice(head_pre);
+    }
+
+    fn head_act(&mut self, head_act: &[f32]) {
+        self.tape.head_act.copy_from_slice(head_act);
+    }
+
+    fn logits(&mut self, logits: &[f32]) {
+        self.tape.logits.copy_from_slice(logits);
     }
 }
 
-/// Forward one row, keeping every intermediate on the tape. Same
-/// arithmetic as `model::forward_row`.
+/// Forward one row via `model::forward_row_with`, recording every
+/// intermediate backward needs on `tape` (logits land on the tape and
+/// in `logits`). `ws` is the same per-worker scratch predict uses.
 fn forward_row_tape(
     cfg: &HrrConfig,
     rp: &ResolvedParams<'_>,
     ids: &[i32],
     tape: &mut Tape,
-    gws: &mut GradScratch,
+    ws: &mut Workspace,
+    logits: &mut [f32],
 ) {
-    let e = cfg.embed;
-    let mlp = cfg.mlp_dim;
-    let t = ids.len();
-    tape.t = t;
-
-    for (m, &id) in tape.mask.iter_mut().zip(ids) {
-        *m = id != PAD_ID;
-    }
-
-    for (i, &id) in ids.iter().enumerate() {
-        let row = (id.max(0) as usize).min(cfg.vocab - 1);
-        tape.x[i * e..(i + 1) * e].copy_from_slice(&rp.embed[row * e..(row + 1) * e]);
-        match rp.pos {
-            Some(tbl) => {
-                for (xv, &pv) in
-                    tape.x[i * e..(i + 1) * e].iter_mut().zip(&tbl[i * e..(i + 1) * e])
-                {
-                    *xv += pv;
-                }
-            }
-            None => {
-                for (j, xv) in tape.x[i * e..(i + 1) * e].iter_mut().enumerate() {
-                    *xv += sinusoid(i, j, e);
-                }
-            }
-        }
-    }
-
-    for (b, bp) in rp.blocks.iter().enumerate() {
-        let bt = &mut tape.blocks[b];
-        bt.x_in[..t * e].copy_from_slice(&tape.x[..t * e]);
-        layernorm_into(&bt.x_in[..t * e], bp.ln1_scale, bp.ln1_bias, e, &mut bt.h1[..t * e]);
-        matmul_into(&bt.h1[..t * e], bp.query, t, e, e, &mut bt.q[..t * e]);
-        matmul_into(&bt.h1[..t * e], bp.key, t, e, e, &mut bt.k[..t * e]);
-        matmul_into(&bt.h1[..t * e], bp.value, t, e, e, &mut bt.v[..t * e]);
-        attention_tape(cfg, bt, &tape.mask[..t], t, gws);
-        matmul_into(&bt.attn[..t * e], bp.output, t, e, e, &mut tape.proj[..t * e]);
-        for (xv, &yv) in tape.x[..t * e].iter_mut().zip(&tape.proj[..t * e]) {
-            *xv += yv;
-        }
-        bt.x_mid[..t * e].copy_from_slice(&tape.x[..t * e]);
-        layernorm_into(&bt.x_mid[..t * e], bp.ln2_scale, bp.ln2_bias, e, &mut bt.h2[..t * e]);
-        matmul_into(&bt.h2[..t * e], bp.fc1, t, e, mlp, &mut bt.mlp_pre[..t * mlp]);
-        add_bias(&mut bt.mlp_pre[..t * mlp], bp.fc1_bias, mlp);
-        tape.mlp_act[..t * mlp].copy_from_slice(&bt.mlp_pre[..t * mlp]);
-        gelu(&mut tape.mlp_act[..t * mlp]);
-        matmul_into(&tape.mlp_act[..t * mlp], bp.fc2, t, mlp, e, &mut tape.proj[..t * e]);
-        add_bias(&mut tape.proj[..t * e], bp.fc2_bias, e);
-        for (xv, &mv) in tape.x[..t * e].iter_mut().zip(&tape.proj[..t * e]) {
-            *xv += mv;
-        }
-    }
-
-    tape.x_final[..t * e].copy_from_slice(&tape.x[..t * e]);
-    layernorm_into(&tape.x_final[..t * e], rp.ln_f_scale, rp.ln_f_bias, e, &mut tape.hf[..t * e]);
-
-    let n_valid = tape.mask[..t].iter().filter(|&&m| m).count().max(1) as f64;
-    tape.n_valid = n_valid;
-    for (j, pv) in tape.pooled.iter_mut().enumerate() {
-        let mut s = 0.0f64;
-        for i in 0..t {
-            if tape.mask[i] {
-                s += tape.hf[i * e + j] as f64;
-            }
-        }
-        *pv = (s / n_valid) as f32;
-    }
-
-    matmul_into(&tape.pooled, rp.head1, 1, e, mlp, &mut tape.head_pre);
-    add_bias(&mut tape.head_pre, rp.head1_bias, mlp);
-    tape.head_act.copy_from_slice(&tape.head_pre);
-    for v in tape.head_act.iter_mut() {
-        *v = v.max(0.0); // relu
-    }
-    matmul_into(&tape.head_act, rp.head2, 1, mlp, cfg.classes, &mut tape.logits);
-    add_bias(&mut tape.logits, rp.head2_bias, cfg.classes);
+    let mut tap =
+        TapeRecorder { tape, e: cfg.embed, hd: cfg.head_dim(), seq_len: cfg.seq_len };
+    forward_row_with(cfg, rp, ids, ws, logits, &mut tap);
 }
 
 // ---------------------------------------------------------------------------
@@ -1167,6 +1077,9 @@ where
 /// worker budget.
 pub struct NativeTrainSession {
     cfg: HrrConfig,
+    /// Program base this session was created from (empty when built
+    /// from an explicit config) — recorded as artifact provenance.
+    base: String,
     hyper: TrainHyper,
     params: ParamStore,
     m: ParamStore,
@@ -1186,7 +1099,9 @@ impl NativeTrainSession {
     /// the native preset tables and seed-initialize parameters; the LR
     /// schedule picks the task's decay rate.
     pub fn create(base: &str, seed: u32) -> Result<NativeTrainSession> {
-        Self::from_config(HrrConfig::from_base(base)?, seed)
+        let mut sess = Self::from_config(HrrConfig::from_base(base)?, seed)?;
+        sess.base = base.to_string();
+        Ok(sess)
     }
 
     /// Seed-initialize parameters for an explicit config.
@@ -1206,6 +1121,7 @@ impl NativeTrainSession {
         let hyper = TrainHyper::for_task(&cfg.task);
         Ok(NativeTrainSession {
             cfg,
+            base: String::new(),
             hyper,
             params,
             m,
@@ -1319,10 +1235,12 @@ impl NativeTrainSession {
         let run_rows = |row0: usize, chunk: &mut [RowOut]| {
             let mut tape = Tape::new(cfg);
             let mut gws = GradScratch::new(cfg);
+            let mut ws = Workspace::new(cfg);
+            let mut logits = vec![0.0f32; cfg.classes];
             for (off, slot) in chunk.iter_mut().enumerate() {
                 let r = row0 + off;
                 let row_ids = &data[r * t..(r + 1) * t];
-                forward_row_tape(cfg, &rp, row_ids, &mut tape, &mut gws);
+                forward_row_tape(cfg, &rp, row_ids, &mut tape, &mut ws, &mut logits);
                 let (nll, correct) = backward_row(
                     cfg,
                     &rp,
@@ -1444,21 +1362,48 @@ impl NativeTrainSession {
         }
     }
 
-    /// Save parameters as a checkpoint (same HRRCKPT1 format the
-    /// artifact trainer writes; the engine can serve it via
-    /// `bucket_with_params`).
+    /// Save parameters as a **versioned artifact**: `HRRART1` manifest
+    /// (config hash, per-tensor checksums, provenance) wrapping the
+    /// HRRCKPT1 payload — what `Engine::reload` and `POST /admin/reload`
+    /// consume. Every checkpoint this session writes verifies on open.
     pub fn save(&self, path: &Path) -> Result<()> {
-        self.params.save(path)
+        self.save_artifact(path, None)
     }
 
-    /// Restore parameters from a checkpoint. The whole optimizer state
-    /// resets with them: Adam moments to zero **and** the step counter
-    /// to 0, so bias correction and the LR schedule restart consistently
-    /// with the fresh moments (stale `step` would make the first
+    /// [`NativeTrainSession::save`] with the final eval (loss, accuracy)
+    /// recorded as manifest provenance.
+    pub fn save_artifact(&self, path: &Path, final_eval: Option<(f32, f32)>) -> Result<()> {
+        let provenance = Provenance {
+            task: self.cfg.task.clone(),
+            base: self.base.clone(),
+            step: self.step,
+            final_eval,
+        };
+        Artifact::write(path, &self.cfg, &self.params, provenance)?;
+        Ok(())
+    }
+
+    /// Restore parameters from a checkpoint — a versioned `HRRART1`
+    /// artifact (manifest + checksums fully verified; corruption
+    /// surfaces as a typed [`crate::model::ArtifactError`]) or a legacy
+    /// bare HRRCKPT1 payload. The whole optimizer state resets with
+    /// them: Adam moments to zero **and** the step counter to 0, so
+    /// bias correction and the LR schedule restart consistently with
+    /// the fresh moments (stale `step` would make the first
     /// post-restore update ~3× too large and pin LR at the decayed
     /// floor).
     pub fn restore(&mut self, path: &Path) -> Result<()> {
-        let loaded = ParamStore::load(path)?;
+        let bytes = std::fs::read(path)
+            .with_context(|| format!("read checkpoint {}", path.display()))?;
+        let loaded = if Artifact::sniff(&bytes) {
+            Artifact::open_bytes(&bytes)
+                .with_context(|| format!("verify artifact {}", path.display()))?
+                .params
+        } else {
+            // legacy bare HRRCKPT1 checkpoint (pre-artifact saves)
+            ParamStore::read_from(&mut std::io::Cursor::new(&bytes[..]))
+                .with_context(|| format!("parse checkpoint {}", path.display()))?
+        };
         validate_native_params(&self.cfg, &loaded)?;
         self.params = loaded;
         self.m = zeros_matching(&self.params);
@@ -1476,17 +1421,24 @@ fn zeros_matching(store: &ParamStore) -> ParamStore {
     }
 }
 
-impl Session for NativeTrainSession {
-    fn params(&self) -> &ParamStore {
+impl NativeTrainSession {
+    /// The current parameters (the live training state, not a copy).
+    pub fn params(&self) -> &ParamStore {
         &self.params
     }
+}
 
+impl Session for NativeTrainSession {
     fn batch(&self) -> usize {
         self.cfg.batch
     }
 
     fn seq_len(&self) -> usize {
         self.cfg.seq_len
+    }
+
+    fn param_scalars(&self) -> usize {
+        self.params.total_scalars()
     }
 }
 
@@ -1510,6 +1462,10 @@ impl Trainable for NativeTrainSession {
     fn restore(&mut self, path: &Path) -> Result<()> {
         NativeTrainSession::restore(self, path)
     }
+
+    fn save_artifact(&self, path: &Path, final_eval: Option<(f32, f32)>) -> Result<()> {
+        NativeTrainSession::save_artifact(self, path, final_eval)
+    }
 }
 
 #[cfg(test)]
@@ -1517,7 +1473,7 @@ mod tests {
     use std::sync::Arc;
 
     use super::*;
-    use crate::hrr::NativeSession;
+    use crate::hrr::{NativeSession, PAD_ID};
     use crate::util::pool::WorkerPool;
 
     /// pow2 head dim (radix-2 FFT path), fixed sinusoid positions.
@@ -1580,14 +1536,16 @@ mod tests {
             let data = ids.as_i32().unwrap();
             let t = cfg.seq_len;
             let mut tape = Tape::new(&cfg);
-            let mut gws = GradScratch::new(&cfg);
+            let mut tape_ws = Workspace::new(&cfg);
             let mut ws = Workspace::new(&cfg);
+            let mut got = vec![0.0f32; cfg.classes];
             let mut want = vec![0.0f32; cfg.classes];
             for r in 0..2 {
                 let row = &data[r * t..(r + 1) * t];
-                forward_row_tape(&cfg, &rp, row, &mut tape, &mut gws);
+                forward_row_tape(&cfg, &rp, row, &mut tape, &mut tape_ws, &mut got);
                 forward_row(&cfg, &rp, row, &mut ws, &mut want);
                 assert_eq!(tape.logits, want, "taped forward must be bit-identical");
+                assert_eq!(got, want, "taped forward's own logits must match too");
             }
         }
     }
@@ -1779,19 +1737,37 @@ mod tests {
         std::fs::create_dir_all(&dir).unwrap();
         let path = dir.join("native.ckpt");
         sess.save(&path).unwrap();
-        // the serving session accepts the trained checkpoint…
-        let store = ParamStore::load(&path).unwrap();
-        let serve = NativeSession::with_params(cfg.clone(), store).unwrap();
+        // save writes a verified artifact: manifest + checksums wrap the
+        // payload, and the serving session accepts the parameters
+        let art = crate::model::Artifact::open(&path).unwrap();
+        assert_eq!(art.manifest.provenance.step, 2);
+        let serve = NativeSession::with_params(cfg.clone(), art.params).unwrap();
         let logits = serve.predict(&ids).unwrap();
         assert!(logits.as_f32().unwrap().iter().all(|v| v.is_finite()));
-        // …and restore resets the optimizer but keeps the parameters
+        // restore resets the optimizer but keeps the parameters
         let trained = sess.params().tensors.clone();
-        let mut fresh = NativeTrainSession::from_config(cfg, 1).unwrap();
+        let mut fresh = NativeTrainSession::from_config(cfg.clone(), 1).unwrap();
         fresh.restore(&path).unwrap();
         assert_eq!(fresh.params().tensors, trained);
         // optimizer state (incl. the step counter driving bias
         // correction + LR) restarts on restore
         sess.restore(&path).unwrap();
         assert_eq!(sess.step(), 0, "restore must reset the optimizer step");
+        // legacy bare HRRCKPT1 checkpoints still restore
+        let legacy = dir.join("native_legacy.ckpt");
+        sess.params().save(&legacy).unwrap();
+        let mut old = NativeTrainSession::from_config(cfg, 4).unwrap();
+        old.restore(&legacy).unwrap();
+        assert_eq!(old.params().tensors, trained);
+        // a flipped payload byte must be caught by the checksums
+        let mut bytes = std::fs::read(&path).unwrap();
+        let last = bytes.len() - 1;
+        bytes[last] ^= 0x40;
+        std::fs::write(&path, &bytes).unwrap();
+        let err = sess.restore(&path).unwrap_err();
+        assert!(
+            format!("{err:#}").contains("checksum"),
+            "corruption must surface as a checksum error, got: {err:#}"
+        );
     }
 }

@@ -53,7 +53,7 @@ pub mod plan;
 pub use config::HrrConfig;
 pub use grad::{NativeTrainSession, TrainHyper};
 pub use model::{
-    init_native_params, param_specs, NativeSession, RowScheduler, StreamState, StreamWorkspace,
-    PAD_ID,
+    init_native_params, param_specs, NativeSession, ParamSlot, ParamVersion, RowScheduler,
+    StreamState, StreamWorkspace, PAD_ID,
 };
 pub use plan::FftPlan;

@@ -39,7 +39,7 @@
 //! GELU uses the tanh approximation (the `jax.nn.gelu` default the
 //! reference model was exported with).
 
-use std::sync::Arc;
+use std::sync::{Arc, RwLock};
 
 use anyhow::{Context, Result};
 
@@ -391,8 +391,16 @@ fn position_score(
 
 /// Multi-head HRR attention (Eqs. 1-4) for one sequence: reads
 /// `ws.q/k/v` (t, e) and `ws.mask`, writes the merged mix to `ws.attn`.
-/// All scratch comes from `ws` — nothing allocates.
-fn hrr_attention(cfg: &HrrConfig, ws: &mut Workspace, t: usize) {
+/// All scratch comes from `ws` — nothing allocates. The tap observes β,
+/// v̂ and the cleanup weights as they are produced (no-ops for
+/// [`NullTap`]); `layer` only labels those observations.
+fn hrr_attention<T: ForwardTap>(
+    cfg: &HrrConfig,
+    ws: &mut Workspace,
+    t: usize,
+    layer: usize,
+    tap: &mut T,
+) {
     let e = cfg.embed;
     let hd = cfg.head_dim();
     let kbins = num_bins(hd);
@@ -411,9 +419,12 @@ fn hrr_attention(cfg: &HrrConfig, ws: &mut Workspace, t: usize) {
             let s = i * e + off;
             accumulate_beta(fs, vfr, vfi, br, bi, &k[s..s + hd], &v[s..s + hd], kbins);
         }
+        tap.beta(layer, head, br, bi);
         // Eq. 2+3 — v̂_t = q_t† ⊛ β (stabilized exact inverse), score =
         // cos(v_t, v̂_t). Masked positions get weight 0 (their e^{-1e9}
-        // underflows to exactly 0 in the reference's softmax).
+        // underflows to exactly 0 in the reference's softmax). After
+        // `position_score` the FFT scratch still holds v̂ — that is what
+        // the tap records.
         let mut smax = f64::NEG_INFINITY;
         for i in 0..t {
             if !mask[i] {
@@ -421,6 +432,7 @@ fn hrr_attention(cfg: &HrrConfig, ws: &mut Workspace, t: usize) {
             }
             let s = i * e + off;
             scores[i] = position_score(fs, ur, ui, br, bi, &q[s..s + hd], &v[s..s + hd], kbins, hd);
+            tap.vhat(layer, head, i, &fs.re[..hd]);
             smax = smax.max(scores[i]);
         }
         // Eq. 4 — softmax cleanup over T, then re-weight the values.
@@ -436,6 +448,7 @@ fn hrr_attention(cfg: &HrrConfig, ws: &mut Workspace, t: usize) {
                 continue;
             }
             let w = scores[i] / denom;
+            tap.weight(layer, head, i, w);
             let vv = &v[i * e + off..i * e + off + hd];
             for (o, &x) in attn[i * e + off..i * e + off + hd].iter_mut().zip(vv) {
                 *o = (w * x as f64) as f32;
@@ -556,6 +569,122 @@ impl<'a> ResolvedParams<'a> {
     }
 }
 
+// ---------------------------------------------------------------------------
+// Versioned parameter slot (hot-reload seam)
+// ---------------------------------------------------------------------------
+
+/// One immutable generation of model weights plus its monotonically
+/// increasing version number. Once published through a [`ParamSlot`] the
+/// store is never mutated again — readers pin a generation with one
+/// `Arc` clone and keep using it for as long as they like (a whole
+/// predict batch, a whole multi-pass stream) while newer generations
+/// flow past them.
+pub struct ParamVersion {
+    /// Monotonic generation counter (the engine starts at 1 and bumps on
+    /// every accepted reload; 0 is reserved for "unversioned").
+    pub version: u64,
+    pub store: ParamStore,
+}
+
+/// The swappable cell weights live behind: an `Arc`-swap over
+/// [`ParamVersion`] that [`NativeSession`] reads and `Engine::reload`
+/// writes.
+///
+/// The concurrency contract is deliberately tiny:
+///
+/// * [`ParamSlot::pin`] takes the read lock for one `Arc` clone — a few
+///   nanoseconds, **once per batch/stream**, never per row. All forward
+///   arithmetic runs against the pinned generation with zero
+///   synchronization.
+/// * [`ParamSlot::install`] swaps the `Arc` under the write lock. It
+///   never blocks on in-flight forward work (that work holds clones,
+///   not the lock), so a reload is "zero-downtime by construction":
+///   batches that pinned before the swap finish on the old weights,
+///   batches that pin after get the new ones, and nothing in between
+///   can observe a torn store.
+pub struct ParamSlot {
+    inner: RwLock<Arc<ParamVersion>>,
+}
+
+impl ParamSlot {
+    /// Wrap a store as generation `version`.
+    pub fn new(store: ParamStore, version: u64) -> ParamSlot {
+        ParamSlot { inner: RwLock::new(Arc::new(ParamVersion { version, store })) }
+    }
+
+    /// Pin the current generation: one read-locked `Arc` clone. Callers
+    /// hold the returned `Arc` for the duration of a batch or stream
+    /// pass, so concurrent [`ParamSlot::install`]s can never change the
+    /// weights under running arithmetic.
+    pub fn pin(&self) -> Arc<ParamVersion> {
+        Arc::clone(&self.inner.read().expect("param slot poisoned"))
+    }
+
+    /// Publish a new generation. In-flight pins keep the old `Arc`
+    /// alive; the old store drops when its last pinner finishes.
+    pub fn install(&self, store: ParamStore, version: u64) {
+        *self.inner.write().expect("param slot poisoned") =
+            Arc::new(ParamVersion { version, store });
+    }
+
+    /// The currently published generation number.
+    pub fn version(&self) -> u64 {
+        self.inner.read().expect("param slot poisoned").version
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Forward observation tap (shared forward for predict + training tape)
+// ---------------------------------------------------------------------------
+
+/// Observation hooks the unified forward pass fires as it runs. The
+/// inference path installs [`NullTap`] (every hook an empty inline
+/// default — the optimizer erases the calls, so `forward_row` compiles
+/// to exactly the pre-unification code); the training path installs a
+/// recorder that copies each intermediate onto its autodiff tape
+/// (`hrr/grad.rs`). Hooks only *read* buffers the forward just wrote —
+/// they can never change the arithmetic, which is what keeps taped and
+/// plain logits bit-identical by construction.
+pub(crate) trait ForwardTap {
+    /// PAD mask for the row, right after embedding (t positions).
+    fn mask(&mut self, _t: usize, _mask: &[bool]) {}
+    /// Residual stream entering block `layer` (t·e).
+    fn block_begin(&mut self, _layer: usize, _x_in: &[f32]) {}
+    /// ln1 output of block `layer` (t·e).
+    fn ln1(&mut self, _layer: usize, _h1: &[f32]) {}
+    /// q/k/v projections of block `layer` (t·e each).
+    fn qkv(&mut self, _layer: usize, _q: &[f32], _k: &[f32], _v: &[f32]) {}
+    /// One head's fully accumulated β spectrum (Eq. 1; kbins each).
+    fn beta(&mut self, _layer: usize, _head: usize, _br: &[f64], _bi: &[f64]) {}
+    /// One position's unbound v̂ for one head (Eq. 2; head_dim values).
+    fn vhat(&mut self, _layer: usize, _head: usize, _pos: usize, _vhat: &[f64]) {}
+    /// One unmasked position's softmax cleanup weight (Eq. 4).
+    fn weight(&mut self, _layer: usize, _head: usize, _pos: usize, _w: f64) {}
+    /// Merged w·v attention mix of block `layer` (t·e).
+    fn attn(&mut self, _layer: usize, _attn: &[f32]) {}
+    /// Residual stream after the attention residual add (t·e).
+    fn attn_residual(&mut self, _layer: usize, _x_mid: &[f32]) {}
+    /// ln2 output of block `layer` (t·e).
+    fn ln2(&mut self, _layer: usize, _h2: &[f32]) {}
+    /// fc1 output + bias, pre-GELU (t·mlp_dim).
+    fn mlp_pre(&mut self, _layer: usize, _mlp_pre: &[f32]) {}
+    /// Residual stream entering the final LayerNorm (t·e).
+    fn final_input(&mut self, _x_final: &[f32]) {}
+    /// Masked mean-pool output (e values) and the valid-position count.
+    fn pooled(&mut self, _pooled: &[f32], _n_valid: f64) {}
+    /// Classifier hidden pre-ReLU (mlp_dim).
+    fn head_pre(&mut self, _head_pre: &[f32]) {}
+    /// Classifier hidden post-ReLU (mlp_dim).
+    fn head_act(&mut self, _head_act: &[f32]) {}
+    /// Final logits (classes).
+    fn logits(&mut self, _logits: &[f32]) {}
+}
+
+/// The inference tap: observes nothing, costs nothing.
+pub(crate) struct NullTap;
+
+impl ForwardTap for NullTap {}
+
 /// Token embedding + positional values for `ids` occupying absolute
 /// positions `p0..p0 + ids.len()`, written to `ws.x` (and the PAD mask
 /// to `ws.mask`). Out-of-range ids clamp like the XLA gather. The
@@ -599,27 +728,52 @@ pub(crate) fn forward_row(
     ws: &mut Workspace,
     out: &mut [f32],
 ) {
+    forward_row_with(cfg, rp, ids, ws, out, &mut NullTap)
+}
+
+/// The one parameterized forward pass (ROADMAP item 6): [`forward_row`]
+/// is this with [`NullTap`] (hooks vanish under monomorphization), the
+/// training tape is this with a recording tap (`hrr/grad.rs`). One body
+/// means the arithmetic literally cannot drift between inference and
+/// training — taped logits are bit-identical to served logits because
+/// they are the same instructions.
+pub(crate) fn forward_row_with<T: ForwardTap>(
+    cfg: &HrrConfig,
+    rp: &ResolvedParams<'_>,
+    ids: &[i32],
+    ws: &mut Workspace,
+    out: &mut [f32],
+    tap: &mut T,
+) {
     let e = cfg.embed;
     let t = ids.len();
     debug_assert_eq!(out.len(), cfg.classes);
 
     embed_positions(cfg, rp, ids, 0, ws);
+    tap.mask(t, &ws.mask[..t]);
 
-    for bp in &rp.blocks {
+    for (li, bp) in rp.blocks.iter().enumerate() {
         // attention sub-block (pre-LN, residual)
+        tap.block_begin(li, &ws.x[..t * e]);
         layernorm_into(&ws.x[..t * e], bp.ln1_scale, bp.ln1_bias, e, &mut ws.h[..t * e]);
+        tap.ln1(li, &ws.h[..t * e]);
         matmul_into(&ws.h[..t * e], bp.query, t, e, e, &mut ws.q[..t * e]);
         matmul_into(&ws.h[..t * e], bp.key, t, e, e, &mut ws.k[..t * e]);
         matmul_into(&ws.h[..t * e], bp.value, t, e, e, &mut ws.v[..t * e]);
-        hrr_attention(cfg, ws, t);
+        tap.qkv(li, &ws.q[..t * e], &ws.k[..t * e], &ws.v[..t * e]);
+        hrr_attention(cfg, ws, t, li, tap);
+        tap.attn(li, &ws.attn[..t * e]);
         matmul_into(&ws.attn[..t * e], bp.output, t, e, e, &mut ws.proj[..t * e]);
         for (xv, &yv) in ws.x[..t * e].iter_mut().zip(&ws.proj[..t * e]) {
             *xv += yv;
         }
+        tap.attn_residual(li, &ws.x[..t * e]);
         // MLP sub-block (pre-LN, residual)
         layernorm_into(&ws.x[..t * e], bp.ln2_scale, bp.ln2_bias, e, &mut ws.h[..t * e]);
+        tap.ln2(li, &ws.h[..t * e]);
         matmul_into(&ws.h[..t * e], bp.fc1, t, e, cfg.mlp_dim, &mut ws.mlp[..t * cfg.mlp_dim]);
         add_bias(&mut ws.mlp[..t * cfg.mlp_dim], bp.fc1_bias, cfg.mlp_dim);
+        tap.mlp_pre(li, &ws.mlp[..t * cfg.mlp_dim]);
         gelu(&mut ws.mlp[..t * cfg.mlp_dim]);
         matmul_into(&ws.mlp[..t * cfg.mlp_dim], bp.fc2, t, cfg.mlp_dim, e, &mut ws.proj[..t * e]);
         add_bias(&mut ws.proj[..t * e], bp.fc2_bias, e);
@@ -628,6 +782,7 @@ pub(crate) fn forward_row(
         }
     }
 
+    tap.final_input(&ws.x[..t * e]);
     layernorm_into(&ws.x[..t * e], rp.ln_f_scale, rp.ln_f_bias, e, &mut ws.h[..t * e]);
 
     // masked mean-pool over T (model.py logits_fn)
@@ -641,14 +796,18 @@ pub(crate) fn forward_row(
         }
         *pv = (s / n_valid) as f32;
     }
+    tap.pooled(&ws.pooled, n_valid);
 
     matmul_into(&ws.pooled, rp.head1, 1, e, cfg.mlp_dim, &mut ws.head);
     add_bias(&mut ws.head, rp.head1_bias, cfg.mlp_dim);
+    tap.head_pre(&ws.head);
     for v in ws.head.iter_mut() {
         *v = v.max(0.0); // relu
     }
+    tap.head_act(&ws.head);
     matmul_into(&ws.head, rp.head2, 1, cfg.mlp_dim, cfg.classes, out);
     add_bias(out, rp.head2_bias, cfg.classes);
+    tap.logits(out);
 }
 
 // ---------------------------------------------------------------------------
@@ -735,6 +894,11 @@ pub struct StreamState {
     total: usize,
     /// current pass index, `0..=3·layers` (`3·layers + 1` ⇒ finalized)
     pass: usize,
+    /// The weight generation this stream opened on. Every pass resolves
+    /// from this pin, so an `Engine::reload` mid-stream cannot mix
+    /// generations within one stream — it finishes on its opening
+    /// weights by construction and only *new* streams see the swap.
+    pinned: Option<Arc<ParamVersion>>,
 }
 
 impl StreamState {
@@ -747,7 +911,13 @@ impl StreamState {
             pos: 0,
             total: 0,
             pass: 0,
+            pinned: None,
         }
+    }
+
+    /// The weight generation this stream is pinned to (0 = unpinned).
+    pub fn model_version(&self) -> u64 {
+        self.pinned.as_ref().map_or(0, |p| p.version)
     }
 
     /// Total passes the chunked forward makes over the tokens:
@@ -1061,9 +1231,17 @@ impl std::fmt::Debug for RowScheduler {
 /// counterpart of [`crate::model::PredictSession`], usable anywhere a
 /// [`Predictor`] is (engine executors, benches, examples) with **no**
 /// AOT artifacts and no PJRT runtime.
+///
+/// Weights live behind a shared, versioned [`ParamSlot`] rather than
+/// being owned by the session: standalone constructors wrap a private
+/// slot at generation 1 (nothing changes for them), while engine
+/// executors pass the engine-owned slot via
+/// [`NativeSession::with_slot`] so `Engine::reload` can swap weights
+/// under every bucket at once. Each predict call pins one generation
+/// for its whole batch, so a swap can never tear a batch.
 pub struct NativeSession {
     cfg: HrrConfig,
-    params: ParamStore,
+    slot: Arc<ParamSlot>,
     /// How `predict` fans batch rows out. Standalone sessions default to
     /// the legacy scoped fan-out; engine executors install the engine's
     /// shared [`WorkerPool`] via [`NativeSession::set_scheduler`].
@@ -1081,20 +1259,44 @@ impl NativeSession {
     pub fn from_config(cfg: HrrConfig, seed: u32) -> Result<NativeSession> {
         cfg.validate()?;
         let params = init_native_params(&cfg, seed);
-        Ok(NativeSession { cfg, params, scheduler: RowScheduler::Scoped(default_workers()) })
+        Self::with_params(cfg, params)
     }
 
     /// Serve explicit parameters (a checkpoint saved from a native
     /// session, or a golden fixture). Names and shapes must match the
-    /// canonical layout of [`param_specs`].
+    /// canonical layout of [`param_specs`]. The session gets a private
+    /// generation-1 slot — use [`NativeSession::with_slot`] to share a
+    /// reloadable one.
     pub fn with_params(cfg: HrrConfig, params: ParamStore) -> Result<NativeSession> {
         cfg.validate()?;
         validate_native_params(&cfg, &params)?;
-        Ok(NativeSession { cfg, params, scheduler: RowScheduler::Scoped(default_workers()) })
+        let slot = Arc::new(ParamSlot::new(params, 1));
+        Ok(NativeSession { cfg, slot, scheduler: RowScheduler::Scoped(default_workers()) })
+    }
+
+    /// Serve weights from a shared [`ParamSlot`] (the engine's hot-swap
+    /// cell). The currently published generation must match the
+    /// config's canonical layout; later generations are the installer's
+    /// responsibility (`Engine::reload` validates against every bucket
+    /// before flipping any slot).
+    pub fn with_slot(cfg: HrrConfig, slot: Arc<ParamSlot>) -> Result<NativeSession> {
+        cfg.validate()?;
+        validate_native_params(&cfg, &slot.pin().store)?;
+        Ok(NativeSession { cfg, slot, scheduler: RowScheduler::Scoped(default_workers()) })
     }
 
     pub fn cfg(&self) -> &HrrConfig {
         &self.cfg
+    }
+
+    /// The slot this session reads weights from.
+    pub fn slot(&self) -> &Arc<ParamSlot> {
+        &self.slot
+    }
+
+    /// The currently published weight generation.
+    pub fn model_version(&self) -> u64 {
+        self.slot.version()
     }
 
     /// Install the [`RowScheduler`] that [`NativeSession::predict`]
@@ -1124,6 +1326,13 @@ impl NativeSession {
         self.predict_with(ids, &self.scheduler)
     }
 
+    /// [`NativeSession::predict`] plus the weight generation the batch
+    /// actually ran on — what engine executors stamp into replies so
+    /// clients can observe a hot reload taking effect.
+    pub fn predict_versioned(&self, ids: &Tensor) -> Result<(Tensor, u64)> {
+        self.predict_pinned(ids, &self.scheduler)
+    }
+
     /// [`NativeSession::predict`] with a pinned scoped worker count
     /// (1 = fully sequential, no threads spawned) — the pre-pool
     /// fallback, kept for benches and standalone callers. Logits are
@@ -1142,6 +1351,14 @@ impl NativeSession {
     /// independent and every worker owns its own [`Workspace`], so the
     /// logits cannot depend on the scheduler or any interleaving.
     pub fn predict_with(&self, ids: &Tensor, scheduler: &RowScheduler) -> Result<Tensor> {
+        Ok(self.predict_pinned(ids, scheduler)?.0)
+    }
+
+    /// The one predict body: pin the current weight generation, resolve
+    /// it once, run every row against that pin. A concurrent
+    /// [`ParamSlot::install`] affects only *later* calls — this batch is
+    /// atomic with respect to reloads by construction.
+    fn predict_pinned(&self, ids: &Tensor, scheduler: &RowScheduler) -> Result<(Tensor, u64)> {
         let shape = ids.shape();
         anyhow::ensure!(shape.len() == 2, "native predict expects (B, T) ids, got {shape:?}");
         let (b, t) = (shape[0], shape[1]);
@@ -1153,13 +1370,14 @@ impl NativeSession {
         let data = ids.as_i32().context("native predict ids dtype")?;
         let classes = self.cfg.classes;
         let mut out = vec![0.0f32; b * classes];
+        let pinned = self.slot.pin();
         if b == 0 {
-            return Ok(Tensor::f32(vec![0, classes], out));
+            return Ok((Tensor::f32(vec![0, classes], out), pinned.version));
         }
 
         // Resolve every parameter slice once; rows then run lookup- and
         // allocation-free, and a broken store fails before any row runs.
-        let rp = ResolvedParams::resolve(&self.cfg, &self.params)?;
+        let rp = ResolvedParams::resolve(&self.cfg, &pinned.store)?;
 
         // Shared all-PAD logits, computed once up front rather than once
         // per worker (or, before the workspace refactor, once per row).
@@ -1233,16 +1451,20 @@ impl NativeSession {
                     .map_err(|_| anyhow::anyhow!("native predict worker panicked"))?;
             }
         }
-        Ok(Tensor::f32(vec![b, classes], out))
+        Ok((Tensor::f32(vec![b, classes], out), pinned.version))
     }
 
     // --- streaming (chunked) forward -----------------------------------
 
     /// Open the carried state for one chunked stream (see the streaming
     /// section above): O(H) heap, independent of how long the stream
-    /// will run.
+    /// will run. The state pins the weight generation current at open —
+    /// every later pass resolves from that pin, so a hot reload
+    /// mid-stream cannot mix generations within the stream.
     pub fn stream_state(&self) -> StreamState {
-        StreamState::new(&self.cfg)
+        let mut st = StreamState::new(&self.cfg);
+        st.pinned = Some(self.slot.pin());
+        st
     }
 
     /// Chunk-sized scratch for [`NativeSession::stream_consume`]. One
@@ -1273,7 +1495,18 @@ impl NativeSession {
             chunk.len(),
             sw.chunk_cap
         );
-        let rp = ResolvedParams::resolve(&self.cfg, &self.params)?;
+        // Resolve from the stream's opening pin (late-pinning a state
+        // built outside `stream_state` on its first chunk), never from
+        // the live slot — reloads must not touch an open stream.
+        let pinned = match &st.pinned {
+            Some(p) => Arc::clone(p),
+            None => {
+                let p = self.slot.pin();
+                st.pinned = Some(Arc::clone(&p));
+                p
+            }
+        };
+        let rp = ResolvedParams::resolve(&self.cfg, &pinned.store)?;
         stream_consume_impl(&self.cfg, &rp, st, &mut sw.ws, chunk)
     }
 
@@ -1307,7 +1540,11 @@ impl NativeSession {
             st.pass,
             st.passes()
         );
-        let rp = ResolvedParams::resolve(&self.cfg, &self.params)?;
+        let pinned = match &st.pinned {
+            Some(p) => Arc::clone(p),
+            None => self.slot.pin(),
+        };
+        let rp = ResolvedParams::resolve(&self.cfg, &pinned.store)?;
         let cfg = &self.cfg;
         let n_valid = st.n_valid.max(1) as f64;
         let pooled: Vec<f32> = st.pooled.iter().map(|&s| (s / n_valid) as f32).collect();
@@ -1325,8 +1562,8 @@ impl NativeSession {
 }
 
 impl Session for NativeSession {
-    fn params(&self) -> &ParamStore {
-        &self.params
+    fn param_scalars(&self) -> usize {
+        self.slot.pin().store.total_scalars()
     }
 
     fn batch(&self) -> usize {
@@ -1341,6 +1578,10 @@ impl Session for NativeSession {
 impl Predictor for NativeSession {
     fn predict(&self, ids: &Tensor) -> Result<Tensor> {
         NativeSession::predict(self, ids)
+    }
+
+    fn predict_versioned(&self, ids: &Tensor) -> Result<(Tensor, u64)> {
+        NativeSession::predict_versioned(self, ids)
     }
 }
 
@@ -1477,6 +1718,42 @@ mod tests {
         let mut bad = init_native_params(&cfg, 0);
         bad.names[0] = "wrong.name".into();
         assert!(NativeSession::with_params(cfg, bad).is_err());
+    }
+
+    #[test]
+    fn param_slot_swap_is_invisible_to_pinned_work() {
+        let cfg = tiny_cfg();
+        let sess = NativeSession::from_config(cfg.clone(), 3).unwrap();
+        let toks = [1i32, 2, 3, 4];
+        let ids = Tensor::i32(vec![1, 4], toks.to_vec());
+        let (before, v1) = sess.predict_versioned(&ids).unwrap();
+        assert_eq!(v1, 1);
+
+        // open a stream on generation 1, consume its online pass…
+        let mut st = sess.stream_state();
+        assert_eq!(st.model_version(), 1);
+        let mut sw = sess.stream_workspace(4);
+        sess.stream_consume(&mut st, &mut sw, &toks).unwrap();
+        sess.stream_end_pass(&mut st).unwrap();
+
+        // …hot-swap to different weights mid-stream…
+        sess.slot().install(init_native_params(&cfg, 99), 2);
+        assert_eq!(sess.model_version(), 2);
+
+        // new batches run on generation 2 with different logits
+        let (after, v2) = sess.predict_versioned(&ids).unwrap();
+        assert_eq!(v2, 2);
+        assert_ne!(before.as_f32().unwrap(), after.as_f32().unwrap());
+
+        // the open stream replays and finishes on its opening pin —
+        // bit-identical to the generation-1 whole-row forward
+        while !st.ready() {
+            sess.stream_consume(&mut st, &mut sw, &toks).unwrap();
+            sess.stream_end_pass(&mut st).unwrap();
+        }
+        assert_eq!(st.model_version(), 1);
+        let streamed = sess.stream_logits(&st).unwrap();
+        assert_eq!(streamed.as_slice(), before.as_f32().unwrap());
     }
 
     #[test]

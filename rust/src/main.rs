@@ -35,13 +35,14 @@ repro — Hrrformer reproduction coordinator
 USAGE:
   repro train --base <program base> [--backend artifact|native] [--steps N] [--seed S]
               [--eval-every N] [--eval-batches N] [--curve path.csv] [--ckpt path]
+              [--emit-artifact path]
   repro serve [--backend artifact|native] [--bases a,b,c] [--requests N]
               [--max-batch B] [--max-wait-ms MS] [--queue-depth D] [--seed S]
               [--workers K]
   repro serve --stream [--stream-base BASE] [--requests N] [--chunk TOKENS]
               [--append-bytes N] [--seed S] [--workers K]
   repro serve --http [--addr HOST:PORT] [--http-secs S] [--http-drivers N]
-              [--accept-backlog N] [--stream-base BASE]
+              [--accept-backlog N] [--idle-secs S] [--stream-base BASE]
               [--backend artifact|native] [--bases a,b,c] [--max-batch B]
               [--max-wait-ms MS] [--queue-depth D] [--seed S] [--workers K]
   repro bench ember     [--steps N] [--models a,b] [--timeout-s S]
@@ -76,7 +77,11 @@ needs `make artifacts`; `native` is the pure-Rust path (rust/src/hrr) —
 no artifacts required, works on a fresh checkout. On `train`, native
 runs reverse-mode autodiff + Adam with the paper's LR decay through the
 same train→eval→checkpoint loop (--eval-every 0 = final eval only);
-gradients are bit-identical at any worker count.
+gradients are bit-identical at any worker count. --emit-artifact
+(native only) writes a versioned weight artifact — a manifest
+(config hash, per-tensor checksums, training provenance) over the
+checkpoint payload — deployable into a running serve --http via
+POST /admin/reload with zero downtime.
 
 bench native times that native hot path directly (plan-cached FFTs,
 reusable workspaces) over the default EMBER bucket ladder under all
@@ -90,10 +95,13 @@ server (non-blocking listener + --http-drivers connection threads) over
 the same engine — POST /classify (per-request deadline_ms maps onto the
 batcher's max_wait; QueueFull backpressure surfaces as 429), POST
 /stream/{open,append,finish} (chunked bodies welcome; needs
---stream-base), GET /metrics and GET /healthz. The accept queue is
-bounded (--accept-backlog; full ⇒ canned 503) and shutdown drains
-accepted in-flight requests before the engine stops. --http-secs 0
-(default) serves until killed. bench http is the matching closed-loop
+--stream-base), POST /admin/reload (hot-swap weights from an
+--emit-artifact file — path JSON or raw upload; replies then carry the
+new model_version), GET /metrics and GET /healthz. The accept queue is
+bounded (--accept-backlog; full ⇒ canned 503), keep-alive connections
+idle past --idle-secs are reclaimed (408 when a request was partially
+received), and shutdown drains accepted in-flight requests before the
+engine stops. --http-secs 0 (default) serves until killed. bench http is the matching closed-loop
 load client: a steady phase and an overload phase (shallow
 --queue-depth in-process, so 429s actually happen), recording exact
 client-side p50/p99 into BENCH_native.json under an \"http\" key;
@@ -146,6 +154,7 @@ fn cmd_train(args: &Args) -> Result<()> {
         eval_batches: args.usize("eval-batches", 8),
         curve_csv: args.get("curve").map(Into::into),
         ckpt: args.get("ckpt").map(Into::into),
+        artifact: args.get("emit-artifact").map(Into::into),
         verbose: true,
     };
     let report = match parse_backend(args)? {
@@ -284,6 +293,7 @@ fn cmd_serve_http(args: &Args) -> Result<()> {
         addr: args.str("addr", "127.0.0.1:8080"),
         drivers: args.usize("http-drivers", 4),
         accept_backlog: args.usize("accept-backlog", 64),
+        idle_timeout: std::time::Duration::from_secs(args.u64("idle-secs", 60).max(1)),
         ..HttpConfig::default()
     };
     let server = HttpServer::start(cfg, &engine)?;

@@ -1,0 +1,629 @@
+//! Versioned weight artifacts: a self-describing manifest wrapped
+//! around the HRRCKPT1 parameter payload — the unit of exchange between
+//! training and serving (ROADMAP item 4).
+//!
+//! Following the manifest-plus-payload design of artcode's RFC 0005,
+//! an artifact is one file:
+//!
+//! ```text
+//!   magic "HRRART1\n" | u32 manifest_len | manifest JSON | HRRCKPT1 payload
+//! ```
+//!
+//! The manifest carries everything a consumer needs to decide whether
+//! the payload is (a) intact and (b) loadable *before* trusting a single
+//! weight: a schema version, a hash of the producing model config,
+//! per-tensor FNV-1a checksums over the exact serialized bytes, a
+//! whole-payload checksum, and provenance (task, base, optimizer step,
+//! final eval). [`Artifact::open`] verifies every checksum and returns a
+//! typed [`ArtifactError`] on mismatch, so a corrupt or tampered file is
+//! rejected at the door — `Engine::reload` never sees its tensors.
+//!
+//! Checksums are FNV-1a 64 (dependency-free, deterministic, and plenty
+//! for integrity — this is corruption detection, not cryptographic
+//! authentication). They are rendered as fixed-width hex strings in the
+//! JSON manifest because u64 does not survive a round-trip through f64.
+
+use std::fmt;
+use std::path::Path;
+
+use anyhow::{Context, Result};
+
+use crate::hrr::HrrConfig;
+use crate::model::params::{tensor_data_bytes, ParamStore};
+use crate::runtime::tensor::DType;
+use crate::util::json::Json;
+
+/// File magic — 8 bytes, like the payload's `HRRCKPT1`.
+pub const ARTIFACT_MAGIC: &[u8; 8] = b"HRRART1\n";
+
+/// Manifest schema understood by this build. Bumped on incompatible
+/// manifest changes; [`Artifact::open`] rejects anything newer.
+pub const SCHEMA_VERSION: u64 = 1;
+
+/// Typed failure surface of artifact verification. Callers that need to
+/// distinguish "file is damaged" from "file is fine but wrong model"
+/// match on this (via `anyhow::Error::downcast_ref`).
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub enum ArtifactError {
+    /// Not an artifact at all (wrong magic bytes).
+    BadMagic,
+    /// Manifest schema newer than this build understands.
+    SchemaVersion { found: u64, supported: u64 },
+    /// Manifest is structurally invalid JSON / missing required fields.
+    Manifest(String),
+    /// Payload or a tensor fails its manifest checksum.
+    Corrupt { what: String, expected: u64, got: u64 },
+    /// Manifest tensor list and payload tensors disagree.
+    PayloadMismatch(String),
+    /// File truncated relative to its declared lengths.
+    Truncated,
+}
+
+impl fmt::Display for ArtifactError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            ArtifactError::BadMagic => write!(f, "not a HRRART1 artifact (bad magic)"),
+            ArtifactError::SchemaVersion { found, supported } => write!(
+                f,
+                "artifact schema version {found} is newer than supported ({supported})"
+            ),
+            ArtifactError::Manifest(msg) => write!(f, "invalid artifact manifest: {msg}"),
+            ArtifactError::Corrupt { what, expected, got } => write!(
+                f,
+                "artifact corrupt: {what} checksum {got:016x} does not match manifest \
+                 {expected:016x}"
+            ),
+            ArtifactError::PayloadMismatch(msg) => {
+                write!(f, "artifact payload does not match its manifest: {msg}")
+            }
+            ArtifactError::Truncated => write!(f, "artifact file is truncated"),
+        }
+    }
+}
+
+impl std::error::Error for ArtifactError {}
+
+/// FNV-1a 64-bit over a byte stream.
+#[derive(Clone, Copy)]
+pub struct Fnv64(u64);
+
+impl Fnv64 {
+    const OFFSET: u64 = 0xcbf2_9ce4_8422_2325;
+    const PRIME: u64 = 0x0000_0100_0000_01b3;
+
+    pub fn new() -> Fnv64 {
+        Fnv64(Self::OFFSET)
+    }
+
+    pub fn update(&mut self, bytes: &[u8]) {
+        for &b in bytes {
+            self.0 ^= b as u64;
+            self.0 = self.0.wrapping_mul(Self::PRIME);
+        }
+    }
+
+    pub fn finish(self) -> u64 {
+        self.0
+    }
+}
+
+impl Default for Fnv64 {
+    fn default() -> Self {
+        Fnv64::new()
+    }
+}
+
+/// One-shot FNV-1a 64 of a byte slice.
+pub fn fnv64(bytes: &[u8]) -> u64 {
+    let mut h = Fnv64::new();
+    h.update(bytes);
+    h.finish()
+}
+
+/// Checksum of a tensor's serialized data section — the exact LE bytes
+/// the HRRCKPT1 serializer writes for it.
+fn tensor_fnv64(t: &crate::runtime::tensor::Tensor) -> u64 {
+    let mut h = Fnv64::new();
+    let _ = tensor_data_bytes::<()>(t, |chunk| {
+        h.update(chunk);
+        Ok(())
+    });
+    h.finish()
+}
+
+/// Where an artifact came from: enough to answer "which training run
+/// produced these weights, and how good were they" without opening the
+/// training logs.
+#[derive(Debug, Clone, Default, PartialEq)]
+pub struct Provenance {
+    /// Task name (e.g. `ember`).
+    pub task: String,
+    /// Full program base (e.g. `ember_hrrformer_small_T256_B8`).
+    pub base: String,
+    /// Optimizer steps taken when the artifact was written.
+    pub step: u32,
+    /// Final held-out eval, when one ran: (loss, accuracy).
+    pub final_eval: Option<(f32, f32)>,
+}
+
+/// Manifest entry for one payload tensor.
+#[derive(Debug, Clone, PartialEq)]
+pub struct TensorEntry {
+    pub name: String,
+    pub shape: Vec<usize>,
+    pub dtype: DType,
+    pub fnv64: u64,
+}
+
+/// The parsed artifact manifest (the JSON between magic and payload).
+#[derive(Debug, Clone, PartialEq)]
+pub struct ArtifactManifest {
+    pub schema_version: u64,
+    /// FNV-1a 64 of the producing config's canonical description —
+    /// provenance, not a load gate (reload validates structurally
+    /// against each bucket's own spec).
+    pub config_hash: u64,
+    /// Canonical config description the hash covers (human-readable).
+    pub config: String,
+    pub payload_len: usize,
+    pub payload_fnv: u64,
+    pub tensors: Vec<TensorEntry>,
+    pub provenance: Provenance,
+}
+
+impl ArtifactManifest {
+    /// Build a manifest describing `params` as produced by `cfg`.
+    pub fn describe(
+        cfg: &HrrConfig,
+        params: &ParamStore,
+        payload: &[u8],
+        provenance: Provenance,
+    ) -> ArtifactManifest {
+        let config = canonical_config(cfg);
+        ArtifactManifest {
+            schema_version: SCHEMA_VERSION,
+            config_hash: fnv64(config.as_bytes()),
+            config,
+            payload_len: payload.len(),
+            payload_fnv: fnv64(payload),
+            tensors: params
+                .names
+                .iter()
+                .zip(&params.tensors)
+                .map(|(name, t)| TensorEntry {
+                    name: name.clone(),
+                    shape: t.shape().to_vec(),
+                    dtype: t.dtype(),
+                    fnv64: tensor_fnv64(t),
+                })
+                .collect(),
+            provenance,
+        }
+    }
+
+    fn to_json(&self) -> Json {
+        let mut prov = vec![
+            ("task".to_string(), Json::Str(self.provenance.task.clone())),
+            ("base".to_string(), Json::Str(self.provenance.base.clone())),
+            ("step".to_string(), Json::Num(self.provenance.step as f64)),
+        ];
+        if let Some((loss, acc)) = self.provenance.final_eval {
+            prov.push((
+                "final_eval".to_string(),
+                Json::Obj(
+                    [
+                        ("loss".to_string(), Json::Num(loss as f64)),
+                        ("acc".to_string(), Json::Num(acc as f64)),
+                    ]
+                    .into_iter()
+                    .collect(),
+                ),
+            ));
+        }
+        let tensors = self
+            .tensors
+            .iter()
+            .map(|t| {
+                Json::Obj(
+                    [
+                        ("name".to_string(), Json::Str(t.name.clone())),
+                        (
+                            "shape".to_string(),
+                            Json::Arr(t.shape.iter().map(|&d| Json::Num(d as f64)).collect()),
+                        ),
+                        ("dtype".to_string(), Json::Str(dtype_str(t.dtype).to_string())),
+                        ("fnv64".to_string(), Json::Str(format!("{:016x}", t.fnv64))),
+                    ]
+                    .into_iter()
+                    .collect(),
+                )
+            })
+            .collect();
+        Json::Obj(
+            [
+                ("schema_version".to_string(), Json::Num(self.schema_version as f64)),
+                ("config_hash".to_string(), Json::Str(format!("{:016x}", self.config_hash))),
+                ("config".to_string(), Json::Str(self.config.clone())),
+                ("payload_len".to_string(), Json::Num(self.payload_len as f64)),
+                ("payload_fnv".to_string(), Json::Str(format!("{:016x}", self.payload_fnv))),
+                ("tensors".to_string(), Json::Arr(tensors)),
+                ("provenance".to_string(), Json::Obj(prov.into_iter().collect())),
+            ]
+            .into_iter()
+            .collect(),
+        )
+    }
+
+    fn from_json(doc: &Json) -> Result<ArtifactManifest, ArtifactError> {
+        let field = |name: &str| {
+            doc.get(name).ok_or_else(|| ArtifactError::Manifest(format!("missing '{name}'")))
+        };
+        let hex = |name: &str, v: &Json| {
+            v.as_str()
+                .and_then(|s| u64::from_str_radix(s, 16).ok())
+                .ok_or_else(|| ArtifactError::Manifest(format!("'{name}' must be a hex string")))
+        };
+        let schema_version = field("schema_version")?
+            .as_i64()
+            .and_then(|v| u64::try_from(v).ok())
+            .ok_or_else(|| ArtifactError::Manifest("'schema_version' must be a number".into()))?;
+        if schema_version > SCHEMA_VERSION {
+            return Err(ArtifactError::SchemaVersion {
+                found: schema_version,
+                supported: SCHEMA_VERSION,
+            });
+        }
+        let config_hash = hex("config_hash", field("config_hash")?)?;
+        let config = field("config")?
+            .as_str()
+            .ok_or_else(|| ArtifactError::Manifest("'config' must be a string".into()))?
+            .to_string();
+        let payload_len = field("payload_len")?
+            .as_usize()
+            .ok_or_else(|| ArtifactError::Manifest("'payload_len' must be a number".into()))?;
+        let payload_fnv = hex("payload_fnv", field("payload_fnv")?)?;
+        let mut tensors = Vec::new();
+        for t in field("tensors")?
+            .as_arr()
+            .ok_or_else(|| ArtifactError::Manifest("'tensors' must be an array".into()))?
+        {
+            let name = t
+                .get("name")
+                .and_then(Json::as_str)
+                .ok_or_else(|| ArtifactError::Manifest("tensor entry missing 'name'".into()))?
+                .to_string();
+            let shape = t
+                .get("shape")
+                .and_then(Json::as_arr)
+                .ok_or_else(|| ArtifactError::Manifest("tensor entry missing 'shape'".into()))?
+                .iter()
+                .map(|d| d.as_usize())
+                .collect::<Option<Vec<_>>>()
+                .ok_or_else(|| ArtifactError::Manifest("bad tensor shape".into()))?;
+            let dtype = match t.get("dtype").and_then(Json::as_str) {
+                Some("f32") => DType::F32,
+                Some("i32") => DType::I32,
+                Some("u32") => DType::U32,
+                other => {
+                    return Err(ArtifactError::Manifest(format!("bad tensor dtype {other:?}")))
+                }
+            };
+            let sum = hex(
+                "fnv64",
+                t.get("fnv64")
+                    .ok_or_else(|| ArtifactError::Manifest("tensor entry missing 'fnv64'".into()))?,
+            )?;
+            tensors.push(TensorEntry { name, shape, dtype, fnv64: sum });
+        }
+        let prov = field("provenance")?;
+        let provenance = Provenance {
+            task: prov.get("task").and_then(Json::as_str).unwrap_or_default().to_string(),
+            base: prov.get("base").and_then(Json::as_str).unwrap_or_default().to_string(),
+            step: prov
+                .get("step")
+                .and_then(Json::as_i64)
+                .and_then(|v| u32::try_from(v).ok())
+                .unwrap_or(0),
+            final_eval: prov.get("final_eval").and_then(|e| {
+                Some((e.get("loss")?.as_f64()? as f32, e.get("acc")?.as_f64()? as f32))
+            }),
+        };
+        Ok(ArtifactManifest {
+            schema_version,
+            config_hash,
+            config,
+            payload_len,
+            payload_fnv,
+            tensors,
+            provenance,
+        })
+    }
+}
+
+fn dtype_str(d: DType) -> &'static str {
+    match d {
+        DType::F32 => "f32",
+        DType::I32 => "i32",
+        DType::U32 => "u32",
+    }
+}
+
+/// Canonical one-line config description the manifest's `config_hash`
+/// covers. Excludes `batch` — the same weights serve any batch shape.
+pub fn canonical_config(cfg: &HrrConfig) -> String {
+    format!(
+        "task={} vocab={} seq_len={} embed={} mlp_dim={} heads={} layers={} classes={} \
+         learned_pos={}",
+        cfg.task,
+        cfg.vocab,
+        cfg.seq_len,
+        cfg.embed,
+        cfg.mlp_dim,
+        cfg.heads,
+        cfg.layers,
+        cfg.classes,
+        cfg.learned_pos
+    )
+}
+
+/// A verified artifact: manifest + the parameters decoded from its
+/// payload. Constructing one through [`Artifact::open`] /
+/// [`Artifact::open_bytes`] implies every checksum passed.
+#[derive(Debug, Clone)]
+pub struct Artifact {
+    pub manifest: ArtifactManifest,
+    pub params: ParamStore,
+}
+
+impl Artifact {
+    /// Serialize `params` (as produced by `cfg`) into a single artifact
+    /// file at `path`. Returns the manifest that was written.
+    pub fn write(
+        path: &Path,
+        cfg: &HrrConfig,
+        params: &ParamStore,
+        provenance: Provenance,
+    ) -> Result<ArtifactManifest> {
+        let bytes = Self::to_bytes(cfg, params, provenance)?;
+        std::fs::write(path, bytes.0).with_context(|| format!("write {}", path.display()))?;
+        Ok(bytes.1)
+    }
+
+    /// Serialize to in-memory artifact bytes (file image) + manifest.
+    pub fn to_bytes(
+        cfg: &HrrConfig,
+        params: &ParamStore,
+        provenance: Provenance,
+    ) -> Result<(Vec<u8>, ArtifactManifest)> {
+        let payload = params.to_bytes()?;
+        let manifest = ArtifactManifest::describe(cfg, params, &payload, provenance);
+        let manifest_json = manifest.to_json().to_string();
+        let mut out =
+            Vec::with_capacity(8 + 4 + manifest_json.len() + payload.len());
+        out.extend_from_slice(ARTIFACT_MAGIC);
+        out.extend_from_slice(&(manifest_json.len() as u32).to_le_bytes());
+        out.extend_from_slice(manifest_json.as_bytes());
+        out.extend_from_slice(&payload);
+        Ok((out, manifest))
+    }
+
+    /// Open + fully verify an artifact file. Any checksum mismatch is a
+    /// typed [`ArtifactError`] — a damaged file never yields tensors.
+    pub fn open(path: &Path) -> Result<Artifact> {
+        let bytes =
+            std::fs::read(path).with_context(|| format!("open artifact {}", path.display()))?;
+        Self::open_bytes(&bytes).with_context(|| format!("verify artifact {}", path.display()))
+    }
+
+    /// Open + fully verify an in-memory artifact image (e.g. an inline
+    /// HTTP upload body).
+    pub fn open_bytes(bytes: &[u8]) -> Result<Artifact> {
+        let art = Self::parse(bytes)?;
+        Ok(art)
+    }
+
+    fn parse(bytes: &[u8]) -> Result<Artifact, ArtifactError> {
+        if bytes.len() < 12 {
+            return Err(ArtifactError::Truncated);
+        }
+        if &bytes[..8] != ARTIFACT_MAGIC {
+            return Err(ArtifactError::BadMagic);
+        }
+        let mlen = u32::from_le_bytes(bytes[8..12].try_into().unwrap()) as usize;
+        let payload_off = 12 + mlen;
+        if bytes.len() < payload_off {
+            return Err(ArtifactError::Truncated);
+        }
+        let manifest_json = std::str::from_utf8(&bytes[12..payload_off])
+            .map_err(|_| ArtifactError::Manifest("manifest is not utf-8".into()))?;
+        let doc = Json::parse(manifest_json)
+            .map_err(|e| ArtifactError::Manifest(format!("manifest json: {e}")))?;
+        let manifest = ArtifactManifest::from_json(&doc)?;
+
+        let payload = &bytes[payload_off..];
+        if payload.len() != manifest.payload_len {
+            return Err(ArtifactError::Truncated);
+        }
+        let got = fnv64(payload);
+        if got != manifest.payload_fnv {
+            return Err(ArtifactError::Corrupt {
+                what: "payload".into(),
+                expected: manifest.payload_fnv,
+                got,
+            });
+        }
+        let params = ParamStore::read_from(&mut std::io::Cursor::new(payload))
+            .map_err(|e| ArtifactError::PayloadMismatch(format!("payload decode: {e}")))?;
+        let art = Artifact { manifest, params };
+        art.verify()?;
+        Ok(art)
+    }
+
+    /// Re-check the decoded parameters against the manifest: tensor
+    /// arity, names, shapes, dtypes, and per-tensor checksums. `open`
+    /// runs this; it is public so tests (and paranoid callers) can
+    /// re-verify an artifact held in memory.
+    pub fn verify(&self) -> Result<(), ArtifactError> {
+        if self.manifest.tensors.len() != self.params.len() {
+            return Err(ArtifactError::PayloadMismatch(format!(
+                "manifest lists {} tensors, payload holds {}",
+                self.manifest.tensors.len(),
+                self.params.len()
+            )));
+        }
+        for (entry, (name, t)) in self
+            .manifest
+            .tensors
+            .iter()
+            .zip(self.params.names.iter().zip(&self.params.tensors))
+        {
+            if &entry.name != name {
+                return Err(ArtifactError::PayloadMismatch(format!(
+                    "tensor order: manifest '{}' vs payload '{name}'",
+                    entry.name
+                )));
+            }
+            if entry.shape != t.shape() || entry.dtype != t.dtype() {
+                return Err(ArtifactError::PayloadMismatch(format!(
+                    "tensor '{name}': manifest {:?} {:?} vs payload {:?} {:?}",
+                    entry.dtype,
+                    entry.shape,
+                    t.dtype(),
+                    t.shape()
+                )));
+            }
+            let got = tensor_fnv64(t);
+            if got != entry.fnv64 {
+                return Err(ArtifactError::Corrupt {
+                    what: format!("tensor '{name}'"),
+                    expected: entry.fnv64,
+                    got,
+                });
+            }
+        }
+        Ok(())
+    }
+
+    /// Whether a byte buffer looks like an artifact file image (used by
+    /// the HTTP front door to sniff inline uploads from JSON bodies).
+    pub fn sniff(bytes: &[u8]) -> bool {
+        bytes.len() >= 8 && &bytes[..8] == ARTIFACT_MAGIC
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::hrr::model::init_native_params;
+
+    fn tiny_cfg() -> HrrConfig {
+        HrrConfig {
+            task: "test".into(),
+            vocab: 9,
+            seq_len: 6,
+            batch: 2,
+            embed: 8,
+            mlp_dim: 10,
+            heads: 2,
+            layers: 1,
+            classes: 3,
+            learned_pos: true,
+        }
+    }
+
+    fn prov() -> Provenance {
+        Provenance {
+            task: "test".into(),
+            base: "test_tiny".into(),
+            step: 7,
+            final_eval: Some((0.5, 0.875)),
+        }
+    }
+
+    #[test]
+    fn fnv64_matches_reference_vectors() {
+        // Published FNV-1a 64 test vectors.
+        assert_eq!(fnv64(b""), 0xcbf29ce484222325);
+        assert_eq!(fnv64(b"a"), 0xaf63dc4c8601ec8c);
+        assert_eq!(fnv64(b"foobar"), 0x85944171f73967e8);
+    }
+
+    #[test]
+    fn roundtrip_preserves_params_and_provenance() {
+        let cfg = tiny_cfg();
+        let params = init_native_params(&cfg, 42);
+        let dir = std::env::temp_dir().join("hrrformer_artifact_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("roundtrip.hrrart");
+        let written = Artifact::write(&path, &cfg, &params, prov()).unwrap();
+        let art = Artifact::open(&path).unwrap();
+        assert_eq!(art.manifest, written);
+        assert_eq!(art.manifest.schema_version, SCHEMA_VERSION);
+        assert_eq!(art.manifest.provenance, prov());
+        assert_eq!(art.params.names, params.names);
+        assert_eq!(art.params.tensors, params.tensors);
+        assert_eq!(art.manifest.config_hash, fnv64(canonical_config(&cfg).as_bytes()));
+    }
+
+    #[test]
+    fn open_bytes_equals_open() {
+        let cfg = tiny_cfg();
+        let params = init_native_params(&cfg, 1);
+        let (bytes, manifest) = Artifact::to_bytes(&cfg, &params, prov()).unwrap();
+        let art = Artifact::open_bytes(&bytes).unwrap();
+        assert_eq!(art.manifest, manifest);
+        assert!(Artifact::sniff(&bytes));
+        assert!(!Artifact::sniff(b"{\"path\": \"x\"}"));
+    }
+
+    #[test]
+    fn corruption_anywhere_in_payload_is_typed() {
+        let cfg = tiny_cfg();
+        let params = init_native_params(&cfg, 3);
+        let (mut bytes, _) = Artifact::to_bytes(&cfg, &params, prov()).unwrap();
+        // flip one bit deep in the payload (a weight byte)
+        let n = bytes.len();
+        bytes[n - 5] ^= 0x40;
+        let err = Artifact::open_bytes(&bytes).unwrap_err();
+        let typed = err.downcast_ref::<ArtifactError>().expect("typed artifact error");
+        assert!(
+            matches!(typed, ArtifactError::Corrupt { .. }),
+            "expected Corrupt, got {typed:?}"
+        );
+    }
+
+    #[test]
+    fn tampered_manifest_or_magic_is_rejected() {
+        let cfg = tiny_cfg();
+        let params = init_native_params(&cfg, 3);
+        let (bytes, _) = Artifact::to_bytes(&cfg, &params, prov()).unwrap();
+
+        let mut bad_magic = bytes.clone();
+        bad_magic[0] = b'X';
+        let err = Artifact::open_bytes(&bad_magic).unwrap_err();
+        assert_eq!(err.downcast_ref::<ArtifactError>(), Some(&ArtifactError::BadMagic));
+
+        let mut truncated = bytes.clone();
+        truncated.truncate(bytes.len() - 9);
+        let err = Artifact::open_bytes(&truncated).unwrap_err();
+        assert_eq!(err.downcast_ref::<ArtifactError>(), Some(&ArtifactError::Truncated));
+
+        // a schema bump from the future must be refused, not misread
+        let manifest_len =
+            u32::from_le_bytes(bytes[8..12].try_into().unwrap()) as usize;
+        let manifest =
+            String::from_utf8(bytes[12..12 + manifest_len].to_vec()).unwrap();
+        let future = manifest.replacen("\"schema_version\":1", "\"schema_version\":99", 1);
+        assert_ne!(future, manifest);
+        let mut doc = Vec::new();
+        doc.extend_from_slice(ARTIFACT_MAGIC);
+        doc.extend_from_slice(&(future.len() as u32).to_le_bytes());
+        doc.extend_from_slice(future.as_bytes());
+        doc.extend_from_slice(&bytes[12 + manifest_len..]);
+        let err = Artifact::open_bytes(&doc).unwrap_err();
+        assert!(matches!(
+            err.downcast_ref::<ArtifactError>(),
+            Some(ArtifactError::SchemaVersion { found: 99, .. })
+        ));
+    }
+}

@@ -8,9 +8,11 @@
 //! entry points; [`ProgramHandle`] centralizes the params-first
 //! `run_refs` packing the PJRT sessions use.
 
+pub mod artifact;
 pub mod params;
 pub mod session;
 
+pub use artifact::{Artifact, ArtifactError, ArtifactManifest, Provenance};
 pub use params::ParamStore;
 pub use session::{
     init_params, PredictSession, Predictor, ProgramHandle, Session, StepStats, Trainable,

@@ -72,6 +72,13 @@ impl ParamStore {
         let mut f = std::io::BufWriter::new(
             std::fs::File::create(path).with_context(|| format!("create {}", path.display()))?,
         );
+        self.write_to(&mut f)
+    }
+
+    /// Serialize into any writer (the HRRCKPT1 wire format above). The
+    /// artifact layer reuses this as its payload serializer, so a
+    /// checkpoint and an artifact payload can never drift.
+    pub fn write_to(&self, f: &mut impl Write) -> Result<()> {
         f.write_all(MAGIC)?;
         f.write_all(&(self.len() as u32).to_le_bytes())?;
         for (name, t) in self.names.iter().zip(&self.tensors) {
@@ -87,35 +94,41 @@ impl ParamStore {
             for &d in t.shape() {
                 f.write_all(&(d as u64).to_le_bytes())?;
             }
-            match t {
-                Tensor::F32 { data, .. } => {
-                    for v in data {
-                        f.write_all(&v.to_le_bytes())?;
-                    }
-                }
-                Tensor::I32 { data, .. } => {
-                    for v in data {
-                        f.write_all(&v.to_le_bytes())?;
-                    }
-                }
-                Tensor::U32 { data, .. } => {
-                    for v in data {
-                        f.write_all(&v.to_le_bytes())?;
-                    }
-                }
-            }
+            tensor_data_bytes(t, |chunk| f.write_all(chunk))?;
         }
         Ok(())
     }
 
+    /// Serialize to an in-memory buffer (the artifact payload).
+    pub fn to_bytes(&self) -> Result<Vec<u8>> {
+        let mut out = Vec::with_capacity(self.total_bytes() + 64);
+        self.write_to(&mut out)?;
+        Ok(out)
+    }
+
+    /// Load a checkpoint: either a bare `HRRCKPT1` payload or a
+    /// versioned `HRRART1` weight artifact (native `--ckpt` saves write
+    /// the latter) — artifact files are checksum-verified before any
+    /// tensor is returned.
     pub fn load(path: &Path) -> Result<ParamStore> {
-        let mut f = std::io::BufReader::new(
-            std::fs::File::open(path).with_context(|| format!("open {}", path.display()))?,
-        );
+        let bytes =
+            std::fs::read(path).with_context(|| format!("open {}", path.display()))?;
+        if crate::model::Artifact::sniff(&bytes) {
+            return Ok(crate::model::Artifact::open_bytes(&bytes)
+                .with_context(|| format!("verify artifact {}", path.display()))?
+                .params);
+        }
+        Self::read_from(&mut &bytes[..])
+            .with_context(|| format!("read checkpoint {}", path.display()))
+    }
+
+    /// Deserialize from any reader (the inverse of
+    /// [`ParamStore::write_to`]).
+    pub fn read_from(f: &mut impl Read) -> Result<ParamStore> {
         let mut magic = [0u8; 8];
         f.read_exact(&mut magic)?;
         if &magic != MAGIC {
-            bail!("{} is not a HRRCKPT1 checkpoint", path.display());
+            bail!("not a HRRCKPT1 checkpoint (bad magic)");
         }
         let n = read_u32(&mut f)? as usize;
         let mut store = ParamStore::default();
@@ -162,6 +175,35 @@ fn read_u32(f: &mut impl Read) -> Result<u32> {
     let mut b = [0u8; 4];
     f.read_exact(&mut b)?;
     Ok(u32::from_le_bytes(b))
+}
+
+/// Stream a tensor's raw data section (the exact little-endian bytes the
+/// HRRCKPT1 serializer writes) through `sink`, one scalar at a time.
+/// Shared by the serializer and the artifact layer's per-tensor
+/// checksums, so "the bytes on the wire" and "the bytes checksummed" are
+/// the same by construction.
+pub fn tensor_data_bytes<E>(
+    t: &Tensor,
+    mut sink: impl FnMut(&[u8]) -> std::result::Result<(), E>,
+) -> std::result::Result<(), E> {
+    match t {
+        Tensor::F32 { data, .. } => {
+            for v in data {
+                sink(&v.to_le_bytes())?;
+            }
+        }
+        Tensor::I32 { data, .. } => {
+            for v in data {
+                sink(&v.to_le_bytes())?;
+            }
+        }
+        Tensor::U32 { data, .. } => {
+            for v in data {
+                sink(&v.to_le_bytes())?;
+            }
+        }
+    }
+    Ok(())
 }
 
 #[cfg(test)]

@@ -85,14 +85,17 @@ fn zeros_matching(store: &ParamStore) -> ParamStore {
     }
 }
 
-/// Uniform session surface, backend-neutral: a parameter store plus the
-/// fixed (batch, seq_len) shape of the forward pass. PJRT sessions
+/// Uniform session surface, backend-neutral: the fixed (batch, seq_len)
+/// shape of the forward pass plus its parameter count. PJRT sessions
 /// derive the shape from their compiled `ProgramSpec`; the native
 /// backend derives it from its `HrrConfig`.
+///
+/// Deliberately *not* on this trait: a borrowed `&ParamStore` accessor.
+/// The native backend's parameters live behind a versioned hot-swap
+/// cell ([`crate::hrr::ParamSlot`]) shared with the engine, so there is
+/// no stable borrow to hand out — callers that need tensors pin a
+/// version explicitly.
 pub trait Session {
-    /// The parameter tensors the forward pass closes over.
-    fn params(&self) -> &ParamStore;
-
     /// Batch capacity of the (fixed-shape) forward pass.
     fn batch(&self) -> usize;
 
@@ -100,9 +103,7 @@ pub trait Session {
     fn seq_len(&self) -> usize;
 
     /// Total learnable parameter scalars.
-    fn param_scalars(&self) -> usize {
-        self.params().total_scalars()
-    }
+    fn param_scalars(&self) -> usize;
 }
 
 /// The one entry point the serving engine needs, shared by every
@@ -112,6 +113,14 @@ pub trait Session {
 /// executors hold a `Box<dyn Predictor>` and never know which.
 pub trait Predictor: Session {
     fn predict(&self, ids: &Tensor) -> Result<Tensor>;
+
+    /// Logits plus the version of the weights that produced them. The
+    /// native backend pins one [`crate::hrr::ParamVersion`] for the
+    /// whole batch and reports it; backends without versioned weights
+    /// report 0 ("unversioned").
+    fn predict_versioned(&self, ids: &Tensor) -> Result<(Tensor, u64)> {
+        Ok((self.predict(ids)?, 0))
+    }
 }
 
 /// The training surface, backend-neutral — the [`Predictor`] mirror for
@@ -136,6 +145,15 @@ pub trait Trainable: Session {
 
     /// Restore parameters from a checkpoint (optimizer state resets).
     fn restore(&mut self, path: &Path) -> Result<()>;
+
+    /// Write a versioned weight artifact (manifest + checksummed
+    /// payload — see [`crate::model::Artifact`]) deployable via
+    /// `Engine::reload`. `final_eval` is the provenance (loss, acc) of
+    /// the training run's last held-out eval, when one ran. Backends
+    /// without artifact support refuse.
+    fn save_artifact(&self, _path: &Path, _final_eval: Option<(f32, f32)>) -> Result<()> {
+        anyhow::bail!("this training backend does not produce versioned artifacts")
+    }
 }
 
 /// Result of one optimizer step.
@@ -159,16 +177,16 @@ pub struct TrainSession {
 }
 
 impl Session for TrainSession {
-    fn params(&self) -> &ParamStore {
-        &self.params
-    }
-
     fn batch(&self) -> usize {
         self.train.spec().batch
     }
 
     fn seq_len(&self) -> usize {
         self.train.spec().seq_len
+    }
+
+    fn param_scalars(&self) -> usize {
+        self.params.total_scalars()
     }
 }
 
@@ -287,16 +305,16 @@ pub struct PredictSession {
 }
 
 impl Session for PredictSession {
-    fn params(&self) -> &ParamStore {
-        &self.params
-    }
-
     fn batch(&self) -> usize {
         self.predict.spec().batch
     }
 
     fn seq_len(&self) -> usize {
         self.predict.spec().seq_len
+    }
+
+    fn param_scalars(&self) -> usize {
+        self.params.total_scalars()
     }
 }
 
@@ -337,16 +355,16 @@ pub struct WeightsSession {
 }
 
 impl Session for WeightsSession {
-    fn params(&self) -> &ParamStore {
-        &self.params
-    }
-
     fn batch(&self) -> usize {
         self.program.spec().batch
     }
 
     fn seq_len(&self) -> usize {
         self.program.spec().seq_len
+    }
+
+    fn param_scalars(&self) -> usize {
+        self.params.total_scalars()
     }
 }
 

@@ -36,6 +36,10 @@ enum Fill {
     /// Peer closed, hard IO error, or shutdown said to stop serving
     /// this connection.
     Close,
+    /// Nothing arrived for `idle_timeout`: an idle keep-alive to close
+    /// silently, or a stalled partial request to answer with 408
+    /// (slow-loris protection). Already counted into `idle_evicted`.
+    Idle,
 }
 
 /// How body assembly for one request ended.
@@ -66,15 +70,25 @@ pub(crate) fn drive(mut stream: TcpStream, ctx: &ServeCtx) {
     // Set when shutdown is first observed with a request partially
     // buffered; serving continues until it expires.
     let mut grace: Option<Instant> = None;
+    // Last byte received — the keep-alive idle clock.
+    let mut last = Instant::now();
 
     loop {
         // 1. a complete request head
         let (head, head_len) = loop {
             match http::parse_head(&buf) {
                 Ok(Some(parsed)) => break parsed,
-                Ok(None) => match fill(&mut stream, &mut buf, ctx, &mut grace) {
+                Ok(None) => match fill(&mut stream, &mut buf, ctx, &mut grace, &mut last) {
                     Fill::Got => {}
                     Fill::Close => return,
+                    Fill::Idle => {
+                        // A head partially received deserves a 408; a
+                        // quiet keep-alive just closes.
+                        if !buf.is_empty() {
+                            respond_timeout(&mut stream, ctx);
+                        }
+                        return;
+                    }
                 },
                 Err(e) => {
                     respond_parse_error(&mut stream, ctx, e);
@@ -86,7 +100,7 @@ pub(crate) fn drive(mut stream: TcpStream, ctx: &ServeCtx) {
         // 2. the body (possibly needing more reads)
         let started = Instant::now();
         let (resp, consumed, close_after) =
-            match read_body(&mut stream, &mut buf, ctx, &head, head_len, &mut grace) {
+            match read_body(&mut stream, &mut buf, ctx, &head, head_len, &mut grace, &mut last) {
                 Body::Sized(consumed) => {
                     (handle(ctx, &head, &buf[head_len..consumed]), consumed, false)
                 }
@@ -107,17 +121,22 @@ pub(crate) fn drive(mut stream: TcpStream, ctx: &ServeCtx) {
         // keep-alive / pipelining: drop this request's bytes, keep any
         // already-buffered follow-up request intact
         buf.drain(..consumed);
+        last = Instant::now();
     }
 }
 
-/// Read once into `buf`, honouring shutdown: an idle connection (no
-/// partial request buffered) closes immediately; a partial request gets
-/// `drain_grace` to complete.
+/// Read once into `buf`, honouring shutdown and the idle clock: an idle
+/// connection (no partial request buffered) closes immediately on
+/// shutdown; a partial request gets `drain_grace` to complete; a
+/// connection quiet past `idle_timeout` is evicted (`Fill::Idle`,
+/// counted) whether or not bytes are buffered — the caller decides
+/// between a silent close and a 408.
 fn fill(
     stream: &mut TcpStream,
     buf: &mut Vec<u8>,
     ctx: &ServeCtx,
     grace: &mut Option<Instant>,
+    last: &mut Instant,
 ) -> Fill {
     let mut tmp = [0u8; READ_CHUNK];
     loop {
@@ -130,10 +149,15 @@ fn fill(
                 return Fill::Close;
             }
         }
+        if last.elapsed() >= ctx.idle_timeout {
+            ctx.shared.stats.idle_evicted.fetch_add(1, std::sync::atomic::Ordering::Relaxed);
+            return Fill::Idle;
+        }
         match stream.read(&mut tmp) {
             Ok(0) => return Fill::Close,
             Ok(n) => {
                 buf.extend_from_slice(&tmp[..n]);
+                *last = Instant::now();
                 return Fill::Got;
             }
             Err(e)
@@ -155,6 +179,7 @@ fn read_body(
     head: &Head,
     head_len: usize,
     grace: &mut Option<Instant>,
+    last: &mut Instant,
 ) -> Body {
     if head.chunked {
         let mut dec = ChunkedDecoder::new();
@@ -173,9 +198,10 @@ fn read_body(
             if dec.is_done() {
                 return Body::Chunked(body, pos);
             }
-            match fill(stream, buf, ctx, grace) {
+            match fill(stream, buf, ctx, grace, last) {
                 Fill::Got => {}
                 Fill::Close => return Body::Close,
+                Fill::Idle => return Body::Error(timeout_response()),
             }
         }
     } else {
@@ -185,13 +211,27 @@ fn read_body(
         }
         let consumed = head_len + len;
         while buf.len() < consumed {
-            match fill(stream, buf, ctx, grace) {
+            match fill(stream, buf, ctx, grace, last) {
                 Fill::Got => {}
                 Fill::Close => return Body::Close,
+                Fill::Idle => return Body::Error(timeout_response()),
             }
         }
         Body::Sized(consumed)
     }
+}
+
+fn timeout_response() -> Response {
+    Response::error(408, "request timed out before it was fully received")
+}
+
+/// 408 + close for a request stalled mid-head past the idle timeout.
+fn respond_timeout(stream: &mut TcpStream, ctx: &ServeCtx) {
+    ctx.shared.stats.requests.fetch_add(1, std::sync::atomic::Ordering::Relaxed);
+    let resp = timeout_response();
+    let mut out = Vec::new();
+    http::write_response(&mut out, resp.status, CONTENT_TYPE, resp.body.as_bytes(), false);
+    let _ = stream.write_all(&out);
 }
 
 /// Best-effort error response for an unparseable head; the connection

@@ -14,6 +14,7 @@
 //!       POST /stream/open     → open_stream
 //!       POST /stream/append   → append_stream   (chunked bodies welcome)
 //!       POST /stream/finish   → finish_stream
+//!       POST /admin/reload    → Engine::reload (artifact path or upload)
 //!       GET  /metrics         → engine + pool + http observability
 //!       GET  /healthz         → liveness
 //! ```
@@ -34,6 +35,26 @@
 //! deadline for the reply (batching gets the deadline, execution gets
 //! the same again) before answering **504** — the computation is not
 //! cancelled, only the reply abandoned.
+//!
+//! # Hot reload
+//!
+//! `POST /admin/reload` swaps the engine onto a new weight artifact
+//! with zero downtime (see [`crate::engine`] "Hot reload"). The body is
+//! either a JSON pointer `{"path": "..."}` to an artifact on the
+//! server's filesystem or the raw artifact bytes themselves (sniffed by
+//! magic). A parse/verify failure answers **400** with the engine
+//! untouched; an artifact no bucket accepts answers **409** (also
+//! untouched); success answers **200** with the [`ReloadReport`]. Every
+//! `/classify` and `/stream/finish` reply carries the `model_version`
+//! it was computed under, so a rolling deploy is observable per-reply.
+//!
+//! # Idle timeout
+//!
+//! Keep-alive connections that go quiet for `HttpConfig::idle_timeout`
+//! are reclaimed so slow-loris clients cannot pin the fixed driver
+//! threads forever: an idle connection (nothing buffered) is closed
+//! silently, one with a request *partially* received gets a **408**
+//! first. Both count into the `idle_evicted` metric.
 //!
 //! # Shutdown
 //!
@@ -60,8 +81,9 @@ use std::time::Duration;
 
 use anyhow::{Context, Result};
 
-use crate::engine::{Engine, EngineClient, EngineError, InferReply};
+use crate::engine::{Engine, EngineClient, EngineError, InferReply, ReloadReport};
 use crate::metrics::LatencyHist;
+use crate::model::Artifact;
 use crate::stream::{StreamError, StreamOutcome};
 use crate::util::json::Json;
 use crate::util::pool::WorkerPool;
@@ -86,6 +108,10 @@ pub struct HttpConfig {
     pub drain_grace: Duration,
     /// Reply wait for `/classify` requests that carry no deadline.
     pub default_deadline: Duration,
+    /// Keep-alive connections quiet for this long are reclaimed: closed
+    /// silently when idle, answered **408** when a request was partially
+    /// received (slow-loris protection). Counted as `idle_evicted`.
+    pub idle_timeout: Duration,
 }
 
 impl Default for HttpConfig {
@@ -97,6 +123,7 @@ impl Default for HttpConfig {
             max_body: 16 * 1024 * 1024,
             drain_grace: Duration::from_secs(2),
             default_deadline: Duration::from_secs(30),
+            idle_timeout: Duration::from_secs(60),
         }
     }
 }
@@ -111,6 +138,8 @@ pub struct HttpStats {
     pub shed: AtomicU64,
     /// 429 responses (engine `QueueFull` / stream capacity).
     pub rejected: AtomicU64,
+    /// Connections reclaimed by the keep-alive idle timeout.
+    pub idle_evicted: AtomicU64,
     /// HTTP-level latency: request fully received → response written.
     pub latency: LatencyHist,
 }
@@ -129,6 +158,7 @@ pub(crate) struct ServeCtx {
     pub(crate) max_body: usize,
     pub(crate) default_deadline: Duration,
     pub(crate) drain_grace: Duration,
+    pub(crate) idle_timeout: Duration,
 }
 
 impl ServeCtx {
@@ -165,6 +195,7 @@ impl HttpServer {
             max_body: cfg.max_body,
             default_deadline: cfg.default_deadline,
             drain_grace: cfg.drain_grace,
+            idle_timeout: cfg.idle_timeout,
         });
 
         let (conn_tx, conn_rx) = sync_channel::<TcpStream>(cfg.accept_backlog.max(1));
@@ -319,12 +350,13 @@ pub(crate) fn handle(ctx: &ServeCtx, head: &Head, body: &[u8]) -> Response {
         ("POST", "/stream/open") => stream_open(ctx),
         ("POST", "/stream/append") => stream_append(ctx, head, body),
         ("POST", "/stream/finish") => stream_finish(ctx, head),
+        ("POST", "/admin/reload") => admin_reload(ctx, body),
         ("GET", "/healthz") => Response::json(200, obj(vec![("status", Json::Str("ok".into()))])),
         ("GET", "/metrics") => metrics(ctx),
         (
             _,
-            "/classify" | "/stream/open" | "/stream/append" | "/stream/finish" | "/healthz"
-            | "/metrics",
+            "/classify" | "/stream/open" | "/stream/append" | "/stream/finish" | "/admin/reload"
+            | "/healthz" | "/metrics",
         ) => Response::error(405, "method not allowed"),
         _ => Response::error(404, "no such endpoint"),
     }
@@ -388,6 +420,7 @@ fn reply_doc(r: &InferReply) -> Response {
             ("batch_size", Json::Num(r.batch_size as f64)),
             ("truncated", Json::Bool(r.truncated)),
             ("seq", Json::Num(r.seq as f64)),
+            ("model_version", Json::Num(r.model_version as f64)),
         ]),
     )
 }
@@ -446,6 +479,65 @@ fn outcome_doc(o: &StreamOutcome) -> Json {
         ("appended", Json::Num(o.appended as f64)),
         ("truncated", Json::Bool(o.truncated)),
         ("resident_bytes", Json::Num(o.resident_bytes as f64)),
+        ("model_version", Json::Num(o.model_version as f64)),
+    ])
+}
+
+/// `POST /admin/reload` — body is either `{"path": "..."}` naming an
+/// artifact on the server's filesystem, or the raw artifact bytes
+/// themselves (detected by the `HRRART1` magic). The engine flips only
+/// if at least one bucket accepts the weights; a rejected or corrupt
+/// artifact leaves it serving the previous version untouched.
+fn admin_reload(ctx: &ServeCtx, body: &[u8]) -> Response {
+    let artifact = if Artifact::sniff(body) {
+        Artifact::open_bytes(body)
+    } else {
+        let doc = match Json::parse_bytes(body) {
+            Ok(d) => d,
+            Err(e) => {
+                return Response::error(
+                    400,
+                    format_args!("body must be an artifact upload or {{\"path\": ...}} json: {e}"),
+                )
+            }
+        };
+        match doc.get("path").and_then(Json::as_str) {
+            Some(p) => Artifact::open(std::path::Path::new(p)),
+            None => return Response::error(400, "json body must carry a 'path' string"),
+        }
+    };
+    let artifact = match artifact {
+        Ok(a) => a,
+        // Verification failed (missing file, bad magic, checksum
+        // mismatch, config-hash drift): the engine was never touched.
+        Err(e) => return Response::error(400, format_args!("artifact rejected: {e:#}")),
+    };
+    let report = ctx.client.reload(&artifact);
+    // No bucket accepted the weights — structurally valid JSON+payload,
+    // but the wrong shape for every configured bucket. 409 tells the
+    // deployer the engine is still on the old version.
+    let status = if report.buckets.is_empty() { 409 } else { 200 };
+    Response::json(status, reload_doc(&report))
+}
+
+fn reload_doc(rep: &ReloadReport) -> Json {
+    obj(vec![
+        ("version", Json::Num(rep.version as f64)),
+        ("buckets", Json::Arr(rep.buckets.iter().map(|b| Json::Str(b.clone())).collect())),
+        (
+            "rejected",
+            Json::Arr(
+                rep.rejected
+                    .iter()
+                    .map(|(bucket, reason)| {
+                        obj(vec![
+                            ("bucket", Json::Str(bucket.clone())),
+                            ("reason", Json::Str(reason.clone())),
+                        ])
+                    })
+                    .collect(),
+            ),
+        ),
     ])
 }
 
@@ -475,6 +567,7 @@ fn metrics(ctx: &ServeCtx) -> Response {
         ("throughput_per_s", Json::Num(es.throughput.per_second())),
         ("rejected", Json::Num(es.rejected.load(Ordering::Relaxed) as f64)),
         ("queue_depths", depths),
+        ("model_version", Json::Num(ctx.client.model_version() as f64)),
     ]);
     let pool = match &ctx.pool {
         Some(p) => obj(vec![
@@ -488,6 +581,7 @@ fn metrics(ctx: &ServeCtx) -> Response {
         ("requests", Json::Num(hs.requests.load(Ordering::Relaxed) as f64)),
         ("shed", Json::Num(hs.shed.load(Ordering::Relaxed) as f64)),
         ("rejected", Json::Num(hs.rejected.load(Ordering::Relaxed) as f64)),
+        ("idle_evicted", Json::Num(hs.idle_evicted.load(Ordering::Relaxed) as f64)),
         (
             "latency_ms",
             obj(vec![

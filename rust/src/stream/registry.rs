@@ -111,6 +111,9 @@ pub struct StreamOutcome {
     /// Heap bytes of the carried per-stream model state at finish time
     /// — O(H), independent of `tokens`.
     pub resident_bytes: usize,
+    /// Weight version the stream ran on — pinned at open, so a hot
+    /// reload mid-stream never mixes weights within one classification.
+    pub model_version: u64,
 }
 
 #[derive(Clone, Copy, Debug)]
@@ -336,6 +339,7 @@ impl StreamRegistry {
             appended,
             truncated,
             resident_bytes: st.resident_bytes(),
+            model_version: st.model_version(),
             logits,
         })
     }

@@ -1,0 +1,179 @@
+//! Integration: versioned weight artifacts + zero-downtime hot reload.
+//!
+//! Native-only (artifact-backend buckets own compiled programs and
+//! cannot hot-swap), so everything here runs on a fresh checkout:
+//!
+//! * reload under fire — sustained `/classify`-path traffic and an open
+//!   stream across an `Engine::reload`, with zero dropped requests,
+//!   monotone per-client version observations, the pre-reload stream
+//!   finishing on its *opening* weights, and post-flip replies carrying
+//!   the new version;
+//! * a structurally mismatched artifact is rejected by every bucket and
+//!   leaves the engine serving the old version untouched;
+//! * a corrupted artifact file fails checksum verification before the
+//!   engine is ever involved.
+
+use std::path::Path;
+use std::time::Duration;
+
+use hrrformer::coordinator::BatchPolicy;
+use hrrformer::engine::{Backend, Engine};
+use hrrformer::hrr::{init_native_params, HrrConfig};
+use hrrformer::model::{Artifact, ParamStore, Provenance};
+
+// Same T on purpose: the EMBER presets carry a learned positional
+// table of shape (T, E), so one artifact is structurally valid exactly
+// for buckets of its own sequence length.
+const PREDICT_BASE: &str = "ember_hrrformer_small_T64_B4";
+const STREAM_BASE: &str = "ember_hrrformer_small_T64_B1";
+
+fn write_artifact_for(path: &Path, cfg: &HrrConfig, seed: u32) -> ParamStore {
+    let params = init_native_params(cfg, seed);
+    let provenance = Provenance {
+        task: cfg.task.clone(),
+        base: PREDICT_BASE.into(),
+        step: 0,
+        final_eval: None,
+    };
+    Artifact::write(path, cfg, &params, provenance).unwrap();
+    params
+}
+
+fn tmp(name: &str) -> std::path::PathBuf {
+    let dir = std::env::temp_dir().join("hrrformer_artifact_reload");
+    std::fs::create_dir_all(&dir).unwrap();
+    dir.join(name)
+}
+
+fn request_ids(salt: i32) -> Vec<i32> {
+    (1..=48).map(|i| (i * salt) % 250 + 1).collect()
+}
+
+#[test]
+fn reload_under_fire_is_zero_downtime() {
+    let engine = Engine::builder()
+        .buckets([PREDICT_BASE])
+        .stream_bucket(STREAM_BASE)
+        .stream_config({
+            let mut scfg = hrrformer::stream::StreamConfig::new(tmp("spools"));
+            scfg.chunk_cap = 32; // exercise multi-chunk appends at tiny T
+            scfg
+        })
+        .policy(BatchPolicy { max_batch: 4, max_wait: Duration::from_millis(2) })
+        .queue_depth(64)
+        .seed(5)
+        .backend(Backend::Native)
+        .build_native()
+        .unwrap();
+    assert_eq!(engine.model_version(), 1, "engines start on version 1");
+
+    // A stream opened before the flip: it pins the opening weights.
+    let early_stream = engine.open_stream().unwrap();
+    engine.append_stream(early_stream, vec![7u8; 96]).unwrap();
+
+    // Sustained classify traffic across the flip, from two clients.
+    // Every request must succeed — a reload that drops or errors even
+    // one in-flight request is not zero-downtime.
+    let mut workers = Vec::new();
+    for w in 0..2i32 {
+        let client = engine.client();
+        workers.push(std::thread::spawn(move || {
+            let ids = request_ids(w + 3);
+            (0..30)
+                .map(|_| client.submit_wait(ids.clone()).unwrap().wait().unwrap().model_version)
+                .collect::<Vec<u64>>()
+        }));
+    }
+
+    // Flip mid-fire. Predict and stream buckets share T=64, so the one
+    // artifact is structurally valid for both.
+    std::thread::sleep(Duration::from_millis(20));
+    let path = tmp("v2.hrrart");
+    write_artifact_for(&path, &HrrConfig::from_base(PREDICT_BASE).unwrap(), 99);
+    let report = engine.reload(&Artifact::open(&path).unwrap());
+    assert_eq!(report.version, 2);
+    assert!(report.rejected.is_empty(), "unexpected rejections: {:?}", report.rejected);
+    let mut accepted = report.buckets.clone();
+    accepted.sort();
+    let mut want = vec![PREDICT_BASE.to_string(), STREAM_BASE.to_string()];
+    want.sort();
+    assert_eq!(accepted, want, "both buckets flip, the stream bucket included");
+    assert_eq!(engine.model_version(), 2);
+
+    for w in workers {
+        let versions = w.join().unwrap(); // unwrap = zero dropped requests
+        assert_eq!(versions.len(), 30);
+        assert!(versions.iter().all(|&v| v == 1 || v == 2), "alien version in {versions:?}");
+        assert!(
+            versions.windows(2).all(|p| p[0] <= p[1]),
+            "per-client versions must be monotone (batches pin one version): {versions:?}"
+        );
+    }
+
+    // Post-flip replies carry the new version.
+    let reply = engine.submit_wait(request_ids(11)).unwrap().wait().unwrap();
+    assert_eq!(reply.model_version, 2);
+
+    // The early stream keeps appending and finishes on its *opening*
+    // weights — a reload mid-stream never mixes generations.
+    engine.append_stream(early_stream, vec![9u8; 40]).unwrap();
+    let out = engine.finish_stream(early_stream).unwrap();
+    assert_eq!(out.model_version, 1, "pre-reload stream must finish on version 1");
+    assert!(out.logits.iter().all(|v| v.is_finite()));
+
+    // Streams opened after the flip run on the new weights.
+    let late_stream = engine.open_stream().unwrap();
+    engine.append_stream(late_stream, vec![1u8; 16]).unwrap();
+    let out = engine.finish_stream(late_stream).unwrap();
+    assert_eq!(out.model_version, 2);
+
+    engine.stop();
+}
+
+#[test]
+fn bad_artifacts_leave_the_engine_untouched() {
+    let engine = Engine::builder()
+        .buckets([PREDICT_BASE])
+        .policy(BatchPolicy { max_batch: 4, max_wait: Duration::from_millis(2) })
+        .queue_depth(16)
+        .seed(5)
+        .backend(Backend::Native)
+        .build_native()
+        .unwrap();
+    assert_eq!(engine.model_version(), 1);
+
+    // Structurally valid artifact of the wrong shape: every bucket
+    // rejects it, the version does not move, nothing is half-installed.
+    let mut wrong = HrrConfig::from_base(PREDICT_BASE).unwrap();
+    wrong.embed *= 2;
+    wrong.mlp_dim *= 2;
+    let wrong_path = tmp("wrong_shape.hrrart");
+    write_artifact_for(&wrong_path, &wrong, 3);
+    let report = engine.reload(&Artifact::open(&wrong_path).unwrap());
+    assert!(report.buckets.is_empty(), "no bucket may accept mismatched shapes");
+    assert_eq!(report.version, 1, "rejected reload must not advance the version");
+    assert_eq!(report.rejected.len(), 1);
+    assert_eq!(report.rejected[0].0, PREDICT_BASE);
+    assert!(!report.rejected[0].1.is_empty(), "rejections carry a reason");
+
+    // A corrupted artifact file fails verification at open — with a
+    // typed checksum error — before `reload` can even be called.
+    let good_path = tmp("good_then_corrupt.hrrart");
+    write_artifact_for(&good_path, &HrrConfig::from_base(PREDICT_BASE).unwrap(), 7);
+    let mut bytes = std::fs::read(&good_path).unwrap();
+    let last = bytes.len() - 1;
+    bytes[last] ^= 0x40;
+    std::fs::write(&good_path, &bytes).unwrap();
+    let err = Artifact::open(&good_path).unwrap_err();
+    assert!(
+        format!("{err:#}").contains("checksum"),
+        "corruption must surface as a checksum mismatch: {err:#}"
+    );
+
+    // Through it all the engine still serves, on the original weights.
+    assert_eq!(engine.model_version(), 1);
+    let reply = engine.submit_wait(request_ids(5)).unwrap().wait().unwrap();
+    assert_eq!(reply.model_version, 1);
+    assert!(reply.logits.iter().all(|v| v.is_finite()));
+    engine.stop();
+}

@@ -12,6 +12,8 @@ use std::time::{Duration, Instant};
 
 use hrrformer::coordinator::BatchPolicy;
 use hrrformer::engine::Engine;
+use hrrformer::hrr::{init_native_params, HrrConfig};
+use hrrformer::model::{Artifact, Provenance};
 use hrrformer::net::{HttpConfig, HttpServer};
 use hrrformer::stream::StreamConfig;
 use hrrformer::util::json::Json;
@@ -491,6 +493,156 @@ fn metrics_reports_engine_pool_and_http_counters() {
 
     let httpm = doc.get("http").expect("http section");
     assert!(httpm.get("requests").and_then(Json::as_usize).unwrap_or(0) >= 4);
+
+    http.stop();
+    engine.stop();
+}
+
+#[test]
+fn admin_reload_swaps_weights_without_dropping_the_socket() {
+    let engine = engine(64, 8, Duration::from_millis(10));
+    let http = server(&engine);
+    let addr = http.addr();
+
+    // Baseline: replies carry the boot version.
+    let (status, body) = roundtrip(addr, &post("/classify", &ids_body(16)));
+    assert_eq!(status, 200, "body: {body}");
+    let doc = Json::parse(&body).unwrap();
+    assert_eq!(doc.get("model_version").and_then(Json::as_usize), Some(1));
+
+    // Write a fresh artifact for the served bucket's exact config.
+    let dir = std::env::temp_dir().join("hrrformer_http_reload");
+    std::fs::create_dir_all(&dir).unwrap();
+    let path = dir.join("v2.hrrart");
+    let cfg = HrrConfig::from_base(T64).unwrap();
+    let params = init_native_params(&cfg, 42);
+    let provenance =
+        Provenance { task: cfg.task.clone(), base: T64.into(), step: 0, final_eval: None };
+    Artifact::write(&path, &cfg, &params, provenance).unwrap();
+
+    // Path-mode reload: the server opens and verifies the file itself.
+    let reload_body = format!("{{\"path\":\"{}\"}}", path.display());
+    let (status, body) = roundtrip(addr, &post("/admin/reload", &reload_body));
+    assert_eq!(status, 200, "reload: {body}");
+    let doc = Json::parse(&body).unwrap();
+    assert_eq!(doc.get("version").and_then(Json::as_usize), Some(2));
+    assert_eq!(doc.get("buckets").and_then(Json::as_arr).map(|b| b.len()), Some(1));
+    assert_eq!(doc.get("rejected").and_then(Json::as_arr).map(|r| r.len()), Some(0));
+
+    // Classify replies and /metrics both observe the flip.
+    let (status, body) = roundtrip(addr, &post("/classify", &ids_body(16)));
+    assert_eq!(status, 200, "body: {body}");
+    assert_eq!(Json::parse(&body).unwrap().get("model_version").and_then(Json::as_usize), Some(2));
+    let (_, body) = roundtrip(addr, &get("/metrics"));
+    assert!(body.contains("\"model_version\":2"), "metrics must echo the live version: {body}");
+
+    // Upload-mode reload: raw artifact bytes as the POST body.
+    let raw = std::fs::read(&path).unwrap();
+    let mut req = format!(
+        "POST /admin/reload HTTP/1.1\r\nHost: t\r\nContent-Length: {}\r\n\r\n",
+        raw.len()
+    )
+    .into_bytes();
+    req.extend_from_slice(&raw);
+    let mut s = connect(addr);
+    s.write_all(&req).unwrap();
+    let (status, body, _) = read_response(&mut s);
+    assert_eq!(status, 200, "upload reload: {body}");
+    assert_eq!(Json::parse(&body).unwrap().get("version").and_then(Json::as_usize), Some(3));
+
+    // A corrupted upload fails checksum verification with a 400 and the
+    // engine keeps serving the version it already had.
+    let mut bad = raw.clone();
+    let last = bad.len() - 1;
+    bad[last] ^= 0x40;
+    let mut req = format!(
+        "POST /admin/reload HTTP/1.1\r\nHost: t\r\nContent-Length: {}\r\n\r\n",
+        bad.len()
+    )
+    .into_bytes();
+    req.extend_from_slice(&bad);
+    let mut s = connect(addr);
+    s.write_all(&req).unwrap();
+    let (status, body, _) = read_response(&mut s);
+    assert_eq!(status, 400, "corrupt upload must be rejected: {body}");
+    assert!(body.contains("checksum"), "corruption reason names the checksum: {body}");
+
+    // Garbage JSON and JSON without a path are both 400s.
+    assert_eq!(roundtrip(addr, &post("/admin/reload", "not json")).0, 400);
+    assert_eq!(roundtrip(addr, &post("/admin/reload", "{\"nope\":1}")).0, 400);
+
+    // A structurally mismatched artifact verifies but no bucket accepts
+    // it: 409, version unchanged.
+    let mut wrong = HrrConfig::from_base(T64).unwrap();
+    wrong.embed *= 2;
+    wrong.mlp_dim *= 2;
+    let wrong_path = dir.join("wrong.hrrart");
+    let wrong_params = init_native_params(&wrong, 1);
+    let provenance =
+        Provenance { task: wrong.task.clone(), base: T64.into(), step: 0, final_eval: None };
+    Artifact::write(&wrong_path, &wrong, &wrong_params, provenance).unwrap();
+    let reload_body = format!("{{\"path\":\"{}\"}}", wrong_path.display());
+    let (status, body) = roundtrip(addr, &post("/admin/reload", &reload_body));
+    assert_eq!(status, 409, "mismatched artifact: {body}");
+    let doc = Json::parse(&body).unwrap();
+    assert_eq!(doc.get("buckets").and_then(Json::as_arr).map(|b| b.len()), Some(0));
+    assert_eq!(doc.get("rejected").and_then(Json::as_arr).map(|r| r.len()), Some(1));
+
+    // Still on version 3 after every failed attempt.
+    let (_, body) = roundtrip(addr, &get("/metrics"));
+    assert!(body.contains("\"model_version\":3"), "failed reloads must not move the version: {body}");
+
+    // Wrong method.
+    assert_eq!(roundtrip(addr, &get("/admin/reload")).0, 405);
+
+    http.stop();
+    engine.stop();
+}
+
+#[test]
+fn idle_connections_are_evicted() {
+    let engine = engine(64, 8, Duration::from_millis(10));
+    let http = server_with(
+        &engine,
+        HttpConfig { idle_timeout: Duration::from_millis(200), ..HttpConfig::default() },
+    );
+    let addr = http.addr();
+
+    // A connection that never sends a byte is closed silently (no 408
+    // for a client that never started a request).
+    let mut quiet = connect(addr);
+    let mut tmp = [0u8; 64];
+    let n = quiet.read(&mut tmp).expect("idle close is a clean FIN, not a reset");
+    assert_eq!(n, 0, "idle keep-alive connection must close without a response");
+
+    // A stalled partial request head gets a 408 and a close — the
+    // slow-loris case.
+    let mut slow = connect(addr);
+    slow.write_all(b"POST /classify HTTP/1.1\r\nHost: t\r\n").unwrap();
+    slow.flush().unwrap();
+    let (status, body, close) = read_response(&mut slow);
+    assert_eq!(status, 408, "stalled head: {body}");
+    assert!(close, "a timed-out connection must not be kept alive");
+
+    // A stalled body (head complete, bytes missing) also times out.
+    let mut slow_body = connect(addr);
+    slow_body
+        .write_all(b"POST /classify HTTP/1.1\r\nHost: t\r\nContent-Length: 50\r\n\r\n{\"ids\":[1")
+        .unwrap();
+    slow_body.flush().unwrap();
+    let (status, _, close) = read_response(&mut slow_body);
+    assert_eq!(status, 408);
+    assert!(close);
+
+    // Evictions are visible both on the handle and in /metrics.
+    let evicted = http.stats().idle_evicted.load(std::sync::atomic::Ordering::Relaxed);
+    assert!(evicted >= 3, "expected >= 3 idle evictions, saw {evicted}");
+    let (_, body) = roundtrip(addr, &get("/metrics"));
+    assert!(body.contains("\"idle_evicted\""), "metrics must report idle evictions: {body}");
+
+    // A healthy request on the same server still works — the timeout
+    // only reclaims dead connections.
+    assert_eq!(roundtrip(addr, &post("/classify", &ids_body(16))).0, 200);
 
     http.stop();
     engine.stop();

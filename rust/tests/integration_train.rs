@@ -31,6 +31,7 @@ fn trainer_reduces_loss_and_writes_curve_and_ckpt() {
         eval_batches: 2,
         curve_csv: Some(curve.clone()),
         ckpt: Some(ckpt.clone()),
+        artifact: None,
         verbose: false,
     };
     let report = train(&rt, &manifest, &cfg).unwrap();
@@ -67,6 +68,7 @@ fn native_trainer_runs_the_full_loop_artifact_free() {
         eval_batches: 1,
         curve_csv: Some(curve.clone()),
         ckpt: Some(ckpt.clone()),
+        artifact: None,
         verbose: false,
     };
     let report = train_native(&cfg).unwrap();
@@ -82,10 +84,14 @@ fn native_trainer_runs_the_full_loop_artifact_free() {
     assert_eq!(content.lines().count(), 4, "csv rows: {content}");
     assert!(content.starts_with("step,train_loss"));
 
-    // the checkpoint round-trips into the native *serving* session
-    let store = hrrformer::model::ParamStore::load(&ckpt).unwrap();
+    // native checkpoints are versioned artifacts now: manifest verifies,
+    // provenance records the run, and the payload round-trips into the
+    // native *serving* session
+    let art = hrrformer::model::Artifact::open(&ckpt).unwrap();
+    assert_eq!(art.manifest.provenance.base, "listops_hrrformer_small_T32_B4");
+    assert_eq!(art.manifest.provenance.step, 9);
     let cfg = hrrformer::hrr::HrrConfig::from_base("listops_hrrformer_small_T32_B4").unwrap();
-    let serve = hrrformer::hrr::NativeSession::with_params(cfg, store).unwrap();
+    let serve = hrrformer::hrr::NativeSession::with_params(cfg, art.params).unwrap();
     let logits = serve
         .predict(&hrrformer::runtime::Tensor::i32(vec![1, 8], vec![1, 2, 3, 4, 5, 6, 7, 8]))
         .unwrap();

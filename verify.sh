@@ -108,6 +108,63 @@ if ! [[ "$final_loss" =~ ^-?[0-9]+(\.[0-9]+)?$ ]]; then
     exit 1
 fi
 
+# Hot-reload smoke (artifact-free): train a deployable weight artifact
+# (`train --emit-artifact`), stand the HTTP server back up on the
+# matching-T bucket, flip it live with `POST /admin/reload`, and require
+# /metrics to report the bumped model version. The EMBER presets carry a
+# learned positional table of shape (T, E), so the emitted artifact's T
+# must match the served bucket's T — both 64 here.
+artifact_path=results/verify_weights.hrrart
+rm -f "$artifact_path"
+run env HRRFORMER_ARTIFACTS=/hrrformer-no-artifacts \
+    cargo run --release -- train --base ember_hrrformer_small_T64_B8 --backend native \
+    --steps 4 --eval-every 4 --eval-batches 1 --emit-artifact "$artifact_path"
+if [[ ! -s "$artifact_path" ]]; then
+    echo "verify: FAIL — train --emit-artifact wrote no artifact" >&2
+    exit 1
+fi
+env HRRFORMER_ARTIFACTS=/hrrformer-no-artifacts \
+    cargo run --release -- serve --http --backend native \
+    --bases ember_hrrformer_small_T64_B8 --queue-depth 4 \
+    --addr 127.0.0.1:${http_port} --http-secs 30 &
+serve_pid=$!
+ready=0
+for _ in $(seq 1 75); do
+    if (exec 3<>"/dev/tcp/127.0.0.1/${http_port}") 2>/dev/null; then
+        ready=1
+        break
+    fi
+    sleep 0.2
+done
+if [[ $ready -ne 1 ]]; then
+    echo "verify: FAIL — serve --http (reload smoke) never started listening on :${http_port}" >&2
+    kill "$serve_pid" 2>/dev/null || true
+    exit 1
+fi
+# POST the reload and scrape /metrics over bash's /dev/tcp — no curl
+# needed for the gate.
+reload_body="{\"path\":\"${PWD}/${artifact_path}\"}"
+exec 3<>"/dev/tcp/127.0.0.1/${http_port}"
+printf 'POST /admin/reload HTTP/1.1\r\nHost: v\r\nContent-Length: %s\r\nConnection: close\r\n\r\n%s' \
+    "${#reload_body}" "$reload_body" >&3
+reload_reply=$(cat <&3)
+exec 3<&- 3>&-
+if ! grep -q '"version":2' <<<"$reload_reply"; then
+    echo "verify: FAIL — POST /admin/reload did not flip to version 2: ${reload_reply}" >&2
+    kill "$serve_pid" 2>/dev/null || true
+    exit 1
+fi
+exec 3<>"/dev/tcp/127.0.0.1/${http_port}"
+printf 'GET /metrics HTTP/1.1\r\nHost: v\r\nConnection: close\r\n\r\n' >&3
+metrics_reply=$(cat <&3)
+exec 3<&- 3>&-
+kill "$serve_pid" 2>/dev/null || true
+wait "$serve_pid" 2>/dev/null || true
+if ! grep -q '"model_version":2' <<<"$metrics_reply"; then
+    echo "verify: FAIL — /metrics does not report model_version 2 after reload: ${metrics_reply}" >&2
+    exit 1
+fi
+
 if [[ "${1:-}" != "--fast" ]]; then
     run cargo fmt --check
     run cargo clippy --all-targets -- -D warnings
