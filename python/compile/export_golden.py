@@ -19,7 +19,10 @@ from those f32 values, exactly like the Rust implementation's
 f32-buffers/f64-accumulators split.
 
 Parameter names/order follow the canonical layout of
-``rust/src/hrr/model.rs::param_specs``.
+``rust/src/hrr/common/mod.rs::param_specs``. Fixtures whose config
+carries ``"arch": "hgconv"`` swap the three per-block mixer slots for
+the gated holographic convolution (``rust/src/hrr/hgconv``) and run its
+numpy mirror instead of HRR attention; everything else is shared.
 
 Usage:  python -m compile.export_golden   (from python/)
    or:  python python/compile/export_golden.py   (from the repo root)
@@ -80,6 +83,44 @@ def hrr_attention(q, k, v, mask):
     return w * v
 
 
+def filter_len(cfg):
+    """HGConv learned-taps length (rust hgconv::filter_len)."""
+    return min(cfg["seq_len"], 64)
+
+
+def hgconv_mix(cfg, h, gate, conv, taps, mask):
+    """HGConv token mixer (rust/src/hrr/hgconv/mod.rs mixer_forward):
+    gated per-channel length-t circular convolution of the projected
+    input with zero-padded learned taps; PAD rows zeroed on the way in
+    (they feed nothing into any output position) and on the way out."""
+    b, t, e = h.shape
+    g_pre = h @ gate
+    u = (h @ conv) * mask[..., None]
+    # short rows truncate the learned kernel with them
+    fl = min(filter_len(cfg), t)
+    pad = np.zeros((t, e))
+    pad[:fl] = taps[:fl]
+    c = np.fft.irfft(
+        np.fft.rfft(u, axis=1) * np.fft.rfft(pad, axis=0)[None, :, :], n=t, axis=1
+    )
+    return gelu_tanh(g_pre) * c * mask[..., None]
+
+
+def check_circ_conv_against_direct_sum():
+    """The FFT identity hgconv_mix leans on, pinned against the O(t²)
+    direct sum before any fixture is written (mirrors the rust unit
+    test hgconv::tests::circ_conv_matches_the_direct_sum)."""
+    rng = np.random.default_rng(12345)
+    for n in (4, 7, 12, 16):
+        a = rng.standard_normal(n)
+        b = rng.standard_normal(n)
+        fast = np.fft.irfft(np.fft.rfft(a) * np.fft.rfft(b), n=n)
+        direct = np.array(
+            [sum(a[k] * b[(n + i - k) % n] for k in range(n)) for i in range(n)]
+        )
+        assert np.max(np.abs(fast - direct)) < 1e-9, "circular-conv FFT identity broke"
+
+
 def split_heads(x, heads):
     b, t, e = x.shape
     return x.reshape(b, t, heads, e // heads).transpose(0, 2, 1, 3)
@@ -105,10 +146,16 @@ def forward(cfg, params, ids):
     for i in range(cfg["layers"]):
         n = f"blocks.{i}."
         h = layernorm(x, p[n + "ln1.scale"], p[n + "ln1.bias"])
-        q = split_heads(h @ p[n + "mixer.query.kernel"], heads)
-        k = split_heads(h @ p[n + "mixer.key.kernel"], heads)
-        v = split_heads(h @ p[n + "mixer.value.kernel"], heads)
-        mixed = merge_heads(hrr_attention(q, k, v, mask))
+        if cfg.get("arch") == "hgconv":
+            mixed = hgconv_mix(
+                cfg, h, p[n + "mixer.gate.kernel"], p[n + "mixer.conv.kernel"],
+                p[n + "mixer.filter.taps"], mask,
+            )
+        else:
+            q = split_heads(h @ p[n + "mixer.query.kernel"], heads)
+            k = split_heads(h @ p[n + "mixer.key.kernel"], heads)
+            v = split_heads(h @ p[n + "mixer.value.kernel"], heads)
+            mixed = merge_heads(hrr_attention(q, k, v, mask))
         x = x + mixed @ p[n + "mixer.output.kernel"]
         h = layernorm(x, p[n + "ln2.scale"], p[n + "ln2.bias"])
         h = gelu_tanh(h @ p[n + "mlp.fc1.kernel"] + p[n + "mlp.fc1.bias"])
@@ -146,9 +193,16 @@ def make_params(cfg, rng):
         # actually exercises those code paths
         out.append((n + "ln1.scale", normal((e,), 0.1) + 1.0))
         out.append((n + "ln1.bias", normal((e,), 0.05)))
-        out.append((n + "mixer.query.kernel", glorot((e, e))))
-        out.append((n + "mixer.key.kernel", glorot((e, e))))
-        out.append((n + "mixer.value.kernel", glorot((e, e))))
+        if cfg.get("arch") == "hgconv":
+            out.append((n + "mixer.gate.kernel", glorot((e, e))))
+            out.append((n + "mixer.conv.kernel", glorot((e, e))))
+            # big enough that the convolution output actually moves the
+            # gated mix (init-scale taps would make parity trivial)
+            out.append((n + "mixer.filter.taps", normal((filter_len(cfg), e), 0.2)))
+        else:
+            out.append((n + "mixer.query.kernel", glorot((e, e))))
+            out.append((n + "mixer.key.kernel", glorot((e, e))))
+            out.append((n + "mixer.value.kernel", glorot((e, e))))
         out.append((n + "mixer.output.kernel", glorot((e, e))))
         out.append((n + "ln2.scale", normal((e,), 0.1) + 1.0))
         out.append((n + "ln2.bias", normal((e,), 0.05)))
@@ -512,10 +566,12 @@ def export_train(name, cfg, hyper, seed, steps):
     print(f"wrote {path}: {steps} train steps, loss {curve[0][0]:.4f} -> {curve[-1][0]:.4f}")
 
 
-def export(name, cfg, seed):
+def export(name, cfg, seed, row_t=None):
     rng = np.random.default_rng(seed)
     params = make_params(cfg, rng)
-    b, t = cfg["batch"], cfg["seq_len"]
+    # row_t < seq_len pins the short-row path (the native forward
+    # accepts any t ≤ the bucket length; hgconv truncates its taps)
+    b, t = cfg["batch"], row_t or cfg["seq_len"]
     ids = rng.integers(1, cfg["vocab"], size=(b, t)).astype(np.int32)
     # trailing PAD on the last row exercises the mask everywhere
     ids[-1, t - t // 3 :] = PAD_ID
@@ -579,6 +635,46 @@ def main():
             "pos": "learned",
         },
         seed=777,
+    )
+    # second architecture: gated holographic global convolution, full
+    # taps (t == filter_len), fixed positions, PAD in play
+    check_circ_conv_against_direct_sum()
+    export(
+        "golden_hgconv",
+        {
+            "task": "golden",
+            "arch": "hgconv",
+            "vocab": 13,
+            "seq_len": 12,
+            "batch": 2,
+            "embed": 16,
+            "mlp_dim": 32,
+            "heads": 2,
+            "layers": 2,
+            "classes": 4,
+            "pos": "fixed",
+        },
+        seed=20240811,
+    )
+    # hgconv short rows: t=6 < filter_len=10, so the learned taps are
+    # truncated with the row; learned positions sliced to a prefix
+    export(
+        "golden_hgconv_short",
+        {
+            "task": "golden",
+            "arch": "hgconv",
+            "vocab": 9,
+            "seq_len": 10,
+            "batch": 2,
+            "embed": 12,
+            "mlp_dim": 16,
+            "heads": 2,
+            "layers": 1,
+            "classes": 3,
+            "pos": "learned",
+        },
+        seed=424242,
+        row_t=6,
     )
     # short golden train curve: pow2 head dim, learned positions (the
     # pos-table gradient path), LR decay fast enough to move within the

@@ -115,6 +115,8 @@ pub fn run(rt: &Runtime, manifest: &Manifest, cfg: &EmberBenchCfg) -> Result<Vec
                 curve_csv: None,
                 ckpt: None,
                 artifact: None,
+                dropout: 0.0,
+                keep_artifacts: 0,
                 verbose: false,
             };
             match train(rt, manifest, &tc) {

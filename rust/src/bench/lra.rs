@@ -5,12 +5,24 @@
 //! and prints the accuracy matrix in the paper's layout. Hrrformer also
 //! runs in its single-layer variant (the paper's headline "learning with
 //! just one layer" claim).
+//!
+//! [`run_native`] is the artifact-free variant (`bench lra --native`):
+//! it trains + evals every native architecture (hrrformer, hgconv) on
+//! all five LRA loaders through the pure-Rust reverse-mode path and
+//! writes the accuracy matrix to `BENCH_lra.json` — one top-level key
+//! per architecture, so trajectory tooling can diff the two mixers
+//! across PRs.
+
+use std::collections::BTreeMap;
+use std::path::{Path, PathBuf};
 
 use anyhow::Result;
 
 use crate::bench::{results_dir, LRA_MODELS};
-use crate::coordinator::trainer::{train, TrainConfig, TrainReport};
+use crate::coordinator::trainer::{train, train_native, TrainConfig, TrainReport};
+use crate::hrr::Arch;
 use crate::runtime::{Manifest, Runtime};
+use crate::util::json::Json;
 use crate::util::table::Table;
 
 pub const LRA_TASKS: &[&str] = &["listops", "text", "retrieval", "image", "pathfinder"];
@@ -22,6 +34,14 @@ pub struct LraBenchCfg {
     pub models: Vec<String>,
     pub tasks: Vec<String>,
     pub curves: bool,
+    /// `--native` sweep shape: the native backend resolves bases against
+    /// the preset tables, so T/B are free — small defaults keep a full
+    /// 2-arch × 5-task CPU sweep tractable.
+    pub native_seq_len: usize,
+    pub native_batch: usize,
+    /// Where the `--native` accuracy matrix lands (CWD-relative like
+    /// `BENCH_native.json`: a repo-root trajectory file, not results/).
+    pub out: PathBuf,
 }
 
 impl Default for LraBenchCfg {
@@ -33,6 +53,9 @@ impl Default for LraBenchCfg {
             models: LRA_MODELS.iter().map(|s| s.to_string()).collect(),
             tasks: LRA_TASKS.iter().map(|s| s.to_string()).collect(),
             curves: false,
+            native_seq_len: 128,
+            native_batch: 4,
+            out: PathBuf::from("BENCH_lra.json"),
         }
     }
 }
@@ -102,6 +125,8 @@ pub fn run(rt: &Runtime, manifest: &Manifest, cfg: &LraBenchCfg) -> Result<Vec<L
             curve_csv,
             ckpt: None,
             artifact: None,
+            dropout: 0.0,
+            keep_artifacts: 0,
             verbose: false,
         };
         match train(rt, manifest, &tc) {
@@ -176,6 +201,100 @@ fn print_table1(cells: &[LraCell], cfg: &LraBenchCfg) {
     eprintln!("[lra] Table 1 data → {}", path.display());
 }
 
+/// `bench lra --native`: train + eval every native architecture on the
+/// LRA loaders through the pure-Rust path — no manifest, no artifacts —
+/// and write the accuracy matrix to [`LraBenchCfg::out`].
+pub fn run_native(cfg: &LraBenchCfg) -> Result<Vec<LraCell>> {
+    let mut cells = Vec::new();
+    for arch in Arch::all() {
+        for task in &cfg.tasks {
+            let base =
+                format!("{task}_{arch}_small_T{}_B{}", cfg.native_seq_len, cfg.native_batch);
+            let tc = TrainConfig {
+                base: base.clone(),
+                seed: cfg.seed,
+                steps: cfg.steps,
+                // final eval only: the matrix wants one number per cell
+                eval_every: 0,
+                eval_batches: cfg.eval_batches,
+                verbose: false,
+                ..TrainConfig::default()
+            };
+            match train_native(&tc) {
+                Ok(report) => {
+                    eprintln!(
+                        "[lra] {task:<11} {arch:<10} (native) acc {:.4} ({:.0}s)",
+                        report.final_test_acc, report.total_secs
+                    );
+                    cells.push(LraCell {
+                        model: arch.to_string(),
+                        task: task.clone(),
+                        single_layer: false,
+                        report,
+                    });
+                }
+                Err(e) => eprintln!("[lra] {task} {arch} (native) FAILED: {e:#}"),
+            }
+        }
+    }
+    anyhow::ensure!(!cells.is_empty(), "every native LRA cell failed");
+
+    let mut headers: Vec<String> = vec!["Arch".into()];
+    headers.extend(cfg.tasks.iter().cloned());
+    let hdr: Vec<&str> = headers.iter().map(|s| s.as_str()).collect();
+    let mut t = Table::new(
+        &format!(
+            "LRA accuracy — native backend, T={} B={} steps={}",
+            cfg.native_seq_len, cfg.native_batch, cfg.steps
+        ),
+        &hdr,
+    );
+    for arch in Arch::all() {
+        let mut row = vec![arch.to_string()];
+        for task in &cfg.tasks {
+            match cells.iter().find(|c| &c.task == task && c.model == arch.as_str()) {
+                Some(c) => row.push(format!("{:.2}", c.report.final_test_acc as f64 * 100.0)),
+                None => row.push("-".into()),
+            }
+        }
+        t.row(row);
+    }
+    t.print();
+
+    write_native_json(&cells, cfg, &cfg.out)?;
+    Ok(cells)
+}
+
+/// The `BENCH_lra.json` document: one top-level key per architecture
+/// mapping task → {test_acc, train_acc, secs}. Split from the file
+/// write so serialization is unit-testable.
+fn native_doc(cells: &[LraCell], cfg: &LraBenchCfg) -> Json {
+    let mut root = BTreeMap::new();
+    root.insert("bench".to_string(), Json::Str("lra_native".to_string()));
+    root.insert("steps".to_string(), Json::Num(cfg.steps as f64));
+    root.insert("seq_len".to_string(), Json::Num(cfg.native_seq_len as f64));
+    root.insert("batch".to_string(), Json::Num(cfg.native_batch as f64));
+    for arch in Arch::all() {
+        let mut tasks = BTreeMap::new();
+        for c in cells.iter().filter(|c| c.model == arch.as_str()) {
+            let mut m = BTreeMap::new();
+            // non-finite metrics serialize as null (util::json rule)
+            m.insert("test_acc".to_string(), Json::Num(c.report.final_test_acc as f64));
+            m.insert("train_acc".to_string(), Json::Num(c.report.final_train_acc as f64));
+            m.insert("secs".to_string(), Json::Num(c.report.total_secs));
+            tasks.insert(c.task.clone(), Json::Obj(m));
+        }
+        root.insert(arch.as_str().to_string(), Json::Obj(tasks));
+    }
+    Json::Obj(root)
+}
+
+fn write_native_json(cells: &[LraCell], cfg: &LraBenchCfg, path: &Path) -> Result<()> {
+    std::fs::write(path, native_doc(cells, cfg).to_string() + "\n")?;
+    eprintln!("[lra] native accuracy matrix → {}", path.display());
+    Ok(())
+}
+
 fn print_table2(cells: &[LraCell]) {
     let image: Vec<&LraCell> =
         cells.iter().filter(|c| c.task == "image" && !c.single_layer).collect();
@@ -195,4 +314,34 @@ fn print_table2(cells: &[LraCell]) {
         ]);
     }
     t2.print();
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn native_doc_has_one_key_per_architecture() {
+        let cfg = LraBenchCfg::default();
+        let mk = |model: &str, task: &str, acc: f32| LraCell {
+            model: model.into(),
+            task: task.into(),
+            single_layer: false,
+            report: TrainReport {
+                final_test_acc: acc,
+                final_train_acc: acc,
+                total_secs: 1.0,
+                ..TrainReport::default()
+            },
+        };
+        let cells = vec![mk("hrrformer", "listops", 0.5), mk("hgconv", "listops", f32::NAN)];
+        let doc = native_doc(&cells, &cfg).to_string();
+        let parsed = Json::parse(&doc).expect("BENCH_lra.json must be valid JSON");
+        let hrr = parsed.get("hrrformer").and_then(|a| a.get("listops"));
+        assert_eq!(hrr.and_then(|c| c.get("test_acc")).and_then(Json::as_f64), Some(0.5));
+        // a NaN eval (e.g. a failed cell) serializes as null, never "NaN"
+        let hg = parsed.get("hgconv").and_then(|a| a.get("listops"));
+        assert_eq!(hg.and_then(|c| c.get("test_acc")), Some(&Json::Null));
+        assert_eq!(parsed.get("bench").and_then(Json::as_str), Some("lra_native"));
+    }
 }

@@ -30,7 +30,7 @@ use anyhow::{Context, Result};
 use crate::data::batch::{pack_exact, Batch};
 use crate::data::{by_task, Split, Stream};
 use crate::engine::DEFAULT_EMBER_BUCKETS;
-use crate::hrr::{NativeSession, RowScheduler};
+use crate::hrr::{with_arch, Arch, NativeSession, RowScheduler};
 use crate::util::json::Json;
 use crate::util::pool::{default_budget, WorkerPool};
 use crate::util::table::Table;
@@ -43,6 +43,9 @@ pub struct NativeBenchCfg {
     /// fan-out and the pool budget (`--workers`/`--threads`);
     /// 0 = every available core.
     pub threads: usize,
+    /// Which native token mixer to time (`--arch`): the ladder's bases
+    /// get their model token rewritten accordingly.
+    pub arch: Arch,
     /// Where the machine-readable trajectory lands. Deliberately
     /// CWD-relative (not `results_dir()`): the trajectory is a
     /// repo-root artifact tracked across PRs, and verify.sh runs from
@@ -56,6 +59,7 @@ impl Default for NativeBenchCfg {
             examples: 32,
             seed: 0,
             threads: 0,
+            arch: Arch::Hrrformer,
             out: PathBuf::from("BENCH_native.json"),
         }
     }
@@ -124,8 +128,9 @@ pub fn run(cfg: &NativeBenchCfg) -> Result<Vec<NativeRow>> {
     );
 
     let mut rows = Vec::new();
-    for base in DEFAULT_EMBER_BUCKETS {
-        let sess = NativeSession::create(base, seed32)?;
+    for default_base in DEFAULT_EMBER_BUCKETS {
+        let base = with_arch(default_base, cfg.arch)?;
+        let sess = NativeSession::create(&base, seed32)?;
         let (t, b_cap) = (sess.cfg().seq_len, sess.cfg().batch);
         let ds = by_task(&sess.cfg().task, t).context("bench dataset")?;
         let mut stream = Stream::new(ds.as_ref(), Split::Test, cfg.seed);

@@ -51,6 +51,8 @@ pub fn run(rt: &Runtime, manifest: &Manifest, cfg: &WeightsBenchCfg) -> Result<V
         curve_csv: None,
         ckpt: Some(ckpt.clone()),
         artifact: None,
+        dropout: 0.0,
+        keep_artifacts: 0,
         verbose: true,
     };
     let report = train(rt, manifest, &tc)?;

@@ -45,6 +45,15 @@ pub struct TrainConfig {
     /// checksummed payload, deployable via `POST /admin/reload`) after
     /// the last step. Only the native backend produces artifacts.
     pub artifact: Option<PathBuf>,
+    /// Embedding/residual dropout probability for the native backend
+    /// (0.0 = off, the default). Active only inside `train_step`; eval
+    /// and predict are untouched. PJRT sessions ignore it — their
+    /// train_step programs were exported without dropout.
+    pub dropout: f64,
+    /// Keep only the N newest `.hrrart` artifacts in the emitted
+    /// artifact's directory after a successful emit (0 = unlimited).
+    /// The just-emitted artifact is always protected from pruning.
+    pub keep_artifacts: usize,
     pub verbose: bool,
 }
 
@@ -59,6 +68,8 @@ impl Default for TrainConfig {
             curve_csv: None,
             ckpt: None,
             artifact: None,
+            dropout: 0.0,
+            keep_artifacts: 0,
             verbose: true,
         }
     }
@@ -123,6 +134,11 @@ pub fn train(rt: &Runtime, manifest: &Manifest, cfg: &TrainConfig) -> Result<Tra
 /// CLI). The base string resolves against the native preset tables.
 pub fn train_native(cfg: &TrainConfig) -> Result<TrainReport> {
     let mut sess = NativeTrainSession::create(&cfg.base, cfg.seed as u32)?;
+    if cfg.dropout > 0.0 {
+        // masks derive from (seed, step, row, site), so the trajectory
+        // is reproducible for a fixed TrainConfig seed
+        sess.set_dropout(cfg.dropout, cfg.seed)?;
+    }
     let task = sess.cfg().task.clone();
     let vocab = sess.cfg().vocab;
     train_session(&mut sess, &task, vocab, cfg)
@@ -250,6 +266,17 @@ pub fn train_session(
         sess.save_artifact(p, final_eval)?;
         if cfg.verbose {
             eprintln!("[train] artifact → {}", p.display());
+        }
+        // retention: bound the artifact directory, never touching the
+        // artifact we just emitted (it may already be serving)
+        if cfg.keep_artifacts > 0 {
+            if let Some(dir) = p.parent() {
+                let deleted =
+                    crate::model::prune_keep_last(dir, cfg.keep_artifacts, &[p.clone()])?;
+                if cfg.verbose && !deleted.is_empty() {
+                    eprintln!("[train] pruned {} old artifact(s)", deleted.len());
+                }
+            }
         }
     }
 

@@ -433,6 +433,12 @@ impl EngineClient {
         self.hub.version()
     }
 
+    /// `(base, architecture)` per native bucket (see
+    /// [`ReloadHub::bucket_archs`]).
+    pub fn bucket_archs(&self) -> Vec<(String, String)> {
+        self.hub.bucket_archs()
+    }
+
     fn stream_channel(&self) -> Result<&SyncSender<StreamMsg>, EngineError> {
         self.stream_tx.as_ref().ok_or(EngineError::StreamUnavailable)
     }
@@ -523,11 +529,24 @@ impl ReloadHub {
         self.version.load(Ordering::SeqCst)
     }
 
+    /// `(base, architecture)` of every hot-reloadable native bucket —
+    /// what `/metrics` and reload reports echo so operators can see
+    /// which model family each bucket serves.
+    pub fn bucket_archs(&self) -> Vec<(String, String)> {
+        self.buckets
+            .iter()
+            .map(|b| (b.base.clone(), b.cfg.arch.as_str().to_string()))
+            .collect()
+    }
+
     /// Validate `artifact` against every bucket and flip the accepted
     /// ones to a new weights generation. The artifact's checksums were
-    /// already verified on open; here each bucket checks structure
-    /// (names/shapes/dtypes vs its own config). Buckets that reject
-    /// keep serving their current weights.
+    /// already verified on open; here each bucket first gates on the
+    /// manifest's declared architecture (weights never cross
+    /// architectures — an HGConv artifact cannot land in a Hrrformer
+    /// bucket even if tensor shapes happened to collide), then checks
+    /// structure (names/shapes/dtypes vs its own config). Buckets that
+    /// reject keep serving their current weights.
     pub fn reload(&self, artifact: &Artifact) -> ReloadReport {
         let _guard = self.lock.lock().expect("reload lock poisoned");
         let mut accepted: Vec<&ReloadBucket> = Vec::new();
@@ -540,6 +559,16 @@ impl ReloadHub {
             ));
         }
         for b in &self.buckets {
+            if artifact.manifest.arch != b.cfg.arch.as_str() {
+                rejected.push((
+                    b.base.clone(),
+                    format!(
+                        "architecture mismatch: artifact is '{}', bucket serves '{}'",
+                        artifact.manifest.arch, b.cfg.arch
+                    ),
+                ));
+                continue;
+            }
             match validate_native_params(&b.cfg, &artifact.params) {
                 Ok(()) => accepted.push(b),
                 Err(e) => rejected.push((b.base.clone(), format!("{e:#}"))),
@@ -986,6 +1015,12 @@ impl Engine {
     /// The weights generation currently serving (1 = build-time).
     pub fn model_version(&self) -> u64 {
         self.client.model_version()
+    }
+
+    /// `(base, architecture)` per native bucket (see
+    /// [`ReloadHub::bucket_archs`]).
+    pub fn bucket_archs(&self) -> Vec<(String, String)> {
+        self.client.bucket_archs()
     }
 
     /// The compiled (seq_len, batch) buckets, sorted by seq_len.

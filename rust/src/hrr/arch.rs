@@ -1,0 +1,200 @@
+//! Architecture identity and the [`Architecture`] seam.
+//!
+//! The native backend is no longer hrrformer-only: the shared encoder
+//! skeleton (embedding/positions → pre-LN blocks → final LN → masked
+//! mean-pool → classifier head, `hrr/common/`) is identical across
+//! models, and what varies is the **token mixer** inside each block.
+//! [`Arch`] names the mixer an `HrrConfig` runs; the [`Architecture`]
+//! trait is the compile-time seam a mixer implements:
+//!
+//! * its parameter slots (three per block, occupying the same tensor
+//!   indices in the canonical layout so `ParamIdx` arithmetic is
+//!   architecture-free),
+//! * the mixer forward (`ws.h` → `ws.attn`, both (t, e)),
+//! * the hand-derived mixer backward (`gws.gattn` → `gws.gtmp` plus the
+//!   mixer parameter gradients).
+//!
+//! Dispatch is a two-arm `match` on [`Arch`] into monomorphized
+//! generics — the hrrformer arm runs byte-for-byte the pre-refactor
+//! instructions, so its logits stay bit-identical to the golden
+//! fixtures (pinned by `golden_native.rs` / `golden_train.rs`).
+//!
+//! Streaming is an architecture *capability*: the hrrformer's chunked
+//! 3·L+1-pass forward relies on its attention statistics being
+//! order-free accumulations, which a global convolution's outputs are
+//! not (every output position mixes every input position through the
+//! filter). Non-streamable architectures surface as typed errors
+//! ([`crate::stream::StreamError::NotStreamable`], HTTP 409), never as
+//! wrong numbers.
+
+use anyhow::{bail, Result};
+
+use crate::hrr::common::tape::{BlockTape, GradScratch, ParamIdx, RowGrads};
+use crate::hrr::common::{BlockParams, ForwardTap, MixerParams, Workspace};
+use crate::hrr::config::HrrConfig;
+use crate::model::params::ParamStore;
+use crate::runtime::manifest::IoSpec;
+
+/// Which token mixer a native config runs. Parsed from the model token
+/// of a program base (`<task>_<model>_<preset>_T<t>_B<b>`), carried in
+/// [`crate::model::ArtifactManifest`] (legacy artifacts default to
+/// hrrformer), and threaded end-to-end through engine reload, `/metrics`
+/// and the CLI `--arch` flags.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Arch {
+    /// Multi-head HRR attention (the paper, Eqs. 1-4).
+    Hrrformer,
+    /// Holographic global convolution (HGConv, PAPERS.md 2024): a gated
+    /// per-channel circular convolution, FFT-multiply-IFFT over the
+    /// whole sequence.
+    HgConv,
+}
+
+impl Arch {
+    /// The model token this architecture uses in program bases and
+    /// artifact manifests.
+    pub fn as_str(self) -> &'static str {
+        match self {
+            Arch::Hrrformer => "hrrformer",
+            Arch::HgConv => "hgconv",
+        }
+    }
+
+    /// Parse a model token (`"hrrformer"` / `"hgconv"`).
+    pub fn parse(s: &str) -> Option<Arch> {
+        match s {
+            "hrrformer" => Some(Arch::Hrrformer),
+            "hgconv" => Some(Arch::HgConv),
+            _ => None,
+        }
+    }
+
+    /// Whether the chunked O(H)-state streaming forward exists for this
+    /// architecture (see the module docs for why HGConv's cannot).
+    pub fn streamable(self) -> bool {
+        matches!(self, Arch::Hrrformer)
+    }
+
+    /// Every native architecture, in canonical order (bench sweeps).
+    pub fn all() -> [Arch; 2] {
+        [Arch::Hrrformer, Arch::HgConv]
+    }
+}
+
+impl std::fmt::Display for Arch {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.write_str(self.as_str())
+    }
+}
+
+/// Rewrite the model token of a program base, keeping task, preset and
+/// the T/B suffix: `with_arch("ember_hrrformer_small_T64_B8",
+/// Arch::HgConv)` → `ember_hgconv_small_T64_B8`. This is what the CLI
+/// `--arch` flags do to the `--base` they are combined with.
+pub fn with_arch(base: &str, arch: Arch) -> Result<String> {
+    let toks: Vec<&str> = base.split('_').collect();
+    if toks.len() < 5 {
+        bail!(
+            "cannot apply --arch to unrecognised base '{base}' \
+             (expected <task>_<model>_<preset>_T<seq>_B<batch>)"
+        );
+    }
+    let n = toks.len();
+    Ok(format!(
+        "{}_{}_{}_{}_{}",
+        toks[0],
+        arch.as_str(),
+        toks[n - 3],
+        toks[n - 2],
+        toks[n - 1]
+    ))
+}
+
+/// The per-architecture half of the native model: everything block
+/// forward/backward does between `ln1(x)` landing in `ws.h` and the
+/// mixer output landing in `ws.attn` (the shared output projection,
+/// residuals, MLP, pooling and head live in `hrr/common/`).
+///
+/// Implementations are unit structs ([`crate::hrr::hrrformer::Hrrformer`],
+/// [`crate::hrr::hgconv::HgConv`]); the shared forward/backward bodies
+/// are generic over `A: Architecture` and monomorphize per arm of the
+/// [`Arch`] dispatch `match`, so adding a third model is: implement this
+/// trait, add an [`Arch`] variant, and extend the two-arm matches the
+/// compiler then flags as non-exhaustive.
+pub(crate) trait Architecture {
+    /// The model token (`Arch::as_str` of the matching variant).
+    const NAME: &'static str;
+
+    /// The three mixer parameter tensors of block `block`, in canonical
+    /// order. They occupy tensor slots 2..5 of the block's 12-tensor
+    /// span, keeping `ParamIdx` arithmetic architecture-free.
+    fn mixer_specs(cfg: &HrrConfig, block: usize) -> Vec<IoSpec>;
+
+    /// Resolve block `block`'s mixer parameter slices by canonical name.
+    fn resolve_mixer<'a>(
+        cfg: &HrrConfig,
+        params: &'a ParamStore,
+        block: usize,
+    ) -> Result<MixerParams<'a>>;
+
+    /// Mixer forward for one row: reads `ws.h` (the ln1 output, (t, e))
+    /// and `ws.mask`, writes the mixed features to `ws.attn` (t, e).
+    /// Fires any architecture-specific tap hooks along the way.
+    fn mixer_forward<T: ForwardTap>(
+        cfg: &HrrConfig,
+        bp: &BlockParams<'_>,
+        ws: &mut Workspace,
+        t: usize,
+        layer: usize,
+        tap: &mut T,
+    );
+
+    /// Mixer backward for one row: reads `gws.gattn` (∂L/∂mixer-output)
+    /// and the block tape, writes ∂L/∂h1 to `gws.gtmp` (overwriting it)
+    /// and accumulates the mixer parameter gradients into `grads`.
+    #[allow(clippy::too_many_arguments)]
+    fn mixer_backward(
+        cfg: &HrrConfig,
+        bt: &BlockTape,
+        bp: &BlockParams<'_>,
+        mask: &[bool],
+        t: usize,
+        gws: &mut GradScratch,
+        grads: &mut RowGrads,
+        idx: ParamIdx,
+        block: usize,
+    );
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parse_roundtrips_every_arch() {
+        for arch in Arch::all() {
+            assert_eq!(Arch::parse(arch.as_str()), Some(arch));
+            assert_eq!(format!("{arch}"), arch.as_str());
+        }
+        assert_eq!(Arch::parse("linear_transformer"), None);
+    }
+
+    #[test]
+    fn only_hrrformer_streams() {
+        assert!(Arch::Hrrformer.streamable());
+        assert!(!Arch::HgConv.streamable());
+    }
+
+    #[test]
+    fn with_arch_rewrites_the_model_token() {
+        assert_eq!(
+            with_arch("ember_hrrformer_small_T64_B8", Arch::HgConv).unwrap(),
+            "ember_hgconv_small_T64_B8"
+        );
+        assert_eq!(
+            with_arch("text_hgconv_small_T96_B3", Arch::Hrrformer).unwrap(),
+            "text_hrrformer_small_T96_B3"
+        );
+        assert!(with_arch("garbage", Arch::HgConv).is_err());
+    }
+}

@@ -1,0 +1,940 @@
+//! Architecture-neutral machinery of the native backend.
+//!
+//! Everything here is shared by every native model (hrrformer, hgconv):
+//! the canonical parameter layout and seed init, the f32-buffer /
+//! f64-accumulation kernel toolbox (tiled matmul, LayerNorm, GELU, FFT
+//! scratch), the per-worker [`Workspace`], pre-resolved parameter
+//! slices, the versioned [`ParamSlot`] hot-reload cell, the
+//! [`ForwardTap`] observation seam, training dropout, and the one
+//! parameterized `forward_row_with` that embeds, runs the pre-LN block
+//! skeleton (dispatching the token mixer through the
+//! [`crate::hrr::arch::Architecture`] trait), pools and classifies.
+//!
+//! The per-architecture halves live in `hrr/hrrformer/` and
+//! `hrr/hgconv/`; the tape/backward plumbing shared by their backward
+//! passes lives in [`tape`]. Numeric discipline is unchanged from the
+//! pre-split `model.rs`: f32 storage, f64 reductions in fixed ascending
+//! order, so logits stay bit-identical across schedulers, chunk sizes
+//! and this refactor itself (pinned by the golden fixtures).
+
+pub(crate) mod tape;
+
+use std::sync::{Arc, RwLock};
+
+use anyhow::{Context, Result};
+
+use crate::hrr::arch::{Arch, Architecture};
+use crate::hrr::config::HrrConfig;
+use crate::hrr::fft::num_bins;
+use crate::hrr::hgconv::HgConv;
+use crate::hrr::hrrformer::Hrrformer;
+use crate::hrr::plan::FftPlan;
+use crate::model::params::ParamStore;
+use crate::runtime::manifest::IoSpec;
+use crate::runtime::tensor::{DType, Tensor};
+use crate::util::pool::{self, WorkerPool};
+use crate::util::rng::Rng;
+
+/// Token 0 is PAD everywhere (datasets reserve it; model.py `PAD_ID`).
+pub const PAD_ID: i32 = 0;
+
+// ---------------------------------------------------------------------------
+// Parameter layout + init
+// ---------------------------------------------------------------------------
+
+/// The canonical parameter layout (names/shapes/order) of the native
+/// model. Golden fixtures and checkpoints follow this exact order.
+///
+/// Every architecture shares the skeleton slots; the three mixer slots
+/// per block (tensor offsets 2..5 of each block's 12-tensor span) come
+/// from the architecture's `mixer_specs`, so `ParamIdx` arithmetic in
+/// the backward pass never depends on which mixer runs.
+pub fn param_specs(cfg: &HrrConfig) -> Vec<IoSpec> {
+    let e = cfg.embed;
+    let f = |name: String, shape: Vec<usize>| IoSpec { name, shape, dtype: DType::F32 };
+    let mut specs = vec![f("embed.table".into(), vec![cfg.vocab, e])];
+    if cfg.learned_pos {
+        specs.push(f("pos.table".into(), vec![cfg.seq_len, e]));
+    }
+    for i in 0..cfg.layers {
+        let b = |suffix: &str| format!("blocks.{i}.{suffix}");
+        specs.push(f(b("ln1.scale"), vec![e]));
+        specs.push(f(b("ln1.bias"), vec![e]));
+        specs.extend(match cfg.arch {
+            Arch::Hrrformer => Hrrformer::mixer_specs(cfg, i),
+            Arch::HgConv => HgConv::mixer_specs(cfg, i),
+        });
+        specs.push(f(b("mixer.output.kernel"), vec![e, e]));
+        specs.push(f(b("ln2.scale"), vec![e]));
+        specs.push(f(b("ln2.bias"), vec![e]));
+        specs.push(f(b("mlp.fc1.kernel"), vec![e, cfg.mlp_dim]));
+        specs.push(f(b("mlp.fc1.bias"), vec![cfg.mlp_dim]));
+        specs.push(f(b("mlp.fc2.kernel"), vec![cfg.mlp_dim, e]));
+        specs.push(f(b("mlp.fc2.bias"), vec![e]));
+    }
+    specs.push(f("ln_f.scale".into(), vec![e]));
+    specs.push(f("ln_f.bias".into(), vec![e]));
+    specs.push(f("head1.kernel".into(), vec![e, cfg.mlp_dim]));
+    specs.push(f("head1.bias".into(), vec![cfg.mlp_dim]));
+    specs.push(f("head2.kernel".into(), vec![cfg.mlp_dim, cfg.classes]));
+    specs.push(f("head2.bias".into(), vec![cfg.classes]));
+    specs
+}
+
+/// Seed-deterministic parameter init, mirroring layers.py: glorot-normal
+/// dense kernels, `N(0, 1/√E)` embeddings, `N(0, 0.02)` learned
+/// positions and HGConv filter taps, unit LayerNorm scales, zero biases.
+/// Each tensor draws from its own folded RNG stream, so the layout (not
+/// the draw order) defines the values — hrrformer values are unchanged
+/// by the extra `.taps` rule because no hrrformer tensor matches it.
+pub fn init_native_params(cfg: &HrrConfig, seed: u32) -> ParamStore {
+    let root = Rng::new(seed as u64);
+    let specs = param_specs(cfg);
+    let mut store = ParamStore::default();
+    for (idx, spec) in specs.iter().enumerate() {
+        let n = spec.elements();
+        let mut rng = root.fold_in(idx as u64 + 1);
+        let data: Vec<f32> = if spec.name.ends_with(".kernel") {
+            let fan_in = spec.shape[0] as f64;
+            let fan_out = spec.shape[spec.shape.len() - 1] as f64;
+            let scale = (2.0 / (fan_in + fan_out)).sqrt();
+            (0..n).map(|_| (rng.normal() * scale) as f32).collect()
+        } else if spec.name == "embed.table" {
+            let scale = 1.0 / (cfg.embed as f64).sqrt();
+            (0..n).map(|_| (rng.normal() * scale) as f32).collect()
+        } else if spec.name == "pos.table" {
+            (0..n).map(|_| (rng.normal() * 0.02) as f32).collect()
+        } else if spec.name.ends_with(".taps") {
+            // HGConv filter taps: small-normal like the positional table
+            (0..n).map(|_| (rng.normal() * 0.02) as f32).collect()
+        } else if spec.name.ends_with(".scale") {
+            vec![1.0; n]
+        } else {
+            vec![0.0; n] // biases
+        };
+        store.names.push(spec.name.clone());
+        store.tensors.push(Tensor::f32(spec.shape.clone(), data));
+    }
+    store
+}
+
+// ---------------------------------------------------------------------------
+// Forward-pass building blocks (f32 buffers, f64 accumulation)
+// ---------------------------------------------------------------------------
+
+/// Output-column register tile of [`matmul_into`]: the accumulators for
+/// one tile live in registers across the whole k loop instead of a
+/// d_out-sized array round-tripped through memory on every k.
+const MM_TILE: usize = 8;
+
+/// `out (n, d_out) = x (n, d_in) @ w (d_in, d_out)`, f64 accumulators.
+///
+/// Register-tiled over output columns; per output element the reduction
+/// is still plain k-ascending f64 accumulation, so results are
+/// bit-identical to the untiled triple loop (golden parity cannot move).
+pub(crate) fn matmul_into(
+    x: &[f32],
+    w: &[f32],
+    n: usize,
+    d_in: usize,
+    d_out: usize,
+    out: &mut [f32],
+) {
+    debug_assert_eq!(x.len(), n * d_in);
+    debug_assert_eq!(w.len(), d_in * d_out);
+    debug_assert_eq!(out.len(), n * d_out);
+    for (xrow, orow) in x.chunks_exact(d_in).zip(out.chunks_exact_mut(d_out)) {
+        let mut j = 0usize;
+        while j < d_out {
+            let tile = MM_TILE.min(d_out - j);
+            let mut acc = [0.0f64; MM_TILE];
+            for (k, &xv) in xrow.iter().enumerate() {
+                let xv = xv as f64;
+                let wk = &w[k * d_out + j..k * d_out + j + tile];
+                for (a, &wv) in acc[..tile].iter_mut().zip(wk) {
+                    *a += xv * wv as f64;
+                }
+            }
+            for (o, &a) in orow[j..j + tile].iter_mut().zip(acc[..tile].iter()) {
+                *o = a as f32;
+            }
+            j += tile;
+        }
+    }
+}
+
+pub(crate) fn add_bias(x: &mut [f32], bias: &[f32], d: usize) {
+    for row in x.chunks_exact_mut(d) {
+        for (v, &b) in row.iter_mut().zip(bias) {
+            *v += b;
+        }
+    }
+}
+
+/// Pre-LN (layers.py `layernorm`, eps 1e-6) into the caller's buffer.
+pub(crate) fn layernorm_into(x: &[f32], scale: &[f32], bias: &[f32], d: usize, out: &mut [f32]) {
+    for (row, orow) in x.chunks_exact(d).zip(out.chunks_exact_mut(d)) {
+        let mut mu = 0.0f64;
+        for &v in row {
+            mu += v as f64;
+        }
+        mu /= d as f64;
+        let mut var = 0.0f64;
+        for &v in row {
+            let c = v as f64 - mu;
+            var += c * c;
+        }
+        var /= d as f64;
+        let rstd = 1.0 / (var + 1e-6).sqrt();
+        for ((o, &v), (&s, &b)) in orow.iter_mut().zip(row).zip(scale.iter().zip(bias)) {
+            *o = (((v as f64 - mu) * rstd) * s as f64 + b as f64) as f32;
+        }
+    }
+}
+
+/// One element of the `jax.nn.gelu` tanh approximation — the exact
+/// arithmetic [`gelu`] applies per element (the HGConv backward
+/// recomputes single gate activations through this, so recompute and
+/// forward can never disagree by a bit).
+pub(crate) fn gelu_scalar(v: f32) -> f32 {
+    const C: f64 = 0.797_884_560_802_865_4; // sqrt(2/π)
+    let x = v as f64;
+    (0.5 * x * (1.0 + (C * (x + 0.044715 * x * x * x)).tanh())) as f32
+}
+
+/// `jax.nn.gelu` tanh approximation, in place.
+pub(crate) fn gelu(x: &mut [f32]) {
+    for v in x.iter_mut() {
+        *v = gelu_scalar(*v);
+    }
+}
+
+/// Reusable FFT scratch for one transform length: a precomputed
+/// [`FftPlan`] plus re/im buffers, so the T·heads inner loop allocates
+/// nothing and derives no twiddles. Shared with the training backward
+/// pass, which runs the same transforms for adjoints.
+pub(crate) struct FftScratch {
+    pub(crate) plan: FftPlan,
+    pub(crate) re: Vec<f64>,
+    pub(crate) im: Vec<f64>,
+}
+
+impl FftScratch {
+    pub(crate) fn new(n: usize) -> FftScratch {
+        FftScratch { plan: FftPlan::new(n), re: vec![0.0; n], im: vec![0.0; n] }
+    }
+
+    /// rFFT of `x` into the scratch; valid bins are `re/im[..n/2+1]`.
+    pub(crate) fn rfft(&mut self, x: &[f32]) {
+        for (r, &v) in self.re.iter_mut().zip(x) {
+            *r = v as f64;
+        }
+        for i in self.im.iter_mut() {
+            *i = 0.0;
+        }
+        self.plan.fft(&mut self.re, &mut self.im, false);
+    }
+
+    /// rFFT of an f64 signal (gradient buffers) into the scratch.
+    pub(crate) fn rfft64(&mut self, x: &[f64]) {
+        self.re.copy_from_slice(x);
+        for i in self.im.iter_mut() {
+            *i = 0.0;
+        }
+        self.plan.fft(&mut self.re, &mut self.im, false);
+    }
+
+    /// irFFT of `n/2+1` bins into the scratch; result is `re[..n]`.
+    pub(crate) fn irfft(&mut self, br: &[f64], bi: &[f64]) {
+        self.plan.irfft_inplace(br, bi, &mut self.re, &mut self.im);
+    }
+}
+
+/// Per-worker scratch for the whole forward pass: every buffer
+/// `forward_row` needs, allocated once per predict worker instead of
+/// ~10 Vecs per block per row. Sized for the config's full seq_len;
+/// shorter rows use prefixes. The mixer-specific buffers double up
+/// across architectures (hrrformer q/k/v ↔ hgconv gate/conv-input/conv
+/// output), so one workspace serves either.
+pub(crate) struct Workspace {
+    /// head-dim FFT plan + re/im scratch (hrrformer binding)
+    pub(crate) fs: FftScratch,
+    /// β superposition bins (Eq. 1)
+    pub(crate) br: Vec<f64>,
+    pub(crate) bi: Vec<f64>,
+    /// value-spectrum bins
+    pub(crate) vfr: Vec<f64>,
+    pub(crate) vfi: Vec<f64>,
+    /// unbound-spectrum bins (q† ⊛ β, Eq. 2)
+    pub(crate) ur: Vec<f64>,
+    pub(crate) ui: Vec<f64>,
+    /// per-position pre-softmax scores (Eq. 3)
+    pub(crate) scores: Vec<f64>,
+    pub(crate) mask: Vec<bool>,
+    /// residual stream (t, e)
+    pub(crate) x: Vec<f32>,
+    /// pre-LN output (t, e)
+    pub(crate) h: Vec<f32>,
+    /// hrrformer q / hgconv gate pre-activation (t, e)
+    pub(crate) q: Vec<f32>,
+    /// hrrformer k / hgconv convolution input u (t, e)
+    pub(crate) k: Vec<f32>,
+    /// hrrformer v / hgconv convolution output c (t, e)
+    pub(crate) v: Vec<f32>,
+    /// mixer output (t, e)
+    pub(crate) attn: Vec<f32>,
+    /// mixer output projection / MLP output (t, e)
+    pub(crate) proj: Vec<f32>,
+    /// MLP hidden (t, mlp_dim)
+    pub(crate) mlp: Vec<f32>,
+    /// pooled features (e)
+    pub(crate) pooled: Vec<f32>,
+    /// classifier hidden (mlp_dim)
+    pub(crate) head: Vec<f32>,
+}
+
+impl Workspace {
+    pub(crate) fn new(cfg: &HrrConfig) -> Workspace {
+        Workspace::with_rows(cfg, cfg.seq_len)
+    }
+
+    /// A workspace whose position-indexed buffers hold only `rows`
+    /// positions instead of the config's full seq_len. The streaming
+    /// forward works on chunks of ≤ `rows` tokens at a time, so a
+    /// T=131072 stream never materializes T-sized activations.
+    pub(crate) fn with_rows(cfg: &HrrConfig, rows: usize) -> Workspace {
+        let (t, e) = (rows, cfg.embed);
+        let kbins = num_bins(cfg.head_dim());
+        Workspace {
+            fs: FftScratch::new(cfg.head_dim()),
+            br: vec![0.0; kbins],
+            bi: vec![0.0; kbins],
+            vfr: vec![0.0; kbins],
+            vfi: vec![0.0; kbins],
+            ur: vec![0.0; kbins],
+            ui: vec![0.0; kbins],
+            scores: vec![0.0; t],
+            mask: vec![false; t],
+            x: vec![0.0; t * e],
+            h: vec![0.0; t * e],
+            q: vec![0.0; t * e],
+            k: vec![0.0; t * e],
+            v: vec![0.0; t * e],
+            attn: vec![0.0; t * e],
+            proj: vec![0.0; t * e],
+            mlp: vec![0.0; t * cfg.mlp_dim],
+            pooled: vec![0.0; e],
+            head: vec![0.0; cfg.mlp_dim],
+        }
+    }
+}
+
+/// Fixed sinusoidal positional value (layers.py `sinusoid_positions`).
+pub(crate) fn sinusoid(pos: usize, j: usize, d: usize) -> f32 {
+    let angle = pos as f64 / 10000f64.powf((2 * (j / 2)) as f64 / d as f64);
+    if j % 2 == 0 {
+        angle.sin() as f32
+    } else {
+        angle.cos() as f32
+    }
+}
+
+/// Check a parameter store against the canonical layout of
+/// [`param_specs`] (names, order and shapes) — shared by the inference
+/// and training sessions so both reject a broken store up front. Since
+/// the layout is architecture-dependent, this is also what rejects
+/// serving hgconv weights on an hrrformer config (and vice versa).
+pub(crate) fn validate_native_params(cfg: &HrrConfig, params: &ParamStore) -> Result<()> {
+    let specs = param_specs(cfg);
+    anyhow::ensure!(
+        specs.len() == params.len(),
+        "native param store has {} tensors, config expects {}",
+        params.len(),
+        specs.len()
+    );
+    for (spec, (name, tensor)) in specs.iter().zip(params.names.iter().zip(params.tensors.iter()))
+    {
+        anyhow::ensure!(
+            &spec.name == name && spec.shape == tensor.shape(),
+            "native param mismatch: expected '{}' {:?}, got '{}' {:?}",
+            spec.name,
+            spec.shape,
+            name,
+            tensor.shape()
+        );
+    }
+    Ok(())
+}
+
+/// Fetch one f32 parameter slice by canonical name.
+pub(crate) fn param<'a>(params: &'a ParamStore, name: &str) -> Result<&'a [f32]> {
+    params
+        .get(name)
+        .with_context(|| format!("native model parameter '{name}' missing"))?
+        .as_f32()
+        .with_context(|| format!("native model parameter '{name}' dtype"))
+}
+
+/// The three per-block mixer parameter slices, by architecture. `Copy`
+/// so block forwards can destructure it by value.
+#[derive(Clone, Copy)]
+pub(crate) enum MixerParams<'a> {
+    /// HRR attention projections (e, e) each.
+    Hrrformer { query: &'a [f32], key: &'a [f32], value: &'a [f32] },
+    /// HGConv gate/conv projections (e, e) + filter taps (filter_len, e).
+    HgConv { gate: &'a [f32], conv: &'a [f32], taps: &'a [f32] },
+}
+
+/// One encoder block's parameter slices (see [`ResolvedParams`]).
+pub(crate) struct BlockParams<'a> {
+    pub(crate) ln1_scale: &'a [f32],
+    pub(crate) ln1_bias: &'a [f32],
+    pub(crate) mixer: MixerParams<'a>,
+    pub(crate) output: &'a [f32],
+    pub(crate) ln2_scale: &'a [f32],
+    pub(crate) ln2_bias: &'a [f32],
+    pub(crate) fc1: &'a [f32],
+    pub(crate) fc1_bias: &'a [f32],
+    pub(crate) fc2: &'a [f32],
+    pub(crate) fc2_bias: &'a [f32],
+}
+
+/// Every parameter slice `forward_row` touches, resolved by canonical
+/// name once per predict call (the store is immutable) — the per-row
+/// hot path then does no name formatting, no store lookups and no
+/// allocation at all. Missing/mistyped parameters surface here, before
+/// any row runs.
+pub(crate) struct ResolvedParams<'a> {
+    pub(crate) embed: &'a [f32],
+    pub(crate) pos: Option<&'a [f32]>,
+    pub(crate) blocks: Vec<BlockParams<'a>>,
+    pub(crate) ln_f_scale: &'a [f32],
+    pub(crate) ln_f_bias: &'a [f32],
+    pub(crate) head1: &'a [f32],
+    pub(crate) head1_bias: &'a [f32],
+    pub(crate) head2: &'a [f32],
+    pub(crate) head2_bias: &'a [f32],
+}
+
+impl<'a> ResolvedParams<'a> {
+    pub(crate) fn resolve(cfg: &HrrConfig, params: &'a ParamStore) -> Result<ResolvedParams<'a>> {
+        let p = |name: &str| param(params, name);
+        let mut blocks = Vec::with_capacity(cfg.layers);
+        for i in 0..cfg.layers {
+            let n = |s: &str| format!("blocks.{i}.{s}");
+            blocks.push(BlockParams {
+                ln1_scale: p(&n("ln1.scale"))?,
+                ln1_bias: p(&n("ln1.bias"))?,
+                mixer: match cfg.arch {
+                    Arch::Hrrformer => Hrrformer::resolve_mixer(cfg, params, i)?,
+                    Arch::HgConv => HgConv::resolve_mixer(cfg, params, i)?,
+                },
+                output: p(&n("mixer.output.kernel"))?,
+                ln2_scale: p(&n("ln2.scale"))?,
+                ln2_bias: p(&n("ln2.bias"))?,
+                fc1: p(&n("mlp.fc1.kernel"))?,
+                fc1_bias: p(&n("mlp.fc1.bias"))?,
+                fc2: p(&n("mlp.fc2.kernel"))?,
+                fc2_bias: p(&n("mlp.fc2.bias"))?,
+            });
+        }
+        Ok(ResolvedParams {
+            embed: p("embed.table")?,
+            pos: if cfg.learned_pos { Some(p("pos.table")?) } else { None },
+            blocks,
+            ln_f_scale: p("ln_f.scale")?,
+            ln_f_bias: p("ln_f.bias")?,
+            head1: p("head1.kernel")?,
+            head1_bias: p("head1.bias")?,
+            head2: p("head2.kernel")?,
+            head2_bias: p("head2.bias")?,
+        })
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Versioned parameter slot (hot-reload seam)
+// ---------------------------------------------------------------------------
+
+/// One immutable generation of model weights plus its monotonically
+/// increasing version number. Once published through a [`ParamSlot`] the
+/// store is never mutated again — readers pin a generation with one
+/// `Arc` clone and keep using it for as long as they like (a whole
+/// predict batch, a whole multi-pass stream) while newer generations
+/// flow past them.
+pub struct ParamVersion {
+    /// Monotonic generation counter (the engine starts at 1 and bumps on
+    /// every accepted reload; 0 is reserved for "unversioned").
+    pub version: u64,
+    pub store: ParamStore,
+}
+
+/// The swappable cell weights live behind: an `Arc`-swap over
+/// [`ParamVersion`] that `NativeSession` reads and `Engine::reload`
+/// writes.
+///
+/// The concurrency contract is deliberately tiny:
+///
+/// * [`ParamSlot::pin`] takes the read lock for one `Arc` clone — a few
+///   nanoseconds, **once per batch/stream**, never per row. All forward
+///   arithmetic runs against the pinned generation with zero
+///   synchronization.
+/// * [`ParamSlot::install`] swaps the `Arc` under the write lock. It
+///   never blocks on in-flight forward work (that work holds clones,
+///   not the lock), so a reload is "zero-downtime by construction":
+///   batches that pinned before the swap finish on the old weights,
+///   batches that pin after get the new ones, and nothing in between
+///   can observe a torn store.
+pub struct ParamSlot {
+    inner: RwLock<Arc<ParamVersion>>,
+}
+
+impl ParamSlot {
+    /// Wrap a store as generation `version`.
+    pub fn new(store: ParamStore, version: u64) -> ParamSlot {
+        ParamSlot { inner: RwLock::new(Arc::new(ParamVersion { version, store })) }
+    }
+
+    /// Pin the current generation: one read-locked `Arc` clone. Callers
+    /// hold the returned `Arc` for the duration of a batch or stream
+    /// pass, so concurrent [`ParamSlot::install`]s can never change the
+    /// weights under running arithmetic.
+    pub fn pin(&self) -> Arc<ParamVersion> {
+        Arc::clone(&self.inner.read().expect("param slot poisoned"))
+    }
+
+    /// Publish a new generation. In-flight pins keep the old `Arc`
+    /// alive; the old store drops when its last pinner finishes.
+    pub fn install(&self, store: ParamStore, version: u64) {
+        *self.inner.write().expect("param slot poisoned") =
+            Arc::new(ParamVersion { version, store });
+    }
+
+    /// The currently published generation number.
+    pub fn version(&self) -> u64 {
+        self.inner.read().expect("param slot poisoned").version
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Forward observation tap (shared forward for predict + training tape)
+// ---------------------------------------------------------------------------
+
+/// Observation hooks the unified forward pass fires as it runs. The
+/// inference path installs [`NullTap`] (every hook an empty inline
+/// default — the optimizer erases the calls, so `forward_row` compiles
+/// to exactly the pre-unification code); the training path installs a
+/// recorder that copies each intermediate onto its autodiff tape
+/// (`hrr/common/tape.rs`).
+///
+/// Read-only hooks only observe buffers the forward just wrote — they
+/// can never change the arithmetic, which is what keeps taped and plain
+/// logits bit-identical by construction. The three **mutable** hooks
+/// ([`ForwardTap::embedded`], [`ForwardTap::mixer_out`],
+/// [`ForwardTap::mlp_out`]) are the training-dropout seam: the training
+/// tap masks activations there during `train_step`; every other tap
+/// leaves them untouched, so inference and eval stay bit-identical to a
+/// dropout-free build.
+pub(crate) trait ForwardTap {
+    /// PAD mask for the row, right after embedding (t positions).
+    fn mask(&mut self, _t: usize, _mask: &[bool]) {}
+    /// Embedded tokens + positions, **mutable** (t·e) — the embedding
+    /// dropout site.
+    fn embedded(&mut self, _x: &mut [f32]) {}
+    /// Residual stream entering block `layer` (t·e).
+    fn block_begin(&mut self, _layer: usize, _x_in: &[f32]) {}
+    /// ln1 output of block `layer` (t·e).
+    fn ln1(&mut self, _layer: usize, _h1: &[f32]) {}
+    /// q/k/v projections of block `layer` (t·e each; hrrformer mixer).
+    fn qkv(&mut self, _layer: usize, _q: &[f32], _k: &[f32], _v: &[f32]) {}
+    /// One head's fully accumulated β spectrum (Eq. 1; kbins each).
+    fn beta(&mut self, _layer: usize, _head: usize, _br: &[f64], _bi: &[f64]) {}
+    /// One position's unbound v̂ for one head (Eq. 2; head_dim values).
+    fn vhat(&mut self, _layer: usize, _head: usize, _pos: usize, _vhat: &[f64]) {}
+    /// One unmasked position's softmax cleanup weight (Eq. 4).
+    fn weight(&mut self, _layer: usize, _head: usize, _pos: usize, _w: f64) {}
+    /// HGConv gate pre-activation of block `layer` (t·e).
+    fn mixer_gate_pre(&mut self, _layer: usize, _g_pre: &[f32]) {}
+    /// HGConv convolution input u, masked rows zeroed (t·e).
+    fn mixer_u(&mut self, _layer: usize, _u: &[f32]) {}
+    /// HGConv per-channel circular-convolution output c (t·e).
+    fn mixer_conv(&mut self, _layer: usize, _c: &[f32]) {}
+    /// Mixer output of block `layer` (t·e).
+    fn attn(&mut self, _layer: usize, _attn: &[f32]) {}
+    /// Mixer output projection before its residual add, **mutable**
+    /// (t·e) — the mixer-residual dropout site.
+    fn mixer_out(&mut self, _layer: usize, _proj: &mut [f32]) {}
+    /// Residual stream after the mixer residual add (t·e).
+    fn attn_residual(&mut self, _layer: usize, _x_mid: &[f32]) {}
+    /// ln2 output of block `layer` (t·e).
+    fn ln2(&mut self, _layer: usize, _h2: &[f32]) {}
+    /// fc1 output + bias, pre-GELU (t·mlp_dim).
+    fn mlp_pre(&mut self, _layer: usize, _mlp_pre: &[f32]) {}
+    /// MLP output (fc2 + bias) before its residual add, **mutable**
+    /// (t·e) — the MLP-residual dropout site.
+    fn mlp_out(&mut self, _layer: usize, _proj: &mut [f32]) {}
+    /// Residual stream entering the final LayerNorm (t·e).
+    fn final_input(&mut self, _x_final: &[f32]) {}
+    /// Masked mean-pool output (e values) and the valid-position count.
+    fn pooled(&mut self, _pooled: &[f32], _n_valid: f64) {}
+    /// Classifier hidden pre-ReLU (mlp_dim).
+    fn head_pre(&mut self, _head_pre: &[f32]) {}
+    /// Classifier hidden post-ReLU (mlp_dim).
+    fn head_act(&mut self, _head_act: &[f32]) {}
+    /// Final logits (classes).
+    fn logits(&mut self, _logits: &[f32]) {}
+}
+
+/// The inference tap: observes nothing, costs nothing.
+pub(crate) struct NullTap;
+
+impl ForwardTap for NullTap {}
+
+// ---------------------------------------------------------------------------
+// Training dropout (inverted, seeded, scheduler-invariant)
+// ---------------------------------------------------------------------------
+
+/// Inverted-dropout schedule for one training step: the probability, the
+/// trainer's mask seed, and the optimizer step — everything a row needs
+/// to derive its mask streams deterministically.
+#[derive(Clone, Copy)]
+pub(crate) struct DropoutSpec {
+    pub(crate) p: f64,
+    pub(crate) seed: u64,
+    pub(crate) step: u64,
+}
+
+/// Per-row dropout masks: folds (seed, step, row) into a base xoshiro
+/// stream and derives one independent stream per drop *site*, so a mask
+/// depends only on (seed, step, row, site) — never on the scheduler,
+/// the worker a row landed on, or call order. Forward (f32) and
+/// backward (f64) draw the same stream at the same site, so the
+/// kept/dropped pattern matches element-for-element.
+pub(crate) struct DropoutCtx {
+    base: Rng,
+    p: f64,
+    /// inverted-dropout rescale 1/(1−p): kept activations are scaled up
+    /// during training so eval needs no compensation at all
+    scale: f64,
+}
+
+/// Drop-site ids: the embedding is site 0; each block gets a mixer and
+/// an MLP residual site (disjoint for every layer).
+pub(crate) const DROP_SITE_EMBED: u64 = 0;
+
+pub(crate) fn drop_site_mixer(layer: usize) -> u64 {
+    1 + 2 * layer as u64
+}
+
+pub(crate) fn drop_site_mlp(layer: usize) -> u64 {
+    2 + 2 * layer as u64
+}
+
+impl DropoutCtx {
+    pub(crate) fn new(spec: DropoutSpec, row: u64) -> DropoutCtx {
+        DropoutCtx {
+            base: Rng::new(spec.seed).fold_in(spec.step).fold_in(row),
+            p: spec.p,
+            scale: 1.0 / (1.0 - spec.p),
+        }
+    }
+
+    fn site_rng(&self, site: u64) -> Rng {
+        self.base.fold_in(site)
+    }
+
+    /// Forward mask: zero dropped elements, rescale kept ones (computed
+    /// in f64, rounded once — matching the backward's f64 application).
+    pub(crate) fn apply_f32(&self, site: u64, x: &mut [f32]) {
+        let mut rng = self.site_rng(site);
+        for v in x.iter_mut() {
+            if rng.f64() < self.p {
+                *v = 0.0;
+            } else {
+                *v = (*v as f64 * self.scale) as f32;
+            }
+        }
+    }
+
+    /// Backward mask: the same element stream as [`DropoutCtx::apply_f32`]
+    /// at the same site, applied to f64 gradients.
+    pub(crate) fn apply_f64(&self, site: u64, x: &mut [f64]) {
+        let mut rng = self.site_rng(site);
+        for v in x.iter_mut() {
+            if rng.f64() < self.p {
+                *v = 0.0;
+            } else {
+                *v *= self.scale;
+            }
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// The shared forward pass
+// ---------------------------------------------------------------------------
+
+/// Token embedding + positional values for `ids` occupying absolute
+/// positions `p0..p0 + ids.len()`, written to `ws.x` (and the PAD mask
+/// to `ws.mask`). Out-of-range ids clamp like the XLA gather. The
+/// whole-row forward calls this with `p0 = 0`; the streaming forward
+/// calls it per chunk with the chunk's absolute offset, producing the
+/// exact same per-position values.
+pub(crate) fn embed_positions(
+    cfg: &HrrConfig,
+    rp: &ResolvedParams<'_>,
+    ids: &[i32],
+    p0: usize,
+    ws: &mut Workspace,
+) {
+    let e = cfg.embed;
+    for (m, &id) in ws.mask.iter_mut().zip(ids) {
+        *m = id != PAD_ID;
+    }
+    for (i, &id) in ids.iter().enumerate() {
+        let pos = p0 + i;
+        let row = (id.max(0) as usize).min(cfg.vocab - 1);
+        ws.x[i * e..(i + 1) * e].copy_from_slice(&rp.embed[row * e..(row + 1) * e]);
+        match rp.pos {
+            Some(tbl) => {
+                for (xv, &pv) in
+                    ws.x[i * e..(i + 1) * e].iter_mut().zip(&tbl[pos * e..(pos + 1) * e])
+                {
+                    *xv += pv;
+                }
+            }
+            None => {
+                for (j, xv) in ws.x[i * e..(i + 1) * e].iter_mut().enumerate() {
+                    *xv += sinusoid(pos, j, e);
+                }
+            }
+        }
+    }
+}
+
+/// Forward one sequence: `ids` (t ≤ cfg.seq_len) → logits written to
+/// `out` (classes). Every intermediate lives in `ws`, every parameter
+/// slice comes pre-resolved in `rp` — the row loop allocates nothing
+/// and looks nothing up.
+pub(crate) fn forward_row(
+    cfg: &HrrConfig,
+    rp: &ResolvedParams<'_>,
+    ids: &[i32],
+    ws: &mut Workspace,
+    out: &mut [f32],
+) {
+    forward_row_with(cfg, rp, ids, ws, out, &mut NullTap)
+}
+
+/// The one parameterized forward pass: [`forward_row`] is this with
+/// [`NullTap`] (hooks vanish under monomorphization), the training tape
+/// is this with a recording tap. One body per architecture means the
+/// arithmetic literally cannot drift between inference and training.
+///
+/// Dispatch is a two-arm `match` into [`forward_row_arch`] — the
+/// hrrformer arm monomorphizes to byte-for-byte the pre-refactor
+/// instruction sequence, so its logits stay bit-identical to the golden
+/// fixtures.
+pub(crate) fn forward_row_with<T: ForwardTap>(
+    cfg: &HrrConfig,
+    rp: &ResolvedParams<'_>,
+    ids: &[i32],
+    ws: &mut Workspace,
+    out: &mut [f32],
+    tap: &mut T,
+) {
+    match cfg.arch {
+        Arch::Hrrformer => forward_row_arch::<Hrrformer, T>(cfg, rp, ids, ws, out, tap),
+        Arch::HgConv => forward_row_arch::<HgConv, T>(cfg, rp, ids, ws, out, tap),
+    }
+}
+
+/// The architecture-generic forward body: embedding → pre-LN blocks
+/// (`A::mixer_forward` between ln1 and the shared output projection) →
+/// final LN → masked mean-pool → two dense head layers.
+fn forward_row_arch<A: Architecture, T: ForwardTap>(
+    cfg: &HrrConfig,
+    rp: &ResolvedParams<'_>,
+    ids: &[i32],
+    ws: &mut Workspace,
+    out: &mut [f32],
+    tap: &mut T,
+) {
+    let e = cfg.embed;
+    let t = ids.len();
+    debug_assert_eq!(out.len(), cfg.classes);
+
+    embed_positions(cfg, rp, ids, 0, ws);
+    tap.mask(t, &ws.mask[..t]);
+    tap.embedded(&mut ws.x[..t * e]);
+
+    for (li, bp) in rp.blocks.iter().enumerate() {
+        // mixer sub-block (pre-LN, residual)
+        tap.block_begin(li, &ws.x[..t * e]);
+        layernorm_into(&ws.x[..t * e], bp.ln1_scale, bp.ln1_bias, e, &mut ws.h[..t * e]);
+        tap.ln1(li, &ws.h[..t * e]);
+        A::mixer_forward(cfg, bp, ws, t, li, tap);
+        tap.attn(li, &ws.attn[..t * e]);
+        matmul_into(&ws.attn[..t * e], bp.output, t, e, e, &mut ws.proj[..t * e]);
+        tap.mixer_out(li, &mut ws.proj[..t * e]);
+        for (xv, &yv) in ws.x[..t * e].iter_mut().zip(&ws.proj[..t * e]) {
+            *xv += yv;
+        }
+        tap.attn_residual(li, &ws.x[..t * e]);
+        // MLP sub-block (pre-LN, residual)
+        layernorm_into(&ws.x[..t * e], bp.ln2_scale, bp.ln2_bias, e, &mut ws.h[..t * e]);
+        tap.ln2(li, &ws.h[..t * e]);
+        matmul_into(&ws.h[..t * e], bp.fc1, t, e, cfg.mlp_dim, &mut ws.mlp[..t * cfg.mlp_dim]);
+        add_bias(&mut ws.mlp[..t * cfg.mlp_dim], bp.fc1_bias, cfg.mlp_dim);
+        tap.mlp_pre(li, &ws.mlp[..t * cfg.mlp_dim]);
+        gelu(&mut ws.mlp[..t * cfg.mlp_dim]);
+        matmul_into(&ws.mlp[..t * cfg.mlp_dim], bp.fc2, t, cfg.mlp_dim, e, &mut ws.proj[..t * e]);
+        add_bias(&mut ws.proj[..t * e], bp.fc2_bias, e);
+        tap.mlp_out(li, &mut ws.proj[..t * e]);
+        for (xv, &mv) in ws.x[..t * e].iter_mut().zip(&ws.proj[..t * e]) {
+            *xv += mv;
+        }
+    }
+
+    tap.final_input(&ws.x[..t * e]);
+    layernorm_into(&ws.x[..t * e], rp.ln_f_scale, rp.ln_f_bias, e, &mut ws.h[..t * e]);
+
+    // masked mean-pool over T (model.py logits_fn)
+    let n_valid = ws.mask[..t].iter().filter(|&&m| m).count().max(1) as f64;
+    for (j, pv) in ws.pooled.iter_mut().enumerate() {
+        let mut s = 0.0f64;
+        for i in 0..t {
+            if ws.mask[i] {
+                s += ws.h[i * e + j] as f64;
+            }
+        }
+        *pv = (s / n_valid) as f32;
+    }
+    tap.pooled(&ws.pooled, n_valid);
+
+    matmul_into(&ws.pooled, rp.head1, 1, e, cfg.mlp_dim, &mut ws.head);
+    add_bias(&mut ws.head, rp.head1_bias, cfg.mlp_dim);
+    tap.head_pre(&ws.head);
+    for v in ws.head.iter_mut() {
+        *v = v.max(0.0); // relu
+    }
+    tap.head_act(&ws.head);
+    matmul_into(&ws.head, rp.head2, 1, cfg.mlp_dim, cfg.classes, out);
+    add_bias(out, rp.head2_bias, cfg.classes);
+    tap.logits(out);
+}
+
+// ---------------------------------------------------------------------------
+// Row scheduling
+// ---------------------------------------------------------------------------
+
+/// Worker count the default standalone scheduler fans rows across:
+/// every core the host exposes (capped by batch size at the call site).
+pub(crate) fn default_workers() -> usize {
+    pool::default_budget()
+}
+
+/// How `NativeSession::predict` schedules a batch's independent rows.
+///
+/// Every variant runs the identical per-row code path with a per-worker
+/// [`Workspace`], so logits are **bit-identical** under all of them —
+/// the scheduler only changes wall-clock and thread accounting (pinned
+/// by `prop_hrr.rs`).
+#[derive(Clone)]
+pub enum RowScheduler {
+    /// Every row on the calling thread; no worker threads at all.
+    Sequential,
+    /// Per-call `std::thread::scope` fan-out with a pinned worker count
+    /// (the pre-pool behavior; kept as the standalone default and as
+    /// the bench baseline). Spawns on every call and knows nothing
+    /// about other sessions — use [`RowScheduler::Pool`] when several
+    /// sessions share a machine.
+    Scoped(usize),
+    /// Row chunks submitted to a shared persistent [`WorkerPool`]: no
+    /// per-batch spawn, and all sessions holding the same pool respect
+    /// one global worker budget. A budget of 1 serializes native row
+    /// work pool-wide (effectively sequential, on the pool thread).
+    Pool(Arc<WorkerPool>),
+}
+
+impl std::fmt::Debug for RowScheduler {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            RowScheduler::Sequential => f.write_str("Sequential"),
+            RowScheduler::Scoped(n) => write!(f, "Scoped({n})"),
+            RowScheduler::Pool(p) => write!(f, "Pool(budget={})", p.budget()),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn cfg_for(arch: Arch) -> HrrConfig {
+        HrrConfig {
+            arch,
+            task: "test".into(),
+            vocab: 11,
+            seq_len: 12,
+            batch: 2,
+            embed: 16,
+            mlp_dim: 32,
+            heads: 2,
+            layers: 2,
+            classes: 4,
+            learned_pos: false,
+        }
+    }
+
+    #[test]
+    fn hgconv_layout_swaps_only_the_mixer_slots() {
+        let hr = param_specs(&cfg_for(Arch::Hrrformer));
+        let hg = param_specs(&cfg_for(Arch::HgConv));
+        assert_eq!(hr.len(), hg.len(), "both archs use 12-tensor blocks");
+        for (a, b) in hr.iter().zip(&hg) {
+            let mixer_slot = a.name.contains("mixer.") && !a.name.contains("mixer.output");
+            if mixer_slot {
+                assert_ne!(a.name, b.name);
+            } else {
+                assert_eq!(a.name, b.name);
+                assert_eq!(a.shape, b.shape);
+            }
+        }
+        let taps = hg.iter().find(|s| s.name == "blocks.0.mixer.filter.taps").unwrap();
+        assert_eq!(taps.shape, vec![12, 16], "taps are (min(seq_len, 64), embed)");
+    }
+
+    #[test]
+    fn taps_init_is_small_normal_not_zero() {
+        let cfg = cfg_for(Arch::HgConv);
+        let store = init_native_params(&cfg, 3);
+        let taps = store.get("blocks.0.mixer.filter.taps").unwrap().as_f32().unwrap();
+        assert!(taps.iter().any(|&v| v != 0.0), "taps must not init to zero");
+        assert!(taps.iter().all(|&v| v.abs() < 0.5), "taps init is N(0, 0.02)");
+    }
+
+    #[test]
+    fn dropout_masks_depend_only_on_seed_step_row_site() {
+        let spec = DropoutSpec { p: 0.5, seed: 42, step: 3 };
+        let ctx = DropoutCtx::new(spec, 7);
+        let mut a = vec![1.0f32; 64];
+        let mut b = vec![1.0f32; 64];
+        ctx.apply_f32(DROP_SITE_EMBED, &mut a);
+        DropoutCtx::new(spec, 7).apply_f32(DROP_SITE_EMBED, &mut b);
+        assert_eq!(a, b, "same (seed, step, row, site) → same mask");
+        // forward f32 and backward f64 draw the same kept/dropped pattern
+        let mut g = vec![1.0f64; 64];
+        ctx.apply_f64(DROP_SITE_EMBED, &mut g);
+        for (&fv, &gv) in a.iter().zip(&g) {
+            assert_eq!(fv == 0.0, gv == 0.0, "f32/f64 masks must agree");
+        }
+        assert!(a.iter().any(|&v| v == 0.0) && a.iter().any(|&v| v != 0.0));
+        // kept elements are rescaled by 1/(1-p)
+        assert!(a.iter().filter(|&&v| v != 0.0).all(|&v| (v - 2.0).abs() < 1e-6));
+        // a different site gives a different mask
+        let mut c = vec![1.0f32; 64];
+        ctx.apply_f32(drop_site_mixer(0), &mut c);
+        assert_ne!(a, c);
+    }
+}

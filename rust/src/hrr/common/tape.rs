@@ -1,0 +1,823 @@
+//! Architecture-neutral training plumbing: the per-row forward tape,
+//! gradient scratch, canonical parameter indexing, the dense/LayerNorm/
+//! GELU/softmax backward helpers, and the one parameterized
+//! `backward_row` that walks the block skeleton in reverse (dispatching
+//! the mixer backward through the [`Architecture`] trait).
+//!
+//! The mixer-specific adjoints live with their forwards —
+//! `hrr/hrrformer/` (HRR attention, Eqs. 1-4) and `hrr/hgconv/` (gated
+//! circular convolution). Everything here follows the same numeric
+//! discipline as the forward pass: f32 taped activations, f64 gradient
+//! accumulation in fixed ascending order, so per-row gradients are
+//! bit-identical regardless of scheduler or worker count.
+
+use crate::hrr::arch::{Arch, Architecture};
+use crate::hrr::common::{
+    drop_site_mixer, drop_site_mlp, forward_row_with, gelu, param_specs, DropoutCtx, FftScratch,
+    ForwardTap, ResolvedParams, Workspace, DROP_SITE_EMBED,
+};
+use crate::hrr::config::HrrConfig;
+use crate::hrr::fft::num_bins;
+use crate::hrr::hgconv::HgConv;
+use crate::hrr::hrrformer::Hrrformer;
+
+/// Everything backward needs from one encoder block's forward pass.
+/// f32 buffers hold exactly what the forward computed; the attention
+/// internals that would be expensive or lossy to recompute (unbound
+/// v̂, softmax weights, the β superposition spectrum) are kept f64.
+///
+/// Buffers are sized per architecture: the hrrformer attention record
+/// (q/k/v/v̂/w/β) is zero-length on hgconv tapes and vice versa
+/// (g_pre/u/c), so neither architecture pays for the other's memory.
+pub(crate) struct BlockTape {
+    pub(crate) x_in: Vec<f32>,    // (t, e) residual stream entering the block
+    pub(crate) h1: Vec<f32>,      // (t, e) ln1 output
+    pub(crate) q: Vec<f32>,       // (t, e) hrrformer
+    pub(crate) k: Vec<f32>,       // (t, e) hrrformer
+    pub(crate) v: Vec<f32>,       // (t, e) hrrformer
+    pub(crate) vhat: Vec<f64>,    // (t, e) per-head unbound v̂ (Eq. 2), heads merged
+    pub(crate) w: Vec<f64>,       // (heads, seq_len) softmax cleanup weights (Eq. 4)
+    pub(crate) beta_re: Vec<f64>, // (heads, kbins) β spectrum (Eq. 1)
+    pub(crate) beta_im: Vec<f64>,
+    pub(crate) g_pre: Vec<f32>,   // (t, e) hgconv gate pre-activation
+    pub(crate) u: Vec<f32>,       // (t, e) hgconv conv input (masked rows zeroed)
+    pub(crate) c: Vec<f32>,       // (t, e) hgconv circular-conv output
+    pub(crate) attn: Vec<f32>,    // (t, e) mixer output
+    pub(crate) x_mid: Vec<f32>,   // (t, e) after the mixer residual
+    pub(crate) h2: Vec<f32>,      // (t, e) ln2 output
+    pub(crate) mlp_pre: Vec<f32>, // (t, mlp) fc1 output + bias, pre-GELU
+}
+
+impl BlockTape {
+    pub(crate) fn new(cfg: &HrrConfig) -> BlockTape {
+        let (t, e) = (cfg.seq_len, cfg.embed);
+        let kb = num_bins(cfg.head_dim());
+        let hrr = cfg.arch == Arch::Hrrformer;
+        let attn_buf = |n: usize| vec![0.0; if hrr { n } else { 0 }];
+        let conv_buf = |n: usize| vec![0.0; if hrr { 0 } else { n }];
+        BlockTape {
+            x_in: vec![0.0; t * e],
+            h1: vec![0.0; t * e],
+            q: attn_buf(t * e),
+            k: attn_buf(t * e),
+            v: attn_buf(t * e),
+            vhat: attn_buf(t * e),
+            w: attn_buf(cfg.heads * t),
+            beta_re: attn_buf(cfg.heads * kb),
+            beta_im: attn_buf(cfg.heads * kb),
+            g_pre: conv_buf(t * e),
+            u: conv_buf(t * e),
+            c: conv_buf(t * e),
+            attn: vec![0.0; t * e],
+            x_mid: vec![0.0; t * e],
+            h2: vec![0.0; t * e],
+            mlp_pre: vec![0.0; t * cfg.mlp_dim],
+        }
+    }
+}
+
+/// The full forward record for one row. Filled by [`TapeRecorder`]
+/// observing `forward_row_with`; holds only what backward reads.
+/// Sized for the config's full seq_len; shorter rows use prefixes.
+pub(crate) struct Tape {
+    pub(crate) t: usize,
+    pub(crate) mask: Vec<bool>,
+    pub(crate) blocks: Vec<BlockTape>,
+    pub(crate) x_final: Vec<f32>,  // (t, e) input of the final LN
+    pub(crate) pooled: Vec<f32>,   // (e)
+    pub(crate) head_pre: Vec<f32>, // (mlp) pre-ReLU classifier hidden
+    pub(crate) head_act: Vec<f32>, // (mlp) post-ReLU (kept: fc input + ReLU mask)
+    pub(crate) logits: Vec<f32>,   // (classes)
+    pub(crate) n_valid: f64,
+}
+
+impl Tape {
+    pub(crate) fn new(cfg: &HrrConfig) -> Tape {
+        let (t, e) = (cfg.seq_len, cfg.embed);
+        Tape {
+            t: 0,
+            mask: vec![false; t],
+            blocks: (0..cfg.layers).map(|_| BlockTape::new(cfg)).collect(),
+            x_final: vec![0.0; t * e],
+            pooled: vec![0.0; e],
+            head_pre: vec![0.0; cfg.mlp_dim],
+            head_act: vec![0.0; cfg.mlp_dim],
+            logits: vec![0.0; cfg.classes],
+            n_valid: 1.0,
+        }
+    }
+}
+
+/// f64 gradient scratch for one worker: activation gradients plus the
+/// spectral buffers of the attention backward. Allocated once per worker,
+/// reused across rows and blocks.
+pub(crate) struct GradScratch {
+    pub(crate) fs: FftScratch,
+    // backward activation gradients
+    pub(crate) gx: Vec<f64>,    // (t, e) running residual gradient
+    pub(crate) gtmp: Vec<f64>,  // (t, e)
+    pub(crate) gq: Vec<f64>,    // (t, e)
+    pub(crate) gk: Vec<f64>,    // (t, e)
+    pub(crate) gv: Vec<f64>,    // (t, e)
+    pub(crate) gattn: Vec<f64>, // (t, e)
+    pub(crate) gdrop: Vec<f64>, // (t, e) dropout-masked residual-branch gradient
+    pub(crate) gmlp: Vec<f64>,  // (t, mlp)
+    pub(crate) gpooled: Vec<f64>,
+    pub(crate) ghead: Vec<f64>,
+    pub(crate) glogits: Vec<f64>,
+    pub(crate) act: Vec<f32>, // (t, mlp) recomputed GELU output
+    // attention backward scratch
+    pub(crate) gw: Vec<f64>,  // (t) ∂L/∂w
+    pub(crate) gsc: Vec<f64>, // (t) ∂L/∂score
+    pub(crate) gbr: Vec<f64>, // (kbins) ∂L/∂β
+    pub(crate) gbi: Vec<f64>,
+    pub(crate) gur: Vec<f64>, // (kbins) ∂L/∂(unbound spectrum)
+    pub(crate) gui: Vec<f64>,
+    pub(crate) tr: Vec<f64>, // (kbins) adjoint-transform inputs
+    pub(crate) ti: Vec<f64>,
+    pub(crate) qfr: Vec<f64>, // (kbins) recomputed spectra
+    pub(crate) qfi: Vec<f64>,
+    pub(crate) ghd: Vec<f64>, // (head_dim) ∂L/∂v̂
+}
+
+impl GradScratch {
+    pub(crate) fn new(cfg: &HrrConfig) -> GradScratch {
+        let (t, e) = (cfg.seq_len, cfg.embed);
+        let hd = cfg.head_dim();
+        let kb = num_bins(hd);
+        GradScratch {
+            fs: FftScratch::new(hd),
+            gx: vec![0.0; t * e],
+            gtmp: vec![0.0; t * e],
+            gq: vec![0.0; t * e],
+            gk: vec![0.0; t * e],
+            gv: vec![0.0; t * e],
+            gattn: vec![0.0; t * e],
+            gdrop: vec![0.0; t * e],
+            gmlp: vec![0.0; t * cfg.mlp_dim],
+            gpooled: vec![0.0; e],
+            ghead: vec![0.0; cfg.mlp_dim],
+            glogits: vec![0.0; cfg.classes],
+            act: vec![0.0; t * cfg.mlp_dim],
+            gw: vec![0.0; t],
+            gsc: vec![0.0; t],
+            gbr: vec![0.0; kb],
+            gbi: vec![0.0; kb],
+            gur: vec![0.0; kb],
+            gui: vec![0.0; kb],
+            tr: vec![0.0; kb],
+            ti: vec![0.0; kb],
+            qfr: vec![0.0; kb],
+            qfi: vec![0.0; kb],
+            ghd: vec![0.0; hd],
+        }
+    }
+}
+
+/// One row's parameter gradients, f64, aligned with [`param_specs`]
+/// order. Rows each own one of these so the batch reduction can run in a
+/// fixed order afterwards.
+pub(crate) struct RowGrads {
+    pub(crate) tensors: Vec<Vec<f64>>,
+}
+
+impl RowGrads {
+    pub(crate) fn zeros(cfg: &HrrConfig) -> RowGrads {
+        RowGrads { tensors: param_specs(cfg).iter().map(|s| vec![0.0; s.elements()]).collect() }
+    }
+
+    /// Reset for reuse by another row: the backward pass accumulates
+    /// into these buffers, so a recycled one must start from zero.
+    pub(crate) fn clear(&mut self) {
+        for t in self.tensors.iter_mut() {
+            t.fill(0.0);
+        }
+    }
+}
+
+/// Tensor indices of the canonical [`param_specs`] layout, so the
+/// backward pass addresses gradient buffers with plain arithmetic
+/// instead of name lookups. Architecture-free: every arch fills the
+/// same 12-tensor span per block, mixer tensors at offsets 2..5.
+#[derive(Clone, Copy)]
+pub(crate) struct ParamIdx {
+    learned_pos: bool,
+    layers: usize,
+}
+
+/// Per-block tensor offsets within a block's 12-tensor span. The three
+/// mixer slots are architecture-defined (hrrformer: query/key/value
+/// kernels; hgconv: gate/conv kernels + filter taps).
+pub(crate) const LN1_SCALE: usize = 0;
+pub(crate) const MIXER_0: usize = 2;
+pub(crate) const MIXER_1: usize = 3;
+pub(crate) const MIXER_2: usize = 4;
+pub(crate) const OUTPUT: usize = 5;
+pub(crate) const LN2_SCALE: usize = 6;
+pub(crate) const FC1: usize = 8;
+pub(crate) const FC1_BIAS: usize = 9;
+pub(crate) const FC2: usize = 10;
+pub(crate) const FC2_BIAS: usize = 11;
+
+impl ParamIdx {
+    pub(crate) fn of(cfg: &HrrConfig) -> ParamIdx {
+        ParamIdx { learned_pos: cfg.learned_pos, layers: cfg.layers }
+    }
+
+    pub(crate) fn embed(self) -> usize {
+        0
+    }
+
+    pub(crate) fn pos(self) -> Option<usize> {
+        self.learned_pos.then_some(1)
+    }
+
+    pub(crate) fn block0(self) -> usize {
+        if self.learned_pos {
+            2
+        } else {
+            1
+        }
+    }
+
+    /// Tensor index of block `i`'s `j`-th tensor (see the offsets above).
+    pub(crate) fn block(self, i: usize, j: usize) -> usize {
+        self.block0() + i * 12 + j
+    }
+
+    pub(crate) fn ln_f_scale(self) -> usize {
+        self.block0() + self.layers * 12
+    }
+
+    pub(crate) fn head1(self) -> usize {
+        self.ln_f_scale() + 2
+    }
+
+    pub(crate) fn head1_bias(self) -> usize {
+        self.ln_f_scale() + 3
+    }
+
+    pub(crate) fn head2(self) -> usize {
+        self.ln_f_scale() + 4
+    }
+
+    pub(crate) fn head2_bias(self) -> usize {
+        self.ln_f_scale() + 5
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Dense / LayerNorm / GELU backward helpers (f64 grads, f32 activations)
+// ---------------------------------------------------------------------------
+
+/// `gx (n, d_in) (+)= gy (n, d_out) @ wᵀ`; overwrite unless `accumulate`.
+pub(crate) fn matmul_grad_x(
+    gy: &[f64],
+    w: &[f32],
+    n: usize,
+    d_in: usize,
+    d_out: usize,
+    gx: &mut [f64],
+    accumulate: bool,
+) {
+    debug_assert_eq!(gy.len(), n * d_out);
+    debug_assert_eq!(w.len(), d_in * d_out);
+    debug_assert_eq!(gx.len(), n * d_in);
+    for (gyrow, gxrow) in gy.chunks_exact(d_out).zip(gx.chunks_exact_mut(d_in)) {
+        for (kk, gxv) in gxrow.iter_mut().enumerate() {
+            let wrow = &w[kk * d_out..(kk + 1) * d_out];
+            let mut acc = 0.0f64;
+            for (&g, &wv) in gyrow.iter().zip(wrow) {
+                acc += g * wv as f64;
+            }
+            if accumulate {
+                *gxv += acc;
+            } else {
+                *gxv = acc;
+            }
+        }
+    }
+}
+
+/// `gw (d_in, d_out) += xᵀ (n, d_in) @ gy (n, d_out)` — rows accumulated
+/// in ascending order (single-threaded per row gradient, deterministic).
+pub(crate) fn matmul_grad_w(
+    x: &[f32],
+    gy: &[f64],
+    n: usize,
+    d_in: usize,
+    d_out: usize,
+    gw: &mut [f64],
+) {
+    debug_assert_eq!(x.len(), n * d_in);
+    debug_assert_eq!(gy.len(), n * d_out);
+    debug_assert_eq!(gw.len(), d_in * d_out);
+    for (xrow, gyrow) in x.chunks_exact(d_in).zip(gy.chunks_exact(d_out)) {
+        for (&xv, gwrow) in xrow.iter().zip(gw.chunks_exact_mut(d_out)) {
+            let xv = xv as f64;
+            for (gwv, &g) in gwrow.iter_mut().zip(gyrow) {
+                *gwv += xv * g;
+            }
+        }
+    }
+}
+
+/// LayerNorm backward for a (t, d) input: recomputes μ/σ from the taped
+/// f32 input, **accumulates** `gx` and the scale/bias gradients.
+pub(crate) fn layernorm_bwd(
+    x: &[f32],
+    scale: &[f32],
+    gy: &[f64],
+    d: usize,
+    gx: &mut [f64],
+    gscale: &mut [f64],
+    gbias: &mut [f64],
+) {
+    for ((row, gyrow), gxrow) in
+        x.chunks_exact(d).zip(gy.chunks_exact(d)).zip(gx.chunks_exact_mut(d))
+    {
+        let mut mu = 0.0f64;
+        for &v in row {
+            mu += v as f64;
+        }
+        mu /= d as f64;
+        let mut var = 0.0f64;
+        for &v in row {
+            let c = v as f64 - mu;
+            var += c * c;
+        }
+        var /= d as f64;
+        let rstd = 1.0 / (var + 1e-6).sqrt();
+        let mut mean_gxhat = 0.0f64;
+        let mut mean_gxhat_xhat = 0.0f64;
+        for (j, (&v, &g)) in row.iter().zip(gyrow).enumerate() {
+            let xhat = (v as f64 - mu) * rstd;
+            let gxhat = g * scale[j] as f64;
+            gscale[j] += g * xhat;
+            gbias[j] += g;
+            mean_gxhat += gxhat;
+            mean_gxhat_xhat += gxhat * xhat;
+        }
+        mean_gxhat /= d as f64;
+        mean_gxhat_xhat /= d as f64;
+        for (j, (&v, gxv)) in row.iter().zip(gxrow.iter_mut()).enumerate() {
+            let xhat = (v as f64 - mu) * rstd;
+            let gxhat = gyrow[j] * scale[j] as f64;
+            *gxv += rstd * (gxhat - mean_gxhat - xhat * mean_gxhat_xhat);
+        }
+    }
+}
+
+/// tanh-GELU derivative applied in place to `g` given the pre-activation.
+pub(crate) fn gelu_bwd(pre: &[f32], g: &mut [f64]) {
+    const C: f64 = 0.797_884_560_802_865_4; // sqrt(2/π)
+    for (&x, gv) in pre.iter().zip(g.iter_mut()) {
+        let x = x as f64;
+        let th = (C * (x + 0.044715 * x * x * x)).tanh();
+        *gv *= 0.5 * (1.0 + th) + 0.5 * x * (1.0 - th * th) * C * (1.0 + 3.0 * 0.044715 * x * x);
+    }
+}
+
+/// Hermitian multiplicity of rfft bin `j` for a length-`n` real signal:
+/// DC and (even n) Nyquist appear once in the packed spectrum, every
+/// other bin stands for a conjugate pair.
+pub(crate) fn bin_weight(n: usize, j: usize) -> f64 {
+    if j == 0 || (n % 2 == 0 && j == n / 2) {
+        1.0
+    } else {
+        2.0
+    }
+}
+
+/// Mean-softmax-CE pieces for one row: NLL, argmax correctness, and
+/// `∂nll/∂logits = p − onehot(label)` into `g`.
+pub(crate) fn softmax_ce(logits: &[f32], label: usize, g: &mut [f64]) -> (f64, bool) {
+    let mut m = f64::NEG_INFINITY;
+    for &v in logits {
+        m = m.max(v as f64);
+    }
+    let mut sum = 0.0f64;
+    for (gv, &v) in g.iter_mut().zip(logits) {
+        *gv = (v as f64 - m).exp();
+        sum += *gv;
+    }
+    let nll = sum.ln() + m - logits[label] as f64;
+    let mut best = 0usize;
+    for (c, &v) in logits.iter().enumerate() {
+        if v > logits[best] {
+            best = c;
+        }
+    }
+    for gv in g.iter_mut() {
+        *gv /= sum;
+    }
+    g[label] -= 1.0;
+    (nll, best == label)
+}
+
+// ---------------------------------------------------------------------------
+// Forward with tape
+// ---------------------------------------------------------------------------
+
+/// [`ForwardTap`] adapter that records every intermediate backward
+/// needs onto a [`Tape`]. With this, `forward_row_with` *is* the taped
+/// forward — predict and train share one forward implementation, so the
+/// taped logits are bit-identical to `forward_row`'s by construction
+/// (still pinned by a test). It also owns the forward half of training
+/// dropout: when a [`DropoutCtx`] is installed, the three mutable hooks
+/// mask the embedding and both residual branches; with `None` every
+/// hook is a plain copy and the forward is bit-identical to predict.
+pub(crate) struct TapeRecorder<'a> {
+    tape: &'a mut Tape,
+    e: usize,
+    hd: usize,
+    seq_len: usize,
+    dropout: Option<&'a DropoutCtx>,
+}
+
+impl ForwardTap for TapeRecorder<'_> {
+    fn mask(&mut self, t: usize, mask: &[bool]) {
+        self.tape.t = t;
+        self.tape.mask[..t].copy_from_slice(mask);
+    }
+
+    fn embedded(&mut self, x: &mut [f32]) {
+        if let Some(d) = self.dropout {
+            d.apply_f32(DROP_SITE_EMBED, x);
+        }
+    }
+
+    fn block_begin(&mut self, layer: usize, x_in: &[f32]) {
+        self.tape.blocks[layer].x_in[..x_in.len()].copy_from_slice(x_in);
+    }
+
+    fn ln1(&mut self, layer: usize, h1: &[f32]) {
+        self.tape.blocks[layer].h1[..h1.len()].copy_from_slice(h1);
+    }
+
+    fn qkv(&mut self, layer: usize, q: &[f32], k: &[f32], v: &[f32]) {
+        let bt = &mut self.tape.blocks[layer];
+        bt.q[..q.len()].copy_from_slice(q);
+        bt.k[..k.len()].copy_from_slice(k);
+        bt.v[..v.len()].copy_from_slice(v);
+    }
+
+    fn beta(&mut self, layer: usize, head: usize, br: &[f64], bi: &[f64]) {
+        // β arrives fully accumulated; also clear this head's weight
+        // row — masked positions keep w = 0 (the forward never fires
+        // `weight` for them).
+        let t = self.tape.t;
+        let kb = br.len();
+        let bt = &mut self.tape.blocks[layer];
+        bt.beta_re[head * kb..(head + 1) * kb].copy_from_slice(br);
+        bt.beta_im[head * kb..(head + 1) * kb].copy_from_slice(bi);
+        bt.w[head * self.seq_len..head * self.seq_len + t].fill(0.0);
+    }
+
+    fn vhat(&mut self, layer: usize, head: usize, pos: usize, vhat: &[f64]) {
+        let base = pos * self.e + head * self.hd;
+        self.tape.blocks[layer].vhat[base..base + self.hd].copy_from_slice(vhat);
+    }
+
+    fn weight(&mut self, layer: usize, head: usize, pos: usize, w: f64) {
+        self.tape.blocks[layer].w[head * self.seq_len + pos] = w;
+    }
+
+    fn mixer_gate_pre(&mut self, layer: usize, g_pre: &[f32]) {
+        self.tape.blocks[layer].g_pre[..g_pre.len()].copy_from_slice(g_pre);
+    }
+
+    fn mixer_u(&mut self, layer: usize, u: &[f32]) {
+        self.tape.blocks[layer].u[..u.len()].copy_from_slice(u);
+    }
+
+    fn mixer_conv(&mut self, layer: usize, c: &[f32]) {
+        self.tape.blocks[layer].c[..c.len()].copy_from_slice(c);
+    }
+
+    fn attn(&mut self, layer: usize, attn: &[f32]) {
+        self.tape.blocks[layer].attn[..attn.len()].copy_from_slice(attn);
+    }
+
+    fn mixer_out(&mut self, layer: usize, proj: &mut [f32]) {
+        if let Some(d) = self.dropout {
+            d.apply_f32(drop_site_mixer(layer), proj);
+        }
+    }
+
+    fn attn_residual(&mut self, layer: usize, x_mid: &[f32]) {
+        self.tape.blocks[layer].x_mid[..x_mid.len()].copy_from_slice(x_mid);
+    }
+
+    fn ln2(&mut self, layer: usize, h2: &[f32]) {
+        self.tape.blocks[layer].h2[..h2.len()].copy_from_slice(h2);
+    }
+
+    fn mlp_pre(&mut self, layer: usize, mlp_pre: &[f32]) {
+        self.tape.blocks[layer].mlp_pre[..mlp_pre.len()].copy_from_slice(mlp_pre);
+    }
+
+    fn mlp_out(&mut self, layer: usize, proj: &mut [f32]) {
+        if let Some(d) = self.dropout {
+            d.apply_f32(drop_site_mlp(layer), proj);
+        }
+    }
+
+    fn final_input(&mut self, x_final: &[f32]) {
+        self.tape.x_final[..x_final.len()].copy_from_slice(x_final);
+    }
+
+    fn pooled(&mut self, pooled: &[f32], n_valid: f64) {
+        self.tape.pooled.copy_from_slice(pooled);
+        self.tape.n_valid = n_valid;
+    }
+
+    fn head_pre(&mut self, head_pre: &[f32]) {
+        self.tape.head_pre.copy_from_slice(head_pre);
+    }
+
+    fn head_act(&mut self, head_act: &[f32]) {
+        self.tape.head_act.copy_from_slice(head_act);
+    }
+
+    fn logits(&mut self, logits: &[f32]) {
+        self.tape.logits.copy_from_slice(logits);
+    }
+}
+
+/// Forward one row via `forward_row_with`, recording every intermediate
+/// backward needs on `tape` (logits land on the tape and in `logits`).
+/// `ws` is the same per-worker scratch predict uses. `dropout` is the
+/// row's training-dropout context (None for eval/goldens — then the
+/// taped forward is bit-identical to predict).
+pub(crate) fn forward_row_tape(
+    cfg: &HrrConfig,
+    rp: &ResolvedParams<'_>,
+    ids: &[i32],
+    tape: &mut Tape,
+    ws: &mut Workspace,
+    logits: &mut [f32],
+    dropout: Option<&DropoutCtx>,
+) {
+    let mut tap =
+        TapeRecorder { tape, e: cfg.embed, hd: cfg.head_dim(), seq_len: cfg.seq_len, dropout };
+    forward_row_with(cfg, rp, ids, ws, logits, &mut tap);
+}
+
+// ---------------------------------------------------------------------------
+// Backward
+// ---------------------------------------------------------------------------
+
+/// Backward one row from its tape into `grads`; returns (nll, correct).
+/// Dispatches the mixer backward by `cfg.arch` — the hrrformer arm
+/// monomorphizes to the pre-refactor instruction sequence.
+#[allow(clippy::too_many_arguments)]
+pub(crate) fn backward_row(
+    cfg: &HrrConfig,
+    rp: &ResolvedParams<'_>,
+    ids: &[i32],
+    label: usize,
+    tape: &Tape,
+    gws: &mut GradScratch,
+    grads: &mut RowGrads,
+    dropout: Option<&DropoutCtx>,
+) -> (f64, bool) {
+    match cfg.arch {
+        Arch::Hrrformer => {
+            backward_row_arch::<Hrrformer>(cfg, rp, ids, label, tape, gws, grads, dropout)
+        }
+        Arch::HgConv => {
+            backward_row_arch::<HgConv>(cfg, rp, ids, label, tape, gws, grads, dropout)
+        }
+    }
+}
+
+/// The architecture-generic backward body: classifier head → pooling →
+/// final LN → blocks in reverse (MLP sub-block, then
+/// `A::mixer_backward` between the shared output projection and ln1) →
+/// embeddings. Dropout chains apply the same per-site masks the forward
+/// drew, to the f64 branch gradients (`gws.gdrop`); with `None` the
+/// copies are pass-throughs and gradients are bit-identical to the
+/// dropout-free path.
+#[allow(clippy::too_many_arguments)]
+fn backward_row_arch<A: Architecture>(
+    cfg: &HrrConfig,
+    rp: &ResolvedParams<'_>,
+    ids: &[i32],
+    label: usize,
+    tape: &Tape,
+    gws: &mut GradScratch,
+    grads: &mut RowGrads,
+    dropout: Option<&DropoutCtx>,
+) -> (f64, bool) {
+    let e = cfg.embed;
+    let mlp = cfg.mlp_dim;
+    let classes = cfg.classes;
+    let t = tape.t;
+    let idx = ParamIdx::of(cfg);
+
+    let (nll, correct) = softmax_ce(&tape.logits, label, &mut gws.glogits);
+
+    // classifier head
+    for (g, &gl) in grads.tensors[idx.head2_bias()].iter_mut().zip(gws.glogits.iter()) {
+        *g += gl;
+    }
+    {
+        let gk2 = &mut grads.tensors[idx.head2()];
+        for (u, &a) in tape.head_act.iter().enumerate() {
+            let a = a as f64;
+            for (gwv, &gl) in gk2[u * classes..(u + 1) * classes].iter_mut().zip(&gws.glogits) {
+                *gwv += a * gl;
+            }
+        }
+    }
+    for (u, gh) in gws.ghead.iter_mut().enumerate() {
+        let mut acc = 0.0f64;
+        for (&wv, &gl) in rp.head2[u * classes..(u + 1) * classes].iter().zip(&gws.glogits) {
+            acc += wv as f64 * gl;
+        }
+        *gh = if tape.head_pre[u] > 0.0 { acc } else { 0.0 }; // relu mask
+    }
+    for (g, &gh) in grads.tensors[idx.head1_bias()].iter_mut().zip(gws.ghead.iter()) {
+        *g += gh;
+    }
+    {
+        let gk1 = &mut grads.tensors[idx.head1()];
+        for (j, &pj) in tape.pooled.iter().enumerate() {
+            let pj = pj as f64;
+            for (gwv, &gh) in gk1[j * mlp..(j + 1) * mlp].iter_mut().zip(&gws.ghead) {
+                *gwv += pj * gh;
+            }
+        }
+    }
+    for (j, gp) in gws.gpooled.iter_mut().enumerate() {
+        let mut acc = 0.0f64;
+        for (&wv, &gh) in rp.head1[j * mlp..(j + 1) * mlp].iter().zip(&gws.ghead) {
+            acc += wv as f64 * gh;
+        }
+        *gp = acc;
+    }
+
+    // masked mean-pool backward into the final-LN output gradient
+    for i in 0..t {
+        let dst = &mut gws.gtmp[i * e..(i + 1) * e];
+        if tape.mask[i] {
+            for (d, &gp) in dst.iter_mut().zip(&gws.gpooled) {
+                *d = gp / tape.n_valid;
+            }
+        } else {
+            dst.fill(0.0);
+        }
+    }
+
+    // final LayerNorm
+    gws.gx[..t * e].fill(0.0);
+    {
+        let sidx = idx.ln_f_scale();
+        let (left, right) = grads.tensors.split_at_mut(sidx + 1);
+        layernorm_bwd(
+            &tape.x_final[..t * e],
+            rp.ln_f_scale,
+            &gws.gtmp[..t * e],
+            e,
+            &mut gws.gx[..t * e],
+            &mut left[sidx],
+            &mut right[0],
+        );
+    }
+
+    // encoder blocks in reverse
+    for (b, bp) in rp.blocks.iter().enumerate().rev() {
+        let bt = &tape.blocks[b];
+        // MLP sub-block: x_out = x_mid + drop(gelu(fc1(h2)+b1) @ fc2 + b2)
+        gws.act[..t * mlp].copy_from_slice(&bt.mlp_pre[..t * mlp]);
+        gelu(&mut gws.act[..t * mlp]);
+        gws.gdrop[..t * e].copy_from_slice(&gws.gx[..t * e]);
+        if let Some(d) = dropout {
+            d.apply_f64(drop_site_mlp(b), &mut gws.gdrop[..t * e]);
+        }
+        let fc2_bias = &mut grads.tensors[idx.block(b, FC2_BIAS)];
+        for (g, chunk) in fc2_bias.iter_mut().zip(ColumnSums::new(&gws.gdrop, t, e)) {
+            *g += chunk;
+        }
+        matmul_grad_w(
+            &gws.act[..t * mlp],
+            &gws.gdrop[..t * e],
+            t,
+            mlp,
+            e,
+            &mut grads.tensors[idx.block(b, FC2)],
+        );
+        matmul_grad_x(&gws.gdrop[..t * e], bp.fc2, t, mlp, e, &mut gws.gmlp[..t * mlp], false);
+        gelu_bwd(&bt.mlp_pre[..t * mlp], &mut gws.gmlp[..t * mlp]);
+        let fc1_bias = &mut grads.tensors[idx.block(b, FC1_BIAS)];
+        for (g, chunk) in fc1_bias.iter_mut().zip(ColumnSums::new(&gws.gmlp, t, mlp)) {
+            *g += chunk;
+        }
+        matmul_grad_w(
+            &bt.h2[..t * e],
+            &gws.gmlp[..t * mlp],
+            t,
+            e,
+            mlp,
+            &mut grads.tensors[idx.block(b, FC1)],
+        );
+        matmul_grad_x(&gws.gmlp[..t * mlp], bp.fc1, t, e, mlp, &mut gws.gtmp[..t * e], false);
+        {
+            let sidx = idx.block(b, LN2_SCALE);
+            let (left, right) = grads.tensors.split_at_mut(sidx + 1);
+            layernorm_bwd(
+                &bt.x_mid[..t * e],
+                bp.ln2_scale,
+                &gws.gtmp[..t * e],
+                e,
+                &mut gws.gx[..t * e],
+                &mut left[sidx],
+                &mut right[0],
+            );
+        }
+        // mixer sub-block: x_mid = x_in + drop(mixer(h1) @ W_out)
+        gws.gdrop[..t * e].copy_from_slice(&gws.gx[..t * e]);
+        if let Some(d) = dropout {
+            d.apply_f64(drop_site_mixer(b), &mut gws.gdrop[..t * e]);
+        }
+        matmul_grad_w(
+            &bt.attn[..t * e],
+            &gws.gdrop[..t * e],
+            t,
+            e,
+            e,
+            &mut grads.tensors[idx.block(b, OUTPUT)],
+        );
+        matmul_grad_x(&gws.gdrop[..t * e], bp.output, t, e, e, &mut gws.gattn[..t * e], false);
+        A::mixer_backward(cfg, bt, bp, &tape.mask[..t], t, gws, grads, idx, b);
+        {
+            let sidx = idx.block(b, LN1_SCALE);
+            let (left, right) = grads.tensors.split_at_mut(sidx + 1);
+            layernorm_bwd(
+                &bt.x_in[..t * e],
+                bp.ln1_scale,
+                &gws.gtmp[..t * e],
+                e,
+                &mut gws.gx[..t * e],
+                &mut left[sidx],
+                &mut right[0],
+            );
+        }
+    }
+
+    // embedding dropout chains before the scatter: the forward masked
+    // x = embed + pos right after embedding, so both parameter
+    // gradients see the masked residual gradient.
+    if let Some(d) = dropout {
+        d.apply_f64(DROP_SITE_EMBED, &mut gws.gx[..t * e]);
+    }
+
+    // embeddings (scatter-add at the clamped ids) + learned positions
+    {
+        let gemb = &mut grads.tensors[idx.embed()];
+        for (i, &id) in ids.iter().enumerate() {
+            let row = (id.max(0) as usize).min(cfg.vocab - 1);
+            for (g, &gx) in gemb[row * e..(row + 1) * e].iter_mut().zip(&gws.gx[i * e..(i + 1) * e])
+            {
+                *g += gx;
+            }
+        }
+    }
+    if let Some(pidx) = idx.pos() {
+        for (g, &gx) in grads.tensors[pidx].iter_mut().zip(gws.gx[..t * e].iter()) {
+            *g += gx;
+        }
+    }
+    (nll, correct)
+}
+
+/// Iterator of per-column sums of a (t, d) f64 buffer — bias gradients.
+pub(crate) struct ColumnSums<'a> {
+    data: &'a [f64],
+    t: usize,
+    d: usize,
+    j: usize,
+}
+
+impl<'a> ColumnSums<'a> {
+    pub(crate) fn new(data: &'a [f64], t: usize, d: usize) -> ColumnSums<'a> {
+        ColumnSums { data, t, d, j: 0 }
+    }
+}
+
+impl Iterator for ColumnSums<'_> {
+    type Item = f64;
+
+    fn next(&mut self) -> Option<f64> {
+        if self.j >= self.d {
+            return None;
+        }
+        let mut acc = 0.0f64;
+        for i in 0..self.t {
+            acc += self.data[i * self.d + self.j];
+        }
+        self.j += 1;
+        Some(acc)
+    }
+}

@@ -9,10 +9,15 @@
 
 use anyhow::{bail, Result};
 
-/// Hyper-parameters of one Hrrformer forward pass (the native mirror of
+use crate::hrr::arch::Arch;
+
+/// Hyper-parameters of one native forward pass (the native mirror of
 /// python `ModelConfig`, restricted to what inference needs).
 #[derive(Debug, Clone, PartialEq, Eq)]
 pub struct HrrConfig {
+    /// Which token mixer the blocks run (parsed from the base string's
+    /// model token; everything else is mixer-agnostic).
+    pub arch: Arch,
     pub task: String,
     pub vocab: usize,
     pub seq_len: usize,
@@ -52,8 +57,9 @@ impl HrrConfig {
     }
 
     /// Resolve a program base (e.g. `ember_hrrformer_small_T256_B8`)
-    /// against the preset tables. Only the `hrrformer` mixer has a native
-    /// implementation; other models must use the artifact backend.
+    /// against the preset tables. The model token picks the native
+    /// architecture (`hrrformer` / `hgconv`); other models must use the
+    /// artifact backend.
     pub fn from_base(base: &str) -> Result<HrrConfig> {
         let toks: Vec<&str> = base.split('_').collect();
         if toks.len() < 5 {
@@ -79,12 +85,12 @@ impl HrrConfig {
         let preset = toks[toks.len() - 3];
         let task = toks[0];
         let model = toks[1..toks.len() - 3].join("_");
-        if model != "hrrformer" {
+        let Some(arch) = Arch::parse(&model) else {
             bail!(
-                "native backend only implements the hrrformer mixer; \
+                "native backend only implements the hrrformer and hgconv mixers; \
                  base '{base}' names model '{model}' — use the artifact backend"
             );
-        }
+        };
         let Some(row) = preset_row(task, preset) else {
             bail!(
                 "unrecognised program base '{base}' for the native backend: \
@@ -92,6 +98,7 @@ impl HrrConfig {
             );
         };
         let cfg = HrrConfig {
+            arch,
             task: task.to_string(),
             vocab: row.vocab,
             seq_len,
@@ -194,5 +201,14 @@ mod tests {
         let err = HrrConfig::from_base("text_linear_transformer_small_T512_B8").unwrap_err();
         assert!(err.to_string().contains("linear_transformer"), "{err}");
         assert!(err.to_string().contains("artifact backend"), "{err}");
+    }
+
+    #[test]
+    fn resolves_hgconv_bases_with_the_same_preset_rows() {
+        let hg = HrrConfig::from_base("ember_hgconv_small_T256_B8").unwrap();
+        let hr = HrrConfig::from_base("ember_hrrformer_small_T256_B8").unwrap();
+        assert_eq!(hg.arch, Arch::HgConv);
+        assert_eq!(hr.arch, Arch::Hrrformer);
+        assert_eq!(HrrConfig { arch: Arch::Hrrformer, ..hg.clone() }, hr);
     }
 }

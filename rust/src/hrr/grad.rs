@@ -1,24 +1,23 @@
-//! Reverse-mode autodiff through the native Hrrformer forward pass,
-//! plus the Adam optimizer — artifact-free training ([`NativeTrainSession`]).
+//! The Adam optimizer and batch-level training loop over the shared
+//! tape autodiff — artifact-free training ([`NativeTrainSession`]) for
+//! every native architecture.
 //!
-//! The forward pass here **is** `model::forward_row_with` — train and
-//! predict share one forward implementation, and the tape side observes
-//! it through the `ForwardTap` hooks (`TapeRecorder`), keeping every
-//! intermediate backward needs on a per-row `Tape`. Logits are
-//! bit-identical to predict's by construction (still pinned by a test).
-//! `backward_row` then walks the tape in reverse:
+//! The forward pass here **is** `common::forward_row_with` — train and
+//! predict share one forward implementation per architecture, and the
+//! tape side observes it through the `ForwardTap` hooks
+//! (`common::tape::TapeRecorder`), keeping every intermediate backward
+//! needs on a per-row `Tape`. Logits are bit-identical to predict's by
+//! construction (still pinned by a test). `common::tape::backward_row`
+//! then walks the tape in reverse:
 //!
 //! * softmax cross-entropy (model.py `loss_fn`: mean NLL over the batch);
 //! * dense / bias / ReLU head, masked mean-pool, LayerNorm (recomputed
-//!   μ/σ from the taped input), tanh-GELU;
-//! * the frequency-domain HRR attention (paper Eqs. 1-4) via FFT
-//!   *adjoints*: for real-signal transforms with Hermitian-packed bins,
-//!   the adjoint of `irfft` is `(c_j / n) · rfft(·)` and the adjoint of
-//!   `rfft` is `n · irfft(· / c_j)`, where `c_j` is the bin multiplicity
-//!   (1 for DC and — even n — Nyquist, else 2). Both run on the same
-//!   [`FftPlan`]-backed scratch the forward uses. The stabilized exact
-//!   inverse `conj(Q)/(|Q|²+ε)` and the cosine score are differentiated
-//!   per bin / per element;
+//!   μ/σ from the taped input), tanh-GELU — all architecture-neutral,
+//!   in `common::tape`;
+//! * the mixer adjoint, dispatched per architecture: the
+//!   frequency-domain HRR attention adjoints (paper Eqs. 1-4) in
+//!   `hrr::hrrformer`, the correlation-theorem adjoints of the gated
+//!   FFT convolution in `hrr::hgconv`;
 //! * embeddings scatter-add; learned positions accumulate directly;
 //!   fixed sinusoids have no parameters.
 //!
@@ -42,6 +41,15 @@
 //! (~`8·B·|θ|` bytes), which is what makes the fixed reduction order
 //! possible at all.
 //!
+//! # Dropout
+//!
+//! [`NativeTrainSession::set_dropout`] enables inverted dropout on the
+//! embedding and both residual branches of every block, active **only**
+//! inside `train_step`. Masks derive from (seed, step, row, site) alone
+//! (`common::DropoutCtx`), never from the scheduler or the worker a row
+//! landed on, so dropped training keeps the bit-identical scheduler
+//! contract — and eval / predict / serving paths never see dropout.
+//!
 //! # Optimizer
 //!
 //! Exactly the exported program's protocol (model.py `adam_update` /
@@ -55,13 +63,14 @@ use std::path::Path;
 
 use anyhow::{Context, Result};
 
-use crate::hrr::config::{task_decay_rate, HrrConfig};
-use crate::hrr::fft::num_bins;
-use crate::hrr::model::{
-    forward_row, forward_row_with, gelu, init_native_params, param_specs, validate_native_params,
-    FftScratch, ForwardTap, ResolvedParams, Workspace,
+use crate::hrr::common::tape::{
+    backward_row, forward_row_tape, softmax_ce, GradScratch, RowGrads, Tape,
 };
-use crate::hrr::ops::EPS;
+use crate::hrr::common::{
+    forward_row, init_native_params, param_specs, validate_native_params, DropoutCtx, DropoutSpec,
+    ResolvedParams, Workspace,
+};
+use crate::hrr::config::{task_decay_rate, HrrConfig};
 use crate::hrr::RowScheduler;
 use crate::model::artifact::{Artifact, Provenance};
 use crate::model::params::ParamStore;
@@ -74,8 +83,6 @@ use crate::util::pool::Task as PoolTask;
 const B1: f64 = 0.9;
 const B2: f64 = 0.999;
 const ADAM_EPS: f64 = 1e-8;
-
-const EPS64: f64 = EPS as f64;
 
 // ---------------------------------------------------------------------------
 // Hyper-parameters (the exported program's training protocol)
@@ -112,896 +119,11 @@ impl TrainHyper {
     }
 }
 
-// ---------------------------------------------------------------------------
-// Per-row tape + gradient scratch
-// ---------------------------------------------------------------------------
-
-/// Everything backward needs from one encoder block's forward pass.
-/// f32 buffers hold exactly what the forward computed; the attention
-/// internals that would be expensive or lossy to recompute (unbound
-/// v̂, softmax weights, the β superposition spectrum) are kept f64.
-struct BlockTape {
-    x_in: Vec<f32>,    // (t, e) residual stream entering the block
-    h1: Vec<f32>,      // (t, e) ln1 output
-    q: Vec<f32>,       // (t, e)
-    k: Vec<f32>,       // (t, e)
-    v: Vec<f32>,       // (t, e)
-    vhat: Vec<f64>,    // (t, e) per-head unbound v̂ (Eq. 2), heads merged
-    w: Vec<f64>,       // (heads, seq_len) softmax cleanup weights (Eq. 4)
-    beta_re: Vec<f64>, // (heads, kbins) β spectrum (Eq. 1)
-    beta_im: Vec<f64>,
-    attn: Vec<f32>,    // (t, e) merged w·v mix
-    x_mid: Vec<f32>,   // (t, e) after the attention residual
-    h2: Vec<f32>,      // (t, e) ln2 output
-    mlp_pre: Vec<f32>, // (t, mlp) fc1 output + bias, pre-GELU
-}
-
-impl BlockTape {
-    fn new(cfg: &HrrConfig) -> BlockTape {
-        let (t, e) = (cfg.seq_len, cfg.embed);
-        let kb = num_bins(cfg.head_dim());
-        BlockTape {
-            x_in: vec![0.0; t * e],
-            h1: vec![0.0; t * e],
-            q: vec![0.0; t * e],
-            k: vec![0.0; t * e],
-            v: vec![0.0; t * e],
-            vhat: vec![0.0; t * e],
-            w: vec![0.0; cfg.heads * t],
-            beta_re: vec![0.0; cfg.heads * kb],
-            beta_im: vec![0.0; cfg.heads * kb],
-            attn: vec![0.0; t * e],
-            x_mid: vec![0.0; t * e],
-            h2: vec![0.0; t * e],
-            mlp_pre: vec![0.0; t * cfg.mlp_dim],
-        }
-    }
-}
-
-/// The full forward record for one row. Filled by [`TapeRecorder`]
-/// observing `model::forward_row_with`; holds only what backward reads.
-/// Sized for the config's full seq_len; shorter rows use prefixes.
-struct Tape {
-    t: usize,
-    mask: Vec<bool>,
-    blocks: Vec<BlockTape>,
-    x_final: Vec<f32>,  // (t, e) input of the final LN
-    pooled: Vec<f32>,   // (e)
-    head_pre: Vec<f32>, // (mlp) pre-ReLU classifier hidden
-    head_act: Vec<f32>, // (mlp) post-ReLU (kept: fc input + ReLU mask)
-    logits: Vec<f32>,   // (classes)
-    n_valid: f64,
-}
-
-impl Tape {
-    fn new(cfg: &HrrConfig) -> Tape {
-        let (t, e) = (cfg.seq_len, cfg.embed);
-        Tape {
-            t: 0,
-            mask: vec![false; t],
-            blocks: (0..cfg.layers).map(|_| BlockTape::new(cfg)).collect(),
-            x_final: vec![0.0; t * e],
-            pooled: vec![0.0; e],
-            head_pre: vec![0.0; cfg.mlp_dim],
-            head_act: vec![0.0; cfg.mlp_dim],
-            logits: vec![0.0; cfg.classes],
-            n_valid: 1.0,
-        }
-    }
-}
-
-/// f64 gradient scratch for one worker: activation gradients plus the
-/// spectral buffers of the attention backward. Allocated once per worker,
-/// reused across rows and blocks.
-struct GradScratch {
-    fs: FftScratch,
-    // backward activation gradients
-    gx: Vec<f64>,    // (t, e) running residual gradient
-    gtmp: Vec<f64>,  // (t, e)
-    gq: Vec<f64>,    // (t, e)
-    gk: Vec<f64>,    // (t, e)
-    gv: Vec<f64>,    // (t, e)
-    gattn: Vec<f64>, // (t, e)
-    gmlp: Vec<f64>,  // (t, mlp)
-    gpooled: Vec<f64>,
-    ghead: Vec<f64>,
-    glogits: Vec<f64>,
-    act: Vec<f32>, // (t, mlp) recomputed GELU output
-    // attention backward scratch
-    gw: Vec<f64>,  // (t) ∂L/∂w
-    gsc: Vec<f64>, // (t) ∂L/∂score
-    gbr: Vec<f64>, // (kbins) ∂L/∂β
-    gbi: Vec<f64>,
-    gur: Vec<f64>, // (kbins) ∂L/∂(unbound spectrum)
-    gui: Vec<f64>,
-    tr: Vec<f64>, // (kbins) adjoint-transform inputs
-    ti: Vec<f64>,
-    qfr: Vec<f64>, // (kbins) recomputed spectra
-    qfi: Vec<f64>,
-    ghd: Vec<f64>, // (head_dim) ∂L/∂v̂
-}
-
-impl GradScratch {
-    fn new(cfg: &HrrConfig) -> GradScratch {
-        let (t, e) = (cfg.seq_len, cfg.embed);
-        let hd = cfg.head_dim();
-        let kb = num_bins(hd);
-        GradScratch {
-            fs: FftScratch::new(hd),
-            gx: vec![0.0; t * e],
-            gtmp: vec![0.0; t * e],
-            gq: vec![0.0; t * e],
-            gk: vec![0.0; t * e],
-            gv: vec![0.0; t * e],
-            gattn: vec![0.0; t * e],
-            gmlp: vec![0.0; t * cfg.mlp_dim],
-            gpooled: vec![0.0; e],
-            ghead: vec![0.0; cfg.mlp_dim],
-            glogits: vec![0.0; cfg.classes],
-            act: vec![0.0; t * cfg.mlp_dim],
-            gw: vec![0.0; t],
-            gsc: vec![0.0; t],
-            gbr: vec![0.0; kb],
-            gbi: vec![0.0; kb],
-            gur: vec![0.0; kb],
-            gui: vec![0.0; kb],
-            tr: vec![0.0; kb],
-            ti: vec![0.0; kb],
-            qfr: vec![0.0; kb],
-            qfi: vec![0.0; kb],
-            ghd: vec![0.0; hd],
-        }
-    }
-}
-
-/// One row's parameter gradients, f64, aligned with [`param_specs`]
-/// order. Rows each own one of these so the batch reduction can run in a
-/// fixed order afterwards.
-struct RowGrads {
-    tensors: Vec<Vec<f64>>,
-}
-
-impl RowGrads {
-    fn zeros(cfg: &HrrConfig) -> RowGrads {
-        RowGrads { tensors: param_specs(cfg).iter().map(|s| vec![0.0; s.elements()]).collect() }
-    }
-
-    /// Reset for reuse by another row: the backward pass accumulates
-    /// into these buffers, so a recycled one must start from zero.
-    fn clear(&mut self) {
-        for t in self.tensors.iter_mut() {
-            t.fill(0.0);
-        }
-    }
-}
-
 /// Output slot of one training row.
 struct RowOut {
     nll: f64,
     correct: bool,
     grads: RowGrads,
-}
-
-/// Tensor indices of the canonical [`param_specs`] layout, so the
-/// backward pass addresses gradient buffers with plain arithmetic
-/// instead of name lookups.
-#[derive(Clone, Copy)]
-struct ParamIdx {
-    learned_pos: bool,
-    layers: usize,
-}
-
-/// Per-block tensor offsets within a block's 12-tensor span.
-const LN1_SCALE: usize = 0;
-const QUERY: usize = 2;
-const KEY: usize = 3;
-const VALUE: usize = 4;
-const OUTPUT: usize = 5;
-const LN2_SCALE: usize = 6;
-const FC1: usize = 8;
-const FC1_BIAS: usize = 9;
-const FC2: usize = 10;
-const FC2_BIAS: usize = 11;
-
-impl ParamIdx {
-    fn of(cfg: &HrrConfig) -> ParamIdx {
-        ParamIdx { learned_pos: cfg.learned_pos, layers: cfg.layers }
-    }
-
-    fn embed(self) -> usize {
-        0
-    }
-
-    fn pos(self) -> Option<usize> {
-        self.learned_pos.then_some(1)
-    }
-
-    fn block0(self) -> usize {
-        if self.learned_pos {
-            2
-        } else {
-            1
-        }
-    }
-
-    /// Tensor index of block `i`'s `j`-th tensor (see the offsets above).
-    fn block(self, i: usize, j: usize) -> usize {
-        self.block0() + i * 12 + j
-    }
-
-    fn ln_f_scale(self) -> usize {
-        self.block0() + self.layers * 12
-    }
-
-    fn head1(self) -> usize {
-        self.ln_f_scale() + 2
-    }
-
-    fn head1_bias(self) -> usize {
-        self.ln_f_scale() + 3
-    }
-
-    fn head2(self) -> usize {
-        self.ln_f_scale() + 4
-    }
-
-    fn head2_bias(self) -> usize {
-        self.ln_f_scale() + 5
-    }
-}
-
-// ---------------------------------------------------------------------------
-// Dense / LayerNorm / GELU backward helpers (f64 grads, f32 activations)
-// ---------------------------------------------------------------------------
-
-/// `gx (n, d_in) (+)= gy (n, d_out) @ wᵀ`; overwrite unless `accumulate`.
-fn matmul_grad_x(
-    gy: &[f64],
-    w: &[f32],
-    n: usize,
-    d_in: usize,
-    d_out: usize,
-    gx: &mut [f64],
-    accumulate: bool,
-) {
-    debug_assert_eq!(gy.len(), n * d_out);
-    debug_assert_eq!(w.len(), d_in * d_out);
-    debug_assert_eq!(gx.len(), n * d_in);
-    for (gyrow, gxrow) in gy.chunks_exact(d_out).zip(gx.chunks_exact_mut(d_in)) {
-        for (kk, gxv) in gxrow.iter_mut().enumerate() {
-            let wrow = &w[kk * d_out..(kk + 1) * d_out];
-            let mut acc = 0.0f64;
-            for (&g, &wv) in gyrow.iter().zip(wrow) {
-                acc += g * wv as f64;
-            }
-            if accumulate {
-                *gxv += acc;
-            } else {
-                *gxv = acc;
-            }
-        }
-    }
-}
-
-/// `gw (d_in, d_out) += xᵀ (n, d_in) @ gy (n, d_out)` — rows accumulated
-/// in ascending order (single-threaded per row gradient, deterministic).
-fn matmul_grad_w(x: &[f32], gy: &[f64], n: usize, d_in: usize, d_out: usize, gw: &mut [f64]) {
-    debug_assert_eq!(x.len(), n * d_in);
-    debug_assert_eq!(gy.len(), n * d_out);
-    debug_assert_eq!(gw.len(), d_in * d_out);
-    for (xrow, gyrow) in x.chunks_exact(d_in).zip(gy.chunks_exact(d_out)) {
-        for (&xv, gwrow) in xrow.iter().zip(gw.chunks_exact_mut(d_out)) {
-            let xv = xv as f64;
-            for (gwv, &g) in gwrow.iter_mut().zip(gyrow) {
-                *gwv += xv * g;
-            }
-        }
-    }
-}
-
-/// LayerNorm backward for a (t, d) input: recomputes μ/σ from the taped
-/// f32 input, **accumulates** `gx` and the scale/bias gradients.
-fn layernorm_bwd(
-    x: &[f32],
-    scale: &[f32],
-    gy: &[f64],
-    d: usize,
-    gx: &mut [f64],
-    gscale: &mut [f64],
-    gbias: &mut [f64],
-) {
-    for ((row, gyrow), gxrow) in
-        x.chunks_exact(d).zip(gy.chunks_exact(d)).zip(gx.chunks_exact_mut(d))
-    {
-        let mut mu = 0.0f64;
-        for &v in row {
-            mu += v as f64;
-        }
-        mu /= d as f64;
-        let mut var = 0.0f64;
-        for &v in row {
-            let c = v as f64 - mu;
-            var += c * c;
-        }
-        var /= d as f64;
-        let rstd = 1.0 / (var + 1e-6).sqrt();
-        let mut mean_gxhat = 0.0f64;
-        let mut mean_gxhat_xhat = 0.0f64;
-        for (j, (&v, &g)) in row.iter().zip(gyrow).enumerate() {
-            let xhat = (v as f64 - mu) * rstd;
-            let gxhat = g * scale[j] as f64;
-            gscale[j] += g * xhat;
-            gbias[j] += g;
-            mean_gxhat += gxhat;
-            mean_gxhat_xhat += gxhat * xhat;
-        }
-        mean_gxhat /= d as f64;
-        mean_gxhat_xhat /= d as f64;
-        for (j, (&v, gxv)) in row.iter().zip(gxrow.iter_mut()).enumerate() {
-            let xhat = (v as f64 - mu) * rstd;
-            let gxhat = gyrow[j] * scale[j] as f64;
-            *gxv += rstd * (gxhat - mean_gxhat - xhat * mean_gxhat_xhat);
-        }
-    }
-}
-
-/// tanh-GELU derivative applied in place to `g` given the pre-activation.
-fn gelu_bwd(pre: &[f32], g: &mut [f64]) {
-    const C: f64 = 0.797_884_560_802_865_4; // sqrt(2/π)
-    for (&x, gv) in pre.iter().zip(g.iter_mut()) {
-        let x = x as f64;
-        let th = (C * (x + 0.044715 * x * x * x)).tanh();
-        *gv *= 0.5 * (1.0 + th) + 0.5 * x * (1.0 - th * th) * C * (1.0 + 3.0 * 0.044715 * x * x);
-    }
-}
-
-/// Hermitian multiplicity of rfft bin `j` for a length-`n` real signal:
-/// DC and (even n) Nyquist appear once in the packed spectrum, every
-/// other bin stands for a conjugate pair.
-fn bin_weight(n: usize, j: usize) -> f64 {
-    if j == 0 || (n % 2 == 0 && j == n / 2) {
-        1.0
-    } else {
-        2.0
-    }
-}
-
-/// Mean-softmax-CE pieces for one row: NLL, argmax correctness, and
-/// `∂nll/∂logits = p − onehot(label)` into `g`.
-fn softmax_ce(logits: &[f32], label: usize, g: &mut [f64]) -> (f64, bool) {
-    let mut m = f64::NEG_INFINITY;
-    for &v in logits {
-        m = m.max(v as f64);
-    }
-    let mut sum = 0.0f64;
-    for (gv, &v) in g.iter_mut().zip(logits) {
-        *gv = (v as f64 - m).exp();
-        sum += *gv;
-    }
-    let nll = sum.ln() + m - logits[label] as f64;
-    let mut best = 0usize;
-    for (c, &v) in logits.iter().enumerate() {
-        if v > logits[best] {
-            best = c;
-        }
-    }
-    for gv in g.iter_mut() {
-        *gv /= sum;
-    }
-    g[label] -= 1.0;
-    (nll, best == label)
-}
-
-// ---------------------------------------------------------------------------
-// Forward with tape
-// ---------------------------------------------------------------------------
-
-/// [`ForwardTap`] adapter that records every intermediate backward
-/// needs onto a [`Tape`]. With this, `model::forward_row_with` *is* the
-/// taped forward — predict and train share one forward implementation,
-/// so the taped logits are bit-identical to `forward_row`'s by
-/// construction (still pinned by a test).
-struct TapeRecorder<'a> {
-    tape: &'a mut Tape,
-    e: usize,
-    hd: usize,
-    seq_len: usize,
-}
-
-impl ForwardTap for TapeRecorder<'_> {
-    fn mask(&mut self, t: usize, mask: &[bool]) {
-        self.tape.t = t;
-        self.tape.mask[..t].copy_from_slice(mask);
-    }
-
-    fn block_begin(&mut self, layer: usize, x_in: &[f32]) {
-        self.tape.blocks[layer].x_in[..x_in.len()].copy_from_slice(x_in);
-    }
-
-    fn ln1(&mut self, layer: usize, h1: &[f32]) {
-        self.tape.blocks[layer].h1[..h1.len()].copy_from_slice(h1);
-    }
-
-    fn qkv(&mut self, layer: usize, q: &[f32], k: &[f32], v: &[f32]) {
-        let bt = &mut self.tape.blocks[layer];
-        bt.q[..q.len()].copy_from_slice(q);
-        bt.k[..k.len()].copy_from_slice(k);
-        bt.v[..v.len()].copy_from_slice(v);
-    }
-
-    fn beta(&mut self, layer: usize, head: usize, br: &[f64], bi: &[f64]) {
-        // β arrives fully accumulated; also clear this head's weight
-        // row — masked positions keep w = 0 (the forward never fires
-        // `weight` for them).
-        let t = self.tape.t;
-        let kb = br.len();
-        let bt = &mut self.tape.blocks[layer];
-        bt.beta_re[head * kb..(head + 1) * kb].copy_from_slice(br);
-        bt.beta_im[head * kb..(head + 1) * kb].copy_from_slice(bi);
-        bt.w[head * self.seq_len..head * self.seq_len + t].fill(0.0);
-    }
-
-    fn vhat(&mut self, layer: usize, head: usize, pos: usize, vhat: &[f64]) {
-        let base = pos * self.e + head * self.hd;
-        self.tape.blocks[layer].vhat[base..base + self.hd].copy_from_slice(vhat);
-    }
-
-    fn weight(&mut self, layer: usize, head: usize, pos: usize, w: f64) {
-        self.tape.blocks[layer].w[head * self.seq_len + pos] = w;
-    }
-
-    fn attn(&mut self, layer: usize, attn: &[f32]) {
-        self.tape.blocks[layer].attn[..attn.len()].copy_from_slice(attn);
-    }
-
-    fn attn_residual(&mut self, layer: usize, x_mid: &[f32]) {
-        self.tape.blocks[layer].x_mid[..x_mid.len()].copy_from_slice(x_mid);
-    }
-
-    fn ln2(&mut self, layer: usize, h2: &[f32]) {
-        self.tape.blocks[layer].h2[..h2.len()].copy_from_slice(h2);
-    }
-
-    fn mlp_pre(&mut self, layer: usize, mlp_pre: &[f32]) {
-        self.tape.blocks[layer].mlp_pre[..mlp_pre.len()].copy_from_slice(mlp_pre);
-    }
-
-    fn final_input(&mut self, x_final: &[f32]) {
-        self.tape.x_final[..x_final.len()].copy_from_slice(x_final);
-    }
-
-    fn pooled(&mut self, pooled: &[f32], n_valid: f64) {
-        self.tape.pooled.copy_from_slice(pooled);
-        self.tape.n_valid = n_valid;
-    }
-
-    fn head_pre(&mut self, head_pre: &[f32]) {
-        self.tape.head_pre.copy_from_slice(head_pre);
-    }
-
-    fn head_act(&mut self, head_act: &[f32]) {
-        self.tape.head_act.copy_from_slice(head_act);
-    }
-
-    fn logits(&mut self, logits: &[f32]) {
-        self.tape.logits.copy_from_slice(logits);
-    }
-}
-
-/// Forward one row via `model::forward_row_with`, recording every
-/// intermediate backward needs on `tape` (logits land on the tape and
-/// in `logits`). `ws` is the same per-worker scratch predict uses.
-fn forward_row_tape(
-    cfg: &HrrConfig,
-    rp: &ResolvedParams<'_>,
-    ids: &[i32],
-    tape: &mut Tape,
-    ws: &mut Workspace,
-    logits: &mut [f32],
-) {
-    let mut tap =
-        TapeRecorder { tape, e: cfg.embed, hd: cfg.head_dim(), seq_len: cfg.seq_len };
-    forward_row_with(cfg, rp, ids, ws, logits, &mut tap);
-}
-
-// ---------------------------------------------------------------------------
-// Backward
-// ---------------------------------------------------------------------------
-
-/// Backward through one head of HRR attention: reads `gws.gattn`,
-/// accumulates into `gws.gq/gk/gv` and the scratch bins. See the module
-/// docs for the adjoint derivations.
-fn attention_bwd(
-    cfg: &HrrConfig,
-    bt: &BlockTape,
-    mask: &[bool],
-    head: usize,
-    t: usize,
-    gws: &mut GradScratch,
-) {
-    let e = cfg.embed;
-    let hd = cfg.head_dim();
-    let kb = num_bins(hd);
-    let off = head * hd;
-    let hdf = hd as f64;
-    let wrow = &bt.w[head * cfg.seq_len..head * cfg.seq_len + t];
-    let GradScratch {
-        fs, gattn, gq, gk, gv, gw, gsc, gbr, gbi, gur, gui, tr, ti, qfr, qfi, ghd, ..
-    } = gws;
-
-    // Eq. 4 backward: out_i = w_i · v_i → gw_i = ⟨g_out, v⟩, plus the
-    // direct w·g_out term into gv; then softmax over the unmasked set.
-    for i in 0..t {
-        if !mask[i] {
-            gw[i] = 0.0;
-            continue;
-        }
-        let base = i * e + off;
-        let mut acc = 0.0f64;
-        for (&g, &x) in gattn[base..base + hd].iter().zip(&bt.v[base..base + hd]) {
-            acc += g * x as f64;
-        }
-        gw[i] = acc;
-        for (gvd, &g) in gv[base..base + hd].iter_mut().zip(&gattn[base..base + hd]) {
-            *gvd += wrow[i] * g;
-        }
-    }
-    let mut s_dot = 0.0f64;
-    for i in 0..t {
-        if mask[i] {
-            s_dot += wrow[i] * gw[i];
-        }
-    }
-    for i in 0..t {
-        gsc[i] = if mask[i] { wrow[i] * (gw[i] - s_dot) } else { 0.0 };
-    }
-
-    gbr.fill(0.0);
-    gbi.fill(0.0);
-    for i in 0..t {
-        if !mask[i] {
-            continue;
-        }
-        let base = i * e + off;
-        // Eq. 3 backward: score = ⟨v, v̂⟩ / (‖v‖‖v̂‖ + ε)
-        let vv = &bt.v[base..base + hd];
-        let vh = &bt.vhat[base..base + hd];
-        let mut num = 0.0f64;
-        let mut na = 0.0f64;
-        let mut nh = 0.0f64;
-        for (&a, &b) in vv.iter().zip(vh) {
-            num += a as f64 * b;
-            na += a as f64 * a as f64;
-            nh += b * b;
-        }
-        let a = na.sqrt();
-        let b = nh.sqrt();
-        let den = a * b + EPS64;
-        let gnum = gsc[i] / den;
-        let gden = -gsc[i] * num / (den * den);
-        for ((gvd, ghdv), (&vfd, &vhd)) in
-            gv[base..base + hd].iter_mut().zip(ghd.iter_mut()).zip(vv.iter().zip(vh))
-        {
-            let vfd = vfd as f64;
-            *gvd += gnum * vhd + if a > 0.0 { gden * b * vfd / a } else { 0.0 };
-            *ghdv = gnum * vfd + if b > 0.0 { gden * a * vhd / b } else { 0.0 };
-        }
-        // Eq. 2 backward: v̂ = irfft(β · conj(Q)/(|Q|²+ε)).
-        // adjoint of irfft: gU = (c_j / n) · rfft(gv̂)
-        fs.rfft64(ghd);
-        for j in 0..kb {
-            let c = bin_weight(hd, j);
-            gur[j] = c / hdf * fs.re[j];
-            gui[j] = c / hdf * fs.im[j];
-        }
-        fs.rfft(&bt.q[base..base + hd]);
-        qfr.copy_from_slice(&fs.re[..kb]);
-        qfi.copy_from_slice(&fs.im[..kb]);
-        for j in 0..kb {
-            let x = qfr[j];
-            let y = qfi[j];
-            let d2 = x * x + y * y + EPS64;
-            let dd = d2 * d2;
-            let invr = x / d2;
-            let invi = -y / d2;
-            // gβ += gU · conj(inv)
-            gbr[j] += gur[j] * invr + gui[j] * invi;
-            gbi[j] += gui[j] * invr - gur[j] * invi;
-            // ∂inv/∂(Re Q) = (d2 − 2x² + 2ixy)/d2²,
-            // ∂inv/∂(Im Q) = (−2xy + i(2y² − d2))/d2²; chain through β·inv
-            let axr = (d2 - 2.0 * x * x) / dd;
-            let axi = 2.0 * x * y / dd;
-            let ayr = -2.0 * x * y / dd;
-            let ayi = (2.0 * y * y - d2) / dd;
-            let br_ = bt.beta_re[head * kb + j];
-            let bi_ = bt.beta_im[head * kb + j];
-            let uxr = br_ * axr - bi_ * axi;
-            let uxi = br_ * axi + bi_ * axr;
-            let uyr = br_ * ayr - bi_ * ayi;
-            let uyi = br_ * ayi + bi_ * ayr;
-            // adjoint of rfft: gq = n · irfft(gQ / c_j)
-            let c = bin_weight(hd, j);
-            tr[j] = (gur[j] * uxr + gui[j] * uxi) / c;
-            ti[j] = (gur[j] * uyr + gui[j] * uyi) / c;
-        }
-        fs.irfft(tr, ti);
-        for (gqd, &r) in gq[base..base + hd].iter_mut().zip(fs.re[..hd].iter()) {
-            *gqd += hdf * r;
-        }
-    }
-
-    // Eq. 1 backward: β = Σ_i Kf_i · Vf_i over the unmasked set.
-    for i in 0..t {
-        if !mask[i] {
-            continue;
-        }
-        let base = i * e + off;
-        fs.rfft(&bt.v[base..base + hd]);
-        qfr.copy_from_slice(&fs.re[..kb]);
-        qfi.copy_from_slice(&fs.im[..kb]);
-        for j in 0..kb {
-            let c = bin_weight(hd, j);
-            // gKf = gβ · conj(Vf)
-            tr[j] = (gbr[j] * qfr[j] + gbi[j] * qfi[j]) / c;
-            ti[j] = (gbi[j] * qfr[j] - gbr[j] * qfi[j]) / c;
-        }
-        fs.irfft(tr, ti);
-        for (gkd, &r) in gk[base..base + hd].iter_mut().zip(fs.re[..hd].iter()) {
-            *gkd += hdf * r;
-        }
-        fs.rfft(&bt.k[base..base + hd]);
-        qfr.copy_from_slice(&fs.re[..kb]);
-        qfi.copy_from_slice(&fs.im[..kb]);
-        for j in 0..kb {
-            let c = bin_weight(hd, j);
-            // gVf = gβ · conj(Kf)
-            tr[j] = (gbr[j] * qfr[j] + gbi[j] * qfi[j]) / c;
-            ti[j] = (gbi[j] * qfr[j] - gbr[j] * qfi[j]) / c;
-        }
-        fs.irfft(tr, ti);
-        for (gvd, &r) in gv[base..base + hd].iter_mut().zip(fs.re[..hd].iter()) {
-            *gvd += hdf * r;
-        }
-    }
-}
-
-/// Backward one row from its tape into `grads`; returns (nll, correct).
-fn backward_row(
-    cfg: &HrrConfig,
-    rp: &ResolvedParams<'_>,
-    ids: &[i32],
-    label: usize,
-    tape: &Tape,
-    gws: &mut GradScratch,
-    grads: &mut RowGrads,
-) -> (f64, bool) {
-    let e = cfg.embed;
-    let mlp = cfg.mlp_dim;
-    let classes = cfg.classes;
-    let t = tape.t;
-    let idx = ParamIdx::of(cfg);
-
-    let (nll, correct) = softmax_ce(&tape.logits, label, &mut gws.glogits);
-
-    // classifier head
-    for (g, &gl) in grads.tensors[idx.head2_bias()].iter_mut().zip(gws.glogits.iter()) {
-        *g += gl;
-    }
-    {
-        let gk2 = &mut grads.tensors[idx.head2()];
-        for (u, &a) in tape.head_act.iter().enumerate() {
-            let a = a as f64;
-            for (gwv, &gl) in gk2[u * classes..(u + 1) * classes].iter_mut().zip(&gws.glogits) {
-                *gwv += a * gl;
-            }
-        }
-    }
-    for (u, gh) in gws.ghead.iter_mut().enumerate() {
-        let mut acc = 0.0f64;
-        for (&wv, &gl) in rp.head2[u * classes..(u + 1) * classes].iter().zip(&gws.glogits) {
-            acc += wv as f64 * gl;
-        }
-        *gh = if tape.head_pre[u] > 0.0 { acc } else { 0.0 }; // relu mask
-    }
-    for (g, &gh) in grads.tensors[idx.head1_bias()].iter_mut().zip(gws.ghead.iter()) {
-        *g += gh;
-    }
-    {
-        let gk1 = &mut grads.tensors[idx.head1()];
-        for (j, &pj) in tape.pooled.iter().enumerate() {
-            let pj = pj as f64;
-            for (gwv, &gh) in gk1[j * mlp..(j + 1) * mlp].iter_mut().zip(&gws.ghead) {
-                *gwv += pj * gh;
-            }
-        }
-    }
-    for (j, gp) in gws.gpooled.iter_mut().enumerate() {
-        let mut acc = 0.0f64;
-        for (&wv, &gh) in rp.head1[j * mlp..(j + 1) * mlp].iter().zip(&gws.ghead) {
-            acc += wv as f64 * gh;
-        }
-        *gp = acc;
-    }
-
-    // masked mean-pool backward into the final-LN output gradient
-    for i in 0..t {
-        let dst = &mut gws.gtmp[i * e..(i + 1) * e];
-        if tape.mask[i] {
-            for (d, &gp) in dst.iter_mut().zip(&gws.gpooled) {
-                *d = gp / tape.n_valid;
-            }
-        } else {
-            dst.fill(0.0);
-        }
-    }
-
-    // final LayerNorm
-    gws.gx[..t * e].fill(0.0);
-    {
-        let sidx = idx.ln_f_scale();
-        let (left, right) = grads.tensors.split_at_mut(sidx + 1);
-        layernorm_bwd(
-            &tape.x_final[..t * e],
-            rp.ln_f_scale,
-            &gws.gtmp[..t * e],
-            e,
-            &mut gws.gx[..t * e],
-            &mut left[sidx],
-            &mut right[0],
-        );
-    }
-
-    // encoder blocks in reverse
-    for (b, bp) in rp.blocks.iter().enumerate().rev() {
-        let bt = &tape.blocks[b];
-        // MLP sub-block: x_out = x_mid + gelu(fc1(h2)+b1) @ fc2 + b2
-        gws.act[..t * mlp].copy_from_slice(&bt.mlp_pre[..t * mlp]);
-        gelu(&mut gws.act[..t * mlp]);
-        let fc2_bias = &mut grads.tensors[idx.block(b, FC2_BIAS)];
-        for (g, chunk) in fc2_bias.iter_mut().zip(ColumnSums::new(&gws.gx, t, e)) {
-            *g += chunk;
-        }
-        matmul_grad_w(
-            &gws.act[..t * mlp],
-            &gws.gx[..t * e],
-            t,
-            mlp,
-            e,
-            &mut grads.tensors[idx.block(b, FC2)],
-        );
-        matmul_grad_x(&gws.gx[..t * e], bp.fc2, t, mlp, e, &mut gws.gmlp[..t * mlp], false);
-        gelu_bwd(&bt.mlp_pre[..t * mlp], &mut gws.gmlp[..t * mlp]);
-        let fc1_bias = &mut grads.tensors[idx.block(b, FC1_BIAS)];
-        for (g, chunk) in fc1_bias.iter_mut().zip(ColumnSums::new(&gws.gmlp, t, mlp)) {
-            *g += chunk;
-        }
-        matmul_grad_w(
-            &bt.h2[..t * e],
-            &gws.gmlp[..t * mlp],
-            t,
-            e,
-            mlp,
-            &mut grads.tensors[idx.block(b, FC1)],
-        );
-        matmul_grad_x(&gws.gmlp[..t * mlp], bp.fc1, t, e, mlp, &mut gws.gtmp[..t * e], false);
-        {
-            let sidx = idx.block(b, LN2_SCALE);
-            let (left, right) = grads.tensors.split_at_mut(sidx + 1);
-            layernorm_bwd(
-                &bt.x_mid[..t * e],
-                bp.ln2_scale,
-                &gws.gtmp[..t * e],
-                e,
-                &mut gws.gx[..t * e],
-                &mut left[sidx],
-                &mut right[0],
-            );
-        }
-        // attention sub-block: x_mid = x_in + attn @ W_out
-        matmul_grad_w(
-            &bt.attn[..t * e],
-            &gws.gx[..t * e],
-            t,
-            e,
-            e,
-            &mut grads.tensors[idx.block(b, OUTPUT)],
-        );
-        matmul_grad_x(&gws.gx[..t * e], bp.output, t, e, e, &mut gws.gattn[..t * e], false);
-        gws.gq[..t * e].fill(0.0);
-        gws.gk[..t * e].fill(0.0);
-        gws.gv[..t * e].fill(0.0);
-        for head in 0..cfg.heads {
-            attention_bwd(cfg, bt, &tape.mask[..t], head, t, gws);
-        }
-        matmul_grad_w(
-            &bt.h1[..t * e],
-            &gws.gq[..t * e],
-            t,
-            e,
-            e,
-            &mut grads.tensors[idx.block(b, QUERY)],
-        );
-        matmul_grad_w(
-            &bt.h1[..t * e],
-            &gws.gk[..t * e],
-            t,
-            e,
-            e,
-            &mut grads.tensors[idx.block(b, KEY)],
-        );
-        matmul_grad_w(
-            &bt.h1[..t * e],
-            &gws.gv[..t * e],
-            t,
-            e,
-            e,
-            &mut grads.tensors[idx.block(b, VALUE)],
-        );
-        matmul_grad_x(&gws.gq[..t * e], bp.query, t, e, e, &mut gws.gtmp[..t * e], false);
-        matmul_grad_x(&gws.gk[..t * e], bp.key, t, e, e, &mut gws.gtmp[..t * e], true);
-        matmul_grad_x(&gws.gv[..t * e], bp.value, t, e, e, &mut gws.gtmp[..t * e], true);
-        {
-            let sidx = idx.block(b, LN1_SCALE);
-            let (left, right) = grads.tensors.split_at_mut(sidx + 1);
-            layernorm_bwd(
-                &bt.x_in[..t * e],
-                bp.ln1_scale,
-                &gws.gtmp[..t * e],
-                e,
-                &mut gws.gx[..t * e],
-                &mut left[sidx],
-                &mut right[0],
-            );
-        }
-    }
-
-    // embeddings (scatter-add at the clamped ids) + learned positions
-    {
-        let gemb = &mut grads.tensors[idx.embed()];
-        for (i, &id) in ids.iter().enumerate() {
-            let row = (id.max(0) as usize).min(cfg.vocab - 1);
-            for (g, &gx) in gemb[row * e..(row + 1) * e].iter_mut().zip(&gws.gx[i * e..(i + 1) * e])
-            {
-                *g += gx;
-            }
-        }
-    }
-    if let Some(pidx) = idx.pos() {
-        for (g, &gx) in grads.tensors[pidx].iter_mut().zip(gws.gx[..t * e].iter()) {
-            *g += gx;
-        }
-    }
-    (nll, correct)
-}
-
-/// Iterator of per-column sums of a (t, d) f64 buffer — bias gradients.
-struct ColumnSums<'a> {
-    data: &'a [f64],
-    t: usize,
-    d: usize,
-    j: usize,
-}
-
-impl<'a> ColumnSums<'a> {
-    fn new(data: &'a [f64], t: usize, d: usize) -> ColumnSums<'a> {
-        ColumnSums { data, t, d, j: 0 }
-    }
-}
-
-impl Iterator for ColumnSums<'_> {
-    type Item = f64;
-
-    fn next(&mut self) -> Option<f64> {
-        if self.j >= self.d {
-            return None;
-        }
-        let mut acc = 0.0f64;
-        for i in 0..self.t {
-            acc += self.data[i * self.d + self.j];
-        }
-        self.j += 1;
-        Some(acc)
-    }
 }
 
 // ---------------------------------------------------------------------------
@@ -1074,7 +196,9 @@ where
 /// forward+backward rows out exactly like `NativeSession::predict` fans
 /// inference rows. Gradients are reduced in fixed row order, so the
 /// whole training trajectory is bit-identical under every scheduler and
-/// worker budget.
+/// worker budget. The architecture comes from the config — both the
+/// paper's Hrrformer and the HGConv mixer train through this one
+/// session type.
 pub struct NativeTrainSession {
     cfg: HrrConfig,
     /// Program base this session was created from (empty when built
@@ -1086,6 +210,10 @@ pub struct NativeTrainSession {
     v: ParamStore,
     step: u32,
     scheduler: RowScheduler,
+    /// Drop probability for `train_step` (0 = disabled) and the seed
+    /// its mask streams derive from.
+    dropout: f64,
+    dropout_seed: u64,
     /// Recycled per-row gradient buffers: [`NativeTrainSession::train_step`]
     /// returns each batch's `RowGrads` here instead of dropping them, so
     /// steady-state training stops reallocating ~B parameter-sized f64
@@ -1128,6 +256,8 @@ impl NativeTrainSession {
             v,
             step: 0,
             scheduler: RowScheduler::Scoped(crate::util::pool::default_budget()),
+            dropout: 0.0,
+            dropout_seed: 0,
             grad_cache: Vec::new(),
         })
     }
@@ -1160,6 +290,28 @@ impl NativeTrainSession {
         &self.scheduler
     }
 
+    /// Enable inverted dropout during [`NativeTrainSession::train_step`]
+    /// — on the embedding and both residual branches of every block.
+    /// `p` is the drop probability in `[0, 1)`; `seed` drives the mask
+    /// streams, independent of the parameter-init seed. Masks depend
+    /// only on (seed, step, row, site), so dropped training keeps the
+    /// bit-identical-across-schedulers contract; eval, `batch_loss` and
+    /// serving never see dropout.
+    pub fn set_dropout(&mut self, p: f64, seed: u64) -> Result<()> {
+        anyhow::ensure!(
+            (0.0..1.0).contains(&p),
+            "dropout probability {p} outside [0, 1)"
+        );
+        self.dropout = p;
+        self.dropout_seed = seed;
+        Ok(())
+    }
+
+    /// The active drop probability (0 = disabled).
+    pub fn dropout(&self) -> f64 {
+        self.dropout
+    }
+
     fn check_batch(&self, ids: &Tensor, labels: &Tensor) -> Result<(usize, usize)> {
         let shape = ids.shape();
         anyhow::ensure!(shape.len() == 2, "native train expects (B, T) ids, got {shape:?}");
@@ -1190,7 +342,8 @@ impl NativeTrainSession {
     /// — bit-identical for every scheduler and worker budget.
     ///
     /// Each row in flight holds one parameter-sized f64 gradient buffer
-    /// (the price of the fixed reduction order).
+    /// (the price of the fixed reduction order). No dropout: this is
+    /// the exact gradient the finite-difference and golden tests pin.
     pub fn grad_batch(
         &self,
         ids: &Tensor,
@@ -1200,18 +353,20 @@ impl NativeTrainSession {
         // fresh (empty) cache: standalone calls keep allocating per
         // call; `train_step` threads the session's persistent cache in.
         let mut cache = Vec::new();
-        self.grad_batch_cached(ids, labels, scheduler, &mut cache)
+        self.grad_batch_cached(ids, labels, scheduler, None, &mut cache)
     }
 
     /// [`NativeTrainSession::grad_batch`] drawing per-row gradient
     /// buffers from `cache` (zero-filled before reuse) and returning
     /// them there afterwards — byte-for-byte the same results, without
-    /// reallocating B parameter-sized buffers per step.
+    /// reallocating B parameter-sized buffers per step. `dropout`
+    /// carries the step's mask schedule when training with dropout.
     fn grad_batch_cached(
         &self,
         ids: &Tensor,
         labels: &Tensor,
         scheduler: &RowScheduler,
+        dropout: Option<DropoutSpec>,
         cache: &mut Vec<RowGrads>,
     ) -> Result<(f64, f64, Vec<Vec<f64>>)> {
         let (b, t) = self.check_batch(ids, labels)?;
@@ -1240,7 +395,10 @@ impl NativeTrainSession {
             for (off, slot) in chunk.iter_mut().enumerate() {
                 let r = row0 + off;
                 let row_ids = &data[r * t..(r + 1) * t];
-                forward_row_tape(cfg, &rp, row_ids, &mut tape, &mut ws, &mut logits);
+                // mask streams fold in the *global* row index, so the
+                // chunk partitioning cannot reach the masks
+                let ctx = dropout.map(|spec| DropoutCtx::new(spec, r as u64));
+                forward_row_tape(cfg, &rp, row_ids, &mut tape, &mut ws, &mut logits, ctx.as_ref());
                 let (nll, correct) = backward_row(
                     cfg,
                     &rp,
@@ -1249,6 +407,7 @@ impl NativeTrainSession {
                     &tape,
                     &mut gws,
                     &mut slot.grads,
+                    ctx.as_ref(),
                 );
                 slot.nll = nll;
                 slot.correct = correct;
@@ -1282,7 +441,8 @@ impl NativeTrainSession {
     }
 
     /// Mean loss/accuracy of one batch, forward only (f64 — the
-    /// finite-difference tests need the extra digits).
+    /// finite-difference tests need the extra digits). Never dropped:
+    /// eval is the deployed network.
     pub fn batch_loss(&self, ids: &Tensor, labels: &Tensor) -> Result<(f64, f64)> {
         let (b, t) = self.check_batch(ids, labels)?;
         let data = ids.as_i32().context("native train ids dtype")?;
@@ -1313,13 +473,19 @@ impl NativeTrainSession {
 
     /// One Adam step (grads from the installed scheduler). LR follows
     /// the exported program's schedule at the *pre-increment* step
-    /// counter, exactly like `train_step(…, step)` in model.py.
+    /// counter, exactly like `train_step(…, step)` in model.py. If
+    /// dropout is enabled, this is the only path that applies it.
     pub fn train_step(&mut self, ids: &Tensor, labels: &Tensor) -> Result<StepStats> {
         let scheduler = self.scheduler.clone();
+        let spec = (self.dropout > 0.0).then(|| DropoutSpec {
+            p: self.dropout,
+            seed: self.dropout_seed,
+            step: self.step as u64,
+        });
         // Thread the session's recycled row-gradient buffers through
         // (taken out for the call — `grad_batch_cached` borrows &self).
         let mut cache = std::mem::take(&mut self.grad_cache);
-        let result = self.grad_batch_cached(ids, labels, &scheduler, &mut cache);
+        let result = self.grad_batch_cached(ids, labels, &scheduler, spec, &mut cache);
         self.grad_cache = cache;
         let (loss, acc, grads) = result?;
         self.adam_update(&grads);
@@ -1473,12 +639,14 @@ mod tests {
     use std::sync::Arc;
 
     use super::*;
+    use crate::hrr::arch::Arch;
     use crate::hrr::{NativeSession, PAD_ID};
     use crate::util::pool::WorkerPool;
 
     /// pow2 head dim (radix-2 FFT path), fixed sinusoid positions.
     fn tiny_cfg() -> HrrConfig {
         HrrConfig {
+            arch: Arch::Hrrformer,
             task: "test".into(),
             vocab: 9,
             seq_len: 6,
@@ -1495,6 +663,7 @@ mod tests {
     /// non-pow2 head dim (naive-DFT fallback), learned positions.
     fn naive_cfg() -> HrrConfig {
         HrrConfig {
+            arch: Arch::Hrrformer,
             task: "test".into(),
             vocab: 9,
             seq_len: 5,
@@ -1506,6 +675,11 @@ mod tests {
             classes: 3,
             learned_pos: true,
         }
+    }
+
+    /// The same skeleton with the HGConv mixer swapped in.
+    fn hg(cfg: HrrConfig) -> HrrConfig {
+        HrrConfig { arch: Arch::HgConv, ..cfg }
     }
 
     fn tiny_batch(t: usize) -> (Tensor, Tensor) {
@@ -1529,7 +703,7 @@ mod tests {
 
     #[test]
     fn tape_forward_matches_predict_forward_bitwise() {
-        for cfg in [tiny_cfg(), naive_cfg()] {
+        for cfg in [tiny_cfg(), naive_cfg(), hg(tiny_cfg()), hg(naive_cfg())] {
             let params = init_native_params(&cfg, 11);
             let rp = ResolvedParams::resolve(&cfg, &params).unwrap();
             let (ids, _) = tiny_batch(cfg.seq_len);
@@ -1542,7 +716,7 @@ mod tests {
             let mut want = vec![0.0f32; cfg.classes];
             for r in 0..2 {
                 let row = &data[r * t..(r + 1) * t];
-                forward_row_tape(&cfg, &rp, row, &mut tape, &mut tape_ws, &mut got);
+                forward_row_tape(&cfg, &rp, row, &mut tape, &mut tape_ws, &mut got, None);
                 forward_row(&cfg, &rp, row, &mut ws, &mut want);
                 assert_eq!(tape.logits, want, "taped forward must be bit-identical");
                 assert_eq!(got, want, "taped forward's own logits must match too");
@@ -1551,7 +725,8 @@ mod tests {
     }
 
     /// Central-difference check of `∂L/∂θ_j` against `batch_loss` for
-    /// the largest-gradient scalars of every parameter tensor.
+    /// the largest-gradient scalars of every parameter tensor — for
+    /// both architectures.
     ///
     /// The f32 forward has a deterministic rounding floor, so each probe
     /// needs signal well above it: h = 2e-3 per scalar (realized f32
@@ -1563,7 +738,7 @@ mod tests {
     /// fixture's f64 reference gradients.)
     #[test]
     fn finite_difference_checks_every_parameter_group() {
-        for cfg in [tiny_cfg(), naive_cfg()] {
+        for cfg in [tiny_cfg(), naive_cfg(), hg(tiny_cfg()), hg(naive_cfg())] {
             let sess = NativeTrainSession::from_config(cfg.clone(), 7).unwrap();
             let (ids, labels) = tiny_batch(cfg.seq_len);
             let (_, _, grads) =
@@ -1599,8 +774,9 @@ mod tests {
                     let err = (num - g[j]).abs() / num.abs().max(g[j].abs()).max(1e-12);
                     assert!(
                         err <= 1e-3,
-                        "{}[{j}]: analytic {:.6e} vs central difference {num:.6e} \
+                        "{} {}[{j}]: analytic {:.6e} vs central difference {num:.6e} \
                          (rel err {err:.2e})",
+                        cfg.arch,
                         specs[gi].name,
                         g[j]
                     );
@@ -1608,30 +784,38 @@ mod tests {
                 }
             }
             // nearly every tensor contributes probes above the floor
-            assert!(probes >= 2 * specs.len(), "only {probes} probes ran");
+            // (the HGConv skeleton has smaller taps tensors, so allow
+            // a lower count there)
+            let floor = match cfg.arch {
+                Arch::Hrrformer => 2 * specs.len(),
+                Arch::HgConv => specs.len(),
+            };
+            assert!(probes >= floor, "{}: only {probes} probes ran", cfg.arch);
         }
     }
 
     #[test]
     fn gradients_bit_identical_across_schedulers_and_budgets() {
-        let cfg = tiny_cfg();
-        let sess = NativeTrainSession::from_config(cfg.clone(), 3).unwrap();
-        let (ids, labels) = tiny_batch(cfg.seq_len);
-        let (l0, a0, g0) = sess.grad_batch(&ids, &labels, &RowScheduler::Sequential).unwrap();
-        let pool1 = Arc::new(WorkerPool::new(1));
-        let pool3 = Arc::new(WorkerPool::new(3));
-        for sched in [
-            RowScheduler::Scoped(2),
-            RowScheduler::Scoped(5),
-            RowScheduler::Pool(pool1),
-            RowScheduler::Pool(pool3),
-        ] {
-            let (l, a, g) = sess.grad_batch(&ids, &labels, &sched).unwrap();
-            assert_eq!(l.to_bits(), l0.to_bits(), "loss drifted under {sched:?}");
-            assert_eq!(a, a0);
-            for (ta, tb) in g0.iter().zip(&g) {
-                for (&x, &y) in ta.iter().zip(tb) {
-                    assert_eq!(x.to_bits(), y.to_bits(), "gradient drifted under {sched:?}");
+        for cfg in [tiny_cfg(), hg(tiny_cfg())] {
+            let sess = NativeTrainSession::from_config(cfg.clone(), 3).unwrap();
+            let (ids, labels) = tiny_batch(cfg.seq_len);
+            let (l0, a0, g0) =
+                sess.grad_batch(&ids, &labels, &RowScheduler::Sequential).unwrap();
+            let pool1 = Arc::new(WorkerPool::new(1));
+            let pool3 = Arc::new(WorkerPool::new(3));
+            for sched in [
+                RowScheduler::Scoped(2),
+                RowScheduler::Scoped(5),
+                RowScheduler::Pool(pool1.clone()),
+                RowScheduler::Pool(pool3.clone()),
+            ] {
+                let (l, a, g) = sess.grad_batch(&ids, &labels, &sched).unwrap();
+                assert_eq!(l.to_bits(), l0.to_bits(), "loss drifted under {sched:?}");
+                assert_eq!(a, a0);
+                for (ta, tb) in g0.iter().zip(&g) {
+                    for (&x, &y) in ta.iter().zip(tb) {
+                        assert_eq!(x.to_bits(), y.to_bits(), "gradient drifted under {sched:?}");
+                    }
                 }
             }
         }
@@ -1651,6 +835,79 @@ mod tests {
             assert_eq!(sa.loss.to_bits(), sb.loss.to_bits());
         }
         assert_eq!(a.params().tensors, b.params().tensors, "params must stay bit-identical");
+    }
+
+    /// The scheduler contract survives dropout: masks derive from
+    /// (seed, step, row, site), never from the partitioning, so a
+    /// dropped trajectory is bit-identical under every scheduler too.
+    #[test]
+    fn dropout_trajectory_is_scheduler_independent() {
+        let cfg = tiny_cfg();
+        let (ids, labels) = tiny_batch(cfg.seq_len);
+        let mut a = NativeTrainSession::from_config(cfg.clone(), 5).unwrap();
+        a.set_dropout(0.25, 42).unwrap();
+        a.set_scheduler(RowScheduler::Sequential);
+        let mut b = NativeTrainSession::from_config(cfg, 5).unwrap();
+        b.set_dropout(0.25, 42).unwrap();
+        b.set_scheduler(RowScheduler::Pool(Arc::new(WorkerPool::new(2))));
+        for _ in 0..3 {
+            let sa = a.train_step(&ids, &labels).unwrap();
+            let sb = b.train_step(&ids, &labels).unwrap();
+            assert_eq!(sa.loss.to_bits(), sb.loss.to_bits(), "dropped loss drifted");
+        }
+        assert_eq!(a.params().tensors, b.params().tensors, "dropped params drifted");
+    }
+
+    #[test]
+    fn dropout_masks_follow_the_seed() {
+        let cfg = tiny_cfg();
+        let (ids, labels) = tiny_batch(cfg.seq_len);
+        let mut mk = |seed: u64| {
+            let mut s = NativeTrainSession::from_config(cfg.clone(), 5).unwrap();
+            s.set_dropout(0.5, seed).unwrap();
+            s.set_scheduler(RowScheduler::Sequential);
+            s.train_step(&ids, &labels).unwrap().loss
+        };
+        let la = mk(1);
+        let lb = mk(1);
+        let lc = mk(2);
+        assert_eq!(la.to_bits(), lb.to_bits(), "same mask seed must replay exactly");
+        assert_ne!(la.to_bits(), lc.to_bits(), "different mask seeds must differ");
+        // and dropout actually changes the step relative to no dropout
+        let clean = NativeTrainSession::from_config(cfg, 5)
+            .map(|mut s| {
+                s.set_scheduler(RowScheduler::Sequential);
+                s.train_step(&ids, &labels).unwrap().loss
+            })
+            .unwrap();
+        assert_ne!(la.to_bits(), clean.to_bits(), "p=0.5 must perturb the loss");
+    }
+
+    #[test]
+    fn eval_paths_never_see_dropout() {
+        let cfg = tiny_cfg();
+        let (ids, labels) = tiny_batch(cfg.seq_len);
+        let mut sess = NativeTrainSession::from_config(cfg, 3).unwrap();
+        let (l0, a0) = sess.batch_loss(&ids, &labels).unwrap();
+        sess.set_dropout(0.9, 7).unwrap();
+        let (l1, a1) = sess.batch_loss(&ids, &labels).unwrap();
+        assert_eq!(l0.to_bits(), l1.to_bits(), "batch_loss must ignore dropout");
+        assert_eq!(a0, a1);
+        let (_, _, g0) = sess.grad_batch(&ids, &labels, &RowScheduler::Sequential).unwrap();
+        assert!(
+            g0.iter().flatten().all(|v| v.is_finite()),
+            "grad_batch is the undropped exact gradient"
+        );
+    }
+
+    #[test]
+    fn dropout_probability_is_validated() {
+        let mut sess = NativeTrainSession::from_config(tiny_cfg(), 1).unwrap();
+        assert!(sess.set_dropout(1.0, 0).is_err(), "p=1 would zero the network");
+        assert!(sess.set_dropout(-0.1, 0).is_err());
+        assert!(sess.set_dropout(0.999, 0).is_ok());
+        assert!(sess.set_dropout(0.0, 0).is_ok(), "p=0 disables dropout");
+        assert_eq!(sess.dropout(), 0.0);
     }
 
     /// Recycled row-gradient buffers must be invisible in the numbers:
@@ -1697,20 +954,43 @@ mod tests {
         );
     }
 
+    /// The same overfitting smoke for the second architecture — HGConv
+    /// trains end-to-end through the identical session machinery.
+    #[test]
+    fn hgconv_loss_decreases_over_20_steps_on_a_fixed_batch() {
+        use crate::data::{batch::BatchStream, by_task, Split};
+        let cfg = HrrConfig::from_base("listops_hgconv_small_T16_B4").unwrap();
+        assert_eq!(cfg.arch, Arch::HgConv);
+        let ds = by_task("listops", 16).unwrap();
+        let batch = BatchStream::new(ds.as_ref(), Split::Train, 1, 4, 16).next_batch();
+        let mut sess = NativeTrainSession::from_config(cfg, 0).unwrap();
+        let first = sess.train_step(&batch.ids, &batch.labels).unwrap().loss;
+        let mut last = first;
+        for _ in 0..19 {
+            last = sess.train_step(&batch.ids, &batch.labels).unwrap().loss;
+        }
+        assert!(last.is_finite() && first.is_finite());
+        assert!(
+            last < first,
+            "overfitting one batch must reduce the loss: {first} -> {last}"
+        );
+    }
+
     #[test]
     fn all_pad_rows_train_without_nans() {
-        let cfg = tiny_cfg();
-        let mut sess = NativeTrainSession::from_config(cfg.clone(), 2).unwrap();
-        let mut flat = vec![0i32; 2 * cfg.seq_len];
-        for v in flat[..cfg.seq_len].iter_mut() {
-            *v = 3;
-        }
-        let ids = Tensor::i32(vec![2, cfg.seq_len], flat); // second row all-PAD
-        let labels = Tensor::i32(vec![2], vec![0, 1]);
-        let stats = sess.train_step(&ids, &labels).unwrap();
-        assert!(stats.loss.is_finite());
-        for t in &sess.params().tensors {
-            assert!(t.as_f32().unwrap().iter().all(|v| v.is_finite()));
+        for cfg in [tiny_cfg(), hg(tiny_cfg())] {
+            let mut sess = NativeTrainSession::from_config(cfg.clone(), 2).unwrap();
+            let mut flat = vec![0i32; 2 * cfg.seq_len];
+            for v in flat[..cfg.seq_len].iter_mut() {
+                *v = 3;
+            }
+            let ids = Tensor::i32(vec![2, cfg.seq_len], flat); // second row all-PAD
+            let labels = Tensor::i32(vec![2], vec![0, 1]);
+            let stats = sess.train_step(&ids, &labels).unwrap();
+            assert!(stats.loss.is_finite());
+            for t in &sess.params().tensors {
+                assert!(t.as_f32().unwrap().iter().all(|v| v.is_finite()));
+            }
         }
     }
 

@@ -1,0 +1,342 @@
+//! HGConv: a gated holographic global convolution token mixer — the
+//! "convolutional" reading of the same HRR algebra the Hrrformer binds
+//! with (PAPERS.md 2024). Per block, between ln1 (`ws.h`) and the shared
+//! output projection:
+//!
+//! ```text
+//!   g_pre = h @ W_gate                       (t, e)
+//!   u     = h @ W_conv, masked rows zeroed   (t, e)
+//!   c_j   = irfft(rfft(u_j) ∘ rfft(τ_j))    per channel j (circular)
+//!   m     = gelu(g_pre) ⊙ c, masked rows zeroed
+//! ```
+//!
+//! where `τ_j` is channel j's learned filter taps (`filter_len =
+//! min(seq_len, 64)` of them), zero-padded to the row length — a short
+//! learned kernel applied as a length-t circular convolution through
+//! one FFT-multiply-IFFT round trip, O(t log t) per channel instead of
+//! the O(t²) direct sum.
+//!
+//! The backward pass is hand-derived from the correlation theorem: for
+//! real signals, `∂L/∂u = gc ⋆ τ` and `∂L/∂τ = gc ⋆ u` (circular
+//! correlations, i.e. spectral products with the conjugate), both exact
+//! in the time domain — no Hermitian bin-weight bookkeeping is needed
+//! because every signal round-trips through full rfft/irfft pairs. The
+//! gate chain recomputes single activations through
+//! [`gelu_scalar`], the exact per-element arithmetic of the forward's
+//! vector [`crate::hrr::common::gelu`], so recompute and forward agree
+//! bit-for-bit.
+//!
+//! HGConv is **not streamable**: every output position mixes every
+//! input position through the filter, so there is no order-free O(H)
+//! per-position statistic to carry between chunks the way the
+//! Hrrformer's β/max/denominator triplet allows. Streams against an
+//! hgconv bucket are rejected with a typed error
+//! (`StreamError::NotStreamable`, HTTP 409).
+
+use anyhow::Result;
+
+use crate::hrr::arch::Architecture;
+use crate::hrr::common::tape::{
+    gelu_bwd, matmul_grad_w, matmul_grad_x, BlockTape, GradScratch, ParamIdx, RowGrads, MIXER_0,
+    MIXER_1, MIXER_2,
+};
+use crate::hrr::common::{
+    gelu_scalar, matmul_into, param, BlockParams, ForwardTap, MixerParams, Workspace,
+};
+use crate::hrr::config::HrrConfig;
+use crate::hrr::plan::{with_plan, FftPlan};
+use crate::model::params::ParamStore;
+use crate::runtime::manifest::IoSpec;
+use crate::runtime::tensor::DType;
+
+/// Learned taps per channel: short kernels train stably and keep the
+/// parameter count comparable to one (e, e) projection; capped by the
+/// bucket length so tiny test configs stay well-formed.
+pub(crate) fn filter_len(cfg: &HrrConfig) -> usize {
+    cfg.seq_len.min(64)
+}
+
+/// Length-n circular convolution `a ⊛ b` via one rfft/irfft round trip.
+fn circ_conv(plan: &mut FftPlan, a: &[f64], b: &[f64]) -> Vec<f64> {
+    let (ar, ai) = plan.rfft(a);
+    let (br, bi) = plan.rfft(b);
+    let pr: Vec<f64> = ar.iter().zip(&ai).zip(br.iter().zip(&bi)).map(
+        |((&x, &y), (&u, &v))| x * u - y * v,
+    ).collect();
+    let pi: Vec<f64> = ar.iter().zip(&ai).zip(br.iter().zip(&bi)).map(
+        |((&x, &y), (&u, &v))| x * v + y * u,
+    ).collect();
+    plan.irfft(&pr, &pi)
+}
+
+/// Length-n circular correlation `a ⋆ b = irfft(rfft(a) ∘ conj(rfft(b)))`
+/// — the adjoint of [`circ_conv`] in either argument (real signals).
+fn circ_corr(plan: &mut FftPlan, a: &[f64], b: &[f64]) -> Vec<f64> {
+    let (ar, ai) = plan.rfft(a);
+    let (br, bi) = plan.rfft(b);
+    let pr: Vec<f64> = ar.iter().zip(&ai).zip(br.iter().zip(&bi)).map(
+        |((&x, &y), (&u, &v))| x * u + y * v,
+    ).collect();
+    let pi: Vec<f64> = ar.iter().zip(&ai).zip(br.iter().zip(&bi)).map(
+        |((&x, &y), (&u, &v))| y * u - x * v,
+    ).collect();
+    plan.irfft(&pr, &pi)
+}
+
+/// The HGConv [`Architecture`] binding.
+pub(crate) struct HgConv;
+
+impl Architecture for HgConv {
+    const NAME: &'static str = "hgconv";
+
+    fn mixer_specs(cfg: &HrrConfig, block: usize) -> Vec<IoSpec> {
+        let e = cfg.embed;
+        vec![
+            IoSpec {
+                name: format!("blocks.{block}.mixer.gate.kernel"),
+                shape: vec![e, e],
+                dtype: DType::F32,
+            },
+            IoSpec {
+                name: format!("blocks.{block}.mixer.conv.kernel"),
+                shape: vec![e, e],
+                dtype: DType::F32,
+            },
+            IoSpec {
+                name: format!("blocks.{block}.mixer.filter.taps"),
+                shape: vec![filter_len(cfg), e],
+                dtype: DType::F32,
+            },
+        ]
+    }
+
+    fn resolve_mixer<'a>(
+        _cfg: &HrrConfig,
+        params: &'a ParamStore,
+        block: usize,
+    ) -> Result<MixerParams<'a>> {
+        Ok(MixerParams::HgConv {
+            gate: param(params, &format!("blocks.{block}.mixer.gate.kernel"))?,
+            conv: param(params, &format!("blocks.{block}.mixer.conv.kernel"))?,
+            taps: param(params, &format!("blocks.{block}.mixer.filter.taps"))?,
+        })
+    }
+
+    fn mixer_forward<T: ForwardTap>(
+        cfg: &HrrConfig,
+        bp: &BlockParams<'_>,
+        ws: &mut Workspace,
+        t: usize,
+        layer: usize,
+        tap: &mut T,
+    ) {
+        let e = cfg.embed;
+        let MixerParams::HgConv { gate, conv, taps } = bp.mixer else {
+            unreachable!("hgconv forward dispatched on a non-hgconv block")
+        };
+        // gate pre-activation (reuses the hrrformer q buffer)
+        matmul_into(&ws.h[..t * e], gate, t, e, e, &mut ws.q[..t * e]);
+        tap.mixer_gate_pre(layer, &ws.q[..t * e]);
+        // convolution input, PAD rows zeroed so they contribute nothing
+        // to any output position of the circular convolution
+        matmul_into(&ws.h[..t * e], conv, t, e, e, &mut ws.k[..t * e]);
+        for i in 0..t {
+            if !ws.mask[i] {
+                ws.k[i * e..(i + 1) * e].fill(0.0);
+            }
+        }
+        tap.mixer_u(layer, &ws.k[..t * e]);
+        // per-channel length-t circular convolution with the zero-padded
+        // taps (short rows truncate the kernel with them). One cached
+        // plan serves all e channels; `with_plan` is not reentrant, so
+        // the single call wraps the whole channel loop.
+        let fl = filter_len(cfg).min(t);
+        let mut sig = vec![0.0f64; t];
+        let mut tsig = vec![0.0f64; t];
+        with_plan(t, |plan| {
+            for j in 0..e {
+                for (i, s) in sig.iter_mut().enumerate() {
+                    *s = ws.k[i * e + j] as f64;
+                }
+                tsig.fill(0.0);
+                for (r, ts) in tsig[..fl].iter_mut().enumerate() {
+                    *ts = taps[r * e + j] as f64;
+                }
+                let out = circ_conv(plan, &sig, &tsig);
+                for (i, &o) in out.iter().enumerate() {
+                    ws.v[i * e + j] = o as f32;
+                }
+            }
+        });
+        tap.mixer_conv(layer, &ws.v[..t * e]);
+        // gated mix; PAD rows zeroed (the hrrformer's softmax likewise
+        // gives them zero weight)
+        let Workspace { mask, q, v, attn, .. } = ws;
+        for i in 0..t {
+            let row = &mut attn[i * e..(i + 1) * e];
+            if !mask[i] {
+                row.fill(0.0);
+                continue;
+            }
+            for ((o, &g), &c) in row.iter_mut().zip(&q[i * e..(i + 1) * e]).zip(&v[i * e..(i + 1) * e])
+            {
+                *o = (gelu_scalar(g) as f64 * c as f64) as f32;
+            }
+        }
+    }
+
+    fn mixer_backward(
+        cfg: &HrrConfig,
+        bt: &BlockTape,
+        bp: &BlockParams<'_>,
+        mask: &[bool],
+        t: usize,
+        gws: &mut GradScratch,
+        grads: &mut RowGrads,
+        idx: ParamIdx,
+        block: usize,
+    ) {
+        let e = cfg.embed;
+        let MixerParams::HgConv { gate, conv, taps } = bp.mixer else {
+            unreachable!("hgconv backward dispatched on a non-hgconv block")
+        };
+        // m[i] = mask[i] ? gelu(g_pre[i]) ⊙ c[i] : 0
+        //   gq ← ∂L/∂g_pre (post-gelu chain), gk ← ∂L/∂c
+        for i in 0..t {
+            let base = i * e;
+            if !mask[i] {
+                gws.gq[base..base + e].fill(0.0);
+                gws.gk[base..base + e].fill(0.0);
+                continue;
+            }
+            for j in 0..e {
+                let g = gws.gattn[base + j];
+                gws.gq[base + j] = g * bt.c[base + j] as f64;
+                gws.gk[base + j] = g * gelu_scalar(bt.g_pre[base + j]) as f64;
+            }
+        }
+        gelu_bwd(&bt.g_pre[..t * e], &mut gws.gq[..t * e]);
+
+        // Correlation-theorem adjoints per channel: gu = gc ⋆ τ (into
+        // gv, PAD rows re-zeroed — the forward zeroed u there, so the
+        // matmul output's gradient at those rows is exactly zero) and
+        // gτ = gc ⋆ u, truncated to the learned taps.
+        let fl = filter_len(cfg).min(t);
+        let gtaps = &mut grads.tensors[idx.block(block, MIXER_2)];
+        let mut gcsig = vec![0.0f64; t];
+        let mut tsig = vec![0.0f64; t];
+        let mut usig = vec![0.0f64; t];
+        with_plan(t, |plan| {
+            for j in 0..e {
+                for (i, s) in gcsig.iter_mut().enumerate() {
+                    *s = gws.gk[i * e + j];
+                }
+                tsig.fill(0.0);
+                for (r, ts) in tsig[..fl].iter_mut().enumerate() {
+                    *ts = taps[r * e + j] as f64;
+                }
+                let gu = circ_corr(plan, &gcsig, &tsig);
+                for (i, &g) in gu.iter().enumerate() {
+                    gws.gv[i * e + j] = if mask[i] { g } else { 0.0 };
+                }
+                for (i, s) in usig.iter_mut().enumerate() {
+                    *s = bt.u[i * e + j] as f64;
+                }
+                let gt = circ_corr(plan, &gcsig, &usig);
+                for (r, &g) in gt[..fl].iter().enumerate() {
+                    gtaps[r * e + j] += g;
+                }
+            }
+        });
+
+        // projection kernels + the ln1-output gradient
+        matmul_grad_w(
+            &bt.h1[..t * e],
+            &gws.gq[..t * e],
+            t,
+            e,
+            e,
+            &mut grads.tensors[idx.block(block, MIXER_0)],
+        );
+        matmul_grad_w(
+            &bt.h1[..t * e],
+            &gws.gv[..t * e],
+            t,
+            e,
+            e,
+            &mut grads.tensors[idx.block(block, MIXER_1)],
+        );
+        matmul_grad_x(&gws.gq[..t * e], gate, t, e, e, &mut gws.gtmp[..t * e], false);
+        matmul_grad_x(&gws.gv[..t * e], conv, t, e, e, &mut gws.gtmp[..t * e], true);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::hrr::arch::Arch;
+
+    fn sig(n: usize, k: u64) -> Vec<f64> {
+        // deterministic pseudo-random without Rng plumbing
+        (0..n).map(|i| (((i as u64 * 2654435761 + k * 40503) % 1000) as f64 / 500.0) - 1.0).collect()
+    }
+
+    #[test]
+    fn circ_conv_matches_the_direct_sum() {
+        for n in [4usize, 7, 12, 16] {
+            let a = sig(n, 1);
+            let b = sig(n, 2);
+            let fast = with_plan(n, |p| circ_conv(p, &a, &b));
+            for (i, &f) in fast.iter().enumerate() {
+                let mut direct = 0.0f64;
+                for k in 0..n {
+                    direct += a[k] * b[(n + i - k) % n];
+                }
+                assert!((f - direct).abs() < 1e-9, "n={n} i={i}: {f} vs {direct}");
+            }
+        }
+    }
+
+    #[test]
+    fn circ_corr_is_the_adjoint_of_circ_conv() {
+        // ⟨g, a ⊛ b⟩ = ⟨g ⋆ b, a⟩ — the identity mixer_backward leans on
+        for n in [5usize, 8, 13] {
+            let a = sig(n, 3);
+            let b = sig(n, 4);
+            let g = sig(n, 5);
+            let (conv, corr) = with_plan(n, |p| (circ_conv(p, &a, &b), circ_corr(p, &g, &b)));
+            let lhs: f64 = g.iter().zip(&conv).map(|(&x, &y)| x * y).sum();
+            let rhs: f64 = corr.iter().zip(&a).map(|(&x, &y)| x * y).sum();
+            assert!((lhs - rhs).abs() < 1e-9, "n={n}: {lhs} vs {rhs}");
+        }
+    }
+
+    #[test]
+    fn mixer_specs_name_gate_conv_and_taps() {
+        let cfg = HrrConfig {
+            arch: Arch::HgConv,
+            task: "test".into(),
+            vocab: 11,
+            seq_len: 12,
+            batch: 2,
+            embed: 16,
+            mlp_dim: 32,
+            heads: 2,
+            layers: 2,
+            classes: 4,
+            learned_pos: false,
+        };
+        let specs = HgConv::mixer_specs(&cfg, 0);
+        assert_eq!(
+            specs.iter().map(|s| s.name.as_str()).collect::<Vec<_>>(),
+            vec![
+                "blocks.0.mixer.gate.kernel",
+                "blocks.0.mixer.conv.kernel",
+                "blocks.0.mixer.filter.taps"
+            ]
+        );
+        assert_eq!(specs[2].shape, vec![12, 16], "taps truncate to short buckets");
+        let long = HrrConfig { seq_len: 4096, ..cfg };
+        assert_eq!(HgConv::mixer_specs(&long, 0)[2].shape, vec![64, 16]);
+    }
+}

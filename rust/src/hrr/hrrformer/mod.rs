@@ -1,0 +1,856 @@
+//! The Hrrformer architecture: multi-head HRR self-attention (the
+//! paper's Eqs. 1-4), its hand-derived backward pass, and the chunked
+//! O(H)-state streaming forward.
+//!
+//! Everything architecture-neutral (block skeleton, LayerNorm/GELU/
+//! matmul kernels, tape plumbing, pooling/head) lives in `hrr/common/`;
+//! this module owns exactly what is attention-specific:
+//!
+//! * forward: β = Σ_t k_t ⊛ v_t accumulated in the frequency domain
+//!   ([`accumulate_beta`]), unbinding with the stabilized exact inverse
+//!   conj(Q)/(|Q|²+ε) and the cosine cleanup score ([`position_score`]),
+//!   masked softmax re-weighting ([`hrr_attention`]);
+//! * backward: the adjoints of those three stages ([`attention_bwd`]),
+//!   chaining through rfft/irfft with the Hermitian bin weights
+//!   (`tape::bin_weight`);
+//! * streaming: the 3·L+1-pass chunked forward whose carried state is
+//!   O(heads · kbins · layers), independent of T ([`StreamState`],
+//!   [`stream_consume_impl`]).
+//!
+//! The shared forward/backward bodies dispatch here through
+//! [`crate::hrr::arch::Architecture`]; the monomorphized hrrformer arm
+//! runs byte-for-byte the pre-refactor instruction sequence, which the
+//! golden fixtures pin.
+
+use std::sync::Arc;
+
+use anyhow::Result;
+
+use crate::hrr::arch::Architecture;
+use crate::hrr::common::tape::{
+    bin_weight, matmul_grad_w, matmul_grad_x, BlockTape, GradScratch, ParamIdx, RowGrads,
+    MIXER_0, MIXER_1, MIXER_2,
+};
+use crate::hrr::common::{
+    add_bias, embed_positions, gelu, layernorm_into, matmul_into, param, BlockParams, FftScratch,
+    ForwardTap, MixerParams, ParamVersion, ResolvedParams, Workspace,
+};
+use crate::hrr::config::HrrConfig;
+use crate::hrr::fft::num_bins;
+use crate::hrr::ops::EPS;
+use crate::model::params::ParamStore;
+use crate::runtime::manifest::IoSpec;
+use crate::runtime::tensor::DType;
+
+/// f64 twin of the forward's `ops::EPS` stabilizer — backward must
+/// differentiate the *stabilized* forward, not the ideal one.
+pub(crate) const EPS64: f64 = EPS as f64;
+
+/// Eq. 1, one position: accumulate `k_i ⊛ v_i` into the β bins (one
+/// complex MAC per frequency bin). `vfr`/`vfi` are kbins scratch.
+///
+/// Shared verbatim by the whole-row attention and the streaming β pass,
+/// so chunk boundaries can never change the per-bin f64 arithmetic —
+/// only the (identical, ascending) order it runs in.
+#[allow(clippy::too_many_arguments)]
+pub(crate) fn accumulate_beta(
+    fs: &mut FftScratch,
+    vfr: &mut [f64],
+    vfi: &mut [f64],
+    br: &mut [f64],
+    bi: &mut [f64],
+    k: &[f32],
+    v: &[f32],
+    kbins: usize,
+) {
+    fs.rfft(v);
+    vfr.copy_from_slice(&fs.re[..kbins]);
+    vfi.copy_from_slice(&fs.im[..kbins]);
+    fs.rfft(k);
+    for j in 0..kbins {
+        br[j] += fs.re[j] * vfr[j] - fs.im[j] * vfi[j];
+        bi[j] += fs.re[j] * vfi[j] + fs.im[j] * vfr[j];
+    }
+}
+
+/// Eqs. 2+3, one position: unbind β with the stabilized exact inverse
+/// of `q_i` (`ur`/`ui` are kbins scratch) and return the cosine
+/// similarity of `v_i` to the retrieved v̂_i — the pre-softmax score.
+/// Shared verbatim by the whole-row attention and every streaming pass
+/// that needs scores (max, denominator, frozen re-weighting).
+#[allow(clippy::too_many_arguments)]
+pub(crate) fn position_score(
+    fs: &mut FftScratch,
+    ur: &mut [f64],
+    ui: &mut [f64],
+    br: &[f64],
+    bi: &[f64],
+    q: &[f32],
+    v: &[f32],
+    kbins: usize,
+    hd: usize,
+) -> f64 {
+    fs.rfft(q);
+    for j in 0..kbins {
+        let d = fs.re[j] * fs.re[j] + fs.im[j] * fs.im[j] + EPS as f64;
+        let ir = fs.re[j] / d;
+        let ii = -fs.im[j] / d;
+        ur[j] = br[j] * ir - bi[j] * ii;
+        ui[j] = br[j] * ii + bi[j] * ir;
+    }
+    fs.irfft(ur, ui);
+    let mut num = 0.0f64;
+    let mut nv = 0.0f64;
+    let mut nh = 0.0f64;
+    for (&a, &b) in v.iter().zip(fs.re[..hd].iter()) {
+        num += a as f64 * b;
+        nv += a as f64 * a as f64;
+        nh += b * b;
+    }
+    num / (nv.sqrt() * nh.sqrt() + EPS as f64)
+}
+
+/// Multi-head HRR attention (Eqs. 1-4) for one sequence: reads
+/// `ws.q/k/v` (t, e) and `ws.mask`, writes the merged mix to `ws.attn`.
+/// All scratch comes from `ws` — nothing allocates. The tap observes β,
+/// v̂ and the cleanup weights as they are produced (no-ops for
+/// `NullTap`); `layer` only labels those observations.
+fn hrr_attention<T: ForwardTap>(
+    cfg: &HrrConfig,
+    ws: &mut Workspace,
+    t: usize,
+    layer: usize,
+    tap: &mut T,
+) {
+    let e = cfg.embed;
+    let hd = cfg.head_dim();
+    let kbins = num_bins(hd);
+    let Workspace { fs, br, bi, vfr, vfi, ur, ui, scores, mask, q, k, v, attn, .. } = ws;
+    attn[..t * e].fill(0.0);
+    for head in 0..cfg.heads {
+        let off = head * hd;
+        // Eq. 1 — β = Σ_t k_t ⊛ v_t over unmasked positions, accumulated
+        // in the frequency domain (one complex MAC per bin).
+        br.fill(0.0);
+        bi.fill(0.0);
+        for i in 0..t {
+            if !mask[i] {
+                continue;
+            }
+            let s = i * e + off;
+            accumulate_beta(fs, vfr, vfi, br, bi, &k[s..s + hd], &v[s..s + hd], kbins);
+        }
+        tap.beta(layer, head, br, bi);
+        // Eq. 2+3 — v̂_t = q_t† ⊛ β (stabilized exact inverse), score =
+        // cos(v_t, v̂_t). Masked positions get weight 0 (their e^{-1e9}
+        // underflows to exactly 0 in the reference's softmax). After
+        // `position_score` the FFT scratch still holds v̂ — that is what
+        // the tap records.
+        let mut smax = f64::NEG_INFINITY;
+        for i in 0..t {
+            if !mask[i] {
+                continue;
+            }
+            let s = i * e + off;
+            scores[i] = position_score(fs, ur, ui, br, bi, &q[s..s + hd], &v[s..s + hd], kbins, hd);
+            tap.vhat(layer, head, i, &fs.re[..hd]);
+            smax = smax.max(scores[i]);
+        }
+        // Eq. 4 — softmax cleanup over T, then re-weight the values.
+        let mut denom = 0.0f64;
+        for i in 0..t {
+            if mask[i] {
+                scores[i] = (scores[i] - smax).exp();
+                denom += scores[i];
+            }
+        }
+        for i in 0..t {
+            if !mask[i] {
+                continue;
+            }
+            let w = scores[i] / denom;
+            tap.weight(layer, head, i, w);
+            let vv = &v[i * e + off..i * e + off + hd];
+            for (o, &x) in attn[i * e + off..i * e + off + hd].iter_mut().zip(vv) {
+                *o = (w * x as f64) as f32;
+            }
+        }
+    }
+}
+
+/// The Hrrformer's [`Architecture`] binding: q/k/v projections + HRR
+/// attention between ln1 and the shared output projection.
+pub(crate) struct Hrrformer;
+
+impl Architecture for Hrrformer {
+    const NAME: &'static str = "hrrformer";
+
+    fn mixer_specs(cfg: &HrrConfig, block: usize) -> Vec<IoSpec> {
+        let e = cfg.embed;
+        ["query", "key", "value"]
+            .iter()
+            .map(|proj| IoSpec {
+                name: format!("blocks.{block}.mixer.{proj}.kernel"),
+                shape: vec![e, e],
+                dtype: DType::F32,
+            })
+            .collect()
+    }
+
+    fn resolve_mixer<'a>(
+        _cfg: &HrrConfig,
+        params: &'a ParamStore,
+        block: usize,
+    ) -> Result<MixerParams<'a>> {
+        Ok(MixerParams::Hrrformer {
+            query: param(params, &format!("blocks.{block}.mixer.query.kernel"))?,
+            key: param(params, &format!("blocks.{block}.mixer.key.kernel"))?,
+            value: param(params, &format!("blocks.{block}.mixer.value.kernel"))?,
+        })
+    }
+
+    fn mixer_forward<T: ForwardTap>(
+        cfg: &HrrConfig,
+        bp: &BlockParams<'_>,
+        ws: &mut Workspace,
+        t: usize,
+        layer: usize,
+        tap: &mut T,
+    ) {
+        let e = cfg.embed;
+        let MixerParams::Hrrformer { query, key, value } = bp.mixer else {
+            unreachable!("hrrformer forward dispatched on a non-hrrformer block")
+        };
+        matmul_into(&ws.h[..t * e], query, t, e, e, &mut ws.q[..t * e]);
+        matmul_into(&ws.h[..t * e], key, t, e, e, &mut ws.k[..t * e]);
+        matmul_into(&ws.h[..t * e], value, t, e, e, &mut ws.v[..t * e]);
+        tap.qkv(layer, &ws.q[..t * e], &ws.k[..t * e], &ws.v[..t * e]);
+        hrr_attention(cfg, ws, t, layer, tap);
+    }
+
+    fn mixer_backward(
+        cfg: &HrrConfig,
+        bt: &BlockTape,
+        bp: &BlockParams<'_>,
+        mask: &[bool],
+        t: usize,
+        gws: &mut GradScratch,
+        grads: &mut RowGrads,
+        idx: ParamIdx,
+        block: usize,
+    ) {
+        let e = cfg.embed;
+        let MixerParams::Hrrformer { query, key, value } = bp.mixer else {
+            unreachable!("hrrformer backward dispatched on a non-hrrformer block")
+        };
+        gws.gq[..t * e].fill(0.0);
+        gws.gk[..t * e].fill(0.0);
+        gws.gv[..t * e].fill(0.0);
+        for head in 0..cfg.heads {
+            attention_bwd(cfg, bt, mask, head, t, gws);
+        }
+        matmul_grad_w(
+            &bt.h1[..t * e],
+            &gws.gq[..t * e],
+            t,
+            e,
+            e,
+            &mut grads.tensors[idx.block(block, MIXER_0)],
+        );
+        matmul_grad_w(
+            &bt.h1[..t * e],
+            &gws.gk[..t * e],
+            t,
+            e,
+            e,
+            &mut grads.tensors[idx.block(block, MIXER_1)],
+        );
+        matmul_grad_w(
+            &bt.h1[..t * e],
+            &gws.gv[..t * e],
+            t,
+            e,
+            e,
+            &mut grads.tensors[idx.block(block, MIXER_2)],
+        );
+        matmul_grad_x(&gws.gq[..t * e], query, t, e, e, &mut gws.gtmp[..t * e], false);
+        matmul_grad_x(&gws.gk[..t * e], key, t, e, e, &mut gws.gtmp[..t * e], true);
+        matmul_grad_x(&gws.gv[..t * e], value, t, e, e, &mut gws.gtmp[..t * e], true);
+    }
+}
+
+/// Backward through one head of HRR attention: reads `gws.gattn`,
+/// accumulates into `gws.gq/gk/gv` and the scratch bins. See the module
+/// docs for the adjoint derivations.
+fn attention_bwd(
+    cfg: &HrrConfig,
+    bt: &BlockTape,
+    mask: &[bool],
+    head: usize,
+    t: usize,
+    gws: &mut GradScratch,
+) {
+    let e = cfg.embed;
+    let hd = cfg.head_dim();
+    let kb = num_bins(hd);
+    let off = head * hd;
+    let hdf = hd as f64;
+    let wrow = &bt.w[head * cfg.seq_len..head * cfg.seq_len + t];
+    let GradScratch {
+        fs, gattn, gq, gk, gv, gw, gsc, gbr, gbi, gur, gui, tr, ti, qfr, qfi, ghd, ..
+    } = gws;
+
+    // Eq. 4 backward: out_i = w_i · v_i → gw_i = ⟨g_out, v⟩, plus the
+    // direct w·g_out term into gv; then softmax over the unmasked set.
+    for i in 0..t {
+        if !mask[i] {
+            gw[i] = 0.0;
+            continue;
+        }
+        let base = i * e + off;
+        let mut acc = 0.0f64;
+        for (&g, &x) in gattn[base..base + hd].iter().zip(&bt.v[base..base + hd]) {
+            acc += g * x as f64;
+        }
+        gw[i] = acc;
+        for (gvd, &g) in gv[base..base + hd].iter_mut().zip(&gattn[base..base + hd]) {
+            *gvd += wrow[i] * g;
+        }
+    }
+    let mut s_dot = 0.0f64;
+    for i in 0..t {
+        if mask[i] {
+            s_dot += wrow[i] * gw[i];
+        }
+    }
+    for i in 0..t {
+        gsc[i] = if mask[i] { wrow[i] * (gw[i] - s_dot) } else { 0.0 };
+    }
+
+    gbr.fill(0.0);
+    gbi.fill(0.0);
+    for i in 0..t {
+        if !mask[i] {
+            continue;
+        }
+        let base = i * e + off;
+        // Eq. 3 backward: score = ⟨v, v̂⟩ / (‖v‖‖v̂‖ + ε)
+        let vv = &bt.v[base..base + hd];
+        let vh = &bt.vhat[base..base + hd];
+        let mut num = 0.0f64;
+        let mut na = 0.0f64;
+        let mut nh = 0.0f64;
+        for (&a, &b) in vv.iter().zip(vh) {
+            num += a as f64 * b;
+            na += a as f64 * a as f64;
+            nh += b * b;
+        }
+        let a = na.sqrt();
+        let b = nh.sqrt();
+        let den = a * b + EPS64;
+        let gnum = gsc[i] / den;
+        let gden = -gsc[i] * num / (den * den);
+        for ((gvd, ghdv), (&vfd, &vhd)) in
+            gv[base..base + hd].iter_mut().zip(ghd.iter_mut()).zip(vv.iter().zip(vh))
+        {
+            let vfd = vfd as f64;
+            *gvd += gnum * vhd + if a > 0.0 { gden * b * vfd / a } else { 0.0 };
+            *ghdv = gnum * vfd + if b > 0.0 { gden * a * vhd / b } else { 0.0 };
+        }
+        // Eq. 2 backward: v̂ = irfft(β · conj(Q)/(|Q|²+ε)).
+        // adjoint of irfft: gU = (c_j / n) · rfft(gv̂)
+        fs.rfft64(ghd);
+        for j in 0..kb {
+            let c = bin_weight(hd, j);
+            gur[j] = c / hdf * fs.re[j];
+            gui[j] = c / hdf * fs.im[j];
+        }
+        fs.rfft(&bt.q[base..base + hd]);
+        qfr.copy_from_slice(&fs.re[..kb]);
+        qfi.copy_from_slice(&fs.im[..kb]);
+        for j in 0..kb {
+            let x = qfr[j];
+            let y = qfi[j];
+            let d2 = x * x + y * y + EPS64;
+            let dd = d2 * d2;
+            let invr = x / d2;
+            let invi = -y / d2;
+            // gβ += gU · conj(inv)
+            gbr[j] += gur[j] * invr + gui[j] * invi;
+            gbi[j] += gui[j] * invr - gur[j] * invi;
+            // ∂inv/∂(Re Q) = (d2 − 2x² + 2ixy)/d2²,
+            // ∂inv/∂(Im Q) = (−2xy + i(2y² − d2))/d2²; chain through β·inv
+            let axr = (d2 - 2.0 * x * x) / dd;
+            let axi = 2.0 * x * y / dd;
+            let ayr = -2.0 * x * y / dd;
+            let ayi = (2.0 * y * y - d2) / dd;
+            let br_ = bt.beta_re[head * kb + j];
+            let bi_ = bt.beta_im[head * kb + j];
+            let uxr = br_ * axr - bi_ * axi;
+            let uxi = br_ * axi + bi_ * axr;
+            let uyr = br_ * ayr - bi_ * ayi;
+            let uyi = br_ * ayi + bi_ * ayr;
+            // adjoint of rfft: gq = n · irfft(gQ / c_j)
+            let c = bin_weight(hd, j);
+            tr[j] = (gur[j] * uxr + gui[j] * uxi) / c;
+            ti[j] = (gur[j] * uyr + gui[j] * uyi) / c;
+        }
+        fs.irfft(tr, ti);
+        for (gqd, &r) in gq[base..base + hd].iter_mut().zip(fs.re[..hd].iter()) {
+            *gqd += hdf * r;
+        }
+    }
+
+    // Eq. 1 backward: β = Σ_i Kf_i · Vf_i over the unmasked set.
+    for i in 0..t {
+        if !mask[i] {
+            continue;
+        }
+        let base = i * e + off;
+        fs.rfft(&bt.v[base..base + hd]);
+        qfr.copy_from_slice(&fs.re[..kb]);
+        qfi.copy_from_slice(&fs.im[..kb]);
+        for j in 0..kb {
+            let c = bin_weight(hd, j);
+            // gKf = gβ · conj(Vf)
+            tr[j] = (gbr[j] * qfr[j] + gbi[j] * qfi[j]) / c;
+            ti[j] = (gbi[j] * qfr[j] - gbr[j] * qfi[j]) / c;
+        }
+        fs.irfft(tr, ti);
+        for (gkd, &r) in gk[base..base + hd].iter_mut().zip(fs.re[..hd].iter()) {
+            *gkd += hdf * r;
+        }
+        fs.rfft(&bt.k[base..base + hd]);
+        qfr.copy_from_slice(&fs.re[..kb]);
+        qfi.copy_from_slice(&fs.im[..kb]);
+        for j in 0..kb {
+            let c = bin_weight(hd, j);
+            // gVf = gβ · conj(Kf)
+            tr[j] = (gbr[j] * qfr[j] + gbi[j] * qfi[j]) / c;
+            ti[j] = (gbi[j] * qfr[j] - gbr[j] * qfi[j]) / c;
+        }
+        fs.irfft(tr, ti);
+        for (gvd, &r) in gv[base..base + hd].iter_mut().zip(fs.re[..hd].iter()) {
+            *gvd += hdf * r;
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Streaming (chunked) forward — O(H) carried state per stream
+// ---------------------------------------------------------------------------
+//
+// The Hrrformer forward is not single-pass streamable: every position's
+// attention score depends on the *full-sequence* β, and the softmax
+// cleanup needs the global max and denominator. What IS streamable is
+// each of those statistics individually — β is an ascending-order f64
+// sum per bin, the max is exact, and the denominator is an
+// ascending-order f64 sum — and, given a layer's finished statistics,
+// every remaining op in the block (LN, matmuls, score → weight → value,
+// MLP) is strictly per-position. So the chunked forward runs **3L + 1
+// passes** over a rewindable token source (the spirit of Rabe & Staats'
+// chunked O(1)-memory attention, PAPERS.md), recomputing activations
+// chunk-by-chunk from O(chunk)-sized scratch and carrying only
+// [`StreamState`] between chunks:
+//
+//   pass 3ℓ+0  accumulate layer ℓ's β per head       (pass 0 runs
+//              *online*, while bytes are still arriving)
+//   pass 3ℓ+1  layer ℓ's exact score max per head
+//   pass 3ℓ+2  layer ℓ's softmax denominator per head
+//   pass 3L    final LN + masked mean-pool accumulation → logits
+//
+// Within every pass, per-position arithmetic is shared verbatim with
+// the whole-row path (`embed_positions`, [`accumulate_beta`],
+// [`position_score`], `matmul_into` row independence), and every f64
+// accumulation visits positions in ascending order regardless of where
+// chunk boundaries fall — which makes the streamed logits
+// **bit-identical** to `forward_row` on the same tokens, for every
+// chunk size (pinned by `rust/tests/stream_native.rs` against the
+// golden fixtures).
+//
+// This machinery is attention-specific: a global convolution has no
+// order-free per-position statistics to carry (every output position
+// mixes every input position through the filter), which is why
+// `Arch::streamable()` is false for hgconv and streams against it are
+// rejected with a typed error instead.
+
+/// Frozen attention statistics for one layer of one open stream:
+/// everything the chunked forward carries for that layer, all f64.
+/// `heads × (2·kbins + 2)` values — independent of T.
+struct LayerStreamState {
+    /// β superposition bins, (heads, kbins) row-major (Eq. 1)
+    br: Vec<f64>,
+    bi: Vec<f64>,
+    /// per-head running score max (exact: max is order-free)
+    smax: Vec<f64>,
+    /// per-head softmax denominator Σ exp(s_i − smax), ascending i
+    denom: Vec<f64>,
+}
+
+impl LayerStreamState {
+    fn new(heads: usize, kbins: usize) -> LayerStreamState {
+        LayerStreamState {
+            br: vec![0.0; heads * kbins],
+            bi: vec![0.0; heads * kbins],
+            smax: vec![f64::NEG_INFINITY; heads],
+            denom: vec![0.0; heads],
+        }
+    }
+
+    /// This head's β bins.
+    fn beta(&self, head: usize, kbins: usize) -> (&[f64], &[f64]) {
+        (&self.br[head * kbins..(head + 1) * kbins], &self.bi[head * kbins..(head + 1) * kbins])
+    }
+
+    fn beta_mut(&mut self, head: usize, kbins: usize) -> (&mut [f64], &mut [f64]) {
+        (
+            &mut self.br[head * kbins..(head + 1) * kbins],
+            &mut self.bi[head * kbins..(head + 1) * kbins],
+        )
+    }
+}
+
+/// The complete carried state of one open stream: per-layer attention
+/// statistics plus the pooled-feature accumulator and pass bookkeeping.
+/// **O(H), independent of the stream length** — `resident_bytes()` is
+/// what `bench stream` records and what the O(H) acceptance test pins.
+pub struct StreamState {
+    layers: Vec<LayerStreamState>,
+    /// masked mean-pool accumulator over final-LN features (embed), f64
+    pub(crate) pooled: Vec<f64>,
+    /// unmasked (non-PAD) token count, fixed after pass 0
+    pub(crate) n_valid: usize,
+    /// positions consumed so far in the current pass
+    pub(crate) pos: usize,
+    /// stream length in tokens, fixed when pass 0 ends
+    pub(crate) total: usize,
+    /// current pass index, `0..=3·layers` (`3·layers + 1` ⇒ finalized)
+    pub(crate) pass: usize,
+    /// The weight generation this stream opened on. Every pass resolves
+    /// from this pin, so an `Engine::reload` mid-stream cannot mix
+    /// generations within one stream — it finishes on its opening
+    /// weights by construction and only *new* streams see the swap.
+    pub(crate) pinned: Option<Arc<ParamVersion>>,
+}
+
+impl StreamState {
+    pub(crate) fn new(cfg: &HrrConfig) -> StreamState {
+        let kbins = num_bins(cfg.head_dim());
+        StreamState {
+            layers: (0..cfg.layers).map(|_| LayerStreamState::new(cfg.heads, kbins)).collect(),
+            pooled: vec![0.0; cfg.embed],
+            n_valid: 0,
+            pos: 0,
+            total: 0,
+            pass: 0,
+            pinned: None,
+        }
+    }
+
+    /// The weight generation this stream is pinned to (0 = unpinned).
+    pub fn model_version(&self) -> u64 {
+        self.pinned.as_ref().map_or(0, |p| p.version)
+    }
+
+    /// Total passes the chunked forward makes over the tokens:
+    /// β + score-max + denominator per layer, then the pooling pass.
+    pub fn passes(&self) -> usize {
+        3 * self.layers.len() + 1
+    }
+
+    /// The pass currently consuming chunks (0 = the online append pass).
+    pub fn pass(&self) -> usize {
+        self.pass
+    }
+
+    /// Whether every pass has completed and logits can be read.
+    pub fn ready(&self) -> bool {
+        self.pass >= self.passes()
+    }
+
+    /// Tokens consumed by the current pass so far.
+    pub fn pass_pos(&self) -> usize {
+        self.pos
+    }
+
+    /// Stream length in tokens (grows during pass 0, fixed after).
+    pub fn tokens(&self) -> usize {
+        if self.pass == 0 {
+            self.pos
+        } else {
+            self.total
+        }
+    }
+
+    /// Bytes of heap state this stream carries between chunks — the
+    /// whole point of the subsystem: this is O(heads · head_dim ·
+    /// layers + embed) and does **not** grow with the stream length.
+    pub fn resident_bytes(&self) -> usize {
+        let f64s: usize = self
+            .layers
+            .iter()
+            .map(|l| l.br.len() + l.bi.len() + l.smax.len() + l.denom.len())
+            .sum::<usize>()
+            + self.pooled.len();
+        f64s * std::mem::size_of::<f64>() + std::mem::size_of::<StreamState>()
+    }
+}
+
+/// Per-worker scratch for the chunked forward: a [`Workspace`] whose
+/// position-indexed buffers hold `chunk_cap` rows instead of seq_len.
+/// Shared across streams and passes (it carries no stream state), so a
+/// server holds one per worker — total transient memory is O(chunk),
+/// never O(T).
+pub struct StreamWorkspace {
+    pub(crate) ws: Workspace,
+    pub(crate) chunk_cap: usize,
+}
+
+impl StreamWorkspace {
+    pub(crate) fn new(cfg: &HrrConfig, chunk_cap: usize) -> StreamWorkspace {
+        let chunk_cap = chunk_cap.max(1);
+        StreamWorkspace { ws: Workspace::with_rows(cfg, chunk_cap), chunk_cap }
+    }
+
+    /// Largest chunk one consume call accepts.
+    pub fn chunk_cap(&self) -> usize {
+        self.chunk_cap
+    }
+}
+
+/// Apply encoder block `bp` to the `c` chunk rows in `ws.x` using the
+/// finished attention statistics `ls` (β, smax, denom cover the whole
+/// stream): per position the score/weight arithmetic is exactly the
+/// whole-row path's — `w_i = exp(s_i − smax) / denom` — so the updated
+/// residual rows are bit-identical to the same rows of `forward_row`.
+fn apply_block_frozen(
+    cfg: &HrrConfig,
+    bp: &BlockParams<'_>,
+    ls: &LayerStreamState,
+    ws: &mut Workspace,
+    c: usize,
+) {
+    let e = cfg.embed;
+    let hd = cfg.head_dim();
+    let kbins = num_bins(hd);
+    let MixerParams::Hrrformer { query, value, .. } = bp.mixer else {
+        unreachable!("streaming runs only on hrrformer buckets")
+    };
+    layernorm_into(&ws.x[..c * e], bp.ln1_scale, bp.ln1_bias, e, &mut ws.h[..c * e]);
+    matmul_into(&ws.h[..c * e], query, c, e, e, &mut ws.q[..c * e]);
+    matmul_into(&ws.h[..c * e], value, c, e, e, &mut ws.v[..c * e]);
+    {
+        let Workspace { fs, ur, ui, mask, q, v, attn, .. } = ws;
+        attn[..c * e].fill(0.0);
+        for head in 0..cfg.heads {
+            let off = head * hd;
+            let (br, bi) = ls.beta(head, kbins);
+            for i in 0..c {
+                if !mask[i] {
+                    continue;
+                }
+                let s = i * e + off;
+                let score =
+                    position_score(fs, ur, ui, br, bi, &q[s..s + hd], &v[s..s + hd], kbins, hd);
+                let w = (score - ls.smax[head]).exp() / ls.denom[head];
+                for (o, &x) in attn[s..s + hd].iter_mut().zip(&v[s..s + hd]) {
+                    *o = (w * x as f64) as f32;
+                }
+            }
+        }
+    }
+    matmul_into(&ws.attn[..c * e], bp.output, c, e, e, &mut ws.proj[..c * e]);
+    for (xv, &yv) in ws.x[..c * e].iter_mut().zip(&ws.proj[..c * e]) {
+        *xv += yv;
+    }
+    layernorm_into(&ws.x[..c * e], bp.ln2_scale, bp.ln2_bias, e, &mut ws.h[..c * e]);
+    matmul_into(&ws.h[..c * e], bp.fc1, c, e, cfg.mlp_dim, &mut ws.mlp[..c * cfg.mlp_dim]);
+    add_bias(&mut ws.mlp[..c * cfg.mlp_dim], bp.fc1_bias, cfg.mlp_dim);
+    gelu(&mut ws.mlp[..c * cfg.mlp_dim]);
+    matmul_into(&ws.mlp[..c * cfg.mlp_dim], bp.fc2, c, cfg.mlp_dim, e, &mut ws.proj[..c * e]);
+    add_bias(&mut ws.proj[..c * e], bp.fc2_bias, e);
+    for (xv, &mv) in ws.x[..c * e].iter_mut().zip(&ws.proj[..c * e]) {
+        *xv += mv;
+    }
+}
+
+/// Consume one token chunk for the stream's current pass: recompute the
+/// chunk's residual rows (earlier layers applied with their frozen
+/// statistics), then fold the chunk into whichever statistic this pass
+/// accumulates. Chunks must arrive in position order within a pass.
+pub(crate) fn stream_consume_impl(
+    cfg: &HrrConfig,
+    rp: &ResolvedParams<'_>,
+    st: &mut StreamState,
+    ws: &mut Workspace,
+    chunk: &[i32],
+) -> Result<()> {
+    let c = chunk.len();
+    if c == 0 {
+        return Ok(());
+    }
+    let e = cfg.embed;
+    let hd = cfg.head_dim();
+    let kbins = num_bins(hd);
+    let final_pass = 3 * cfg.layers;
+    anyhow::ensure!(st.pass <= final_pass, "stream already finalized");
+    if st.pass == 0 {
+        anyhow::ensure!(
+            st.pos + c <= cfg.seq_len,
+            "stream overruns bucket T={} (truncate before consuming)",
+            cfg.seq_len
+        );
+    } else {
+        anyhow::ensure!(
+            st.pos + c <= st.total,
+            "pass {} replay longer than the original stream ({} tokens)",
+            st.pass,
+            st.total
+        );
+    }
+
+    embed_positions(cfg, rp, chunk, st.pos, ws);
+    let layer = (st.pass / 3).min(cfg.layers);
+    for l in 0..layer {
+        apply_block_frozen(cfg, &rp.blocks[l], &st.layers[l], ws, c);
+    }
+
+    if st.pass == final_pass {
+        // pooling pass: final LN, then the masked mean-pool partial
+        // sums — per feature j the adds run ascending in i, exactly the
+        // whole-row pooling order.
+        layernorm_into(&ws.x[..c * e], rp.ln_f_scale, rp.ln_f_bias, e, &mut ws.h[..c * e]);
+        for (j, pv) in st.pooled.iter_mut().enumerate() {
+            for i in 0..c {
+                if ws.mask[i] {
+                    *pv += ws.h[i * e + j] as f64;
+                }
+            }
+        }
+    } else {
+        let bp = &rp.blocks[layer];
+        let MixerParams::Hrrformer { query, key, value } = bp.mixer else {
+            unreachable!("streaming runs only on hrrformer buckets")
+        };
+        layernorm_into(&ws.x[..c * e], bp.ln1_scale, bp.ln1_bias, e, &mut ws.h[..c * e]);
+        match st.pass % 3 {
+            0 => {
+                // β pass: k/v per chunk row, ascending complex MAC.
+                matmul_into(&ws.h[..c * e], key, c, e, e, &mut ws.k[..c * e]);
+                matmul_into(&ws.h[..c * e], value, c, e, e, &mut ws.v[..c * e]);
+                let ls = &mut st.layers[layer];
+                let Workspace { fs, vfr, vfi, mask, k, v, .. } = ws;
+                for head in 0..cfg.heads {
+                    let off = head * hd;
+                    let (br, bi) = ls.beta_mut(head, kbins);
+                    for i in 0..c {
+                        if !mask[i] {
+                            continue;
+                        }
+                        let s = i * e + off;
+                        accumulate_beta(fs, vfr, vfi, br, bi, &k[s..s + hd], &v[s..s + hd], kbins);
+                    }
+                }
+                if st.pass == 0 {
+                    st.n_valid += mask[..c].iter().filter(|&&m| m).count();
+                }
+            }
+            1 => {
+                // score-max pass: exact running max per head.
+                matmul_into(&ws.h[..c * e], query, c, e, e, &mut ws.q[..c * e]);
+                matmul_into(&ws.h[..c * e], value, c, e, e, &mut ws.v[..c * e]);
+                let ls = &mut st.layers[layer];
+                let Workspace { fs, ur, ui, mask, q, v, .. } = ws;
+                for head in 0..cfg.heads {
+                    let off = head * hd;
+                    let (br, bi) = (&ls.br[head * kbins..], &ls.bi[head * kbins..]);
+                    let (br, bi) = (&br[..kbins], &bi[..kbins]);
+                    for i in 0..c {
+                        if !mask[i] {
+                            continue;
+                        }
+                        let s = i * e + off;
+                        let score = position_score(
+                            fs,
+                            ur,
+                            ui,
+                            br,
+                            bi,
+                            &q[s..s + hd],
+                            &v[s..s + hd],
+                            kbins,
+                            hd,
+                        );
+                        ls.smax[head] = ls.smax[head].max(score);
+                    }
+                }
+            }
+            _ => {
+                // denominator pass: Σ exp(s_i − smax) ascending in i per
+                // head — the whole-row denominator loop, chunked.
+                matmul_into(&ws.h[..c * e], query, c, e, e, &mut ws.q[..c * e]);
+                matmul_into(&ws.h[..c * e], value, c, e, e, &mut ws.v[..c * e]);
+                let ls = &mut st.layers[layer];
+                let Workspace { fs, ur, ui, mask, q, v, .. } = ws;
+                for head in 0..cfg.heads {
+                    let off = head * hd;
+                    let (br, bi) = (&ls.br[head * kbins..], &ls.bi[head * kbins..]);
+                    let (br, bi) = (&br[..kbins], &bi[..kbins]);
+                    for i in 0..c {
+                        if !mask[i] {
+                            continue;
+                        }
+                        let s = i * e + off;
+                        let score = position_score(
+                            fs,
+                            ur,
+                            ui,
+                            br,
+                            bi,
+                            &q[s..s + hd],
+                            &v[s..s + hd],
+                            kbins,
+                            hd,
+                        );
+                        ls.denom[head] += (score - ls.smax[head]).exp();
+                    }
+                }
+            }
+        }
+    }
+    st.pos += c;
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::hrr::arch::Arch;
+
+    #[test]
+    fn mixer_specs_are_the_canonical_attention_kernels() {
+        let cfg = HrrConfig {
+            arch: Arch::Hrrformer,
+            task: "test".into(),
+            vocab: 11,
+            seq_len: 12,
+            batch: 2,
+            embed: 16,
+            mlp_dim: 32,
+            heads: 2,
+            layers: 2,
+            classes: 4,
+            learned_pos: false,
+        };
+        let specs = Hrrformer::mixer_specs(&cfg, 1);
+        assert_eq!(
+            specs.iter().map(|s| s.name.as_str()).collect::<Vec<_>>(),
+            vec![
+                "blocks.1.mixer.query.kernel",
+                "blocks.1.mixer.key.kernel",
+                "blocks.1.mixer.value.kernel"
+            ]
+        );
+        assert!(specs.iter().all(|s| s.shape == vec![16, 16]));
+    }
+}

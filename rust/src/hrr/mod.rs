@@ -1,40 +1,54 @@
 //! Native pure-Rust HRR backend — the paper's O(T·H·log H) attention
 //! implemented from scratch, with no XLA artifacts and no PJRT runtime
-//! anywhere near it.
+//! anywhere near it — refactored into a shared kernel toolbox plus one
+//! module per architecture.
 //!
 //! Layer map:
 //!
-//! * [`fft`]   — radix-2 real/complex FFTs (naive-DFT fallback for
+//! * [`fft`]    — radix-2 real/complex FFTs (naive-DFT fallback for
 //!   non-power-of-two head dims), `f64` arithmetic;
-//! * [`plan`]  — [`FftPlan`]: per-length precomputed bit-reversal +
+//! * [`plan`]   — [`FftPlan`]: per-length precomputed bit-reversal +
 //!   twiddle tables (bit-identical to [`fft`], derived once instead of
 //!   per call) and the thread-local plan cache the hot paths run on;
-//! * [`ops`]   — HRR algebra over `f32` vectors: binding (circular
+//! * [`ops`]    — HRR algebra over `f32` vectors: binding (circular
 //!   convolution), exact/involution unbinding, the unit-magnitude
 //!   projection trick, cosine similarity — transforms via cached plans;
 //! * [`config`] — [`HrrConfig`]: program-base parsing + a Rust copy of
 //!   the python preset tables, so the same
-//!   `<task>_hrrformer_<preset>_T<t>_B<b>` strings resolve on both
-//!   backends;
-//! * [`grad`]  — reverse-mode autodiff through the whole forward pass
-//!   (FFT adjoints for the frequency-domain attention, LayerNorm /
-//!   GELU / softmax-CE backward) plus Adam with the paper's LR decay:
-//!   [`NativeTrainSession`] trains artifact-free, with gradients
-//!   bit-identical under every [`RowScheduler`] (fixed f64 reduction
-//!   order), pinned by the golden train-curve fixture;
-//! * [`model`] — the full Hrrformer forward pass (embed → per-head HRR
-//!   attention → MLP → pooled classifier head) and [`NativeSession`],
-//!   which plugs into everything typed against
-//!   [`crate::model::Predictor`] (engine executors, benches, examples);
-//!   one reusable scratch `Workspace` per worker, batch rows fanned
-//!   out through a pluggable [`RowScheduler`] — the engine's shared
+//!   `<task>_<arch>_<preset>_T<t>_B<b>` strings resolve on both
+//!   backends (the model token now selects the architecture);
+//! * [`arch`]   — [`Arch`] and the crate-private `Architecture` trait:
+//!   the two seams (parameter layout + mixer forward/backward) an
+//!   architecture must fill in; everything else is shared;
+//! * [`common`] — the architecture-neutral toolbox: embedding +
+//!   positions, LayerNorm, GELU, matmuls, pooling/head, the reusable
+//!   scratch `Workspace`, resolved parameter views, [`ParamSlot`]
+//!   hot-swap versioning, dropout mask streams, and (in
+//!   `common::tape`) the forward tape + shared backward;
+//! * [`hrrformer`] — the paper's mixer: per-head frequency-domain HRR
+//!   attention (Eqs. 1-4) forward + hand-derived FFT-adjoint backward,
+//!   and the chunked *streaming* forward ([`StreamState`],
+//!   `NativeSession::stream_*`): 3·L+1 passes over a rewindable token
+//!   source with O(H) carried state per stream — bit-identical to the
+//!   whole-row forward for every chunk size, the kernel under
+//!   [`crate::stream`];
+//! * [`hgconv`] — the second architecture: a gated global-convolution
+//!   mixer (FFT → multiply → IFFT per channel, gated by a learned
+//!   projection) with a correlation-theorem backward — not streamable,
+//!   and typed as such end-to-end;
+//! * [`grad`]   — Adam + the batch training loop over the shared tape:
+//!   [`NativeTrainSession`] trains either architecture artifact-free,
+//!   with gradients bit-identical under every [`RowScheduler`] (fixed
+//!   f64 reduction order) and optional seeded dropout, pinned by the
+//!   golden train-curve fixture;
+//! * [`model`]  — [`NativeSession`], the serving session both
+//!   architectures share: plugs into everything typed against
+//!   [`crate::model::Predictor`] (engine executors, benches), one
+//!   reusable scratch `Workspace` per worker, batch rows fanned out
+//!   through a pluggable [`RowScheduler`] — the engine's shared
 //!   persistent worker pool, a pinned scoped-thread fan-out
 //!   (`predict_threaded`), or sequential — with bit-identical logits
-//!   under every scheduler and worker count. Also home of the chunked
-//!   *streaming* forward ([`StreamState`], `NativeSession::stream_*`):
-//!   3·L+1 passes over a rewindable token source with O(H) carried
-//!   state per stream — bit-identical to the whole-row forward for
-//!   every chunk size, the kernel under [`crate::stream`].
+//!   under every scheduler and worker count.
 //!
 //! Selected at runtime via [`crate::engine::Backend::Native`]
 //! (`--backend native` on the CLI): the whole serving stack — and the
@@ -43,13 +57,18 @@
 //! `rust/tests/golden_native.rs` (±1e-4) and the property suite in
 //! `rust/tests/prop_hrr.rs`.
 
+pub mod arch;
+pub mod common;
 pub mod config;
 pub mod fft;
 pub mod grad;
+pub mod hgconv;
+pub mod hrrformer;
 pub mod model;
 pub mod ops;
 pub mod plan;
 
+pub use arch::{with_arch, Arch};
 pub use config::HrrConfig;
 pub use grad::{NativeTrainSession, TrainHyper};
 pub use model::{

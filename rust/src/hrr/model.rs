@@ -1,1236 +1,76 @@
-//! The native Hrrformer forward pass and [`NativeSession`].
+//! [`NativeSession`] — the architecture-dispatching inference session
+//! over the native pure-Rust forward pass.
 //!
-//! A from-scratch, pure-Rust implementation of the paper's encoder
-//! (python/compile/model.py + models/hrrformer.py, inference path):
-//! token embedding + positions → L pre-LN blocks (multi-head HRR
-//! attention + GELU MLP, residuals) → final LN → masked mean-pool → two
-//! dense head layers → logits. Buffers are `f32`; reductions (matmul
-//! dot products, LayerNorm stats, β accumulation, softmax, pooling)
-//! accumulate in `f64`, which keeps the forward pass within 1e-4 of the
-//! float64 reference on the golden fixtures.
+//! The forward machinery itself lives one level down: everything
+//! architecture-neutral (embedding/positions, pre-LN block skeleton,
+//! LayerNorm/GELU/matmul kernels, masked mean-pool + classifier head,
+//! `Workspace`, `ParamSlot`) in `hrr/common/`, the token mixers in
+//! `hrr/hrrformer/` (multi-head HRR attention, Eqs. 1-4, plus the
+//! chunked O(H)-state streaming forward) and `hrr/hgconv/` (gated
+//! holographic global convolution). `cfg.arch` picks the mixer; the
+//! dispatch is a two-arm match into monomorphized generics, so the
+//! hrrformer path runs byte-for-byte the pre-split code and its logits
+//! stay bit-identical to the golden fixtures.
 //!
-//! Per head the attention is O(T·H'·log H') (paper §3): keys/values are
-//! bound by circular convolution and superposed into a single β in the
-//! *frequency domain* (one rFFT per k/v vector, one complex
-//! multiply-accumulate per bin — Eq. 1), each query unbinds β with the
-//! stabilized exact inverse (Eq. 2), and cosine similarity to the value
-//! gives the pre-softmax score (Eq. 3). Softmax cleanup then re-weights
-//! the values (Eq. 4). PAD positions (token 0) are excluded from β and
-//! softmaxed to zero weight, exactly like the reference's mask.
+//! Buffers are `f32`; reductions (matmul dot products, LayerNorm stats,
+//! β accumulation, softmax, pooling) accumulate in `f64`, which keeps
+//! the forward pass within 1e-4 of the float64 reference on the golden
+//! fixtures.
 //!
 //! # Hot-path architecture (plans + workspace + row parallelism)
 //!
 //! Three layers keep the per-row cost down to the arithmetic itself:
 //!
-//! * every transform goes through a precomputed [`FftPlan`] (bit-reversal
-//!   permutation + twiddle tables derived once per head dim, bit-identical
-//!   to the direct `fft::fft` — see `hrr/plan.rs`);
-//! * all intermediates live in a per-worker [`Workspace`] of reusable
+//! * every transform goes through a precomputed
+//!   [`crate::hrr::plan::FftPlan`] (bit-reversal permutation + twiddle
+//!   tables derived once per length, bit-identical to the direct
+//!   `fft::fft` — see `hrr/plan.rs`);
+//! * all intermediates live in a per-worker `Workspace` of reusable
 //!   scratch buffers, so `forward_row` allocates nothing per row;
 //! * [`NativeSession::predict`] fans independent batch rows out through a
 //!   pluggable [`RowScheduler`]: row chunks on a shared persistent
-//!   [`WorkerPool`] (what engine executors install, so N busy buckets
+//!   worker pool (what engine executors install, so N busy buckets
 //!   share one engine-wide worker budget instead of oversubscribing
 //!   cores), a legacy per-call scoped-thread fan-out, or fully
 //!   sequential. Logits are bit-identical under every scheduler and
 //!   worker count since each row runs the same code path with its own
-//!   [`Workspace`].
+//!   `Workspace`.
 //!
 //! GELU uses the tanh approximation (the `jax.nn.gelu` default the
 //! reference model was exported with).
 
-use std::sync::{Arc, RwLock};
+use std::sync::Arc;
 
 use anyhow::{Context, Result};
 
+use crate::hrr::common::{
+    add_bias, default_workers, forward_row, matmul_into, ResolvedParams, Workspace,
+};
 use crate::hrr::config::HrrConfig;
-use crate::hrr::fft::num_bins;
-use crate::hrr::ops::EPS;
-use crate::hrr::plan::FftPlan;
+use crate::hrr::hrrformer::stream_consume_impl;
 use crate::model::params::ParamStore;
 use crate::model::session::{Predictor, Session};
-use crate::runtime::manifest::IoSpec;
-use crate::runtime::tensor::{DType, Tensor};
-use crate::util::pool::{self, Task as PoolTask, WorkerPool};
-use crate::util::rng::Rng;
-
-/// Token 0 is PAD everywhere (datasets reserve it; model.py `PAD_ID`).
-pub const PAD_ID: i32 = 0;
-
-// ---------------------------------------------------------------------------
-// Parameter layout + init
-// ---------------------------------------------------------------------------
-
-/// The canonical parameter layout (names/shapes/order) of the native
-/// model. Golden fixtures and checkpoints follow this exact order.
-pub fn param_specs(cfg: &HrrConfig) -> Vec<IoSpec> {
-    let e = cfg.embed;
-    let f = |name: String, shape: Vec<usize>| IoSpec { name, shape, dtype: DType::F32 };
-    let mut specs = vec![f("embed.table".into(), vec![cfg.vocab, e])];
-    if cfg.learned_pos {
-        specs.push(f("pos.table".into(), vec![cfg.seq_len, e]));
-    }
-    for i in 0..cfg.layers {
-        let b = |suffix: &str| format!("blocks.{i}.{suffix}");
-        specs.push(f(b("ln1.scale"), vec![e]));
-        specs.push(f(b("ln1.bias"), vec![e]));
-        specs.push(f(b("mixer.query.kernel"), vec![e, e]));
-        specs.push(f(b("mixer.key.kernel"), vec![e, e]));
-        specs.push(f(b("mixer.value.kernel"), vec![e, e]));
-        specs.push(f(b("mixer.output.kernel"), vec![e, e]));
-        specs.push(f(b("ln2.scale"), vec![e]));
-        specs.push(f(b("ln2.bias"), vec![e]));
-        specs.push(f(b("mlp.fc1.kernel"), vec![e, cfg.mlp_dim]));
-        specs.push(f(b("mlp.fc1.bias"), vec![cfg.mlp_dim]));
-        specs.push(f(b("mlp.fc2.kernel"), vec![cfg.mlp_dim, e]));
-        specs.push(f(b("mlp.fc2.bias"), vec![e]));
-    }
-    specs.push(f("ln_f.scale".into(), vec![e]));
-    specs.push(f("ln_f.bias".into(), vec![e]));
-    specs.push(f("head1.kernel".into(), vec![e, cfg.mlp_dim]));
-    specs.push(f("head1.bias".into(), vec![cfg.mlp_dim]));
-    specs.push(f("head2.kernel".into(), vec![cfg.mlp_dim, cfg.classes]));
-    specs.push(f("head2.bias".into(), vec![cfg.classes]));
-    specs
-}
-
-/// Seed-deterministic parameter init, mirroring layers.py: glorot-normal
-/// dense kernels, `N(0, 1/√E)` embeddings, `N(0, 0.02)` learned
-/// positions, unit LayerNorm scales, zero biases. Each tensor draws from
-/// its own folded RNG stream, so the layout (not the draw order) defines
-/// the values.
-pub fn init_native_params(cfg: &HrrConfig, seed: u32) -> ParamStore {
-    let root = Rng::new(seed as u64);
-    let specs = param_specs(cfg);
-    let mut store = ParamStore::default();
-    for (idx, spec) in specs.iter().enumerate() {
-        let n = spec.elements();
-        let mut rng = root.fold_in(idx as u64 + 1);
-        let data: Vec<f32> = if spec.name.ends_with(".kernel") {
-            let fan_in = spec.shape[0] as f64;
-            let fan_out = spec.shape[spec.shape.len() - 1] as f64;
-            let scale = (2.0 / (fan_in + fan_out)).sqrt();
-            (0..n).map(|_| (rng.normal() * scale) as f32).collect()
-        } else if spec.name == "embed.table" {
-            let scale = 1.0 / (cfg.embed as f64).sqrt();
-            (0..n).map(|_| (rng.normal() * scale) as f32).collect()
-        } else if spec.name == "pos.table" {
-            (0..n).map(|_| (rng.normal() * 0.02) as f32).collect()
-        } else if spec.name.ends_with(".scale") {
-            vec![1.0; n]
-        } else {
-            vec![0.0; n] // biases
-        };
-        store.names.push(spec.name.clone());
-        store.tensors.push(Tensor::f32(spec.shape.clone(), data));
-    }
-    store
-}
-
-// ---------------------------------------------------------------------------
-// Forward-pass building blocks (f32 buffers, f64 accumulation)
-// ---------------------------------------------------------------------------
-
-/// Output-column register tile of [`matmul_into`]: the accumulators for
-/// one tile live in registers across the whole k loop instead of a
-/// d_out-sized array round-tripped through memory on every k.
-const MM_TILE: usize = 8;
-
-/// `out (n, d_out) = x (n, d_in) @ w (d_in, d_out)`, f64 accumulators.
-///
-/// Register-tiled over output columns; per output element the reduction
-/// is still plain k-ascending f64 accumulation, so results are
-/// bit-identical to the untiled triple loop (golden parity cannot move).
-pub(crate) fn matmul_into(
-    x: &[f32],
-    w: &[f32],
-    n: usize,
-    d_in: usize,
-    d_out: usize,
-    out: &mut [f32],
-) {
-    debug_assert_eq!(x.len(), n * d_in);
-    debug_assert_eq!(w.len(), d_in * d_out);
-    debug_assert_eq!(out.len(), n * d_out);
-    for (xrow, orow) in x.chunks_exact(d_in).zip(out.chunks_exact_mut(d_out)) {
-        let mut j = 0usize;
-        while j < d_out {
-            let tile = MM_TILE.min(d_out - j);
-            let mut acc = [0.0f64; MM_TILE];
-            for (k, &xv) in xrow.iter().enumerate() {
-                let xv = xv as f64;
-                let wk = &w[k * d_out + j..k * d_out + j + tile];
-                for (a, &wv) in acc[..tile].iter_mut().zip(wk) {
-                    *a += xv * wv as f64;
-                }
-            }
-            for (o, &a) in orow[j..j + tile].iter_mut().zip(acc[..tile].iter()) {
-                *o = a as f32;
-            }
-            j += tile;
-        }
-    }
-}
-
-pub(crate) fn add_bias(x: &mut [f32], bias: &[f32], d: usize) {
-    for row in x.chunks_exact_mut(d) {
-        for (v, &b) in row.iter_mut().zip(bias) {
-            *v += b;
-        }
-    }
-}
-
-/// Pre-LN (layers.py `layernorm`, eps 1e-6) into the caller's buffer.
-pub(crate) fn layernorm_into(x: &[f32], scale: &[f32], bias: &[f32], d: usize, out: &mut [f32]) {
-    for (row, orow) in x.chunks_exact(d).zip(out.chunks_exact_mut(d)) {
-        let mut mu = 0.0f64;
-        for &v in row {
-            mu += v as f64;
-        }
-        mu /= d as f64;
-        let mut var = 0.0f64;
-        for &v in row {
-            let c = v as f64 - mu;
-            var += c * c;
-        }
-        var /= d as f64;
-        let rstd = 1.0 / (var + 1e-6).sqrt();
-        for ((o, &v), (&s, &b)) in orow.iter_mut().zip(row).zip(scale.iter().zip(bias)) {
-            *o = (((v as f64 - mu) * rstd) * s as f64 + b as f64) as f32;
-        }
-    }
-}
-
-/// `jax.nn.gelu` tanh approximation.
-pub(crate) fn gelu(x: &mut [f32]) {
-    const C: f64 = 0.797_884_560_802_865_4; // sqrt(2/π)
-    for v in x.iter_mut() {
-        let x = *v as f64;
-        *v = (0.5 * x * (1.0 + (C * (x + 0.044715 * x * x * x)).tanh())) as f32;
-    }
-}
-
-/// Reusable FFT scratch for one head dimension: a precomputed
-/// [`FftPlan`] plus re/im buffers, so the T·heads inner loop allocates
-/// nothing and derives no twiddles. Shared with the training backward
-/// pass (`hrr/grad.rs`), which runs the same transforms for adjoints.
-pub(crate) struct FftScratch {
-    pub(crate) plan: FftPlan,
-    pub(crate) re: Vec<f64>,
-    pub(crate) im: Vec<f64>,
-}
-
-impl FftScratch {
-    pub(crate) fn new(n: usize) -> FftScratch {
-        FftScratch { plan: FftPlan::new(n), re: vec![0.0; n], im: vec![0.0; n] }
-    }
-
-    /// rFFT of `x` into the scratch; valid bins are `re/im[..n/2+1]`.
-    pub(crate) fn rfft(&mut self, x: &[f32]) {
-        for (r, &v) in self.re.iter_mut().zip(x) {
-            *r = v as f64;
-        }
-        for i in self.im.iter_mut() {
-            *i = 0.0;
-        }
-        self.plan.fft(&mut self.re, &mut self.im, false);
-    }
-
-    /// rFFT of an f64 signal (gradient buffers) into the scratch.
-    pub(crate) fn rfft64(&mut self, x: &[f64]) {
-        self.re.copy_from_slice(x);
-        for i in self.im.iter_mut() {
-            *i = 0.0;
-        }
-        self.plan.fft(&mut self.re, &mut self.im, false);
-    }
-
-    /// irFFT of `n/2+1` bins into the scratch; result is `re[..n]`.
-    pub(crate) fn irfft(&mut self, br: &[f64], bi: &[f64]) {
-        self.plan.irfft_inplace(br, bi, &mut self.re, &mut self.im);
-    }
-}
-
-/// Per-worker scratch for the whole forward pass: every buffer
-/// `forward_row` needs, allocated once per predict worker instead of
-/// ~10 Vecs per block per row. Sized for the config's full seq_len;
-/// shorter rows use prefixes.
-pub(crate) struct Workspace {
-    /// head-dim FFT plan + re/im scratch
-    fs: FftScratch,
-    /// β superposition bins (Eq. 1)
-    br: Vec<f64>,
-    bi: Vec<f64>,
-    /// value-spectrum bins
-    vfr: Vec<f64>,
-    vfi: Vec<f64>,
-    /// unbound-spectrum bins (q† ⊛ β, Eq. 2)
-    ur: Vec<f64>,
-    ui: Vec<f64>,
-    /// per-position pre-softmax scores (Eq. 3)
-    scores: Vec<f64>,
-    mask: Vec<bool>,
-    /// residual stream (t, e)
-    x: Vec<f32>,
-    /// pre-LN output (t, e)
-    h: Vec<f32>,
-    q: Vec<f32>,
-    k: Vec<f32>,
-    v: Vec<f32>,
-    /// attention mix (t, e)
-    attn: Vec<f32>,
-    /// attention output projection / MLP output (t, e)
-    proj: Vec<f32>,
-    /// MLP hidden (t, mlp_dim)
-    mlp: Vec<f32>,
-    /// pooled features (e)
-    pooled: Vec<f32>,
-    /// classifier hidden (mlp_dim)
-    head: Vec<f32>,
-}
-
-impl Workspace {
-    pub(crate) fn new(cfg: &HrrConfig) -> Workspace {
-        Workspace::with_rows(cfg, cfg.seq_len)
-    }
-
-    /// A workspace whose position-indexed buffers hold only `rows`
-    /// positions instead of the config's full seq_len. The streaming
-    /// forward works on chunks of ≤ `rows` tokens at a time, so a
-    /// T=131072 stream never materializes T-sized activations.
-    pub(crate) fn with_rows(cfg: &HrrConfig, rows: usize) -> Workspace {
-        let (t, e) = (rows, cfg.embed);
-        let kbins = num_bins(cfg.head_dim());
-        Workspace {
-            fs: FftScratch::new(cfg.head_dim()),
-            br: vec![0.0; kbins],
-            bi: vec![0.0; kbins],
-            vfr: vec![0.0; kbins],
-            vfi: vec![0.0; kbins],
-            ur: vec![0.0; kbins],
-            ui: vec![0.0; kbins],
-            scores: vec![0.0; t],
-            mask: vec![false; t],
-            x: vec![0.0; t * e],
-            h: vec![0.0; t * e],
-            q: vec![0.0; t * e],
-            k: vec![0.0; t * e],
-            v: vec![0.0; t * e],
-            attn: vec![0.0; t * e],
-            proj: vec![0.0; t * e],
-            mlp: vec![0.0; t * cfg.mlp_dim],
-            pooled: vec![0.0; e],
-            head: vec![0.0; cfg.mlp_dim],
-        }
-    }
-}
-
-/// Eq. 1, one position: accumulate `k_i ⊛ v_i` into the β bins (one
-/// complex MAC per frequency bin). `vfr`/`vfi` are kbins scratch.
-///
-/// Shared verbatim by the whole-row attention and the streaming β pass,
-/// so chunk boundaries can never change the per-bin f64 arithmetic —
-/// only the (identical, ascending) order it runs in.
-#[allow(clippy::too_many_arguments)]
-fn accumulate_beta(
-    fs: &mut FftScratch,
-    vfr: &mut [f64],
-    vfi: &mut [f64],
-    br: &mut [f64],
-    bi: &mut [f64],
-    k: &[f32],
-    v: &[f32],
-    kbins: usize,
-) {
-    fs.rfft(v);
-    vfr.copy_from_slice(&fs.re[..kbins]);
-    vfi.copy_from_slice(&fs.im[..kbins]);
-    fs.rfft(k);
-    for j in 0..kbins {
-        br[j] += fs.re[j] * vfr[j] - fs.im[j] * vfi[j];
-        bi[j] += fs.re[j] * vfi[j] + fs.im[j] * vfr[j];
-    }
-}
-
-/// Eqs. 2+3, one position: unbind β with the stabilized exact inverse
-/// of `q_i` (`ur`/`ui` are kbins scratch) and return the cosine
-/// similarity of `v_i` to the retrieved v̂_i — the pre-softmax score.
-/// Shared verbatim by the whole-row attention and every streaming pass
-/// that needs scores (max, denominator, frozen re-weighting).
-#[allow(clippy::too_many_arguments)]
-fn position_score(
-    fs: &mut FftScratch,
-    ur: &mut [f64],
-    ui: &mut [f64],
-    br: &[f64],
-    bi: &[f64],
-    q: &[f32],
-    v: &[f32],
-    kbins: usize,
-    hd: usize,
-) -> f64 {
-    fs.rfft(q);
-    for j in 0..kbins {
-        let d = fs.re[j] * fs.re[j] + fs.im[j] * fs.im[j] + EPS as f64;
-        let ir = fs.re[j] / d;
-        let ii = -fs.im[j] / d;
-        ur[j] = br[j] * ir - bi[j] * ii;
-        ui[j] = br[j] * ii + bi[j] * ir;
-    }
-    fs.irfft(ur, ui);
-    let mut num = 0.0f64;
-    let mut nv = 0.0f64;
-    let mut nh = 0.0f64;
-    for (&a, &b) in v.iter().zip(fs.re[..hd].iter()) {
-        num += a as f64 * b;
-        nv += a as f64 * a as f64;
-        nh += b * b;
-    }
-    num / (nv.sqrt() * nh.sqrt() + EPS as f64)
-}
-
-/// Multi-head HRR attention (Eqs. 1-4) for one sequence: reads
-/// `ws.q/k/v` (t, e) and `ws.mask`, writes the merged mix to `ws.attn`.
-/// All scratch comes from `ws` — nothing allocates. The tap observes β,
-/// v̂ and the cleanup weights as they are produced (no-ops for
-/// [`NullTap`]); `layer` only labels those observations.
-fn hrr_attention<T: ForwardTap>(
-    cfg: &HrrConfig,
-    ws: &mut Workspace,
-    t: usize,
-    layer: usize,
-    tap: &mut T,
-) {
-    let e = cfg.embed;
-    let hd = cfg.head_dim();
-    let kbins = num_bins(hd);
-    let Workspace { fs, br, bi, vfr, vfi, ur, ui, scores, mask, q, k, v, attn, .. } = ws;
-    attn[..t * e].fill(0.0);
-    for head in 0..cfg.heads {
-        let off = head * hd;
-        // Eq. 1 — β = Σ_t k_t ⊛ v_t over unmasked positions, accumulated
-        // in the frequency domain (one complex MAC per bin).
-        br.fill(0.0);
-        bi.fill(0.0);
-        for i in 0..t {
-            if !mask[i] {
-                continue;
-            }
-            let s = i * e + off;
-            accumulate_beta(fs, vfr, vfi, br, bi, &k[s..s + hd], &v[s..s + hd], kbins);
-        }
-        tap.beta(layer, head, br, bi);
-        // Eq. 2+3 — v̂_t = q_t† ⊛ β (stabilized exact inverse), score =
-        // cos(v_t, v̂_t). Masked positions get weight 0 (their e^{-1e9}
-        // underflows to exactly 0 in the reference's softmax). After
-        // `position_score` the FFT scratch still holds v̂ — that is what
-        // the tap records.
-        let mut smax = f64::NEG_INFINITY;
-        for i in 0..t {
-            if !mask[i] {
-                continue;
-            }
-            let s = i * e + off;
-            scores[i] = position_score(fs, ur, ui, br, bi, &q[s..s + hd], &v[s..s + hd], kbins, hd);
-            tap.vhat(layer, head, i, &fs.re[..hd]);
-            smax = smax.max(scores[i]);
-        }
-        // Eq. 4 — softmax cleanup over T, then re-weight the values.
-        let mut denom = 0.0f64;
-        for i in 0..t {
-            if mask[i] {
-                scores[i] = (scores[i] - smax).exp();
-                denom += scores[i];
-            }
-        }
-        for i in 0..t {
-            if !mask[i] {
-                continue;
-            }
-            let w = scores[i] / denom;
-            tap.weight(layer, head, i, w);
-            let vv = &v[i * e + off..i * e + off + hd];
-            for (o, &x) in attn[i * e + off..i * e + off + hd].iter_mut().zip(vv) {
-                *o = (w * x as f64) as f32;
-            }
-        }
-    }
-}
-
-/// Fixed sinusoidal positional value (layers.py `sinusoid_positions`).
-pub(crate) fn sinusoid(pos: usize, j: usize, d: usize) -> f32 {
-    let angle = pos as f64 / 10000f64.powf((2 * (j / 2)) as f64 / d as f64);
-    if j % 2 == 0 {
-        angle.sin() as f32
-    } else {
-        angle.cos() as f32
-    }
-}
-
-/// Check a parameter store against the canonical layout of
-/// [`param_specs`] (names, order and shapes) — shared by the inference
-/// and training sessions so both reject a broken store up front.
-pub(crate) fn validate_native_params(cfg: &HrrConfig, params: &ParamStore) -> Result<()> {
-    let specs = param_specs(cfg);
-    anyhow::ensure!(
-        specs.len() == params.len(),
-        "native param store has {} tensors, config expects {}",
-        params.len(),
-        specs.len()
-    );
-    for (spec, (name, tensor)) in specs.iter().zip(params.names.iter().zip(params.tensors.iter()))
-    {
-        anyhow::ensure!(
-            &spec.name == name && spec.shape == tensor.shape(),
-            "native param mismatch: expected '{}' {:?}, got '{}' {:?}",
-            spec.name,
-            spec.shape,
-            name,
-            tensor.shape()
-        );
-    }
-    Ok(())
-}
-
-/// Fetch one f32 parameter slice by canonical name.
-fn param<'a>(params: &'a ParamStore, name: &str) -> Result<&'a [f32]> {
-    params
-        .get(name)
-        .with_context(|| format!("native model parameter '{name}' missing"))?
-        .as_f32()
-        .with_context(|| format!("native model parameter '{name}' dtype"))
-}
-
-/// One encoder block's parameter slices (see [`ResolvedParams`]).
-pub(crate) struct BlockParams<'a> {
-    pub(crate) ln1_scale: &'a [f32],
-    pub(crate) ln1_bias: &'a [f32],
-    pub(crate) query: &'a [f32],
-    pub(crate) key: &'a [f32],
-    pub(crate) value: &'a [f32],
-    pub(crate) output: &'a [f32],
-    pub(crate) ln2_scale: &'a [f32],
-    pub(crate) ln2_bias: &'a [f32],
-    pub(crate) fc1: &'a [f32],
-    pub(crate) fc1_bias: &'a [f32],
-    pub(crate) fc2: &'a [f32],
-    pub(crate) fc2_bias: &'a [f32],
-}
-
-/// Every parameter slice `forward_row` touches, resolved by canonical
-/// name once per predict call (the store is immutable) — the per-row
-/// hot path then does no name formatting, no store lookups and no
-/// allocation at all. Missing/mistyped parameters surface here, before
-/// any row runs.
-pub(crate) struct ResolvedParams<'a> {
-    pub(crate) embed: &'a [f32],
-    pub(crate) pos: Option<&'a [f32]>,
-    pub(crate) blocks: Vec<BlockParams<'a>>,
-    pub(crate) ln_f_scale: &'a [f32],
-    pub(crate) ln_f_bias: &'a [f32],
-    pub(crate) head1: &'a [f32],
-    pub(crate) head1_bias: &'a [f32],
-    pub(crate) head2: &'a [f32],
-    pub(crate) head2_bias: &'a [f32],
-}
-
-impl<'a> ResolvedParams<'a> {
-    pub(crate) fn resolve(cfg: &HrrConfig, params: &'a ParamStore) -> Result<ResolvedParams<'a>> {
-        let p = |name: &str| param(params, name);
-        let mut blocks = Vec::with_capacity(cfg.layers);
-        for i in 0..cfg.layers {
-            let n = |s: &str| format!("blocks.{i}.{s}");
-            blocks.push(BlockParams {
-                ln1_scale: p(&n("ln1.scale"))?,
-                ln1_bias: p(&n("ln1.bias"))?,
-                query: p(&n("mixer.query.kernel"))?,
-                key: p(&n("mixer.key.kernel"))?,
-                value: p(&n("mixer.value.kernel"))?,
-                output: p(&n("mixer.output.kernel"))?,
-                ln2_scale: p(&n("ln2.scale"))?,
-                ln2_bias: p(&n("ln2.bias"))?,
-                fc1: p(&n("mlp.fc1.kernel"))?,
-                fc1_bias: p(&n("mlp.fc1.bias"))?,
-                fc2: p(&n("mlp.fc2.kernel"))?,
-                fc2_bias: p(&n("mlp.fc2.bias"))?,
-            });
-        }
-        Ok(ResolvedParams {
-            embed: p("embed.table")?,
-            pos: if cfg.learned_pos { Some(p("pos.table")?) } else { None },
-            blocks,
-            ln_f_scale: p("ln_f.scale")?,
-            ln_f_bias: p("ln_f.bias")?,
-            head1: p("head1.kernel")?,
-            head1_bias: p("head1.bias")?,
-            head2: p("head2.kernel")?,
-            head2_bias: p("head2.bias")?,
-        })
-    }
-}
-
-// ---------------------------------------------------------------------------
-// Versioned parameter slot (hot-reload seam)
-// ---------------------------------------------------------------------------
-
-/// One immutable generation of model weights plus its monotonically
-/// increasing version number. Once published through a [`ParamSlot`] the
-/// store is never mutated again — readers pin a generation with one
-/// `Arc` clone and keep using it for as long as they like (a whole
-/// predict batch, a whole multi-pass stream) while newer generations
-/// flow past them.
-pub struct ParamVersion {
-    /// Monotonic generation counter (the engine starts at 1 and bumps on
-    /// every accepted reload; 0 is reserved for "unversioned").
-    pub version: u64,
-    pub store: ParamStore,
-}
-
-/// The swappable cell weights live behind: an `Arc`-swap over
-/// [`ParamVersion`] that [`NativeSession`] reads and `Engine::reload`
-/// writes.
-///
-/// The concurrency contract is deliberately tiny:
-///
-/// * [`ParamSlot::pin`] takes the read lock for one `Arc` clone — a few
-///   nanoseconds, **once per batch/stream**, never per row. All forward
-///   arithmetic runs against the pinned generation with zero
-///   synchronization.
-/// * [`ParamSlot::install`] swaps the `Arc` under the write lock. It
-///   never blocks on in-flight forward work (that work holds clones,
-///   not the lock), so a reload is "zero-downtime by construction":
-///   batches that pinned before the swap finish on the old weights,
-///   batches that pin after get the new ones, and nothing in between
-///   can observe a torn store.
-pub struct ParamSlot {
-    inner: RwLock<Arc<ParamVersion>>,
-}
-
-impl ParamSlot {
-    /// Wrap a store as generation `version`.
-    pub fn new(store: ParamStore, version: u64) -> ParamSlot {
-        ParamSlot { inner: RwLock::new(Arc::new(ParamVersion { version, store })) }
-    }
-
-    /// Pin the current generation: one read-locked `Arc` clone. Callers
-    /// hold the returned `Arc` for the duration of a batch or stream
-    /// pass, so concurrent [`ParamSlot::install`]s can never change the
-    /// weights under running arithmetic.
-    pub fn pin(&self) -> Arc<ParamVersion> {
-        Arc::clone(&self.inner.read().expect("param slot poisoned"))
-    }
-
-    /// Publish a new generation. In-flight pins keep the old `Arc`
-    /// alive; the old store drops when its last pinner finishes.
-    pub fn install(&self, store: ParamStore, version: u64) {
-        *self.inner.write().expect("param slot poisoned") =
-            Arc::new(ParamVersion { version, store });
-    }
-
-    /// The currently published generation number.
-    pub fn version(&self) -> u64 {
-        self.inner.read().expect("param slot poisoned").version
-    }
-}
-
-// ---------------------------------------------------------------------------
-// Forward observation tap (shared forward for predict + training tape)
-// ---------------------------------------------------------------------------
-
-/// Observation hooks the unified forward pass fires as it runs. The
-/// inference path installs [`NullTap`] (every hook an empty inline
-/// default — the optimizer erases the calls, so `forward_row` compiles
-/// to exactly the pre-unification code); the training path installs a
-/// recorder that copies each intermediate onto its autodiff tape
-/// (`hrr/grad.rs`). Hooks only *read* buffers the forward just wrote —
-/// they can never change the arithmetic, which is what keeps taped and
-/// plain logits bit-identical by construction.
-pub(crate) trait ForwardTap {
-    /// PAD mask for the row, right after embedding (t positions).
-    fn mask(&mut self, _t: usize, _mask: &[bool]) {}
-    /// Residual stream entering block `layer` (t·e).
-    fn block_begin(&mut self, _layer: usize, _x_in: &[f32]) {}
-    /// ln1 output of block `layer` (t·e).
-    fn ln1(&mut self, _layer: usize, _h1: &[f32]) {}
-    /// q/k/v projections of block `layer` (t·e each).
-    fn qkv(&mut self, _layer: usize, _q: &[f32], _k: &[f32], _v: &[f32]) {}
-    /// One head's fully accumulated β spectrum (Eq. 1; kbins each).
-    fn beta(&mut self, _layer: usize, _head: usize, _br: &[f64], _bi: &[f64]) {}
-    /// One position's unbound v̂ for one head (Eq. 2; head_dim values).
-    fn vhat(&mut self, _layer: usize, _head: usize, _pos: usize, _vhat: &[f64]) {}
-    /// One unmasked position's softmax cleanup weight (Eq. 4).
-    fn weight(&mut self, _layer: usize, _head: usize, _pos: usize, _w: f64) {}
-    /// Merged w·v attention mix of block `layer` (t·e).
-    fn attn(&mut self, _layer: usize, _attn: &[f32]) {}
-    /// Residual stream after the attention residual add (t·e).
-    fn attn_residual(&mut self, _layer: usize, _x_mid: &[f32]) {}
-    /// ln2 output of block `layer` (t·e).
-    fn ln2(&mut self, _layer: usize, _h2: &[f32]) {}
-    /// fc1 output + bias, pre-GELU (t·mlp_dim).
-    fn mlp_pre(&mut self, _layer: usize, _mlp_pre: &[f32]) {}
-    /// Residual stream entering the final LayerNorm (t·e).
-    fn final_input(&mut self, _x_final: &[f32]) {}
-    /// Masked mean-pool output (e values) and the valid-position count.
-    fn pooled(&mut self, _pooled: &[f32], _n_valid: f64) {}
-    /// Classifier hidden pre-ReLU (mlp_dim).
-    fn head_pre(&mut self, _head_pre: &[f32]) {}
-    /// Classifier hidden post-ReLU (mlp_dim).
-    fn head_act(&mut self, _head_act: &[f32]) {}
-    /// Final logits (classes).
-    fn logits(&mut self, _logits: &[f32]) {}
-}
-
-/// The inference tap: observes nothing, costs nothing.
-pub(crate) struct NullTap;
-
-impl ForwardTap for NullTap {}
-
-/// Token embedding + positional values for `ids` occupying absolute
-/// positions `p0..p0 + ids.len()`, written to `ws.x` (and the PAD mask
-/// to `ws.mask`). Out-of-range ids clamp like the XLA gather. The
-/// whole-row forward calls this with `p0 = 0`; the streaming forward
-/// calls it per chunk with the chunk's absolute offset, producing the
-/// exact same per-position values.
-fn embed_positions(cfg: &HrrConfig, rp: &ResolvedParams<'_>, ids: &[i32], p0: usize, ws: &mut Workspace) {
-    let e = cfg.embed;
-    for (m, &id) in ws.mask.iter_mut().zip(ids) {
-        *m = id != PAD_ID;
-    }
-    for (i, &id) in ids.iter().enumerate() {
-        let pos = p0 + i;
-        let row = (id.max(0) as usize).min(cfg.vocab - 1);
-        ws.x[i * e..(i + 1) * e].copy_from_slice(&rp.embed[row * e..(row + 1) * e]);
-        match rp.pos {
-            Some(tbl) => {
-                for (xv, &pv) in
-                    ws.x[i * e..(i + 1) * e].iter_mut().zip(&tbl[pos * e..(pos + 1) * e])
-                {
-                    *xv += pv;
-                }
-            }
-            None => {
-                for (j, xv) in ws.x[i * e..(i + 1) * e].iter_mut().enumerate() {
-                    *xv += sinusoid(pos, j, e);
-                }
-            }
-        }
-    }
-}
-
-/// Forward one sequence: `ids` (t ≤ cfg.seq_len) → logits written to
-/// `out` (classes). Every intermediate lives in `ws`, every parameter
-/// slice comes pre-resolved in `rp` — the row loop allocates nothing
-/// and looks nothing up.
-pub(crate) fn forward_row(
-    cfg: &HrrConfig,
-    rp: &ResolvedParams<'_>,
-    ids: &[i32],
-    ws: &mut Workspace,
-    out: &mut [f32],
-) {
-    forward_row_with(cfg, rp, ids, ws, out, &mut NullTap)
-}
-
-/// The one parameterized forward pass (ROADMAP item 6): [`forward_row`]
-/// is this with [`NullTap`] (hooks vanish under monomorphization), the
-/// training tape is this with a recording tap (`hrr/grad.rs`). One body
-/// means the arithmetic literally cannot drift between inference and
-/// training — taped logits are bit-identical to served logits because
-/// they are the same instructions.
-pub(crate) fn forward_row_with<T: ForwardTap>(
-    cfg: &HrrConfig,
-    rp: &ResolvedParams<'_>,
-    ids: &[i32],
-    ws: &mut Workspace,
-    out: &mut [f32],
-    tap: &mut T,
-) {
-    let e = cfg.embed;
-    let t = ids.len();
-    debug_assert_eq!(out.len(), cfg.classes);
-
-    embed_positions(cfg, rp, ids, 0, ws);
-    tap.mask(t, &ws.mask[..t]);
-
-    for (li, bp) in rp.blocks.iter().enumerate() {
-        // attention sub-block (pre-LN, residual)
-        tap.block_begin(li, &ws.x[..t * e]);
-        layernorm_into(&ws.x[..t * e], bp.ln1_scale, bp.ln1_bias, e, &mut ws.h[..t * e]);
-        tap.ln1(li, &ws.h[..t * e]);
-        matmul_into(&ws.h[..t * e], bp.query, t, e, e, &mut ws.q[..t * e]);
-        matmul_into(&ws.h[..t * e], bp.key, t, e, e, &mut ws.k[..t * e]);
-        matmul_into(&ws.h[..t * e], bp.value, t, e, e, &mut ws.v[..t * e]);
-        tap.qkv(li, &ws.q[..t * e], &ws.k[..t * e], &ws.v[..t * e]);
-        hrr_attention(cfg, ws, t, li, tap);
-        tap.attn(li, &ws.attn[..t * e]);
-        matmul_into(&ws.attn[..t * e], bp.output, t, e, e, &mut ws.proj[..t * e]);
-        for (xv, &yv) in ws.x[..t * e].iter_mut().zip(&ws.proj[..t * e]) {
-            *xv += yv;
-        }
-        tap.attn_residual(li, &ws.x[..t * e]);
-        // MLP sub-block (pre-LN, residual)
-        layernorm_into(&ws.x[..t * e], bp.ln2_scale, bp.ln2_bias, e, &mut ws.h[..t * e]);
-        tap.ln2(li, &ws.h[..t * e]);
-        matmul_into(&ws.h[..t * e], bp.fc1, t, e, cfg.mlp_dim, &mut ws.mlp[..t * cfg.mlp_dim]);
-        add_bias(&mut ws.mlp[..t * cfg.mlp_dim], bp.fc1_bias, cfg.mlp_dim);
-        tap.mlp_pre(li, &ws.mlp[..t * cfg.mlp_dim]);
-        gelu(&mut ws.mlp[..t * cfg.mlp_dim]);
-        matmul_into(&ws.mlp[..t * cfg.mlp_dim], bp.fc2, t, cfg.mlp_dim, e, &mut ws.proj[..t * e]);
-        add_bias(&mut ws.proj[..t * e], bp.fc2_bias, e);
-        for (xv, &mv) in ws.x[..t * e].iter_mut().zip(&ws.proj[..t * e]) {
-            *xv += mv;
-        }
-    }
-
-    tap.final_input(&ws.x[..t * e]);
-    layernorm_into(&ws.x[..t * e], rp.ln_f_scale, rp.ln_f_bias, e, &mut ws.h[..t * e]);
-
-    // masked mean-pool over T (model.py logits_fn)
-    let n_valid = ws.mask[..t].iter().filter(|&&m| m).count().max(1) as f64;
-    for (j, pv) in ws.pooled.iter_mut().enumerate() {
-        let mut s = 0.0f64;
-        for i in 0..t {
-            if ws.mask[i] {
-                s += ws.h[i * e + j] as f64;
-            }
-        }
-        *pv = (s / n_valid) as f32;
-    }
-    tap.pooled(&ws.pooled, n_valid);
-
-    matmul_into(&ws.pooled, rp.head1, 1, e, cfg.mlp_dim, &mut ws.head);
-    add_bias(&mut ws.head, rp.head1_bias, cfg.mlp_dim);
-    tap.head_pre(&ws.head);
-    for v in ws.head.iter_mut() {
-        *v = v.max(0.0); // relu
-    }
-    tap.head_act(&ws.head);
-    matmul_into(&ws.head, rp.head2, 1, cfg.mlp_dim, cfg.classes, out);
-    add_bias(out, rp.head2_bias, cfg.classes);
-    tap.logits(out);
-}
-
-// ---------------------------------------------------------------------------
-// Streaming (chunked) forward — O(H) carried state per stream
-// ---------------------------------------------------------------------------
-//
-// The Hrrformer forward is not single-pass streamable: every position's
-// attention score depends on the *full-sequence* β, and the softmax
-// cleanup needs the global max and denominator. What IS streamable is
-// each of those statistics individually — β is an ascending-order f64
-// sum per bin, the max is exact, and the denominator is an
-// ascending-order f64 sum — and, given a layer's finished statistics,
-// every remaining op in the block (LN, matmuls, score → weight → value,
-// MLP) is strictly per-position. So the chunked forward runs **3L + 1
-// passes** over a rewindable token source (the spirit of Rabe & Staats'
-// chunked O(1)-memory attention, PAPERS.md), recomputing activations
-// chunk-by-chunk from O(chunk)-sized scratch and carrying only
-// [`StreamState`] between chunks:
-//
-//   pass 3ℓ+0  accumulate layer ℓ's β per head       (pass 0 runs
-//              *online*, while bytes are still arriving)
-//   pass 3ℓ+1  layer ℓ's exact score max per head
-//   pass 3ℓ+2  layer ℓ's softmax denominator per head
-//   pass 3L    final LN + masked mean-pool accumulation → logits
-//
-// Within every pass, per-position arithmetic is shared verbatim with
-// the whole-row path ([`embed_positions`], [`accumulate_beta`],
-// [`position_score`], [`matmul_into`] row independence), and every f64
-// accumulation visits positions in ascending order regardless of where
-// chunk boundaries fall — which makes the streamed logits
-// **bit-identical** to [`forward_row`] on the same tokens, for every
-// chunk size (pinned by `rust/tests/stream_native.rs` against the
-// golden fixtures).
-
-/// Frozen attention statistics for one layer of one open stream:
-/// everything the chunked forward carries for that layer, all f64.
-/// `heads × (2·kbins + 2)` values — independent of T.
-struct LayerStreamState {
-    /// β superposition bins, (heads, kbins) row-major (Eq. 1)
-    br: Vec<f64>,
-    bi: Vec<f64>,
-    /// per-head running score max (exact: max is order-free)
-    smax: Vec<f64>,
-    /// per-head softmax denominator Σ exp(s_i − smax), ascending i
-    denom: Vec<f64>,
-}
-
-impl LayerStreamState {
-    fn new(heads: usize, kbins: usize) -> LayerStreamState {
-        LayerStreamState {
-            br: vec![0.0; heads * kbins],
-            bi: vec![0.0; heads * kbins],
-            smax: vec![f64::NEG_INFINITY; heads],
-            denom: vec![0.0; heads],
-        }
-    }
-
-    /// This head's β bins.
-    fn beta(&self, head: usize, kbins: usize) -> (&[f64], &[f64]) {
-        (&self.br[head * kbins..(head + 1) * kbins], &self.bi[head * kbins..(head + 1) * kbins])
-    }
-
-    fn beta_mut(&mut self, head: usize, kbins: usize) -> (&mut [f64], &mut [f64]) {
-        (
-            &mut self.br[head * kbins..(head + 1) * kbins],
-            &mut self.bi[head * kbins..(head + 1) * kbins],
-        )
-    }
-}
-
-/// The complete carried state of one open stream: per-layer attention
-/// statistics plus the pooled-feature accumulator and pass bookkeeping.
-/// **O(H), independent of the stream length** — `resident_bytes()` is
-/// what `bench stream` records and what the O(H) acceptance test pins.
-pub struct StreamState {
-    layers: Vec<LayerStreamState>,
-    /// masked mean-pool accumulator over final-LN features (embed), f64
-    pooled: Vec<f64>,
-    /// unmasked (non-PAD) token count, fixed after pass 0
-    n_valid: usize,
-    /// positions consumed so far in the current pass
-    pos: usize,
-    /// stream length in tokens, fixed when pass 0 ends
-    total: usize,
-    /// current pass index, `0..=3·layers` (`3·layers + 1` ⇒ finalized)
-    pass: usize,
-    /// The weight generation this stream opened on. Every pass resolves
-    /// from this pin, so an `Engine::reload` mid-stream cannot mix
-    /// generations within one stream — it finishes on its opening
-    /// weights by construction and only *new* streams see the swap.
-    pinned: Option<Arc<ParamVersion>>,
-}
-
-impl StreamState {
-    pub(crate) fn new(cfg: &HrrConfig) -> StreamState {
-        let kbins = num_bins(cfg.head_dim());
-        StreamState {
-            layers: (0..cfg.layers).map(|_| LayerStreamState::new(cfg.heads, kbins)).collect(),
-            pooled: vec![0.0; cfg.embed],
-            n_valid: 0,
-            pos: 0,
-            total: 0,
-            pass: 0,
-            pinned: None,
-        }
-    }
-
-    /// The weight generation this stream is pinned to (0 = unpinned).
-    pub fn model_version(&self) -> u64 {
-        self.pinned.as_ref().map_or(0, |p| p.version)
-    }
-
-    /// Total passes the chunked forward makes over the tokens:
-    /// β + score-max + denominator per layer, then the pooling pass.
-    pub fn passes(&self) -> usize {
-        3 * self.layers.len() + 1
-    }
-
-    /// The pass currently consuming chunks (0 = the online append pass).
-    pub fn pass(&self) -> usize {
-        self.pass
-    }
-
-    /// Whether every pass has completed and logits can be read.
-    pub fn ready(&self) -> bool {
-        self.pass >= self.passes()
-    }
-
-    /// Tokens consumed by the current pass so far.
-    pub fn pass_pos(&self) -> usize {
-        self.pos
-    }
-
-    /// Stream length in tokens (grows during pass 0, fixed after).
-    pub fn tokens(&self) -> usize {
-        if self.pass == 0 {
-            self.pos
-        } else {
-            self.total
-        }
-    }
-
-    /// Bytes of heap state this stream carries between chunks — the
-    /// whole point of the subsystem: this is O(heads · head_dim ·
-    /// layers + embed) and does **not** grow with the stream length.
-    pub fn resident_bytes(&self) -> usize {
-        let f64s: usize = self
-            .layers
-            .iter()
-            .map(|l| l.br.len() + l.bi.len() + l.smax.len() + l.denom.len())
-            .sum::<usize>()
-            + self.pooled.len();
-        f64s * std::mem::size_of::<f64>() + std::mem::size_of::<StreamState>()
-    }
-}
-
-/// Per-worker scratch for the chunked forward: a [`Workspace`] whose
-/// position-indexed buffers hold `chunk_cap` rows instead of seq_len.
-/// Shared across streams and passes (it carries no stream state), so a
-/// server holds one per worker — total transient memory is O(chunk),
-/// never O(T).
-pub struct StreamWorkspace {
-    ws: Workspace,
-    chunk_cap: usize,
-}
-
-impl StreamWorkspace {
-    pub(crate) fn new(cfg: &HrrConfig, chunk_cap: usize) -> StreamWorkspace {
-        let chunk_cap = chunk_cap.max(1);
-        StreamWorkspace { ws: Workspace::with_rows(cfg, chunk_cap), chunk_cap }
-    }
-
-    /// Largest chunk one consume call accepts.
-    pub fn chunk_cap(&self) -> usize {
-        self.chunk_cap
-    }
-}
-
-/// Apply encoder block `bp` to the `c` chunk rows in `ws.x` using the
-/// finished attention statistics `ls` (β, smax, denom cover the whole
-/// stream): per position the score/weight arithmetic is exactly the
-/// whole-row path's — `w_i = exp(s_i − smax) / denom` — so the updated
-/// residual rows are bit-identical to the same rows of [`forward_row`].
-fn apply_block_frozen(
-    cfg: &HrrConfig,
-    bp: &BlockParams<'_>,
-    ls: &LayerStreamState,
-    ws: &mut Workspace,
-    c: usize,
-) {
-    let e = cfg.embed;
-    let hd = cfg.head_dim();
-    let kbins = num_bins(hd);
-    layernorm_into(&ws.x[..c * e], bp.ln1_scale, bp.ln1_bias, e, &mut ws.h[..c * e]);
-    matmul_into(&ws.h[..c * e], bp.query, c, e, e, &mut ws.q[..c * e]);
-    matmul_into(&ws.h[..c * e], bp.value, c, e, e, &mut ws.v[..c * e]);
-    {
-        let Workspace { fs, ur, ui, mask, q, v, attn, .. } = ws;
-        attn[..c * e].fill(0.0);
-        for head in 0..cfg.heads {
-            let off = head * hd;
-            let (br, bi) = ls.beta(head, kbins);
-            for i in 0..c {
-                if !mask[i] {
-                    continue;
-                }
-                let s = i * e + off;
-                let score =
-                    position_score(fs, ur, ui, br, bi, &q[s..s + hd], &v[s..s + hd], kbins, hd);
-                let w = (score - ls.smax[head]).exp() / ls.denom[head];
-                for (o, &x) in attn[s..s + hd].iter_mut().zip(&v[s..s + hd]) {
-                    *o = (w * x as f64) as f32;
-                }
-            }
-        }
-    }
-    matmul_into(&ws.attn[..c * e], bp.output, c, e, e, &mut ws.proj[..c * e]);
-    for (xv, &yv) in ws.x[..c * e].iter_mut().zip(&ws.proj[..c * e]) {
-        *xv += yv;
-    }
-    layernorm_into(&ws.x[..c * e], bp.ln2_scale, bp.ln2_bias, e, &mut ws.h[..c * e]);
-    matmul_into(&ws.h[..c * e], bp.fc1, c, e, cfg.mlp_dim, &mut ws.mlp[..c * cfg.mlp_dim]);
-    add_bias(&mut ws.mlp[..c * cfg.mlp_dim], bp.fc1_bias, cfg.mlp_dim);
-    gelu(&mut ws.mlp[..c * cfg.mlp_dim]);
-    matmul_into(&ws.mlp[..c * cfg.mlp_dim], bp.fc2, c, cfg.mlp_dim, e, &mut ws.proj[..c * e]);
-    add_bias(&mut ws.proj[..c * e], bp.fc2_bias, e);
-    for (xv, &mv) in ws.x[..c * e].iter_mut().zip(&ws.proj[..c * e]) {
-        *xv += mv;
-    }
-}
-
-/// Consume one token chunk for the stream's current pass: recompute the
-/// chunk's residual rows (earlier layers applied with their frozen
-/// statistics), then fold the chunk into whichever statistic this pass
-/// accumulates. Chunks must arrive in position order within a pass.
-fn stream_consume_impl(
-    cfg: &HrrConfig,
-    rp: &ResolvedParams<'_>,
-    st: &mut StreamState,
-    ws: &mut Workspace,
-    chunk: &[i32],
-) -> Result<()> {
-    let c = chunk.len();
-    if c == 0 {
-        return Ok(());
-    }
-    let e = cfg.embed;
-    let hd = cfg.head_dim();
-    let kbins = num_bins(hd);
-    let final_pass = 3 * cfg.layers;
-    anyhow::ensure!(st.pass <= final_pass, "stream already finalized");
-    if st.pass == 0 {
-        anyhow::ensure!(
-            st.pos + c <= cfg.seq_len,
-            "stream overruns bucket T={} (truncate before consuming)",
-            cfg.seq_len
-        );
-    } else {
-        anyhow::ensure!(
-            st.pos + c <= st.total,
-            "pass {} replay longer than the original stream ({} tokens)",
-            st.pass,
-            st.total
-        );
-    }
-
-    embed_positions(cfg, rp, chunk, st.pos, ws);
-    let layer = (st.pass / 3).min(cfg.layers);
-    for l in 0..layer {
-        apply_block_frozen(cfg, &rp.blocks[l], &st.layers[l], ws, c);
-    }
-
-    if st.pass == final_pass {
-        // pooling pass: final LN, then the masked mean-pool partial
-        // sums — per feature j the adds run ascending in i, exactly the
-        // whole-row pooling order.
-        layernorm_into(&ws.x[..c * e], rp.ln_f_scale, rp.ln_f_bias, e, &mut ws.h[..c * e]);
-        for (j, pv) in st.pooled.iter_mut().enumerate() {
-            for i in 0..c {
-                if ws.mask[i] {
-                    *pv += ws.h[i * e + j] as f64;
-                }
-            }
-        }
-    } else {
-        let bp = &rp.blocks[layer];
-        layernorm_into(&ws.x[..c * e], bp.ln1_scale, bp.ln1_bias, e, &mut ws.h[..c * e]);
-        match st.pass % 3 {
-            0 => {
-                // β pass: k/v per chunk row, ascending complex MAC.
-                matmul_into(&ws.h[..c * e], bp.key, c, e, e, &mut ws.k[..c * e]);
-                matmul_into(&ws.h[..c * e], bp.value, c, e, e, &mut ws.v[..c * e]);
-                let ls = &mut st.layers[layer];
-                let Workspace { fs, vfr, vfi, mask, k, v, .. } = ws;
-                for head in 0..cfg.heads {
-                    let off = head * hd;
-                    let (br, bi) = ls.beta_mut(head, kbins);
-                    for i in 0..c {
-                        if !mask[i] {
-                            continue;
-                        }
-                        let s = i * e + off;
-                        accumulate_beta(fs, vfr, vfi, br, bi, &k[s..s + hd], &v[s..s + hd], kbins);
-                    }
-                }
-                if st.pass == 0 {
-                    st.n_valid += mask[..c].iter().filter(|&&m| m).count();
-                }
-            }
-            1 => {
-                // score-max pass: exact running max per head.
-                matmul_into(&ws.h[..c * e], bp.query, c, e, e, &mut ws.q[..c * e]);
-                matmul_into(&ws.h[..c * e], bp.value, c, e, e, &mut ws.v[..c * e]);
-                let ls = &mut st.layers[layer];
-                let Workspace { fs, ur, ui, mask, q, v, .. } = ws;
-                for head in 0..cfg.heads {
-                    let off = head * hd;
-                    let (br, bi) = (&ls.br[head * kbins..], &ls.bi[head * kbins..]);
-                    let (br, bi) = (&br[..kbins], &bi[..kbins]);
-                    for i in 0..c {
-                        if !mask[i] {
-                            continue;
-                        }
-                        let s = i * e + off;
-                        let score = position_score(
-                            fs,
-                            ur,
-                            ui,
-                            br,
-                            bi,
-                            &q[s..s + hd],
-                            &v[s..s + hd],
-                            kbins,
-                            hd,
-                        );
-                        ls.smax[head] = ls.smax[head].max(score);
-                    }
-                }
-            }
-            _ => {
-                // denominator pass: Σ exp(s_i − smax) ascending in i per
-                // head — the whole-row denominator loop, chunked.
-                matmul_into(&ws.h[..c * e], bp.query, c, e, e, &mut ws.q[..c * e]);
-                matmul_into(&ws.h[..c * e], bp.value, c, e, e, &mut ws.v[..c * e]);
-                let ls = &mut st.layers[layer];
-                let Workspace { fs, ur, ui, mask, q, v, .. } = ws;
-                for head in 0..cfg.heads {
-                    let off = head * hd;
-                    let (br, bi) = (&ls.br[head * kbins..], &ls.bi[head * kbins..]);
-                    let (br, bi) = (&br[..kbins], &bi[..kbins]);
-                    for i in 0..c {
-                        if !mask[i] {
-                            continue;
-                        }
-                        let s = i * e + off;
-                        let score = position_score(
-                            fs,
-                            ur,
-                            ui,
-                            br,
-                            bi,
-                            &q[s..s + hd],
-                            &v[s..s + hd],
-                            kbins,
-                            hd,
-                        );
-                        ls.denom[head] += (score - ls.smax[head]).exp();
-                    }
-                }
-            }
-        }
-    }
-    st.pos += c;
-    Ok(())
-}
-
-// ---------------------------------------------------------------------------
-// NativeSession
-// ---------------------------------------------------------------------------
-
-/// Worker count the default standalone scheduler fans rows across:
-/// every core the host exposes (capped by batch size at the call site).
-fn default_workers() -> usize {
-    pool::default_budget()
-}
-
-/// How [`NativeSession::predict`] schedules a batch's independent rows.
-///
-/// Every variant runs the identical per-row code path with a per-worker
-/// [`Workspace`], so logits are **bit-identical** under all of them —
-/// the scheduler only changes wall-clock and thread accounting (pinned
-/// by `prop_hrr.rs`).
-#[derive(Clone)]
-pub enum RowScheduler {
-    /// Every row on the calling thread; no worker threads at all.
-    Sequential,
-    /// Per-call `std::thread::scope` fan-out with a pinned worker count
-    /// (the pre-pool behavior; kept as the standalone default and as
-    /// the bench baseline). Spawns on every call and knows nothing
-    /// about other sessions — use [`RowScheduler::Pool`] when several
-    /// sessions share a machine.
-    Scoped(usize),
-    /// Row chunks submitted to a shared persistent [`WorkerPool`]: no
-    /// per-batch spawn, and all sessions holding the same pool respect
-    /// one global worker budget. A budget of 1 serializes native row
-    /// work pool-wide (effectively sequential, on the pool thread).
-    Pool(Arc<WorkerPool>),
-}
-
-impl std::fmt::Debug for RowScheduler {
-    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
-        match self {
-            RowScheduler::Sequential => f.write_str("Sequential"),
-            RowScheduler::Scoped(n) => write!(f, "Scoped({n})"),
-            RowScheduler::Pool(p) => write!(f, "Pool(budget={})", p.budget()),
-        }
-    }
-}
+use crate::runtime::tensor::Tensor;
+use crate::util::pool::Task as PoolTask;
+
+// The stable public surface of the pre-split `hrr::model` module: the
+// layout/init/slot machinery now lives in `hrr/common/`, the streaming
+// state in `hrr/hrrformer/`, but callers (and the crate-level
+// re-exports) keep addressing them here.
+pub use crate::hrr::common::{
+    init_native_params, param_specs, ParamSlot, ParamVersion, RowScheduler, PAD_ID,
+};
+pub use crate::hrr::hrrformer::{StreamState, StreamWorkspace};
+
+pub(crate) use crate::hrr::common::validate_native_params;
 
 /// Inference session over the pure-Rust forward pass — the native
 /// counterpart of [`crate::model::PredictSession`], usable anywhere a
 /// [`Predictor`] is (engine executors, benches, examples) with **no**
-/// AOT artifacts and no PJRT runtime.
+/// AOT artifacts and no PJRT runtime. Which token mixer runs is
+/// `cfg.arch` (hrrformer or hgconv); everything else — weights layout,
+/// scheduling, hot reload, the whole `Predictor` surface — is
+/// architecture-free.
 ///
 /// Weights live behind a shared, versioned [`ParamSlot`] rather than
 /// being owned by the session: standalone constructors wrap a private
@@ -1244,13 +84,15 @@ pub struct NativeSession {
     slot: Arc<ParamSlot>,
     /// How `predict` fans batch rows out. Standalone sessions default to
     /// the legacy scoped fan-out; engine executors install the engine's
-    /// shared [`WorkerPool`] via [`NativeSession::set_scheduler`].
+    /// shared [`WorkerPool`](crate::util::pool::WorkerPool) via
+    /// [`NativeSession::set_scheduler`].
     scheduler: RowScheduler,
 }
 
 impl NativeSession {
-    /// Resolve `base` (e.g. `ember_hrrformer_small_T256_B8`) against the
-    /// native preset tables and seed-initialize parameters.
+    /// Resolve `base` (e.g. `ember_hrrformer_small_T256_B8` or
+    /// `ember_hgconv_small_T256_B8`) against the native preset tables
+    /// and seed-initialize parameters.
     pub fn create(base: &str, seed: u32) -> Result<NativeSession> {
         Self::from_config(HrrConfig::from_base(base)?, seed)
     }
@@ -1264,9 +106,10 @@ impl NativeSession {
 
     /// Serve explicit parameters (a checkpoint saved from a native
     /// session, or a golden fixture). Names and shapes must match the
-    /// canonical layout of [`param_specs`]. The session gets a private
-    /// generation-1 slot — use [`NativeSession::with_slot`] to share a
-    /// reloadable one.
+    /// canonical layout of [`param_specs`] — which is architecture-
+    /// dependent, so hgconv weights on an hrrformer config fail here.
+    /// The session gets a private generation-1 slot — use
+    /// [`NativeSession::with_slot`] to share a reloadable one.
     pub fn with_params(cfg: HrrConfig, params: ParamStore) -> Result<NativeSession> {
         cfg.validate()?;
         validate_native_params(&cfg, &params)?;
@@ -1348,7 +191,7 @@ impl NativeSession {
     }
 
     /// [`NativeSession::predict`] under an explicit scheduler. Rows are
-    /// independent and every worker owns its own [`Workspace`], so the
+    /// independent and every worker owns its own `Workspace`, so the
     /// logits cannot depend on the scheduler or any interleaving.
     pub fn predict_with(&self, ids: &Tensor, scheduler: &RowScheduler) -> Result<Tensor> {
         Ok(self.predict_pinned(ids, scheduler)?.0)
@@ -1456,11 +299,16 @@ impl NativeSession {
 
     // --- streaming (chunked) forward -----------------------------------
 
-    /// Open the carried state for one chunked stream (see the streaming
-    /// section above): O(H) heap, independent of how long the stream
+    /// Open the carried state for one chunked stream (see
+    /// `hrr/hrrformer/`): O(H) heap, independent of how long the stream
     /// will run. The state pins the weight generation current at open —
     /// every later pass resolves from that pin, so a hot reload
     /// mid-stream cannot mix generations within the stream.
+    ///
+    /// Opening state is infallible for every architecture; it is
+    /// [`NativeSession::stream_consume`] (and, above it, the stream
+    /// registry's typed `NotStreamable` rejection) that refuses to feed
+    /// tokens to a non-streamable architecture.
     pub fn stream_state(&self) -> StreamState {
         let mut st = StreamState::new(&self.cfg);
         st.pinned = Some(self.slot.pin());
@@ -1482,13 +330,20 @@ impl NativeSession {
     /// Chunks must arrive in position order; pass 0 consumes tokens as
     /// they arrive (online), later passes replay the same tokens from a
     /// rewindable source. `chunk.len()` must be ≤ the workspace's
-    /// chunk_cap.
+    /// chunk_cap. Only streamable architectures accept chunks — hgconv
+    /// sessions fail here with the same wording the registry's typed
+    /// rejection carries.
     pub fn stream_consume(
         &self,
         st: &mut StreamState,
         sw: &mut StreamWorkspace,
         chunk: &[i32],
     ) -> Result<()> {
+        anyhow::ensure!(
+            self.cfg.arch.streamable(),
+            "architecture '{}' does not support streaming",
+            self.cfg.arch
+        );
         anyhow::ensure!(
             chunk.len() <= sw.chunk_cap,
             "chunk of {} tokens exceeds workspace chunk_cap {}",
@@ -1588,9 +443,11 @@ impl Predictor for NativeSession {
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::hrr::arch::Arch;
 
     fn tiny_cfg() -> HrrConfig {
         HrrConfig {
+            arch: Arch::Hrrformer,
             task: "test".into(),
             vocab: 11,
             seq_len: 12,
@@ -1602,6 +459,10 @@ mod tests {
             classes: 4,
             learned_pos: false,
         }
+    }
+
+    fn tiny_hg_cfg() -> HrrConfig {
+        HrrConfig { arch: Arch::HgConv, ..tiny_cfg() }
     }
 
     #[test]
@@ -1639,35 +500,52 @@ mod tests {
     #[test]
     fn workspace_reuse_does_not_leak_state_between_rows() {
         // running a long row, then a short one, must give the short row
-        // the same logits as a fresh workspace would
-        let cfg = tiny_cfg();
-        let params = init_native_params(&cfg, 9);
-        let rp = ResolvedParams::resolve(&cfg, &params).unwrap();
-        let long: Vec<i32> = vec![3, 1, 4, 1, 5, 9, 2, 6, 5, 3, 5, 8];
-        let short = [7i32, 0, 2, 0, 0];
-        let mut ws = Workspace::new(&cfg);
-        let mut scratch = vec![0.0f32; cfg.classes];
-        forward_row(&cfg, &rp, &long, &mut ws, &mut scratch);
-        let mut reused = vec![0.0f32; cfg.classes];
-        forward_row(&cfg, &rp, &short, &mut ws, &mut reused);
-        let mut fresh = vec![0.0f32; cfg.classes];
-        forward_row(&cfg, &rp, &short, &mut Workspace::new(&cfg), &mut fresh);
-        assert_eq!(reused, fresh, "stale workspace state leaked into a later row");
+        // the same logits as a fresh workspace would — for both mixers
+        // (they share the q/k/v scratch buffers)
+        for cfg in [tiny_cfg(), tiny_hg_cfg()] {
+            let params = init_native_params(&cfg, 9);
+            let rp = ResolvedParams::resolve(&cfg, &params).unwrap();
+            let long: Vec<i32> = vec![3, 1, 4, 1, 5, 9, 2, 6, 5, 3, 5, 8];
+            let short = [7i32, 0, 2, 0, 0];
+            let mut ws = Workspace::new(&cfg);
+            let mut scratch = vec![0.0f32; cfg.classes];
+            forward_row(&cfg, &rp, &long, &mut ws, &mut scratch);
+            let mut reused = vec![0.0f32; cfg.classes];
+            forward_row(&cfg, &rp, &short, &mut ws, &mut reused);
+            let mut fresh = vec![0.0f32; cfg.classes];
+            forward_row(&cfg, &rp, &short, &mut Workspace::new(&cfg), &mut fresh);
+            assert_eq!(reused, fresh, "stale workspace state leaked ({:?})", cfg.arch);
+        }
     }
 
     #[test]
     fn predict_shapes_and_finiteness() {
-        let sess = NativeSession::from_config(tiny_cfg(), 3).unwrap();
-        let ids = Tensor::i32(vec![2, 12], vec![
-            1, 2, 3, 4, 5, 6, 7, 8, 9, 10, 1, 2, // full row
-            3, 1, 4, 1, 5, 0, 0, 0, 0, 0, 0, 0, // padded row
-        ]);
-        let logits = sess.predict(&ids).unwrap();
-        assert_eq!(logits.shape(), &[2, 4]);
-        let data = logits.as_f32().unwrap();
-        assert!(data.iter().all(|v| v.is_finite()));
-        // two distinct inputs should not collapse to identical logits
-        assert_ne!(&data[..4], &data[4..]);
+        for cfg in [tiny_cfg(), tiny_hg_cfg()] {
+            let arch = cfg.arch;
+            let sess = NativeSession::from_config(cfg, 3).unwrap();
+            let ids = Tensor::i32(vec![2, 12], vec![
+                1, 2, 3, 4, 5, 6, 7, 8, 9, 10, 1, 2, // full row
+                3, 1, 4, 1, 5, 0, 0, 0, 0, 0, 0, 0, // padded row
+            ]);
+            let logits = sess.predict(&ids).unwrap();
+            assert_eq!(logits.shape(), &[2, 4]);
+            let data = logits.as_f32().unwrap();
+            assert!(data.iter().all(|v| v.is_finite()), "{arch:?}");
+            // two distinct inputs should not collapse to identical logits
+            assert_ne!(&data[..4], &data[4..], "{arch:?}");
+        }
+    }
+
+    #[test]
+    fn architectures_disagree_on_the_same_input() {
+        // same seed, same skeleton — different mixers must actually
+        // compute something different
+        let hr = NativeSession::from_config(tiny_cfg(), 3).unwrap();
+        let hg = NativeSession::from_config(tiny_hg_cfg(), 3).unwrap();
+        let ids = Tensor::i32(vec![1, 8], vec![1, 2, 3, 4, 5, 6, 7, 8]);
+        let a = hr.predict(&ids).unwrap();
+        let b = hg.predict(&ids).unwrap();
+        assert_ne!(a.as_f32().unwrap(), b.as_f32().unwrap());
     }
 
     #[test]
@@ -1689,25 +567,30 @@ mod tests {
 
     #[test]
     fn every_scheduler_produces_identical_logits() {
-        let sess = NativeSession::from_config(tiny_cfg(), 5).unwrap();
-        let ids = Tensor::i32(vec![3, 12], vec![
-            1, 2, 3, 4, 5, 6, 7, 8, 9, 10, 1, 2, //
-            3, 1, 4, 1, 5, 0, 0, 0, 0, 0, 0, 0, //
-            0, 0, 0, 0, 0, 0, 0, 0, 0, 0, 0, 0, // all-PAD row
-        ]);
-        let seq = sess.predict_with(&ids, &RowScheduler::Sequential).unwrap();
-        let scoped = sess.predict_with(&ids, &RowScheduler::Scoped(2)).unwrap();
-        let pool = Arc::new(crate::util::pool::WorkerPool::new(2));
-        let pooled = sess.predict_with(&ids, &RowScheduler::Pool(pool)).unwrap();
-        assert_eq!(seq.as_f32().unwrap(), scoped.as_f32().unwrap());
-        assert_eq!(seq.as_f32().unwrap(), pooled.as_f32().unwrap());
+        for cfg in [tiny_cfg(), tiny_hg_cfg()] {
+            let arch = cfg.arch;
+            let sess = NativeSession::from_config(cfg, 5).unwrap();
+            let ids = Tensor::i32(vec![3, 12], vec![
+                1, 2, 3, 4, 5, 6, 7, 8, 9, 10, 1, 2, //
+                3, 1, 4, 1, 5, 0, 0, 0, 0, 0, 0, 0, //
+                0, 0, 0, 0, 0, 0, 0, 0, 0, 0, 0, 0, // all-PAD row
+            ]);
+            let seq = sess.predict_with(&ids, &RowScheduler::Sequential).unwrap();
+            let scoped = sess.predict_with(&ids, &RowScheduler::Scoped(2)).unwrap();
+            let pool = Arc::new(crate::util::pool::WorkerPool::new(2));
+            let pooled = sess.predict_with(&ids, &RowScheduler::Pool(pool)).unwrap();
+            assert_eq!(seq.as_f32().unwrap(), scoped.as_f32().unwrap(), "{arch:?}");
+            assert_eq!(seq.as_f32().unwrap(), pooled.as_f32().unwrap(), "{arch:?}");
+        }
     }
 
     #[test]
     fn shorter_than_bucket_sequences_work() {
-        let sess = NativeSession::from_config(tiny_cfg(), 1).unwrap();
-        let logits = sess.predict(&Tensor::i32(vec![1, 5], vec![1, 2, 3, 4, 5])).unwrap();
-        assert_eq!(logits.shape(), &[1, 4]);
+        for cfg in [tiny_cfg(), tiny_hg_cfg()] {
+            let sess = NativeSession::from_config(cfg, 1).unwrap();
+            let logits = sess.predict(&Tensor::i32(vec![1, 5], vec![1, 2, 3, 4, 5])).unwrap();
+            assert_eq!(logits.shape(), &[1, 4]);
+        }
     }
 
     #[test]
@@ -1718,6 +601,21 @@ mod tests {
         let mut bad = init_native_params(&cfg, 0);
         bad.names[0] = "wrong.name".into();
         assert!(NativeSession::with_params(cfg, bad).is_err());
+    }
+
+    #[test]
+    fn cross_architecture_stores_are_rejected() {
+        // hgconv weights on an hrrformer config (and vice versa) must
+        // fail layout validation, not silently serve garbage
+        let hr = tiny_cfg();
+        let hg = tiny_hg_cfg();
+        let hr_store = init_native_params(&hr, 0);
+        let hg_store = init_native_params(&hg, 0);
+        let err = NativeSession::with_params(hr.clone(), hg_store).unwrap_err();
+        assert!(err.to_string().contains("mismatch"), "{err}");
+        let err = NativeSession::with_params(hg, hr_store).unwrap_err();
+        assert!(err.to_string().contains("mismatch"), "{err}");
+        assert!(NativeSession::with_params(hr.clone(), init_native_params(&hr, 0)).is_ok());
     }
 
     #[test]
@@ -1757,10 +655,21 @@ mod tests {
     }
 
     #[test]
+    fn hgconv_streams_are_rejected_with_a_typed_reason() {
+        let sess = NativeSession::from_config(tiny_hg_cfg(), 3).unwrap();
+        let mut st = sess.stream_state(); // opening state is infallible
+        let mut sw = sess.stream_workspace(4);
+        let err = sess.stream_consume(&mut st, &mut sw, &[1, 2, 3]).unwrap_err();
+        assert!(err.to_string().contains("does not support streaming"), "{err}");
+        assert!(err.to_string().contains("hgconv"), "{err}");
+    }
+
+    #[test]
     fn out_of_range_ids_clamp_instead_of_panicking() {
-        let sess = NativeSession::from_config(tiny_cfg(), 2).unwrap();
-        let logits =
-            sess.predict(&Tensor::i32(vec![1, 3], vec![-5, 3, 9999])).unwrap();
-        assert!(logits.as_f32().unwrap().iter().all(|v| v.is_finite()));
+        for cfg in [tiny_cfg(), tiny_hg_cfg()] {
+            let sess = NativeSession::from_config(cfg, 2).unwrap();
+            let logits = sess.predict(&Tensor::i32(vec![1, 3], vec![-5, 3, 9999])).unwrap();
+            assert!(logits.as_f32().unwrap().iter().all(|v| v.is_finite()));
+        }
     }
 }

@@ -23,7 +23,7 @@ use hrrformer::coordinator::{self, BatchPolicy, TrainConfig};
 use hrrformer::data::mmap::{write_corpus, MmapCorpus};
 use hrrformer::data::{by_task, Split, Stream};
 use hrrformer::engine::{Backend, Engine};
-use hrrformer::hrr::HrrConfig;
+use hrrformer::hrr::{with_arch, Arch, HrrConfig};
 use hrrformer::net::{HttpConfig, HttpServer};
 use hrrformer::runtime::{default_manifest, Runtime};
 use hrrformer::stream::StreamConfig;
@@ -34,11 +34,12 @@ repro — Hrrformer reproduction coordinator
 
 USAGE:
   repro train --base <program base> [--backend artifact|native] [--steps N] [--seed S]
+              [--arch hrrformer|hgconv] [--dropout P] [--keep-artifacts N]
               [--eval-every N] [--eval-batches N] [--curve path.csv] [--ckpt path]
               [--emit-artifact path]
-  repro serve [--backend artifact|native] [--bases a,b,c] [--requests N]
-              [--max-batch B] [--max-wait-ms MS] [--queue-depth D] [--seed S]
-              [--workers K]
+  repro serve [--backend artifact|native] [--arch hrrformer|hgconv] [--bases a,b,c]
+              [--requests N] [--max-batch B] [--max-wait-ms MS] [--queue-depth D]
+              [--seed S] [--workers K]
   repro serve --stream [--stream-base BASE] [--requests N] [--chunk TOKENS]
               [--append-bytes N] [--seed S] [--workers K]
   repro serve --http [--addr HOST:PORT] [--http-secs S] [--http-drivers N]
@@ -47,11 +48,13 @@ USAGE:
               [--max-wait-ms MS] [--queue-depth D] [--seed S] [--workers K]
   repro bench ember     [--steps N] [--models a,b] [--timeout-s S]
   repro bench lra       [--steps N] [--models a,b] [--tasks t1,t2] [--curves]
+  repro bench lra --native [--steps N] [--tasks t1,t2] [--seq-len T] [--batch B]
+                        [--seed S] [--out BENCH_lra.json]
   repro bench speed     [--steps N]
   repro bench inference [--examples N] [--sweep-batch | --engine]
                         [--backend artifact|native]
   repro bench native    [--examples N] [--workers K] [--seed S]
-                        [--out BENCH_native.json]
+                        [--arch hrrformer|hgconv] [--out BENCH_native.json]
   repro bench stream    [--examples N] [--base BASE] [--chunks a,b,c]
                         [--seed S] [--out BENCH_native.json]
   repro bench http      [--addr HOST:PORT] [--clients N] [--requests N]
@@ -77,11 +80,25 @@ needs `make artifacts`; `native` is the pure-Rust path (rust/src/hrr) —
 no artifacts required, works on a fresh checkout. On `train`, native
 runs reverse-mode autodiff + Adam with the paper's LR decay through the
 same train→eval→checkpoint loop (--eval-every 0 = final eval only);
-gradients are bit-identical at any worker count. --emit-artifact
-(native only) writes a versioned weight artifact — a manifest
-(config hash, per-tensor checksums, training provenance) over the
-checkpoint payload — deployable into a running serve --http via
-POST /admin/reload with zero downtime.
+gradients are bit-identical at any worker count. --dropout P (native
+only) enables embedding/residual dropout inside train_step — eval and
+predict are untouched and the masked trajectory is reproducible from
+--seed. --emit-artifact (native only) writes a versioned weight
+artifact — a manifest (config hash, architecture, per-tensor checksums,
+training provenance) over the checkpoint payload — deployable into a
+running serve --http via POST /admin/reload with zero downtime;
+--keep-artifacts N prunes the artifact directory to the N newest
+.hrrart files afterwards (the just-emitted file is never pruned).
+
+--arch picks the native token mixer and rewrites the model token of
+--base/--bases accordingly: `hrrformer` (the paper's multi-head HRR
+attention) or `hgconv` (gated holographic global convolution). The two
+architectures train, serve and hot-reload through the same engine and
+HTTP surface; only hrrformer supports the streaming endpoints (hgconv
+streams answer a typed 409). Artifacts record their architecture and
+reloads reject a cross-architecture swap per bucket. bench lra --native
+trains + evals BOTH architectures across the five LRA loaders and
+writes the accuracy matrix to BENCH_lra.json.
 
 bench native times that native hot path directly (plan-cached FFTs,
 reusable workspaces) over the default EMBER bucket ladder under all
@@ -146,6 +163,7 @@ fn dispatch(args: &Args) -> Result<()> {
 
 fn cmd_train(args: &Args) -> Result<()> {
     let base = args.get("base").context("--base is required (see `repro inspect`)")?.to_string();
+    let base = apply_arch(parse_arch(args)?, &base)?;
     let cfg = TrainConfig {
         base,
         seed: args.u64("seed", 0),
@@ -155,6 +173,8 @@ fn cmd_train(args: &Args) -> Result<()> {
         curve_csv: args.get("curve").map(Into::into),
         ckpt: args.get("ckpt").map(Into::into),
         artifact: args.get("emit-artifact").map(Into::into),
+        dropout: args.f64("dropout", 0.0),
+        keep_artifacts: args.usize("keep-artifacts", 0),
         verbose: true,
     };
     let report = match parse_backend(args)? {
@@ -181,6 +201,30 @@ fn cmd_train(args: &Args) -> Result<()> {
     Ok(())
 }
 
+/// Parse `--arch` into the native architecture selector (None when the
+/// flag is absent — bases keep whatever model token they already carry).
+fn parse_arch(args: &Args) -> Result<Option<Arch>> {
+    match args.get("arch") {
+        None => Ok(None),
+        Some(s) => match Arch::parse(s) {
+            Some(a) => Ok(Some(a)),
+            None => bail!(
+                "--arch '{s}' is not a native architecture (expected one of: {})",
+                Arch::all().map(|a| a.as_str()).join(", ")
+            ),
+        },
+    }
+}
+
+/// Apply `--arch` to one program base: rewrite its model token, or pass
+/// the base through untouched when the flag is absent.
+fn apply_arch(arch: Option<Arch>, base: &str) -> Result<String> {
+    match arch {
+        Some(a) => with_arch(base, a),
+        None => Ok(base.to_string()),
+    }
+}
+
 /// Parse `--seed` as a real u32 exactly once — no silent `as u32` wrap —
 /// and thread the one validated value through `EngineBuilder`.
 fn parse_seed(args: &Args) -> Result<u32> {
@@ -205,7 +249,12 @@ fn cmd_serve(args: &Args) -> Result<()> {
         return cmd_serve_http(args);
     }
     let backend = parse_backend(args)?;
-    let bases = args.list("bases", &hrrformer::engine::DEFAULT_EMBER_BUCKETS);
+    let arch = parse_arch(args)?;
+    let bases = args
+        .list("bases", &hrrformer::engine::DEFAULT_EMBER_BUCKETS)
+        .iter()
+        .map(|b| apply_arch(arch, b))
+        .collect::<Result<Vec<_>>>()?;
     let n_requests = args.usize("requests", 64);
     let seed = parse_seed(args)?;
     eprintln!("[serve] building {} buckets ({backend:?} backend)…", bases.len());
@@ -264,7 +313,12 @@ fn cmd_serve(args: &Args) -> Result<()> {
 /// `POST /stream/{open,append,finish}`.
 fn cmd_serve_http(args: &Args) -> Result<()> {
     let backend = parse_backend(args)?;
-    let bases = args.list("bases", &hrrformer::engine::DEFAULT_EMBER_BUCKETS);
+    let arch = parse_arch(args)?;
+    let bases = args
+        .list("bases", &hrrformer::engine::DEFAULT_EMBER_BUCKETS)
+        .iter()
+        .map(|b| apply_arch(arch, b))
+        .collect::<Result<Vec<_>>>()?;
     let seed = parse_seed(args)?;
     eprintln!("[serve] building {} buckets ({backend:?} backend)…", bases.len());
     let mut builder = Engine::builder()
@@ -411,7 +465,6 @@ fn cmd_bench(args: &Args) -> Result<()> {
             bench::ember::run(&Runtime::cpu()?, &manifest, &cfg)?;
         }
         "lra" => {
-            let manifest = default_manifest()?;
             let mut cfg = bench::lra::LraBenchCfg::default();
             cfg.steps = args.usize("steps", cfg.steps);
             cfg.seed = args.u64("seed", cfg.seed);
@@ -422,6 +475,19 @@ fn cmd_bench(args: &Args) -> Result<()> {
             if args.get("tasks").is_some() {
                 cfg.tasks = args.list("tasks", &[]);
             }
+            // --native: pure-Rust train+eval across both architectures —
+            // no manifest, so this must short-circuit before
+            // default_manifest() can fail on a fresh checkout
+            if args.bool("native") {
+                cfg.native_seq_len = args.usize("seq-len", cfg.native_seq_len);
+                cfg.native_batch = args.usize("batch", cfg.native_batch);
+                if let Some(out) = args.get("out") {
+                    cfg.out = out.into();
+                }
+                bench::lra::run_native(&cfg)?;
+                return Ok(());
+            }
+            let manifest = default_manifest()?;
             bench::lra::run(&Runtime::cpu()?, &manifest, &cfg)?;
         }
         "speed" => {
@@ -460,6 +526,9 @@ fn cmd_bench(args: &Args) -> Result<()> {
             let mut cfg = bench::native::NativeBenchCfg::default();
             cfg.examples = args.usize("examples", cfg.examples);
             cfg.seed = args.u64("seed", cfg.seed);
+            if let Some(arch) = parse_arch(args)? {
+                cfg.arch = arch;
+            }
             // --workers (the engine-wide pool vocabulary) wins; --threads
             // stays as the PR 3 alias
             cfg.threads = args.usize("threads", cfg.threads);

@@ -165,6 +165,12 @@ pub struct ArtifactManifest {
     pub config_hash: u64,
     /// Canonical config description the hash covers (human-readable).
     pub config: String,
+    /// Architecture that produced (and can consume) the payload —
+    /// `"hrrformer"` or `"hgconv"`. Manifests written before the field
+    /// existed parse as `"hrrformer"` (the only architecture back then),
+    /// so legacy artifacts stay loadable. `Engine::reload` gates on
+    /// this: weights never cross architectures.
+    pub arch: String,
     pub payload_len: usize,
     pub payload_fnv: u64,
     pub tensors: Vec<TensorEntry>,
@@ -184,6 +190,7 @@ impl ArtifactManifest {
             schema_version: SCHEMA_VERSION,
             config_hash: fnv64(config.as_bytes()),
             config,
+            arch: cfg.arch.as_str().to_string(),
             payload_len: payload.len(),
             payload_fnv: fnv64(payload),
             tensors: params
@@ -244,6 +251,7 @@ impl ArtifactManifest {
                 ("schema_version".to_string(), Json::Num(self.schema_version as f64)),
                 ("config_hash".to_string(), Json::Str(format!("{:016x}", self.config_hash))),
                 ("config".to_string(), Json::Str(self.config.clone())),
+                ("arch".to_string(), Json::Str(self.arch.clone())),
                 ("payload_len".to_string(), Json::Num(self.payload_len as f64)),
                 ("payload_fnv".to_string(), Json::Str(format!("{:016x}", self.payload_fnv))),
                 ("tensors".to_string(), Json::Arr(tensors)),
@@ -277,6 +285,13 @@ impl ArtifactManifest {
         let config = field("config")?
             .as_str()
             .ok_or_else(|| ArtifactError::Manifest("'config' must be a string".into()))?
+            .to_string();
+        // pre-arch manifests (schema 1, PR 8 and earlier) could only
+        // have been written by the Hrrformer
+        let arch = doc
+            .get("arch")
+            .and_then(Json::as_str)
+            .unwrap_or("hrrformer")
             .to_string();
         let payload_len = field("payload_len")?
             .as_usize()
@@ -332,6 +347,7 @@ impl ArtifactManifest {
             schema_version,
             config_hash,
             config,
+            arch,
             payload_len,
             payload_fnv,
             tensors,
@@ -350,8 +366,10 @@ fn dtype_str(d: DType) -> &'static str {
 
 /// Canonical one-line config description the manifest's `config_hash`
 /// covers. Excludes `batch` — the same weights serve any batch shape.
+/// The architecture token is appended **only** for non-default
+/// architectures, so every Hrrformer hash ever written stays stable.
 pub fn canonical_config(cfg: &HrrConfig) -> String {
-    format!(
+    let mut desc = format!(
         "task={} vocab={} seq_len={} embed={} mlp_dim={} heads={} layers={} classes={} \
          learned_pos={}",
         cfg.task,
@@ -363,7 +381,11 @@ pub fn canonical_config(cfg: &HrrConfig) -> String {
         cfg.layers,
         cfg.classes,
         cfg.learned_pos
-    )
+    );
+    if cfg.arch != crate::hrr::Arch::Hrrformer {
+        desc.push_str(&format!(" arch={}", cfg.arch));
+    }
+    desc
 }
 
 /// A verified artifact: manifest + the parameters decoded from its
@@ -515,9 +537,11 @@ impl Artifact {
 mod tests {
     use super::*;
     use crate::hrr::model::init_native_params;
+    use crate::hrr::Arch;
 
     fn tiny_cfg() -> HrrConfig {
         HrrConfig {
+            arch: Arch::Hrrformer,
             task: "test".into(),
             vocab: 9,
             seq_len: 6,
@@ -574,6 +598,38 @@ mod tests {
         assert_eq!(art.manifest, manifest);
         assert!(Artifact::sniff(&bytes));
         assert!(!Artifact::sniff(b"{\"path\": \"x\"}"));
+    }
+
+    #[test]
+    fn arch_is_recorded_and_defaults_for_legacy_manifests() {
+        let cfg = tiny_cfg();
+        let params = init_native_params(&cfg, 1);
+        let (bytes, manifest) = Artifact::to_bytes(&cfg, &params, prov()).unwrap();
+        assert_eq!(manifest.arch, "hrrformer");
+        // hrrformer hashes predate the arch token: the canonical line
+        // must not grow one, or every existing hash would shift
+        assert!(!manifest.config.contains("arch="));
+
+        let hg = HrrConfig { arch: Arch::HgConv, ..tiny_cfg() };
+        let hgp = init_native_params(&hg, 1);
+        let (_, hgm) = Artifact::to_bytes(&hg, &hgp, prov()).unwrap();
+        assert_eq!(hgm.arch, "hgconv");
+        assert!(hgm.config.contains(" arch=hgconv"));
+        assert_ne!(hgm.config_hash, manifest.config_hash);
+
+        // a manifest without the arch key (written before the field
+        // existed) parses as hrrformer
+        let mlen = u32::from_le_bytes(bytes[8..12].try_into().unwrap()) as usize;
+        let manifest_json = String::from_utf8(bytes[12..12 + mlen].to_vec()).unwrap();
+        let legacy = manifest_json.replacen("\"arch\":\"hrrformer\",", "", 1);
+        assert_ne!(legacy, manifest_json, "serialized manifest must carry the arch key");
+        let mut doc = Vec::new();
+        doc.extend_from_slice(ARTIFACT_MAGIC);
+        doc.extend_from_slice(&(legacy.len() as u32).to_le_bytes());
+        doc.extend_from_slice(legacy.as_bytes());
+        doc.extend_from_slice(&bytes[12 + mlen..]);
+        let art = Artifact::open_bytes(&doc).unwrap();
+        assert_eq!(art.manifest.arch, "hrrformer");
     }
 
     #[test]

@@ -10,9 +10,11 @@
 
 pub mod artifact;
 pub mod params;
+pub mod registry;
 pub mod session;
 
 pub use artifact::{Artifact, ArtifactError, ArtifactManifest, Provenance};
+pub use registry::prune_keep_last;
 pub use params::ParamStore;
 pub use session::{
     init_params, PredictSession, Predictor, ProgramHandle, Session, StepStats, Trainable,

@@ -1,0 +1,102 @@
+//! Artifact retention: keep-last-N pruning over a results directory.
+//!
+//! Training runs that emit one `.hrrart` artifact per run (the trainer's
+//! `--emit-artifact`, `repro bench lra --native`, ad-hoc `train`
+//! invocations) accumulate weight files forever. [`prune_keep_last`]
+//! bounds that: it scans a directory for artifact files, keeps the `keep`
+//! newest (modification time, then name, descending — so same-second
+//! writes still order deterministically), and deletes the rest.
+//!
+//! Two hard safety rules:
+//!
+//! * `keep == 0` means *unlimited* — the helper refuses to interpret
+//!   zero as "delete everything";
+//! * paths in `protected` are never deleted regardless of age — the
+//!   caller passes whatever the engine is currently serving, so pruning
+//!   can never yank a live version out from under a reload/rollback.
+
+use std::path::{Path, PathBuf};
+use std::time::SystemTime;
+
+use anyhow::{Context, Result};
+
+/// File extension the registry manages. Everything else in the
+/// directory (benchmark JSON, logs, checkpoints with other suffixes) is
+/// invisible to pruning.
+pub const ARTIFACT_EXT: &str = "hrrart";
+
+/// Delete all but the `keep` newest `.hrrart` artifacts in `dir`,
+/// never touching `protected` paths. Returns the paths actually
+/// deleted (empty when `keep == 0`, when the directory holds at most
+/// `keep` artifacts, or when `dir` does not exist yet).
+pub fn prune_keep_last(dir: &Path, keep: usize, protected: &[PathBuf]) -> Result<Vec<PathBuf>> {
+    if keep == 0 || !dir.is_dir() {
+        return Ok(Vec::new());
+    }
+    let protected: Vec<PathBuf> =
+        protected.iter().map(|p| p.canonicalize().unwrap_or_else(|_| p.clone())).collect();
+    let mut entries: Vec<(SystemTime, PathBuf)> = Vec::new();
+    for entry in std::fs::read_dir(dir).with_context(|| format!("scan {}", dir.display()))? {
+        let entry = entry?;
+        let path = entry.path();
+        if !path.is_file() || path.extension().and_then(|e| e.to_str()) != Some(ARTIFACT_EXT) {
+            continue;
+        }
+        let mtime = entry.metadata()?.modified().unwrap_or(SystemTime::UNIX_EPOCH);
+        entries.push((mtime, path));
+    }
+    // newest first; ties broken by name so the order is total
+    entries.sort_by(|a, b| b.0.cmp(&a.0).then_with(|| b.1.cmp(&a.1)));
+    let mut deleted = Vec::new();
+    for (_, path) in entries.into_iter().skip(keep) {
+        let canon = path.canonicalize().unwrap_or_else(|_| path.clone());
+        if protected.contains(&canon) {
+            continue;
+        }
+        std::fs::remove_file(&path).with_context(|| format!("prune {}", path.display()))?;
+        deleted.push(path);
+    }
+    Ok(deleted)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn touch(dir: &Path, name: &str) -> PathBuf {
+        let p = dir.join(name);
+        std::fs::write(&p, name.as_bytes()).unwrap();
+        p
+    }
+
+    #[test]
+    fn keeps_newest_skips_protected_and_ignores_other_files() {
+        let dir = std::env::temp_dir().join("hrrformer_registry_prune_test");
+        let _ = std::fs::remove_dir_all(&dir);
+        std::fs::create_dir_all(&dir).unwrap();
+        // same mtime second is likely for all five — the name tiebreak
+        // (descending) makes the survivor set deterministic anyway
+        let a = touch(&dir, "run_a.hrrart");
+        let _b = touch(&dir, "run_b.hrrart");
+        let _c = touch(&dir, "run_c.hrrart");
+        let d = touch(&dir, "run_d.hrrart");
+        let e = touch(&dir, "run_e.hrrart");
+        let json = touch(&dir, "BENCH_lra.json");
+
+        // keep=0 is "unlimited", not "delete everything"
+        assert!(prune_keep_last(&dir, 0, &[]).unwrap().is_empty());
+        assert_eq!(std::fs::read_dir(&dir).unwrap().count(), 6);
+
+        // keep the 2 newest, but `a` (oldest name) is pinned as served
+        let deleted = prune_keep_last(&dir, 2, &[a.clone()]).unwrap();
+        assert_eq!(deleted.len(), 2, "five artifacts, keep 2, one protected");
+        assert!(a.exists(), "the served artifact must survive pruning");
+        assert!(d.exists() && e.exists(), "newest two (by name tiebreak) survive");
+        assert!(json.exists(), "non-artifact files are invisible to the registry");
+        assert!(deleted.iter().all(|p| !p.exists()));
+
+        // a directory that does not exist yet is not an error
+        let missing = dir.join("nope");
+        assert!(prune_keep_last(&missing, 3, &[]).unwrap().is_empty());
+    }
+}

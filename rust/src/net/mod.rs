@@ -338,6 +338,10 @@ pub fn status_for(e: &EngineError) -> u16 {
         EngineError::Stream(StreamError::Finished(_)) => 409,
         EngineError::Stream(StreamError::Evicted(_)) => 410,
         EngineError::Stream(StreamError::Capacity { .. }) => 429,
+        // the deployment's architecture has no streaming kernel: the
+        // request conflicts with what the serving bucket *is*, so the
+        // client gets the arch name back, not an opaque 500
+        EngineError::Stream(StreamError::NotStreamable { .. }) => 409,
         EngineError::Stream(StreamError::Internal(_)) => 500,
     }
 }
@@ -514,15 +518,17 @@ fn admin_reload(ctx: &ServeCtx, body: &[u8]) -> Response {
     };
     let report = ctx.client.reload(&artifact);
     // No bucket accepted the weights — structurally valid JSON+payload,
-    // but the wrong shape for every configured bucket. 409 tells the
-    // deployer the engine is still on the old version.
+    // but the wrong shape (or wrong architecture) for every configured
+    // bucket. 409 tells the deployer the engine is still on the old
+    // version.
     let status = if report.buckets.is_empty() { 409 } else { 200 };
-    Response::json(status, reload_doc(&report))
+    Response::json(status, reload_doc(&report, &artifact.manifest.arch))
 }
 
-fn reload_doc(rep: &ReloadReport) -> Json {
+fn reload_doc(rep: &ReloadReport, arch: &str) -> Json {
     obj(vec![
         ("version", Json::Num(rep.version as f64)),
+        ("arch", Json::Str(arch.to_string())),
         ("buckets", Json::Arr(rep.buckets.iter().map(|b| Json::Str(b.clone())).collect())),
         (
             "rejected",
@@ -553,6 +559,18 @@ fn metrics(ctx: &ServeCtx) -> Response {
             })
             .collect(),
     );
+    // architecture identity per serving bucket: a deploy watching
+    // /metrics can tell a hrrformer ladder from an hgconv one without
+    // inspecting artifacts
+    let archs = Json::Arr(
+        ctx.client
+            .bucket_archs()
+            .into_iter()
+            .map(|(base, arch)| {
+                obj(vec![("bucket", Json::Str(base)), ("arch", Json::Str(arch))])
+            })
+            .collect(),
+    );
     let engine = obj(vec![
         (
             "latency_ms",
@@ -567,6 +585,7 @@ fn metrics(ctx: &ServeCtx) -> Response {
         ("throughput_per_s", Json::Num(es.throughput.per_second())),
         ("rejected", Json::Num(es.rejected.load(Ordering::Relaxed) as f64)),
         ("queue_depths", depths),
+        ("buckets", archs),
         ("model_version", Json::Num(ctx.client.model_version() as f64)),
     ]);
     let pool = match &ctx.pool {
@@ -612,6 +631,12 @@ mod tests {
             429
         );
         assert_eq!(status_for(&EngineError::Stream(StreamError::Internal("x".into()))), 500);
+        // a stream request against a non-streaming architecture is a
+        // conflict with the deployment, not a server fault
+        let e = EngineError::Stream(StreamError::NotStreamable { arch: "hgconv".into() });
+        assert_eq!(status_for(&e), 409);
+        let body = Response::error(status_for(&e), &e).body;
+        assert!(body.contains("hgconv"), "409 body must name the architecture: {body}");
     }
 
     #[test]

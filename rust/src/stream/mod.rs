@@ -109,6 +109,7 @@ mod tests {
 
     fn tiny_session() -> NativeSession {
         let cfg = HrrConfig {
+            arch: crate::hrr::Arch::Hrrformer,
             task: "test".into(),
             vocab: 11,
             seq_len: 24,

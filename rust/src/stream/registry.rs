@@ -73,6 +73,10 @@ pub enum StreamError {
     Evicted(u64),
     /// Registry is at `max_streams` open streams.
     Capacity { open: usize, max: usize },
+    /// The bucket's architecture has no chunked streaming forward
+    /// (e.g. HGConv's global convolution needs the whole row) — a
+    /// client error, not a server fault.
+    NotStreamable { arch: String },
     /// Kernel / IO failure underneath the lifecycle layer.
     Internal(String),
 }
@@ -85,6 +89,9 @@ impl fmt::Display for StreamError {
             StreamError::Evicted(id) => write!(f, "stream {id} was evicted after idle timeout"),
             StreamError::Capacity { open, max } => {
                 write!(f, "stream capacity reached ({open}/{max} open)")
+            }
+            StreamError::NotStreamable { arch } => {
+                write!(f, "architecture '{arch}' does not support streaming")
             }
             StreamError::Internal(msg) => write!(f, "stream internal error: {msg}"),
         }
@@ -205,6 +212,12 @@ impl StreamRegistry {
         scheduler: RowScheduler,
         cfg: StreamConfig,
     ) -> Result<StreamRegistry, StreamError> {
+        // Gate at construction: a registry over a non-streaming
+        // architecture could never serve a single stream, so fail when
+        // the bucket is stood up, not on the first `open`.
+        if !sess.cfg().arch.streamable() {
+            return Err(StreamError::NotStreamable { arch: sess.cfg().arch.to_string() });
+        }
         if cfg.chunk_cap == 0 {
             return Err(StreamError::Internal("chunk_cap must be ≥ 1".into()));
         }
@@ -375,6 +388,7 @@ mod tests {
 
     fn tiny_session() -> NativeSession {
         let cfg = HrrConfig {
+            arch: crate::hrr::Arch::Hrrformer,
             task: "test".into(),
             vocab: 257,
             seq_len: 32,
@@ -463,6 +477,20 @@ mod tests {
         assert_eq!(evicted, vec![id]);
         assert_eq!(reg.open_count(), 0);
         assert_eq!(reg.append(id, b"x"), Err(StreamError::Evicted(id)));
+    }
+
+    #[test]
+    fn non_streaming_architectures_are_rejected_at_construction() {
+        let cfg = HrrConfig {
+            arch: crate::hrr::Arch::HgConv,
+            ..tiny_session().cfg().clone()
+        };
+        let sess = NativeSession::from_config(cfg, 11).unwrap();
+        let err = StreamRegistry::new(sess, RowScheduler::Sequential, test_cfg("hgconv"))
+            .err()
+            .expect("hgconv registry must be refused");
+        assert_eq!(err, StreamError::NotStreamable { arch: "hgconv".into() });
+        assert!(err.to_string().contains("does not support streaming"));
     }
 
     #[test]

@@ -10,6 +10,9 @@
 //!   the new version;
 //! * a structurally mismatched artifact is rejected by every bucket and
 //!   leaves the engine serving the old version untouched;
+//! * an artifact from the *other architecture* is rejected per bucket
+//!   with a typed "architecture mismatch" reason — shape equality is not
+//!   enough to swap an hgconv checkpoint into an hrrformer bucket;
 //! * a corrupted artifact file fails checksum verification before the
 //!   engine is ever involved.
 
@@ -127,6 +130,46 @@ fn reload_under_fire_is_zero_downtime() {
     let out = engine.finish_stream(late_stream).unwrap();
     assert_eq!(out.model_version, 2);
 
+    engine.stop();
+}
+
+#[test]
+fn cross_architecture_reloads_are_rejected_with_a_typed_reason() {
+    let engine = Engine::builder()
+        .buckets([PREDICT_BASE])
+        .policy(BatchPolicy { max_batch: 4, max_wait: Duration::from_millis(2) })
+        .queue_depth(16)
+        .seed(5)
+        .backend(Backend::Native)
+        .build_native()
+        .unwrap();
+    assert_eq!(engine.model_version(), 1);
+
+    // an hgconv artifact on the same preset row — the shared tensors
+    // (embedding, LN, MLP, head) have identical shapes, so only the
+    // arch gate stands between it and the hrrformer bucket
+    let hg_cfg = HrrConfig::from_base("ember_hgconv_small_T64_B4").unwrap();
+    let path = tmp("hgconv_v1.hrrart");
+    write_artifact_for(&path, &hg_cfg, 13);
+    let art = Artifact::open(&path).unwrap();
+    assert_eq!(art.manifest.arch, "hgconv", "manifests record their architecture");
+
+    let report = engine.reload(&art);
+    assert!(report.buckets.is_empty(), "no hrrformer bucket may accept hgconv weights");
+    assert_eq!(report.version, 1, "rejected reload must not advance the version");
+    assert_eq!(report.rejected.len(), 1);
+    assert_eq!(report.rejected[0].0, PREDICT_BASE);
+    let reason = &report.rejected[0].1;
+    assert!(reason.contains("architecture mismatch"), "untyped reason: {reason}");
+    assert!(
+        reason.contains("hgconv") && reason.contains("hrrformer"),
+        "the reason must name both architectures: {reason}"
+    );
+
+    // the engine still serves, on the original hrrformer weights
+    let reply = engine.submit_wait(request_ids(7)).unwrap().wait().unwrap();
+    assert_eq!(reply.model_version, 1);
+    assert!(reply.logits.iter().all(|v| v.is_finite()));
     engine.stop();
 }
 

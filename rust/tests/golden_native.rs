@@ -1,24 +1,33 @@
 //! Golden-vector parity: the native pure-Rust forward pass must match
 //! the Python reference (python/compile/export_golden.py, a numpy-exact
 //! mirror of model.py + kernels/ref.py) within 1e-4 on checked-in
-//! fixtures. One fixture runs the radix-2 FFT path (power-of-two head
-//! dim, fixed sinusoid positions), the other the naive-DFT fallback
-//! (non-power-of-two head dim, learned positions) — both with PAD
-//! masking in play.
+//! fixtures. For the hrrformer, one fixture runs the radix-2 FFT path
+//! (power-of-two head dim, fixed sinusoid positions), the other the
+//! naive-DFT fallback (non-power-of-two head dim, learned positions) —
+//! both with PAD masking in play. The hgconv fixtures pin the second
+//! architecture (gated holographic global convolution) against its own
+//! numpy reference, including a short-row case where the causal filter
+//! is truncated (t < filter_len).
 //!
 //! Always runs: no artifacts, no PJRT, no skips.
 
-use hrrformer::hrr::{HrrConfig, NativeSession};
+use hrrformer::hrr::{Arch, HrrConfig, NativeSession};
 use hrrformer::model::ParamStore;
 use hrrformer::runtime::Tensor;
 use hrrformer::util::json::Json;
 
 /// Parse one exported fixture into (config, params, ids, want, tol).
+/// Fixtures predating the architecture split carry no `"arch"` key and
+/// parse as hrrformer — the same legacy default artifacts get.
 fn load_fixture(text: &str) -> (HrrConfig, ParamStore, Tensor, Vec<Vec<f64>>, f64) {
     let j = Json::parse(text).expect("fixture json parses");
     let cfgj = j.get("config").expect("config");
     let u = |k: &str| cfgj.get(k).and_then(Json::as_usize).unwrap_or_else(|| panic!("config.{k}"));
     let cfg = HrrConfig {
+        arch: cfgj
+            .get("arch")
+            .and_then(Json::as_str)
+            .map_or(Arch::Hrrformer, |s| Arch::parse(s).expect("config.arch")),
         task: cfgj.get("task").and_then(Json::as_str).unwrap_or("golden").to_string(),
         vocab: u("vocab"),
         seq_len: u("seq_len"),
@@ -107,10 +116,23 @@ fn native_forward_matches_python_reference_naive_dft_path() {
 }
 
 #[test]
+fn native_forward_matches_python_reference_hgconv() {
+    check_fixture(include_str!("fixtures/golden_hgconv.json"), "golden_hgconv");
+}
+
+#[test]
+fn native_forward_matches_python_reference_hgconv_short_rows() {
+    // seq_len < filter_len: the per-row causal filter truncation path
+    check_fixture(include_str!("fixtures/golden_hgconv_short.json"), "golden_hgconv_short");
+}
+
+#[test]
 fn golden_fixtures_cover_both_fft_paths_and_padding() {
     let (cfg_a, _, ids_a, _, _) = load_fixture(include_str!("fixtures/golden_hrr_fixed.json"));
     assert!(cfg_a.head_dim().is_power_of_two(), "fixture A pins the radix-2 path");
     assert!(!cfg_a.learned_pos);
+    // legacy fixtures carry no "arch" key and must default to hrrformer
+    assert_eq!(cfg_a.arch, Arch::Hrrformer);
     let (cfg_b, _, ids_b, _, _) = load_fixture(include_str!("fixtures/golden_hrr_learned.json"));
     assert!(!cfg_b.head_dim().is_power_of_two(), "fixture B pins the naive-DFT fallback");
     assert!(cfg_b.learned_pos);
@@ -120,4 +142,12 @@ fn golden_fixtures_cover_both_fft_paths_and_padding() {
         assert!(data.iter().any(|&v| v == 0), "fixture {label} has PAD tokens");
         assert!(data.iter().any(|&v| v != 0), "fixture {label} has real tokens");
     }
+    // the hgconv fixtures name their architecture explicitly and cover
+    // both the truncated (t < filter_len) and full-filter regimes
+    let (cfg_c, _, ids_c, _, _) = load_fixture(include_str!("fixtures/golden_hgconv.json"));
+    assert_eq!(cfg_c.arch, Arch::HgConv);
+    assert!(ids_c.as_i32().unwrap().iter().any(|&v| v == 0), "hgconv fixture has PAD");
+    let (cfg_d, _, _, _, _) = load_fixture(include_str!("fixtures/golden_hgconv_short.json"));
+    assert_eq!(cfg_d.arch, Arch::HgConv);
+    assert!(cfg_d.seq_len < cfg_c.seq_len, "short fixture pins filter truncation");
 }

@@ -29,6 +29,10 @@ fn load_fixture(text: &str) -> TrainFixture {
     let cfgj = j.get("config").expect("config");
     let u = |k: &str| cfgj.get(k).and_then(Json::as_usize).unwrap_or_else(|| panic!("config.{k}"));
     let cfg = HrrConfig {
+        // train fixtures predate the architecture split: hrrformer, the
+        // legacy default (they double as the bit-identity regression gate
+        // for the refactor)
+        arch: hrrformer::hrr::Arch::Hrrformer,
         task: cfgj.get("task").and_then(Json::as_str).unwrap_or("golden").to_string(),
         vocab: u("vocab"),
         seq_len: u("seq_len"),

@@ -32,6 +32,8 @@ fn trainer_reduces_loss_and_writes_curve_and_ckpt() {
         curve_csv: Some(curve.clone()),
         ckpt: Some(ckpt.clone()),
         artifact: None,
+        dropout: 0.0,
+        keep_artifacts: 0,
         verbose: false,
     };
     let report = train(&rt, &manifest, &cfg).unwrap();
@@ -69,6 +71,8 @@ fn native_trainer_runs_the_full_loop_artifact_free() {
         curve_csv: Some(curve.clone()),
         ckpt: Some(ckpt.clone()),
         artifact: None,
+        dropout: 0.0,
+        keep_artifacts: 0,
         verbose: false,
     };
     let report = train_native(&cfg).unwrap();
@@ -96,6 +100,47 @@ fn native_trainer_runs_the_full_loop_artifact_free() {
         .predict(&hrrformer::runtime::Tensor::i32(vec![1, 8], vec![1, 2, 3, 4, 5, 6, 7, 8]))
         .unwrap();
     assert!(logits.as_f32().unwrap().iter().all(|v| v.is_finite()));
+}
+
+#[test]
+fn native_trainer_covers_hgconv_dropout_and_artifact_retention() {
+    // the second architecture through the same loop, with dropout on and
+    // keep-last-N retention wired — still artifact-backend-free
+    let dir = std::env::temp_dir().join("hrrformer_native_train_hgconv_it");
+    let _ = std::fs::remove_dir_all(&dir);
+    std::fs::create_dir_all(&dir).unwrap();
+    // stale artifacts from "previous runs" that retention should bound
+    std::fs::write(dir.join("old_1.hrrart"), b"stale").unwrap();
+    std::fs::write(dir.join("old_2.hrrart"), b"stale").unwrap();
+
+    let artifact = dir.join("hgconv.hrrart");
+    let cfg = TrainConfig {
+        base: "listops_hgconv_small_T16_B2".into(),
+        seed: 5,
+        steps: 4,
+        eval_every: 0,
+        eval_batches: 1,
+        curve_csv: None,
+        ckpt: None,
+        artifact: Some(artifact.clone()),
+        dropout: 0.25,
+        keep_artifacts: 1,
+        verbose: false,
+    };
+    let report = train_native(&cfg).unwrap();
+    assert!(report.curve.iter().all(|p| p.train_loss.is_finite()), "{:?}", report.curve);
+
+    // the emitted artifact survives pruning and records its architecture
+    let art = hrrformer::model::Artifact::open(&artifact).unwrap();
+    assert_eq!(art.manifest.arch, "hgconv");
+    assert_eq!(art.manifest.provenance.base, "listops_hgconv_small_T16_B2");
+    let left = std::fs::read_dir(&dir)
+        .unwrap()
+        .filter(|e| {
+            e.as_ref().unwrap().path().extension().and_then(|x| x.to_str()) == Some("hrrart")
+        })
+        .count();
+    assert!(left <= 2, "retention must delete stale artifacts: {left} left");
 }
 
 #[test]

@@ -151,6 +151,7 @@ fn multithreaded_predict_is_bit_identical_to_single_threaded() {
     ];
     for (label, embed, heads, learned_pos) in configs {
         let cfg = HrrConfig {
+            arch: hrrformer::hrr::Arch::Hrrformer,
             task: "test".into(),
             vocab: 32,
             seq_len: 24,

@@ -27,6 +27,8 @@ fn load_fixture(text: &str) -> (HrrConfig, ParamStore, Vec<Vec<i32>>) {
     let cfgj = j.get("config").expect("config");
     let u = |k: &str| cfgj.get(k).and_then(Json::as_usize).unwrap_or_else(|| panic!("config.{k}"));
     let cfg = HrrConfig {
+        // streaming is hrrformer-only (the golden fixtures are too)
+        arch: hrrformer::hrr::Arch::Hrrformer,
         task: cfgj.get("task").and_then(Json::as_str).unwrap_or("golden").to_string(),
         vocab: u("vocab"),
         seq_len: u("seq_len"),
@@ -233,6 +235,21 @@ fn stream_calls_without_a_stream_bucket_are_typed_unavailable() {
     assert_eq!(engine.append_stream(0, &b"x"[..]), Err(EngineError::StreamUnavailable));
     assert_eq!(engine.finish_stream(0), Err(EngineError::StreamUnavailable));
     engine.stop();
+}
+
+#[test]
+fn hgconv_stream_buckets_fail_at_engine_build_naming_the_arch() {
+    // streaming is an architecture capability; a misconfigured hgconv
+    // stream bucket must fail loudly at build time, not at first open
+    let err = Engine::builder()
+        .stream_bucket("ember_hgconv_small_T64_B1")
+        .stream_config(test_stream_cfg("hgconv_reject"))
+        .seed(SEED)
+        .build_native()
+        .unwrap_err();
+    let msg = format!("{err:#}");
+    assert!(msg.contains("does not support streaming"), "untyped build error: {msg}");
+    assert!(msg.contains("hgconv"), "the error must name the architecture: {msg}");
 }
 
 #[test]

@@ -108,6 +108,34 @@ if ! [[ "$final_loss" =~ ^-?[0-9]+(\.[0-9]+)?$ ]]; then
     exit 1
 fi
 
+# Second-architecture training smoke: the same job re-aimed at hgconv
+# via --arch (which rewrites the base's model token), with training
+# dropout on — eval/predict are dropout-free, so the loss stays finite
+# and the curve CSV well-formed exactly like the hrrformer smoke.
+rm -f results/verify_train_hgconv.csv
+run env HRRFORMER_ARTIFACTS=/hrrformer-no-artifacts \
+    cargo run --release -- train --base listops_hrrformer_small_T32_B4 --arch hgconv \
+    --backend native --steps 4 --eval-every 2 --eval-batches 1 --dropout 0.1 \
+    --curve results/verify_train_hgconv.csv
+final_loss=$(awk -F, 'NR>1 {v=$2} END {print v}' results/verify_train_hgconv.csv)
+if ! [[ "$final_loss" =~ ^-?[0-9]+(\.[0-9]+)?$ ]]; then
+    echo "verify: FAIL — hgconv train smoke ended with a non-finite loss ('${final_loss:-missing}')" >&2
+    exit 1
+fi
+
+# Native LRA matrix smoke: `bench lra --native` must train + eval BOTH
+# architectures across the five LRA loaders (tiny shapes/steps here)
+# and write an accuracy matrix keyed by architecture to BENCH_lra.json.
+rm -f BENCH_lra.json
+run env HRRFORMER_ARTIFACTS=/hrrformer-no-artifacts \
+    cargo run --release -- bench lra --native --steps 2 --seq-len 32 --batch 2
+for key in '"hrrformer"' '"hgconv"' '"lra_native"'; do
+    if ! grep -q "$key" BENCH_lra.json; then
+        echo "verify: FAIL — BENCH_lra.json is missing the $key key" >&2
+        exit 1
+    fi
+done
+
 # Hot-reload smoke (artifact-free): train a deployable weight artifact
 # (`train --emit-artifact`), stand the HTTP server back up on the
 # matching-T bucket, flip it live with `POST /admin/reload`, and require
@@ -162,6 +190,41 @@ kill "$serve_pid" 2>/dev/null || true
 wait "$serve_pid" 2>/dev/null || true
 if ! grep -q '"model_version":2' <<<"$metrics_reply"; then
     echo "verify: FAIL — /metrics does not report model_version 2 after reload: ${metrics_reply}" >&2
+    exit 1
+fi
+
+# Second-architecture serving smoke: the same HTTP front door on an
+# hgconv bucket (--arch rewrites the default base), driven by the real
+# closed-loop client; /metrics must echo the bucket's architecture.
+env HRRFORMER_ARTIFACTS=/hrrformer-no-artifacts \
+    cargo run --release -- serve --http --backend native --arch hgconv \
+    --bases ember_hrrformer_small_T64_B8 --queue-depth 4 \
+    --addr 127.0.0.1:${http_port} --http-secs 20 &
+serve_pid=$!
+ready=0
+for _ in $(seq 1 75); do
+    if (exec 3<>"/dev/tcp/127.0.0.1/${http_port}") 2>/dev/null; then
+        ready=1
+        break
+    fi
+    sleep 0.2
+done
+if [[ $ready -ne 1 ]]; then
+    echo "verify: FAIL — serve --http --arch hgconv never started listening on :${http_port}" >&2
+    kill "$serve_pid" 2>/dev/null || true
+    exit 1
+fi
+run env HRRFORMER_ARTIFACTS=/hrrformer-no-artifacts \
+    cargo run --release -- bench http --addr 127.0.0.1:${http_port} \
+    --clients 1 --requests 4 --overload-clients 2 --overload-requests 2 --req-len 48
+exec 3<>"/dev/tcp/127.0.0.1/${http_port}"
+printf 'GET /metrics HTTP/1.1\r\nHost: v\r\nConnection: close\r\n\r\n' >&3
+metrics_reply=$(cat <&3)
+exec 3<&- 3>&-
+kill "$serve_pid" 2>/dev/null || true
+wait "$serve_pid" 2>/dev/null || true
+if ! grep -q '"arch":"hgconv"' <<<"$metrics_reply"; then
+    echo "verify: FAIL — /metrics does not echo the hgconv bucket architecture: ${metrics_reply}" >&2
     exit 1
 fi
 
