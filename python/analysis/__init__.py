@@ -1,0 +1,1 @@
+"""Static-analysis mirror of `rust/src/analysis/` (see hrrlint.py)."""

@@ -1,0 +1,974 @@
+#!/usr/bin/env python3
+"""hrrlint — zero-dependency project-invariant linter for rust/src/.
+
+Faithful Python transcription of the Rust implementation in
+`rust/src/analysis/` (lexer.rs / rules.rs / baseline.rs), so the gate
+runs in containers without a Rust toolchain.  The two runners must
+produce byte-identical `--json` output on the same tree; the parity
+test pins this on the fixture set under rust/tests/lint_fixtures/.
+
+Rules (all token-level, never fire inside strings or comments):
+
+  panic-path        unwrap()/expect()/panic!/unreachable! on serving-path
+                    modules (engine/, net/, stream/, model/, hrr/) outside
+                    #[cfg(test)].
+  wallclock-kernel  Instant::now / SystemTime in deterministic kernel code
+                    (hrr/common/, hrr/hrrformer/, hrr/hgconv/).
+  hash-iter-accum   HashMap/HashSet iteration feeding an accumulation
+                    (iteration order is nondeterministic).
+  f32-accum-kernel  f32 `+=` accumulation in a loop inside kernel files
+                    (the bit-identical-logits discipline mandates f64
+                    accumulators).
+  unbounded-channel unbounded channel() where the engine mandates
+                    sync_channel (engine/, stream/, net/, coordinator/).
+  narrow-cast-wire  `as usize` / `as u32` narrowing casts in wire-facing
+                    code (net/, util/json.rs) — use checked conversions.
+  lock-order        ParamSlot lock and ReloadHub mutex nested in one
+                    function body (canonical order: hub -> slot; see the
+                    module comment in engine/mod.rs).
+  debug-macro       todo!/dbg!/println! outside main.rs, bench/, bin/.
+
+Suppression: a comment containing `hrrlint: allow(rule-a, rule-b)`
+suppresses those rules on the comment's own line and the line below.
+
+Ratchet: findings are matched against lint_baseline.json, keyed by
+(file, rule, FNV-1a-64 content hash) — not line numbers, so unrelated
+edits don't churn the baseline.  Any finding not covered by the
+baseline fails the run (exit 1).  `--update-baseline` rewrites the
+baseline from the current tree.
+
+Exit codes: 0 clean, 1 new findings, 2 usage/IO error.
+"""
+
+import os
+import sys
+
+RULES = [
+    "panic-path",
+    "wallclock-kernel",
+    "hash-iter-accum",
+    "f32-accum-kernel",
+    "unbounded-channel",
+    "narrow-cast-wire",
+    "lock-order",
+    "debug-macro",
+]
+
+BASELINE_VERSION = 1
+
+# ---------------------------------------------------------------------------
+# Lexer
+# ---------------------------------------------------------------------------
+#
+# Token kinds: "ident", "num", "str", "char", "life", "punct".
+# Comments are collected separately (for `hrrlint: allow(...)` markers)
+# and never appear in the token stream.  The only multi-char punct
+# tokens are `::` and `+=`; everything else is a single character.
+
+IDENT_START = set("abcdefghijklmnopqrstuvwxyzABCDEFGHIJKLMNOPQRSTUVWXYZ_")
+IDENT_CONT = IDENT_START | set("0123456789")
+DIGITS = set("0123456789")
+
+
+def is_ident_start(c):
+    return c in IDENT_START
+
+
+def is_ident_cont(c):
+    return c in IDENT_CONT
+
+
+def lex(src):
+    """Tokenize Rust source. Returns (tokens, comments).
+
+    tokens:   list of (kind, text, line)
+    comments: list of (line, text) — line is where the comment starts.
+    """
+    s = list(src)
+    n = len(s)
+    tokens = []
+    comments = []
+    i = 0
+    line = 1
+    while i < n:
+        c = s[i]
+        if c == "\n":
+            line += 1
+            i += 1
+            continue
+        if c in " \t\r":
+            i += 1
+            continue
+        # Comments ------------------------------------------------------
+        if c == "/" and i + 1 < n and s[i + 1] == "/":
+            start = i
+            start_line = line
+            while i < n and s[i] != "\n":
+                i += 1
+            comments.append((start_line, "".join(s[start:i])))
+            continue
+        if c == "/" and i + 1 < n and s[i + 1] == "*":
+            start = i
+            start_line = line
+            depth = 1
+            i += 2
+            while i < n and depth > 0:
+                if s[i] == "/" and i + 1 < n and s[i + 1] == "*":
+                    depth += 1
+                    i += 2
+                elif s[i] == "*" and i + 1 < n and s[i + 1] == "/":
+                    depth -= 1
+                    i += 2
+                else:
+                    if s[i] == "\n":
+                        line += 1
+                    i += 1
+            comments.append((start_line, "".join(s[start:i])))
+            continue
+        # Raw strings / byte strings -----------------------------------
+        if c == "r" or c == "b":
+            j = i + 1
+            if c == "b" and j < n and s[j] == "r":
+                j += 1
+            hashes = 0
+            k = j
+            while k < n and s[k] == "#":
+                hashes += 1
+                k += 1
+            is_raw = (c == "r" or (c == "b" and j == i + 2)) and k < n and s[k] == '"'
+            if is_raw:
+                # r"..." / r#"..."# / br#"..."# with `hashes` hashes.
+                start_line = line
+                k += 1  # past opening quote
+                closer = '"' + "#" * hashes
+                while k < n:
+                    if s[k] == "\n":
+                        line += 1
+                    if s[k] == '"' and "".join(s[k : k + 1 + hashes]) == closer:
+                        k += 1 + hashes
+                        break
+                    k += 1
+                tokens.append(("str", "", start_line))
+                i = k
+                continue
+            if c == "b" and i + 1 < n and s[i + 1] == '"':
+                i += 1  # fall through to normal string below
+                c = '"'
+            elif c == "b" and i + 1 < n and s[i + 1] == "'":
+                i += 1  # fall through to char literal below
+                c = "'"
+            elif c == "r" and i + 1 < n and s[i + 1] == "#" and i + 2 < n and is_ident_start(s[i + 2]):
+                # Raw identifier r#name — lex as a single ident token.
+                start = i
+                i += 2
+                while i < n and is_ident_cont(s[i]):
+                    i += 1
+                tokens.append(("ident", "".join(s[start:i]), line))
+                continue
+        # String literal ------------------------------------------------
+        if c == '"':
+            start_line = line
+            i += 1
+            while i < n:
+                if s[i] == "\\":
+                    i += 2
+                    continue
+                if s[i] == "\n":
+                    line += 1
+                if s[i] == '"':
+                    i += 1
+                    break
+                i += 1
+            tokens.append(("str", "", start_line))
+            continue
+        # Char literal vs lifetime -------------------------------------
+        if c == "'":
+            if i + 1 < n and s[i + 1] == "\\":
+                # Escaped char literal '\n', '\u{1F600}', '\\', ...
+                j = i + 2
+                if j < n and s[j] == "u" and j + 1 < n and s[j + 1] == "{":
+                    j += 2
+                    while j < n and s[j] != "}":
+                        j += 1
+                    j += 1
+                else:
+                    j += 1
+                if j < n and s[j] == "'":
+                    j += 1
+                tokens.append(("char", "", line))
+                i = j
+                continue
+            if i + 2 < n and s[i + 2] == "'":
+                tokens.append(("char", "", line))
+                i += 3
+                continue
+            # Lifetime: 'a, 'static, '_
+            j = i + 1
+            while j < n and is_ident_cont(s[j]):
+                j += 1
+            tokens.append(("life", "".join(s[i:j]), line))
+            i = j
+            continue
+        # Number --------------------------------------------------------
+        if c in DIGITS:
+            start = i
+            i += 1
+            while i < n:
+                ch = s[i]
+                if is_ident_cont(ch):
+                    i += 1
+                elif ch == "." and i + 1 < n and s[i + 1] in DIGITS:
+                    i += 1
+                else:
+                    break
+            tokens.append(("num", "".join(s[start:i]), line))
+            continue
+        # Identifier ----------------------------------------------------
+        if is_ident_start(c):
+            start = i
+            while i < n and is_ident_cont(s[i]):
+                i += 1
+            tokens.append(("ident", "".join(s[start:i]), line))
+            continue
+        # Punctuation ---------------------------------------------------
+        if c == ":" and i + 1 < n and s[i + 1] == ":":
+            tokens.append(("punct", "::", line))
+            i += 2
+            continue
+        if c == "+" and i + 1 < n and s[i + 1] == "=":
+            tokens.append(("punct", "+=", line))
+            i += 2
+            continue
+        tokens.append(("punct", c, line))
+        i += 1
+    return tokens, comments
+
+
+# ---------------------------------------------------------------------------
+# Test-region marking
+# ---------------------------------------------------------------------------
+
+
+def mark_test_regions(tokens):
+    """Boolean per token: True when the token lies inside an item guarded
+    by a `#[test]`-like attribute (`#[cfg(test)]`, `#[test]`, ...).
+    `#[cfg(not(test))]` does NOT create a test region."""
+    n = len(tokens)
+    in_test = [False] * n
+    i = 0
+    while i < n:
+        if tokens[i][1] == "#" and i + 1 < n and tokens[i + 1][1] == "[":
+            attr_start = i
+            close, is_test = scan_attribute(tokens, i)
+            if is_test:
+                j = close + 1
+                # Skip any further attributes stacked on the same item.
+                while j + 1 < n and tokens[j][1] == "#" and tokens[j + 1][1] == "[":
+                    j = scan_attribute(tokens, j)[0] + 1
+                # Consume the item: to the matching `}` of its first
+                # brace, or to `;` if none opens first.
+                depth = 0
+                started = False
+                k = j
+                while k < n:
+                    t = tokens[k][1]
+                    if t == "{":
+                        depth += 1
+                        started = True
+                    elif t == "}":
+                        depth -= 1
+                        if started and depth == 0:
+                            k += 1
+                            break
+                    elif t == ";" and not started and depth == 0:
+                        k += 1
+                        break
+                    k += 1
+                for m in range(attr_start, min(k, n)):
+                    in_test[m] = True
+                i = k
+                continue
+            i = close + 1
+            continue
+        i += 1
+    return in_test
+
+
+def scan_attribute(tokens, i):
+    """tokens[i] == '#', tokens[i+1] == '['. Returns (index of matching
+    ']', attribute-is-test-like)."""
+    n = len(tokens)
+    depth = 0
+    has_test = False
+    has_not = False
+    j = i + 1
+    while j < n:
+        kind, text, _ = tokens[j]
+        if text == "[":
+            depth += 1
+        elif text == "]":
+            depth -= 1
+            if depth == 0:
+                return j, has_test and not has_not
+        elif kind == "ident":
+            if text == "test":
+                has_test = True
+            elif text == "not":
+                has_not = True
+        j += 1
+    return n - 1, False
+
+
+# ---------------------------------------------------------------------------
+# Suppressions
+# ---------------------------------------------------------------------------
+
+
+def collect_suppressions(comments):
+    """Map line -> set of rule names suppressed on that line.  A
+    `hrrlint: allow(a, b)` comment covers its own line and the next."""
+    sup = {}
+    for line, text in comments:
+        idx = text.find("hrrlint:")
+        if idx < 0:
+            continue
+        rest = text[idx + len("hrrlint:") :].lstrip()
+        if not rest.startswith("allow("):
+            continue
+        close = rest.find(")")
+        if close < 0:
+            continue
+        inner = rest[len("allow(") : close]
+        rules = [r.strip() for r in inner.replace(",", " ").split()]
+        for ln in (line, line + 1):
+            sup.setdefault(ln, set()).update(rules)
+    return sup
+
+
+# ---------------------------------------------------------------------------
+# Scopes
+# ---------------------------------------------------------------------------
+
+
+def in_panic_scope(path):
+    return path.startswith(("engine/", "net/", "stream/", "model/", "hrr/"))
+
+
+def in_kernel_scope(path):
+    return path.startswith(("hrr/common/", "hrr/hrrformer/", "hrr/hgconv/"))
+
+
+def in_channel_scope(path):
+    return path.startswith(("engine/", "stream/", "net/", "coordinator/"))
+
+
+def in_wire_scope(path):
+    return path.startswith("net/") or path == "util/json.rs"
+
+
+def in_lock_scope(path):
+    return path.startswith("engine/")
+
+
+def in_debug_scope(path):
+    return not (path == "main.rs" or path.startswith(("bench/", "bin/")))
+
+
+# ---------------------------------------------------------------------------
+# Rule engine
+# ---------------------------------------------------------------------------
+
+
+def lint_source(path, src):
+    """Lint one file. `path` is the forward-slash path relative to the
+    scan root. Returns a list of findings:
+    dicts with keys file/line/rule/snippet/message/hash."""
+    tokens, comments = lex(src)
+    in_test = mark_test_regions(tokens)
+    sup = collect_suppressions(comments)
+    lines = src.split("\n")
+    findings = []
+
+    def emit(idx, rule, message):
+        line = tokens[idx][2]
+        if in_test[idx]:
+            return
+        if rule in sup.get(line, ()):
+            return
+        snippet = lines[line - 1].strip() if 0 < line <= len(lines) else ""
+        findings.append(
+            {
+                "file": path,
+                "line": line,
+                "rule": rule,
+                "snippet": snippet,
+                "message": message,
+                "hash": fnv1a64_hex(rule + ":" + path + ":" + snippet),
+            }
+        )
+
+    n = len(tokens)
+
+    def tk(i):
+        return tokens[i][1] if 0 <= i < n else ""
+
+    def kind(i):
+        return tokens[i][0] if 0 <= i < n else ""
+
+    # --- panic-path ----------------------------------------------------
+    if in_panic_scope(path):
+        for i in range(n):
+            if kind(i) == "ident" and tk(i) in ("unwrap", "expect"):
+                if tk(i - 1) == "." and tk(i + 1) == "(":
+                    emit(i, "panic-path", tk(i) + "() on serving path (use typed errors)")
+            elif kind(i) == "ident" and tk(i) in ("panic", "unreachable"):
+                if tk(i + 1) == "!":
+                    emit(i, "panic-path", tk(i) + "! on serving path (use typed errors)")
+
+    # --- wallclock-kernel ----------------------------------------------
+    if in_kernel_scope(path):
+        for i in range(n):
+            if kind(i) != "ident":
+                continue
+            if tk(i) == "Instant" and tk(i + 1) == "::" and tk(i + 2) == "now":
+                emit(i, "wallclock-kernel", "Instant::now in deterministic kernel code")
+            elif tk(i) == "SystemTime":
+                emit(i, "wallclock-kernel", "SystemTime in deterministic kernel code")
+
+    # --- hash-iter-accum (all files) ------------------------------------
+    hash_names = collect_hash_names(tokens)
+    if hash_names:
+        check_hash_iteration(tokens, kind, tk, n, hash_names, emit)
+
+    # --- f32-accum-kernel ----------------------------------------------
+    if in_kernel_scope(path):
+        check_f32_accum(tokens, kind, tk, n, emit)
+
+    # --- unbounded-channel ---------------------------------------------
+    if in_channel_scope(path):
+        for i in range(n):
+            if kind(i) == "ident" and tk(i) == "channel":
+                # `channel(` or turbofish `channel::<T>(`.
+                if tk(i + 1) == "(" or (tk(i + 1) == "::" and tk(i + 2) == "<"):
+                    emit(i, "unbounded-channel", "unbounded channel() (engine mandates sync_channel)")
+
+    # --- narrow-cast-wire ----------------------------------------------
+    if in_wire_scope(path):
+        for i in range(n):
+            if kind(i) == "ident" and tk(i) == "as" and kind(i + 1) == "ident" and tk(i + 1) in ("usize", "u32"):
+                emit(
+                    i,
+                    "narrow-cast-wire",
+                    "narrowing `as " + tk(i + 1) + "` cast in wire-facing code (use checked conversion)",
+                )
+
+    # --- lock-order ----------------------------------------------------
+    if in_lock_scope(path):
+        check_lock_order(tokens, kind, tk, n, emit)
+
+    # --- debug-macro ---------------------------------------------------
+    if in_debug_scope(path):
+        for i in range(n):
+            if kind(i) == "ident" and tk(i) in ("todo", "dbg", "println") and tk(i + 1) == "!":
+                emit(i, "debug-macro", tk(i) + "! outside main/bench (remove before merge)")
+
+    return findings
+
+
+def collect_hash_names(tokens):
+    """Names of variables/fields whose type mentions HashMap/HashSet.
+    Walks back from the type ident to the nearest `:` annotation (field
+    or let-with-type), else to a `let [mut] name =` binding."""
+    n = len(tokens)
+    names = []
+    for i in range(n):
+        if tokens[i][0] != "ident" or tokens[i][1] not in ("HashMap", "HashSet"):
+            continue
+        j = i - 1
+        name = ""
+        while j >= 0:
+            text = tokens[j][1]
+            if text in (";", "{", "}"):
+                break
+            if text == ":":
+                if j >= 1 and tokens[j - 1][0] == "ident":
+                    name = tokens[j - 1][1]
+                break
+            if text == "=":
+                k = j - 1
+                while k >= 0:
+                    t2 = tokens[k][1]
+                    if t2 in (";", "{", "}"):
+                        break
+                    if tokens[k][0] == "ident" and t2 not in ("mut",):
+                        if k >= 1 and tokens[k - 1][1] in ("let", "mut"):
+                            name = t2
+                            break
+                    k -= 1
+                break
+            j -= 1
+        if name and name not in names:
+            names.append(name)
+    return names
+
+
+def check_hash_iteration(tokens, kind, tk, n, hash_names, emit):
+    # (a) `for ... in <hash_name>... {` whose body accumulates.
+    for i in range(n):
+        if kind(i) == "ident" and tk(i) == "for":
+            # Header: tokens up to the body `{` at bracket depth 0.
+            depth = 0
+            j = i + 1
+            header_hit = False
+            while j < n:
+                t = tk(j)
+                if t in ("(", "["):
+                    depth += 1
+                elif t in (")", "]"):
+                    depth -= 1
+                elif t == "{" and depth == 0:
+                    break
+                elif t == ";":
+                    j = n  # not a for-loop header (e.g. `for` in macro)
+                    break
+                elif kind(j) == "ident" and t in hash_names:
+                    header_hit = True
+                j += 1
+            if j >= n or not header_hit:
+                continue
+            # Body: matching `}`.
+            body_start = j
+            bdepth = 0
+            k = j
+            accum = False
+            while k < n:
+                t = tk(k)
+                if t == "{":
+                    bdepth += 1
+                elif t == "}":
+                    bdepth -= 1
+                    if bdepth == 0:
+                        break
+                elif t == "+=":
+                    accum = True
+                elif t == "." and kind(k + 1) == "ident" and tk(k + 1) in ("push", "extend") and tk(k + 2) == "(":
+                    accum = True
+                k += 1
+            if accum:
+                emit(i, "hash-iter-accum", "hash-order iteration feeds an accumulation (nondeterministic order)")
+    # (b) `<hash_name>.iter()...collect/fold/sum` chains.
+    for i in range(n):
+        if kind(i) == "ident" and tk(i) in hash_names and tk(i + 1) == ".":
+            if kind(i + 2) == "ident" and tk(i + 2) in ("iter", "keys", "values", "drain", "into_iter"):
+                j = i + 3
+                while j < n and tk(j) != ";":
+                    if kind(j) == "ident" and tk(j) in ("collect", "fold", "sum"):
+                        emit(i, "hash-iter-accum", "hash-order iteration feeds an accumulation (nondeterministic order)")
+                        break
+                    j += 1
+
+
+def check_f32_accum(tokens, kind, tk, n, emit):
+    # f32-typed bindings: `let [mut] name: f32` or `let [mut] name = <num f32>`.
+    f32_names = []
+    for i in range(n):
+        if kind(i) == "ident" and tk(i) == "let":
+            j = i + 1
+            if tk(j) == "mut":
+                j += 1
+            if kind(j) != "ident":
+                continue
+            name = tk(j)
+            if tk(j + 1) == ":" and tk(j + 2) == "f32":
+                if name not in f32_names:
+                    f32_names.append(name)
+            elif tk(j + 1) == "=" and kind(j + 2) == "num" and tk(j + 2).endswith("f32"):
+                if name not in f32_names:
+                    f32_names.append(name)
+    if not f32_names:
+        return
+    # Loop-depth brace tracking: fire on `name +=` inside any loop body.
+    brace_is_loop = []
+    pending_loop = False
+    for i in range(n):
+        t = tk(i)
+        if kind(i) == "ident" and t in ("for", "while", "loop"):
+            pending_loop = True
+        elif t == "{":
+            brace_is_loop.append(pending_loop)
+            pending_loop = False
+        elif t == "}":
+            if brace_is_loop:
+                brace_is_loop.pop()
+        elif t == ";":
+            pending_loop = False
+        elif t == "+=" and kind(i - 1) == "ident" and tk(i - 1) in f32_names:
+            if any(brace_is_loop):
+                emit(i - 1, "f32-accum-kernel", "f32 `+=` accumulation in a loop (use an f64 accumulator)")
+
+
+LOCK_ORDER_MESSAGE = (
+    "ParamSlot lock and ReloadHub mutex nested in one function "
+    "(canonical order: hub -> slot; see engine/mod.rs)"
+)
+
+
+def check_lock_order(tokens, kind, tk, n, emit):
+    i = 0
+    while i < n:
+        if kind(i) == "ident" and tk(i) == "fn" and kind(i + 1) == "ident":
+            # Body: first `{` after the signature, to its matching `}`.
+            j = i + 2
+            while j < n and tk(j) != "{" and tk(j) != ";":
+                j += 1
+            if j >= n or tk(j) == ";":
+                i = j + 1
+                continue
+            depth = 0
+            end = j
+            while end < n:
+                if tk(end) == "{":
+                    depth += 1
+                elif tk(end) == "}":
+                    depth -= 1
+                    if depth == 0:
+                        break
+                end += 1
+            first_hub = -1
+            first_slot = -1
+            for k in range(j, min(end + 1, n)):
+                if tk(k) != ".":
+                    continue
+                recv = tk(k - 1) if kind(k - 1) == "ident" else ""
+                meth = tk(k + 1) if kind(k + 1) == "ident" else ""
+                if tk(k + 2) != "(":
+                    continue
+                if meth == "lock" and (recv == "lock" or "hub" in recv.lower()):
+                    if first_hub < 0:
+                        first_hub = k + 1
+                elif meth in ("pin", "install", "read", "write") and "slot" in recv.lower():
+                    if first_slot < 0:
+                        first_slot = k + 1
+            if first_hub >= 0 and first_slot >= 0:
+                emit(max(first_hub, first_slot), "lock-order", LOCK_ORDER_MESSAGE)
+            i = end + 1
+            continue
+        i += 1
+
+
+# ---------------------------------------------------------------------------
+# FNV-1a 64 (matches util::fnv1a64 on the Rust side)
+# ---------------------------------------------------------------------------
+
+
+def fnv1a64_hex(text):
+    h = 0xCBF29CE484222325
+    for b in text.encode("utf-8"):
+        h ^= b
+        h = (h * 0x100000001B3) & 0xFFFFFFFFFFFFFFFF
+    return "%016x" % h
+
+
+# ---------------------------------------------------------------------------
+# Tree walk
+# ---------------------------------------------------------------------------
+
+
+def discover(root):
+    """All .rs files under root, as sorted forward-slash relative paths."""
+    out = []
+    for dirpath, dirnames, filenames in os.walk(root):
+        dirnames.sort()
+        for name in filenames:
+            if not name.endswith(".rs"):
+                continue
+            full = os.path.join(dirpath, name)
+            rel = os.path.relpath(full, root).replace(os.sep, "/")
+            out.append(rel)
+    out.sort()
+    return out
+
+
+def lint_tree(root):
+    """Lint every .rs file under root. Returns (findings, file_count)."""
+    findings = []
+    rels = discover(root)
+    for rel in rels:
+        with open(os.path.join(root, rel), "r", encoding="utf-8") as f:
+            src = f.read()
+        findings.extend(lint_source(rel, src))
+    findings.sort(key=lambda f: (f["file"], f["line"], f["rule"]))
+    return findings, len(rels)
+
+
+# ---------------------------------------------------------------------------
+# Baseline ratchet
+# ---------------------------------------------------------------------------
+
+
+def baseline_key(finding):
+    return (finding["file"], finding["rule"], finding["hash"])
+
+
+def load_baseline(path):
+    """Parse lint_baseline.json -> dict {(file, rule, hash): count}.
+    Minimal recursive-descent JSON reader (objects/arrays/strings/ints)
+    so the mirror stays dependency-free like the Rust side."""
+    with open(path, "r", encoding="utf-8") as f:
+        text = f.read()
+    value, _ = _parse_json(text, 0)
+    entries = {}
+    if not isinstance(value, dict) or value.get("version") != BASELINE_VERSION:
+        raise ValueError("unsupported baseline version in " + path)
+    for e in value.get("entries", []):
+        key = (e["file"], e["rule"], e["hash"])
+        entries[key] = entries.get(key, 0) + int(e["count"])
+    return entries
+
+
+def _parse_json(s, i):
+    while i < len(s) and s[i] in " \t\r\n":
+        i += 1
+    c = s[i]
+    if c == "{":
+        obj = {}
+        i += 1
+        while True:
+            while i < len(s) and s[i] in " \t\r\n":
+                i += 1
+            if s[i] == "}":
+                return obj, i + 1
+            key, i = _parse_json(s, i)
+            while i < len(s) and s[i] in " \t\r\n":
+                i += 1
+            if s[i] != ":":
+                raise ValueError("bad baseline JSON")
+            val, i = _parse_json(s, i + 1)
+            obj[key] = val
+            while i < len(s) and s[i] in " \t\r\n":
+                i += 1
+            if s[i] == ",":
+                i += 1
+            elif s[i] == "}":
+                return obj, i + 1
+            else:
+                raise ValueError("bad baseline JSON")
+    if c == "[":
+        arr = []
+        i += 1
+        while True:
+            while i < len(s) and s[i] in " \t\r\n":
+                i += 1
+            if s[i] == "]":
+                return arr, i + 1
+            val, i = _parse_json(s, i)
+            arr.append(val)
+            while i < len(s) and s[i] in " \t\r\n":
+                i += 1
+            if s[i] == ",":
+                i += 1
+            elif s[i] == "]":
+                return arr, i + 1
+            else:
+                raise ValueError("bad baseline JSON")
+    if c == '"':
+        out = []
+        i += 1
+        while s[i] != '"':
+            if s[i] == "\\":
+                i += 1
+                esc = s[i]
+                if esc == "u":
+                    out.append(chr(int(s[i + 1 : i + 5], 16)))
+                    i += 5
+                    continue
+                out.append({"n": "\n", "t": "\t", "r": "\r"}.get(esc, esc))
+                i += 1
+            else:
+                out.append(s[i])
+                i += 1
+        return "".join(out), i + 1
+    if c == "-" or c.isdigit():
+        j = i + 1
+        while j < len(s) and (s[j].isdigit()):
+            j += 1
+        return int(s[i:j]), j
+    for lit, val in (("true", True), ("false", False), ("null", None)):
+        if s.startswith(lit, i):
+            return val, i + len(lit)
+    raise ValueError("bad baseline JSON")
+
+
+def apply_baseline(findings, baseline):
+    """Mark each finding new/baselined against the ratchet. Findings are
+    already sorted; within a (file, rule, hash) group the first
+    `count` occurrences are grandfathered, the rest are new.
+    Returns (new_count, baselined_count, stale_count)."""
+    used = {}
+    new = 0
+    for f in findings:
+        key = baseline_key(f)
+        have = baseline.get(key, 0)
+        seen = used.get(key, 0)
+        if seen < have:
+            f["new"] = False
+            used[key] = seen + 1
+        else:
+            f["new"] = True
+            new += 1
+    baselined = len(findings) - new
+    stale = 0
+    for key, count in baseline.items():
+        stale += count - used.get(key, 0)
+    return new, baselined, stale
+
+
+def write_baseline(path, findings):
+    counts = {}
+    for f in findings:
+        key = baseline_key(f)
+        counts[key] = counts.get(key, 0) + 1
+    parts = []
+    for (file, rule, hash_), count in sorted(counts.items()):
+        parts.append(
+            "    {\"count\": %d, \"file\": %s, \"hash\": %s, \"rule\": %s}"
+            % (count, json_string(file), json_string(hash_), json_string(rule))
+        )
+    body = "{\n  \"entries\": [\n" + ",\n".join(parts) + "\n  ],\n  \"version\": %d\n}\n" % BASELINE_VERSION
+    if not counts:
+        body = "{\n  \"entries\": [],\n  \"version\": %d\n}\n" % BASELINE_VERSION
+    with open(path, "w", encoding="utf-8") as f:
+        f.write(body)
+
+
+# ---------------------------------------------------------------------------
+# Canonical JSON output (byte-identical to the Rust emitter)
+# ---------------------------------------------------------------------------
+
+
+def json_string(s):
+    out = ['"']
+    for ch in s:
+        if ch == '"':
+            out.append('\\"')
+        elif ch == "\\":
+            out.append("\\\\")
+        elif ch == "\n":
+            out.append("\\n")
+        elif ch == "\r":
+            out.append("\\r")
+        elif ch == "\t":
+            out.append("\\t")
+        elif ord(ch) < 0x20:
+            out.append("\\u%04x" % ord(ch))
+        else:
+            out.append(ch)
+    out.append('"')
+    return "".join(out)
+
+
+def report_json(findings, file_count, baseline_entries, new, baselined, stale):
+    parts = []
+    for f in findings:
+        parts.append(
+            "{\"file\": %s, \"hash\": %s, \"line\": %d, \"message\": %s, \"new\": %s, \"rule\": %s, \"snippet\": %s}"
+            % (
+                json_string(f["file"]),
+                json_string(f["hash"]),
+                f["line"],
+                json_string(f["message"]),
+                "true" if f["new"] else "false",
+                json_string(f["rule"]),
+                json_string(f["snippet"]),
+            )
+        )
+    return (
+        "{\"baseline_entries\": %d, \"baselined\": %d, \"files_scanned\": %d, \"findings\": [%s], \"new\": %d, \"rules\": %d, \"stale\": %d, \"version\": %d}"
+        % (baseline_entries, baselined, file_count, ", ".join(parts), new, len(RULES), stale, BASELINE_VERSION)
+    )
+
+
+# ---------------------------------------------------------------------------
+# CLI
+# ---------------------------------------------------------------------------
+
+USAGE = """usage: hrrlint [--root DIR] [--baseline FILE] [--json] [--update-baseline] [--no-baseline]
+
+  --root DIR          tree to scan (default rust/src)
+  --baseline FILE     ratchet file (default lint_baseline.json)
+  --json              machine-readable report on stdout
+  --update-baseline   rewrite the baseline from the current findings
+  --no-baseline       treat every finding as new (fixture/CI mode)
+"""
+
+
+def main(argv):
+    root = "rust/src"
+    baseline_path = "lint_baseline.json"
+    as_json = False
+    update = False
+    no_baseline = False
+    i = 0
+    while i < len(argv):
+        a = argv[i]
+        if a == "--root" and i + 1 < len(argv):
+            root = argv[i + 1]
+            i += 2
+        elif a == "--baseline" and i + 1 < len(argv):
+            baseline_path = argv[i + 1]
+            i += 2
+        elif a == "--json":
+            as_json = True
+            i += 1
+        elif a == "--update-baseline":
+            update = True
+            i += 1
+        elif a == "--no-baseline":
+            no_baseline = True
+            i += 1
+        elif a in ("-h", "--help"):
+            sys.stdout.write(USAGE)
+            return 0
+        else:
+            sys.stderr.write("hrrlint: unknown argument %r\n%s" % (a, USAGE))
+            return 2
+    if not os.path.isdir(root):
+        sys.stderr.write("hrrlint: root %r is not a directory\n" % root)
+        return 2
+    findings, file_count = lint_tree(root)
+    if update:
+        write_baseline(baseline_path, findings)
+        sys.stdout.write(
+            "hrrlint: baseline rewritten: %d findings across %d files -> %s\n"
+            % (len(findings), file_count, baseline_path)
+        )
+        return 0
+    if no_baseline:
+        baseline = {}
+    else:
+        if not os.path.isfile(baseline_path):
+            sys.stderr.write("hrrlint: baseline %r not found (use --no-baseline or --update-baseline)\n" % baseline_path)
+            return 2
+        try:
+            baseline = load_baseline(baseline_path)
+        except ValueError as e:
+            sys.stderr.write("hrrlint: %s\n" % e)
+            return 2
+    baseline_entries = sum(baseline.values())
+    new, baselined, stale = apply_baseline(findings, baseline)
+    if as_json:
+        sys.stdout.write(report_json(findings, file_count, baseline_entries, new, baselined, stale) + "\n")
+    else:
+        for f in findings:
+            if not f["new"]:
+                continue
+            sys.stdout.write("%s:%d: [%s] %s\n    %s\n" % (f["file"], f["line"], f["rule"], f["message"], f["snippet"]))
+        sys.stdout.write(
+            "hrrlint: %d new, %d baselined, %d stale baseline entries, %d files scanned\n"
+            % (new, baselined, stale, file_count)
+        )
+    return 1 if new > 0 else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main(sys.argv[1:]))

@@ -1,0 +1,270 @@
+"""Tests for the hrrlint Python mirror (python/analysis/hrrlint.py).
+
+Covers the lexer's tricky cases, rule attribution on the seeded fixture
+tree, the golden-report byte parity, the baseline ratchet semantics
+(content-hash keying, counts, staleness), and the CLI exit codes.
+The Rust side re-runs the same fixture/golden checks in
+rust/tests/lint_self.rs, plus a cross-runner parity test.
+"""
+
+import os
+import subprocess
+import sys
+
+from analysis import hrrlint
+
+HERE = os.path.dirname(os.path.abspath(__file__))
+REPO = os.path.dirname(os.path.dirname(HERE))
+FIXTURES = os.path.join(REPO, "rust", "tests", "lint_fixtures")
+GOLDEN = os.path.join(FIXTURES, "golden_report.json")
+SCRIPT = os.path.join(REPO, "python", "analysis", "hrrlint.py")
+
+
+# ---------------------------------------------------------------------------
+# Lexer
+# ---------------------------------------------------------------------------
+
+
+def token_texts(src, kinds=None):
+    tokens, _ = hrrlint.lex(src)
+    if kinds is None:
+        return [t[1] for t in tokens]
+    return [t[1] for t in tokens if t[0] in kinds]
+
+
+def test_lexer_strings_hide_tokens():
+    tokens, _ = hrrlint.lex('let a = "unwrap() panic!(\\"x\\")";')
+    idents = [t[1] for t in tokens if t[0] == "ident"]
+    assert idents == ["let", "a"]
+
+
+def test_lexer_raw_strings():
+    tokens, _ = hrrlint.lex('let b = r##"has "#quote"# and unwrap()"##; x')
+    idents = [t[1] for t in tokens if t[0] == "ident"]
+    assert idents == ["let", "b", "x"]
+    tokens, _ = hrrlint.lex('let c = br#"bytes with dbg!()"#; y')
+    idents = [t[1] for t in tokens if t[0] == "ident"]
+    assert idents == ["let", "c", "y"]
+
+
+def test_lexer_comments_hide_tokens_and_nest():
+    src = "/* outer /* inner unwrap() */ still comment */ real // trailing panic!\n"
+    tokens, comments = hrrlint.lex(src)
+    assert [t[1] for t in tokens if t[0] == "ident"] == ["real"]
+    assert len(comments) == 2
+
+
+def test_lexer_char_vs_lifetime():
+    tokens, _ = hrrlint.lex("let c = 'x'; let q = '\"'; let n = '\\n'; fn f<'a>(s: &'a str) {}")
+    kinds = [t[0] for t in tokens]
+    assert kinds.count("char") == 3
+    assert [t[1] for t in tokens if t[0] == "life"] == ["'a", "'a"]
+    # A quote char literal must not open a string: `q` and the rest lex.
+    assert "str" not in kinds
+
+
+def test_lexer_numbers_and_ranges():
+    # `0..n` must not merge into one number; `0.5f32` must stay one token.
+    tokens, _ = hrrlint.lex("for i in 0..n { let x = 0.5f32; }")
+    nums = [t[1] for t in tokens if t[0] == "num"]
+    assert nums == ["0", "0.5f32"]
+
+
+def test_lexer_multichar_puncts():
+    tokens, _ = hrrlint.lex("a::b += 1;")
+    puncts = [t[1] for t in tokens if t[0] == "punct"]
+    assert "::" in puncts and "+=" in puncts
+
+
+def test_lexer_line_numbers():
+    tokens, comments = hrrlint.lex('first\n"multi\nline"\nafter // note\n')
+    by_text = {t[1]: t[2] for t in tokens if t[0] == "ident"}
+    assert by_text["first"] == 1
+    assert by_text["after"] == 4
+    assert comments == [(4, "// note")]
+
+
+# ---------------------------------------------------------------------------
+# Rules on inline sources
+# ---------------------------------------------------------------------------
+
+
+def rules_of(findings):
+    return [(f["rule"], f["line"]) for f in findings]
+
+
+def test_cfg_test_exemption():
+    src = (
+        "pub fn live(v: Option<u32>) -> u32 { v.unwrap() }\n"
+        "#[cfg(test)]\n"
+        "mod tests {\n"
+        "    #[test]\n"
+        "    fn t() { None::<u32>.unwrap(); panic!(\"x\"); }\n"
+        "}\n"
+    )
+    findings = hrrlint.lint_source("engine/x.rs", src)
+    assert rules_of(findings) == [("panic-path", 1)]
+
+
+def test_cfg_not_test_still_fires():
+    src = "#[cfg(not(test))]\npub fn live(v: Option<u32>) -> u32 { v.unwrap() }\n"
+    findings = hrrlint.lint_source("engine/x.rs", src)
+    assert rules_of(findings) == [("panic-path", 2)]
+
+
+def test_suppression_same_line_and_next():
+    src = "fn a(v: Option<u32>) -> u32 {\n    // hrrlint: allow(panic-path)\n    v.unwrap()\n}\n"
+    assert hrrlint.lint_source("engine/x.rs", src) == []
+    src = "fn a(v: Option<u32>) -> u32 {\n    v.unwrap() // hrrlint: allow(panic-path)\n}\n"
+    assert hrrlint.lint_source("engine/x.rs", src) == []
+    # An allow() for a different rule must not suppress.
+    src = "fn a(v: Option<u32>) -> u32 {\n    v.unwrap() // hrrlint: allow(debug-macro)\n}\n"
+    assert rules_of(hrrlint.lint_source("engine/x.rs", src)) == [("panic-path", 2)]
+
+
+def test_scoping_by_path():
+    src = "fn a(v: Option<u32>) -> u32 { v.unwrap() }\n"
+    assert hrrlint.lint_source("util/other.rs", src) == []  # not serving scope
+    assert rules_of(hrrlint.lint_source("stream/x.rs", src)) == [("panic-path", 1)]
+    src = "fn k() { let t = std::time::Instant::now(); drop(t); }\n"
+    assert hrrlint.lint_source("hrr/grad.rs", src) == []  # not kernel scope
+    assert rules_of(hrrlint.lint_source("hrr/common/x.rs", src)) == [("wallclock-kernel", 1)]
+    src = "fn m() { println!(\"x\"); }\n"
+    assert hrrlint.lint_source("main.rs", src) == []
+    assert hrrlint.lint_source("bench/native.rs", src) == []
+    assert hrrlint.lint_source("bin/hrrlint.rs", src) == []
+    assert rules_of(hrrlint.lint_source("model/x.rs", src)) == [("debug-macro", 1)]
+
+
+def test_turbofish_channel():
+    src = "fn q() { let (tx, rx) = channel::<u32>(); drop((tx, rx)); }\n"
+    assert rules_of(hrrlint.lint_source("engine/x.rs", src)) == [("unbounded-channel", 1)]
+    src = "fn q() { let (tx, rx) = sync_channel::<u32>(4); drop((tx, rx)); }\n"
+    assert hrrlint.lint_source("engine/x.rs", src) == []
+
+
+# ---------------------------------------------------------------------------
+# Fixture tree + golden report
+# ---------------------------------------------------------------------------
+
+
+def test_fixture_findings_attribution():
+    findings, file_count = hrrlint.lint_tree(FIXTURES)
+    assert file_count == 6
+    got = {(f["file"], f["line"], f["rule"]) for f in findings}
+    expected = {
+        ("engine/locks.rs", 16, "lock-order"),
+        ("engine/panics.rs", 9, "panic-path"),
+        ("engine/panics.rs", 10, "panic-path"),
+        ("engine/panics.rs", 12, "panic-path"),
+        ("engine/panics.rs", 15, "panic-path"),
+        ("engine/panics.rs", 21, "unbounded-channel"),
+        ("engine/panics.rs", 46, "panic-path"),
+        ("hrr/common/kernel.rs", 5, "wallclock-kernel"),
+        ("hrr/common/kernel.rs", 6, "wallclock-kernel"),
+        ("hrr/common/kernel.rs", 10, "f32-accum-kernel"),
+        ("hrr/common/kernel.rs", 15, "f32-accum-kernel"),
+        ("net/wire.rs", 7, "narrow-cast-wire"),
+        ("net/wire.rs", 8, "narrow-cast-wire"),
+        ("net/wire.rs", 10, "narrow-cast-wire"),
+        ("net/wire.rs", 14, "panic-path"),
+        ("stream/collect.rs", 7, "hash-iter-accum"),
+        ("stream/collect.rs", 14, "hash-iter-accum"),
+        ("util/strings.rs", 23, "debug-macro"),
+        ("util/strings.rs", 24, "debug-macro"),
+        ("util/strings.rs", 25, "debug-macro"),
+    }
+    assert got == expected
+    # net/wire.rs:10 holds two casts on one line -> 21 findings total.
+    assert len(findings) == 21
+
+
+def test_golden_report_byte_parity():
+    findings, file_count = hrrlint.lint_tree(FIXTURES)
+    new, baselined, stale = hrrlint.apply_baseline(findings, {})
+    got = hrrlint.report_json(findings, file_count, 0, new, baselined, stale) + "\n"
+    with open(GOLDEN, "r", encoding="utf-8") as f:
+        want = f.read()
+    assert got == want
+
+
+# ---------------------------------------------------------------------------
+# Ratchet semantics
+# ---------------------------------------------------------------------------
+
+
+def test_ratchet_counts_and_staleness():
+    src = "fn a(v: Option<u32>) -> u32 { v.unwrap() + v.unwrap() }\n"
+    findings = hrrlint.lint_source("engine/x.rs", src)
+    assert len(findings) == 2
+    key = hrrlint.baseline_key(findings[0])
+    assert findings[0]["hash"] == findings[1]["hash"]  # same snippet content
+    # Baseline covers one of the two: the other is new.
+    new, baselined, stale = hrrlint.apply_baseline(findings, {key: 1})
+    assert (new, baselined, stale) == (1, 1, 0)
+    # Baseline covers both exactly.
+    new, baselined, stale = hrrlint.apply_baseline(findings, {key: 2})
+    assert (new, baselined, stale) == (0, 2, 0)
+    # Over-provisioned baseline reports staleness.
+    new, baselined, stale = hrrlint.apply_baseline(findings, {key: 3})
+    assert (new, baselined, stale) == (0, 2, 1)
+
+
+def test_hash_survives_line_shifts():
+    src1 = "fn a(v: Option<u32>) -> u32 { v.unwrap() }\n"
+    src2 = "// a new comment shifting everything down\n\n\n" + src1
+    f1 = hrrlint.lint_source("engine/x.rs", src1)
+    f2 = hrrlint.lint_source("engine/x.rs", src2)
+    assert f1[0]["line"] != f2[0]["line"]
+    assert f1[0]["hash"] == f2[0]["hash"]  # keyed on content, not line
+
+
+def test_baseline_roundtrip(tmp_path):
+    findings, _ = hrrlint.lint_tree(FIXTURES)
+    path = str(tmp_path / "baseline.json")
+    hrrlint.write_baseline(path, findings)
+    loaded = hrrlint.load_baseline(path)
+    assert sum(loaded.values()) == len(findings)
+    new, baselined, stale = hrrlint.apply_baseline(findings, loaded)
+    assert (new, baselined, stale) == (0, len(findings), 0)
+
+
+def test_real_tree_is_clean():
+    findings, _ = hrrlint.lint_tree(os.path.join(REPO, "rust", "src"))
+    baseline = hrrlint.load_baseline(os.path.join(REPO, "lint_baseline.json"))
+    new, _, stale = hrrlint.apply_baseline(findings, baseline)
+    assert new == 0, [f for f in findings if f["new"]]
+    assert stale == 0  # the baseline never outruns the tree
+    # The ratchet is burned to zero for the serving modules.
+    for f in findings:
+        assert not f["file"].startswith(("engine/", "net/", "stream/")), f
+
+
+# ---------------------------------------------------------------------------
+# CLI
+# ---------------------------------------------------------------------------
+
+
+def run_cli(*args):
+    return subprocess.run(
+        [sys.executable, SCRIPT] + list(args),
+        cwd=REPO,
+        capture_output=True,
+        text=True,
+    )
+
+
+def test_cli_exit_codes():
+    r = run_cli("--root", "rust/src")
+    assert r.returncode == 0, r.stdout + r.stderr
+    r = run_cli("--root", "rust/tests/lint_fixtures", "--no-baseline")
+    assert r.returncode == 1
+    r = run_cli("--bogus-flag")
+    assert r.returncode == 2
+
+
+def test_cli_json_matches_golden():
+    r = run_cli("--root", "rust/tests/lint_fixtures", "--no-baseline", "--json")
+    assert r.returncode == 1
+    with open(GOLDEN, "r", encoding="utf-8") as f:
+        assert r.stdout == f.read()

@@ -1,0 +1,265 @@
+//! Baseline ratchet + report emission for hrrlint.
+//!
+//! The baseline (`lint_baseline.json`) grandfathers pre-existing
+//! findings keyed by `(file, rule, content-hash)` with a count — never
+//! line numbers, so unrelated edits don't churn it. A finding not
+//! covered by the baseline is *new* and fails the run; baseline entries
+//! with no matching finding are reported *stale* so the file can be
+//! re-ratcheted downward.
+//!
+//! JSON report emission is canonical (fixed key order, fixed escaping
+//! via `util::json`) and must stay byte-identical to the Python
+//! mirror's emitter in `python/analysis/hrrlint.py`.
+
+use std::collections::BTreeMap;
+use std::fmt::Write as _;
+use std::fs;
+use std::io;
+use std::path::Path;
+
+use super::rules::{lint_source, Finding, RULES};
+use crate::util::json::{write_json, Json};
+
+pub const BASELINE_VERSION: u64 = 1;
+
+/// `(file, rule, hash) -> grandfathered count`.
+pub type Baseline = BTreeMap<(String, String, String), usize>;
+
+fn baseline_key(f: &Finding) -> (String, String, String) {
+    (f.file.clone(), f.rule.clone(), f.hash.clone())
+}
+
+// ---------------------------------------------------------------------------
+// Tree walk
+// ---------------------------------------------------------------------------
+
+/// All `.rs` files under `root`, as sorted forward-slash relative paths.
+pub fn discover(root: &Path) -> io::Result<Vec<String>> {
+    let mut out = Vec::new();
+    let mut stack = vec![root.to_path_buf()];
+    while let Some(dir) = stack.pop() {
+        for entry in fs::read_dir(&dir)? {
+            let entry = entry?;
+            let path = entry.path();
+            if path.is_dir() {
+                stack.push(path);
+            } else if path.extension().map(|e| e == "rs").unwrap_or(false) {
+                let rel = path
+                    .strip_prefix(root)
+                    .map_err(|e| io::Error::new(io::ErrorKind::InvalidData, e))?;
+                let joined: Vec<String> =
+                    rel.components().map(|c| c.as_os_str().to_string_lossy().into_owned()).collect();
+                out.push(joined.join("/"));
+            }
+        }
+    }
+    out.sort();
+    Ok(out)
+}
+
+/// Lint every `.rs` file under `root`. Findings come back sorted by
+/// `(file, line, rule)` — the canonical report order.
+pub fn lint_tree(root: &Path) -> io::Result<(Vec<Finding>, usize)> {
+    let rels = discover(root)?;
+    let mut findings = Vec::new();
+    for rel in &rels {
+        let src = fs::read_to_string(root.join(rel))?;
+        findings.extend(lint_source(rel, &src));
+    }
+    findings.sort_by(|a, b| {
+        (a.file.as_str(), a.line, a.rule.as_str()).cmp(&(b.file.as_str(), b.line, b.rule.as_str()))
+    });
+    Ok((findings, rels.len()))
+}
+
+// ---------------------------------------------------------------------------
+// Baseline I/O
+// ---------------------------------------------------------------------------
+
+pub fn load_baseline(path: &Path) -> Result<Baseline, String> {
+    let text = fs::read_to_string(path).map_err(|e| format!("read {}: {e}", path.display()))?;
+    let doc = Json::parse(&text).map_err(|e| format!("parse {}: {e}", path.display()))?;
+    if doc.get("version").and_then(|v| v.as_i64()) != Some(BASELINE_VERSION as i64) {
+        return Err(format!("unsupported baseline version in {}", path.display()));
+    }
+    let mut entries: Baseline = BTreeMap::new();
+    for e in doc.get("entries").and_then(|v| v.as_arr()).unwrap_or(&[]) {
+        let file = e.get("file").and_then(|v| v.as_str()).unwrap_or_default().to_string();
+        let rule = e.get("rule").and_then(|v| v.as_str()).unwrap_or_default().to_string();
+        let hash = e.get("hash").and_then(|v| v.as_str()).unwrap_or_default().to_string();
+        let count = e.get("count").and_then(|v| v.as_usize()).unwrap_or(0);
+        *entries.entry((file, rule, hash)).or_insert(0) += count;
+    }
+    Ok(entries)
+}
+
+/// Mark each finding new/baselined against the ratchet. Findings are
+/// already sorted; within a `(file, rule, hash)` group the first
+/// `count` occurrences are grandfathered, the rest are new.
+/// Returns `(new, baselined, stale)`.
+pub fn apply_baseline(findings: &mut [Finding], baseline: &Baseline) -> (usize, usize, usize) {
+    let mut used: BTreeMap<(String, String, String), usize> = BTreeMap::new();
+    let mut new = 0usize;
+    for f in findings.iter_mut() {
+        let key = baseline_key(f);
+        let have = baseline.get(&key).copied().unwrap_or(0);
+        let seen = used.entry(key).or_insert(0);
+        if *seen < have {
+            f.new = false;
+            *seen += 1;
+        } else {
+            f.new = true;
+            new += 1;
+        }
+    }
+    let baselined = findings.len() - new;
+    let mut stale = 0usize;
+    for (key, count) in baseline {
+        stale += count - used.get(key).copied().unwrap_or(0);
+    }
+    (new, baselined, stale)
+}
+
+pub fn write_baseline(path: &Path, findings: &[Finding]) -> io::Result<()> {
+    let mut counts: Baseline = BTreeMap::new();
+    for f in findings {
+        *counts.entry(baseline_key(f)).or_insert(0) += 1;
+    }
+    let body = if counts.is_empty() {
+        format!("{{\n  \"entries\": [],\n  \"version\": {BASELINE_VERSION}\n}}\n")
+    } else {
+        let mut parts = Vec::new();
+        for ((file, rule, hash), count) in &counts {
+            parts.push(format!(
+                "    {{\"count\": {count}, \"file\": {}, \"hash\": {}, \"rule\": {}}}",
+                json_string(file),
+                json_string(hash),
+                json_string(rule)
+            ));
+        }
+        format!(
+            "{{\n  \"entries\": [\n{}\n  ],\n  \"version\": {BASELINE_VERSION}\n}}\n",
+            parts.join(",\n")
+        )
+    };
+    fs::write(path, body)
+}
+
+// ---------------------------------------------------------------------------
+// Report emission
+// ---------------------------------------------------------------------------
+
+/// Canonical JSON string: `util::json`'s escaper, shared with the wire
+/// path (and transcribed verbatim in the Python mirror).
+pub fn json_string(s: &str) -> String {
+    let mut out = String::new();
+    write_json(&Json::Str(s.to_string()), &mut out);
+    out
+}
+
+/// The machine-readable report: fixed, alphabetical key order so the
+/// Rust and Python emitters agree byte-for-byte.
+pub fn report_json(
+    findings: &[Finding],
+    file_count: usize,
+    baseline_entries: usize,
+    new: usize,
+    baselined: usize,
+    stale: usize,
+) -> String {
+    let mut parts = Vec::new();
+    for f in findings {
+        parts.push(format!(
+            "{{\"file\": {}, \"hash\": {}, \"line\": {}, \"message\": {}, \"new\": {}, \"rule\": {}, \"snippet\": {}}}",
+            json_string(&f.file),
+            json_string(&f.hash),
+            f.line,
+            json_string(&f.message),
+            if f.new { "true" } else { "false" },
+            json_string(&f.rule),
+            json_string(&f.snippet),
+        ));
+    }
+    let mut out = String::new();
+    let _ = write!(
+        out,
+        "{{\"baseline_entries\": {baseline_entries}, \"baselined\": {baselined}, \"files_scanned\": {file_count}, \"findings\": [{}], \"new\": {new}, \"rules\": {}, \"stale\": {stale}, \"version\": {BASELINE_VERSION}}}",
+        parts.join(", "),
+        RULES.len(),
+    );
+    out
+}
+
+/// The human-readable report: one block per *new* finding plus a
+/// summary line (same shape as the Python mirror's text output).
+pub fn report_text(
+    findings: &[Finding],
+    file_count: usize,
+    new: usize,
+    baselined: usize,
+    stale: usize,
+) -> String {
+    let mut out = String::new();
+    for f in findings {
+        if !f.new {
+            continue;
+        }
+        let _ = writeln!(out, "{}:{}: [{}] {}\n    {}", f.file, f.line, f.rule, f.message, f.snippet);
+    }
+    let _ = writeln!(
+        out,
+        "hrrlint: {new} new, {baselined} baselined, {stale} stale baseline entries, {file_count} files scanned"
+    );
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn two_findings() -> Vec<Finding> {
+        lint_source("engine/x.rs", "fn a(v: Option<u32>) -> u32 { v.unwrap() + v.unwrap() }\n")
+    }
+
+    #[test]
+    fn ratchet_counts_and_staleness() {
+        let mut findings = two_findings();
+        assert_eq!(findings.len(), 2);
+        assert_eq!(findings[0].hash, findings[1].hash);
+        let key = baseline_key(&findings[0]);
+
+        let mut baseline = Baseline::new();
+        baseline.insert(key.clone(), 1);
+        assert_eq!(apply_baseline(&mut findings, &baseline), (1, 1, 0));
+
+        baseline.insert(key.clone(), 2);
+        assert_eq!(apply_baseline(&mut findings, &baseline), (0, 2, 0));
+
+        baseline.insert(key, 3);
+        assert_eq!(apply_baseline(&mut findings, &baseline), (0, 2, 1));
+    }
+
+    #[test]
+    fn baseline_roundtrip() {
+        let mut findings = two_findings();
+        let dir = std::env::temp_dir().join(format!("hrrlint_bl_{}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("baseline.json");
+        write_baseline(&path, &findings).unwrap();
+        let loaded = load_baseline(&path).unwrap();
+        assert_eq!(loaded.values().sum::<usize>(), findings.len());
+        assert_eq!(apply_baseline(&mut findings, &loaded), (0, findings.len(), 0));
+        std::fs::remove_dir_all(&dir).unwrap();
+    }
+
+    #[test]
+    fn empty_baseline_writes_canonical_form() {
+        let dir = std::env::temp_dir().join(format!("hrrlint_ebl_{}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("baseline.json");
+        write_baseline(&path, &[]).unwrap();
+        assert_eq!(std::fs::read_to_string(&path).unwrap(), "{\n  \"entries\": [],\n  \"version\": 1\n}\n");
+        assert!(load_baseline(&path).unwrap().is_empty());
+        std::fs::remove_dir_all(&dir).unwrap();
+    }
+}

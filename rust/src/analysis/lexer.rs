@@ -1,0 +1,335 @@
+//! Hand-rolled Rust lexer for hrrlint — no `syn`, no dependencies.
+//!
+//! Produces a flat token stream plus the comment list (comments never
+//! enter the token stream; they carry `hrrlint: allow(...)` markers).
+//! The lexer understands everything that could hide a token from a
+//! naive grep: line and nested block comments, string literals with
+//! escapes, raw strings `r"…"` / `r#"…"#` (any number of hashes), byte
+//! and raw-byte strings, char literals (including `'\u{…}'` and `'"'`)
+//! vs. lifetimes, and numbers where `.` is consumed only when followed
+//! by a digit (so `0..n` stays three tokens and `0.5f32` stays one).
+//!
+//! The only multi-character punctuation tokens are `::` and `+=` — the
+//! two the rule engine matches on; all other punctuation is emitted one
+//! character at a time.
+//!
+//! This file and `python/analysis/hrrlint.py` are transcriptions of
+//! each other: any change here must land there too (the parity test in
+//! `rust/tests/lint_self.rs` pins byte-identical reports).
+
+#[derive(Clone, Copy, PartialEq, Eq, Debug)]
+pub enum TokenKind {
+    Ident,
+    Num,
+    Str,
+    Char,
+    Life,
+    Punct,
+}
+
+#[derive(Clone, Debug)]
+pub struct Token {
+    pub kind: TokenKind,
+    pub text: String,
+    pub line: usize,
+}
+
+fn is_ident_start(c: char) -> bool {
+    c.is_ascii_alphabetic() || c == '_'
+}
+
+fn is_ident_cont(c: char) -> bool {
+    c.is_ascii_alphanumeric() || c == '_'
+}
+
+/// Tokenize Rust source. Returns `(tokens, comments)` where each
+/// comment is `(start_line, full_text)`.
+pub fn lex(src: &str) -> (Vec<Token>, Vec<(usize, String)>) {
+    let s: Vec<char> = src.chars().collect();
+    let n = s.len();
+    let mut tokens: Vec<Token> = Vec::new();
+    let mut comments: Vec<(usize, String)> = Vec::new();
+    let mut i = 0usize;
+    let mut line = 1usize;
+
+    let push = |tokens: &mut Vec<Token>, kind: TokenKind, text: String, line: usize| {
+        tokens.push(Token { kind, text, line });
+    };
+
+    while i < n {
+        let mut c = s[i];
+        if c == '\n' {
+            line += 1;
+            i += 1;
+            continue;
+        }
+        if c == ' ' || c == '\t' || c == '\r' {
+            i += 1;
+            continue;
+        }
+        // Comments ------------------------------------------------------
+        if c == '/' && i + 1 < n && s[i + 1] == '/' {
+            let start = i;
+            let start_line = line;
+            while i < n && s[i] != '\n' {
+                i += 1;
+            }
+            comments.push((start_line, s[start..i].iter().collect()));
+            continue;
+        }
+        if c == '/' && i + 1 < n && s[i + 1] == '*' {
+            let start = i;
+            let start_line = line;
+            let mut depth = 1usize;
+            i += 2;
+            while i < n && depth > 0 {
+                if s[i] == '/' && i + 1 < n && s[i + 1] == '*' {
+                    depth += 1;
+                    i += 2;
+                } else if s[i] == '*' && i + 1 < n && s[i + 1] == '/' {
+                    depth -= 1;
+                    i += 2;
+                } else {
+                    if s[i] == '\n' {
+                        line += 1;
+                    }
+                    i += 1;
+                }
+            }
+            comments.push((start_line, s[start..i].iter().collect()));
+            continue;
+        }
+        // Raw strings / byte strings -------------------------------------
+        if c == 'r' || c == 'b' {
+            let mut j = i + 1;
+            if c == 'b' && j < n && s[j] == 'r' {
+                j += 1;
+            }
+            let mut hashes = 0usize;
+            let mut k = j;
+            while k < n && s[k] == '#' {
+                hashes += 1;
+                k += 1;
+            }
+            let is_raw = (c == 'r' || (c == 'b' && j == i + 2)) && k < n && s[k] == '"';
+            if is_raw {
+                let start_line = line;
+                k += 1; // past opening quote
+                while k < n {
+                    if s[k] == '\n' {
+                        line += 1;
+                    }
+                    if s[k] == '"'
+                        && k + hashes < n
+                        && s[k + 1..k + 1 + hashes].iter().all(|&h| h == '#')
+                    {
+                        k += 1 + hashes;
+                        break;
+                    }
+                    k += 1;
+                }
+                push(&mut tokens, TokenKind::Str, String::new(), start_line);
+                i = k;
+                continue;
+            }
+            if c == 'b' && i + 1 < n && s[i + 1] == '"' {
+                i += 1; // fall through to the normal string below
+                c = '"';
+            } else if c == 'b' && i + 1 < n && s[i + 1] == '\'' {
+                i += 1; // fall through to the char literal below
+                c = '\'';
+            } else if c == 'r' && i + 2 < n && s[i + 1] == '#' && is_ident_start(s[i + 2]) {
+                // Raw identifier r#name — one ident token.
+                let start = i;
+                i += 2;
+                while i < n && is_ident_cont(s[i]) {
+                    i += 1;
+                }
+                push(&mut tokens, TokenKind::Ident, s[start..i].iter().collect(), line);
+                continue;
+            }
+        }
+        // String literal -------------------------------------------------
+        if c == '"' {
+            let start_line = line;
+            i += 1;
+            while i < n {
+                if s[i] == '\\' {
+                    i += 2;
+                    continue;
+                }
+                if s[i] == '\n' {
+                    line += 1;
+                }
+                if s[i] == '"' {
+                    i += 1;
+                    break;
+                }
+                i += 1;
+            }
+            push(&mut tokens, TokenKind::Str, String::new(), start_line);
+            continue;
+        }
+        // Char literal vs lifetime --------------------------------------
+        if c == '\'' {
+            if i + 1 < n && s[i + 1] == '\\' {
+                // Escaped char literal '\n', '\u{1F600}', '\\', ...
+                let mut j = i + 2;
+                if j < n && s[j] == 'u' && j + 1 < n && s[j + 1] == '{' {
+                    j += 2;
+                    while j < n && s[j] != '}' {
+                        j += 1;
+                    }
+                    j += 1;
+                } else {
+                    j += 1;
+                }
+                if j < n && s[j] == '\'' {
+                    j += 1;
+                }
+                push(&mut tokens, TokenKind::Char, String::new(), line);
+                i = j;
+                continue;
+            }
+            if i + 2 < n && s[i + 2] == '\'' {
+                push(&mut tokens, TokenKind::Char, String::new(), line);
+                i += 3;
+                continue;
+            }
+            // Lifetime: 'a, 'static, '_
+            let mut j = i + 1;
+            while j < n && is_ident_cont(s[j]) {
+                j += 1;
+            }
+            push(&mut tokens, TokenKind::Life, s[i..j].iter().collect(), line);
+            i = j;
+            continue;
+        }
+        // Number ---------------------------------------------------------
+        if c.is_ascii_digit() {
+            let start = i;
+            i += 1;
+            while i < n {
+                let ch = s[i];
+                if is_ident_cont(ch) {
+                    i += 1;
+                } else if ch == '.' && i + 1 < n && s[i + 1].is_ascii_digit() {
+                    i += 1;
+                } else {
+                    break;
+                }
+            }
+            push(&mut tokens, TokenKind::Num, s[start..i].iter().collect(), line);
+            continue;
+        }
+        // Identifier -----------------------------------------------------
+        if is_ident_start(c) {
+            let start = i;
+            while i < n && is_ident_cont(s[i]) {
+                i += 1;
+            }
+            push(&mut tokens, TokenKind::Ident, s[start..i].iter().collect(), line);
+            continue;
+        }
+        // Punctuation ----------------------------------------------------
+        if c == ':' && i + 1 < n && s[i + 1] == ':' {
+            push(&mut tokens, TokenKind::Punct, "::".to_string(), line);
+            i += 2;
+            continue;
+        }
+        if c == '+' && i + 1 < n && s[i + 1] == '=' {
+            push(&mut tokens, TokenKind::Punct, "+=".to_string(), line);
+            i += 2;
+            continue;
+        }
+        push(&mut tokens, TokenKind::Punct, c.to_string(), line);
+        i += 1;
+    }
+    (tokens, comments)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn idents(src: &str) -> Vec<String> {
+        lex(src)
+            .0
+            .iter()
+            .filter(|t| t.kind == TokenKind::Ident)
+            .map(|t| t.text.clone())
+            .collect()
+    }
+
+    #[test]
+    fn strings_hide_tokens() {
+        assert_eq!(idents("let a = \"unwrap() panic!(\\\"x\\\")\";"), ["let", "a"]);
+    }
+
+    #[test]
+    fn raw_strings_hide_tokens() {
+        assert_eq!(idents("let b = r##\"has \"#quote\"# and unwrap()\"##; x"), ["let", "b", "x"]);
+        assert_eq!(idents("let c = br#\"bytes with dbg!()\"#; y"), ["let", "c", "y"]);
+    }
+
+    #[test]
+    fn comments_hide_tokens_and_nest() {
+        let (tokens, comments) =
+            lex("/* outer /* inner unwrap() */ still comment */ real // trailing panic!\n");
+        let ids: Vec<&str> = tokens
+            .iter()
+            .filter(|t| t.kind == TokenKind::Ident)
+            .map(|t| t.text.as_str())
+            .collect();
+        assert_eq!(ids, ["real"]);
+        assert_eq!(comments.len(), 2);
+    }
+
+    #[test]
+    fn char_vs_lifetime() {
+        let (tokens, _) =
+            lex("let c = 'x'; let q = '\"'; let n = '\\n'; fn f<'a>(s: &'a str) {}");
+        let chars = tokens.iter().filter(|t| t.kind == TokenKind::Char).count();
+        let lifes: Vec<&str> = tokens
+            .iter()
+            .filter(|t| t.kind == TokenKind::Life)
+            .map(|t| t.text.as_str())
+            .collect();
+        assert_eq!(chars, 3);
+        assert_eq!(lifes, ["'a", "'a"]);
+        assert!(tokens.iter().all(|t| t.kind != TokenKind::Str));
+    }
+
+    #[test]
+    fn numbers_and_ranges() {
+        let (tokens, _) = lex("for i in 0..n { let x = 0.5f32; }");
+        let nums: Vec<&str> = tokens
+            .iter()
+            .filter(|t| t.kind == TokenKind::Num)
+            .map(|t| t.text.as_str())
+            .collect();
+        assert_eq!(nums, ["0", "0.5f32"]);
+    }
+
+    #[test]
+    fn multichar_puncts() {
+        let (tokens, _) = lex("a::b += 1;");
+        let puncts: Vec<&str> = tokens
+            .iter()
+            .filter(|t| t.kind == TokenKind::Punct)
+            .map(|t| t.text.as_str())
+            .collect();
+        assert!(puncts.contains(&"::"));
+        assert!(puncts.contains(&"+="));
+    }
+
+    #[test]
+    fn line_numbers() {
+        let (tokens, comments) = lex("first\n\"multi\nline\"\nafter // note\n");
+        let first = tokens.iter().find(|t| t.text == "first").map(|t| t.line);
+        let after = tokens.iter().find(|t| t.text == "after").map(|t| t.line);
+        assert_eq!(first, Some(1));
+        assert_eq!(after, Some(4));
+        assert_eq!(comments, vec![(4, "// note".to_string())]);
+    }
+}

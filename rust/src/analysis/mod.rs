@@ -1,0 +1,70 @@
+//! `analysis` — hrrlint, the zero-dependency project-invariant linter.
+//!
+//! A hand-rolled lexer ([`lexer`]) feeds a token-level rule engine
+//! ([`rules`]) with eight lints for the invariants this codebase's
+//! correctness actually rests on (no panics on the serving path, no
+//! wall-clock or hash-order nondeterminism in kernel code, f64
+//! accumulators, bounded channels, checked wire casts, audited lock
+//! nesting, no debug macros). A content-hash baseline ([`baseline`])
+//! ratchets existing debt: new findings fail the build, grandfathered
+//! ones are tracked in `lint_baseline.json` and burned down over PRs.
+//!
+//! Shipped twice, per repo practice: the `hrrlint` cargo bin
+//! (`rust/src/bin/hrrlint.rs`) and the faithful Python transcription
+//! `python/analysis/hrrlint.py` for toolchain-less containers. The two
+//! emit byte-identical `--json` reports; `rust/tests/lint_self.rs`
+//! pins parity on the fixture tree under `rust/tests/lint_fixtures/`.
+
+pub mod baseline;
+pub mod lexer;
+pub mod rules;
+
+pub use baseline::{
+    apply_baseline, discover, lint_tree, load_baseline, report_json, report_text,
+    write_baseline, Baseline, BASELINE_VERSION,
+};
+pub use lexer::{lex, Token, TokenKind};
+pub use rules::{lint_source, Finding, RULES};
+
+use std::path::{Path, PathBuf};
+
+/// Burn-down numbers for bench trajectory metadata (the `lint` key in
+/// `BENCH_*.json`): rule count, grandfathered baseline size, current
+/// finding count, and how many findings the baseline does not cover.
+#[derive(Clone, Copy, Debug)]
+pub struct LintSummary {
+    pub rules: usize,
+    pub baseline: usize,
+    pub findings: usize,
+    pub new: usize,
+}
+
+/// Locate the repo root for self-scans: the working directory when it
+/// holds `rust/src`, else the crate manifest directory (so `bench`
+/// subcommands emit lint metadata no matter where they run from).
+pub fn find_repo_root() -> Option<PathBuf> {
+    let cwd = Path::new(".");
+    if cwd.join("rust/src").is_dir() && cwd.join("lint_baseline.json").is_file() {
+        return Some(cwd.to_path_buf());
+    }
+    let manifest = Path::new(env!("CARGO_MANIFEST_DIR"));
+    if manifest.join("rust/src").is_dir() && manifest.join("lint_baseline.json").is_file() {
+        return Some(manifest.to_path_buf());
+    }
+    None
+}
+
+/// Scan `repo_root/rust/src` against `repo_root/lint_baseline.json`.
+/// `None` when the tree or baseline is missing (e.g. an installed
+/// binary running far from a checkout) — callers omit the metadata.
+pub fn lint_summary(repo_root: &Path) -> Option<LintSummary> {
+    let (mut findings, _files) = lint_tree(&repo_root.join("rust/src")).ok()?;
+    let bl = load_baseline(&repo_root.join("lint_baseline.json")).ok()?;
+    let (new, _baselined, _stale) = apply_baseline(&mut findings, &bl);
+    Some(LintSummary {
+        rules: RULES.len(),
+        baseline: bl.values().sum(),
+        findings: findings.len(),
+        new,
+    })
+}

@@ -1,0 +1,683 @@
+//! hrrlint rule engine: eight project-invariant lints over the token
+//! stream from [`super::lexer`].
+//!
+//! Everything here is token-level and deliberately simple — the rules
+//! are tripwires that force a human re-audit, not a type system. Two
+//! mechanisms keep them honest:
+//!
+//! * items under a `#[test]`-like attribute (`#[cfg(test)]`, `#[test]`)
+//!   are exempt — but `#[cfg(not(test))]` is real code and is not;
+//! * a comment containing `hrrlint: allow(rule-a, rule-b)` suppresses
+//!   those rules on its own line and the line below (the audited
+//!   escape hatch; every use should say why).
+//!
+//! Mirrored line-for-line by `python/analysis/hrrlint.py` — keep the
+//! two in sync (the parity test pins byte-identical reports).
+
+use std::collections::{BTreeMap, BTreeSet};
+
+use super::lexer::{lex, Token, TokenKind};
+use crate::model::artifact::fnv64;
+
+/// The rule identifiers, in documentation order.
+pub const RULES: [&str; 8] = [
+    "panic-path",
+    "wallclock-kernel",
+    "hash-iter-accum",
+    "f32-accum-kernel",
+    "unbounded-channel",
+    "narrow-cast-wire",
+    "lock-order",
+    "debug-macro",
+];
+
+/// One lint hit. `hash` is FNV-1a-64 of `rule:file:snippet` — content-
+/// keyed so the baseline survives unrelated line shifts.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct Finding {
+    pub file: String,
+    pub line: usize,
+    pub rule: String,
+    pub snippet: String,
+    pub message: String,
+    pub hash: String,
+    /// Filled in by [`super::baseline::apply_baseline`].
+    pub new: bool,
+}
+
+pub fn fnv1a64_hex(text: &str) -> String {
+    format!("{:016x}", fnv64(text.as_bytes()))
+}
+
+// ---------------------------------------------------------------------------
+// Scopes (paths are forward-slash, relative to the scan root)
+// ---------------------------------------------------------------------------
+
+fn in_panic_scope(path: &str) -> bool {
+    ["engine/", "net/", "stream/", "model/", "hrr/"].iter().any(|p| path.starts_with(p))
+}
+
+fn in_kernel_scope(path: &str) -> bool {
+    ["hrr/common/", "hrr/hrrformer/", "hrr/hgconv/"].iter().any(|p| path.starts_with(p))
+}
+
+fn in_channel_scope(path: &str) -> bool {
+    ["engine/", "stream/", "net/", "coordinator/"].iter().any(|p| path.starts_with(p))
+}
+
+fn in_wire_scope(path: &str) -> bool {
+    path.starts_with("net/") || path == "util/json.rs"
+}
+
+fn in_lock_scope(path: &str) -> bool {
+    path.starts_with("engine/")
+}
+
+fn in_debug_scope(path: &str) -> bool {
+    !(path == "main.rs" || path.starts_with("bench/") || path.starts_with("bin/"))
+}
+
+// ---------------------------------------------------------------------------
+// Test-region marking + suppressions
+// ---------------------------------------------------------------------------
+
+/// `tokens[i] == '#'`, `tokens[i+1] == '['`. Returns the index of the
+/// matching `]` and whether the attribute is test-like (mentions the
+/// ident `test` without the ident `not`).
+fn scan_attribute(tokens: &[Token], i: usize) -> (usize, bool) {
+    let n = tokens.len();
+    let mut depth = 0usize;
+    let mut has_test = false;
+    let mut has_not = false;
+    let mut j = i + 1;
+    while j < n {
+        let t = &tokens[j];
+        if t.text == "[" {
+            depth += 1;
+        } else if t.text == "]" {
+            depth -= 1;
+            if depth == 0 {
+                return (j, has_test && !has_not);
+            }
+        } else if t.kind == TokenKind::Ident {
+            if t.text == "test" {
+                has_test = true;
+            } else if t.text == "not" {
+                has_not = true;
+            }
+        }
+        j += 1;
+    }
+    (n - 1, false)
+}
+
+/// Boolean per token: inside an item guarded by a test-like attribute.
+fn mark_test_regions(tokens: &[Token]) -> Vec<bool> {
+    let n = tokens.len();
+    let mut in_test = vec![false; n];
+    let mut i = 0usize;
+    while i < n {
+        if tokens[i].text == "#" && i + 1 < n && tokens[i + 1].text == "[" {
+            let attr_start = i;
+            let (close, is_test) = scan_attribute(tokens, i);
+            if is_test {
+                let mut j = close + 1;
+                // Skip any further attributes stacked on the same item.
+                while j + 1 < n && tokens[j].text == "#" && tokens[j + 1].text == "[" {
+                    j = scan_attribute(tokens, j).0 + 1;
+                }
+                // Consume the item: to the matching `}` of its first
+                // brace, or to `;` if none opens first.
+                let mut depth = 0i64;
+                let mut started = false;
+                let mut k = j;
+                while k < n {
+                    let t = tokens[k].text.as_str();
+                    if t == "{" {
+                        depth += 1;
+                        started = true;
+                    } else if t == "}" {
+                        depth -= 1;
+                        if started && depth == 0 {
+                            k += 1;
+                            break;
+                        }
+                    } else if t == ";" && !started && depth == 0 {
+                        k += 1;
+                        break;
+                    }
+                    k += 1;
+                }
+                for flag in in_test.iter_mut().take(k.min(n)).skip(attr_start) {
+                    *flag = true;
+                }
+                i = k;
+                continue;
+            }
+            i = close + 1;
+            continue;
+        }
+        i += 1;
+    }
+    in_test
+}
+
+/// Map line -> rules suppressed on that line. An allow() comment covers
+/// its own line and the next.
+fn collect_suppressions(comments: &[(usize, String)]) -> BTreeMap<usize, BTreeSet<String>> {
+    let mut sup: BTreeMap<usize, BTreeSet<String>> = BTreeMap::new();
+    for (line, text) in comments {
+        let Some(idx) = text.find("hrrlint:") else { continue };
+        let rest = text[idx + "hrrlint:".len()..].trim_start();
+        let Some(inner) = rest.strip_prefix("allow(") else { continue };
+        let Some(close) = inner.find(')') else { continue };
+        let rules: Vec<String> = inner[..close]
+            .replace(',', " ")
+            .split_whitespace()
+            .map(|r| r.to_string())
+            .collect();
+        for ln in [*line, *line + 1] {
+            sup.entry(ln).or_default().extend(rules.iter().cloned());
+        }
+    }
+    sup
+}
+
+// ---------------------------------------------------------------------------
+// The rule engine
+// ---------------------------------------------------------------------------
+
+/// Token text at `i`, or "" out of range (pass `i.wrapping_sub(1)` for
+/// "previous token" — the wrap lands far out of range, same as the
+/// Python mirror's negative-index guard).
+fn tk(tokens: &[Token], i: usize) -> &str {
+    tokens.get(i).map(|t| t.text.as_str()).unwrap_or("")
+}
+
+fn is_ident(tokens: &[Token], i: usize) -> bool {
+    tokens.get(i).map(|t| t.kind == TokenKind::Ident).unwrap_or(false)
+}
+
+fn is_num(tokens: &[Token], i: usize) -> bool {
+    tokens.get(i).map(|t| t.kind == TokenKind::Num).unwrap_or(false)
+}
+
+struct Ctx<'a> {
+    path: &'a str,
+    lines: Vec<&'a str>,
+    in_test: Vec<bool>,
+    sup: BTreeMap<usize, BTreeSet<String>>,
+    findings: Vec<Finding>,
+}
+
+impl<'a> Ctx<'a> {
+    fn emit(&mut self, tokens: &[Token], idx: usize, rule: &str, message: String) {
+        let line = tokens[idx].line;
+        if self.in_test[idx] {
+            return;
+        }
+        if self.sup.get(&line).map(|rules| rules.contains(rule)).unwrap_or(false) {
+            return;
+        }
+        let snippet = if line >= 1 && line <= self.lines.len() {
+            self.lines[line - 1].trim().to_string()
+        } else {
+            String::new()
+        };
+        let hash = fnv1a64_hex(&format!("{rule}:{}:{snippet}", self.path));
+        self.findings.push(Finding {
+            file: self.path.to_string(),
+            line,
+            rule: rule.to_string(),
+            snippet,
+            message,
+            hash,
+            new: false,
+        });
+    }
+}
+
+/// Lint one file; `path` is the forward-slash path relative to the scan
+/// root (scoping keys off it).
+pub fn lint_source(path: &str, src: &str) -> Vec<Finding> {
+    let (tokens, comments) = lex(src);
+    let n = tokens.len();
+    let mut ctx = Ctx {
+        path,
+        lines: src.split('\n').collect(),
+        in_test: mark_test_regions(&tokens),
+        sup: collect_suppressions(&comments),
+        findings: Vec::new(),
+    };
+
+    // --- panic-path ----------------------------------------------------
+    if in_panic_scope(path) {
+        for i in 0..n {
+            if is_ident(&tokens, i) && matches!(tk(&tokens, i), "unwrap" | "expect") {
+                if tk(&tokens, i.wrapping_sub(1)) == "." && tk(&tokens, i + 1) == "(" {
+                    let what = tk(&tokens, i).to_string();
+                    ctx.emit(&tokens, i, "panic-path", format!("{what}() on serving path (use typed errors)"));
+                }
+            } else if is_ident(&tokens, i)
+                && matches!(tk(&tokens, i), "panic" | "unreachable")
+                && tk(&tokens, i + 1) == "!"
+            {
+                let what = tk(&tokens, i).to_string();
+                ctx.emit(&tokens, i, "panic-path", format!("{what}! on serving path (use typed errors)"));
+            }
+        }
+    }
+
+    // --- wallclock-kernel ----------------------------------------------
+    if in_kernel_scope(path) {
+        for i in 0..n {
+            if !is_ident(&tokens, i) {
+                continue;
+            }
+            if tk(&tokens, i) == "Instant" && tk(&tokens, i + 1) == "::" && tk(&tokens, i + 2) == "now" {
+                ctx.emit(&tokens, i, "wallclock-kernel", "Instant::now in deterministic kernel code".into());
+            } else if tk(&tokens, i) == "SystemTime" {
+                ctx.emit(&tokens, i, "wallclock-kernel", "SystemTime in deterministic kernel code".into());
+            }
+        }
+    }
+
+    // --- hash-iter-accum (all files) ------------------------------------
+    let hash_names = collect_hash_names(&tokens);
+    if !hash_names.is_empty() {
+        check_hash_iteration(&tokens, &hash_names, &mut ctx);
+    }
+
+    // --- f32-accum-kernel ----------------------------------------------
+    if in_kernel_scope(path) {
+        check_f32_accum(&tokens, &mut ctx);
+    }
+
+    // --- unbounded-channel ---------------------------------------------
+    if in_channel_scope(path) {
+        for i in 0..n {
+            if is_ident(&tokens, i)
+                && tk(&tokens, i) == "channel"
+                // `channel(` or turbofish `channel::<T>(`.
+                && (tk(&tokens, i + 1) == "("
+                    || (tk(&tokens, i + 1) == "::" && tk(&tokens, i + 2) == "<"))
+            {
+                ctx.emit(&tokens, i, "unbounded-channel", "unbounded channel() (engine mandates sync_channel)".into());
+            }
+        }
+    }
+
+    // --- narrow-cast-wire ----------------------------------------------
+    if in_wire_scope(path) {
+        for i in 0..n {
+            if is_ident(&tokens, i)
+                && tk(&tokens, i) == "as"
+                && is_ident(&tokens, i + 1)
+                && matches!(tk(&tokens, i + 1), "usize" | "u32")
+            {
+                let ty = tk(&tokens, i + 1).to_string();
+                ctx.emit(
+                    &tokens,
+                    i,
+                    "narrow-cast-wire",
+                    format!("narrowing `as {ty}` cast in wire-facing code (use checked conversion)"),
+                );
+            }
+        }
+    }
+
+    // --- lock-order ----------------------------------------------------
+    if in_lock_scope(path) {
+        check_lock_order(&tokens, &mut ctx);
+    }
+
+    // --- debug-macro ---------------------------------------------------
+    if in_debug_scope(path) {
+        for i in 0..n {
+            if is_ident(&tokens, i)
+                && matches!(tk(&tokens, i), "todo" | "dbg" | "println")
+                && tk(&tokens, i + 1) == "!"
+            {
+                let what = tk(&tokens, i).to_string();
+                ctx.emit(&tokens, i, "debug-macro", format!("{what}! outside main/bench (remove before merge)"));
+            }
+        }
+    }
+
+    ctx.findings
+}
+
+/// Names of variables/fields whose type mentions HashMap/HashSet: walk
+/// back from the type ident to the nearest `:` annotation (field or
+/// typed let), else to a `let [mut] name =` binding.
+fn collect_hash_names(tokens: &[Token]) -> Vec<String> {
+    let n = tokens.len();
+    let mut names: Vec<String> = Vec::new();
+    for i in 0..n {
+        if !(tokens[i].kind == TokenKind::Ident && matches!(tokens[i].text.as_str(), "HashMap" | "HashSet")) {
+            continue;
+        }
+        let mut name = String::new();
+        let mut j = i as i64 - 1;
+        while j >= 0 {
+            let text = tokens[j as usize].text.as_str();
+            if matches!(text, ";" | "{" | "}") {
+                break;
+            }
+            if text == ":" {
+                if j >= 1 && tokens[(j - 1) as usize].kind == TokenKind::Ident {
+                    name = tokens[(j - 1) as usize].text.clone();
+                }
+                break;
+            }
+            if text == "=" {
+                let mut k = j - 1;
+                while k >= 0 {
+                    let t2 = tokens[k as usize].text.as_str();
+                    if matches!(t2, ";" | "{" | "}") {
+                        break;
+                    }
+                    if tokens[k as usize].kind == TokenKind::Ident
+                        && t2 != "mut"
+                        && k >= 1
+                        && matches!(tokens[(k - 1) as usize].text.as_str(), "let" | "mut")
+                    {
+                        name = t2.to_string();
+                        break;
+                    }
+                    k -= 1;
+                }
+                break;
+            }
+            j -= 1;
+        }
+        if !name.is_empty() && !names.contains(&name) {
+            names.push(name);
+        }
+    }
+    names
+}
+
+const HASH_ITER_MESSAGE: &str = "hash-order iteration feeds an accumulation (nondeterministic order)";
+
+fn check_hash_iteration(tokens: &[Token], hash_names: &[String], ctx: &mut Ctx) {
+    let n = tokens.len();
+    // (a) `for ... in <hash_name>... {` whose body accumulates.
+    for i in 0..n {
+        if !(is_ident(tokens, i) && tk(tokens, i) == "for") {
+            continue;
+        }
+        // Header: tokens up to the body `{` at bracket depth 0.
+        let mut depth = 0i64;
+        let mut j = i + 1;
+        let mut header_hit = false;
+        while j < n {
+            let t = tk(tokens, j);
+            if matches!(t, "(" | "[") {
+                depth += 1;
+            } else if matches!(t, ")" | "]") {
+                depth -= 1;
+            } else if t == "{" && depth == 0 {
+                break;
+            } else if t == ";" {
+                j = n; // not a for-loop header (e.g. `for` in a macro)
+                break;
+            } else if is_ident(tokens, j) && hash_names.iter().any(|h| h == t) {
+                header_hit = true;
+            }
+            j += 1;
+        }
+        if j >= n || !header_hit {
+            continue;
+        }
+        // Body: to the matching `}`.
+        let mut bdepth = 0i64;
+        let mut k = j;
+        let mut accum = false;
+        while k < n {
+            let t = tk(tokens, k);
+            if t == "{" {
+                bdepth += 1;
+            } else if t == "}" {
+                bdepth -= 1;
+                if bdepth == 0 {
+                    break;
+                }
+            } else if t == "+=" {
+                accum = true;
+            } else if t == "."
+                && is_ident(tokens, k + 1)
+                && matches!(tk(tokens, k + 1), "push" | "extend")
+                && tk(tokens, k + 2) == "("
+            {
+                accum = true;
+            }
+            k += 1;
+        }
+        if accum {
+            ctx.emit(tokens, i, "hash-iter-accum", HASH_ITER_MESSAGE.into());
+        }
+    }
+    // (b) `<hash_name>.iter()...collect/fold/sum` chains.
+    for i in 0..n {
+        if is_ident(tokens, i) && hash_names.iter().any(|h| h == tk(tokens, i)) && tk(tokens, i + 1) == "." {
+            if is_ident(tokens, i + 2)
+                && matches!(tk(tokens, i + 2), "iter" | "keys" | "values" | "drain" | "into_iter")
+            {
+                let mut j = i + 3;
+                while j < n && tk(tokens, j) != ";" {
+                    if is_ident(tokens, j) && matches!(tk(tokens, j), "collect" | "fold" | "sum") {
+                        ctx.emit(tokens, i, "hash-iter-accum", HASH_ITER_MESSAGE.into());
+                        break;
+                    }
+                    j += 1;
+                }
+            }
+        }
+    }
+}
+
+fn check_f32_accum(tokens: &[Token], ctx: &mut Ctx) {
+    let n = tokens.len();
+    // f32-typed bindings: `let [mut] name: f32` or `= <num ending f32>`.
+    let mut f32_names: Vec<String> = Vec::new();
+    for i in 0..n {
+        if !(is_ident(tokens, i) && tk(tokens, i) == "let") {
+            continue;
+        }
+        let mut j = i + 1;
+        if tk(tokens, j) == "mut" {
+            j += 1;
+        }
+        if !is_ident(tokens, j) {
+            continue;
+        }
+        let name = tk(tokens, j).to_string();
+        let typed = tk(tokens, j + 1) == ":" && tk(tokens, j + 2) == "f32";
+        let suffixed = tk(tokens, j + 1) == "=" && is_num(tokens, j + 2) && tk(tokens, j + 2).ends_with("f32");
+        if (typed || suffixed) && !f32_names.contains(&name) {
+            f32_names.push(name);
+        }
+    }
+    if f32_names.is_empty() {
+        return;
+    }
+    // Loop-depth brace tracking: fire on `name +=` inside any loop body.
+    let mut brace_is_loop: Vec<bool> = Vec::new();
+    let mut pending_loop = false;
+    for i in 0..n {
+        let t = tk(tokens, i);
+        if is_ident(tokens, i) && matches!(t, "for" | "while" | "loop") {
+            pending_loop = true;
+        } else if t == "{" {
+            brace_is_loop.push(pending_loop);
+            pending_loop = false;
+        } else if t == "}" {
+            brace_is_loop.pop();
+        } else if t == ";" {
+            pending_loop = false;
+        } else if t == "+="
+            && is_ident(tokens, i.wrapping_sub(1))
+            && f32_names.iter().any(|f| f == tk(tokens, i.wrapping_sub(1)))
+            && brace_is_loop.iter().any(|&b| b)
+        {
+            ctx.emit(
+                tokens,
+                i - 1,
+                "f32-accum-kernel",
+                "f32 `+=` accumulation in a loop (use an f64 accumulator)".into(),
+            );
+        }
+    }
+}
+
+const LOCK_ORDER_MESSAGE: &str = "ParamSlot lock and ReloadHub mutex nested in one function \
+                                  (canonical order: hub -> slot; see engine/mod.rs)";
+
+fn check_lock_order(tokens: &[Token], ctx: &mut Ctx) {
+    let n = tokens.len();
+    let mut i = 0usize;
+    while i < n {
+        if !(is_ident(tokens, i) && tk(tokens, i) == "fn" && is_ident(tokens, i + 1)) {
+            i += 1;
+            continue;
+        }
+        // Body: first `{` after the signature, to its matching `}`.
+        let mut j = i + 2;
+        while j < n && tk(tokens, j) != "{" && tk(tokens, j) != ";" {
+            j += 1;
+        }
+        if j >= n || tk(tokens, j) == ";" {
+            i = j + 1;
+            continue;
+        }
+        let mut depth = 0i64;
+        let mut end = j;
+        while end < n {
+            if tk(tokens, end) == "{" {
+                depth += 1;
+            } else if tk(tokens, end) == "}" {
+                depth -= 1;
+                if depth == 0 {
+                    break;
+                }
+            }
+            end += 1;
+        }
+        let mut first_hub: Option<usize> = None;
+        let mut first_slot: Option<usize> = None;
+        for k in j..(end + 1).min(n) {
+            if tk(tokens, k) != "." {
+                continue;
+            }
+            let recv = if is_ident(tokens, k.wrapping_sub(1)) { tk(tokens, k.wrapping_sub(1)) } else { "" };
+            let meth = if is_ident(tokens, k + 1) { tk(tokens, k + 1) } else { "" };
+            if tk(tokens, k + 2) != "(" {
+                continue;
+            }
+            if meth == "lock" && (recv == "lock" || recv.to_lowercase().contains("hub")) {
+                if first_hub.is_none() {
+                    first_hub = Some(k + 1);
+                }
+            } else if matches!(meth, "pin" | "install" | "read" | "write")
+                && recv.to_lowercase().contains("slot")
+                && first_slot.is_none()
+            {
+                first_slot = Some(k + 1);
+            }
+        }
+        if let (Some(h), Some(s)) = (first_hub, first_slot) {
+            ctx.emit(tokens, h.max(s), "lock-order", LOCK_ORDER_MESSAGE.into());
+        }
+        i = end + 1;
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn rules_of(findings: &[Finding]) -> Vec<(String, usize)> {
+        findings.iter().map(|f| (f.rule.clone(), f.line)).collect()
+    }
+
+    #[test]
+    fn cfg_test_exemption() {
+        let src = "pub fn live(v: Option<u32>) -> u32 { v.unwrap() }\n\
+                   #[cfg(test)]\n\
+                   mod tests {\n\
+                   \x20   #[test]\n\
+                   \x20   fn t() { None::<u32>.unwrap(); panic!(\"x\"); }\n\
+                   }\n";
+        assert_eq!(rules_of(&lint_source("engine/x.rs", src)), [("panic-path".to_string(), 1)]);
+    }
+
+    #[test]
+    fn cfg_not_test_still_fires() {
+        let src = "#[cfg(not(test))]\npub fn live(v: Option<u32>) -> u32 { v.unwrap() }\n";
+        assert_eq!(rules_of(&lint_source("engine/x.rs", src)), [("panic-path".to_string(), 2)]);
+    }
+
+    #[test]
+    fn suppression_same_line_and_next() {
+        let src = "fn a(v: Option<u32>) -> u32 {\n    // hrrlint: allow(panic-path)\n    v.unwrap()\n}\n";
+        assert!(lint_source("engine/x.rs", src).is_empty());
+        let src = "fn a(v: Option<u32>) -> u32 {\n    v.unwrap() // hrrlint: allow(panic-path)\n}\n";
+        assert!(lint_source("engine/x.rs", src).is_empty());
+        let src = "fn a(v: Option<u32>) -> u32 {\n    v.unwrap() // hrrlint: allow(debug-macro)\n}\n";
+        assert_eq!(rules_of(&lint_source("engine/x.rs", src)), [("panic-path".to_string(), 2)]);
+    }
+
+    #[test]
+    fn scoping_by_path() {
+        let src = "fn a(v: Option<u32>) -> u32 { v.unwrap() }\n";
+        assert!(lint_source("util/other.rs", src).is_empty());
+        assert_eq!(rules_of(&lint_source("stream/x.rs", src)), [("panic-path".to_string(), 1)]);
+        let src = "fn k() { let t = std::time::Instant::now(); drop(t); }\n";
+        assert!(lint_source("hrr/grad.rs", src).is_empty());
+        assert_eq!(rules_of(&lint_source("hrr/common/x.rs", src)), [("wallclock-kernel".to_string(), 1)]);
+        let src = "fn m() { println!(\"x\"); }\n";
+        assert!(lint_source("main.rs", src).is_empty());
+        assert!(lint_source("bench/native.rs", src).is_empty());
+        assert!(lint_source("bin/hrrlint.rs", src).is_empty());
+        assert_eq!(rules_of(&lint_source("model/x.rs", src)), [("debug-macro".to_string(), 1)]);
+    }
+
+    #[test]
+    fn turbofish_channel() {
+        let src = "fn q() { let (tx, rx) = channel::<u32>(); drop((tx, rx)); }\n";
+        assert_eq!(rules_of(&lint_source("engine/x.rs", src)), [("unbounded-channel".to_string(), 1)]);
+        let src = "fn q() { let (tx, rx) = sync_channel::<u32>(4); drop((tx, rx)); }\n";
+        assert!(lint_source("engine/x.rs", src).is_empty());
+    }
+
+    #[test]
+    fn hash_iteration_and_escape() {
+        let src = "use std::collections::HashMap;\n\
+                   fn s(m: &HashMap<u64, u64>) -> u64 {\n\
+                   \x20   let mut t = 0u64;\n\
+                   \x20   for (_k, v) in m.iter() { t += v; }\n\
+                   \x20   t\n\
+                   }\n";
+        assert_eq!(rules_of(&lint_source("util/x.rs", src)), [("hash-iter-accum".to_string(), 4)]);
+    }
+
+    #[test]
+    fn lock_order_needs_both_families() {
+        let src = "fn both(hub: &H, slot: &S) { let _g = hub.lock.lock(); let _v = slot.read(); }\n";
+        assert_eq!(rules_of(&lint_source("engine/x.rs", src)), [("lock-order".to_string(), 1)]);
+        let src = "fn one(slot: &S) { let _v = slot.read(); }\n";
+        assert!(lint_source("engine/x.rs", src).is_empty());
+        // Outside engine/ the rule is out of scope.
+        let src = "fn both(hub: &H, slot: &S) { let _g = hub.lock.lock(); let _v = slot.read(); }\n";
+        assert!(lint_source("stream/x.rs", src).is_empty());
+    }
+
+    #[test]
+    fn hash_is_content_keyed() {
+        let a = lint_source("engine/x.rs", "fn a(v: Option<u32>) -> u32 { v.unwrap() }\n");
+        let b = lint_source("engine/x.rs", "// shifted\n\n\nfn a(v: Option<u32>) -> u32 { v.unwrap() }\n");
+        assert_ne!(a[0].line, b[0].line);
+        assert_eq!(a[0].hash, b[0].hash);
+    }
+}

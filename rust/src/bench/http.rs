@@ -370,6 +370,9 @@ fn merge_into_trajectory(path: &Path, doc: Json) -> Result<()> {
         }
     };
     root.insert("http".to_string(), doc);
+    if let Some(lint) = super::lint_doc() {
+        root.insert("lint".to_string(), lint);
+    }
     let out = Json::Obj(root);
     std::fs::write(path, format!("{out}\n")).with_context(|| format!("write {}", path.display()))
 }

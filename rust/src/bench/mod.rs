@@ -12,7 +12,26 @@ pub mod speed;
 pub mod stream;
 pub mod weights;
 
+use std::collections::BTreeMap;
 use std::path::PathBuf;
+
+use crate::util::json::Json;
+
+/// The `"lint"` subtree for `BENCH_*.json` trajectory metadata: hrrlint
+/// rule count, grandfathered-baseline size, and current finding counts,
+/// so the panic-path burn-down is visible across PRs next to the perf
+/// rows. `None` when the bench runs outside a checkout (no tree or
+/// baseline to scan) — callers then omit the key rather than guessing.
+pub fn lint_doc() -> Option<Json> {
+    let root = crate::analysis::find_repo_root()?;
+    let summary = crate::analysis::lint_summary(&root)?;
+    let mut m = BTreeMap::new();
+    m.insert("rules".to_string(), Json::Num(summary.rules as f64));
+    m.insert("baseline".to_string(), Json::Num(summary.baseline as f64));
+    m.insert("findings".to_string(), Json::Num(summary.findings as f64));
+    m.insert("new".to_string(), Json::Num(summary.new as f64));
+    Some(Json::Obj(m))
+}
 
 /// Where bench CSV/Markdown output lands.
 pub fn results_dir() -> PathBuf {

@@ -241,6 +241,9 @@ fn write_json(rows: &[NativeRow], threads: usize, path: &Path) -> Result<()> {
     if let (Json::Obj(root), Some(stream)) = (&mut doc, prior_stream) {
         root.insert("stream".to_string(), stream);
     }
+    if let (Json::Obj(root), Some(lint)) = (&mut doc, super::lint_doc()) {
+        root.insert("lint".to_string(), lint);
+    }
     std::fs::write(path, format!("{doc}\n"))
         .with_context(|| format!("write {}", path.display()))?;
     eprintln!("[native] trajectory → {}", path.display());

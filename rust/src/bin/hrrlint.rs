@@ -1,0 +1,120 @@
+//! hrrlint — the project-invariant linter, as a cargo bin.
+//!
+//! CLI, exit codes, and output are identical to the Python mirror
+//! (`python3 python/analysis/hrrlint.py`); verify.sh runs whichever the
+//! container supports. See `rust/src/analysis/` for the lexer, rules,
+//! and the baseline-ratchet semantics.
+
+use std::path::Path;
+use std::process::ExitCode;
+
+use hrrformer::analysis::{
+    apply_baseline, lint_tree, load_baseline, report_json, report_text, write_baseline,
+    Baseline,
+};
+
+const USAGE: &str = "usage: hrrlint [--root DIR] [--baseline FILE] [--json] [--update-baseline] [--no-baseline]
+
+  --root DIR          tree to scan (default rust/src)
+  --baseline FILE     ratchet file (default lint_baseline.json)
+  --json              machine-readable report on stdout
+  --update-baseline   rewrite the baseline from the current findings
+  --no-baseline       treat every finding as new (fixture/CI mode)
+";
+
+fn main() -> ExitCode {
+    let args: Vec<String> = std::env::args().skip(1).collect();
+    let mut root = String::from("rust/src");
+    let mut baseline_path = String::from("lint_baseline.json");
+    let mut as_json = false;
+    let mut update = false;
+    let mut no_baseline = false;
+    let mut i = 0usize;
+    while i < args.len() {
+        match args[i].as_str() {
+            "--root" if i + 1 < args.len() => {
+                root = args[i + 1].clone();
+                i += 2;
+            }
+            "--baseline" if i + 1 < args.len() => {
+                baseline_path = args[i + 1].clone();
+                i += 2;
+            }
+            "--json" => {
+                as_json = true;
+                i += 1;
+            }
+            "--update-baseline" => {
+                update = true;
+                i += 1;
+            }
+            "--no-baseline" => {
+                no_baseline = true;
+                i += 1;
+            }
+            "-h" | "--help" => {
+                print!("{USAGE}");
+                return ExitCode::SUCCESS;
+            }
+            other => {
+                eprint!("hrrlint: unknown argument '{other}'\n{USAGE}");
+                return ExitCode::from(2);
+            }
+        }
+    }
+    let root = Path::new(&root);
+    if !root.is_dir() {
+        eprintln!("hrrlint: root '{}' is not a directory", root.display());
+        return ExitCode::from(2);
+    }
+    let (mut findings, file_count) = match lint_tree(root) {
+        Ok(r) => r,
+        Err(e) => {
+            eprintln!("hrrlint: scan failed: {e}");
+            return ExitCode::from(2);
+        }
+    };
+    if update {
+        if let Err(e) = write_baseline(Path::new(&baseline_path), &findings) {
+            eprintln!("hrrlint: write baseline: {e}");
+            return ExitCode::from(2);
+        }
+        println!(
+            "hrrlint: baseline rewritten: {} findings across {} files -> {}",
+            findings.len(),
+            file_count,
+            baseline_path
+        );
+        return ExitCode::SUCCESS;
+    }
+    let baseline: Baseline = if no_baseline {
+        Baseline::new()
+    } else {
+        let path = Path::new(&baseline_path);
+        if !path.is_file() {
+            eprintln!(
+                "hrrlint: baseline '{baseline_path}' not found (use --no-baseline or --update-baseline)"
+            );
+            return ExitCode::from(2);
+        }
+        match load_baseline(path) {
+            Ok(b) => b,
+            Err(e) => {
+                eprintln!("hrrlint: {e}");
+                return ExitCode::from(2);
+            }
+        }
+    };
+    let baseline_entries: usize = baseline.values().sum();
+    let (new, baselined, stale) = apply_baseline(&mut findings, &baseline);
+    if as_json {
+        println!("{}", report_json(&findings, file_count, baseline_entries, new, baselined, stale));
+    } else {
+        print!("{}", report_text(&findings, file_count, new, baselined, stale));
+    }
+    if new > 0 {
+        ExitCode::from(1)
+    } else {
+        ExitCode::SUCCESS
+    }
+}

@@ -284,7 +284,10 @@ pub struct EngineStats {
 
 impl EngineStats {
     pub(crate) fn record_span(&self, span: ExecSpan) {
-        let mut spans = self.spans.lock().unwrap();
+        // Stats locks guard plain data; a panic mid-push cannot leave
+        // them inconsistent, so poisoned locks are explicitly recovered
+        // rather than propagated into the serving path.
+        let mut spans = self.spans.lock().unwrap_or_else(|p| p.into_inner());
         if spans.len() == SPAN_CAPACITY {
             spans.pop_front();
         }
@@ -297,11 +300,16 @@ impl EngineStats {
 
     /// The most recent execution spans (capped at `SPAN_CAPACITY`).
     pub fn spans(&self) -> Vec<ExecSpan> {
-        self.spans.lock().unwrap().iter().copied().collect()
+        self.spans
+            .lock()
+            .unwrap_or_else(|p| p.into_inner())
+            .iter()
+            .copied()
+            .collect()
     }
 
     pub(crate) fn install_gauges(&self, gauges: Vec<(usize, Arc<BucketGauge>)>) {
-        *self.depths.lock().unwrap() = gauges;
+        *self.depths.lock().unwrap_or_else(|p| p.into_inner()) = gauges;
     }
 
     /// Live per-bucket queue depth as (bucket T, in-flight jobs),
@@ -310,7 +318,7 @@ impl EngineStats {
     pub fn queue_depths(&self) -> Vec<(usize, usize)> {
         self.depths
             .lock()
-            .unwrap()
+            .unwrap_or_else(|p| p.into_inner())
             .iter()
             .map(|(t, g)| (*t, g.depth.load(Ordering::Relaxed).max(0) as usize))
             .collect()
@@ -507,6 +515,16 @@ pub struct ReloadReport {
 /// with, and the next pin sees the new version. Reloads serialize on an
 /// internal lock; an artifact that validates against **no** bucket
 /// changes nothing (the engine is untouched).
+///
+/// **Lock order (audited, enforced by the `lock-order` hrrlint rule):**
+/// the canonical nesting is *hub mutex -> slot RwLock*. `reload` holds
+/// the hub mutex across every `ParamSlot::install` so a concurrent
+/// reload cannot interleave half-applied weight sets; executors only
+/// ever take a slot's lock (`pin`) without the hub mutex, and no code
+/// path takes the hub mutex while holding a slot lock, so the nesting
+/// is acyclic and cannot deadlock. Any *new* site that nests the two
+/// must either follow hub -> slot or restructure; the lint flags every
+/// function body that touches both so the ordering gets re-audited.
 pub struct ReloadHub {
     /// Serializes reloads so concurrent installs cannot interleave
     /// half-applied weight sets across buckets.
@@ -548,7 +566,12 @@ impl ReloadHub {
     /// structure (names/shapes/dtypes vs its own config). Buckets that
     /// reject keep serving their current weights.
     pub fn reload(&self, artifact: &Artifact) -> ReloadReport {
-        let _guard = self.lock.lock().expect("reload lock poisoned");
+        // A poisoned reload mutex means a previous reload panicked
+        // between bucket flips; the slots themselves are still
+        // consistent (install is atomic per bucket), so recover the
+        // guard and serialize as usual instead of killing the admin
+        // path.
+        let _guard = self.lock.lock().unwrap_or_else(|p| p.into_inner());
         let mut accepted: Vec<&ReloadBucket> = Vec::new();
         let mut rejected: Vec<(String, String)> = Vec::new();
         for base in &self.fixed {
@@ -579,6 +602,11 @@ impl ReloadHub {
         }
         let next = self.version() + 1;
         for b in &accepted {
+            // Canonical hub -> slot order (see the lock-order note on
+            // `ReloadHub`): the hub mutex is held here precisely so
+            // concurrent reloads cannot interleave half-applied weight
+            // sets across buckets.
+            // hrrlint: allow(lock-order)
             b.slot.install(artifact.params.clone(), next);
         }
         self.version.store(next, Ordering::SeqCst);
@@ -1170,12 +1198,16 @@ fn routing_loop(
                     } else {
                         if stash[i].len() >= stash_cap {
                             // Bounded stash overflow: park on this bucket
-                            // (oldest job first, preserving FIFO).
-                            let oldest = stash[i].pop_front().unwrap();
-                            if let Err(std::sync::mpsc::SendError(ExecMsg::Job(j))) =
-                                bucket_txs[i].send(ExecMsg::Job(oldest))
-                            {
-                                let _ = j.reply.send(Err(EngineError::Shutdown));
+                            // (oldest job first, preserving FIFO). The
+                            // stash is non-empty on this branch, but a
+                            // panic here would wedge the router, so the
+                            // pop stays panic-free regardless.
+                            if let Some(oldest) = stash[i].pop_front() {
+                                if let Err(std::sync::mpsc::SendError(ExecMsg::Job(j))) =
+                                    bucket_txs[i].send(ExecMsg::Job(oldest))
+                                {
+                                    let _ = j.reply.send(Err(EngineError::Shutdown));
+                                }
                             }
                         }
                         stash[i].push_back(job);

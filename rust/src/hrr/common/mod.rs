@@ -500,19 +500,23 @@ impl ParamSlot {
     /// pass, so concurrent [`ParamSlot::install`]s can never change the
     /// weights under running arithmetic.
     pub fn pin(&self) -> Arc<ParamVersion> {
-        Arc::clone(&self.inner.read().expect("param slot poisoned"))
+        // The slot only ever holds a fully constructed Arc (install
+        // builds the new generation *before* taking the write lock), so
+        // a poisoned lock still guards a consistent value — recover it
+        // rather than panicking the executor that pins.
+        Arc::clone(&self.inner.read().unwrap_or_else(|p| p.into_inner()))
     }
 
     /// Publish a new generation. In-flight pins keep the old `Arc`
     /// alive; the old store drops when its last pinner finishes.
     pub fn install(&self, store: ParamStore, version: u64) {
-        *self.inner.write().expect("param slot poisoned") =
+        *self.inner.write().unwrap_or_else(|p| p.into_inner()) =
             Arc::new(ParamVersion { version, store });
     }
 
     /// The currently published generation number.
     pub fn version(&self) -> u64 {
-        self.inner.read().expect("param slot poisoned").version
+        self.inner.read().unwrap_or_else(|p| p.into_inner()).version
     }
 }
 

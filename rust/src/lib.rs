@@ -18,6 +18,7 @@
 // whose `new` mirrors an explicit `Default`.
 #![allow(clippy::len_without_is_empty)]
 
+pub mod analysis;
 pub mod bench;
 pub mod coordinator;
 pub mod data;

@@ -260,7 +260,7 @@ impl ChunkedDecoder {
                     } else if let Some(d) = (b as char).to_digit(16) {
                         *size = size
                             .checked_mul(16)
-                            .and_then(|s| s.checked_add(d as usize))
+                            .and_then(|s| usize::try_from(d).ok().and_then(|d| s.checked_add(d)))
                             .filter(|&s| s <= MAX_CHUNK_SIZE)
                             .ok_or(HttpParseError::Malformed("chunk size too large"))?;
                         *digits += 1;

@@ -209,8 +209,11 @@ impl HttpServer {
                 .name(format!("http-conn-{i}"))
                 .spawn(move || loop {
                     // hold the lock only for the recv, never while
-                    // driving a connection
-                    let next = rx.lock().unwrap().recv();
+                    // driving a connection; a poisoned lock (a sibling
+                    // driver panicked mid-recv) still guards a valid
+                    // Receiver, so recover it instead of cascading the
+                    // panic across every driver thread
+                    let next = rx.lock().unwrap_or_else(|p| p.into_inner()).recv();
                     match next {
                         Ok(stream) => conn::drive(stream, &ctx),
                         // listener dropped the tx and the queue is

@@ -362,12 +362,17 @@ impl StreamRegistry {
     /// rather than [`StreamError::Unknown`]. Returns the evicted ids.
     pub fn sweep_idle(&mut self) -> Vec<u64> {
         let timeout = self.cfg.idle_timeout;
-        let evict: Vec<u64> = self
+        // The candidate set comes out of the HashMap in arbitrary
+        // order; sort before evicting so the returned ids (and the
+        // retire/log order operators see) are deterministic.
+        let mut evict: Vec<u64> = self
+            // hrrlint: allow(hash-iter-accum) -- sorted below
             .streams
             .iter()
             .filter(|(_, s)| s.last_touch.elapsed() >= timeout)
             .map(|(&id, _)| id)
             .collect();
+        evict.sort_unstable();
         for &id in &evict {
             // Dropping the OpenStream drops its SpoolWriter, which
             // unlinks the spool file.

@@ -1,0 +1,29 @@
+//! hrrlint fixture: lock-order seeded violation in an `engine/`-scoped
+//! path. Never compiled; walked by the linter only.
+
+use std::sync::{Mutex, RwLock};
+
+pub struct Hub {
+    pub lock: Mutex<()>,
+}
+
+pub struct WeightSlot {
+    inner: RwLock<u64>,
+}
+
+pub fn nested_acquisition(hub: &Hub, slot: &WeightSlot) -> u64 {
+    let _g = hub.lock.lock().unwrap_or_else(|p| p.into_inner());
+    let v = *slot.read().unwrap_or_else(|p| p.into_inner()); // FIXTURE: lock-order
+    v + 1
+}
+
+pub fn pin_only(slot: &WeightSlot) -> u64 {
+    // Touching only the slot family must NOT fire.
+    *slot.read().unwrap_or_else(|p| p.into_inner())
+}
+
+pub fn hub_only(hub: &Hub) -> u64 {
+    // Touching only the hub family must NOT fire.
+    let _g = hub.lock.lock().unwrap_or_else(|p| p.into_inner());
+    7
+}

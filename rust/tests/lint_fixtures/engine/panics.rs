@@ -1,0 +1,57 @@
+//! hrrlint fixture: panic-path + unbounded-channel seeded violations in
+//! an `engine/`-scoped path. This file is lint fixture *data* — it is
+//! walked by the linter, never compiled by cargo.
+
+use std::collections::HashMap;
+use std::sync::mpsc::{channel, sync_channel};
+
+pub fn serve(map: &HashMap<u32, u32>) -> u32 {
+    let v = map.get(&1).unwrap(); // FIXTURE: panic-path (unwrap)
+    let w = map.get(&2).expect("missing"); // FIXTURE: panic-path (expect)
+    if *v > *w {
+        panic!("order violated"); // FIXTURE: panic-path (panic!)
+    }
+    match v {
+        0 => unreachable!(), // FIXTURE: panic-path (unreachable!)
+        _ => *v + *w,
+    }
+}
+
+pub fn queues() -> usize {
+    let (tx, rx) = channel::<u32>(); // FIXTURE: unbounded-channel (turbofish)
+    let (tx2, rx2) = sync_channel::<u32>(4); // ok: bounded
+    drop((tx, tx2, rx2));
+    rx.try_iter().count()
+}
+
+pub fn recovered(v: std::sync::Mutex<u32>) -> u32 {
+    // The explicit poisoned-lock recovery idiom must NOT fire: the
+    // method identifier is `unwrap_or_else`, not `unwrap`.
+    *v.lock().unwrap_or_else(|p| p.into_inner())
+}
+
+pub fn suppressed(v: Option<u32>) -> u32 {
+    // hrrlint: allow(panic-path)
+    v.unwrap() // suppressed by the allow() on the line above
+}
+
+pub fn strings_and_comments() -> &'static str {
+    // a comment mentioning unwrap() and panic!("nope") must not fire
+    "call .unwrap() and panic!(\"boom\") inside a string" // no finding
+}
+
+#[cfg(not(test))]
+pub fn not_test_guarded(v: Option<u32>) -> u32 {
+    // cfg(not(test)) is real code: this MUST still fire.
+    v.unwrap() // FIXTURE: panic-path (under cfg(not(test)))
+}
+
+#[cfg(test)]
+mod tests {
+    #[test]
+    fn panics_are_fine_here() {
+        let v: Option<u32> = None;
+        let _ = v.unwrap(); // exempt: inside #[cfg(test)]
+        panic!("test-only"); // exempt: inside #[cfg(test)]
+    }
+}

@@ -1,0 +1,28 @@
+//! hrrlint fixture: wallclock-kernel + f32-accum-kernel seeded
+//! violations in a kernel-scoped path. Never compiled.
+
+pub fn timed_kernel(xs: &[f32]) -> f64 {
+    let t0 = std::time::Instant::now(); // FIXTURE: wallclock-kernel (Instant::now)
+    let _stamp = std::time::SystemTime::now(); // FIXTURE: wallclock-kernel (SystemTime)
+
+    let mut acc: f32 = 0.0;
+    for &x in xs {
+        acc += x; // FIXTURE: f32-accum-kernel (typed f32 binding)
+    }
+
+    let mut total = 0.0f32;
+    while total < 10.0 {
+        total += 1.0; // FIXTURE: f32-accum-kernel (f32-suffixed literal)
+    }
+
+    let mut fine: f64 = 0.0;
+    for &x in xs {
+        fine += f64::from(x); // ok: f64 accumulator is the mandated idiom
+    }
+
+    let mut outside: f32 = 0.0;
+    outside += 1.0; // ok: not inside a loop
+
+    drop(t0);
+    fine + f64::from(acc) + f64::from(total) + f64::from(outside)
+}

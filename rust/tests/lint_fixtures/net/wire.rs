@@ -1,0 +1,19 @@
+//! hrrlint fixture: narrow-cast-wire (plus panic-path, since `net/` is
+//! serving-path scope) seeded violations. Never compiled.
+
+pub fn decode(len: u64, payload: &[u8]) -> usize {
+    // The rule is syntactic: any `as usize` / `as u32` in wire-facing
+    // code must go through a checked conversion instead.
+    let n = len as usize; // FIXTURE: narrow-cast-wire (as usize)
+    let tag = payload[0] as u32; // FIXTURE: narrow-cast-wire (as u32)
+    let wide = n as u64; // ok: `as u64` widening is not flagged
+    n + tag as usize + wide as usize // FIXTURE: narrow-cast-wire x2
+}
+
+pub fn parse(v: Option<u8>) -> u8 {
+    v.unwrap() // FIXTURE: panic-path (net/ is serving scope)
+}
+
+pub fn checked(len: u64) -> Option<usize> {
+    usize::try_from(len).ok() // ok: the mandated conversion
+}

@@ -1,0 +1,32 @@
+//! hrrlint fixture: hash-iter-accum seeded violations. Never compiled.
+
+use std::collections::{HashMap, HashSet};
+
+pub fn sum_values(m: &HashMap<u64, u64>) -> u64 {
+    let mut total = 0u64;
+    for (_k, v) in m.iter() {
+        total += v; // body accumulates
+    } // FIXTURE: hash-iter-accum (for-loop over HashMap feeding +=)
+    total
+}
+
+pub fn collect_keys(s: &HashSet<u64>) -> Vec<u64> {
+    let keys: Vec<u64> = s.iter().copied().collect(); // FIXTURE: hash-iter-accum (chain)
+    keys
+}
+
+pub fn lookup_only(m: &HashMap<u64, u64>) -> u64 {
+    let mut out = 0;
+    for i in 0..4 {
+        out += m.get(&i).copied().unwrap_or(0); // ok: deterministic index order
+    }
+    out
+}
+
+pub fn drain_sorted(m: &mut HashMap<u64, u64>) -> Vec<u64> {
+    // The audited escape hatch: collect, then sort before use.
+    // hrrlint: allow(hash-iter-accum) -- sorted below
+    let mut ids: Vec<u64> = m.drain().map(|(k, _)| k).collect();
+    ids.sort_unstable();
+    ids
+}

@@ -1,0 +1,26 @@
+//! hrrlint fixture: lexer stress cases + debug-macro seeded violations.
+//! Every panic/channel/clock token below lives inside a string literal
+//! or comment — none may fire. The only real findings in this file are
+//! the seeded println!/dbg!/todo!. Never compiled.
+
+pub fn tricky() -> String {
+    let a = "unwrap() expect(\"x\") panic!(\"x\") unreachable!()"; // strings never fire
+    let b = r#"dbg!("raw") and channel() and Instant::now()"#; // raw string
+    let c = r##"nested "#quote"# raw with unwrap() and todo!()"##; // hashed raw string
+    let bytes = b"byte string with panic!(\"b\")"; // byte string
+    let raw_bytes = br#"SystemTime in raw bytes"#; // raw byte string
+    let ch = 'x'; // char literal
+    let esc = '\n'; // escaped char literal
+    let uni = '\u{1F600}'; // unicode escape char literal
+    let quote = '"'; // a double-quote char must not open a string
+    let life: &'static str = "lifetime 'static vs char literal"; // lifetime
+    /* block comment with panic!("no") and /* nested block */ still a comment */
+    let mut s = String::new();
+    s.push(ch);
+    s.push(esc);
+    s.push(uni);
+    s.push(quote);
+    println!("seeded: {} {} {:?} {:?} {}", a, b, c, bytes, life); // FIXTURE: debug-macro
+    dbg!(raw_bytes.len()); // FIXTURE: debug-macro
+    todo!() // FIXTURE: debug-macro
+}

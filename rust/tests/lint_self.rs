@@ -1,0 +1,152 @@
+//! hrrlint self-tests: seeded-fixture detection with exact file/rule
+//! attribution, golden-report byte parity, the real-tree ratchet gate,
+//! and Rust-vs-Python runner parity.
+//!
+//! The Python side re-runs the same fixture/golden checks in
+//! `python/tests/test_hrrlint.py`, so both runners stay pinned to the
+//! same `rust/tests/lint_fixtures/golden_report.json`.
+
+use std::path::{Path, PathBuf};
+use std::process::Command;
+
+use hrrformer::analysis::{apply_baseline, lint_tree, load_baseline, report_json, Baseline};
+
+fn repo_root() -> PathBuf {
+    PathBuf::from(env!("CARGO_MANIFEST_DIR"))
+}
+
+fn fixtures() -> PathBuf {
+    repo_root().join("rust/tests/lint_fixtures")
+}
+
+#[test]
+fn fixture_findings_attribution() {
+    let (findings, file_count) = lint_tree(&fixtures()).expect("scan fixtures");
+    assert_eq!(file_count, 6);
+    let got: Vec<(String, usize, String)> =
+        findings.iter().map(|f| (f.file.clone(), f.line, f.rule.clone())).collect();
+    let expected: Vec<(&str, usize, &str)> = vec![
+        ("engine/locks.rs", 16, "lock-order"),
+        ("engine/panics.rs", 9, "panic-path"),
+        ("engine/panics.rs", 10, "panic-path"),
+        ("engine/panics.rs", 12, "panic-path"),
+        ("engine/panics.rs", 15, "panic-path"),
+        ("engine/panics.rs", 21, "unbounded-channel"),
+        ("engine/panics.rs", 46, "panic-path"),
+        ("hrr/common/kernel.rs", 5, "wallclock-kernel"),
+        ("hrr/common/kernel.rs", 6, "wallclock-kernel"),
+        ("hrr/common/kernel.rs", 10, "f32-accum-kernel"),
+        ("hrr/common/kernel.rs", 15, "f32-accum-kernel"),
+        ("net/wire.rs", 7, "narrow-cast-wire"),
+        ("net/wire.rs", 8, "narrow-cast-wire"),
+        ("net/wire.rs", 10, "narrow-cast-wire"),
+        ("net/wire.rs", 10, "narrow-cast-wire"),
+        ("net/wire.rs", 14, "panic-path"),
+        ("stream/collect.rs", 7, "hash-iter-accum"),
+        ("stream/collect.rs", 14, "hash-iter-accum"),
+        ("util/strings.rs", 23, "debug-macro"),
+        ("util/strings.rs", 24, "debug-macro"),
+        ("util/strings.rs", 25, "debug-macro"),
+    ];
+    let expected: Vec<(String, usize, String)> =
+        expected.into_iter().map(|(f, l, r)| (f.to_string(), l, r.to_string())).collect();
+    assert_eq!(got, expected);
+    // Every rule is exercised by the fixture set.
+    for rule in hrrformer::analysis::RULES {
+        assert!(got.iter().any(|(_, _, r)| r == rule), "no fixture hit for rule {rule}");
+    }
+}
+
+#[test]
+fn golden_report_byte_parity() {
+    let (mut findings, file_count) = lint_tree(&fixtures()).expect("scan fixtures");
+    let (new, baselined, stale) = apply_baseline(&mut findings, &Baseline::new());
+    let got = report_json(&findings, file_count, 0, new, baselined, stale) + "\n";
+    let want = std::fs::read_to_string(fixtures().join("golden_report.json")).expect("golden");
+    assert_eq!(got, want, "Rust report drifted from the golden fixture");
+}
+
+#[test]
+fn real_tree_has_zero_new_findings() {
+    let root = repo_root();
+    let (mut findings, _files) = lint_tree(&root.join("rust/src")).expect("scan rust/src");
+    let baseline = load_baseline(&root.join("lint_baseline.json")).expect("baseline");
+    let (new, _baselined, stale) = apply_baseline(&mut findings, &baseline);
+    let offenders: Vec<String> = findings
+        .iter()
+        .filter(|f| f.new)
+        .map(|f| format!("{}:{} [{}] {}", f.file, f.line, f.rule, f.snippet))
+        .collect();
+    assert_eq!(new, 0, "non-baseline findings:\n{}", offenders.join("\n"));
+    assert_eq!(stale, 0, "baseline holds entries the tree no longer has");
+    // The ratchet is burned to zero for the serving modules.
+    for f in &findings {
+        assert!(
+            !(f.file.starts_with("engine/")
+                || f.file.starts_with("net/")
+                || f.file.starts_with("stream/")),
+            "serving-path module carries lint debt: {}:{} [{}]",
+            f.file,
+            f.line,
+            f.rule
+        );
+    }
+}
+
+/// The Python mirror must emit a byte-identical JSON report on the
+/// fixture tree. Skips (passes vacuously) when python3 is unavailable.
+#[test]
+fn python_mirror_parity() {
+    let root = repo_root();
+    let script = root.join("python/analysis/hrrlint.py");
+    let out = match Command::new("python3")
+        .arg(&script)
+        .args(["--root", "rust/tests/lint_fixtures", "--no-baseline", "--json"])
+        .current_dir(&root)
+        .output()
+    {
+        Ok(out) => out,
+        Err(_) => {
+            eprintln!("python3 not available; skipping parity check");
+            return;
+        }
+    };
+    // Exit code 1 = findings present (expected on the fixture tree).
+    assert_eq!(out.status.code(), Some(1), "python runner failed: {}", String::from_utf8_lossy(&out.stderr));
+    let py = String::from_utf8(out.stdout).expect("utf8");
+
+    let (mut findings, file_count) = lint_tree(&fixtures()).expect("scan fixtures");
+    let (new, baselined, stale) = apply_baseline(&mut findings, &Baseline::new());
+    let rs = report_json(&findings, file_count, 0, new, baselined, stale) + "\n";
+    assert_eq!(rs, py, "Rust and Python runners disagree");
+}
+
+/// The Python mirror must also agree on the *real* tree under the real
+/// baseline: zero new findings by both runners.
+#[test]
+fn python_mirror_real_tree_clean() {
+    let root = repo_root();
+    let script = root.join("python/analysis/hrrlint.py");
+    let out = match Command::new("python3").arg(&script).current_dir(&root).output() {
+        Ok(out) => out,
+        Err(_) => {
+            eprintln!("python3 not available; skipping parity check");
+            return;
+        }
+    };
+    assert_eq!(
+        out.status.code(),
+        Some(0),
+        "python runner reports new findings:\n{}{}",
+        String::from_utf8_lossy(&out.stdout),
+        String::from_utf8_lossy(&out.stderr)
+    );
+}
+
+/// `Path::new` niceties used above stay panic-free on this suite's own
+/// inputs; keep the compile-time wiring honest.
+#[test]
+fn fixtures_exist() {
+    assert!(Path::new(&fixtures()).is_dir(), "rust/tests/lint_fixtures missing");
+    assert!(fixtures().join("golden_report.json").is_file(), "golden report missing");
+}

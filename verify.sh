@@ -15,6 +15,18 @@
 set -euo pipefail
 cd "$(dirname "$0")"
 
+# Static-analysis gate (hrrlint): the project-invariant linter with the
+# panic-path ratchet (lint_baseline.json). Runs *before* the cargo
+# early-exit below so the gate holds even where the Rust toolchain is
+# unavailable — the Python transcription in python/analysis/hrrlint.py
+# is byte-for-byte identical to the cargo binary (the parity is pinned
+# by rust/tests/lint_self.rs and python/tests/test_hrrlint.py). Any
+# finding not in the checked-in baseline fails verify.
+if command -v python3 >/dev/null 2>&1; then
+    echo "==> python3 python/analysis/hrrlint.py"
+    python3 python/analysis/hrrlint.py
+fi
+
 if ! command -v cargo >/dev/null 2>&1; then
     echo "verify: SKIP — cargo not found (rust toolchain unavailable in this environment)." >&2
     echo "verify: install rustup (https://rustup.rs) to run the full gate." >&2
@@ -27,6 +39,11 @@ run() {
 }
 
 run cargo build --release
+
+# The canonical hrrlint runner: same lexer/rules/report as the Python
+# mirror above, exercised here against the real tree and baseline.
+run cargo run --release --bin hrrlint
+
 run cargo test -q
 
 # Native-backend suite with artifacts forcibly hidden: property tests,
@@ -44,6 +61,10 @@ rm -f BENCH_native.json
 run cargo run --release -- bench native --examples 8
 if [[ ! -s BENCH_native.json ]]; then
     echo "verify: FAIL — bench native did not write BENCH_native.json" >&2
+    exit 1
+fi
+if ! grep -q '"lint"' BENCH_native.json; then
+    echo "verify: FAIL — bench native did not stamp the lint section into BENCH_native.json" >&2
     exit 1
 fi
 
